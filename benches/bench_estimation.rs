@@ -1,0 +1,60 @@
+//! Estimation hot-path benchmarks — the per-proxy-step cost that bounds
+//! how cheap OptEx's "approximate" iterations are relative to real
+//! gradient evaluations (paper Sec. 4.2 efficiency argument).
+//!
+//! Covers Fig-2/4/7-10 cost models: GP fit (once per sequential
+//! iteration), posterior query at paper (T₀, D̃, d) combos, and the
+//! d-sized weighted combine (memory-bound; GB/s column vs DRAM roofline).
+
+use optex::bench::{bench, bench_throughput, black_box};
+use optex::gp::estimator::{combine_into, FittedGp};
+use optex::gp::{GpConfig, Kernel};
+use optex::util::Rng;
+
+fn main() {
+    println!("# estimation hot path (native backend)");
+    let mut rng = Rng::new(0);
+
+    // (label, T0, dsub, d) — the paper's workload grid
+    let grid = [
+        ("synth  T0=20  d=1e4", 20usize, 4096usize, 10_000usize),
+        ("mnist  T0=6   d=2e5", 6, 4096, 217_354),
+        ("tfm    T0=10  d=4e5", 10, 8192, 430_000),
+        ("rl     T0=150 d=5e3", 150, 2048, 4_610),
+    ];
+    for (label, t0, dsub, d) in grid {
+        let hist: Vec<Vec<f32>> = (0..t0).map(|_| rng.normal_vec(dsub)).collect();
+        let grads: Vec<Vec<f32>> = (0..t0).map(|_| rng.normal_vec(d)).collect();
+        let hrefs: Vec<&[f32]> = hist.iter().map(|v| v.as_slice()).collect();
+        let grefs: Vec<&[f32]> = grads.iter().map(|v| v.as_slice()).collect();
+        // median-heuristic-scale lengthscale: N(0,1) rows in dsub dims sit
+        // ~sqrt(2*dsub) apart; ls = that distance keeps kernel values O(1)
+        // (the realistic regime — see §Perf P1 for the subnormal pathology
+        // that a tiny lengthscale triggers).
+        let ls = (2.0 * dsub as f64).sqrt();
+        let cfg = GpConfig { kernel: Kernel::Matern52, lengthscale: Some(ls), sigma2: 0.01 };
+
+        bench(&format!("gp_fit       {label}"), || {
+            black_box(FittedGp::fit(&cfg, &hrefs))
+        });
+        let fitted = FittedGp::fit(&cfg, &hrefs).unwrap();
+        let q = rng.normal_vec(dsub);
+        let mut mu = vec![0.0f32; d];
+        bench(&format!("gp_query     {label}"), || {
+            black_box(fitted.query(&q, &grefs, &mut mu))
+        });
+    }
+
+    println!("\n# weighted combine w^T G (memory-bound; bytes = T0*d*4)");
+    for (t0, d) in [(6usize, 1_000_000usize), (20, 1_000_000), (150, 100_000)] {
+        let grads: Vec<Vec<f32>> = (0..t0).map(|_| rng.normal_vec(d)).collect();
+        let grefs: Vec<&[f32]> = grads.iter().map(|v| v.as_slice()).collect();
+        let w: Vec<f64> = (0..t0).map(|i| (i as f64 + 1.0) * 0.1).collect();
+        let mut out = vec![0.0f32; d];
+        bench_throughput(
+            &format!("combine T0={t0} d={d}"),
+            t0 * d * 4,
+            || combine_into(&w, &grefs, &mut out),
+        );
+    }
+}

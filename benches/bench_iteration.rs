@@ -1,0 +1,47 @@
+//! End-to-end sequential-iteration latency per method — the cost model
+//! behind every figure's wallclock panel (Fig 2/4/6-10): what one OptEx
+//! sequential iteration costs relative to Vanilla/Target at the same N.
+
+use optex::bench::{bench, black_box};
+use optex::config::{Method, RunConfig};
+use optex::coordinator::Driver;
+use optex::opt::OptSpec;
+use optex::workloads::synthetic::SynthFn;
+use optex::workloads::NativeSynth;
+
+fn driver_for(method: Method, n: usize, d: usize) -> Driver {
+    let mut cfg = RunConfig::default();
+    cfg.workload = "rosenbrock".into();
+    cfg.method = method;
+    cfg.synth_dim = d;
+    cfg.optimizer = OptSpec::Adam { lr: 0.1, beta1: 0.9, beta2: 0.999, eps: 1e-8 };
+    cfg.optex.parallelism = n;
+    cfg.optex.t0 = 20;
+    cfg.steps = 1_000_000; // not used; we call iteration() directly
+    let src = NativeSynth::new(SynthFn::Rosenbrock, d, 0.0, 0);
+    Driver::with_source(cfg, Box::new(src), None).unwrap()
+}
+
+fn main() {
+    println!("# sequential-iteration latency (native rosenbrock oracle)");
+    for d in [10_000usize, 100_000] {
+        for (method, n) in [
+            (Method::Vanilla, 1usize),
+            (Method::Optex, 4),
+            (Method::Optex, 5),
+            (Method::Optex, 10),
+            (Method::Target, 4),
+            (Method::DataParallel, 4),
+        ] {
+            let mut drv = driver_for(method, n, d);
+            let mut t = 0usize;
+            bench(
+                &format!("iter {:12} N={n:<2} d={d}", method.name()),
+                || {
+                    t += 1;
+                    black_box(drv.iteration(t).unwrap())
+                },
+            );
+        }
+    }
+}

@@ -1,0 +1,66 @@
+//! PJRT runtime benchmarks (Fig 3/4/7-10's HLO execution path): artifact
+//! execution latency, worker-pool dispatch overhead, and pool scaling.
+//! Skips (exit 0) when `artifacts/` has not been built.
+
+use std::path::PathBuf;
+
+use optex::bench::{bench, black_box};
+use optex::runtime::{Engine, In, Manifest, TensorData, WorkerPool};
+use optex::util::Rng;
+
+fn main() {
+    let dir = PathBuf::from("artifacts");
+    let Ok(manifest) = Manifest::load(&dir) else {
+        println!("SKIP: artifacts/ missing (run `make artifacts`)");
+        return;
+    };
+    let mut rng = Rng::new(0);
+
+    // single-executor latency per artifact family
+    for name in ["synth_rosenbrock_d10000", "gp_synth", "qnet_cartpole_train", "mlp_mnist"] {
+        let Ok(spec) = manifest.get(name) else { continue };
+        let engine = Engine::cpu().unwrap();
+        let exe = engine.load(spec).unwrap();
+        let inputs: Vec<Vec<f32>> = spec
+            .inputs
+            .iter()
+            .map(|t| rng.normal_vec(t.elements()))
+            .collect();
+        // integer inputs (qnet act indices) must be valid — zeros are.
+        let borrowed: Vec<In<'_>> = spec
+            .inputs
+            .iter()
+            .zip(&inputs)
+            .map(|(t, v)| match t.dtype {
+                optex::runtime::DType::F32 => In::F32(v),
+                optex::runtime::DType::I32 => In::I32(&ZEROS_I32[..t.elements()]),
+            })
+            .collect();
+        bench(&format!("exec {name}"), || black_box(exe.run(&borrowed).unwrap()));
+    }
+
+    // pool dispatch overhead: tiny artifact, 1..4 workers
+    println!("\n# pool scatter (synth d=1e4, cost ~ single exec + channel hop)");
+    for workers in [1usize, 2, 4] {
+        let pool = WorkerPool::spawn(
+            dir.clone(),
+            vec!["synth_rosenbrock_d10000".to_string()],
+            workers,
+        )
+        .unwrap();
+        let theta = rng.normal_vec(10_000);
+        bench(&format!("scatter x{workers} workers={workers}"), || {
+            let jobs: Vec<(&str, Vec<TensorData>)> = (0..workers)
+                .map(|_| {
+                    (
+                        "synth_rosenbrock_d10000",
+                        vec![TensorData::F32(theta.clone())],
+                    )
+                })
+                .collect();
+            black_box(pool.scatter(jobs).unwrap())
+        });
+    }
+}
+
+static ZEROS_I32: [i32; 4096] = [0; 4096];

@@ -1,0 +1,83 @@
+//! Substrate micro-benchmarks: optimizer step throughput (the leader's
+//! per-candidate cost), Cholesky at paper T₀ values, RL environment step
+//! rates, dataset batch sampling, and the native q-net fwd/bwd.
+
+use optex::bench::{bench, bench_throughput, black_box};
+use optex::datasets::{Corpus, ImageDataset, ImageKind};
+use optex::gp::cholesky::chol_solve;
+use optex::nn::Mlp;
+use optex::opt::OptSpec;
+use optex::rl::make;
+use optex::util::Rng;
+
+fn main() {
+    let mut rng = Rng::new(0);
+
+    println!("# optimizer step at d=1e6 (bytes = 2 vectors r/w)");
+    let d = 1_000_000;
+    let grad = rng.normal_vec(d);
+    for name in ["sgd", "momentum", "adam", "adagrad", "adabelief"] {
+        let mut opt = OptSpec::parse(name, 0.01).unwrap().build(d);
+        let mut params = rng.normal_vec(d);
+        bench_throughput(&format!("opt_step {name} d=1e6"), 2 * d * 4, || {
+            opt.step(&mut params, &grad)
+        });
+    }
+
+    println!("\n# cholesky solve at paper T0 values");
+    for n in [6usize, 20, 150, 256] {
+        let m: Vec<f64> = (0..n * n).map(|_| rng.normal()).collect();
+        let mut a = vec![0.0f64; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                let mut s = 0.0;
+                for k in 0..n {
+                    s += m[i * n + k] * m[j * n + k];
+                }
+                a[i * n + j] = s + if i == j { 1.0 } else { 0.0 };
+            }
+        }
+        let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        bench(&format!("chol_solve n={n}"), || {
+            black_box(chol_solve(&a, n, &b).unwrap())
+        });
+    }
+
+    println!("\n# RL env steps (per call)");
+    for name in ["cartpole", "mountaincar", "acrobot"] {
+        let mut env = make(name).unwrap();
+        let mut r = Rng::new(1);
+        env.reset(&mut r);
+        bench(&format!("env_step {name}"), || {
+            let t = env.step(r.below(env.n_actions()));
+            if t.done {
+                env.reset(&mut r);
+            }
+            black_box(t.reward)
+        });
+    }
+
+    println!("\n# dataset batch sampling");
+    let ds = ImageDataset::generate(ImageKind::CifarLike, 2000, 0);
+    let (mut x, mut y) = (Vec::new(), Vec::new());
+    bench_throughput("sample_batch cifar B=128", 128 * 3072 * 4, || {
+        ds.sample_batch(128, &mut rng, &mut x, &mut y)
+    });
+    let corpus = Corpus::from_text(optex::datasets::corpus::shakespeare());
+    let mut toks = Vec::new();
+    bench("sample_windows B=16 L=65", || {
+        corpus.sample_windows(16, 65, &mut rng, &mut toks)
+    });
+
+    println!("\n# native q-net fwd+bwd (cartpole shape, B=256)");
+    let mlp = Mlp::new(4, 64, 2);
+    let params = mlp.init(&mut rng);
+    let obs = rng.normal_vec(256 * 4);
+    let mut grad = vec![0.0f32; mlp.dim()];
+    bench("qnet fwd+bwd B=256", || {
+        let c = mlp.forward(&params, &obs, 256);
+        let dout = vec![1e-3f32; 256 * 2];
+        mlp.backward(&params, &c, &dout, &mut grad);
+        black_box(grad[0])
+    });
+}

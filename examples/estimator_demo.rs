@@ -1,0 +1,66 @@
+//! Kernelized gradient estimation in isolation (paper Sec. 4.1):
+//! watch the posterior mean converge to the true gradient — and the
+//! posterior variance collapse — as the local history grows along a real
+//! optimization trajectory.
+//!
+//!     cargo run --release --example estimator_demo
+
+use optex::gp::{estimator, GpConfig, Kernel};
+use optex::opt::OptSpec;
+use optex::util::stats;
+use optex::util::Rng;
+use optex::workloads::synthetic::SynthFn;
+
+fn main() {
+    let d = 2_000;
+    let f = SynthFn::Rosenbrock;
+    let mut rng = Rng::new(0);
+
+    // Collect (θ_τ, ∇F(θ_τ)) along a Vanilla-Adam trajectory.
+    let mut theta: Vec<f32> = (0..d).map(|_| 3.0 + 0.5 * rng.normal() as f32).collect();
+    let mut opt = OptSpec::parse("adam", 0.1).unwrap().build(d);
+    let n = 48;
+    let mut thetas = Vec::new();
+    let mut grads = Vec::new();
+    let mut g = vec![0.0f32; d];
+    for _ in 0..n {
+        f.value_and_grad(&theta, &mut g);
+        thetas.push(theta.clone());
+        grads.push(g.clone());
+        opt.step(&mut theta, &g);
+    }
+
+    // True gradient at the *next* iterate — the quantity the proxy
+    // updates need (eq. (5)).
+    let query = &theta;
+    let mut true_grad = vec![0.0f32; d];
+    f.value_and_grad(query, &mut true_grad);
+    let true_norm = stats::norm2(&true_grad);
+
+    println!("rosenbrock d={d}: predict grad at the next iterate from the last T0 steps\n");
+    println!("  T0   kernel      rel. error   post. var");
+    for kernel in [Kernel::Rbf, Kernel::Matern52] {
+        for t0 in [2usize, 4, 8, 16, 32] {
+            let lo = n - t0;
+            let hist: Vec<&[f32]> = thetas[lo..].iter().map(|v| v.as_slice()).collect();
+            let gh: Vec<&[f32]> = grads[lo..].iter().map(|v| v.as_slice()).collect();
+            let cfg = GpConfig { kernel, lengthscale: None, sigma2: 1e-4 };
+            let mut mu = vec![0.0f32; d];
+            let est = estimator::estimate(&cfg, query, &hist, &gh, &mut mu);
+            let err: f64 = mu
+                .iter()
+                .zip(&true_grad)
+                .map(|(&a, &b)| ((a - b) as f64).powi(2))
+                .sum::<f64>()
+                .sqrt()
+                / true_norm;
+            println!(
+                "  {t0:<4} {:<10} {err:>10.4}   {:>9.2e}",
+                kernel.name(),
+                est.var
+            );
+        }
+        println!();
+    }
+    println!("error and variance both fall as T0 grows (Thm. 1 / Cor. 1).");
+}

@@ -1,0 +1,312 @@
+"""AOT lowering: JAX graphs -> HLO text artifacts + manifest.json.
+
+This is the ONLY place python touches the build. Usage (via `make
+artifacts` from the repo root):
+
+    python -m compile.aot --out-dir ../artifacts --profile default
+
+Interchange format is **HLO text**, not serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which the rust runtime's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Profiles scale the experiment grid:
+  * ``test``    — tiny shapes for cargo/pytest integration tests (seconds),
+  * ``default`` — CI-scale figures (minutes per figure on one CPU),
+  * ``paper``   — the paper's full dimensions (Appx B.2).
+
+``artifacts/manifest.json`` records, per artifact: file name, input/output
+shapes+dtypes, and metadata (workload family, parameter dim d, batch,
+kernel kind, T0, ...). The rust runtime (rust/src/runtime/artifact.rs)
+drives everything from this manifest; names are the contract.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def to_hlo_text(lowered) -> str:
+    """Lowered jax -> XlaComputation -> HLO text (return_tuple=True so the
+    rust side always unwraps a tuple — see load_hlo.rs)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+class Artifact:
+    """One lowerable graph: a callable + example input specs + metadata."""
+
+    def __init__(self, name, fn, in_specs, meta):
+        self.name = name
+        self.fn = fn
+        self.in_specs = in_specs
+        self.meta = meta
+
+    def lower(self):
+        return jax.jit(self.fn).lower(*self.in_specs)
+
+
+# ---------------------------------------------------------------------------
+# Profile grids
+# ---------------------------------------------------------------------------
+
+
+def _gp_artifact(name, t0, dsub, d, kind="matern52", extra=None):
+    fn = model.gp_estimate_fn(kind)
+    meta = {"family": "gp_estimate", "t0": t0, "dsub": dsub, "d": d, "kernel": kind}
+    meta.update(extra or {})
+    return Artifact(
+        name,
+        fn,
+        [spec((dsub,)), spec((t0, dsub)), spec((t0, d)), spec(()), spec(())],
+        meta,
+    )
+
+
+def _synth_artifact(fn_name, d):
+    return Artifact(
+        f"synth_{fn_name}_d{d}",
+        model.synth_value_and_grad(fn_name),
+        [spec((d,))],
+        {"family": "synth", "fn": fn_name, "d": d},
+    )
+
+
+def _mlp_artifact(name, cfg, batch):
+    return Artifact(
+        name,
+        model.mlp_loss_grad_fn(cfg),
+        [spec((cfg.dim,)), spec((batch, cfg.in_dim)), spec((batch, cfg.out_dim))],
+        {
+            "family": "mlp",
+            "d": cfg.dim,
+            "batch": batch,
+            "in_dim": cfg.in_dim,
+            "width": cfg.width,
+            "out_dim": cfg.out_dim,
+            "layers": cfg.layers,
+        },
+    )
+
+
+def _tfm_artifact(name, cfg, batch):
+    return Artifact(
+        name,
+        model.tfm_loss_grad_fn(cfg),
+        [spec((cfg.dim,)), spec((batch, cfg.seq + 1), I32)],
+        {
+            "family": "tfm",
+            "d": cfg.dim,
+            "batch": batch,
+            "vocab": cfg.vocab,
+            "seq": cfg.seq,
+            "embed": cfg.embed,
+            "heads": cfg.heads,
+            "blocks": cfg.blocks,
+        },
+    )
+
+
+def _qnet_artifacts(env, cfg, batch, gamma=0.95):
+    d = cfg.dim
+    train = Artifact(
+        f"qnet_{env}_train",
+        model.qnet_train_fn(cfg, gamma),
+        [
+            spec((d,)),
+            spec((d,)),
+            spec((batch, cfg.obs_dim)),
+            spec((batch,), I32),
+            spec((batch,)),
+            spec((batch, cfg.obs_dim)),
+            spec((batch,)),
+        ],
+        {
+            "family": "qnet_train",
+            "env": env,
+            "d": d,
+            "batch": batch,
+            "obs_dim": cfg.obs_dim,
+            "n_actions": cfg.n_actions,
+            "hidden": cfg.hidden,
+            "gamma": gamma,
+        },
+    )
+    act = Artifact(
+        f"qnet_{env}_act",
+        model.qnet_act_fn(cfg),
+        [spec((d,)), spec((1, cfg.obs_dim))],
+        {
+            "family": "qnet_act",
+            "env": env,
+            "d": d,
+            "obs_dim": cfg.obs_dim,
+            "n_actions": cfg.n_actions,
+            "hidden": cfg.hidden,
+        },
+    )
+    return [train, act]
+
+
+# Classic-control dims (must match rust/src/rl/*.rs)
+QNET_ENVS = {
+    "cartpole": model.QNetConfig(4, 2, 64),
+    "acrobot": model.QNetConfig(6, 3, 128),
+    "mountaincar": model.QNetConfig(2, 3, 64),
+}
+
+
+def profile_artifacts(profile: str):
+    arts = []
+    if profile == "test":
+        d = 64
+        for fn in model.SYNTH_FNS:
+            arts.append(_synth_artifact(fn, d))
+        arts.append(_gp_artifact("gp_test", t0=4, dsub=32, d=d))
+        arts.append(_gp_artifact("gp_test_rbf", t0=4, dsub=32, d=d, kind="rbf"))
+        mcfg = model.MlpConfig(16, 8, 4, 3)
+        arts.append(_mlp_artifact("mlp_test", mcfg, batch=8))
+        arts.append(
+            _gp_artifact("gp_mlp_test", t0=3, dsub=min(64, mcfg.dim), d=mcfg.dim)
+        )
+        tcfg = model.TfmConfig(vocab=32, seq=16, embed=32, heads=2, blocks=1)
+        arts.append(_tfm_artifact("tfm_test", tcfg, batch=2))
+        qcfg = model.QNetConfig(4, 2, 8)
+        arts += _qnet_artifacts("test", qcfg, batch=16)
+        return arts
+
+    if profile == "default":
+        d_synth = 10_000
+        t0_synth = 20
+        for fn in model.SYNTH_FNS:
+            arts.append(_synth_artifact(fn, d_synth))
+        arts.append(
+            _gp_artifact(
+                "gp_synth", t0=t0_synth, dsub=min(4096, d_synth), d=d_synth
+            )
+        )
+        mnist = model.MlpConfig(784, 128, 10, 9)
+        cifar = model.MlpConfig(3072, 160, 10, 10)
+        tfm = model.TfmConfig(vocab=96, seq=64, embed=128, heads=4, blocks=2)
+        b_img, b_txt = 128, 16
+    elif profile == "paper":
+        d_synth = 100_000
+        t0_synth = 20
+        for fn in model.SYNTH_FNS:
+            arts.append(_synth_artifact(fn, d_synth))
+        arts.append(_gp_artifact("gp_synth", t0=t0_synth, dsub=10_000, d=d_synth))
+        # paper: d=978186 (MNIST 9-layer), d=2412298 (CIFAR 10-layer),
+        # d=1626496 (transformer). Widths chosen to land closest.
+        mnist = model.MlpConfig(784, 320, 10, 9)
+        cifar = model.MlpConfig(3072, 390, 10, 10)
+        tfm = model.TfmConfig(vocab=96, seq=128, embed=192, heads=4, blocks=4)
+        b_img, b_txt = 512, 64
+    else:
+        raise SystemExit(f"unknown profile {profile!r}")
+
+    arts.append(_mlp_artifact("mlp_mnist", mnist, b_img))
+    arts.append(_mlp_artifact("mlp_cifar", cifar, b_img))
+    arts.append(_tfm_artifact("tfm_char", tfm, b_txt))
+    # Estimation artifacts matched to each workload (paper T0 values).
+    arts.append(_gp_artifact("gp_mnist", t0=6, dsub=4096, d=mnist.dim))
+    arts.append(_gp_artifact("gp_cifar", t0=6, dsub=4096, d=cifar.dim))
+    arts.append(_gp_artifact("gp_tfm", t0=10, dsub=8192, d=tfm.dim))
+    for env, qcfg in QNET_ENVS.items():
+        arts += _qnet_artifacts(env, qcfg, batch=256)
+        arts.append(
+            _gp_artifact(f"gp_{env}", t0=150, dsub=min(2048, qcfg.dim), d=qcfg.dim)
+        )
+    return arts
+
+
+# ---------------------------------------------------------------------------
+# Emission
+# ---------------------------------------------------------------------------
+
+
+def _dtype_tag(dt):
+    return {"float32": "f32", "int32": "i32"}[jnp.dtype(dt).name]
+
+
+def emit(artifact: Artifact, out_dir: Path, force: bool):
+    path = out_dir / f"{artifact.name}.hlo.txt"
+    t0 = time.time()
+    if path.exists() and not force:
+        status = "cached"
+    else:
+        lowered = artifact.lower()
+        text = to_hlo_text(lowered)
+        path.write_text(text)
+        status = f"{len(text) / 1e6:.2f} MB in {time.time() - t0:.1f}s"
+    entry = {
+        "name": artifact.name,
+        "file": path.name,
+        "inputs": [
+            {"shape": list(s.shape), "dtype": _dtype_tag(s.dtype)}
+            for s in artifact.in_specs
+        ],
+        "meta": artifact.meta,
+    }
+    print(f"  {artifact.name:28s} {status}")
+    return entry
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--profile", default="default", choices=["test", "default", "paper"])
+    ap.add_argument("--only", default=None, help="substring filter on artifact names")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--list", action="store_true")
+    args = ap.parse_args(argv)
+
+    arts = profile_artifacts(args.profile)
+    if args.only:
+        arts = [a for a in arts if args.only in a.name]
+    if args.list:
+        for a in arts:
+            print(a.name, a.meta)
+        return 0
+
+    out_dir = Path(args.out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    print(f"lowering {len(arts)} artifacts (profile={args.profile}) -> {out_dir}")
+    entries = [emit(a, out_dir, args.force) for a in arts]
+    # --only regenerates a subset: merge with the existing manifest so the
+    # untouched artifacts stay registered.
+    manifest_path = out_dir / "manifest.json"
+    if args.only and manifest_path.exists():
+        old_doc = json.loads(manifest_path.read_text())
+        fresh = {e["name"] for e in entries}
+        entries = [
+            e for e in old_doc.get("artifacts", []) if e["name"] not in fresh
+        ] + entries
+        entries.sort(key=lambda e: e["name"])
+    manifest = {"profile": args.profile, "artifacts": entries}
+    manifest_path.write_text(json.dumps(manifest, indent=2))
+    print(f"wrote {manifest_path}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

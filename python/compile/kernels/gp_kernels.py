@@ -1,0 +1,168 @@
+"""Layer-1 Pallas kernels for OptEx kernelized gradient estimation.
+
+These are the compute hot-spots of the OptEx leader step (paper §4.1):
+
+  * ``sqdist_vector_pallas``   — ||theta - H_tau||^2 for every history row,
+                                 tiled over the (possibly huge) feature dim.
+  * ``sqdist_matrix_pallas``   — pairwise history distances, same tiling.
+  * ``weighted_combine_pallas``— mu = w^T G, tiled over the parameter dim d
+                                 (d up to millions; T0 <= 256 rows).
+
+The kernel *map* (RBF / Matern on the distances) is O(T0) work and is left
+to plain jnp in the caller (`model.gp_estimate_fn`), where XLA fuses it.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): each kernel streams its
+large axis HBM->VMEM in lane-aligned blocks (multiples of 128); partial
+sums accumulate in the f32 output ref across sequential grid steps.
+``interpret=True`` is mandatory on this CPU image — real-TPU lowering
+emits Mosaic custom-calls the CPU PJRT plugin cannot execute.
+
+Padding contract: callers may pass any D / d; wrappers zero-pad to the
+block size. Zero padding is exact for squared distances (both operands
+padded with zeros) and for the combine matvec (padded G columns are
+dropped on slice-out).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Lane-aligned default blocks, sized for grid-step amortization: each
+# interpret-mode grid step costs one XLA while-loop iteration, so blocks
+# are as large as VMEM allows (combine: (T0+1) x 64Ki x 4B stays under the
+# ~16 MB/core VMEM budget up to T0 = 63; RL's T0 = 150 pairs with small d).
+# Tuned in the perf pass (EXPERIMENTS.md §Perf P6): 512->4096 and
+# 4096->65536 cut gp-artifact execution time ~2x.
+DEFAULT_BLOCK_D = 4096
+DEFAULT_BLOCK_COMBINE = 65536
+
+
+def _pad_to(x, size, axis):
+    """Zero-pad `x` along `axis` up to `size` (no-op when already there)."""
+    pad = size - x.shape[axis]
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def _num_blocks(n, block):
+    return (n + block - 1) // block
+
+
+# ---------------------------------------------------------------------------
+# sqdist_vector: theta (D,), hist (T, D) -> (T,)
+# ---------------------------------------------------------------------------
+
+
+def _sqdist_vector_kernel(theta_ref, hist_ref, out_ref):
+    """One grid step: partial squared distances over a D-block."""
+    i = pl.program_id(0)
+    diff = hist_ref[...] - theta_ref[...][None, :]
+    part = jnp.sum(diff * diff, axis=1)
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[...] = part
+
+    @pl.when(i > 0)
+    def _acc():
+        out_ref[...] += part
+
+
+@functools.partial(jax.jit, static_argnames=("block_d",))
+def sqdist_vector_pallas(theta, hist, block_d=DEFAULT_BLOCK_D):
+    """Tiled ||theta - hist_tau||^2. theta: (D,), hist: (T, D) -> (T,)."""
+    t, d = hist.shape
+    block_d = min(block_d, max(d, 1))
+    dp = _num_blocks(d, block_d) * block_d
+    theta_p = _pad_to(theta, dp, 0)
+    hist_p = _pad_to(hist, dp, 1)
+    grid = (_num_blocks(dp, block_d),)
+    return pl.pallas_call(
+        _sqdist_vector_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_d,), lambda i: (i,)),
+            pl.BlockSpec((t, block_d), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((t,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((t,), theta.dtype),
+        interpret=True,
+    )(theta_p, hist_p)
+
+
+# ---------------------------------------------------------------------------
+# sqdist_matrix: hist (T, D) -> (T, T)
+# ---------------------------------------------------------------------------
+
+
+def _sqdist_matrix_kernel(hist_ref, out_ref):
+    i = pl.program_id(0)
+    h = hist_ref[...]
+    diff = h[:, None, :] - h[None, :, :]
+    part = jnp.sum(diff * diff, axis=2)
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[...] = part
+
+    @pl.when(i > 0)
+    def _acc():
+        out_ref[...] += part
+
+
+@functools.partial(jax.jit, static_argnames=("block_d",))
+def sqdist_matrix_pallas(hist, block_d=DEFAULT_BLOCK_D):
+    """Tiled pairwise squared distances. hist: (T, D) -> (T, T)."""
+    t, d = hist.shape
+    block_d = min(block_d, max(d, 1))
+    dp = _num_blocks(d, block_d) * block_d
+    hist_p = _pad_to(hist, dp, 1)
+    grid = (_num_blocks(dp, block_d),)
+    return pl.pallas_call(
+        _sqdist_matrix_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((t, block_d), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((t, t), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, t), hist.dtype),
+        interpret=True,
+    )(hist_p)
+
+
+# ---------------------------------------------------------------------------
+# weighted_combine: w (T,), grads (T, d) -> (d,)
+# ---------------------------------------------------------------------------
+
+
+def _weighted_combine_kernel(w_ref, g_ref, out_ref):
+    # One d-block: out = w^T G_block. T0 is small so this is a VPU
+    # broadcast-multiply-reduce, not an MXU matmul (DESIGN.md §HW-Adapt).
+    out_ref[...] = jnp.sum(w_ref[...][:, None] * g_ref[...], axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("block_d",))
+def weighted_combine_pallas(w, grads, block_d=DEFAULT_BLOCK_COMBINE):
+    """Tiled mu = w^T G. w: (T,), grads: (T, d) -> (d,)."""
+    t, d = grads.shape
+    block_d = min(block_d, max(d, 1))
+    dp = _num_blocks(d, block_d) * block_d
+    grads_p = _pad_to(grads, dp, 1)
+    grid = (_num_blocks(dp, block_d),)
+    out = pl.pallas_call(
+        _weighted_combine_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((t,), lambda i: (0,)),
+            pl.BlockSpec((t, block_d), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((block_d,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((dp,), grads.dtype),
+        interpret=True,
+    )(w, grads_p)
+    return out[:d]

@@ -1,0 +1,118 @@
+"""Pure-jnp reference oracle for the OptEx GP kernels.
+
+This module is the CORRECTNESS ground truth for the Pallas kernels in
+``gp_kernels.py`` and, transitively, for the rust-native estimator in
+``rust/src/gp/`` (which is cross-checked against HLO artifacts built from
+these functions). Everything here is deliberately written in the most
+obvious possible jnp, with no tiling or padding tricks.
+
+Math (paper Prop. 4.1, separable kernel K(.,.) = k(.,.) I):
+
+    mu_t(theta)    = [ k_t(theta)^T (K_t + sigma^2 I)^{-1} G_t ]^T
+    Sigma_t^2      = ( k(theta,theta) - k_t(theta)^T (K_t+sigma^2 I)^{-1} k_t(theta) ) I
+
+with k_t(theta) the kernel vector against the local history and K_t the
+history Gram matrix. All kernels are unit-amplitude (kappa = k(x,x) = 1).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+#: Supported scalar kernel families (paper uses RBF + Matern).
+KERNEL_KINDS = ("rbf", "matern12", "matern32", "matern52")
+
+# Numerical floor used before sqrt so gradients / values stay finite at r=0.
+_EPS = 1e-12
+
+
+def sqdist_vector(theta, hist):
+    """Squared euclidean distances ||theta - hist_tau||^2 for each row.
+
+    theta: (D,), hist: (T, D)  ->  (T,)
+    """
+    diff = hist - theta[None, :]
+    return jnp.sum(diff * diff, axis=-1)
+
+
+def sqdist_matrix(hist):
+    """Pairwise squared distances of history rows. hist: (T, D) -> (T, T)."""
+    diff = hist[:, None, :] - hist[None, :, :]
+    return jnp.sum(diff * diff, axis=-1)
+
+
+def kernel_from_sqdist(r2, lengthscale, kind="matern52"):
+    """Map squared distances to unit-amplitude kernel values.
+
+    r2: any shape, lengthscale: scalar (>0), kind in KERNEL_KINDS.
+    """
+    r2 = jnp.maximum(r2, 0.0)
+    if kind == "rbf":
+        return jnp.exp(-0.5 * r2 / (lengthscale * lengthscale))
+    r = jnp.sqrt(r2 + _EPS) / lengthscale
+    if kind == "matern12":
+        return jnp.exp(-r)
+    if kind == "matern32":
+        s = jnp.sqrt(3.0) * r
+        return (1.0 + s) * jnp.exp(-s)
+    if kind == "matern52":
+        s = jnp.sqrt(5.0) * r
+        return (1.0 + s + s * s / 3.0) * jnp.exp(-s)
+    raise ValueError(f"unknown kernel kind: {kind!r}")
+
+
+def kernel_vector(theta, hist, lengthscale, kind="matern52"):
+    """k_t(theta): (T,) kernel values against each history row."""
+    return kernel_from_sqdist(sqdist_vector(theta, hist), lengthscale, kind)
+
+
+def kernel_matrix(hist, lengthscale, kind="matern52"):
+    """K_t: (T, T) Gram matrix over the history."""
+    return kernel_from_sqdist(sqdist_matrix(hist), lengthscale, kind)
+
+
+def weighted_combine(w, grads):
+    """mu = w^T G.  w: (T,), grads: (T, d) -> (d,)."""
+    return w @ grads
+
+
+def gp_weights(theta_sub, hist_sub, lengthscale, sigma2, kind="matern52"):
+    """Posterior weight vector w = (K_t + sigma^2 I)^{-1} k_t(theta).
+
+    theta_sub: (Ds,) the query point restricted to the kernel dim-subset,
+    hist_sub:  (T, Ds) history restricted to the same subset.
+    Returns (w (T,), kvec (T,)).
+    """
+    kvec = kernel_vector(theta_sub, hist_sub, lengthscale, kind)
+    kmat = kernel_matrix(hist_sub, lengthscale, kind)
+    t = kmat.shape[0]
+    a = kmat + sigma2 * jnp.eye(t, dtype=kmat.dtype)
+    w = jnp.linalg.solve(a, kvec)
+    return w, kvec
+
+
+def gp_estimate(theta_sub, hist_sub, grads, lengthscale, sigma2, kind="matern52"):
+    """Full kernelized gradient estimate (paper eq. (4) + Prop. 4.1).
+
+    Returns (mu (d,), var (scalar)) where var is the shared per-dimension
+    posterior variance  k(theta,theta) - k^T (K + sigma^2 I)^{-1} k .
+    """
+    w, kvec = gp_weights(theta_sub, hist_sub, lengthscale, sigma2, kind)
+    mu = weighted_combine(w, grads)
+    var = 1.0 - jnp.dot(kvec, w)  # unit-amplitude kernel: k(x,x) = 1
+    return mu, var
+
+
+def median_heuristic(hist_sub):
+    """Median pairwise distance of the history — default lengthscale.
+
+    Mirrors rust/src/gp/estimator.rs::median_heuristic. Returns a scalar
+    that is 1.0 when the history has < 2 distinct points.
+    """
+    t = hist_sub.shape[0]
+    if t < 2:
+        return jnp.asarray(1.0, dtype=hist_sub.dtype)
+    r2 = sqdist_matrix(hist_sub)
+    iu = jnp.triu_indices(t, k=1)
+    med = jnp.sqrt(jnp.maximum(jnp.median(r2[iu]), _EPS))
+    return jnp.where(med > 0, med, 1.0)

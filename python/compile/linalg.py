@@ -1,0 +1,72 @@
+"""Custom-call-free dense linear algebra for lowered graphs.
+
+``jnp.linalg.solve`` / ``lax.linalg.cholesky`` lower, on the CPU backend,
+to LAPACK FFI custom-calls registered by *this* jaxlib — which the rust
+runtime's xla_extension 0.5.1 does not know. Artifacts containing them
+load but fail at execution. These routines use only elementwise ops,
+matvecs and ``.at[]`` updates, so they lower to plain HLO that any PJRT
+backend can run.
+
+Sizes here are the OptEx local-history length T0 (<= 256), so the O(n)
+trace-time Python loops produce modest graphs (~4 ops per row) and the
+O(n^3/2) flops are negligible next to the d-sized combine.
+
+Mirrored by rust/src/gp/cholesky.rs (the native path); both are checked
+against each other through the HLO artifacts in rust integration tests.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cholesky(a):
+    """Lower-triangular L with L L^T = a, for SPD a (n, n).
+
+    Left-looking column Cholesky, unrolled at trace time over columns.
+    """
+    n = a.shape[0]
+    idx = jnp.arange(n)
+    l = jnp.zeros_like(a)
+    for j in range(n):
+        # c = a[:, j] - sum_{k<j} L[:, k] * L[j, k]
+        if j == 0:
+            c = a[:, 0]
+        else:
+            c = a[:, j] - l[:, :j] @ l[j, :j]
+        ljj = jnp.sqrt(jnp.maximum(c[j], 1e-30))
+        col = jnp.where(idx >= j, c / ljj, 0.0)
+        l = l.at[:, j].set(col)
+    return l
+
+
+def solve_lower(l, b):
+    """Solve L y = b for lower-triangular L. b: (n,)."""
+    n = l.shape[0]
+    idx = jnp.arange(n)
+    y = b
+    for j in range(n):
+        yj = y[j] / l[j, j]
+        y = y.at[j].set(yj)
+        if j + 1 < n:
+            y = y - jnp.where(idx > j, l[:, j] * yj, 0.0)
+    return y
+
+
+def solve_upper_t(l, y):
+    """Solve L^T x = y for lower-triangular L (i.e. upper solve). y: (n,)."""
+    n = l.shape[0]
+    idx = jnp.arange(n)
+    x = y
+    for j in reversed(range(n)):
+        xj = x[j] / l[j, j]
+        x = x.at[j].set(xj)
+        if j > 0:
+            x = x - jnp.where(idx < j, l[j, :] * xj, 0.0)
+    return x
+
+
+def chol_solve(a, b):
+    """Solve a x = b for SPD a via Cholesky. a: (n, n), b: (n,)."""
+    l = cholesky(a)
+    return solve_upper_t(l, solve_lower(l, b))

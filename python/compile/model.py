@@ -1,0 +1,359 @@
+"""Layer-2 JAX compute graphs for the OptEx reproduction.
+
+Every graph in this module is written against a **flat f32 parameter
+vector** so the Layer-3 rust coordinator can treat all workloads uniformly
+as `theta in R^d` (the paper's problem setup, eq. (1)). Architectures
+mirror Appx B.2 of the paper:
+
+  * modified Ackley / Sphere / Rosenbrock synthetic functions (B.2.1),
+  * 9-layer residual MLP for (fashion-)MNIST, 10-layer for CIFAR-10 (B.2.3),
+  * a small decoder-only char transformer (B.2.3, Haiku-borrowed model),
+  * a 2-hidden-layer DQN q-network (B.2.2),
+  * the kernelized gradient-estimation graph (Sec. 4.1 / Prop. 4.1) built
+    on the Layer-1 Pallas kernels.
+
+These functions are lowered ONCE by ``aot.py`` to HLO text; python never
+runs on the request path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from . import linalg
+from .kernels import gp_kernels, ref
+
+# ---------------------------------------------------------------------------
+# Flat-parameter plumbing
+# ---------------------------------------------------------------------------
+
+
+def shapes_size(shapes):
+    """Total element count of a list of shapes."""
+    return sum(int(math.prod(s)) for s in shapes)
+
+
+def unflatten(flat, shapes):
+    """Split a flat (d,) vector into tensors with the given shapes."""
+    out, off = [], 0
+    for s in shapes:
+        n = int(math.prod(s))
+        out.append(flat[off : off + n].reshape(s))
+        off += n
+    return out
+
+
+def init_flat(shapes, seed, scale="glorot"):
+    """Reference initializer (rust owns init at runtime; this exists for
+    python-side tests and notebooks)."""
+    key = jax.random.PRNGKey(seed)
+    parts = []
+    for s in shapes:
+        key, sub = jax.random.split(key)
+        if len(s) == 2 and scale == "glorot":
+            lim = math.sqrt(6.0 / (s[0] + s[1]))
+            parts.append(jax.random.uniform(sub, s, jnp.float32, -lim, lim).ravel())
+        else:
+            parts.append(jnp.zeros(int(math.prod(s)), jnp.float32))
+    return jnp.concatenate(parts)
+
+
+# ---------------------------------------------------------------------------
+# Synthetic functions (paper Appx B.2.1 — modified forms)
+# ---------------------------------------------------------------------------
+
+
+def ackley(theta):
+    s1 = jnp.sqrt(jnp.mean(theta * theta) + 1e-12)
+    s2 = jnp.mean(jnp.cos(2.0 * jnp.pi * theta))
+    return -20.0 * jnp.exp(-0.2 * s1) - jnp.exp(s2) + 20.0 + jnp.e
+
+
+def sphere(theta):
+    return jnp.sqrt(jnp.mean(theta * theta) + 1e-12)
+
+
+def rosenbrock(theta):
+    d = theta.shape[0]
+    a = theta[1:]
+    b = theta[:-1]
+    return jnp.sum(100.0 * (a - b) ** 2 + (1.0 - b) ** 2) / d
+
+
+SYNTH_FNS = {"ackley": ackley, "sphere": sphere, "rosenbrock": rosenbrock}
+
+
+def synth_value_and_grad(name):
+    """(theta (d,)) -> (f (), grad (d,)) for a synthetic function."""
+    fn = SYNTH_FNS[name]
+
+    def vag(theta):
+        f, g = jax.value_and_grad(fn)(theta)
+        return f, g
+
+    return vag
+
+
+# ---------------------------------------------------------------------------
+# Residual MLP classifier (paper Appx B.2.3)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MlpConfig:
+    """`layers` counts Linear layers incl. input+output (paper: 9 / 10)."""
+
+    in_dim: int
+    width: int
+    out_dim: int
+    layers: int
+
+    @property
+    def shapes(self):
+        s = [(self.in_dim, self.width), (self.width,)]
+        for _ in range(self.layers - 2):
+            s += [(self.width, self.width), (self.width,)]
+        s += [(self.width, self.out_dim), (self.out_dim,)]
+        return s
+
+    @property
+    def dim(self):
+        return shapes_size(self.shapes)
+
+
+def mlp_logits(cfg: MlpConfig, flat, x):
+    """Forward pass: relu MLP with identity skip connections on the
+    equal-width hidden blocks (He et al. style residuals, paper B.2.3)."""
+    parts = unflatten(flat, cfg.shapes)
+    h = jnp.maximum(x @ parts[0] + parts[1], 0.0)
+    for i in range(cfg.layers - 2):
+        w, b = parts[2 + 2 * i], parts[3 + 2 * i]
+        h = jnp.maximum(h @ w + b, 0.0) + h  # residual hidden block
+    w, b = parts[-2], parts[-1]
+    return h @ w + b
+
+
+def mlp_loss_grad_fn(cfg: MlpConfig):
+    """(flat (d,), x (B,in), y (B,out) one-hot) -> (loss, grad (d,), acc)."""
+
+    def loss_fn(flat, x, y):
+        logits = mlp_logits(cfg, flat, x)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        loss = -jnp.mean(jnp.sum(y * logp, axis=-1))
+        acc = jnp.mean(
+            (jnp.argmax(logits, -1) == jnp.argmax(y, -1)).astype(jnp.float32)
+        )
+        return loss, acc
+
+    def vag(flat, x, y):
+        (loss, acc), grad = jax.value_and_grad(loss_fn, has_aux=True)(flat, x, y)
+        return loss, grad, acc
+
+    return vag
+
+
+# ---------------------------------------------------------------------------
+# Decoder-only char transformer (paper Appx B.2.3)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TfmConfig:
+    vocab: int = 96
+    seq: int = 128
+    embed: int = 192
+    heads: int = 4
+    blocks: int = 4
+
+    @property
+    def shapes(self):
+        e = self.embed
+        s = [(self.vocab, e), (self.seq, e)]  # token + positional embeddings
+        for _ in range(self.blocks):
+            s += [
+                (e,), (e,),            # ln1 scale, bias
+                (e, 3 * e), (3 * e,),  # fused qkv
+                (e, e), (e,),          # attn out proj
+                (e,), (e,),            # ln2 scale, bias
+                (e, 4 * e), (4 * e,),  # mlp up
+                (4 * e, e), (e,),      # mlp down
+            ]
+        s += [(e,), (e,)]  # final ln
+        s += [(e, self.vocab), (self.vocab,)]  # lm head (untied)
+        return s
+
+    @property
+    def dim(self):
+        return shapes_size(self.shapes)
+
+
+def _layernorm(x, scale, bias):
+    m = jnp.mean(x, axis=-1, keepdims=True)
+    v = jnp.mean((x - m) ** 2, axis=-1, keepdims=True)
+    return (x - m) * jax.lax.rsqrt(v + 1e-5) * scale + bias
+
+
+def _gelu(x):
+    # tanh approximation: avoids erf (keeps the lowered HLO free of chlo
+    # decompositions that differ across XLA versions).
+    c = math.sqrt(2.0 / math.pi)
+    return 0.5 * x * (1.0 + jnp.tanh(c * (x + 0.044715 * x**3)))
+
+
+def tfm_logits(cfg: TfmConfig, flat, tokens):
+    """tokens: (B, L) int32 -> logits (B, L, vocab)."""
+    parts = unflatten(flat, cfg.shapes)
+    it = iter(parts)
+    tok_emb = next(it)
+    pos_emb = next(it)
+    b, l = tokens.shape
+    e, h = cfg.embed, cfg.heads
+    hd = e // h
+    x = tok_emb[tokens] + pos_emb[None, :l, :]
+    mask = jnp.tril(jnp.ones((l, l), jnp.float32))
+    neg = jnp.float32(-1e9)
+    for _ in range(cfg.blocks):
+        ln1s, ln1b = next(it), next(it)
+        wqkv, bqkv = next(it), next(it)
+        wo, bo = next(it), next(it)
+        ln2s, ln2b = next(it), next(it)
+        w1, b1 = next(it), next(it)
+        w2, b2 = next(it), next(it)
+        y = _layernorm(x, ln1s, ln1b)
+        qkv = y @ wqkv + bqkv  # (B, L, 3E)
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+        q = q.reshape(b, l, h, hd).transpose(0, 2, 1, 3)
+        k = k.reshape(b, l, h, hd).transpose(0, 2, 1, 3)
+        v = v.reshape(b, l, h, hd).transpose(0, 2, 1, 3)
+        att = (q @ k.transpose(0, 1, 3, 2)) / math.sqrt(hd)  # (B,H,L,L)
+        att = jnp.where(mask[None, None, :, :] > 0, att, neg)
+        att = jax.nn.softmax(att, axis=-1)
+        o = (att @ v).transpose(0, 2, 1, 3).reshape(b, l, e)
+        x = x + o @ wo + bo
+        y = _layernorm(x, ln2s, ln2b)
+        x = x + _gelu(y @ w1 + b1) @ w2 + b2
+    fs, fb = next(it), next(it)
+    wl, bl = next(it), next(it)
+    x = _layernorm(x, fs, fb)
+    return x @ wl + bl
+
+
+def tfm_loss_grad_fn(cfg: TfmConfig):
+    """(flat (d,), tokens (B, L+1) int32) -> (loss, grad (d,))."""
+
+    def loss_fn(flat, tokens):
+        x = tokens[:, :-1]
+        y = tokens[:, 1:]
+        logits = tfm_logits(cfg, flat, x)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, y[..., None], axis=-1)[..., 0]
+        return jnp.mean(nll)
+
+    def vag(flat, tokens):
+        loss, grad = jax.value_and_grad(loss_fn)(flat, tokens)
+        return loss, grad
+
+    return vag
+
+
+# ---------------------------------------------------------------------------
+# DQN q-network (paper Appx B.2.2)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class QNetConfig:
+    obs_dim: int
+    n_actions: int
+    hidden: int = 64  # paper: 64 or 128 per task
+
+    @property
+    def shapes(self):
+        h = self.hidden
+        return [
+            (self.obs_dim, h), (h,),
+            (h, h), (h,),
+            (h, self.n_actions), (self.n_actions,),
+        ]
+
+    @property
+    def dim(self):
+        return shapes_size(self.shapes)
+
+
+def qnet_forward(cfg: QNetConfig, flat, obs):
+    """obs: (B, O) -> q-values (B, A)."""
+    w1, b1, w2, b2, w3, b3 = unflatten(flat, cfg.shapes)
+    h = jnp.maximum(obs @ w1 + b1, 0.0)
+    h = jnp.maximum(h @ w2 + b2, 0.0)
+    return h @ w3 + b3
+
+
+def qnet_act_fn(cfg: QNetConfig):
+    """(flat (d,), obs (B, O)) -> q (B, A) — greedy action-selection graph."""
+
+    def act(flat, obs):
+        return (qnet_forward(cfg, flat, obs),)
+
+    return act
+
+
+def qnet_train_fn(cfg: QNetConfig, gamma: float = 0.95):
+    """One DQN TD step (Mnih et al. 2015 target-network form).
+
+    (flat, target_flat, obs (B,O), act (B,) i32, rew (B,), next_obs (B,O),
+     done (B,)) -> (loss, grad (d,))
+    """
+
+    def loss_fn(flat, target_flat, obs, act, rew, next_obs, done):
+        q = qnet_forward(cfg, flat, obs)
+        qa = jnp.take_along_axis(q, act[:, None], axis=1)[:, 0]
+        qn = qnet_forward(cfg, target_flat, next_obs)
+        tgt = rew + gamma * (1.0 - done) * jnp.max(qn, axis=1)
+        tgt = jax.lax.stop_gradient(tgt)
+        err = qa - tgt
+        return jnp.mean(err * err)
+
+    def vag(flat, target_flat, obs, act, rew, next_obs, done):
+        loss, grad = jax.value_and_grad(loss_fn)(
+            flat, target_flat, obs, act, rew, next_obs, done
+        )
+        return loss, grad
+
+    return vag
+
+
+# ---------------------------------------------------------------------------
+# Kernelized gradient estimation (paper Sec. 4.1, Prop. 4.1) — THE hot path
+# ---------------------------------------------------------------------------
+
+
+def gp_estimate_fn(kind="matern52"):
+    """Build the OptEx estimation graph on the Layer-1 Pallas kernels.
+
+    (theta_sub (Ds,), hist_sub (T0, Ds), grads (T0, d),
+     lengthscale (), sigma2 ()) -> (mu (d,), var (1,))
+
+    lengthscale / sigma2 are runtime scalar inputs so ONE artifact per
+    (T0, Ds, d) shape serves every hyperparameter setting. The T0 x T0
+    solve uses the custom-call-free Cholesky in `linalg` (see its
+    docstring for why jnp.linalg.solve is off-limits here).
+    """
+
+    def est(theta_sub, hist_sub, grads, lengthscale, sigma2):
+        t0 = hist_sub.shape[0]
+        r2v = gp_kernels.sqdist_vector_pallas(theta_sub, hist_sub)
+        r2m = gp_kernels.sqdist_matrix_pallas(hist_sub)
+        kvec = ref.kernel_from_sqdist(r2v, lengthscale, kind)
+        kmat = ref.kernel_from_sqdist(r2m, lengthscale, kind)
+        a = kmat + (sigma2 + 1e-6) * jnp.eye(t0, dtype=kmat.dtype)
+        w = linalg.chol_solve(a, kvec)
+        mu = gp_kernels.weighted_combine_pallas(w, grads)
+        var = (1.0 - jnp.dot(kvec, w)).reshape(1)
+        return mu, var
+
+    return est

@@ -1,0 +1,68 @@
+"""AOT emission smoke tests: HLO text well-formedness + manifest schema.
+
+The numerics of the emitted artifacts are validated on the rust side
+(rust/tests/hlo_roundtrip.rs) where the actual consumer runs them.
+"""
+
+import json
+
+import pytest
+
+from compile import aot, model
+
+
+def test_profiles_enumerate():
+    for profile in ("test", "default", "paper"):
+        arts = aot.profile_artifacts(profile)
+        names = [a.name for a in arts]
+        assert len(names) == len(set(names)), "duplicate artifact names"
+        assert any(a.meta["family"] == "gp_estimate" for a in arts)
+        assert any(a.meta["family"] == "synth" for a in arts)
+
+
+def test_gp_artifact_lowering_is_custom_call_free(tmp_path):
+    art = next(a for a in aot.profile_artifacts("test") if a.name == "gp_test")
+    text = aot.to_hlo_text(art.lower())
+    assert text.startswith("HloModule")
+    assert "custom-call" not in text, "lapack/ffi custom-call leaked into HLO"
+    assert "f32[64]" in text  # output mu shape
+
+
+def test_synth_artifact_lowering(tmp_path):
+    art = next(a for a in aot.profile_artifacts("test") if "rosenbrock" in a.name)
+    text = aot.to_hlo_text(art.lower())
+    assert text.startswith("HloModule")
+    assert "custom-call" not in text
+
+
+def test_emit_writes_manifest(tmp_path):
+    rc = aot.main(
+        ["--out-dir", str(tmp_path), "--profile", "test", "--only", "synth_sphere"]
+    )
+    assert rc == 0
+    manifest = json.loads((tmp_path / "manifest.json").read_text())
+    assert manifest["profile"] == "test"
+    (entry,) = manifest["artifacts"]
+    assert entry["name"] == "synth_sphere_d64"
+    assert (tmp_path / entry["file"]).exists()
+    assert entry["inputs"] == [{"shape": [64], "dtype": "f32"}]
+    assert entry["meta"]["family"] == "synth"
+
+
+def test_emit_caches(tmp_path):
+    args = ["--out-dir", str(tmp_path), "--profile", "test", "--only", "qnet_test_act"]
+    aot.main(args)
+    first = (tmp_path / "qnet_test_act.hlo.txt").stat().st_mtime_ns
+    aot.main(args)  # second run must not rewrite
+    assert (tmp_path / "qnet_test_act.hlo.txt").stat().st_mtime_ns == first
+
+
+def test_qnet_env_dims_match_design():
+    # These dims are the contract with rust/src/rl/*.rs — breaking them
+    # breaks artifact shapes silently, so pin them here.
+    assert aot.QNET_ENVS["cartpole"].obs_dim == 4
+    assert aot.QNET_ENVS["cartpole"].n_actions == 2
+    assert aot.QNET_ENVS["acrobot"].obs_dim == 6
+    assert aot.QNET_ENVS["acrobot"].n_actions == 3
+    assert aot.QNET_ENVS["mountaincar"].obs_dim == 2
+    assert aot.QNET_ENVS["mountaincar"].n_actions == 3

@@ -1,0 +1,122 @@
+"""Properties of the kernelized gradient estimator (paper Sec. 4.1 / 5.1).
+
+These check the *mathematical* behaviour the theory promises, on the same
+graph that gets lowered into the gp_estimate artifacts.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+
+def _setup(t, d, seed, ds=None):
+    ds = ds or d
+    r = np.random.default_rng(seed)
+    hist = r.normal(size=(t, d)).astype(np.float32)
+    grads = r.normal(size=(t, d)).astype(np.float32)
+    return hist[:, :ds], grads
+
+
+@pytest.mark.parametrize("kind", ref.KERNEL_KINDS)
+def test_interpolation_at_history_points(kind):
+    """With sigma^2 -> 0, the posterior mean interpolates observed grads
+    (GP regression exactness) — the basis of the Thm-1 lower bound."""
+    hist, grads = _setup(5, 48, 0)
+    est = model.gp_estimate_fn(kind)
+    for i in range(5):
+        mu, var = est(
+            jnp.asarray(hist[i]), jnp.asarray(hist), jnp.asarray(grads),
+            jnp.float32(3.0), jnp.float32(0.0),
+        )
+        np.testing.assert_allclose(np.asarray(mu), grads[i], rtol=2e-2, atol=2e-2)
+        assert float(var[0]) < 1e-2
+
+
+def test_variance_nonincreasing_in_history(seed=7):
+    """Lemma A.4: posterior variance norm is non-increasing in n."""
+    r = np.random.default_rng(seed)
+    d = 32
+    theta = r.normal(size=d).astype(np.float32)
+    pts = r.normal(size=(8, d)).astype(np.float32)
+    last = np.inf
+    for n in range(1, 9):
+        hist = jnp.asarray(pts[:n])
+        _, kvec = ref.gp_weights(jnp.asarray(theta), hist, 2.0, 0.1)
+        w, _ = ref.gp_weights(jnp.asarray(theta), hist, 2.0, 0.1)
+        var = float(1.0 - jnp.dot(kvec, w))
+        assert var <= last + 1e-5
+        last = var
+
+
+def test_variance_positive_and_bounded():
+    hist, grads = _setup(6, 40, 3)
+    est = model.gp_estimate_fn("matern52")
+    theta = np.random.default_rng(9).normal(size=40).astype(np.float32) * 10
+    mu, var = est(
+        jnp.asarray(theta), jnp.asarray(hist), jnp.asarray(grads),
+        jnp.float32(1.0), jnp.float32(0.05),
+    )
+    v = float(var[0])
+    assert 0.0 <= v <= 1.0 + 1e-5  # unit-amplitude kernel: kappa = 1
+
+
+def test_far_query_reverts_to_prior():
+    """A query far outside the history support has mu ~ 0 (prior mean) and
+    var ~ kappa — the estimator knows what it does not know."""
+    hist, grads = _setup(5, 24, 1)
+    est = model.gp_estimate_fn("rbf")
+    theta = np.full(24, 100.0, np.float32)
+    mu, var = est(
+        jnp.asarray(theta), jnp.asarray(hist), jnp.asarray(grads),
+        jnp.float32(1.0), jnp.float32(0.01),
+    )
+    assert float(jnp.max(jnp.abs(mu))) < 1e-3
+    assert float(var[0]) > 0.99
+
+
+@given(st.integers(2, 7), st.integers(8, 64), st.integers(0, 2**31 - 1))
+@settings(max_examples=15, deadline=None)
+def test_estimate_matches_dense_posterior(t, d, seed):
+    """The subset/pallas-composed graph equals the dense closed form when
+    the subset is the full dimension set."""
+    hist, grads = _setup(t, d, seed)
+    est = model.gp_estimate_fn("matern52")
+    theta = np.random.default_rng(seed + 1).normal(size=d).astype(np.float32)
+    mu, var = est(
+        jnp.asarray(theta), jnp.asarray(hist), jnp.asarray(grads),
+        jnp.float32(2.0), jnp.float32(0.1),
+    )
+    mu_ref, var_ref = ref.gp_estimate(
+        jnp.asarray(theta), jnp.asarray(hist), jnp.asarray(grads), 2.0, 0.1 + 1e-6
+    )
+    np.testing.assert_allclose(np.asarray(mu), np.asarray(mu_ref), rtol=5e-3, atol=5e-3)
+    assert float(var[0]) == pytest.approx(float(var_ref), abs=5e-3)
+
+
+def test_estimation_error_decays_with_history():
+    """Cor. 1 shape check: average error vs T0 decays for a smooth target
+    gradient field sampled near a point (local-history regime)."""
+    r = np.random.default_rng(5)
+    d = 8
+    a = (0.3 * r.normal(size=(d, d))).astype(np.float32)
+
+    def true_grad(x):
+        return x @ a.T  # smooth (linear) vector field
+
+    center = r.normal(size=d).astype(np.float32)
+    pts = center + 0.5 * r.normal(size=(24, d)).astype(np.float32)
+    grads = np.stack([true_grad(p) for p in pts]).astype(np.float32)
+    query = center + 0.2 * r.normal(size=d).astype(np.float32)
+    est = model.gp_estimate_fn("rbf")
+    errs = []
+    for t0 in (2, 12, 24):
+        mu, _ = est(
+            jnp.asarray(query), jnp.asarray(pts[:t0]), jnp.asarray(grads[:t0]),
+            jnp.float32(2.0), jnp.float32(1e-4),
+        )
+        errs.append(float(np.linalg.norm(np.asarray(mu) - true_grad(query))))
+    assert min(errs[1:]) < errs[0] * 0.5, f"error did not decay: {errs}"

@@ -1,0 +1,102 @@
+"""Pallas kernels vs pure-jnp oracle (the CORE L1 correctness signal).
+
+Hypothesis sweeps shapes, block sizes and kernel kinds; every property is
+an exact-math identity so tolerances are float32-roundoff only.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import gp_kernels as gk
+from compile.kernels import ref
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def _rng(seed):
+    return np.random.default_rng(seed)
+
+
+@st.composite
+def vec_hist(draw, max_t=9, max_d=300):
+    t = draw(st.integers(1, max_t))
+    d = draw(st.integers(1, max_d))
+    seed = draw(st.integers(0, 2**31 - 1))
+    r = _rng(seed)
+    theta = r.normal(size=d).astype(np.float32)
+    hist = r.normal(size=(t, d)).astype(np.float32)
+    return theta, hist
+
+
+@given(vec_hist(), st.sampled_from([7, 64, 128, 512]))
+@settings(**SETTINGS)
+def test_sqdist_vector_matches_ref(th, block):
+    theta, hist = th
+    got = gk.sqdist_vector_pallas(jnp.asarray(theta), jnp.asarray(hist), block_d=block)
+    want = ref.sqdist_vector(jnp.asarray(theta), jnp.asarray(hist))
+    np.testing.assert_allclose(got, want, rtol=5e-4, atol=1e-4)
+
+
+@given(vec_hist(), st.sampled_from([7, 64, 512]))
+@settings(**SETTINGS)
+def test_sqdist_matrix_matches_ref(th, block):
+    _, hist = th
+    got = gk.sqdist_matrix_pallas(jnp.asarray(hist), block_d=block)
+    want = ref.sqdist_matrix(jnp.asarray(hist))
+    np.testing.assert_allclose(got, want, rtol=5e-4, atol=1e-4)
+
+
+@given(
+    st.integers(1, 8),
+    st.integers(1, 700),
+    st.sampled_from([13, 128, 4096]),
+    st.integers(0, 2**31 - 1),
+)
+@settings(**SETTINGS)
+def test_weighted_combine_matches_ref(t, d, block, seed):
+    r = _rng(seed)
+    w = r.normal(size=t).astype(np.float32)
+    g = r.normal(size=(t, d)).astype(np.float32)
+    got = gk.weighted_combine_pallas(jnp.asarray(w), jnp.asarray(g), block_d=block)
+    want = ref.weighted_combine(jnp.asarray(w), jnp.asarray(g))
+    np.testing.assert_allclose(got, want, rtol=5e-4, atol=1e-4)
+
+
+def test_sqdist_vector_zero_distance():
+    hist = np.ones((3, 40), np.float32)
+    got = gk.sqdist_vector_pallas(jnp.ones(40), jnp.asarray(hist))
+    np.testing.assert_allclose(got, np.zeros(3), atol=1e-6)
+
+
+def test_sqdist_matrix_diagonal_zero():
+    r = _rng(0)
+    hist = r.normal(size=(6, 130)).astype(np.float32)
+    got = np.asarray(gk.sqdist_matrix_pallas(jnp.asarray(hist)))
+    np.testing.assert_allclose(np.diag(got), np.zeros(6), atol=1e-4)
+    np.testing.assert_allclose(got, got.T, rtol=1e-5, atol=1e-5)
+
+
+def test_combine_single_row_is_scale():
+    r = _rng(3)
+    g = r.normal(size=(1, 257)).astype(np.float32)
+    got = gk.weighted_combine_pallas(jnp.asarray([2.5], dtype=jnp.float32), jnp.asarray(g))
+    np.testing.assert_allclose(got, 2.5 * g[0], rtol=1e-5)
+
+
+@pytest.mark.parametrize("kind", ref.KERNEL_KINDS)
+def test_kernel_map_unit_at_zero(kind):
+    v = ref.kernel_from_sqdist(jnp.asarray([0.0, 1.0, 9.0]), 1.3, kind)
+    v = np.asarray(v)
+    assert v[0] == pytest.approx(1.0, abs=1e-3)
+    assert np.all(np.diff(v) < 0), "kernel must decay with distance"
+    assert np.all(v > 0)
+
+
+@pytest.mark.parametrize("kind", ref.KERNEL_KINDS)
+def test_kernel_map_lengthscale_monotone(kind):
+    # Larger lengthscale => larger kernel value at the same distance.
+    lo = float(ref.kernel_from_sqdist(jnp.asarray(4.0), 0.5, kind))
+    hi = float(ref.kernel_from_sqdist(jnp.asarray(4.0), 5.0, kind))
+    assert hi > lo

@@ -1,0 +1,48 @@
+"""Custom-call-free Cholesky solve vs numpy (L2 substrate)."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import linalg
+
+
+def _spd(n, seed, jitter=0.5):
+    r = np.random.default_rng(seed)
+    m = r.normal(size=(n, n)).astype(np.float32)
+    return m @ m.T + jitter * np.eye(n, dtype=np.float32)
+
+
+@given(st.integers(1, 24), st.integers(0, 2**31 - 1))
+@settings(max_examples=30, deadline=None)
+def test_chol_solve_matches_numpy(n, seed):
+    a = _spd(n, seed)
+    b = np.random.default_rng(seed + 1).normal(size=n).astype(np.float32)
+    x = np.asarray(linalg.chol_solve(jnp.asarray(a), jnp.asarray(b)))
+    want = np.linalg.solve(a.astype(np.float64), b.astype(np.float64))
+    np.testing.assert_allclose(x, want, rtol=2e-3, atol=2e-3)
+
+
+@given(st.integers(1, 24), st.integers(0, 2**31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_cholesky_factor_reconstructs(n, seed):
+    a = _spd(n, seed)
+    l = np.asarray(linalg.cholesky(jnp.asarray(a)))
+    assert np.allclose(np.triu(l, 1), 0.0), "L must be lower-triangular"
+    np.testing.assert_allclose(l @ l.T, a, rtol=2e-3, atol=2e-3)
+
+
+def test_solve_identity():
+    b = jnp.asarray(np.arange(5, dtype=np.float32))
+    x = linalg.chol_solve(jnp.eye(5), b)
+    np.testing.assert_allclose(np.asarray(x), np.asarray(b), rtol=1e-6)
+
+
+def test_triangular_solves_roundtrip():
+    a = _spd(7, 42)
+    l = linalg.cholesky(jnp.asarray(a))
+    b = jnp.asarray(np.random.default_rng(0).normal(size=7).astype(np.float32))
+    y = linalg.solve_lower(l, b)
+    np.testing.assert_allclose(np.asarray(l) @ np.asarray(y), np.asarray(b), rtol=1e-3, atol=1e-4)
+    x = linalg.solve_upper_t(l, y)
+    np.testing.assert_allclose(np.asarray(l).T @ np.asarray(x), np.asarray(y), rtol=1e-3, atol=1e-4)

@@ -1,0 +1,205 @@
+"""Layer-2 model graphs: shapes, finite-difference gradient checks, and
+workload-specific semantics."""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+
+
+def _fd_check(fn, x, g, eps=1e-3, n_dirs=4, rtol=0.12, seed=0):
+    """Directional finite differences against the returned gradient."""
+    r = np.random.default_rng(seed)
+    x = np.asarray(x, np.float64)
+    g = np.asarray(g, np.float64)
+    for _ in range(n_dirs):
+        v = r.normal(size=x.shape)
+        v /= np.linalg.norm(v)
+        fp = float(fn(jnp.asarray((x + eps * v).astype(np.float32))))
+        fm = float(fn(jnp.asarray((x - eps * v).astype(np.float32))))
+        fd = (fp - fm) / (2 * eps)
+        an = float(g @ v)
+        assert an == pytest.approx(fd, rel=rtol, abs=5e-3), (an, fd)
+
+
+# -- synthetic ---------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", sorted(model.SYNTH_FNS))
+def test_synth_grad_matches_fd(name):
+    vag = model.synth_value_and_grad(name)
+    theta = np.random.default_rng(1).normal(size=20).astype(np.float32)
+    f, g = vag(jnp.asarray(theta))
+    assert np.isfinite(float(f))
+    _fd_check(model.SYNTH_FNS[name], theta, g)
+
+
+def test_synth_minima():
+    # Ackley & Sphere minimize at 0, Rosenbrock at 1 (paper B.2.1).
+    z = jnp.zeros(10)
+    o = jnp.ones(10)
+    assert float(model.sphere(z)) == pytest.approx(0.0, abs=1e-3)
+    assert float(model.ackley(z)) == pytest.approx(0.0, abs=1e-3)
+    assert float(model.rosenbrock(o)) == pytest.approx(0.0, abs=1e-6)
+    assert float(model.rosenbrock(z)) > 0
+
+
+# -- MLP ---------------------------------------------------------------------
+
+
+def test_mlp_dim_formula():
+    cfg = model.MlpConfig(784, 320, 10, 9)
+    want = 784 * 320 + 320 + 7 * (320 * 320 + 320) + 320 * 10 + 10
+    assert cfg.dim == want
+
+
+def test_mlp_paper_dims_close():
+    # paper: d=978186 (MNIST 9-layer), d=2412298 (CIFAR 10-layer)
+    mnist = model.MlpConfig(784, 320, 10, 9).dim
+    cifar = model.MlpConfig(3072, 390, 10, 10).dim
+    assert abs(mnist - 978186) / 978186 < 0.01
+    assert abs(cifar - 2412298) / 2412298 < 0.01
+
+
+def test_mlp_loss_grad_shapes_and_fd():
+    cfg = model.MlpConfig(6, 5, 3, 4)
+    vag = model.mlp_loss_grad_fn(cfg)
+    r = np.random.default_rng(0)
+    flat = (0.3 * r.normal(size=cfg.dim)).astype(np.float32)
+    x = r.normal(size=(7, 6)).astype(np.float32)
+    y = np.eye(3, dtype=np.float32)[r.integers(0, 3, size=7)]
+    loss, grad, acc = vag(jnp.asarray(flat), jnp.asarray(x), jnp.asarray(y))
+    assert grad.shape == (cfg.dim,)
+    assert 0.0 <= float(acc) <= 1.0
+    assert float(loss) > 0
+
+    def f(fl):
+        lo, _, _ = vag(fl, jnp.asarray(x), jnp.asarray(y))
+        return lo
+
+    _fd_check(f, flat, grad, eps=1e-2, n_dirs=3)
+
+
+def test_mlp_perfect_prediction_low_loss():
+    cfg = model.MlpConfig(4, 8, 2, 3)
+    vag = model.mlp_loss_grad_fn(cfg)
+    # labels determined by a linear rule the net can fit after a few steps
+    r = np.random.default_rng(2)
+    flat = (0.5 * r.normal(size=cfg.dim)).astype(np.float32)
+    x = r.normal(size=(32, 4)).astype(np.float32)
+    y = np.eye(2, dtype=np.float32)[(x[:, 0] > 0).astype(int)]
+    th = jnp.asarray(flat)
+    for _ in range(300):
+        _, g, _ = vag(th, jnp.asarray(x), jnp.asarray(y))
+        th = th - 0.1 * g
+    loss, _, acc = vag(th, jnp.asarray(x), jnp.asarray(y))
+    assert float(acc) > 0.9
+    assert float(loss) < 0.4
+
+
+# -- transformer ---------------------------------------------------------------
+
+
+def test_tfm_dim_and_shapes():
+    cfg = model.TfmConfig(vocab=32, seq=16, embed=32, heads=2, blocks=1)
+    assert cfg.dim == model.shapes_size(cfg.shapes)
+    vag = model.tfm_loss_grad_fn(cfg)
+    r = np.random.default_rng(0)
+    flat = (0.05 * r.normal(size=cfg.dim)).astype(np.float32)
+    toks = r.integers(0, 32, size=(3, 17)).astype(np.int32)
+    loss, grad = vag(jnp.asarray(flat), jnp.asarray(toks))
+    assert grad.shape == (cfg.dim,)
+    # random init, uniform-ish predictions: loss ~ ln(vocab)
+    assert abs(float(loss) - math.log(32)) < 1.0
+
+
+def test_tfm_causality():
+    """Changing a future token must not change earlier-position logits."""
+    cfg = model.TfmConfig(vocab=16, seq=8, embed=16, heads=2, blocks=1)
+    r = np.random.default_rng(1)
+    flat = jnp.asarray((0.1 * r.normal(size=cfg.dim)).astype(np.float32))
+    toks = r.integers(0, 16, size=(1, 8)).astype(np.int32)
+    la = model.tfm_logits(cfg, flat, jnp.asarray(toks))
+    toks2 = toks.copy()
+    toks2[0, -1] = (toks2[0, -1] + 3) % 16
+    lb = model.tfm_logits(cfg, flat, jnp.asarray(toks2))
+    np.testing.assert_allclose(
+        np.asarray(la)[0, :-1], np.asarray(lb)[0, :-1], rtol=1e-4, atol=1e-5
+    )
+    assert not np.allclose(np.asarray(la)[0, -1], np.asarray(lb)[0, -1])
+
+
+def test_tfm_paper_dim_close():
+    # paper transformer d=1626496
+    cfg = model.TfmConfig(vocab=96, seq=128, embed=192, heads=4, blocks=4)
+    assert abs(cfg.dim - 1626496) / 1626496 < 0.25
+
+
+def test_tfm_grad_fd():
+    cfg = model.TfmConfig(vocab=12, seq=6, embed=8, heads=2, blocks=1)
+    vag = model.tfm_loss_grad_fn(cfg)
+    r = np.random.default_rng(4)
+    flat = (0.2 * r.normal(size=cfg.dim)).astype(np.float32)
+    toks = jnp.asarray(r.integers(0, 12, size=(2, 7)).astype(np.int32))
+    _, grad = vag(jnp.asarray(flat), toks)
+
+    def f(fl):
+        lo, _ = vag(fl, toks)
+        return lo
+
+    _fd_check(f, flat, grad, eps=1e-2, n_dirs=3, rtol=0.15)
+
+
+# -- qnet ---------------------------------------------------------------------
+
+
+def test_qnet_shapes_and_td_zero_loss():
+    cfg = model.QNetConfig(4, 2, 8)
+    train = model.qnet_train_fn(cfg, gamma=0.0)
+    r = np.random.default_rng(0)
+    flat = (0.3 * r.normal(size=cfg.dim)).astype(np.float32)
+    obs = r.normal(size=(16, 4)).astype(np.float32)
+    act = r.integers(0, 2, size=16).astype(np.int32)
+    next_obs = r.normal(size=(16, 4)).astype(np.float32)
+    done = np.ones(16, np.float32)
+    q = np.asarray(model.qnet_forward(cfg, jnp.asarray(flat), jnp.asarray(obs)))
+    rew = q[np.arange(16), act].astype(np.float32)
+    # gamma=0, done=1 and rew == q(s,a): TD error is exactly zero
+    loss, grad = train(
+        jnp.asarray(flat), jnp.asarray(flat), jnp.asarray(obs), jnp.asarray(act),
+        jnp.asarray(rew), jnp.asarray(next_obs), jnp.asarray(done),
+    )
+    assert float(loss) == pytest.approx(0.0, abs=1e-8)
+    np.testing.assert_allclose(np.asarray(grad), 0.0, atol=1e-6)
+
+
+def test_qnet_grad_only_through_online_net():
+    cfg = model.QNetConfig(3, 2, 6)
+    train = model.qnet_train_fn(cfg)
+    r = np.random.default_rng(1)
+    flat = jnp.asarray((0.3 * r.normal(size=cfg.dim)).astype(np.float32))
+    tgt = jnp.asarray((0.3 * r.normal(size=cfg.dim)).astype(np.float32))
+    obs = jnp.asarray(r.normal(size=(8, 3)).astype(np.float32))
+    act = jnp.asarray(r.integers(0, 2, size=8).astype(np.int32))
+    rew = jnp.asarray(r.normal(size=8).astype(np.float32))
+    nxt = jnp.asarray(r.normal(size=(8, 3)).astype(np.float32))
+    done = jnp.asarray(np.zeros(8, np.float32))
+    loss, grad = train(flat, tgt, obs, act, rew, nxt, done)
+    assert float(loss) > 0
+    assert float(jnp.linalg.norm(grad)) > 0
+
+
+# -- plumbing ------------------------------------------------------------------
+
+
+def test_unflatten_roundtrip():
+    shapes = [(3, 4), (4,), (4, 2), (2,)]
+    flat = jnp.arange(model.shapes_size(shapes), dtype=jnp.float32)
+    parts = model.unflatten(flat, shapes)
+    assert [p.shape for p in parts] == shapes
+    back = jnp.concatenate([p.ravel() for p in parts])
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(flat))

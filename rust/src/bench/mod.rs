@@ -1,0 +1,147 @@
+//! Micro-benchmark harness (criterion is unavailable offline — S17 in
+//! DESIGN.md). Used by the `benches/*.rs` targets (`harness = false`).
+//!
+//! Protocol per benchmark: warm up for `WARMUP`, then run timed batches
+//! until `MIN_TIME` or `MAX_ITERS`, and report mean / median / p95 /
+//! std-dev plus optional throughput. Results print in a stable,
+//! grep-friendly format consumed by EXPERIMENTS.md §Perf.
+
+use std::time::{Duration, Instant};
+
+use crate::util::stats;
+
+const WARMUP: Duration = Duration::from_millis(150);
+const MIN_TIME: Duration = Duration::from_millis(700);
+const MAX_ITERS: usize = 10_000;
+
+/// Timing summary of one benchmark.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub median_s: f64,
+    pub p95_s: f64,
+    pub std_s: f64,
+}
+
+impl BenchResult {
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_s * 1e3
+    }
+
+    /// Report line: `bench <name> mean=..ms median=..ms p95=..ms n=..`.
+    pub fn report(&self) -> String {
+        format!(
+            "bench {:40} mean={:>10.4}ms median={:>10.4}ms p95={:>10.4}ms sd={:>8.4}ms n={}",
+            self.name,
+            self.mean_s * 1e3,
+            self.median_s * 1e3,
+            self.p95_s * 1e3,
+            self.std_s * 1e3,
+            self.iters
+        )
+    }
+
+    /// Report with a throughput figure derived from `bytes` per call.
+    pub fn report_throughput(&self, bytes_per_call: usize) -> String {
+        let gbs = bytes_per_call as f64 / self.mean_s / 1e9;
+        format!("{}  {:>7.2} GB/s", self.report(), gbs)
+    }
+}
+
+/// Run one benchmark closure. The closure's return value is black-boxed
+/// so the optimizer cannot elide the work.
+pub fn bench<T>(name: &str, mut f: impl FnMut() -> T) -> BenchResult {
+    // warmup
+    let w0 = Instant::now();
+    while w0.elapsed() < WARMUP {
+        black_box(f());
+    }
+    // timed
+    let mut samples = Vec::new();
+    let t0 = Instant::now();
+    while t0.elapsed() < MIN_TIME && samples.len() < MAX_ITERS {
+        let s = Instant::now();
+        black_box(f());
+        samples.push(s.elapsed().as_secs_f64());
+    }
+    let res = BenchResult {
+        name: name.to_string(),
+        iters: samples.len(),
+        mean_s: stats::mean(&samples),
+        median_s: stats::median(&samples),
+        p95_s: stats::percentile(&samples, 95.0),
+        std_s: stats::std(&samples),
+    };
+    println!("{}", res.report());
+    res
+}
+
+/// Like [`bench`] but prints a GB/s throughput column.
+pub fn bench_throughput<T>(
+    name: &str,
+    bytes_per_call: usize,
+    mut f: impl FnMut() -> T,
+) -> BenchResult {
+    let res = bench_quiet(name, &mut f);
+    println!("{}", res.report_throughput(bytes_per_call));
+    res
+}
+
+fn bench_quiet<T>(name: &str, f: &mut impl FnMut() -> T) -> BenchResult {
+    let w0 = Instant::now();
+    while w0.elapsed() < WARMUP {
+        black_box(f());
+    }
+    let mut samples = Vec::new();
+    let t0 = Instant::now();
+    while t0.elapsed() < MIN_TIME && samples.len() < MAX_ITERS {
+        let s = Instant::now();
+        black_box(f());
+        samples.push(s.elapsed().as_secs_f64());
+    }
+    BenchResult {
+        name: name.to_string(),
+        iters: samples.len(),
+        mean_s: stats::mean(&samples),
+        median_s: stats::median(&samples),
+        p95_s: stats::percentile(&samples, 95.0),
+        std_s: stats::std(&samples),
+    }
+}
+
+/// Optimization barrier (std::hint::black_box wrapper, kept here so bench
+/// code has one import).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_sane_stats() {
+        let r = bench("noop", || 1 + 1);
+        assert!(r.iters > 100);
+        assert!(r.mean_s >= 0.0);
+        assert!(r.p95_s >= r.median_s);
+        assert!(r.report().contains("noop"));
+    }
+
+    #[test]
+    fn throughput_report_formats() {
+        let r = BenchResult {
+            name: "x".into(),
+            iters: 10,
+            mean_s: 0.001,
+            median_s: 0.001,
+            p95_s: 0.002,
+            std_s: 0.0001,
+        };
+        let line = r.report_throughput(1_000_000);
+        assert!(line.contains("GB/s"));
+    }
+}

@@ -1,0 +1,188 @@
+//! From-scratch CLI argument parser (no `clap` offline).
+//!
+//! Grammar: `optex <subcommand> [positionals...] [--flag] [--key value]
+//! [--set cfg.key=value ...]`. Unknown options are errors (never silently
+//! ignored); `--help` is handled by the caller via [`Args::flag`].
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Default)]
+pub struct Args {
+    /// First non-option token (e.g. `run`, `fig`, `bench`).
+    pub subcommand: Option<String>,
+    /// Remaining non-option tokens in order.
+    pub positionals: Vec<String>,
+    /// `--key value` options (last occurrence wins except `--set`).
+    options: BTreeMap<String, String>,
+    /// Bare `--flag` switches.
+    flags: Vec<String>,
+    /// Repeatable `--set key=value` config overrides, in order.
+    pub sets: Vec<String>,
+}
+
+/// CLI parse error.
+#[derive(Debug)]
+pub struct CliError(pub String);
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "cli error: {}", self.0)
+    }
+}
+
+impl std::error::Error for CliError {}
+
+/// Option names that take a value; everything else starting with `--` is
+/// a boolean flag. Keeping this table explicit makes typos hard errors.
+const VALUE_OPTS: &[&str] = &[
+    "config", "out", "artifacts", "method", "workload", "steps", "seed",
+    "seeds", "fig", "profile", "n", "t0", "filter", "lr", "optimizer",
+    "episodes", "env", "backend", "dim", "checkpoint", "resume",
+];
+
+impl Args {
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args, CliError> {
+        let mut args = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if name.is_empty() {
+                    return Err(CliError("bare `--` not supported".into()));
+                }
+                // --key=value form
+                if let Some((k, v)) = name.split_once('=') {
+                    args.insert(k, v.to_string())?;
+                    continue;
+                }
+                if name == "set" {
+                    let v = it
+                        .next()
+                        .ok_or_else(|| CliError("--set needs key=value".into()))?;
+                    args.sets.push(v);
+                } else if VALUE_OPTS.contains(&name) {
+                    let v = it.next().ok_or_else(|| {
+                        CliError(format!("--{name} needs a value"))
+                    })?;
+                    args.options.insert(name.to_string(), v);
+                } else {
+                    args.flags.push(name.to_string());
+                }
+            } else if args.subcommand.is_none() {
+                args.subcommand = Some(tok);
+            } else {
+                args.positionals.push(tok);
+            }
+        }
+        Ok(args)
+    }
+
+    fn insert(&mut self, k: &str, v: String) -> Result<(), CliError> {
+        if k == "set" {
+            self.sets.push(v);
+            Ok(())
+        } else if VALUE_OPTS.contains(&k) {
+            self.options.insert(k.to_string(), v);
+            Ok(())
+        } else {
+            Err(CliError(format!("unknown option --{k}")))
+        }
+    }
+
+    /// String option value.
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    /// Parsed numeric option.
+    pub fn opt_usize(&self, name: &str) -> Result<Option<usize>, CliError> {
+        match self.options.get(name) {
+            None => Ok(None),
+            Some(s) => s
+                .parse::<usize>()
+                .map(Some)
+                .map_err(|_| CliError(format!("--{name}: expected integer, got {s:?}"))),
+        }
+    }
+
+    pub fn opt_f64(&self, name: &str) -> Result<Option<f64>, CliError> {
+        match self.options.get(name) {
+            None => Ok(None),
+            Some(s) => s
+                .parse::<f64>()
+                .map(Some)
+                .map_err(|_| CliError(format!("--{name}: expected number, got {s:?}"))),
+        }
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    /// Reject flags that no subcommand understands (call after dispatch
+    /// decides which flags it consumed).
+    pub fn check_known_flags(&self, known: &[&str]) -> Result<(), CliError> {
+        for f in &self.flags {
+            if !known.contains(&f.as_str()) {
+                return Err(CliError(format!("unknown flag --{f}")));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_options_flags() {
+        let a = parse("run --config configs/fig2.toml --steps 100 --paper --set optex.t0=20");
+        assert_eq!(a.subcommand.as_deref(), Some("run"));
+        assert_eq!(a.opt("config"), Some("configs/fig2.toml"));
+        assert_eq!(a.opt_usize("steps").unwrap(), Some(100));
+        assert!(a.flag("paper"));
+        assert!(!a.flag("quiet"));
+        assert_eq!(a.sets, vec!["optex.t0=20"]);
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("fig --fig=2 --seed=9");
+        assert_eq!(a.opt("fig"), Some("2"));
+        assert_eq!(a.opt_usize("seed").unwrap(), Some(9));
+    }
+
+    #[test]
+    fn positionals_collected() {
+        let a = parse("fig 2 6a");
+        assert_eq!(a.subcommand.as_deref(), Some("fig"));
+        assert_eq!(a.positionals, vec!["2", "6a"]);
+    }
+
+    #[test]
+    fn repeated_sets_preserved_in_order() {
+        let a = parse("run --set a=1 --set b=2");
+        assert_eq!(a.sets, vec!["a=1", "b=2"]);
+    }
+
+    #[test]
+    fn errors() {
+        assert!(Args::parse(["--steps".to_string()]).is_err());
+        assert!(Args::parse(["--unknown=3".to_string()]).is_err());
+        assert!(Args::parse(["--".to_string()]).is_err());
+        let a = parse("run --verbose");
+        assert!(a.check_known_flags(&["quiet"]).is_err());
+        assert!(a.check_known_flags(&["verbose"]).is_ok());
+    }
+
+    #[test]
+    fn bad_numeric_value() {
+        let a = parse("run --steps ten");
+        assert!(a.opt_usize("steps").is_err());
+    }
+}

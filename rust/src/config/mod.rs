@@ -1,0 +1,382 @@
+//! Typed run configuration (the framework's config system).
+//!
+//! Configs are TOML files (parsed by the from-scratch [`toml`] subset
+//! parser) with CLI `--set key=value` overrides. Every knob of Algo. 1 and
+//! of the baselines is reachable from here; `configs/*.toml` in the repo
+//! root mirror the paper's Appx-B.2 experiment settings.
+
+pub mod toml;
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use crate::coordinator::selection::Selection;
+use crate::gp::Kernel;
+use crate::opt::{OptSpec, Schedule};
+use toml::Value;
+
+/// Which iteration scheme drives the run (paper Fig. 5).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Method {
+    /// Algo. 1 — proxy updates on estimated gradients, then N parallel
+    /// ground-truth steps.
+    Optex,
+    /// Standard sequential FOO (Algo. 1 with N = 1).
+    Vanilla,
+    /// Ideal parallelization: ground-truth gradients for the chain
+    /// (impractical upper baseline).
+    Target,
+    /// Sample-averaging baseline (Remark 1): N gradients at the SAME
+    /// point, averaged.
+    DataParallel,
+}
+
+impl Method {
+    pub fn parse(s: &str) -> Option<Method> {
+        match s {
+            "optex" => Some(Method::Optex),
+            "vanilla" => Some(Method::Vanilla),
+            "target" => Some(Method::Target),
+            "dataparallel" | "data_parallel" => Some(Method::DataParallel),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::Optex => "optex",
+            Method::Vanilla => "vanilla",
+            Method::Target => "target",
+            Method::DataParallel => "dataparallel",
+        }
+    }
+}
+
+/// Gradient-estimation backend.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// rust/src/gp (request path stays rust-only either way).
+    Native,
+    /// AOT gp_estimate artifact through PJRT.
+    Hlo,
+}
+
+/// OptEx-specific knobs (paper Sec. 4 + Appx B.2).
+#[derive(Clone, Debug)]
+pub struct OptexParams {
+    /// Parallelism N.
+    pub parallelism: usize,
+    /// Local-history length T₀.
+    pub t0: usize,
+    pub kernel: Kernel,
+    /// None -> median heuristic.
+    pub lengthscale: Option<f64>,
+    /// Observation noise σ².
+    pub sigma2: f64,
+    /// Kernel dim-subset size D̃ (None -> full d).
+    pub dsub: Option<usize>,
+    /// θ_t selection principle (Fig. 6b): last / func / grad.
+    pub selection: Selection,
+    /// Evaluate intermediate gradients (Fig. 6a ablation; true = paper
+    /// Algo. 1 line 7).
+    pub eval_intermediate: bool,
+    pub backend: Backend,
+}
+
+impl Default for OptexParams {
+    fn default() -> Self {
+        OptexParams {
+            parallelism: 4,
+            t0: 10,
+            kernel: Kernel::Matern52,
+            lengthscale: None,
+            sigma2: 0.0,
+            dsub: None,
+            selection: Selection::Last,
+            eval_intermediate: true,
+            backend: Backend::Native,
+        }
+    }
+}
+
+/// Complete run configuration.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    /// Workload id: synthetic fn name, "mnist", "fmnist", "cifar",
+    /// "tfm_char", or an RL env ("cartpole", ...).
+    pub workload: String,
+    pub method: Method,
+    /// Sequential iterations T (episodes for RL).
+    pub steps: usize,
+    pub seed: u64,
+    pub optimizer: OptSpec,
+    /// Learning-rate schedule applied on top of the base lr.
+    pub schedule: Schedule,
+    pub optex: OptexParams,
+    /// Extra gaussian gradient noise std for synthetic workloads (σ of
+    /// Assump. 1; 0 = deterministic, paper Sec. 6.1).
+    pub noise_std: f64,
+    /// Synthetic-function dimension override (d).
+    pub synth_dim: usize,
+    pub artifacts_dir: PathBuf,
+    pub out_dir: PathBuf,
+    /// Record metrics every k-th sequential iteration.
+    pub log_every: usize,
+    /// Use HLO workload oracle instead of the native one where available.
+    pub hlo_workload: bool,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            workload: "rosenbrock".into(),
+            method: Method::Optex,
+            steps: 100,
+            seed: 0,
+            optimizer: OptSpec::Adam { lr: 0.1, beta1: 0.9, beta2: 0.999, eps: 1e-8 },
+            schedule: Schedule::Constant,
+            optex: OptexParams::default(),
+            noise_std: 0.0,
+            synth_dim: 10_000,
+            artifacts_dir: PathBuf::from("artifacts"),
+            out_dir: PathBuf::from("results"),
+            log_every: 1,
+            hlo_workload: false,
+        }
+    }
+}
+
+/// Config error with the offending key.
+#[derive(Debug)]
+pub struct ConfigError(pub String);
+
+impl std::fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "config error: {}", self.0)
+    }
+}
+
+impl std::error::Error for ConfigError {}
+
+fn bad(key: &str, why: &str) -> ConfigError {
+    ConfigError(format!("{key}: {why}"))
+}
+
+impl RunConfig {
+    /// Parse a TOML document, starting from defaults.
+    pub fn from_toml(text: &str) -> Result<RunConfig, ConfigError> {
+        let map = toml::parse(text).map_err(|e| ConfigError(e.to_string()))?;
+        let mut cfg = RunConfig::default();
+        for (k, v) in &map {
+            cfg.apply(k, v)?;
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Apply `--set key=value` CLI overrides after file parsing.
+    pub fn apply_override(&mut self, kv: &str) -> Result<(), ConfigError> {
+        let (k, raw) = kv
+            .split_once('=')
+            .ok_or_else(|| bad(kv, "override must be key=value"))?;
+        // Reuse the TOML value grammar for the right-hand side; bare words
+        // (e.g. `workload=mnist`) are treated as strings.
+        let v = toml::parse(&format!("x = {raw}"))
+            .map(|m| m["x"].clone())
+            .unwrap_or_else(|_| Value::Str(raw.to_string()));
+        self.apply(k.trim(), &v)?;
+        self.validate()
+    }
+
+    fn apply(&mut self, key: &str, v: &Value) -> Result<(), ConfigError> {
+        let need_str = || v.as_str().ok_or_else(|| bad(key, "expected string"));
+        let need_f64 = || v.as_f64().ok_or_else(|| bad(key, "expected number"));
+        let need_usize = || v.as_usize().ok_or_else(|| bad(key, "expected non-negative integer"));
+        let need_bool = || v.as_bool().ok_or_else(|| bad(key, "expected bool"));
+        match key {
+            "workload" => self.workload = need_str()?.to_string(),
+            "method" => {
+                self.method = Method::parse(need_str()?)
+                    .ok_or_else(|| bad(key, "unknown method"))?
+            }
+            "steps" => self.steps = need_usize()?,
+            "seed" => self.seed = need_usize()? as u64,
+            "noise_std" => self.noise_std = need_f64()?,
+            "synth_dim" => self.synth_dim = need_usize()?,
+            "artifacts_dir" => self.artifacts_dir = PathBuf::from(need_str()?),
+            "out_dir" => self.out_dir = PathBuf::from(need_str()?),
+            "log_every" => self.log_every = need_usize()?.max(1),
+            "hlo_workload" => self.hlo_workload = need_bool()?,
+            "optimizer.name" => {
+                let lr = self.optimizer.lr();
+                self.optimizer = OptSpec::parse(need_str()?, lr)
+                    .ok_or_else(|| bad(key, "unknown optimizer"))?;
+            }
+            "optimizer.schedule" => {
+                self.schedule = Schedule::parse(need_str()?)
+                    .ok_or_else(|| bad(key, "unknown schedule (constant|warmup:K|step:K:G|cosine:H:F|theory:N:T)"))?;
+            }
+            "optimizer.lr" => {
+                let lr = need_f64()?;
+                self.optimizer = OptSpec::parse(self.optimizer.name(), lr)
+                    .expect("known optimizer name");
+            }
+            "optex.parallelism" => self.optex.parallelism = need_usize()?,
+            "optex.t0" => self.optex.t0 = need_usize()?,
+            "optex.kernel" => {
+                self.optex.kernel = Kernel::parse(need_str()?)
+                    .ok_or_else(|| bad(key, "unknown kernel"))?
+            }
+            "optex.lengthscale" => {
+                let l = need_f64()?;
+                self.optex.lengthscale = if l > 0.0 { Some(l) } else { None };
+            }
+            "optex.sigma2" => self.optex.sigma2 = need_f64()?,
+            "optex.dsub" => {
+                let d = need_usize()?;
+                self.optex.dsub = if d > 0 { Some(d) } else { None };
+            }
+            "optex.selection" => {
+                self.optex.selection = Selection::parse(need_str()?)
+                    .ok_or_else(|| bad(key, "unknown selection principle"))?
+            }
+            "optex.eval_intermediate" => self.optex.eval_intermediate = need_bool()?,
+            "optex.backend" => {
+                self.optex.backend = match need_str()? {
+                    "native" => Backend::Native,
+                    "hlo" => Backend::Hlo,
+                    other => return Err(bad(key, &format!("unknown backend {other:?}"))),
+                }
+            }
+            _ => return Err(bad(key, "unknown config key")),
+        }
+        Ok(())
+    }
+
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        if self.optex.parallelism == 0 {
+            return Err(bad("optex.parallelism", "must be >= 1"));
+        }
+        if self.optex.t0 == 0 {
+            return Err(bad("optex.t0", "must be >= 1"));
+        }
+        if self.steps == 0 {
+            return Err(bad("steps", "must be >= 1"));
+        }
+        if self.optex.sigma2 < 0.0 {
+            return Err(bad("optex.sigma2", "must be >= 0"));
+        }
+        if self.noise_std < 0.0 {
+            return Err(bad("noise_std", "must be >= 0"));
+        }
+        if self.synth_dim == 0 {
+            return Err(bad("synth_dim", "must be >= 1"));
+        }
+        Ok(())
+    }
+
+    /// Flatten back to key/value pairs (for run provenance records).
+    pub fn describe(&self) -> BTreeMap<String, String> {
+        let mut m = BTreeMap::new();
+        m.insert("workload".into(), self.workload.clone());
+        m.insert("method".into(), self.method.name().into());
+        m.insert("steps".into(), self.steps.to_string());
+        m.insert("seed".into(), self.seed.to_string());
+        m.insert("optimizer".into(), self.optimizer.name().into());
+        m.insert("lr".into(), format!("{}", self.optimizer.lr()));
+        m.insert("schedule".into(), format!("{:?}", self.schedule));
+        m.insert("N".into(), self.optex.parallelism.to_string());
+        m.insert("T0".into(), self.optex.t0.to_string());
+        m.insert("kernel".into(), self.optex.kernel.name().into());
+        m.insert("sigma2".into(), format!("{}", self.optex.sigma2));
+        m.insert("selection".into(), self.optex.selection.name().into());
+        m.insert("noise_std".into(), format!("{}", self.noise_std));
+        m.insert("synth_dim".into(), self.synth_dim.to_string());
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_validate() {
+        RunConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn full_document_roundtrip() {
+        let doc = r#"
+            workload = "sphere"
+            method = "target"
+            steps = 50
+            seed = 3
+            noise_std = 0.1
+            synth_dim = 1000
+
+            [optimizer]
+            name = "sgd"
+            lr = 0.01
+
+            [optex]
+            parallelism = 5
+            t0 = 20
+            kernel = "rbf"
+            sigma2 = 0.05
+            dsub = 256
+            selection = "func"
+            eval_intermediate = false
+            backend = "native"
+        "#;
+        let cfg = RunConfig::from_toml(doc).unwrap();
+        assert_eq!(cfg.workload, "sphere");
+        assert_eq!(cfg.method, Method::Target);
+        assert_eq!(cfg.optimizer, OptSpec::Sgd { lr: 0.01 });
+        assert_eq!(cfg.optex.parallelism, 5);
+        assert_eq!(cfg.optex.kernel, Kernel::Rbf);
+        assert_eq!(cfg.optex.dsub, Some(256));
+        assert!(!cfg.optex.eval_intermediate);
+        assert_eq!(cfg.optex.selection, Selection::Func);
+    }
+
+    #[test]
+    fn overrides_apply_after_file() {
+        let mut cfg = RunConfig::default();
+        cfg.apply_override("method=vanilla").unwrap();
+        cfg.apply_override("optex.parallelism=8").unwrap();
+        cfg.apply_override("optimizer.lr=0.5").unwrap();
+        cfg.apply_override("workload=mnist").unwrap();
+        assert_eq!(cfg.method, Method::Vanilla);
+        assert_eq!(cfg.optex.parallelism, 8);
+        assert!((cfg.optimizer.lr() - 0.5).abs() < 1e-12);
+        assert_eq!(cfg.workload, "mnist");
+    }
+
+    #[test]
+    fn rejects_unknown_keys_and_bad_values() {
+        assert!(RunConfig::from_toml("bogus = 1").is_err());
+        assert!(RunConfig::from_toml("method = \"magic\"").is_err());
+        assert!(RunConfig::from_toml("steps = 0").is_err());
+        let mut cfg = RunConfig::default();
+        assert!(cfg.apply_override("optex.parallelism=0").is_err());
+        assert!(cfg.apply_override("nokey=1").is_err());
+        assert!(cfg.apply_override("justakey").is_err());
+    }
+
+    #[test]
+    fn optimizer_name_preserves_lr() {
+        let mut cfg = RunConfig::default();
+        cfg.apply_override("optimizer.lr=0.25").unwrap();
+        cfg.apply_override("optimizer.name=sgd").unwrap();
+        assert_eq!(cfg.optimizer, OptSpec::Sgd { lr: 0.25 });
+    }
+
+    #[test]
+    fn describe_contains_core_fields() {
+        let d = RunConfig::default().describe();
+        for k in ["workload", "method", "N", "T0", "kernel"] {
+            assert!(d.contains_key(k), "{k}");
+        }
+    }
+}

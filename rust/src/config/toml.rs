@@ -1,0 +1,301 @@
+//! Minimal TOML-subset parser (no `toml`/`serde` crates offline).
+//!
+//! Supports what the run configs need:
+//!   * `[table]` and `[dotted.table]` headers,
+//!   * `key = value` with string / integer / float / bool / flat arrays,
+//!   * `#` comments and blank lines.
+//!
+//! Not supported (rejected with a line-numbered error, never silently
+//! misparsed): multi-line strings, inline tables, array-of-tables,
+//! datetimes.
+//!
+//! Values land in a flat `BTreeMap<String, Value>` keyed by
+//! `table.subkey` paths, which the typed layer (`schema.rs`) consumes.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// A parsed TOML scalar or flat array.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_i64().and_then(|i| usize::try_from(i).ok())
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Value]> {
+        match self {
+            Value::Arr(a) => Some(a),
+            _ => None,
+        }
+    }
+}
+
+/// Line-numbered parse error.
+#[derive(Debug)]
+pub struct TomlError {
+    pub line: usize,
+    pub message: String,
+}
+
+impl fmt::Display for TomlError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "toml error on line {}: {}", self.line, self.message)
+    }
+}
+
+impl std::error::Error for TomlError {}
+
+/// Parse a document into a flat `path -> value` map.
+pub fn parse(text: &str) -> Result<BTreeMap<String, Value>, TomlError> {
+    let mut map = BTreeMap::new();
+    let mut prefix = String::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        let err = |m: &str| TomlError { line: lineno + 1, message: m.to_string() };
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            if line.starts_with("[[") {
+                return Err(err("array-of-tables is not supported"));
+            }
+            let name = rest
+                .strip_suffix(']')
+                .ok_or_else(|| err("unterminated table header"))?
+                .trim();
+            if name.is_empty() || !name.split('.').all(is_bare_key) {
+                return Err(err("invalid table name"));
+            }
+            prefix = name.to_string();
+            continue;
+        }
+        let eq = line.find('=').ok_or_else(|| err("expected `key = value`"))?;
+        let key = line[..eq].trim();
+        if !is_bare_key(key) {
+            return Err(err(&format!("invalid key {key:?}")));
+        }
+        let val = parse_value(line[eq + 1..].trim())
+            .map_err(|m| err(&m))?;
+        let path = if prefix.is_empty() {
+            key.to_string()
+        } else {
+            format!("{prefix}.{key}")
+        };
+        if map.insert(path.clone(), val).is_some() {
+            return Err(err(&format!("duplicate key {path:?}")));
+        }
+    }
+    Ok(map)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // `#` starts a comment unless inside a quoted string.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn is_bare_key(s: &str) -> bool {
+    !s.is_empty()
+        && s.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-')
+}
+
+fn parse_value(s: &str) -> Result<Value, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner.strip_suffix('"').ok_or("unterminated string")?;
+        let mut out = String::new();
+        let mut chars = inner.chars();
+        while let Some(c) = chars.next() {
+            if c == '\\' {
+                match chars.next() {
+                    Some('n') => out.push('\n'),
+                    Some('t') => out.push('\t'),
+                    Some('"') => out.push('"'),
+                    Some('\\') => out.push('\\'),
+                    other => return Err(format!("bad escape \\{other:?}")),
+                }
+            } else if c == '"' {
+                return Err("stray quote inside string".into());
+            } else {
+                out.push(c);
+            }
+        }
+        return Ok(Value::Str(out));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner.strip_suffix(']').ok_or("unterminated array")?.trim();
+        if inner.is_empty() {
+            return Ok(Value::Arr(Vec::new()));
+        }
+        let mut items = Vec::new();
+        for part in split_top_level(inner)? {
+            items.push(parse_value(part.trim())?);
+        }
+        return Ok(Value::Arr(items));
+    }
+    // numbers: underscores allowed as separators
+    let cleaned: String = s.chars().filter(|&c| c != '_').collect();
+    if cleaned.contains('.') || cleaned.contains('e') || cleaned.contains('E') {
+        cleaned.parse::<f64>().map(Value::Float).map_err(|_| format!("bad float {s:?}"))
+    } else {
+        cleaned.parse::<i64>().map(Value::Int).map_err(|_| format!("bad value {s:?}"))
+    }
+}
+
+/// Split an array body on top-level commas (strings may contain commas).
+fn split_top_level(s: &str) -> Result<Vec<&str>, String> {
+    let mut parts = Vec::new();
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut start = 0;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth = depth.checked_sub(1).ok_or("unbalanced ]")?,
+            ',' if !in_str && depth == 0 => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    if in_str {
+        return Err("unterminated string in array".into());
+    }
+    parts.push(&s[start..]);
+    Ok(parts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_typical_run_config() {
+        let doc = r#"
+            # OptEx run config
+            workload = "rosenbrock"
+            steps = 200
+            seed = 7
+
+            [optex]
+            parallelism = 5
+            t0 = 20
+            kernel = "matern52"   # paper B.2.1
+            sigma2 = 0.0
+            lr = 1e-1
+
+            [optimizer]
+            name = "adam"
+            betas = [0.9, 0.999]
+            nesterov = false
+        "#;
+        let m = parse(doc).unwrap();
+        assert_eq!(m["workload"].as_str(), Some("rosenbrock"));
+        assert_eq!(m["steps"].as_usize(), Some(200));
+        assert_eq!(m["optex.parallelism"].as_usize(), Some(5));
+        assert_eq!(m["optex.kernel"].as_str(), Some("matern52"));
+        assert_eq!(m["optex.sigma2"].as_f64(), Some(0.0));
+        assert_eq!(m["optex.lr"].as_f64(), Some(0.1));
+        assert_eq!(m["optimizer.nesterov"].as_bool(), Some(false));
+        let betas = m["optimizer.betas"].as_arr().unwrap();
+        assert_eq!(betas[1].as_f64(), Some(0.999));
+    }
+
+    #[test]
+    fn strings_with_hash_and_escapes() {
+        let m = parse(r#"s = "a#b\n\"c\"""#).unwrap();
+        assert_eq!(m["s"].as_str(), Some("a#b\n\"c\""));
+    }
+
+    #[test]
+    fn numbers_with_underscores() {
+        let m = parse("d = 2_412_298\nx = 1_000.5").unwrap();
+        assert_eq!(m["d"].as_i64(), Some(2412298));
+        assert_eq!(m["x"].as_f64(), Some(1000.5));
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        for bad in [
+            "key",
+            "= 3",
+            "[unclosed",
+            "[[arr]]",
+            "k = ",
+            "k = \"open",
+            "k = [1, 2",
+            "a.b = 1", // dotted keys only via table headers
+            "k = 1\nk = 2",
+        ] {
+            assert!(parse(bad).is_err(), "should reject {bad:?}");
+        }
+    }
+
+    #[test]
+    fn empty_and_comment_only() {
+        assert!(parse("").unwrap().is_empty());
+        assert!(parse("# just a comment\n\n").unwrap().is_empty());
+    }
+
+    #[test]
+    fn nested_arrays() {
+        let m = parse("a = [[1, 2], [3]]").unwrap();
+        let outer = m["a"].as_arr().unwrap();
+        assert_eq!(outer[0].as_arr().unwrap()[1].as_i64(), Some(2));
+        assert_eq!(outer[1].as_arr().unwrap()[0].as_i64(), Some(3));
+    }
+}

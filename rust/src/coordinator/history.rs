@@ -1,0 +1,183 @@
+//! Bounded local gradient history (paper Sec. 4.1, "Local History of
+//! Gradients").
+//!
+//! Holds the most recent T₀ (θ, ∇f(θ)) pairs. θ is stored *restricted to
+//! the kernel dimension subset* (Appx B.2.3) — the full θ is never needed
+//! again — while gradients are stored over the full dimension d for the
+//! posterior combine. Eviction is strict FIFO, which for OptEx coincides
+//! with "nearest in optimization time", the locality the paper's local-
+//! history argument relies on.
+
+use std::collections::VecDeque;
+
+use crate::gp::DimSubset;
+
+/// One historical evaluation.
+#[derive(Clone, Debug)]
+pub struct Entry {
+    /// θ restricted to the kernel subset (len = subset.len()).
+    pub theta_sub: Vec<f32>,
+    /// Full-dimension gradient ∇f(θ).
+    pub grad: Vec<f32>,
+}
+
+/// FIFO ring of the last T₀ evaluations.
+#[derive(Debug)]
+pub struct GradHistory {
+    cap: usize,
+    subset: DimSubset,
+    entries: VecDeque<Entry>,
+    total_pushed: u64,
+}
+
+impl GradHistory {
+    /// `cap` = T₀ (≥ 1), `subset` = the fixed kernel dim subset.
+    pub fn new(cap: usize, subset: DimSubset) -> Self {
+        assert!(cap >= 1, "history capacity must be >= 1");
+        GradHistory { cap, subset, entries: VecDeque::with_capacity(cap + 1), total_pushed: 0 }
+    }
+
+    /// Record an evaluation; evicts the oldest entry beyond capacity.
+    pub fn push(&mut self, theta_full: &[f32], grad: Vec<f32>) {
+        debug_assert_eq!(theta_full.len(), self.subset.full_dim());
+        debug_assert_eq!(grad.len(), self.subset.full_dim());
+        let theta_sub = self.subset.gather(theta_full);
+        self.entries.push_back(Entry { theta_sub, grad });
+        if self.entries.len() > self.cap {
+            self.entries.pop_front();
+        }
+        self.total_pushed += 1;
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.entries.len() == self.cap
+    }
+
+    pub fn total_pushed(&self) -> u64 {
+        self.total_pushed
+    }
+
+    pub fn subset(&self) -> &DimSubset {
+        &self.subset
+    }
+
+    /// Borrowed views (oldest -> newest) for the native estimator.
+    pub fn views(&self) -> (Vec<&[f32]>, Vec<&[f32]>) {
+        let mut thetas = Vec::with_capacity(self.entries.len());
+        let mut grads = Vec::with_capacity(self.entries.len());
+        for e in &self.entries {
+            thetas.push(e.theta_sub.as_slice());
+            grads.push(e.grad.as_slice());
+        }
+        (thetas, grads)
+    }
+
+    /// Row-major (T₀ × D̃) and (T₀ × d) flattenings for the HLO backend.
+    /// Only valid when `is_full()` (artifact shapes are static).
+    pub fn flatten(&self, hist_out: &mut Vec<f32>, grads_out: &mut Vec<f32>) {
+        assert!(self.is_full(), "HLO estimation needs a full history");
+        hist_out.clear();
+        grads_out.clear();
+        for e in &self.entries {
+            hist_out.extend_from_slice(&e.theta_sub);
+            grads_out.extend_from_slice(&e.grad);
+        }
+    }
+
+    pub fn clear(&mut self) {
+        self.entries.clear();
+    }
+
+    /// Restore a checkpointed entry: `theta_sub` is ALREADY restricted to
+    /// the subset (checkpoints store the gathered rows, the full θ of
+    /// history points is never kept).
+    pub fn restore_entry(&mut self, theta_sub: Vec<f32>, grad: Vec<f32>) {
+        debug_assert_eq!(theta_sub.len(), self.subset.len());
+        self.entries.push_back(Entry { theta_sub, grad });
+        if self.entries.len() > self.cap {
+            self.entries.pop_front();
+        }
+        self.total_pushed += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn hist(cap: usize, d: usize) -> GradHistory {
+        GradHistory::new(cap, DimSubset::full(d))
+    }
+
+    #[test]
+    fn fifo_eviction_preserves_order_and_cap() {
+        let mut h = hist(3, 2);
+        for i in 0..5 {
+            let v = vec![i as f32; 2];
+            h.push(&v, vec![10.0 * i as f32; 2]);
+        }
+        assert_eq!(h.len(), 3);
+        assert!(h.is_full());
+        assert_eq!(h.total_pushed(), 5);
+        let (thetas, grads) = h.views();
+        assert_eq!(thetas[0][0], 2.0); // oldest surviving = push #2
+        assert_eq!(thetas[2][0], 4.0);
+        assert_eq!(grads[2][0], 40.0);
+    }
+
+    #[test]
+    fn subset_gather_applied_on_push() {
+        let mut rng = Rng::new(0);
+        let sub = DimSubset::sample(10, 4, &mut rng);
+        let idx = sub.indices().to_vec();
+        let mut h = GradHistory::new(2, sub);
+        let theta: Vec<f32> = (0..10).map(|i| i as f32).collect();
+        h.push(&theta, vec![0.0; 10]);
+        let (thetas, _) = h.views();
+        assert_eq!(thetas[0].len(), 4);
+        for (v, &i) in thetas[0].iter().zip(&idx) {
+            assert_eq!(*v, i as f32);
+        }
+    }
+
+    #[test]
+    fn flatten_layout_row_major() {
+        let mut h = hist(2, 3);
+        h.push(&[1.0, 2.0, 3.0], vec![4.0, 5.0, 6.0]);
+        h.push(&[7.0, 8.0, 9.0], vec![10.0, 11.0, 12.0]);
+        let (mut a, mut b) = (Vec::new(), Vec::new());
+        h.flatten(&mut a, &mut b);
+        assert_eq!(a, vec![1.0, 2.0, 3.0, 7.0, 8.0, 9.0]);
+        assert_eq!(b, vec![4.0, 5.0, 6.0, 10.0, 11.0, 12.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "full history")]
+    fn flatten_requires_full() {
+        let h = hist(4, 2);
+        let (mut a, mut b) = (Vec::new(), Vec::new());
+        h.flatten(&mut a, &mut b);
+    }
+
+    #[test]
+    fn clear_resets_entries_not_counter() {
+        let mut h = hist(2, 1);
+        h.push(&[1.0], vec![1.0]);
+        h.clear();
+        assert!(h.is_empty());
+        assert_eq!(h.total_pushed(), 1);
+    }
+}

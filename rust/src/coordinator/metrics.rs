@@ -1,0 +1,181 @@
+//! Per-iteration metrics recording (the framework's observability layer).
+//!
+//! Every run produces a [`RunRecord`]: one [`IterRecord`] per logged
+//! sequential iteration, carrying both *measured* wallclock and the
+//! *modeled parallel time* (Σ_t proxy_t + max_i worker_{t,i}) that is the
+//! faithful analogue of the paper's wallclock axis (DESIGN.md §2,
+//! "Parallelism model"). Figure harnesses consume these records; `to_csv`
+//! writes the raw series.
+
+use std::path::Path;
+
+use crate::util::csv::CsvWriter;
+
+/// One logged sequential iteration.
+#[derive(Clone, Debug)]
+pub struct IterRecord {
+    /// Sequential iteration index t (1-based).
+    pub iter: usize,
+    /// Cumulative ground-truth gradient evaluations so far (= N·t).
+    pub grad_evals: u64,
+    /// Loss / function value at the accepted iterate.
+    pub loss: f64,
+    /// ‖∇f‖ at the accepted iterate (last evaluated gradient).
+    pub grad_norm: f64,
+    /// Best loss seen so far in this run.
+    pub best_loss: f64,
+    /// Cumulative measured wallclock (s).
+    pub wall_s: f64,
+    /// Cumulative modeled ideal-parallel time (s).
+    pub parallel_s: f64,
+    /// GP posterior variance at the last proxy query (0 for baselines).
+    pub est_var: f64,
+    /// Optional task metric (accuracy for classifiers, reward for RL).
+    pub aux: Option<f64>,
+}
+
+/// A completed (or in-progress) run's metric series plus provenance.
+#[derive(Clone, Debug, Default)]
+pub struct RunRecord {
+    /// Series label, e.g. "optex", "vanilla", "target".
+    pub label: String,
+    pub rows: Vec<IterRecord>,
+}
+
+impl RunRecord {
+    pub fn new(label: impl Into<String>) -> Self {
+        RunRecord { label: label.into(), rows: Vec::new() }
+    }
+
+    pub fn push(&mut self, row: IterRecord) {
+        self.rows.push(row);
+    }
+
+    pub fn final_loss(&self) -> f64 {
+        self.rows.last().map(|r| r.loss).unwrap_or(f64::NAN)
+    }
+
+    pub fn best_loss(&self) -> f64 {
+        self.rows.last().map(|r| r.best_loss).unwrap_or(f64::NAN)
+    }
+
+    pub fn total_wall_s(&self) -> f64 {
+        self.rows.last().map(|r| r.wall_s).unwrap_or(0.0)
+    }
+
+    pub fn total_parallel_s(&self) -> f64 {
+        self.rows.last().map(|r| r.parallel_s).unwrap_or(0.0)
+    }
+
+    /// Sequential iterations needed to first reach `target` best-loss;
+    /// `None` if never reached. This is the paper's Fig-2 comparison axis.
+    pub fn iters_to_reach(&self, target: f64) -> Option<usize> {
+        self.rows.iter().find(|r| r.best_loss <= target).map(|r| r.iter)
+    }
+
+    /// Loss series (per logged iteration).
+    pub fn loss_series(&self) -> Vec<f64> {
+        self.rows.iter().map(|r| r.loss).collect()
+    }
+
+    pub fn best_loss_series(&self) -> Vec<f64> {
+        self.rows.iter().map(|r| r.best_loss).collect()
+    }
+
+    pub fn aux_series(&self) -> Vec<f64> {
+        self.rows.iter().map(|r| r.aux.unwrap_or(f64::NAN)).collect()
+    }
+
+    /// Write the raw series as CSV.
+    pub fn to_csv(&self, path: &Path) -> std::io::Result<()> {
+        let mut w = CsvWriter::create(
+            path,
+            &[
+                "label", "iter", "grad_evals", "loss", "grad_norm", "best_loss",
+                "wall_s", "parallel_s", "est_var", "aux",
+            ],
+        )?;
+        for r in &self.rows {
+            w.tagged_row(
+                &self.label,
+                &[
+                    r.iter as f64,
+                    r.grad_evals as f64,
+                    r.loss,
+                    r.grad_norm,
+                    r.best_loss,
+                    r.wall_s,
+                    r.parallel_s,
+                    r.est_var,
+                    r.aux.unwrap_or(f64::NAN),
+                ],
+            )?;
+        }
+        w.flush()
+    }
+
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "{:12} iters={:<5} best_loss={:<12.5e} wall={:.2}s parallel={:.2}s",
+            self.label,
+            self.rows.last().map(|r| r.iter).unwrap_or(0),
+            self.best_loss(),
+            self.total_wall_s(),
+            self.total_parallel_s(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row(iter: usize, loss: f64) -> IterRecord {
+        IterRecord {
+            iter,
+            grad_evals: (iter * 4) as u64,
+            loss,
+            grad_norm: loss.sqrt(),
+            best_loss: loss,
+            wall_s: iter as f64 * 0.1,
+            parallel_s: iter as f64 * 0.05,
+            est_var: 0.5,
+            aux: None,
+        }
+    }
+
+    #[test]
+    fn series_accessors() {
+        let mut r = RunRecord::new("optex");
+        r.push(row(1, 4.0));
+        r.push(row(2, 1.0));
+        assert_eq!(r.final_loss(), 1.0);
+        assert_eq!(r.best_loss(), 1.0);
+        assert_eq!(r.loss_series(), vec![4.0, 1.0]);
+        assert_eq!(r.iters_to_reach(2.0), Some(2));
+        assert_eq!(r.iters_to_reach(0.5), None);
+        assert!((r.total_wall_s() - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_record_is_nan_safe() {
+        let r = RunRecord::new("x");
+        assert!(r.final_loss().is_nan());
+        assert_eq!(r.total_wall_s(), 0.0);
+        assert_eq!(r.iters_to_reach(1.0), None);
+    }
+
+    #[test]
+    fn csv_roundtrips_headers() {
+        let dir = std::env::temp_dir().join("optex_metrics_test");
+        let path = dir.join("run.csv");
+        let mut r = RunRecord::new("vanilla");
+        r.push(row(1, 2.0));
+        r.to_csv(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with("label,iter,"));
+        assert!(text.lines().nth(1).unwrap().starts_with("vanilla,1,4,"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

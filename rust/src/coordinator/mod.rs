@@ -1,0 +1,19 @@
+//! Layer-3 coordinator — the paper's system contribution (Algo. 1).
+//!
+//! * [`history`] — bounded local gradient history (Sec. 4.1),
+//! * [`selection`] — θ_t selection principles (Fig. 6b),
+//! * [`metrics`] — per-iteration run records,
+//! * [`optex`] — the OptEx driver: proxy chain + parallel true-gradient
+//!   phase, plus the Vanilla / Target / DataParallel baselines (Fig. 5).
+
+pub mod checkpoint;
+pub mod history;
+pub mod metrics;
+pub mod optex;
+pub mod selection;
+
+pub use checkpoint::Checkpoint;
+pub use history::GradHistory;
+pub use metrics::{IterRecord, RunRecord};
+pub use optex::Driver;
+pub use selection::Selection;

@@ -1,0 +1,578 @@
+//! The OptEx driver — paper Algorithm 1 plus the Fig-5 baselines.
+//!
+//! Per sequential iteration t (method = `optex`):
+//!   1. fit the GP posterior on the local gradient history (line 3;
+//!      Gram factorization cached across the iteration's queries),
+//!   2. multi-step proxy updates on *estimated* gradients (lines 4–5),
+//!      snapshotting optimizer state after every step,
+//!   3. N parallel ground-truth evaluations at the proxy inputs
+//!      (lines 6–9) through the worker pool / native oracle, each
+//!      worker's FO-OPT step resuming from its state snapshot,
+//!   4. select θ_t (line 10; `last` by default, `func`/`grad` for the
+//!      Fig-6b ablation) and append all N evaluations to the history.
+//!
+//! Baselines (DESIGN.md §3):
+//!   * `vanilla` — Algo. 1 with N = 1 (recovers the plain optimizer
+//!     bit-for-bit; tested),
+//!   * `target` — ideal parallelization: the chain uses ground-truth
+//!     gradients (N sequential true steps counted as ONE sequential
+//!     iteration, modeled-parallel time = max of the N evals),
+//!   * `dataparallel` — N fresh gradient samples at the same point,
+//!     averaged (Remark 1's sample-averaging comparison).
+
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::{Backend, Method, RunConfig};
+use crate::coordinator::history::GradHistory;
+use crate::coordinator::metrics::{IterRecord, RunRecord};
+use crate::gp::estimator::FittedGp;
+use crate::gp::{DimSubset, GpConfig};
+use crate::opt::Optimizer;
+use crate::runtime::{Engine, Executable, In, Manifest};
+use crate::util::stats::norm2;
+use crate::util::Rng;
+use crate::workloads::factory::Workload;
+use crate::workloads::{Eval, GradSource};
+
+/// HLO estimation backend state. The executable is owned IN-THREAD by
+/// the leader (not behind the worker pool): estimation inputs include the
+/// (T₀ × d) gradient history — up to tens of MB — and in-thread execution
+/// passes them as borrowed slices instead of cloning per proxy step
+/// (§Perf P4: was 3 × ~20 MB of memcpy per sequential iteration).
+struct HloEstimator {
+    /// Keeps the PJRT client alive for `exe`.
+    _engine: Engine,
+    exe: Executable,
+    sigma2: f32,
+    hist_flat: Vec<f32>,
+    grads_flat: Vec<f32>,
+}
+
+/// The run driver. Owns θ, the optimizer, the history and the oracle.
+pub struct Driver {
+    cfg: RunConfig,
+    source: Box<dyn GradSource>,
+    history: GradHistory,
+    optimizer: Box<dyn Optimizer>,
+    theta: Vec<f32>,
+    hlo_est: Option<HloEstimator>,
+    record: RunRecord,
+    base_lr: f64,
+    best_loss: f64,
+    grad_evals: u64,
+    wall_s: f64,
+    parallel_s: f64,
+    last_var: f64,
+    mu_buf: Vec<f32>,
+    theta_sub_buf: Vec<f32>,
+}
+
+impl Driver {
+    /// Build from a factory-produced workload.
+    pub fn new(cfg: RunConfig, workload: Workload) -> Result<Driver> {
+        Self::with_source(cfg, workload.source, workload.gp_artifact)
+    }
+
+    /// Build around an arbitrary oracle (used by the RL stack and tests).
+    pub fn with_source(
+        mut cfg: RunConfig,
+        source: Box<dyn GradSource>,
+        gp_artifact: Option<String>,
+    ) -> Result<Driver> {
+        let d = source.dim();
+        let mut rng = Rng::new(cfg.seed);
+
+        // Resolve the HLO estimation backend first: its artifact pins
+        // T0/D̃ (static shapes), overriding the config values.
+        let hlo_est = if cfg.optex.backend == Backend::Hlo && cfg.optex.parallelism > 1 {
+            let name = gp_artifact
+                .clone()
+                .context("backend=hlo requires a gp_estimate artifact for this workload")?;
+            let manifest = Manifest::load(&cfg.artifacts_dir)?;
+            let spec = manifest.get(&name)?;
+            let art_d = spec.dim()?;
+            if art_d != d {
+                bail!(
+                    "gp artifact {name} built for d={art_d}, workload has d={d}; \
+                     re-run `make artifacts` with a matching profile"
+                );
+            }
+            cfg.optex.t0 = spec.meta_usize("t0")?;
+            cfg.optex.dsub = Some(spec.meta_usize("dsub")?);
+            let sigma2 = cfg.optex.sigma2 as f32;
+            let engine = Engine::cpu()?;
+            let exe = engine.load(spec)?;
+            Some(HloEstimator {
+                _engine: engine,
+                exe,
+                sigma2,
+                hist_flat: Vec::new(),
+                grads_flat: Vec::new(),
+            })
+        } else {
+            None
+        };
+
+        let subset = match cfg.optex.dsub {
+            Some(k) if k < d => DimSubset::sample(d, k, &mut rng.fork(0xD5)),
+            _ => DimSubset::full(d),
+        };
+        let history = GradHistory::new(cfg.optex.t0, subset);
+        let theta = source.init_params(&mut rng);
+        let optimizer = cfg.optimizer.build(d);
+        let base_lr = cfg.optimizer.lr();
+        Ok(Driver {
+            record: RunRecord::new(cfg.method.name()),
+            base_lr,
+            cfg,
+            source,
+            history,
+            optimizer,
+            theta,
+            hlo_est,
+            best_loss: f64::INFINITY,
+            grad_evals: 0,
+            wall_s: 0.0,
+            parallel_s: 0.0,
+            last_var: 0.0,
+            mu_buf: vec![0.0; d],
+            theta_sub_buf: Vec::new(),
+        })
+    }
+
+    /// Current iterate.
+    pub fn theta(&self) -> &[f32] {
+        &self.theta
+    }
+
+    /// Metrics recorded so far.
+    pub fn record(&self) -> &RunRecord {
+        &self.record
+    }
+
+    /// Snapshot the run to a checkpoint file (θ, optimizer state, local
+    /// gradient history). `iter` tags the sequential iteration count.
+    pub fn save_checkpoint(&self, path: &std::path::Path, iter: u64) -> Result<()> {
+        crate::coordinator::checkpoint::Checkpoint::capture(
+            iter,
+            &self.theta,
+            self.optimizer.as_ref(),
+            &self.history,
+        )
+        .write(path)
+    }
+
+    /// Resume from a checkpoint file; returns the iteration it was taken
+    /// at (continue with `iteration(t)` for t > that).
+    pub fn resume_from(&mut self, path: &std::path::Path) -> Result<u64> {
+        let ckp = crate::coordinator::checkpoint::Checkpoint::read(path)?;
+        if ckp.theta.len() != self.theta.len() {
+            anyhow::bail!(
+                "checkpoint d={} does not match workload d={}",
+                ckp.theta.len(),
+                self.theta.len()
+            );
+        }
+        ckp.restore(&mut self.theta, self.optimizer.as_mut(), &mut self.history)?;
+        Ok(ckp.iter)
+    }
+
+    /// Mutable oracle access (the RL stack swaps replay state between
+    /// iterations).
+    pub fn source_mut(&mut self) -> &mut dyn GradSource {
+        self.source.as_mut()
+    }
+
+    fn gp_cfg(&self) -> GpConfig {
+        GpConfig {
+            kernel: self.cfg.optex.kernel,
+            lengthscale: self.cfg.optex.lengthscale,
+            sigma2: self.cfg.optex.sigma2,
+        }
+    }
+
+    /// Run all T sequential iterations.
+    pub fn run(&mut self) -> Result<RunRecord> {
+        for t in 1..=self.cfg.steps {
+            self.iteration(t)?;
+        }
+        Ok(self.record.clone())
+    }
+
+    /// One sequential iteration; public so episode-driven callers (RL)
+    /// can interleave environment steps.
+    pub fn iteration(&mut self, t: usize) -> Result<()> {
+        let iter_start = Instant::now();
+        // lr schedule: multiplier on the configured base rate
+        self.optimizer
+            .set_lr(self.base_lr * self.cfg.schedule.factor(t));
+        self.source.on_iteration(t, &self.theta);
+        let (evals, sel_loss, sel_grad_norm, aux, worker_max, serial_eval) =
+            match self.cfg.method {
+                Method::Optex | Method::Vanilla => self.optex_iteration()?,
+                Method::Target => self.target_iteration()?,
+                Method::DataParallel => self.dataparallel_iteration()?,
+            };
+        self.grad_evals += evals;
+
+        let iter_wall = iter_start.elapsed().as_secs_f64();
+        self.wall_s += iter_wall;
+        // Modeled ideal-parallel time: replace the serial evaluation span
+        // with the slowest single worker (DESIGN.md §Parallelism-model).
+        self.parallel_s +=
+            (iter_wall - serial_eval.as_secs_f64()).max(0.0) + worker_max.as_secs_f64();
+        self.best_loss = self.best_loss.min(sel_loss);
+
+        if t % self.cfg.log_every == 0 || t == self.cfg.steps {
+            self.record.push(IterRecord {
+                iter: t,
+                grad_evals: self.grad_evals,
+                loss: sel_loss,
+                grad_norm: sel_grad_norm,
+                best_loss: self.best_loss,
+                wall_s: self.wall_s,
+                parallel_s: self.parallel_s,
+                est_var: self.last_var,
+                aux,
+            });
+        }
+        Ok(())
+    }
+
+    // -- Algo. 1 (optex; vanilla = N=1) -------------------------------------
+
+    fn optex_iteration(&mut self) -> Result<(u64, f64, f64, Option<f64>, Duration, Duration)> {
+        let n = match self.cfg.method {
+            Method::Vanilla => 1,
+            _ => self.cfg.optex.parallelism,
+        };
+
+        // lines 2-5: proxy chain on estimated gradients.
+        let mut points: Vec<Vec<f32>> = Vec::with_capacity(n);
+        let mut snapshots: Vec<Box<dyn Optimizer>> = Vec::with_capacity(n);
+        let mut chain = self.optimizer.clone_box();
+        let mut cur = self.theta.clone();
+        points.push(cur.clone());
+        snapshots.push(chain.clone_box());
+        if n > 1 {
+            let gp_cfg = self.gp_cfg();
+            let (hviews, gviews) = self.history.views();
+            let fitted = FittedGp::fit(&gp_cfg, &hviews);
+            // lengthscale for the HLO artifact (median heuristic resolved
+            // natively; the artifact takes it as a runtime scalar input)
+            let ls = fitted.as_ref().map(|f| f.lengthscale).unwrap_or(1.0);
+            let use_hlo = self.hlo_est.is_some() && self.history.is_full();
+            if use_hlo {
+                let est = self.hlo_est.as_mut().unwrap();
+                self.history.flatten(&mut est.hist_flat, &mut est.grads_flat);
+            }
+            for _s in 1..n {
+                self.theta_sub_buf.resize(self.history.subset().len(), 0.0);
+                self.history.subset().gather_into(&cur, &mut self.theta_sub_buf);
+                self.last_var = if use_hlo {
+                    let est = self.hlo_est.as_ref().unwrap();
+                    let out = est.exe.run(&[
+                        In::F32(&self.theta_sub_buf),
+                        In::F32(&est.hist_flat),
+                        In::F32(&est.grads_flat),
+                        In::F32(&[ls as f32]),
+                        In::F32(&[est.sigma2]),
+                    ])?;
+                    self.mu_buf.copy_from_slice(&out[0]);
+                    out[1][0] as f64
+                } else if let Some(f) = &fitted {
+                    f.query(&self.theta_sub_buf, &gviews, &mut self.mu_buf)
+                } else {
+                    // empty history: prior mean 0 — proxy step is a no-op
+                    self.mu_buf.iter_mut().for_each(|x| *x = 0.0);
+                    1.0
+                };
+                chain.step(&mut cur, &self.mu_buf);
+                points.push(cur.clone());
+                snapshots.push(chain.clone_box());
+            }
+        }
+
+        // lines 6-9: parallel ground-truth phase.
+        let eval_all = self.cfg.optex.eval_intermediate || n == 1;
+        let eval_points: Vec<&[f32]> = if eval_all {
+            points.iter().map(|p| p.as_slice()).collect()
+        } else {
+            vec![points.last().unwrap().as_slice()] // Fig-6a "sequential"
+        };
+        let eval_start = Instant::now();
+        let evals = self.source.eval_batch(&eval_points)?;
+        let serial_eval = eval_start.elapsed();
+        let worker_max =
+            evals.iter().map(|e| e.elapsed).max().unwrap_or(Duration::ZERO);
+
+        let n_evals = evals.len() as u64;
+        let aux = mean_aux(&evals);
+        // Gradients are MOVED into the history (no per-iteration d-sized
+        // clones — §Perf P5); everything needed later is extracted first.
+        let (sel_idx, candidates, losses, grad_norms) = if eval_all {
+            let mut candidates = points.clone();
+            let mut losses = Vec::with_capacity(n);
+            let mut grad_norms = Vec::with_capacity(n);
+            for (i, e) in evals.iter().enumerate() {
+                snapshots[i].step(&mut candidates[i], &e.grad);
+                losses.push(e.loss);
+                grad_norms.push(norm2(&e.grad));
+            }
+            for (p, e) in points.iter().zip(evals.into_iter()) {
+                self.history.push(p, e.grad);
+            }
+            let sel = self.cfg.optex.selection.select(&losses, &grad_norms);
+            (sel, candidates, losses, grad_norms)
+        } else {
+            // single evaluation at the last proxy point
+            let e = evals.into_iter().next().unwrap();
+            let mut cand = points.last().unwrap().clone();
+            snapshots[n - 1].step(&mut cand, &e.grad);
+            let gn = norm2(&e.grad);
+            let loss = e.loss;
+            self.history.push(points.last().unwrap(), e.grad);
+            (0, vec![cand], vec![loss], vec![gn])
+        };
+
+        // line 10: accept θ_t and its optimizer state.
+        self.theta = candidates.into_iter().nth(sel_idx).unwrap();
+        let snap_idx = if eval_all { sel_idx } else { n - 1 };
+        self.optimizer = snapshots.into_iter().nth(snap_idx).unwrap();
+
+        Ok((
+            n_evals,
+            losses[sel_idx],
+            grad_norms[sel_idx],
+            aux,
+            worker_max,
+            serial_eval,
+        ))
+    }
+
+    // -- Target baseline -----------------------------------------------------
+
+    fn target_iteration(&mut self) -> Result<(u64, f64, f64, Option<f64>, Duration, Duration)> {
+        let n = self.cfg.optex.parallelism;
+        let mut worker_max = Duration::ZERO;
+        let mut serial = Duration::ZERO;
+        let mut last_loss = f64::NAN;
+        let mut last_norm = 0.0;
+        let mut auxes = Vec::new();
+        for _ in 0..n {
+            let t0 = Instant::now();
+            let evals = self.source.eval_batch(&[&self.theta])?;
+            serial += t0.elapsed();
+            let e = &evals[0];
+            worker_max = worker_max.max(e.elapsed);
+            last_loss = e.loss;
+            last_norm = norm2(&e.grad);
+            if let Some(a) = e.aux {
+                auxes.push(a);
+            }
+            self.best_loss = self.best_loss.min(e.loss);
+            self.optimizer.step(&mut self.theta, &e.grad);
+        }
+        let aux = if auxes.is_empty() {
+            None
+        } else {
+            Some(auxes.iter().sum::<f64>() / auxes.len() as f64)
+        };
+        Ok((n as u64, last_loss, last_norm, aux, worker_max, serial))
+    }
+
+    // -- Data-parallel baseline (Remark 1) ------------------------------------
+
+    fn dataparallel_iteration(
+        &mut self,
+    ) -> Result<(u64, f64, f64, Option<f64>, Duration, Duration)> {
+        let n = self.cfg.optex.parallelism;
+        let points: Vec<&[f32]> = (0..n).map(|_| self.theta.as_slice()).collect();
+        let t0 = Instant::now();
+        let evals = self.source.eval_batch(&points)?;
+        let serial = t0.elapsed();
+        let worker_max =
+            evals.iter().map(|e| e.elapsed).max().unwrap_or(Duration::ZERO);
+        let d = self.theta.len();
+        self.mu_buf.iter_mut().for_each(|x| *x = 0.0);
+        for e in &evals {
+            for (m, &g) in self.mu_buf.iter_mut().zip(&e.grad) {
+                *m += g / n as f32;
+            }
+        }
+        debug_assert_eq!(self.mu_buf.len(), d);
+        let avg = self.mu_buf.clone();
+        self.optimizer.step(&mut self.theta, &avg);
+        let loss = evals.iter().map(|e| e.loss).sum::<f64>() / n as f64;
+        let gn = norm2(&avg);
+        Ok((n as u64, loss, gn, mean_aux(&evals), worker_max, serial))
+    }
+}
+
+fn mean_aux(evals: &[Eval]) -> Option<f64> {
+    let vals: Vec<f64> = evals.iter().filter_map(|e| e.aux).collect();
+    if vals.is_empty() {
+        None
+    } else {
+        Some(vals.iter().sum::<f64>() / vals.len() as f64)
+    }
+}
+
+/// Convenience entrypoint: build the workload from config and run.
+pub fn run(cfg: &RunConfig) -> Result<RunRecord> {
+    let workload = crate::workloads::factory::build(cfg)?;
+    Driver::new(cfg.clone(), workload)?.run()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::opt::OptSpec;
+    use crate::workloads::synthetic::SynthFn;
+    use crate::workloads::NativeSynth;
+
+    fn cfg(method: Method, n: usize, steps: usize) -> RunConfig {
+        let mut c = RunConfig::default();
+        c.method = method;
+        c.steps = steps;
+        c.synth_dim = 64;
+        c.workload = "rosenbrock".into();
+        c.optimizer = OptSpec::Adam { lr: 0.1, beta1: 0.9, beta2: 0.999, eps: 1e-8 };
+        c.optex.parallelism = n;
+        c.optex.t0 = 10;
+        c.seed = 3;
+        c
+    }
+
+    fn driver(c: &RunConfig) -> Driver {
+        let src = NativeSynth::new(
+            SynthFn::parse(&c.workload).unwrap(),
+            c.synth_dim,
+            c.noise_std,
+            c.seed,
+        );
+        Driver::with_source(c.clone(), Box::new(src), None).unwrap()
+    }
+
+    #[test]
+    fn vanilla_equals_plain_optimizer_bit_for_bit() {
+        // Algo. 1 with N = 1 must reproduce the plain Adam trajectory.
+        let c = cfg(Method::Vanilla, 1, 20);
+        let mut drv = driver(&c);
+        let rec = drv.run().unwrap();
+        assert_eq!(rec.rows.len(), 20);
+
+        // replay manually
+        let mut src = NativeSynth::new(SynthFn::Rosenbrock, 64, 0.0, c.seed);
+        let mut theta = src.init_params(&mut Rng::new(c.seed));
+        let mut opt = c.optimizer.build(64);
+        for _ in 0..20 {
+            let e = src.eval_batch(&[&theta]).unwrap().pop().unwrap();
+            opt.step(&mut theta, &e.grad);
+        }
+        assert_eq!(drv.theta(), theta.as_slice());
+    }
+
+    #[test]
+    fn optex_beats_vanilla_on_sequential_iterations() {
+        // The headline claim at small scale: same T, deterministic
+        // rosenbrock, N=5 ⇒ OptEx reaches a lower best loss.
+        let t = 60;
+        let mut c = cfg(Method::Vanilla, 1, t);
+        let van = driver(&c).run().unwrap();
+        c = cfg(Method::Optex, 5, t);
+        let opt = driver(&c).run().unwrap();
+        assert!(
+            opt.best_loss() < van.best_loss() * 0.9,
+            "optex={} vanilla={}",
+            opt.best_loss(),
+            van.best_loss()
+        );
+    }
+
+    #[test]
+    fn target_upper_bounds_optex_roughly() {
+        // Target uses ground-truth gradients for the chain; on a smooth
+        // deterministic problem it should do at least as well as OptEx
+        // (allow slack — selection noise can flip close runs).
+        let t = 40;
+        let opt = driver(&cfg(Method::Optex, 4, t)).run().unwrap();
+        let tgt = driver(&cfg(Method::Target, 4, t)).run().unwrap();
+        assert!(
+            tgt.best_loss() <= opt.best_loss() * 1.5 + 1e-6,
+            "target={} optex={}",
+            tgt.best_loss(),
+            opt.best_loss()
+        );
+    }
+
+    #[test]
+    fn grad_evals_accounting() {
+        let rec = driver(&cfg(Method::Optex, 4, 10)).run().unwrap();
+        assert_eq!(rec.rows.last().unwrap().grad_evals, 40);
+        let rec = driver(&cfg(Method::Vanilla, 1, 10)).run().unwrap();
+        assert_eq!(rec.rows.last().unwrap().grad_evals, 10);
+        let rec = driver(&cfg(Method::Target, 3, 10)).run().unwrap();
+        assert_eq!(rec.rows.last().unwrap().grad_evals, 30);
+        let rec = driver(&cfg(Method::DataParallel, 3, 10)).run().unwrap();
+        assert_eq!(rec.rows.last().unwrap().grad_evals, 30);
+    }
+
+    #[test]
+    fn eval_intermediate_false_uses_one_eval_per_iter() {
+        let mut c = cfg(Method::Optex, 4, 10);
+        c.optex.eval_intermediate = false;
+        let rec = driver(&c).run().unwrap();
+        assert_eq!(rec.rows.last().unwrap().grad_evals, 10);
+    }
+
+    #[test]
+    fn best_loss_is_monotone_nonincreasing() {
+        let rec = driver(&cfg(Method::Optex, 5, 30)).run().unwrap();
+        let series = rec.best_loss_series();
+        assert!(series.windows(2).all(|w| w[1] <= w[0] + 1e-12));
+    }
+
+    #[test]
+    fn selection_principles_run_and_differ_sensibly() {
+        for sel in ["last", "func", "grad"] {
+            let mut c = cfg(Method::Optex, 4, 25);
+            c.optex.selection = crate::coordinator::Selection::parse(sel).unwrap();
+            let rec = driver(&c).run().unwrap();
+            assert!(rec.best_loss().is_finite(), "{sel}");
+            assert_eq!(rec.rows.len(), 25);
+        }
+    }
+
+    #[test]
+    fn dataparallel_reduces_noise_but_not_iterations() {
+        // With heavy gradient noise, averaging should beat vanilla at the
+        // same sequential iteration count (Remark 1's regime).
+        let mut cv = cfg(Method::Vanilla, 1, 60);
+        cv.noise_std = 2.0;
+        cv.workload = "sphere".into();
+        let van = driver(&cv).run().unwrap();
+        let mut cd = cfg(Method::DataParallel, 8, 60);
+        cd.noise_std = 2.0;
+        cd.workload = "sphere".into();
+        let dp = driver(&cd).run().unwrap();
+        assert!(
+            dp.best_loss() < van.best_loss() + 0.05,
+            "dp={} van={}",
+            dp.best_loss(),
+            van.best_loss()
+        );
+    }
+
+    #[test]
+    fn history_respects_t0() {
+        let mut c = cfg(Method::Optex, 4, 8);
+        c.optex.t0 = 5;
+        let mut drv = driver(&c);
+        drv.run().unwrap();
+        assert_eq!(drv.history.len(), 5);
+        assert_eq!(drv.history.total_pushed(), 32);
+    }
+}

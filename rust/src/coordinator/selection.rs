@@ -1,0 +1,108 @@
+//! θ_t selection principles (paper Appx B.3, Fig. 6b).
+//!
+//! After the N parallel ground-truth steps produce candidates
+//! {θ_t^(i)}_{i=1}^N, the next iterate is chosen by:
+//!   * `last` — θ_t = θ_t^(N) (Algo. 1 line 10, the paper's default),
+//!   * `func` — argmin_i f-score,
+//!   * `grad` — argmin_i ‖∇f‖-score.
+//!
+//! Scores come from the evaluations the workers *already performed* at the
+//! pre-update points θ_{t,i−1} (loss and gradient norm), so no extra
+//! gradient evaluations are spent — the same trade-off the paper notes
+//! makes `func`/`grad` lose parallelism if done exactly.
+
+/// Selection principle.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Selection {
+    Last,
+    Func,
+    Grad,
+}
+
+impl Selection {
+    pub fn parse(s: &str) -> Option<Selection> {
+        match s {
+            "last" => Some(Selection::Last),
+            "func" => Some(Selection::Func),
+            "grad" => Some(Selection::Grad),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Selection::Last => "last",
+            Selection::Func => "func",
+            Selection::Grad => "grad",
+        }
+    }
+
+    /// Pick the index of the accepted candidate.
+    ///
+    /// `losses[i]` and `grad_norms[i]` are the scores attached to
+    /// candidate i. NaN scores lose against any finite score; all-NaN
+    /// falls back to `last`.
+    pub fn select(&self, losses: &[f64], grad_norms: &[f64]) -> usize {
+        let n = losses.len();
+        assert!(n > 0 && grad_norms.len() == n);
+        match self {
+            Selection::Last => n - 1,
+            Selection::Func => argmin_or_last(losses),
+            Selection::Grad => argmin_or_last(grad_norms),
+        }
+    }
+}
+
+fn argmin_or_last(xs: &[f64]) -> usize {
+    let mut best = None::<(usize, f64)>;
+    for (i, &x) in xs.iter().enumerate() {
+        if x.is_nan() {
+            continue;
+        }
+        match best {
+            Some((_, b)) if x >= b => {}
+            _ => best = Some((i, x)),
+        }
+    }
+    best.map(|(i, _)| i).unwrap_or(xs.len() - 1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn last_always_picks_final() {
+        assert_eq!(Selection::Last.select(&[0.0, 9.0, 1.0], &[1.0, 1.0, 1.0]), 2);
+    }
+
+    #[test]
+    fn func_picks_min_loss() {
+        assert_eq!(Selection::Func.select(&[3.0, 1.0, 2.0], &[0.0, 0.0, 0.0]), 1);
+    }
+
+    #[test]
+    fn grad_picks_min_norm() {
+        assert_eq!(Selection::Grad.select(&[0.0, 0.0], &[5.0, 2.0]), 1);
+    }
+
+    #[test]
+    fn nan_scores_skipped() {
+        assert_eq!(Selection::Func.select(&[f64::NAN, 2.0, 3.0], &[0.0; 3]), 1);
+        // all NaN -> fallback to last
+        assert_eq!(Selection::Grad.select(&[0.0; 2], &[f64::NAN, f64::NAN]), 1);
+    }
+
+    #[test]
+    fn ties_prefer_earliest() {
+        assert_eq!(Selection::Func.select(&[1.0, 1.0, 1.0], &[0.0; 3]), 0);
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for s in [Selection::Last, Selection::Func, Selection::Grad] {
+            assert_eq!(Selection::parse(s.name()), Some(s));
+        }
+        assert_eq!(Selection::parse("best"), None);
+    }
+}

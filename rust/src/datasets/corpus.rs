@@ -1,0 +1,295 @@
+//! Character-level text corpora for the autoregression workloads.
+//!
+//! * `shakespeare()` — a genuine public-domain excerpt (Sonnets I–VI),
+//!   the "curated collection of works from Shakespeare" stand-in.
+//! * `synthetic_narrative()` — a seeded template-grammar generator with
+//!   English-like token statistics: the substitute for the copyrighted
+//!   "Harry Potter and the Sorcerer's Stone" corpus (DESIGN.md
+//!   §Substitutions). What matters for the char-LM loss-curve shapes is
+//!   vocabulary size, word/sentence length distributions and n-gram
+//!   predictability, all of which the grammar controls.
+//!
+//! Vocabulary: printable ASCII 0x20..0x7E plus '\n', mapped to ids
+//! 0..=95 — exactly the `vocab = 96` of the transformer artifacts.
+
+use crate::util::Rng;
+
+/// Fixed char vocabulary shared with the tfm artifacts.
+pub const VOCAB: usize = 96;
+
+/// Map a char to its token id (unknown chars -> space).
+pub fn char_to_id(c: char) -> i32 {
+    match c {
+        '\n' => 95,
+        c if (' '..='~').contains(&c) => (c as u32 - ' ' as u32) as i32,
+        _ => 0,
+    }
+}
+
+/// Inverse of [`char_to_id`].
+pub fn id_to_char(id: i32) -> char {
+    match id {
+        95 => '\n',
+        i if (0..95).contains(&i) => char::from_u32(' ' as u32 + i as u32).unwrap(),
+        _ => ' ',
+    }
+}
+
+/// Tokenize a string.
+pub fn encode(text: &str) -> Vec<i32> {
+    text.chars().map(char_to_id).collect()
+}
+
+/// Public-domain Shakespeare excerpt (Sonnets I–VI, 1609 Quarto text).
+pub fn shakespeare() -> &'static str {
+    SONNETS
+}
+
+const SONNETS: &str = "\
+From fairest creatures we desire increase,
+That thereby beauty's rose might never die,
+But as the riper should by time decease,
+His tender heir might bear his memory:
+But thou, contracted to thine own bright eyes,
+Feed'st thy light's flame with self-substantial fuel,
+Making a famine where abundance lies,
+Thyself thy foe, to thy sweet self too cruel.
+Thou that art now the world's fresh ornament
+And only herald to the gaudy spring,
+Within thine own bud buriest thy content
+And, tender churl, mak'st waste in niggarding.
+Pity the world, or else this glutton be,
+To eat the world's due, by the grave and thee.
+
+When forty winters shall besiege thy brow
+And dig deep trenches in thy beauty's field,
+Thy youth's proud livery, so gazed on now,
+Will be a tattered weed of small worth held:
+Then being asked where all thy beauty lies,
+Where all the treasure of thy lusty days,
+To say within thine own deep-sunken eyes
+Were an all-eating shame and thriftless praise.
+How much more praise deserved thy beauty's use
+If thou couldst answer 'This fair child of mine
+Shall sum my count and make my old excuse,'
+Proving his beauty by succession thine.
+This were to be new made when thou art old
+And see thy blood warm when thou feel'st it cold.
+
+Look in thy glass and tell the face thou viewest
+Now is the time that face should form another,
+Whose fresh repair if now thou not renewest,
+Thou dost beguile the world, unbless some mother.
+For where is she so fair whose uneared womb
+Disdains the tillage of thy husbandry?
+Or who is he so fond will be the tomb
+Of his self-love, to stop posterity?
+Thou art thy mother's glass, and she in thee
+Calls back the lovely April of her prime;
+So thou through windows of thine age shalt see,
+Despite of wrinkles, this thy golden time.
+But if thou live remembered not to be,
+Die single, and thine image dies with thee.
+
+Unthrifty loveliness, why dost thou spend
+Upon thyself thy beauty's legacy?
+Nature's bequest gives nothing, but doth lend,
+And being frank she lends to those are free.
+Then, beauteous niggard, why dost thou abuse
+The bounteous largess given thee to give?
+Profitless usurer, why dost thou use
+So great a sum of sums yet canst not live?
+For having traffic with thyself alone,
+Thou of thyself thy sweet self dost deceive.
+Then how, when Nature calls thee to be gone,
+What acceptable audit canst thou leave?
+Thy unused beauty must be tombed with thee,
+Which used lives th' executor to be.
+
+Those hours that with gentle work did frame
+The lovely gaze where every eye doth dwell
+Will play the tyrants to the very same
+And that unfair which fairly doth excel;
+For never-resting time leads summer on
+To hideous winter and confounds him there,
+Sap checked with frost and lusty leaves quite gone,
+Beauty o'ersnowed and bareness everywhere.
+Then were not summer's distillation left
+A liquid prisoner pent in walls of glass,
+Beauty's effect with beauty were bereft,
+Nor it nor no remembrance what it was.
+But flowers distilled, though they with winter meet,
+Leese but their show; their substance still lives sweet.
+
+Then let not winter's ragged hand deface
+In thee thy summer ere thou be distilled:
+Make sweet some vial; treasure thou some place
+With beauty's treasure ere it be self-killed.
+That use is not forbidden usury
+Which happies those that pay the willing loan;
+That's for thyself to breed another thee,
+Or ten times happier, be it ten for one.
+";
+
+/// Seeded English-like narrative generator (the HP-corpus substitute).
+pub fn synthetic_narrative(seed: u64, target_chars: usize) -> String {
+    const NAMES: &[&str] = &[
+        "Harlan", "Petra", "Ronan", "Hermia", "Albus", "Minerva", "Severin",
+        "Ginevra", "Neville", "Luna",
+    ];
+    const PLACES: &[&str] = &[
+        "the castle", "the great hall", "the forbidden wood", "the dungeons",
+        "the tower", "the library", "the lake", "the village",
+    ];
+    const VERBS: &[&str] = &[
+        "hurried toward", "whispered about", "stumbled into", "gazed at",
+        "crept past", "studied", "discovered", "vanished behind", "guarded",
+        "remembered",
+    ];
+    const OBJECTS: &[&str] = &[
+        "a silver key", "the ancient map", "a flickering lantern",
+        "the hidden door", "an old letter", "the broken wand",
+        "a strange stone", "the locked chest", "a faded portrait",
+    ];
+    const CONNECTORS: &[&str] = &[
+        "Meanwhile", "Later that night", "At dawn", "Without warning",
+        "After the lesson", "Before supper", "In the silence",
+    ];
+
+    let mut rng = Rng::new(seed ^ 0xC0_4935);
+    let mut out = String::with_capacity(target_chars + 64);
+    while out.len() < target_chars {
+        let style = rng.below(3);
+        let s = match style {
+            0 => format!(
+                "{} {} {} near {}. ",
+                NAMES[rng.below(NAMES.len())],
+                VERBS[rng.below(VERBS.len())],
+                OBJECTS[rng.below(OBJECTS.len())],
+                PLACES[rng.below(PLACES.len())],
+            ),
+            1 => format!(
+                "{}, {} and {} {} {}. ",
+                CONNECTORS[rng.below(CONNECTORS.len())],
+                NAMES[rng.below(NAMES.len())],
+                NAMES[rng.below(NAMES.len())],
+                VERBS[rng.below(VERBS.len())],
+                OBJECTS[rng.below(OBJECTS.len())],
+            ),
+            _ => format!(
+                "\"{}!\" said {}, and {} {}. ",
+                OBJECTS[rng.below(OBJECTS.len())],
+                NAMES[rng.below(NAMES.len())],
+                NAMES[rng.below(NAMES.len())],
+                VERBS[rng.below(VERBS.len())],
+            ),
+        };
+        out.push_str(&s);
+        if rng.coin(0.12) {
+            out.push('\n');
+        }
+    }
+    out
+}
+
+/// Tokenized corpus with minibatch sampling for the tfm artifacts.
+#[derive(Clone, Debug)]
+pub struct Corpus {
+    pub tokens: Vec<i32>,
+}
+
+impl Corpus {
+    pub fn from_text(text: &str) -> Corpus {
+        Corpus { tokens: encode(text) }
+    }
+
+    pub fn len(&self) -> usize {
+        self.tokens.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tokens.is_empty()
+    }
+
+    /// Sample `batch` windows of length `seq_plus_1`, flattened row-major —
+    /// exactly the tfm artifact `tokens (B, L+1) i32` input.
+    pub fn sample_windows(
+        &self,
+        batch: usize,
+        seq_plus_1: usize,
+        rng: &mut Rng,
+        out: &mut Vec<i32>,
+    ) {
+        assert!(
+            self.tokens.len() >= seq_plus_1,
+            "corpus shorter than one window"
+        );
+        out.clear();
+        out.reserve(batch * seq_plus_1);
+        let span = self.tokens.len() - seq_plus_1 + 1;
+        for _ in 0..batch {
+            let start = rng.below(span);
+            out.extend_from_slice(&self.tokens[start..start + seq_plus_1]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vocab_roundtrip() {
+        for id in 0..VOCAB as i32 {
+            assert_eq!(char_to_id(id_to_char(id)), id);
+        }
+        assert_eq!(char_to_id('\u{1F600}'), 0); // unknown -> space id
+    }
+
+    #[test]
+    fn shakespeare_tokenizes_in_vocab() {
+        let toks = encode(shakespeare());
+        assert!(toks.len() > 3000, "excerpt too short: {}", toks.len());
+        assert!(toks.iter().all(|&t| (0..VOCAB as i32).contains(&t)));
+    }
+
+    #[test]
+    fn narrative_is_deterministic_and_sized() {
+        let a = synthetic_narrative(3, 5000);
+        let b = synthetic_narrative(3, 5000);
+        assert_eq!(a, b);
+        assert!(a.len() >= 5000);
+        assert_ne!(a, synthetic_narrative(4, 5000));
+        // english-like: mostly letters+spaces, contains sentences
+        assert!(a.contains(". "));
+        let letters = a.chars().filter(|c| c.is_ascii_alphabetic()).count();
+        assert!(letters as f64 > a.len() as f64 * 0.6);
+    }
+
+    #[test]
+    fn windows_have_right_shape_and_content() {
+        let c = Corpus::from_text(shakespeare());
+        let mut rng = Rng::new(0);
+        let mut out = Vec::new();
+        c.sample_windows(4, 17, &mut rng, &mut out);
+        assert_eq!(out.len(), 4 * 17);
+        // each window is a contiguous slice of the corpus
+        for w in 0..4 {
+            let win = &out[w * 17..(w + 1) * 17];
+            let hay = &c.tokens;
+            assert!(
+                hay.windows(17).any(|s| s == win),
+                "window {w} is not contiguous corpus text"
+            );
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "shorter")]
+    fn window_longer_than_corpus_panics() {
+        let c = Corpus::from_text("ab");
+        let mut rng = Rng::new(0);
+        let mut out = Vec::new();
+        c.sample_windows(1, 10, &mut rng, &mut out);
+    }
+}

@@ -1,0 +1,9 @@
+//! Dataset substrates: procedural image sets and char corpora
+//! (substitutes for MNIST/F-MNIST/CIFAR-10/Shakespeare/HP — see
+//! DESIGN.md §Substitutions for the preservation argument).
+
+pub mod corpus;
+pub mod synth_images;
+
+pub use corpus::{Corpus, VOCAB};
+pub use synth_images::{ImageDataset, ImageKind, N_CLASSES};

@@ -1,0 +1,283 @@
+//! Procedural class-conditional image datasets — the MNIST / Fashion-MNIST
+//! / CIFAR-10 substitutes (DESIGN.md §Substitutions).
+//!
+//! Real datasets are unavailable offline, so each class is defined by a
+//! smooth 2-D frequency prototype (a few random sinusoid components per
+//! class) plus per-sample blob deformation and pixel noise, clipped to
+//! [0, 1]. This produces a stochastic minibatch loss landscape with the
+//! same input dimensionality, class count and difficulty *ordering*
+//! (mnist-like < fashion-like < cifar-like via rising noise levels) — the
+//! optimizer-ranking claims of the paper are about this landscape shape,
+//! not about pixel provenance.
+
+use crate::util::Rng;
+
+/// Dataset flavor: controls geometry and noise (difficulty).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ImageKind {
+    /// 28×28×1 = 784 dims, low noise.
+    MnistLike,
+    /// 28×28×1 = 784 dims, medium noise.
+    FashionLike,
+    /// 32×32×3 = 3072 dims, high noise.
+    CifarLike,
+}
+
+impl ImageKind {
+    pub fn parse(s: &str) -> Option<ImageKind> {
+        match s {
+            "mnist" => Some(ImageKind::MnistLike),
+            "fmnist" | "fashion" => Some(ImageKind::FashionLike),
+            "cifar" | "cifar10" => Some(ImageKind::CifarLike),
+            _ => None,
+        }
+    }
+
+    pub fn dim(&self) -> usize {
+        match self {
+            ImageKind::MnistLike | ImageKind::FashionLike => 28 * 28,
+            ImageKind::CifarLike => 32 * 32 * 3,
+        }
+    }
+
+    pub fn side(&self) -> usize {
+        match self {
+            ImageKind::MnistLike | ImageKind::FashionLike => 28,
+            ImageKind::CifarLike => 32,
+        }
+    }
+
+    pub fn channels(&self) -> usize {
+        match self {
+            ImageKind::CifarLike => 3,
+            _ => 1,
+        }
+    }
+
+    fn pixel_noise(&self) -> f32 {
+        match self {
+            ImageKind::MnistLike => 0.08,
+            ImageKind::FashionLike => 0.15,
+            ImageKind::CifarLike => 0.25,
+        }
+    }
+
+    fn blob_noise(&self) -> f32 {
+        match self {
+            ImageKind::MnistLike => 0.2,
+            ImageKind::FashionLike => 0.35,
+            ImageKind::CifarLike => 0.5,
+        }
+    }
+}
+
+pub const N_CLASSES: usize = 10;
+
+/// An in-memory labelled image set.
+#[derive(Clone, Debug)]
+pub struct ImageDataset {
+    pub kind: ImageKind,
+    /// Row-major `n × dim` pixels in [0, 1].
+    pub x: Vec<f32>,
+    /// Labels in [0, n_classes).
+    pub y: Vec<u8>,
+    pub dim: usize,
+    /// Number of label classes (10 for the paper datasets; reduced by
+    /// `crop` for the tiny test-profile artifacts).
+    pub n_classes: usize,
+}
+
+/// One class's generative prototype: k sinusoid components per channel.
+struct Proto {
+    comps: Vec<(f32, f32, f32, f32, f32)>, // (fx, fy, phase, amp, chan_mix)
+}
+
+impl Proto {
+    fn sample(rng: &mut Rng) -> Proto {
+        let k = 4 + rng.below(3);
+        let comps = (0..k)
+            .map(|_| {
+                (
+                    rng.range(0.5, 4.0) as f32,
+                    rng.range(0.5, 4.0) as f32,
+                    rng.range(0.0, std::f64::consts::TAU) as f32,
+                    rng.range(0.3, 1.0) as f32,
+                    rng.range(0.0, 1.0) as f32,
+                )
+            })
+            .collect();
+        Proto { comps }
+    }
+
+    fn pixel(&self, u: f32, v: f32, chan: usize) -> f32 {
+        let mut s = 0.0f32;
+        for &(fx, fy, ph, amp, mix) in &self.comps {
+            let cw = 1.0 + 0.5 * mix * chan as f32;
+            s += amp * (std::f32::consts::TAU * (fx * u * cw + fy * v) + ph).sin();
+        }
+        0.5 + 0.25 * s
+    }
+}
+
+impl ImageDataset {
+    /// Generate `n` samples, classes balanced round-robin. Deterministic
+    /// in (kind, seed, n).
+    pub fn generate(kind: ImageKind, n: usize, seed: u64) -> ImageDataset {
+        let mut rng = Rng::new(seed ^ 0x1A6E_5EED);
+        let protos: Vec<Proto> = (0..N_CLASSES).map(|_| Proto::sample(&mut rng)).collect();
+        let side = kind.side();
+        let chans = kind.channels();
+        let dim = kind.dim();
+        let mut x = Vec::with_capacity(n * dim);
+        let mut y = Vec::with_capacity(n);
+        for i in 0..n {
+            let cls = i % N_CLASSES;
+            y.push(cls as u8);
+            // per-sample smooth deformation: translation + scale jitter
+            let dx = rng.normal() as f32 * 0.05 * kind.blob_noise();
+            let dy = rng.normal() as f32 * 0.05 * kind.blob_noise();
+            let sc = 1.0 + rng.normal() as f32 * 0.1 * kind.blob_noise();
+            let pn = kind.pixel_noise();
+            for c in 0..chans {
+                for py in 0..side {
+                    for px in 0..side {
+                        let u = (px as f32 / side as f32) * sc + dx;
+                        let v = (py as f32 / side as f32) * sc + dy;
+                        let base = protos[cls].pixel(u, v, c);
+                        let val = base + rng.normal() as f32 * pn;
+                        x.push(val.clamp(0.0, 1.0));
+                    }
+                }
+            }
+        }
+        ImageDataset { kind, x, y, dim, n_classes: N_CLASSES }
+    }
+
+    pub fn len(&self) -> usize {
+        self.y.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.y.is_empty()
+    }
+
+    pub fn image(&self, i: usize) -> &[f32] {
+        &self.x[i * self.dim..(i + 1) * self.dim]
+    }
+
+    /// Sample a minibatch: pixels flattened `(batch × dim)` and one-hot
+    /// labels `(batch × 10)` — exactly the MLP artifact input layout.
+    pub fn sample_batch(
+        &self,
+        batch: usize,
+        rng: &mut Rng,
+        x_out: &mut Vec<f32>,
+        y_out: &mut Vec<f32>,
+    ) {
+        x_out.clear();
+        y_out.clear();
+        x_out.reserve(batch * self.dim);
+        y_out.resize(batch * self.n_classes, 0.0);
+        y_out.iter_mut().for_each(|v| *v = 0.0);
+        for b in 0..batch {
+            let i = rng.below(self.len());
+            x_out.extend_from_slice(self.image(i));
+            y_out[b * self.n_classes + self.y[i] as usize] = 1.0;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_ranges() {
+        for kind in [ImageKind::MnistLike, ImageKind::FashionLike, ImageKind::CifarLike] {
+            let ds = ImageDataset::generate(kind, 40, 0);
+            assert_eq!(ds.len(), 40);
+            assert_eq!(ds.x.len(), 40 * kind.dim());
+            assert!(ds.x.iter().all(|&v| (0.0..=1.0).contains(&v)));
+            assert!(ds.y.iter().all(|&c| (c as usize) < N_CLASSES));
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = ImageDataset::generate(ImageKind::MnistLike, 20, 7);
+        let b = ImageDataset::generate(ImageKind::MnistLike, 20, 7);
+        assert_eq!(a.x, b.x);
+        let c = ImageDataset::generate(ImageKind::MnistLike, 20, 8);
+        assert_ne!(a.x, c.x);
+    }
+
+    #[test]
+    fn classes_are_balanced() {
+        let ds = ImageDataset::generate(ImageKind::CifarLike, 100, 1);
+        let mut counts = [0usize; N_CLASSES];
+        for &c in &ds.y {
+            counts[c as usize] += 1;
+        }
+        assert!(counts.iter().all(|&c| c == 10), "{counts:?}");
+    }
+
+    #[test]
+    fn classes_are_separable() {
+        // Nearest-class-mean classification on clean data must beat chance
+        // by a wide margin — otherwise the "dataset" carries no signal.
+        let ds = ImageDataset::generate(ImageKind::MnistLike, 300, 3);
+        let dim = ds.dim;
+        let mut means = vec![vec![0.0f64; dim]; N_CLASSES];
+        let mut counts = [0usize; N_CLASSES];
+        // fit on the first 200
+        for i in 0..200 {
+            let c = ds.y[i] as usize;
+            counts[c] += 1;
+            for (m, &v) in means[c].iter_mut().zip(ds.image(i)) {
+                *m += v as f64;
+            }
+        }
+        for (m, &c) in means.iter_mut().zip(&counts) {
+            m.iter_mut().for_each(|v| *v /= c.max(1) as f64);
+        }
+        // score on the last 100
+        let mut correct = 0;
+        for i in 200..300 {
+            let img = ds.image(i);
+            let pred = (0..N_CLASSES)
+                .min_by(|&a, &b| {
+                    let da: f64 = means[a]
+                        .iter()
+                        .zip(img)
+                        .map(|(m, &v)| (m - v as f64).powi(2))
+                        .sum();
+                    let db: f64 = means[b]
+                        .iter()
+                        .zip(img)
+                        .map(|(m, &v)| (m - v as f64).powi(2))
+                        .sum();
+                    da.total_cmp(&db)
+                })
+                .unwrap();
+            if pred == ds.y[i] as usize {
+                correct += 1;
+            }
+        }
+        assert!(correct > 50, "nearest-mean accuracy too low: {correct}/100");
+    }
+
+    #[test]
+    fn batch_layout_one_hot() {
+        let ds = ImageDataset::generate(ImageKind::MnistLike, 30, 0);
+        let mut rng = Rng::new(0);
+        let (mut x, mut y) = (Vec::new(), Vec::new());
+        ds.sample_batch(8, &mut rng, &mut x, &mut y);
+        assert_eq!(x.len(), 8 * 784);
+        assert_eq!(y.len(), 8 * 10);
+        for b in 0..8 {
+            let row = &y[b * 10..(b + 1) * 10];
+            assert_eq!(row.iter().filter(|&&v| v == 1.0).count(), 1);
+            assert_eq!(row.iter().filter(|&&v| v == 0.0).count(), 9);
+        }
+    }
+}

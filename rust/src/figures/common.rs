@@ -1,0 +1,182 @@
+//! Shared plumbing for the figure generators: multi-seed sweeps,
+//! series aggregation, CSV emission and console tables.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::Result;
+
+use crate::config::{Method, RunConfig};
+use crate::coordinator::metrics::RunRecord;
+use crate::util::csv::CsvWriter;
+use crate::util::stats;
+
+/// Options shared by every figure runner.
+#[derive(Clone, Debug)]
+pub struct FigOpts {
+    pub out_dir: PathBuf,
+    pub artifacts_dir: PathBuf,
+    /// Independent seeds per curve (paper: 5 synthetic / 3 RL & text).
+    pub seeds: usize,
+    /// Sequential iterations T (or episodes) per run; None = per-figure
+    /// default.
+    pub steps: Option<usize>,
+    /// Smaller grids for smoke runs.
+    pub quick: bool,
+}
+
+impl Default for FigOpts {
+    fn default() -> Self {
+        FigOpts {
+            out_dir: PathBuf::from("results"),
+            artifacts_dir: PathBuf::from("artifacts"),
+            seeds: 3,
+            steps: None,
+            quick: false,
+        }
+    }
+}
+
+/// The three headline methods of every paper panel.
+pub const PANEL_METHODS: [Method; 3] = [Method::Vanilla, Method::Target, Method::Optex];
+
+/// Run `make_cfg(seed)` for `seeds` seeds through the given runner and
+/// return all records.
+pub fn sweep_seeds(
+    seeds: usize,
+    make_cfg: &dyn Fn(u64) -> RunConfig,
+    runner: &dyn Fn(&RunConfig) -> Result<RunRecord>,
+) -> Result<Vec<RunRecord>> {
+    let mut out = Vec::with_capacity(seeds);
+    for s in 0..seeds {
+        let cfg = make_cfg(s as u64);
+        out.push(runner(&cfg)?);
+    }
+    Ok(out)
+}
+
+/// Element-wise mean of a metric across seed records.
+pub fn mean_metric(records: &[RunRecord], metric: &dyn Fn(&RunRecord) -> Vec<f64>) -> Vec<f64> {
+    let series: Vec<Vec<f64>> = records.iter().map(metric).collect();
+    stats::mean_series(&series)
+}
+
+/// A labelled curve for a figure panel.
+pub struct Curve {
+    pub label: String,
+    /// x values (iterations / episodes / seconds).
+    pub x: Vec<f64>,
+    /// y values (mean over seeds).
+    pub y: Vec<f64>,
+}
+
+/// Write curves as a long-format CSV: label,x,y.
+pub fn write_curves(path: &Path, xname: &str, yname: &str, curves: &[Curve]) -> Result<()> {
+    let mut w = CsvWriter::create(path, &["series", xname, yname])?;
+    for c in curves {
+        for (&x, &y) in c.x.iter().zip(&c.y) {
+            w.tagged_row(&c.label, &[x, y])?;
+        }
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Console summary: final y per curve plus speedup-vs-first-curve at the
+/// first curve's final y level (the paper's "iterations to reach the same
+/// optimality gap" comparison).
+pub fn print_panel(title: &str, curves: &[Curve], lower_is_better: bool) {
+    println!("\n== {title} ==");
+    let reference = curves.first();
+    for c in curves {
+        let last = *c.y.last().unwrap_or(&f64::NAN);
+        let mut line = format!("  {:12} final={last:.4e}", c.label);
+        if let Some(r) = reference {
+            if c.label != r.label {
+                if let Some(sp) = speedup_vs(r, c, lower_is_better) {
+                    line.push_str(&format!("  speedup_vs_{}={sp:.2}x", r.label));
+                }
+            }
+        }
+        println!("{line}");
+    }
+}
+
+/// x-ratio at which `c` first reaches the final level of `reference`.
+pub fn speedup_vs(reference: &Curve, c: &Curve, lower_is_better: bool) -> Option<f64> {
+    let target = *reference.y.last()?;
+    let reached = c
+        .x
+        .iter()
+        .zip(&c.y)
+        .find(|(_, &y)| if lower_is_better { y <= target } else { y >= target })
+        .map(|(&x, _)| x)?;
+    let ref_x = *reference.x.last()?;
+    if reached > 0.0 {
+        Some(ref_x / reached)
+    } else {
+        None
+    }
+}
+
+/// Write every per-seed record for provenance.
+pub fn dump_records(dir: &Path, tag: &str, records: &[RunRecord]) -> Result<()> {
+    for (i, r) in records.iter().enumerate() {
+        r.to_csv(&dir.join(format!("{tag}_seed{i}.csv")))?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::metrics::IterRecord;
+
+    fn rec(label: &str, ys: &[f64]) -> RunRecord {
+        let mut r = RunRecord::new(label);
+        for (i, &y) in ys.iter().enumerate() {
+            r.push(IterRecord {
+                iter: i + 1,
+                grad_evals: 0,
+                loss: y,
+                grad_norm: 0.0,
+                best_loss: y,
+                wall_s: 0.0,
+                parallel_s: 0.0,
+                est_var: 0.0,
+                aux: None,
+            });
+        }
+        r
+    }
+
+    #[test]
+    fn mean_metric_averages_across_seeds() {
+        let rs = vec![rec("a", &[2.0, 4.0]), rec("a", &[4.0, 8.0])];
+        let m = mean_metric(&rs, &|r| r.loss_series());
+        assert_eq!(m, vec![3.0, 6.0]);
+    }
+
+    #[test]
+    fn speedup_detects_crossing() {
+        let vanilla = Curve { label: "vanilla".into(), x: (1..=10).map(|i| i as f64).collect(), y: (1..=10).map(|i| 1.0 / i as f64).collect() };
+        let optex = Curve { label: "optex".into(), x: (1..=10).map(|i| i as f64).collect(), y: (1..=10).map(|i| 0.5 / i as f64).collect() };
+        // optex reaches 0.1 at x=5; vanilla at x=10 -> 2x
+        let sp = speedup_vs(&vanilla, &optex, true).unwrap();
+        assert!((sp - 2.0).abs() < 1e-9, "{sp}");
+        // a worse curve that never reaches the target
+        let bad = Curve { label: "bad".into(), x: vec![1.0, 2.0], y: vec![1.0, 0.9] };
+        assert!(speedup_vs(&vanilla, &bad, true).is_none());
+    }
+
+    #[test]
+    fn write_curves_emits_long_format() {
+        let dir = std::env::temp_dir().join("optex_fig_common");
+        let path = dir.join("c.csv");
+        let c = Curve { label: "optex".into(), x: vec![1.0, 2.0], y: vec![0.5, 0.25] };
+        write_curves(&path, "iter", "loss", &[c]).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with("series,iter,loss"));
+        assert!(text.contains("optex,1,"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,61 @@
+//! Figure 2 — optimality gap vs sequential iterations on the synthetic
+//! functions (Ackley / Sphere / Rosenbrock), Vanilla vs Target vs OptEx.
+//!
+//! Paper protocol (Appx B.2.1): Adam lr = 0.1 (β₁ = .9, β₂ = .999),
+//! N = 5, T₀ = 20, Matérn kernel, σ² = 0 (deterministic), mean of 5 runs.
+//! Default profile uses d = 10⁴ (paper 10⁵ via `--set synth_dim=100000`)
+//! and 3 seeds; shapes — who wins and by what factor — are d-independent
+//! (Thm. 2's rate does not involve d).
+
+use anyhow::Result;
+
+use crate::config::RunConfig;
+use crate::coordinator::optex;
+use crate::figures::common::{
+    dump_records, mean_metric, print_panel, sweep_seeds, write_curves, Curve, FigOpts,
+    PANEL_METHODS,
+};
+use crate::gp::Kernel;
+use crate::opt::OptSpec;
+use crate::workloads::synthetic::SynthFn;
+
+pub fn run(opts: &FigOpts) -> Result<()> {
+    let steps = opts.steps.unwrap_or(if opts.quick { 40 } else { 200 });
+    let d = if opts.quick { 1000 } else { 10_000 };
+    let out = opts.out_dir.join("fig2");
+    for f in SynthFn::ALL {
+        let mut curves = Vec::new();
+        for method in PANEL_METHODS {
+            let make_cfg = |seed: u64| -> RunConfig {
+                let mut c = RunConfig::default();
+                c.workload = f.name().into();
+                c.method = method;
+                c.steps = steps;
+                c.seed = seed;
+                c.synth_dim = d;
+                c.noise_std = 0.0; // deterministic, paper Sec. 6.1
+                c.optimizer =
+                    OptSpec::Adam { lr: 0.1, beta1: 0.9, beta2: 0.999, eps: 1e-8 };
+                c.optex.parallelism = 5;
+                c.optex.t0 = 20;
+                c.optex.kernel = Kernel::Matern52;
+                c.optex.sigma2 = 0.0;
+                c.artifacts_dir = opts.artifacts_dir.clone();
+                c
+            };
+            let records = sweep_seeds(opts.seeds, &make_cfg, &optex::run)?;
+            dump_records(&out, &format!("{}_{}", f.name(), method.name()), &records)?;
+            let y = mean_metric(&records, &|r| r.best_loss_series());
+            let x = (1..=y.len()).map(|i| i as f64).collect();
+            curves.push(Curve { label: method.name().into(), x, y });
+        }
+        write_curves(
+            &out.join(format!("fig2_{}.csv", f.name())),
+            "seq_iter",
+            "optimality_gap",
+            &curves,
+        )?;
+        print_panel(&format!("Fig 2 — {} (d={d}, N=5)", f.name()), &curves, true);
+    }
+    Ok(())
+}

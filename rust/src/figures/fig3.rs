@@ -1,0 +1,69 @@
+//! Figure 3 — cumulative average reward vs episodes for DQN on the
+//! classic-control tasks, Vanilla vs Target vs OptEx.
+//!
+//! Paper protocol (Appx B.2.2): Adam lr = 1e-3, γ = 0.95, batch 256,
+//! N = 4, T₀ = 150, ε-greedy with 2^(−1/1500) decay, warm-up episodes,
+//! 100–200 episodes, mean of 3 runs.
+
+use anyhow::Result;
+
+use crate::config::RunConfig;
+use crate::figures::common::{
+    dump_records, mean_metric, print_panel, sweep_seeds, write_curves, Curve, FigOpts,
+    PANEL_METHODS,
+};
+use crate::gp::Kernel;
+use crate::opt::OptSpec;
+use crate::rl::dqn::{train, RlConfig};
+use crate::rl::ALL_ENVS;
+
+pub fn run(opts: &FigOpts, env_filter: Option<&str>) -> Result<()> {
+    let episodes = opts.steps.unwrap_or(if opts.quick { 20 } else { 80 });
+    let out = opts.out_dir.join("fig3");
+    for env in ALL_ENVS {
+        if let Some(f) = env_filter {
+            if f != env {
+                continue;
+            }
+        }
+        let mut rl = RlConfig::paper(env);
+        rl.episodes = episodes;
+        rl.warmup_episodes = (episodes / 6).max(2);
+        if opts.quick {
+            rl.batch = 64;
+        }
+        let mut curves = Vec::new();
+        for method in PANEL_METHODS {
+            let rl_c = rl.clone();
+            let runner = move |cfg: &RunConfig| train(cfg, &rl_c);
+            let make_cfg = |seed: u64| -> RunConfig {
+                let mut c = RunConfig::default();
+                c.workload = env.into();
+                c.method = method;
+                c.seed = seed;
+                c.optimizer =
+                    OptSpec::Adam { lr: 1e-3, beta1: 0.9, beta2: 0.999, eps: 1e-8 };
+                c.optex.parallelism = 4;
+                c.optex.t0 = 150;
+                c.optex.kernel = Kernel::Matern52;
+                c.optex.sigma2 = 0.01; // stochastic TD gradients
+                c.artifacts_dir = opts.artifacts_dir.clone();
+                c
+            };
+            let records = sweep_seeds(opts.seeds, &make_cfg, &runner)?;
+            dump_records(&out, &format!("{env}_{}", method.name()), &records)?;
+            let y = mean_metric(&records, &|r| r.aux_series());
+            let x = (1..=y.len()).map(|i| i as f64).collect();
+            curves.push(Curve { label: method.name().into(), x, y });
+        }
+        write_curves(
+            &out.join(format!("fig3_{env}.csv")),
+            "episode",
+            "cum_avg_reward",
+            &curves,
+        )?;
+        // higher reward is better
+        print_panel(&format!("Fig 3 — {env} (N=4, T0=150)"), &curves, false);
+    }
+    Ok(())
+}

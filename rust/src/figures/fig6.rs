@@ -1,0 +1,118 @@
+//! Figure 6 — ablations on Rosenbrock (paper Appx B.3):
+//!   (a) parallel vs sequential intermediate-gradient evaluation,
+//!   (b) θ_t selection principle: last / func / grad,
+//!   (c) local-history length T₀ ∈ {1, 5, 10, 20, 50},
+//!   (d) parallelism N ∈ {1, 2, 5, 10, 20}.
+//!
+//! Same optimizer protocol as Fig. 2; paper dimension 10⁵ (default 10⁴).
+
+use anyhow::Result;
+
+use crate::config::{Method, RunConfig};
+use crate::coordinator::optex;
+use crate::coordinator::Selection;
+use crate::figures::common::{
+    dump_records, mean_metric, print_panel, sweep_seeds, write_curves, Curve, FigOpts,
+};
+use crate::gp::Kernel;
+use crate::opt::OptSpec;
+
+fn base_cfg(opts: &FigOpts, steps: usize, d: usize) -> RunConfig {
+    let mut c = RunConfig::default();
+    c.workload = "rosenbrock".into();
+    c.method = Method::Optex;
+    c.steps = steps;
+    c.synth_dim = d;
+    c.noise_std = 0.0;
+    c.optimizer = OptSpec::Adam { lr: 0.1, beta1: 0.9, beta2: 0.999, eps: 1e-8 };
+    c.optex.parallelism = 5;
+    c.optex.t0 = 20;
+    c.optex.kernel = Kernel::Matern52;
+    c.artifacts_dir = opts.artifacts_dir.clone();
+    c
+}
+
+fn panel(
+    opts: &FigOpts,
+    tag: &str,
+    variants: Vec<(String, RunConfig)>,
+) -> Result<()> {
+    let out = opts.out_dir.join("fig6");
+    let mut curves = Vec::new();
+    for (label, cfg) in variants {
+        let records = sweep_seeds(opts.seeds, &|seed| {
+            let mut c = cfg.clone();
+            c.seed = seed;
+            c
+        }, &optex::run)?;
+        dump_records(&out, &format!("{tag}_{label}"), &records)?;
+        let y = mean_metric(&records, &|r| r.best_loss_series());
+        let x = (1..=y.len()).map(|i| i as f64).collect();
+        curves.push(Curve { label, x, y });
+    }
+    write_curves(
+        &out.join(format!("fig6{tag}.csv")),
+        "seq_iter",
+        "optimality_gap",
+        &curves,
+    )?;
+    print_panel(&format!("Fig 6{tag} — rosenbrock ablation"), &curves, true);
+    Ok(())
+}
+
+pub fn run(opts: &FigOpts, which: Option<char>) -> Result<()> {
+    let steps = opts.steps.unwrap_or(if opts.quick { 40 } else { 150 });
+    let d = if opts.quick { 1000 } else { 10_000 };
+
+    let all = which.is_none();
+    if all || which == Some('a') {
+        let mut parallel = base_cfg(opts, steps, d);
+        parallel.optex.eval_intermediate = true;
+        let mut sequential = base_cfg(opts, steps, d);
+        sequential.optex.eval_intermediate = false;
+        panel(
+            opts,
+            "a",
+            vec![("parallel".into(), parallel), ("sequential".into(), sequential)],
+        )?;
+    }
+    if all || which == Some('b') {
+        let variants = [Selection::Last, Selection::Func, Selection::Grad]
+            .into_iter()
+            .map(|s| {
+                let mut c = base_cfg(opts, steps, d);
+                c.optex.selection = s;
+                (s.name().to_string(), c)
+            })
+            .collect();
+        panel(opts, "b", variants)?;
+    }
+    if all || which == Some('c') {
+        let t0s: &[usize] = if opts.quick { &[1, 10, 50] } else { &[1, 5, 10, 20, 50] };
+        let variants = t0s
+            .iter()
+            .map(|&t0| {
+                let mut c = base_cfg(opts, steps, d);
+                c.optex.t0 = t0;
+                (format!("T0={t0}"), c)
+            })
+            .collect();
+        panel(opts, "c", variants)?;
+    }
+    if all || which == Some('d') {
+        let ns: &[usize] = if opts.quick { &[1, 5, 20] } else { &[1, 2, 5, 10, 20] };
+        let variants = ns
+            .iter()
+            .map(|&n| {
+                let mut c = base_cfg(opts, steps, d);
+                c.optex.parallelism = n;
+                if n == 1 {
+                    c.method = Method::Vanilla;
+                }
+                (format!("N={n}"), c)
+            })
+            .collect();
+        panel(opts, "d", variants)?;
+    }
+    Ok(())
+}

@@ -1,0 +1,84 @@
+//! Acceleration-rate study (extension): directly measure the effective
+//! acceleration of SGD-based OptEx as a function of N and compare with
+//! Cor. 2's Θ(√N).
+//!
+//! Protocol: run Vanilla to T_ref iterations on rosenbrock, record its
+//! final optimality gap; for each N, find the sequential iteration at
+//! which OptEx first reaches that gap; acceleration(N) = T_ref / T_N.
+//! The paper's claim is acceleration(N) ≈ c·√N for N below N_max.
+
+use anyhow::Result;
+
+use crate::config::{Method, RunConfig};
+use crate::coordinator::optex;
+use crate::figures::common::{mean_metric, sweep_seeds, write_curves, Curve, FigOpts};
+use crate::gp::Kernel;
+use crate::opt::OptSpec;
+
+fn cfg_for(opts: &FigOpts, method: Method, n: usize, steps: usize, d: usize) -> RunConfig {
+    let mut c = RunConfig::default();
+    c.workload = "rosenbrock".into();
+    c.method = method;
+    c.steps = steps;
+    c.synth_dim = d;
+    c.optimizer = OptSpec::Sgd { lr: 2e-4 * d as f64 }; // stable for rosenbrock
+    c.optex.parallelism = n;
+    c.optex.t0 = 20;
+    c.optex.kernel = Kernel::Matern52;
+    c.artifacts_dir = opts.artifacts_dir.clone();
+    c
+}
+
+pub fn run(opts: &FigOpts) -> Result<()> {
+    let steps = opts.steps.unwrap_or(if opts.quick { 100 } else { 400 });
+    let d = if opts.quick { 500 } else { 4_000 };
+    let out = opts.out_dir.join("fig_ext");
+
+    // Vanilla reference gap at T_ref.
+    let van = sweep_seeds(
+        opts.seeds,
+        &|seed| {
+            let mut c = cfg_for(opts, Method::Vanilla, 1, steps, d);
+            c.seed = seed;
+            c
+        },
+        &optex::run,
+    )?;
+    let van_best = mean_metric(&van, &|r| r.best_loss_series());
+    let target_gap = *van_best.last().unwrap();
+
+    let ns: &[usize] = if opts.quick { &[2, 4, 8] } else { &[2, 3, 4, 5, 8, 12] };
+    let mut xs = Vec::new();
+    let mut measured = Vec::new();
+    let mut predicted = Vec::new();
+    println!("\n== Ext — acceleration rate vs N (Cor. 2: Θ(√N)) ==");
+    println!("  vanilla gap at T={steps}: {target_gap:.3e}");
+    for &n in ns {
+        let recs = sweep_seeds(
+            opts.seeds,
+            &|seed| {
+                let mut c = cfg_for(opts, Method::Optex, n, steps, d);
+                c.seed = seed;
+                c
+            },
+            &optex::run,
+        )?;
+        let best = mean_metric(&recs, &|r| r.best_loss_series());
+        let reach = best.iter().position(|&b| b <= target_gap).map(|i| i + 1);
+        let acc = reach.map(|t| steps as f64 / t as f64).unwrap_or(f64::NAN);
+        println!(
+            "  N={n:<3} reach@{:<6} acceleration={acc:.2}x  sqrt(N)={:.2}",
+            reach.map(|t| t.to_string()).unwrap_or_else(|| "never".into()),
+            (n as f64).sqrt()
+        );
+        xs.push(n as f64);
+        measured.push(acc);
+        predicted.push((n as f64).sqrt());
+    }
+    let curves = vec![
+        Curve { label: "measured".into(), x: xs.clone(), y: measured },
+        Curve { label: "sqrt_n".into(), x: xs, y: predicted },
+    ];
+    write_curves(&out.join("accel_vs_n.csv"), "N", "acceleration", &curves)?;
+    Ok(())
+}

@@ -1,0 +1,216 @@
+//! Figures 4 / 7 / 8 / 9 / 10 — neural-network training panels:
+//! train loss / train error / held-out test error against BOTH sequential
+//! iterations and (modeled-parallel) wallclock, for Vanilla / Target /
+//! OptEx.
+//!
+//! Paper protocol (Appx B.2.3): SGD, lr = 1e-3 (images, batch 512) or
+//! lr = 0.01 (text, batch 256), N = 4, T₀ = 6 (images) / 10 (text),
+//! Matérn kernel, dim-subset D̃. The default artifact profile scales
+//! batch/width down (DESIGN.md §Substitutions); shapes are preserved.
+
+use anyhow::Result;
+
+use crate::config::RunConfig;
+use crate::coordinator::Driver;
+use crate::datasets::{ImageDataset, ImageKind, N_CLASSES};
+use crate::figures::common::{
+    print_panel, write_curves, Curve, FigOpts, PANEL_METHODS,
+};
+use crate::opt::OptSpec;
+use crate::runtime::{Engine, Executable, In, Manifest};
+use crate::util::stats;
+use crate::util::Rng;
+use crate::workloads::factory;
+
+/// One NN-training figure.
+pub struct TrainFigSpec {
+    /// "4a", "7", ...
+    pub id: &'static str,
+    /// factory workload name.
+    pub workload: &'static str,
+    pub lr: f64,
+    /// Evaluate held-out test error (image classifiers).
+    pub eval_test: bool,
+    pub default_steps: usize,
+}
+
+pub const FIG4A: TrainFigSpec =
+    TrainFigSpec { id: "4a", workload: "cifar", lr: 1e-3, eval_test: true, default_steps: 150 };
+pub const FIG4B: TrainFigSpec = TrainFigSpec {
+    id: "4b",
+    workload: "shakespeare",
+    lr: 0.01,
+    eval_test: false,
+    default_steps: 120,
+};
+pub const FIG7: TrainFigSpec =
+    TrainFigSpec { id: "7", workload: "mnist", lr: 1e-3, eval_test: true, default_steps: 150 };
+pub const FIG8: TrainFigSpec =
+    TrainFigSpec { id: "8", workload: "fmnist", lr: 1e-3, eval_test: true, default_steps: 150 };
+pub const FIG9: TrainFigSpec =
+    TrainFigSpec { id: "9", workload: "cifar", lr: 1e-3, eval_test: true, default_steps: 150 };
+pub const FIG10: TrainFigSpec =
+    TrainFigSpec { id: "10", workload: "hp", lr: 0.01, eval_test: false, default_steps: 120 };
+
+/// Held-out evaluator: runs the classifier artifact on test batches and
+/// averages the `acc` output (the grad output is discarded — the
+/// artifacts are fused loss+grad graphs).
+struct TestEval {
+    exe: Executable,
+    ds: ImageDataset,
+    batch: usize,
+    batches: usize,
+    rng: Rng,
+}
+
+impl TestEval {
+    fn new(opts: &FigOpts, workload: &str, seed: u64) -> Result<TestEval> {
+        let manifest = Manifest::load(&opts.artifacts_dir)?;
+        let (artifact, kind) = match workload {
+            "mnist" => ("mlp_mnist", ImageKind::MnistLike),
+            "fmnist" => ("mlp_mnist", ImageKind::FashionLike),
+            "cifar" => ("mlp_cifar", ImageKind::CifarLike),
+            other => anyhow::bail!("no test evaluator for {other}"),
+        };
+        let spec = manifest.get(artifact)?;
+        let batch = spec.meta_usize("batch")?;
+        let engine = Engine::cpu()?;
+        let exe = engine.load(spec)?;
+        // Held-out set: same generator family, DIFFERENT seed stream than
+        // the training split (factory uses seed ^ 0xDA7A).
+        let ds = ImageDataset::generate(kind, 1000, seed ^ 0x7E57);
+        Ok(TestEval { exe, ds, batch, batches: 3, rng: Rng::new(seed ^ 0x7E58) })
+    }
+
+    fn test_error(&mut self, theta: &[f32]) -> Result<f64> {
+        let mut accs = Vec::with_capacity(self.batches);
+        let (mut x, mut y) = (Vec::new(), Vec::new());
+        for _ in 0..self.batches {
+            self.ds.sample_batch(self.batch, &mut self.rng, &mut x, &mut y);
+            let out = self.exe.run(&[In::F32(theta), In::F32(&x), In::F32(&y)])?;
+            accs.push(out[2][0] as f64);
+        }
+        debug_assert_eq!(y.len(), self.batch * N_CLASSES);
+        Ok(1.0 - stats::mean(&accs))
+    }
+}
+
+pub fn run(opts: &FigOpts, spec: &TrainFigSpec) -> Result<()> {
+    let steps = opts.steps.unwrap_or(if opts.quick { 20 } else { spec.default_steps });
+    let eval_every = (steps / 20).max(1);
+    let out = opts.out_dir.join(format!("fig{}", spec.id));
+    std::fs::create_dir_all(&out)?;
+
+    // curves[metric][method]
+    let mut loss_iter: Vec<Curve> = Vec::new();
+    let mut loss_time: Vec<Curve> = Vec::new();
+    let mut trainerr_iter: Vec<Curve> = Vec::new();
+    let mut testerr_iter: Vec<Curve> = Vec::new();
+    let mut testerr_time: Vec<Curve> = Vec::new();
+
+    for method in PANEL_METHODS {
+        // NN figures run 1 seed by default at CI scale (paper: 5/3) —
+        // bump with --seeds.
+        let seeds = opts.seeds.min(if opts.quick { 1 } else { 2 });
+        let mut all_loss: Vec<Vec<f64>> = Vec::new();
+        let mut all_time: Vec<Vec<f64>> = Vec::new();
+        let mut all_acc: Vec<Vec<f64>> = Vec::new();
+        let mut all_test: Vec<Vec<f64>> = Vec::new();
+        let mut test_x: Vec<f64> = Vec::new();
+        for seed in 0..seeds {
+            let mut cfg = RunConfig::default();
+            cfg.workload = spec.workload.into();
+            cfg.method = method;
+            cfg.steps = steps;
+            cfg.seed = seed as u64;
+            cfg.optimizer = OptSpec::Sgd { lr: spec.lr };
+            cfg.optex.parallelism = 4;
+            // T0 / D̃ pinned by the gp artifact when backend=hlo; native
+            // estimation uses the paper values.
+            cfg.optex.t0 = if spec.workload == "shakespeare" || spec.workload == "hp" {
+                10
+            } else {
+                6
+            };
+            cfg.optex.dsub = Some(4096);
+            cfg.optex.sigma2 = 0.01;
+            cfg.artifacts_dir = opts.artifacts_dir.clone();
+
+            let workload = factory::build(&cfg)?;
+            let mut driver = Driver::new(cfg.clone(), workload)?;
+            let mut tester = if spec.eval_test {
+                Some(TestEval::new(opts, spec.workload, seed as u64)?)
+            } else {
+                None
+            };
+            let mut test_series = Vec::new();
+            let mut txs = Vec::new();
+            for t in 1..=steps {
+                driver.iteration(t)?;
+                if let Some(te) = tester.as_mut() {
+                    if t % eval_every == 0 || t == steps {
+                        test_series.push(te.test_error(driver.theta())?);
+                        txs.push(t as f64);
+                    }
+                }
+            }
+            let rec = driver.record().clone();
+            rec.to_csv(&out.join(format!(
+                "{}_{}_seed{seed}.csv",
+                spec.workload,
+                method.name()
+            )))?;
+            all_loss.push(rec.loss_series());
+            all_time.push(rec.rows.iter().map(|r| r.parallel_s).collect());
+            all_acc.push(rec.aux_series());
+            if !test_series.is_empty() {
+                all_test.push(test_series);
+                test_x = txs;
+            }
+        }
+        let label = method.name().to_string();
+        let loss = stats::mean_series(&all_loss);
+        let time = stats::mean_series(&all_time);
+        let iters: Vec<f64> = (1..=loss.len()).map(|i| i as f64).collect();
+        loss_time.push(Curve { label: label.clone(), x: time.clone(), y: loss.clone() });
+        loss_iter.push(Curve { label: label.clone(), x: iters.clone(), y: loss });
+        let acc = stats::mean_series(&all_acc);
+        if acc.iter().any(|a| a.is_finite()) {
+            let err: Vec<f64> = acc.iter().map(|a| 1.0 - a).collect();
+            trainerr_iter.push(Curve { label: label.clone(), x: iters.clone(), y: err });
+        }
+        if !all_test.is_empty() {
+            let te = stats::mean_series(&all_test);
+            // map test checkpoints onto the time axis
+            let t_at: Vec<f64> = test_x
+                .iter()
+                .map(|&ti| time.get(ti as usize - 1).copied().unwrap_or(0.0))
+                .collect();
+            testerr_time.push(Curve { label: label.clone(), x: t_at, y: te.clone() });
+            testerr_iter.push(Curve { label, x: test_x.clone(), y: te });
+        }
+    }
+
+    write_curves(&out.join("train_loss_vs_iter.csv"), "seq_iter", "train_loss", &loss_iter)?;
+    write_curves(&out.join("train_loss_vs_time.csv"), "parallel_s", "train_loss", &loss_time)?;
+    if !trainerr_iter.is_empty() {
+        write_curves(&out.join("train_err_vs_iter.csv"), "seq_iter", "train_err", &trainerr_iter)?;
+    }
+    if !testerr_iter.is_empty() {
+        write_curves(&out.join("test_err_vs_iter.csv"), "seq_iter", "test_err", &testerr_iter)?;
+        write_curves(&out.join("test_err_vs_time.csv"), "parallel_s", "test_err", &testerr_time)?;
+    }
+    print_panel(
+        &format!("Fig {} — {} train loss vs iterations", spec.id, spec.workload),
+        &loss_iter,
+        true,
+    );
+    if !testerr_iter.is_empty() {
+        print_panel(
+            &format!("Fig {} — {} test error vs iterations", spec.id, spec.workload),
+            &testerr_iter,
+            true,
+        );
+    }
+    Ok(())
+}

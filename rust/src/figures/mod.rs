@@ -1,0 +1,52 @@
+//! Figure-regeneration harness: one entrypoint per paper figure plus the
+//! extension studies (see DESIGN.md §4 for the experiment index).
+//!
+//! `optex fig <id>` writes CSV series under `results/fig<id>/` and prints
+//! a console summary with speedup factors. IDs: 2, 3, 4a, 4b, 6, 6a–6d,
+//! 7, 8, 9, 10, kernels, estbound, nativehlo, all.
+
+pub mod common;
+pub mod fig2;
+pub mod fig_accel;
+pub mod fig3;
+pub mod fig6;
+pub mod fig_ext;
+pub mod fig_train;
+
+use anyhow::{bail, Result};
+pub use common::FigOpts;
+
+/// Dispatch a figure id.
+pub fn run(id: &str, opts: &FigOpts) -> Result<()> {
+    match id {
+        "2" => fig2::run(opts),
+        "3" => fig3::run(opts, None),
+        "3-cartpole" => fig3::run(opts, Some("cartpole")),
+        "3-mountaincar" => fig3::run(opts, Some("mountaincar")),
+        "3-acrobot" => fig3::run(opts, Some("acrobot")),
+        "4a" => fig_train::run(opts, &fig_train::FIG4A),
+        "4b" => fig_train::run(opts, &fig_train::FIG4B),
+        "6" => fig6::run(opts, None),
+        "6a" => fig6::run(opts, Some('a')),
+        "6b" => fig6::run(opts, Some('b')),
+        "6c" => fig6::run(opts, Some('c')),
+        "6d" => fig6::run(opts, Some('d')),
+        "7" => fig_train::run(opts, &fig_train::FIG7),
+        "8" => fig_train::run(opts, &fig_train::FIG8),
+        "9" => fig_train::run(opts, &fig_train::FIG9),
+        "10" => fig_train::run(opts, &fig_train::FIG10),
+        "kernels" => fig_ext::run_kernels(opts),
+        "estbound" => fig_ext::run_estbound(opts),
+        "remark1" => fig_ext::run_remark1(opts),
+        "accel" => fig_accel::run(opts),
+        "nativehlo" => fig_ext::run_native_vs_hlo(opts),
+        "all" => {
+            for id in ["2", "6", "kernels", "estbound", "remark1", "3", "4a", "4b", "7", "8", "9", "10"] {
+                println!("\n##### fig {id} #####");
+                run(id, opts)?;
+            }
+            Ok(())
+        }
+        other => bail!("unknown figure id {other:?} (try: 2 3 4a 4b 6 7 8 9 10 kernels estbound remark1 accel nativehlo all)"),
+    }
+}

@@ -1,0 +1,168 @@
+//! Dense Cholesky factorization + SPD solve for the T₀×T₀ GP system.
+//!
+//! T₀ ≤ 256 in every paper configuration, so a straightforward O(n³/6)
+//! dense factorization in f64 is both exact enough and far from any hot
+//! path (the d-sized combine dominates). Mirrors python/compile/linalg.py.
+
+/// Error from a non-SPD input (non-positive pivot).
+#[derive(Debug)]
+pub struct NotSpd {
+    pub pivot_index: usize,
+    pub pivot_value: f64,
+}
+
+impl std::fmt::Display for NotSpd {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "matrix not SPD: pivot {} = {:.3e} <= 0",
+            self.pivot_index, self.pivot_value
+        )
+    }
+}
+
+impl std::error::Error for NotSpd {}
+
+/// In-place lower Cholesky of a row-major n×n matrix.
+/// On success the lower triangle (incl. diagonal) holds L; the strict
+/// upper triangle is zeroed.
+pub fn cholesky_in_place(a: &mut [f64], n: usize) -> Result<(), NotSpd> {
+    assert_eq!(a.len(), n * n, "cholesky: bad buffer size");
+    for j in 0..n {
+        // diagonal pivot
+        let mut d = a[j * n + j];
+        for k in 0..j {
+            let l = a[j * n + k];
+            d -= l * l;
+        }
+        if d <= 0.0 || !d.is_finite() {
+            return Err(NotSpd { pivot_index: j, pivot_value: d });
+        }
+        let dj = d.sqrt();
+        a[j * n + j] = dj;
+        // column below the pivot
+        for i in (j + 1)..n {
+            let mut s = a[i * n + j];
+            for k in 0..j {
+                s -= a[i * n + k] * a[j * n + k];
+            }
+            a[i * n + j] = s / dj;
+        }
+        // zero the strict upper triangle for hygiene
+        for k in (j + 1)..n {
+            a[j * n + k] = 0.0;
+        }
+    }
+    Ok(())
+}
+
+/// Solve L y = b (forward substitution) in place.
+pub fn solve_lower_in_place(l: &[f64], n: usize, b: &mut [f64]) {
+    for i in 0..n {
+        let mut s = b[i];
+        for k in 0..i {
+            s -= l[i * n + k] * b[k];
+        }
+        b[i] = s / l[i * n + i];
+    }
+}
+
+/// Solve Lᵀ x = y (backward substitution) in place.
+pub fn solve_upper_t_in_place(l: &[f64], n: usize, y: &mut [f64]) {
+    for i in (0..n).rev() {
+        let mut s = y[i];
+        for k in (i + 1)..n {
+            s -= l[k * n + i] * y[k];
+        }
+        y[i] = s / l[i * n + i];
+    }
+}
+
+/// Solve A x = b for SPD A (row-major, copied internally). Returns x.
+pub fn chol_solve(a: &[f64], n: usize, b: &[f64]) -> Result<Vec<f64>, NotSpd> {
+    let mut l = a.to_vec();
+    cholesky_in_place(&mut l, n)?;
+    let mut x = b.to_vec();
+    solve_lower_in_place(&l, n, &mut x);
+    solve_upper_t_in_place(&l, n, &mut x);
+    Ok(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn spd(n: usize, rng: &mut Rng, jitter: f64) -> Vec<f64> {
+        let m: Vec<f64> = (0..n * n).map(|_| rng.normal()).collect();
+        let mut a = vec![0.0; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                let mut s = 0.0;
+                for k in 0..n {
+                    s += m[i * n + k] * m[j * n + k];
+                }
+                a[i * n + j] = s + if i == j { jitter } else { 0.0 };
+            }
+        }
+        a
+    }
+
+    #[test]
+    fn factor_reconstructs() {
+        let mut rng = Rng::new(0);
+        for n in [1usize, 2, 5, 16, 40] {
+            let a = spd(n, &mut rng, 0.5);
+            let mut l = a.clone();
+            cholesky_in_place(&mut l, n).unwrap();
+            // check LL^T == A and strict upper zeroed
+            for i in 0..n {
+                for j in 0..n {
+                    if j > i {
+                        assert_eq!(l[i * n + j], 0.0);
+                    }
+                    let mut s = 0.0;
+                    for k in 0..n {
+                        s += l[i * n + k] * l[j * n + k];
+                    }
+                    assert!((s - a[i * n + j]).abs() < 1e-8 * (1.0 + a[i * n + j].abs()));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn solve_matches_residual() {
+        let mut rng = Rng::new(1);
+        for n in [1usize, 3, 10, 50] {
+            let a = spd(n, &mut rng, 1.0);
+            let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let x = chol_solve(&a, n, &b).unwrap();
+            for i in 0..n {
+                let mut s = 0.0;
+                for j in 0..n {
+                    s += a[i * n + j] * x[j];
+                }
+                assert!((s - b[i]).abs() < 1e-7, "n={n} row {i}: {s} vs {}", b[i]);
+            }
+        }
+    }
+
+    #[test]
+    fn identity_solve() {
+        let a = vec![1.0, 0.0, 0.0, 1.0];
+        let x = chol_solve(&a, 2, &[3.0, -4.0]).unwrap();
+        assert_eq!(x, vec![3.0, -4.0]);
+    }
+
+    #[test]
+    fn rejects_non_spd() {
+        // negative-definite
+        let a = vec![-1.0, 0.0, 0.0, -1.0];
+        let err = chol_solve(&a, 2, &[1.0, 1.0]).unwrap_err();
+        assert_eq!(err.pivot_index, 0);
+        // rank-deficient
+        let a2 = vec![1.0, 1.0, 1.0, 1.0];
+        assert!(chol_solve(&a2, 2, &[1.0, 1.0]).is_err());
+    }
+}

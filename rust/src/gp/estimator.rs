@@ -1,0 +1,326 @@
+//! Native kernelized gradient estimator (paper Sec. 4.1, Prop. 4.1).
+//!
+//! This is the rust-side twin of the HLO `gp_estimate` artifacts: weights
+//! are computed in f64 from the subset-restricted history, the combine
+//! runs over the full parameter dimension. The coordinator can use either
+//! backend (`estimator = "native" | "hlo"` in the config); integration
+//! tests assert the two agree to float32 tolerance.
+
+use crate::gp::cholesky::chol_solve;
+use crate::gp::kernels::{self, Kernel};
+
+/// Jitter always added to the Gram diagonal (matches the +1e-6 baked into
+/// the L2 graph) so σ² = 0 synthetic runs stay numerically SPD.
+pub const DIAG_JITTER: f64 = 1e-6;
+
+/// Estimator hyperparameters.
+#[derive(Clone, Debug)]
+pub struct GpConfig {
+    pub kernel: Kernel,
+    /// `None` -> median heuristic on the current history.
+    pub lengthscale: Option<f64>,
+    /// Observation noise σ² (paper Assump. 1).
+    pub sigma2: f64,
+}
+
+impl Default for GpConfig {
+    fn default() -> Self {
+        GpConfig { kernel: Kernel::Matern52, lengthscale: None, sigma2: 0.0 }
+    }
+}
+
+/// Output of one estimation query.
+#[derive(Clone, Debug)]
+pub struct Estimate {
+    /// Posterior mean μ_t(θ) over the full dimension d.
+    pub mu: Vec<f32>,
+    /// Shared per-dimension posterior variance ‖Σ²(θ)‖ (paper Thm. 1).
+    pub var: f64,
+    /// Lengthscale actually used (after the median heuristic).
+    pub lengthscale: f64,
+}
+
+/// Posterior weights for a query — reusable across the mean and variance.
+pub struct Weights {
+    pub w: Vec<f64>,
+    pub kvec: Vec<f64>,
+    pub lengthscale: f64,
+}
+
+/// Compute posterior weights w = (K + (σ²+jitter) I)⁻¹ k(θ).
+///
+/// `hist_sub` are the subset-restricted history points, `theta_sub` the
+/// subset-restricted query. Returns `None` when the history is empty
+/// (prior: μ = 0, var = 1).
+pub fn weights(
+    cfg: &GpConfig,
+    theta_sub: &[f32],
+    hist_sub: &[&[f32]],
+) -> Option<Weights> {
+    let t = hist_sub.len();
+    if t == 0 {
+        return None;
+    }
+    let ls = cfg
+        .lengthscale
+        .unwrap_or_else(|| kernels::median_heuristic(hist_sub));
+    let kvec = kernels::kernel_vector(cfg.kernel, ls, theta_sub, hist_sub);
+    let mut kmat = kernels::kernel_matrix(cfg.kernel, ls, hist_sub);
+    let lam = cfg.sigma2 + DIAG_JITTER;
+    for i in 0..t {
+        kmat[i * t + i] += lam;
+    }
+    // K is PSD + positive jitter => SPD; failure indicates NaNs upstream.
+    let w = chol_solve(&kmat, t, &kvec).expect("GP Gram matrix not SPD");
+    Some(Weights { w, kvec, lengthscale: ls })
+}
+
+/// Full estimate: μ = Σ_τ w_τ ∇f(θ_τ) (over full d), var = 1 − kᵀw.
+///
+/// `grads` are the full-dimension gradient history rows, parallel to
+/// `hist_sub`.
+pub fn estimate(
+    cfg: &GpConfig,
+    theta_sub: &[f32],
+    hist_sub: &[&[f32]],
+    grads: &[&[f32]],
+    out_mu: &mut [f32],
+) -> Estimate {
+    debug_assert_eq!(hist_sub.len(), grads.len());
+    let Some(Weights { w, kvec, lengthscale }) = weights(cfg, theta_sub, hist_sub) else {
+        out_mu.iter_mut().for_each(|x| *x = 0.0);
+        return Estimate { mu: out_mu.to_vec(), var: 1.0, lengthscale: 1.0 };
+    };
+    combine_into(&w, grads, out_mu);
+    let var = (1.0 - kvec.iter().zip(&w).map(|(k, w)| k * w).sum::<f64>()).max(0.0);
+    Estimate { mu: out_mu.to_vec(), var, lengthscale }
+}
+
+/// Weights with |w| below this contribute < 1e-24·‖g‖ to μ and — more
+/// importantly — are *subnormal in f32*, which puts every FMA in the
+/// combine on the CPU's ~100-cycle denormal slow path (measured 40×
+/// slowdown on far-from-history queries; EXPERIMENTS.md §Perf P1).
+const W_CUTOFF: f64 = 1e-24;
+
+/// μ = wᵀG, written into `out` — the L3 per-proxy-step hot loop.
+pub fn combine_into(w: &[f64], grads: &[&[f32]], out: &mut [f32]) {
+    debug_assert_eq!(w.len(), grads.len());
+    let d = out.len();
+    out.iter_mut().for_each(|x| *x = 0.0);
+    // Process in cache-sized column chunks, accumulating all history rows
+    // per chunk (one pass over `out`, T0 passes over each grads chunk).
+    const CHUNK: usize = 8192;
+    let mut start = 0;
+    while start < d {
+        let end = (start + CHUNK).min(d);
+        let dst = &mut out[start..end];
+        for (wi, g) in w.iter().zip(grads) {
+            if wi.abs() < W_CUTOFF {
+                continue; // negligible AND subnormal-slow — skip the row
+            }
+            let src = &g[start..end];
+            let wi = *wi as f32;
+            for (o, &s) in dst.iter_mut().zip(src) {
+                *o += wi * s;
+            }
+        }
+        start = end;
+    }
+}
+
+/// GP posterior with the Gram factorization cached — fit ONCE per
+/// sequential iteration (Algo. 1 line 3), then queried at each of the
+/// N−1 proxy points. Queries cost O(T₀² + T₀·(D̃ + d)) instead of
+/// refactorizing O(T₀³) every step.
+pub struct FittedGp {
+    /// Cholesky factor of (K + (σ²+jitter) I), row-major t×t.
+    l: Vec<f64>,
+    t: usize,
+    kernel: Kernel,
+    pub lengthscale: f64,
+    /// Owned copies of the subset-restricted history rows.
+    rows: Vec<Vec<f32>>,
+}
+
+impl FittedGp {
+    /// Factorize the current history. Returns `None` on empty history.
+    ///
+    /// Pairwise distances are computed ONCE and shared between the median
+    /// heuristic and the Gram matrix (they were previously computed twice
+    /// — 2× of the T₀²·D̃ fit cost; §Perf P3).
+    pub fn fit(cfg: &GpConfig, hist_sub: &[&[f32]]) -> Option<FittedGp> {
+        let t = hist_sub.len();
+        if t == 0 {
+            return None;
+        }
+        let r2 = kernels::sqdist_matrix(hist_sub);
+        let ls = cfg
+            .lengthscale
+            .unwrap_or_else(|| kernels::median_from_sqdist(&r2, t));
+        let mut l: Vec<f64> =
+            r2.iter().map(|&v| cfg.kernel.from_sqdist(v, ls)).collect();
+        let lam = cfg.sigma2 + DIAG_JITTER;
+        for i in 0..t {
+            l[i * t + i] += lam;
+        }
+        crate::gp::cholesky::cholesky_in_place(&mut l, t)
+            .expect("GP Gram matrix not SPD");
+        Some(FittedGp {
+            l,
+            t,
+            kernel: cfg.kernel,
+            lengthscale: ls,
+            rows: hist_sub.iter().map(|r| r.to_vec()).collect(),
+        })
+    }
+
+    pub fn len(&self) -> usize {
+        self.t
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.t == 0
+    }
+
+    /// μ_t(θ) into `out_mu`; returns the posterior variance ‖Σ²(θ)‖.
+    pub fn query(&self, theta_sub: &[f32], grads: &[&[f32]], out_mu: &mut [f32]) -> f64 {
+        debug_assert_eq!(grads.len(), self.t);
+        let rows: Vec<&[f32]> = self.rows.iter().map(|r| r.as_slice()).collect();
+        let kvec = kernels::kernel_vector(self.kernel, self.lengthscale, theta_sub, &rows);
+        let mut w = kvec.clone();
+        crate::gp::cholesky::solve_lower_in_place(&self.l, self.t, &mut w);
+        crate::gp::cholesky::solve_upper_t_in_place(&self.l, self.t, &mut w);
+        combine_into(&w, grads, out_mu);
+        (1.0 - kvec.iter().zip(&w).map(|(k, w)| k * w).sum::<f64>()).max(0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn mk(t: usize, d: usize, seed: u64) -> (Vec<Vec<f32>>, Vec<Vec<f32>>) {
+        let mut rng = Rng::new(seed);
+        let hist: Vec<Vec<f32>> = (0..t).map(|_| rng.normal_vec(d)).collect();
+        let grads: Vec<Vec<f32>> = (0..t).map(|_| rng.normal_vec(d)).collect();
+        (hist, grads)
+    }
+
+    fn refs(v: &[Vec<f32>]) -> Vec<&[f32]> {
+        v.iter().map(|x| x.as_slice()).collect()
+    }
+
+    #[test]
+    fn empty_history_returns_prior() {
+        let cfg = GpConfig::default();
+        let mut mu = vec![1.0f32; 8];
+        let est = estimate(&cfg, &[0.0; 8], &[], &[], &mut mu);
+        assert!(est.mu.iter().all(|&x| x == 0.0));
+        assert_eq!(est.var, 1.0);
+    }
+
+    #[test]
+    fn interpolates_at_history_points_with_zero_noise() {
+        let (hist, grads) = mk(5, 16, 0);
+        let cfg = GpConfig { kernel: Kernel::Rbf, lengthscale: Some(3.0), sigma2: 0.0 };
+        for i in 0..5 {
+            let mut mu = vec![0.0f32; 16];
+            let est = estimate(&cfg, &hist[i], &refs(&hist), &refs(&grads), &mut mu);
+            for (a, b) in est.mu.iter().zip(&grads[i]) {
+                assert!((a - b).abs() < 2e-2, "{a} vs {b}");
+            }
+            assert!(est.var < 1e-2, "var={}", est.var);
+        }
+    }
+
+    #[test]
+    fn far_query_reverts_to_prior() {
+        let (hist, grads) = mk(4, 8, 1);
+        let cfg = GpConfig { kernel: Kernel::Rbf, lengthscale: Some(1.0), sigma2: 0.01 };
+        let far = vec![100.0f32; 8];
+        let mut mu = vec![0.0f32; 8];
+        let est = estimate(&cfg, &far, &refs(&hist), &refs(&grads), &mut mu);
+        assert!(est.mu.iter().all(|&x| x.abs() < 1e-3));
+        assert!(est.var > 0.99);
+    }
+
+    #[test]
+    fn variance_in_unit_interval() {
+        let (hist, grads) = mk(6, 12, 2);
+        for kernel in Kernel::ALL {
+            let cfg = GpConfig { kernel, lengthscale: None, sigma2: 0.1 };
+            let mut rng = Rng::new(7);
+            let q = rng.normal_vec(12);
+            let mut mu = vec![0.0f32; 12];
+            let est = estimate(&cfg, &q, &refs(&hist), &refs(&grads), &mut mu);
+            assert!((0.0..=1.0 + 1e-9).contains(&est.var), "{kernel:?} var={}", est.var);
+        }
+    }
+
+    #[test]
+    fn variance_nonincreasing_in_history() {
+        // Lemma A.4 empirically: adding points never increases variance.
+        let (hist, _) = mk(8, 10, 3);
+        let mut rng = Rng::new(11);
+        let q = rng.normal_vec(10);
+        let cfg = GpConfig { kernel: Kernel::Matern52, lengthscale: Some(2.0), sigma2: 0.05 };
+        let mut last = f64::INFINITY;
+        for n in 1..=8 {
+            let hs: Vec<&[f32]> = hist[..n].iter().map(|x| x.as_slice()).collect();
+            let w = weights(&cfg, &q, &hs).unwrap();
+            let var = 1.0 - w.kvec.iter().zip(&w.w).map(|(k, w)| k * w).sum::<f64>();
+            assert!(var <= last + 1e-9, "n={n}: {var} > {last}");
+            last = var;
+        }
+    }
+
+    #[test]
+    fn combine_matches_naive() {
+        let (_, grads) = mk(3, 1000, 4);
+        let w = [0.5f64, -1.25, 2.0];
+        let mut out = vec![0.0f32; 1000];
+        combine_into(&w, &refs(&grads), &mut out);
+        for j in (0..1000).step_by(97) {
+            let want: f64 = (0..3).map(|i| w[i] * grads[i][j] as f64).sum();
+            assert!((out[j] as f64 - want).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn fitted_gp_matches_one_shot_estimate() {
+        let (hist, grads) = mk(6, 24, 9);
+        let cfg = GpConfig { kernel: Kernel::Matern52, lengthscale: None, sigma2: 0.1 };
+        let hrefs = refs(&hist);
+        let grefs = refs(&grads);
+        let fitted = FittedGp::fit(&cfg, &hrefs).unwrap();
+        let mut rng = Rng::new(3);
+        for _ in 0..4 {
+            let q = rng.normal_vec(24);
+            let mut mu_a = vec![0.0f32; 24];
+            let var_a = fitted.query(&q, &grefs, &mut mu_a);
+            let mut mu_b = vec![0.0f32; 24];
+            let est = estimate(&cfg, &q, &hrefs, &grefs, &mut mu_b);
+            assert_eq!(mu_a, mu_b);
+            assert!((var_a - est.var).abs() < 1e-12);
+            assert!((fitted.lengthscale - est.lengthscale).abs() < 1e-12);
+        }
+        assert!(FittedGp::fit(&cfg, &[]).is_none());
+    }
+
+    #[test]
+    fn subset_weights_match_full_when_subset_is_full() {
+        // weights depend only on subset coords; with full subset they must
+        // equal the dense computation by construction.
+        let (hist, grads) = mk(4, 20, 5);
+        let cfg = GpConfig { kernel: Kernel::Matern32, lengthscale: Some(2.5), sigma2: 0.2 };
+        let mut rng = Rng::new(8);
+        let q = rng.normal_vec(20);
+        let mut mu = vec![0.0f32; 20];
+        let a = estimate(&cfg, &q, &refs(&hist), &refs(&grads), &mut mu);
+        let mut mu2 = vec![0.0f32; 20];
+        let b = estimate(&cfg, &q, &refs(&hist), &refs(&grads), &mut mu2);
+        assert_eq!(a.mu, b.mu);
+        assert_eq!(a.var, b.var);
+    }
+}

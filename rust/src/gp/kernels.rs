@@ -1,0 +1,257 @@
+//! Scalar kernel functions for the separable-kernel GP (paper Assump. 2:
+//! K(·,·) = k(·,·)·I with |k(θ,θ)| ≤ κ; we use unit-amplitude kernels so
+//! κ = 1). Mirrors python/compile/kernels/ref.py exactly — the two are
+//! cross-checked through the HLO artifacts in integration tests.
+
+/// Numerical floor before sqrt (keeps values finite at r = 0).
+const EPS: f64 = 1e-12;
+
+/// Kernel family. The paper's experiments use Matérn (B.2.1–B.2.3); RBF
+/// appears in Cor. 1. Matérn-1/2 and 3/2 are included for the kernel
+/// ablation (`optex fig kernels`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kernel {
+    Rbf,
+    Matern12,
+    Matern32,
+    Matern52,
+}
+
+impl Kernel {
+    /// Parse from a config string.
+    pub fn parse(s: &str) -> Option<Kernel> {
+        match s {
+            "rbf" => Some(Kernel::Rbf),
+            "matern12" => Some(Kernel::Matern12),
+            "matern32" => Some(Kernel::Matern32),
+            "matern52" => Some(Kernel::Matern52),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Kernel::Rbf => "rbf",
+            Kernel::Matern12 => "matern12",
+            Kernel::Matern32 => "matern32",
+            Kernel::Matern52 => "matern52",
+        }
+    }
+
+    /// All supported kinds (for ablations/tests).
+    pub const ALL: [Kernel; 4] =
+        [Kernel::Rbf, Kernel::Matern12, Kernel::Matern32, Kernel::Matern52];
+
+    /// k(r²) for squared distance `r2` and lengthscale `ls` (> 0).
+    #[inline]
+    pub fn from_sqdist(&self, r2: f64, ls: f64) -> f64 {
+        let r2 = r2.max(0.0);
+        match self {
+            Kernel::Rbf => (-0.5 * r2 / (ls * ls)).exp(),
+            Kernel::Matern12 => {
+                let r = (r2 + EPS).sqrt() / ls;
+                (-r).exp()
+            }
+            Kernel::Matern32 => {
+                let s = 3f64.sqrt() * (r2 + EPS).sqrt() / ls;
+                (1.0 + s) * (-s).exp()
+            }
+            Kernel::Matern52 => {
+                let s = 5f64.sqrt() * (r2 + EPS).sqrt() / ls;
+                (1.0 + s + s * s / 3.0) * (-s).exp()
+            }
+        }
+    }
+}
+
+/// Squared euclidean distance between two f32 slices, accumulated in f64.
+/// Four independent accumulators break the FP dependency chain so the
+/// loop vectorizes/pipelines (~3× over the naive form at D̃ = 2048;
+/// EXPERIMENTS.md §Perf P2).
+#[inline]
+pub fn sqdist(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    // 8-lane f32 partial sums (vectorizes to AVX), flushed to f64 every
+    // block of 4096 elements to bound accumulation error to ~1e-4
+    // relative — far below the GP jitter.
+    const LANES: usize = 8;
+    const BLOCK: usize = 4096;
+    let mut total = 0.0f64;
+    let mut start = 0;
+    while start < a.len() {
+        let end = (start + BLOCK).min(a.len());
+        let (ab, bb) = (&a[start..end], &b[start..end]);
+        let mut acc = [0.0f32; LANES];
+        let mut it_a = ab.chunks_exact(LANES);
+        let mut it_b = bb.chunks_exact(LANES);
+        for (ca, cb) in (&mut it_a).zip(&mut it_b) {
+            for k in 0..LANES {
+                let d = ca[k] - cb[k];
+                acc[k] += d * d;
+            }
+        }
+        let mut block_sum: f32 = acc.iter().sum();
+        for (&x, &y) in it_a.remainder().iter().zip(it_b.remainder()) {
+            let d = x - y;
+            block_sum += d * d;
+        }
+        total += block_sum as f64;
+        start = end;
+    }
+    total
+}
+
+/// All pairwise squared distances (row-major t×t, zero diagonal).
+pub fn sqdist_matrix(rows: &[&[f32]]) -> Vec<f64> {
+    let t = rows.len();
+    let mut r2 = vec![0.0; t * t];
+    for i in 0..t {
+        for j in (i + 1)..t {
+            let v = sqdist(rows[i], rows[j]);
+            r2[i * t + j] = v;
+            r2[j * t + i] = v;
+        }
+    }
+    r2
+}
+
+/// Median heuristic from a precomputed distance matrix (see
+/// [`median_heuristic`]; this variant lets callers reuse the pairwise
+/// distances they already need for the Gram matrix — §Perf P3).
+pub fn median_from_sqdist(r2: &[f64], t: usize) -> f64 {
+    if t < 2 {
+        return 1.0;
+    }
+    let mut dists = Vec::with_capacity(t * (t - 1) / 2);
+    for i in 0..t {
+        for j in (i + 1)..t {
+            dists.push(r2[i * t + j].sqrt());
+        }
+    }
+    dists.sort_by(|a, b| a.total_cmp(b));
+    let m = dists[dists.len() / 2];
+    if m > 0.0 {
+        m
+    } else {
+        1.0
+    }
+}
+
+/// Kernel vector k_t(θ): values of k against every history row.
+pub fn kernel_vector(kernel: Kernel, ls: f64, theta: &[f32], rows: &[&[f32]]) -> Vec<f64> {
+    rows.iter().map(|r| kernel.from_sqdist(sqdist(theta, r), ls)).collect()
+}
+
+/// Gram matrix K_t over history rows (dense, row-major t×t).
+pub fn kernel_matrix(kernel: Kernel, ls: f64, rows: &[&[f32]]) -> Vec<f64> {
+    let t = rows.len();
+    let mut k = vec![0.0; t * t];
+    for i in 0..t {
+        k[i * t + i] = kernel.from_sqdist(0.0, ls);
+        for j in (i + 1)..t {
+            let v = kernel.from_sqdist(sqdist(rows[i], rows[j]), ls);
+            k[i * t + j] = v;
+            k[j * t + i] = v;
+        }
+    }
+    k
+}
+
+/// Median pairwise distance of the history rows — the default lengthscale
+/// (median heuristic). Returns 1.0 when fewer than 2 rows or degenerate.
+pub fn median_heuristic(rows: &[&[f32]]) -> f64 {
+    let t = rows.len();
+    if t < 2 {
+        return 1.0;
+    }
+    let mut dists = Vec::with_capacity(t * (t - 1) / 2);
+    for i in 0..t {
+        for j in (i + 1)..t {
+            dists.push(sqdist(rows[i], rows[j]).sqrt());
+        }
+    }
+    dists.sort_by(|a, b| a.total_cmp(b));
+    let m = dists[dists.len() / 2];
+    if m > 0.0 {
+        m
+    } else {
+        1.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unit_at_zero_and_decay() {
+        for k in Kernel::ALL {
+            let v0 = k.from_sqdist(0.0, 1.0);
+            assert!((v0 - 1.0).abs() < 2e-3, "{k:?} k(0)={v0}");
+            let mut last = v0;
+            for r2 in [0.5, 1.0, 4.0, 25.0] {
+                let v = k.from_sqdist(r2, 1.0);
+                assert!(v < last, "{k:?} must decay");
+                assert!(v > 0.0);
+                last = v;
+            }
+        }
+    }
+
+    #[test]
+    fn lengthscale_monotone() {
+        for k in Kernel::ALL {
+            assert!(k.from_sqdist(4.0, 5.0) > k.from_sqdist(4.0, 0.5), "{k:?}");
+        }
+    }
+
+    #[test]
+    fn matches_python_ref_values() {
+        // Spot values mirrored from python ref.py (r2 = 4, ls = 2).
+        let r2 = 4.0;
+        let ls = 2.0;
+        assert!((Kernel::Rbf.from_sqdist(r2, ls) - (-0.5f64).exp()).abs() < 1e-9);
+        assert!((Kernel::Matern12.from_sqdist(r2, ls) - (-1.0f64).exp()).abs() < 1e-6);
+        let s3 = 3f64.sqrt();
+        assert!(
+            (Kernel::Matern32.from_sqdist(r2, ls) - (1.0 + s3) * (-s3).exp()).abs() < 1e-6
+        );
+        let s5 = 5f64.sqrt();
+        assert!(
+            (Kernel::Matern52.from_sqdist(r2, ls)
+                - (1.0 + s5 + s5 * s5 / 3.0) * (-s5).exp())
+            .abs()
+                < 1e-6
+        );
+    }
+
+    #[test]
+    fn gram_matrix_symmetric_unit_diagonal() {
+        let rows_data = [vec![0.0f32, 1.0], vec![2.0, -1.0], vec![0.5, 0.5]];
+        let rows: Vec<&[f32]> = rows_data.iter().map(|v| v.as_slice()).collect();
+        let k = kernel_matrix(Kernel::Matern52, 1.5, &rows);
+        for i in 0..3 {
+            assert!((k[i * 3 + i] - 1.0).abs() < 2e-3);
+            for j in 0..3 {
+                assert_eq!(k[i * 3 + j], k[j * 3 + i]);
+            }
+        }
+    }
+
+    #[test]
+    fn median_heuristic_degenerate() {
+        let a = vec![1.0f32, 2.0];
+        let rows: Vec<&[f32]> = vec![&a];
+        assert_eq!(median_heuristic(&rows), 1.0);
+        let rows2: Vec<&[f32]> = vec![&a, &a];
+        assert_eq!(median_heuristic(&rows2), 1.0); // zero distance -> fallback
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for k in Kernel::ALL {
+            assert_eq!(Kernel::parse(k.name()), Some(k));
+        }
+        assert_eq!(Kernel::parse("cubic"), None);
+    }
+}

@@ -1,0 +1,15 @@
+//! Kernelized gradient estimation (paper Sec. 4.1) — the native substrate.
+//!
+//! * [`kernels`] — separable scalar kernels (RBF / Matérn family),
+//! * [`cholesky`] — dense SPD solve for the T₀×T₀ system,
+//! * [`subset`] — fixed random dimension subsetting (Appx B.2.3),
+//! * [`estimator`] — posterior mean/variance over the gradient history.
+
+pub mod cholesky;
+pub mod estimator;
+pub mod kernels;
+pub mod subset;
+
+pub use estimator::{Estimate, GpConfig};
+pub use kernels::Kernel;
+pub use subset::DimSubset;

@@ -1,0 +1,112 @@
+//! Random dimension subsetting for kernel evaluation (paper Appx B.2.3).
+//!
+//! For high-dimensional workloads the kernel value k(θ, θ') is computed on
+//! a fixed random subset D̃ of the d coordinates (10⁴ for image models,
+//! 10⁵ for text in the paper); the posterior *combine* still runs over all
+//! d dims. The subset is sampled once per run and shared by the history,
+//! the native estimator and the HLO estimator so all see identical inputs.
+
+use crate::util::Rng;
+
+/// A fixed, sorted subset of dimension indices.
+#[derive(Clone, Debug)]
+pub struct DimSubset {
+    indices: Vec<usize>,
+    full_dim: usize,
+}
+
+impl DimSubset {
+    /// Sample `k` distinct dims out of `full_dim` (k clamped to full_dim).
+    pub fn sample(full_dim: usize, k: usize, rng: &mut Rng) -> DimSubset {
+        let k = k.min(full_dim);
+        let mut indices = rng.sample_indices(full_dim, k);
+        // sorted order gives cache-friendly gathers
+        indices.sort_unstable();
+        DimSubset { indices, full_dim }
+    }
+
+    /// The identity subset (all dims — used when d is small).
+    pub fn full(full_dim: usize) -> DimSubset {
+        DimSubset { indices: (0..full_dim).collect(), full_dim }
+    }
+
+    pub fn len(&self) -> usize {
+        self.indices.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.indices.is_empty()
+    }
+
+    pub fn full_dim(&self) -> usize {
+        self.full_dim
+    }
+
+    pub fn indices(&self) -> &[usize] {
+        &self.indices
+    }
+
+    /// Gather θ restricted to the subset.
+    pub fn gather(&self, theta: &[f32]) -> Vec<f32> {
+        debug_assert_eq!(theta.len(), self.full_dim);
+        self.indices.iter().map(|&i| theta[i]).collect()
+    }
+
+    /// Gather into a preallocated buffer (hot-path variant, no alloc).
+    pub fn gather_into(&self, theta: &[f32], out: &mut [f32]) {
+        debug_assert_eq!(theta.len(), self.full_dim);
+        debug_assert_eq!(out.len(), self.indices.len());
+        for (o, &i) in out.iter_mut().zip(&self.indices) {
+            *o = theta[i];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sample_is_sorted_distinct_bounded() {
+        let mut rng = Rng::new(4);
+        let s = DimSubset::sample(1000, 64, &mut rng);
+        assert_eq!(s.len(), 64);
+        assert!(s.indices().windows(2).all(|w| w[0] < w[1]));
+        assert!(s.indices().iter().all(|&i| i < 1000));
+    }
+
+    #[test]
+    fn oversized_k_clamps() {
+        let mut rng = Rng::new(1);
+        let s = DimSubset::sample(10, 50, &mut rng);
+        assert_eq!(s.len(), 10);
+        assert_eq!(s.indices(), (0..10).collect::<Vec<_>>().as_slice());
+    }
+
+    #[test]
+    fn gather_selects_right_values() {
+        let mut rng = Rng::new(2);
+        let s = DimSubset::sample(20, 5, &mut rng);
+        let theta: Vec<f32> = (0..20).map(|i| i as f32 * 10.0).collect();
+        let g = s.gather(&theta);
+        for (v, &i) in g.iter().zip(s.indices()) {
+            assert_eq!(*v, i as f32 * 10.0);
+        }
+        let mut buf = vec![0.0; 5];
+        s.gather_into(&theta, &mut buf);
+        assert_eq!(buf, g);
+    }
+
+    #[test]
+    fn full_subset_is_identity() {
+        let s = DimSubset::full(4);
+        assert_eq!(s.gather(&[1.0, 2.0, 3.0, 4.0]), vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = DimSubset::sample(100, 10, &mut Rng::new(9));
+        let b = DimSubset::sample(100, 10, &mut Rng::new(9));
+        assert_eq!(a.indices(), b.indices());
+    }
+}

@@ -1,0 +1,33 @@
+//! # OptEx — First-Order Optimization with Approximately Parallelized Iterations
+//!
+//! Production-quality reproduction of *"OptEx: Expediting First-Order
+//! Optimization with Approximately Parallelized Iterations"* (Shu et al.,
+//! NeurIPS 2024) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **Layer 1** (`python/compile/kernels/`) — Pallas kernels for the GP
+//!   posterior hot-spot, AOT-lowered,
+//! * **Layer 2** (`python/compile/model.py`) — JAX workload graphs (loss +
+//!   gradient), lowered once to HLO text artifacts,
+//! * **Layer 3** (this crate) — the OptEx coordinator: kernelized gradient
+//!   estimation, multi-step proxy updates, N-way parallel true-gradient
+//!   iterations, baselines, runtime, benchmarks and figure harnesses.
+//!
+//! Python never runs on the request path: the `optex` binary loads the
+//! AOT artifacts through PJRT (`runtime`) and owns the whole optimization
+//! loop. See `DESIGN.md` for the system inventory and `EXPERIMENTS.md`
+//! for paper-vs-measured results.
+
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod figures;
+pub mod gp;
+pub mod opt;
+pub mod datasets;
+pub mod nn;
+pub mod rl;
+pub mod runtime;
+pub mod workloads;
+pub mod testutil;
+pub mod util;

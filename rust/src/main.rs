@@ -1,0 +1,230 @@
+//! `optex` — launcher for the OptEx reproduction.
+//!
+//! Subcommands:
+//!   run        one optimization run from a TOML config (+ --set overrides)
+//!   fig <id>   regenerate a paper figure (2, 3, 4a, 4b, 6, 7–10, ...)
+//!   rl         DQN training on a classic-control env
+//!   artifacts  inspect the AOT artifact manifest
+//!   help       this text
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use optex::cli::Args;
+use optex::config::RunConfig;
+
+use optex::figures::{self, FigOpts};
+use optex::rl::dqn::{self, RlConfig};
+use optex::runtime::Manifest;
+
+const HELP: &str = "\
+optex — OptEx: first-order optimization with approximately parallelized iterations
+
+USAGE:
+  optex run  [--config FILE] [--workload W] [--method M] [--steps T]
+             [--seed S] [--checkpoint FILE] [--resume FILE]
+             [--set key=value ...]
+  optex fig  <2|3|4a|4b|6|6a..6d|7|8|9|10|kernels|estbound|nativehlo|all>
+             [--seeds K] [--steps T] [--quick] [--out DIR] [--artifacts DIR]
+  optex rl   --env <cartpole|mountaincar|acrobot> [--episodes E]
+             [--method M] [--set key=value ...]
+  optex artifacts [--artifacts DIR]
+  optex validate  [--artifacts DIR]   # health check: artifacts vs native
+
+Methods: optex | vanilla | target | dataparallel.
+Config keys: see configs/*.toml and `RunConfig` docs.
+";
+
+fn main() -> ExitCode {
+    match real_main() {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn real_main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1))?;
+    if args.flag("help") || args.subcommand.is_none() {
+        print!("{HELP}");
+        return Ok(());
+    }
+    match args.subcommand.as_deref().unwrap() {
+        "run" => cmd_run(&args),
+        "fig" => cmd_fig(&args),
+        "rl" => cmd_rl(&args),
+        "artifacts" => cmd_artifacts(&args),
+        "validate" => cmd_validate(&args),
+        "help" => {
+            print!("{HELP}");
+            Ok(())
+        }
+        other => anyhow::bail!("unknown subcommand {other:?}; see `optex help`"),
+    }
+}
+
+fn load_config(args: &Args) -> anyhow::Result<RunConfig> {
+    let mut cfg = match args.opt("config") {
+        Some(path) => RunConfig::from_toml(&std::fs::read_to_string(path)?)?,
+        None => RunConfig::default(),
+    };
+    if let Some(w) = args.opt("workload") {
+        cfg.apply_override(&format!("workload={w}"))?;
+    }
+    if let Some(m) = args.opt("method") {
+        cfg.apply_override(&format!("method={m}"))?;
+    }
+    if let Some(t) = args.opt_usize("steps")? {
+        cfg.apply_override(&format!("steps={t}"))?;
+    }
+    if let Some(s) = args.opt_usize("seed")? {
+        cfg.apply_override(&format!("seed={s}"))?;
+    }
+    if let Some(o) = args.opt("optimizer") {
+        cfg.apply_override(&format!("optimizer.name={o}"))?;
+    }
+    if let Some(lr) = args.opt_f64("lr")? {
+        cfg.apply_override(&format!("optimizer.lr={lr}"))?;
+    }
+    if let Some(n) = args.opt_usize("n")? {
+        cfg.apply_override(&format!("optex.parallelism={n}"))?;
+    }
+    if let Some(t0) = args.opt_usize("t0")? {
+        cfg.apply_override(&format!("optex.t0={t0}"))?;
+    }
+    if let Some(d) = args.opt_usize("dim")? {
+        cfg.apply_override(&format!("synth_dim={d}"))?;
+    }
+    if let Some(b) = args.opt("backend") {
+        cfg.apply_override(&format!("optex.backend={b}"))?;
+    }
+    if let Some(a) = args.opt("artifacts") {
+        cfg.artifacts_dir = PathBuf::from(a);
+    }
+    if let Some(o) = args.opt("out") {
+        cfg.out_dir = PathBuf::from(o);
+    }
+    for kv in &args.sets {
+        cfg.apply_override(kv)?;
+    }
+    Ok(cfg)
+}
+
+fn cmd_run(args: &Args) -> anyhow::Result<()> {
+    args.check_known_flags(&["help", "hlo"])?;
+    let mut cfg = load_config(args)?;
+    if args.flag("hlo") {
+        cfg.hlo_workload = true;
+    }
+    println!("config: {:?}", cfg.describe());
+    let workload = optex::workloads::factory::build(&cfg)?;
+    let mut drv = optex::coordinator::Driver::new(cfg.clone(), workload)?;
+    let start = match args.opt("resume") {
+        Some(path) => {
+            let it = drv.resume_from(std::path::Path::new(path))?;
+            println!("resumed from {path} at iteration {it}");
+            it as usize
+        }
+        None => 0,
+    };
+    for t in start + 1..=start + cfg.steps {
+        drv.iteration(t)?;
+    }
+    if let Some(path) = args.opt("checkpoint") {
+        drv.save_checkpoint(std::path::Path::new(path), (start + cfg.steps) as u64)?;
+        println!("checkpointed to {path}");
+    }
+    let record = drv.record().clone();
+    println!("{}", record.summary());
+    let path = cfg.out_dir.join(format!(
+        "run_{}_{}_{}.csv",
+        cfg.workload,
+        cfg.method.name(),
+        cfg.seed
+    ));
+    record.to_csv(&path)?;
+    println!("wrote {}", path.display());
+    Ok(())
+}
+
+fn cmd_fig(args: &Args) -> anyhow::Result<()> {
+    args.check_known_flags(&["help", "quick"])?;
+    let id = args
+        .opt("fig")
+        .map(str::to_string)
+        .or_else(|| args.positionals.first().cloned())
+        .ok_or_else(|| anyhow::anyhow!("fig: which figure? e.g. `optex fig 2`"))?;
+    let mut opts = FigOpts::default();
+    if let Some(s) = args.opt_usize("seeds")? {
+        opts.seeds = s.max(1);
+    }
+    if let Some(t) = args.opt_usize("steps")? {
+        opts.steps = Some(t);
+    }
+    opts.quick = args.flag("quick");
+    if let Some(o) = args.opt("out") {
+        opts.out_dir = PathBuf::from(o);
+    }
+    if let Some(a) = args.opt("artifacts") {
+        opts.artifacts_dir = PathBuf::from(a);
+    }
+    figures::run(&id, &opts)
+}
+
+fn cmd_rl(args: &Args) -> anyhow::Result<()> {
+    args.check_known_flags(&["help", "hlo"])?;
+    let env = args.opt("env").unwrap_or("cartpole").to_string();
+    let mut cfg = load_config(args)?;
+    cfg.workload = env.clone();
+    if args.flag("hlo") {
+        cfg.hlo_workload = true;
+    }
+    let mut rl = RlConfig::paper(&env);
+    if let Some(e) = args.opt_usize("episodes")? {
+        rl.episodes = e;
+    }
+    let record = dqn::train(&cfg, &rl)?;
+    println!("{}", record.summary());
+    let last = record.rows.last().map(|r| r.aux.unwrap_or(f64::NAN));
+    println!("final cumulative avg reward: {last:?}");
+    let path = cfg
+        .out_dir
+        .join(format!("rl_{env}_{}_{}.csv", cfg.method.name(), cfg.seed));
+    record.to_csv(&path)?;
+    println!("wrote {}", path.display());
+    Ok(())
+}
+
+/// Deployment health check: every gp_estimate artifact loads, executes,
+/// and agrees with the native estimator; one workload artifact per family
+/// round-trips. Exit code reflects the outcome.
+fn cmd_validate(args: &Args) -> anyhow::Result<()> {
+    args.check_known_flags(&["help"])?;
+    let dir = PathBuf::from(args.opt("artifacts").unwrap_or("artifacts"));
+    let mut opts = FigOpts::default();
+    opts.artifacts_dir = dir.clone();
+    opts.out_dir = std::env::temp_dir().join("optex_validate");
+    println!("validating artifacts at {}", dir.display());
+    figures::fig_ext::run_native_vs_hlo(&opts)?;
+    println!("validate: OK");
+    Ok(())
+}
+
+fn cmd_artifacts(args: &Args) -> anyhow::Result<()> {
+    args.check_known_flags(&["help"])?;
+    let dir = PathBuf::from(args.opt("artifacts").unwrap_or("artifacts"));
+    let m = Manifest::load(&dir)?;
+    println!("profile: {} ({} artifacts) at {}", m.profile, m.len(), dir.display());
+    for name in m.names() {
+        let a = m.get(name)?;
+        let d = a.dim().unwrap_or(0);
+        println!(
+            "  {name:28} family={:12} d={d:<9} inputs={}",
+            a.family().unwrap_or("?"),
+            a.inputs.len()
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,118 @@
+//! Minimal dense GEMM kernels for the native NN substrate.
+//!
+//! Row-major everywhere. These run at most a few times per RL env step on
+//! hidden sizes ≤ 128, so clarity beats blocking; the accumulate variants
+//! exist so backward passes write straight into the flat gradient buffer.
+
+/// c = a @ b.  a: (m×k), b: (k×n), c: (m×n).
+pub fn matmul(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    c.iter_mut().for_each(|x| *x = 0.0);
+    for i in 0..m {
+        for l in 0..k {
+            let av = a[i * k + l];
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[l * n..(l + 1) * n];
+            let crow = &mut c[i * n..(i + 1) * n];
+            for (cv, &bv) in crow.iter_mut().zip(brow) {
+                *cv += av * bv;
+            }
+        }
+    }
+}
+
+/// c += aᵀ @ b.  a: (m×k), b: (m×n), c: (k×n). (Weight-gradient shape.)
+pub fn matmul_at_b_acc(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), m * n);
+    debug_assert_eq!(c.len(), k * n);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let brow = &b[i * n..(i + 1) * n];
+        for (l, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let crow = &mut c[l * n..(l + 1) * n];
+            for (cv, &bv) in crow.iter_mut().zip(brow) {
+                *cv += av * bv;
+            }
+        }
+    }
+}
+
+/// c = a @ bᵀ.  a: (m×n), b: (k×n), c: (m×k). (Input-gradient shape.)
+pub fn matmul_a_bt(a: &[f32], b: &[f32], c: &mut [f32], m: usize, n: usize, k: usize) {
+    debug_assert_eq!(a.len(), m * n);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * k);
+    for i in 0..m {
+        let arow = &a[i * n..(i + 1) * n];
+        for l in 0..k {
+            let brow = &b[l * n..(l + 1) * n];
+            let mut s = 0.0f32;
+            for (&av, &bv) in arow.iter().zip(brow) {
+                s += av * bv;
+            }
+            c[i * k + l] = s;
+        }
+    }
+}
+
+/// out += column-sums of a (m×n): bias gradient.
+pub fn col_sum_acc(a: &[f32], out: &mut [f32], m: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * n);
+    debug_assert_eq!(out.len(), n);
+    for i in 0..m {
+        for (o, &v) in out.iter_mut().zip(&a[i * n..(i + 1) * n]) {
+            *o += v;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_2x3_3x2() {
+        let a = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0]; // 2x3
+        let b = [7.0, 8.0, 9.0, 10.0, 11.0, 12.0]; // 3x2
+        let mut c = [0.0; 4];
+        matmul(&a, &b, &mut c, 2, 3, 2);
+        assert_eq!(c, [58.0, 64.0, 139.0, 154.0]);
+    }
+
+    #[test]
+    fn at_b_matches_manual() {
+        // a: 2x2, b: 2x3, c = a^T b
+        let a = [1.0, 2.0, 3.0, 4.0];
+        let b = [5.0, 6.0, 7.0, 8.0, 9.0, 10.0];
+        let mut c = vec![1.0f32; 6]; // accumulate onto ones
+        matmul_at_b_acc(&a, &b, &mut c, 2, 2, 3);
+        // a^T = [[1,3],[2,4]]; a^T b = [[29,33,37],[42,48,54]] (+1)
+        assert_eq!(c, vec![30.0, 34.0, 38.0, 43.0, 49.0, 55.0]);
+    }
+
+    #[test]
+    fn a_bt_matches_manual() {
+        // a: 1x3, b: 2x3 -> c: 1x2
+        let a = [1.0, 2.0, 3.0];
+        let b = [4.0, 5.0, 6.0, 7.0, 8.0, 9.0];
+        let mut c = [0.0; 2];
+        matmul_a_bt(&a, &b, &mut c, 1, 3, 2);
+        assert_eq!(c, [32.0, 50.0]);
+    }
+
+    #[test]
+    fn col_sums() {
+        let a = [1.0, 2.0, 3.0, 4.0];
+        let mut out = [10.0, 20.0];
+        col_sum_acc(&a, &mut out, 2, 2);
+        assert_eq!(out, [14.0, 26.0]);
+    }
+}

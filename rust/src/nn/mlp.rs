@@ -1,0 +1,232 @@
+//! Two-hidden-layer relu MLP with manual backprop — the native q-network
+//! (paper Appx B.2.2: "dual fully connected layers, with 64 or 128
+//! neurons").
+//!
+//! Flat parameter layout (identical to `model.QNetConfig.shapes`):
+//!   W1 (in×h) | b1 (h) | W2 (h×h) | b2 (h) | W3 (h×out) | b3 (out)
+
+use crate::nn::linalg::{col_sum_acc, matmul, matmul_a_bt, matmul_at_b_acc};
+use crate::util::Rng;
+
+/// Architecture descriptor.
+#[derive(Clone, Copy, Debug)]
+pub struct Mlp {
+    pub in_dim: usize,
+    pub hidden: usize,
+    pub out_dim: usize,
+}
+
+/// Forward-pass activations kept for backprop.
+#[derive(Debug)]
+pub struct Cache {
+    batch: usize,
+    x: Vec<f32>,
+    h1: Vec<f32>,
+    h2: Vec<f32>,
+    pub out: Vec<f32>,
+}
+
+impl Mlp {
+    pub fn new(in_dim: usize, hidden: usize, out_dim: usize) -> Mlp {
+        Mlp { in_dim, hidden, out_dim }
+    }
+
+    /// Flat parameter count d.
+    pub fn dim(&self) -> usize {
+        let (i, h, o) = (self.in_dim, self.hidden, self.out_dim);
+        i * h + h + h * h + h + h * o + o
+    }
+
+    fn offsets(&self) -> [usize; 6] {
+        let (i, h, o) = (self.in_dim, self.hidden, self.out_dim);
+        let w1 = 0;
+        let b1 = w1 + i * h;
+        let w2 = b1 + h;
+        let b2 = w2 + h * h;
+        let w3 = b2 + h;
+        let b3 = w3 + h * o;
+        [w1, b1, w2, b2, w3, b3]
+    }
+
+    /// Glorot-uniform weights, zero biases.
+    pub fn init(&self, rng: &mut Rng) -> Vec<f32> {
+        let mut p = vec![0.0f32; self.dim()];
+        let [w1, b1, w2, b2, w3, _b3] = self.offsets();
+        for (range, fan) in [
+            (w1..b1, self.in_dim + self.hidden),
+            (w2..b2, self.hidden + self.hidden),
+            (w3..self.dim() - self.out_dim, self.hidden + self.out_dim),
+        ] {
+            let lim = (6.0 / fan as f64).sqrt();
+            for v in &mut p[range] {
+                *v = rng.range(-lim, lim) as f32;
+            }
+        }
+        p
+    }
+
+    /// Forward pass; `x` is row-major (batch × in_dim).
+    pub fn forward(&self, params: &[f32], x: &[f32], batch: usize) -> Cache {
+        debug_assert_eq!(params.len(), self.dim());
+        debug_assert_eq!(x.len(), batch * self.in_dim);
+        let (i, h, o) = (self.in_dim, self.hidden, self.out_dim);
+        let [w1, b1, w2, b2, w3, b3] = self.offsets();
+
+        let mut h1 = vec![0.0f32; batch * h];
+        matmul(x, &params[w1..b1], &mut h1, batch, i, h);
+        add_bias_relu(&mut h1, &params[b1..b1 + h], batch, h, true);
+
+        let mut h2 = vec![0.0f32; batch * h];
+        matmul(&h1, &params[w2..b2], &mut h2, batch, h, h);
+        add_bias_relu(&mut h2, &params[b2..b2 + h], batch, h, true);
+
+        let mut out = vec![0.0f32; batch * o];
+        matmul(&h2, &params[w3..b3], &mut out, batch, h, o);
+        add_bias_relu(&mut out, &params[b3..b3 + o], batch, o, false);
+
+        Cache { batch, x: x.to_vec(), h1, h2, out }
+    }
+
+    /// Backprop `dout = dL/dout` (batch × out_dim) into a flat gradient.
+    pub fn backward(&self, params: &[f32], cache: &Cache, dout: &[f32], grad: &mut [f32]) {
+        debug_assert_eq!(grad.len(), self.dim());
+        debug_assert_eq!(dout.len(), cache.batch * self.out_dim);
+        let (i, h, o) = (self.in_dim, self.hidden, self.out_dim);
+        let b = cache.batch;
+        let [w1, b1, w2, b2, w3, b3] = self.offsets();
+        grad.iter_mut().for_each(|g| *g = 0.0);
+
+        // layer 3
+        matmul_at_b_acc(&cache.h2, dout, &mut grad[w3..b3], b, h, o);
+        col_sum_acc(dout, &mut grad[b3..b3 + o], b, o);
+        let mut dh2 = vec![0.0f32; b * h];
+        matmul_a_bt(dout, &params[w3..b3], &mut dh2, b, o, h);
+        relu_mask(&mut dh2, &cache.h2);
+
+        // layer 2
+        matmul_at_b_acc(&cache.h1, &dh2, &mut grad[w2..b2], b, h, h);
+        col_sum_acc(&dh2, &mut grad[b2..b2 + h], b, h);
+        let mut dh1 = vec![0.0f32; b * h];
+        matmul_a_bt(&dh2, &params[w2..b2], &mut dh1, b, h, h);
+        relu_mask(&mut dh1, &cache.h1);
+
+        // layer 1
+        matmul_at_b_acc(&cache.x, &dh1, &mut grad[w1..b1], b, i, h);
+        col_sum_acc(&dh1, &mut grad[b1..b1 + h], b, h);
+    }
+}
+
+fn add_bias_relu(z: &mut [f32], bias: &[f32], batch: usize, n: usize, relu: bool) {
+    for r in 0..batch {
+        let row = &mut z[r * n..(r + 1) * n];
+        for (v, &b) in row.iter_mut().zip(bias) {
+            *v += b;
+            if relu && *v < 0.0 {
+                *v = 0.0;
+            }
+        }
+    }
+}
+
+/// Zero `d` where the post-relu activation `a` is zero.
+fn relu_mask(d: &mut [f32], a: &[f32]) {
+    for (dv, &av) in d.iter_mut().zip(a) {
+        if av <= 0.0 {
+            *dv = 0.0;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mse_loss(net: &Mlp, params: &[f32], x: &[f32], target: &[f32], batch: usize) -> f64 {
+        let c = net.forward(params, x, batch);
+        c.out
+            .iter()
+            .zip(target)
+            .map(|(&o, &t)| ((o - t) as f64).powi(2))
+            .sum::<f64>()
+            / (batch * net.out_dim) as f64
+    }
+
+    #[test]
+    fn dim_matches_python_qnet_configs() {
+        // contract with aot.QNET_ENVS (see python/tests/test_aot.py)
+        assert_eq!(Mlp::new(4, 64, 2).dim(), 4 * 64 + 64 + 64 * 64 + 64 + 64 * 2 + 2);
+        assert_eq!(Mlp::new(6, 128, 3).dim(), 6 * 128 + 128 + 128 * 128 + 128 + 128 * 3 + 3);
+    }
+
+    #[test]
+    fn backward_matches_finite_differences() {
+        let net = Mlp::new(3, 5, 2);
+        let mut rng = Rng::new(0);
+        let params = net.init(&mut rng);
+        let batch = 4;
+        let x = rng.normal_vec(batch * 3);
+        let target = rng.normal_vec(batch * 2);
+
+        let cache = net.forward(&params, &x, batch);
+        // dL/dout for MSE = 2 (out - t) / (batch*out)
+        let scale = 2.0 / (batch * 2) as f32;
+        let dout: Vec<f32> =
+            cache.out.iter().zip(&target).map(|(&o, &t)| scale * (o - t)).collect();
+        let mut grad = vec![0.0f32; net.dim()];
+        net.backward(&params, &cache, &dout, &mut grad);
+
+        let mut rng2 = Rng::new(9);
+        for _ in 0..12 {
+            let j = rng2.below(net.dim());
+            let h = 1e-3f32;
+            let mut pp = params.clone();
+            pp[j] += h;
+            let mut pm = params.clone();
+            pm[j] -= h;
+            let fd = (mse_loss(&net, &pp, &x, &target, batch)
+                - mse_loss(&net, &pm, &x, &target, batch))
+                / (2.0 * h as f64);
+            assert!(
+                (fd - grad[j] as f64).abs() < 2e-2 * (1.0 + fd.abs()),
+                "param {j}: fd={fd} an={}",
+                grad[j]
+            );
+        }
+    }
+
+    #[test]
+    fn training_reduces_loss() {
+        let net = Mlp::new(2, 16, 1);
+        let mut rng = Rng::new(1);
+        let mut params = net.init(&mut rng);
+        // target function: y = x0 - x1
+        let batch = 32;
+        let x = rng.normal_vec(batch * 2);
+        let target: Vec<f32> = (0..batch).map(|b| x[b * 2] - x[b * 2 + 1]).collect();
+        let l0 = mse_loss(&net, &params, &x, &target, batch);
+        let mut grad = vec![0.0f32; net.dim()];
+        for _ in 0..300 {
+            let c = net.forward(&params, &x, batch);
+            let scale = 2.0 / batch as f32;
+            let dout: Vec<f32> =
+                c.out.iter().zip(&target).map(|(&o, &t)| scale * (o - t)).collect();
+            net.backward(&params, &c, &dout, &mut grad);
+            for (p, &g) in params.iter_mut().zip(&grad) {
+                *p -= 0.05 * g;
+            }
+        }
+        let l1 = mse_loss(&net, &params, &x, &target, batch);
+        assert!(l1 < l0 * 0.05, "{l0} -> {l1}");
+    }
+
+    #[test]
+    fn forward_is_deterministic() {
+        let net = Mlp::new(4, 8, 3);
+        let mut rng = Rng::new(2);
+        let params = net.init(&mut rng);
+        let x = rng.normal_vec(8);
+        let a = net.forward(&params, &x, 2).out;
+        let b = net.forward(&params, &x, 2).out;
+        assert_eq!(a, b);
+    }
+}

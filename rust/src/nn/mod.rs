@@ -1,0 +1,11 @@
+//! Native neural-network substrate (no accelerators, no frameworks).
+//!
+//! Used by the RL stack's `--backend native` q-network path and by tests
+//! that cross-check the HLO artifacts. The flat-parameter layout matches
+//! `python/compile/model.py::QNetConfig.shapes` exactly so the same
+//! parameter vector runs through either backend.
+
+pub mod linalg;
+pub mod mlp;
+
+pub use mlp::Mlp;

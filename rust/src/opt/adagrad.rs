@@ -1,0 +1,85 @@
+//! AdaGrad (Duchi et al., 2011).
+
+use super::Optimizer;
+
+/// G ← G + g²;  θ ← θ − η g / (√G + ε).
+#[derive(Clone, Debug)]
+pub struct AdaGrad {
+    lr: f64,
+    eps: f64,
+    g2: Vec<f32>,
+}
+
+impl AdaGrad {
+    pub fn new(lr: f64, eps: f64, d: usize) -> Self {
+        AdaGrad { lr, eps, g2: vec![0.0; d] }
+    }
+}
+
+impl Optimizer for AdaGrad {
+    fn step(&mut self, params: &mut [f32], grad: &[f32]) {
+        debug_assert_eq!(params.len(), grad.len());
+        let lr = self.lr as f32;
+        let eps = self.eps as f32;
+        for ((p, a), &g) in params.iter_mut().zip(&mut self.g2).zip(grad) {
+            *a += g * g;
+            *p -= lr * g / (a.sqrt() + eps);
+        }
+    }
+
+    fn clone_box(&self) -> Box<dyn Optimizer> {
+        Box::new(self.clone())
+    }
+
+    fn name(&self) -> &'static str {
+        "adagrad"
+    }
+
+    fn lr(&self) -> f64 {
+        self.lr
+    }
+
+    fn set_lr(&mut self, lr: f64) {
+        self.lr = lr;
+    }
+
+    fn save_state(&self) -> Vec<Vec<f32>> {
+        vec![self.g2.clone()]
+    }
+
+    fn load_state(&mut self, state: &[Vec<f32>]) -> Result<(), String> {
+        match state {
+            [g2] if g2.len() == self.g2.len() => {
+                self.g2.copy_from_slice(g2);
+                Ok(())
+            }
+            _ => Err("adagrad: bad state shape".into()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_step_is_signed_lr() {
+        let mut o = AdaGrad::new(0.5, 0.0, 2);
+        let mut p = vec![0.0f32, 0.0];
+        o.step(&mut p, &[4.0, -0.25]);
+        assert!((p[0] + 0.5).abs() < 1e-6);
+        assert!((p[1] - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn effective_lr_shrinks() {
+        let mut o = AdaGrad::new(0.5, 0.0, 1);
+        let mut p = vec![0.0f32];
+        o.step(&mut p, &[1.0]);
+        let d1 = -p[0];
+        let before = p[0];
+        o.step(&mut p, &[1.0]);
+        let d2 = before - p[0];
+        assert!(d2 < d1, "step must shrink: {d1} then {d2}");
+    }
+}

@@ -1,0 +1,198 @@
+//! Adam (Kingma & Ba, 2014) and AdaBelief (Zhuang et al., 2020) — the
+//! adaptive FO-OPTs used by the paper's synthetic/RL experiments.
+
+use super::Optimizer;
+
+/// Bias-corrected Adam.
+#[derive(Clone, Debug)]
+pub struct Adam {
+    lr: f64,
+    beta1: f64,
+    beta2: f64,
+    eps: f64,
+    t: u64,
+    m: Vec<f32>,
+    v: Vec<f32>,
+}
+
+impl Adam {
+    pub fn new(lr: f64, beta1: f64, beta2: f64, eps: f64, d: usize) -> Self {
+        Adam { lr, beta1, beta2, eps, t: 0, m: vec![0.0; d], v: vec![0.0; d] }
+    }
+}
+
+impl Optimizer for Adam {
+    fn step(&mut self, params: &mut [f32], grad: &[f32]) {
+        debug_assert_eq!(params.len(), grad.len());
+        debug_assert_eq!(params.len(), self.m.len());
+        self.t += 1;
+        let b1 = self.beta1 as f32;
+        let b2 = self.beta2 as f32;
+        let bc1 = 1.0 - (self.beta1).powi(self.t as i32);
+        let bc2 = 1.0 - (self.beta2).powi(self.t as i32);
+        // fold the bias corrections into one scalar step size
+        let alpha = (self.lr * bc2.sqrt() / bc1) as f32;
+        let eps = self.eps as f32;
+        for i in 0..params.len() {
+            let g = grad[i];
+            self.m[i] = b1 * self.m[i] + (1.0 - b1) * g;
+            self.v[i] = b2 * self.v[i] + (1.0 - b2) * g * g;
+            params[i] -= alpha * self.m[i] / (self.v[i].sqrt() + eps);
+        }
+    }
+
+    fn clone_box(&self) -> Box<dyn Optimizer> {
+        Box::new(self.clone())
+    }
+
+    fn name(&self) -> &'static str {
+        "adam"
+    }
+
+    fn lr(&self) -> f64 {
+        self.lr
+    }
+
+    fn set_lr(&mut self, lr: f64) {
+        self.lr = lr;
+    }
+
+    fn save_state(&self) -> Vec<Vec<f32>> {
+        vec![vec![self.t as f32], self.m.clone(), self.v.clone()]
+    }
+
+    fn load_state(&mut self, state: &[Vec<f32>]) -> Result<(), String> {
+        match state {
+            [t, m, v] if t.len() == 1 && m.len() == self.m.len() && v.len() == self.v.len() => {
+                self.t = t[0] as u64;
+                self.m.copy_from_slice(m);
+                self.v.copy_from_slice(v);
+                Ok(())
+            }
+            _ => Err("adam: bad state shape".into()),
+        }
+    }
+}
+
+/// AdaBelief: Adam with the second moment tracking (g − m)² — "adapting
+/// stepsizes by the belief in observed gradients".
+#[derive(Clone, Debug)]
+pub struct AdaBelief {
+    lr: f64,
+    beta1: f64,
+    beta2: f64,
+    eps: f64,
+    t: u64,
+    m: Vec<f32>,
+    s: Vec<f32>,
+}
+
+impl AdaBelief {
+    pub fn new(lr: f64, beta1: f64, beta2: f64, eps: f64, d: usize) -> Self {
+        AdaBelief { lr, beta1, beta2, eps, t: 0, m: vec![0.0; d], s: vec![0.0; d] }
+    }
+}
+
+impl Optimizer for AdaBelief {
+    fn step(&mut self, params: &mut [f32], grad: &[f32]) {
+        debug_assert_eq!(params.len(), grad.len());
+        self.t += 1;
+        let b1 = self.beta1 as f32;
+        let b2 = self.beta2 as f32;
+        let bc1 = 1.0 - (self.beta1).powi(self.t as i32);
+        let bc2 = 1.0 - (self.beta2).powi(self.t as i32);
+        let alpha = (self.lr * bc2.sqrt() / bc1) as f32;
+        let eps = self.eps as f32;
+        for i in 0..params.len() {
+            let g = grad[i];
+            self.m[i] = b1 * self.m[i] + (1.0 - b1) * g;
+            let diff = g - self.m[i];
+            self.s[i] = b2 * self.s[i] + (1.0 - b2) * diff * diff + eps;
+            params[i] -= alpha * self.m[i] / (self.s[i].sqrt() + eps);
+        }
+    }
+
+    fn clone_box(&self) -> Box<dyn Optimizer> {
+        Box::new(self.clone())
+    }
+
+    fn name(&self) -> &'static str {
+        "adabelief"
+    }
+
+    fn lr(&self) -> f64 {
+        self.lr
+    }
+
+    fn set_lr(&mut self, lr: f64) {
+        self.lr = lr;
+    }
+
+    fn save_state(&self) -> Vec<Vec<f32>> {
+        vec![vec![self.t as f32], self.m.clone(), self.s.clone()]
+    }
+
+    fn load_state(&mut self, state: &[Vec<f32>]) -> Result<(), String> {
+        match state {
+            [t, m, sv] if t.len() == 1 && m.len() == self.m.len() && sv.len() == self.s.len() => {
+                self.t = t[0] as u64;
+                self.m.copy_from_slice(m);
+                self.s.copy_from_slice(sv);
+                Ok(())
+            }
+            _ => Err("adabelief: bad state shape".into()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn adam_first_step_is_signed_lr() {
+        // With bias correction, the first Adam step is ≈ lr * sign(g).
+        let mut o = Adam::new(0.1, 0.9, 0.999, 1e-8, 3);
+        let mut p = vec![0.0f32; 3];
+        o.step(&mut p, &[3.0, -0.5, 0.0]);
+        assert!((p[0] + 0.1).abs() < 1e-4, "{}", p[0]);
+        assert!((p[1] - 0.1).abs() < 1e-4, "{}", p[1]);
+        assert_eq!(p[2], 0.0);
+    }
+
+    #[test]
+    fn adam_scale_invariance() {
+        // Adam's update direction is invariant to gradient scaling.
+        let run = |scale: f32| {
+            let mut o = Adam::new(0.01, 0.9, 0.999, 1e-12, 1);
+            let mut p = vec![1.0f32];
+            for _ in 0..50 {
+                let g = [p[0] * scale];
+                o.step(&mut p, &g);
+            }
+            p[0]
+        };
+        let a = run(1.0);
+        let b = run(100.0);
+        assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+    }
+
+    #[test]
+    fn adabelief_first_step_descends() {
+        let mut o = AdaBelief::new(0.1, 0.9, 0.999, 1e-12, 2);
+        let mut p = vec![1.0f32, -1.0];
+        o.step(&mut p, &[1.0, -1.0]);
+        assert!(p[0] < 1.0);
+        assert!(p[1] > -1.0);
+    }
+
+    #[test]
+    fn state_advances_with_t() {
+        let mut o = Adam::new(0.1, 0.9, 0.999, 1e-8, 1);
+        let mut p = vec![0.0f32];
+        o.step(&mut p, &[1.0]);
+        let p1 = p[0];
+        o.step(&mut p, &[1.0]);
+        assert!(p[0] < p1, "second step must keep moving");
+    }
+}

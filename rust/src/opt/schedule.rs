@@ -1,0 +1,154 @@
+//! Learning-rate schedules (framework feature; the paper's Thm-2 η is a
+//! horizon-dependent constant — `Schedule::Theory` implements exactly
+//! that choice, the others are the standard training schedules).
+
+/// A learning-rate schedule: maps sequential iteration t (1-based) to a
+/// multiplier on the base learning rate.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Schedule {
+    /// Constant multiplier 1.
+    Constant,
+    /// Linear warmup over `warmup` iterations, then constant.
+    Warmup { warmup: usize },
+    /// Step decay: ×`gamma` every `every` iterations.
+    Step { every: usize, gamma: f64 },
+    /// Cosine annealing from 1 to `floor` over `horizon` iterations.
+    Cosine { horizon: usize, floor: f64 },
+    /// Thm-2's η ∝ 1/√(N·T): constant per run, but scaled by the
+    /// (N, T) the run was configured with relative to (1, T).
+    Theory { n: usize, t: usize },
+}
+
+impl Schedule {
+    /// Parse "constant", "warmup:100", "step:200:0.5",
+    /// "cosine:1000:0.01", "theory:4:500".
+    pub fn parse(s: &str) -> Option<Schedule> {
+        let parts: Vec<&str> = s.split(':').collect();
+        match parts.as_slice() {
+            ["constant"] => Some(Schedule::Constant),
+            ["warmup", w] => Some(Schedule::Warmup { warmup: w.parse().ok()? }),
+            ["step", e, g] => Some(Schedule::Step {
+                every: e.parse().ok()?,
+                gamma: g.parse().ok()?,
+            }),
+            ["cosine", h, f] => Some(Schedule::Cosine {
+                horizon: h.parse().ok()?,
+                floor: f.parse().ok()?,
+            }),
+            ["theory", n, t] => Some(Schedule::Theory {
+                n: n.parse().ok()?,
+                t: t.parse().ok()?,
+            }),
+            _ => None,
+        }
+    }
+
+    /// Multiplier at iteration `t` (1-based).
+    pub fn factor(&self, t: usize) -> f64 {
+        match *self {
+            Schedule::Constant => 1.0,
+            Schedule::Warmup { warmup } => {
+                if warmup == 0 || t >= warmup {
+                    1.0
+                } else {
+                    t as f64 / warmup as f64
+                }
+            }
+            Schedule::Step { every, gamma } => {
+                if every == 0 {
+                    1.0
+                } else {
+                    gamma.powi(((t.saturating_sub(1)) / every) as i32)
+                }
+            }
+            Schedule::Cosine { horizon, floor } => {
+                if horizon == 0 {
+                    return 1.0;
+                }
+                let p = ((t.saturating_sub(1)) as f64 / horizon as f64).min(1.0);
+                floor + (1.0 - floor) * 0.5 * (1.0 + (std::f64::consts::PI * p).cos())
+            }
+            Schedule::Theory { n, t: horizon } => {
+                // η = sqrt(2Δ / (N T L σ² ρ)) — all constants fold into
+                // the base lr; relative to the (N=1, T) run the factor is
+                // 1/sqrt(N) (same T), matching Thm 2's choice.
+                let _ = horizon;
+                1.0 / (n.max(1) as f64).sqrt()
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        assert_eq!(Schedule::parse("constant"), Some(Schedule::Constant));
+        assert_eq!(
+            Schedule::parse("warmup:10"),
+            Some(Schedule::Warmup { warmup: 10 })
+        );
+        assert_eq!(
+            Schedule::parse("step:100:0.5"),
+            Some(Schedule::Step { every: 100, gamma: 0.5 })
+        );
+        assert_eq!(
+            Schedule::parse("cosine:50:0.1"),
+            Some(Schedule::Cosine { horizon: 50, floor: 0.1 })
+        );
+        assert_eq!(Schedule::parse("theory:4:100"), Some(Schedule::Theory { n: 4, t: 100 }));
+        assert_eq!(Schedule::parse("linear"), None);
+        assert_eq!(Schedule::parse("warmup:x"), None);
+    }
+
+    #[test]
+    fn warmup_ramps_then_flat() {
+        let s = Schedule::Warmup { warmup: 4 };
+        assert!((s.factor(1) - 0.25).abs() < 1e-12);
+        assert!((s.factor(2) - 0.5).abs() < 1e-12);
+        assert_eq!(s.factor(4), 1.0);
+        assert_eq!(s.factor(100), 1.0);
+    }
+
+    #[test]
+    fn step_decays_in_stages() {
+        let s = Schedule::Step { every: 10, gamma: 0.5 };
+        assert_eq!(s.factor(1), 1.0);
+        assert_eq!(s.factor(10), 1.0);
+        assert_eq!(s.factor(11), 0.5);
+        assert_eq!(s.factor(21), 0.25);
+    }
+
+    #[test]
+    fn cosine_monotone_to_floor() {
+        let s = Schedule::Cosine { horizon: 100, floor: 0.1 };
+        assert!((s.factor(1) - 1.0).abs() < 1e-6);
+        let mid = s.factor(51);
+        assert!(mid < 1.0 && mid > 0.1);
+        assert!((s.factor(101) - 0.1).abs() < 1e-9);
+        assert!((s.factor(500) - 0.1).abs() < 1e-9); // clamps past horizon
+        let mut last = 1.1;
+        for t in 1..=101 {
+            let f = s.factor(t);
+            assert!(f <= last + 1e-12, "not monotone at {t}");
+            last = f;
+        }
+    }
+
+    #[test]
+    fn theory_is_inverse_sqrt_n() {
+        let s = Schedule::Theory { n: 4, t: 100 };
+        assert!((s.factor(1) - 0.5).abs() < 1e-12);
+        assert_eq!(s.factor(1), s.factor(99)); // constant over the run
+    }
+
+    #[test]
+    fn degenerate_params_are_safe() {
+        assert_eq!(Schedule::Warmup { warmup: 0 }.factor(1), 1.0);
+        assert_eq!(Schedule::Step { every: 0, gamma: 0.5 }.factor(5), 1.0);
+        assert_eq!(Schedule::Cosine { horizon: 0, floor: 0.5 }.factor(3), 1.0);
+        assert_eq!(Schedule::Theory { n: 0, t: 0 }.factor(1), 1.0);
+    }
+}

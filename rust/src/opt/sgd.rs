@@ -1,0 +1,63 @@
+//! Plain stochastic gradient descent (Robbins & Monro, 1951) — the FO-OPT
+//! analyzed in the paper's Thm. 2/3.
+
+use super::Optimizer;
+
+/// θ ← θ − η g. Stateless apart from the learning rate.
+#[derive(Clone, Debug)]
+pub struct Sgd {
+    lr: f64,
+}
+
+impl Sgd {
+    pub fn new(lr: f64) -> Self {
+        Sgd { lr }
+    }
+}
+
+impl Optimizer for Sgd {
+    fn step(&mut self, params: &mut [f32], grad: &[f32]) {
+        debug_assert_eq!(params.len(), grad.len());
+        let lr = self.lr as f32;
+        for (p, &g) in params.iter_mut().zip(grad) {
+            *p -= lr * g;
+        }
+    }
+
+    fn clone_box(&self) -> Box<dyn Optimizer> {
+        Box::new(self.clone())
+    }
+
+    fn name(&self) -> &'static str {
+        "sgd"
+    }
+
+    fn lr(&self) -> f64 {
+        self.lr
+    }
+
+    fn set_lr(&mut self, lr: f64) {
+        self.lr = lr;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_update_rule() {
+        let mut o = Sgd::new(0.5);
+        let mut p = vec![1.0f32, -2.0];
+        o.step(&mut p, &[2.0, 2.0]);
+        assert_eq!(p, vec![0.0, -3.0]);
+    }
+
+    #[test]
+    fn zero_grad_is_noop() {
+        let mut o = Sgd::new(0.1);
+        let mut p = vec![1.5f32; 4];
+        o.step(&mut p, &[0.0; 4]);
+        assert_eq!(p, vec![1.5f32; 4]);
+    }
+}

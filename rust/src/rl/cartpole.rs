@@ -1,0 +1,158 @@
+//! CartPole-v1 (Barto, Sutton & Anderson 1983; Gym dynamics, Euler
+//! integration, 500-step limit).
+
+use super::env::{Env, Transition};
+use crate::util::Rng;
+
+const GRAVITY: f64 = 9.8;
+const MASS_CART: f64 = 1.0;
+const MASS_POLE: f64 = 0.1;
+const TOTAL_MASS: f64 = MASS_CART + MASS_POLE;
+const LENGTH: f64 = 0.5; // half pole length
+const POLE_MASS_LENGTH: f64 = MASS_POLE * LENGTH;
+const FORCE_MAG: f64 = 10.0;
+const TAU: f64 = 0.02;
+const X_THRESHOLD: f64 = 2.4;
+const THETA_THRESHOLD: f64 = 12.0 * std::f64::consts::PI / 180.0;
+
+/// Cart position/velocity + pole angle/angular-velocity.
+pub struct CartPole {
+    x: f64,
+    x_dot: f64,
+    theta: f64,
+    theta_dot: f64,
+    steps: usize,
+    done: bool,
+}
+
+impl CartPole {
+    pub fn new() -> CartPole {
+        CartPole { x: 0.0, x_dot: 0.0, theta: 0.0, theta_dot: 0.0, steps: 0, done: true }
+    }
+
+    fn obs(&self) -> Vec<f32> {
+        vec![self.x as f32, self.x_dot as f32, self.theta as f32, self.theta_dot as f32]
+    }
+}
+
+impl Default for CartPole {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Env for CartPole {
+    fn name(&self) -> &'static str {
+        "cartpole"
+    }
+
+    fn obs_dim(&self) -> usize {
+        4
+    }
+
+    fn n_actions(&self) -> usize {
+        2
+    }
+
+    fn max_steps(&self) -> usize {
+        500
+    }
+
+    fn reset(&mut self, rng: &mut Rng) -> Vec<f32> {
+        self.x = rng.range(-0.05, 0.05);
+        self.x_dot = rng.range(-0.05, 0.05);
+        self.theta = rng.range(-0.05, 0.05);
+        self.theta_dot = rng.range(-0.05, 0.05);
+        self.steps = 0;
+        self.done = false;
+        self.obs()
+    }
+
+    fn step(&mut self, action: usize) -> Transition {
+        debug_assert!(action < 2);
+        debug_assert!(!self.done, "step() after done");
+        let force = if action == 1 { FORCE_MAG } else { -FORCE_MAG };
+        let (cos_t, sin_t) = (self.theta.cos(), self.theta.sin());
+        let temp =
+            (force + POLE_MASS_LENGTH * self.theta_dot * self.theta_dot * sin_t) / TOTAL_MASS;
+        let theta_acc = (GRAVITY * sin_t - cos_t * temp)
+            / (LENGTH * (4.0 / 3.0 - MASS_POLE * cos_t * cos_t / TOTAL_MASS));
+        let x_acc = temp - POLE_MASS_LENGTH * theta_acc * cos_t / TOTAL_MASS;
+        self.x += TAU * self.x_dot;
+        self.x_dot += TAU * x_acc;
+        self.theta += TAU * self.theta_dot;
+        self.theta_dot += TAU * theta_acc;
+        self.steps += 1;
+
+        let fell = self.x.abs() > X_THRESHOLD || self.theta.abs() > THETA_THRESHOLD;
+        let truncated = self.steps >= self.max_steps();
+        self.done = fell || truncated;
+        Transition { obs: self.obs(), reward: 1.0, done: self.done }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn init_state_is_near_zero() {
+        let mut env = CartPole::new();
+        let obs = env.reset(&mut Rng::new(0));
+        assert!(obs.iter().all(|&o| o.abs() <= 0.05));
+    }
+
+    #[test]
+    fn constant_action_tips_the_pole() {
+        let mut env = CartPole::new();
+        env.reset(&mut Rng::new(1));
+        let mut steps = 0;
+        loop {
+            let t = env.step(1);
+            steps += 1;
+            if t.done {
+                break;
+            }
+        }
+        // always pushing right destabilizes quickly
+        assert!(steps < 200, "pole survived {steps} steps of constant push");
+    }
+
+    #[test]
+    fn balancing_policy_outlives_random() {
+        // A simple reactive policy (push toward the pole's lean) must hold
+        // much longer than random — checks the sign conventions of the
+        // dynamics.
+        let run = |policy: &mut dyn FnMut(&[f32], &mut Rng) -> usize| {
+            let mut env = CartPole::new();
+            let mut rng = Rng::new(2);
+            let mut total = 0;
+            for _ in 0..5 {
+                let mut obs = env.reset(&mut rng);
+                loop {
+                    let a = policy(&obs, &mut rng);
+                    let t = env.step(a);
+                    obs = t.obs;
+                    total += 1;
+                    if t.done {
+                        break;
+                    }
+                }
+            }
+            total
+        };
+        let reactive = run(&mut |obs, _| if obs[2] + 0.3 * obs[3] > 0.0 { 1 } else { 0 });
+        let random = run(&mut |_, rng| rng.below(2));
+        assert!(
+            reactive > random * 3,
+            "reactive={reactive} random={random}"
+        );
+    }
+
+    #[test]
+    fn reward_is_one_per_step() {
+        let mut env = CartPole::new();
+        env.reset(&mut Rng::new(3));
+        assert_eq!(env.step(0).reward, 1.0);
+    }
+}

@@ -1,0 +1,85 @@
+//! Classic-control environment interface (the OpenAI-Gym substitute).
+//!
+//! The three paper tasks — CartPole-v1, MountainCar-v0, Acrobot-v1 — are
+//! re-implemented with the exact Gym dynamics, bounds, reward and
+//! termination rules (DESIGN.md §Substitutions), so the DQN + OptEx stack
+//! optimizes the same MDPs the paper did.
+
+use crate::util::Rng;
+
+/// Result of one environment transition.
+#[derive(Clone, Debug)]
+pub struct Transition {
+    pub obs: Vec<f32>,
+    pub reward: f32,
+    /// Episode ended (termination or truncation).
+    pub done: bool,
+}
+
+/// A discrete-action control environment.
+pub trait Env {
+    fn name(&self) -> &'static str;
+    fn obs_dim(&self) -> usize;
+    fn n_actions(&self) -> usize;
+    /// Episode step limit (Gym truncation).
+    fn max_steps(&self) -> usize;
+    /// Reset to an initial state; returns the first observation.
+    fn reset(&mut self, rng: &mut Rng) -> Vec<f32>;
+    /// Apply `action` (< n_actions).
+    fn step(&mut self, action: usize) -> Transition;
+}
+
+/// Instantiate a paper environment by name.
+pub fn make(name: &str) -> Option<Box<dyn Env>> {
+    match name {
+        "cartpole" => Some(Box::new(super::cartpole::CartPole::new())),
+        "mountaincar" => Some(Box::new(super::mountaincar::MountainCar::new())),
+        "acrobot" => Some(Box::new(super::acrobot::Acrobot::new())),
+        _ => None,
+    }
+}
+
+/// All paper environments (Fig. 3).
+pub const ALL_ENVS: [&str; 3] = ["cartpole", "mountaincar", "acrobot"];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn make_known_envs() {
+        for name in ALL_ENVS {
+            let env = make(name).unwrap();
+            assert_eq!(env.name(), name);
+            assert!(env.obs_dim() >= 2);
+            assert!(env.n_actions() >= 2);
+        }
+        assert!(make("pong").is_none());
+    }
+
+    /// Generic MDP contract: obs dims stable, rewards finite, episodes
+    /// terminate within max_steps under a random policy.
+    #[test]
+    fn random_policy_episodes_terminate() {
+        let mut rng = Rng::new(0);
+        for name in ALL_ENVS {
+            let mut env = make(name).unwrap();
+            for _ in 0..3 {
+                let obs = env.reset(&mut rng);
+                assert_eq!(obs.len(), env.obs_dim());
+                let mut steps = 0;
+                loop {
+                    let t = env.step(rng.below(env.n_actions()));
+                    assert_eq!(t.obs.len(), env.obs_dim());
+                    assert!(t.reward.is_finite());
+                    assert!(t.obs.iter().all(|o| o.is_finite()), "{name}");
+                    steps += 1;
+                    if t.done {
+                        break;
+                    }
+                    assert!(steps <= env.max_steps(), "{name} never terminated");
+                }
+            }
+        }
+    }
+}

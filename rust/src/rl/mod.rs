@@ -1,0 +1,14 @@
+//! Reinforcement-learning substrate (paper Sec. 6.2): classic-control
+//! environments, experience replay, and a DQN agent whose q-network
+//! parameters are optimized by the OptEx coordinator.
+
+pub mod acrobot;
+pub mod cartpole;
+pub mod dqn;
+pub mod env;
+pub mod mountaincar;
+pub mod replay;
+
+pub use dqn::{DqnSource, RlConfig};
+pub use env::{make, Env, Transition, ALL_ENVS};
+pub use replay::ReplayBuffer;

@@ -1,0 +1,135 @@
+//! MountainCar-v0 (Moore 1990; Gym dynamics, 200-step limit).
+
+use super::env::{Env, Transition};
+use crate::util::Rng;
+
+const MIN_POS: f64 = -1.2;
+const MAX_POS: f64 = 0.6;
+const MAX_SPEED: f64 = 0.07;
+const GOAL_POS: f64 = 0.5;
+const FORCE: f64 = 0.001;
+const GRAVITY: f64 = 0.0025;
+
+/// Car position + velocity on the valley track.
+pub struct MountainCar {
+    pos: f64,
+    vel: f64,
+    steps: usize,
+    done: bool,
+}
+
+impl MountainCar {
+    pub fn new() -> MountainCar {
+        MountainCar { pos: -0.5, vel: 0.0, steps: 0, done: true }
+    }
+
+    fn obs(&self) -> Vec<f32> {
+        vec![self.pos as f32, self.vel as f32]
+    }
+}
+
+impl Default for MountainCar {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Env for MountainCar {
+    fn name(&self) -> &'static str {
+        "mountaincar"
+    }
+
+    fn obs_dim(&self) -> usize {
+        2
+    }
+
+    /// 0 = push left, 1 = no-op, 2 = push right.
+    fn n_actions(&self) -> usize {
+        3
+    }
+
+    fn max_steps(&self) -> usize {
+        200
+    }
+
+    fn reset(&mut self, rng: &mut Rng) -> Vec<f32> {
+        self.pos = rng.range(-0.6, -0.4);
+        self.vel = 0.0;
+        self.steps = 0;
+        self.done = false;
+        self.obs()
+    }
+
+    fn step(&mut self, action: usize) -> Transition {
+        debug_assert!(action < 3);
+        debug_assert!(!self.done, "step() after done");
+        self.vel += (action as f64 - 1.0) * FORCE - (3.0 * self.pos).cos() * GRAVITY;
+        self.vel = self.vel.clamp(-MAX_SPEED, MAX_SPEED);
+        self.pos += self.vel;
+        self.pos = self.pos.clamp(MIN_POS, MAX_POS);
+        if self.pos <= MIN_POS && self.vel < 0.0 {
+            self.vel = 0.0; // inelastic left wall, as in Gym
+        }
+        self.steps += 1;
+        let reached = self.pos >= GOAL_POS;
+        self.done = reached || self.steps >= self.max_steps();
+        Transition { obs: self.obs(), reward: -1.0, done: self.done }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn random_policy_rarely_reaches_goal() {
+        let mut env = MountainCar::new();
+        let mut rng = Rng::new(0);
+        env.reset(&mut rng);
+        let mut steps = 0;
+        loop {
+            let t = env.step(rng.below(3));
+            steps += 1;
+            if t.done {
+                assert!(t.obs[0] < GOAL_POS as f32, "random should time out");
+                break;
+            }
+        }
+        assert_eq!(steps, 200);
+    }
+
+    #[test]
+    fn bang_bang_energy_pumping_reaches_goal() {
+        // Push in the direction of motion — the classic solution. Must
+        // reach the flag well inside the step limit.
+        let mut env = MountainCar::new();
+        let mut rng = Rng::new(1);
+        let mut obs = env.reset(&mut rng);
+        let mut reached = false;
+        for _ in 0..200 {
+            let a = if obs[1] >= 0.0 { 2 } else { 0 };
+            let t = env.step(a);
+            obs = t.obs;
+            if t.done {
+                reached = obs[0] >= GOAL_POS as f32;
+                break;
+            }
+        }
+        assert!(reached, "energy pumping failed: pos={}", obs[0]);
+    }
+
+    #[test]
+    fn velocity_and_position_stay_bounded() {
+        let mut env = MountainCar::new();
+        let mut rng = Rng::new(2);
+        env.reset(&mut rng);
+        for _ in 0..199 {
+            let t = env.step(2);
+            assert!((MIN_POS as f32..=MAX_POS as f32).contains(&t.obs[0]));
+            assert!(t.obs[1].abs() <= MAX_SPEED as f32 + 1e-6);
+            if t.done {
+                break;
+            }
+        }
+    }
+}

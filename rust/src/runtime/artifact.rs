@@ -1,0 +1,263 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! rust runtime.
+//!
+//! `artifacts/manifest.json` (written at `make artifacts` time) lists every
+//! lowered HLO module with its input shapes/dtypes and workload metadata.
+//! Nothing about shapes is hard-coded on the rust side — the manifest is
+//! the single source of truth, so re-lowering with a different profile
+//! (test / default / paper) changes behaviour without recompiling rust.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Element type of an artifact input.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    fn parse(s: &str) -> Result<DType> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "i32" => Ok(DType::I32),
+            other => bail!("unsupported dtype {other:?} in manifest"),
+        }
+    }
+}
+
+/// Shape + dtype of one artifact input.
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One AOT-lowered HLO module.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    /// Absolute path of the `.hlo.txt` file.
+    pub path: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    meta: Json,
+}
+
+impl ArtifactSpec {
+    pub fn meta_usize(&self, key: &str) -> Result<usize> {
+        self.meta
+            .get(key)
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow!("artifact {}: missing meta.{key}", self.name))
+    }
+
+    pub fn meta_f64(&self, key: &str) -> Result<f64> {
+        self.meta
+            .get(key)
+            .and_then(Json::as_f64)
+            .ok_or_else(|| anyhow!("artifact {}: missing meta.{key}", self.name))
+    }
+
+    pub fn meta_str(&self, key: &str) -> Result<&str> {
+        self.meta
+            .get(key)
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("artifact {}: missing meta.{key}", self.name))
+    }
+
+    /// Workload family tag ("gp_estimate", "synth", "mlp", ...).
+    pub fn family(&self) -> Result<&str> {
+        self.meta_str("family")
+    }
+
+    /// Parameter dimension d.
+    pub fn dim(&self) -> Result<usize> {
+        self.meta_usize("d")
+    }
+}
+
+/// The parsed manifest of one artifact directory.
+#[derive(Debug)]
+pub struct Manifest {
+    pub profile: String,
+    pub dir: PathBuf,
+    artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`?)", path.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest text with `dir` as the artifact file base.
+    pub fn parse(text: &str, dir: &Path) -> Result<Manifest> {
+        let doc = Json::parse(text).context("parsing manifest.json")?;
+        let profile = doc
+            .get("profile")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("manifest: missing profile"))?
+            .to_string();
+        let mut artifacts = BTreeMap::new();
+        for entry in doc
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest: missing artifacts[]"))?
+        {
+            let name = entry
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("manifest entry: missing name"))?
+                .to_string();
+            let file = entry
+                .get("file")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("artifact {name}: missing file"))?;
+            let mut inputs = Vec::new();
+            for inp in entry
+                .get("inputs")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("artifact {name}: missing inputs[]"))?
+            {
+                let shape = inp
+                    .get("shape")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow!("artifact {name}: input missing shape"))?
+                    .iter()
+                    .map(|v| {
+                        v.as_usize()
+                            .ok_or_else(|| anyhow!("artifact {name}: bad shape element"))
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+                let dtype = DType::parse(
+                    inp.get("dtype")
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| anyhow!("artifact {name}: input missing dtype"))?,
+                )?;
+                inputs.push(TensorSpec { shape, dtype });
+            }
+            let meta = entry.get("meta").cloned().unwrap_or(Json::Obj(Default::default()));
+            artifacts.insert(
+                name.clone(),
+                ArtifactSpec { name, path: dir.join(file), inputs, meta },
+            );
+        }
+        Ok(Manifest { profile, dir: dir.to_path_buf(), artifacts })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts.get(name).ok_or_else(|| {
+            anyhow!(
+                "artifact {name:?} not in manifest (profile={}, have: {})",
+                self.profile,
+                self.names().collect::<Vec<_>>().join(", ")
+            )
+        })
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.artifacts.keys().map(|s| s.as_str())
+    }
+
+    pub fn len(&self) -> usize {
+        self.artifacts.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.artifacts.is_empty()
+    }
+
+    /// Artifacts of a given family.
+    pub fn by_family<'a>(&'a self, family: &'a str) -> impl Iterator<Item = &'a ArtifactSpec> {
+        self.artifacts
+            .values()
+            .filter(move |a| a.family().map(|f| f == family).unwrap_or(false))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const DOC: &str = r#"{
+      "profile": "test",
+      "artifacts": [
+        {"name": "gp_test", "file": "gp_test.hlo.txt",
+         "inputs": [
+           {"shape": [32], "dtype": "f32"},
+           {"shape": [4, 32], "dtype": "f32"},
+           {"shape": [4, 64], "dtype": "f32"},
+           {"shape": [], "dtype": "f32"},
+           {"shape": [], "dtype": "f32"}],
+         "meta": {"family": "gp_estimate", "t0": 4, "dsub": 32, "d": 64,
+                  "kernel": "matern52"}},
+        {"name": "qnet_test_act", "file": "qnet_test_act.hlo.txt",
+         "inputs": [{"shape": [42], "dtype": "f32"},
+                    {"shape": [1, 4], "dtype": "f32"}],
+         "meta": {"family": "qnet_act", "d": 42}}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_and_indexes() {
+        let m = Manifest::parse(DOC, Path::new("/tmp/a")).unwrap();
+        assert_eq!(m.profile, "test");
+        assert_eq!(m.len(), 2);
+        let gp = m.get("gp_test").unwrap();
+        assert_eq!(gp.inputs.len(), 5);
+        assert_eq!(gp.inputs[1].shape, vec![4, 32]);
+        assert_eq!(gp.inputs[1].elements(), 128);
+        assert_eq!(gp.inputs[3].shape, Vec::<usize>::new());
+        assert_eq!(gp.inputs[3].elements(), 1);
+        assert_eq!(gp.family().unwrap(), "gp_estimate");
+        assert_eq!(gp.dim().unwrap(), 64);
+        assert_eq!(gp.meta_usize("t0").unwrap(), 4);
+        assert_eq!(gp.meta_str("kernel").unwrap(), "matern52");
+        assert_eq!(gp.path, Path::new("/tmp/a/gp_test.hlo.txt"));
+        assert!(gp.meta_usize("nope").is_err());
+    }
+
+    #[test]
+    fn missing_artifact_error_lists_names() {
+        let m = Manifest::parse(DOC, Path::new("/tmp/a")).unwrap();
+        let err = format!("{:#}", m.get("nothere").unwrap_err());
+        assert!(err.contains("gp_test"));
+    }
+
+    #[test]
+    fn family_filter() {
+        let m = Manifest::parse(DOC, Path::new("/tmp/a")).unwrap();
+        let fams: Vec<_> = m.by_family("qnet_act").map(|a| a.name.as_str()).collect();
+        assert_eq!(fams, vec!["qnet_test_act"]);
+    }
+
+    #[test]
+    fn rejects_bad_documents() {
+        assert!(Manifest::parse("{}", Path::new("/x")).is_err());
+        assert!(Manifest::parse(
+            r#"{"profile":"t","artifacts":[{"name":"a"}]}"#,
+            Path::new("/x")
+        )
+        .is_err());
+        assert!(Manifest::parse(
+            r#"{"profile":"t","artifacts":[{"name":"a","file":"f",
+                "inputs":[{"shape":[1],"dtype":"f64"}]}]}"#,
+            Path::new("/x")
+        )
+        .is_err());
+    }
+}

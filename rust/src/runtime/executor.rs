@@ -1,0 +1,205 @@
+//! PJRT execution engine: load HLO text, compile, run with typed buffers.
+//!
+//! Wraps the `xla` crate (PJRT C API, CPU plugin). One [`Engine`] owns one
+//! `PjRtClient`; [`Executable`]s are compiled from the AOT artifacts and
+//! invoked with plain `&[f32]` / `&[i32]` slices — shapes come from the
+//! manifest [`ArtifactSpec`], and arity/size mismatches are hard errors
+//! *before* touching the FFI boundary.
+//!
+//! None of these types are `Send` (the underlying handles are raw C
+//! pointers); cross-thread execution goes through `pool::WorkerPool`,
+//! which gives each worker thread its own `Engine`.
+
+use anyhow::{bail, Context, Result};
+
+use super::artifact::{ArtifactSpec, DType};
+
+/// Borrowed input tensor (shape comes from the artifact spec).
+#[derive(Clone, Copy, Debug)]
+pub enum In<'a> {
+    F32(&'a [f32]),
+    I32(&'a [i32]),
+}
+
+impl<'a> In<'a> {
+    fn len(&self) -> usize {
+        match self {
+            In::F32(s) => s.len(),
+            In::I32(s) => s.len(),
+        }
+    }
+
+    fn dtype(&self) -> DType {
+        match self {
+            In::F32(_) => DType::F32,
+            In::I32(_) => DType::I32,
+        }
+    }
+}
+
+/// Owned input tensor — what crosses threads into the worker pool.
+#[derive(Clone, Debug)]
+pub enum TensorData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl TensorData {
+    pub fn borrow(&self) -> In<'_> {
+        match self {
+            TensorData::F32(v) => In::F32(v),
+            TensorData::I32(v) => In::I32(v),
+        }
+    }
+}
+
+/// One PJRT client (CPU).
+pub struct Engine {
+    client: xla::PjRtClient,
+}
+
+impl Engine {
+    pub fn cpu() -> Result<Engine> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an artifact. Interchange is HLO *text* (see
+    /// aot.py's module docstring for the xla_extension-0.5.1 rationale).
+    pub fn load(&self, spec: &ArtifactSpec) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            spec.path
+                .to_str()
+                .with_context(|| format!("non-utf8 path {}", spec.path.display()))?,
+        )
+        .with_context(|| format!("parsing HLO text {}", spec.path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact {}", spec.name))?;
+        Ok(Executable { exe, spec: spec.clone() })
+    }
+}
+
+/// A compiled artifact, bound to its manifest spec.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    spec: ArtifactSpec,
+}
+
+impl Executable {
+    pub fn spec(&self) -> &ArtifactSpec {
+        &self.spec
+    }
+
+    /// Execute with the given inputs; returns every tuple element as a
+    /// flat f32 vector (all our artifact outputs are f32).
+    pub fn run(&self, inputs: &[In<'_>]) -> Result<Vec<Vec<f32>>> {
+        self.check(inputs)?;
+        let literals = inputs
+            .iter()
+            .zip(&self.spec.inputs)
+            .map(|(inp, ts)| literal_from(inp, &ts.shape))
+            .collect::<Result<Vec<_>>>()?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing artifact {}", self.spec.name))?;
+        // One device, one output (a tuple — aot.py lowers return_tuple=True).
+        let out = result
+            .first()
+            .and_then(|d| d.first())
+            .with_context(|| format!("artifact {}: empty result", self.spec.name))?
+            .to_literal_sync()
+            .context("device->host transfer")?;
+        let parts = out
+            .to_tuple()
+            .with_context(|| format!("artifact {}: non-tuple output", self.spec.name))?;
+        parts
+            .into_iter()
+            .enumerate()
+            .map(|(i, lit)| {
+                lit.to_vec::<f32>().with_context(|| {
+                    format!("artifact {}: output {i} not f32", self.spec.name)
+                })
+            })
+            .collect()
+    }
+
+    fn check(&self, inputs: &[In<'_>]) -> Result<()> {
+        if inputs.len() != self.spec.inputs.len() {
+            bail!(
+                "artifact {}: expected {} inputs, got {}",
+                self.spec.name,
+                self.spec.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (i, (inp, ts)) in inputs.iter().zip(&self.spec.inputs).enumerate() {
+            if inp.len() != ts.elements() {
+                bail!(
+                    "artifact {}: input {i} has {} elements, expected {} (shape {:?})",
+                    self.spec.name,
+                    inp.len(),
+                    ts.elements(),
+                    ts.shape
+                );
+            }
+            if inp.dtype() != ts.dtype {
+                bail!(
+                    "artifact {}: input {i} dtype mismatch ({:?} vs {:?})",
+                    self.spec.name,
+                    inp.dtype(),
+                    ts.dtype
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+fn literal_from(inp: &In<'_>, shape: &[usize]) -> Result<xla::Literal> {
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    let lit = match inp {
+        In::F32(data) => {
+            if shape.is_empty() {
+                return Ok(xla::Literal::scalar(data[0]));
+            }
+            xla::Literal::vec1(data)
+        }
+        In::I32(data) => {
+            if shape.is_empty() {
+                return Ok(xla::Literal::scalar(data[0]));
+            }
+            xla::Literal::vec1(data)
+        }
+    };
+    if shape.len() == 1 {
+        Ok(lit)
+    } else {
+        lit.reshape(&dims).context("reshaping input literal")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    //! Engine tests that need real artifacts live in
+    //! `rust/tests/hlo_roundtrip.rs` (they skip when `artifacts/test` is
+    //! missing). Here: pure validation logic.
+    use super::*;
+
+    #[test]
+    fn tensor_data_borrow_roundtrip() {
+        let t = TensorData::F32(vec![1.0, 2.0]);
+        assert_eq!(t.borrow().len(), 2);
+        assert_eq!(t.borrow().dtype(), DType::F32);
+        let t = TensorData::I32(vec![1, 2, 3]);
+        assert_eq!(t.borrow().len(), 3);
+        assert_eq!(t.borrow().dtype(), DType::I32);
+    }
+}

@@ -1,0 +1,17 @@
+//! Request-path runtime: AOT artifacts -> PJRT -> results.
+//!
+//! * [`artifact`] — manifest schema shared with `python/compile/aot.py`,
+//! * [`executor`] — one-client engine, typed compile/run wrappers,
+//! * [`pool`] — N worker threads, each owning its own client+executables
+//!   (the paper's parallel "processes").
+//!
+//! Python is build-time only: after `make artifacts`, everything here is
+//! self-contained rust + the PJRT C API.
+
+pub mod artifact;
+pub mod executor;
+pub mod pool;
+
+pub use artifact::{ArtifactSpec, DType, Manifest, TensorSpec};
+pub use executor::{Engine, Executable, In, TensorData};
+pub use pool::{RunOutput, WorkerPool};

@@ -1,0 +1,228 @@
+//! N-way worker pool over PJRT executables (the paper's "processes").
+//!
+//! The `xla` crate's client/executable handles wrap raw C pointers and are
+//! not `Send`, so each worker **thread owns its own** `Engine` and its own
+//! compiled copies of the artifacts it serves; only plain `Vec<f32>` /
+//! `Vec<i32>` tensors cross thread boundaries (std mpsc channels — tokio
+//! is unavailable offline, and a dedicated-thread pool is the right shape
+//! for CPU-bound PJRT execution anyway).
+//!
+//! Per-job wall time is returned with each result so the coordinator can
+//! compute the modeled ideal-parallel time Σ_t max_i worker_{t,i}
+//! (DESIGN.md §Parallelism-model).
+
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::artifact::Manifest;
+use super::executor::{Engine, Executable, TensorData};
+
+/// Result of one pool job.
+#[derive(Debug)]
+pub struct RunOutput {
+    /// Tuple elements, flat f32.
+    pub outputs: Vec<Vec<f32>>,
+    /// Wall time spent executing on the worker.
+    pub elapsed: Duration,
+}
+
+enum Msg {
+    Run {
+        artifact: usize,
+        inputs: Vec<TensorData>,
+        reply: mpsc::Sender<Result<RunOutput>>,
+    },
+    Shutdown,
+}
+
+struct Worker {
+    tx: mpsc::Sender<Msg>,
+    handle: Option<JoinHandle<()>>,
+}
+
+/// Pool of `n` workers, each serving the same artifact set.
+pub struct WorkerPool {
+    workers: Vec<Worker>,
+    artifact_names: Vec<String>,
+    next: usize,
+}
+
+impl WorkerPool {
+    /// Spawn `n` workers; each loads the manifest at `dir` and compiles
+    /// every artifact in `artifact_names`. Fails fast (joins everything)
+    /// if any worker fails to initialize.
+    pub fn spawn(dir: PathBuf, artifact_names: Vec<String>, n: usize) -> Result<WorkerPool> {
+        assert!(n >= 1, "pool needs at least one worker");
+        let mut workers = Vec::with_capacity(n);
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        for wid in 0..n {
+            let (tx, rx) = mpsc::channel::<Msg>();
+            let names = artifact_names.clone();
+            let dir = dir.clone();
+            let ready = ready_tx.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("optex-worker-{wid}"))
+                .spawn(move || worker_main(dir, names, rx, ready))
+                .context("spawning worker thread")?;
+            workers.push(Worker { tx, handle: Some(handle) });
+        }
+        drop(ready_tx);
+        // Collect one readiness report per worker.
+        for _ in 0..n {
+            match ready_rx.recv() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => {
+                    // tear down the rest before surfacing the error
+                    for w in &workers {
+                        let _ = w.tx.send(Msg::Shutdown);
+                    }
+                    return Err(e.context("worker initialization failed"));
+                }
+                Err(_) => bail!("worker died during initialization"),
+            }
+        }
+        Ok(WorkerPool { workers, artifact_names, next: 0 })
+    }
+
+    pub fn size(&self) -> usize {
+        self.workers.len()
+    }
+
+    fn artifact_index(&self, name: &str) -> Result<usize> {
+        self.artifact_names
+            .iter()
+            .position(|n| n == name)
+            .ok_or_else(|| anyhow!("pool does not serve artifact {name:?}"))
+    }
+
+    /// Run one job on a specific worker, blocking.
+    pub fn run_on(
+        &self,
+        worker: usize,
+        artifact: &str,
+        inputs: Vec<TensorData>,
+    ) -> Result<RunOutput> {
+        let aidx = self.artifact_index(artifact)?;
+        let (reply, rx) = mpsc::channel();
+        self.workers[worker]
+            .tx
+            .send(Msg::Run { artifact: aidx, inputs, reply })
+            .map_err(|_| anyhow!("worker {worker} is gone"))?;
+        rx.recv().map_err(|_| anyhow!("worker {worker} dropped the reply"))?
+    }
+
+    /// Run one job on the next worker round-robin (single-caller use).
+    pub fn run(&mut self, artifact: &str, inputs: Vec<TensorData>) -> Result<RunOutput> {
+        let w = self.next;
+        self.next = (self.next + 1) % self.workers.len();
+        self.run_on(w, artifact, inputs)
+    }
+
+    /// Scatter `jobs` across distinct workers (job i -> worker i % n) and
+    /// gather results in job order. This is the Algo-1 line-6 fan-out.
+    pub fn scatter(
+        &self,
+        jobs: Vec<(&str, Vec<TensorData>)>,
+    ) -> Result<Vec<Result<RunOutput>>> {
+        let mut pending = Vec::with_capacity(jobs.len());
+        for (i, (artifact, inputs)) in jobs.into_iter().enumerate() {
+            let aidx = self.artifact_index(artifact)?;
+            let (reply, rx) = mpsc::channel();
+            let w = i % self.workers.len();
+            self.workers[w]
+                .tx
+                .send(Msg::Run { artifact: aidx, inputs, reply })
+                .map_err(|_| anyhow!("worker {w} is gone"))?;
+            pending.push(rx);
+        }
+        Ok(pending
+            .into_iter()
+            .map(|rx| rx.recv().unwrap_or_else(|_| Err(anyhow!("worker dropped reply"))))
+            .collect())
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        for w in &self.workers {
+            let _ = w.tx.send(Msg::Shutdown);
+        }
+        for w in &mut self.workers {
+            if let Some(h) = w.handle.take() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+fn worker_main(
+    dir: PathBuf,
+    names: Vec<String>,
+    rx: mpsc::Receiver<Msg>,
+    ready: mpsc::Sender<Result<()>>,
+) {
+    // Initialize engine + executables inside the thread (non-Send types).
+    let init = (|| -> Result<Vec<Executable>> {
+        let manifest = Manifest::load(&dir)?;
+        let engine = Engine::cpu()?;
+        names
+            .iter()
+            .map(|n| engine.load(manifest.get(n)?))
+            .collect()
+    })();
+    let exes = match init {
+        Ok(exes) => {
+            let _ = ready.send(Ok(()));
+            exes
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            Msg::Shutdown => break,
+            Msg::Run { artifact, inputs, reply } => {
+                let t0 = Instant::now();
+                let result = (|| -> Result<RunOutput> {
+                    let exe = exes
+                        .get(artifact)
+                        .ok_or_else(|| anyhow!("bad artifact index {artifact}"))?;
+                    let borrowed: Vec<_> = inputs.iter().map(|t| t.borrow()).collect();
+                    let outputs = exe.run(&borrowed)?;
+                    Ok(RunOutput { outputs, elapsed: t0.elapsed() })
+                })();
+                // Receiver may have given up; ignore send failure.
+                let _ = reply.send(result);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    //! Pool behaviour with real artifacts is covered in
+    //! rust/tests/hlo_roundtrip.rs; here we test the failure paths that
+    //! need no PJRT.
+    use super::*;
+
+    #[test]
+    fn spawn_fails_cleanly_on_missing_manifest() {
+        match WorkerPool::spawn(
+            PathBuf::from("/nonexistent/optex"),
+            vec!["gp_test".into()],
+            2,
+        ) {
+            Ok(_) => panic!("spawn should fail on missing manifest"),
+            Err(err) => {
+                let msg = format!("{err:#}");
+                assert!(msg.contains("manifest"), "{msg}");
+            }
+        }
+    }
+}

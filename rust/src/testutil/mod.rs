@@ -1,0 +1,112 @@
+//! Property-testing mini-framework (S18 in DESIGN.md — `proptest` is not
+//! available offline).
+//!
+//! [`check`] runs a property over many seeded cases; on failure it panics
+//! with the case index and the exact seed so the failure replays with
+//! `PROP_SEED=<seed> cargo test <name>`. No shrinking — cases are kept
+//! small instead.
+
+pub mod prop {
+    use crate::util::Rng;
+
+    /// Number of cases per property (override with env `PROP_CASES`).
+    pub fn default_cases() -> usize {
+        std::env::var("PROP_CASES")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(64)
+    }
+
+    /// Run `property` over seeded cases. Return `Err(msg)` to fail a case.
+    ///
+    /// `PROP_SEED=<n>` pins a single case for replay.
+    pub fn check<F>(name: &str, property: F)
+    where
+        F: Fn(&mut Rng) -> Result<(), String>,
+    {
+        if let Ok(seed) = std::env::var("PROP_SEED").map(|s| s.parse::<u64>().unwrap()) {
+            let mut rng = Rng::new(seed);
+            if let Err(msg) = property(&mut rng) {
+                panic!("property {name} failed (replay seed {seed}): {msg}");
+            }
+            return;
+        }
+        let cases = default_cases();
+        for case in 0..cases {
+            let seed = 0x9E3779B97F4A7C15u64
+                .wrapping_mul(case as u64 + 1)
+                .wrapping_add(0x5EED);
+            let mut rng = Rng::new(seed);
+            if let Err(msg) = property(&mut rng) {
+                panic!(
+                    "property {name} failed on case {case}/{cases} \
+                     (replay with PROP_SEED={seed}): {msg}"
+                );
+            }
+        }
+    }
+
+    /// Assert helper producing property-friendly errors.
+    #[macro_export]
+    macro_rules! prop_assert {
+        ($cond:expr, $($fmt:tt)+) => {
+            if !$cond {
+                return Err(format!($($fmt)+));
+            }
+        };
+    }
+
+    /// Random SPD matrix (row-major) with the given jitter.
+    pub fn gen_spd(rng: &mut Rng, n: usize, jitter: f64) -> Vec<f64> {
+        let m: Vec<f64> = (0..n * n).map(|_| rng.normal()).collect();
+        let mut a = vec![0.0; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                let mut s = 0.0;
+                for k in 0..n {
+                    s += m[i * n + k] * m[j * n + k];
+                }
+                a[i * n + j] = s + if i == j { jitter } else { 0.0 };
+            }
+        }
+        a
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::prop;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = std::cell::Cell::new(0usize);
+        prop::check("trivial", |rng| {
+            count.set(count.get() + 1);
+            let x = rng.uniform();
+            if (0.0..1.0).contains(&x) {
+                Ok(())
+            } else {
+                Err(format!("uniform out of range: {x}"))
+            }
+        });
+        assert_eq!(count.get(), prop::default_cases());
+        let _ = &mut count;
+    }
+
+    #[test]
+    #[should_panic(expected = "replay with PROP_SEED=")]
+    fn failing_property_reports_seed() {
+        prop::check("always_fails", |_| Err("boom".into()));
+    }
+
+    #[test]
+    fn gen_spd_is_spd() {
+        prop::check("spd", |rng| {
+            let n = 1 + rng.below(12);
+            let a = prop::gen_spd(rng, n, 0.5);
+            crate::gp::cholesky::chol_solve(&a, n, &vec![1.0; n])
+                .map(|_| ())
+                .map_err(|e| format!("not SPD: {e}"))
+        });
+    }
+}

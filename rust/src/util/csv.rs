@@ -1,0 +1,95 @@
+//! Tiny CSV writer for figure series and metrics logs.
+//!
+//! Only what the figure harness needs: header + homogeneous numeric rows
+//! with an optional leading string column. Values are written with enough
+//! precision to round-trip f64 through plotting tools.
+
+use std::fs::{self, File};
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+/// Append-only CSV file writer.
+pub struct CsvWriter {
+    out: BufWriter<File>,
+    cols: usize,
+}
+
+impl CsvWriter {
+    /// Create (truncating) a CSV at `path`, writing the header row.
+    /// Parent directories are created as needed.
+    pub fn create(path: &Path, header: &[&str]) -> std::io::Result<CsvWriter> {
+        if let Some(dir) = path.parent() {
+            fs::create_dir_all(dir)?;
+        }
+        let mut out = BufWriter::new(File::create(path)?);
+        writeln!(out, "{}", header.join(","))?;
+        Ok(CsvWriter { out, cols: header.len() })
+    }
+
+    /// Write one numeric row. Panics (debug) if the arity mismatches.
+    pub fn row(&mut self, values: &[f64]) -> std::io::Result<()> {
+        debug_assert_eq!(values.len(), self.cols, "csv arity mismatch");
+        let mut line = String::with_capacity(values.len() * 12);
+        for (i, v) in values.iter().enumerate() {
+            if i > 0 {
+                line.push(',');
+            }
+            line.push_str(&format_num(*v));
+        }
+        writeln!(self.out, "{line}")
+    }
+
+    /// Write a row with a leading tag column (series label).
+    pub fn tagged_row(&mut self, tag: &str, values: &[f64]) -> std::io::Result<()> {
+        debug_assert_eq!(values.len() + 1, self.cols, "csv arity mismatch");
+        let mut line = String::with_capacity(16 + values.len() * 12);
+        line.push_str(tag);
+        for v in values {
+            line.push(',');
+            line.push_str(&format_num(*v));
+        }
+        writeln!(self.out, "{line}")
+    }
+
+    pub fn flush(&mut self) -> std::io::Result<()> {
+        self.out.flush()
+    }
+}
+
+fn format_num(v: f64) -> String {
+    if v.is_finite() && v.fract() == 0.0 && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v:.6e}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_header_and_rows() {
+        let dir = std::env::temp_dir().join("optex_csv_test");
+        let path = dir.join("t.csv");
+        {
+            let mut w = CsvWriter::create(&path, &["method", "iter", "loss"]).unwrap();
+            w.tagged_row("optex", &[1.0, 0.5]).unwrap();
+            w.tagged_row("vanilla", &[2.0, 0.25]).unwrap();
+            w.flush().unwrap();
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines[0], "method,iter,loss");
+        assert!(lines[1].starts_with("optex,1,"));
+        assert_eq!(lines.len(), 3);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn numeric_formatting() {
+        assert_eq!(format_num(3.0), "3");
+        assert!(format_num(0.5).contains('e'));
+        assert!(format_num(f64::NAN).contains("NaN") || !format_num(f64::NAN).is_empty());
+    }
+}

@@ -1,0 +1,10 @@
+//! Cross-cutting utility substrates (all built from scratch — the offline
+//! crate set has no rand / serde_json / csv / timing helpers).
+
+pub mod csv;
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod timer;
+
+pub use rng::Rng;

@@ -1,0 +1,112 @@
+//! Lightweight phase timers for the coordinator hot loop and the bench
+//! harness. Accumulates per-label durations with zero allocation after
+//! the first occurrence of a label.
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+/// Accumulating multi-phase timer.
+#[derive(Debug, Default)]
+pub struct PhaseTimer {
+    acc: BTreeMap<&'static str, (Duration, u64)>,
+}
+
+impl PhaseTimer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time a closure under `label`.
+    pub fn time<T>(&mut self, label: &'static str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.add(label, t0.elapsed());
+        out
+    }
+
+    /// Record an externally measured duration.
+    pub fn add(&mut self, label: &'static str, d: Duration) {
+        let e = self.acc.entry(label).or_insert((Duration::ZERO, 0));
+        e.0 += d;
+        e.1 += 1;
+    }
+
+    /// Total time under a label.
+    pub fn total(&self, label: &str) -> Duration {
+        self.acc.get(label).map(|e| e.0).unwrap_or(Duration::ZERO)
+    }
+
+    /// Call count under a label.
+    pub fn count(&self, label: &str) -> u64 {
+        self.acc.get(label).map(|e| e.1).unwrap_or(0)
+    }
+
+    /// Human-readable summary sorted by total time, descending.
+    pub fn report(&self) -> String {
+        let mut rows: Vec<_> = self.acc.iter().collect();
+        rows.sort_by(|a, b| b.1 .0.cmp(&a.1 .0));
+        let mut s = String::new();
+        for (label, (d, n)) in rows {
+            s.push_str(&format!(
+                "{label:24} {:>10.3}s  x{n:<7} {:>9.3}ms/call\n",
+                d.as_secs_f64(),
+                d.as_secs_f64() * 1e3 / (*n).max(1) as f64
+            ));
+        }
+        s
+    }
+
+    pub fn labels(&self) -> impl Iterator<Item = &'static str> + '_ {
+        self.acc.keys().copied()
+    }
+}
+
+/// One-shot stopwatch.
+pub struct Stopwatch(Instant);
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch(Instant::now())
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.0.elapsed()
+    }
+
+    pub fn secs(&self) -> f64 {
+        self.0.elapsed().as_secs_f64()
+    }
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::start()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates_labels() {
+        let mut t = PhaseTimer::new();
+        let v = t.time("a", || 7);
+        assert_eq!(v, 7);
+        t.time("a", || ());
+        t.add("b", Duration::from_millis(5));
+        assert_eq!(t.count("a"), 2);
+        assert_eq!(t.count("b"), 1);
+        assert!(t.total("b") >= Duration::from_millis(5));
+        assert_eq!(t.count("missing"), 0);
+        let rep = t.report();
+        assert!(rep.contains('a') && rep.contains('b'));
+    }
+
+    #[test]
+    fn stopwatch_monotone() {
+        let s = Stopwatch::start();
+        std::thread::sleep(Duration::from_millis(2));
+        assert!(s.secs() > 0.0);
+    }
+}

@@ -1,0 +1,247 @@
+//! Workload factory: config → [`GradSource`] + matching GP artifact name.
+//!
+//! This is the launcher's dispatch table. Synthetic workloads default to
+//! the native analytic backend (`hlo_workload = true` switches them to
+//! their artifacts); model workloads always run through HLO since there
+//! is no native implementation of the big networks (by design — L2 owns
+//! the models).
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::config::RunConfig;
+use crate::datasets::{corpus, Corpus, ImageDataset, ImageKind};
+use crate::runtime::Manifest;
+use crate::util::Rng;
+use crate::workloads::hlo::{HloSource, MlpProvider, SynthProvider, TfmProvider};
+use crate::workloads::synthetic::SynthFn;
+use crate::workloads::{GradSource, NativeSynth};
+
+/// Number of procedurally generated train images per image workload.
+const IMG_TRAIN_N: usize = 2000;
+
+/// A built workload: the oracle plus the name of its paired gp_estimate
+/// artifact (when one exists in the manifest).
+pub struct Workload {
+    pub source: Box<dyn GradSource>,
+    /// gp_estimate artifact for the HLO estimation backend.
+    pub gp_artifact: Option<String>,
+    /// Pretty name for logs.
+    pub name: String,
+}
+
+/// Build the [`GradSource`] described by `cfg.workload`.
+pub fn build(cfg: &RunConfig) -> Result<Workload> {
+    let n = cfg.optex.parallelism;
+    let seed = cfg.seed;
+    let w = cfg.workload.as_str();
+
+    if let Some(f) = SynthFn::parse(w) {
+        if cfg.hlo_workload {
+            let manifest = Manifest::load(&cfg.artifacts_dir)?;
+            let artifact = manifest
+                .by_family("synth")
+                .find(|a| {
+                    a.meta_str("fn").map(|s| s == w).unwrap_or(false)
+                        && a.dim().map(|d| d == cfg.synth_dim).unwrap_or(false)
+                })
+                .map(|a| a.name.clone())
+                .ok_or_else(|| {
+                    anyhow!(
+                        "no synth artifact for {w} at d={} (re-run `make artifacts`)",
+                        cfg.synth_dim
+                    )
+                })?;
+            let provider = SynthProvider { noise_std: 0.0, rng: Rng::new(seed) };
+            let source = HloSource::new(
+                cfg.artifacts_dir.clone(),
+                &artifact,
+                n,
+                Box::new(provider),
+                cfg.noise_std,
+                seed,
+            )?;
+            return Ok(Workload {
+                source: Box::new(source),
+                gp_artifact: Some("gp_synth".into()),
+                name: format!("{w}(hlo,d={})", cfg.synth_dim),
+            });
+        }
+        let source = NativeSynth::new(f, cfg.synth_dim, cfg.noise_std, seed);
+        return Ok(Workload {
+            source: Box::new(source),
+            gp_artifact: Some("gp_synth".into()),
+            name: format!("{w}(native,d={})", cfg.synth_dim),
+        });
+    }
+
+    const MODEL_WORKLOADS: &[&str] =
+        &["mnist", "fmnist", "cifar", "shakespeare", "tfm_char", "hp", "mlp_test"];
+    if !MODEL_WORKLOADS.contains(&w) {
+        bail!(
+            "unknown workload {w:?} (synthetic: ackley|sphere|rosenbrock; \
+             models: mnist|fmnist|cifar|shakespeare|hp; rl via `optex rl`)"
+        );
+    }
+    // Model workloads need the manifest for shapes.
+    let manifest = Manifest::load(&cfg.artifacts_dir)
+        .context("model workloads require AOT artifacts")?;
+    match w {
+        "mnist" | "fmnist" => {
+            let kind = ImageKind::parse(w).unwrap();
+            let spec = manifest.get("mlp_mnist")?;
+            let batch = spec.meta_usize("batch")?;
+            let ds = ImageDataset::generate(kind, IMG_TRAIN_N, seed ^ 0xDA7A);
+            let provider = MlpProvider::new(ds, batch, Rng::new(seed ^ 0xBA7C4));
+            let source = HloSource::new(
+                cfg.artifacts_dir.clone(),
+                "mlp_mnist",
+                n,
+                Box::new(provider),
+                0.0,
+                seed,
+            )?;
+            Ok(Workload {
+                source: Box::new(source),
+                gp_artifact: Some("gp_mnist".into()),
+                name: format!("{w}(mlp_mnist)"),
+            })
+        }
+        "cifar" => {
+            let spec = manifest.get("mlp_cifar")?;
+            let batch = spec.meta_usize("batch")?;
+            let ds = ImageDataset::generate(ImageKind::CifarLike, IMG_TRAIN_N, seed ^ 0xDA7A);
+            let provider = MlpProvider::new(ds, batch, Rng::new(seed ^ 0xBA7C4));
+            let source = HloSource::new(
+                cfg.artifacts_dir.clone(),
+                "mlp_cifar",
+                n,
+                Box::new(provider),
+                0.0,
+                seed,
+            )?;
+            Ok(Workload {
+                source: Box::new(source),
+                gp_artifact: Some("gp_cifar".into()),
+                name: "cifar(mlp_cifar)".into(),
+            })
+        }
+        "shakespeare" | "tfm_char" | "hp" => {
+            let spec = manifest.get("tfm_char")?;
+            let batch = spec.meta_usize("batch")?;
+            let seq = spec.meta_usize("seq")?;
+            let text = if w == "hp" {
+                corpus::synthetic_narrative(seed ^ 0x40, 200_000)
+            } else {
+                corpus::shakespeare().to_string()
+            };
+            let provider =
+                TfmProvider::new(Corpus::from_text(&text), batch, seq + 1, Rng::new(seed ^ 0x7F4));
+            let source = HloSource::new(
+                cfg.artifacts_dir.clone(),
+                "tfm_char",
+                n,
+                Box::new(provider),
+                0.0,
+                seed,
+            )?;
+            Ok(Workload {
+                source: Box::new(source),
+                gp_artifact: Some("gp_tfm".into()),
+                name: format!("{w}(tfm_char)"),
+            })
+        }
+        // Test-profile artifacts, exercised by integration tests.
+        "mlp_test" => {
+            let spec = manifest.get("mlp_test")?;
+            let batch = spec.meta_usize("batch")?;
+            let in_dim = spec.meta_usize("in_dim")?;
+            // mlp_test takes 16-dim inputs; reuse mnist-like pixels cropped.
+            let ds = crop_dataset(
+                ImageDataset::generate(ImageKind::MnistLike, 200, seed),
+                in_dim,
+                spec.meta_usize("out_dim")?,
+            );
+            let provider = MlpProvider::new(ds, batch, Rng::new(seed));
+            let source = HloSource::new(
+                cfg.artifacts_dir.clone(),
+                "mlp_test",
+                n,
+                Box::new(provider),
+                0.0,
+                seed,
+            )?;
+            Ok(Workload {
+                source: Box::new(source),
+                gp_artifact: Some("gp_mlp_test".into()),
+                name: "mlp_test".into(),
+            })
+        }
+        other => unreachable!("filtered above: {other}"),
+    }
+}
+
+/// Crop an image dataset to `in_dim` pixels / `classes` labels so the
+/// tiny test-profile artifacts can be driven by real samplers.
+fn crop_dataset(mut ds: ImageDataset, in_dim: usize, classes: usize) -> ImageDataset {
+    let n = ds.len();
+    let mut x = Vec::with_capacity(n * in_dim);
+    for i in 0..n {
+        x.extend_from_slice(&ds.image(i)[..in_dim]);
+    }
+    for y in &mut ds.y {
+        *y %= classes as u8;
+    }
+    ds.x = x;
+    ds.dim = in_dim;
+    ds.n_classes = classes;
+    ds
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::RunConfig;
+
+    #[test]
+    fn synthetic_native_builds_without_artifacts() {
+        let mut cfg = RunConfig::default();
+        cfg.workload = "sphere".into();
+        cfg.synth_dim = 64;
+        cfg.artifacts_dir = "/nonexistent".into();
+        let w = build(&cfg).unwrap();
+        assert_eq!(w.source.dim(), 64);
+        assert_eq!(w.source.backend_name(), "native");
+    }
+
+    #[test]
+    fn unknown_workload_is_an_error() {
+        let mut cfg = RunConfig::default();
+        cfg.workload = "imagenet".into();
+        let err = match build(&cfg) {
+            Ok(_) => panic!("expected error"),
+            Err(e) => format!("{e:#}"),
+        };
+        assert!(err.contains("unknown workload"), "{err}");
+    }
+
+    #[test]
+    fn model_workload_without_artifacts_fails_helpfully() {
+        let mut cfg = RunConfig::default();
+        cfg.workload = "mnist".into();
+        cfg.artifacts_dir = "/nonexistent".into();
+        let err = match build(&cfg) {
+            Ok(_) => panic!("expected error"),
+            Err(e) => format!("{e:#}"),
+        };
+        assert!(err.contains("artifacts"), "{err}");
+    }
+
+    #[test]
+    fn crop_dataset_shapes() {
+        let ds = ImageDataset::generate(ImageKind::MnistLike, 10, 0);
+        let c = crop_dataset(ds, 16, 4);
+        assert_eq!(c.dim, 16);
+        assert_eq!(c.image(3).len(), 16);
+        assert!(c.y.iter().all(|&y| y < 4));
+    }
+}

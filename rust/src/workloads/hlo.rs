@@ -1,0 +1,283 @@
+//! HLO-artifact-backed gradient oracles — the production request path.
+//!
+//! A [`HloSource`] owns an N-worker [`WorkerPool`] (one PJRT client +
+//! compiled executable per worker) and a [`BatchProvider`] that turns a
+//! parameter vector into the artifact's concrete inputs (sampling a data
+//! minibatch where the workload is stochastic) and parses the outputs.
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::datasets::{Corpus, ImageDataset};
+use crate::runtime::{Manifest, TensorData, WorkerPool};
+use crate::util::Rng;
+use crate::workloads::{Eval, GradSource};
+
+/// Turns θ into artifact inputs and artifact outputs into an [`Eval`].
+pub trait BatchProvider {
+    /// Build the artifact input list (θ first, then sampled data).
+    fn make_inputs(&mut self, params: &[f32]) -> Vec<TensorData>;
+
+    /// Parse the artifact's output tuple into (loss, grad, aux).
+    fn parse(&self, outputs: Vec<Vec<f32>>) -> Result<(f64, Vec<f32>, Option<f64>)>;
+
+    /// Initial parameter scale (init is glorot-ish normals × scale).
+    fn init_scale(&self) -> f32 {
+        0.05
+    }
+}
+
+/// Synthetic-function artifact: input (θ), output (f, ∇f). Optional
+/// gradient noise is added rust-side (σ of Assump. 1).
+pub struct SynthProvider {
+    pub noise_std: f64,
+    pub rng: Rng,
+}
+
+impl BatchProvider for SynthProvider {
+    fn make_inputs(&mut self, params: &[f32]) -> Vec<TensorData> {
+        vec![TensorData::F32(params.to_vec())]
+    }
+
+    fn parse(&self, mut outputs: Vec<Vec<f32>>) -> Result<(f64, Vec<f32>, Option<f64>)> {
+        if outputs.len() != 2 {
+            return Err(anyhow!("synth artifact: expected (f, grad)"));
+        }
+        let grad = outputs.pop().unwrap();
+        let loss = outputs[0][0] as f64;
+        Ok((loss, grad, None))
+    }
+}
+
+/// Image-classifier artifact: (θ, x (B×in), y (B×10)) → (loss, grad, acc).
+pub struct MlpProvider {
+    pub dataset: ImageDataset,
+    pub batch: usize,
+    pub rng: Rng,
+    x_buf: Vec<f32>,
+    y_buf: Vec<f32>,
+}
+
+impl MlpProvider {
+    pub fn new(dataset: ImageDataset, batch: usize, rng: Rng) -> MlpProvider {
+        MlpProvider { dataset, batch, rng, x_buf: Vec::new(), y_buf: Vec::new() }
+    }
+}
+
+impl BatchProvider for MlpProvider {
+    fn make_inputs(&mut self, params: &[f32]) -> Vec<TensorData> {
+        self.dataset
+            .sample_batch(self.batch, &mut self.rng, &mut self.x_buf, &mut self.y_buf);
+        vec![
+            TensorData::F32(params.to_vec()),
+            TensorData::F32(self.x_buf.clone()),
+            TensorData::F32(self.y_buf.clone()),
+        ]
+    }
+
+    fn parse(&self, mut outputs: Vec<Vec<f32>>) -> Result<(f64, Vec<f32>, Option<f64>)> {
+        if outputs.len() != 3 {
+            return Err(anyhow!("mlp artifact: expected (loss, grad, acc)"));
+        }
+        let acc = outputs.pop().unwrap()[0] as f64;
+        let grad = outputs.pop().unwrap();
+        let loss = outputs[0][0] as f64;
+        Ok((loss, grad, Some(acc)))
+    }
+}
+
+/// Char-transformer artifact: (θ, tokens (B×(L+1)) i32) → (loss, grad).
+pub struct TfmProvider {
+    pub corpus: Corpus,
+    pub batch: usize,
+    pub seq_plus_1: usize,
+    pub rng: Rng,
+    tok_buf: Vec<i32>,
+}
+
+impl TfmProvider {
+    pub fn new(corpus: Corpus, batch: usize, seq_plus_1: usize, rng: Rng) -> TfmProvider {
+        TfmProvider { corpus, batch, seq_plus_1, rng, tok_buf: Vec::new() }
+    }
+}
+
+impl BatchProvider for TfmProvider {
+    fn make_inputs(&mut self, params: &[f32]) -> Vec<TensorData> {
+        self.corpus
+            .sample_windows(self.batch, self.seq_plus_1, &mut self.rng, &mut self.tok_buf);
+        vec![
+            TensorData::F32(params.to_vec()),
+            TensorData::I32(self.tok_buf.clone()),
+        ]
+    }
+
+    fn parse(&self, mut outputs: Vec<Vec<f32>>) -> Result<(f64, Vec<f32>, Option<f64>)> {
+        if outputs.len() != 2 {
+            return Err(anyhow!("tfm artifact: expected (loss, grad)"));
+        }
+        let grad = outputs.pop().unwrap();
+        let loss = outputs[0][0] as f64;
+        Ok((loss, grad, None))
+    }
+
+    fn init_scale(&self) -> f32 {
+        0.02
+    }
+}
+
+/// HLO-backed [`GradSource`]: artifact + pool + provider.
+pub struct HloSource {
+    pool: WorkerPool,
+    artifact: String,
+    provider: Box<dyn BatchProvider>,
+    d: usize,
+    noise_std: f64,
+    noise_rng: Rng,
+}
+
+impl HloSource {
+    /// Build with an `n_workers`-wide pool serving `artifact`.
+    pub fn new(
+        artifacts_dir: PathBuf,
+        artifact: &str,
+        n_workers: usize,
+        provider: Box<dyn BatchProvider>,
+        noise_std: f64,
+        seed: u64,
+    ) -> Result<HloSource> {
+        let manifest = Manifest::load(&artifacts_dir)?;
+        let d = manifest
+            .get(artifact)
+            .with_context(|| format!("workload artifact {artifact}"))?
+            .dim()?;
+        let pool = WorkerPool::spawn(artifacts_dir, vec![artifact.to_string()], n_workers)?;
+        Ok(HloSource {
+            pool,
+            artifact: artifact.to_string(),
+            provider,
+            d,
+            noise_std,
+            noise_rng: Rng::new(seed ^ 0x401_5E),
+        })
+    }
+
+    pub fn pool(&self) -> &WorkerPool {
+        &self.pool
+    }
+}
+
+impl GradSource for HloSource {
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn eval_batch(&mut self, points: &[&[f32]]) -> Result<Vec<Eval>> {
+        // Sample all minibatches up front (provider RNG stays sequential
+        // and reproducible), then scatter over the pool.
+        let jobs: Vec<(&str, Vec<TensorData>)> = points
+            .iter()
+            .map(|p| (self.artifact.as_str(), self.provider.make_inputs(p)))
+            .collect();
+        let results = self.pool.scatter(jobs)?;
+        let mut evals = Vec::with_capacity(points.len());
+        for r in results {
+            let r = r?;
+            let elapsed = r.elapsed;
+            let (loss, mut grad, aux) = self.provider.parse(r.outputs)?;
+            if grad.len() != self.d {
+                return Err(anyhow!(
+                    "artifact {} returned grad of {} dims, expected {}",
+                    self.artifact,
+                    grad.len(),
+                    self.d
+                ));
+            }
+            if self.noise_std > 0.0 {
+                let s = self.noise_std as f32;
+                for g in &mut grad {
+                    *g += self.noise_rng.normal() as f32 * s;
+                }
+            }
+            evals.push(Eval { loss, grad, aux, elapsed });
+        }
+        Ok(evals)
+    }
+
+    fn value(&mut self, point: &[f32]) -> Result<f64> {
+        // One extra forward+backward (the artifacts are fused loss+grad);
+        // only used for logging, never in the optimization loop.
+        let inputs = self.provider.make_inputs(point);
+        let out = self.pool.run_on(0, &self.artifact, inputs)?;
+        let (loss, _, _) = self.provider.parse(out.outputs)?;
+        Ok(loss)
+    }
+
+    fn init_params(&self, rng: &mut Rng) -> Vec<f32> {
+        let mut rng = rng.fork(23);
+        let scale = self.provider.init_scale();
+        let mut p = vec![0.0f32; self.d];
+        rng.fill_normal(&mut p, scale);
+        p
+    }
+
+    fn backend_name(&self) -> &'static str {
+        "hlo"
+    }
+}
+
+/// Wall-time helper reused by RL: largest elapsed among a set of evals.
+pub fn max_elapsed(evals: &[Eval]) -> Duration {
+    evals.iter().map(|e| e.elapsed).max().unwrap_or(Duration::ZERO)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::{ImageKind, N_CLASSES};
+
+    #[test]
+    fn mlp_provider_produces_valid_onehot_batches() {
+        let ds = ImageDataset::generate(ImageKind::MnistLike, 30, 0);
+        let mut p = MlpProvider::new(ds, 4, Rng::new(0));
+        let inputs = p.make_inputs(&[0.0; 8]);
+        assert_eq!(inputs.len(), 3);
+        match (&inputs[1], &inputs[2]) {
+            (TensorData::F32(x), TensorData::F32(y)) => {
+                assert_eq!(x.len(), 4 * 784);
+                assert_eq!(y.len(), 4 * N_CLASSES);
+            }
+            _ => panic!("wrong dtypes"),
+        }
+        // consecutive calls must sample fresh batches (stochastic oracle)
+        let b = p.make_inputs(&[0.0; 8]);
+        match (&inputs[1], &b[1]) {
+            (TensorData::F32(x1), TensorData::F32(x2)) => assert_ne!(x1, x2),
+            _ => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn providers_reject_malformed_outputs() {
+        let p = SynthProvider { noise_std: 0.0, rng: Rng::new(0) };
+        assert!(p.parse(vec![vec![1.0]]).is_err());
+        let ds = ImageDataset::generate(ImageKind::MnistLike, 10, 0);
+        let mp = MlpProvider::new(ds, 2, Rng::new(0));
+        assert!(mp.parse(vec![vec![1.0], vec![0.0; 4]]).is_err());
+    }
+
+    #[test]
+    fn tfm_provider_windows_in_vocab() {
+        let c = Corpus::from_text(crate::datasets::corpus::shakespeare());
+        let mut p = TfmProvider::new(c, 2, 9, Rng::new(0));
+        let inputs = p.make_inputs(&[0.0; 4]);
+        match &inputs[1] {
+            TensorData::I32(toks) => {
+                assert_eq!(toks.len(), 2 * 9);
+                assert!(toks.iter().all(|&t| (0..96).contains(&t)));
+            }
+            _ => panic!("wrong dtype"),
+        }
+    }
+}

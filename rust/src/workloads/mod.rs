@@ -1,0 +1,162 @@
+//! Workload abstraction: every optimization target (synthetic function,
+//! image classifier, char transformer, q-network) is a [`GradSource`] —
+//! a stochastic first-order oracle over a flat θ ∈ R^d (the paper's
+//! problem setup, eq. (1)).
+//!
+//! Two backends per workload:
+//!   * native rust (synthetic functions, q-nets) — used for fast figure
+//!     sweeps and as the oracle the HLO path is validated against,
+//!   * AOT HLO artifacts through the PJRT worker pool (`hlo.rs`) — the
+//!     production request path.
+
+pub mod factory;
+pub mod hlo;
+pub mod synthetic;
+
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::util::Rng;
+use synthetic::SynthFn;
+
+/// One ground-truth gradient evaluation ∇f(θ) (paper Algo. 1 line 7).
+#[derive(Clone, Debug)]
+pub struct Eval {
+    /// Sampled loss f(θ) (== F(θ) for deterministic workloads).
+    pub loss: f64,
+    /// ∇f(θ), full dimension.
+    pub grad: Vec<f32>,
+    /// Task metric (classifier accuracy, etc.), when the workload has one.
+    pub aux: Option<f64>,
+    /// Wall time of this single evaluation (feeds the modeled parallel
+    /// time Σ_t max_i worker_{t,i}).
+    pub elapsed: Duration,
+}
+
+/// A stochastic first-order oracle.
+pub trait GradSource {
+    /// Parameter dimension d.
+    fn dim(&self) -> usize;
+
+    /// Evaluate ground-truth gradients at each point — the Algo-1 line-6
+    /// fan-out. One `Eval` per point, in order. Implementations run the
+    /// points concurrently where the backend supports it.
+    fn eval_batch(&mut self, points: &[&[f32]]) -> Result<Vec<Eval>>;
+
+    /// F(θ) only (used for optimality-gap logging on synthetic runs;
+    /// stochastic workloads return a fresh sample of f(θ)).
+    fn value(&mut self, point: &[f32]) -> Result<f64>;
+
+    /// Initial iterate θ₀.
+    fn init_params(&self, rng: &mut Rng) -> Vec<f32>;
+
+    /// Human-readable backend tag ("native", "hlo").
+    fn backend_name(&self) -> &'static str;
+
+    /// Hook called by the Driver at the start of every sequential
+    /// iteration with the current iterate — stateful oracles use it
+    /// (e.g. DQN target-network sync). Default: no-op.
+    fn on_iteration(&mut self, _t: usize, _theta: &[f32]) {}
+}
+
+/// Native analytic synthetic-function oracle with optional Gaussian
+/// gradient noise (Assump. 1: ∇f ~ N(∇F, σ² I); `noise_std` = σ).
+pub struct NativeSynth {
+    pub f: SynthFn,
+    pub d: usize,
+    pub noise_std: f64,
+    rng: Rng,
+}
+
+impl NativeSynth {
+    pub fn new(f: SynthFn, d: usize, noise_std: f64, seed: u64) -> NativeSynth {
+        NativeSynth { f, d, noise_std, rng: Rng::new(seed ^ 0x5EED_0001) }
+    }
+}
+
+impl GradSource for NativeSynth {
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn eval_batch(&mut self, points: &[&[f32]]) -> Result<Vec<Eval>> {
+        let mut out = Vec::with_capacity(points.len());
+        for p in points {
+            let t0 = Instant::now();
+            let mut grad = vec![0.0f32; self.d];
+            let loss = self.f.value_and_grad(p, &mut grad);
+            if self.noise_std > 0.0 {
+                let s = self.noise_std as f32;
+                for g in &mut grad {
+                    *g += self.rng.normal() as f32 * s;
+                }
+            }
+            out.push(Eval { loss, grad, aux: None, elapsed: t0.elapsed() });
+        }
+        Ok(out)
+    }
+
+    fn value(&mut self, point: &[f32]) -> Result<f64> {
+        Ok(self.f.value(point))
+    }
+
+    fn init_params(&self, rng: &mut Rng) -> Vec<f32> {
+        // Start away from the minimizer so the optimality gap is O(1):
+        // θ0 ~ minimizer + offset + N(0, 0.25) (same scheme in the JAX
+        // reference runs).
+        let base = self.f.minimizer_value();
+        let mut rng = rng.fork(17);
+        (0..self.d)
+            .map(|_| base + 2.0 + 0.5 * rng.normal() as f32)
+            .collect()
+    }
+
+    fn backend_name(&self) -> &'static str {
+        "native"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn native_synth_eval_matches_direct() {
+        let mut src = NativeSynth::new(SynthFn::Sphere, 32, 0.0, 0);
+        let p = vec![2.0f32; 32];
+        let evals = src.eval_batch(&[&p, &p]).unwrap();
+        assert_eq!(evals.len(), 2);
+        assert!((evals[0].loss - 2.0).abs() < 1e-5);
+        assert_eq!(evals[0].grad.len(), 32);
+        // deterministic: both points identical
+        assert_eq!(evals[0].grad, evals[1].grad);
+        assert!((src.value(&p).unwrap() - 2.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn noise_perturbs_gradients_with_right_scale() {
+        let mut src = NativeSynth::new(SynthFn::Sphere, 2000, 0.5, 1);
+        let p = vec![1.0f32; 2000];
+        let evals = src.eval_batch(&[&p, &p]).unwrap();
+        let diffs: Vec<f64> = evals[0]
+            .grad
+            .iter()
+            .zip(&evals[1].grad)
+            .map(|(&a, &b)| (a - b) as f64)
+            .collect();
+        let var = diffs.iter().map(|d| d * d).sum::<f64>() / diffs.len() as f64;
+        // difference of two independent N(0, 0.25) draws has var 0.5
+        assert!((var - 0.5).abs() < 0.08, "var={var}");
+    }
+
+    #[test]
+    fn init_params_deterministic_and_offset() {
+        let src = NativeSynth::new(SynthFn::Rosenbrock, 16, 0.0, 0);
+        let a = src.init_params(&mut Rng::new(5));
+        let b = src.init_params(&mut Rng::new(5));
+        assert_eq!(a, b);
+        let mean: f32 = a.iter().sum::<f32>() / 16.0;
+        assert!((mean - 3.0).abs() < 0.6, "mean={mean}"); // 1 + 2 ± noise
+    }
+}

@@ -1,0 +1,207 @@
+//! Synthetic benchmark functions (paper Appx B.2.1 — the *modified*
+//! Ackley / Sphere / Rosenbrock with mean-normalized sums).
+//!
+//! Analytic values and gradients, mirrored by the JAX versions in
+//! `python/compile/model.py` (cross-checked through the HLO artifacts in
+//! `rust/tests/hlo_roundtrip.rs`). Ackley & Sphere minimize at θ* = 0,
+//! Rosenbrock at θ* = 1, all with min F = 0.
+
+use std::f64::consts::{E, PI};
+
+/// Numerical floor under sqrt (matches the +1e-12 in the JAX model).
+const EPS: f64 = 1e-12;
+
+/// Which synthetic function.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SynthFn {
+    Ackley,
+    Sphere,
+    Rosenbrock,
+}
+
+impl SynthFn {
+    pub fn parse(s: &str) -> Option<SynthFn> {
+        match s {
+            "ackley" => Some(SynthFn::Ackley),
+            "sphere" => Some(SynthFn::Sphere),
+            "rosenbrock" => Some(SynthFn::Rosenbrock),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SynthFn::Ackley => "ackley",
+            SynthFn::Sphere => "sphere",
+            SynthFn::Rosenbrock => "rosenbrock",
+        }
+    }
+
+    pub const ALL: [SynthFn; 3] = [SynthFn::Ackley, SynthFn::Sphere, SynthFn::Rosenbrock];
+
+    /// The global minimizer (broadcast over d).
+    pub fn minimizer_value(&self) -> f32 {
+        match self {
+            SynthFn::Rosenbrock => 1.0,
+            _ => 0.0,
+        }
+    }
+
+    /// F(θ).
+    pub fn value(&self, theta: &[f32]) -> f64 {
+        let d = theta.len() as f64;
+        match self {
+            SynthFn::Sphere => {
+                let ms: f64 =
+                    theta.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>() / d;
+                (ms + EPS).sqrt()
+            }
+            SynthFn::Ackley => {
+                let ms: f64 =
+                    theta.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>() / d;
+                let s1 = (ms + EPS).sqrt();
+                let s2: f64 =
+                    theta.iter().map(|&x| (2.0 * PI * x as f64).cos()).sum::<f64>() / d;
+                -20.0 * (-0.2 * s1).exp() - s2.exp() + 20.0 + E
+            }
+            SynthFn::Rosenbrock => {
+                let mut f = 0.0;
+                for w in theta.windows(2) {
+                    let b = w[0] as f64;
+                    let a = w[1] as f64;
+                    f += 100.0 * (a - b) * (a - b) + (1.0 - b) * (1.0 - b);
+                }
+                f / d
+            }
+        }
+    }
+
+    /// ∇F(θ) written into `out`; returns F(θ).
+    pub fn value_and_grad(&self, theta: &[f32], out: &mut [f32]) -> f64 {
+        assert_eq!(theta.len(), out.len());
+        let d = theta.len() as f64;
+        match self {
+            SynthFn::Sphere => {
+                let f = self.value(theta);
+                let inv = 1.0 / (d * f);
+                for (o, &x) in out.iter_mut().zip(theta) {
+                    *o = (x as f64 * inv) as f32;
+                }
+                f
+            }
+            SynthFn::Ackley => {
+                let ms: f64 =
+                    theta.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>() / d;
+                let s1 = (ms + EPS).sqrt();
+                let s2: f64 =
+                    theta.iter().map(|&x| (2.0 * PI * x as f64).cos()).sum::<f64>() / d;
+                let f = -20.0 * (-0.2 * s1).exp() - s2.exp() + 20.0 + E;
+                // d/dx_i [-20 e^{-0.2 s1}] = 4 e^{-0.2 s1} x_i / (d s1)
+                let c1 = 4.0 * (-0.2 * s1).exp() / (d * s1);
+                // d/dx_i [-e^{s2}] = e^{s2} 2π sin(2π x_i) / d
+                let c2 = s2.exp() * 2.0 * PI / d;
+                for (o, &x) in out.iter_mut().zip(theta) {
+                    let x = x as f64;
+                    *o = (c1 * x + c2 * (2.0 * PI * x).sin()) as f32;
+                }
+                f
+            }
+            SynthFn::Rosenbrock => {
+                let n = theta.len();
+                out.iter_mut().for_each(|o| *o = 0.0);
+                let mut f = 0.0;
+                for i in 0..n.saturating_sub(1) {
+                    let b = theta[i] as f64;
+                    let a = theta[i + 1] as f64;
+                    f += 100.0 * (a - b) * (a - b) + (1.0 - b) * (1.0 - b);
+                    let g_b = (-200.0 * (a - b) - 2.0 * (1.0 - b)) / d;
+                    let g_a = 200.0 * (a - b) / d;
+                    out[i] += g_b as f32;
+                    out[i + 1] += g_a as f32;
+                }
+                f / d
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn minima_are_zero() {
+        let z = vec![0.0f32; 32];
+        let o = vec![1.0f32; 32];
+        assert!(SynthFn::Sphere.value(&z) < 1e-5);
+        assert!(SynthFn::Ackley.value(&z) < 1e-3);
+        assert!(SynthFn::Rosenbrock.value(&o) < 1e-12);
+        assert!(SynthFn::Rosenbrock.value(&z) > 0.0);
+    }
+
+    #[test]
+    fn gradients_match_finite_differences() {
+        let mut rng = Rng::new(3);
+        for f in SynthFn::ALL {
+            let theta = rng.normal_vec(24);
+            let mut g = vec![0.0f32; 24];
+            let v = f.value_and_grad(&theta, &mut g);
+            assert!((v - f.value(&theta)).abs() < 1e-9);
+            for j in [0usize, 7, 23] {
+                let h = 1e-4f32;
+                let mut tp = theta.clone();
+                tp[j] += h;
+                let mut tm = theta.clone();
+                tm[j] -= h;
+                let fd = (f.value(&tp) - f.value(&tm)) / (2.0 * h as f64);
+                assert!(
+                    (fd - g[j] as f64).abs() < 2e-2 * (1.0 + fd.abs()),
+                    "{f:?} grad[{j}]: fd={fd} an={}",
+                    g[j]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn gradient_zero_at_minimum() {
+        let mut g = vec![0.0f32; 16];
+        SynthFn::Rosenbrock.value_and_grad(&vec![1.0; 16], &mut g);
+        assert!(g.iter().all(|&x| x.abs() < 1e-6));
+        SynthFn::Ackley.value_and_grad(&vec![0.0; 16], &mut g);
+        assert!(g.iter().all(|&x| x.abs() < 1e-3));
+    }
+
+    #[test]
+    fn gradient_descent_reaches_minimum() {
+        // Per-function learning rates: rosenbrock's valley has curvature
+        // ~O(100·d) under the paper's 1/d normalization.
+        let mut rng = Rng::new(7);
+        for (f, lr, iters, factor) in [
+            (SynthFn::Sphere, 0.05f32, 3000usize, 0.1f64),
+            (SynthFn::Rosenbrock, 1e-4, 5000, 0.5),
+        ] {
+            let mut theta: Vec<f32> =
+                rng.normal_vec(16).iter().map(|x| x * 0.5 + 0.5).collect();
+            let f0 = f.value(&theta);
+            let mut g = vec![0.0f32; 16];
+            for _ in 0..iters {
+                f.value_and_grad(&theta, &mut g);
+                for (t, &gi) in theta.iter_mut().zip(&g) {
+                    *t -= lr * gi * 16.0; // undo the 1/d scaling
+                }
+            }
+            let f1 = f.value(&theta);
+            assert!(f1.is_finite() && f1 < f0 * factor, "{f:?}: {f0} -> {f1}");
+        }
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for f in SynthFn::ALL {
+            assert_eq!(SynthFn::parse(f.name()), Some(f));
+        }
+        assert_eq!(SynthFn::parse("rastrigin"), None);
+    }
+}

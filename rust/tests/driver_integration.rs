@@ -1,0 +1,186 @@
+//! Full-stack coordinator integration over real AOT artifacts
+//! (test profile): Algo. 1 with the HLO workload oracle AND the HLO
+//! estimation backend, plus failure-injection for artifact/config
+//! mismatches. Skips when `artifacts/test` is missing.
+
+use std::path::PathBuf;
+
+use optex::config::{Backend, Method, RunConfig};
+use optex::coordinator::Driver;
+use optex::opt::OptSpec;
+use optex::workloads::factory;
+
+fn test_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts/test");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts/test missing (run `make artifacts`)");
+        None
+    }
+}
+
+fn base_cfg(dir: PathBuf) -> RunConfig {
+    let mut cfg = RunConfig::default();
+    cfg.workload = "mlp_test".into();
+    cfg.method = Method::Optex;
+    cfg.steps = 6;
+    cfg.seed = 0;
+    cfg.optimizer = OptSpec::Sgd { lr: 0.05 };
+    cfg.optex.parallelism = 3;
+    cfg.optex.t0 = 3;
+    cfg.artifacts_dir = dir;
+    cfg
+}
+
+#[test]
+fn optex_full_stack_hlo_workload_and_estimator() {
+    let Some(dir) = test_dir() else { return };
+    let mut cfg = base_cfg(dir);
+    cfg.optex.backend = Backend::Hlo;
+    let workload = factory::build(&cfg).unwrap();
+    assert_eq!(workload.source.backend_name(), "hlo");
+    let mut drv = Driver::new(cfg.clone(), workload).unwrap();
+    let rec = drv.run().unwrap();
+    assert_eq!(rec.rows.len(), 6);
+    let last = rec.rows.last().unwrap();
+    assert_eq!(last.grad_evals, 18); // N * T
+    assert!(last.loss.is_finite());
+    assert!(last.aux.unwrap() >= 0.0); // accuracy wired through
+    // estimation variance must be populated once history fills
+    assert!(rec.rows.iter().any(|r| r.est_var > 0.0 && r.est_var <= 1.0 + 1e-6));
+}
+
+#[test]
+fn optex_hlo_workload_with_native_estimator_learns() {
+    let Some(dir) = test_dir() else { return };
+    let mut cfg = base_cfg(dir);
+    cfg.steps = 25;
+    cfg.optex.backend = Backend::Native;
+    let workload = factory::build(&cfg).unwrap();
+    let mut drv = Driver::new(cfg, workload).unwrap();
+    let rec = drv.run().unwrap();
+    let first = rec.rows.first().unwrap().loss;
+    let best = rec.best_loss();
+    assert!(
+        best < first,
+        "no improvement on mlp_test: {first} -> {best}"
+    );
+}
+
+#[test]
+fn native_and_hlo_estimators_agree_end_to_end() {
+    // Same seed, same workload, same shapes: the two estimation backends
+    // must produce numerically close trajectories (f32 drift allowed).
+    let Some(dir) = test_dir() else { return };
+    let run_with = |backend: Backend| {
+        let mut cfg = base_cfg(dir.clone());
+        cfg.optex.backend = backend;
+        // both backends must use the artifact's T0/dsub for comparability
+        cfg.optex.t0 = 3;
+        cfg.optex.dsub = Some(64.min(76)); // gp_mlp_test dsub (<= d)
+        cfg.optex.lengthscale = Some(2.0); // pin: heuristics drift in f32
+        let workload = factory::build(&cfg).unwrap();
+        let mut drv = Driver::new(cfg, workload).unwrap();
+        drv.run().unwrap()
+    };
+    let a = run_with(Backend::Native);
+    let b = run_with(Backend::Hlo);
+    let la = a.loss_series();
+    let lb = b.loss_series();
+    assert_eq!(la.len(), lb.len());
+    for (i, (x, y)) in la.iter().zip(&lb).enumerate() {
+        assert!(
+            (x - y).abs() < 0.05 * (1.0 + x.abs()),
+            "iter {i}: native={x} hlo={y}"
+        );
+    }
+}
+
+#[test]
+fn hlo_estimator_rejects_dimension_mismatch() {
+    let Some(dir) = test_dir() else { return };
+    let mut cfg = base_cfg(dir);
+    cfg.optex.backend = Backend::Hlo;
+    // gp_test is built for the synthetic d=64, not mlp_test's d
+    let workload = factory::build(&cfg).unwrap();
+    let err = match Driver::with_source(cfg, workload.source, Some("gp_test".into())) {
+        Ok(_) => panic!("expected dimension mismatch"),
+        Err(e) => format!("{e:#}"),
+    };
+    assert!(err.contains("built for d="), "{err}");
+}
+
+#[test]
+fn hlo_backend_without_gp_artifact_is_an_error() {
+    let Some(dir) = test_dir() else { return };
+    let mut cfg = base_cfg(dir);
+    cfg.optex.backend = Backend::Hlo;
+    let workload = factory::build(&cfg).unwrap();
+    let err = match Driver::with_source(cfg, workload.source, None) {
+        Ok(_) => panic!("expected missing-artifact error"),
+        Err(e) => format!("{e:#}"),
+    };
+    assert!(err.contains("gp_estimate artifact"), "{err}");
+}
+
+#[test]
+fn qnet_hlo_gradients_match_native_mlp() {
+    // Cross-check the DQN TD gradient through the qnet_test_train
+    // artifact against the native nn::Mlp backprop on identical batches.
+    use optex::nn::Mlp;
+    use optex::rl::ReplayBuffer;
+    use optex::rl::dqn::DqnSource;
+    use optex::util::Rng;
+    use optex::workloads::GradSource;
+    use std::cell::RefCell;
+    use std::rc::Rc;
+
+    let Some(dir) = test_dir() else { return };
+    let manifest = optex::runtime::Manifest::load(&dir).unwrap();
+    let spec = manifest.get("qnet_test_train").unwrap();
+    let batch = spec.meta_usize("batch").unwrap();
+    let hidden = spec.meta_usize("hidden").unwrap();
+    let obs_dim = spec.meta_usize("obs_dim").unwrap();
+    let n_act = spec.meta_usize("n_actions").unwrap();
+    let gamma = spec.meta_f64("gamma").unwrap() as f32;
+
+    let mk_replay = || {
+        let rb = Rc::new(RefCell::new(ReplayBuffer::new(128, obs_dim)));
+        let mut rng = Rng::new(5);
+        for _ in 0..100 {
+            let o = rng.normal_vec(obs_dim);
+            let no = rng.normal_vec(obs_dim);
+            rb.borrow_mut()
+                .push(&o, rng.below(n_act), rng.normal() as f32, &no, rng.coin(0.1));
+        }
+        rb
+    };
+
+    let mlp = Mlp::new(obs_dim, hidden, n_act);
+    let mut rng = Rng::new(1);
+    let params = mlp.init(&mut rng);
+
+    let mut native = DqnSource::native(mlp, mk_replay(), batch, gamma, 10, 7);
+    native.on_iteration(1, &params);
+    let ne = native.eval_batch(&[&params]).unwrap().pop().unwrap();
+
+    let mlp2 = Mlp::new(obs_dim, hidden, n_act);
+    let mut hlo =
+        DqnSource::hlo(dir, "test", 1, mlp2, mk_replay(), gamma, 10, 7).unwrap();
+    hlo.on_iteration(1, &params);
+    let he = hlo.eval_batch(&[&params]).unwrap().pop().unwrap();
+
+    assert!(
+        (ne.loss - he.loss).abs() < 1e-3 * (1.0 + ne.loss.abs()),
+        "loss: native={} hlo={}",
+        ne.loss,
+        he.loss
+    );
+    for (i, (a, b)) in ne.grad.iter().zip(&he.grad).enumerate() {
+        assert!(
+            (a - b).abs() < 1e-3 * (1.0 + b.abs()),
+            "grad[{i}]: native={a} hlo={b}"
+        );
+    }
+}

@@ -1,0 +1,218 @@
+//! Integration: AOT HLO artifacts loaded and executed through PJRT, with
+//! numerics cross-checked against the rust-native implementations.
+//!
+//! These tests need `artifacts/test/` (built by `make artifacts`, test
+//! profile). When the directory is missing they SKIP (print + return) so
+//! `cargo test` stays green on a fresh checkout; CI runs `make test`
+//! which builds artifacts first.
+
+use std::path::PathBuf;
+
+use optex::gp::{estimator, GpConfig, Kernel};
+use optex::runtime::{Engine, In, Manifest, TensorData, WorkerPool};
+use optex::util::Rng;
+
+fn test_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts/test");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts/test missing (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn manifest_loads_and_files_exist() {
+    let Some(dir) = test_dir() else { return };
+    let m = Manifest::load(&dir).unwrap();
+    assert_eq!(m.profile, "test");
+    assert!(m.len() >= 8, "expected the full test grid, got {}", m.len());
+    for name in m.names() {
+        assert!(m.get(name).unwrap().path.exists(), "{name} file missing");
+    }
+}
+
+#[test]
+fn synth_rosenbrock_artifact_matches_native() {
+    let Some(dir) = test_dir() else { return };
+    let m = Manifest::load(&dir).unwrap();
+    let spec = m.get("synth_rosenbrock_d64").unwrap();
+    let engine = Engine::cpu().unwrap();
+    let exe = engine.load(spec).unwrap();
+
+    let mut rng = Rng::new(0);
+    let theta = rng.normal_vec(64);
+    let out = exe.run(&[In::F32(&theta)]).unwrap();
+    assert_eq!(out.len(), 2, "(f, grad)");
+    let (f_hlo, grad_hlo) = (out[0][0], &out[1]);
+    assert_eq!(grad_hlo.len(), 64);
+
+    // native analytic: f = mean(100 (x_{i+1}-x_i)^2 + (1-x_i)^2)
+    let d = 64usize;
+    let mut f = 0.0f64;
+    for i in 0..d - 1 {
+        let a = theta[i + 1] as f64;
+        let b = theta[i] as f64;
+        f += 100.0 * (a - b) * (a - b) + (1.0 - b) * (1.0 - b);
+    }
+    f /= d as f64;
+    assert!(
+        (f_hlo as f64 - f).abs() < 1e-3 * (1.0 + f.abs()),
+        "f: hlo={f_hlo} native={f}"
+    );
+
+    // finite-difference check of a few gradient coords
+    let eval = |th: &[f32]| -> f64 {
+        let o = exe.run(&[In::F32(th)]).unwrap();
+        o[0][0] as f64
+    };
+    for &j in &[0usize, 13, 63] {
+        let mut tp = theta.clone();
+        tp[j] += 1e-3;
+        let mut tm = theta.clone();
+        tm[j] -= 1e-3;
+        let fd = (eval(&tp) - eval(&tm)) / 2e-3;
+        let an = grad_hlo[j] as f64;
+        assert!(
+            (fd - an).abs() < 0.05 * (1.0 + an.abs()),
+            "grad[{j}]: fd={fd} hlo={an}"
+        );
+    }
+}
+
+#[test]
+fn gp_estimate_artifact_matches_native_estimator() {
+    let Some(dir) = test_dir() else { return };
+    let m = Manifest::load(&dir).unwrap();
+    for (name, kernel) in [("gp_test", Kernel::Matern52), ("gp_test_rbf", Kernel::Rbf)] {
+        let spec = m.get(name).unwrap();
+        let t0 = spec.meta_usize("t0").unwrap();
+        let dsub = spec.meta_usize("dsub").unwrap();
+        let d = spec.dim().unwrap();
+        let engine = Engine::cpu().unwrap();
+        let exe = engine.load(spec).unwrap();
+
+        let mut rng = Rng::new(42);
+        let theta_sub = rng.normal_vec(dsub);
+        let hist: Vec<Vec<f32>> = (0..t0).map(|_| rng.normal_vec(dsub)).collect();
+        let grads: Vec<Vec<f32>> = (0..t0).map(|_| rng.normal_vec(d)).collect();
+        let hist_flat: Vec<f32> = hist.concat();
+        let grads_flat: Vec<f32> = grads.concat();
+        let (ls, s2) = (2.0f32, 0.05f32);
+
+        let out = exe
+            .run(&[
+                In::F32(&theta_sub),
+                In::F32(&hist_flat),
+                In::F32(&grads_flat),
+                In::F32(&[ls]),
+                In::F32(&[s2]),
+            ])
+            .unwrap();
+        let (mu_hlo, var_hlo) = (&out[0], out[1][0]);
+        assert_eq!(mu_hlo.len(), d);
+
+        let cfg = GpConfig {
+            kernel,
+            lengthscale: Some(ls as f64),
+            sigma2: s2 as f64,
+        };
+        let hrefs: Vec<&[f32]> = hist.iter().map(|v| v.as_slice()).collect();
+        let grefs: Vec<&[f32]> = grads.iter().map(|v| v.as_slice()).collect();
+        let mut mu_native = vec![0.0f32; d];
+        let est = estimator::estimate(&cfg, &theta_sub, &hrefs, &grefs, &mut mu_native);
+
+        for (i, (a, b)) in mu_hlo.iter().zip(&mu_native).enumerate() {
+            assert!(
+                (a - b).abs() < 1e-3 * (1.0 + b.abs()),
+                "{name} mu[{i}]: hlo={a} native={b}"
+            );
+        }
+        assert!(
+            (var_hlo as f64 - est.var).abs() < 1e-3,
+            "{name} var: hlo={var_hlo} native={}",
+            est.var
+        );
+    }
+}
+
+#[test]
+fn mlp_artifact_shapes_and_loss_sanity() {
+    let Some(dir) = test_dir() else { return };
+    let m = Manifest::load(&dir).unwrap();
+    let spec = m.get("mlp_test").unwrap();
+    let d = spec.dim().unwrap();
+    let batch = spec.meta_usize("batch").unwrap();
+    let in_dim = spec.meta_usize("in_dim").unwrap();
+    let out_dim = spec.meta_usize("out_dim").unwrap();
+    let engine = Engine::cpu().unwrap();
+    let exe = engine.load(spec).unwrap();
+
+    let mut rng = Rng::new(1);
+    let mut params = vec![0.0f32; d];
+    rng.fill_normal(&mut params, 0.1);
+    let x = rng.normal_vec(batch * in_dim);
+    let mut y = vec![0.0f32; batch * out_dim];
+    for b in 0..batch {
+        y[b * out_dim + rng.below(out_dim)] = 1.0;
+    }
+    let out = exe.run(&[In::F32(&params), In::F32(&x), In::F32(&y)]).unwrap();
+    assert_eq!(out.len(), 3, "(loss, grad, acc)");
+    let loss = out[0][0];
+    assert!(loss.is_finite() && loss > 0.0);
+    assert_eq!(out[1].len(), d);
+    let acc = out[2][0];
+    assert!((0.0..=1.0).contains(&acc));
+    // random init ~ uniform predictions: loss near ln(out_dim)
+    assert!((loss - (out_dim as f32).ln()).abs() < 1.5, "loss={loss}");
+}
+
+#[test]
+fn worker_pool_scatter_runs_concurrently_and_correctly() {
+    let Some(dir) = test_dir() else { return };
+    let pool = WorkerPool::spawn(dir, vec!["synth_sphere_d64".into()], 3).unwrap();
+    assert_eq!(pool.size(), 3);
+
+    // 6 jobs over 3 workers; sphere(c * ones) = |c| exactly.
+    let jobs: Vec<(&str, Vec<TensorData>)> = (1..=6)
+        .map(|c| {
+            (
+                "synth_sphere_d64",
+                vec![TensorData::F32(vec![c as f32; 64])],
+            )
+        })
+        .collect();
+    let results = pool.scatter(jobs).unwrap();
+    assert_eq!(results.len(), 6);
+    for (i, r) in results.into_iter().enumerate() {
+        let r = r.unwrap();
+        let f = r.outputs[0][0];
+        let want = (i + 1) as f32;
+        assert!((f - want).abs() < 1e-4, "job {i}: f={f} want={want}");
+        assert!(r.elapsed.as_nanos() > 0);
+    }
+}
+
+#[test]
+fn pool_rejects_unknown_artifact() {
+    let Some(dir) = test_dir() else { return };
+    let pool = WorkerPool::spawn(dir, vec!["synth_sphere_d64".into()], 1).unwrap();
+    assert!(pool.run_on(0, "not_served", vec![]).is_err());
+}
+
+#[test]
+fn executable_input_validation() {
+    let Some(dir) = test_dir() else { return };
+    let m = Manifest::load(&dir).unwrap();
+    let engine = Engine::cpu().unwrap();
+    let exe = engine.load(m.get("synth_sphere_d64").unwrap()).unwrap();
+    // wrong arity
+    assert!(exe.run(&[]).is_err());
+    // wrong size
+    let short = vec![0.0f32; 10];
+    assert!(exe.run(&[In::F32(&short)]).is_err());
+    // wrong dtype
+    let ints = vec![0i32; 64];
+    assert!(exe.run(&[In::I32(&ints)]).is_err());
+}

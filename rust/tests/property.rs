@@ -1,0 +1,482 @@
+//! Property-based invariants over the L3 substrates (DESIGN.md §5.2):
+//! routing/selection, history state, optimizer algebra, GP math, config
+//! and parser round-trips. Runs 64 seeded cases per property by default
+//! (PROP_CASES / PROP_SEED env to tune / replay).
+
+use optex::config::{Method, RunConfig};
+use optex::coordinator::{Driver, GradHistory, Selection};
+use optex::gp::cholesky::chol_solve;
+use optex::gp::{estimator, DimSubset, GpConfig, Kernel};
+use optex::nn::Mlp;
+use optex::opt::OptSpec;
+use optex::prop_assert;
+use optex::testutil::prop::{check, gen_spd};
+use optex::util::json::Json;
+use optex::util::{stats, Rng};
+use optex::workloads::synthetic::SynthFn;
+use optex::workloads::{GradSource, NativeSynth};
+
+// ---------------------------------------------------------------------------
+// substrates
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_cholesky_solves_random_spd_systems() {
+    check("cholesky_residual", |rng| {
+        let n = 1 + rng.below(40);
+        let a = gen_spd(rng, n, 1.0);
+        let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let x = chol_solve(&a, n, &b).map_err(|e| e.to_string())?;
+        for i in 0..n {
+            let r: f64 = (0..n).map(|j| a[i * n + j] * x[j]).sum::<f64>() - b[i];
+            prop_assert!(r.abs() < 1e-6, "residual {r} at row {i} (n={n})");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_gram_plus_jitter_is_spd_for_all_kernels() {
+    check("gram_spd", |rng| {
+        let t = 1 + rng.below(12);
+        let d = 1 + rng.below(20);
+        let rows: Vec<Vec<f32>> = (0..t).map(|_| rng.normal_vec(d)).collect();
+        let refs: Vec<&[f32]> = rows.iter().map(|v| v.as_slice()).collect();
+        for kernel in Kernel::ALL {
+            let ls = rng.range(0.2, 5.0);
+            let mut k = optex::gp::kernels::kernel_matrix(kernel, ls, &refs);
+            for i in 0..t {
+                k[i * t + i] += 1e-6;
+            }
+            chol_solve(&k, t, &vec![1.0; t])
+                .map_err(|e| format!("{kernel:?} ls={ls}: {e}"))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_estimator_interpolates_and_reverts() {
+    check("gp_interp_revert", |rng| {
+        let t = 2 + rng.below(6);
+        let d = 4 + rng.below(24);
+        let hist: Vec<Vec<f32>> = (0..t).map(|_| rng.normal_vec(d)).collect();
+        let grads: Vec<Vec<f32>> = (0..t).map(|_| rng.normal_vec(d)).collect();
+        let hrefs: Vec<&[f32]> = hist.iter().map(|v| v.as_slice()).collect();
+        let grefs: Vec<&[f32]> = grads.iter().map(|v| v.as_slice()).collect();
+        let cfg = GpConfig { kernel: Kernel::Rbf, lengthscale: Some(3.0), sigma2: 0.0 };
+        // interpolation at a random history point
+        let i = rng.below(t);
+        let mut mu = vec![0.0f32; d];
+        let est = estimator::estimate(&cfg, &hist[i], &hrefs, &grefs, &mut mu);
+        for (a, b) in mu.iter().zip(&grads[i]) {
+            prop_assert!((a - b).abs() < 0.05, "no interpolation: {a} vs {b}");
+        }
+        prop_assert!(est.var < 0.05, "var at data point: {}", est.var);
+        // prior reversion far away
+        let far: Vec<f32> = (0..d).map(|_| 500.0 + rng.normal() as f32).collect();
+        let est2 = estimator::estimate(&cfg, &far, &hrefs, &grefs, &mut mu);
+        prop_assert!(est2.var > 0.95, "far var {}", est2.var);
+        prop_assert!(
+            mu.iter().all(|&x| x.abs() < 1e-3),
+            "far mean not ~0"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_optimizer_clone_is_a_true_snapshot() {
+    check("opt_snapshot", |rng| {
+        let names = ["sgd", "momentum", "nesterov", "adam", "adagrad", "adabelief"];
+        let name = names[rng.below(names.len())];
+        let d = 1 + rng.below(16);
+        let mut a = OptSpec::parse(name, rng.range(0.001, 0.2)).unwrap().build(d);
+        let mut x = rng.normal_vec(d);
+        // advance the original by a random prefix
+        for _ in 0..rng.below(5) {
+            let g = rng.normal_vec(d);
+            a.step(&mut x, &g);
+        }
+        let snap = a.clone_box();
+        // identical future sequence must produce identical trajectories
+        let seq: Vec<Vec<f32>> = (0..3).map(|_| rng.normal_vec(d)).collect();
+        let mut xa = x.clone();
+        let mut xb = x.clone();
+        let mut b = snap;
+        for g in &seq {
+            a.step(&mut xa, g);
+            b.step(&mut xb, g);
+        }
+        prop_assert!(xa == xb, "{name}: snapshot diverged");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_history_fifo_and_capacity() {
+    check("history_fifo", |rng| {
+        let cap = 1 + rng.below(8);
+        let d = 1 + rng.below(10);
+        let mut h = GradHistory::new(cap, DimSubset::full(d));
+        let total = rng.below(20);
+        for i in 0..total {
+            h.push(&vec![i as f32; d], vec![i as f32; d]);
+            prop_assert!(h.len() <= cap, "over capacity");
+        }
+        prop_assert!(h.len() == total.min(cap), "len {}", h.len());
+        let (thetas, grads) = h.views();
+        // oldest surviving entry is push #(total - len)
+        if let Some(first) = thetas.first() {
+            let want = (total - h.len()) as f32;
+            prop_assert!(first[0] == want, "fifo order broken: {} vs {want}", first[0]);
+        }
+        for (t, g) in thetas.iter().zip(&grads) {
+            prop_assert!(t[0] == g[0], "theta/grad misaligned");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_selection_is_argmin_of_its_score() {
+    check("selection_argmin", |rng| {
+        let n = 1 + rng.below(8);
+        let losses: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let norms: Vec<f64> = (0..n).map(|_| rng.normal().abs()).collect();
+        let f = Selection::Func.select(&losses, &norms);
+        let g = Selection::Grad.select(&losses, &norms);
+        let l = Selection::Last.select(&losses, &norms);
+        prop_assert!(l == n - 1, "last != n-1");
+        for i in 0..n {
+            prop_assert!(losses[f] <= losses[i], "func not argmin");
+            prop_assert!(norms[g] <= norms[i], "grad not argmin");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_subset_gather_matches_indices() {
+    check("subset_gather", |rng| {
+        let d = 2 + rng.below(200);
+        let k = 1 + rng.below(d);
+        let sub = DimSubset::sample(d, k, rng);
+        let theta: Vec<f32> = (0..d).map(|i| i as f32).collect();
+        let g = sub.gather(&theta);
+        for (v, &i) in g.iter().zip(sub.indices()) {
+            prop_assert!(*v == i as f32, "gather mismatch");
+        }
+        let mut sorted = sub.indices().to_vec();
+        sorted.dedup();
+        prop_assert!(sorted.len() == k, "indices not distinct");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_synth_gradients_match_finite_differences() {
+    check("synth_fd", |rng| {
+        let f = SynthFn::ALL[rng.below(3)];
+        let d = 4 + rng.below(30);
+        let theta = rng.normal_vec(d);
+        let mut g = vec![0.0f32; d];
+        f.value_and_grad(&theta, &mut g);
+        let j = rng.below(d);
+        let h = 1e-3f32;
+        let mut tp = theta.clone();
+        tp[j] += h;
+        let mut tm = theta.clone();
+        tm[j] -= h;
+        let fd = (f.value(&tp) - f.value(&tm)) / (2.0 * h as f64);
+        prop_assert!(
+            (fd - g[j] as f64).abs() < 3e-2 * (1.0 + fd.abs()),
+            "{f:?}[{j}]: fd={fd} an={}",
+            g[j]
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_mlp_backward_matches_fd() {
+    check("mlp_fd", |rng| {
+        let i = 1 + rng.below(5);
+        let h = 2 + rng.below(8);
+        let o = 1 + rng.below(4);
+        let net = Mlp::new(i, h, o);
+        let params = net.init(rng);
+        let batch = 1 + rng.below(4);
+        let x = rng.normal_vec(batch * i);
+        let cache = net.forward(&params, &x, batch);
+        // linear loss L = sum(out * w)
+        let w = rng.normal_vec(batch * o);
+        let mut grad = vec![0.0f32; net.dim()];
+        net.backward(&params, &cache, &w, &mut grad);
+        let j = rng.below(net.dim());
+        let eps = 1e-3f32;
+        let loss = |p: &[f32]| -> f64 {
+            let c = net.forward(p, &x, batch);
+            c.out.iter().zip(&w).map(|(&a, &b)| (a * b) as f64).sum()
+        };
+        let mut pp = params.clone();
+        pp[j] += eps;
+        let mut pm = params.clone();
+        pm[j] -= eps;
+        let fd = (loss(&pp) - loss(&pm)) / (2.0 * eps as f64);
+        // ReLU kinks make FD invalid when the perturbation flips an
+        // activation's sign; a large second difference at the eps scale
+        // flags exactly that (the loss is piecewise-linear in one param).
+        let f0 = loss(&params);
+        let curvature = (loss(&pp) - 2.0 * f0 + loss(&pm)).abs() / (eps as f64).powi(2);
+        if curvature > 1.0 {
+            return Ok(()); // kink crossed — FD not meaningful here
+        }
+        prop_assert!(
+            (fd - grad[j] as f64).abs() < 2e-2 * (1.0 + fd.abs()),
+            "param {j}: fd={fd} an={} curv={curvature}",
+            grad[j]
+        );
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// coordinator invariants
+// ---------------------------------------------------------------------------
+
+fn random_cfg(rng: &mut Rng) -> RunConfig {
+    let mut c = RunConfig::default();
+    c.method = [Method::Optex, Method::Vanilla, Method::Target, Method::DataParallel]
+        [rng.below(4)];
+    c.steps = 2 + rng.below(6);
+    c.seed = rng.next_u64();
+    c.synth_dim = 8 + rng.below(64);
+    c.workload = SynthFn::ALL[rng.below(3)].name().into();
+    c.noise_std = if rng.coin(0.5) { rng.range(0.0, 0.5) } else { 0.0 };
+    c.optimizer = OptSpec::parse(
+        ["sgd", "adam", "momentum"][rng.below(3)],
+        rng.range(0.001, 0.1),
+    )
+    .unwrap();
+    c.optex.parallelism = 1 + rng.below(6);
+    c.optex.t0 = 1 + rng.below(12);
+    c.optex.kernel = Kernel::ALL[rng.below(4)];
+    c.optex.sigma2 = rng.range(0.0, 0.2);
+    c.optex.selection = [Selection::Last, Selection::Func, Selection::Grad][rng.below(3)];
+    c
+}
+
+fn run_native(c: &RunConfig) -> optex::coordinator::RunRecord {
+    let f = SynthFn::parse(&c.workload).unwrap();
+    let src = NativeSynth::new(f, c.synth_dim, c.noise_std, c.seed);
+    let mut drv = Driver::with_source(c.clone(), Box::new(src), None).unwrap();
+    drv.run().unwrap()
+}
+
+#[test]
+fn prop_grad_eval_accounting_holds_for_all_methods() {
+    check("grad_eval_accounting", |rng| {
+        let c = random_cfg(rng);
+        let rec = run_native(&c);
+        let last = rec.rows.last().unwrap();
+        let n = match c.method {
+            Method::Vanilla => 1,
+            _ => c.optex.parallelism,
+        };
+        prop_assert!(
+            last.grad_evals == (n * c.steps) as u64,
+            "{:?} N={n}: {} evals for {} steps",
+            c.method,
+            last.grad_evals,
+            c.steps
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_best_loss_monotone_and_finite() {
+    check("best_loss_monotone", |rng| {
+        let c = random_cfg(rng);
+        let rec = run_native(&c);
+        let series = rec.best_loss_series();
+        prop_assert!(!series.is_empty(), "empty record");
+        for w in series.windows(2) {
+            prop_assert!(w[1] <= w[0] + 1e-9, "best_loss increased: {w:?}");
+        }
+        prop_assert!(
+            series.iter().all(|x| x.is_finite()),
+            "non-finite best loss"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_runs_are_deterministic_per_seed() {
+    check("run_determinism", |rng| {
+        let c = random_cfg(rng);
+        let a = run_native(&c);
+        let b = run_native(&c);
+        prop_assert!(
+            a.loss_series() == b.loss_series(),
+            "same config+seed produced different runs"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_checkpoint_resume_is_exact_for_deterministic_runs() {
+    check("checkpoint_resume", |rng| {
+        let mut c = random_cfg(rng);
+        c.noise_std = 0.0; // deterministic oracle => bit-exact resume
+        c.steps = 4 + rng.below(4);
+        let split = 1 + rng.below(c.steps - 1);
+        let f = SynthFn::parse(&c.workload).unwrap();
+
+        // straight run
+        let src = NativeSynth::new(f, c.synth_dim, 0.0, c.seed);
+        let mut straight = Driver::with_source(c.clone(), Box::new(src), None).unwrap();
+        for t in 1..=c.steps {
+            straight.iteration(t).unwrap();
+        }
+
+        // split run: checkpoint at `split`, resume into a fresh driver
+        let path = std::env::temp_dir().join(format!(
+            "optex_prop_ckp_{}_{}",
+            std::process::id(),
+            rng.next_u64()
+        ));
+        let src = NativeSynth::new(f, c.synth_dim, 0.0, c.seed);
+        let mut first = Driver::with_source(c.clone(), Box::new(src), None).unwrap();
+        for t in 1..=split {
+            first.iteration(t).unwrap();
+        }
+        first.save_checkpoint(&path, split as u64).unwrap();
+        let src = NativeSynth::new(f, c.synth_dim, 0.0, c.seed);
+        let mut second = Driver::with_source(c.clone(), Box::new(src), None).unwrap();
+        let it = second.resume_from(&path).unwrap() as usize;
+        for t in it + 1..=c.steps {
+            second.iteration(t).unwrap();
+        }
+        std::fs::remove_file(&path).ok();
+        prop_assert!(
+            straight.theta() == second.theta(),
+            "{:?} split@{split}/{}: resume diverged",
+            c.method,
+            c.steps
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_vanilla_matches_manual_replay() {
+    check("vanilla_replay", |rng| {
+        let mut c = random_cfg(rng);
+        c.method = Method::Vanilla;
+        c.noise_std = 0.0;
+        let f = SynthFn::parse(&c.workload).unwrap();
+        let rec = run_native(&c);
+
+        let mut src = NativeSynth::new(f, c.synth_dim, 0.0, c.seed);
+        let mut theta = src.init_params(&mut Rng::new(c.seed));
+        let mut opt = c.optimizer.build(c.synth_dim);
+        let mut losses = Vec::new();
+        for _ in 0..c.steps {
+            let e = src.eval_batch(&[&theta]).unwrap().pop().unwrap();
+            losses.push(e.loss);
+            opt.step(&mut theta, &e.grad);
+        }
+        let got = rec.loss_series();
+        prop_assert!(
+            got == losses,
+            "vanilla != plain optimizer replay ({:?} vs {:?})",
+            &got[..got.len().min(3)],
+            &losses[..losses.len().min(3)]
+        );
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// parsers / config round-trips
+// ---------------------------------------------------------------------------
+
+fn random_json(rng: &mut Rng, depth: usize) -> Json {
+    match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+        0 => Json::Null,
+        1 => Json::Bool(rng.coin(0.5)),
+        2 => Json::Num((rng.normal() * 100.0).round() / 4.0),
+        3 => {
+            let n = rng.below(8);
+            Json::Str((0..n).map(|_| (b'a' + rng.below(26) as u8) as char).collect())
+        }
+        4 => Json::Arr((0..rng.below(4)).map(|_| random_json(rng, depth - 1)).collect()),
+        _ => {
+            let mut m = std::collections::BTreeMap::new();
+            for i in 0..rng.below(4) {
+                m.insert(format!("k{i}"), random_json(rng, depth - 1));
+            }
+            Json::Obj(m)
+        }
+    }
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    check("json_roundtrip", |rng| {
+        let v = random_json(rng, 3);
+        let text = v.to_string();
+        let back = Json::parse(&text).map_err(|e| e.to_string())?;
+        prop_assert!(back == v, "roundtrip mismatch for {text}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_config_overrides_agree_with_toml() {
+    check("config_override", |rng| {
+        let n = 1 + rng.below(20);
+        let t0 = 1 + rng.below(30);
+        let lr = (rng.range(0.0001, 0.5) * 1e6).round() / 1e6;
+        let doc = format!(
+            "steps = 5\n[optex]\nparallelism = {n}\nt0 = {t0}\n[optimizer]\nname = \"sgd\"\nlr = {lr}\n"
+        );
+        let from_file = RunConfig::from_toml(&doc).map_err(|e| e.to_string())?;
+        let mut from_cli = RunConfig::default();
+        for kv in [
+            "steps=5".to_string(),
+            format!("optex.parallelism={n}"),
+            format!("optex.t0={t0}"),
+            "optimizer.name=sgd".to_string(),
+            format!("optimizer.lr={lr}"),
+        ] {
+            from_cli.apply_override(&kv).map_err(|e| e.to_string())?;
+        }
+        prop_assert!(
+            from_file.optex.parallelism == from_cli.optex.parallelism
+                && from_file.optex.t0 == from_cli.optex.t0
+                && from_file.optimizer == from_cli.optimizer,
+            "file/cli config divergence"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_stats_percentile_bounded_by_minmax() {
+    check("percentile_bounds", |rng| {
+        let n = 1 + rng.below(40);
+        let xs: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let lo = xs.iter().cloned().fold(f64::INFINITY, f64::min);
+        let hi = xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        for p in [0.0, 25.0, 50.0, 95.0, 100.0] {
+            let v = stats::percentile(&xs, p);
+            prop_assert!((lo..=hi).contains(&v), "p{p}={v} outside [{lo},{hi}]");
+        }
+        Ok(())
+    });
+}
