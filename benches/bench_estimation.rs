@@ -7,8 +7,9 @@
 //! d-sized weighted combine (memory-bound; GB/s column vs DRAM roofline).
 
 use optex::bench::{bench, bench_throughput, black_box};
+use optex::coordinator::GradHistory;
 use optex::gp::estimator::{combine_into, FittedGp};
-use optex::gp::{GpConfig, Kernel};
+use optex::gp::{DimSubset, GpConfig, IncrementalGp, Kernel};
 use optex::util::Rng;
 
 fn main() {
@@ -32,7 +33,12 @@ fn main() {
         // (the realistic regime — see §Perf P1 for the subnormal pathology
         // that a tiny lengthscale triggers).
         let ls = (2.0 * dsub as f64).sqrt();
-        let cfg = GpConfig { kernel: Kernel::Matern52, lengthscale: Some(ls), sigma2: 0.01 };
+        let cfg = GpConfig {
+            kernel: Kernel::Matern52,
+            lengthscale: Some(ls),
+            sigma2: 0.01,
+            ..GpConfig::default()
+        };
 
         bench(&format!("gp_fit       {label}"), || {
             black_box(FittedGp::fit(&cfg, &hrefs))
@@ -43,6 +49,67 @@ fn main() {
         bench(&format!("gp_query     {label}"), || {
             black_box(fitted.query(&q, &grefs, &mut mu))
         });
+    }
+
+    // Per-sequential-iteration fit: full refit (reference, O(T₀³+T₀²·D̃))
+    // vs the incremental engine (rank-1 up/downdates, O(N·T₀²+N·T₀·D̃)).
+    // Both closures pay the same history-push cost so the delta is the
+    // fit itself. Acceptance bar (ISSUE 1): ≥5× at T₀ = 256, N ≤ 8.
+    println!("\n# gp fit: full refit vs incremental (per sequential iteration)");
+    let dsub = 2048usize;
+    for t0 in [64usize, 128, 256] {
+        for n in [4usize, 8] {
+            let ls = (2.0 * dsub as f64).sqrt();
+            let cfg = GpConfig {
+                kernel: Kernel::Matern52,
+                lengthscale: Some(ls),
+                sigma2: 0.01,
+                ..GpConfig::default()
+            };
+            // pre-generated row stream, recycled round-robin
+            let stream: Vec<Vec<f32>> =
+                (0..t0 + 64).map(|_| rng.normal_vec(dsub)).collect();
+            let mut mk_state = || {
+                let mut h = GradHistory::new(t0, DimSubset::full(dsub));
+                for row in stream.iter().take(t0) {
+                    h.push(row, row.clone());
+                }
+                (h, 0usize)
+            };
+
+            let (mut h_full, mut cursor_full) = mk_state();
+            let full = bench(&format!("gp_fit_full  T0={t0:<3} N={n}"), || {
+                for _ in 0..n {
+                    let row = &stream[cursor_full % stream.len()];
+                    cursor_full += 1;
+                    h_full.push(row, row.clone());
+                }
+                let (hviews, _) = h_full.views();
+                black_box(FittedGp::fit(&cfg, &hviews))
+            });
+
+            let (mut h_inc, mut cursor_inc) = mk_state();
+            let mut inc = IncrementalGp::new(cfg.clone(), t0);
+            {
+                let (hviews, _) = h_inc.views();
+                inc.sync(h_inc.epoch(), h_inc.total_pushed(), &hviews);
+            }
+            let incr = bench(&format!("gp_fit_incr  T0={t0:<3} N={n}"), || {
+                for _ in 0..n {
+                    let row = &stream[cursor_inc % stream.len()];
+                    cursor_inc += 1;
+                    h_inc.push(row, row.clone());
+                }
+                let (hviews, _) = h_inc.views();
+                inc.sync(h_inc.epoch(), h_inc.total_pushed(), &hviews);
+                black_box(inc.lengthscale())
+            });
+            println!(
+                "speedup      T0={t0:<3} N={n}: {:>6.1}x (rebuild fallbacks: {})",
+                full.mean_s / incr.mean_s,
+                inc.rebuilds()
+            );
+        }
     }
 
     println!("\n# weighted combine w^T G (memory-bound; bytes = T0*d*4)");

@@ -44,7 +44,7 @@ fn main() {
             let lo = n - t0;
             let hist: Vec<&[f32]> = thetas[lo..].iter().map(|v| v.as_slice()).collect();
             let gh: Vec<&[f32]> = grads[lo..].iter().map(|v| v.as_slice()).collect();
-            let cfg = GpConfig { kernel, lengthscale: None, sigma2: 1e-4 };
+            let cfg = GpConfig { kernel, lengthscale: None, sigma2: 1e-4, ..GpConfig::default() };
             let mut mu = vec![0.0f32; d];
             let est = estimator::estimate(&cfg, query, &hist, &gh, &mut mu);
             let err: f64 = mu

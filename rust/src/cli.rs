@@ -38,7 +38,7 @@ impl std::error::Error for CliError {}
 const VALUE_OPTS: &[&str] = &[
     "config", "out", "artifacts", "method", "workload", "steps", "seed",
     "seeds", "fig", "profile", "n", "t0", "filter", "lr", "optimizer",
-    "episodes", "env", "backend", "dim", "checkpoint", "resume",
+    "episodes", "env", "backend", "dim", "checkpoint", "resume", "fit",
 ];
 
 impl Args {

@@ -11,7 +11,7 @@ use std::collections::BTreeMap;
 use std::path::PathBuf;
 
 use crate::coordinator::selection::Selection;
-use crate::gp::Kernel;
+use crate::gp::{GpFit, Kernel};
 use crate::opt::{OptSpec, Schedule};
 use toml::Value;
 
@@ -81,6 +81,9 @@ pub struct OptexParams {
     /// Algo. 1 line 7).
     pub eval_intermediate: bool,
     pub backend: Backend,
+    /// GP fit engine: `incremental` (rank-1 factor up/downdates across
+    /// iterations, the default) or `full` (from-scratch reference refit).
+    pub fit: GpFit,
 }
 
 impl Default for OptexParams {
@@ -95,6 +98,7 @@ impl Default for OptexParams {
             selection: Selection::Last,
             eval_intermediate: true,
             backend: Backend::Native,
+            fit: GpFit::Incremental,
         }
     }
 }
@@ -248,6 +252,10 @@ impl RunConfig {
                     other => return Err(bad(key, &format!("unknown backend {other:?}"))),
                 }
             }
+            "optex.fit" => {
+                self.optex.fit = GpFit::parse(need_str()?)
+                    .ok_or_else(|| bad(key, "unknown fit engine (full|incremental)"))?
+            }
             _ => return Err(bad(key, "unknown config key")),
         }
         Ok(())
@@ -290,6 +298,7 @@ impl RunConfig {
         m.insert("kernel".into(), self.optex.kernel.name().into());
         m.insert("sigma2".into(), format!("{}", self.optex.sigma2));
         m.insert("selection".into(), self.optex.selection.name().into());
+        m.insert("fit".into(), self.optex.fit.name().into());
         m.insert("noise_std".into(), format!("{}", self.noise_std));
         m.insert("synth_dim".into(), self.synth_dim.to_string());
         m
@@ -328,6 +337,7 @@ mod tests {
             selection = "func"
             eval_intermediate = false
             backend = "native"
+            fit = "full"
         "#;
         let cfg = RunConfig::from_toml(doc).unwrap();
         assert_eq!(cfg.workload, "sphere");
@@ -338,6 +348,18 @@ mod tests {
         assert_eq!(cfg.optex.dsub, Some(256));
         assert!(!cfg.optex.eval_intermediate);
         assert_eq!(cfg.optex.selection, Selection::Func);
+        assert_eq!(cfg.optex.fit, GpFit::Full);
+    }
+
+    #[test]
+    fn fit_engine_parses_and_rejects_unknown() {
+        assert_eq!(RunConfig::default().optex.fit, GpFit::Incremental);
+        let mut cfg = RunConfig::default();
+        cfg.apply_override("optex.fit=full").unwrap();
+        assert_eq!(cfg.optex.fit, GpFit::Full);
+        cfg.apply_override("optex.fit=incremental").unwrap();
+        assert_eq!(cfg.optex.fit, GpFit::Incremental);
+        assert!(cfg.apply_override("optex.fit=cached").is_err());
     }
 
     #[test]

@@ -12,6 +12,11 @@
 //! `resume_equivalence`); for stochastic workloads the data-sampler RNG
 //! restarts from the checkpoint seed, which is the standard
 //! minibatch-replay caveat.
+//!
+//! Derived state is NOT serialized: the incremental GP fit
+//! (`gp::estimator::IncrementalGp`) is a pure function of the history
+//! ring, so `restore` only rebuilds the ring (bumping its epoch via
+//! `clear`) and the driver re-derives the fit on the next iteration.
 
 use std::io::{Read, Write};
 use std::path::Path;

@@ -7,6 +7,18 @@
 //! posterior combine. Eviction is strict FIFO, which for OptEx coincides
 //! with "nearest in optimization time", the locality the paper's local-
 //! history argument relies on.
+//!
+//! Row indexing is stable for mirrors: row 0 is always the oldest entry,
+//! an eviction removes row 0 (shifting every surviving row down by one)
+//! and an append creates row `len()-1`. Two views of that contract:
+//! [`GradHistory::push`] reports the per-push structural event as a
+//! [`PushEvent`] (for callers tracking individual evictions —
+//! diagnostics, tests), while batch mirrors — the incremental GP fit —
+//! consume the `(epoch, total_pushed)` version pair plus the ring's
+//! current rows to decide whether the delta since their last sync is
+//! replayable or a rebuild is needed: `epoch` bumps on any restructuring
+//! ([`GradHistory::clear`], e.g. under checkpoint restore),
+//! `total_pushed` counts pushes monotonically within an epoch.
 
 use std::collections::VecDeque;
 
@@ -21,6 +33,16 @@ pub struct Entry {
     pub grad: Vec<f32>,
 }
 
+/// What one [`GradHistory::push`] did to the ring, in mirror-replayable
+/// terms (indices are post-push row positions).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PushEvent {
+    /// Row index the new entry landed at (always `len()-1`).
+    pub appended_at: usize,
+    /// Whether row 0 (the oldest entry) was evicted to make room.
+    pub evicted_oldest: bool,
+}
+
 /// FIFO ring of the last T₀ evaluations.
 #[derive(Debug)]
 pub struct GradHistory {
@@ -28,25 +50,35 @@ pub struct GradHistory {
     subset: DimSubset,
     entries: VecDeque<Entry>,
     total_pushed: u64,
+    epoch: u64,
 }
 
 impl GradHistory {
     /// `cap` = T₀ (≥ 1), `subset` = the fixed kernel dim subset.
     pub fn new(cap: usize, subset: DimSubset) -> Self {
         assert!(cap >= 1, "history capacity must be >= 1");
-        GradHistory { cap, subset, entries: VecDeque::with_capacity(cap + 1), total_pushed: 0 }
+        GradHistory {
+            cap,
+            subset,
+            entries: VecDeque::with_capacity(cap + 1),
+            total_pushed: 0,
+            epoch: 0,
+        }
     }
 
     /// Record an evaluation; evicts the oldest entry beyond capacity.
-    pub fn push(&mut self, theta_full: &[f32], grad: Vec<f32>) {
+    /// Returns the structural event so mirrors can replay it.
+    pub fn push(&mut self, theta_full: &[f32], grad: Vec<f32>) -> PushEvent {
         debug_assert_eq!(theta_full.len(), self.subset.full_dim());
         debug_assert_eq!(grad.len(), self.subset.full_dim());
         let theta_sub = self.subset.gather(theta_full);
         self.entries.push_back(Entry { theta_sub, grad });
-        if self.entries.len() > self.cap {
+        let evicted_oldest = self.entries.len() > self.cap;
+        if evicted_oldest {
             self.entries.pop_front();
         }
         self.total_pushed += 1;
+        PushEvent { appended_at: self.entries.len() - 1, evicted_oldest }
     }
 
     pub fn len(&self) -> usize {
@@ -96,8 +128,17 @@ impl GradHistory {
         }
     }
 
+    /// Restructuring epoch: bumps whenever the ring's contents stop being
+    /// an incremental continuation of what a mirror may have seen
+    /// (currently: [`GradHistory::clear`]). Mirrors that observe an epoch
+    /// change must rebuild rather than replay.
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
     pub fn clear(&mut self) {
         self.entries.clear();
+        self.epoch += 1;
     }
 
     /// Restore a checkpointed entry: `theta_sub` is ALREADY restricted to
@@ -179,5 +220,41 @@ mod tests {
         h.clear();
         assert!(h.is_empty());
         assert_eq!(h.total_pushed(), 1);
+    }
+
+    #[test]
+    fn push_events_report_append_index_and_eviction() {
+        let mut h = hist(2, 1);
+        assert_eq!(
+            h.push(&[0.0], vec![0.0]),
+            PushEvent { appended_at: 0, evicted_oldest: false }
+        );
+        assert_eq!(
+            h.push(&[1.0], vec![1.0]),
+            PushEvent { appended_at: 1, evicted_oldest: false }
+        );
+        // at capacity: row 0 evicted, append lands at len-1
+        assert_eq!(
+            h.push(&[2.0], vec![2.0]),
+            PushEvent { appended_at: 1, evicted_oldest: true }
+        );
+        let (thetas, _) = h.views();
+        assert_eq!(thetas[0][0], 1.0);
+        assert_eq!(thetas[1][0], 2.0);
+    }
+
+    #[test]
+    fn epoch_bumps_on_clear_only() {
+        let mut h = hist(2, 1);
+        assert_eq!(h.epoch(), 0);
+        h.push(&[0.0], vec![0.0]);
+        h.push(&[1.0], vec![1.0]);
+        h.push(&[2.0], vec![2.0]); // eviction is NOT a restructuring
+        assert_eq!(h.epoch(), 0);
+        h.clear();
+        assert_eq!(h.epoch(), 1);
+        h.restore_entry(vec![3.0], vec![3.0]);
+        assert_eq!(h.epoch(), 1);
+        assert_eq!(h.total_pushed(), 4);
     }
 }

@@ -2,7 +2,14 @@
 //!
 //! Per sequential iteration t (method = `optex`):
 //!   1. fit the GP posterior on the local gradient history (line 3;
-//!      Gram factorization cached across the iteration's queries),
+//!      Gram factorization cached across the iteration's queries). With
+//!      `optex.fit = "incremental"` (default) the factorization is not
+//!      recomputed: a persistent [`IncrementalGp`] mirrors the history
+//!      ring via rank-1 Cholesky up/downdates (O(N·T₀²) per iteration
+//!      instead of O(T₀³ + T₀²·D̃)) and falls back to a full refit on
+//!      `NotSpd` or any ring restructuring (e.g. checkpoint resume, which
+//!      always rebuilds — incremental state is never serialized);
+//!      `optex.fit = "full"` keeps the stateless reference fit,
 //!   2. multi-step proxy updates on *estimated* gradients (lines 4–5),
 //!      snapshotting optimizer state after every step,
 //!   3. N parallel ground-truth evaluations at the proxy inputs
@@ -28,7 +35,7 @@ use crate::config::{Backend, Method, RunConfig};
 use crate::coordinator::history::GradHistory;
 use crate::coordinator::metrics::{IterRecord, RunRecord};
 use crate::gp::estimator::FittedGp;
-use crate::gp::{DimSubset, GpConfig};
+use crate::gp::{DimSubset, GpConfig, GpFit, IncrementalGp};
 use crate::opt::Optimizer;
 use crate::runtime::{Engine, Executable, In, Manifest};
 use crate::util::stats::norm2;
@@ -58,6 +65,10 @@ pub struct Driver {
     optimizer: Box<dyn Optimizer>,
     theta: Vec<f32>,
     hlo_est: Option<HloEstimator>,
+    /// Persistent incremental GP fit (`optex.fit = "incremental"`); built
+    /// lazily on the first estimating iteration, dropped (and later
+    /// rebuilt) on checkpoint resume.
+    inc_gp: Option<IncrementalGp>,
     record: RunRecord,
     base_lr: f64,
     best_loss: f64,
@@ -132,6 +143,7 @@ impl Driver {
             optimizer,
             theta,
             hlo_est,
+            inc_gp: None,
             best_loss: f64::INFINITY,
             grad_evals: 0,
             wall_s: 0.0,
@@ -176,7 +188,25 @@ impl Driver {
             );
         }
         ckp.restore(&mut self.theta, self.optimizer.as_mut(), &mut self.history)?;
+        // The incremental GP fit is derived state: never serialized, so a
+        // resumed run rebuilds it from the restored ring on first use
+        // (`restore` cleared the ring, which also bumped its epoch — this
+        // drop is belt-and-braces, not load-bearing).
+        self.inc_gp = None;
         Ok(ckp.iter)
+    }
+
+    /// Full GP refits performed by the incremental fit so far (ring
+    /// restructurings — e.g. checkpoint resume — and `NotSpd`
+    /// fallbacks). 0 both on the reference path and on a clean
+    /// incremental run, whose initial fill uses rank-1 appends.
+    pub fn gp_rebuilds(&self) -> u64 {
+        self.inc_gp.as_ref().map(|g| g.rebuilds()).unwrap_or(0)
+    }
+
+    /// Rank-1 factor edits applied by the incremental fit so far.
+    pub fn gp_factor_ops(&self) -> u64 {
+        self.inc_gp.as_ref().map(|g| g.factor_ops()).unwrap_or(0)
     }
 
     /// Mutable oracle access (the RL stack swaps replay state between
@@ -190,6 +220,7 @@ impl Driver {
             kernel: self.cfg.optex.kernel,
             lengthscale: self.cfg.optex.lengthscale,
             sigma2: self.cfg.optex.sigma2,
+            fit: self.cfg.optex.fit,
         }
     }
 
@@ -258,8 +289,23 @@ impl Driver {
         snapshots.push(chain.clone_box());
         if n > 1 {
             let gp_cfg = self.gp_cfg();
+            let t0 = self.cfg.optex.t0;
             let (hviews, gviews) = self.history.views();
-            let fitted = FittedGp::fit(&gp_cfg, &hviews);
+            // Fit engine for this iteration: the persistent incremental
+            // fit (default) or the from-scratch reference fit. The HLO
+            // estimation backend keeps the reference fit — it only needs
+            // the resolved lengthscale, and the artifact owns the solve.
+            let use_inc = gp_cfg.fit == GpFit::Incremental && self.hlo_est.is_none();
+            let fitted = if use_inc { None } else { FittedGp::fit(&gp_cfg, &hviews) };
+            let inc = if use_inc {
+                let inc = self
+                    .inc_gp
+                    .get_or_insert_with(|| IncrementalGp::new(gp_cfg.clone(), t0));
+                inc.sync(self.history.epoch(), self.history.total_pushed(), &hviews);
+                Some(&*inc)
+            } else {
+                None
+            };
             // lengthscale for the HLO artifact (median heuristic resolved
             // natively; the artifact takes it as a runtime scalar input)
             let ls = fitted.as_ref().map(|f| f.lengthscale).unwrap_or(1.0);
@@ -282,6 +328,10 @@ impl Driver {
                     ])?;
                     self.mu_buf.copy_from_slice(&out[0]);
                     out[1][0] as f64
+                } else if let Some(inc) = inc {
+                    // prior (μ = 0, var = 1) on an empty mirror — same
+                    // contract as the reference branches below
+                    inc.query(&self.theta_sub_buf, &gviews, &mut self.mu_buf)
                 } else if let Some(f) = &fitted {
                     f.query(&self.theta_sub_buf, &gviews, &mut self.mu_buf)
                 } else {

@@ -51,7 +51,7 @@ pub fn run_kernels(opts: &FigOpts) -> Result<()> {
                 let hist: Vec<&[f32]> =
                     thetas[lo..q].iter().map(|v| v.as_slice()).collect();
                 let gh: Vec<&[f32]> = grads[lo..q].iter().map(|v| v.as_slice()).collect();
-                let cfg = GpConfig { kernel, lengthscale: None, sigma2: 1e-4 };
+                let cfg = GpConfig { kernel, lengthscale: None, sigma2: 1e-4, ..GpConfig::default() };
                 let mut mu = vec![0.0f32; d];
                 estimator::estimate(&cfg, &thetas[q], &hist, &gh, &mut mu);
                 let err: f64 = mu
@@ -81,7 +81,7 @@ pub fn run_estbound(opts: &FigOpts) -> Result<()> {
     let n = 48;
     let out = opts.out_dir.join("fig_ext");
     let (thetas, grads) = trajectory_history(d, n, 0);
-    let cfg = GpConfig { kernel: Kernel::Matern52, lengthscale: None, sigma2: 1e-4 };
+    let cfg = GpConfig { kernel: Kernel::Matern52, lengthscale: None, sigma2: 1e-4, ..GpConfig::default() };
     // alpha = d + (sqrt(d)+1) ln(1/delta), delta = 0.1 (Thm. 1)
     let alpha = d as f64 + ((d as f64).sqrt() + 1.0) * (1.0f64 / 0.1).ln();
     let mut xs = Vec::new();
@@ -202,7 +202,7 @@ pub fn run_native_vs_hlo(opts: &FigOpts) -> Result<()> {
         ])?;
         let hlo_ms = t_hlo.elapsed().as_secs_f64() * 1e3;
 
-        let cfg = GpConfig { kernel, lengthscale: Some(ls as f64), sigma2: s2 as f64 };
+        let cfg = GpConfig { kernel, lengthscale: Some(ls as f64), sigma2: s2 as f64, ..GpConfig::default() };
         let hrefs: Vec<&[f32]> = hist.iter().map(|v| v.as_slice()).collect();
         let grefs: Vec<&[f32]> = grads.iter().map(|v| v.as_slice()).collect();
         let mut mu = vec![0.0f32; d];

@@ -3,6 +3,23 @@
 //! T₀ ≤ 256 in every paper configuration, so a straightforward O(n³/6)
 //! dense factorization in f64 is both exact enough and far from any hot
 //! path (the d-sized combine dominates). Mirrors python/compile/linalg.py.
+//!
+//! On top of the from-scratch factorization this module provides the
+//! structural O(n²) factor edits the incremental GP fit is built from
+//! (`gp::estimator::IncrementalGp`):
+//!
+//! * [`rank1_update`] — L ← chol(LLᵀ + xxᵀ) (LINPACK `dchud` recurrence),
+//! * [`append_row`]   — grow an n×n factor to (n+1)×(n+1) for a new
+//!   symmetric Gram row (one forward solve + a pivot),
+//! * [`delete_row_downdate`] — remove row/column j (the permutation-aware
+//!   "delete row" form: compact, then rank-1 update of the trailing
+//!   block with the removed subdiagonal column).
+//!
+//! All three preserve the stored-triangle hygiene invariant of
+//! [`cholesky_in_place`]: the strict upper triangle stays exactly zero,
+//! so factors maintained incrementally are elementwise comparable with
+//! freshly computed ones (the property tests in
+//! `rust/tests/gp_incremental.rs` rely on this).
 
 /// Error from a non-SPD input (non-positive pivot).
 #[derive(Debug)]
@@ -88,6 +105,118 @@ pub fn chol_solve(a: &[f64], n: usize, b: &[f64]) -> Result<Vec<f64>, NotSpd> {
     Ok(x)
 }
 
+/// Rank-1 update on the trailing block: rewrites rows/cols `start..n` of
+/// `l` so that the block factors A₃₃ + xxᵀ instead of A₃₃. `x` is
+/// destroyed. The leading rows/cols are untouched (they are unaffected
+/// mathematically: the update vector is zero there).
+fn rank1_update_tail(
+    l: &mut [f64],
+    n: usize,
+    start: usize,
+    x: &mut [f64],
+) -> Result<(), NotSpd> {
+    debug_assert_eq!(l.len(), n * n);
+    debug_assert_eq!(x.len(), n - start);
+    for (k, jj) in (start..n).enumerate() {
+        let ljj = l[jj * n + jj];
+        let xk = x[k];
+        let r2 = ljj * ljj + xk * xk;
+        if ljj <= 0.0 || r2 <= 0.0 || !r2.is_finite() {
+            return Err(NotSpd { pivot_index: jj, pivot_value: r2 });
+        }
+        let r = r2.sqrt();
+        let c = r / ljj;
+        let s = xk / ljj;
+        l[jj * n + jj] = r;
+        for i in (jj + 1)..n {
+            let v = (l[i * n + jj] + s * x[i - start]) / c;
+            x[i - start] = c * x[i - start] - s * v;
+            l[i * n + jj] = v;
+        }
+    }
+    Ok(())
+}
+
+/// Rank-1 Cholesky update: given lower L with A = LLᵀ, rewrite L in
+/// place so that L'L'ᵀ = A + xxᵀ. `x` is destroyed. O(n²); the update is
+/// positive-semidefinite so failure only signals a corrupt or non-finite
+/// input factor.
+pub fn rank1_update(l: &mut [f64], n: usize, x: &mut [f64]) -> Result<(), NotSpd> {
+    assert_eq!(l.len(), n * n, "rank1_update: bad buffer size");
+    assert_eq!(x.len(), n, "rank1_update: bad vector size");
+    rank1_update_tail(l, n, 0, x)
+}
+
+/// Grow an n×n factor to (n+1)×(n+1) in place for a new trailing
+/// symmetric row. `row` holds the n cross terms A[n][0..n] followed by
+/// the new diagonal A[n][n]. One forward solve + a pivot: O(n²).
+///
+/// Errs with [`NotSpd`] when the extended matrix loses positive
+/// definiteness (the new pivot is ≤ 0); `l` is unspecified afterwards —
+/// callers are expected to refactorize from scratch.
+pub fn append_row(l: &mut Vec<f64>, n: usize, row: &[f64]) -> Result<(), NotSpd> {
+    assert_eq!(l.len(), n * n, "append_row: bad buffer size");
+    assert_eq!(row.len(), n + 1, "append_row: bad row size");
+    let m = n + 1;
+    l.resize(m * m, 0.0);
+    // Re-stride existing rows back-to-front (new offsets are larger, so
+    // writes never clobber unread data).
+    for i in (1..n).rev() {
+        for j in (0..n).rev() {
+            l[i * m + j] = l[i * n + j];
+        }
+    }
+    // hygiene: the new strict-upper column is zero
+    for i in 0..n {
+        l[i * m + n] = 0.0;
+    }
+    // New row: solve L a = row[0..n] (forward substitution against the
+    // re-strided rows), then the pivot d² = A[n][n] − aᵀa.
+    for i in 0..n {
+        let mut s = row[i];
+        for k in 0..i {
+            s -= l[i * m + k] * l[m * n + k];
+        }
+        l[m * n + i] = s / l[i * m + i];
+    }
+    let mut d = row[n];
+    for k in 0..n {
+        d -= l[m * n + k] * l[m * n + k];
+    }
+    if d <= 0.0 || !d.is_finite() {
+        return Err(NotSpd { pivot_index: n, pivot_value: d });
+    }
+    l[m * n + n] = d.sqrt();
+    Ok(())
+}
+
+/// Remove row/column `j` from an n×n factor in place, shrinking `l` to
+/// (n−1)×(n−1). Deleting a row of A leaves the leading block and the
+/// off-diagonal rows of L intact; the trailing block absorbs the removed
+/// subdiagonal column as a (positive) rank-1 update. O((n−j)²).
+///
+/// Errs with [`NotSpd`] on numerical loss of positive definiteness (only
+/// reachable from a corrupt/non-finite factor); `l` is unspecified
+/// afterwards — callers are expected to refactorize from scratch.
+pub fn delete_row_downdate(l: &mut Vec<f64>, n: usize, j: usize) -> Result<(), NotSpd> {
+    assert_eq!(l.len(), n * n, "delete_row_downdate: bad buffer size");
+    assert!(j < n, "delete_row_downdate: row {j} out of range (n={n})");
+    let m = n - 1;
+    // the removed subdiagonal column — the rank-1 carrier for the tail
+    let mut x: Vec<f64> = ((j + 1)..n).map(|i| l[i * n + j]).collect();
+    // Compact front-to-back, dropping row j and column j. Every read
+    // index is ≥ its write index, so the pass never clobbers unread data.
+    for r in 0..m {
+        let or = if r < j { r } else { r + 1 };
+        for c in 0..m {
+            let oc = if c < j { c } else { c + 1 };
+            l[r * m + c] = l[or * n + oc];
+        }
+    }
+    l.truncate(m * m);
+    rank1_update_tail(l, m, j, &mut x)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -153,6 +282,135 @@ mod tests {
         let a = vec![1.0, 0.0, 0.0, 1.0];
         let x = chol_solve(&a, 2, &[3.0, -4.0]).unwrap();
         assert_eq!(x, vec![3.0, -4.0]);
+    }
+
+    fn max_abs_diff(a: &[f64], b: &[f64]) -> f64 {
+        a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f64::max)
+    }
+
+    #[test]
+    fn rank1_update_matches_refactorization() {
+        let mut rng = Rng::new(10);
+        for n in [1usize, 2, 4, 9, 20] {
+            let a = spd(n, &mut rng, 0.5);
+            let mut l = a.clone();
+            cholesky_in_place(&mut l, n).unwrap();
+            let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let mut xs = x.clone();
+            rank1_update(&mut l, n, &mut xs).unwrap();
+            let mut fresh = a.clone();
+            for i in 0..n {
+                for j in 0..n {
+                    fresh[i * n + j] += x[i] * x[j];
+                }
+            }
+            cholesky_in_place(&mut fresh, n).unwrap();
+            assert!(max_abs_diff(&l, &fresh) < 1e-8, "n={n}");
+        }
+    }
+
+    #[test]
+    fn append_row_extends_factor() {
+        let mut rng = Rng::new(11);
+        let n = 7;
+        let a = spd(n, &mut rng, 1.0);
+        // factor the leading (n-1)×(n-1) block, then append row n-1
+        let m = n - 1;
+        let mut l: Vec<f64> = (0..m * m).map(|k| a[(k / m) * n + k % m]).collect();
+        cholesky_in_place(&mut l, m).unwrap();
+        let row: Vec<f64> = (0..n).map(|j| a[m * n + j]).collect();
+        append_row(&mut l, m, &row).unwrap();
+        let mut fresh = a.clone();
+        cholesky_in_place(&mut fresh, n).unwrap();
+        assert!(max_abs_diff(&l, &fresh) < 1e-9);
+        // hygiene: strict upper exactly zero
+        for i in 0..n {
+            for j in (i + 1)..n {
+                assert_eq!(l[i * n + j], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn append_row_rejects_indefinite_extension() {
+        // extending the identity with a dependent row (pivot = 0)
+        let mut l = vec![1.0, 0.0, 0.0, 1.0];
+        let err = append_row(&mut l, 2, &[1.0, 0.0, 1.0]).unwrap_err();
+        assert_eq!(err.pivot_index, 2);
+    }
+
+    #[test]
+    fn delete_row_downdate_matches_refactorization() {
+        let mut rng = Rng::new(12);
+        for n in [2usize, 3, 6, 12] {
+            for j in [0, n / 2, n - 1] {
+                let a = spd(n, &mut rng, 1.0);
+                let mut l = a.clone();
+                cholesky_in_place(&mut l, n).unwrap();
+                delete_row_downdate(&mut l, n, j).unwrap();
+                // from-scratch factor of A with row/col j removed
+                let m = n - 1;
+                let mut sub = vec![0.0; m * m];
+                for r in 0..m {
+                    let or = if r < j { r } else { r + 1 };
+                    for c in 0..m {
+                        let oc = if c < j { c } else { c + 1 };
+                        sub[r * m + c] = a[or * n + oc];
+                    }
+                }
+                cholesky_in_place(&mut sub, m).unwrap();
+                assert!(max_abs_diff(&l, &sub) < 1e-8, "n={n} j={j}");
+                for r in 0..m {
+                    for c in (r + 1)..m {
+                        assert_eq!(l[r * m + c], 0.0, "upper hygiene n={n} j={j}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fifo_window_up_downdates_track_refactorization() {
+        // The estimator's exact access pattern: delete row 0, append row.
+        let mut rng = Rng::new(13);
+        let pool = 24usize;
+        let master = spd(pool, &mut rng, 1.0);
+        let cap = 6usize;
+        let mut window: Vec<usize> = vec![0];
+        let mut l = vec![master[0]];
+        cholesky_in_place(&mut l, 1).unwrap();
+        for next in 1..pool {
+            if window.len() == cap {
+                delete_row_downdate(&mut l, window.len(), 0).unwrap();
+                window.remove(0);
+            }
+            let row: Vec<f64> = window
+                .iter()
+                .map(|&w| master[next * pool + w])
+                .chain([master[next * pool + next]])
+                .collect();
+            append_row(&mut l, window.len(), &row).unwrap();
+            window.push(next);
+            let t = window.len();
+            let mut fresh = vec![0.0; t * t];
+            for r in 0..t {
+                for c in 0..t {
+                    fresh[r * t + c] = master[window[r] * pool + window[c]];
+                }
+            }
+            cholesky_in_place(&mut fresh, t).unwrap();
+            assert!(max_abs_diff(&l, &fresh) < 1e-8, "window at {next}");
+        }
+    }
+
+    #[test]
+    fn rank1_update_rejects_corrupt_factor() {
+        let mut l = vec![-1.0, 0.0, 0.0, 1.0]; // negative pivot: not a factor
+        let mut x = vec![0.5, 0.5];
+        assert!(rank1_update(&mut l, 2, &mut x).is_err());
+        let mut l = vec![1.0, 0.0, 0.0, 1.0];
+        let mut x = vec![f64::NAN, 0.0];
+        assert!(rank1_update(&mut l, 2, &mut x).is_err());
     }
 
     #[test]

@@ -5,13 +5,59 @@
 //! runs over the full parameter dimension. The coordinator can use either
 //! backend (`estimator = "native" | "hlo"` in the config); integration
 //! tests assert the two agree to float32 tolerance.
+//!
+//! Two fit engines produce the per-iteration posterior (selected by
+//! [`GpConfig::fit`], `optex.fit` in run configs):
+//!
+//! * [`FittedGp`] — the **reference** path: from-scratch O(T₀²·D̃ + T₀³)
+//!   fit every sequential iteration. Simple, stateless, and the ground
+//!   truth the incremental path is differentially tested against.
+//! * [`IncrementalGp`] — the **hot** path: a persistent fit that mirrors
+//!   the coordinator's FIFO history ring. Each iteration only pushes N
+//!   new rows and evicts the N oldest, so the Gram factor is maintained
+//!   with rank-1 Cholesky row appends/deletions (O(N·T₀²), see
+//!   `gp::cholesky`) when the lengthscale is pinned; under the median
+//!   heuristic (where the lengthscale — and hence every Gram entry —
+//!   moves with the window) it refits from an incrementally maintained
+//!   distance cache, still skipping the dominant O(T₀²·D̃) recompute.
+//!   Any factor edit that reports `NotSpd`, and any structural
+//!   invalidation (history cleared/restored, more pushes than visible
+//!   rows), falls back to a full refit — the fast path is an
+//!   optimization, never a semantic fork.
 
-use crate::gp::cholesky::chol_solve;
+use crate::gp::cholesky::{self, chol_solve};
 use crate::gp::kernels::{self, Kernel};
 
 /// Jitter always added to the Gram diagonal (matches the +1e-6 baked into
 /// the L2 graph) so σ² = 0 synthetic runs stay numerically SPD.
 pub const DIAG_JITTER: f64 = 1e-6;
+
+/// Which fit engine the coordinator uses per sequential iteration.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GpFit {
+    /// From-scratch reference fit ([`FittedGp::fit`]) every iteration.
+    Full,
+    /// Persistent [`IncrementalGp`] maintained with rank-1 Cholesky
+    /// up/downdates (full-refit fallback on `NotSpd`/invalidation).
+    Incremental,
+}
+
+impl GpFit {
+    pub fn parse(s: &str) -> Option<GpFit> {
+        match s {
+            "full" => Some(GpFit::Full),
+            "incremental" => Some(GpFit::Incremental),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            GpFit::Full => "full",
+            GpFit::Incremental => "incremental",
+        }
+    }
+}
 
 /// Estimator hyperparameters.
 #[derive(Clone, Debug)]
@@ -21,11 +67,20 @@ pub struct GpConfig {
     pub lengthscale: Option<f64>,
     /// Observation noise σ² (paper Assump. 1).
     pub sigma2: f64,
+    /// Fit engine (incremental hot path vs full reference refit). Only
+    /// the coordinator consults this; the one-shot [`estimate`]/
+    /// [`weights`] helpers and [`FittedGp`] itself ignore it.
+    pub fit: GpFit,
 }
 
 impl Default for GpConfig {
     fn default() -> Self {
-        GpConfig { kernel: Kernel::Matern52, lengthscale: None, sigma2: 0.0 }
+        GpConfig {
+            kernel: Kernel::Matern52,
+            lengthscale: None,
+            sigma2: 0.0,
+            fit: GpFit::Incremental,
+        }
     }
 }
 
@@ -187,12 +242,294 @@ impl FittedGp {
         debug_assert_eq!(grads.len(), self.t);
         let rows: Vec<&[f32]> = self.rows.iter().map(|r| r.as_slice()).collect();
         let kvec = kernels::kernel_vector(self.kernel, self.lengthscale, theta_sub, &rows);
-        let mut w = kvec.clone();
-        crate::gp::cholesky::solve_lower_in_place(&self.l, self.t, &mut w);
-        crate::gp::cholesky::solve_upper_t_in_place(&self.l, self.t, &mut w);
+        let w = solve_weights(&self.l, self.t, &kvec);
         combine_into(&w, grads, out_mu);
         (1.0 - kvec.iter().zip(&w).map(|(k, w)| k * w).sum::<f64>()).max(0.0)
     }
+
+    /// Posterior weights w = (K+λI)⁻¹k(θ) for a query — the differential
+    /// surface the incremental path is tested against.
+    pub fn weights(&self, theta_sub: &[f32]) -> Weights {
+        let rows: Vec<&[f32]> = self.rows.iter().map(|r| r.as_slice()).collect();
+        let kvec = kernels::kernel_vector(self.kernel, self.lengthscale, theta_sub, &rows);
+        let w = solve_weights(&self.l, self.t, &kvec);
+        Weights { w, kvec, lengthscale: self.lengthscale }
+    }
+}
+
+/// w = (LLᵀ)⁻¹ kvec via the two triangular solves — shared by both fit
+/// engines so their query numerics are identical by construction.
+fn solve_weights(l: &[f64], t: usize, kvec: &[f64]) -> Vec<f64> {
+    let mut w = kvec.to_vec();
+    cholesky::solve_lower_in_place(l, t, &mut w);
+    cholesky::solve_upper_t_in_place(l, t, &mut w);
+    w
+}
+
+/// GP posterior maintained **incrementally** across sequential
+/// iterations (the `optex.fit = "incremental"` hot path).
+///
+/// The struct mirrors the coordinator's FIFO history ring: [`Self::sync`]
+/// consumes the ring's `(epoch, total_pushed)` version and applies one
+/// factor row-append per push (plus one row-0 deletion per eviction),
+/// keeping the per-iteration fit cost at O(N·T₀² + N·T₀·D̃) instead of
+/// the reference path's O(T₀³ + T₀²·D̃).
+///
+/// Exactness contract (enforced by `rust/tests/gp_incremental.rs`):
+/// * pinned lengthscale — the maintained factor matches a from-scratch
+///   [`FittedGp`] factor to ≤1e-8 elementwise, posterior weights agree
+///   to the same tolerance;
+/// * median heuristic — the fit is **bit-identical** to the reference
+///   (the lengthscale moves with the window, so the factor is rebuilt
+///   from the incrementally maintained distance cache each sync).
+///
+/// Fallback policy: any `NotSpd` from a rank-1 edit, any epoch change
+/// (history cleared or checkpoint-restored) and any push burst larger
+/// than the visible window trigger a full refit. The incremental state
+/// is therefore never serialized — a resumed run rebuilds it on the
+/// first sync.
+pub struct IncrementalGp {
+    cfg: GpConfig,
+    cap: usize,
+    /// Owned subset-restricted rows, oldest first (ring mirror).
+    rows: Vec<Vec<f32>>,
+    /// Pairwise squared distances of `rows` (t×t, zero diagonal) —
+    /// maintained incrementally so even a full refit skips the
+    /// O(T₀²·D̃) distance recompute.
+    r2: Vec<f64>,
+    /// Live Cholesky factor of K + (σ²+jitter)I.
+    l: Vec<f64>,
+    t: usize,
+    ls: f64,
+    /// Mirrored history version.
+    epoch: u64,
+    pushes: u64,
+    /// Full refits: structural invalidation (epoch change, push burst
+    /// larger than the window) and NotSpd fallbacks. A fresh mirror that
+    /// fills via ordinary syncs uses rank-1 appends only, so a clean run
+    /// reads 0 here.
+    rebuilds: u64,
+    /// Rank-1 factor edits applied (appends + deletions).
+    factor_ops: u64,
+}
+
+impl IncrementalGp {
+    /// `cap` must equal the history ring's capacity T₀.
+    pub fn new(cfg: GpConfig, cap: usize) -> IncrementalGp {
+        assert!(cap >= 1, "IncrementalGp: capacity must be >= 1");
+        let ls = cfg.lengthscale.unwrap_or(1.0);
+        IncrementalGp {
+            cfg,
+            cap,
+            rows: Vec::new(),
+            r2: Vec::new(),
+            l: Vec::new(),
+            t: 0,
+            ls,
+            epoch: 0,
+            pushes: 0,
+            rebuilds: 0,
+            factor_ops: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.t
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.t == 0
+    }
+
+    /// Lengthscale in effect for the live factor.
+    pub fn lengthscale(&self) -> f64 {
+        self.ls
+    }
+
+    /// Full-refit count: structural invalidations (epoch change, push
+    /// burst larger than the window) and NotSpd fallbacks. 0 on a clean
+    /// run — the initial fill happens through rank-1 appends, not a
+    /// rebuild (unless the first sync is itself a burst).
+    pub fn rebuilds(&self) -> u64 {
+        self.rebuilds
+    }
+
+    /// Rank-1 factor edits applied so far.
+    pub fn factor_ops(&self) -> u64 {
+        self.factor_ops
+    }
+
+    /// Bring the fit in line with the history ring. `epoch` and
+    /// `total_pushed` come from `GradHistory`; `hist_sub` are its current
+    /// subset-restricted rows, oldest first.
+    pub fn sync(&mut self, epoch: u64, total_pushed: u64, hist_sub: &[&[f32]]) {
+        let new_len = hist_sub.len();
+        let delta = if epoch == self.epoch && total_pushed >= self.pushes {
+            (total_pushed - self.pushes) as usize
+        } else {
+            usize::MAX // force a rebuild
+        };
+        let mirrorable = new_len <= self.cap
+            && delta <= new_len
+            && (self.t + delta).min(self.cap) == new_len;
+        if !mirrorable {
+            self.rebuild_from(hist_sub);
+        } else if delta > 0 {
+            // `factor_live` goes false on the first NotSpd; structural
+            // state (rows, distances) keeps updating regardless.
+            let mut factor_live = self.cfg.lengthscale.is_some();
+            for row in &hist_sub[new_len - delta..] {
+                if self.t == self.cap {
+                    factor_live = self.evict_oldest(factor_live) && factor_live;
+                }
+                factor_live = self.append(row, factor_live) && factor_live;
+            }
+            if self.cfg.lengthscale.is_none() {
+                // Median heuristic: the lengthscale moved with the
+                // window — refit from the cached distances (bit-equal
+                // to the reference fit on the same rows).
+                self.ls = kernels::median_from_sqdist(&self.r2, self.t);
+                self.refactor();
+            } else if !factor_live {
+                // NotSpd fallback: caches are valid, the factor is not.
+                self.refactor();
+                self.rebuilds += 1;
+            }
+        }
+        self.epoch = epoch;
+        self.pushes = total_pushed;
+    }
+
+    /// μ_t(θ) into `out_mu`; returns the posterior variance ‖Σ²(θ)‖.
+    /// Prior (zero mean, unit variance) on an empty mirror — the same
+    /// contract as the reference path with no fitted posterior.
+    pub fn query(&self, theta_sub: &[f32], grads: &[&[f32]], out_mu: &mut [f32]) -> f64 {
+        if self.t == 0 {
+            out_mu.iter_mut().for_each(|x| *x = 0.0);
+            return 1.0;
+        }
+        debug_assert_eq!(grads.len(), self.t);
+        let rows: Vec<&[f32]> = self.rows.iter().map(|r| r.as_slice()).collect();
+        let kvec = kernels::kernel_vector(self.cfg.kernel, self.ls, theta_sub, &rows);
+        let w = solve_weights(&self.l, self.t, &kvec);
+        combine_into(&w, grads, out_mu);
+        (1.0 - kvec.iter().zip(&w).map(|(k, w)| k * w).sum::<f64>()).max(0.0)
+    }
+
+    /// Posterior weights w = (K+λI)⁻¹k(θ); `None` on an empty mirror.
+    pub fn weights(&self, theta_sub: &[f32]) -> Option<Weights> {
+        if self.t == 0 {
+            return None;
+        }
+        let rows: Vec<&[f32]> = self.rows.iter().map(|r| r.as_slice()).collect();
+        let kvec = kernels::kernel_vector(self.cfg.kernel, self.ls, theta_sub, &rows);
+        let w = solve_weights(&self.l, self.t, &kvec);
+        Some(Weights { w, kvec, lengthscale: self.ls })
+    }
+
+    /// Drop the oldest row: distances lose row/col 0, the factor takes a
+    /// delete-row downdate. Returns whether the factor op succeeded (or
+    /// was skipped).
+    fn evict_oldest(&mut self, do_factor: bool) -> bool {
+        debug_assert!(self.t > 0);
+        let t = self.t;
+        self.rows.remove(0);
+        sym_delete_first(&mut self.r2, t);
+        self.t = t - 1;
+        if do_factor {
+            self.factor_ops += 1;
+            cholesky::delete_row_downdate(&mut self.l, t, 0).is_ok()
+        } else {
+            true
+        }
+    }
+
+    /// Append a row: one O(D̃) distance pass against the survivors, one
+    /// factor row-append. Returns whether the factor op succeeded (or
+    /// was skipped).
+    fn append(&mut self, row: &[f32], do_factor: bool) -> bool {
+        debug_assert!(self.t < self.cap);
+        let t = self.t;
+        let d2: Vec<f64> = self.rows.iter().map(|r| kernels::sqdist(row, r)).collect();
+        sym_append(&mut self.r2, t, &d2);
+        self.rows.push(row.to_vec());
+        self.t = t + 1;
+        if do_factor {
+            self.factor_ops += 1;
+            let mut krow: Vec<f64> =
+                d2.iter().map(|&v| self.cfg.kernel.from_sqdist(v, self.ls)).collect();
+            krow.push(
+                self.cfg.kernel.from_sqdist(0.0, self.ls) + self.cfg.sigma2 + DIAG_JITTER,
+            );
+            cholesky::append_row(&mut self.l, t, &krow).is_ok()
+        } else {
+            true
+        }
+    }
+
+    /// Full structural rebuild from the ring's rows (distances included).
+    fn rebuild_from(&mut self, hist_sub: &[&[f32]]) {
+        self.rows = hist_sub.iter().map(|r| r.to_vec()).collect();
+        self.t = hist_sub.len();
+        self.r2 = kernels::sqdist_matrix(hist_sub);
+        self.ls = self
+            .cfg
+            .lengthscale
+            .unwrap_or_else(|| kernels::median_from_sqdist(&self.r2, self.t));
+        if self.t > 0 {
+            self.refactor();
+        } else {
+            self.l.clear();
+        }
+        self.rebuilds += 1;
+    }
+
+    /// Gram from the cached distances + factorization: O(t³) but no
+    /// O(t²·D̃) distance recompute. Same op sequence as [`FittedGp::fit`]
+    /// so identical inputs give a bit-identical factor.
+    fn refactor(&mut self) {
+        let t = self.t;
+        let lam = self.cfg.sigma2 + DIAG_JITTER;
+        self.l.clear();
+        self.l
+            .extend(self.r2.iter().map(|&v| self.cfg.kernel.from_sqdist(v, self.ls)));
+        for i in 0..t {
+            self.l[i * t + i] += lam;
+        }
+        cholesky::cholesky_in_place(&mut self.l, t).expect("GP Gram matrix not SPD");
+    }
+}
+
+/// Remove row/column 0 of a symmetric t×t matrix in place (shrinks the
+/// buffer to (t−1)²). Forward compaction: reads never trail writes.
+fn sym_delete_first(mat: &mut Vec<f64>, n: usize) {
+    debug_assert_eq!(mat.len(), n * n);
+    let m = n - 1;
+    for r in 0..m {
+        for c in 0..m {
+            mat[r * m + c] = mat[(r + 1) * n + (c + 1)];
+        }
+    }
+    mat.truncate(m * m);
+}
+
+/// Append a symmetric row/column (off-diagonal values `new_off`, zero
+/// diagonal — these are squared distances) to an n×n matrix in place.
+fn sym_append(mat: &mut Vec<f64>, n: usize, new_off: &[f64]) {
+    debug_assert_eq!(mat.len(), n * n);
+    debug_assert_eq!(new_off.len(), n);
+    let m = n + 1;
+    mat.resize(m * m, 0.0);
+    for i in (1..n).rev() {
+        for j in (0..n).rev() {
+            mat[i * m + j] = mat[i * n + j];
+        }
+    }
+    for i in 0..n {
+        mat[i * m + n] = new_off[i];
+        mat[n * m + i] = new_off[i];
+    }
+    mat[n * m + n] = 0.0;
 }
 
 #[cfg(test)]
@@ -223,7 +560,7 @@ mod tests {
     #[test]
     fn interpolates_at_history_points_with_zero_noise() {
         let (hist, grads) = mk(5, 16, 0);
-        let cfg = GpConfig { kernel: Kernel::Rbf, lengthscale: Some(3.0), sigma2: 0.0 };
+        let cfg = GpConfig { kernel: Kernel::Rbf, lengthscale: Some(3.0), sigma2: 0.0, ..GpConfig::default() };
         for i in 0..5 {
             let mut mu = vec![0.0f32; 16];
             let est = estimate(&cfg, &hist[i], &refs(&hist), &refs(&grads), &mut mu);
@@ -237,7 +574,7 @@ mod tests {
     #[test]
     fn far_query_reverts_to_prior() {
         let (hist, grads) = mk(4, 8, 1);
-        let cfg = GpConfig { kernel: Kernel::Rbf, lengthscale: Some(1.0), sigma2: 0.01 };
+        let cfg = GpConfig { kernel: Kernel::Rbf, lengthscale: Some(1.0), sigma2: 0.01, ..GpConfig::default() };
         let far = vec![100.0f32; 8];
         let mut mu = vec![0.0f32; 8];
         let est = estimate(&cfg, &far, &refs(&hist), &refs(&grads), &mut mu);
@@ -249,7 +586,7 @@ mod tests {
     fn variance_in_unit_interval() {
         let (hist, grads) = mk(6, 12, 2);
         for kernel in Kernel::ALL {
-            let cfg = GpConfig { kernel, lengthscale: None, sigma2: 0.1 };
+            let cfg = GpConfig { kernel, lengthscale: None, sigma2: 0.1, ..GpConfig::default() };
             let mut rng = Rng::new(7);
             let q = rng.normal_vec(12);
             let mut mu = vec![0.0f32; 12];
@@ -264,7 +601,7 @@ mod tests {
         let (hist, _) = mk(8, 10, 3);
         let mut rng = Rng::new(11);
         let q = rng.normal_vec(10);
-        let cfg = GpConfig { kernel: Kernel::Matern52, lengthscale: Some(2.0), sigma2: 0.05 };
+        let cfg = GpConfig { kernel: Kernel::Matern52, lengthscale: Some(2.0), sigma2: 0.05, ..GpConfig::default() };
         let mut last = f64::INFINITY;
         for n in 1..=8 {
             let hs: Vec<&[f32]> = hist[..n].iter().map(|x| x.as_slice()).collect();
@@ -290,7 +627,7 @@ mod tests {
     #[test]
     fn fitted_gp_matches_one_shot_estimate() {
         let (hist, grads) = mk(6, 24, 9);
-        let cfg = GpConfig { kernel: Kernel::Matern52, lengthscale: None, sigma2: 0.1 };
+        let cfg = GpConfig { kernel: Kernel::Matern52, lengthscale: None, sigma2: 0.1, ..GpConfig::default() };
         let hrefs = refs(&hist);
         let grefs = refs(&grads);
         let fitted = FittedGp::fit(&cfg, &hrefs).unwrap();
@@ -308,12 +645,176 @@ mod tests {
         assert!(FittedGp::fit(&cfg, &[]).is_none());
     }
 
+    /// Feed `pushes` rows through an IncrementalGp in `chunks`-sized
+    /// sync batches, mirroring a `cap`-sized FIFO window. Returns the
+    /// estimator plus the window rows (oldest first).
+    fn drive_incremental(
+        cfg: &GpConfig,
+        cap: usize,
+        d: usize,
+        pushes: usize,
+        chunk: usize,
+        seed: u64,
+    ) -> (IncrementalGp, Vec<Vec<f32>>) {
+        let mut rng = Rng::new(seed);
+        let mut inc = IncrementalGp::new(cfg.clone(), cap);
+        let mut window: Vec<Vec<f32>> = Vec::new();
+        let mut total = 0u64;
+        let mut pushed = 0;
+        while pushed < pushes {
+            for _ in 0..chunk.min(pushes - pushed) {
+                window.push(rng.normal_vec(d));
+                if window.len() > cap {
+                    window.remove(0);
+                }
+                total += 1;
+                pushed += 1;
+            }
+            let views: Vec<&[f32]> = window.iter().map(|r| r.as_slice()).collect();
+            inc.sync(0, total, &views);
+        }
+        (inc, window)
+    }
+
+    #[test]
+    fn incremental_pinned_matches_reference_weights() {
+        let cfg = GpConfig {
+            kernel: Kernel::Matern52,
+            lengthscale: Some(3.0),
+            sigma2: 0.05,
+            ..GpConfig::default()
+        };
+        let (inc, window) = drive_incremental(&cfg, 7, 12, 23, 3, 21);
+        assert_eq!(inc.len(), 7);
+        assert!(inc.factor_ops() > 0, "pinned mode must use rank-1 edits");
+        assert_eq!(inc.rebuilds(), 0, "no fallback should have fired");
+        let hrefs: Vec<&[f32]> = window.iter().map(|r| r.as_slice()).collect();
+        let fitted = FittedGp::fit(&cfg, &hrefs).unwrap();
+        let mut rng = Rng::new(5);
+        for _ in 0..4 {
+            let q = rng.normal_vec(12);
+            let wa = inc.weights(&q).unwrap();
+            let wb = fitted.weights(&q);
+            for (a, b) in wa.w.iter().zip(&wb.w) {
+                assert!((a - b).abs() < 1e-8, "weights drift: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn incremental_heuristic_is_bit_identical_to_reference() {
+        let cfg = GpConfig {
+            kernel: Kernel::Matern52,
+            lengthscale: None,
+            sigma2: 0.1,
+            ..GpConfig::default()
+        };
+        let (inc, window) = drive_incremental(&cfg, 6, 10, 17, 2, 33);
+        let hrefs: Vec<&[f32]> = window.iter().map(|r| r.as_slice()).collect();
+        let fitted = FittedGp::fit(&cfg, &hrefs).unwrap();
+        assert_eq!(inc.lengthscale(), fitted.lengthscale);
+        let grads: Vec<Vec<f32>> = {
+            let mut rng = Rng::new(9);
+            (0..6).map(|_| rng.normal_vec(10)).collect()
+        };
+        let grefs = refs(&grads);
+        let mut rng = Rng::new(6);
+        for _ in 0..3 {
+            let q = rng.normal_vec(10);
+            let mut mu_a = vec![0.0f32; 10];
+            let mut mu_b = vec![0.0f32; 10];
+            let va = inc.query(&q, &grefs, &mut mu_a);
+            let vb = fitted.query(&q, &grefs, &mut mu_b);
+            assert_eq!(mu_a, mu_b);
+            assert_eq!(va, vb);
+        }
+    }
+
+    #[test]
+    fn incremental_empty_returns_prior_and_rebuilds_on_epoch_change() {
+        let cfg =
+            GpConfig { lengthscale: Some(2.0), ..GpConfig::default() };
+        let mut inc = IncrementalGp::new(cfg.clone(), 4);
+        let mut mu = vec![1.0f32; 5];
+        assert_eq!(inc.query(&[0.0; 5], &[], &mut mu), 1.0);
+        assert!(mu.iter().all(|&x| x == 0.0));
+        assert!(inc.weights(&[0.0; 5]).is_none());
+
+        let mut rng = Rng::new(1);
+        let rows: Vec<Vec<f32>> = (0..3).map(|_| rng.normal_vec(5)).collect();
+        let views: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+        inc.sync(0, 3, &views);
+        assert_eq!(inc.len(), 3);
+        // epoch change (history cleared + restored): must rebuild, and
+        // the rebuilt posterior must match the reference on the new rows
+        let rows2: Vec<Vec<f32>> = (0..2).map(|_| rng.normal_vec(5)).collect();
+        let views2: Vec<&[f32]> = rows2.iter().map(|r| r.as_slice()).collect();
+        let before = inc.rebuilds();
+        inc.sync(1, 5, &views2);
+        assert_eq!(inc.len(), 2);
+        assert_eq!(inc.rebuilds(), before + 1);
+        let fitted = FittedGp::fit(&cfg, &views2).unwrap();
+        let q = rng.normal_vec(5);
+        let wa = inc.weights(&q).unwrap();
+        let wb = fitted.weights(&q);
+        for (a, b) in wa.w.iter().zip(&wb.w) {
+            assert!((a - b).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn incremental_burst_larger_than_window_rebuilds() {
+        let cfg =
+            GpConfig { lengthscale: Some(1.5), ..GpConfig::default() };
+        let mut inc = IncrementalGp::new(cfg, 3);
+        let mut rng = Rng::new(2);
+        let rows: Vec<Vec<f32>> = (0..3).map(|_| rng.normal_vec(4)).collect();
+        let views: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+        inc.sync(0, 3, &views);
+        let ops = inc.factor_ops();
+        // 10 pushes since last sync but only 3 visible -> structural rebuild
+        let rows2: Vec<Vec<f32>> = (0..3).map(|_| rng.normal_vec(4)).collect();
+        let views2: Vec<&[f32]> = rows2.iter().map(|r| r.as_slice()).collect();
+        inc.sync(0, 13, &views2);
+        assert_eq!(inc.rebuilds(), 1);
+        assert_eq!(inc.factor_ops(), ops, "burst must not use rank-1 edits");
+    }
+
+    #[test]
+    fn incremental_notspd_fallback_self_heals() {
+        let cfg =
+            GpConfig { lengthscale: Some(2.0), ..GpConfig::default() };
+        let mut inc = IncrementalGp::new(cfg.clone(), 4);
+        let mut rng = Rng::new(3);
+        let mut window: Vec<Vec<f32>> = (0..4).map(|_| rng.normal_vec(6)).collect();
+        let views: Vec<&[f32]> = window.iter().map(|r| r.as_slice()).collect();
+        inc.sync(0, 4, &views);
+        // poison the live factor: the next rank-1 edit reports NotSpd and
+        // the sync falls back to a full refit from the (valid) caches
+        for v in inc.l.iter_mut() {
+            *v = -1.0;
+        }
+        let before = inc.rebuilds();
+        window.remove(0);
+        window.push(rng.normal_vec(6));
+        let views: Vec<&[f32]> = window.iter().map(|r| r.as_slice()).collect();
+        inc.sync(0, 5, &views);
+        assert_eq!(inc.rebuilds(), before + 1, "NotSpd must trigger a refit");
+        let fitted = FittedGp::fit(&cfg, &views).unwrap();
+        let q = rng.normal_vec(6);
+        let wa = inc.weights(&q).unwrap();
+        let wb = fitted.weights(&q);
+        for (a, b) in wa.w.iter().zip(&wb.w) {
+            assert!((a - b).abs() < 1e-10, "post-fallback drift: {a} vs {b}");
+        }
+    }
+
     #[test]
     fn subset_weights_match_full_when_subset_is_full() {
         // weights depend only on subset coords; with full subset they must
         // equal the dense computation by construction.
         let (hist, grads) = mk(4, 20, 5);
-        let cfg = GpConfig { kernel: Kernel::Matern32, lengthscale: Some(2.5), sigma2: 0.2 };
+        let cfg = GpConfig { kernel: Kernel::Matern32, lengthscale: Some(2.5), sigma2: 0.2, ..GpConfig::default() };
         let mut rng = Rng::new(8);
         let q = rng.normal_vec(20);
         let mut mu = vec![0.0f32; 20];

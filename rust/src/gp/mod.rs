@@ -1,15 +1,25 @@
 //! Kernelized gradient estimation (paper Sec. 4.1) — the native substrate.
 //!
 //! * [`kernels`] — separable scalar kernels (RBF / Matérn family),
-//! * [`cholesky`] — dense SPD solve for the T₀×T₀ system,
+//! * [`cholesky`] — dense SPD solve for the T₀×T₀ system, plus the
+//!   rank-1 factor edits (update / row append / row delete) behind the
+//!   incremental fit,
 //! * [`subset`] — fixed random dimension subsetting (Appx B.2.3),
 //! * [`estimator`] — posterior mean/variance over the gradient history.
+//!
+//! Fit paths: [`estimator::FittedGp`] is the stateless from-scratch
+//! reference; [`estimator::IncrementalGp`] (selected via
+//! [`GpConfig::fit`] = [`GpFit::Incremental`], the default) maintains the
+//! Gram factor across sequential iterations with O(N·T₀²) rank-1
+//! up/downdates and falls back to a full refit whenever an edit loses
+//! positive definiteness (`NotSpd`) or the history ring is restructured.
+//! The two are held bit-/1e-8-equivalent by `rust/tests/gp_incremental.rs`.
 
 pub mod cholesky;
 pub mod estimator;
 pub mod kernels;
 pub mod subset;
 
-pub use estimator::{Estimate, GpConfig};
+pub use estimator::{Estimate, GpConfig, GpFit, IncrementalGp};
 pub use kernels::Kernel;
 pub use subset::DimSubset;

@@ -24,6 +24,17 @@ pub mod prop {
     where
         F: Fn(&mut Rng) -> Result<(), String>,
     {
+        check_cases(name, 0, property)
+    }
+
+    /// Like [`check`] but with a case-count floor: runs
+    /// `max(min_cases, PROP_CASES-or-64)` cases. Exactness properties
+    /// (e.g. the incremental-vs-reference GP differential) use this to
+    /// guarantee their contractual coverage regardless of environment.
+    pub fn check_cases<F>(name: &str, min_cases: usize, property: F)
+    where
+        F: Fn(&mut Rng) -> Result<(), String>,
+    {
         if let Ok(seed) = std::env::var("PROP_SEED").map(|s| s.parse::<u64>().unwrap()) {
             let mut rng = Rng::new(seed);
             if let Err(msg) = property(&mut rng) {
@@ -31,7 +42,7 @@ pub mod prop {
             }
             return;
         }
-        let cases = default_cases();
+        let cases = default_cases().max(min_cases);
         for case in 0..cases {
             let seed = 0x9E3779B97F4A7C15u64
                 .wrapping_mul(case as u64 + 1)
@@ -97,6 +108,17 @@ mod tests {
     #[should_panic(expected = "replay with PROP_SEED=")]
     fn failing_property_reports_seed() {
         prop::check("always_fails", |_| Err("boom".into()));
+    }
+
+    #[test]
+    fn check_cases_enforces_the_floor() {
+        let count = std::cell::Cell::new(0usize);
+        let floor = prop::default_cases() + 37;
+        prop::check_cases("floored", floor, |_| {
+            count.set(count.get() + 1);
+            Ok(())
+        });
+        assert_eq!(count.get(), floor);
     }
 
     #[test]

@@ -1,14 +1,20 @@
-//! Full-stack coordinator integration over real AOT artifacts
-//! (test profile): Algo. 1 with the HLO workload oracle AND the HLO
-//! estimation backend, plus failure-injection for artifact/config
-//! mismatches. Skips when `artifacts/test` is missing.
+//! Full-stack coordinator integration: a native (artifact-free) section
+//! covering the Algo-1 equivalence and checkpoint-resume contracts, then
+//! tests over real AOT artifacts (test profile): Algo. 1 with the HLO
+//! workload oracle AND the HLO estimation backend, plus failure-injection
+//! for artifact/config mismatches. The artifact tests skip when
+//! `artifacts/test` is missing.
 
 use std::path::PathBuf;
 
 use optex::config::{Backend, Method, RunConfig};
 use optex::coordinator::Driver;
+use optex::gp::GpFit;
 use optex::opt::OptSpec;
+use optex::util::Rng;
 use optex::workloads::factory;
+use optex::workloads::synthetic::SynthFn;
+use optex::workloads::{GradSource, NativeSynth};
 
 fn test_dir() -> Option<PathBuf> {
     let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts/test");
@@ -31,6 +37,117 @@ fn base_cfg(dir: PathBuf) -> RunConfig {
     cfg.optex.t0 = 3;
     cfg.artifacts_dir = dir;
     cfg
+}
+
+// ---------------------------------------------------------------------------
+// native section (no artifacts needed)
+// ---------------------------------------------------------------------------
+
+fn native_driver(cfg: &RunConfig) -> Driver {
+    let src = NativeSynth::new(
+        SynthFn::parse(&cfg.workload).unwrap(),
+        cfg.synth_dim,
+        cfg.noise_std,
+        cfg.seed,
+    );
+    Driver::with_source(cfg.clone(), Box::new(src), None).unwrap()
+}
+
+/// The `coordinator/optex.rs` module-doc claim: `method = vanilla` is
+/// Algo. 1 with N = 1 and reproduces the plain optimizer **bit-for-bit**
+/// — for every optimizer family, not just SGD.
+#[test]
+fn vanilla_is_bit_exact_for_all_optimizers() {
+    for name in ["sgd", "momentum", "adam", "adagrad"] {
+        let d = 48usize;
+        let steps = 20usize;
+        let mut cfg = RunConfig::default();
+        cfg.workload = "rosenbrock".into();
+        cfg.method = Method::Vanilla;
+        cfg.steps = steps;
+        cfg.seed = 7;
+        cfg.synth_dim = d;
+        cfg.optimizer = OptSpec::parse(name, 0.05).unwrap();
+        let mut drv = native_driver(&cfg);
+        let rec = drv.run().unwrap();
+        assert_eq!(rec.rows.len(), steps, "{name}");
+
+        // manual replay of the plain optimizer
+        let mut src = NativeSynth::new(SynthFn::Rosenbrock, d, 0.0, cfg.seed);
+        let mut theta = src.init_params(&mut Rng::new(cfg.seed));
+        let mut opt = cfg.optimizer.build(d);
+        let mut losses = Vec::new();
+        for _ in 0..steps {
+            let e = src.eval_batch(&[&theta]).unwrap().pop().unwrap();
+            losses.push(e.loss);
+            opt.step(&mut theta, &e.grad);
+        }
+        assert_eq!(drv.theta(), theta.as_slice(), "{name}: θ diverged");
+        assert_eq!(rec.loss_series(), losses, "{name}: loss series diverged");
+    }
+}
+
+/// Checkpoint roundtrip (ISSUE 1 satellite): save mid-run, reload into a
+/// fresh driver, and the resumed run's remaining IterRecords must be
+/// identical to the uninterrupted run's — including with the incremental
+/// GP engine, whose state must be *rebuilt* after resume, never
+/// serialized. (grad_evals / wall-time fields are driver-local and
+/// excluded: the former restarts from 0, the latter is nondeterministic.)
+#[test]
+fn checkpoint_resume_reproduces_remaining_iter_records() {
+    for fit in [GpFit::Full, GpFit::Incremental] {
+        let steps = 12usize;
+        let split = 5usize;
+        let mut cfg = RunConfig::default();
+        cfg.workload = "sphere".into();
+        cfg.method = Method::Optex;
+        cfg.steps = steps;
+        cfg.seed = 3;
+        cfg.synth_dim = 24;
+        cfg.optimizer = OptSpec::Adam { lr: 0.1, beta1: 0.9, beta2: 0.999, eps: 1e-8 };
+        cfg.optex.parallelism = 4;
+        cfg.optex.t0 = 9;
+        cfg.optex.fit = fit;
+
+        // uninterrupted run
+        let mut straight = native_driver(&cfg);
+        for t in 1..=steps {
+            straight.iteration(t).unwrap();
+        }
+
+        // split run: checkpoint at `split`, resume in a fresh driver
+        let path = std::env::temp_dir().join(format!(
+            "optex_it_ckp_{:?}_{}",
+            fit,
+            std::process::id()
+        ));
+        let mut first = native_driver(&cfg);
+        for t in 1..=split {
+            first.iteration(t).unwrap();
+        }
+        first.save_checkpoint(&path, split as u64).unwrap();
+        let mut resumed = native_driver(&cfg);
+        let at = resumed.resume_from(&path).unwrap() as usize;
+        assert_eq!(at, split);
+        for t in at + 1..=steps {
+            resumed.iteration(t).unwrap();
+        }
+        std::fs::remove_file(&path).ok();
+
+        let tail = &straight.record().rows[split..];
+        let tail_resumed = &resumed.record().rows;
+        assert_eq!(tail.len(), tail_resumed.len(), "{fit:?}: row count");
+        for (a, b) in tail.iter().zip(tail_resumed.iter()) {
+            assert_eq!(a.iter, b.iter, "{fit:?}");
+            assert_eq!(a.loss, b.loss, "{fit:?} iter {}: loss", a.iter);
+            assert_eq!(a.grad_norm, b.grad_norm, "{fit:?} iter {}", a.iter);
+            assert_eq!(a.est_var, b.est_var, "{fit:?} iter {}: est_var", a.iter);
+        }
+        if fit == GpFit::Incremental {
+            // resume must have rebuilt (not replayed) the mirror
+            assert!(resumed.gp_rebuilds() >= 1, "incremental state not rebuilt");
+        }
+    }
 }
 
 #[test]

@@ -117,6 +117,7 @@ fn gp_estimate_artifact_matches_native_estimator() {
             kernel,
             lengthscale: Some(ls as f64),
             sigma2: s2 as f64,
+            ..GpConfig::default()
         };
         let hrefs: Vec<&[f32]> = hist.iter().map(|v| v.as_slice()).collect();
         let grefs: Vec<&[f32]> = grads.iter().map(|v| v.as_slice()).collect();

@@ -64,7 +64,12 @@ fn prop_estimator_interpolates_and_reverts() {
         let grads: Vec<Vec<f32>> = (0..t).map(|_| rng.normal_vec(d)).collect();
         let hrefs: Vec<&[f32]> = hist.iter().map(|v| v.as_slice()).collect();
         let grefs: Vec<&[f32]> = grads.iter().map(|v| v.as_slice()).collect();
-        let cfg = GpConfig { kernel: Kernel::Rbf, lengthscale: Some(3.0), sigma2: 0.0 };
+        let cfg = GpConfig {
+            kernel: Kernel::Rbf,
+            lengthscale: Some(3.0),
+            sigma2: 0.0,
+            ..GpConfig::default()
+        };
         // interpolation at a random history point
         let i = rng.below(t);
         let mut mu = vec![0.0f32; d];

@@ -1,0 +1,186 @@
+//! Offline, API-compatible subset of the `anyhow` crate.
+//!
+//! The build image has no crates.io access (DESIGN.md S17/S18 — the same
+//! constraint that led to the from-scratch TOML/JSON parsers and the
+//! `testutil::prop` mini-framework), so this vendored shim provides the
+//! slice of `anyhow` the workspace actually uses:
+//!
+//! * [`Error`]: context-chain error; `Display` prints the outermost
+//!   message, `{:#}` the full `a: b: c` chain (matching anyhow's
+//!   alternate formatting, which the integration tests assert on),
+//! * [`Result<T>`] alias with the usual default error parameter,
+//! * [`Context`] on `Result` and `Option` (`.context` / `.with_context`),
+//! * [`anyhow!`], [`bail!`], [`ensure!`] macros.
+//!
+//! Like the real crate, `Error` deliberately does NOT implement
+//! `std::error::Error` — that is what allows the blanket
+//! `From<E: Error + Send + Sync>` conversion to coexist with the
+//! reflexive `From<Error>`.
+
+use std::fmt;
+
+/// Context-chain error: `chain[0]` is the outermost (most recently
+/// attached) message, the last element the root cause.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build from a printable message (what [`anyhow!`] expands to).
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Wrap with an outer context message (mirrors `anyhow::Error::context`).
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The context chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+
+    /// The innermost (root-cause) message.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(|s| s.as_str()).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain.first().map(String::as_str).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.first().map(String::as_str).unwrap_or(""))?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for (i, cause) in self.chain[1..].iter().enumerate() {
+                write!(f, "\n    {i}: {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// `anyhow::Result<T>` — plain `Result` with [`Error`] as the default.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// `.context(...)` / `.with_context(|| ...)` on `Result` and `Option`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from format args.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Early-return with an [`Error`] built from format args.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::core::result::Result::Err($crate::anyhow!($($arg)*).into())
+    };
+}
+
+/// Assert-or-bail.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !$cond {
+            $crate::bail!(concat!("condition failed: ", stringify!($cond)));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !$cond {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::Other, "root cause")
+    }
+
+    #[test]
+    fn context_chain_formats() {
+        let e: Error = std::result::Result::<(), _>::Err(io_err())
+            .context("opening file")
+            .unwrap_err();
+        assert_eq!(format!("{e}"), "opening file");
+        assert_eq!(format!("{e:#}"), "opening file: root cause");
+        assert_eq!(e.root_cause(), "root cause");
+    }
+
+    #[test]
+    fn option_context_and_macros() {
+        let e = None::<u8>.with_context(|| format!("missing {}", 7)).unwrap_err();
+        assert_eq!(format!("{e}"), "missing 7");
+        fn fails(flag: bool) -> Result<u8> {
+            ensure!(flag, "flag was {flag}");
+            bail!("unreachable {}", 1 + 1)
+        }
+        assert_eq!(format!("{:#}", fails(false).unwrap_err()), "flag was false");
+        assert_eq!(format!("{:#}", fails(true).unwrap_err()), "unreachable 2");
+        let e = anyhow!("x = {}", 3).context("outer");
+        assert_eq!(format!("{e:#}"), "outer: x = 3");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn parse(s: &str) -> Result<i32> {
+            Ok(s.parse::<i32>()?)
+        }
+        assert_eq!(parse("42").unwrap(), 42);
+        assert!(parse("nope").is_err());
+    }
+}
