@@ -8,9 +8,12 @@
 
 use optex::bench::{bench, bench_throughput, black_box};
 use optex::coordinator::GradHistory;
-use optex::gp::estimator::{combine_into, FittedGp};
+use optex::gp::estimator::{combine_into, combine_into_pooled, FittedGp};
 use optex::gp::{DimSubset, GpConfig, IncrementalGp, Kernel};
+use optex::runtime::NativePool;
 use optex::util::Rng;
+use optex::workloads::synthetic::SynthFn;
+use optex::workloads::{GradSource, NativeSynth};
 
 fn main() {
     println!("# estimation hot path (native backend)");
@@ -123,5 +126,53 @@ fn main() {
             t0 * d * 4,
             || combine_into(&w, &grefs, &mut out),
         );
+    }
+
+    // ISSUE-2 acceptance grid: native compute pool, serial (threads=1)
+    // vs threads=8, on the two hot paths the pool feeds. Speedup rows
+    // are grep-stable for EXPERIMENTS.md; the ≥3× bar is the N=8,
+    // d=100k eval fan-out.
+    println!("\n# native pool: eval_batch fan-out, serial vs threads=8 (ackley + noise)");
+    let par = NativePool::new(8);
+    for d in [10_000usize, 100_000] {
+        for n in [4usize, 8] {
+            let mut serial_src = NativeSynth::new(SynthFn::Ackley, d, 0.1, 0);
+            let mut par_src = NativeSynth::new(SynthFn::Ackley, d, 0.1, 0);
+            par_src.set_compute_pool(par);
+            let p: Vec<f32> = (0..d).map(|i| ((i % 97) as f32) * 0.02 - 1.0).collect();
+            let points: Vec<&[f32]> = (0..n).map(|_| p.as_slice()).collect();
+            let s = bench(&format!("eval_batch serial    d={d:<6} N={n}"), || {
+                black_box(serial_src.eval_batch(&points).unwrap())
+            });
+            let t = bench(&format!("eval_batch threads=8 d={d:<6} N={n}"), || {
+                black_box(par_src.eval_batch(&points).unwrap())
+            });
+            println!("speedup      eval_batch d={d} N={n}: {:>5.2}x", s.mean_s / t.mean_s);
+        }
+    }
+
+    println!("\n# native pool: combine w^T G, serial vs threads=8");
+    // N ∈ {4, 8} is the per-iteration push count; the window the combine
+    // reads is T0 rows — bench the issue grid plus the realistic windows.
+    for d in [10_000usize, 100_000] {
+        for t0 in [4usize, 8, 20, 150] {
+            let grads: Vec<Vec<f32>> = (0..t0).map(|_| rng.normal_vec(d)).collect();
+            let grefs: Vec<&[f32]> = grads.iter().map(|v| v.as_slice()).collect();
+            let w: Vec<f64> = (0..t0).map(|i| (i as f64 + 1.0) * 0.1).collect();
+            let mut out_s = vec![0.0f32; d];
+            let mut out_p = vec![0.0f32; d];
+            let s = bench_throughput(
+                &format!("combine serial    T0={t0:<3} d={d}"),
+                t0 * d * 4,
+                || combine_into(&w, &grefs, &mut out_s),
+            );
+            let t = bench_throughput(
+                &format!("combine threads=8 T0={t0:<3} d={d}"),
+                t0 * d * 4,
+                || combine_into_pooled(&par, &w, &grefs, &mut out_p),
+            );
+            assert_eq!(out_s, out_p, "pooled combine must be bit-identical");
+            println!("speedup      combine T0={t0} d={d}: {:>5.2}x", s.mean_s / t.mean_s);
+        }
     }
 }

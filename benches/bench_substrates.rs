@@ -77,7 +77,7 @@ fn main() {
     bench("qnet fwd+bwd B=256", || {
         let c = mlp.forward(&params, &obs, 256);
         let dout = vec![1e-3f32; 256 * 2];
-        mlp.backward(&params, &c, &dout, &mut grad);
+        mlp.backward(&params, &c, &obs, &dout, &mut grad);
         black_box(grad[0])
     });
 }

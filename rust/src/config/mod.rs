@@ -84,6 +84,11 @@ pub struct OptexParams {
     /// GP fit engine: `incremental` (rank-1 factor up/downdates across
     /// iterations, the default) or `full` (from-scratch reference refit).
     pub fit: GpFit,
+    /// Native compute pool width for the eval_batch fan-out and the GP
+    /// hot loops. 0 = auto-detect available parallelism (default);
+    /// 1 = legacy serial path (kept for differential testing).
+    /// Trajectories are bit-identical at any value.
+    pub threads: usize,
 }
 
 impl Default for OptexParams {
@@ -99,6 +104,7 @@ impl Default for OptexParams {
             eval_intermediate: true,
             backend: Backend::Native,
             fit: GpFit::Incremental,
+            threads: 0,
         }
     }
 }
@@ -256,6 +262,7 @@ impl RunConfig {
                 self.optex.fit = GpFit::parse(need_str()?)
                     .ok_or_else(|| bad(key, "unknown fit engine (full|incremental)"))?
             }
+            "optex.threads" => self.optex.threads = need_usize()?,
             _ => return Err(bad(key, "unknown config key")),
         }
         Ok(())
@@ -299,6 +306,7 @@ impl RunConfig {
         m.insert("sigma2".into(), format!("{}", self.optex.sigma2));
         m.insert("selection".into(), self.optex.selection.name().into());
         m.insert("fit".into(), self.optex.fit.name().into());
+        m.insert("threads".into(), self.optex.threads.to_string());
         m.insert("noise_std".into(), format!("{}", self.noise_std));
         m.insert("synth_dim".into(), self.synth_dim.to_string());
         m
@@ -349,6 +357,18 @@ mod tests {
         assert!(!cfg.optex.eval_intermediate);
         assert_eq!(cfg.optex.selection, Selection::Func);
         assert_eq!(cfg.optex.fit, GpFit::Full);
+    }
+
+    #[test]
+    fn threads_knob_parses_with_zero_as_auto_default() {
+        assert_eq!(RunConfig::default().optex.threads, 0);
+        let mut cfg = RunConfig::default();
+        cfg.apply_override("optex.threads=8").unwrap();
+        assert_eq!(cfg.optex.threads, 8);
+        cfg.apply_override("optex.threads=1").unwrap();
+        assert_eq!(cfg.optex.threads, 1);
+        assert!(cfg.apply_override("optex.threads=-2").is_err());
+        assert!(RunConfig::default().describe().contains_key("threads"));
     }
 
     #[test]

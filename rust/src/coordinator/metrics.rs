@@ -26,8 +26,19 @@ pub struct IterRecord {
     pub best_loss: f64,
     /// Cumulative measured wallclock (s).
     pub wall_s: f64,
-    /// Cumulative modeled ideal-parallel time (s).
+    /// Cumulative modeled ideal-parallel time (s). NOTE: the per-worker
+    /// spans feeding the max are measured wherever the eval actually ran
+    /// — under `optex.threads > 1` that means concurrently, so they
+    /// include real memory-bandwidth/core contention. Time-axis curves
+    /// are therefore not directly comparable across different
+    /// `optex.threads` settings; pin `optex.threads = 1` to reproduce
+    /// the pre-pool serial-measurement model.
     pub parallel_s: f64,
+    /// Cumulative *measured* wall time of the ground-truth evaluation
+    /// fan-out (s). With `optex.threads > 1` this is real parallel
+    /// wall-clock — compare against the modeled `parallel_s` to see how
+    /// close the hardware gets to the ideal Σ_t max_i worker_{t,i}.
+    pub eval_s: f64,
     /// GP posterior variance at the last proxy query (0 for baselines).
     pub est_var: f64,
     /// Optional task metric (accuracy for classifiers, reward for RL).
@@ -92,7 +103,7 @@ impl RunRecord {
             path,
             &[
                 "label", "iter", "grad_evals", "loss", "grad_norm", "best_loss",
-                "wall_s", "parallel_s", "est_var", "aux",
+                "wall_s", "parallel_s", "eval_s", "est_var", "aux",
             ],
         )?;
         for r in &self.rows {
@@ -106,6 +117,7 @@ impl RunRecord {
                     r.best_loss,
                     r.wall_s,
                     r.parallel_s,
+                    r.eval_s,
                     r.est_var,
                     r.aux.unwrap_or(f64::NAN),
                 ],
@@ -140,6 +152,7 @@ mod tests {
             best_loss: loss,
             wall_s: iter as f64 * 0.1,
             parallel_s: iter as f64 * 0.05,
+            eval_s: iter as f64 * 0.02,
             est_var: 0.5,
             aux: None,
         }

@@ -13,8 +13,12 @@
 //!   2. multi-step proxy updates on *estimated* gradients (lines 4–5),
 //!      snapshotting optimizer state after every step,
 //!   3. N parallel ground-truth evaluations at the proxy inputs
-//!      (lines 6–9) through the worker pool / native oracle, each
-//!      worker's FO-OPT step resuming from its state snapshot,
+//!      (lines 6–9) through the PJRT worker pool, or — for the native
+//!      oracles — the shared [`NativePool`] (`optex.threads`; per-point
+//!      RNG streams keep trajectories bit-identical at any width), each
+//!      worker's FO-OPT step resuming from its state snapshot. The
+//!      measured fan-out span is recorded as `eval_s` next to the
+//!      modeled ideal-parallel time,
 //!   4. select θ_t (line 10; `last` by default, `func`/`grad` for the
 //!      Fig-6b ablation) and append all N evaluations to the history.
 //!
@@ -37,7 +41,7 @@ use crate::coordinator::metrics::{IterRecord, RunRecord};
 use crate::gp::estimator::FittedGp;
 use crate::gp::{DimSubset, GpConfig, GpFit, IncrementalGp};
 use crate::opt::Optimizer;
-use crate::runtime::{Engine, Executable, In, Manifest};
+use crate::runtime::{Engine, Executable, In, Manifest, NativePool};
 use crate::util::stats::norm2;
 use crate::util::Rng;
 use crate::workloads::factory::Workload;
@@ -75,8 +79,17 @@ pub struct Driver {
     grad_evals: u64,
     wall_s: f64,
     parallel_s: f64,
+    /// Cumulative measured wall time of the eval fan-out (IterRecord
+    /// `eval_s`): real parallel wall-clock when `optex.threads > 1`.
+    eval_wall_s: f64,
     last_var: f64,
+    /// Shared native compute pool (`optex.threads`; 1 = legacy serial).
+    /// Injected into the oracle and every GP fit engine.
+    pool: NativePool,
     mu_buf: Vec<f32>,
+    /// Data-parallel averaged gradient (persistent — no per-iteration
+    /// d-sized clones).
+    avg_buf: Vec<f32>,
     theta_sub_buf: Vec<f32>,
 }
 
@@ -89,11 +102,17 @@ impl Driver {
     /// Build around an arbitrary oracle (used by the RL stack and tests).
     pub fn with_source(
         mut cfg: RunConfig,
-        source: Box<dyn GradSource>,
+        mut source: Box<dyn GradSource>,
         gp_artifact: Option<String>,
     ) -> Result<Driver> {
         let d = source.dim();
         let mut rng = Rng::new(cfg.seed);
+        // Shared native compute pool: fans out the oracle's eval_batch
+        // and the GP estimator's memory-bound loops. Bit-identical
+        // trajectories at any width (see rust/tests/thread_invariance.rs),
+        // so resolving it from the environment is safe.
+        let pool = NativePool::from_config(cfg.optex.threads);
+        source.set_compute_pool(pool);
 
         // Resolve the HLO estimation backend first: its artifact pins
         // T0/D̃ (static shapes), overriding the config values.
@@ -148,8 +167,11 @@ impl Driver {
             grad_evals: 0,
             wall_s: 0.0,
             parallel_s: 0.0,
+            eval_wall_s: 0.0,
             last_var: 0.0,
+            pool,
             mu_buf: vec![0.0; d],
+            avg_buf: Vec::new(),
             theta_sub_buf: Vec::new(),
         })
     }
@@ -221,6 +243,7 @@ impl Driver {
             lengthscale: self.cfg.optex.lengthscale,
             sigma2: self.cfg.optex.sigma2,
             fit: self.cfg.optex.fit,
+            pool: self.pool,
         }
     }
 
@@ -240,7 +263,7 @@ impl Driver {
         self.optimizer
             .set_lr(self.base_lr * self.cfg.schedule.factor(t));
         self.source.on_iteration(t, &self.theta);
-        let (evals, sel_loss, sel_grad_norm, aux, worker_max, serial_eval) =
+        let (evals, sel_loss, sel_grad_norm, aux, worker_max, eval_span) =
             match self.cfg.method {
                 Method::Optex | Method::Vanilla => self.optex_iteration()?,
                 Method::Target => self.target_iteration()?,
@@ -250,10 +273,14 @@ impl Driver {
 
         let iter_wall = iter_start.elapsed().as_secs_f64();
         self.wall_s += iter_wall;
-        // Modeled ideal-parallel time: replace the serial evaluation span
-        // with the slowest single worker (DESIGN.md §Parallelism-model).
+        // Modeled ideal-parallel time: replace the measured evaluation
+        // span with the slowest single worker (DESIGN.md
+        // §Parallelism-model). With `optex.threads > 1` the measured span
+        // is already real parallel wall-clock, recorded separately as
+        // eval_s so the model and the hardware can be compared per run.
         self.parallel_s +=
-            (iter_wall - serial_eval.as_secs_f64()).max(0.0) + worker_max.as_secs_f64();
+            (iter_wall - eval_span.as_secs_f64()).max(0.0) + worker_max.as_secs_f64();
+        self.eval_wall_s += eval_span.as_secs_f64();
         self.best_loss = self.best_loss.min(sel_loss);
 
         if t % self.cfg.log_every == 0 || t == self.cfg.steps {
@@ -265,6 +292,7 @@ impl Driver {
                 best_loss: self.best_loss,
                 wall_s: self.wall_s,
                 parallel_s: self.parallel_s,
+                eval_s: self.eval_wall_s,
                 est_var: self.last_var,
                 aux,
             });
@@ -292,24 +320,40 @@ impl Driver {
             let t0 = self.cfg.optex.t0;
             let (hviews, gviews) = self.history.views();
             // Fit engine for this iteration: the persistent incremental
-            // fit (default) or the from-scratch reference fit. The HLO
-            // estimation backend keeps the reference fit — it only needs
-            // the resolved lengthscale, and the artifact owns the solve.
-            let use_inc = gp_cfg.fit == GpFit::Incremental && self.hlo_est.is_none();
+            // fit (default) or the from-scratch reference fit. With the
+            // HLO estimation backend the artifact owns the solve, but the
+            // incremental engine still mirrors the ring: its cached
+            // distances resolve the lengthscale in O(N·T₀·D̃) instead of
+            // the full O(T₀²·D̃) refit the reference path pays for `ls`
+            // alone (ROADMAP PR-1 follow-up, closed in PR 2).
+            let use_hlo = self.hlo_est.is_some() && self.history.is_full();
+            let use_inc = gp_cfg.fit == GpFit::Incremental;
             let fitted = if use_inc { None } else { FittedGp::fit(&gp_cfg, &hviews) };
             let inc = if use_inc {
                 let inc = self
                     .inc_gp
                     .get_or_insert_with(|| IncrementalGp::new(gp_cfg.clone(), t0));
-                inc.sync(self.history.epoch(), self.history.total_pushed(), &hviews);
+                if use_hlo {
+                    // Artifact owns the solve this iteration — mirror
+                    // rows/distances for `ls` only, skip factor work.
+                    inc.sync_for_lengthscale(
+                        self.history.epoch(),
+                        self.history.total_pushed(),
+                        &hviews,
+                    );
+                } else {
+                    inc.sync(self.history.epoch(), self.history.total_pushed(), &hviews);
+                }
                 Some(&*inc)
             } else {
                 None
             };
             // lengthscale for the HLO artifact (median heuristic resolved
             // natively; the artifact takes it as a runtime scalar input)
-            let ls = fitted.as_ref().map(|f| f.lengthscale).unwrap_or(1.0);
-            let use_hlo = self.hlo_est.is_some() && self.history.is_full();
+            let ls = inc
+                .map(|i| i.lengthscale())
+                .or_else(|| fitted.as_ref().map(|f| f.lengthscale))
+                .unwrap_or(1.0);
             if use_hlo {
                 let est = self.hlo_est.as_mut().unwrap();
                 self.history.flatten(&mut est.hist_flat, &mut est.grads_flat);
@@ -354,7 +398,9 @@ impl Driver {
         };
         let eval_start = Instant::now();
         let evals = self.source.eval_batch(&eval_points)?;
-        let serial_eval = eval_start.elapsed();
+        // Measured span of the fan-out: the serial sum at threads = 1,
+        // real parallel wall-clock once the pool is engaged.
+        let eval_span = eval_start.elapsed();
         let worker_max =
             evals.iter().map(|e| e.elapsed).max().unwrap_or(Duration::ZERO);
 
@@ -398,7 +444,7 @@ impl Driver {
             grad_norms[sel_idx],
             aux,
             worker_max,
-            serial_eval,
+            eval_span,
         ))
     }
 
@@ -445,18 +491,21 @@ impl Driver {
         let serial = t0.elapsed();
         let worker_max =
             evals.iter().map(|e| e.elapsed).max().unwrap_or(Duration::ZERO);
+        // Average into the persistent buffer and step straight through it
+        // (disjoint field borrows) — no per-iteration d-sized clone.
         let d = self.theta.len();
-        self.mu_buf.iter_mut().for_each(|x| *x = 0.0);
+        if self.avg_buf.len() != d {
+            self.avg_buf = vec![0.0; d];
+        }
+        self.avg_buf.iter_mut().for_each(|x| *x = 0.0);
         for e in &evals {
-            for (m, &g) in self.mu_buf.iter_mut().zip(&e.grad) {
+            for (m, &g) in self.avg_buf.iter_mut().zip(&e.grad) {
                 *m += g / n as f32;
             }
         }
-        debug_assert_eq!(self.mu_buf.len(), d);
-        let avg = self.mu_buf.clone();
-        self.optimizer.step(&mut self.theta, &avg);
+        self.optimizer.step(&mut self.theta, &self.avg_buf);
         let loss = evals.iter().map(|e| e.loss).sum::<f64>() / n as f64;
-        let gn = norm2(&avg);
+        let gn = norm2(&self.avg_buf);
         Ok((n as u64, loss, gn, mean_aux(&evals), worker_max, serial))
     }
 }

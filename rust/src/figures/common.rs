@@ -142,6 +142,7 @@ mod tests {
                 best_loss: y,
                 wall_s: 0.0,
                 parallel_s: 0.0,
+                eval_s: 0.0,
                 est_var: 0.0,
                 aux: None,
             });

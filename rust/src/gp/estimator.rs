@@ -27,6 +27,8 @@
 
 use crate::gp::cholesky::{self, chol_solve};
 use crate::gp::kernels::{self, Kernel};
+use crate::runtime::native_pool::SPAWN_GRAIN;
+use crate::runtime::NativePool;
 
 /// Jitter always added to the Gram diagonal (matches the +1e-6 baked into
 /// the L2 graph) so σ² = 0 synthetic runs stay numerically SPD.
@@ -71,6 +73,12 @@ pub struct GpConfig {
     /// the coordinator consults this; the one-shot [`estimate`]/
     /// [`weights`] helpers and [`FittedGp`] itself ignore it.
     pub fit: GpFit,
+    /// Native compute pool for the memory-bound loops (combine, kernel
+    /// vectors, pairwise sqdist). Serial by default so standalone users
+    /// keep the exact legacy path; the coordinator injects the shared
+    /// pool resolved from `optex.threads`. Every pooled loop is
+    /// bit-identical to serial at any thread count.
+    pub pool: NativePool,
 }
 
 impl Default for GpConfig {
@@ -80,6 +88,7 @@ impl Default for GpConfig {
             lengthscale: None,
             sigma2: 0.0,
             fit: GpFit::Incremental,
+            pool: NativePool::serial(),
         }
     }
 }
@@ -119,7 +128,7 @@ pub fn weights(
     let ls = cfg
         .lengthscale
         .unwrap_or_else(|| kernels::median_heuristic(hist_sub));
-    let kvec = kernels::kernel_vector(cfg.kernel, ls, theta_sub, hist_sub);
+    let kvec = kernels::kernel_vector_pooled(&cfg.pool, cfg.kernel, ls, theta_sub, hist_sub);
     let mut kmat = kernels::kernel_matrix(cfg.kernel, ls, hist_sub);
     let lam = cfg.sigma2 + DIAG_JITTER;
     for i in 0..t {
@@ -146,7 +155,7 @@ pub fn estimate(
         out_mu.iter_mut().for_each(|x| *x = 0.0);
         return Estimate { mu: out_mu.to_vec(), var: 1.0, lengthscale: 1.0 };
     };
-    combine_into(&w, grads, out_mu);
+    combine_into_pooled(&cfg.pool, &w, grads, out_mu);
     let var = (1.0 - kvec.iter().zip(&w).map(|(k, w)| k * w).sum::<f64>()).max(0.0);
     Estimate { mu: out_mu.to_vec(), var, lengthscale }
 }
@@ -157,14 +166,41 @@ pub fn estimate(
 /// slowdown on far-from-history queries; EXPERIMENTS.md §Perf P1).
 const W_CUTOFF: f64 = 1e-24;
 
+/// Cache-sized column chunk of the combine inner loop.
+const CHUNK: usize = 8192;
+
 /// μ = wᵀG, written into `out` — the L3 per-proxy-step hot loop.
 pub fn combine_into(w: &[f64], grads: &[&[f32]], out: &mut [f32]) {
     debug_assert_eq!(w.len(), grads.len());
+    combine_range(w, grads, 0, out);
+}
+
+/// [`combine_into`] with the output columns fanned out across the native
+/// compute pool. Each output element still accumulates the history rows
+/// in serial row order (the split never divides a single reduction), so
+/// the result is bit-identical to [`combine_into`] at any thread count.
+/// The T₀ × D gradient history is tens of MB re-read once per proxy step
+/// — this is the memory-bound loop the pool exists for.
+pub fn combine_into_pooled(pool: &NativePool, w: &[f64], grads: &[&[f32]], out: &mut [f32]) {
+    debug_assert_eq!(w.len(), grads.len());
+    // Per output column the combine touches T₀ row elements, but each
+    // touch is a cheap streaming FMA — demand double the generic spawn
+    // grain per thread before splitting.
+    let min_chunk = CHUNK.max(2 * SPAWN_GRAIN / w.len().max(1));
+    pool.par_chunks_mut(out, min_chunk, |offset, dst| {
+        combine_range(w, grads, offset, dst);
+    });
+}
+
+/// Combine over the column window `[offset, offset + out.len())` of the
+/// gradient rows. Per-element accumulation order is fixed (row order,
+/// f32) regardless of `offset`/window size — the determinism anchor for
+/// both the serial CHUNK loop and the pooled column split.
+fn combine_range(w: &[f64], grads: &[&[f32]], offset: usize, out: &mut [f32]) {
     let d = out.len();
     out.iter_mut().for_each(|x| *x = 0.0);
     // Process in cache-sized column chunks, accumulating all history rows
     // per chunk (one pass over `out`, T0 passes over each grads chunk).
-    const CHUNK: usize = 8192;
     let mut start = 0;
     while start < d {
         let end = (start + CHUNK).min(d);
@@ -173,7 +209,7 @@ pub fn combine_into(w: &[f64], grads: &[&[f32]], out: &mut [f32]) {
             if wi.abs() < W_CUTOFF {
                 continue; // negligible AND subnormal-slow — skip the row
             }
-            let src = &g[start..end];
+            let src = &g[offset + start..offset + end];
             let wi = *wi as f32;
             for (o, &s) in dst.iter_mut().zip(src) {
                 *o += wi * s;
@@ -195,6 +231,9 @@ pub struct FittedGp {
     pub lengthscale: f64,
     /// Owned copies of the subset-restricted history rows.
     rows: Vec<Vec<f32>>,
+    /// Compute pool for query-time combine / kernel-vector scans
+    /// (inherited from the fitting [`GpConfig`]).
+    pool: NativePool,
 }
 
 impl FittedGp {
@@ -208,7 +247,7 @@ impl FittedGp {
         if t == 0 {
             return None;
         }
-        let r2 = kernels::sqdist_matrix(hist_sub);
+        let r2 = kernels::sqdist_matrix_pooled(&cfg.pool, hist_sub);
         let ls = cfg
             .lengthscale
             .unwrap_or_else(|| kernels::median_from_sqdist(&r2, t));
@@ -226,6 +265,7 @@ impl FittedGp {
             kernel: cfg.kernel,
             lengthscale: ls,
             rows: hist_sub.iter().map(|r| r.to_vec()).collect(),
+            pool: cfg.pool,
         })
     }
 
@@ -241,9 +281,15 @@ impl FittedGp {
     pub fn query(&self, theta_sub: &[f32], grads: &[&[f32]], out_mu: &mut [f32]) -> f64 {
         debug_assert_eq!(grads.len(), self.t);
         let rows: Vec<&[f32]> = self.rows.iter().map(|r| r.as_slice()).collect();
-        let kvec = kernels::kernel_vector(self.kernel, self.lengthscale, theta_sub, &rows);
+        let kvec = kernels::kernel_vector_pooled(
+            &self.pool,
+            self.kernel,
+            self.lengthscale,
+            theta_sub,
+            &rows,
+        );
         let w = solve_weights(&self.l, self.t, &kvec);
-        combine_into(&w, grads, out_mu);
+        combine_into_pooled(&self.pool, &w, grads, out_mu);
         (1.0 - kvec.iter().zip(&w).map(|(k, w)| k * w).sum::<f64>()).max(0.0)
     }
 
@@ -251,7 +297,13 @@ impl FittedGp {
     /// surface the incremental path is tested against.
     pub fn weights(&self, theta_sub: &[f32]) -> Weights {
         let rows: Vec<&[f32]> = self.rows.iter().map(|r| r.as_slice()).collect();
-        let kvec = kernels::kernel_vector(self.kernel, self.lengthscale, theta_sub, &rows);
+        let kvec = kernels::kernel_vector_pooled(
+            &self.pool,
+            self.kernel,
+            self.lengthscale,
+            theta_sub,
+            &rows,
+        );
         let w = solve_weights(&self.l, self.t, &kvec);
         Weights { w, kvec, lengthscale: self.lengthscale }
     }
@@ -311,6 +363,11 @@ pub struct IncrementalGp {
     rebuilds: u64,
     /// Rank-1 factor edits applied (appends + deletions).
     factor_ops: u64,
+    /// Rows/distances/lengthscale are ahead of the Cholesky factor
+    /// (lengthscale-only syncs skip all factor work — the HLO estimation
+    /// backend only reads `ls`). The next factor-wanting sync rebuilds
+    /// `l` from the cached distances; queries assert against staleness.
+    factor_stale: bool,
 }
 
 impl IncrementalGp {
@@ -330,6 +387,7 @@ impl IncrementalGp {
             pushes: 0,
             rebuilds: 0,
             factor_ops: 0,
+            factor_stale: false,
         }
     }
 
@@ -363,6 +421,31 @@ impl IncrementalGp {
     /// `total_pushed` come from `GradHistory`; `hist_sub` are its current
     /// subset-restricted rows, oldest first.
     pub fn sync(&mut self, epoch: u64, total_pushed: u64, hist_sub: &[&[f32]]) {
+        self.sync_impl(epoch, total_pushed, hist_sub, true);
+    }
+
+    /// Structural-only sync: mirrors rows + distances and resolves the
+    /// lengthscale, but skips ALL Cholesky work (edits and refactors).
+    /// For callers that only read [`Self::lengthscale`] per iteration —
+    /// the HLO estimation backend, whose artifact owns the solve. The
+    /// factor is marked stale and lazily rebuilt from the cached
+    /// distances by the next [`Self::sync`].
+    pub fn sync_for_lengthscale(
+        &mut self,
+        epoch: u64,
+        total_pushed: u64,
+        hist_sub: &[&[f32]],
+    ) {
+        self.sync_impl(epoch, total_pushed, hist_sub, false);
+    }
+
+    fn sync_impl(
+        &mut self,
+        epoch: u64,
+        total_pushed: u64,
+        hist_sub: &[&[f32]],
+        want_factor: bool,
+    ) {
         let new_len = hist_sub.len();
         let delta = if epoch == self.epoch && total_pushed >= self.pushes {
             (total_pushed - self.pushes) as usize
@@ -373,11 +456,14 @@ impl IncrementalGp {
             && delta <= new_len
             && (self.t + delta).min(self.cap) == new_len;
         if !mirrorable {
-            self.rebuild_from(hist_sub);
+            self.rebuild_from(hist_sub, want_factor);
         } else if delta > 0 {
             // `factor_live` goes false on the first NotSpd; structural
-            // state (rows, distances) keeps updating regardless.
-            let mut factor_live = self.cfg.lengthscale.is_some();
+            // state (rows, distances) keeps updating regardless. A stale
+            // factor can't take rank-1 edits — fall through to refactor.
+            let was_stale = self.factor_stale;
+            let mut factor_live =
+                want_factor && !was_stale && self.cfg.lengthscale.is_some();
             for row in &hist_sub[new_len - delta..] {
                 if self.t == self.cap {
                     factor_live = self.evict_oldest(factor_live) && factor_live;
@@ -389,12 +475,31 @@ impl IncrementalGp {
                 // window — refit from the cached distances (bit-equal
                 // to the reference fit on the same rows).
                 self.ls = kernels::median_from_sqdist(&self.r2, self.t);
+                if want_factor {
+                    self.refactor();
+                    self.factor_stale = false;
+                } else {
+                    self.factor_stale = true;
+                }
+            } else if want_factor && !factor_live {
+                // NotSpd fallback (counted) or deferred maintenance
+                // after lengthscale-only syncs (not a fallback): the
+                // caches are valid, the factor is not.
                 self.refactor();
-            } else if !factor_live {
-                // NotSpd fallback: caches are valid, the factor is not.
-                self.refactor();
-                self.rebuilds += 1;
+                if !was_stale {
+                    self.rebuilds += 1;
+                }
+                self.factor_stale = false;
+            } else if !want_factor {
+                self.factor_stale = true;
             }
+        } else if want_factor && self.factor_stale {
+            // Nothing new pushed, but an earlier lengthscale-only sync
+            // left the factor behind the caches: catch up now.
+            if self.t > 0 {
+                self.refactor();
+            }
+            self.factor_stale = false;
         }
         self.epoch = epoch;
         self.pushes = total_pushed;
@@ -408,11 +513,24 @@ impl IncrementalGp {
             out_mu.iter_mut().for_each(|x| *x = 0.0);
             return 1.0;
         }
+        // Hard assert: a stale factor would silently produce corrupted
+        // weights in release builds; the check is free next to the
+        // O(T₀²) solve.
+        assert!(
+            !self.factor_stale,
+            "IncrementalGp::query after a lengthscale-only sync; call sync() first"
+        );
         debug_assert_eq!(grads.len(), self.t);
         let rows: Vec<&[f32]> = self.rows.iter().map(|r| r.as_slice()).collect();
-        let kvec = kernels::kernel_vector(self.cfg.kernel, self.ls, theta_sub, &rows);
+        let kvec = kernels::kernel_vector_pooled(
+            &self.cfg.pool,
+            self.cfg.kernel,
+            self.ls,
+            theta_sub,
+            &rows,
+        );
         let w = solve_weights(&self.l, self.t, &kvec);
-        combine_into(&w, grads, out_mu);
+        combine_into_pooled(&self.cfg.pool, &w, grads, out_mu);
         (1.0 - kvec.iter().zip(&w).map(|(k, w)| k * w).sum::<f64>()).max(0.0)
     }
 
@@ -421,8 +539,18 @@ impl IncrementalGp {
         if self.t == 0 {
             return None;
         }
+        assert!(
+            !self.factor_stale,
+            "IncrementalGp::weights after a lengthscale-only sync; call sync() first"
+        );
         let rows: Vec<&[f32]> = self.rows.iter().map(|r| r.as_slice()).collect();
-        let kvec = kernels::kernel_vector(self.cfg.kernel, self.ls, theta_sub, &rows);
+        let kvec = kernels::kernel_vector_pooled(
+            &self.cfg.pool,
+            self.cfg.kernel,
+            self.ls,
+            theta_sub,
+            &rows,
+        );
         let w = solve_weights(&self.l, self.t, &kvec);
         Some(Weights { w, kvec, lengthscale: self.ls })
     }
@@ -450,7 +578,9 @@ impl IncrementalGp {
     fn append(&mut self, row: &[f32], do_factor: bool) -> bool {
         debug_assert!(self.t < self.cap);
         let t = self.t;
-        let d2: Vec<f64> = self.rows.iter().map(|r| kernels::sqdist(row, r)).collect();
+        let views: Vec<&[f32]> = self.rows.iter().map(|r| r.as_slice()).collect();
+        let d2 = kernels::sqdist_row_pooled(&self.cfg.pool, row, &views);
+        drop(views);
         sym_append(&mut self.r2, t, &d2);
         self.rows.push(row.to_vec());
         self.t = t + 1;
@@ -468,18 +598,22 @@ impl IncrementalGp {
     }
 
     /// Full structural rebuild from the ring's rows (distances included).
-    fn rebuild_from(&mut self, hist_sub: &[&[f32]]) {
+    fn rebuild_from(&mut self, hist_sub: &[&[f32]], want_factor: bool) {
         self.rows = hist_sub.iter().map(|r| r.to_vec()).collect();
         self.t = hist_sub.len();
-        self.r2 = kernels::sqdist_matrix(hist_sub);
+        self.r2 = kernels::sqdist_matrix_pooled(&self.cfg.pool, hist_sub);
         self.ls = self
             .cfg
             .lengthscale
             .unwrap_or_else(|| kernels::median_from_sqdist(&self.r2, self.t));
-        if self.t > 0 {
-            self.refactor();
-        } else {
+        if self.t == 0 {
             self.l.clear();
+            self.factor_stale = false;
+        } else if want_factor {
+            self.refactor();
+            self.factor_stale = false;
+        } else {
+            self.factor_stale = true;
         }
         self.rebuilds += 1;
     }
@@ -610,6 +744,51 @@ mod tests {
             assert!(var <= last + 1e-9, "n={n}: {var} > {last}");
             last = var;
         }
+    }
+
+    #[test]
+    fn combine_pooled_bit_identical_to_serial() {
+        // d big enough that min_chunk actually splits; t small enough
+        // that the spawn grain raises the floor — cover both regimes.
+        for (t, d) in [(3usize, 100_000usize), (40, 50_000), (5, 1000)] {
+            let (_, grads) = mk(t, d, 8);
+            let grefs = refs(&grads);
+            let mut rng = Rng::new(t as u64);
+            let w: Vec<f64> = (0..t).map(|_| rng.normal()).collect();
+            let mut serial = vec![0.0f32; d];
+            combine_into(&w, &grefs, &mut serial);
+            for threads in [2usize, 8] {
+                let pool = NativePool::new(threads);
+                let mut par = vec![1.0f32; d]; // dirty buffer must be overwritten
+                combine_into_pooled(&pool, &w, &grefs, &mut par);
+                assert_eq!(serial, par, "t={t} d={d} threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn fitted_gp_threaded_matches_serial_bitwise() {
+        let (hist, grads) = mk(12, 600, 14);
+        let hrefs = refs(&hist);
+        let grefs = refs(&grads);
+        let serial_cfg = GpConfig {
+            kernel: Kernel::Matern52,
+            lengthscale: None,
+            sigma2: 0.05,
+            ..GpConfig::default()
+        };
+        let par_cfg = GpConfig { pool: NativePool::new(8), ..serial_cfg.clone() };
+        let a = FittedGp::fit(&serial_cfg, &hrefs).unwrap();
+        let b = FittedGp::fit(&par_cfg, &hrefs).unwrap();
+        assert_eq!(a.lengthscale.to_bits(), b.lengthscale.to_bits());
+        assert_eq!(a.l, b.l, "factor must not depend on the pool");
+        let mut rng = Rng::new(2);
+        let q = rng.normal_vec(600);
+        let (mut mu_a, mut mu_b) = (vec![0.0f32; 600], vec![0.0f32; 600]);
+        let va = a.query(&q, &grefs, &mut mu_a);
+        let vb = b.query(&q, &grefs, &mut mu_b);
+        assert_eq!(mu_a, mu_b);
+        assert_eq!(va.to_bits(), vb.to_bits());
     }
 
     #[test]
@@ -759,6 +938,55 @@ mod tests {
         let wb = fitted.weights(&q);
         for (a, b) in wa.w.iter().zip(&wb.w) {
             assert!((a - b).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn lengthscale_only_sync_matches_reference_and_recovers_factor() {
+        for pinned in [None, Some(2.5)] {
+            let cfg = GpConfig {
+                kernel: Kernel::Matern52,
+                lengthscale: pinned,
+                sigma2: 0.1,
+                ..GpConfig::default()
+            };
+            let mut inc = IncrementalGp::new(cfg.clone(), 5);
+            let mut rng = Rng::new(77);
+            let mut window: Vec<Vec<f32>> = Vec::new();
+            let mut total = 0u64;
+            // alternate lengthscale-only and full syncs across evictions
+            for step in 0..9 {
+                window.push(rng.normal_vec(6));
+                if window.len() > 5 {
+                    window.remove(0);
+                }
+                total += 1;
+                let views: Vec<&[f32]> = window.iter().map(|r| r.as_slice()).collect();
+                if step % 2 == 0 {
+                    inc.sync_for_lengthscale(0, total, &views);
+                } else {
+                    inc.sync(0, total, &views);
+                }
+                let fitted = FittedGp::fit(&cfg, &views).unwrap();
+                assert_eq!(
+                    inc.lengthscale(),
+                    fitted.lengthscale,
+                    "pinned={pinned:?} step {step}: ls drift"
+                );
+            }
+            // a full sync with NO new pushes must catch the factor up
+            // from the cached distances and agree with the reference
+            let views: Vec<&[f32]> = window.iter().map(|r| r.as_slice()).collect();
+            inc.sync_for_lengthscale(0, total, &views);
+            inc.sync(0, total, &views);
+            assert_eq!(inc.rebuilds(), 0, "deferred maintenance is not a fallback");
+            let fitted = FittedGp::fit(&cfg, &views).unwrap();
+            let q = rng.normal_vec(6);
+            let wa = inc.weights(&q).unwrap();
+            let wb = fitted.weights(&q);
+            for (a, b) in wa.w.iter().zip(&wb.w) {
+                assert!((a - b).abs() < 1e-10, "pinned={pinned:?}: {a} vs {b}");
+            }
         }
     }
 

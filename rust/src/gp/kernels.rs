@@ -3,6 +3,9 @@
 //! κ = 1). Mirrors python/compile/kernels/ref.py exactly — the two are
 //! cross-checked through the HLO artifacts in integration tests.
 
+use crate::runtime::native_pool::grain;
+use crate::runtime::NativePool;
+
 /// Numerical floor before sqrt (keeps values finite at r = 0).
 const EPS: f64 = 1e-12;
 
@@ -142,6 +145,68 @@ pub fn kernel_vector(kernel: Kernel, ls: f64, theta: &[f32], rows: &[&[f32]]) ->
     rows.iter().map(|r| kernel.from_sqdist(sqdist(theta, r), ls)).collect()
 }
 
+/// [`kernel_vector`] with the row scan chunked across the native compute
+/// pool. Each entry is one full-precision [`sqdist`] + kernel evaluation,
+/// exactly as in the serial path — reductions are never split — so the
+/// result is bit-identical at any thread count.
+pub fn kernel_vector_pooled(
+    pool: &NativePool,
+    kernel: Kernel,
+    ls: f64,
+    theta: &[f32],
+    rows: &[&[f32]],
+) -> Vec<f64> {
+    let mut out = vec![0.0f64; rows.len()];
+    pool.fill_with(&mut out, grain(theta.len()), |i| {
+        kernel.from_sqdist(sqdist(theta, rows[i]), ls)
+    });
+    out
+}
+
+/// Squared distances of one row against every row in `rows`, chunked
+/// across the pool (the incremental fit's per-append Gram-row scan).
+/// Bit-identical to the serial map at any thread count.
+pub fn sqdist_row_pooled(pool: &NativePool, row: &[f32], rows: &[&[f32]]) -> Vec<f64> {
+    let mut out = vec![0.0f64; rows.len()];
+    pool.fill_with(&mut out, grain(row.len()), |i| sqdist(row, rows[i]));
+    out
+}
+
+/// [`sqdist_matrix`] with the upper-triangle pair scan chunked across
+/// the pool. Pairs are flattened so load balances evenly (row-major
+/// striping would give the first worker ~2× the work); each pair is one
+/// independent [`sqdist`], so the matrix is bit-identical to the serial
+/// one at any thread count.
+pub fn sqdist_matrix_pooled(pool: &NativePool, rows: &[&[f32]]) -> Vec<f64> {
+    let t = rows.len();
+    if t < 2 {
+        return vec![0.0; t * t];
+    }
+    // Below the split point the pair/scatter scaffolding is pure
+    // overhead — take the direct serial double loop (identical values).
+    let npairs = t * (t - 1) / 2;
+    if pool.is_serial() || npairs < 2 * grain(rows[0].len()) {
+        return sqdist_matrix(rows);
+    }
+    let mut pairs = Vec::with_capacity(t * (t - 1) / 2);
+    for i in 0..t {
+        for j in (i + 1)..t {
+            pairs.push((i, j));
+        }
+    }
+    let mut vals = vec![0.0f64; pairs.len()];
+    pool.fill_with(&mut vals, grain(rows[0].len()), |k| {
+        let (i, j) = pairs[k];
+        sqdist(rows[i], rows[j])
+    });
+    let mut r2 = vec![0.0; t * t];
+    for (&(i, j), &v) in pairs.iter().zip(&vals) {
+        r2[i * t + j] = v;
+        r2[j * t + i] = v;
+    }
+    r2
+}
+
 /// Gram matrix K_t over history rows (dense, row-major t×t).
 pub fn kernel_matrix(kernel: Kernel, ls: f64, rows: &[&[f32]]) -> Vec<f64> {
     let t = rows.len();
@@ -253,5 +318,49 @@ mod tests {
             assert_eq!(Kernel::parse(k.name()), Some(k));
         }
         assert_eq!(Kernel::parse("cubic"), None);
+    }
+
+    #[test]
+    fn pooled_scans_bit_identical_to_serial() {
+        use crate::util::Rng;
+        let mut rng = Rng::new(12);
+        // small dim -> the spawn grain gates (serial fast paths); large
+        // dim -> real splits. Cover both regimes at several thread counts.
+        for d in [8usize, 3000] {
+            let rows_data: Vec<Vec<f32>> = (0..40).map(|_| rng.normal_vec(d)).collect();
+            let rows: Vec<&[f32]> = rows_data.iter().map(|v| v.as_slice()).collect();
+            let q = rng.normal_vec(d);
+            let kv = kernel_vector(Kernel::Matern52, 2.5, &q, &rows);
+            let r2 = sqdist_matrix(&rows);
+            for threads in [1usize, 3, 8] {
+                let pool = NativePool::new(threads);
+                assert_eq!(
+                    kernel_vector_pooled(&pool, Kernel::Matern52, 2.5, &q, &rows),
+                    kv,
+                    "kvec d={d} threads={threads}"
+                );
+                assert_eq!(
+                    sqdist_matrix_pooled(&pool, &rows),
+                    r2,
+                    "r2 d={d} threads={threads}"
+                );
+                let row_scan: Vec<f64> = rows.iter().map(|r| sqdist(&q, r)).collect();
+                assert_eq!(
+                    sqdist_row_pooled(&pool, &q, &rows),
+                    row_scan,
+                    "row scan d={d} threads={threads}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn pooled_matrix_degenerate_sizes() {
+        let pool = NativePool::new(4);
+        let empty: Vec<&[f32]> = Vec::new();
+        assert!(sqdist_matrix_pooled(&pool, &empty).is_empty());
+        let a = vec![1.0f32, 2.0];
+        let one: Vec<&[f32]> = vec![&a];
+        assert_eq!(sqdist_matrix_pooled(&pool, &one), vec![0.0]);
     }
 }

@@ -22,8 +22,8 @@ optex — OptEx: first-order optimization with approximately parallelized iterat
 
 USAGE:
   optex run  [--config FILE] [--workload W] [--method M] [--steps T]
-             [--seed S] [--fit full|incremental] [--checkpoint FILE]
-             [--resume FILE] [--set key=value ...]
+             [--seed S] [--fit full|incremental] [--threads K]
+             [--checkpoint FILE] [--resume FILE] [--set key=value ...]
   optex fig  <2|3|4a|4b|6|6a..6d|7|8|9|10|kernels|estbound|nativehlo|all>
              [--seeds K] [--steps T] [--quick] [--out DIR] [--artifacts DIR]
   optex rl   --env <cartpole|mountaincar|acrobot> [--episodes E]
@@ -102,6 +102,9 @@ fn load_config(args: &Args) -> anyhow::Result<RunConfig> {
     }
     if let Some(f) = args.opt("fit") {
         cfg.apply_override(&format!("optex.fit={f}"))?;
+    }
+    if let Some(k) = args.opt_usize("threads")? {
+        cfg.apply_override(&format!("optex.threads={k}"))?;
     }
     if let Some(a) = args.opt("artifacts") {
         cfg.artifacts_dir = PathBuf::from(a);

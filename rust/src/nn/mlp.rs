@@ -16,11 +16,13 @@ pub struct Mlp {
     pub out_dim: usize,
 }
 
-/// Forward-pass activations kept for backprop.
+/// Forward-pass activations kept for backprop. The input batch itself is
+/// NOT copied here — [`Mlp::backward`] takes it by reference, so the
+/// parallel TD-gradient fan-out shares one minibatch buffer per worker
+/// instead of cloning batch×in_dim floats every evaluation.
 #[derive(Debug)]
 pub struct Cache {
     batch: usize,
-    x: Vec<f32>,
     h1: Vec<f32>,
     h2: Vec<f32>,
     pub out: Vec<f32>,
@@ -84,12 +86,21 @@ impl Mlp {
         matmul(&h2, &params[w3..b3], &mut out, batch, h, o);
         add_bias_relu(&mut out, &params[b3..b3 + o], batch, o, false);
 
-        Cache { batch, x: x.to_vec(), h1, h2, out }
+        Cache { batch, h1, h2, out }
     }
 
     /// Backprop `dout = dL/dout` (batch × out_dim) into a flat gradient.
-    pub fn backward(&self, params: &[f32], cache: &Cache, dout: &[f32], grad: &mut [f32]) {
+    /// `x` must be the same input batch `cache` was produced from.
+    pub fn backward(
+        &self,
+        params: &[f32],
+        cache: &Cache,
+        x: &[f32],
+        dout: &[f32],
+        grad: &mut [f32],
+    ) {
         debug_assert_eq!(grad.len(), self.dim());
+        debug_assert_eq!(x.len(), cache.batch * self.in_dim);
         debug_assert_eq!(dout.len(), cache.batch * self.out_dim);
         let (i, h, o) = (self.in_dim, self.hidden, self.out_dim);
         let b = cache.batch;
@@ -111,7 +122,7 @@ impl Mlp {
         relu_mask(&mut dh1, &cache.h1);
 
         // layer 1
-        matmul_at_b_acc(&cache.x, &dh1, &mut grad[w1..b1], b, i, h);
+        matmul_at_b_acc(x, &dh1, &mut grad[w1..b1], b, i, h);
         col_sum_acc(&dh1, &mut grad[b1..b1 + h], b, h);
     }
 }
@@ -173,7 +184,7 @@ mod tests {
         let dout: Vec<f32> =
             cache.out.iter().zip(&target).map(|(&o, &t)| scale * (o - t)).collect();
         let mut grad = vec![0.0f32; net.dim()];
-        net.backward(&params, &cache, &dout, &mut grad);
+        net.backward(&params, &cache, &x, &dout, &mut grad);
 
         let mut rng2 = Rng::new(9);
         for _ in 0..12 {
@@ -210,7 +221,7 @@ mod tests {
             let scale = 2.0 / batch as f32;
             let dout: Vec<f32> =
                 c.out.iter().zip(&target).map(|(&o, &t)| scale * (o - t)).collect();
-            net.backward(&params, &c, &dout, &mut grad);
+            net.backward(&params, &c, &x, &dout, &mut grad);
             for (p, &g) in params.iter_mut().zip(&grad) {
                 *p -= 0.05 * g;
             }

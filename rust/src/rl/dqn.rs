@@ -26,7 +26,7 @@ use crate::coordinator::Driver;
 use crate::nn::Mlp;
 use crate::rl::env::{self, Env};
 use crate::rl::replay::{Batch, ReplayBuffer};
-use crate::runtime::{Manifest, TensorData, WorkerPool};
+use crate::runtime::{Manifest, NativePool, TensorData, WorkerPool};
 use crate::util::timer::Stopwatch;
 use crate::util::Rng;
 use crate::workloads::{Eval, GradSource};
@@ -85,6 +85,11 @@ pub struct DqnSource {
     rng: Rng,
     buf: Batch,
     backend: QBackend,
+    /// Native compute pool for the TD-gradient fan-out (native backend).
+    pool: NativePool,
+    /// One pre-sampled minibatch per fan-out point (reused across
+    /// iterations; sampling stays sequential, only the math fans out).
+    bufs: Vec<Batch>,
 }
 
 impl DqnSource {
@@ -107,6 +112,8 @@ impl DqnSource {
             rng: Rng::new(seed ^ 0xD09),
             buf: Batch::default(),
             backend: QBackend::Native,
+            pool: NativePool::serial(),
+            bufs: Vec::new(),
         }
     }
 
@@ -144,36 +151,53 @@ impl DqnSource {
             rng: Rng::new(seed ^ 0xD09),
             buf: Batch::default(),
             backend: QBackend::Hlo { pool, artifact },
+            pool: NativePool::serial(),
+            bufs: Vec::new(),
         })
     }
 
     /// TD gradient at `params` on a freshly sampled minibatch (native).
     fn native_td_grad(&mut self, params: &[f32]) -> (f64, Vec<f32>) {
-        let b = self.batch;
-        let (obs_dim, n_act) = (self.mlp.in_dim, self.mlp.out_dim);
-        self.replay.borrow().sample_into(b, &mut self.rng, &mut self.buf);
-        let cache = self.mlp.forward(params, &self.buf.obs, b);
-        let next = self.mlp.forward(&self.target, &self.buf.next_obs, b);
-        let mut dout = vec![0.0f32; b * n_act];
-        let mut loss = 0.0f64;
-        for i in 0..b {
-            let a = self.buf.act[i] as usize;
-            let qa = cache.out[i * n_act + a];
-            let maxq = next.out[i * n_act..(i + 1) * n_act]
-                .iter()
-                .cloned()
-                .fold(f32::NEG_INFINITY, f32::max);
-            let tgt = self.buf.rew[i] + self.gamma * (1.0 - self.buf.done[i]) * maxq;
-            let td = qa - tgt;
-            loss += (td as f64) * (td as f64);
-            dout[i * n_act + a] = 2.0 * td / b as f32;
-        }
-        loss /= b as f64;
-        let mut grad = vec![0.0f32; self.mlp.dim()];
-        self.mlp.backward(params, &cache, &dout, &mut grad);
-        debug_assert_eq!(self.buf.obs.len(), b * obs_dim);
-        (loss, grad)
+        self.replay
+            .borrow()
+            .sample_into(self.batch, &mut self.rng, &mut self.buf);
+        td_grad(&self.mlp, &self.target, self.gamma, &self.buf, params)
     }
+}
+
+/// TD-loss gradient at `params` for one pre-sampled minibatch. Pure (no
+/// RNG, no replay access, shared reads only), so [`DqnSource::eval_batch`]
+/// can fan it out across the native compute pool.
+fn td_grad(
+    mlp: &Mlp,
+    target: &[f32],
+    gamma: f32,
+    batch: &Batch,
+    params: &[f32],
+) -> (f64, Vec<f32>) {
+    let b = batch.act.len();
+    let n_act = mlp.out_dim;
+    debug_assert_eq!(batch.obs.len(), b * mlp.in_dim);
+    let cache = mlp.forward(params, &batch.obs, b);
+    let next = mlp.forward(target, &batch.next_obs, b);
+    let mut dout = vec![0.0f32; b * n_act];
+    let mut loss = 0.0f64;
+    for i in 0..b {
+        let a = batch.act[i] as usize;
+        let qa = cache.out[i * n_act + a];
+        let maxq = next.out[i * n_act..(i + 1) * n_act]
+            .iter()
+            .cloned()
+            .fold(f32::NEG_INFINITY, f32::max);
+        let tgt = batch.rew[i] + gamma * (1.0 - batch.done[i]) * maxq;
+        let td = qa - tgt;
+        loss += (td as f64) * (td as f64);
+        dout[i * n_act + a] = 2.0 * td / b as f32;
+    }
+    loss /= b as f64;
+    let mut grad = vec![0.0f32; mlp.dim()];
+    mlp.backward(params, &cache, &batch.obs, &dout, &mut grad);
+    (loss, grad)
 }
 
 impl GradSource for DqnSource {
@@ -184,13 +208,30 @@ impl GradSource for DqnSource {
     fn eval_batch(&mut self, points: &[&[f32]]) -> Result<Vec<Eval>> {
         match &self.backend {
             QBackend::Native => {
-                let mut out = Vec::with_capacity(points.len());
-                for p in points {
-                    let t0 = Instant::now();
-                    let (loss, grad) = self.native_td_grad(p);
-                    out.push(Eval { loss, grad, aux: None, elapsed: t0.elapsed() });
+                let n = points.len();
+                // Sample every minibatch up front, sequentially — the
+                // replay RNG consumes draws in the same order as the old
+                // serial path, so trajectories are unchanged AND
+                // thread-count invariant. Only the pure TD math fans out.
+                while self.bufs.len() < n {
+                    self.bufs.push(Batch::default());
                 }
-                Ok(out)
+                for buf in self.bufs.iter_mut().take(n) {
+                    self.replay.borrow().sample_into(self.batch, &mut self.rng, buf);
+                }
+                // Spawn-amortization cap (bit-identical either way):
+                // batch × dim × 2 (forward + backward) proxies the
+                // per-point TD flops.
+                let pool = self.pool.capped_for(n, 2 * self.batch * self.mlp.dim());
+                let mlp = self.mlp;
+                let gamma = self.gamma;
+                let target = self.target.as_slice();
+                let bufs = &self.bufs;
+                Ok(pool.run_jobs(n, |i| {
+                    let t0 = Instant::now();
+                    let (loss, grad) = td_grad(&mlp, target, gamma, &bufs[i], points[i]);
+                    Eval { loss, grad, aux: None, elapsed: t0.elapsed() }
+                }))
             }
             QBackend::Hlo { pool, artifact } => {
                 // sample all minibatches first (sequential rng), then scatter
@@ -239,6 +280,12 @@ impl GradSource for DqnSource {
             QBackend::Native => "native",
             QBackend::Hlo { .. } => "hlo",
         }
+    }
+
+    fn set_compute_pool(&mut self, pool: NativePool) {
+        // Only the native backend consumes it; the HLO backend's
+        // parallelism is its PJRT worker pool.
+        self.pool = pool;
     }
 
     fn on_iteration(&mut self, t: usize, theta: &[f32]) {
@@ -326,11 +373,11 @@ pub fn train(cfg: &RunConfig, rl: &RlConfig) -> Result<RunRecord> {
         reward_sum += ep_reward;
         let cum_avg = reward_sum / ep as f64;
         let drows = driver.record();
-        let (loss, gn, ge, par) = drows
+        let (loss, gn, ge, par, ev) = drows
             .rows
             .last()
-            .map(|r| (r.loss, r.grad_norm, r.grad_evals, r.parallel_s))
-            .unwrap_or((f64::NAN, 0.0, 0, 0.0));
+            .map(|r| (r.loss, r.grad_norm, r.grad_evals, r.parallel_s, r.eval_s))
+            .unwrap_or((f64::NAN, 0.0, 0, 0.0, 0.0));
         record.push(IterRecord {
             iter: ep,
             grad_evals: ge,
@@ -343,6 +390,7 @@ pub fn train(cfg: &RunConfig, rl: &RlConfig) -> Result<RunRecord> {
                 .unwrap_or(loss),
             wall_s: wall.secs(),
             parallel_s: par,
+            eval_s: ev,
             est_var: 0.0,
             aux: Some(cum_avg),
         });

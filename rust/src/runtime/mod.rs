@@ -1,17 +1,32 @@
-//! Request-path runtime: AOT artifacts -> PJRT -> results.
+//! Request-path runtime: AOT artifacts -> PJRT -> results, plus the
+//! native compute substrate.
 //!
 //! * [`artifact`] — manifest schema shared with `python/compile/aot.py`,
 //! * [`executor`] — one-client engine, typed compile/run wrappers,
 //! * [`pool`] — N worker threads, each owning its own client+executables
-//!   (the paper's parallel "processes").
+//!   (the paper's parallel "processes"),
+//! * [`native_pool`] — the native compute pool for the pure-rust hot
+//!   paths.
+//!
+//! The two pools are different machines for different constraints:
+//! [`pool::WorkerPool`] exists because PJRT handles are not `Send` — each
+//! worker is a long-lived thread owning its own client, and jobs cross
+//! thread boundaries as owned tensor payloads over channels.
+//! [`native_pool::NativePool`] parallelizes plain rust loops (the native
+//! `eval_batch` fan-out, the GP estimator's combine / sqdist scans): jobs
+//! borrow the caller's slices via `std::thread::scope`, there are no
+//! channels or owned payloads, and every split preserves the serial
+//! reduction order so results stay bit-identical at any thread count.
 //!
 //! Python is build-time only: after `make artifacts`, everything here is
 //! self-contained rust + the PJRT C API.
 
 pub mod artifact;
 pub mod executor;
+pub mod native_pool;
 pub mod pool;
 
 pub use artifact::{ArtifactSpec, DType, Manifest, TensorSpec};
 pub use executor::{Engine, Executable, In, TensorData};
+pub use native_pool::NativePool;
 pub use pool::{RunOutput, WorkerPool};

@@ -1,0 +1,312 @@
+//! Native compute pool — data-parallel fan-out for the pure-rust hot
+//! paths (the tentpole of ISSUE 2).
+//!
+//! Where [`super::pool::WorkerPool`] parallelizes *PJRT executions* (one
+//! long-lived thread per worker, each owning a non-`Send` client, tensor
+//! payloads shipped over channels), this pool parallelizes *native rust*
+//! work: the `eval_batch` ground-truth fan-out of the in-process oracles
+//! (synthetic functions, DQN TD gradients) and the GP estimator's
+//! memory-bound inner loops (`combine_into`, kernel-vector / Gram-row
+//! sqdist scans). Those jobs borrow the caller's slices directly, so the
+//! pool uses `std::thread::scope` — no channels, no `'static` bounds, no
+//! external deps — and spawns threads per call. Spawn latency (~tens of
+//! µs) is amortized by only splitting work above a caller-chosen grain;
+//! `threads = 1` is the legacy serial path (runs entirely on the caller
+//! thread, kept for differential testing).
+//!
+//! ## Determinism contract
+//!
+//! Every splitting primitive here partitions the *output* — a single
+//! reduction is never divided across threads — and callers provide
+//! closures that compute each element independently of the partition
+//! boundaries. Together with the per-point RNG forking done by the
+//! oracles *before* dispatch, this makes every result (and hence every
+//! driver trajectory) bit-identical at any thread count; enforced by
+//! `rust/tests/thread_invariance.rs`.
+
+use std::num::NonZeroUsize;
+
+/// Spawn-cost amortization floor shared by every pooled call site: the
+/// minimum number of f32 element *touches* one extra scoped thread must
+/// take on before its ~tens-of-µs spawn pays for itself. Call sites
+/// express their work as elements × per-element cost factor against this
+/// single knob — retune HERE if the pool's dispatch cost ever changes
+/// (e.g. the persistent-worker follow-up in ROADMAP.md).
+pub const SPAWN_GRAIN: usize = 1 << 16;
+
+/// Minimum elements per thread for work items costing `cost_per_elem`
+/// element touches each (the row-chunking companion of [`SPAWN_GRAIN`]).
+pub fn grain(cost_per_elem: usize) -> usize {
+    (SPAWN_GRAIN / cost_per_elem.max(1)).max(1)
+}
+
+/// A thread-count policy for scoped fan-out. `Copy` on purpose: the pool
+/// holds no OS resources, so it threads through configs and structs like
+/// any other knob.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct NativePool {
+    threads: usize,
+}
+
+impl Default for NativePool {
+    /// Serial — existing call sites that never configure a pool keep
+    /// their exact pre-pool behavior.
+    fn default() -> Self {
+        NativePool::serial()
+    }
+}
+
+impl NativePool {
+    /// Pool over exactly `threads` workers (>= 1).
+    pub fn new(threads: usize) -> NativePool {
+        assert!(threads >= 1, "NativePool needs at least one thread");
+        NativePool { threads }
+    }
+
+    /// The legacy serial path: all work runs on the caller thread.
+    pub fn serial() -> NativePool {
+        NativePool { threads: 1 }
+    }
+
+    /// One worker per available hardware thread.
+    pub fn auto() -> NativePool {
+        let n = std::thread::available_parallelism()
+            .map(NonZeroUsize::get)
+            .unwrap_or(1);
+        NativePool { threads: n }
+    }
+
+    /// Resolve the `optex.threads` config knob: 0 = auto-detect.
+    pub fn from_config(threads: usize) -> NativePool {
+        if threads == 0 {
+            NativePool::auto()
+        } else {
+            NativePool::new(threads)
+        }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    pub fn is_serial(&self) -> bool {
+        self.threads == 1
+    }
+
+    /// This pool narrowed so every spawned worker gets at least
+    /// [`SPAWN_GRAIN`] element touches of work: callers state their job
+    /// count and per-job cost, the pool owns the spawn-amortization
+    /// policy. `n_jobs × touches_per_job / SPAWN_GRAIN` workers (floored
+    /// at 1, capped at this pool's width). Purely a perf decision —
+    /// results are bit-identical at any width.
+    pub fn capped_for(&self, n_jobs: usize, touches_per_job: usize) -> NativePool {
+        let total = n_jobs.saturating_mul(touches_per_job);
+        NativePool { threads: (total / SPAWN_GRAIN).clamp(1, self.threads) }
+    }
+
+    /// Run `f(i, items[i])` for every item, results in item order. Each
+    /// job owns its context (e.g. a pre-forked RNG stream), so jobs can
+    /// mutate per-job state without synchronization. Jobs are assigned
+    /// to workers in contiguous blocks; since every job is independent,
+    /// the assignment affects load balance only, never results.
+    pub fn run_over<C, T, F>(&self, items: Vec<C>, f: F) -> Vec<T>
+    where
+        C: Send,
+        T: Send,
+        F: Fn(usize, C) -> T + Sync,
+    {
+        let n = items.len();
+        let k = self.threads.min(n);
+        if k <= 1 {
+            return items.into_iter().enumerate().map(|(i, c)| f(i, c)).collect();
+        }
+        let mut slots: Vec<(Option<C>, Option<T>)> =
+            items.into_iter().map(|c| (Some(c), None)).collect();
+        let run = |start: usize, chunk: &mut [(Option<C>, Option<T>)]| {
+            for (j, slot) in chunk.iter_mut().enumerate() {
+                let ctx = slot.0.take().expect("job context consumed once");
+                slot.1 = Some(f(start + j, ctx));
+            }
+        };
+        // k−1 spawned workers; the caller thread takes the final block
+        // instead of idling at the scope join.
+        std::thread::scope(|s| {
+            let run = &run;
+            let mut rest: &mut [(Option<C>, Option<T>)] = &mut slots;
+            let mut start = 0usize;
+            for w in 0..k - 1 {
+                let len = n / k + usize::from(w < n % k);
+                let (mine, tail) = std::mem::take(&mut rest).split_at_mut(len);
+                rest = tail;
+                s.spawn(move || run(start, mine));
+                start += len;
+            }
+            run(start, rest);
+        });
+        slots
+            .into_iter()
+            .map(|(_, out)| out.expect("scoped job completed"))
+            .collect()
+    }
+
+    /// Context-free variant of [`NativePool::run_over`].
+    pub fn run_jobs<T, F>(&self, n: usize, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize) -> T + Sync,
+    {
+        self.run_over(vec![(); n], |i, _unit| f(i))
+    }
+
+    /// Split `data` into one contiguous chunk per worker and call
+    /// `f(offset, chunk)` on each. No split happens below `min_chunk`
+    /// elements per worker (the work grain that amortizes spawn cost).
+    ///
+    /// `f` must compute each element from its global index alone (the
+    /// chunk boundaries move with the thread count) — that is what keeps
+    /// results bit-identical at any thread count.
+    pub fn par_chunks_mut<T, F>(&self, data: &mut [T], min_chunk: usize, f: F)
+    where
+        T: Send,
+        F: Fn(usize, &mut [T]) + Sync,
+    {
+        let n = data.len();
+        let k = self.threads.min((n / min_chunk.max(1)).max(1));
+        if k <= 1 {
+            f(0, data);
+            return;
+        }
+        // k−1 spawned workers; the caller thread takes the final block
+        // instead of idling at the scope join.
+        std::thread::scope(|s| {
+            let f = &f;
+            let mut rest: &mut [T] = data;
+            let mut start = 0usize;
+            for w in 0..k - 1 {
+                let len = n / k + usize::from(w < n % k);
+                let (mine, tail) = std::mem::take(&mut rest).split_at_mut(len);
+                rest = tail;
+                s.spawn(move || f(start, mine));
+                start += len;
+            }
+            f(start, rest);
+        });
+    }
+
+    /// `out[i] = f(i)` with the index space chunked across the pool.
+    pub fn fill_with<T, F>(&self, out: &mut [T], min_chunk: usize, f: F)
+    where
+        T: Send,
+        F: Fn(usize) -> T + Sync,
+    {
+        self.par_chunks_mut(out, min_chunk, |start, chunk| {
+            for (j, slot) in chunk.iter_mut().enumerate() {
+                *slot = f(start + j);
+            }
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_jobs_ordered_across_thread_counts() {
+        let want: Vec<usize> = (0..17).map(|i| i * i).collect();
+        for threads in [1, 2, 3, 8, 32] {
+            let pool = NativePool::new(threads);
+            assert_eq!(pool.run_jobs(17, |i| i * i), want, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn run_over_hands_each_job_its_own_context() {
+        let pool = NativePool::new(4);
+        let ctxs: Vec<u64> = (0..9).map(|i| 100 + i).collect();
+        let out = pool.run_over(ctxs, |i, mut c| {
+            c += i as u64; // per-job mutable state, no sync needed
+            c
+        });
+        assert_eq!(out, (0..9).map(|i| 100 + 2 * i).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn par_chunks_cover_every_element_exactly_once() {
+        for threads in [1, 2, 5, 16] {
+            let pool = NativePool::new(threads);
+            let mut data = vec![0u32; 1003];
+            pool.par_chunks_mut(&mut data, 10, |start, chunk| {
+                for (j, v) in chunk.iter_mut().enumerate() {
+                    // += catches double visits, +1 catches missed elements
+                    *v += (start + j) as u32 + 1;
+                }
+            });
+            for (i, &v) in data.iter().enumerate() {
+                assert_eq!(v, i as u32 + 1, "threads={threads} index={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn fill_with_matches_serial_bitwise() {
+        let f = |i: usize| ((i as f64) * 0.7).sin() / ((i + 1) as f64);
+        let mut serial = vec![0.0f64; 4097];
+        NativePool::serial().fill_with(&mut serial, 64, f);
+        for threads in [2, 8] {
+            let mut par = vec![0.0f64; 4097];
+            NativePool::new(threads).fill_with(&mut par, 64, f);
+            assert_eq!(serial, par, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn min_chunk_gates_the_split() {
+        // below the grain everything runs as ONE chunk (offset 0, full len)
+        let pool = NativePool::new(8);
+        let mut data = vec![0u8; 64];
+        pool.par_chunks_mut(&mut data, 128, |start, chunk| {
+            assert_eq!(start, 0);
+            assert_eq!(chunk.len(), 64);
+        });
+    }
+
+    #[test]
+    fn capped_for_demands_a_full_grain_per_worker() {
+        let pool = NativePool::new(8);
+        // tiny jobs: never spawn
+        assert!(pool.capped_for(8, 16).is_serial());
+        // exactly one grain of total work: still serial
+        assert!(pool.capped_for(8, SPAWN_GRAIN / 8).is_serial());
+        // four grains: four workers, not eight starved ones
+        assert_eq!(pool.capped_for(8, SPAWN_GRAIN / 2).threads(), 4);
+        // plentiful work: full width
+        assert_eq!(pool.capped_for(8, SPAWN_GRAIN).threads(), 8);
+        // overflow-safe
+        assert_eq!(pool.capped_for(usize::MAX, 2).threads(), 8);
+    }
+
+    #[test]
+    fn grain_scales_inversely_with_cost() {
+        assert_eq!(grain(1), SPAWN_GRAIN);
+        assert_eq!(grain(SPAWN_GRAIN), 1);
+        assert_eq!(grain(2 * SPAWN_GRAIN), 1); // floor at one element
+        assert_eq!(grain(0), SPAWN_GRAIN); // zero-cost guard
+    }
+
+    #[test]
+    fn from_config_zero_is_auto() {
+        assert!(NativePool::from_config(0).threads() >= 1);
+        assert_eq!(NativePool::from_config(3).threads(), 3);
+        assert!(NativePool::from_config(1).is_serial());
+    }
+
+    #[test]
+    fn empty_and_unit_inputs() {
+        let pool = NativePool::new(4);
+        assert!(pool.run_jobs(0, |i| i).is_empty());
+        assert_eq!(pool.run_jobs(1, |i| i + 7), vec![7]);
+        let mut empty: Vec<f64> = Vec::new();
+        pool.fill_with(&mut empty, 1, |_| 0.0); // must not panic
+    }
+}

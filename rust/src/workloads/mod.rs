@@ -17,6 +17,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
+use crate::runtime::NativePool;
 use crate::util::Rng;
 use synthetic::SynthFn;
 
@@ -58,6 +59,14 @@ pub trait GradSource {
     /// iteration with the current iterate — stateful oracles use it
     /// (e.g. DQN target-network sync). Default: no-op.
     fn on_iteration(&mut self, _t: usize, _theta: &[f32]) {}
+
+    /// Install the shared native compute pool that [`GradSource::eval_batch`]
+    /// uses to run its points concurrently. Pool-backed backends (PJRT /
+    /// HLO) ignore it — their parallelism *is* the worker pool — hence
+    /// the no-op default. Implementations must keep trajectories
+    /// bit-identical at any thread count (fork per-point RNG streams
+    /// before dispatch, never share a stream across workers).
+    fn set_compute_pool(&mut self, _pool: NativePool) {}
 }
 
 /// Native analytic synthetic-function oracle with optional Gaussian
@@ -67,11 +76,18 @@ pub struct NativeSynth {
     pub d: usize,
     pub noise_std: f64,
     rng: Rng,
+    pool: NativePool,
 }
 
 impl NativeSynth {
     pub fn new(f: SynthFn, d: usize, noise_std: f64, seed: u64) -> NativeSynth {
-        NativeSynth { f, d, noise_std, rng: Rng::new(seed ^ 0x5EED_0001) }
+        NativeSynth {
+            f,
+            d,
+            noise_std,
+            rng: Rng::new(seed ^ 0x5EED_0001),
+            pool: NativePool::serial(),
+        }
     }
 }
 
@@ -81,20 +97,35 @@ impl GradSource for NativeSynth {
     }
 
     fn eval_batch(&mut self, points: &[&[f32]]) -> Result<Vec<Eval>> {
-        let mut out = Vec::with_capacity(points.len());
-        for p in points {
+        let n = points.len();
+        // Fork one noise stream per point BEFORE dispatch, on the caller
+        // thread in point order: workers never touch the shared RNG, so
+        // the trajectory is bit-identical at any thread count (and the
+        // master stream advances by exactly n draws per batch).
+        let streams: Vec<Option<Rng>> = if self.noise_std > 0.0 {
+            (0..n).map(|i| Some(self.rng.fork(i as u64))).collect()
+        } else {
+            vec![None; n]
+        };
+        // Spawn-amortization cap (bit-identical either way): each
+        // evaluated element costs ≥ 2 touches (value + gradient, plus
+        // optional noise); the pool widens only as far as that work pays
+        // for the spawns.
+        let pool = self.pool.capped_for(n, 2 * self.d);
+        let f = self.f;
+        let d = self.d;
+        let s = self.noise_std as f32;
+        Ok(pool.run_over(streams, |i, stream| {
             let t0 = Instant::now();
-            let mut grad = vec![0.0f32; self.d];
-            let loss = self.f.value_and_grad(p, &mut grad);
-            if self.noise_std > 0.0 {
-                let s = self.noise_std as f32;
+            let mut grad = vec![0.0f32; d];
+            let loss = f.value_and_grad(points[i], &mut grad);
+            if let Some(mut rng) = stream {
                 for g in &mut grad {
-                    *g += self.rng.normal() as f32 * s;
+                    *g += rng.normal() as f32 * s;
                 }
             }
-            out.push(Eval { loss, grad, aux: None, elapsed: t0.elapsed() });
-        }
-        Ok(out)
+            Eval { loss, grad, aux: None, elapsed: t0.elapsed() }
+        }))
     }
 
     fn value(&mut self, point: &[f32]) -> Result<f64> {
@@ -114,6 +145,10 @@ impl GradSource for NativeSynth {
 
     fn backend_name(&self) -> &'static str {
         "native"
+    }
+
+    fn set_compute_pool(&mut self, pool: NativePool) {
+        self.pool = pool;
     }
 }
 
@@ -148,6 +183,30 @@ mod tests {
         let var = diffs.iter().map(|d| d * d).sum::<f64>() / diffs.len() as f64;
         // difference of two independent N(0, 0.25) draws has var 0.5
         assert!((var - 0.5).abs() < 0.08, "var={var}");
+    }
+
+    #[test]
+    fn eval_batch_noise_streams_thread_count_invariant() {
+        // 2·n·d = 2·8·20000 buys several workers past the spawn-grain
+        // cap, so the threaded source really fans out; results must stay
+        // bit-identical.
+        let d = 20_000;
+        let p: Vec<f32> = (0..d).map(|i| (i as f32 * 0.01).sin()).collect();
+        let points: Vec<&[f32]> = (0..8).map(|_| p.as_slice()).collect();
+        let mut serial = NativeSynth::new(SynthFn::Ackley, d, 0.3, 42);
+        let mut threaded = NativeSynth::new(SynthFn::Ackley, d, 0.3, 42);
+        threaded.set_compute_pool(NativePool::new(8));
+        let a = serial.eval_batch(&points).unwrap();
+        let b = threaded.eval_batch(&points).unwrap();
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.grad, y.grad, "noise stream depends on thread count");
+            assert_eq!(x.loss.to_bits(), y.loss.to_bits());
+        }
+        // per-point streams are independent: same input, different noise
+        assert_ne!(a[0].grad, a[1].grad);
+        // the master stream advances between batches
+        let c = serial.eval_batch(&points).unwrap();
+        assert_ne!(a[0].grad, c[0].grad);
     }
 
     #[test]

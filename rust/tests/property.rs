@@ -217,7 +217,7 @@ fn prop_mlp_backward_matches_fd() {
         // linear loss L = sum(out * w)
         let w = rng.normal_vec(batch * o);
         let mut grad = vec![0.0f32; net.dim()];
-        net.backward(&params, &cache, &w, &mut grad);
+        net.backward(&params, &cache, &x, &w, &mut grad);
         let j = rng.below(net.dim());
         let eps = 1e-3f32;
         let loss = |p: &[f32]| -> f64 {

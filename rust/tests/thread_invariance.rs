@@ -1,0 +1,124 @@
+//! Thread-count invariance (ISSUE 2 acceptance): the native compute pool
+//! must be a pure wall-clock optimization — never a numerics fork. Full
+//! driver trajectories are required to be **bit-identical** for
+//! `optex.threads ∈ {1, 2, 8}` across every optimizer family and every
+//! method that fans out evaluations, with gradient noise switched on so
+//! the per-point RNG streams (forked before dispatch) are exercised, and
+//! with dimensions large enough that the pooled eval / combine /
+//! kernel-vector paths genuinely split across threads.
+
+use optex::config::{Method, RunConfig};
+use optex::coordinator::Driver;
+use optex::opt::OptSpec;
+use optex::rl::{DqnSource, ReplayBuffer};
+use optex::runtime::NativePool;
+use optex::util::Rng;
+use optex::workloads::synthetic::SynthFn;
+use optex::workloads::{GradSource, NativeSynth};
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+/// Trajectory fingerprint: final iterate bits + per-iteration loss and
+/// gradient-norm bits.
+struct Traj {
+    theta: Vec<f32>,
+    loss_bits: Vec<u64>,
+    gn_bits: Vec<u64>,
+}
+
+fn run_traj(method: Method, opt_name: &str, threads: usize) -> Traj {
+    let mut cfg = RunConfig::default();
+    cfg.workload = "ackley".into();
+    cfg.method = method;
+    cfg.steps = 6;
+    cfg.seed = 11;
+    // 40k dims: n·d clears the eval fan-out grain and the combine /
+    // kernel-vector grains, so threads ≥ 2 really split the work.
+    cfg.synth_dim = 40_000;
+    cfg.noise_std = 0.4;
+    cfg.optimizer = OptSpec::parse(opt_name, 0.05).unwrap();
+    cfg.optex.parallelism = 4;
+    cfg.optex.t0 = 8;
+    cfg.optex.threads = threads;
+    let src = NativeSynth::new(SynthFn::Ackley, cfg.synth_dim, cfg.noise_std, cfg.seed);
+    let mut drv = Driver::with_source(cfg, Box::new(src), None).unwrap();
+    let rec = drv.run().unwrap();
+    Traj {
+        theta: drv.theta().to_vec(),
+        loss_bits: rec.rows.iter().map(|r| r.loss.to_bits()).collect(),
+        gn_bits: rec.rows.iter().map(|r| r.grad_norm.to_bits()).collect(),
+    }
+}
+
+#[test]
+fn driver_trajectories_bit_identical_across_thread_counts() {
+    for method in [Method::Optex, Method::DataParallel, Method::Target] {
+        for opt_name in ["sgd", "momentum", "adam", "adagrad"] {
+            let base = run_traj(method, opt_name, 1);
+            assert_eq!(base.loss_bits.len(), 6);
+            for threads in [2, 8] {
+                let got = run_traj(method, opt_name, threads);
+                assert_eq!(
+                    base.theta, got.theta,
+                    "{method:?}/{opt_name}: θ diverged at threads={threads}"
+                );
+                assert_eq!(
+                    base.loss_bits, got.loss_bits,
+                    "{method:?}/{opt_name}: loss series diverged at threads={threads}"
+                );
+                assert_eq!(
+                    base.gn_bits, got.gn_bits,
+                    "{method:?}/{opt_name}: grad norms diverged at threads={threads}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn auto_thread_count_matches_serial() {
+    // threads = 0 resolves to available parallelism — whatever that is on
+    // the host, the trajectory must equal the serial one.
+    let base = run_traj(Method::Optex, "adam", 1);
+    let auto = run_traj(Method::Optex, "adam", 0);
+    assert_eq!(base.theta, auto.theta);
+    assert_eq!(base.loss_bits, auto.loss_bits);
+}
+
+fn dqn_source(seed: u64) -> DqnSource {
+    let obs_dim = 6;
+    let n_act = 3;
+    let replay = Rc::new(RefCell::new(ReplayBuffer::new(512, obs_dim)));
+    let mut rng = Rng::new(seed);
+    for _ in 0..256 {
+        let o = rng.normal_vec(obs_dim);
+        let no = rng.normal_vec(obs_dim);
+        replay
+            .borrow_mut()
+            .push(&o, rng.below(n_act), rng.normal() as f32, &no, rng.coin(0.1));
+    }
+    let mlp = optex::nn::Mlp::new(obs_dim, 32, n_act);
+    DqnSource::native(mlp, replay, 64, 0.95, 10, seed)
+}
+
+#[test]
+fn dqn_eval_batch_bit_identical_across_thread_counts() {
+    let mut serial = dqn_source(5);
+    let mut threaded = dqn_source(5);
+    threaded.set_compute_pool(NativePool::new(8));
+    let mut rng = Rng::new(9);
+    let params = serial.init_params(&mut rng);
+    serial.on_iteration(1, &params);
+    threaded.on_iteration(1, &params);
+    let points: Vec<&[f32]> = (0..4).map(|_| params.as_slice()).collect();
+    let a = serial.eval_batch(&points).unwrap();
+    let b = threaded.eval_batch(&points).unwrap();
+    assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(x.loss.to_bits(), y.loss.to_bits(), "TD loss diverged");
+        assert_eq!(x.grad, y.grad, "TD gradient diverged");
+    }
+    // the minibatch RNG stays sequential: points see DIFFERENT batches
+    assert_ne!(a[0].grad, a[1].grad);
+}
