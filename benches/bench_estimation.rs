@@ -3,19 +3,62 @@
 //! gradient evaluations (paper Sec. 4.2 efficiency argument).
 //!
 //! Covers Fig-2/4/7-10 cost models: GP fit (once per sequential
-//! iteration), posterior query at paper (T₀, D̃, d) combos, and the
-//! d-sized weighted combine (memory-bound; GB/s column vs DRAM roofline).
+//! iteration), posterior query at paper (T₀, D̃, d) combos, the d-sized
+//! weighted combine (memory-bound; GB/s column vs DRAM roofline), the
+//! native-pool fan-out grids, and — since ISSUE 3 — the `GradStore`
+//! arena vs the seed's Vec-of-rows layout (flatten copies, combine over
+//! arena views, loaned-row eval fan-out).
+//!
+//! Emits a machine-readable `BENCH_3.json` summary (copies/iteration,
+//! combine ns/elem, eval fan-out speedup) so the perf trajectory is
+//! tracked across PRs; CI uploads it as an artifact.
 
-use optex::bench::{bench, bench_throughput, black_box};
+use optex::bench::{bench, bench_throughput, black_box, BenchResult};
 use optex::coordinator::GradHistory;
 use optex::gp::estimator::{combine_into, combine_into_pooled, FittedGp};
+use optex::gp::kernels::{kernel_matrix, kernel_matrix_pooled};
 use optex::gp::{DimSubset, GpConfig, IncrementalGp, Kernel};
 use optex::runtime::NativePool;
 use optex::util::Rng;
 use optex::workloads::synthetic::SynthFn;
 use optex::workloads::{GradSource, NativeSynth};
 
+/// One row of the machine-readable summary: a labelled metric grid cell.
+struct JsonRow {
+    section: &'static str,
+    fields: Vec<(String, f64)>,
+}
+
+fn json_escape_free(s: &str) -> bool {
+    s.chars().all(|c| c.is_ascii_alphanumeric() || "_-./ ".contains(c))
+}
+
+fn write_bench_json(rows: &[JsonRow]) {
+    let mut out = String::from("{\n  \"pr\": 3,\n  \"bench\": \"bench_estimation\",\n  \"rows\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        assert!(json_escape_free(r.section));
+        out.push_str(&format!("    {{\"section\": \"{}\"", r.section));
+        for (k, v) in &r.fields {
+            assert!(json_escape_free(k));
+            if v.is_finite() {
+                out.push_str(&format!(", \"{k}\": {v}"));
+            } else {
+                out.push_str(&format!(", \"{k}\": null"));
+            }
+        }
+        out.push('}');
+        if i + 1 < rows.len() {
+            out.push(',');
+        }
+        out.push('\n');
+    }
+    out.push_str("  ]\n}\n");
+    std::fs::write("BENCH_3.json", &out).expect("writing BENCH_3.json");
+    println!("\nwrote BENCH_3.json ({} rows)", rows.len());
+}
+
 fn main() {
+    let mut rows: Vec<JsonRow> = Vec::new();
     println!("# estimation hot path (native backend)");
     let mut rng = Rng::new(0);
 
@@ -50,7 +93,41 @@ fn main() {
         let q = rng.normal_vec(dsub);
         let mut mu = vec![0.0f32; d];
         bench(&format!("gp_query     {label}"), || {
-            black_box(fitted.query(&q, &grefs, &mut mu))
+            black_box(fitted.query(&q, &hrefs, &grefs, &mut mu))
+        });
+    }
+
+    // One-shot kernel_matrix through the pool (ISSUE 3 satellite):
+    // bit-identity asserted at a realistic (T₀, D̃).
+    println!("\n# kernel_matrix: serial vs pooled (bit-identity asserted)");
+    {
+        let t0 = 150;
+        let dsub = 2048;
+        let hist: Vec<Vec<f32>> = (0..t0).map(|_| rng.normal_vec(dsub)).collect();
+        let hrefs: Vec<&[f32]> = hist.iter().map(|v| v.as_slice()).collect();
+        let ls = (2.0 * dsub as f64).sqrt();
+        let par = NativePool::new(8);
+        let s = bench("kernel_matrix serial    T0=150", || {
+            black_box(kernel_matrix(Kernel::Matern52, ls, &hrefs))
+        });
+        let t = bench("kernel_matrix threads=8 T0=150", || {
+            black_box(kernel_matrix_pooled(&par, Kernel::Matern52, ls, &hrefs))
+        });
+        assert_eq!(
+            kernel_matrix(Kernel::Matern52, ls, &hrefs),
+            kernel_matrix_pooled(&par, Kernel::Matern52, ls, &hrefs),
+            "pooled kernel_matrix must be bit-identical"
+        );
+        println!("speedup      kernel_matrix T0=150: {:>5.2}x", s.mean_s / t.mean_s);
+        rows.push(JsonRow {
+            section: "kernel_matrix_pool",
+            fields: vec![
+                ("t0".into(), t0 as f64),
+                ("dsub".into(), dsub as f64),
+                ("serial_ms".into(), s.mean_ms()),
+                ("threads8_ms".into(), t.mean_ms()),
+                ("speedup".into(), s.mean_s / t.mean_s),
+            ],
         });
     }
 
@@ -75,7 +152,7 @@ fn main() {
             let mut mk_state = || {
                 let mut h = GradHistory::new(t0, DimSubset::full(dsub));
                 for row in stream.iter().take(t0) {
-                    h.push(row, row.clone());
+                    h.push(row, row);
                 }
                 (h, 0usize)
             };
@@ -85,7 +162,7 @@ fn main() {
                 for _ in 0..n {
                     let row = &stream[cursor_full % stream.len()];
                     cursor_full += 1;
-                    h_full.push(row, row.clone());
+                    h_full.push(row, row);
                 }
                 let (hviews, _) = h_full.views();
                 black_box(FittedGp::fit(&cfg, &hviews))
@@ -101,7 +178,7 @@ fn main() {
                 for _ in 0..n {
                     let row = &stream[cursor_inc % stream.len()];
                     cursor_inc += 1;
-                    h_inc.push(row, row.clone());
+                    h_inc.push(row, row);
                 }
                 let (hviews, _) = h_inc.views();
                 inc.sync(h_inc.epoch(), h_inc.total_pushed(), &hviews);
@@ -128,10 +205,92 @@ fn main() {
         );
     }
 
+    // ISSUE-3 acceptance grid: GradStore arena vs the seed's layout, on
+    // the two per-iteration memory movers it deletes.
+    //   * flatten: the seed rebuilt a T₀×d flat gradient block for the
+    //     HLO estimator every iteration (extend_from_slice per row); the
+    //     store's flat view is a borrow — 0 bytes. Rows report both the
+    //     measured seed copy cost and the bytes avoided per iteration.
+    //   * combine: w^T G over seed Vec-of-rows views vs arena views
+    //     (same combine code — the layouts differ in locality only).
+    println!("\n# gradstore vs seed: flatten copies + combine layout (D x T0 grid)");
+    for d in [10_000usize, 100_000] {
+        for t0 in [64usize, 256] {
+            // seed layout: T0 owned Vec rows
+            let seed_rows: Vec<Vec<f32>> = (0..t0).map(|_| rng.normal_vec(d)).collect();
+            let seed_refs: Vec<&[f32]> = seed_rows.iter().map(|v| v.as_slice()).collect();
+            // store layout: the same rows pushed through the arena
+            let mut h = GradHistory::new(t0, DimSubset::full(d));
+            let theta = vec![0.0f32; d];
+            for r in &seed_rows {
+                h.push(&theta, r);
+            }
+
+            // flatten: seed rebuild vs store borrow
+            let mut flat = Vec::new();
+            let seed_flat = bench_throughput(
+                &format!("flatten seed-copy T0={t0:<3} d={d}"),
+                t0 * d * 4,
+                || {
+                    flat.clear();
+                    for r in &seed_refs {
+                        flat.extend_from_slice(r);
+                    }
+                    black_box(flat.len())
+                },
+            );
+            let store_flat = bench(&format!("flatten store-view T0={t0:<3} d={d}"), || {
+                black_box(h.flat_grads().as_ptr())
+            });
+            let bytes_before = h.grad_bytes_copied();
+            let _ = black_box(h.flat_grads());
+            assert_eq!(h.grad_bytes_copied(), bytes_before, "flat view must not copy");
+
+            // combine over both layouts (bit-identity asserted)
+            let w: Vec<f64> = (0..t0).map(|i| (i as f64 + 1.0) * 0.01).collect();
+            let (mut out_seed, mut out_store) = (vec![0.0f32; d], vec![0.0f32; d]);
+            let c_seed = bench_throughput(
+                &format!("combine seed-rows  T0={t0:<3} d={d}"),
+                t0 * d * 4,
+                || combine_into(&w, &seed_refs, &mut out_seed),
+            );
+            let (_, store_refs) = h.views();
+            let c_store = bench_throughput(
+                &format!("combine store-rows T0={t0:<3} d={d}"),
+                t0 * d * 4,
+                || combine_into(&w, &store_refs, &mut out_store),
+            );
+            assert_eq!(out_seed, out_store, "arena combine must be bit-identical");
+
+            let ns_per_elem = |r: &BenchResult| r.mean_s * 1e9 / (t0 * d) as f64;
+            println!(
+                "summary      T0={t0:<3} d={d}: seed copies {:.1} MB/iter -> store 0 B; \
+                 combine {:.3} -> {:.3} ns/elem",
+                (t0 * d * 4) as f64 / 1e6,
+                ns_per_elem(&c_seed),
+                ns_per_elem(&c_store),
+            );
+            rows.push(JsonRow {
+                section: "store_vs_seed",
+                fields: vec![
+                    ("t0".into(), t0 as f64),
+                    ("d".into(), d as f64),
+                    ("seed_flatten_bytes_per_iter".into(), (t0 * d * 4) as f64),
+                    ("store_flatten_bytes_per_iter".into(), 0.0),
+                    ("seed_flatten_ms".into(), seed_flat.mean_ms()),
+                    ("store_flatten_ms".into(), store_flat.mean_ms()),
+                    ("combine_seed_ns_per_elem".into(), ns_per_elem(&c_seed)),
+                    ("combine_store_ns_per_elem".into(), ns_per_elem(&c_store)),
+                ],
+            });
+        }
+    }
+
     // ISSUE-2 acceptance grid: native compute pool, serial (threads=1)
     // vs threads=8, on the two hot paths the pool feeds. Speedup rows
     // are grep-stable for EXPERIMENTS.md; the ≥3× bar is the N=8,
-    // d=100k eval fan-out.
+    // d=100k eval fan-out. Since ISSUE 3 the fan-out writes loaned
+    // GradStore rows (zero per-eval allocation) — asserted below.
     println!("\n# native pool: eval_batch fan-out, serial vs threads=8 (ackley + noise)");
     let par = NativePool::new(8);
     for d in [10_000usize, 100_000] {
@@ -141,13 +300,43 @@ fn main() {
             par_src.set_compute_pool(par);
             let p: Vec<f32> = (0..d).map(|i| ((i % 97) as f32) * 0.02 - 1.0).collect();
             let points: Vec<&[f32]> = (0..n).map(|_| p.as_slice()).collect();
+            // loaned-row protocol, exactly as the driver runs it
+            let mut h = GradHistory::new(n, DimSubset::full(d));
             let s = bench(&format!("eval_batch serial    d={d:<6} N={n}"), || {
-                black_box(serial_src.eval_batch(&points).unwrap())
+                h.loan(n);
+                {
+                    let mut rows = h.loaned_rows_mut();
+                    black_box(serial_src.eval_batch(&points, &mut rows).unwrap());
+                }
+                for _ in 0..n {
+                    h.commit(&p);
+                }
             });
+            let mut h2 = GradHistory::new(n, DimSubset::full(d));
             let t = bench(&format!("eval_batch threads=8 d={d:<6} N={n}"), || {
-                black_box(par_src.eval_batch(&points).unwrap())
+                h2.loan(n);
+                {
+                    let mut rows = h2.loaned_rows_mut();
+                    black_box(par_src.eval_batch(&points, &mut rows).unwrap());
+                }
+                for _ in 0..n {
+                    h2.commit(&p);
+                }
             });
-            println!("speedup      eval_batch d={d} N={n}: {:>5.2}x", s.mean_s / t.mean_s);
+            assert_eq!(h.grad_bytes_copied(), 0, "loaned fan-out must not copy");
+            assert_eq!(h.store_allocs(), 2, "loaned fan-out must not allocate");
+            let speedup = s.mean_s / t.mean_s;
+            println!("speedup      eval_batch d={d} N={n}: {speedup:>5.2}x");
+            rows.push(JsonRow {
+                section: "eval_fanout",
+                fields: vec![
+                    ("d".into(), d as f64),
+                    ("n".into(), n as f64),
+                    ("serial_ms".into(), s.mean_ms()),
+                    ("threads8_ms".into(), t.mean_ms()),
+                    ("speedup".into(), speedup),
+                ],
+            });
         }
     }
 
@@ -172,7 +361,19 @@ fn main() {
                 || combine_into_pooled(&par, &w, &grefs, &mut out_p),
             );
             assert_eq!(out_s, out_p, "pooled combine must be bit-identical");
-            println!("speedup      combine T0={t0} d={d}: {:>5.2}x", s.mean_s / t.mean_s);
+            let speedup = s.mean_s / t.mean_s;
+            println!("speedup      combine T0={t0} d={d}: {speedup:>5.2}x");
+            rows.push(JsonRow {
+                section: "combine_pool",
+                fields: vec![
+                    ("t0".into(), t0 as f64),
+                    ("d".into(), d as f64),
+                    ("ns_per_elem".into(), t.mean_s * 1e9 / (t0 * d) as f64),
+                    ("speedup".into(), speedup),
+                ],
+            });
         }
     }
+
+    write_bench_json(&rows);
 }

@@ -14,6 +14,21 @@ const WARMUP: Duration = Duration::from_millis(150);
 const MIN_TIME: Duration = Duration::from_millis(700);
 const MAX_ITERS: usize = 10_000;
 
+/// `OPTEX_BENCH_FAST=1` shrinks warmup/measurement windows ~10× — for CI
+/// runs that only need the machine-readable summary artifact, not tight
+/// confidence intervals.
+fn fast_mode() -> bool {
+    std::env::var("OPTEX_BENCH_FAST").map(|v| v == "1").unwrap_or(false)
+}
+
+fn warmup_time() -> Duration {
+    if fast_mode() { Duration::from_millis(15) } else { WARMUP }
+}
+
+fn min_time() -> Duration {
+    if fast_mode() { Duration::from_millis(70) } else { MIN_TIME }
+}
+
 /// Timing summary of one benchmark.
 #[derive(Clone, Debug)]
 pub struct BenchResult {
@@ -55,13 +70,13 @@ impl BenchResult {
 pub fn bench<T>(name: &str, mut f: impl FnMut() -> T) -> BenchResult {
     // warmup
     let w0 = Instant::now();
-    while w0.elapsed() < WARMUP {
+    while w0.elapsed() < warmup_time() {
         black_box(f());
     }
     // timed
     let mut samples = Vec::new();
     let t0 = Instant::now();
-    while t0.elapsed() < MIN_TIME && samples.len() < MAX_ITERS {
+    while t0.elapsed() < min_time() && samples.len() < MAX_ITERS {
         let s = Instant::now();
         black_box(f());
         samples.push(s.elapsed().as_secs_f64());
@@ -91,12 +106,12 @@ pub fn bench_throughput<T>(
 
 fn bench_quiet<T>(name: &str, f: &mut impl FnMut() -> T) -> BenchResult {
     let w0 = Instant::now();
-    while w0.elapsed() < WARMUP {
+    while w0.elapsed() < warmup_time() {
         black_box(f());
     }
     let mut samples = Vec::new();
     let t0 = Instant::now();
-    while t0.elapsed() < MIN_TIME && samples.len() < MAX_ITERS {
+    while t0.elapsed() < min_time() && samples.len() < MAX_ITERS {
         let s = Instant::now();
         black_box(f());
         samples.push(s.elapsed().as_secs_f64());

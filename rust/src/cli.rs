@@ -39,7 +39,7 @@ const VALUE_OPTS: &[&str] = &[
     "config", "out", "artifacts", "method", "workload", "steps", "seed",
     "seeds", "fig", "profile", "n", "t0", "filter", "lr", "optimizer",
     "episodes", "env", "backend", "dim", "checkpoint", "resume", "fit",
-    "threads",
+    "threads", "gp-refresh-every",
 ];
 
 impl Args {

@@ -84,6 +84,12 @@ pub struct OptexParams {
     /// GP fit engine: `incremental` (rank-1 factor up/downdates across
     /// iterations, the default) or `full` (from-scratch reference refit).
     pub fit: GpFit,
+    /// Periodic factor refresh for pinned-lengthscale incremental runs:
+    /// every K syncs the Cholesky factor is refactorized from the cached
+    /// distances, bounding rank-1 chain drift on very long runs. 0
+    /// (default) = off; no effect under the median heuristic or the
+    /// `full` engine.
+    pub gp_refresh_every: usize,
     /// Native compute pool width for the eval_batch fan-out and the GP
     /// hot loops. 0 = auto-detect available parallelism (default);
     /// 1 = legacy serial path (kept for differential testing).
@@ -104,6 +110,7 @@ impl Default for OptexParams {
             eval_intermediate: true,
             backend: Backend::Native,
             fit: GpFit::Incremental,
+            gp_refresh_every: 0,
             threads: 0,
         }
     }
@@ -262,6 +269,7 @@ impl RunConfig {
                 self.optex.fit = GpFit::parse(need_str()?)
                     .ok_or_else(|| bad(key, "unknown fit engine (full|incremental)"))?
             }
+            "optex.gp_refresh_every" => self.optex.gp_refresh_every = need_usize()?,
             "optex.threads" => self.optex.threads = need_usize()?,
             _ => return Err(bad(key, "unknown config key")),
         }
@@ -306,6 +314,7 @@ impl RunConfig {
         m.insert("sigma2".into(), format!("{}", self.optex.sigma2));
         m.insert("selection".into(), self.optex.selection.name().into());
         m.insert("fit".into(), self.optex.fit.name().into());
+        m.insert("gp_refresh_every".into(), self.optex.gp_refresh_every.to_string());
         m.insert("threads".into(), self.optex.threads.to_string());
         m.insert("noise_std".into(), format!("{}", self.noise_std));
         m.insert("synth_dim".into(), self.synth_dim.to_string());
@@ -369,6 +378,18 @@ mod tests {
         assert_eq!(cfg.optex.threads, 1);
         assert!(cfg.apply_override("optex.threads=-2").is_err());
         assert!(RunConfig::default().describe().contains_key("threads"));
+    }
+
+    #[test]
+    fn gp_refresh_every_parses_with_zero_off_default() {
+        assert_eq!(RunConfig::default().optex.gp_refresh_every, 0);
+        let mut cfg = RunConfig::default();
+        cfg.apply_override("optex.gp_refresh_every=25").unwrap();
+        assert_eq!(cfg.optex.gp_refresh_every, 25);
+        cfg.apply_override("optex.gp_refresh_every=0").unwrap();
+        assert_eq!(cfg.optex.gp_refresh_every, 0);
+        assert!(cfg.apply_override("optex.gp_refresh_every=-1").is_err());
+        assert!(RunConfig::default().describe().contains_key("gp_refresh_every"));
     }
 
     #[test]

@@ -8,6 +8,14 @@
 //!   n_opt_bufs u32 | per buf: len u64 + f32×len |
 //!   hist_entries u32 | dsub u64 | per entry: theta_sub f32×dsub + grad f32×d
 //!
+//! The live save path ([`save_live`]) streams history rows straight from
+//! the [`GradStore`] arena borrows into the buffered writer — no
+//! intermediate per-row `Vec`s (ISSUE 3: the arena is serialized
+//! directly). The [`Checkpoint`] struct is the owned READ-side / test
+//! snapshot; [`Checkpoint::restore`] re-pushes rows into the arena
+//! through the canonical API so ring invariants (and the epoch bump via
+//! `clear`) hold.
+//!
 //! Fidelity: for deterministic workloads resume is bit-exact (tested in
 //! `resume_equivalence`); for stochastic workloads the data-sampler RNG
 //! restarts from the checkpoint seed, which is the standard
@@ -29,7 +37,59 @@ use crate::opt::Optimizer;
 const MAGIC: &[u8; 8] = b"OPTEXCKP";
 const VERSION: u32 = 1;
 
-/// Serializable snapshot of a run.
+/// Stream a live run straight to disk: history rows are written from the
+/// arena borrows, never collected into owned buffers. Same byte format
+/// as [`Checkpoint::write`].
+pub fn save_live(
+    path: &Path,
+    iter: u64,
+    theta: &[f32],
+    optimizer: &dyn Optimizer,
+    history: &GradHistory,
+) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut out = std::io::BufWriter::new(std::fs::File::create(path)?);
+    let opt_state = optimizer.save_state();
+    write_header(&mut out, iter, theta, optimizer.name(), &opt_state)?;
+    let (thetas, grads) = history.views();
+    out.write_all(&(thetas.len() as u32).to_le_bytes())?;
+    // empty history writes dsub = 0 (byte-compatible with the owned path)
+    let dsub = if thetas.is_empty() { 0 } else { history.subset().len() } as u64;
+    out.write_all(&dsub.to_le_bytes())?;
+    for (tsub, grad) in thetas.iter().zip(&grads) {
+        write_f32s(&mut out, tsub)?;
+        write_f32s(&mut out, grad)?;
+    }
+    out.flush()?;
+    Ok(())
+}
+
+fn write_header<W: Write>(
+    out: &mut W,
+    iter: u64,
+    theta: &[f32],
+    opt_name: &str,
+    opt_state: &[Vec<f32>],
+) -> Result<()> {
+    out.write_all(MAGIC)?;
+    out.write_all(&VERSION.to_le_bytes())?;
+    out.write_all(&iter.to_le_bytes())?;
+    out.write_all(&(theta.len() as u64).to_le_bytes())?;
+    let name = opt_name.as_bytes();
+    out.write_all(&(name.len() as u32).to_le_bytes())?;
+    out.write_all(name)?;
+    write_f32s(out, theta)?;
+    out.write_all(&(opt_state.len() as u32).to_le_bytes())?;
+    for buf in opt_state {
+        out.write_all(&(buf.len() as u64).to_le_bytes())?;
+        write_f32s(out, buf)?;
+    }
+    Ok(())
+}
+
+/// Owned snapshot of a run (read side; also handy in tests).
 pub struct Checkpoint {
     pub iter: u64,
     pub opt_name: String,
@@ -40,7 +100,9 @@ pub struct Checkpoint {
 }
 
 impl Checkpoint {
-    /// Capture the state of a live run.
+    /// Capture the state of a live run as an owned snapshot (copies the
+    /// arena rows — inspection/tests; the driver streams via
+    /// [`save_live`] instead).
     pub fn capture(
         iter: u64,
         theta: &[f32],
@@ -76,16 +138,33 @@ impl Checkpoint {
                 optimizer.name()
             );
         }
+        // Validate row shapes BEFORE touching any state: the arena write
+        // path hard-asserts row widths, so a mismatched checkpoint must
+        // be rejected here with an actionable error (like the optimizer
+        // mismatch above), not abort in release mode.
+        let dsub = history.subset().len();
+        let d = history.subset().full_dim();
+        for (i, (tsub, grad)) in self.history.iter().enumerate() {
+            if tsub.len() != dsub || grad.len() != d {
+                bail!(
+                    "checkpoint history row {i} has shapes (D̃={}, d={}), \
+                     run expects (D̃={dsub}, d={d}) — wrong synth_dim or \
+                     optex.dsub for this checkpoint",
+                    tsub.len(),
+                    grad.len()
+                );
+            }
+        }
         optimizer
             .load_state(&self.opt_state)
             .map_err(|e| anyhow::anyhow!("optimizer state: {e}"))?;
         *theta = self.theta.clone();
         history.clear();
         // re-push through the canonical API so invariants hold; the stored
-        // theta_sub rows ARE the subset gathers, so reconstruct a full-dim
-        // carrier only when the subset is full-dimensional.
+        // theta_sub rows ARE the subset gathers, copied straight into the
+        // arena slots.
         for (tsub, grad) in &self.history {
-            history.restore_entry(tsub.clone(), grad.clone());
+            history.restore_entry(tsub, grad);
         }
         Ok(())
     }
@@ -95,19 +174,7 @@ impl Checkpoint {
             std::fs::create_dir_all(dir)?;
         }
         let mut out = std::io::BufWriter::new(std::fs::File::create(path)?);
-        out.write_all(MAGIC)?;
-        out.write_all(&VERSION.to_le_bytes())?;
-        out.write_all(&self.iter.to_le_bytes())?;
-        out.write_all(&(self.theta.len() as u64).to_le_bytes())?;
-        let name = self.opt_name.as_bytes();
-        out.write_all(&(name.len() as u32).to_le_bytes())?;
-        out.write_all(name)?;
-        write_f32s(&mut out, &self.theta)?;
-        out.write_all(&(self.opt_state.len() as u32).to_le_bytes())?;
-        for buf in &self.opt_state {
-            out.write_all(&(buf.len() as u64).to_le_bytes())?;
-            write_f32s(&mut out, buf)?;
-        }
+        write_header(&mut out, self.iter, &self.theta, &self.opt_name, &self.opt_state)?;
         out.write_all(&(self.history.len() as u32).to_le_bytes())?;
         let dsub = self.history.first().map(|(t, _)| t.len()).unwrap_or(0) as u64;
         out.write_all(&dsub.to_le_bytes())?;
@@ -223,7 +290,7 @@ mod tests {
                 opt.step(&mut theta, &g);
             }
             let mut hist = GradHistory::new(4, DimSubset::full(d));
-            hist.push(&theta, rng.normal_vec(d));
+            hist.push(&theta, &rng.normal_vec(d));
 
             let path = tmp(name);
             let ckp = Checkpoint::capture(7, &theta, opt.as_ref(), &hist);
@@ -250,6 +317,95 @@ mod tests {
             assert_eq!(a, b, "{name}: post-restore trajectory diverged");
             std::fs::remove_file(&path).ok();
         }
+    }
+
+    #[test]
+    fn save_live_bytes_equal_captured_write() {
+        // The streaming arena path and the owned-snapshot path must
+        // produce the exact same file.
+        let mut rng = Rng::new(4);
+        let d = 9;
+        let mut opt = OptSpec::parse("adam", 0.03).unwrap().build(d);
+        let mut theta = rng.normal_vec(d);
+        let mut hist = GradHistory::new(3, DimSubset::full(d));
+        for _ in 0..5 {
+            let g = rng.normal_vec(d);
+            opt.step(&mut theta, &g);
+            hist.push(&theta, &g);
+        }
+        let pa = tmp("live_a");
+        let pb = tmp("live_b");
+        save_live(&pa, 5, &theta, opt.as_ref(), &hist).unwrap();
+        Checkpoint::capture(5, &theta, opt.as_ref(), &hist).write(&pb).unwrap();
+        assert_eq!(std::fs::read(&pa).unwrap(), std::fs::read(&pb).unwrap());
+        std::fs::remove_file(&pa).ok();
+        std::fs::remove_file(&pb).ok();
+    }
+
+    /// ISSUE 3 satellite: roundtrip with a fully WRAPPED ring — more
+    /// evictions than the capacity, so the arena's slot rotation is in an
+    /// arbitrary phase — must restore the exact logical window.
+    #[test]
+    fn roundtrip_fully_wrapped_ring() {
+        let mut rng = Rng::new(11);
+        let d = 6;
+        let cap = 4;
+        let opt = OptSpec::parse("sgd", 0.1).unwrap().build(d);
+        let mut hist = GradHistory::new(cap, DimSubset::full(d));
+        let mut expect: Vec<(Vec<f32>, Vec<f32>)> = Vec::new();
+        // 3×cap pushes => eviction count 2×cap > T₀
+        for _ in 0..3 * cap {
+            let t = rng.normal_vec(d);
+            let g = rng.normal_vec(d);
+            hist.push(&t, &g);
+            expect.push((t, g));
+        }
+        let expect = &expect[expect.len() - cap..];
+        let theta = rng.normal_vec(d);
+        let path = tmp("wrapped");
+        save_live(&path, 12, &theta, opt.as_ref(), &hist).unwrap();
+        let back = Checkpoint::read(&path).unwrap();
+        assert_eq!(back.history.len(), cap);
+        for (i, ((bt, bg), (et, eg))) in back.history.iter().zip(expect).enumerate() {
+            assert_eq!(bt, et, "row {i}: theta");
+            assert_eq!(bg, eg, "row {i}: grad");
+        }
+        // restore and confirm the ring advances correctly past the wrap
+        let mut opt2 = OptSpec::parse("sgd", 0.1).unwrap().build(d);
+        let mut theta2 = Vec::new();
+        let mut hist2 = GradHistory::new(cap, DimSubset::full(d));
+        back.restore(&mut theta2, opt2.as_mut(), &mut hist2).unwrap();
+        assert_eq!(hist2.len(), cap);
+        let extra_t = rng.normal_vec(d);
+        let extra_g = rng.normal_vec(d);
+        hist2.push(&extra_t, &extra_g);
+        let (tv, gv) = hist2.views();
+        assert_eq!(tv[cap - 1], extra_t.as_slice());
+        assert_eq!(gv[cap - 1], extra_g.as_slice());
+        assert_eq!(tv[0], expect[1].0.as_slice(), "oldest after post-restore push");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn restore_rejects_mismatched_history_row_shapes() {
+        // a checkpoint from a different synth_dim/dsub must error cleanly,
+        // never trip the arena's width asserts in release mode
+        let mut rng = Rng::new(8);
+        let d = 6;
+        let opt = OptSpec::parse("sgd", 0.1).unwrap().build(d);
+        let mut hist = GradHistory::new(2, DimSubset::full(d));
+        hist.push(&rng.normal_vec(d), &rng.normal_vec(d));
+        let ckp = Checkpoint::capture(1, &rng.normal_vec(d), opt.as_ref(), &hist);
+        // restore into a run with a DIFFERENT dimension
+        let mut opt2 = OptSpec::parse("sgd", 0.1).unwrap().build(4);
+        let mut theta2 = Vec::new();
+        let mut hist2 = GradHistory::new(2, DimSubset::full(4));
+        let err = ckp
+            .restore(&mut theta2, opt2.as_mut(), &mut hist2)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("row 0"), "{err}");
+        assert!(hist2.is_empty(), "failed restore must not half-populate");
     }
 
     #[test]

@@ -1,17 +1,22 @@
 //! Bounded local gradient history (paper Sec. 4.1, "Local History of
-//! Gradients").
+//! Gradients") — now a thin FIFO index over the contiguous
+//! [`GradStore`] arena (ISSUE 3).
 //!
 //! Holds the most recent T₀ (θ, ∇f(θ)) pairs. θ is stored *restricted to
 //! the kernel dimension subset* (Appx B.2.3) — the full θ is never needed
 //! again — while gradients are stored over the full dimension d for the
 //! posterior combine. Eviction is strict FIFO, which for OptEx coincides
 //! with "nearest in optimization time", the locality the paper's local-
-//! history argument relies on.
+//! history argument relies on. This type owns the FIFO *semantics*
+//! (logical row order, push events, the `(epoch, total_pushed)` mirror
+//! version); the store owns the *bytes* (one flat T₀×d block plus a
+//! T₀×D̃ θ-subset block, O(1) eviction, stable row slots).
 //!
 //! Row indexing is stable for mirrors: row 0 is always the oldest entry,
-//! an eviction removes row 0 (shifting every surviving row down by one)
-//! and an append creates row `len()-1`. Two views of that contract:
-//! [`GradHistory::push`] reports the per-push structural event as a
+//! an eviction removes row 0 (renumbering every surviving row down by
+//! one — a pure index shift; no data moves in the arena) and an append
+//! creates row `len()-1`. Two views of that contract: [`GradHistory::push`]
+//! / [`GradHistory::commit`] report the per-push structural event as a
 //! [`PushEvent`] (for callers tracking individual evictions —
 //! diagnostics, tests), while batch mirrors — the incremental GP fit —
 //! consume the `(epoch, total_pushed)` version pair plus the ring's
@@ -19,22 +24,20 @@
 //! replayable or a rebuild is needed: `epoch` bumps on any restructuring
 //! ([`GradHistory::clear`], e.g. under checkpoint restore),
 //! `total_pushed` counts pushes monotonically within an epoch.
+//!
+//! The hot write path is the loan protocol ([`GradHistory::loan`] →
+//! [`GradHistory::loaned_rows_mut`] → [`GradHistory::commit`]): the eval
+//! fan-out writes gradients straight into the slots their pushes will
+//! occupy, so a steady-state sequential iteration allocates no
+//! gradient-sized buffer and memcpys zero gradient bytes (asserted via
+//! the store's debug counters; the only heap use on the loan path is
+//! the k-pointer row table handed to the fan-out).
 
-use std::collections::VecDeque;
-
+use crate::coordinator::store::GradStore;
 use crate::gp::DimSubset;
 
-/// One historical evaluation.
-#[derive(Clone, Debug)]
-pub struct Entry {
-    /// θ restricted to the kernel subset (len = subset.len()).
-    pub theta_sub: Vec<f32>,
-    /// Full-dimension gradient ∇f(θ).
-    pub grad: Vec<f32>,
-}
-
-/// What one [`GradHistory::push`] did to the ring, in mirror-replayable
-/// terms (indices are post-push row positions).
+/// What one push did to the ring, in mirror-replayable terms (indices
+/// are post-push row positions).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct PushEvent {
     /// Row index the new entry landed at (always `len()-1`).
@@ -43,58 +46,95 @@ pub struct PushEvent {
     pub evicted_oldest: bool,
 }
 
-/// FIFO ring of the last T₀ evaluations.
+/// FIFO ring of the last T₀ evaluations, indexing a [`GradStore`] arena.
 #[derive(Debug)]
 pub struct GradHistory {
-    cap: usize,
     subset: DimSubset,
-    entries: VecDeque<Entry>,
+    store: GradStore,
     total_pushed: u64,
     epoch: u64,
 }
 
 impl GradHistory {
-    /// `cap` = T₀ (≥ 1), `subset` = the fixed kernel dim subset.
+    /// `cap` = T₀ (≥ 1), `subset` = the fixed kernel dim subset. The
+    /// backing arena (T₀ × d + T₀ × D̃ floats) is allocated here, once.
     pub fn new(cap: usize, subset: DimSubset) -> Self {
-        assert!(cap >= 1, "history capacity must be >= 1");
-        GradHistory {
-            cap,
-            subset,
-            entries: VecDeque::with_capacity(cap + 1),
-            total_pushed: 0,
-            epoch: 0,
-        }
+        let store = GradStore::new(cap, subset.full_dim(), subset.len());
+        GradHistory { subset, store, total_pushed: 0, epoch: 0 }
     }
 
-    /// Record an evaluation; evicts the oldest entry beyond capacity.
-    /// Returns the structural event so mirrors can replay it.
-    pub fn push(&mut self, theta_full: &[f32], grad: Vec<f32>) -> PushEvent {
+    /// Record an evaluation by copy; evicts the oldest entry beyond
+    /// capacity. Returns the structural event so mirrors can replay it.
+    /// Convenience for tests/benches and one-shot callers — the driver's
+    /// fan-out uses the zero-copy loan protocol instead.
+    pub fn push(&mut self, theta_full: &[f32], grad: &[f32]) -> PushEvent {
         debug_assert_eq!(theta_full.len(), self.subset.full_dim());
         debug_assert_eq!(grad.len(), self.subset.full_dim());
-        let theta_sub = self.subset.gather(theta_full);
-        self.entries.push_back(Entry { theta_sub, grad });
-        let evicted_oldest = self.entries.len() > self.cap;
-        if evicted_oldest {
-            self.entries.pop_front();
-        }
+        let subset = &self.subset;
+        let (appended_at, evicted_oldest) =
+            self.store.push_row(grad, |dst| subset.gather_into(theta_full, dst));
         self.total_pushed += 1;
-        PushEvent { appended_at: self.entries.len() - 1, evicted_oldest }
+        PushEvent { appended_at, evicted_oldest }
+    }
+
+    /// Reserve the rows the next `k` pushes will occupy (see
+    /// [`GradStore::loan`]). Between `loan` and the final [`Self::commit`]
+    /// no logical read (views / flat) is allowed — when the ring is full
+    /// the fan-out is overwriting the rows scheduled for eviction.
+    pub fn loan(&mut self, k: usize) {
+        self.store.loan(k);
+    }
+
+    /// Disjoint mutable gradient rows of the outstanding loan, in loan
+    /// order — the buffers handed to `GradSource::eval_batch`.
+    pub fn loaned_rows_mut(&mut self) -> Vec<&mut [f32]> {
+        self.store.loaned_rows_mut()
+    }
+
+    /// Read the `i`-th loaned gradient row (optimizer steps / norms run
+    /// off these between the fan-out and the commits).
+    pub fn loaned_grad(&self, i: usize) -> &[f32] {
+        self.store.loaned_grad(i)
+    }
+
+    /// Commit the next outstanding loan as a push: the θ subset of
+    /// `theta_full` is gathered into the arena, the gradient is already
+    /// in place (zero-copy).
+    pub fn commit(&mut self, theta_full: &[f32]) -> PushEvent {
+        debug_assert_eq!(theta_full.len(), self.subset.full_dim());
+        let subset = &self.subset;
+        let (appended_at, evicted_oldest) =
+            self.store.commit_with(|dst| subset.gather_into(theta_full, dst));
+        self.total_pushed += 1;
+        PushEvent { appended_at, evicted_oldest }
+    }
+
+    /// Drop an outstanding loan on the error path (no pushes happened).
+    /// When the loaned slots overlapped live rows (full ring: the
+    /// fan-out was writing over the oldest history before failing), the
+    /// surviving contents are unreliable — the history is cleared and
+    /// the epoch bumped so checkpoints can't persist clobbered rows and
+    /// GP mirrors rebuild rather than silently serving them.
+    pub fn abandon_loan(&mut self) {
+        if self.store.abandon_loan() {
+            self.clear();
+        }
     }
 
     pub fn len(&self) -> usize {
-        self.entries.len()
+        self.store.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.entries.is_empty()
+        self.store.is_empty()
     }
 
     pub fn capacity(&self) -> usize {
-        self.cap
+        self.store.capacity()
     }
 
     pub fn is_full(&self) -> bool {
-        self.entries.len() == self.cap
+        self.store.is_full()
     }
 
     pub fn total_pushed(&self) -> u64 {
@@ -105,27 +145,33 @@ impl GradHistory {
         &self.subset
     }
 
-    /// Borrowed views (oldest -> newest) for the native estimator.
+    /// Borrowed views (oldest -> newest) for the native estimator. The
+    /// slices point straight into the arena — no row is copied.
     pub fn views(&self) -> (Vec<&[f32]>, Vec<&[f32]>) {
-        let mut thetas = Vec::with_capacity(self.entries.len());
-        let mut grads = Vec::with_capacity(self.entries.len());
-        for e in &self.entries {
-            thetas.push(e.theta_sub.as_slice());
-            grads.push(e.grad.as_slice());
+        let n = self.store.len();
+        let mut thetas = Vec::with_capacity(n);
+        let mut grads = Vec::with_capacity(n);
+        for i in 0..n {
+            thetas.push(self.store.theta_row(i));
+            grads.push(self.store.grad_row(i));
         }
         (thetas, grads)
     }
 
-    /// Row-major (T₀ × D̃) and (T₀ × d) flattenings for the HLO backend.
-    /// Only valid when `is_full()` (artifact shapes are static).
-    pub fn flatten(&self, hist_out: &mut Vec<f32>, grads_out: &mut Vec<f32>) {
-        assert!(self.is_full(), "HLO estimation needs a full history");
-        hist_out.clear();
-        grads_out.clear();
-        for e in &self.entries {
-            hist_out.extend_from_slice(&e.theta_sub);
-            grads_out.extend_from_slice(&e.grad);
-        }
+    /// Contiguous (T₀ × D̃) θ-subset block for the HLO backend — a plain
+    /// borrow of the arena (the seed's per-iteration flatten rebuild is
+    /// gone). Rows are in ring-slot order, a consistent permutation of
+    /// oldest-first; the GP posterior is permutation-invariant (see
+    /// `store.rs` module docs). Only valid when `is_full()` (artifact
+    /// shapes are static).
+    pub fn flat_thetas(&self) -> &[f32] {
+        self.store.flat_thetas()
+    }
+
+    /// Contiguous (T₀ × d) gradient block, row-aligned with
+    /// [`GradHistory::flat_thetas`].
+    pub fn flat_grads(&self) -> &[f32] {
+        self.store.flat_grads()
     }
 
     /// Restructuring epoch: bumps whenever the ring's contents stop being
@@ -137,20 +183,29 @@ impl GradHistory {
     }
 
     pub fn clear(&mut self) {
-        self.entries.clear();
+        self.store.clear();
         self.epoch += 1;
     }
 
     /// Restore a checkpointed entry: `theta_sub` is ALREADY restricted to
     /// the subset (checkpoints store the gathered rows, the full θ of
     /// history points is never kept).
-    pub fn restore_entry(&mut self, theta_sub: Vec<f32>, grad: Vec<f32>) {
+    pub fn restore_entry(&mut self, theta_sub: &[f32], grad: &[f32]) {
         debug_assert_eq!(theta_sub.len(), self.subset.len());
-        self.entries.push_back(Entry { theta_sub, grad });
-        if self.entries.len() > self.cap {
-            self.entries.pop_front();
-        }
+        self.store.push_row(grad, |dst| dst.copy_from_slice(theta_sub));
         self.total_pushed += 1;
+    }
+
+    /// Arena heap allocations performed by the backing store (debug
+    /// counter; 2 = construction only).
+    pub fn store_allocs(&self) -> u64 {
+        self.store.allocs()
+    }
+
+    /// Gradient bytes memcpy'd by the backing store (debug counter; 0 on
+    /// a pure loan/commit run).
+    pub fn grad_bytes_copied(&self) -> u64 {
+        self.store.bytes_copied()
     }
 }
 
@@ -158,6 +213,7 @@ impl GradHistory {
 mod tests {
     use super::*;
     use crate::util::Rng;
+    use std::collections::VecDeque;
 
     fn hist(cap: usize, d: usize) -> GradHistory {
         GradHistory::new(cap, DimSubset::full(d))
@@ -168,7 +224,7 @@ mod tests {
         let mut h = hist(3, 2);
         for i in 0..5 {
             let v = vec![i as f32; 2];
-            h.push(&v, vec![10.0 * i as f32; 2]);
+            h.push(&v, &[10.0 * i as f32; 2]);
         }
         assert_eq!(h.len(), 3);
         assert!(h.is_full());
@@ -186,7 +242,7 @@ mod tests {
         let idx = sub.indices().to_vec();
         let mut h = GradHistory::new(2, sub);
         let theta: Vec<f32> = (0..10).map(|i| i as f32).collect();
-        h.push(&theta, vec![0.0; 10]);
+        h.push(&theta, &[0.0; 10]);
         let (thetas, _) = h.views();
         assert_eq!(thetas[0].len(), 4);
         for (v, &i) in thetas[0].iter().zip(&idx) {
@@ -195,28 +251,34 @@ mod tests {
     }
 
     #[test]
-    fn flatten_layout_row_major() {
+    fn flat_views_hold_every_live_row_exactly_once() {
         let mut h = hist(2, 3);
-        h.push(&[1.0, 2.0, 3.0], vec![4.0, 5.0, 6.0]);
-        h.push(&[7.0, 8.0, 9.0], vec![10.0, 11.0, 12.0]);
-        let (mut a, mut b) = (Vec::new(), Vec::new());
-        h.flatten(&mut a, &mut b);
-        assert_eq!(a, vec![1.0, 2.0, 3.0, 7.0, 8.0, 9.0]);
-        assert_eq!(b, vec![4.0, 5.0, 6.0, 10.0, 11.0, 12.0]);
+        h.push(&[1.0, 2.0, 3.0], &[4.0, 5.0, 6.0]);
+        h.push(&[7.0, 8.0, 9.0], &[10.0, 11.0, 12.0]);
+        // not yet wrapped: slot order == oldest-first
+        assert_eq!(h.flat_thetas(), &[1.0, 2.0, 3.0, 7.0, 8.0, 9.0]);
+        assert_eq!(h.flat_grads(), &[4.0, 5.0, 6.0, 10.0, 11.0, 12.0]);
+        // wrapped: push 3 reuses slot 0 — ring-rotated but complete, and
+        // θ/grad blocks stay row-aligned
+        h.push(&[13.0, 14.0, 15.0], &[16.0, 17.0, 18.0]);
+        assert_eq!(h.flat_thetas(), &[13.0, 14.0, 15.0, 7.0, 8.0, 9.0]);
+        assert_eq!(h.flat_grads(), &[16.0, 17.0, 18.0, 10.0, 11.0, 12.0]);
+        let (thetas, grads) = h.views();
+        assert_eq!(thetas, vec![&[7.0, 8.0, 9.0][..], &[13.0, 14.0, 15.0][..]]);
+        assert_eq!(grads, vec![&[10.0, 11.0, 12.0][..], &[16.0, 17.0, 18.0][..]]);
     }
 
     #[test]
-    #[should_panic(expected = "full history")]
-    fn flatten_requires_full() {
+    #[should_panic(expected = "full ring")]
+    fn flat_requires_full() {
         let h = hist(4, 2);
-        let (mut a, mut b) = (Vec::new(), Vec::new());
-        h.flatten(&mut a, &mut b);
+        let _ = h.flat_thetas();
     }
 
     #[test]
     fn clear_resets_entries_not_counter() {
         let mut h = hist(2, 1);
-        h.push(&[1.0], vec![1.0]);
+        h.push(&[1.0], &[1.0]);
         h.clear();
         assert!(h.is_empty());
         assert_eq!(h.total_pushed(), 1);
@@ -226,16 +288,16 @@ mod tests {
     fn push_events_report_append_index_and_eviction() {
         let mut h = hist(2, 1);
         assert_eq!(
-            h.push(&[0.0], vec![0.0]),
+            h.push(&[0.0], &[0.0]),
             PushEvent { appended_at: 0, evicted_oldest: false }
         );
         assert_eq!(
-            h.push(&[1.0], vec![1.0]),
+            h.push(&[1.0], &[1.0]),
             PushEvent { appended_at: 1, evicted_oldest: false }
         );
         // at capacity: row 0 evicted, append lands at len-1
         assert_eq!(
-            h.push(&[2.0], vec![2.0]),
+            h.push(&[2.0], &[2.0]),
             PushEvent { appended_at: 1, evicted_oldest: true }
         );
         let (thetas, _) = h.views();
@@ -247,14 +309,164 @@ mod tests {
     fn epoch_bumps_on_clear_only() {
         let mut h = hist(2, 1);
         assert_eq!(h.epoch(), 0);
-        h.push(&[0.0], vec![0.0]);
-        h.push(&[1.0], vec![1.0]);
-        h.push(&[2.0], vec![2.0]); // eviction is NOT a restructuring
+        h.push(&[0.0], &[0.0]);
+        h.push(&[1.0], &[1.0]);
+        h.push(&[2.0], &[2.0]); // eviction is NOT a restructuring
         assert_eq!(h.epoch(), 0);
         h.clear();
         assert_eq!(h.epoch(), 1);
-        h.restore_entry(vec![3.0], vec![3.0]);
+        h.restore_entry(&[3.0], &[3.0]);
         assert_eq!(h.epoch(), 1);
         assert_eq!(h.total_pushed(), 4);
+    }
+
+    #[test]
+    fn abandon_loan_invalidates_only_when_live_rows_were_at_risk() {
+        let mut h = hist(2, 3);
+        h.push(&[1.0; 3], &[1.0; 3]);
+        // ring not full: the loaned slot was free — history survives
+        let epoch = h.epoch();
+        h.loan(1);
+        h.abandon_loan();
+        assert_eq!(h.len(), 1);
+        assert_eq!(h.epoch(), epoch);
+        // ring full: the loaned slot IS the oldest live row, and the
+        // failed fan-out may have half-written it — history is discarded
+        // and the epoch bumps so mirrors/checkpoints can't trust it
+        h.push(&[2.0; 3], &[2.0; 3]);
+        h.loan(1);
+        {
+            let rows = h.loaned_rows_mut();
+            rows[0][0] = f32::NAN; // simulate a partial eval write
+        }
+        h.abandon_loan();
+        assert!(h.is_empty(), "clobbered history must not stay live");
+        assert_eq!(h.epoch(), epoch + 1);
+    }
+
+    #[test]
+    fn loan_commit_equals_push_and_moves_no_bytes() {
+        // Same pushes through both write paths must produce identical
+        // logical contents; the loan path must copy zero gradient bytes.
+        let mut rng = Rng::new(7);
+        let mut a = hist(3, 5);
+        let mut b = hist(3, 5);
+        for round in 0..4 {
+            let thetas: Vec<Vec<f32>> = (0..2).map(|_| rng.normal_vec(5)).collect();
+            let grads: Vec<Vec<f32>> = (0..2).map(|_| rng.normal_vec(5)).collect();
+            for (t, g) in thetas.iter().zip(&grads) {
+                a.push(t, g);
+            }
+            let before = b.grad_bytes_copied();
+            b.loan(2);
+            {
+                let rows = b.loaned_rows_mut();
+                for (row, g) in rows.into_iter().zip(&grads) {
+                    row.copy_from_slice(g); // stand-in for the eval write
+                }
+            }
+            let ev0 = b.commit(&thetas[0]);
+            let ev1 = b.commit(&thetas[1]);
+            assert_eq!(b.grad_bytes_copied(), before, "round {round}");
+            assert_eq!(ev1.appended_at, b.len() - 1);
+            // cap 3, 2 pushes/round: evictions start at the 4th push
+            assert_eq!(ev0.evicted_oldest, round >= 2);
+            assert_eq!(ev1.evicted_oldest, round >= 1);
+            let (ta, ga) = a.views();
+            let (tb, gb) = b.views();
+            assert_eq!(ta, tb, "round {round}: θ rows diverged");
+            assert_eq!(ga, gb, "round {round}: grad rows diverged");
+        }
+        assert_eq!(a.total_pushed(), b.total_pushed());
+    }
+
+    /// Satellite (ISSUE 3): the store-backed ring must match a naive
+    /// `VecDeque<Vec<f32>>` model over random push / loan-commit / clear
+    /// / restore sequences — views, flat blocks, counters and events.
+    #[test]
+    fn prop_store_matches_vecdeque_model() {
+        crate::testutil::prop::check("store_vs_model", |rng| {
+            let cap = 1 + rng.below(6);
+            let d = 1 + rng.below(8);
+            let mut h = GradHistory::new(cap, DimSubset::full(d));
+            let mut model: VecDeque<(Vec<f32>, Vec<f32>)> = VecDeque::new();
+            for _ in 0..24 {
+                match rng.below(10) {
+                    0 => {
+                        h.clear();
+                        model.clear();
+                    }
+                    1 => {
+                        // checkpoint-style restore of a fresh row
+                        let t = rng.normal_vec(d);
+                        let g = rng.normal_vec(d);
+                        h.restore_entry(&t, &g);
+                        model.push_back((t, g));
+                        if model.len() > cap {
+                            model.pop_front();
+                        }
+                    }
+                    2..=5 => {
+                        let t = rng.normal_vec(d);
+                        let g = rng.normal_vec(d);
+                        let ev = h.push(&t, &g);
+                        crate::prop_assert!(
+                            ev.evicted_oldest == (model.len() == cap),
+                            "push event eviction flag"
+                        );
+                        model.push_back((t, g));
+                        if model.len() > cap {
+                            model.pop_front();
+                        }
+                    }
+                    _ => {
+                        // loaned batch, size may exceed cap (N > T₀)
+                        let k = 1 + rng.below(cap + 2);
+                        let thetas: Vec<Vec<f32>> =
+                            (0..k).map(|_| rng.normal_vec(d)).collect();
+                        let grads: Vec<Vec<f32>> =
+                            (0..k).map(|_| rng.normal_vec(d)).collect();
+                        h.loan(k);
+                        {
+                            let rows = h.loaned_rows_mut();
+                            for (row, g) in rows.into_iter().zip(&grads) {
+                                row.copy_from_slice(g);
+                            }
+                        }
+                        for (t, g) in thetas.iter().zip(&grads) {
+                            h.commit(t);
+                            model.push_back((t.clone(), g.clone()));
+                            if model.len() > cap {
+                                model.pop_front();
+                            }
+                        }
+                    }
+                }
+                crate::prop_assert!(h.len() == model.len(), "len mismatch");
+                let (tv, gv) = h.views();
+                for (i, (mt, mg)) in model.iter().enumerate() {
+                    crate::prop_assert!(tv[i] == mt.as_slice(), "theta row {i}");
+                    crate::prop_assert!(gv[i] == mg.as_slice(), "grad row {i}");
+                }
+                if h.is_full() {
+                    // flat blocks: a row-aligned permutation of the model
+                    let ft = h.flat_thetas();
+                    let fg = h.flat_grads();
+                    for i in 0..model.len() {
+                        let t_row = &ft[..];
+                        let slot = (0..cap)
+                            .find(|&s| {
+                                t_row[s * d..(s + 1) * d] == model[i].0[..]
+                                    && fg[s * d..(s + 1) * d] == model[i].1[..]
+                            });
+                        crate::prop_assert!(
+                            slot.is_some(),
+                            "model row {i} missing from flat view"
+                        );
+                    }
+                }
+            }
+            Ok(())
+        });
     }
 }

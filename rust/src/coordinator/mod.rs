@@ -1,6 +1,9 @@
 //! Layer-3 coordinator — the paper's system contribution (Algo. 1).
 //!
-//! * [`history`] — bounded local gradient history (Sec. 4.1),
+//! * [`store`] — the contiguous gradient arena (one flat T₀×d block +
+//!   T₀×D̃ θ-subset block, O(1) eviction, zero-copy eval loans),
+//! * [`history`] — bounded local gradient history (Sec. 4.1), a thin
+//!   FIFO index over the store,
 //! * [`selection`] — θ_t selection principles (Fig. 6b),
 //! * [`metrics`] — per-iteration run records,
 //! * [`optex`] — the OptEx driver: proxy chain + parallel true-gradient
@@ -11,9 +14,11 @@ pub mod history;
 pub mod metrics;
 pub mod optex;
 pub mod selection;
+pub mod store;
 
 pub use checkpoint::Checkpoint;
 pub use history::GradHistory;
+pub use store::GradStore;
 pub use metrics::{IterRecord, RunRecord};
 pub use optex::Driver;
 pub use selection::Selection;

@@ -17,8 +17,14 @@
 //!      oracles — the shared [`NativePool`] (`optex.threads`; per-point
 //!      RNG streams keep trajectories bit-identical at any width), each
 //!      worker's FO-OPT step resuming from its state snapshot. The
-//!      measured fan-out span is recorded as `eval_s` next to the
-//!      modeled ideal-parallel time,
+//!      fan-out writes every gradient STRAIGHT into the `GradStore`
+//!      arena row its history push will occupy (loan/commit protocol,
+//!      ISSUE 3) — a steady-state iteration allocates no gradient-sized
+//!      buffer and copies zero gradient bytes; the HLO estimation
+//!      backend borrows the same arena as its flat (T₀ × D̃, T₀ × d)
+//!      inputs, so the former per-iteration `hist_flat` flatten rebuild
+//!      is gone entirely. The measured fan-out span is recorded as
+//!      `eval_s` next to the modeled ideal-parallel time,
 //!   4. select θ_t (line 10; `last` by default, `func`/`grad` for the
 //!      Fig-6b ablation) and append all N evaluations to the history.
 //!
@@ -52,13 +58,18 @@ use crate::workloads::{Eval, GradSource};
 /// (T₀ × d) gradient history — up to tens of MB — and in-thread execution
 /// passes them as borrowed slices instead of cloning per proxy step
 /// (§Perf P4: was 3 × ~20 MB of memcpy per sequential iteration).
+///
+/// Since ISSUE 3 the per-iteration `hist_flat`/`grads_flat` rebuild (a
+/// full T₀×(D̃+d) memcpy) is gone too: the `GradStore` arena IS the
+/// contiguous (T₀ × D̃, T₀ × d) input pair, borrowed directly via
+/// `GradHistory::flat_thetas` / `flat_grads`. Rows arrive in ring-slot
+/// order — a consistent permutation of oldest-first, under which the GP
+/// posterior is invariant (see `coordinator/store.rs`).
 struct HloEstimator {
     /// Keeps the PJRT client alive for `exe`.
     _engine: Engine,
     exe: Executable,
     sigma2: f32,
-    hist_flat: Vec<f32>,
-    grads_flat: Vec<f32>,
 }
 
 /// The run driver. Owns θ, the optimizer, the history and the oracle.
@@ -91,6 +102,10 @@ pub struct Driver {
     /// d-sized clones).
     avg_buf: Vec<f32>,
     theta_sub_buf: Vec<f32>,
+    /// Persistent gradient rows for the history-less baselines (target /
+    /// dataparallel), which have no `GradStore` slots to loan; grown once
+    /// to n×d, reused every iteration.
+    eval_scratch: Vec<f32>,
 }
 
 impl Driver {
@@ -134,13 +149,7 @@ impl Driver {
             let sigma2 = cfg.optex.sigma2 as f32;
             let engine = Engine::cpu()?;
             let exe = engine.load(spec)?;
-            Some(HloEstimator {
-                _engine: engine,
-                exe,
-                sigma2,
-                hist_flat: Vec::new(),
-                grads_flat: Vec::new(),
-            })
+            Some(HloEstimator { _engine: engine, exe, sigma2 })
         } else {
             None
         };
@@ -173,12 +182,19 @@ impl Driver {
             mu_buf: vec![0.0; d],
             avg_buf: Vec::new(),
             theta_sub_buf: Vec::new(),
+            eval_scratch: Vec::new(),
         })
     }
 
     /// Current iterate.
     pub fn theta(&self) -> &[f32] {
         &self.theta
+    }
+
+    /// The local gradient history (read access — e.g. for the arena's
+    /// zero-alloc/zero-copy debug counters in tests).
+    pub fn history(&self) -> &GradHistory {
+        &self.history
     }
 
     /// Metrics recorded so far.
@@ -188,14 +204,16 @@ impl Driver {
 
     /// Snapshot the run to a checkpoint file (θ, optimizer state, local
     /// gradient history). `iter` tags the sequential iteration count.
+    /// History rows stream straight from the `GradStore` arena borrows —
+    /// no owned intermediate snapshot.
     pub fn save_checkpoint(&self, path: &std::path::Path, iter: u64) -> Result<()> {
-        crate::coordinator::checkpoint::Checkpoint::capture(
+        crate::coordinator::checkpoint::save_live(
+            path,
             iter,
             &self.theta,
             self.optimizer.as_ref(),
             &self.history,
         )
-        .write(path)
     }
 
     /// Resume from a checkpoint file; returns the iteration it was taken
@@ -243,6 +261,7 @@ impl Driver {
             lengthscale: self.cfg.optex.lengthscale,
             sigma2: self.cfg.optex.sigma2,
             fit: self.cfg.optex.fit,
+            refresh_every: self.cfg.optex.gp_refresh_every,
             pool: self.pool,
         }
     }
@@ -354,19 +373,20 @@ impl Driver {
                 .map(|i| i.lengthscale())
                 .or_else(|| fitted.as_ref().map(|f| f.lengthscale))
                 .unwrap_or(1.0);
-            if use_hlo {
-                let est = self.hlo_est.as_mut().unwrap();
-                self.history.flatten(&mut est.hist_flat, &mut est.grads_flat);
-            }
             for _s in 1..n {
                 self.theta_sub_buf.resize(self.history.subset().len(), 0.0);
                 self.history.subset().gather_into(&cur, &mut self.theta_sub_buf);
                 self.last_var = if use_hlo {
+                    // The GradStore arena IS the artifact's contiguous
+                    // (T₀ × D̃, T₀ × d) input pair — borrowed, never
+                    // rebuilt (the seed's per-iteration flatten copy is
+                    // gone; rows are ring-rotated, a permutation the GP
+                    // posterior is invariant under).
                     let est = self.hlo_est.as_ref().unwrap();
                     let out = est.exe.run(&[
                         In::F32(&self.theta_sub_buf),
-                        In::F32(&est.hist_flat),
-                        In::F32(&est.grads_flat),
+                        In::F32(self.history.flat_thetas()),
+                        In::F32(self.history.flat_grads()),
                         In::F32(&[ls as f32]),
                         In::F32(&[est.sigma2]),
                     ])?;
@@ -375,9 +395,9 @@ impl Driver {
                 } else if let Some(inc) = inc {
                     // prior (μ = 0, var = 1) on an empty mirror — same
                     // contract as the reference branches below
-                    inc.query(&self.theta_sub_buf, &gviews, &mut self.mu_buf)
+                    inc.query(&self.theta_sub_buf, &hviews, &gviews, &mut self.mu_buf)
                 } else if let Some(f) = &fitted {
-                    f.query(&self.theta_sub_buf, &gviews, &mut self.mu_buf)
+                    f.query(&self.theta_sub_buf, &hviews, &gviews, &mut self.mu_buf)
                 } else {
                     // empty history: prior mean 0 — proxy step is a no-op
                     self.mu_buf.iter_mut().for_each(|x| *x = 0.0);
@@ -389,15 +409,29 @@ impl Driver {
             }
         }
 
-        // lines 6-9: parallel ground-truth phase.
+        // lines 6-9: parallel ground-truth phase. Gradients are written
+        // by the fan-out STRAIGHT into the arena rows their history
+        // pushes will occupy (GradStore loan protocol): no per-eval
+        // allocation, no gradient memcpy, at any thread count.
         let eval_all = self.cfg.optex.eval_intermediate || n == 1;
         let eval_points: Vec<&[f32]> = if eval_all {
             points.iter().map(|p| p.as_slice()).collect()
         } else {
             vec![points.last().unwrap().as_slice()] // Fig-6a "sequential"
         };
+        self.history.loan(eval_points.len());
         let eval_start = Instant::now();
-        let evals = self.source.eval_batch(&eval_points)?;
+        let result = {
+            let mut rows = self.history.loaned_rows_mut();
+            self.source.eval_batch(&eval_points, &mut rows)
+        };
+        let evals = match result {
+            Ok(evals) => evals,
+            Err(e) => {
+                self.history.abandon_loan();
+                return Err(e);
+            }
+        };
         // Measured span of the fan-out: the serial sum at threads = 1,
         // real parallel wall-clock once the pool is engaged.
         let eval_span = eval_start.elapsed();
@@ -406,30 +440,32 @@ impl Driver {
 
         let n_evals = evals.len() as u64;
         let aux = mean_aux(&evals);
-        // Gradients are MOVED into the history (no per-iteration d-sized
-        // clones — §Perf P5); everything needed later is extracted first.
+        // Optimizer steps and norms read the loaned rows in place, then
+        // each commit turns its loan into a real push (θ-subset gather
+        // only — the gradient never moves again).
         let (sel_idx, candidates, losses, grad_norms) = if eval_all {
             let mut candidates = points.clone();
             let mut losses = Vec::with_capacity(n);
             let mut grad_norms = Vec::with_capacity(n);
             for (i, e) in evals.iter().enumerate() {
-                snapshots[i].step(&mut candidates[i], &e.grad);
+                let g = self.history.loaned_grad(i);
+                snapshots[i].step(&mut candidates[i], g);
                 losses.push(e.loss);
-                grad_norms.push(norm2(&e.grad));
+                grad_norms.push(norm2(g));
             }
-            for (p, e) in points.iter().zip(evals.into_iter()) {
-                self.history.push(p, e.grad);
+            for p in &points {
+                self.history.commit(p);
             }
             let sel = self.cfg.optex.selection.select(&losses, &grad_norms);
             (sel, candidates, losses, grad_norms)
         } else {
             // single evaluation at the last proxy point
-            let e = evals.into_iter().next().unwrap();
             let mut cand = points.last().unwrap().clone();
-            snapshots[n - 1].step(&mut cand, &e.grad);
-            let gn = norm2(&e.grad);
-            let loss = e.loss;
-            self.history.push(points.last().unwrap(), e.grad);
+            let g = self.history.loaned_grad(0);
+            snapshots[n - 1].step(&mut cand, g);
+            let gn = norm2(g);
+            let loss = evals[0].loss;
+            self.history.commit(points.last().unwrap());
             (0, vec![cand], vec![loss], vec![gn])
         };
 
@@ -452,6 +488,11 @@ impl Driver {
 
     fn target_iteration(&mut self) -> Result<(u64, f64, f64, Option<f64>, Duration, Duration)> {
         let n = self.cfg.optex.parallelism;
+        let d = self.theta.len();
+        // one persistent scratch row — target never touches the history
+        if self.eval_scratch.len() < d {
+            self.eval_scratch = vec![0.0; d];
+        }
         let mut worker_max = Duration::ZERO;
         let mut serial = Duration::ZERO;
         let mut last_loss = f64::NAN;
@@ -459,17 +500,22 @@ impl Driver {
         let mut auxes = Vec::new();
         for _ in 0..n {
             let t0 = Instant::now();
-            let evals = self.source.eval_batch(&[&self.theta])?;
+            let e = {
+                let mut rows = [&mut self.eval_scratch[..d]];
+                let mut evals =
+                    self.source.eval_batch(&[self.theta.as_slice()], &mut rows)?;
+                evals.pop().unwrap()
+            };
             serial += t0.elapsed();
-            let e = &evals[0];
+            let grad = &self.eval_scratch[..d];
             worker_max = worker_max.max(e.elapsed);
             last_loss = e.loss;
-            last_norm = norm2(&e.grad);
+            last_norm = norm2(grad);
             if let Some(a) = e.aux {
                 auxes.push(a);
             }
             self.best_loss = self.best_loss.min(e.loss);
-            self.optimizer.step(&mut self.theta, &e.grad);
+            self.optimizer.step(&mut self.theta, grad);
         }
         let aux = if auxes.is_empty() {
             None
@@ -485,21 +531,30 @@ impl Driver {
         &mut self,
     ) -> Result<(u64, f64, f64, Option<f64>, Duration, Duration)> {
         let n = self.cfg.optex.parallelism;
+        let d = self.theta.len();
+        // n persistent scratch rows — dataparallel never touches the
+        // history either; grown once, reused every iteration.
+        if self.eval_scratch.len() < n * d {
+            self.eval_scratch = vec![0.0; n * d];
+        }
         let points: Vec<&[f32]> = (0..n).map(|_| self.theta.as_slice()).collect();
         let t0 = Instant::now();
-        let evals = self.source.eval_batch(&points)?;
+        let evals = {
+            let mut rows: Vec<&mut [f32]> =
+                self.eval_scratch[..n * d].chunks_mut(d).collect();
+            self.source.eval_batch(&points, &mut rows)?
+        };
         let serial = t0.elapsed();
         let worker_max =
             evals.iter().map(|e| e.elapsed).max().unwrap_or(Duration::ZERO);
         // Average into the persistent buffer and step straight through it
         // (disjoint field borrows) — no per-iteration d-sized clone.
-        let d = self.theta.len();
         if self.avg_buf.len() != d {
             self.avg_buf = vec![0.0; d];
         }
         self.avg_buf.iter_mut().for_each(|x| *x = 0.0);
-        for e in &evals {
-            for (m, &g) in self.avg_buf.iter_mut().zip(&e.grad) {
+        for row in self.eval_scratch[..n * d].chunks(d) {
+            for (m, &g) in self.avg_buf.iter_mut().zip(row) {
                 *m += g / n as f32;
             }
         }
@@ -568,8 +623,8 @@ mod tests {
         let mut theta = src.init_params(&mut Rng::new(c.seed));
         let mut opt = c.optimizer.build(64);
         for _ in 0..20 {
-            let e = src.eval_batch(&[&theta]).unwrap().pop().unwrap();
-            opt.step(&mut theta, &e.grad);
+            let (_, grads) = src.eval_batch_owned(&[&theta]).unwrap();
+            opt.step(&mut theta, &grads[0]);
         }
         assert_eq!(drv.theta(), theta.as_slice());
     }

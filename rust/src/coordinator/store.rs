@@ -1,0 +1,498 @@
+//! Contiguous gradient arena — the single backing store for the local
+//! gradient history (ISSUE 3 tentpole).
+//!
+//! ## Why
+//!
+//! The per-iteration loop around the kernelized estimator is memory-bound
+//! (ROADMAP north star; see also Bubeck et al.'s framing of parallel FOO
+//! as bounded by what each round must materialize): at D = 100k,
+//! T₀ = 256 the seed moved ~100 MB of gradient floats per sequential
+//! iteration through allocations and copies the algorithm never needed —
+//! one fresh `Vec` per `Eval`, a `VecDeque<Vec<f32>>` ring, and a full
+//! T₀×D flatten rebuild for the HLO estimation backend. This module
+//! replaces all of that with ONE flat allocation per run that every layer
+//! borrows.
+//!
+//! ## Layout
+//!
+//! ```text
+//!            physical slot:   0        1        2       ...   cap-1
+//!                           ┌────────┬────────┬────────┬─────┬────────┐
+//!   grads  (cap × d f32)    │ row 0  │ row 1  │ row 2  │ ... │        │
+//!                           ├────────┼────────┼────────┼─────┼────────┤
+//!   thetas (cap × dsub f32) │ row 0  │ row 1  │ row 2  │ ... │        │
+//!                           └────────┴────────┴────────┴─────┴────────┘
+//!                                ↑ head (physical slot of the OLDEST
+//!                                  logical row; logical row i lives at
+//!                                  slot (head + i) % cap)
+//! ```
+//!
+//! Both blocks are allocated once at construction and never reallocated.
+//! Eviction is O(1): dropping the oldest row is `head = (head+1) % cap` —
+//! no row ever moves, so a row's physical slot (and therefore every
+//! borrowed slice into it) is stable for its whole lifetime. The freed
+//! slot is exactly where the incoming row lands, which is what makes the
+//! zero-copy loan protocol below possible.
+//!
+//! ## Loan protocol (zero-copy fan-out)
+//!
+//! The driver's ground-truth phase writes gradients *straight into the
+//! slots their pushes will occupy*:
+//!
+//! 1. [`GradStore::loan`]`(k)` plans the next k pushes and reserves their
+//!    slots (the slot of push j is `(head + len + j) % cap` — a pure
+//!    progression, so k ≤ cap loans are always k distinct rows);
+//! 2. [`GradStore::loaned_rows_mut`] hands out the k disjoint `&mut [f32]`
+//!    rows for the (possibly threaded) `eval_batch` fan-out;
+//! 3. [`GradStore::commit_with`] turns each loan into a real push, in loan
+//!    order: ring bookkeeping plus the θ-subset gather into the θ block.
+//!    The gradient is already in place — zero bytes move.
+//!
+//! Borrow rules: while a loan is outstanding, logical reads
+//! ([`GradStore::grad_row`] / [`GradStore::theta_row`] / the flat views)
+//! are forbidden (debug-asserted) — when the ring is full, the loaned
+//! slots ARE the oldest logical rows, whose contents the fan-out is
+//! overwriting. Loaned rows themselves stay readable through
+//! [`GradStore::loaned_grad`] (the driver reads them for the optimizer
+//! steps and gradient norms before committing).
+//!
+//! Degenerate case k > cap (parallelism N > T₀): the first k − cap pushes
+//! are evicted within the same batch by pushes j + cap, whose loans reuse
+//! their slots. Those doomed pushes get lazily-grown scratch rows for the
+//! fan-out instead; their commits do ring bookkeeping only (the slot's
+//! gradient is owned by the colliding later push, which every doomed push
+//! has by construction). Only this path and the explicit copy entry
+//! points ([`GradStore::push_row`], checkpoint restore) ever memcpy
+//! gradient data — tracked by [`GradStore::bytes_copied`].
+//!
+//! ## Flat views (HLO path)
+//!
+//! When full, the arena itself is the (T₀ × D̃, T₀ × d) input pair the
+//! `gp_estimate` artifact wants: [`GradStore::flat_thetas`] /
+//! [`GradStore::flat_grads`] are plain borrows — the seed's per-iteration
+//! T₀×(D̃+d) flatten rebuild is gone entirely (better than dirty-row
+//! patching: zero rows copied). The rows appear in physical-slot order,
+//! i.e. ring-rotated rather than oldest-first; the GP posterior is
+//! invariant under any permutation applied consistently to the history
+//! and gradient blocks (K → PKPᵀ, k → Pk ⇒ w → Pw, μ = wᵀG unchanged),
+//! so only f32 summation order differs — within the tolerance the
+//! native-vs-HLO differential tests already allow.
+
+/// Flat ring of T₀ gradient rows (d wide) plus their θ-subset rows
+/// (dsub wide), backed by two contiguous, never-reallocated blocks.
+#[derive(Debug)]
+pub struct GradStore {
+    cap: usize,
+    d: usize,
+    dsub: usize,
+    /// cap × d gradient block.
+    grads: Vec<f32>,
+    /// cap × dsub θ-subset block.
+    thetas: Vec<f32>,
+    /// Physical slot of logical row 0 (the oldest).
+    head: usize,
+    /// Live rows (≤ cap).
+    len: usize,
+    /// Planned pushes of the outstanding loan (empty when none).
+    pending: Vec<Loan>,
+    /// Commit cursor into `pending`.
+    next_commit: usize,
+    /// Overflow rows for k > cap loans (doomed pushes); lazily grown.
+    scratch: Vec<f32>,
+    /// Debug counter: arena/scratch heap allocations (2 at construction;
+    /// steady state never adds more).
+    allocs: u64,
+    /// Debug counter: gradient bytes memcpy'd by the store. The loan
+    /// protocol moves zero bytes; only `push_row` (tests, checkpoint
+    /// restore) and k > cap scratch overflow are copy entry points.
+    bytes_copied: u64,
+}
+
+/// One planned push: its ring slot, plus a scratch row when the push is
+/// doomed to same-batch eviction (k > cap only).
+#[derive(Clone, Copy, Debug)]
+struct Loan {
+    slot: usize,
+    scratch_idx: Option<usize>,
+}
+
+impl GradStore {
+    /// `cap` = T₀ (≥ 1), `d` = gradient width, `dsub` = θ-subset width.
+    /// Allocates both blocks up front — the only unconditional
+    /// allocations this store ever performs.
+    pub fn new(cap: usize, d: usize, dsub: usize) -> GradStore {
+        assert!(cap >= 1, "GradStore capacity must be >= 1");
+        GradStore {
+            cap,
+            d,
+            dsub,
+            grads: vec![0.0; cap * d],
+            thetas: vec![0.0; cap * dsub],
+            head: 0,
+            len: 0,
+            pending: Vec::new(),
+            next_commit: 0,
+            scratch: Vec::new(),
+            allocs: 2,
+            bytes_copied: 0,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.len == self.cap
+    }
+
+    pub fn grad_dim(&self) -> usize {
+        self.d
+    }
+
+    pub fn theta_dim(&self) -> usize {
+        self.dsub
+    }
+
+    /// Arena/scratch heap allocations so far (2 = construction only).
+    pub fn allocs(&self) -> u64 {
+        self.allocs
+    }
+
+    /// Gradient bytes memcpy'd so far (0 on a pure loan/commit run).
+    pub fn bytes_copied(&self) -> u64 {
+        self.bytes_copied
+    }
+
+    fn loan_outstanding(&self) -> bool {
+        self.next_commit < self.pending.len()
+    }
+
+    /// Gradient row of logical index `i` (0 = oldest).
+    pub fn grad_row(&self, i: usize) -> &[f32] {
+        debug_assert!(!self.loan_outstanding(), "logical read during a loan");
+        assert!(i < self.len);
+        let s = (self.head + i) % self.cap;
+        &self.grads[s * self.d..(s + 1) * self.d]
+    }
+
+    /// θ-subset row of logical index `i` (0 = oldest).
+    pub fn theta_row(&self, i: usize) -> &[f32] {
+        debug_assert!(!self.loan_outstanding(), "logical read during a loan");
+        assert!(i < self.len);
+        let s = (self.head + i) % self.cap;
+        &self.thetas[s * self.dsub..(s + 1) * self.dsub]
+    }
+
+    /// The whole θ block in physical-slot (ring-rotated) order. Only
+    /// valid when full — every slot is then a live row. See the module
+    /// docs for why rotation is safe for the GP consumers.
+    pub fn flat_thetas(&self) -> &[f32] {
+        debug_assert!(!self.loan_outstanding(), "flat view during a loan");
+        assert!(self.is_full(), "flat view needs a full ring");
+        &self.thetas
+    }
+
+    /// The whole gradient block in physical-slot order (see
+    /// [`GradStore::flat_thetas`]).
+    pub fn flat_grads(&self) -> &[f32] {
+        debug_assert!(!self.loan_outstanding(), "flat view during a loan");
+        assert!(self.is_full(), "flat view needs a full ring");
+        &self.grads
+    }
+
+    /// Plan the next `k` pushes, reserving their target rows for the
+    /// fan-out. Must be fully committed (or [`GradStore::abandon_loan`]ed)
+    /// before any logical read or the next loan.
+    pub fn loan(&mut self, k: usize) {
+        assert!(!self.loan_outstanding(), "previous loan not fully committed");
+        self.pending.clear();
+        self.next_commit = 0;
+        let doomed = k.saturating_sub(self.cap);
+        if self.scratch.len() < doomed * self.d {
+            self.scratch.resize(doomed * self.d, 0.0);
+            self.allocs += 1;
+        }
+        for j in 0..k {
+            self.pending.push(Loan {
+                // push j lands at (head + len + j) % cap: while filling,
+                // slots extend past the newest row; once full, evictions
+                // advance head in lockstep so the progression continues.
+                slot: (self.head + self.len + j) % self.cap,
+                scratch_idx: (j < doomed).then_some(j),
+            });
+        }
+    }
+
+    /// Number of rows in the outstanding loan.
+    pub fn loan_len(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Read the `i`-th loaned row (valid from loan until the next loan;
+    /// the driver reads these for optimizer steps / gradient norms
+    /// between the fan-out and the commits).
+    pub fn loaned_grad(&self, i: usize) -> &[f32] {
+        let loan = self.pending[i];
+        match loan.scratch_idx {
+            Some(s) => &self.scratch[s * self.d..(s + 1) * self.d],
+            None => &self.grads[loan.slot * self.d..(loan.slot + 1) * self.d],
+        }
+    }
+
+    /// The loaned rows as disjoint mutable slices, in loan order — the
+    /// buffers `GradSource::eval_batch` writes into. The ring loans form
+    /// one contiguous slot range mod cap (the `(head+len+j) % cap`
+    /// progression), so the split is two `split_at_mut` segments plus
+    /// the scratch prefix — O(k), no per-slot bookkeeping; the returned
+    /// k-pointer row table is the loan path's only heap use (no
+    /// gradient-sized buffer is ever allocated or copied).
+    pub fn loaned_rows_mut(&mut self) -> Vec<&mut [f32]> {
+        assert_eq!(self.next_commit, 0, "loaned_rows_mut after a partial commit");
+        let d = self.d;
+        let k = self.pending.len();
+        let doomed = k.saturating_sub(self.cap);
+        let ring_n = k - doomed;
+        // first ring slot: (head + len + doomed) % cap by construction
+        let start = self.pending.get(doomed).map(|l| l.slot).unwrap_or(0);
+        debug_assert!(self.pending.iter().take(doomed).all(|l| l.scratch_idx.is_some()));
+        let mut out = Vec::with_capacity(k);
+        // doomed overflow rows first (loan order)
+        out.extend(self.scratch[..doomed * d].chunks_mut(d));
+        // ring segment from `start` up to the end of the arena...
+        let first_n = ring_n.min(self.cap - start);
+        let (front, tail) = self.grads.split_at_mut(start * d);
+        out.extend(tail[..first_n * d].chunks_mut(d));
+        // ...then the wrapped remainder from slot 0 (wrap ≤ start: the
+        // ring loans are ≤ cap distinct slots)
+        let wrap = ring_n - first_n;
+        out.extend(front[..wrap * d].chunks_mut(d));
+        debug_assert_eq!(out.len(), k);
+        out
+    }
+
+    /// Commit the next outstanding loan as a real push: ring bookkeeping
+    /// plus the θ row written by `fill_theta` (the subset gather). The
+    /// gradient is already in its slot — zero bytes move. Returns
+    /// `(appended_at, evicted_oldest)` in logical terms.
+    pub fn commit_with<F>(&mut self, fill_theta: F) -> (usize, bool)
+    where
+        F: FnOnce(&mut [f32]),
+    {
+        assert!(self.loan_outstanding(), "commit without an outstanding loan");
+        let loan = self.pending[self.next_commit];
+        self.next_commit += 1;
+        let evicted = self.len == self.cap;
+        if evicted {
+            debug_assert_eq!(loan.slot, self.head, "loan plan diverged from ring");
+            self.head = (self.head + 1) % self.cap;
+        } else {
+            debug_assert_eq!(loan.slot, (self.head + self.len) % self.cap);
+            self.len += 1;
+        }
+        fill_theta(&mut self.thetas[loan.slot * self.dsub..(loan.slot + 1) * self.dsub]);
+        // A doomed push's gradient stays in scratch: its slot is owned by
+        // the colliding push `j + cap` of this same batch, which already
+        // wrote the slot during the fan-out and commits after us — the
+        // doomed row is evicted before any logical read can see the slot.
+        (self.len - 1, evicted)
+    }
+
+    /// Drop an outstanding loan without committing (error-path cleanup —
+    /// e.g. the eval fan-out failed). Returns `true` when the abandoned
+    /// loan may have CLOBBERED live rows: uncommitted ring loans overlap
+    /// the oldest logical rows whenever they were planned as evictions
+    /// (`len + uncommitted > cap`), and the fan-out may have partially
+    /// written them before failing. The caller owns the consequence —
+    /// [`GradHistory::abandon_loan`] discards the (now unreliable)
+    /// history and bumps its epoch so mirrors rebuild instead of serving
+    /// corrupted gradients.
+    ///
+    /// [`GradHistory::abandon_loan`]: crate::coordinator::GradHistory::abandon_loan
+    pub fn abandon_loan(&mut self) -> bool {
+        let uncommitted = self.pending.len() - self.next_commit;
+        let clobbered = self.len + uncommitted > self.cap && uncommitted > 0;
+        self.pending.clear();
+        self.next_commit = 0;
+        clobbered
+    }
+
+    /// One-shot copying push (tests, benches, checkpoint restore — never
+    /// the driver hot path). `theta_row` is written via `fill_theta` like
+    /// [`GradStore::commit_with`]; the gradient is memcpy'd (counted).
+    pub fn push_row<F>(&mut self, grad: &[f32], fill_theta: F) -> (usize, bool)
+    where
+        F: FnOnce(&mut [f32]),
+    {
+        assert!(!self.loan_outstanding(), "push_row during a loan");
+        assert_eq!(grad.len(), self.d);
+        self.loan(1);
+        let loan = self.pending[0];
+        debug_assert!(loan.scratch_idx.is_none());
+        self.grads[loan.slot * self.d..(loan.slot + 1) * self.d].copy_from_slice(grad);
+        self.bytes_copied += (self.d * 4) as u64;
+        self.commit_with(fill_theta)
+    }
+
+    /// Forget every row (O(1): no data moves). The caller owns whatever
+    /// versioning (epoch bumps) mirrors need.
+    pub fn clear(&mut self) {
+        assert!(!self.loan_outstanding(), "clear during a loan");
+        self.head = 0;
+        self.len = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fill(store: &mut GradStore, tag: f32) -> (usize, bool) {
+        let d = store.grad_dim();
+        let dsub = store.theta_dim();
+        let grad = vec![tag; d];
+        store.push_row(&grad, |t| {
+            debug_assert_eq!(t.len(), dsub);
+            t.iter_mut().for_each(|x| *x = tag + 0.5);
+        })
+    }
+
+    #[test]
+    fn ring_evicts_oldest_without_moving_rows() {
+        let mut s = GradStore::new(3, 4, 2);
+        for i in 0..5 {
+            fill(&mut s, i as f32);
+        }
+        assert_eq!(s.len(), 3);
+        assert!(s.is_full());
+        // logical oldest-first = pushes 2, 3, 4
+        assert_eq!(s.grad_row(0)[0], 2.0);
+        assert_eq!(s.grad_row(2)[0], 4.0);
+        assert_eq!(s.theta_row(1)[0], 3.5);
+        // push 3 landed at slot 0 and never moved: flat view slot order
+        assert_eq!(s.flat_grads()[0], 3.0);
+    }
+
+    #[test]
+    fn loan_commit_is_zero_copy_and_stable() {
+        let mut s = GradStore::new(4, 8, 3);
+        for i in 0..4 {
+            fill(&mut s, i as f32);
+        }
+        let base_allocs = s.allocs();
+        let base_bytes = s.bytes_copied();
+        for round in 0..6 {
+            s.loan(2);
+            {
+                let rows = s.loaned_rows_mut();
+                assert_eq!(rows.len(), 2);
+                for (j, r) in rows.into_iter().enumerate() {
+                    r.iter_mut().for_each(|x| *x = 100.0 + (round * 2 + j) as f32);
+                }
+            }
+            assert_eq!(s.loaned_grad(0)[0], 100.0 + (round * 2) as f32);
+            s.commit_with(|t| t.iter_mut().for_each(|x| *x = 0.0));
+            s.commit_with(|t| t.iter_mut().for_each(|x| *x = 0.0));
+            // newest two logical rows are this round's writes
+            assert_eq!(s.grad_row(3)[0], 100.0 + (round * 2 + 1) as f32);
+            assert_eq!(s.grad_row(2)[0], 100.0 + (round * 2) as f32);
+        }
+        assert_eq!(s.allocs(), base_allocs, "steady-state loan must not allocate");
+        assert_eq!(s.bytes_copied(), base_bytes, "loan path must not memcpy");
+    }
+
+    #[test]
+    fn loan_larger_than_capacity_uses_scratch_for_doomed_rows() {
+        let mut s = GradStore::new(2, 4, 1);
+        fill(&mut s, 9.0);
+        s.loan(5); // 3 doomed + 2 surviving
+        {
+            let rows = s.loaned_rows_mut();
+            assert_eq!(rows.len(), 5);
+            for (j, r) in rows.into_iter().enumerate() {
+                r.iter_mut().for_each(|x| *x = j as f32);
+            }
+        }
+        for j in 0..5 {
+            assert_eq!(s.loaned_grad(j)[0], j as f32, "loan row {j}");
+            s.commit_with(|t| t.iter_mut().for_each(|x| *x = 0.0));
+        }
+        // only the last cap=2 pushes survive
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.grad_row(0)[0], 3.0);
+        assert_eq!(s.grad_row(1)[0], 4.0);
+    }
+
+    #[test]
+    fn flat_views_expose_the_whole_arena_when_full() {
+        let mut s = GradStore::new(2, 3, 2);
+        fill(&mut s, 1.0);
+        fill(&mut s, 2.0);
+        assert_eq!(s.flat_grads().len(), 2 * 3);
+        assert_eq!(s.flat_thetas().len(), 2 * 2);
+        fill(&mut s, 3.0); // wraps: slot 0 now holds push 3
+        assert_eq!(s.flat_grads()[..3], [3.0, 3.0, 3.0]);
+        assert_eq!(s.flat_grads()[3..], [2.0, 2.0, 2.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "full ring")]
+    fn flat_view_requires_full() {
+        let mut s = GradStore::new(3, 2, 1);
+        fill(&mut s, 1.0);
+        let _ = s.flat_grads();
+    }
+
+    #[test]
+    #[should_panic(expected = "not fully committed")]
+    fn double_loan_panics() {
+        let mut s = GradStore::new(2, 2, 1);
+        s.loan(1);
+        s.loan(1);
+    }
+
+    #[test]
+    fn abandon_loan_restores_invariants_and_reports_clobber() {
+        let mut s = GradStore::new(2, 2, 1);
+        fill(&mut s, 1.0);
+        // len 1 + loan 1 fits in cap 2: no live row was at risk
+        s.loan(1);
+        assert!(!s.abandon_loan());
+        assert_eq!(s.len(), 1);
+        // len 1 + loan 2 > cap 2: one loaned slot was a planned eviction
+        s.loan(2);
+        assert!(s.abandon_loan());
+        s.loan(1); // must not panic
+        s.commit_with(|_| {});
+        assert_eq!(s.len(), 2);
+    }
+
+    #[test]
+    fn clear_is_o1_and_resets_mapping() {
+        let mut s = GradStore::new(2, 2, 1);
+        for i in 0..3 {
+            fill(&mut s, i as f32);
+        }
+        s.clear();
+        assert!(s.is_empty());
+        fill(&mut s, 7.0);
+        assert_eq!(s.grad_row(0)[0], 7.0);
+        // after clear, rows restart at slot 0
+        assert_eq!(s.flat_grads_unchecked_slot0(), 7.0);
+    }
+
+    impl GradStore {
+        /// Test hook: first arena value regardless of fill level.
+        fn flat_grads_unchecked_slot0(&self) -> f32 {
+            self.grads[0]
+        }
+    }
+}

@@ -24,6 +24,12 @@
 //!   invalidation (history cleared/restored, more pushes than visible
 //!   rows), falls back to a full refit — the fast path is an
 //!   optimization, never a semantic fork.
+//!
+//! Neither engine owns history rows (ISSUE 3): fits and queries borrow
+//! the caller's subset-restricted views, which in the coordinator point
+//! straight into the contiguous `GradStore` arena — contiguous strided
+//! slices the pooled combine / kernel-vector / sqdist scans stream over
+//! without any per-iteration row clone.
 
 use crate::gp::cholesky::{self, chol_solve};
 use crate::gp::kernels::{self, Kernel};
@@ -73,6 +79,14 @@ pub struct GpConfig {
     /// the coordinator consults this; the one-shot [`estimate`]/
     /// [`weights`] helpers and [`FittedGp`] itself ignore it.
     pub fit: GpFit,
+    /// Periodic factor refresh for very long pinned-lengthscale rank-1
+    /// chains (`optex.gp_refresh_every`): every K factor-wanting syncs
+    /// the incremental engine refactorizes from its cached distances,
+    /// bounding accumulated up/downdate drift. 0 (default) = off —
+    /// bit-identical to the pre-policy behavior. No effect under the
+    /// median heuristic (which already refits every sync) or on the
+    /// reference engine.
+    pub refresh_every: usize,
     /// Native compute pool for the memory-bound loops (combine, kernel
     /// vectors, pairwise sqdist). Serial by default so standalone users
     /// keep the exact legacy path; the coordinator injects the shared
@@ -88,6 +102,7 @@ impl Default for GpConfig {
             lengthscale: None,
             sigma2: 0.0,
             fit: GpFit::Incremental,
+            refresh_every: 0,
             pool: NativePool::serial(),
         }
     }
@@ -129,7 +144,7 @@ pub fn weights(
         .lengthscale
         .unwrap_or_else(|| kernels::median_heuristic(hist_sub));
     let kvec = kernels::kernel_vector_pooled(&cfg.pool, cfg.kernel, ls, theta_sub, hist_sub);
-    let mut kmat = kernels::kernel_matrix(cfg.kernel, ls, hist_sub);
+    let mut kmat = kernels::kernel_matrix_pooled(&cfg.pool, cfg.kernel, ls, hist_sub);
     let lam = cfg.sigma2 + DIAG_JITTER;
     for i in 0..t {
         kmat[i * t + i] += lam;
@@ -223,14 +238,17 @@ fn combine_range(w: &[f64], grads: &[&[f32]], offset: usize, out: &mut [f32]) {
 /// sequential iteration (Algo. 1 line 3), then queried at each of the
 /// N−1 proxy points. Queries cost O(T₀² + T₀·(D̃ + d)) instead of
 /// refactorizing O(T₀³) every step.
+///
+/// Holds NO history rows of its own (ISSUE 3): queries borrow the
+/// caller's subset-restricted views — in the coordinator these point
+/// straight into the `GradStore` arena. The caller must pass the same
+/// window the fit saw (length-checked).
 pub struct FittedGp {
     /// Cholesky factor of (K + (σ²+jitter) I), row-major t×t.
     l: Vec<f64>,
     t: usize,
     kernel: Kernel,
     pub lengthscale: f64,
-    /// Owned copies of the subset-restricted history rows.
-    rows: Vec<Vec<f32>>,
     /// Compute pool for query-time combine / kernel-vector scans
     /// (inherited from the fitting [`GpConfig`]).
     pool: NativePool,
@@ -259,14 +277,7 @@ impl FittedGp {
         }
         crate::gp::cholesky::cholesky_in_place(&mut l, t)
             .expect("GP Gram matrix not SPD");
-        Some(FittedGp {
-            l,
-            t,
-            kernel: cfg.kernel,
-            lengthscale: ls,
-            rows: hist_sub.iter().map(|r| r.to_vec()).collect(),
-            pool: cfg.pool,
-        })
+        Some(FittedGp { l, t, kernel: cfg.kernel, lengthscale: ls, pool: cfg.pool })
     }
 
     pub fn len(&self) -> usize {
@@ -278,15 +289,22 @@ impl FittedGp {
     }
 
     /// μ_t(θ) into `out_mu`; returns the posterior variance ‖Σ²(θ)‖.
-    pub fn query(&self, theta_sub: &[f32], grads: &[&[f32]], out_mu: &mut [f32]) -> f64 {
+    /// `hist_sub` must be the window this posterior was fit on.
+    pub fn query(
+        &self,
+        theta_sub: &[f32],
+        hist_sub: &[&[f32]],
+        grads: &[&[f32]],
+        out_mu: &mut [f32],
+    ) -> f64 {
         debug_assert_eq!(grads.len(), self.t);
-        let rows: Vec<&[f32]> = self.rows.iter().map(|r| r.as_slice()).collect();
+        assert_eq!(hist_sub.len(), self.t, "query window != fitted window");
         let kvec = kernels::kernel_vector_pooled(
             &self.pool,
             self.kernel,
             self.lengthscale,
             theta_sub,
-            &rows,
+            hist_sub,
         );
         let w = solve_weights(&self.l, self.t, &kvec);
         combine_into_pooled(&self.pool, &w, grads, out_mu);
@@ -294,15 +312,16 @@ impl FittedGp {
     }
 
     /// Posterior weights w = (K+λI)⁻¹k(θ) for a query — the differential
-    /// surface the incremental path is tested against.
-    pub fn weights(&self, theta_sub: &[f32]) -> Weights {
-        let rows: Vec<&[f32]> = self.rows.iter().map(|r| r.as_slice()).collect();
+    /// surface the incremental path is tested against. `hist_sub` must be
+    /// the window this posterior was fit on.
+    pub fn weights(&self, theta_sub: &[f32], hist_sub: &[&[f32]]) -> Weights {
+        assert_eq!(hist_sub.len(), self.t, "query window != fitted window");
         let kvec = kernels::kernel_vector_pooled(
             &self.pool,
             self.kernel,
             self.lengthscale,
             theta_sub,
-            &rows,
+            hist_sub,
         );
         let w = solve_weights(&self.l, self.t, &kvec);
         Weights { w, kvec, lengthscale: self.lengthscale }
@@ -340,14 +359,22 @@ fn solve_weights(l: &[f64], t: usize, kvec: &[f64]) -> Vec<f64> {
 /// than the visible window trigger a full refit. The incremental state
 /// is therefore never serialized — a resumed run rebuilds it on the
 /// first sync.
+///
+/// Since ISSUE 3 the mirror owns NO history rows: every sync and query
+/// borrows the ring's current views (arena slices) and the per-sync
+/// delta is replayed as *all evictions first, then all appends* — the
+/// surviving-plus-incoming rows are exactly the borrowed window, so no
+/// private copy of an already-evicted row is ever needed. The final
+/// distance cache (and hence the median-heuristic fit) is bit-identical
+/// to the seed's interleaved order; the pinned-lengthscale factor takes
+/// the same number of rank-1 edits in a permuted order, staying within
+/// the ≤1e-8 exactness contract.
 pub struct IncrementalGp {
     cfg: GpConfig,
     cap: usize,
-    /// Owned subset-restricted rows, oldest first (ring mirror).
-    rows: Vec<Vec<f32>>,
-    /// Pairwise squared distances of `rows` (t×t, zero diagonal) —
-    /// maintained incrementally so even a full refit skips the
-    /// O(T₀²·D̃) distance recompute.
+    /// Pairwise squared distances of the mirrored window (t×t, zero
+    /// diagonal) — maintained incrementally so even a full refit skips
+    /// the O(T₀²·D̃) distance recompute.
     r2: Vec<f64>,
     /// Live Cholesky factor of K + (σ²+jitter)I.
     l: Vec<f64>,
@@ -363,7 +390,12 @@ pub struct IncrementalGp {
     rebuilds: u64,
     /// Rank-1 factor edits applied (appends + deletions).
     factor_ops: u64,
-    /// Rows/distances/lengthscale are ahead of the Cholesky factor
+    /// Periodic pinned-lengthscale factor refreshes performed
+    /// (`GpConfig::refresh_every`).
+    refreshes: u64,
+    /// Factor-wanting syncs since the last refresh.
+    syncs_since_refresh: u64,
+    /// Distances/lengthscale are ahead of the Cholesky factor
     /// (lengthscale-only syncs skip all factor work — the HLO estimation
     /// backend only reads `ls`). The next factor-wanting sync rebuilds
     /// `l` from the cached distances; queries assert against staleness.
@@ -378,7 +410,6 @@ impl IncrementalGp {
         IncrementalGp {
             cfg,
             cap,
-            rows: Vec::new(),
             r2: Vec::new(),
             l: Vec::new(),
             t: 0,
@@ -387,6 +418,8 @@ impl IncrementalGp {
             pushes: 0,
             rebuilds: 0,
             factor_ops: 0,
+            refreshes: 0,
+            syncs_since_refresh: 0,
             factor_stale: false,
         }
     }
@@ -415,6 +448,12 @@ impl IncrementalGp {
     /// Rank-1 factor edits applied so far.
     pub fn factor_ops(&self) -> u64 {
         self.factor_ops
+    }
+
+    /// Periodic pinned-lengthscale factor refreshes performed so far
+    /// (`GpConfig::refresh_every`; not counted as rebuild fallbacks).
+    pub fn refreshes(&self) -> u64 {
+        self.refreshes
     }
 
     /// Bring the fit in line with the history ring. `epoch` and
@@ -459,16 +498,27 @@ impl IncrementalGp {
             self.rebuild_from(hist_sub, want_factor);
         } else if delta > 0 {
             // `factor_live` goes false on the first NotSpd; structural
-            // state (rows, distances) keeps updating regardless. A stale
-            // factor can't take rank-1 edits — fall through to refactor.
+            // state (the distance cache) keeps updating regardless. A
+            // stale factor can't take rank-1 edits — fall through to
+            // refactor.
             let was_stale = self.factor_stale;
             let mut factor_live =
                 want_factor && !was_stale && self.cfg.lengthscale.is_some();
-            for row in &hist_sub[new_len - delta..] {
-                if self.t == self.cap {
-                    factor_live = self.evict_oldest(factor_live) && factor_live;
-                }
-                factor_live = self.append(row, factor_live) && factor_live;
+            // All evictions first, then all appends: after the deletes
+            // the mirror is exactly hist_sub[..new_len - delta], so every
+            // distance the appends need comes from the borrowed window —
+            // no private copy of an evicted row (which is already gone
+            // from the arena) is required. The final distance cache is
+            // identical to the seed's interleaved order bit-for-bit.
+            let evict = self.t + delta - new_len;
+            for _ in 0..evict {
+                factor_live = self.evict_oldest(factor_live) && factor_live;
+            }
+            for j in 0..delta {
+                let idx = new_len - delta + j;
+                factor_live =
+                    self.append(hist_sub[idx], &hist_sub[..idx], factor_live)
+                        && factor_live;
             }
             if self.cfg.lengthscale.is_none() {
                 // Median heuristic: the lengthscale moved with the
@@ -503,12 +553,38 @@ impl IncrementalGp {
         }
         self.epoch = epoch;
         self.pushes = total_pushed;
+        // Periodic factor refresh (ISSUE 3 satellite / ROADMAP GP
+        // follow-up): on pinned-lengthscale runs a very long rank-1
+        // up/downdate chain accumulates O(eps·chain) drift; every K
+        // factor-wanting syncs, refactorize from the cached distances —
+        // the exact factor the reference fit would produce on this
+        // window. Median-heuristic runs already refit every sync.
+        if want_factor
+            && self.cfg.refresh_every > 0
+            && self.cfg.lengthscale.is_some()
+            && self.t > 0
+        {
+            self.syncs_since_refresh += 1;
+            if self.syncs_since_refresh >= self.cfg.refresh_every as u64 {
+                // refactor() resets the countdown itself
+                self.refactor();
+                self.refreshes += 1;
+            }
+        }
     }
 
     /// μ_t(θ) into `out_mu`; returns the posterior variance ‖Σ²(θ)‖.
     /// Prior (zero mean, unit variance) on an empty mirror — the same
     /// contract as the reference path with no fitted posterior.
-    pub fn query(&self, theta_sub: &[f32], grads: &[&[f32]], out_mu: &mut [f32]) -> f64 {
+    /// `hist_sub` must be the window of the last sync (the mirror holds
+    /// no rows of its own — in the coordinator these are arena views).
+    pub fn query(
+        &self,
+        theta_sub: &[f32],
+        hist_sub: &[&[f32]],
+        grads: &[&[f32]],
+        out_mu: &mut [f32],
+    ) -> f64 {
         if self.t == 0 {
             out_mu.iter_mut().for_each(|x| *x = 0.0);
             return 1.0;
@@ -521,13 +597,13 @@ impl IncrementalGp {
             "IncrementalGp::query after a lengthscale-only sync; call sync() first"
         );
         debug_assert_eq!(grads.len(), self.t);
-        let rows: Vec<&[f32]> = self.rows.iter().map(|r| r.as_slice()).collect();
+        assert_eq!(hist_sub.len(), self.t, "query window != synced window");
         let kvec = kernels::kernel_vector_pooled(
             &self.cfg.pool,
             self.cfg.kernel,
             self.ls,
             theta_sub,
-            &rows,
+            hist_sub,
         );
         let w = solve_weights(&self.l, self.t, &kvec);
         combine_into_pooled(&self.cfg.pool, &w, grads, out_mu);
@@ -535,7 +611,8 @@ impl IncrementalGp {
     }
 
     /// Posterior weights w = (K+λI)⁻¹k(θ); `None` on an empty mirror.
-    pub fn weights(&self, theta_sub: &[f32]) -> Option<Weights> {
+    /// `hist_sub` must be the window of the last sync.
+    pub fn weights(&self, theta_sub: &[f32], hist_sub: &[&[f32]]) -> Option<Weights> {
         if self.t == 0 {
             return None;
         }
@@ -543,13 +620,13 @@ impl IncrementalGp {
             !self.factor_stale,
             "IncrementalGp::weights after a lengthscale-only sync; call sync() first"
         );
-        let rows: Vec<&[f32]> = self.rows.iter().map(|r| r.as_slice()).collect();
+        assert_eq!(hist_sub.len(), self.t, "query window != synced window");
         let kvec = kernels::kernel_vector_pooled(
             &self.cfg.pool,
             self.cfg.kernel,
             self.ls,
             theta_sub,
-            &rows,
+            hist_sub,
         );
         let w = solve_weights(&self.l, self.t, &kvec);
         Some(Weights { w, kvec, lengthscale: self.ls })
@@ -561,7 +638,6 @@ impl IncrementalGp {
     fn evict_oldest(&mut self, do_factor: bool) -> bool {
         debug_assert!(self.t > 0);
         let t = self.t;
-        self.rows.remove(0);
         sym_delete_first(&mut self.r2, t);
         self.t = t - 1;
         if do_factor {
@@ -572,17 +648,16 @@ impl IncrementalGp {
         }
     }
 
-    /// Append a row: one O(D̃) distance pass against the survivors, one
-    /// factor row-append. Returns whether the factor op succeeded (or
-    /// was skipped).
-    fn append(&mut self, row: &[f32], do_factor: bool) -> bool {
+    /// Append a row: one O(D̃) distance pass against the current mirror
+    /// rows (`prev_rows`, borrowed from the caller's window), one factor
+    /// row-append. Returns whether the factor op succeeded (or was
+    /// skipped).
+    fn append(&mut self, row: &[f32], prev_rows: &[&[f32]], do_factor: bool) -> bool {
         debug_assert!(self.t < self.cap);
+        debug_assert_eq!(prev_rows.len(), self.t);
         let t = self.t;
-        let views: Vec<&[f32]> = self.rows.iter().map(|r| r.as_slice()).collect();
-        let d2 = kernels::sqdist_row_pooled(&self.cfg.pool, row, &views);
-        drop(views);
+        let d2 = kernels::sqdist_row_pooled(&self.cfg.pool, row, prev_rows);
         sym_append(&mut self.r2, t, &d2);
-        self.rows.push(row.to_vec());
         self.t = t + 1;
         if do_factor {
             self.factor_ops += 1;
@@ -599,7 +674,6 @@ impl IncrementalGp {
 
     /// Full structural rebuild from the ring's rows (distances included).
     fn rebuild_from(&mut self, hist_sub: &[&[f32]], want_factor: bool) {
-        self.rows = hist_sub.iter().map(|r| r.to_vec()).collect();
         self.t = hist_sub.len();
         self.r2 = kernels::sqdist_matrix_pooled(&self.cfg.pool, hist_sub);
         self.ls = self
@@ -620,7 +694,11 @@ impl IncrementalGp {
 
     /// Gram from the cached distances + factorization: O(t³) but no
     /// O(t²·D̃) distance recompute. Same op sequence as [`FittedGp::fit`]
-    /// so identical inputs give a bit-identical factor.
+    /// so identical inputs give a bit-identical factor. Any refactor
+    /// yields a drift-free factor, so it also restarts the periodic
+    /// refresh countdown — a sync that already rebuilt (invalidation,
+    /// NotSpd fallback, stale catch-up) never pays a second O(t³)
+    /// factorization for the refresh policy.
     fn refactor(&mut self) {
         let t = self.t;
         let lam = self.cfg.sigma2 + DIAG_JITTER;
@@ -631,6 +709,7 @@ impl IncrementalGp {
             self.l[i * t + i] += lam;
         }
         cholesky::cholesky_in_place(&mut self.l, t).expect("GP Gram matrix not SPD");
+        self.syncs_since_refresh = 0;
     }
 }
 
@@ -785,8 +864,8 @@ mod tests {
         let mut rng = Rng::new(2);
         let q = rng.normal_vec(600);
         let (mut mu_a, mut mu_b) = (vec![0.0f32; 600], vec![0.0f32; 600]);
-        let va = a.query(&q, &grefs, &mut mu_a);
-        let vb = b.query(&q, &grefs, &mut mu_b);
+        let va = a.query(&q, &hrefs, &grefs, &mut mu_a);
+        let vb = b.query(&q, &hrefs, &grefs, &mut mu_b);
         assert_eq!(mu_a, mu_b);
         assert_eq!(va.to_bits(), vb.to_bits());
     }
@@ -814,7 +893,7 @@ mod tests {
         for _ in 0..4 {
             let q = rng.normal_vec(24);
             let mut mu_a = vec![0.0f32; 24];
-            let var_a = fitted.query(&q, &grefs, &mut mu_a);
+            let var_a = fitted.query(&q, &hrefs, &grefs, &mut mu_a);
             let mut mu_b = vec![0.0f32; 24];
             let est = estimate(&cfg, &q, &hrefs, &grefs, &mut mu_b);
             assert_eq!(mu_a, mu_b);
@@ -872,11 +951,44 @@ mod tests {
         let mut rng = Rng::new(5);
         for _ in 0..4 {
             let q = rng.normal_vec(12);
-            let wa = inc.weights(&q).unwrap();
-            let wb = fitted.weights(&q);
+            let wa = inc.weights(&q, &hrefs).unwrap();
+            let wb = fitted.weights(&q, &hrefs);
             for (a, b) in wa.w.iter().zip(&wb.w) {
                 assert!((a - b).abs() < 1e-8, "weights drift: {a} vs {b}");
             }
+        }
+    }
+
+    #[test]
+    fn periodic_refresh_pins_to_reference_and_counts() {
+        // gp_refresh_every (ISSUE 3 satellite): every K factor syncs the
+        // pinned-lengthscale factor is refactorized from the cached
+        // distances — afterwards it must BIT-match the reference factor,
+        // and the policy must neither fire when off nor count as a
+        // rebuild fallback.
+        let base = GpConfig {
+            kernel: Kernel::Matern52,
+            lengthscale: Some(2.0),
+            sigma2: 0.05,
+            ..GpConfig::default()
+        };
+        let off = drive_incremental(&base, 6, 10, 24, 2, 91).0;
+        assert_eq!(off.refreshes(), 0, "refresh must default off");
+        let on_cfg = GpConfig { refresh_every: 3, ..base.clone() };
+        let (on, window) = drive_incremental(&on_cfg, 6, 10, 24, 2, 91);
+        assert!(on.refreshes() > 0, "refresh never fired");
+        assert_eq!(on.rebuilds(), 0, "refresh must not count as a fallback");
+        let hrefs: Vec<&[f32]> = window.iter().map(|r| r.as_slice()).collect();
+        let fitted = FittedGp::fit(&base, &hrefs).unwrap();
+        // drive_incremental ends on a sync; with refresh_every=3 and 12
+        // syncs the last sync refreshed — factor bit-equal to reference
+        assert_eq!(on.l, fitted.l, "refreshed factor != reference factor");
+        let mut rng = Rng::new(13);
+        let q = rng.normal_vec(10);
+        let wa = on.weights(&q, &hrefs).unwrap();
+        let wb = off.weights(&q, &hrefs).unwrap();
+        for (a, b) in wa.w.iter().zip(&wb.w) {
+            assert!((a - b).abs() < 1e-8, "refresh-on vs refresh-off drift");
         }
     }
 
@@ -902,8 +1014,8 @@ mod tests {
             let q = rng.normal_vec(10);
             let mut mu_a = vec![0.0f32; 10];
             let mut mu_b = vec![0.0f32; 10];
-            let va = inc.query(&q, &grefs, &mut mu_a);
-            let vb = fitted.query(&q, &grefs, &mut mu_b);
+            let va = inc.query(&q, &hrefs, &grefs, &mut mu_a);
+            let vb = fitted.query(&q, &hrefs, &grefs, &mut mu_b);
             assert_eq!(mu_a, mu_b);
             assert_eq!(va, vb);
         }
@@ -915,9 +1027,9 @@ mod tests {
             GpConfig { lengthscale: Some(2.0), ..GpConfig::default() };
         let mut inc = IncrementalGp::new(cfg.clone(), 4);
         let mut mu = vec![1.0f32; 5];
-        assert_eq!(inc.query(&[0.0; 5], &[], &mut mu), 1.0);
+        assert_eq!(inc.query(&[0.0; 5], &[], &[], &mut mu), 1.0);
         assert!(mu.iter().all(|&x| x == 0.0));
-        assert!(inc.weights(&[0.0; 5]).is_none());
+        assert!(inc.weights(&[0.0; 5], &[]).is_none());
 
         let mut rng = Rng::new(1);
         let rows: Vec<Vec<f32>> = (0..3).map(|_| rng.normal_vec(5)).collect();
@@ -934,8 +1046,8 @@ mod tests {
         assert_eq!(inc.rebuilds(), before + 1);
         let fitted = FittedGp::fit(&cfg, &views2).unwrap();
         let q = rng.normal_vec(5);
-        let wa = inc.weights(&q).unwrap();
-        let wb = fitted.weights(&q);
+        let wa = inc.weights(&q, &views2).unwrap();
+        let wb = fitted.weights(&q, &views2);
         for (a, b) in wa.w.iter().zip(&wb.w) {
             assert!((a - b).abs() < 1e-10);
         }
@@ -982,8 +1094,8 @@ mod tests {
             assert_eq!(inc.rebuilds(), 0, "deferred maintenance is not a fallback");
             let fitted = FittedGp::fit(&cfg, &views).unwrap();
             let q = rng.normal_vec(6);
-            let wa = inc.weights(&q).unwrap();
-            let wb = fitted.weights(&q);
+            let wa = inc.weights(&q, &views).unwrap();
+            let wb = fitted.weights(&q, &views);
             for (a, b) in wa.w.iter().zip(&wb.w) {
                 assert!((a - b).abs() < 1e-10, "pinned={pinned:?}: {a} vs {b}");
             }
@@ -1030,8 +1142,8 @@ mod tests {
         assert_eq!(inc.rebuilds(), before + 1, "NotSpd must trigger a refit");
         let fitted = FittedGp::fit(&cfg, &views).unwrap();
         let q = rng.normal_vec(6);
-        let wa = inc.weights(&q).unwrap();
-        let wb = fitted.weights(&q);
+        let wa = inc.weights(&q, &views).unwrap();
+        let wb = fitted.weights(&q, &views);
         for (a, b) in wa.w.iter().zip(&wb.w) {
             assert!((a - b).abs() < 1e-10, "post-fallback drift: {a} vs {b}");
         }

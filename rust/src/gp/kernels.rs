@@ -207,6 +207,32 @@ pub fn sqdist_matrix_pooled(pool: &NativePool, rows: &[&[f32]]) -> Vec<f64> {
     r2
 }
 
+/// [`kernel_matrix`] with both the pairwise-distance scan and the
+/// elementwise kernel map chunked across the native compute pool
+/// (ROADMAP PR-2 follow-up: the one-shot helpers no longer bypass the
+/// pool). Every entry is `from_sqdist` of the same full-precision
+/// [`sqdist`] the serial path computes — reductions are never split —
+/// so the matrix is bit-identical to [`kernel_matrix`] at any thread
+/// count (asserted in `bench_estimation`).
+pub fn kernel_matrix_pooled(
+    pool: &NativePool,
+    kernel: Kernel,
+    ls: f64,
+    rows: &[&[f32]],
+) -> Vec<f64> {
+    let t = rows.len();
+    // Below the split point the scaffolding is pure overhead — take the
+    // direct serial path (identical values by construction).
+    if pool.is_serial() || t < 2 || t * (t - 1) / 2 < 2 * grain(rows[0].len()) {
+        return kernel_matrix(kernel, ls, rows);
+    }
+    let r2 = sqdist_matrix_pooled(pool, rows);
+    let mut k = vec![0.0f64; t * t];
+    // elementwise map; ~one exp() per entry => a few tens of touches
+    pool.fill_with(&mut k, grain(32), |idx| kernel.from_sqdist(r2[idx], ls));
+    k
+}
+
 /// Gram matrix K_t over history rows (dense, row-major t×t).
 pub fn kernel_matrix(kernel: Kernel, ls: f64, rows: &[&[f32]]) -> Vec<f64> {
     let t = rows.len();
@@ -332,6 +358,7 @@ mod tests {
             let q = rng.normal_vec(d);
             let kv = kernel_vector(Kernel::Matern52, 2.5, &q, &rows);
             let r2 = sqdist_matrix(&rows);
+            let km = kernel_matrix(Kernel::Matern52, 2.5, &rows);
             for threads in [1usize, 3, 8] {
                 let pool = NativePool::new(threads);
                 assert_eq!(
@@ -343,6 +370,11 @@ mod tests {
                     sqdist_matrix_pooled(&pool, &rows),
                     r2,
                     "r2 d={d} threads={threads}"
+                );
+                assert_eq!(
+                    kernel_matrix_pooled(&pool, Kernel::Matern52, 2.5, &rows),
+                    km,
+                    "kmat d={d} threads={threads}"
                 );
                 let row_scan: Vec<f64> = rows.iter().map(|r| sqdist(&q, r)).collect();
                 assert_eq!(

@@ -23,7 +23,8 @@ optex — OptEx: first-order optimization with approximately parallelized iterat
 USAGE:
   optex run  [--config FILE] [--workload W] [--method M] [--steps T]
              [--seed S] [--fit full|incremental] [--threads K]
-             [--checkpoint FILE] [--resume FILE] [--set key=value ...]
+             [--gp-refresh-every K] [--checkpoint FILE] [--resume FILE]
+             [--set key=value ...]
   optex fig  <2|3|4a|4b|6|6a..6d|7|8|9|10|kernels|estbound|nativehlo|all>
              [--seeds K] [--steps T] [--quick] [--out DIR] [--artifacts DIR]
   optex rl   --env <cartpole|mountaincar|acrobot> [--episodes E]
@@ -105,6 +106,9 @@ fn load_config(args: &Args) -> anyhow::Result<RunConfig> {
     }
     if let Some(k) = args.opt_usize("threads")? {
         cfg.apply_override(&format!("optex.threads={k}"))?;
+    }
+    if let Some(k) = args.opt_usize("gp-refresh-every")? {
+        cfg.apply_override(&format!("optex.gp_refresh_every={k}"))?;
     }
     if let Some(a) = args.opt("artifacts") {
         cfg.artifacts_dir = PathBuf::from(a);

@@ -91,6 +91,9 @@ impl Mlp {
 
     /// Backprop `dout = dL/dout` (batch × out_dim) into a flat gradient.
     /// `x` must be the same input batch `cache` was produced from.
+    /// `grad` may hold stale data — every element is overwritten (the
+    /// DQN fan-out hands this a loaned `GradStore` arena row, so the
+    /// gradient lands in the history with zero further copies).
     pub fn backward(
         &self,
         params: &[f32],

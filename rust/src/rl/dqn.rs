@@ -161,20 +161,25 @@ impl DqnSource {
         self.replay
             .borrow()
             .sample_into(self.batch, &mut self.rng, &mut self.buf);
-        td_grad(&self.mlp, &self.target, self.gamma, &self.buf, params)
+        let mut grad = vec![0.0f32; self.mlp.dim()];
+        let loss = td_grad(&self.mlp, &self.target, self.gamma, &self.buf, params, &mut grad);
+        (loss, grad)
     }
 }
 
-/// TD-loss gradient at `params` for one pre-sampled minibatch. Pure (no
-/// RNG, no replay access, shared reads only), so [`DqnSource::eval_batch`]
-/// can fan it out across the native compute pool.
+/// TD-loss gradient at `params` for one pre-sampled minibatch, written
+/// into `grad` (a d-sized row — typically a loaned `GradStore` arena
+/// slot; `Mlp::backward` overwrites every element). Pure (no RNG, no
+/// replay access, shared reads only), so [`DqnSource::eval_batch`] can
+/// fan it out across the native compute pool. Returns the TD loss.
 fn td_grad(
     mlp: &Mlp,
     target: &[f32],
     gamma: f32,
     batch: &Batch,
     params: &[f32],
-) -> (f64, Vec<f32>) {
+    grad: &mut [f32],
+) -> f64 {
     let b = batch.act.len();
     let n_act = mlp.out_dim;
     debug_assert_eq!(batch.obs.len(), b * mlp.in_dim);
@@ -195,9 +200,8 @@ fn td_grad(
         dout[i * n_act + a] = 2.0 * td / b as f32;
     }
     loss /= b as f64;
-    let mut grad = vec![0.0f32; mlp.dim()];
-    mlp.backward(params, &cache, &batch.obs, &dout, &mut grad);
-    (loss, grad)
+    mlp.backward(params, &cache, &batch.obs, &dout, grad);
+    loss
 }
 
 impl GradSource for DqnSource {
@@ -205,7 +209,12 @@ impl GradSource for DqnSource {
         self.mlp.dim()
     }
 
-    fn eval_batch(&mut self, points: &[&[f32]]) -> Result<Vec<Eval>> {
+    fn eval_batch(
+        &mut self,
+        points: &[&[f32]],
+        grads: &mut [&mut [f32]],
+    ) -> Result<Vec<Eval>> {
+        debug_assert_eq!(points.len(), grads.len());
         match &self.backend {
             QBackend::Native => {
                 let n = points.len();
@@ -227,10 +236,14 @@ impl GradSource for DqnSource {
                 let gamma = self.gamma;
                 let target = self.target.as_slice();
                 let bufs = &self.bufs;
-                Ok(pool.run_jobs(n, |i| {
+                // Each job owns its loaned output row; backprop writes the
+                // gradient in place (no per-eval alloc).
+                let rows: Vec<&mut [f32]> =
+                    grads.iter_mut().map(|g| &mut **g).collect();
+                Ok(pool.run_over(rows, |i, out| {
                     let t0 = Instant::now();
-                    let (loss, grad) = td_grad(&mlp, target, gamma, &bufs[i], points[i]);
-                    Eval { loss, grad, aux: None, elapsed: t0.elapsed() }
+                    let loss = td_grad(&mlp, target, gamma, &bufs[i], points[i], out);
+                    Eval { loss, aux: None, elapsed: t0.elapsed() }
                 }))
             }
             QBackend::Hlo { pool, artifact } => {
@@ -255,11 +268,19 @@ impl GradSource for DqnSource {
                 }
                 let results = pool.scatter(jobs)?;
                 let mut out = Vec::with_capacity(points.len());
-                for r in results {
+                for (r, dst) in results.into_iter().zip(grads.iter_mut()) {
                     let r = r?;
                     let loss = r.outputs[0][0] as f64;
-                    let grad = r.outputs[1].clone();
-                    out.push(Eval { loss, grad, aux: None, elapsed: r.elapsed });
+                    anyhow::ensure!(
+                        r.outputs[1].len() == dst.len(),
+                        "artifact {artifact} returned grad of {} dims, expected {}",
+                        r.outputs[1].len(),
+                        dst.len()
+                    );
+                    // one copy across the PJRT boundary (the clone the
+                    // seed paid on top of it is gone)
+                    dst.copy_from_slice(&r.outputs[1]);
+                    out.push(Eval { loss, aux: None, elapsed: r.elapsed });
                 }
                 Ok(out)
             }

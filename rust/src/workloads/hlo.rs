@@ -173,7 +173,12 @@ impl GradSource for HloSource {
         self.d
     }
 
-    fn eval_batch(&mut self, points: &[&[f32]]) -> Result<Vec<Eval>> {
+    fn eval_batch(
+        &mut self,
+        points: &[&[f32]],
+        grads: &mut [&mut [f32]],
+    ) -> Result<Vec<Eval>> {
+        debug_assert_eq!(points.len(), grads.len());
         // Sample all minibatches up front (provider RNG stays sequential
         // and reproducible), then scatter over the pool.
         let jobs: Vec<(&str, Vec<TensorData>)> = points
@@ -182,10 +187,10 @@ impl GradSource for HloSource {
             .collect();
         let results = self.pool.scatter(jobs)?;
         let mut evals = Vec::with_capacity(points.len());
-        for r in results {
+        for (r, out) in results.into_iter().zip(grads.iter_mut()) {
             let r = r?;
             let elapsed = r.elapsed;
-            let (loss, mut grad, aux) = self.provider.parse(r.outputs)?;
+            let (loss, grad, aux) = self.provider.parse(r.outputs)?;
             if grad.len() != self.d {
                 return Err(anyhow!(
                     "artifact {} returned grad of {} dims, expected {}",
@@ -194,13 +199,17 @@ impl GradSource for HloSource {
                     self.d
                 ));
             }
+            // One copy across the PJRT output boundary, straight into the
+            // caller's row; noise (Assump. 1) is fused into the same pass.
             if self.noise_std > 0.0 {
                 let s = self.noise_std as f32;
-                for g in &mut grad {
-                    *g += self.noise_rng.normal() as f32 * s;
+                for (o, &g) in out.iter_mut().zip(&grad) {
+                    *o = g + self.noise_rng.normal() as f32 * s;
                 }
+            } else {
+                out.copy_from_slice(&grad);
             }
-            evals.push(Eval { loss, grad, aux, elapsed });
+            evals.push(Eval { loss, aux, elapsed });
         }
         Ok(evals)
     }

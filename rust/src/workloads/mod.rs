@@ -8,6 +8,12 @@
 //!     sweeps and as the oracle the HLO path is validated against,
 //!   * AOT HLO artifacts through the PJRT worker pool (`hlo.rs`) — the
 //!     production request path.
+//!
+//! Gradients are written into CALLER-OWNED rows (ISSUE 3): the
+//! coordinator loans the `eval_batch` fan-out the exact `GradStore` arena
+//! slots its pushes will occupy, so the ground-truth phase performs no
+//! per-`Eval` allocation and no gradient copy. [`Eval`] carries only the
+//! scalar results.
 
 pub mod factory;
 pub mod hlo;
@@ -21,13 +27,13 @@ use crate::runtime::NativePool;
 use crate::util::Rng;
 use synthetic::SynthFn;
 
-/// One ground-truth gradient evaluation ∇f(θ) (paper Algo. 1 line 7).
+/// Scalar results of one ground-truth gradient evaluation ∇f(θ) (paper
+/// Algo. 1 line 7). The gradient itself lands in the caller's output row
+/// — see [`GradSource::eval_batch`].
 #[derive(Clone, Debug)]
 pub struct Eval {
     /// Sampled loss f(θ) (== F(θ) for deterministic workloads).
     pub loss: f64,
-    /// ∇f(θ), full dimension.
-    pub grad: Vec<f32>,
     /// Task metric (classifier accuracy, etc.), when the workload has one.
     pub aux: Option<f64>,
     /// Wall time of this single evaluation (feeds the modeled parallel
@@ -41,9 +47,33 @@ pub trait GradSource {
     fn dim(&self) -> usize;
 
     /// Evaluate ground-truth gradients at each point — the Algo-1 line-6
-    /// fan-out. One `Eval` per point, in order. Implementations run the
-    /// points concurrently where the backend supports it.
-    fn eval_batch(&mut self, points: &[&[f32]]) -> Result<Vec<Eval>>;
+    /// fan-out. `grads[i]` (a d-sized row, typically a loaned `GradStore`
+    /// arena slot) receives ∇f(points[i]); one `Eval` of scalars per
+    /// point, in order. Rows may hold stale data — implementations
+    /// overwrite every element. Implementations run the points
+    /// concurrently where the backend supports it.
+    fn eval_batch(
+        &mut self,
+        points: &[&[f32]],
+        grads: &mut [&mut [f32]],
+    ) -> Result<Vec<Eval>>;
+
+    /// Allocating convenience wrapper around [`GradSource::eval_batch`]:
+    /// one owned gradient row per point. For tests, benches and one-shot
+    /// callers — the driver hot path loans arena rows instead.
+    fn eval_batch_owned(
+        &mut self,
+        points: &[&[f32]],
+    ) -> Result<(Vec<Eval>, Vec<Vec<f32>>)> {
+        let d = self.dim();
+        let mut bufs: Vec<Vec<f32>> = points.iter().map(|_| vec![0.0; d]).collect();
+        let evals = {
+            let mut rows: Vec<&mut [f32]> =
+                bufs.iter_mut().map(|b| b.as_mut_slice()).collect();
+            self.eval_batch(points, &mut rows)?
+        };
+        Ok((evals, bufs))
+    }
 
     /// F(θ) only (used for optimality-gap logging on synthetic runs;
     /// stochastic workloads return a fresh sample of f(θ)).
@@ -96,8 +126,13 @@ impl GradSource for NativeSynth {
         self.d
     }
 
-    fn eval_batch(&mut self, points: &[&[f32]]) -> Result<Vec<Eval>> {
+    fn eval_batch(
+        &mut self,
+        points: &[&[f32]],
+        grads: &mut [&mut [f32]],
+    ) -> Result<Vec<Eval>> {
         let n = points.len();
+        debug_assert_eq!(n, grads.len());
         // Fork one noise stream per point BEFORE dispatch, on the caller
         // thread in point order: workers never touch the shared RNG, so
         // the trajectory is bit-identical at any thread count (and the
@@ -115,16 +150,22 @@ impl GradSource for NativeSynth {
         let f = self.f;
         let d = self.d;
         let s = self.noise_std as f32;
-        Ok(pool.run_over(streams, |i, stream| {
+        // Each job owns its (noise stream, output row) pair; the rows are
+        // disjoint loaned slots, written in place — no per-eval alloc.
+        let jobs: Vec<(Option<Rng>, &mut [f32])> = streams
+            .into_iter()
+            .zip(grads.iter_mut().map(|g| &mut **g))
+            .collect();
+        Ok(pool.run_over(jobs, |i, (stream, out)| {
             let t0 = Instant::now();
-            let mut grad = vec![0.0f32; d];
-            let loss = f.value_and_grad(points[i], &mut grad);
+            debug_assert_eq!(out.len(), d);
+            let loss = f.value_and_grad(points[i], out);
             if let Some(mut rng) = stream {
-                for g in &mut grad {
+                for g in out.iter_mut() {
                     *g += rng.normal() as f32 * s;
                 }
             }
-            Eval { loss, grad, aux: None, elapsed: t0.elapsed() }
+            Eval { loss, aux: None, elapsed: t0.elapsed() }
         }))
     }
 
@@ -160,24 +201,35 @@ mod tests {
     fn native_synth_eval_matches_direct() {
         let mut src = NativeSynth::new(SynthFn::Sphere, 32, 0.0, 0);
         let p = vec![2.0f32; 32];
-        let evals = src.eval_batch(&[&p, &p]).unwrap();
+        let (evals, grads) = src.eval_batch_owned(&[&p, &p]).unwrap();
         assert_eq!(evals.len(), 2);
         assert!((evals[0].loss - 2.0).abs() < 1e-5);
-        assert_eq!(evals[0].grad.len(), 32);
+        assert_eq!(grads[0].len(), 32);
         // deterministic: both points identical
-        assert_eq!(evals[0].grad, evals[1].grad);
+        assert_eq!(grads[0], grads[1]);
         assert!((src.value(&p).unwrap() - 2.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn eval_batch_overwrites_stale_row_contents() {
+        // Loaned arena slots arrive dirty; every element must be written.
+        let mut src = NativeSynth::new(SynthFn::Ackley, 64, 0.0, 0);
+        let p = vec![1.5f32; 64];
+        let (_, clean) = src.eval_batch_owned(&[&p]).unwrap();
+        let mut dirty = vec![f32::NAN; 64];
+        let mut rows: Vec<&mut [f32]> = vec![dirty.as_mut_slice()];
+        src.eval_batch(&[&p], &mut rows).unwrap();
+        assert_eq!(dirty, clean[0], "stale row data leaked through");
     }
 
     #[test]
     fn noise_perturbs_gradients_with_right_scale() {
         let mut src = NativeSynth::new(SynthFn::Sphere, 2000, 0.5, 1);
         let p = vec![1.0f32; 2000];
-        let evals = src.eval_batch(&[&p, &p]).unwrap();
-        let diffs: Vec<f64> = evals[0]
-            .grad
+        let (_, grads) = src.eval_batch_owned(&[&p, &p]).unwrap();
+        let diffs: Vec<f64> = grads[0]
             .iter()
-            .zip(&evals[1].grad)
+            .zip(&grads[1])
             .map(|(&a, &b)| (a - b) as f64)
             .collect();
         let var = diffs.iter().map(|d| d * d).sum::<f64>() / diffs.len() as f64;
@@ -196,17 +248,17 @@ mod tests {
         let mut serial = NativeSynth::new(SynthFn::Ackley, d, 0.3, 42);
         let mut threaded = NativeSynth::new(SynthFn::Ackley, d, 0.3, 42);
         threaded.set_compute_pool(NativePool::new(8));
-        let a = serial.eval_batch(&points).unwrap();
-        let b = threaded.eval_batch(&points).unwrap();
-        for (x, y) in a.iter().zip(&b) {
-            assert_eq!(x.grad, y.grad, "noise stream depends on thread count");
+        let (ea, ga) = serial.eval_batch_owned(&points).unwrap();
+        let (eb, gb) = threaded.eval_batch_owned(&points).unwrap();
+        for ((x, y), (gx, gy)) in ea.iter().zip(&eb).zip(ga.iter().zip(&gb)) {
+            assert_eq!(gx, gy, "noise stream depends on thread count");
             assert_eq!(x.loss.to_bits(), y.loss.to_bits());
         }
         // per-point streams are independent: same input, different noise
-        assert_ne!(a[0].grad, a[1].grad);
+        assert_ne!(ga[0], ga[1]);
         // the master stream advances between batches
-        let c = serial.eval_batch(&points).unwrap();
-        assert_ne!(a[0].grad, c[0].grad);
+        let (_, gc) = serial.eval_batch_owned(&points).unwrap();
+        assert_ne!(ga[0], gc[0]);
     }
 
     #[test]

@@ -78,13 +78,79 @@ fn vanilla_is_bit_exact_for_all_optimizers() {
         let mut opt = cfg.optimizer.build(d);
         let mut losses = Vec::new();
         for _ in 0..steps {
-            let e = src.eval_batch(&[&theta]).unwrap().pop().unwrap();
-            losses.push(e.loss);
-            opt.step(&mut theta, &e.grad);
+            let (evals, grads) = src.eval_batch_owned(&[&theta]).unwrap();
+            losses.push(evals[0].loss);
+            opt.step(&mut theta, &grads[0]);
         }
         assert_eq!(drv.theta(), theta.as_slice(), "{name}: θ diverged");
         assert_eq!(rec.loss_series(), losses, "{name}: loss series diverged");
     }
+}
+
+/// ISSUE 3 acceptance: once the ring is warm, a sequential iteration
+/// allocates ZERO gradient-sized buffers and memcpys ZERO gradient bytes
+/// — the eval fan-out writes loaned `GradStore` arena rows in place and
+/// commits are pure bookkeeping + θ-subset gathers (the only heap use on
+/// the loan path is the k-pointer row table). The arena's debug counters
+/// are the contract.
+#[test]
+fn steady_state_iterations_neither_allocate_nor_copy_gradients() {
+    for method in [Method::Optex, Method::Vanilla] {
+        let mut cfg = RunConfig::default();
+        cfg.workload = "ackley".into();
+        cfg.method = method;
+        cfg.steps = 1;
+        cfg.seed = 5;
+        cfg.synth_dim = 512;
+        cfg.noise_std = 0.1;
+        cfg.optimizer = OptSpec::parse("adam", 0.05).unwrap();
+        cfg.optex.parallelism = 4;
+        cfg.optex.t0 = 8;
+        let mut drv = native_driver(&cfg);
+        // warm up past ring fill (t0/N = 2 iterations) with margin
+        for t in 1..=4 {
+            drv.iteration(t).unwrap();
+        }
+        let allocs = drv.history().store_allocs();
+        let copied = drv.history().grad_bytes_copied();
+        assert_eq!(allocs, 2, "{method:?}: arena must be the only allocation");
+        assert_eq!(copied, 0, "{method:?}: gradient bytes were memcpy'd");
+        for t in 5..=12 {
+            drv.iteration(t).unwrap();
+        }
+        assert_eq!(
+            drv.history().store_allocs(),
+            allocs,
+            "{method:?}: steady-state iteration allocated on the gradient path"
+        );
+        assert_eq!(
+            drv.history().grad_bytes_copied(),
+            copied,
+            "{method:?}: steady-state iteration copied gradient bytes"
+        );
+    }
+}
+
+/// N > T₀ (more parallel evals than history rows) exercises the store's
+/// scratch-overflow loans; the trajectory must still be well-formed and
+/// the ring must hold the last T₀ gradients.
+#[test]
+fn parallelism_larger_than_history_window_runs() {
+    let mut cfg = RunConfig::default();
+    cfg.workload = "sphere".into();
+    cfg.method = Method::Optex;
+    cfg.steps = 6;
+    cfg.seed = 9;
+    cfg.synth_dim = 64;
+    cfg.optimizer = OptSpec::parse("sgd", 0.05).unwrap();
+    cfg.optex.parallelism = 5;
+    cfg.optex.t0 = 2;
+    let mut drv = native_driver(&cfg);
+    let rec = drv.run().unwrap();
+    assert_eq!(rec.rows.len(), 6);
+    assert!(rec.best_loss().is_finite());
+    assert_eq!(drv.history().len(), 2);
+    assert_eq!(drv.history().total_pushed(), 30);
 }
 
 /// Checkpoint roundtrip (ISSUE 1 satellite): save mid-run, reload into a
@@ -280,21 +346,21 @@ fn qnet_hlo_gradients_match_native_mlp() {
 
     let mut native = DqnSource::native(mlp, mk_replay(), batch, gamma, 10, 7);
     native.on_iteration(1, &params);
-    let ne = native.eval_batch(&[&params]).unwrap().pop().unwrap();
+    let (ne, ng) = native.eval_batch_owned(&[&params]).unwrap();
 
     let mlp2 = Mlp::new(obs_dim, hidden, n_act);
     let mut hlo =
         DqnSource::hlo(dir, "test", 1, mlp2, mk_replay(), gamma, 10, 7).unwrap();
     hlo.on_iteration(1, &params);
-    let he = hlo.eval_batch(&[&params]).unwrap().pop().unwrap();
+    let (he, hg) = hlo.eval_batch_owned(&[&params]).unwrap();
 
     assert!(
-        (ne.loss - he.loss).abs() < 1e-3 * (1.0 + ne.loss.abs()),
+        (ne[0].loss - he[0].loss).abs() < 1e-3 * (1.0 + ne[0].loss.abs()),
         "loss: native={} hlo={}",
-        ne.loss,
-        he.loss
+        ne[0].loss,
+        he[0].loss
     );
-    for (i, (a, b)) in ne.grad.iter().zip(&he.grad).enumerate() {
+    for (i, (a, b)) in ng[0].iter().zip(&hg[0]).enumerate() {
         assert!(
             (a - b).abs() < 1e-3 * (1.0 + b.abs()),
             "grad[{i}]: native={a} hlo={b}"

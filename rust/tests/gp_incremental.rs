@@ -137,7 +137,7 @@ fn drive(
         for _ in 0..1 + rng.below(4) {
             let theta = rng.normal_vec(d);
             let grad = rng.normal_vec(d);
-            history.push(&theta, grad.clone());
+            history.push(&theta, &grad);
             grads.push(grad);
             if grads.len() > cap {
                 grads.remove(0);
@@ -168,8 +168,8 @@ fn prop_incremental_posterior_weights_match_reference() {
         let grefs: Vec<&[f32]> = grads.iter().map(|g| g.as_slice()).collect();
         for _ in 0..3 {
             let q = rng.normal_vec(d);
-            let wa = inc.weights(&q).ok_or("no incremental weights")?;
-            let wb = fitted.weights(&q);
+            let wa = inc.weights(&q, &hviews).ok_or("no incremental weights")?;
+            let wb = fitted.weights(&q, &hviews);
             for (i, (a, b)) in wa.w.iter().zip(&wb.w).enumerate() {
                 prop_assert!(
                     (a - b).abs() <= 1e-8,
@@ -178,8 +178,8 @@ fn prop_incremental_posterior_weights_match_reference() {
             }
             let mut mu_a = vec![0.0f32; d];
             let mut mu_b = vec![0.0f32; d];
-            let va = inc.query(&q, &grefs, &mut mu_a);
-            let vb = fitted.query(&q, &grefs, &mut mu_b);
+            let va = inc.query(&q, &hviews, &grefs, &mut mu_a);
+            let vb = fitted.query(&q, &hviews, &grefs, &mut mu_b);
             prop_assert!((va - vb).abs() <= 1e-8, "var: inc={va} ref={vb}");
             for (i, (a, b)) in mu_a.iter().zip(&mu_b).enumerate() {
                 prop_assert!(
@@ -187,6 +187,51 @@ fn prop_incremental_posterior_weights_match_reference() {
                     "mu[{i}]: inc={a} ref={b}"
                 );
             }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_periodic_refresh_matches_refresh_off() {
+    // gp_refresh_every (ISSUE 3 satellite, ROADMAP GP follow-up): the
+    // periodic pinned-lengthscale factor refresh must be invisible to
+    // ≤1e-8 — same posterior weights as an identically-driven mirror
+    // with the policy off, both ≤1e-8 from the reference fit.
+    check_cases("refresh_differential", EXACTNESS_CASES, |rng| {
+        let cap = 2 + rng.below(7);
+        let d = 2 + rng.below(10);
+        let base = GpConfig {
+            kernel: Kernel::ALL[rng.below(4)],
+            lengthscale: Some(rng.range(0.5, 4.0)),
+            sigma2: rng.range(0.0, 0.2),
+            ..GpConfig::default()
+        };
+        let on_cfg = GpConfig { refresh_every: 1 + rng.below(4), ..base.clone() };
+        let mut history = GradHistory::new(cap, DimSubset::full(d));
+        let mut off = IncrementalGp::new(base.clone(), cap);
+        let mut on = IncrementalGp::new(on_cfg, cap);
+        // ≥6 syncs so even refresh_every = 4 fires at least once
+        for _ in 0..6 + rng.below(3) {
+            for _ in 0..1 + rng.below(3) {
+                let theta = rng.normal_vec(d);
+                history.push(&theta, &rng.normal_vec(d));
+            }
+            let (hviews, _) = history.views();
+            off.sync(history.epoch(), history.total_pushed(), &hviews);
+            on.sync(history.epoch(), history.total_pushed(), &hviews);
+        }
+        prop_assert!(on.refreshes() > 0, "refresh policy never fired");
+        prop_assert!(on.rebuilds() == off.rebuilds(), "refresh counted as fallback");
+        let (hviews, _) = history.views();
+        let fitted = FittedGp::fit(&base, &hviews).ok_or("empty history")?;
+        let q = rng.normal_vec(d);
+        let wa = on.weights(&q, &hviews).ok_or("no weights (on)")?;
+        let wb = off.weights(&q, &hviews).ok_or("no weights (off)")?;
+        let wr = fitted.weights(&q, &hviews);
+        for (i, ((a, b), r)) in wa.w.iter().zip(&wb.w).zip(&wr.w).enumerate() {
+            prop_assert!((a - b).abs() <= 1e-8, "on/off w[{i}]: {a} vs {b}");
+            prop_assert!((a - r).abs() <= 1e-8, "on/ref w[{i}]: {a} vs {r}");
         }
         Ok(())
     });
@@ -219,8 +264,8 @@ fn prop_incremental_heuristic_mode_is_bit_identical() {
         let q = rng.normal_vec(d);
         let mut mu_a = vec![0.0f32; d];
         let mut mu_b = vec![0.0f32; d];
-        let va = inc.query(&q, &grefs, &mut mu_a);
-        let vb = fitted.query(&q, &grefs, &mut mu_b);
+        let va = inc.query(&q, &hviews, &grefs, &mut mu_a);
+        let vb = fitted.query(&q, &hviews, &grefs, &mut mu_b);
         prop_assert!(va == vb, "var not bitwise: {va} vs {vb}");
         prop_assert!(mu_a == mu_b, "mu not bitwise");
         Ok(())
@@ -245,7 +290,7 @@ fn prop_clear_and_burst_invalidation_recover_exactly() {
         // burst: more pushes than the window holds between syncs
         for _ in 0..cap + 1 + rng.below(4) {
             let theta = rng.normal_vec(d);
-            history.push(&theta, rng.normal_vec(d));
+            history.push(&theta, &rng.normal_vec(d));
         }
         let before = inc.rebuilds();
         let (hviews, _) = history.views();
@@ -253,8 +298,8 @@ fn prop_clear_and_burst_invalidation_recover_exactly() {
         prop_assert!(inc.rebuilds() == before + 1, "invalidation must rebuild");
         let fitted = FittedGp::fit(&cfg, &hviews).ok_or("empty history")?;
         let q = rng.normal_vec(d);
-        let wa = inc.weights(&q).ok_or("no weights")?;
-        let wb = fitted.weights(&q);
+        let wa = inc.weights(&q, &hviews).ok_or("no weights")?;
+        let wb = fitted.weights(&q, &hviews);
         for (a, b) in wa.w.iter().zip(&wb.w) {
             prop_assert!((a - b).abs() <= 1e-10, "post-rebuild drift: {a} vs {b}");
         }

@@ -126,7 +126,7 @@ fn prop_history_fifo_and_capacity() {
         let mut h = GradHistory::new(cap, DimSubset::full(d));
         let total = rng.below(20);
         for i in 0..total {
-            h.push(&vec![i as f32; d], vec![i as f32; d]);
+            h.push(&vec![i as f32; d], &vec![i as f32; d]);
             prop_assert!(h.len() <= cap, "over capacity");
         }
         prop_assert!(h.len() == total.min(cap), "len {}", h.len());
@@ -391,9 +391,9 @@ fn prop_vanilla_matches_manual_replay() {
         let mut opt = c.optimizer.build(c.synth_dim);
         let mut losses = Vec::new();
         for _ in 0..c.steps {
-            let e = src.eval_batch(&[&theta]).unwrap().pop().unwrap();
-            losses.push(e.loss);
-            opt.step(&mut theta, &e.grad);
+            let (evals, grads) = src.eval_batch_owned(&[&theta]).unwrap();
+            losses.push(evals[0].loss);
+            opt.step(&mut theta, &grads[0]);
         }
         let got = rec.loss_series();
         prop_assert!(
