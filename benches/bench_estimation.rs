@@ -13,12 +13,18 @@
 //! combine ns/elem, eval fan-out speedup) so the perf trajectory is
 //! tracked across PRs; CI uploads it as an artifact.
 
+use std::time::Instant;
+
 use optex::bench::{bench, bench_throughput, black_box, BenchResult};
+use optex::config::RunConfig;
 use optex::coordinator::GradHistory;
 use optex::gp::estimator::{combine_into, combine_into_pooled, FittedGp};
 use optex::gp::kernels::{kernel_matrix, kernel_matrix_pooled};
 use optex::gp::{DimSubset, GpConfig, IncrementalGp, Kernel};
+use optex::opt::OptSpec;
 use optex::runtime::NativePool;
+use optex::serve::{Budget, Policy, Scheduler, SessionState};
+use optex::util::stats;
 use optex::util::Rng;
 use optex::workloads::synthetic::SynthFn;
 use optex::workloads::{GradSource, NativeSynth};
@@ -33,8 +39,10 @@ fn json_escape_free(s: &str) -> bool {
     s.chars().all(|c| c.is_ascii_alphanumeric() || "_-./ ".contains(c))
 }
 
-fn write_bench_json(rows: &[JsonRow]) {
-    let mut out = String::from("{\n  \"pr\": 3,\n  \"bench\": \"bench_estimation\",\n  \"rows\": [\n");
+fn write_bench_json(path: &str, pr: usize, rows: &[JsonRow]) {
+    let mut out = format!(
+        "{{\n  \"pr\": {pr},\n  \"bench\": \"bench_estimation\",\n  \"rows\": [\n"
+    );
     for (i, r) in rows.iter().enumerate() {
         assert!(json_escape_free(r.section));
         out.push_str(&format!("    {{\"section\": \"{}\"", r.section));
@@ -53,8 +61,81 @@ fn write_bench_json(rows: &[JsonRow]) {
         out.push('\n');
     }
     out.push_str("  ]\n}\n");
-    std::fs::write("BENCH_3.json", &out).expect("writing BENCH_3.json");
-    println!("\nwrote BENCH_3.json ({} rows)", rows.len());
+    std::fs::write(path, &out).unwrap_or_else(|e| panic!("writing {path}: {e}"));
+    println!("\nwrote {path} ({} rows)", rows.len());
+}
+
+/// ISSUE-4 acceptance grid: K ∈ {1, 8, 64} concurrent synthetic
+/// sessions over one scheduler — aggregate steps/sec and submit→result
+/// latency percentiles, with the steady-state zero-alloc/zero-copy
+/// arena counters asserted PER SESSION at every K.
+fn serve_throughput_grid(rows: &mut Vec<JsonRow>) {
+    println!("\n# serve: K-session throughput over one shared scheduler");
+    let steps = 30usize;
+    let d = 2_000usize;
+    for k in [1usize, 8, 64] {
+        let dir = optex::testutil::fixtures::tmp_ckpt_dir(&format!("bench_serve_{k}"));
+        let mut sched = Scheduler::new(k, Policy::RoundRobin, dir.clone());
+        let t0 = Instant::now();
+        let ids: Vec<u64> = (0..k)
+            .map(|i| {
+                let mut cfg = RunConfig::default();
+                cfg.workload = "ackley".into();
+                cfg.steps = steps;
+                cfg.seed = i as u64;
+                cfg.synth_dim = d;
+                cfg.noise_std = 0.1;
+                cfg.optimizer =
+                    OptSpec::Adam { lr: 0.1, beta1: 0.9, beta2: 0.999, eps: 1e-8 };
+                cfg.optex.parallelism = 4;
+                cfg.optex.t0 = 8;
+                cfg.optex.threads = 1;
+                sched.submit(cfg, Budget::default()).expect("submit")
+            })
+            .collect();
+        // drive to completion, recording each session's finish time —
+        // the in-process analogue of submit→result latency (all K were
+        // submitted at t0, results are available the moment they finish)
+        let mut done_at = vec![f64::NAN; k];
+        let mut remaining = k;
+        while remaining > 0 {
+            let id = sched.tick().expect("runnable sessions remain");
+            let s = sched.session(id).unwrap();
+            if !s.is_active() {
+                done_at[(id - ids[0]) as usize] = t0.elapsed().as_secs_f64();
+                remaining -= 1;
+            }
+        }
+        let total_s = t0.elapsed().as_secs_f64();
+        let steps_total = (k * steps) as f64;
+        let steps_per_sec = steps_total / total_s;
+        let p50 = stats::percentile(&done_at, 50.0) * 1e3;
+        let p95 = stats::percentile(&done_at, 95.0) * 1e3;
+        // steady state must stay zero-alloc/zero-copy in EVERY arena
+        for id in &ids {
+            let s = sched.session(*id).unwrap();
+            assert_eq!(s.state(), SessionState::Done);
+            let (allocs, copied) = s.grad_counters().expect("counters survive finish");
+            assert_eq!(allocs, 2, "session {id}: arena allocated past construction");
+            assert_eq!(copied, 0, "session {id}: arena copied gradient bytes");
+        }
+        println!(
+            "serve        K={k:<3} d={d} steps={steps}: {steps_per_sec:>8.1} steps/s  \
+             latency p50={p50:>8.1}ms p95={p95:>8.1}ms"
+        );
+        rows.push(JsonRow {
+            section: "serve_throughput",
+            fields: vec![
+                ("k".into(), k as f64),
+                ("d".into(), d as f64),
+                ("steps_per_session".into(), steps as f64),
+                ("steps_per_sec".into(), steps_per_sec),
+                ("latency_p50_ms".into(), p50),
+                ("latency_p95_ms".into(), p95),
+            ],
+        });
+        std::fs::remove_dir_all(&dir).ok();
+    }
 }
 
 fn main() {
@@ -375,5 +456,10 @@ fn main() {
         }
     }
 
-    write_bench_json(&rows);
+    write_bench_json("BENCH_3.json", 3, &rows);
+
+    // ISSUE 4: serving-subsystem rows go to their own trend artifact
+    let mut serve_rows: Vec<JsonRow> = Vec::new();
+    serve_throughput_grid(&mut serve_rows);
+    write_bench_json("BENCH_4.json", 4, &serve_rows);
 }

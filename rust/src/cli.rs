@@ -39,7 +39,7 @@ const VALUE_OPTS: &[&str] = &[
     "config", "out", "artifacts", "method", "workload", "steps", "seed",
     "seeds", "fig", "profile", "n", "t0", "filter", "lr", "optimizer",
     "episodes", "env", "backend", "dim", "checkpoint", "resume", "fit",
-    "threads", "gp-refresh-every",
+    "threads", "gp-refresh-every", "pool", "addr", "max-sessions", "policy",
 ];
 
 impl Args {
@@ -185,5 +185,86 @@ mod tests {
     fn bad_numeric_value() {
         let a = parse("run --steps ten");
         assert!(a.opt_usize("steps").is_err());
+    }
+
+    // -- ISSUE 4 satellite: the serve subcommand makes the parser
+    // multi-mode; pin every parse path it leans on -----------------------
+
+    #[test]
+    fn serve_subcommand_options_parse() {
+        let a = parse(
+            "serve --addr 127.0.0.1:0 --max-sessions 16 --threads 8 \
+             --pool persistent --policy fair --set serve.ckpt_dir=/tmp/ck",
+        );
+        assert_eq!(a.subcommand.as_deref(), Some("serve"));
+        assert_eq!(a.opt("addr"), Some("127.0.0.1:0"));
+        assert_eq!(a.opt_usize("max-sessions").unwrap(), Some(16));
+        assert_eq!(a.opt_usize("threads").unwrap(), Some(8));
+        assert_eq!(a.opt("pool"), Some("persistent"));
+        assert_eq!(a.opt("policy"), Some("fair"));
+        assert_eq!(a.sets, vec!["serve.ckpt_dir=/tmp/ck"]);
+        assert!(a.positionals.is_empty());
+    }
+
+    #[test]
+    fn unknown_value_option_in_equals_form_is_rejected() {
+        // the VALUE_OPTS table is the only thing standing between a typo
+        // and a silently ignored flag — both spellings must hard-error
+        let err = Args::parse(["serve".into(), "--adress=1.2.3.4:5".to_string()])
+            .unwrap_err();
+        assert!(err.to_string().contains("unknown option --adress"), "{err}");
+        // space form: an unknown name becomes a bare flag, caught by
+        // check_known_flags after dispatch
+        let a = parse("serve --verbose");
+        let err = a.check_known_flags(&["help"]).unwrap_err();
+        assert!(err.to_string().contains("unknown flag --verbose"), "{err}");
+    }
+
+    #[test]
+    fn opt_usize_and_opt_f64_error_messages_name_flag_and_value() {
+        let a = parse("serve --max-sessions many --lr fast");
+        let err = a.opt_usize("max-sessions").unwrap_err().to_string();
+        assert!(err.contains("--max-sessions"), "{err}");
+        assert!(err.contains("expected integer"), "{err}");
+        assert!(err.contains("\"many\""), "{err}");
+        let err = a.opt_f64("lr").unwrap_err().to_string();
+        assert!(err.contains("--lr"), "{err}");
+        assert!(err.contains("expected number"), "{err}");
+        assert!(err.contains("\"fast\""), "{err}");
+        // absent options are None, not errors
+        assert_eq!(a.opt_usize("steps").unwrap(), None);
+        assert_eq!(a.opt_f64("noise").unwrap(), None);
+        // negative numbers fail usize but pass f64
+        let a = parse("serve --max-sessions -3 --lr -0.5");
+        assert!(a.opt_usize("max-sessions").is_err());
+        assert_eq!(a.opt_f64("lr").unwrap(), Some(-0.5));
+    }
+
+    #[test]
+    fn check_known_flags_ignores_value_options_and_sets() {
+        // value options and --set never land in the flag list
+        let a = parse("serve --addr x:1 --set a=1 --help");
+        assert!(a.check_known_flags(&["help"]).is_ok());
+        // multiple unknown flags: the first one is reported
+        let a = parse("run --alpha --beta");
+        let err = a.check_known_flags(&[]).unwrap_err().to_string();
+        assert!(err.contains("--alpha"), "{err}");
+    }
+
+    #[test]
+    fn value_option_missing_its_value_is_an_error() {
+        for opt in ["--addr", "--max-sessions", "--policy", "--pool"] {
+            let err = Args::parse(["serve".to_string(), opt.to_string()]).unwrap_err();
+            assert!(
+                err.to_string().contains("needs a value"),
+                "{opt}: {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn last_occurrence_wins_for_value_options() {
+        let a = parse("serve --addr a:1 --addr b:2");
+        assert_eq!(a.opt("addr"), Some("b:2"));
     }
 }

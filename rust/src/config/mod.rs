@@ -13,6 +13,8 @@ use std::path::PathBuf;
 use crate::coordinator::selection::Selection;
 use crate::gp::{GpFit, Kernel};
 use crate::opt::{OptSpec, Schedule};
+use crate::runtime::PoolMode;
+use crate::serve::Policy;
 use toml::Value;
 
 /// Which iteration scheme drives the run (paper Fig. 5).
@@ -95,6 +97,11 @@ pub struct OptexParams {
     /// 1 = legacy serial path (kept for differential testing).
     /// Trajectories are bit-identical at any value.
     pub threads: usize,
+    /// Native pool execution substrate: `scoped` (spawn per call,
+    /// default) or `persistent` (process-global parked workers — the
+    /// profile for long-lived `serve` processes). Never a numerics fork:
+    /// trajectories are bit-identical across modes.
+    pub pool: PoolMode,
 }
 
 impl Default for OptexParams {
@@ -112,6 +119,36 @@ impl Default for OptexParams {
             fit: GpFit::Incremental,
             gp_refresh_every: 0,
             threads: 0,
+            pool: PoolMode::Scoped,
+        }
+    }
+}
+
+/// `[serve]` table: the multi-session serving subsystem (ISSUE 4).
+#[derive(Clone, Debug)]
+pub struct ServeParams {
+    /// Listen address for the JSONL wire protocol (`host:port`; port 0
+    /// binds an ephemeral port, printed at startup).
+    pub addr: String,
+    /// Admission cap: sessions in Pending/Running/Paused at once.
+    /// Submissions beyond it are rejected at the protocol level.
+    pub max_sessions: usize,
+    /// Iteration scheduling policy: `rr` (deterministic round-robin,
+    /// default) or `fair` (weighted-fair on the per-session eval-seconds
+    /// EMA). Either way trajectories are bit-identical to solo runs —
+    /// the scheduler never reorders work *within* a session.
+    pub policy: Policy,
+    /// Directory for checkpoint-backed suspend files of paused sessions.
+    pub ckpt_dir: PathBuf,
+}
+
+impl Default for ServeParams {
+    fn default() -> Self {
+        ServeParams {
+            addr: "127.0.0.1:7878".into(),
+            max_sessions: 64,
+            policy: Policy::RoundRobin,
+            ckpt_dir: PathBuf::from("results/serve_ckpt"),
         }
     }
 }
@@ -130,6 +167,8 @@ pub struct RunConfig {
     /// Learning-rate schedule applied on top of the base lr.
     pub schedule: Schedule,
     pub optex: OptexParams,
+    /// Multi-session serving knobs (`optex serve`).
+    pub serve: ServeParams,
     /// Extra gaussian gradient noise std for synthetic workloads (σ of
     /// Assump. 1; 0 = deterministic, paper Sec. 6.1).
     pub noise_std: f64,
@@ -153,6 +192,7 @@ impl Default for RunConfig {
             optimizer: OptSpec::Adam { lr: 0.1, beta1: 0.9, beta2: 0.999, eps: 1e-8 },
             schedule: Schedule::Constant,
             optex: OptexParams::default(),
+            serve: ServeParams::default(),
             noise_std: 0.0,
             synth_dim: 10_000,
             artifacts_dir: PathBuf::from("artifacts"),
@@ -271,6 +311,17 @@ impl RunConfig {
             }
             "optex.gp_refresh_every" => self.optex.gp_refresh_every = need_usize()?,
             "optex.threads" => self.optex.threads = need_usize()?,
+            "optex.pool" => {
+                self.optex.pool = PoolMode::parse(need_str()?)
+                    .ok_or_else(|| bad(key, "unknown pool mode (scoped|persistent)"))?
+            }
+            "serve.addr" => self.serve.addr = need_str()?.to_string(),
+            "serve.max_sessions" => self.serve.max_sessions = need_usize()?,
+            "serve.policy" => {
+                self.serve.policy = Policy::parse(need_str()?)
+                    .ok_or_else(|| bad(key, "unknown serve policy (rr|fair)"))?
+            }
+            "serve.ckpt_dir" => self.serve.ckpt_dir = PathBuf::from(need_str()?),
             _ => return Err(bad(key, "unknown config key")),
         }
         Ok(())
@@ -295,6 +346,12 @@ impl RunConfig {
         if self.synth_dim == 0 {
             return Err(bad("synth_dim", "must be >= 1"));
         }
+        if self.serve.max_sessions == 0 {
+            return Err(bad("serve.max_sessions", "must be >= 1"));
+        }
+        if self.serve.addr.is_empty() {
+            return Err(bad("serve.addr", "must be host:port"));
+        }
         Ok(())
     }
 
@@ -316,6 +373,7 @@ impl RunConfig {
         m.insert("fit".into(), self.optex.fit.name().into());
         m.insert("gp_refresh_every".into(), self.optex.gp_refresh_every.to_string());
         m.insert("threads".into(), self.optex.threads.to_string());
+        m.insert("pool".into(), self.optex.pool.name().into());
         m.insert("noise_std".into(), format!("{}", self.noise_std));
         m.insert("synth_dim".into(), self.synth_dim.to_string());
         m
@@ -378,6 +436,46 @@ mod tests {
         assert_eq!(cfg.optex.threads, 1);
         assert!(cfg.apply_override("optex.threads=-2").is_err());
         assert!(RunConfig::default().describe().contains_key("threads"));
+    }
+
+    #[test]
+    fn pool_mode_knob_parses_with_scoped_default() {
+        assert_eq!(RunConfig::default().optex.pool, PoolMode::Scoped);
+        let mut cfg = RunConfig::default();
+        cfg.apply_override("optex.pool=persistent").unwrap();
+        assert_eq!(cfg.optex.pool, PoolMode::Persistent);
+        cfg.apply_override("optex.pool=scoped").unwrap();
+        assert_eq!(cfg.optex.pool, PoolMode::Scoped);
+        assert!(cfg.apply_override("optex.pool=rayon").is_err());
+        assert_eq!(RunConfig::default().describe()["pool"], "scoped");
+    }
+
+    #[test]
+    fn serve_table_parses_and_validates() {
+        let doc = r#"
+            workload = "ackley"
+
+            [serve]
+            addr = "0.0.0.0:9000"
+            max_sessions = 16
+            policy = "fair"
+            ckpt_dir = "/tmp/serve_ckpt"
+        "#;
+        let cfg = RunConfig::from_toml(doc).unwrap();
+        assert_eq!(cfg.serve.addr, "0.0.0.0:9000");
+        assert_eq!(cfg.serve.max_sessions, 16);
+        assert_eq!(cfg.serve.policy, Policy::WeightedFair);
+        assert_eq!(cfg.serve.ckpt_dir, PathBuf::from("/tmp/serve_ckpt"));
+
+        let d = ServeParams::default();
+        assert_eq!(d.max_sessions, 64);
+        assert_eq!(d.policy, Policy::RoundRobin);
+
+        let mut cfg = RunConfig::default();
+        assert!(cfg.apply_override("serve.max_sessions=0").is_err());
+        assert!(cfg.apply_override("serve.policy=lifo").is_err());
+        cfg.apply_override("serve.max_sessions=2").unwrap();
+        assert_eq!(cfg.serve.max_sessions, 2);
     }
 
     #[test]

@@ -50,12 +50,16 @@ pub struct IterRecord {
 pub struct RunRecord {
     /// Series label, e.g. "optex", "vanilla", "target".
     pub label: String,
+    /// Serving-session id (ISSUE 4): 0 for standalone runs; assigned by
+    /// the serve scheduler so per-session CSV/JSON emissions stay
+    /// attributable when many sessions share one process (or one file).
+    pub session: u64,
     pub rows: Vec<IterRecord>,
 }
 
 impl RunRecord {
     pub fn new(label: impl Into<String>) -> Self {
-        RunRecord { label: label.into(), rows: Vec::new() }
+        RunRecord { label: label.into(), session: 0, rows: Vec::new() }
     }
 
     pub fn push(&mut self, row: IterRecord) {
@@ -102,14 +106,15 @@ impl RunRecord {
         let mut w = CsvWriter::create(
             path,
             &[
-                "label", "iter", "grad_evals", "loss", "grad_norm", "best_loss",
-                "wall_s", "parallel_s", "eval_s", "est_var", "aux",
+                "label", "session", "iter", "grad_evals", "loss", "grad_norm",
+                "best_loss", "wall_s", "parallel_s", "eval_s", "est_var", "aux",
             ],
         )?;
         for r in &self.rows {
             w.tagged_row(
                 &self.label,
                 &[
+                    self.session as f64,
                     r.iter as f64,
                     r.grad_evals as f64,
                     r.loss,
@@ -184,11 +189,12 @@ mod tests {
         let dir = std::env::temp_dir().join("optex_metrics_test");
         let path = dir.join("run.csv");
         let mut r = RunRecord::new("vanilla");
+        r.session = 7;
         r.push(row(1, 2.0));
         r.to_csv(&path).unwrap();
         let text = std::fs::read_to_string(&path).unwrap();
-        assert!(text.starts_with("label,iter,"));
-        assert!(text.lines().nth(1).unwrap().starts_with("vanilla,1,4,"));
+        assert!(text.starts_with("label,session,iter,"));
+        assert!(text.lines().nth(1).unwrap().starts_with("vanilla,7,1,4,"));
         std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -124,9 +124,10 @@ impl Driver {
         let mut rng = Rng::new(cfg.seed);
         // Shared native compute pool: fans out the oracle's eval_batch
         // and the GP estimator's memory-bound loops. Bit-identical
-        // trajectories at any width (see rust/tests/thread_invariance.rs),
-        // so resolving it from the environment is safe.
-        let pool = NativePool::from_config(cfg.optex.threads);
+        // trajectories at any width and in either execution mode (see
+        // rust/tests/thread_invariance.rs), so resolving it from the
+        // environment is safe.
+        let pool = NativePool::from_config(cfg.optex.threads, cfg.optex.pool);
         source.set_compute_pool(pool);
 
         // Resolve the HLO estimation backend first: its artifact pins
@@ -200,6 +201,25 @@ impl Driver {
     /// Metrics recorded so far.
     pub fn record(&self) -> &RunRecord {
         &self.record
+    }
+
+    /// Best loss seen so far (live, independent of `log_every` — the
+    /// serving layer's budget checks read this between logged rows).
+    pub fn best_loss(&self) -> f64 {
+        self.best_loss
+    }
+
+    /// Cumulative measured wall time of the eval fan-out so far (the
+    /// `eval_s` series, live) — feeds the serve scheduler's per-session
+    /// weighted-fair accounting.
+    pub fn eval_wall_s(&self) -> f64 {
+        self.eval_wall_s
+    }
+
+    /// Tag this run's metrics with a serving-session id (0 = not a
+    /// serve run; propagated into the CSV emitter's `session` column).
+    pub fn set_session_id(&mut self, id: u64) {
+        self.record.session = id;
     }
 
     /// Snapshot the run to a checkpoint file (θ, optimizer state, local

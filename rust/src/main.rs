@@ -2,6 +2,8 @@
 //!
 //! Subcommands:
 //!   run        one optimization run from a TOML config (+ --set overrides)
+//!   serve      multi-session serving: concurrent runs over one compute
+//!              pool, driven by a JSONL wire protocol (ISSUE 4)
 //!   fig <id>   regenerate a paper figure (2, 3, 4a, 4b, 6, 7–10, ...)
 //!   rl         DQN training on a classic-control env
 //!   artifacts  inspect the AOT artifact manifest
@@ -23,8 +25,11 @@ optex — OptEx: first-order optimization with approximately parallelized iterat
 USAGE:
   optex run  [--config FILE] [--workload W] [--method M] [--steps T]
              [--seed S] [--fit full|incremental] [--threads K]
-             [--gp-refresh-every K] [--checkpoint FILE] [--resume FILE]
-             [--set key=value ...]
+             [--pool scoped|persistent] [--gp-refresh-every K]
+             [--checkpoint FILE] [--resume FILE] [--set key=value ...]
+  optex serve [--config FILE] [--addr HOST:PORT] [--max-sessions K]
+              [--threads K] [--pool scoped|persistent] [--policy rr|fair]
+              [--set key=value ...]   # JSONL protocol; see serve/ docs
   optex fig  <2|3|4a|4b|6|6a..6d|7|8|9|10|kernels|estbound|nativehlo|all>
              [--seeds K] [--steps T] [--quick] [--out DIR] [--artifacts DIR]
   optex rl   --env <cartpole|mountaincar|acrobot> [--episodes E]
@@ -54,6 +59,7 @@ fn real_main() -> anyhow::Result<()> {
     }
     match args.subcommand.as_deref().unwrap() {
         "run" => cmd_run(&args),
+        "serve" => cmd_serve(&args),
         "fig" => cmd_fig(&args),
         "rl" => cmd_rl(&args),
         "artifacts" => cmd_artifacts(&args),
@@ -107,6 +113,9 @@ fn load_config(args: &Args) -> anyhow::Result<RunConfig> {
     if let Some(k) = args.opt_usize("threads")? {
         cfg.apply_override(&format!("optex.threads={k}"))?;
     }
+    if let Some(p) = args.opt("pool") {
+        cfg.apply_override(&format!("optex.pool={p}"))?;
+    }
     if let Some(k) = args.opt_usize("gp-refresh-every")? {
         cfg.apply_override(&format!("optex.gp_refresh_every={k}"))?;
     }
@@ -157,6 +166,25 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
     record.to_csv(&path)?;
     println!("wrote {}", path.display());
     Ok(())
+}
+
+/// Multi-session serving: bind the JSONL endpoint and run the scheduler
+/// loop until a `shutdown` command arrives. The loaded config is the
+/// BASE every submitted session starts from (its `config` object is
+/// applied on top as `--set`-style overrides).
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    args.check_known_flags(&["help"])?;
+    let mut cfg = load_config(args)?;
+    if let Some(a) = args.opt("addr") {
+        cfg.apply_override(&format!("serve.addr={a}"))?;
+    }
+    if let Some(k) = args.opt_usize("max-sessions")? {
+        cfg.apply_override(&format!("serve.max_sessions={k}"))?;
+    }
+    if let Some(p) = args.opt("policy") {
+        cfg.apply_override(&format!("serve.policy={p}"))?;
+    }
+    optex::serve::serve(&cfg)
 }
 
 fn cmd_fig(args: &Args) -> anyhow::Result<()> {

@@ -14,9 +14,11 @@
 //! thread boundaries as owned tensor payloads over channels.
 //! [`native_pool::NativePool`] parallelizes plain rust loops (the native
 //! `eval_batch` fan-out, the GP estimator's combine / sqdist scans): jobs
-//! borrow the caller's slices via `std::thread::scope`, there are no
-//! channels or owned payloads, and every split preserves the serial
-//! reduction order so results stay bit-identical at any thread count.
+//! borrow the caller's slices directly, there are no channels or owned
+//! payloads, and every split preserves the serial reduction order so
+//! results stay bit-identical at any thread count. Its execution
+//! substrate is selectable (`optex.pool`): scoped spawn-per-call, or
+//! process-global parked workers for long-lived serve processes.
 //!
 //! Python is build-time only: after `make artifacts`, everything here is
 //! self-contained rust + the PJRT C API.
@@ -28,5 +30,5 @@ pub mod pool;
 
 pub use artifact::{ArtifactSpec, DType, Manifest, TensorSpec};
 pub use executor::{Engine, Executable, In, TensorData};
-pub use native_pool::NativePool;
+pub use native_pool::{NativePool, PoolMode};
 pub use pool::{RunOutput, WorkerPool};

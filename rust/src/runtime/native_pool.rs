@@ -14,6 +14,26 @@
 //! `threads = 1` is the legacy serial path (runs entirely on the caller
 //! thread, kept for differential testing).
 //!
+//! ## Execution modes (`optex.pool`)
+//!
+//! The *partitioning policy* (how work splits into per-worker chunks) is
+//! fixed; what varies is the substrate that runs the chunks:
+//!
+//! * [`PoolMode::Scoped`] (default) — one `std::thread::scope` spawn per
+//!   chunk, per call. Zero resident state; spawn latency (~tens of µs)
+//!   amortized by the work grain. The right profile for one-shot runs.
+//! * [`PoolMode::Persistent`] — chunks are queued to a process-global set
+//!   of long-lived parked workers (lazily spawned, reused forever,
+//!   park/unpark instead of spawn/join). The right profile for a
+//!   long-lived `serve` process, where thousands of small dispatches per
+//!   second would otherwise pay the spawn tax each time (ROADMAP PR-2
+//!   follow-up, closed in ISSUE 4).
+//!
+//! Both modes run the *same* chunks produced by the *same* split
+//! arithmetic, and the caller thread always takes the final chunk, so
+//! results are bit-identical across modes and widths (re-asserted for
+//! both modes by `rust/tests/thread_invariance.rs`).
+//!
 //! ## Determinism contract
 //!
 //! Every splitting primitive here partitions the *output* — a single
@@ -25,6 +45,34 @@
 //! `rust/tests/thread_invariance.rs`.
 
 use std::num::NonZeroUsize;
+
+/// Which substrate executes the pool's chunks (`optex.pool` knob).
+/// Purely an execution-latency decision — never a numerics fork.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum PoolMode {
+    /// Spawn scoped threads per call (zero resident state).
+    #[default]
+    Scoped,
+    /// Dispatch to process-global parked workers (spawn once, reuse).
+    Persistent,
+}
+
+impl PoolMode {
+    pub fn parse(s: &str) -> Option<PoolMode> {
+        match s {
+            "scoped" => Some(PoolMode::Scoped),
+            "persistent" => Some(PoolMode::Persistent),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            PoolMode::Scoped => "scoped",
+            PoolMode::Persistent => "persistent",
+        }
+    }
+}
 
 /// Spawn-cost amortization floor shared by every pooled call site: the
 /// minimum number of f32 element *touches* one extra scoped thread must
@@ -46,6 +94,7 @@ pub fn grain(cost_per_elem: usize) -> usize {
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct NativePool {
     threads: usize,
+    mode: PoolMode,
 }
 
 impl Default for NativePool {
@@ -57,15 +106,15 @@ impl Default for NativePool {
 }
 
 impl NativePool {
-    /// Pool over exactly `threads` workers (>= 1).
+    /// Pool over exactly `threads` workers (>= 1), scoped mode.
     pub fn new(threads: usize) -> NativePool {
         assert!(threads >= 1, "NativePool needs at least one thread");
-        NativePool { threads }
+        NativePool { threads, mode: PoolMode::Scoped }
     }
 
     /// The legacy serial path: all work runs on the caller thread.
     pub fn serial() -> NativePool {
-        NativePool { threads: 1 }
+        NativePool { threads: 1, mode: PoolMode::Scoped }
     }
 
     /// One worker per available hardware thread.
@@ -73,20 +122,27 @@ impl NativePool {
         let n = std::thread::available_parallelism()
             .map(NonZeroUsize::get)
             .unwrap_or(1);
-        NativePool { threads: n }
+        NativePool { threads: n, mode: PoolMode::Scoped }
     }
 
-    /// Resolve the `optex.threads` config knob: 0 = auto-detect.
-    pub fn from_config(threads: usize) -> NativePool {
-        if threads == 0 {
-            NativePool::auto()
-        } else {
-            NativePool::new(threads)
-        }
+    /// Resolve the `optex.threads` / `optex.pool` config knobs:
+    /// threads 0 = auto-detect width.
+    pub fn from_config(threads: usize, mode: PoolMode) -> NativePool {
+        let width = if threads == 0 { NativePool::auto().threads } else { threads };
+        NativePool { threads: width, mode }
+    }
+
+    /// This policy re-targeted at the given execution substrate.
+    pub fn with_mode(self, mode: PoolMode) -> NativePool {
+        NativePool { mode, ..self }
     }
 
     pub fn threads(&self) -> usize {
         self.threads
+    }
+
+    pub fn mode(&self) -> PoolMode {
+        self.mode
     }
 
     pub fn is_serial(&self) -> bool {
@@ -101,7 +157,30 @@ impl NativePool {
     /// results are bit-identical at any width.
     pub fn capped_for(&self, n_jobs: usize, touches_per_job: usize) -> NativePool {
         let total = n_jobs.saturating_mul(touches_per_job);
-        NativePool { threads: (total / SPAWN_GRAIN).clamp(1, self.threads) }
+        NativePool {
+            threads: (total / SPAWN_GRAIN).clamp(1, self.threads),
+            mode: self.mode,
+        }
+    }
+
+    /// Run every boxed chunk task, the LAST one on the caller thread (so
+    /// k-way work costs k−1 dispatches), the rest on the configured
+    /// substrate. Blocks until all tasks finish — the borrows the tasks
+    /// capture never outlive this call in either mode.
+    fn execute<'env>(&self, mut tasks: Vec<Box<dyn FnOnce() + Send + 'env>>) {
+        let Some(last) = tasks.pop() else { return };
+        if tasks.is_empty() {
+            return last();
+        }
+        match self.mode {
+            PoolMode::Scoped => std::thread::scope(|s| {
+                for t in tasks {
+                    s.spawn(t);
+                }
+                last();
+            }),
+            PoolMode::Persistent => persistent::run(tasks, last),
+        }
     }
 
     /// Run `f(i, items[i])` for every item, results in item order. Each
@@ -128,21 +207,22 @@ impl NativePool {
                 slot.1 = Some(f(start + j, ctx));
             }
         };
-        // k−1 spawned workers; the caller thread takes the final block
-        // instead of idling at the scope join.
-        std::thread::scope(|s| {
+        // k−1 dispatched workers; the caller thread takes the final block
+        // (execute keeps the last task) instead of idling at the join.
+        {
             let run = &run;
+            let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(k);
             let mut rest: &mut [(Option<C>, Option<T>)] = &mut slots;
             let mut start = 0usize;
-            for w in 0..k - 1 {
+            for w in 0..k {
                 let len = n / k + usize::from(w < n % k);
                 let (mine, tail) = std::mem::take(&mut rest).split_at_mut(len);
                 rest = tail;
-                s.spawn(move || run(start, mine));
+                tasks.push(Box::new(move || run(start, mine)));
                 start += len;
             }
-            run(start, rest);
-        });
+            self.execute(tasks);
+        }
         slots
             .into_iter()
             .map(|(_, out)| out.expect("scoped job completed"))
@@ -176,21 +256,20 @@ impl NativePool {
             f(0, data);
             return;
         }
-        // k−1 spawned workers; the caller thread takes the final block
-        // instead of idling at the scope join.
-        std::thread::scope(|s| {
-            let f = &f;
-            let mut rest: &mut [T] = data;
-            let mut start = 0usize;
-            for w in 0..k - 1 {
-                let len = n / k + usize::from(w < n % k);
-                let (mine, tail) = std::mem::take(&mut rest).split_at_mut(len);
-                rest = tail;
-                s.spawn(move || f(start, mine));
-                start += len;
-            }
-            f(start, rest);
-        });
+        // k−1 dispatched workers; the caller thread takes the final block
+        // (execute keeps the last task) instead of idling at the join.
+        let f = &f;
+        let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(k);
+        let mut rest: &mut [T] = data;
+        let mut start = 0usize;
+        for w in 0..k {
+            let len = n / k + usize::from(w < n % k);
+            let (mine, tail) = std::mem::take(&mut rest).split_at_mut(len);
+            rest = tail;
+            tasks.push(Box::new(move || f(start, mine)));
+            start += len;
+        }
+        self.execute(tasks);
     }
 
     /// `out[i] = f(i)` with the index space chunked across the pool.
@@ -204,6 +283,159 @@ impl NativePool {
                 *slot = f(start + j);
             }
         });
+    }
+}
+
+/// Process-global parked-worker substrate behind [`PoolMode::Persistent`].
+///
+/// One shared FIFO of erased chunk tasks + a lazily grown set of
+/// long-lived workers that park on a condvar when the queue drains.
+/// `run` never returns before every task it enqueued has finished (a
+/// per-dispatch latch), which is what makes the lifetime erasure below
+/// sound: the borrows captured by the tasks strictly outlive their
+/// execution, exactly as under `std::thread::scope`.
+///
+/// Workers are spawned only to cover the *deficit* between queued tasks
+/// and currently idle workers, so the resident set grows to the maximum
+/// concurrency ever requested (bounded by the configured pool widths)
+/// and is then reused forever — a long-lived `serve` process pays the
+/// thread-spawn tax once, not per dispatch. Nested dispatch (a pool task
+/// itself running a persistent dispatch) cannot deadlock for the same
+/// reason: the inner dispatch spawns whatever workers the queue is
+/// short.
+mod persistent {
+    use std::collections::VecDeque;
+    use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+    use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+    type Task = Box<dyn FnOnce() + Send + 'static>;
+
+    /// Completion latch for one dispatch: remaining count + panic flag.
+    struct Latch {
+        state: Mutex<(usize, bool)>,
+        cv: Condvar,
+    }
+
+    impl Latch {
+        fn new(n: usize) -> Latch {
+            Latch { state: Mutex::new((n, false)), cv: Condvar::new() }
+        }
+
+        fn complete(&self, panicked: bool) {
+            let mut st = self.state.lock().unwrap();
+            st.0 -= 1;
+            st.1 |= panicked;
+            if st.0 == 0 {
+                self.cv.notify_all();
+            }
+        }
+
+        /// Block until every task completed; returns whether any panicked.
+        fn wait(&self) -> bool {
+            let mut st = self.state.lock().unwrap();
+            while st.0 > 0 {
+                st = self.cv.wait(st).unwrap();
+            }
+            st.1
+        }
+    }
+
+    struct Registry {
+        queue: Mutex<Queue>,
+        work: Condvar,
+    }
+
+    struct Queue {
+        tasks: VecDeque<(Task, Arc<Latch>)>,
+        idle: usize,
+    }
+
+    fn registry() -> &'static Registry {
+        static R: OnceLock<Registry> = OnceLock::new();
+        R.get_or_init(|| Registry {
+            queue: Mutex::new(Queue { tasks: VecDeque::new(), idle: 0 }),
+            work: Condvar::new(),
+        })
+    }
+
+    fn worker_loop() {
+        let r = registry();
+        let mut q = r.queue.lock().unwrap();
+        loop {
+            if let Some((task, latch)) = q.tasks.pop_front() {
+                drop(q);
+                // A panicking task must not take the worker down (the
+                // registry never shrinks) — catch, record, re-raise on
+                // the dispatching thread.
+                let panicked = catch_unwind(AssertUnwindSafe(task)).is_err();
+                latch.complete(panicked);
+                q = r.queue.lock().unwrap();
+            } else {
+                q.idle += 1;
+                q = r.work.wait(q).unwrap();
+                q.idle -= 1;
+            }
+        }
+    }
+
+    /// Queue `tasks` to the parked workers, run `last` on the caller
+    /// thread, and block until everything finished. Panics from either
+    /// side propagate to the caller — after all borrows are dead.
+    pub(super) fn run<'env>(
+        tasks: Vec<Box<dyn FnOnce() + Send + 'env>>,
+        last: Box<dyn FnOnce() + Send + 'env>,
+    ) {
+        let r = registry();
+        // Grow the worker set FIRST, outside the lock: a failed spawn
+        // (thread exhaustion — exactly the loaded-server profile) must
+        // neither poison the global registry nor strand queued tasks,
+        // so on failure we degrade to running everything on the caller
+        // thread (same chunks, same results, just serial).
+        let deficit = {
+            let q = r.queue.lock().unwrap();
+            (tasks.len() + q.tasks.len()).saturating_sub(q.idle)
+        };
+        for _ in 0..deficit {
+            let spawned = std::thread::Builder::new()
+                .name("optex-pool-worker".into())
+                .spawn(worker_loop);
+            if spawned.is_err() {
+                // pre-existing workers (if any) keep serving the shared
+                // queue; THIS dispatch stays entirely on the caller
+                for t in tasks {
+                    t();
+                }
+                last();
+                return;
+            }
+        }
+        let latch = Arc::new(Latch::new(tasks.len()));
+        {
+            let mut q = r.queue.lock().unwrap();
+            for t in tasks {
+                // SAFETY: the latch wait below keeps this function alive
+                // until the task has run to completion, so every borrow
+                // captured under 'env outlives the task's execution —
+                // the same guarantee `std::thread::scope` provides
+                // structurally. The transmute only erases the lifetime;
+                // layout is identical.
+                let t: Task = unsafe {
+                    std::mem::transmute::<Box<dyn FnOnce() + Send + 'env>, Task>(t)
+                };
+                q.tasks.push_back((t, Arc::clone(&latch)));
+            }
+            r.work.notify_all();
+        }
+        // Caller takes its own chunk; a panic here must still wait for
+        // the workers (their borrows are live) before unwinding.
+        let caller = catch_unwind(AssertUnwindSafe(last));
+        let worker_panicked = latch.wait();
+        if let Err(p) = caller {
+            resume_unwind(p);
+        }
+        if worker_panicked {
+            panic!("persistent-pool worker task panicked");
+        }
     }
 }
 
@@ -296,9 +528,75 @@ mod tests {
 
     #[test]
     fn from_config_zero_is_auto() {
-        assert!(NativePool::from_config(0).threads() >= 1);
-        assert_eq!(NativePool::from_config(3).threads(), 3);
-        assert!(NativePool::from_config(1).is_serial());
+        assert!(NativePool::from_config(0, PoolMode::Scoped).threads() >= 1);
+        assert_eq!(NativePool::from_config(3, PoolMode::Scoped).threads(), 3);
+        assert!(NativePool::from_config(1, PoolMode::Scoped).is_serial());
+        let p = NativePool::from_config(4, PoolMode::Persistent);
+        assert_eq!(p.mode(), PoolMode::Persistent);
+        assert_eq!(p.threads(), 4);
+    }
+
+    #[test]
+    fn pool_mode_parse_and_names() {
+        assert_eq!(PoolMode::parse("scoped"), Some(PoolMode::Scoped));
+        assert_eq!(PoolMode::parse("persistent"), Some(PoolMode::Persistent));
+        assert_eq!(PoolMode::parse("rayon"), None);
+        assert_eq!(PoolMode::Persistent.name(), "persistent");
+        assert_eq!(PoolMode::default(), PoolMode::Scoped);
+    }
+
+    #[test]
+    fn persistent_mode_matches_scoped_bitwise() {
+        let f = |i: usize| ((i as f64) * 1.3).cos() / ((i + 2) as f64);
+        let mut scoped = vec![0.0f64; 4097];
+        NativePool::new(8).fill_with(&mut scoped, 64, f);
+        for threads in [2, 8] {
+            let pool = NativePool::new(threads).with_mode(PoolMode::Persistent);
+            let mut per = vec![0.0f64; 4097];
+            pool.fill_with(&mut per, 64, f);
+            assert_eq!(scoped, per, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn persistent_run_over_owns_contexts_and_reuses_workers() {
+        let pool = NativePool::new(4).with_mode(PoolMode::Persistent);
+        // repeated dispatches exercise park/unpark reuse, not just spawn
+        for round in 0..20u64 {
+            let ctxs: Vec<u64> = (0..9).map(|i| 100 + round + i).collect();
+            let out = pool.run_over(ctxs, |i, mut c| {
+                c += i as u64;
+                c
+            });
+            let want: Vec<u64> = (0..9).map(|i| 100 + round + 2 * i).collect();
+            assert_eq!(out, want, "round={round}");
+        }
+    }
+
+    #[test]
+    fn persistent_nested_dispatch_does_not_deadlock() {
+        // a pooled task that itself dispatches persistently must complete
+        // (deficit-spawn guarantees workers for the inner dispatch)
+        let pool = NativePool::new(3).with_mode(PoolMode::Persistent);
+        let out = pool.run_jobs(3, |i| {
+            let inner = NativePool::new(2).with_mode(PoolMode::Persistent);
+            inner.run_jobs(4, move |j| i * 10 + j).iter().sum::<usize>()
+        });
+        assert_eq!(out, vec![6, 46, 86]);
+    }
+
+    #[test]
+    #[should_panic(expected = "persistent-pool worker task panicked")]
+    fn persistent_worker_panic_propagates_to_caller() {
+        let pool = NativePool::new(4).with_mode(PoolMode::Persistent);
+        let mut data = vec![0u8; 4096];
+        pool.par_chunks_mut(&mut data, 1, |start, _chunk| {
+            // only a spawned worker's chunk panics (the caller takes the
+            // final block, which starts past 0)
+            if start == 0 {
+                panic!("boom in worker");
+            }
+        });
     }
 
     #[test]

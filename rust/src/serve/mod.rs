@@ -1,0 +1,84 @@
+//! Multi-session serving subsystem (ISSUE 4): many concurrent OptEx
+//! sessions multiplexed over ONE shared compute pool, fronted by a
+//! newline-delimited-JSON wire protocol.
+//!
+//! Everything before this module ran exactly one optimization per
+//! process; the ROADMAP north star is a system serving heavy traffic.
+//! The pieces were already in place — `Driver::iteration(t)` is a
+//! reentrant per-iteration stepper, [`crate::runtime::NativePool`] is an
+//! injectable thread policy, and the `GradStore` arena gives each run a
+//! compact fixed footprint — this module is the subsystem that
+//! multiplexes them. Its unit of work is a **session**, not a run.
+//!
+//! * [`session`] — [`Session`]: a `Driver` + id + lifecycle state
+//!   (`Pending/Running/Paused/Done/Failed`) + budget (max iters, target
+//!   loss, deadline) + checkpoint-backed suspend/resume.
+//! * [`scheduler`] — [`Scheduler`]: deterministic round-robin (default)
+//!   or weighted-fair (keyed on the per-session `eval_s` EMA) stepping
+//!   of runnable sessions, one sequential iteration per quantum.
+//! * [`protocol`] — the JSONL request/response grammar (`submit`,
+//!   `status`, `result`, `pause`, `resume`, `cancel`, `shutdown`), built
+//!   on `util/json` — no new dependencies.
+//! * [`server`] — std `TcpListener` accept loop feeding the scheduler
+//!   thread through an mpsc command queue; `optex serve` entrypoint.
+//!
+//! ## Scheduling invariants
+//!
+//! 1. **Quantum = one sequential iteration.** The scheduler calls
+//!    `Driver::iteration(t)` with strictly increasing `t` per session;
+//!    work within a session is never reordered or subdivided.
+//! 2. **One fan-out in flight.** Because the quantum runs on the serve
+//!    thread and fans out internally over the shared pool, the pool is
+//!    time-sliced between iterations — K sessions never oversubscribe
+//!    the worker set a single run would use.
+//! 3. **No shared mutable state between sessions.** Each session forks
+//!    its RNG streams from its own config seed at build and owns its
+//!    oracle/optimizer/arena. Memory: K running sessions of dimension d
+//!    hold K·T₀·d gradient floats total (finished and suspended sessions
+//!    release their arenas).
+//!
+//! ## Why determinism holds
+//!
+//! By (1) and (3), a session's trajectory is a function of its config
+//! alone: the interleaving chosen by the scheduler — round-robin or
+//! weighted-fair, any pool width or mode, pauses and resumes of other
+//! sessions — cannot appear in any session's numerics. K concurrent
+//! sessions are therefore bit-identical to the same configs run solo
+//! (`rust/tests/serve_integration.rs` pins K = 8, mixed synthetic + DQN,
+//! mixed optimizers, `threads ∈ {1, 8}`, with a mid-run pause/resume).
+//! Checkpoint-backed suspend/resume preserves bit-identity for
+//! deterministic oracles; stochastic oracles restart their data-sampler
+//! RNG from the config seed (the standing checkpoint caveat).
+//!
+//! ## Wire protocol by example
+//!
+//! Start a server and drive it with `nc`:
+//!
+//! ```text
+//! $ optex serve --addr 127.0.0.1:7878 --max-sessions 64 --threads 8
+//! $ nc 127.0.0.1 7878
+//! {"cmd":"submit","config":{"workload":"ackley","synth_dim":256,"steps":40,"seed":7}}
+//! {"id":1,"ok":true,"state":"pending"}
+//! {"cmd":"status","id":1}
+//! {"best_loss":2.137,"id":1,"iters":12,"loss":2.47,"method":"optex","ok":true,"state":"running","suspended":false,"workload":"ackley"}
+//! {"cmd":"pause","id":1}
+//! {"id":1,"ok":true,"state":"paused"}
+//! {"cmd":"resume","id":1}
+//! {"id":1,"ok":true,"state":"running"}
+//! {"cmd":"result","id":1,"theta":true}
+//! {"best_loss":0.491,"final_loss":0.491,"id":1,"iters":40,"ok":true,"state":"done","stop_reason":"max_iters","theta":[...],...}
+//! {"cmd":"shutdown"}
+//! {"ok":true,"shutdown":true}
+//! ```
+//!
+//! See `protocol.rs` for the full grammar and `config::ServeParams`
+//! (`[serve]` table) for the server knobs.
+
+pub mod protocol;
+pub mod scheduler;
+pub mod server;
+pub mod session;
+
+pub use scheduler::{Policy, Scheduler};
+pub use server::{serve, Server};
+pub use session::{Budget, Session, SessionState};

@@ -1,0 +1,442 @@
+//! Newline-delimited-JSON wire protocol for the serving subsystem.
+//!
+//! One request per line, one response line per request, in order. Built
+//! on the repo's own [`crate::util::json`] substrate — no external
+//! serialization deps. Every response carries `"ok": true|false`;
+//! errors add `"error"` with a human-readable reason.
+//!
+//! ## Commands
+//!
+//! | cmd        | fields                                            |
+//! |------------|---------------------------------------------------|
+//! | `submit`   | `config` (object of config-path → value, applied as `--set` overrides on the server's base config), `budget` (optional: `max_iters`, `target_loss`, `deadline_s`) |
+//! | `status`   | `id` (optional: omit for all sessions)            |
+//! | `result`   | `id`, `theta` (optional bool: include the iterate)|
+//! | `pause`    | `id` — checkpoint-backed suspend                  |
+//! | `resume`   | `id`                                              |
+//! | `cancel`   | `id`                                              |
+//! | `shutdown` | —                                                 |
+//!
+//! Numbers round-trip exactly: θ components are f32, widened losslessly
+//! to f64 and printed with Rust's shortest-roundtrip formatting, so a
+//! client re-parsing `result.theta` recovers the server's bits — the
+//! loopback smoke test asserts byte-identity against a solo run.
+//!
+//! ## A `nc`-able transcript
+//!
+//! ```text
+//! $ nc 127.0.0.1 7878
+//! {"cmd":"submit","config":{"workload":"ackley","synth_dim":256,"steps":40,"seed":7,"optex.parallelism":4},"budget":{"target_loss":0.5}}
+//! {"id":1,"ok":true,"state":"pending"}
+//! {"cmd":"status","id":1}
+//! {"best_loss":2.1373822689056396,"id":1,"iters":12,"ok":true,"state":"running","workload":"ackley"}
+//! {"cmd":"status"}
+//! {"ok":true,"sessions":[{"best_loss":0.49126,"id":1,"iters":23,"state":"done",...}]}
+//! {"cmd":"result","id":1,"theta":true}
+//! {"best_loss":0.49126,"final_loss":0.49126,"id":1,"iters":23,"ok":true,"state":"done","stop_reason":"target_loss","theta":[0.0013,...]}
+//! {"cmd":"shutdown"}
+//! {"ok":true,"shutdown":true}
+//! ```
+
+use std::collections::BTreeMap;
+
+use crate::serve::session::{Budget, Session};
+use crate::util::json::Json;
+
+/// A parsed client request.
+#[derive(Clone, Debug)]
+pub enum Request {
+    Submit {
+        /// `config` object flattened to `key=value` override strings in
+        /// key order (deterministic application).
+        overrides: Vec<String>,
+        budget: Budget,
+    },
+    Status { id: Option<u64> },
+    Result { id: u64, include_theta: bool },
+    Pause { id: u64 },
+    Resume { id: u64 },
+    Cancel { id: u64 },
+    Shutdown,
+}
+
+fn need_id(v: &Json) -> Result<u64, String> {
+    v.get("id")
+        .and_then(Json::as_usize)
+        .map(|id| id as u64)
+        .ok_or_else(|| "missing or invalid \"id\"".to_string())
+}
+
+/// Render one config value as the right-hand side of a `--set` override.
+/// Strings are QUOTED in the TOML value grammar — passing them bare
+/// would re-type anything scalar-looking (`workload: "7"` must stay the
+/// string `"7"`, not become the integer 7 and fail `need_str`).
+/// Numbers/bools use the JSON writer, whose output the grammar accepts.
+fn override_value(v: &Json) -> Result<String, String> {
+    match v {
+        Json::Str(s) => {
+            let mut out = String::with_capacity(s.len() + 2);
+            out.push('"');
+            for c in s.chars() {
+                match c {
+                    '"' => out.push_str("\\\""),
+                    '\\' => out.push_str("\\\\"),
+                    '\n' => out.push_str("\\n"),
+                    '\t' => out.push_str("\\t"),
+                    // the TOML subset has no other escapes
+                    c if (c as u32) < 0x20 => {
+                        return Err(format!(
+                            "unsupported control character {:?} in config string",
+                            c
+                        ))
+                    }
+                    c => out.push(c),
+                }
+            }
+            out.push('"');
+            Ok(out)
+        }
+        Json::Num(_) | Json::Bool(_) => Ok(v.to_string()),
+        other => Err(format!("unsupported config value {other:?}")),
+    }
+}
+
+fn parse_budget(v: &Json) -> Result<Budget, String> {
+    let mut b = Budget::default();
+    let Some(obj) = v.as_obj() else {
+        return Err("\"budget\" must be an object".into());
+    };
+    for (k, val) in obj {
+        match k.as_str() {
+            "max_iters" => {
+                b.max_iters = Some(
+                    val.as_usize().ok_or("budget.max_iters must be a non-negative integer")?
+                        as u64,
+                )
+            }
+            "target_loss" => {
+                b.target_loss = Some(val.as_f64().ok_or("budget.target_loss must be a number")?)
+            }
+            "deadline_s" => {
+                b.deadline_s = Some(val.as_f64().ok_or("budget.deadline_s must be a number")?)
+            }
+            other => return Err(format!("unknown budget field {other:?}")),
+        }
+    }
+    Ok(b)
+}
+
+/// Parse one request line. `Err` carries the reason for the error reply.
+pub fn parse_request(line: &str) -> Result<Request, String> {
+    let v = Json::parse(line).map_err(|e| format!("bad json: {e}"))?;
+    let cmd = v
+        .get("cmd")
+        .and_then(Json::as_str)
+        .ok_or_else(|| "missing \"cmd\"".to_string())?;
+    match cmd {
+        "submit" => {
+            let mut overrides = Vec::new();
+            if let Some(cfg) = v.get("config") {
+                let obj = cfg
+                    .as_obj()
+                    .ok_or_else(|| "\"config\" must be an object".to_string())?;
+                // BTreeMap: key order, so override application (last
+                // wins) is deterministic regardless of client field order
+                for (k, val) in obj {
+                    if k.is_empty() {
+                        return Err("empty config key".into());
+                    }
+                    overrides.push(format!("{k}={}", override_value(val)?));
+                }
+            }
+            let budget = match v.get("budget") {
+                Some(b) => parse_budget(b)?,
+                None => Budget::default(),
+            };
+            Ok(Request::Submit { overrides, budget })
+        }
+        "status" => Ok(Request::Status {
+            id: match v.get("id") {
+                Some(_) => Some(need_id(&v)?),
+                None => None,
+            },
+        }),
+        "result" => Ok(Request::Result {
+            id: need_id(&v)?,
+            include_theta: v
+                .get("theta")
+                .map(|t| t.as_bool().ok_or("\"theta\" must be a bool"))
+                .transpose()?
+                .unwrap_or(false),
+        }),
+        "pause" => Ok(Request::Pause { id: need_id(&v)? }),
+        "resume" => Ok(Request::Resume { id: need_id(&v)? }),
+        "cancel" => Ok(Request::Cancel { id: need_id(&v)? }),
+        "shutdown" => Ok(Request::Shutdown),
+        other => Err(format!("unknown cmd {other:?}")),
+    }
+}
+
+// -- response builders -------------------------------------------------------
+
+fn obj(fields: Vec<(&str, Json)>) -> Json {
+    let mut m = BTreeMap::new();
+    for (k, v) in fields {
+        m.insert(k.to_string(), v);
+    }
+    Json::Obj(m)
+}
+
+fn num_or_null(x: f64) -> Json {
+    if x.is_finite() {
+        Json::Num(x)
+    } else {
+        Json::Null
+    }
+}
+
+/// `{"ok":false,"error":...}` line.
+pub fn error_line(msg: &str) -> String {
+    obj(vec![("ok", Json::Bool(false)), ("error", Json::Str(msg.to_string()))]).to_string()
+}
+
+/// `submit` acknowledgement.
+pub fn submit_line(id: u64) -> String {
+    obj(vec![
+        ("ok", Json::Bool(true)),
+        ("id", Json::Num(id as f64)),
+        ("state", Json::Str("pending".into())),
+    ])
+    .to_string()
+}
+
+/// `shutdown` acknowledgement.
+pub fn shutdown_line() -> String {
+    obj(vec![("ok", Json::Bool(true)), ("shutdown", Json::Bool(true))]).to_string()
+}
+
+/// Bare `{"ok":true,"id":N,"state":...}` (pause/resume/cancel acks).
+pub fn ack_line(s: &Session) -> String {
+    obj(vec![
+        ("ok", Json::Bool(true)),
+        ("id", Json::Num(s.id() as f64)),
+        ("state", Json::Str(s.state().name().into())),
+    ])
+    .to_string()
+}
+
+/// The common per-session status fields.
+fn session_fields(s: &Session) -> Vec<(&'static str, Json)> {
+    let mut f = vec![
+        ("id", Json::Num(s.id() as f64)),
+        ("state", Json::Str(s.state().name().into())),
+        ("workload", Json::Str(s.workload().to_string())),
+        ("method", Json::Str(s.method().into())),
+        ("iters", Json::Num(s.iters_done() as f64)),
+        ("best_loss", num_or_null(s.best_loss())),
+        ("suspended", Json::Bool(s.is_suspended())),
+    ];
+    if let Some(l) = s.last_loss() {
+        f.push(("loss", num_or_null(l)));
+    }
+    if let Some(r) = s.stop_reason() {
+        f.push(("stop_reason", Json::Str(r.into())));
+    }
+    if let Some(e) = s.error() {
+        f.push(("error", Json::Str(e.to_string())));
+    }
+    f
+}
+
+/// `status` for one session.
+pub fn status_line(s: &Session) -> String {
+    let mut fields = vec![("ok", Json::Bool(true))];
+    fields.extend(session_fields(s));
+    obj(fields).to_string()
+}
+
+/// `status` for every session (id order).
+pub fn status_all_line<'a>(sessions: impl Iterator<Item = &'a Session>) -> String {
+    let arr: Vec<Json> = sessions.map(|s| obj(session_fields(s))).collect();
+    obj(vec![("ok", Json::Bool(true)), ("sessions", Json::Arr(arr))]).to_string()
+}
+
+/// `result`: status fields + final loss (+ the iterate on request;
+/// f32 → f64 is exact and the writer prints shortest-roundtrip, so the
+/// client recovers the exact bits).
+pub fn result_line(s: &Session, include_theta: bool) -> String {
+    let mut fields = vec![("ok", Json::Bool(true))];
+    fields.extend(session_fields(s));
+    if let Some(l) = s.last_loss() {
+        fields.push(("final_loss", num_or_null(l)));
+    }
+    if include_theta {
+        match s.theta() {
+            Some(t) => fields.push((
+                "theta",
+                Json::Arr(t.iter().map(|&x| Json::Num(x as f64)).collect()),
+            )),
+            None => fields.push(("theta", Json::Null)),
+        }
+    }
+    obj(fields).to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_submit_with_config_and_budget() {
+        let line = r#"{"cmd":"submit","config":{"workload":"ackley","steps":40,"seed":7,"optex.parallelism":4,"noise_std":0.25,"hlo_workload":false},"budget":{"max_iters":30,"target_loss":0.5,"deadline_s":10.5}}"#;
+        let Request::Submit { overrides, budget } = parse_request(line).unwrap() else {
+            panic!("expected submit");
+        };
+        // key-sorted, values rendered override-grammar-compatible
+        // (strings quoted so they cannot be re-typed by the TOML value
+        // grammar)
+        assert_eq!(
+            overrides,
+            vec![
+                "hlo_workload=false",
+                "noise_std=0.25",
+                "optex.parallelism=4",
+                "seed=7",
+                "steps=40",
+                "workload=\"ackley\"",
+            ]
+        );
+        assert_eq!(budget.max_iters, Some(30));
+        assert_eq!(budget.target_loss, Some(0.5));
+        assert_eq!(budget.deadline_s, Some(10.5));
+    }
+
+    #[test]
+    fn submit_overrides_apply_to_a_run_config() {
+        let line = r#"{"cmd":"submit","config":{"workload":"sphere","synth_dim":64,"optex.t0":5,"optimizer.lr":0.01}}"#;
+        let Request::Submit { overrides, .. } = parse_request(line).unwrap() else {
+            panic!("expected submit");
+        };
+        let mut cfg = crate::config::RunConfig::default();
+        for kv in &overrides {
+            cfg.apply_override(kv).unwrap();
+        }
+        assert_eq!(cfg.workload, "sphere");
+        assert_eq!(cfg.synth_dim, 64);
+        assert_eq!(cfg.optex.t0, 5);
+        assert!((cfg.optimizer.lr() - 0.01).abs() < 1e-12);
+    }
+
+    #[test]
+    fn scalar_looking_strings_stay_strings() {
+        // "7" as a JSON string must reach the config as the STRING "7",
+        // not be re-typed to the integer 7 by the override grammar
+        let line = r#"{"cmd":"submit","config":{"workload":"7","out_dir":"res 2024"}}"#;
+        let Request::Submit { overrides, .. } = parse_request(line).unwrap() else {
+            panic!("expected submit");
+        };
+        assert_eq!(overrides, vec!["out_dir=\"res 2024\"", "workload=\"7\""]);
+        let mut cfg = crate::config::RunConfig::default();
+        for kv in &overrides {
+            cfg.apply_override(kv).unwrap();
+        }
+        assert_eq!(cfg.workload, "7");
+        assert_eq!(cfg.out_dir, std::path::PathBuf::from("res 2024"));
+        // escapes round-trip; unescapable control chars are rejected
+        let line = r#"{"cmd":"submit","config":{"workload":"a\"b\\c"}}"#;
+        let Request::Submit { overrides, .. } = parse_request(line).unwrap() else {
+            panic!("expected submit");
+        };
+        assert_eq!(overrides, vec!["workload=\"a\\\"b\\\\c\""]);
+        let err =
+            parse_request(r#"{"cmd":"submit","config":{"workload":"a\u0007b"}}"#)
+                .unwrap_err();
+        assert!(err.contains("control character"), "{err}");
+    }
+
+    #[test]
+    fn parses_the_simple_commands() {
+        assert!(matches!(
+            parse_request(r#"{"cmd":"status"}"#).unwrap(),
+            Request::Status { id: None }
+        ));
+        assert!(matches!(
+            parse_request(r#"{"cmd":"status","id":3}"#).unwrap(),
+            Request::Status { id: Some(3) }
+        ));
+        assert!(matches!(
+            parse_request(r#"{"cmd":"result","id":2,"theta":true}"#).unwrap(),
+            Request::Result { id: 2, include_theta: true }
+        ));
+        assert!(matches!(
+            parse_request(r#"{"cmd":"result","id":2}"#).unwrap(),
+            Request::Result { id: 2, include_theta: false }
+        ));
+        assert!(matches!(
+            parse_request(r#"{"cmd":"pause","id":1}"#).unwrap(),
+            Request::Pause { id: 1 }
+        ));
+        assert!(matches!(
+            parse_request(r#"{"cmd":"resume","id":1}"#).unwrap(),
+            Request::Resume { id: 1 }
+        ));
+        assert!(matches!(
+            parse_request(r#"{"cmd":"cancel","id":9}"#).unwrap(),
+            Request::Cancel { id: 9 }
+        ));
+        assert!(matches!(
+            parse_request(r#"{"cmd":"shutdown"}"#).unwrap(),
+            Request::Shutdown
+        ));
+    }
+
+    #[test]
+    fn rejects_malformed_requests_with_reasons() {
+        for (line, want) in [
+            ("{", "bad json"),
+            (r#"{"id":1}"#, "missing \"cmd\""),
+            (r#"{"cmd":"fly"}"#, "unknown cmd"),
+            (r#"{"cmd":"pause"}"#, "missing or invalid \"id\""),
+            (r#"{"cmd":"pause","id":-1}"#, "missing or invalid \"id\""),
+            (r#"{"cmd":"submit","config":[1]}"#, "must be an object"),
+            (r#"{"cmd":"submit","config":{"a":[1]}}"#, "unsupported config value"),
+            (r#"{"cmd":"submit","budget":{"max_tokens":5}}"#, "unknown budget field"),
+            (r#"{"cmd":"result","id":1,"theta":"yes"}"#, "must be a bool"),
+        ] {
+            let err = parse_request(line).unwrap_err();
+            assert!(err.contains(want), "{line} -> {err}");
+        }
+    }
+
+    #[test]
+    fn error_and_ack_lines_are_valid_json() {
+        for line in [
+            error_line("no such session 9"),
+            submit_line(4),
+            shutdown_line(),
+        ] {
+            let v = Json::parse(&line).unwrap();
+            assert!(v.get("ok").is_some(), "{line}");
+        }
+        let e = Json::parse(&error_line("x\"y")).unwrap();
+        assert_eq!(e.get("error").unwrap().as_str(), Some("x\"y"));
+        assert_eq!(e.get("ok").unwrap().as_bool(), Some(false));
+    }
+
+    #[test]
+    fn f32_round_trips_exactly_through_the_writer() {
+        // the result_line theta contract, distilled
+        let vals: Vec<f32> = vec![0.1, -3.25, 1.0e-7, 123456.78, f32::MIN_POSITIVE];
+        let arr = Json::Arr(vals.iter().map(|&x| Json::Num(x as f64)).collect());
+        let back = Json::parse(&arr.to_string()).unwrap();
+        let got: Vec<f32> = back
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_f64().unwrap() as f32)
+            .collect();
+        for (a, b) in vals.iter().zip(&got) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+}

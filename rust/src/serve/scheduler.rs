@@ -1,0 +1,427 @@
+//! Cooperative iteration scheduler: many sessions, one compute pool.
+//!
+//! The scheduler steps runnable sessions **one sequential iteration at a
+//! time** on the serve thread. Because the quantum is a whole
+//! `Driver::iteration` — which internally fans out over the shared
+//! [`crate::runtime::NativePool`] — at most one session's fan-out is in
+//! flight at any instant: the pool is time-sliced *between* iterations,
+//! never subdivided within one, so K sessions saturate the same worker
+//! set a single run would without oversubscribing it.
+//!
+//! ## Why determinism holds
+//!
+//! Sessions share no mutable state: each owns its oracle, optimizer,
+//! history arena and RNG streams (forked from its own config seed at
+//! build). The scheduler's only power is *which* session runs its next
+//! iteration — it can never reorder work **within** a session, because a
+//! session's iterations go through one `Driver` whose `iteration(t)` is
+//! called with strictly increasing `t`. Hence every session's trajectory
+//! is bit-identical to the same config/seed run solo, under either
+//! policy, at any pool width, and across pause/resume of *other*
+//! sessions (enforced by `rust/tests/serve_integration.rs`).
+//!
+//! ## Policies
+//!
+//! * [`Policy::RoundRobin`] (default) — strictly cyclic over runnable
+//!   session ids. Fully deterministic given the command sequence.
+//! * [`Policy::WeightedFair`] — pick the runnable session with the
+//!   smallest virtual time (Σ of its per-iteration eval-seconds EMA, see
+//!   `session.rs`), ties broken by id. Sessions with cheap iterations
+//!   get proportionally more turns, so one giant-d session cannot
+//!   starve many small ones. Late arrivals and resumed sessions have
+//!   their virtual time floored to the current minimum over runnable
+//!   sessions (standard WFQ re-entry), so a newcomer competes fairly
+//!   instead of monopolizing the pool until it "catches up". The key is
+//!   *measured* time, so the stepping order is load-dependent —
+//!   trajectories still are not (see above); only per-session
+//!   completion order varies.
+//!
+//! ## Retention
+//!
+//! Finished sessions (`Done`/`Failed`) stay queryable so clients can
+//! poll `status` and fetch `result`, but a long-lived server must not
+//! grow without bound: beyond `max_sessions` finished sessions, the
+//! oldest are evicted at the next admission. Fetch results within that
+//! window (it is as wide as the admission cap itself).
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use anyhow::{bail, Result};
+
+use crate::config::RunConfig;
+use crate::serve::session::{Budget, Session};
+use crate::workloads::GradSource;
+
+/// Iteration scheduling policy (`serve.policy`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Policy {
+    /// Deterministic cyclic order over runnable sessions.
+    RoundRobin,
+    /// Least-virtual-time first, keyed on the per-session eval_s EMA.
+    WeightedFair,
+}
+
+impl Policy {
+    pub fn parse(s: &str) -> Option<Policy> {
+        match s {
+            "rr" | "round_robin" | "roundrobin" => Some(Policy::RoundRobin),
+            "fair" | "wfq" => Some(Policy::WeightedFair),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Policy::RoundRobin => "rr",
+            Policy::WeightedFair => "fair",
+        }
+    }
+}
+
+/// Owns the session table and picks which session runs next.
+pub struct Scheduler {
+    sessions: BTreeMap<u64, Session>,
+    next_id: u64,
+    max_sessions: usize,
+    policy: Policy,
+    ckpt_dir: PathBuf,
+    /// Round-robin cursor: id of the last stepped session.
+    rr_last: u64,
+}
+
+impl Scheduler {
+    pub fn new(max_sessions: usize, policy: Policy, ckpt_dir: PathBuf) -> Scheduler {
+        assert!(max_sessions >= 1, "scheduler needs capacity for one session");
+        Scheduler {
+            sessions: BTreeMap::new(),
+            next_id: 1,
+            max_sessions,
+            policy,
+            ckpt_dir,
+            rr_last: 0,
+        }
+    }
+
+    /// Sessions currently holding admission capacity.
+    pub fn active_count(&self) -> usize {
+        self.sessions.values().filter(|s| s.is_active()).count()
+    }
+
+    fn admit<F>(&mut self, build: F) -> Result<u64>
+    where
+        F: FnOnce(u64) -> Result<Session>,
+    {
+        if self.active_count() >= self.max_sessions {
+            bail!(
+                "at capacity: {} active sessions (serve.max_sessions = {})",
+                self.active_count(),
+                self.max_sessions
+            );
+        }
+        let id = self.next_id;
+        let mut session = build(id)?;
+        self.next_id += 1;
+        // WFQ re-entry rule: a fresh session competes from the current
+        // minimum virtual time, not from zero (else it would win every
+        // pick until it caught up — starving the incumbents).
+        session.set_vtime(self.min_runnable_vtime());
+        self.sessions.insert(id, session);
+        self.evict_finished();
+        Ok(id)
+    }
+
+    /// Smallest virtual time over runnable sessions (0 when none).
+    fn min_runnable_vtime(&self) -> f64 {
+        let m = self
+            .sessions
+            .values()
+            .filter(|s| s.is_runnable())
+            .map(Session::vtime)
+            .fold(f64::INFINITY, f64::min);
+        if m.is_finite() {
+            m
+        } else {
+            0.0
+        }
+    }
+
+    /// Drop the oldest finished sessions beyond the retention window
+    /// (= `max_sessions`), bounding the table for long-lived servers.
+    fn evict_finished(&mut self) {
+        loop {
+            let finished: Vec<u64> = self
+                .sessions
+                .iter()
+                .filter(|(_, s)| !s.is_active())
+                .map(|(&id, _)| id)
+                .collect();
+            if finished.len() <= self.max_sessions {
+                return;
+            }
+            self.sessions.remove(&finished[0]);
+        }
+    }
+
+    /// Admit a factory-built session (the wire-protocol path).
+    pub fn submit(&mut self, cfg: RunConfig, budget: Budget) -> Result<u64> {
+        let dir = self.ckpt_dir.clone();
+        self.admit(|id| Session::build(id, cfg, budget, &dir))
+    }
+
+    /// Admit a session around an injected oracle (tests, benches, RL).
+    pub fn submit_with_source(
+        &mut self,
+        cfg: RunConfig,
+        source: Box<dyn GradSource>,
+        budget: Budget,
+    ) -> Result<u64> {
+        self.admit(|id| Session::with_source(id, cfg, source, budget))
+    }
+
+    /// Pick the next runnable session under the policy (None when no
+    /// session is runnable).
+    fn pick(&self) -> Option<u64> {
+        match self.policy {
+            Policy::RoundRobin => {
+                // first runnable id strictly after the cursor, else wrap
+                self.sessions
+                    .range(self.rr_last + 1..)
+                    .find(|(_, s)| s.is_runnable())
+                    .or_else(|| {
+                        self.sessions
+                            .range(..=self.rr_last)
+                            .find(|(_, s)| s.is_runnable())
+                    })
+                    .map(|(&id, _)| id)
+            }
+            Policy::WeightedFair => self
+                .sessions
+                .values()
+                .filter(|s| s.is_runnable())
+                // BTreeMap iterates in id order, so strict `<` on vtime
+                // breaks ties toward the smaller id deterministically.
+                .fold(None::<&Session>, |best, s| match best {
+                    Some(b) if b.vtime() <= s.vtime() => Some(b),
+                    _ => Some(s),
+                })
+                .map(|s| s.id()),
+        }
+    }
+
+    /// Run ONE iteration of one session; returns its id, or None when
+    /// nothing is runnable (all pending work done/paused). Session
+    /// failures are absorbed into the session's state, never propagated.
+    pub fn tick(&mut self) -> Option<u64> {
+        let id = self.pick()?;
+        self.rr_last = id;
+        self.sessions.get_mut(&id).expect("picked id exists").step();
+        Some(id)
+    }
+
+    /// Drive every runnable session to completion (test/bench harness;
+    /// the server interleaves `tick` with protocol commands instead).
+    pub fn run_to_completion(&mut self) {
+        while self.tick().is_some() {}
+    }
+
+    pub fn session(&self, id: u64) -> Option<&Session> {
+        self.sessions.get(&id)
+    }
+
+    pub fn sessions(&self) -> impl Iterator<Item = &Session> {
+        self.sessions.values()
+    }
+
+    pub fn pause(&mut self, id: u64) -> Result<()> {
+        self.get_mut(id)?.pause()
+    }
+
+    pub fn resume(&mut self, id: u64) -> Result<()> {
+        // WFQ re-entry: a session resumed after a long pause must not
+        // monopolize the pool catching up to the incumbents' vtime.
+        // (Floor computed over the OTHER runnable sessions, before this
+        // one rejoins them.)
+        let floor = self
+            .sessions
+            .iter()
+            .filter(|(&sid, s)| sid != id && s.is_runnable())
+            .map(|(_, s)| s.vtime())
+            .fold(f64::INFINITY, f64::min);
+        self.get_mut(id)?.resume()?;
+        if floor.is_finite() {
+            let s = self.get_mut(id)?;
+            if s.vtime() < floor {
+                s.set_vtime(floor);
+            }
+        }
+        Ok(())
+    }
+
+    pub fn cancel(&mut self, id: u64) -> Result<()> {
+        self.get_mut(id)?.cancel()
+    }
+
+    fn get_mut(&mut self, id: u64) -> Result<&mut Session> {
+        match self.sessions.get_mut(&id) {
+            Some(s) => Ok(s),
+            None => bail!("no such session {id}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::opt::OptSpec;
+    use crate::serve::session::SessionState;
+
+    fn synth_cfg(seed: u64, steps: usize) -> RunConfig {
+        let mut cfg = RunConfig::default();
+        cfg.workload = "sphere".into();
+        cfg.steps = steps;
+        cfg.seed = seed;
+        cfg.synth_dim = 32;
+        cfg.optimizer = OptSpec::Sgd { lr: 0.05 };
+        cfg.optex.parallelism = 2;
+        cfg.optex.t0 = 4;
+        cfg.optex.threads = 1;
+        cfg
+    }
+
+    fn sched(policy: Policy, cap: usize, tag: &str) -> Scheduler {
+        Scheduler::new(cap, policy, crate::testutil::fixtures::tmp_ckpt_dir(tag))
+    }
+
+    #[test]
+    fn round_robin_interleaves_in_id_order() {
+        let mut s = sched(Policy::RoundRobin, 8, "rr");
+        let a = s.submit(synth_cfg(1, 3), Budget::default()).unwrap();
+        let b = s.submit(synth_cfg(2, 3), Budget::default()).unwrap();
+        let c = s.submit(synth_cfg(3, 3), Budget::default()).unwrap();
+        let mut order = Vec::new();
+        while let Some(id) = s.tick() {
+            order.push(id);
+        }
+        assert_eq!(order, vec![a, b, c, a, b, c, a, b, c]);
+        for id in [a, b, c] {
+            assert_eq!(s.session(id).unwrap().state(), SessionState::Done);
+        }
+    }
+
+    #[test]
+    fn round_robin_skips_paused_and_resumes() {
+        let mut s = sched(Policy::RoundRobin, 8, "pause");
+        let a = s.submit(synth_cfg(1, 2), Budget::default()).unwrap();
+        let b = s.submit(synth_cfg(2, 2), Budget::default()).unwrap();
+        s.pause(a).unwrap();
+        assert_eq!(s.tick(), Some(b));
+        assert_eq!(s.tick(), Some(b));
+        assert_eq!(s.tick(), None, "paused session must not be stepped");
+        s.resume(a).unwrap();
+        assert_eq!(s.tick(), Some(a));
+        assert_eq!(s.tick(), Some(a));
+        assert_eq!(s.tick(), None);
+        assert_eq!(s.session(a).unwrap().state(), SessionState::Done);
+    }
+
+    #[test]
+    fn weighted_fair_completes_everything() {
+        let mut s = sched(Policy::WeightedFair, 8, "fair");
+        for seed in 0..4 {
+            s.submit(synth_cfg(seed, 5), Budget::default()).unwrap();
+        }
+        s.run_to_completion();
+        assert!(s.sessions().all(|x| x.state() == SessionState::Done));
+        assert!(s.sessions().all(|x| x.iters_done() == 5));
+    }
+
+    #[test]
+    fn admission_cap_enforced_and_freed_by_completion() {
+        let mut s = sched(Policy::RoundRobin, 2, "cap");
+        let a = s.submit(synth_cfg(1, 1), Budget::default()).unwrap();
+        let _b = s.submit(synth_cfg(2, 5), Budget::default()).unwrap();
+        let err = s.submit(synth_cfg(3, 1), Budget::default()).unwrap_err();
+        assert!(format!("{err:#}").contains("at capacity"), "{err:#}");
+        // finish session a (1 step) -> capacity frees up
+        while s.session(a).unwrap().is_runnable() {
+            s.tick();
+        }
+        assert_eq!(s.active_count(), 1);
+        s.submit(synth_cfg(3, 1), Budget::default()).unwrap();
+    }
+
+    #[test]
+    fn ids_are_monotonic_and_commands_reject_unknown_ids() {
+        let mut s = sched(Policy::RoundRobin, 4, "ids");
+        let a = s.submit(synth_cfg(1, 1), Budget::default()).unwrap();
+        let b = s.submit(synth_cfg(2, 1), Budget::default()).unwrap();
+        assert!(b > a);
+        assert!(s.pause(999).is_err());
+        assert!(s.resume(999).is_err());
+        assert!(s.cancel(999).is_err());
+        assert!(s.session(999).is_none());
+    }
+
+    #[test]
+    fn wfq_late_arrival_starts_at_incumbent_min_vtime() {
+        let mut s = sched(Policy::WeightedFair, 8, "wfq_floor");
+        let a = s.submit(synth_cfg(1, 50), Budget::default()).unwrap();
+        for _ in 0..10 {
+            s.tick();
+        }
+        let a_vtime = s.session(a).unwrap().vtime();
+        // the newcomer competes from the incumbents' minimum, not zero —
+        // else it would win every pick until it "caught up"
+        let b = s.submit(synth_cfg(2, 50), Budget::default()).unwrap();
+        assert_eq!(s.session(b).unwrap().vtime(), a_vtime);
+    }
+
+    #[test]
+    fn wfq_resume_floors_vtime_to_other_runnables() {
+        let mut s = sched(Policy::WeightedFair, 8, "wfq_resume");
+        let a = s.submit(synth_cfg(1, 50), Budget::default()).unwrap();
+        let b = s.submit(synth_cfg(2, 50), Budget::default()).unwrap();
+        s.pause(a).unwrap();
+        for _ in 0..10 {
+            s.tick(); // only b runs, accruing vtime
+        }
+        let b_vtime = s.session(b).unwrap().vtime();
+        s.resume(a).unwrap();
+        assert!(
+            s.session(a).unwrap().vtime() >= b_vtime,
+            "resumed session must not replay the pause as scheduling credit"
+        );
+    }
+
+    #[test]
+    fn finished_sessions_evicted_beyond_retention_window() {
+        let mut s = sched(Policy::RoundRobin, 2, "evict");
+        let mut finished = Vec::new();
+        for seed in 0..5 {
+            let id = s.submit(synth_cfg(seed, 1), Budget::default()).unwrap();
+            s.run_to_completion();
+            finished.push(id);
+        }
+        // eviction runs at admission: submits #4 and #5 each trimmed the
+        // then-oldest finished session, so ids 1 and 2 are gone and the
+        // table is bounded at retention + the latest completion
+        assert!(s.session(finished[0]).is_none(), "oldest finished must be evicted");
+        assert!(s.session(finished[1]).is_none());
+        assert!(s.session(finished[2]).is_some());
+        assert!(s.session(finished[3]).is_some());
+        assert!(s.session(finished[4]).is_some());
+        assert_eq!(s.sessions().count(), 3);
+    }
+
+    #[test]
+    fn failed_build_does_not_leak_capacity_or_ids() {
+        let mut s = sched(Policy::RoundRobin, 4, "badcfg");
+        let mut bad = synth_cfg(1, 1);
+        bad.workload = "imagenet".into();
+        assert!(s.submit(bad, Budget::default()).is_err());
+        assert_eq!(s.active_count(), 0);
+        let id = s.submit(synth_cfg(1, 1), Budget::default()).unwrap();
+        assert_eq!(id, 1, "failed submit must not consume an id");
+    }
+}

@@ -1,0 +1,295 @@
+//! The serve loop: a `TcpListener` accept thread feeding the scheduler
+//! thread through an mpsc command queue.
+//!
+//! ## Threading model
+//!
+//! * **Scheduler thread** (the caller of [`Server::run`]) — owns the
+//!   [`Scheduler`] and every session in it. All optimization work
+//!   happens here, one session-iteration per quantum; within a quantum
+//!   the iteration fans out over the shared native pool. Sessions are
+//!   therefore free to hold non-`Send` state (the RL oracle does).
+//! * **Accept thread** — blocks on `accept`, spawns one reader thread
+//!   per connection. Woken for exit by a self-connect at shutdown.
+//! * **Connection threads** — parse one JSONL request per line, ship
+//!   `(Request, reply_tx)` to the scheduler, write the reply line back.
+//!
+//! The command queue is drained *before every scheduler quantum*, so
+//! protocol latency is bounded by one session iteration, and command
+//! application order is the arrival order — deterministic from a
+//! client's point of view (its own commands are answered in order).
+//!
+//! Shutdown: the `shutdown` command is acknowledged, the queue stops
+//! being served, and the accept thread is woken to exit. In-flight
+//! sessions are dropped with the scheduler; sessions suspended at
+//! shutdown leave their checkpoint files in `serve.ckpt_dir` for manual
+//! inspection/recovery — cross-process adoption of those checkpoints is
+//! a ROADMAP follow-up, not yet a protocol feature (and a new server
+//! reuses session ids from 1, so point it at a fresh ckpt_dir).
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{self, Receiver, Sender, TryRecvError};
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::config::RunConfig;
+use crate::serve::protocol::{self, Request};
+use crate::serve::scheduler::Scheduler;
+
+/// Hard cap on one request line (a `submit` with a large config object
+/// is well under 1 KiB; 1 MiB leaves room without letting a client
+/// stream an endless newline-free line into server memory).
+const MAX_LINE_BYTES: u64 = 1 << 20;
+
+/// Cap on concurrently served connections (each costs one reader
+/// thread). Excess connects are dropped at accept.
+const MAX_CONNS: usize = 256;
+
+type Command = (Request, Sender<String>);
+
+/// A bound serving endpoint. `bind` starts accepting connections;
+/// [`Server::run`] processes them (call it on the same thread — the
+/// scheduler owns non-`Send` session state, which the compiler enforces).
+pub struct Server {
+    listener: TcpListener,
+    rx: Receiver<Command>,
+    sched: Scheduler,
+    base_cfg: RunConfig,
+    shutdown: Arc<AtomicBool>,
+}
+
+impl Server {
+    /// Bind `cfg.serve.addr` and start the accept thread. Submitted
+    /// sessions start from `cfg` with the request's `config` overrides
+    /// applied on top.
+    pub fn bind(cfg: &RunConfig) -> Result<Server> {
+        let listener = TcpListener::bind(&cfg.serve.addr)
+            .with_context(|| format!("binding serve.addr {:?}", cfg.serve.addr))?;
+        std::fs::create_dir_all(&cfg.serve.ckpt_dir)
+            .with_context(|| format!("creating serve.ckpt_dir {:?}", cfg.serve.ckpt_dir))?;
+        let (tx, rx) = mpsc::channel();
+        let shutdown = Arc::new(AtomicBool::new(false));
+        {
+            let listener = listener.try_clone()?;
+            let shutdown = Arc::clone(&shutdown);
+            std::thread::Builder::new()
+                .name("optex-serve-accept".into())
+                .spawn(move || accept_loop(listener, tx, shutdown))?;
+        }
+        let sched = Scheduler::new(
+            cfg.serve.max_sessions,
+            cfg.serve.policy,
+            cfg.serve.ckpt_dir.clone(),
+        );
+        Ok(Server { listener, rx, sched, base_cfg: cfg.clone(), shutdown })
+    }
+
+    /// The bound address (resolves port 0 to the ephemeral port).
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    /// Serve until a `shutdown` command (or every client handle is
+    /// gone). Commands are drained before each scheduler quantum.
+    pub fn run(mut self) -> Result<()> {
+        loop {
+            loop {
+                match self.rx.try_recv() {
+                    Ok(cmd) => {
+                        if self.dispatch(cmd) {
+                            return self.stop();
+                        }
+                    }
+                    Err(TryRecvError::Empty) => break,
+                    Err(TryRecvError::Disconnected) => return self.stop(),
+                }
+            }
+            if self.sched.tick().is_none() {
+                // Nothing runnable — and nothing BECOMES runnable except
+                // through a command on this queue (paused deadlines are
+                // only enforced when a session next steps), so a
+                // blocking recv is both correct and wakeup-free for an
+                // idle long-lived server.
+                match self.rx.recv() {
+                    Ok(cmd) => {
+                        if self.dispatch(cmd) {
+                            return self.stop();
+                        }
+                    }
+                    Err(mpsc::RecvError) => return self.stop(),
+                }
+            }
+        }
+    }
+
+    fn stop(&mut self) -> Result<()> {
+        self.shutdown.store(true, Ordering::SeqCst);
+        // wake the accept thread so it observes the flag and exits
+        if let Ok(addr) = self.listener.local_addr() {
+            let _ = TcpStream::connect(addr);
+        }
+        Ok(())
+    }
+
+    /// Apply one command; returns true on shutdown. Replies are
+    /// best-effort — a vanished client must not stall the scheduler.
+    fn dispatch(&mut self, (req, reply): Command) -> bool {
+        let line = match req {
+            Request::Shutdown => {
+                let _ = reply.send(protocol::shutdown_line());
+                return true;
+            }
+            Request::Submit { overrides, budget } => {
+                let mut cfg = self.base_cfg.clone();
+                let applied: Result<(), _> =
+                    overrides.iter().try_for_each(|kv| cfg.apply_override(kv));
+                match applied {
+                    Err(e) => protocol::error_line(&e.to_string()),
+                    Ok(()) => match self.sched.submit(cfg, budget) {
+                        Ok(id) => protocol::submit_line(id),
+                        Err(e) => protocol::error_line(&format!("{e:#}")),
+                    },
+                }
+            }
+            Request::Status { id: None } => {
+                protocol::status_all_line(self.sched.sessions())
+            }
+            Request::Status { id: Some(id) } => match self.sched.session(id) {
+                Some(s) => protocol::status_line(s),
+                None => protocol::error_line(&format!("no such session {id}")),
+            },
+            Request::Result { id, include_theta } => match self.sched.session(id) {
+                Some(s) => protocol::result_line(s, include_theta),
+                None => protocol::error_line(&format!("no such session {id}")),
+            },
+            Request::Pause { id } => self.ack(id, Scheduler::pause),
+            Request::Resume { id } => self.ack(id, Scheduler::resume),
+            Request::Cancel { id } => self.ack(id, Scheduler::cancel),
+        };
+        let _ = reply.send(line);
+        false
+    }
+
+    fn ack(&mut self, id: u64, op: fn(&mut Scheduler, u64) -> Result<()>) -> String {
+        match op(&mut self.sched, id) {
+            Ok(()) => protocol::ack_line(self.sched.session(id).expect("op verified id")),
+            Err(e) => protocol::error_line(&format!("{e:#}")),
+        }
+    }
+}
+
+fn accept_loop(listener: TcpListener, tx: Sender<Command>, shutdown: Arc<AtomicBool>) {
+    let conns = Arc::new(AtomicUsize::new(0));
+    for conn in listener.incoming() {
+        if shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+        let Ok(stream) = conn else { continue };
+        // connection cap: each connection holds a reader thread; shed
+        // excess load at accept instead of exhausting threads
+        if conns.fetch_add(1, Ordering::SeqCst) >= MAX_CONNS {
+            conns.fetch_sub(1, Ordering::SeqCst);
+            let mut s = stream;
+            let _ = s.write_all(protocol::error_line("too many connections").as_bytes());
+            let _ = s.write_all(b"\n");
+            continue;
+        }
+        let tx = tx.clone();
+        let conns = Arc::clone(&conns);
+        let spawned = std::thread::Builder::new()
+            .name("optex-serve-conn".into())
+            .spawn(move || {
+                handle_conn(stream, tx);
+                conns.fetch_sub(1, Ordering::SeqCst);
+            });
+        if spawned.is_err() {
+            conns.fetch_sub(1, Ordering::SeqCst);
+        }
+    }
+}
+
+/// Read one `\n`-terminated line of at most [`MAX_LINE_BYTES`]. Returns
+/// `Ok(None)` on clean EOF, `Err(())` on I/O error or an over-long line
+/// (the connection is beyond salvage — the rest of the line would be
+/// parsed as garbage requests).
+fn read_line_capped(reader: &mut BufReader<TcpStream>) -> Result<Option<String>, ()> {
+    let mut line = String::new();
+    let mut limited = (&mut *reader).take(MAX_LINE_BYTES);
+    match limited.read_line(&mut line) {
+        Ok(0) => Ok(None),
+        Ok(n) => {
+            if n as u64 >= MAX_LINE_BYTES && !line.ends_with('\n') {
+                Err(())
+            } else {
+                Ok(Some(line))
+            }
+        }
+        Err(_) => Err(()),
+    }
+}
+
+/// One JSONL request/response exchange per line until the client hangs
+/// up (or the server shuts down mid-request).
+fn handle_conn(stream: TcpStream, tx: Sender<Command>) {
+    let Ok(read_half) = stream.try_clone() else { return };
+    let mut writer = stream;
+    let mut reader = BufReader::new(read_half);
+    loop {
+        let line = match read_line_capped(&mut reader) {
+            Ok(Some(line)) => line,
+            Ok(None) => return,
+            Err(()) => {
+                let _ = writer
+                    .write_all(protocol::error_line("request line too long").as_bytes())
+                    .and_then(|_| writer.write_all(b"\n"));
+                return;
+            }
+        };
+        if line.trim().is_empty() {
+            continue;
+        }
+        let mut was_shutdown = false;
+        let reply = match protocol::parse_request(&line) {
+            Err(e) => protocol::error_line(&e),
+            Ok(req) => {
+                was_shutdown = matches!(req, Request::Shutdown);
+                let (rtx, rrx) = mpsc::channel();
+                if tx.send((req, rtx)).is_err() {
+                    protocol::error_line("server is shutting down")
+                } else {
+                    match rrx.recv() {
+                        Ok(l) => l,
+                        Err(_) => protocol::error_line("server is shutting down"),
+                    }
+                }
+            }
+        };
+        if writer
+            .write_all(reply.as_bytes())
+            .and_then(|_| writer.write_all(b"\n"))
+            .and_then(|_| writer.flush())
+            .is_err()
+        {
+            return;
+        }
+        if was_shutdown {
+            return;
+        }
+    }
+}
+
+/// `optex serve` entrypoint: bind, announce, run until shutdown.
+pub fn serve(cfg: &RunConfig) -> Result<()> {
+    let server = Server::bind(cfg)?;
+    println!(
+        "serve: listening on {} (max_sessions={}, policy={}, threads={}, pool={})",
+        server.local_addr()?,
+        cfg.serve.max_sessions,
+        cfg.serve.policy.name(),
+        cfg.optex.threads,
+        cfg.optex.pool.name(),
+    );
+    server.run()
+}

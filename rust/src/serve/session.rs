@@ -1,0 +1,580 @@
+//! One serving session: a [`Driver`] wrapped with identity, lifecycle
+//! state, a budget, and checkpoint-backed suspend/resume.
+//!
+//! A session is the serving subsystem's unit of work (a *run* was the
+//! binary's). It owns everything the driver owns — oracle, optimizer,
+//! `GradStore` arena, RNG streams (forked from `cfg.seed` at build) — so
+//! K concurrent sessions of dimension d hold K·T₀·d gradient floats
+//! total and nothing is shared between sessions except the compute
+//! substrate. That isolation is what makes the scheduler's determinism
+//! argument trivial: stepping order across sessions cannot influence any
+//! session's numerics (see `scheduler.rs`).
+//!
+//! ## Lifecycle
+//!
+//! ```text
+//! Pending ──step──▶ Running ──budget/cancel/error──▶ Done | Failed
+//!    ▲                │ ▲
+//!    └───── (admit)   │ └──resume──┐
+//!                   pause ──▶ Paused
+//! ```
+//!
+//! `pause` on a factory-built session is a checkpoint-backed *suspend*:
+//! the run is streamed to disk via the existing `checkpoint` module and
+//! the driver (arena included) is dropped, so paused sessions cost a
+//! file, not T₀·d floats of RAM. `resume` rebuilds the driver from the
+//! session's config and restores it with [`Driver::resume_from`] — for
+//! deterministic workloads the continued trajectory is bit-identical to
+//! an unpaused run (the standard checkpoint caveat applies to stochastic
+//! oracles: their data-sampler RNG restarts from the config seed).
+//! Sessions built around an injected oracle (tests, RL) cannot be
+//! rebuilt, so their pause keeps the driver in memory.
+
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::config::RunConfig;
+use crate::coordinator::metrics::IterRecord;
+use crate::coordinator::Driver;
+use crate::workloads::{factory, GradSource};
+
+/// EMA smoothing for the per-session eval-seconds estimate feeding the
+/// weighted-fair scheduler (~"last 10 iterations" horizon).
+const EVAL_EMA_ALPHA: f64 = 0.2;
+
+/// Session lifecycle state.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SessionState {
+    /// Admitted, not yet stepped.
+    Pending,
+    /// Being stepped by the scheduler.
+    Running,
+    /// Suspended (checkpoint on disk for rebuildable sessions).
+    Paused,
+    /// Budget exhausted or target reached; result available.
+    Done,
+    /// Driver error or client cancel; `error()` has the reason.
+    Failed,
+}
+
+impl SessionState {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SessionState::Pending => "pending",
+            SessionState::Running => "running",
+            SessionState::Paused => "paused",
+            SessionState::Done => "done",
+            SessionState::Failed => "failed",
+        }
+    }
+}
+
+/// Per-session stopping budget. Every bound is optional; `max_iters`
+/// defaults to the config's `steps`.
+#[derive(Clone, Debug, Default)]
+pub struct Budget {
+    /// Hard cap on sequential iterations (None → `cfg.steps`).
+    pub max_iters: Option<u64>,
+    /// Stop as soon as the best loss reaches this value.
+    pub target_loss: Option<f64>,
+    /// Wall-clock deadline in seconds since submission. Checked before
+    /// each step of a runnable session (a paused session's clock keeps
+    /// ticking but is only enforced once it runs again).
+    pub deadline_s: Option<f64>,
+}
+
+impl Budget {
+    fn effective_max(&self, cfg_steps: usize) -> u64 {
+        self.max_iters.unwrap_or(cfg_steps as u64)
+    }
+}
+
+/// A [`Driver`] under serving management. See the module docs for the
+/// lifecycle; construction is via [`Session::build`] (config → factory
+/// workload, the protocol path) or [`Session::with_source`] (injected
+/// oracle — tests, benches, RL).
+pub struct Session {
+    id: u64,
+    cfg: RunConfig,
+    budget: Budget,
+    state: SessionState,
+    /// None once finished or suspended-to-disk (the arena is freed).
+    driver: Option<Driver>,
+    /// Factory-built sessions can be rebuilt from `cfg` after a suspend;
+    /// injected-oracle sessions cannot (their pause keeps the driver).
+    rebuildable: bool,
+    ckpt_path: Option<PathBuf>,
+    iters_done: u64,
+    /// Metric rows carried across suspend cycles and capture-at-finish
+    /// (the driver's record dies with the driver).
+    archived_rows: Vec<IterRecord>,
+    archived_best: f64,
+    stop_reason: Option<&'static str>,
+    error: Option<String>,
+    final_theta: Option<Vec<f32>>,
+    /// `(store_allocs, grad_bytes_copied)` captured when the driver is
+    /// released — the steady-state zero-alloc/zero-copy evidence for the
+    /// serve bench (ISSUE 4 acceptance).
+    counters: Option<(u64, u64)>,
+    submitted_at: Instant,
+    /// Cumulative driver `eval_wall_s` already accounted (resets with
+    /// the driver on resume-from-suspend).
+    eval_cum_seen: f64,
+    eval_ema_s: f64,
+    /// Weighted-fair virtual time: Σ of the EMA at each step taken.
+    vtime: f64,
+}
+
+impl Session {
+    /// Build from config via the workload factory (the protocol path).
+    /// `ckpt_dir` hosts this session's suspend file.
+    pub fn build(id: u64, cfg: RunConfig, budget: Budget, ckpt_dir: &Path) -> Result<Session> {
+        let workload = factory::build(&cfg)?;
+        let mut driver = Driver::new(cfg.clone(), workload)?;
+        driver.set_session_id(id);
+        Ok(Session::assemble(
+            id,
+            cfg,
+            budget,
+            driver,
+            true,
+            Some(ckpt_dir.join(format!("session_{id}.ckpt"))),
+        ))
+    }
+
+    /// Build around an injected oracle (tests, benches, the RL stack).
+    /// Not rebuildable: pause keeps the driver in memory.
+    pub fn with_source(
+        id: u64,
+        cfg: RunConfig,
+        source: Box<dyn GradSource>,
+        budget: Budget,
+    ) -> Result<Session> {
+        let mut driver = Driver::with_source(cfg.clone(), source, None)?;
+        driver.set_session_id(id);
+        Ok(Session::assemble(id, cfg, budget, driver, false, None))
+    }
+
+    fn assemble(
+        id: u64,
+        cfg: RunConfig,
+        budget: Budget,
+        driver: Driver,
+        rebuildable: bool,
+        ckpt_path: Option<PathBuf>,
+    ) -> Session {
+        Session {
+            id,
+            cfg,
+            budget,
+            state: SessionState::Pending,
+            driver: Some(driver),
+            rebuildable,
+            ckpt_path,
+            iters_done: 0,
+            archived_rows: Vec::new(),
+            archived_best: f64::INFINITY,
+            stop_reason: None,
+            error: None,
+            final_theta: None,
+            counters: None,
+            submitted_at: Instant::now(),
+            eval_cum_seen: 0.0,
+            eval_ema_s: 0.0,
+            vtime: 0.0,
+        }
+    }
+
+    // -- accessors -----------------------------------------------------------
+
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    pub fn state(&self) -> SessionState {
+        self.state
+    }
+
+    /// Eligible for a scheduler step.
+    pub fn is_runnable(&self) -> bool {
+        matches!(self.state, SessionState::Pending | SessionState::Running)
+    }
+
+    /// Holds admission capacity (not yet finished).
+    pub fn is_active(&self) -> bool {
+        !matches!(self.state, SessionState::Done | SessionState::Failed)
+    }
+
+    /// Paused with the driver released to a checkpoint file.
+    pub fn is_suspended(&self) -> bool {
+        self.state == SessionState::Paused && self.driver.is_none()
+    }
+
+    pub fn iters_done(&self) -> u64 {
+        self.iters_done
+    }
+
+    pub fn workload(&self) -> &str {
+        &self.cfg.workload
+    }
+
+    pub fn method(&self) -> &'static str {
+        self.cfg.method.name()
+    }
+
+    pub fn stop_reason(&self) -> Option<&'static str> {
+        self.stop_reason
+    }
+
+    pub fn error(&self) -> Option<&str> {
+        self.error.as_deref()
+    }
+
+    /// Best loss across the whole session (archived + live driver).
+    pub fn best_loss(&self) -> f64 {
+        let live = self.driver.as_ref().map(|d| d.best_loss()).unwrap_or(f64::INFINITY);
+        self.archived_best.min(live)
+    }
+
+    /// All metric rows so far, suspend cycles included, in order.
+    pub fn rows(&self) -> Vec<IterRecord> {
+        let mut rows = self.archived_rows.clone();
+        if let Some(d) = &self.driver {
+            rows.extend(d.record().rows.iter().cloned());
+        }
+        rows
+    }
+
+    /// Loss of the most recent logged iteration.
+    pub fn last_loss(&self) -> Option<f64> {
+        if let Some(d) = &self.driver {
+            if let Some(r) = d.record().rows.last() {
+                return Some(r.loss);
+            }
+        }
+        self.archived_rows.last().map(|r| r.loss)
+    }
+
+    /// Current (live) or final (finished) iterate. None only while
+    /// suspended — the iterate lives in the checkpoint file.
+    pub fn theta(&self) -> Option<Vec<f32>> {
+        if let Some(d) = &self.driver {
+            return Some(d.theta().to_vec());
+        }
+        self.final_theta.clone()
+    }
+
+    /// `(store_allocs, grad_bytes_copied)` of the session's arena — live
+    /// from the driver, or as captured when it was released.
+    pub fn grad_counters(&self) -> Option<(u64, u64)> {
+        if let Some(d) = &self.driver {
+            return Some((d.history().store_allocs(), d.history().grad_bytes_copied()));
+        }
+        self.counters
+    }
+
+    /// Smoothed measured eval-seconds per iteration (weighted-fair key).
+    pub fn eval_ema_s(&self) -> f64 {
+        self.eval_ema_s
+    }
+
+    /// Accumulated weighted-fair virtual time.
+    pub fn vtime(&self) -> f64 {
+        self.vtime
+    }
+
+    /// Scheduler hook: floor the virtual time on admission/re-entry
+    /// (standard WFQ — a newcomer competes from the incumbents' minimum,
+    /// it does not monopolize the pool "catching up" from zero).
+    pub(crate) fn set_vtime(&mut self, v: f64) {
+        self.vtime = v;
+    }
+
+    pub fn submitted_at(&self) -> Instant {
+        self.submitted_at
+    }
+
+    // -- lifecycle -----------------------------------------------------------
+
+    /// Run exactly ONE sequential iteration (the scheduler's quantum) and
+    /// apply budget checks. No-op unless runnable. Driver errors mark the
+    /// session Failed (never propagate — one session's oracle blowing up
+    /// must not take the serve loop down).
+    pub fn step(&mut self) {
+        if !self.is_runnable() {
+            return;
+        }
+        if let Some(dl) = self.budget.deadline_s {
+            if self.submitted_at.elapsed().as_secs_f64() >= dl {
+                self.finish(SessionState::Done, Some("deadline"), None);
+                return;
+            }
+        }
+        // iteration-count budget gates BEFORE the step (a max_iters: 0
+        // submission must not run a fan-out); target_loss stays
+        // post-step — it needs at least one observation to be
+        // meaningful (best_loss is +inf until then).
+        if self.iters_done >= self.budget.effective_max(self.cfg.steps) {
+            self.finish(SessionState::Done, Some("max_iters"), None);
+            return;
+        }
+        self.state = SessionState::Running;
+        let t = (self.iters_done + 1) as usize;
+        let drv = self.driver.as_mut().expect("runnable session has a driver");
+        let outcome = drv.iteration(t);
+        let cum = drv.eval_wall_s();
+        if let Err(e) = outcome {
+            self.finish(SessionState::Failed, None, Some(format!("{e:#}")));
+            return;
+        }
+        self.iters_done += 1;
+        let delta = (cum - self.eval_cum_seen).max(0.0);
+        self.eval_cum_seen = cum;
+        self.eval_ema_s = if self.iters_done == 1 {
+            delta
+        } else {
+            EVAL_EMA_ALPHA * delta + (1.0 - EVAL_EMA_ALPHA) * self.eval_ema_s
+        };
+        self.vtime += self.eval_ema_s;
+
+        if self.iters_done >= self.budget.effective_max(self.cfg.steps) {
+            self.finish(SessionState::Done, Some("max_iters"), None);
+        } else if let Some(target) = self.budget.target_loss {
+            if self.best_loss() <= target {
+                self.finish(SessionState::Done, Some("target_loss"), None);
+            }
+        }
+    }
+
+    /// Archive the driver's metrics/best-loss and release it (used at
+    /// finish and at suspend — the record dies with the driver).
+    fn archive_driver(&mut self) -> Option<Driver> {
+        let drv = self.driver.take()?;
+        self.archived_best = self.archived_best.min(drv.best_loss());
+        self.archived_rows.extend(drv.record().rows.iter().cloned());
+        self.counters =
+            Some((drv.history().store_allocs(), drv.history().grad_bytes_copied()));
+        Some(drv)
+    }
+
+    fn finish(
+        &mut self,
+        state: SessionState,
+        stop_reason: Option<&'static str>,
+        error: Option<String>,
+    ) {
+        if let Some(drv) = self.archive_driver() {
+            self.final_theta = Some(drv.theta().to_vec());
+            // drv dropped here: the session's arena is freed — K done
+            // sessions cost K·d floats (their thetas), not K·T₀·d.
+        }
+        // a terminal session's suspend file is dead weight — a
+        // long-lived server must not accrete stale checkpoints
+        if let Some(p) = &self.ckpt_path {
+            let _ = std::fs::remove_file(p);
+        }
+        self.state = state;
+        self.stop_reason = stop_reason;
+        self.error = error;
+    }
+
+    /// Pause. Rebuildable sessions suspend: the run streams to the
+    /// checkpoint file and the driver (arena included) is dropped.
+    pub fn pause(&mut self) -> Result<()> {
+        if !self.is_runnable() {
+            bail!("session {} is {}, cannot pause", self.id, self.state.name());
+        }
+        if self.rebuildable {
+            let path = self.ckpt_path.clone().expect("rebuildable session has a path");
+            self.driver
+                .as_ref()
+                .expect("runnable session has a driver")
+                .save_checkpoint(&path, self.iters_done)?;
+            self.archive_driver();
+            // the driver's cumulative eval clock died with it
+            self.eval_cum_seen = 0.0;
+        }
+        self.state = SessionState::Paused;
+        Ok(())
+    }
+
+    /// Resume a paused session; suspended ones rebuild their driver from
+    /// config and restore from the suspend checkpoint.
+    pub fn resume(&mut self) -> Result<()> {
+        if self.state != SessionState::Paused {
+            bail!("session {} is {}, cannot resume", self.id, self.state.name());
+        }
+        if self.driver.is_none() {
+            let path = self.ckpt_path.clone().expect("suspended session has a path");
+            let workload = factory::build(&self.cfg)?;
+            let mut drv = Driver::new(self.cfg.clone(), workload)?;
+            drv.set_session_id(self.id);
+            let it = drv.resume_from(&path)?;
+            if it != self.iters_done {
+                bail!(
+                    "session {}: suspend checkpoint is at iteration {it}, \
+                     session bookkeeping says {}",
+                    self.id,
+                    self.iters_done
+                );
+            }
+            self.driver = Some(drv);
+            // the live driver supersedes the suspend file; a later pause
+            // rewrites it
+            let _ = std::fs::remove_file(path);
+        }
+        self.state = SessionState::Running;
+        Ok(())
+    }
+
+    /// Client cancel: a terminal Failed with a canonical reason. Errors
+    /// if the session already finished.
+    pub fn cancel(&mut self) -> Result<()> {
+        if !self.is_active() {
+            bail!("session {} already {}", self.id, self.state.name());
+        }
+        self.finish(SessionState::Failed, None, Some("cancelled by client".into()));
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::opt::OptSpec;
+
+    fn synth_cfg(seed: u64, steps: usize) -> RunConfig {
+        let mut cfg = RunConfig::default();
+        cfg.workload = "rosenbrock".into();
+        cfg.steps = steps;
+        cfg.seed = seed;
+        cfg.synth_dim = 48;
+        cfg.optimizer = OptSpec::Adam { lr: 0.1, beta1: 0.9, beta2: 0.999, eps: 1e-8 };
+        cfg.optex.parallelism = 3;
+        cfg.optex.t0 = 5;
+        cfg.optex.threads = 1;
+        cfg
+    }
+
+    use crate::testutil::fixtures::tmp_ckpt_dir as tmp_dir;
+
+    #[test]
+    fn runs_to_done_with_default_budget() {
+        let dir = tmp_dir("done");
+        let mut s =
+            Session::build(1, synth_cfg(3, 7), Budget::default(), &dir).unwrap();
+        assert_eq!(s.state(), SessionState::Pending);
+        while s.is_runnable() {
+            s.step();
+        }
+        assert_eq!(s.state(), SessionState::Done);
+        assert_eq!(s.iters_done(), 7);
+        assert_eq!(s.stop_reason(), Some("max_iters"));
+        assert_eq!(s.rows().len(), 7);
+        assert!(s.theta().is_some());
+        assert!(s.best_loss().is_finite());
+        // finish released the driver but kept the arena counters
+        let (allocs, copied) = s.grad_counters().unwrap();
+        assert_eq!(allocs, 2);
+        assert_eq!(copied, 0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn max_iters_budget_overrides_cfg_steps() {
+        let dir = tmp_dir("budget");
+        let budget = Budget { max_iters: Some(3), ..Budget::default() };
+        let mut s = Session::build(1, synth_cfg(3, 50), budget, &dir).unwrap();
+        while s.is_runnable() {
+            s.step();
+        }
+        assert_eq!(s.iters_done(), 3);
+        assert_eq!(s.state(), SessionState::Done);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn max_iters_zero_runs_no_iteration() {
+        let dir = tmp_dir("zero");
+        let budget = Budget { max_iters: Some(0), ..Budget::default() };
+        let mut s = Session::build(1, synth_cfg(3, 50), budget, &dir).unwrap();
+        s.step();
+        assert_eq!(s.state(), SessionState::Done);
+        assert_eq!(s.iters_done(), 0, "a zero budget must not run a fan-out");
+        assert_eq!(s.stop_reason(), Some("max_iters"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn target_loss_budget_stops_early() {
+        let dir = tmp_dir("target");
+        let budget = Budget { target_loss: Some(f64::INFINITY), ..Budget::default() };
+        let mut s = Session::build(1, synth_cfg(3, 50), budget, &dir).unwrap();
+        s.step();
+        assert_eq!(s.state(), SessionState::Done);
+        assert_eq!(s.stop_reason(), Some("target_loss"));
+        assert_eq!(s.iters_done(), 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn suspend_releases_driver_and_resume_continues_bit_identically() {
+        let dir = tmp_dir("suspend");
+        // solo reference
+        let cfg = synth_cfg(9, 10);
+        let mut solo = Session::build(1, cfg.clone(), Budget::default(), &dir).unwrap();
+        while solo.is_runnable() {
+            solo.step();
+        }
+        // paused copy: 4 iters, suspend, resume, finish
+        let mut s = Session::build(2, cfg, Budget::default(), &dir).unwrap();
+        for _ in 0..4 {
+            s.step();
+        }
+        s.pause().unwrap();
+        assert!(s.is_suspended(), "factory session pause must drop the driver");
+        assert!(s.theta().is_none(), "iterate lives in the checkpoint while suspended");
+        s.step(); // no-op while paused
+        assert_eq!(s.iters_done(), 4);
+        s.resume().unwrap();
+        while s.is_runnable() {
+            s.step();
+        }
+        assert_eq!(s.state(), SessionState::Done);
+        let a = solo.theta().unwrap();
+        let b = s.theta().unwrap();
+        assert_eq!(a, b, "suspend/resume changed the trajectory");
+        let solo_bits: Vec<u64> =
+            solo.rows().iter().map(|r| r.loss.to_bits()).collect();
+        let bits: Vec<u64> = s.rows().iter().map(|r| r.loss.to_bits()).collect();
+        assert_eq!(solo_bits, bits);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn state_machine_rejects_bad_transitions() {
+        let dir = tmp_dir("fsm");
+        let mut s = Session::build(1, synth_cfg(0, 2), Budget::default(), &dir).unwrap();
+        assert!(s.resume().is_err(), "resume of a pending session");
+        while s.is_runnable() {
+            s.step();
+        }
+        assert!(s.pause().is_err(), "pause of a done session");
+        assert!(s.cancel().is_err(), "cancel of a done session");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn cancel_is_terminal_failed_with_reason() {
+        let dir = tmp_dir("cancel");
+        let mut s = Session::build(1, synth_cfg(0, 50), Budget::default(), &dir).unwrap();
+        s.step();
+        s.cancel().unwrap();
+        assert_eq!(s.state(), SessionState::Failed);
+        assert_eq!(s.error(), Some("cancelled by client"));
+        assert!(!s.is_runnable());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

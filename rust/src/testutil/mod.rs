@@ -6,6 +6,51 @@
 //! `PROP_SEED=<seed> cargo test <name>`. No shrinking — cases are kept
 //! small instead.
 
+/// Shared test fixtures (integration tests live in separate crates and
+/// cannot share helpers any other way).
+pub mod fixtures {
+    use std::cell::RefCell;
+    use std::rc::Rc;
+
+    use crate::nn::Mlp;
+    use crate::rl::{DqnSource, ReplayBuffer};
+    use crate::util::Rng;
+
+    /// A native DQN oracle over a deterministically pre-filled replay
+    /// buffer — episode-free, so a `Driver` can step it directly. Used
+    /// by `thread_invariance` and `serve_integration` to pin the same
+    /// stochastic-oracle construction on both sides of a comparison.
+    pub fn dqn_replay_source(seed: u64) -> DqnSource {
+        let obs_dim = 6;
+        let n_act = 3;
+        let replay = Rc::new(RefCell::new(ReplayBuffer::new(512, obs_dim)));
+        let mut rng = Rng::new(seed);
+        for _ in 0..256 {
+            let o = rng.normal_vec(obs_dim);
+            let no = rng.normal_vec(obs_dim);
+            replay.borrow_mut().push(
+                &o,
+                rng.below(n_act),
+                rng.normal() as f32,
+                &no,
+                rng.coin(0.1),
+            );
+        }
+        let mlp = Mlp::new(obs_dim, 32, n_act);
+        DqnSource::native(mlp, replay, 64, 0.95, 10, seed)
+    }
+
+    /// Per-test scratch directory (serve checkpoint dirs etc.), unique
+    /// per tag + process. Tags must be distinct across concurrent tests
+    /// of one binary; callers clean up with `remove_dir_all`.
+    pub fn tmp_ckpt_dir(tag: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("optex_ckpt_{tag}_{}", std::process::id()));
+        std::fs::create_dir_all(&d).expect("creating test ckpt dir");
+        d
+    }
+}
+
 pub mod prop {
     use crate::util::Rng;
 

@@ -1,0 +1,359 @@
+//! ISSUE 4 acceptance: the serving subsystem multiplexes many sessions
+//! over one process without perturbing any session's numerics.
+//!
+//! * K = 8 concurrent sessions (mixed synthetic + DQN, mixed
+//!   optimizers, with and without gradient noise) must produce
+//!   trajectories **bit-identical** to the same seeds/configs run solo,
+//!   at `optex.threads ∈ {1, 8}`, under both scheduling policies, and
+//!   with a mid-run checkpoint-backed pause/resume of one session.
+//! * Loopback smoke (the CI satellite): a real TCP server on 127.0.0.1,
+//!   three sessions submitted through the JSONL protocol, final thetas
+//!   byte-identical to the same configs run through the coordinator,
+//!   then a clean `shutdown`.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+use optex::config::{Method, RunConfig};
+use optex::coordinator::Driver;
+use optex::opt::OptSpec;
+use optex::serve::{Budget, Policy, Scheduler, Server, SessionState};
+use optex::util::json::Json;
+use optex::workloads::factory;
+
+use optex::testutil::fixtures::tmp_ckpt_dir as tmp_dir;
+
+/// Trajectory fingerprint: final iterate bits + per-iteration loss bits.
+#[derive(Debug, PartialEq)]
+struct Traj {
+    theta_bits: Vec<u32>,
+    loss_bits: Vec<u64>,
+}
+
+fn fingerprint(theta: &[f32], losses: impl Iterator<Item = f64>) -> Traj {
+    Traj {
+        theta_bits: theta.iter().map(|x| x.to_bits()).collect(),
+        loss_bits: losses.map(|l| l.to_bits()).collect(),
+    }
+}
+
+// -- the K = 8 mixed-session matrix -----------------------------------------
+
+/// Six synthetic configs: mixed workloads, optimizers, noise, dims. The
+/// d = 40_000 entry clears the pool grains so `threads = 8` really fans
+/// out; index 2 is deterministic (noise 0) — the pause/resume candidate.
+fn synth_cfg(i: usize, threads: usize) -> RunConfig {
+    let workloads = ["ackley", "sphere", "rosenbrock"];
+    let optimizers = ["sgd", "momentum", "adam", "adagrad"];
+    let mut cfg = RunConfig::default();
+    cfg.workload = workloads[i % workloads.len()].into();
+    cfg.optimizer = OptSpec::parse(optimizers[i % optimizers.len()], 0.05).unwrap();
+    cfg.method = Method::Optex;
+    cfg.steps = 6;
+    cfg.seed = 100 + i as u64;
+    cfg.synth_dim = if i == 0 { 40_000 } else { 256 + 64 * i };
+    cfg.noise_std = if i == 2 { 0.0 } else { 0.3 };
+    cfg.optex.parallelism = 4;
+    cfg.optex.t0 = 6;
+    cfg.optex.threads = threads;
+    cfg
+}
+
+// A DQN oracle over a pre-filled replay buffer (shared fixture —
+// episode-free, so the driver steps it directly).
+use optex::testutil::fixtures::dqn_replay_source as dqn_source;
+
+fn dqn_cfg(seed: u64, threads: usize) -> RunConfig {
+    let mut cfg = RunConfig::default();
+    cfg.workload = "dqn_replay".into(); // label only; oracle is injected
+    cfg.method = Method::Optex;
+    cfg.steps = 5;
+    cfg.seed = seed;
+    cfg.optimizer = OptSpec::parse("adam", 0.01).unwrap();
+    cfg.optex.parallelism = 4;
+    cfg.optex.t0 = 8;
+    cfg.optex.threads = threads;
+    cfg
+}
+
+fn solo_synth(cfg: &RunConfig) -> Traj {
+    let workload = factory::build(cfg).unwrap();
+    let mut drv = Driver::new(cfg.clone(), workload).unwrap();
+    let rec = drv.run().unwrap();
+    fingerprint(drv.theta(), rec.rows.iter().map(|r| r.loss))
+}
+
+fn solo_dqn(cfg: &RunConfig) -> Traj {
+    let mut drv =
+        Driver::with_source(cfg.clone(), Box::new(dqn_source(cfg.seed)), None).unwrap();
+    let rec = drv.run().unwrap();
+    fingerprint(drv.theta(), rec.rows.iter().map(|r| r.loss))
+}
+
+fn session_traj(sched: &Scheduler, id: u64) -> Traj {
+    let s = sched.session(id).unwrap();
+    assert_eq!(s.state(), SessionState::Done, "session {id} did not finish");
+    fingerprint(
+        &s.theta().expect("done session has a final theta"),
+        s.rows().iter().map(|r| r.loss),
+    )
+}
+
+/// The acceptance matrix: K = 8 concurrent sessions, solo-bit-identity,
+/// threads ∈ {1, 8}, both policies, one mid-run pause/resume.
+fn run_matrix(threads: usize, policy: Policy, tag: &str) {
+    let dir = tmp_dir(tag);
+    let mut sched = Scheduler::new(16, policy, dir.clone());
+
+    // solo references first (each its own driver — nothing shared)
+    let synth_solo: Vec<Traj> =
+        (0..6).map(|i| solo_synth(&synth_cfg(i, threads))).collect();
+    let dqn_solo: Vec<Traj> =
+        [7u64, 8].iter().map(|&s| solo_dqn(&dqn_cfg(s, threads))).collect();
+
+    // submit all 8, interleave
+    let synth_ids: Vec<u64> = (0..6)
+        .map(|i| sched.submit(synth_cfg(i, threads), Budget::default()).unwrap())
+        .collect();
+    let dqn_ids: Vec<u64> = [7u64, 8]
+        .iter()
+        .map(|&s| {
+            let cfg = dqn_cfg(s, threads);
+            sched
+                .submit_with_source(cfg, Box::new(dqn_source(s)), Budget::default())
+                .unwrap()
+        })
+        .collect();
+
+    // a few quanta in, suspend the deterministic session to disk, let
+    // the others run, then resume it — its trajectory must not notice
+    let paused = synth_ids[2];
+    for _ in 0..11 {
+        sched.tick().unwrap();
+    }
+    sched.pause(paused).unwrap();
+    assert!(
+        sched.session(paused).unwrap().is_suspended(),
+        "factory-built pause must be a checkpoint-backed suspend"
+    );
+    for _ in 0..10 {
+        sched.tick().unwrap();
+    }
+    sched.resume(paused).unwrap();
+    sched.run_to_completion();
+
+    for (i, id) in synth_ids.iter().enumerate() {
+        assert_eq!(
+            session_traj(&sched, *id),
+            synth_solo[i],
+            "synth session {i} diverged from solo (threads={threads}, {tag})"
+        );
+    }
+    for (i, id) in dqn_ids.iter().enumerate() {
+        assert_eq!(
+            session_traj(&sched, *id),
+            dqn_solo[i],
+            "dqn session {i} diverged from solo (threads={threads}, {tag})"
+        );
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn k8_mixed_sessions_bit_identical_to_solo_threads_1() {
+    run_matrix(1, Policy::RoundRobin, "t1_rr");
+}
+
+#[test]
+fn k8_mixed_sessions_bit_identical_to_solo_threads_8() {
+    run_matrix(8, Policy::RoundRobin, "t8_rr");
+}
+
+#[test]
+fn weighted_fair_policy_preserves_bit_identity() {
+    // measured-time scheduling reorders quanta between sessions, never
+    // within one — trajectories must still match solo exactly
+    run_matrix(1, Policy::WeightedFair, "t1_fair");
+}
+
+// -- loopback smoke (CI satellite) ------------------------------------------
+
+struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    fn connect(addr: std::net::SocketAddr) -> Client {
+        let stream = TcpStream::connect(addr).expect("connecting to serve endpoint");
+        stream
+            .set_read_timeout(Some(Duration::from_secs(30)))
+            .unwrap();
+        Client {
+            reader: BufReader::new(stream.try_clone().unwrap()),
+            writer: stream,
+        }
+    }
+
+    fn request(&mut self, line: &str) -> Json {
+        self.writer.write_all(line.as_bytes()).unwrap();
+        self.writer.write_all(b"\n").unwrap();
+        self.writer.flush().unwrap();
+        let mut reply = String::new();
+        self.reader.read_line(&mut reply).unwrap();
+        Json::parse(reply.trim()).unwrap_or_else(|e| panic!("bad reply {reply:?}: {e}"))
+    }
+}
+
+fn smoke_overrides(i: usize) -> Vec<(&'static str, String)> {
+    let workloads = ["sphere", "rosenbrock", "ackley"];
+    vec![
+        ("workload", workloads[i].to_string()),
+        ("synth_dim", "128".into()),
+        ("steps", "15".into()),
+        ("seed", (40 + i).to_string()),
+        ("noise_std", "0.2".into()),
+        ("optex.parallelism", "3".into()),
+        ("optex.t0", "5".into()),
+        ("optex.threads", "1".into()),
+    ]
+}
+
+#[test]
+fn loopback_smoke_three_sessions_byte_identical_then_shutdown() {
+    let dir = tmp_dir("smoke");
+    // solo references via the coordinator path
+    let solo: Vec<Vec<u32>> = (0..3)
+        .map(|i| {
+            let mut cfg = RunConfig::default();
+            for (k, v) in smoke_overrides(i) {
+                cfg.apply_override(&format!("{k}={v}")).unwrap();
+            }
+            let workload = factory::build(&cfg).unwrap();
+            let mut drv = Driver::new(cfg, workload).unwrap();
+            drv.run().unwrap();
+            drv.theta().iter().map(|x| x.to_bits()).collect()
+        })
+        .collect();
+
+    // server on an ephemeral loopback port, scheduler thread = bind thread
+    let mut base = RunConfig::default();
+    base.serve.addr = "127.0.0.1:0".into();
+    base.serve.ckpt_dir = dir.clone();
+    base.optex.threads = 1;
+    let (addr_tx, addr_rx) = std::sync::mpsc::channel();
+    let server_thread = std::thread::spawn(move || {
+        let server = Server::bind(&base).expect("binding loopback serve endpoint");
+        addr_tx.send(server.local_addr().unwrap()).unwrap();
+        server.run().expect("serve loop");
+    });
+    let addr = addr_rx.recv_timeout(Duration::from_secs(10)).unwrap();
+    let mut client = Client::connect(addr);
+
+    // protocol-level error paths while we're here
+    let r = client.request(r#"{"cmd":"status","id":99}"#);
+    assert_eq!(r.get("ok").unwrap().as_bool(), Some(false));
+    let r = client.request(r#"{"cmd":"submit","config":{"workload":"imagenet"}}"#);
+    assert_eq!(r.get("ok").unwrap().as_bool(), Some(false));
+    let r = client.request("not json at all");
+    assert_eq!(r.get("ok").unwrap().as_bool(), Some(false));
+
+    // submit the three sessions through the wire
+    let mut ids = Vec::new();
+    for i in 0..3 {
+        let cfg_obj: Vec<String> = smoke_overrides(i)
+            .iter()
+            .map(|(k, v)| {
+                if v.chars().all(|c| c.is_ascii_digit() || c == '.') {
+                    format!("\"{k}\":{v}")
+                } else {
+                    format!("\"{k}\":\"{v}\"")
+                }
+            })
+            .collect();
+        let line = format!("{{\"cmd\":\"submit\",\"config\":{{{}}}}}", cfg_obj.join(","));
+        let r = client.request(&line);
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{line}");
+        ids.push(r.get("id").unwrap().as_usize().unwrap() as u64);
+    }
+
+    // poll until done, then fetch results with thetas
+    let deadline = Instant::now() + Duration::from_secs(60);
+    for (i, id) in ids.iter().enumerate() {
+        loop {
+            let r = client.request(&format!("{{\"cmd\":\"status\",\"id\":{id}}}"));
+            assert_eq!(r.get("ok").unwrap().as_bool(), Some(true));
+            match r.get("state").unwrap().as_str().unwrap() {
+                "done" => break,
+                "failed" => panic!("session {id} failed: {r:?}"),
+                _ => {
+                    assert!(Instant::now() < deadline, "session {id} never finished");
+                    std::thread::sleep(Duration::from_millis(10));
+                }
+            }
+        }
+        let r = client.request(&format!("{{\"cmd\":\"result\",\"id\":{id},\"theta\":true}}"));
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(r.get("iters").unwrap().as_usize(), Some(15));
+        let theta_bits: Vec<u32> = r
+            .get("theta")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| (v.as_f64().unwrap() as f32).to_bits())
+            .collect();
+        assert_eq!(
+            theta_bits, solo[i],
+            "session {i}: serve theta differs from coordinator::run bytes"
+        );
+    }
+
+    // status without id lists all three
+    let r = client.request(r#"{"cmd":"status"}"#);
+    assert_eq!(r.get("sessions").unwrap().as_arr().unwrap().len(), 3);
+
+    // clean shutdown: acknowledged, server thread exits
+    let r = client.request(r#"{"cmd":"shutdown"}"#);
+    assert_eq!(r.get("ok").unwrap().as_bool(), Some(true));
+    server_thread.join().expect("server thread panicked");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn wire_pause_resume_roundtrip() {
+    let dir = tmp_dir("wire_pause");
+    let mut base = RunConfig::default();
+    base.serve.addr = "127.0.0.1:0".into();
+    base.serve.ckpt_dir = dir.clone();
+    base.optex.threads = 1;
+    let (addr_tx, addr_rx) = std::sync::mpsc::channel();
+    let server_thread = std::thread::spawn(move || {
+        let server = Server::bind(&base).expect("bind");
+        addr_tx.send(server.local_addr().unwrap()).unwrap();
+        server.run().expect("serve loop");
+    });
+    let addr = addr_rx.recv_timeout(Duration::from_secs(10)).unwrap();
+    let mut client = Client::connect(addr);
+
+    // big-d, effectively-unbounded session: it must still be live when
+    // the pause/cancel commands arrive, however fast the host is
+    let r = client.request(
+        r#"{"cmd":"submit","config":{"workload":"sphere","synth_dim":50000,"steps":1000000,"seed":1,"optex.threads":1}}"#,
+    );
+    let id = r.get("id").unwrap().as_usize().unwrap();
+    let r = client.request(&format!("{{\"cmd\":\"pause\",\"id\":{id}}}"));
+    assert_eq!(r.get("state").unwrap().as_str(), Some("paused"));
+    let r = client.request(&format!("{{\"cmd\":\"status\",\"id\":{id}}}"));
+    assert_eq!(r.get("suspended").unwrap().as_bool(), Some(true));
+    let r = client.request(&format!("{{\"cmd\":\"resume\",\"id\":{id}}}"));
+    assert_eq!(r.get("state").unwrap().as_str(), Some("running"));
+    let r = client.request(&format!("{{\"cmd\":\"cancel\",\"id\":{id}}}"));
+    assert_eq!(r.get("state").unwrap().as_str(), Some("failed"));
+    let r = client.request(&format!("{{\"cmd\":\"result\",\"id\":{id}}}"));
+    assert_eq!(r.get("error").unwrap().as_str(), Some("cancelled by client"));
+    client.request(r#"{"cmd":"shutdown"}"#);
+    server_thread.join().unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -10,14 +10,10 @@
 use optex::config::{Method, RunConfig};
 use optex::coordinator::Driver;
 use optex::opt::OptSpec;
-use optex::rl::{DqnSource, ReplayBuffer};
-use optex::runtime::NativePool;
+use optex::runtime::{NativePool, PoolMode};
 use optex::util::Rng;
 use optex::workloads::synthetic::SynthFn;
 use optex::workloads::{GradSource, NativeSynth};
-
-use std::cell::RefCell;
-use std::rc::Rc;
 
 /// Trajectory fingerprint: final iterate bits + per-iteration loss and
 /// gradient-norm bits.
@@ -28,6 +24,10 @@ struct Traj {
 }
 
 fn run_traj(method: Method, opt_name: &str, threads: usize) -> Traj {
+    run_traj_mode(method, opt_name, threads, PoolMode::Scoped)
+}
+
+fn run_traj_mode(method: Method, opt_name: &str, threads: usize, mode: PoolMode) -> Traj {
     let mut cfg = RunConfig::default();
     cfg.workload = "ackley".into();
     cfg.method = method;
@@ -41,6 +41,7 @@ fn run_traj(method: Method, opt_name: &str, threads: usize) -> Traj {
     cfg.optex.parallelism = 4;
     cfg.optex.t0 = 8;
     cfg.optex.threads = threads;
+    cfg.optex.pool = mode;
     let src = NativeSynth::new(SynthFn::Ackley, cfg.synth_dim, cfg.noise_std, cfg.seed);
     let mut drv = Driver::with_source(cfg, Box::new(src), None).unwrap();
     let rec = drv.run().unwrap();
@@ -76,6 +77,32 @@ fn driver_trajectories_bit_identical_across_thread_counts() {
     }
 }
 
+/// ISSUE 4 satellite: the persistent-worker substrate (`optex.pool =
+/// persistent`, park/unpark instead of spawn-per-call) is a pure
+/// execution-latency change — trajectories must stay bit-identical to
+/// the scoped serial baseline for every method that fans out.
+#[test]
+fn persistent_pool_trajectories_bit_identical() {
+    for method in [Method::Optex, Method::DataParallel, Method::Target] {
+        let base = run_traj(method, "adam", 1);
+        for threads in [2, 8] {
+            let got = run_traj_mode(method, "adam", threads, PoolMode::Persistent);
+            assert_eq!(
+                base.theta, got.theta,
+                "{method:?}: θ diverged under persistent pool at threads={threads}"
+            );
+            assert_eq!(
+                base.loss_bits, got.loss_bits,
+                "{method:?}: loss series diverged under persistent pool at threads={threads}"
+            );
+            assert_eq!(
+                base.gn_bits, got.gn_bits,
+                "{method:?}: grad norms diverged under persistent pool at threads={threads}"
+            );
+        }
+    }
+}
+
 #[test]
 fn auto_thread_count_matches_serial() {
     // threads = 0 resolves to available parallelism — whatever that is on
@@ -86,26 +113,10 @@ fn auto_thread_count_matches_serial() {
     assert_eq!(base.loss_bits, auto.loss_bits);
 }
 
-fn dqn_source(seed: u64) -> DqnSource {
-    let obs_dim = 6;
-    let n_act = 3;
-    let replay = Rc::new(RefCell::new(ReplayBuffer::new(512, obs_dim)));
-    let mut rng = Rng::new(seed);
-    for _ in 0..256 {
-        let o = rng.normal_vec(obs_dim);
-        let no = rng.normal_vec(obs_dim);
-        replay
-            .borrow_mut()
-            .push(&o, rng.below(n_act), rng.normal() as f32, &no, rng.coin(0.1));
-    }
-    let mlp = optex::nn::Mlp::new(obs_dim, 32, n_act);
-    DqnSource::native(mlp, replay, 64, 0.95, 10, seed)
-}
-
 #[test]
 fn dqn_eval_batch_bit_identical_across_thread_counts() {
-    let mut serial = dqn_source(5);
-    let mut threaded = dqn_source(5);
+    let mut serial = optex::testutil::fixtures::dqn_replay_source(5);
+    let mut threaded = optex::testutil::fixtures::dqn_replay_source(5);
     threaded.set_compute_pool(NativePool::new(8));
     let mut rng = Rng::new(9);
     let params = serial.init_params(&mut rng);
