@@ -23,7 +23,7 @@ use optex::gp::kernels::{kernel_matrix, kernel_matrix_pooled};
 use optex::gp::{DimSubset, GpConfig, IncrementalGp, Kernel};
 use optex::opt::OptSpec;
 use optex::runtime::NativePool;
-use optex::serve::{Budget, Policy, Scheduler, SessionState};
+use optex::serve::{Budget, Policy, Scheduler, Server, SessionState};
 use optex::util::stats;
 use optex::util::Rng;
 use optex::workloads::synthetic::SynthFn;
@@ -136,6 +136,143 @@ fn serve_throughput_grid(rows: &mut Vec<JsonRow>) {
         });
         std::fs::remove_dir_all(&dir).ok();
     }
+}
+
+use optex::testutil::fixtures::WireClient;
+
+/// ISSUE-5 grid → BENCH_5.json: `watch` streaming latency (submit →
+/// first pushed iter record, over real loopback TCP) at K ∈ {1, 8}, and
+/// restart-adoption cost (manifest read + re-registration) at K = 8.
+fn serve_stream_adopt_grid(rows: &mut Vec<JsonRow>) {
+    let fast = std::env::var("OPTEX_BENCH_FAST").is_ok();
+    println!("\n# serve: watch streaming latency over loopback TCP (submit -> first push)");
+    let steps = 20usize;
+    let d = 2_000usize;
+    for k in [1usize, 8] {
+        let trials = if fast { 2 } else { 8.max(32 / k) };
+        let mut latencies_ms: Vec<f64> = Vec::new();
+        for trial in 0..trials {
+            let dir = optex::testutil::fixtures::tmp_ckpt_dir(&format!(
+                "bench_stream_{k}_{trial}"
+            ));
+            let mut base = RunConfig::default();
+            base.serve.addr = "127.0.0.1:0".into();
+            base.serve.ckpt_dir = dir.clone();
+            base.optex.threads = 1;
+            let (addr_tx, addr_rx) = std::sync::mpsc::channel();
+            let server_thread = std::thread::spawn(move || {
+                let server = Server::bind(&base).expect("bind");
+                addr_tx.send(server.local_addr().unwrap()).unwrap();
+                server.run().expect("serve loop");
+            });
+            let addr = addr_rx.recv().unwrap();
+            let mut client = WireClient::connect(addr);
+            // submit all K (stamping each submit send), then watch all K
+            let mut t_submit = Vec::with_capacity(k);
+            let mut ids = Vec::with_capacity(k);
+            for i in 0..k {
+                let line = format!(
+                    "{{\"cmd\":\"submit\",\"config\":{{\"workload\":\"ackley\",\
+                     \"synth_dim\":{d},\"steps\":{steps},\"seed\":{i},\
+                     \"noise_std\":0.1,\"optex.parallelism\":4,\"optex.t0\":8,\
+                     \"optex.threads\":1}}}}"
+                );
+                t_submit.push(Instant::now());
+                client.send(&line);
+                let r = client.response();
+                assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r:?}");
+                ids.push(r.get("id").unwrap().as_usize().unwrap() as u64);
+            }
+            for id in &ids {
+                client.send(&format!("{{\"cmd\":\"watch\",\"id\":{id}}}"));
+                let r = client.response();
+                assert_eq!(r.get("watch").unwrap().as_bool(), Some(true), "{r:?}");
+            }
+            // first pushed record per session
+            let mut first_seen = vec![false; k];
+            let mut remaining = k;
+            while remaining > 0 {
+                let v = client.read_json();
+                if v.get("event").is_none() {
+                    continue;
+                }
+                let id = v.get("id").unwrap().as_usize().unwrap() as u64;
+                let idx = ids.iter().position(|&x| x == id).unwrap();
+                if !first_seen[idx] {
+                    first_seen[idx] = true;
+                    remaining -= 1;
+                    latencies_ms
+                        .push(t_submit[idx].elapsed().as_secs_f64() * 1e3);
+                }
+            }
+            client.send(r#"{"cmd":"shutdown"}"#);
+            let _ = client.response();
+            server_thread.join().unwrap();
+            std::fs::remove_dir_all(&dir).ok();
+        }
+        let p50 = stats::percentile(&latencies_ms, 50.0);
+        let p95 = stats::percentile(&latencies_ms, 95.0);
+        println!(
+            "serve_stream K={k:<2} d={d} ({} samples): submit->first-push \
+             p50={p50:>7.2}ms p95={p95:>7.2}ms",
+            latencies_ms.len()
+        );
+        rows.push(JsonRow {
+            section: "serve_stream",
+            fields: vec![
+                ("k".into(), k as f64),
+                ("d".into(), d as f64),
+                ("first_push_p50_ms".into(), p50),
+                ("first_push_p95_ms".into(), p95),
+            ],
+        });
+    }
+
+    // restart adoption: K=8 suspended sessions, manifest -> re-registered
+    println!("\n# serve: restart adoption (manifest read + re-register, K=8)");
+    let k = 8usize;
+    let dir = optex::testutil::fixtures::tmp_ckpt_dir("bench_adopt");
+    let mut sched = Scheduler::new(k, Policy::RoundRobin, dir.clone());
+    let ids: Vec<u64> = (0..k)
+        .map(|i| {
+            let mut cfg = RunConfig::default();
+            cfg.workload = "ackley".into();
+            cfg.steps = 30;
+            cfg.seed = i as u64;
+            cfg.synth_dim = d;
+            cfg.noise_std = 0.1;
+            cfg.optex.parallelism = 4;
+            cfg.optex.t0 = 8;
+            cfg.optex.threads = 1;
+            sched.submit(cfg, Budget::default()).expect("submit")
+        })
+        .collect();
+    for _ in 0..3 * k {
+        sched.tick();
+    }
+    for id in &ids {
+        sched.pause(*id).expect("suspend");
+    }
+    drop(sched); // the kill
+    let t0 = Instant::now();
+    let mut adopted = Scheduler::new(k, Policy::RoundRobin, dir.clone());
+    let n = adopted.adopt_manifest().expect("adopt");
+    let adopt_ms = t0.elapsed().as_secs_f64() * 1e3;
+    assert_eq!(n, k, "all suspended sessions adopt");
+    for id in &ids {
+        assert_eq!(adopted.session(*id).unwrap().state(), SessionState::Paused);
+        adopted.resume(*id).expect("resume");
+    }
+    adopted.run_to_completion();
+    for id in &ids {
+        assert_eq!(adopted.session(*id).unwrap().state(), SessionState::Done);
+    }
+    println!("serve_adopt  K={k}: manifest adoption {adopt_ms:>7.2}ms (resume + completion verified)");
+    rows.push(JsonRow {
+        section: "serve_adopt",
+        fields: vec![("k".into(), k as f64), ("adopt_ms".into(), adopt_ms)],
+    });
+    std::fs::remove_dir_all(&dir).ok();
 }
 
 fn main() {
@@ -462,4 +599,9 @@ fn main() {
     let mut serve_rows: Vec<JsonRow> = Vec::new();
     serve_throughput_grid(&mut serve_rows);
     write_bench_json("BENCH_4.json", 4, &serve_rows);
+
+    // ISSUE 5: streaming-latency + restart-adoption grid
+    let mut stream_rows: Vec<JsonRow> = Vec::new();
+    serve_stream_adopt_grid(&mut stream_rows);
+    write_bench_json("BENCH_5.json", 5, &stream_rows);
 }

@@ -207,6 +207,17 @@ mod tests {
     }
 
     #[test]
+    fn serve_adopt_is_a_bare_flag() {
+        // --adopt takes no value: it must land in the flag list, pass a
+        // dispatch that knows it, and not swallow the next token
+        let a = parse("serve --adopt --addr 127.0.0.1:0");
+        assert!(a.flag("adopt"));
+        assert_eq!(a.opt("addr"), Some("127.0.0.1:0"));
+        assert!(a.check_known_flags(&["help", "adopt"]).is_ok());
+        assert!(a.check_known_flags(&["help"]).is_err());
+    }
+
+    #[test]
     fn unknown_value_option_in_equals_form_is_rejected() {
         // the VALUE_OPTS table is the only thing standing between a typo
         // and a silently ignored flag — both spellings must hard-error

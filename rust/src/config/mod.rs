@@ -64,7 +64,7 @@ pub enum Backend {
 }
 
 /// OptEx-specific knobs (paper Sec. 4 + Appx B.2).
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct OptexParams {
     /// Parallelism N.
     pub parallelism: usize,
@@ -125,7 +125,7 @@ impl Default for OptexParams {
 }
 
 /// `[serve]` table: the multi-session serving subsystem (ISSUE 4).
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct ServeParams {
     /// Listen address for the JSONL wire protocol (`host:port`; port 0
     /// binds an ephemeral port, printed at startup).
@@ -138,8 +138,19 @@ pub struct ServeParams {
     /// EMA). Either way trajectories are bit-identical to solo runs —
     /// the scheduler never reorders work *within* a session.
     pub policy: Policy,
-    /// Directory for checkpoint-backed suspend files of paused sessions.
+    /// Directory for checkpoint-backed suspend files of paused sessions
+    /// (and the durable session manifest — ISSUE 5).
     pub ckpt_dir: PathBuf,
+    /// Adopt the sessions recorded in `ckpt_dir`'s `manifest.jsonl` at
+    /// startup (`--adopt`): they re-register as Paused with their
+    /// original ids, budgets and configs; suspended ones `resume`
+    /// bit-identically from their checkpoints. Without this flag a
+    /// server refuses to start against a ckpt_dir that holds a manifest
+    /// from a previous server (the session-id-reuse hazard).
+    pub adopt: bool,
+    /// Default push cadence for `watch` subscriptions that omit
+    /// `stream_every`: an iter record every K iterations (≥ 1).
+    pub stream_every: usize,
 }
 
 impl Default for ServeParams {
@@ -149,12 +160,14 @@ impl Default for ServeParams {
             max_sessions: 64,
             policy: Policy::RoundRobin,
             ckpt_dir: PathBuf::from("results/serve_ckpt"),
+            adopt: false,
+            stream_every: 1,
         }
     }
 }
 
 /// Complete run configuration.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct RunConfig {
     /// Workload id: synthetic fn name, "mnist", "fmnist", "cifar",
     /// "tfm_char", or an RL env ("cartpole", ...).
@@ -217,6 +230,28 @@ impl std::error::Error for ConfigError {}
 
 fn bad(key: &str, why: &str) -> ConfigError {
     ConfigError(format!("{key}: {why}"))
+}
+
+/// Quote a string as the right-hand side of a `--set`-style override so
+/// the TOML value grammar re-types nothing (`workload=7` would become the
+/// integer 7; `workload="7"` stays the string). Returns `None` for
+/// control characters the grammar's escape set (`\n`, `\t`, `\"`, `\\`)
+/// cannot represent.
+pub fn quote_toml_str(s: &str) -> Option<String> {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => return None,
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    Some(out)
 }
 
 impl RunConfig {
@@ -322,6 +357,8 @@ impl RunConfig {
                     .ok_or_else(|| bad(key, "unknown serve policy (rr|fair)"))?
             }
             "serve.ckpt_dir" => self.serve.ckpt_dir = PathBuf::from(need_str()?),
+            "serve.adopt" => self.serve.adopt = need_bool()?,
+            "serve.stream_every" => self.serve.stream_every = need_usize()?,
             _ => return Err(bad(key, "unknown config key")),
         }
         Ok(())
@@ -352,7 +389,127 @@ impl RunConfig {
         if self.serve.addr.is_empty() {
             return Err(bad("serve.addr", "must be host:port"));
         }
+        if self.serve.stream_every == 0 {
+            return Err(bad("serve.stream_every", "must be >= 1"));
+        }
         Ok(())
+    }
+
+    /// Serialize this config as the minimal list of `key=value` override
+    /// strings that rebuild it from [`RunConfig::default`] via
+    /// [`RunConfig::apply_override`] — the serve manifest's config
+    /// encoding (ISSUE 5): a session persisted this way re-registers on
+    /// an adopting server with exactly its submit-time config, whatever
+    /// base config that server was started with.
+    ///
+    /// Coverage contract: every field the workload factory / driver read
+    /// is representable (enforced by the round-trip property test in
+    /// `serve/manifest.rs`). Two documented exceptions, both unreachable
+    /// through the override grammar itself: non-default optimizer
+    /// β/ε hyperparameters (the grammar only speaks `optimizer.name` +
+    /// `optimizer.lr`, so wire-submitted sessions can never hold them)
+    /// and the `[serve]` table (server-level knobs — a session's driver
+    /// never reads them).
+    pub fn overrides_from_default(&self) -> Result<Vec<String>, ConfigError> {
+        let d = RunConfig::default();
+        let mut out = Vec::new();
+        fn push_quoted(
+            out: &mut Vec<String>,
+            key: &str,
+            v: &str,
+        ) -> Result<(), ConfigError> {
+            match quote_toml_str(v) {
+                Some(q) => {
+                    out.push(format!("{key}={q}"));
+                    Ok(())
+                }
+                None => Err(bad(key, "string contains unencodable control characters")),
+            }
+        }
+        if self.workload != d.workload {
+            push_quoted(&mut out, "workload", &self.workload)?;
+        }
+        if self.method != d.method {
+            out.push(format!("method={}", self.method.name()));
+        }
+        if self.steps != d.steps {
+            out.push(format!("steps={}", self.steps));
+        }
+        if self.seed != d.seed {
+            out.push(format!("seed={}", self.seed));
+        }
+        if self.optimizer != d.optimizer {
+            out.push(format!("optimizer.name={}", self.optimizer.name()));
+            out.push(format!("optimizer.lr={}", self.optimizer.lr()));
+        }
+        if self.schedule != d.schedule {
+            out.push(format!("optimizer.schedule={}", self.schedule.spec()));
+        }
+        let o = &self.optex;
+        let od = &d.optex;
+        if o.parallelism != od.parallelism {
+            out.push(format!("optex.parallelism={}", o.parallelism));
+        }
+        if o.t0 != od.t0 {
+            out.push(format!("optex.t0={}", o.t0));
+        }
+        if o.kernel != od.kernel {
+            out.push(format!("optex.kernel={}", o.kernel.name()));
+        }
+        if o.lengthscale != od.lengthscale {
+            // stored Some(l) always has l > 0 (apply() maps l <= 0 to None)
+            out.push(format!("optex.lengthscale={}", o.lengthscale.unwrap_or(0.0)));
+        }
+        if o.sigma2 != od.sigma2 {
+            out.push(format!("optex.sigma2={}", o.sigma2));
+        }
+        if o.dsub != od.dsub {
+            out.push(format!("optex.dsub={}", o.dsub.unwrap_or(0)));
+        }
+        if o.selection != od.selection {
+            out.push(format!("optex.selection={}", o.selection.name()));
+        }
+        if o.eval_intermediate != od.eval_intermediate {
+            out.push(format!("optex.eval_intermediate={}", o.eval_intermediate));
+        }
+        if o.backend != od.backend {
+            let b = match o.backend {
+                Backend::Native => "native",
+                Backend::Hlo => "hlo",
+            };
+            out.push(format!("optex.backend={b}"));
+        }
+        if o.fit != od.fit {
+            out.push(format!("optex.fit={}", o.fit.name()));
+        }
+        if o.gp_refresh_every != od.gp_refresh_every {
+            out.push(format!("optex.gp_refresh_every={}", o.gp_refresh_every));
+        }
+        if o.threads != od.threads {
+            out.push(format!("optex.threads={}", o.threads));
+        }
+        if o.pool != od.pool {
+            out.push(format!("optex.pool={}", o.pool.name()));
+        }
+        if self.noise_std != d.noise_std {
+            out.push(format!("noise_std={}", self.noise_std));
+        }
+        if self.synth_dim != d.synth_dim {
+            out.push(format!("synth_dim={}", self.synth_dim));
+        }
+        if self.artifacts_dir != d.artifacts_dir {
+            push_quoted(&mut out, "artifacts_dir", &self.artifacts_dir.to_string_lossy())?;
+        }
+        if self.out_dir != d.out_dir {
+            push_quoted(&mut out, "out_dir", &self.out_dir.to_string_lossy())?;
+        }
+        if self.log_every != d.log_every {
+            out.push(format!("log_every={}", self.log_every));
+        }
+        if self.hlo_workload != d.hlo_workload {
+            out.push(format!("hlo_workload={}", self.hlo_workload));
+        }
+        Ok(out)
     }
 
     /// Flatten back to key/value pairs (for run provenance records).
@@ -476,6 +633,71 @@ mod tests {
         assert!(cfg.apply_override("serve.policy=lifo").is_err());
         cfg.apply_override("serve.max_sessions=2").unwrap();
         assert_eq!(cfg.serve.max_sessions, 2);
+    }
+
+    #[test]
+    fn serve_adopt_and_stream_every_knobs() {
+        let d = ServeParams::default();
+        assert!(!d.adopt);
+        assert_eq!(d.stream_every, 1);
+        let mut cfg = RunConfig::default();
+        cfg.apply_override("serve.adopt=true").unwrap();
+        assert!(cfg.serve.adopt);
+        cfg.apply_override("serve.stream_every=5").unwrap();
+        assert_eq!(cfg.serve.stream_every, 5);
+        assert!(cfg.apply_override("serve.stream_every=0").is_err());
+        assert!(cfg.apply_override("serve.adopt=maybe").is_err());
+    }
+
+    #[test]
+    fn overrides_from_default_roundtrip() {
+        let mut cfg = RunConfig::default();
+        for kv in [
+            "workload=ackley",
+            "method=target",
+            "steps=77",
+            "seed=9",
+            "optimizer.name=sgd",
+            "optimizer.lr=0.025",
+            "optimizer.schedule=step:10:0.5",
+            "optex.parallelism=6",
+            "optex.t0=12",
+            "optex.kernel=rbf",
+            "optex.lengthscale=3.5",
+            "optex.sigma2=0.125",
+            "optex.dsub=128",
+            "optex.selection=func",
+            "optex.eval_intermediate=false",
+            "optex.fit=full",
+            "optex.gp_refresh_every=25",
+            "optex.threads=8",
+            "optex.pool=persistent",
+            "noise_std=0.3",
+            "synth_dim=512",
+            "out_dir=\"res 2024\"",
+            "log_every=2",
+        ] {
+            cfg.apply_override(kv).unwrap();
+        }
+        let ovs = cfg.overrides_from_default().unwrap();
+        let mut back = RunConfig::default();
+        for kv in &ovs {
+            back.apply_override(kv).unwrap();
+        }
+        assert_eq!(back, cfg, "overrides did not rebuild the config: {ovs:?}");
+        // defaults serialize to NO overrides (minimal encoding)
+        assert!(RunConfig::default().overrides_from_default().unwrap().is_empty());
+    }
+
+    #[test]
+    fn quote_toml_str_roundtrips_through_the_override_grammar() {
+        for s in ["plain", "7", "res 2024", "a\"b\\c", "tab\there", "nl\nthere", ""] {
+            let q = quote_toml_str(s).unwrap();
+            let mut cfg = RunConfig::default();
+            cfg.apply_override(&format!("workload={q}")).unwrap();
+            assert_eq!(cfg.workload, s, "quoted as {q}");
+        }
+        assert!(quote_toml_str("bell\u{7}").is_none());
     }
 
     #[test]

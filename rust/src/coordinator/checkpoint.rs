@@ -6,7 +6,15 @@
 //!   magic "OPTEXCKP" | version u32 | iter u64 | d u64 |
 //!   opt_name len+bytes | theta f32×d |
 //!   n_opt_bufs u32 | per buf: len u64 + f32×len |
-//!   hist_entries u32 | dsub u64 | per entry: theta_sub f32×dsub + grad f32×d
+//!   hist_entries u32 | dsub u64 | per entry: theta_sub f32×dsub + grad f32×d |
+//!   (v2) src_state_len u64 | opaque sampler-state bytes
+//!
+//! Version 2 (ISSUE 5) appends the oracle's sampler state
+//! ([`crate::workloads::GradSource::save_sampler_state`]): noise /
+//! minibatch RNG streams and DQN target networks, so checkpoint-backed
+//! suspend and restart adoption continue *stochastic* oracles
+//! bit-identically too. Version-1 files still load (empty state — the
+//! legacy restart-from-seed behavior).
 //!
 //! The live save path ([`save_live`]) streams history rows straight from
 //! the [`GradStore`] arena borrows into the buffered writer — no
@@ -35,17 +43,19 @@ use crate::coordinator::history::GradHistory;
 use crate::opt::Optimizer;
 
 const MAGIC: &[u8; 8] = b"OPTEXCKP";
-const VERSION: u32 = 1;
+const VERSION: u32 = 2;
 
 /// Stream a live run straight to disk: history rows are written from the
 /// arena borrows, never collected into owned buffers. Same byte format
-/// as [`Checkpoint::write`].
+/// as [`Checkpoint::write`]. `source_state` is the oracle's opaque
+/// sampler state (empty for stateless oracles).
 pub fn save_live(
     path: &Path,
     iter: u64,
     theta: &[f32],
     optimizer: &dyn Optimizer,
     history: &GradHistory,
+    source_state: &[u8],
 ) -> Result<()> {
     if let Some(dir) = path.parent() {
         std::fs::create_dir_all(dir)?;
@@ -62,6 +72,8 @@ pub fn save_live(
         write_f32s(&mut out, tsub)?;
         write_f32s(&mut out, grad)?;
     }
+    out.write_all(&(source_state.len() as u64).to_le_bytes())?;
+    out.write_all(source_state)?;
     out.flush()?;
     Ok(())
 }
@@ -97,6 +109,11 @@ pub struct Checkpoint {
     pub opt_state: Vec<Vec<f32>>,
     /// (theta_sub, grad) pairs, oldest first.
     pub history: Vec<(Vec<f32>, Vec<f32>)>,
+    /// Opaque oracle sampler state (v2; empty on v1 files and for
+    /// stateless oracles). Applied by `Driver::resume_from`, not by
+    /// [`Checkpoint::restore`] — the history/optimizer layer never
+    /// interprets it.
+    pub source_state: Vec<u8>,
 }
 
 impl Checkpoint {
@@ -120,6 +137,7 @@ impl Checkpoint {
                 .zip(&grads)
                 .map(|(t, g)| (t.to_vec(), g.to_vec()))
                 .collect(),
+            source_state: Vec::new(),
         }
     }
 
@@ -185,6 +203,8 @@ impl Checkpoint {
             write_f32s(&mut out, tsub)?;
             write_f32s(&mut out, grad)?;
         }
+        out.write_all(&(self.source_state.len() as u64).to_le_bytes())?;
+        out.write_all(&self.source_state)?;
         out.flush()?;
         Ok(())
     }
@@ -200,7 +220,7 @@ impl Checkpoint {
             bail!("not an optex checkpoint (bad magic)");
         }
         let version = read_u32(&mut inp)?;
-        if version != VERSION {
+        if !(1..=VERSION).contains(&version) {
             bail!("unsupported checkpoint version {version}");
         }
         let iter = read_u64(&mut inp)?;
@@ -233,7 +253,18 @@ impl Checkpoint {
             let grad = read_f32s(&mut inp, d)?;
             history.push((tsub, grad));
         }
-        Ok(Checkpoint { iter, opt_name, theta, opt_state, history })
+        let source_state = if version >= 2 {
+            let len = read_u64(&mut inp)? as usize;
+            if len > 1 << 20 {
+                bail!("corrupt checkpoint: sampler state too large");
+            }
+            let mut buf = vec![0u8; len];
+            inp.read_exact(&mut buf).context("truncated checkpoint")?;
+            buf
+        } else {
+            Vec::new()
+        };
+        Ok(Checkpoint { iter, opt_name, theta, opt_state, history, source_state })
     }
 }
 
@@ -335,7 +366,7 @@ mod tests {
         }
         let pa = tmp("live_a");
         let pb = tmp("live_b");
-        save_live(&pa, 5, &theta, opt.as_ref(), &hist).unwrap();
+        save_live(&pa, 5, &theta, opt.as_ref(), &hist, &[]).unwrap();
         Checkpoint::capture(5, &theta, opt.as_ref(), &hist).write(&pb).unwrap();
         assert_eq!(std::fs::read(&pa).unwrap(), std::fs::read(&pb).unwrap());
         std::fs::remove_file(&pa).ok();
@@ -363,7 +394,7 @@ mod tests {
         let expect = &expect[expect.len() - cap..];
         let theta = rng.normal_vec(d);
         let path = tmp("wrapped");
-        save_live(&path, 12, &theta, opt.as_ref(), &hist).unwrap();
+        save_live(&path, 12, &theta, opt.as_ref(), &hist, &[]).unwrap();
         let back = Checkpoint::read(&path).unwrap();
         assert_eq!(back.history.len(), cap);
         for (i, ((bt, bg), (et, eg))) in back.history.iter().zip(expect).enumerate() {
@@ -383,6 +414,31 @@ mod tests {
         assert_eq!(tv[cap - 1], extra_t.as_slice());
         assert_eq!(gv[cap - 1], extra_g.as_slice());
         assert_eq!(tv[0], expect[1].0.as_slice(), "oldest after post-restore push");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn source_state_roundtrips_and_v1_files_still_load() {
+        let d = 5;
+        let opt = OptSpec::parse("sgd", 0.1).unwrap().build(d);
+        let hist = GradHistory::new(2, DimSubset::full(d));
+        let state: Vec<u8> = (0..37u8).collect();
+        let path = tmp("srcstate");
+        save_live(&path, 3, &[0.5; 5], opt.as_ref(), &hist, &state).unwrap();
+        let back = Checkpoint::read(&path).unwrap();
+        assert_eq!(back.source_state, state);
+
+        // a v1 file (no trailing sampler-state section) must read with
+        // empty state — the legacy restart-from-seed behavior
+        let mut bytes = std::fs::read(&path).unwrap();
+        let tail = 8 + state.len(); // src_state_len u64 + payload
+        bytes.truncate(bytes.len() - tail);
+        bytes[8..12].copy_from_slice(&1u32.to_le_bytes()); // version field
+        std::fs::write(&path, &bytes).unwrap();
+        let v1 = Checkpoint::read(&path).unwrap();
+        assert!(v1.source_state.is_empty());
+        assert_eq!(v1.iter, 3);
+        assert_eq!(v1.theta, vec![0.5; 5]);
         std::fs::remove_file(&path).ok();
     }
 

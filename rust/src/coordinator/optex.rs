@@ -223,9 +223,9 @@ impl Driver {
     }
 
     /// Snapshot the run to a checkpoint file (θ, optimizer state, local
-    /// gradient history). `iter` tags the sequential iteration count.
-    /// History rows stream straight from the `GradStore` arena borrows —
-    /// no owned intermediate snapshot.
+    /// gradient history, oracle sampler state). `iter` tags the
+    /// sequential iteration count. History rows stream straight from the
+    /// `GradStore` arena borrows — no owned intermediate snapshot.
     pub fn save_checkpoint(&self, path: &std::path::Path, iter: u64) -> Result<()> {
         crate::coordinator::checkpoint::save_live(
             path,
@@ -233,11 +233,15 @@ impl Driver {
             &self.theta,
             self.optimizer.as_ref(),
             &self.history,
+            &self.source.save_sampler_state(),
         )
     }
 
     /// Resume from a checkpoint file; returns the iteration it was taken
-    /// at (continue with `iteration(t)` for t > that).
+    /// at (continue with `iteration(t)` for t > that). With a v2
+    /// checkpoint the oracle's sampler state is restored too, so
+    /// stochastic oracles (noisy synth, DQN) continue bit-identically;
+    /// v1 files keep the legacy restart-from-seed sampler behavior.
     pub fn resume_from(&mut self, path: &std::path::Path) -> Result<u64> {
         let ckp = crate::coordinator::checkpoint::Checkpoint::read(path)?;
         if ckp.theta.len() != self.theta.len() {
@@ -248,12 +252,30 @@ impl Driver {
             );
         }
         ckp.restore(&mut self.theta, self.optimizer.as_mut(), &mut self.history)?;
+        if !ckp.source_state.is_empty() {
+            self.source.load_sampler_state(&ckp.source_state)?;
+        }
         // The incremental GP fit is derived state: never serialized, so a
         // resumed run rebuilds it from the restored ring on first use
         // (`restore` cleared the ring, which also bumped its epoch — this
         // drop is belt-and-braces, not load-bearing).
         self.inc_gp = None;
         Ok(ckp.iter)
+    }
+
+    /// Re-inject the shared compute pool, replacing the one resolved
+    /// from the config at build — the serve scheduler's per-quantum
+    /// width arbiter calls this before every iteration it grants
+    /// (ISSUE 5). Purely an execution-width/substrate decision:
+    /// trajectories are bit-identical at any width and in either pool
+    /// mode (`rust/tests/thread_invariance.rs`), so the grant may change
+    /// between quanta freely. The eval fan-out and the per-iteration GP
+    /// reference fit pick the new pool up immediately; the persistent
+    /// incremental-GP engine keeps the pool it was constructed with
+    /// until its next rebuild (a width-only lag, never a numerics one).
+    pub fn set_compute_pool(&mut self, pool: NativePool) {
+        self.pool = pool;
+        self.source.set_compute_pool(pool);
     }
 
     /// Full GP refits performed by the incremental fit so far (ring

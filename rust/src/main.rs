@@ -29,6 +29,7 @@ USAGE:
              [--checkpoint FILE] [--resume FILE] [--set key=value ...]
   optex serve [--config FILE] [--addr HOST:PORT] [--max-sessions K]
               [--threads K] [--pool scoped|persistent] [--policy rr|fair]
+              [--adopt]               # adopt serve.ckpt_dir's session manifest
               [--set key=value ...]   # JSONL protocol; see serve/ docs
   optex fig  <2|3|4a|4b|6|6a..6d|7|8|9|10|kernels|estbound|nativehlo|all>
              [--seeds K] [--steps T] [--quick] [--out DIR] [--artifacts DIR]
@@ -173,7 +174,7 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
 /// BASE every submitted session starts from (its `config` object is
 /// applied on top as `--set`-style overrides).
 fn cmd_serve(args: &Args) -> anyhow::Result<()> {
-    args.check_known_flags(&["help"])?;
+    args.check_known_flags(&["help", "adopt"])?;
     let mut cfg = load_config(args)?;
     if let Some(a) = args.opt("addr") {
         cfg.apply_override(&format!("serve.addr={a}"))?;
@@ -183,6 +184,9 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     }
     if let Some(p) = args.opt("policy") {
         cfg.apply_override(&format!("serve.policy={p}"))?;
+    }
+    if args.flag("adopt") {
+        cfg.apply_override("serve.adopt=true")?;
     }
     optex::serve::serve(&cfg)
 }

@@ -43,6 +43,20 @@ impl Schedule {
         }
     }
 
+    /// The spec string [`Schedule::parse`] accepts — `parse(spec())`
+    /// round-trips exactly (f64 params print shortest-roundtrip), which
+    /// is what lets the serve manifest persist a session's schedule as a
+    /// plain `optimizer.schedule=...` override (ISSUE 5).
+    pub fn spec(&self) -> String {
+        match *self {
+            Schedule::Constant => "constant".into(),
+            Schedule::Warmup { warmup } => format!("warmup:{warmup}"),
+            Schedule::Step { every, gamma } => format!("step:{every}:{gamma}"),
+            Schedule::Cosine { horizon, floor } => format!("cosine:{horizon}:{floor}"),
+            Schedule::Theory { n, t } => format!("theory:{n}:{t}"),
+        }
+    }
+
     /// Multiplier at iteration `t` (1-based).
     pub fn factor(&self, t: usize) -> f64 {
         match *self {
@@ -101,6 +115,20 @@ mod tests {
         assert_eq!(Schedule::parse("theory:4:100"), Some(Schedule::Theory { n: 4, t: 100 }));
         assert_eq!(Schedule::parse("linear"), None);
         assert_eq!(Schedule::parse("warmup:x"), None);
+    }
+
+    #[test]
+    fn spec_string_roundtrips_every_variant() {
+        for s in [
+            Schedule::Constant,
+            Schedule::Warmup { warmup: 12 },
+            Schedule::Step { every: 100, gamma: 0.5 },
+            Schedule::Step { every: 3, gamma: 0.1 + 0.2 }, // non-terminating repr
+            Schedule::Cosine { horizon: 1000, floor: 0.0123 },
+            Schedule::Theory { n: 4, t: 500 },
+        ] {
+            assert_eq!(Schedule::parse(&s.spec()), Some(s.clone()), "{}", s.spec());
+        }
     }
 
     #[test]

@@ -29,7 +29,7 @@ use crate::rl::replay::{Batch, ReplayBuffer};
 use crate::runtime::{Manifest, NativePool, TensorData, WorkerPool};
 use crate::util::timer::Stopwatch;
 use crate::util::Rng;
-use crate::workloads::{Eval, GradSource};
+use crate::workloads::{sampler_bytes, Eval, GradSource};
 
 /// RL experiment knobs (paper defaults in `RlConfig::paper`).
 #[derive(Clone, Debug)]
@@ -154,6 +154,33 @@ impl DqnSource {
             pool: NativePool::serial(),
             bufs: Vec::new(),
         })
+    }
+
+    /// A DQN oracle over a deterministically pre-filled replay buffer —
+    /// episode-free, so a `Driver` (and hence a serve `Session`) can step
+    /// it directly, and rebuildable from `seed` alone, which is what
+    /// makes `workload = "dqn_replay"` sessions suspend/adopt-able
+    /// (ISSUE 5). The construction is shared with the test fixture
+    /// (`testutil::fixtures::dqn_replay_source` delegates here) so both
+    /// sides of any serve-vs-solo comparison build the same oracle.
+    pub fn replay_fixture(seed: u64) -> DqnSource {
+        let obs_dim = 6;
+        let n_act = 3;
+        let replay = Rc::new(RefCell::new(ReplayBuffer::new(512, obs_dim)));
+        let mut rng = Rng::new(seed);
+        for _ in 0..256 {
+            let o = rng.normal_vec(obs_dim);
+            let no = rng.normal_vec(obs_dim);
+            replay.borrow_mut().push(
+                &o,
+                rng.below(n_act),
+                rng.normal() as f32,
+                &no,
+                rng.coin(0.1),
+            );
+        }
+        let mlp = Mlp::new(obs_dim, 32, n_act);
+        DqnSource::native(mlp, replay, 64, 0.95, 10, seed)
     }
 
     /// TD gradient at `params` on a freshly sampled minibatch (native).
@@ -313,6 +340,36 @@ impl GradSource for DqnSource {
         if t == 1 || t % self.sync_every == 0 {
             self.target.copy_from_slice(theta);
         }
+    }
+
+    fn save_sampler_state(&self) -> Vec<u8> {
+        // Replay-sampling RNG + target network. The target is synced from
+        // θ only at t = 1 and t % sync_every = 0 — a resumed run would
+        // otherwise start from a zero target until the next sync, which
+        // an uninterrupted run never sees. Replay *contents* are not
+        // state here: the fixture refills deterministically from seed,
+        // and the episode trainer owns its buffer across iterations.
+        let mut out = Vec::with_capacity(4 + 6 * 8 + 8 + 4 * self.target.len());
+        sampler_bytes::push_tag(&mut out, b"DQN1");
+        sampler_bytes::push_rng(&mut out, &self.rng);
+        sampler_bytes::push_f32s(&mut out, &self.target);
+        out
+    }
+
+    fn load_sampler_state(&mut self, bytes: &[u8]) -> Result<()> {
+        let mut inp = bytes;
+        sampler_bytes::expect_tag(&mut inp, b"DQN1", "dqn")?;
+        let rng = sampler_bytes::read_rng(&mut inp)?;
+        let target = sampler_bytes::read_f32s(&mut inp)?;
+        anyhow::ensure!(
+            target.len() == self.target.len(),
+            "dqn sampler state: target has {} params, network has {}",
+            target.len(),
+            self.target.len()
+        );
+        self.rng = rng;
+        self.target = target;
+        Ok(())
     }
 }
 
@@ -493,6 +550,41 @@ mod tests {
         assert_eq!(src.target, theta);
         src.on_iteration(5, &theta2);
         assert_eq!(src.target, theta2);
+    }
+
+    #[test]
+    fn sampler_state_roundtrip_replays_minibatches_and_target() {
+        let mut live = DqnSource::replay_fixture(4);
+        let mut rng = Rng::new(1);
+        let params = live.init_params(&mut rng);
+        live.on_iteration(1, &params); // sync a non-zero target
+        let (_, warm) = live.eval_batch_owned(&[&params, &params]).unwrap();
+        assert!(!warm.is_empty());
+        let state = live.save_sampler_state();
+        let (_, expect) = live.eval_batch_owned(&[&params, &params]).unwrap();
+
+        // a freshly built source (zero target, seed-start rng) restored
+        // from the state must sample the SAME minibatches against the
+        // SAME target net
+        let mut restored = DqnSource::replay_fixture(4);
+        restored.load_sampler_state(&state).unwrap();
+        let (_, got) = restored.eval_batch_owned(&[&params, &params]).unwrap();
+        assert_eq!(expect, got, "restored dqn sampler diverged");
+
+        assert!(restored.load_sampler_state(b"SYN1aaaa").is_err());
+    }
+
+    #[test]
+    fn replay_fixture_is_deterministic_per_seed() {
+        let mut a = DqnSource::replay_fixture(7);
+        let mut b = DqnSource::replay_fixture(7);
+        let p = vec![0.01f32; a.dim()];
+        a.on_iteration(1, &p);
+        b.on_iteration(1, &p);
+        let (ea, ga) = a.eval_batch_owned(&[&p]).unwrap();
+        let (eb, gb) = b.eval_batch_owned(&[&p]).unwrap();
+        assert_eq!(ga, gb);
+        assert_eq!(ea[0].loss.to_bits(), eb[0].loss.to_bits());
     }
 
     #[test]

@@ -149,6 +149,19 @@ impl NativePool {
         self.threads == 1
     }
 
+    /// This pool narrowed to at most `width` workers (floored at 1),
+    /// same execution mode. The serve scheduler's per-quantum arbiter
+    /// uses this to clamp a session's requested width to the server's
+    /// physical budget — the direct-width companion of
+    /// [`NativePool::capped_for`]'s work-derived cap. Purely a perf
+    /// decision: results are bit-identical at any width.
+    pub fn capped(&self, width: usize) -> NativePool {
+        NativePool {
+            threads: width.clamp(1, self.threads),
+            mode: self.mode,
+        }
+    }
+
     /// This pool narrowed so every spawned worker gets at least
     /// [`SPAWN_GRAIN`] element touches of work: callers state their job
     /// count and per-job cost, the pool owns the spawn-amortization
@@ -516,6 +529,16 @@ mod tests {
         assert_eq!(pool.capped_for(8, SPAWN_GRAIN).threads(), 8);
         // overflow-safe
         assert_eq!(pool.capped_for(usize::MAX, 2).threads(), 8);
+    }
+
+    #[test]
+    fn capped_clamps_width_and_keeps_mode() {
+        let pool = NativePool::new(8).with_mode(PoolMode::Persistent);
+        assert_eq!(pool.capped(3).threads(), 3);
+        assert_eq!(pool.capped(3).mode(), PoolMode::Persistent);
+        assert_eq!(pool.capped(1000).threads(), 8, "cannot exceed the budget");
+        assert_eq!(pool.capped(0).threads(), 1, "floored at one worker");
+        assert!(NativePool::serial().capped(64).is_serial());
     }
 
     #[test]

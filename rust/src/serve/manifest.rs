@@ -1,0 +1,314 @@
+//! Durable session manifest — the restart-adoption substrate (ISSUE 5).
+//!
+//! `serve.ckpt_dir/manifest.jsonl` records, at every admission / pause /
+//! resume / finish, the scheduler's **id high-water mark** and one line
+//! per *adoptable* session (factory-built and still active): its id,
+//! lifecycle state, iteration count, budget, suspend-checkpoint file (if
+//! suspended) and — the crux — its config serialized as the minimal
+//! `key=value` override list that rebuilds it from `RunConfig::default`
+//! ([`RunConfig::overrides_from_default`]). A new server started with
+//! `--adopt` therefore re-registers every session with its *submit-time*
+//! config, independent of whatever base config the new server carries.
+//!
+//! ## Format
+//!
+//! One JSON object per line (the repo's own `util::json`, no new deps):
+//!
+//! ```text
+//! {"manifest":"optex-serve","next_id":5,"version":1}
+//! {"budget":{"max_iters":40},"ckpt":"session_1.ckpt","id":1,"iters":12,"overrides":["seed=7","workload=\"ackley\""],"state":"paused"}
+//! {"budget":{},"id":3,"iters":4,"overrides":["seed=9"],"state":"running"}
+//! ```
+//!
+//! The file is small (≤ `serve.max_sessions` lines) and rewritten
+//! whole on every mutation via a temp-file + rename, so a `kill -9` at
+//! any instant leaves either the old manifest or the new one — never a
+//! torn line.
+//!
+//! ## Adoption semantics
+//!
+//! * `state = "paused"` **with** a `ckpt` file: the session was
+//!   suspended; `resume` on the adopting server restores the checkpoint
+//!   and continues **bit-identically** (the v2 checkpoint carries the
+//!   oracle's sampler state, so this holds for stochastic oracles too).
+//! * `state = "running"/"pending"` (no `ckpt`): the session was live
+//!   when the server died — there is nothing to restore from, so it
+//!   adopts as Paused at iteration 0 and `resume` re-runs it from its
+//!   seed (same config ⇒ same trajectory as an uninterrupted run, just
+//!   recomputed). Budget `deadline_s` clocks restart at adoption.
+//! * Injected-oracle sessions (tests, RL) are not rebuildable from
+//!   config and are never listed; only the id counter protects them.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::serve::session::Budget;
+use crate::util::json::Json;
+
+/// Manifest schema version.
+const VERSION: u64 = 1;
+
+/// The manifest file inside a serve checkpoint directory.
+pub fn manifest_path(ckpt_dir: &Path) -> PathBuf {
+    ckpt_dir.join("manifest.jsonl")
+}
+
+/// One adoptable session, as persisted.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Entry {
+    pub id: u64,
+    /// Lifecycle state name at the last manifest write
+    /// ("pending" | "running" | "paused").
+    pub state: String,
+    /// Iterations completed at the last manifest write (authoritative
+    /// only for suspended sessions, whose checkpoint pins it).
+    pub iters: u64,
+    /// Suspend-checkpoint file name, relative to the ckpt_dir (present
+    /// iff the session is suspended to disk).
+    pub ckpt: Option<String>,
+    pub budget: Budget,
+    /// `key=value` overrides rebuilding the session config from
+    /// `RunConfig::default()` (applied in order).
+    pub overrides: Vec<String>,
+}
+
+fn obj(fields: Vec<(&str, Json)>) -> Json {
+    let mut m = BTreeMap::new();
+    for (k, v) in fields {
+        m.insert(k.to_string(), v);
+    }
+    Json::Obj(m)
+}
+
+fn budget_json(b: &Budget) -> Json {
+    let mut fields = Vec::new();
+    if let Some(m) = b.max_iters {
+        fields.push(("max_iters", Json::Num(m as f64)));
+    }
+    if let Some(t) = b.target_loss {
+        fields.push(("target_loss", Json::Num(t)));
+    }
+    if let Some(dl) = b.deadline_s {
+        fields.push(("deadline_s", Json::Num(dl)));
+    }
+    obj(fields)
+}
+
+fn budget_from_json(v: &Json) -> Result<Budget> {
+    let Some(o) = v.as_obj() else {
+        bail!("manifest budget is not an object");
+    };
+    let mut b = Budget::default();
+    for (k, val) in o {
+        match k.as_str() {
+            "max_iters" => {
+                b.max_iters = Some(
+                    val.as_usize().context("manifest budget.max_iters")? as u64
+                )
+            }
+            "target_loss" => {
+                b.target_loss = Some(val.as_f64().context("manifest budget.target_loss")?)
+            }
+            "deadline_s" => {
+                b.deadline_s = Some(val.as_f64().context("manifest budget.deadline_s")?)
+            }
+            other => bail!("unknown manifest budget field {other:?}"),
+        }
+    }
+    Ok(b)
+}
+
+fn entry_json(e: &Entry) -> Json {
+    let mut fields = vec![
+        ("id", Json::Num(e.id as f64)),
+        ("state", Json::Str(e.state.clone())),
+        ("iters", Json::Num(e.iters as f64)),
+        ("budget", budget_json(&e.budget)),
+        (
+            "overrides",
+            Json::Arr(e.overrides.iter().map(|s| Json::Str(s.clone())).collect()),
+        ),
+    ];
+    if let Some(c) = &e.ckpt {
+        fields.push(("ckpt", Json::Str(c.clone())));
+    }
+    obj(fields)
+}
+
+fn entry_from_json(v: &Json) -> Result<Entry> {
+    let id = v.get("id").and_then(Json::as_usize).context("manifest entry id")? as u64;
+    let state = v
+        .get("state")
+        .and_then(Json::as_str)
+        .context("manifest entry state")?
+        .to_string();
+    let iters =
+        v.get("iters").and_then(Json::as_usize).context("manifest entry iters")? as u64;
+    let ckpt = match v.get("ckpt") {
+        None => None,
+        Some(c) => Some(c.as_str().context("manifest entry ckpt")?.to_string()),
+    };
+    let budget = budget_from_json(v.get("budget").context("manifest entry budget")?);
+    let overrides = v
+        .get("overrides")
+        .and_then(Json::as_arr)
+        .context("manifest entry overrides")?
+        .iter()
+        .map(|s| s.as_str().map(str::to_string).context("manifest override"))
+        .collect::<Result<Vec<String>>>()?;
+    Ok(Entry { id, state, iters, ckpt, budget: budget?, overrides })
+}
+
+/// Rewrite the manifest atomically (temp file + rename): header line
+/// with the id high-water mark, then one line per adoptable session.
+pub fn write(path: &Path, next_id: u64, entries: &[Entry]) -> Result<()> {
+    let mut out = String::new();
+    out.push_str(
+        &obj(vec![
+            ("manifest", Json::Str("optex-serve".into())),
+            ("version", Json::Num(VERSION as f64)),
+            ("next_id", Json::Num(next_id as f64)),
+        ])
+        .to_string(),
+    );
+    out.push('\n');
+    for e in entries {
+        out.push_str(&entry_json(e).to_string());
+        out.push('\n');
+    }
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let tmp = path.with_extension("jsonl.tmp");
+    std::fs::write(&tmp, &out)
+        .with_context(|| format!("writing manifest temp {}", tmp.display()))?;
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("publishing manifest {}", path.display()))?;
+    Ok(())
+}
+
+/// Load a manifest: `(next_id, entries)`.
+pub fn read(path: &Path) -> Result<(u64, Vec<Entry>)> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading manifest {}", path.display()))?;
+    let mut lines = text.lines().filter(|l| !l.trim().is_empty());
+    let header_line = lines.next().context("manifest is empty")?;
+    let header = Json::parse(header_line)
+        .map_err(|e| anyhow::anyhow!("manifest header: {e}"))?;
+    if header.get("manifest").and_then(Json::as_str) != Some("optex-serve") {
+        bail!("not an optex serve manifest");
+    }
+    let version = header
+        .get("version")
+        .and_then(Json::as_usize)
+        .context("manifest version")? as u64;
+    if version != VERSION {
+        bail!("unsupported manifest version {version}");
+    }
+    let next_id = header
+        .get("next_id")
+        .and_then(Json::as_usize)
+        .context("manifest next_id")? as u64;
+    let mut entries = Vec::new();
+    for (i, line) in lines.enumerate() {
+        let v = Json::parse(line)
+            .map_err(|e| anyhow::anyhow!("manifest line {}: {e}", i + 2))?;
+        entries.push(
+            entry_from_json(&v).with_context(|| format!("manifest line {}", i + 2))?,
+        );
+    }
+    Ok((next_id, entries))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::testutil::prop;
+
+    fn tmp(name: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("optex_manifest_{name}_{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        manifest_path(&d)
+    }
+
+    #[test]
+    fn empty_manifest_roundtrips_next_id() {
+        let path = tmp("empty");
+        write(&path, 42, &[]).unwrap();
+        let (next_id, entries) = read(&path).unwrap();
+        assert_eq!(next_id, 42);
+        assert!(entries.is_empty());
+        std::fs::remove_dir_all(path.parent().unwrap()).ok();
+    }
+
+    #[test]
+    fn rejects_garbage_and_wrong_headers() {
+        let path = tmp("garbage");
+        std::fs::write(&path, "not json\n").unwrap();
+        assert!(read(&path).is_err());
+        std::fs::write(&path, "{\"manifest\":\"other\",\"next_id\":1,\"version\":1}\n")
+            .unwrap();
+        assert!(read(&path).is_err());
+        std::fs::write(
+            &path,
+            "{\"manifest\":\"optex-serve\",\"next_id\":1,\"version\":99}\n",
+        )
+        .unwrap();
+        assert!(read(&path).is_err(), "future versions must not half-parse");
+        std::fs::write(&path, "").unwrap();
+        assert!(read(&path).is_err());
+        std::fs::remove_dir_all(path.parent().unwrap()).ok();
+    }
+
+    /// ISSUE 5 satellite: manifest round-trip property — random id
+    /// counters, budgets, states and override strings (quotes,
+    /// backslashes, spaces) survive write → read exactly.
+    #[test]
+    fn roundtrip_property() {
+        let path = tmp("prop");
+        prop::check("manifest_roundtrip", |rng| {
+            let n = rng.below(5);
+            let mut entries = Vec::new();
+            for i in 0..n {
+                let states = ["pending", "running", "paused"];
+                let state = states[rng.below(3)].to_string();
+                let suspended = state == "paused" && rng.coin(0.7);
+                let id = (i as u64 + 1) * (1 + rng.below(9) as u64);
+                let mut overrides = vec![format!("seed={}", rng.below(1000))];
+                if rng.coin(0.5) {
+                    overrides.push("workload=\"ackley\"".into());
+                }
+                if rng.coin(0.3) {
+                    // hostile string content straight through the json layer
+                    overrides.push("out_dir=\"a\\\"b \\\\ c\"".into());
+                }
+                entries.push(Entry {
+                    id,
+                    state,
+                    iters: rng.below(1000) as u64,
+                    ckpt: suspended.then(|| format!("session_{id}.ckpt")),
+                    budget: Budget {
+                        max_iters: rng.coin(0.5).then(|| rng.below(500) as u64),
+                        target_loss: rng.coin(0.5).then(|| rng.normal()),
+                        deadline_s: rng.coin(0.5).then(|| rng.uniform() * 100.0),
+                    },
+                    overrides,
+                });
+            }
+            let next_id = entries.iter().map(|e| e.id).max().unwrap_or(0) + 1;
+            write(&path, next_id, &entries).map_err(|e| e.to_string())?;
+            let (got_next, got) = read(&path).map_err(|e| e.to_string())?;
+            prop_assert!(got_next == next_id, "next_id {got_next} != {next_id}");
+            prop_assert!(got.len() == entries.len(), "entry count");
+            for (a, b) in entries.iter().zip(&got) {
+                prop_assert!(a == b, "entry mismatch: {a:?} vs {b:?}");
+            }
+            Ok(())
+        });
+        std::fs::remove_dir_all(path.parent().unwrap()).ok();
+    }
+}

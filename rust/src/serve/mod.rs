@@ -15,12 +15,20 @@
 //!   loss, deadline) + checkpoint-backed suspend/resume.
 //! * [`scheduler`] — [`Scheduler`]: deterministic round-robin (default)
 //!   or weighted-fair (keyed on the per-session `eval_s` EMA) stepping
-//!   of runnable sessions, one sequential iteration per quantum.
+//!   of runnable sessions, one sequential iteration per quantum; the
+//!   per-quantum width [`Arbiter`] clamps each session's requested
+//!   `optex.threads` to the server's physical pool (ISSUE 5).
 //! * [`protocol`] — the JSONL request/response grammar (`submit`,
-//!   `status`, `result`, `pause`, `resume`, `cancel`, `shutdown`), built
-//!   on `util/json` — no new dependencies.
+//!   `status`, `result`, `watch`, `pause`, `resume`, `cancel`,
+//!   `shutdown`), built on `util/json` — no new dependencies.
+//! * [`manifest`] — the durable session manifest
+//!   (`ckpt_dir/manifest.jsonl`, ISSUE 5): id high-water mark + every
+//!   adoptable session's config/budget/checkpoint, atomically rewritten
+//!   on each mutation so `--adopt` survives `kill -9`.
 //! * [`server`] — std `TcpListener` accept loop feeding the scheduler
-//!   thread through an mpsc command queue; `optex serve` entrypoint.
+//!   thread through an mpsc command queue; per-connection writer
+//!   threads carry both responses and `watch` pushes; `optex serve`
+//!   entrypoint.
 //!
 //! ## Scheduling invariants
 //!
@@ -50,35 +58,59 @@
 //! deterministic oracles; stochastic oracles restart their data-sampler
 //! RNG from the config seed (the standing checkpoint caveat).
 //!
+//! ## Durability (ISSUE 5)
+//!
+//! Sessions survive the server. Every scheduler mutation atomically
+//! rewrites `ckpt_dir/manifest.jsonl` (id counter + per-session config
+//! overrides, budget, suspend checkpoint), and suspend checkpoints
+//! (format v2) carry the oracle's sampler state — so after a crash or
+//! `kill -9`, `optex serve --adopt` re-registers everything as Paused
+//! under the original ids and `resume` continues suspended sessions
+//! **bit-identically**, stochastic oracles included. Sessions that were
+//! mid-flight (never suspended) re-run from their seeds. A non-empty
+//! ckpt_dir without `--adopt` is refused (the id-reuse hazard).
+//!
 //! ## Wire protocol by example
 //!
-//! Start a server and drive it with `nc`:
+//! Start a server and drive it with `nc` — including a kill / adopt /
+//! watch cycle:
 //!
 //! ```text
 //! $ optex serve --addr 127.0.0.1:7878 --max-sessions 64 --threads 8
 //! $ nc 127.0.0.1 7878
 //! {"cmd":"submit","config":{"workload":"ackley","synth_dim":256,"steps":40,"seed":7}}
 //! {"id":1,"ok":true,"state":"pending"}
-//! {"cmd":"status","id":1}
-//! {"best_loss":2.137,"id":1,"iters":12,"loss":2.47,"method":"optex","ok":true,"state":"running","suspended":false,"workload":"ackley"}
+//! {"cmd":"watch","id":1,"stream_every":10}
+//! {"id":1,"ok":true,"stream_every":10,"watch":true}
+//! {"best_loss":1.97,"event":"iter","id":1,"iter":10,"loss":2.01,"ok":true,"state":"running"}
+//! {"best_loss":0.84,"event":"iter","id":1,"iter":20,"loss":0.84,"ok":true,"state":"running"}
 //! {"cmd":"pause","id":1}
 //! {"id":1,"ok":true,"state":"paused"}
+//! ^C                                  # kill the server however you like
+//! $ optex serve --addr 127.0.0.1:7878 --adopt --set serve.ckpt_dir=results/serve_ckpt
+//! serve: adopted 1 session(s) from results/serve_ckpt/manifest.jsonl (next id 2)
+//! $ nc 127.0.0.1 7878
+//! {"cmd":"watch","id":1}
+//! {"id":1,"ok":true,"stream_every":1,"watch":true}
 //! {"cmd":"resume","id":1}
 //! {"id":1,"ok":true,"state":"running"}
-//! {"cmd":"result","id":1,"theta":true}
-//! {"best_loss":0.491,"final_loss":0.491,"id":1,"iters":40,"ok":true,"state":"done","stop_reason":"max_iters","theta":[...],...}
+//! {"best_loss":0.79,"event":"iter","id":1,"iter":21,"loss":0.79,"ok":true,"state":"running"}
+//! ...
+//! {"best_loss":0.49,"event":"result","final_loss":0.49,"id":1,"iters":40,"ok":true,"state":"done","stop_reason":"max_iters",...}
 //! {"cmd":"shutdown"}
 //! {"ok":true,"shutdown":true}
 //! ```
 //!
-//! See `protocol.rs` for the full grammar and `config::ServeParams`
-//! (`[serve]` table) for the server knobs.
+//! See `protocol.rs` for the full grammar, `manifest.rs` for adoption
+//! semantics, and `config::ServeParams` (`[serve]` table) for the
+//! server knobs.
 
+pub mod manifest;
 pub mod protocol;
 pub mod scheduler;
 pub mod server;
 pub mod session;
 
-pub use scheduler::{Policy, Scheduler};
+pub use scheduler::{Arbiter, Policy, Scheduler};
 pub use server::{serve, Server};
 pub use session::{Budget, Session, SessionState};

@@ -9,13 +9,27 @@
 //!
 //! | cmd        | fields                                            |
 //! |------------|---------------------------------------------------|
-//! | `submit`   | `config` (object of config-path → value, applied as `--set` overrides on the server's base config), `budget` (optional: `max_iters`, `target_loss`, `deadline_s`) |
+//! | `submit`   | `config` (object of config-path → value, applied as `--set` overrides on the server's base config), `budget` (optional: `max_iters`, `target_loss`, `deadline_s`), `paused` (optional bool: admit suspended — submit a batch, `watch`, then `resume`) |
 //! | `status`   | `id` (optional: omit for all sessions)            |
 //! | `result`   | `id`, `theta` (optional bool: include the iterate)|
+//! | `watch`    | `id`, `stream_every` (optional, ≥ 1; default `serve.stream_every`), `theta` (optional bool: include θ in the terminal push) — subscribe this connection to push notifications |
 //! | `pause`    | `id` — checkpoint-backed suspend                  |
 //! | `resume`   | `id`                                              |
 //! | `cancel`   | `id`                                              |
 //! | `shutdown` | —                                                 |
+//!
+//! ## Streaming (`watch`, ISSUE 5)
+//!
+//! `watch` replaces status polling: after the `{"ok":true,"watch":...}`
+//! acknowledgement, the server PUSHES lines on this connection —
+//! `{"event":"iter",...}` every `stream_every` completed iterations and
+//! one terminal `{"event":"result",...}` whose remaining fields are
+//! exactly the `result` response (the integration test asserts the
+//! equality). Pushes interleave with this connection's other
+//! request/response traffic; clients discriminate by the `event` field,
+//! which no request/response line carries. Watching an
+//! already-finished session acknowledges and pushes the terminal line
+//! immediately.
 //!
 //! Numbers round-trip exactly: θ components are f32, widened losslessly
 //! to f64 and printed with Rust's shortest-roundtrip formatting, so a
@@ -51,9 +65,20 @@ pub enum Request {
         /// key order (deterministic application).
         overrides: Vec<String>,
         budget: Budget,
+        /// Admit suspended (checkpoint on disk at iteration 0): lets a
+        /// client attach a `watch` before any iteration runs.
+        paused: bool,
     },
     Status { id: Option<u64> },
     Result { id: u64, include_theta: bool },
+    Watch {
+        id: u64,
+        /// Push an iter record every K completed iterations
+        /// (None → the server's `serve.stream_every` default).
+        stream_every: Option<u64>,
+        /// Include θ in the terminal push.
+        include_theta: bool,
+    },
     Pause { id: u64 },
     Resume { id: u64 },
     Cancel { id: u64 },
@@ -153,7 +178,12 @@ pub fn parse_request(line: &str) -> Result<Request, String> {
                 Some(b) => parse_budget(b)?,
                 None => Budget::default(),
             };
-            Ok(Request::Submit { overrides, budget })
+            let paused = v
+                .get("paused")
+                .map(|p| p.as_bool().ok_or("\"paused\" must be a bool"))
+                .transpose()?
+                .unwrap_or(false);
+            Ok(Request::Submit { overrides, budget, paused })
         }
         "status" => Ok(Request::Status {
             id: match v.get("id") {
@@ -163,6 +193,23 @@ pub fn parse_request(line: &str) -> Result<Request, String> {
         }),
         "result" => Ok(Request::Result {
             id: need_id(&v)?,
+            include_theta: v
+                .get("theta")
+                .map(|t| t.as_bool().ok_or("\"theta\" must be a bool"))
+                .transpose()?
+                .unwrap_or(false),
+        }),
+        "watch" => Ok(Request::Watch {
+            id: need_id(&v)?,
+            stream_every: v
+                .get("stream_every")
+                .map(|e| {
+                    e.as_usize()
+                        .filter(|&k| k >= 1)
+                        .map(|k| k as u64)
+                        .ok_or("\"stream_every\" must be an integer >= 1")
+                })
+                .transpose()?,
             include_theta: v
                 .get("theta")
                 .map(|t| t.as_bool().ok_or("\"theta\" must be a bool"))
@@ -200,14 +247,53 @@ pub fn error_line(msg: &str) -> String {
     obj(vec![("ok", Json::Bool(false)), ("error", Json::Str(msg.to_string()))]).to_string()
 }
 
-/// `submit` acknowledgement.
-pub fn submit_line(id: u64) -> String {
+/// `submit` acknowledgement (`state` reflects `paused` admission).
+pub fn submit_line(id: u64, state: &str) -> String {
     obj(vec![
         ("ok", Json::Bool(true)),
         ("id", Json::Num(id as f64)),
-        ("state", Json::Str("pending".into())),
+        ("state", Json::Str(state.into())),
     ])
     .to_string()
+}
+
+/// `watch` acknowledgement.
+pub fn watch_line(id: u64, stream_every: u64) -> String {
+    obj(vec![
+        ("ok", Json::Bool(true)),
+        ("id", Json::Num(id as f64)),
+        ("watch", Json::Bool(true)),
+        ("stream_every", Json::Num(stream_every as f64)),
+    ])
+    .to_string()
+}
+
+/// Pushed iteration record (`watch` streaming). The `event` field is
+/// what distinguishes pushes from request responses on a shared
+/// connection — no response line carries one.
+pub fn iter_event_line(s: &Session) -> String {
+    let mut fields = vec![
+        ("event", Json::Str("iter".into())),
+        ("ok", Json::Bool(true)),
+        ("id", Json::Num(s.id() as f64)),
+        ("iter", Json::Num(s.iters_done() as f64)),
+        ("best_loss", num_or_null(s.best_loss())),
+        ("state", Json::Str(s.state().name().into())),
+    ];
+    if let Some(l) = s.last_loss() {
+        fields.push(("loss", num_or_null(l)));
+    }
+    obj(fields).to_string()
+}
+
+/// Pushed terminal record: `result_line` plus `"event":"result"` — a
+/// client that can parse `result` responses parses this for free, and
+/// the two are field-for-field identical apart from the marker (pinned
+/// by `serve_integration.rs`).
+pub fn result_event_line(s: &Session, include_theta: bool) -> String {
+    let mut fields = vec![("event", Json::Str("result".into()))];
+    fields.extend(result_fields(s, include_theta));
+    obj(fields).to_string()
 }
 
 /// `shutdown` acknowledgement.
@@ -261,10 +347,9 @@ pub fn status_all_line<'a>(sessions: impl Iterator<Item = &'a Session>) -> Strin
     obj(vec![("ok", Json::Bool(true)), ("sessions", Json::Arr(arr))]).to_string()
 }
 
-/// `result`: status fields + final loss (+ the iterate on request;
-/// f32 → f64 is exact and the writer prints shortest-roundtrip, so the
-/// client recovers the exact bits).
-pub fn result_line(s: &Session, include_theta: bool) -> String {
+/// The `result` payload fields (shared by the response and the terminal
+/// `watch` push so the two cannot drift apart).
+fn result_fields(s: &Session, include_theta: bool) -> Vec<(&'static str, Json)> {
     let mut fields = vec![("ok", Json::Bool(true))];
     fields.extend(session_fields(s));
     if let Some(l) = s.last_loss() {
@@ -279,7 +364,14 @@ pub fn result_line(s: &Session, include_theta: bool) -> String {
             None => fields.push(("theta", Json::Null)),
         }
     }
-    obj(fields).to_string()
+    fields
+}
+
+/// `result`: status fields + final loss (+ the iterate on request;
+/// f32 → f64 is exact and the writer prints shortest-roundtrip, so the
+/// client recovers the exact bits).
+pub fn result_line(s: &Session, include_theta: bool) -> String {
+    obj(result_fields(s, include_theta)).to_string()
 }
 
 #[cfg(test)]
@@ -289,7 +381,7 @@ mod tests {
     #[test]
     fn parses_submit_with_config_and_budget() {
         let line = r#"{"cmd":"submit","config":{"workload":"ackley","steps":40,"seed":7,"optex.parallelism":4,"noise_std":0.25,"hlo_workload":false},"budget":{"max_iters":30,"target_loss":0.5,"deadline_s":10.5}}"#;
-        let Request::Submit { overrides, budget } = parse_request(line).unwrap() else {
+        let Request::Submit { overrides, budget, paused } = parse_request(line).unwrap() else {
             panic!("expected submit");
         };
         // key-sorted, values rendered override-grammar-compatible
@@ -309,6 +401,26 @@ mod tests {
         assert_eq!(budget.max_iters, Some(30));
         assert_eq!(budget.target_loss, Some(0.5));
         assert_eq!(budget.deadline_s, Some(10.5));
+        assert!(!paused, "paused defaults to false");
+    }
+
+    #[test]
+    fn parses_paused_submit_and_watch() {
+        let Request::Submit { paused, .. } =
+            parse_request(r#"{"cmd":"submit","paused":true}"#).unwrap()
+        else {
+            panic!("expected submit");
+        };
+        assert!(paused);
+        assert!(matches!(
+            parse_request(r#"{"cmd":"watch","id":3}"#).unwrap(),
+            Request::Watch { id: 3, stream_every: None, include_theta: false }
+        ));
+        assert!(matches!(
+            parse_request(r#"{"cmd":"watch","id":3,"stream_every":5,"theta":true}"#)
+                .unwrap(),
+            Request::Watch { id: 3, stream_every: Some(5), include_theta: true }
+        ));
     }
 
     #[test]
@@ -402,6 +514,12 @@ mod tests {
             (r#"{"cmd":"submit","config":{"a":[1]}}"#, "unsupported config value"),
             (r#"{"cmd":"submit","budget":{"max_tokens":5}}"#, "unknown budget field"),
             (r#"{"cmd":"result","id":1,"theta":"yes"}"#, "must be a bool"),
+            (r#"{"cmd":"submit","paused":"yes"}"#, "\"paused\" must be a bool"),
+            (r#"{"cmd":"watch"}"#, "missing or invalid \"id\""),
+            (r#"{"cmd":"watch","id":1,"stream_every":0}"#, "integer >= 1"),
+            (r#"{"cmd":"watch","id":1,"stream_every":2.5}"#, "integer >= 1"),
+            (r#"{"cmd":"watch","id":1,"stream_every":-4}"#, "integer >= 1"),
+            (r#"{"cmd":"watch","id":1,"theta":1}"#, "must be a bool"),
         ] {
             let err = parse_request(line).unwrap_err();
             assert!(err.contains(want), "{line} -> {err}");
@@ -412,7 +530,7 @@ mod tests {
     fn error_and_ack_lines_are_valid_json() {
         for line in [
             error_line("no such session 9"),
-            submit_line(4),
+            submit_line(4, "pending"),
             shutdown_line(),
         ] {
             let v = Json::parse(&line).unwrap();
@@ -421,6 +539,47 @@ mod tests {
         let e = Json::parse(&error_line("x\"y")).unwrap();
         assert_eq!(e.get("error").unwrap().as_str(), Some("x\"y"));
         assert_eq!(e.get("ok").unwrap().as_bool(), Some(false));
+    }
+
+    #[test]
+    fn terminal_push_is_result_line_plus_event_marker() {
+        // the watch contract: a client that parses `result` responses
+        // parses terminal pushes for free
+        let dir = crate::testutil::fixtures::tmp_ckpt_dir("proto_event");
+        let mut cfg = crate::config::RunConfig::default();
+        cfg.workload = "sphere".into();
+        cfg.steps = 2;
+        cfg.synth_dim = 16;
+        cfg.optex.parallelism = 2;
+        cfg.optex.t0 = 3;
+        cfg.optex.threads = 1;
+        let mut s = Session::build(1, cfg, Budget::default(), &dir).unwrap();
+        while s.is_runnable() {
+            s.step();
+        }
+        for theta in [false, true] {
+            let push = Json::parse(&result_event_line(&s, theta)).unwrap();
+            let resp = Json::parse(&result_line(&s, theta)).unwrap();
+            assert_eq!(push.get("event").unwrap().as_str(), Some("result"));
+            let mut fields = push.as_obj().unwrap().clone();
+            fields.remove("event");
+            assert_eq!(Json::Obj(fields), resp, "theta={theta}");
+        }
+        let iter = Json::parse(&iter_event_line(&s)).unwrap();
+        assert_eq!(iter.get("event").unwrap().as_str(), Some("iter"));
+        assert_eq!(iter.get("iter").unwrap().as_usize(), Some(2));
+        // no response line carries an `event` field (the discriminator)
+        for line in [
+            status_line(&s),
+            result_line(&s, false),
+            ack_line(&s),
+            submit_line(1, "pending"),
+            watch_line(1, 1),
+            error_line("x"),
+        ] {
+            assert!(Json::parse(&line).unwrap().get("event").is_none(), "{line}");
+        }
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -43,13 +43,31 @@
 //! grow without bound: beyond `max_sessions` finished sessions, the
 //! oldest are evicted at the next admission. Fetch results within that
 //! window (it is as wide as the admission cap itself).
+//!
+//! ## Durability (ISSUE 5)
+//!
+//! Every mutation of the adoptable set — admit, suspend, resume,
+//! cancel, finish — atomically rewrites `ckpt_dir/manifest.jsonl`
+//! (see [`crate::serve::manifest`]) with the id high-water mark and one
+//! entry per factory-rebuildable active session. A successor server
+//! started with `--adopt` calls [`Scheduler::adopt_manifest`] to
+//! re-register them as Paused under their original ids.
+//!
+//! ## Width arbitration (ISSUE 5)
+//!
+//! With a physical pool installed ([`Scheduler::set_physical_pool`]),
+//! every quantum runs on an [`Arbiter`] grant: the session's requested
+//! `optex.threads` clamped to the server's budget. See [`Arbiter`] for
+//! the invariant and why bit-identity is indifferent to the outcome.
 
 use std::collections::BTreeMap;
 use std::path::PathBuf;
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::config::RunConfig;
+use crate::runtime::NativePool;
+use crate::serve::manifest;
 use crate::serve::session::{Budget, Session};
 use crate::workloads::GradSource;
 
@@ -79,6 +97,53 @@ impl Policy {
     }
 }
 
+/// Per-quantum pool-width arbiter (ISSUE 5): the generalization of
+/// [`NativePool::capped_for`] from "how much work does this dispatch
+/// have" to "how much of the machine may this session's quantum use".
+///
+/// Each session carries a requested width (`optex.threads` at submit;
+/// 0 = defer to the budget); the arbiter clamps every grant to the
+/// server's *physical* pool. The arbitration invariant — the widths of
+/// concurrent quanta never sum past the physical budget — holds by
+/// construction today because the serve loop runs ONE quantum at a time
+/// on the scheduler thread; what the clamp adds on top is that no
+/// session can oversubscribe the machine (a `threads=1000` submit on an
+/// 8-wide server gets 8) and, under `optex.pool = persistent`, that the
+/// process-global worker registry grows to the physical width instead of
+/// to the largest width any client ever asked for. A future
+/// multi-threaded stepper would negotiate concurrent grants HERE and
+/// nowhere else. Bit-identity per session holds at any arbitration
+/// outcome (`thread_invariance.rs`), so grants may differ quantum to
+/// quantum — only wall-clock changes.
+#[derive(Clone, Copy, Debug)]
+pub struct Arbiter {
+    physical: NativePool,
+}
+
+impl Arbiter {
+    /// Arbiter over the server's physical compute budget (resolved from
+    /// the serve config's `optex.threads` / `optex.pool`).
+    pub fn new(physical: NativePool) -> Arbiter {
+        Arbiter { physical }
+    }
+
+    pub fn physical(&self) -> NativePool {
+        self.physical
+    }
+
+    /// The dispatch view for one quantum: the session's requested width
+    /// clamped to the physical pool (0 = the full budget). The substrate
+    /// mode is the server's — execution substrate is a server-level
+    /// resource decision, and it is never a numerics fork.
+    pub fn grant(&self, requested: usize) -> NativePool {
+        if requested == 0 {
+            self.physical
+        } else {
+            self.physical.capped(requested)
+        }
+    }
+}
+
 /// Owns the session table and picks which session runs next.
 pub struct Scheduler {
     sessions: BTreeMap<u64, Session>,
@@ -88,6 +153,10 @@ pub struct Scheduler {
     ckpt_dir: PathBuf,
     /// Round-robin cursor: id of the last stepped session.
     rr_last: u64,
+    /// Per-quantum width arbiter; None = legacy behavior (each session's
+    /// driver keeps the pool it resolved from its own config — the
+    /// in-process test/bench path). The server always installs one.
+    arbiter: Option<Arbiter>,
 }
 
 impl Scheduler {
@@ -100,7 +169,82 @@ impl Scheduler {
             policy,
             ckpt_dir,
             rr_last: 0,
+            arbiter: None,
         }
+    }
+
+    /// Install the per-quantum width arbiter over the server's physical
+    /// compute budget. Without one, sessions keep the pools their
+    /// drivers resolved from their own configs (the legacy in-process
+    /// path).
+    pub fn set_physical_pool(&mut self, physical: NativePool) {
+        self.arbiter = Some(Arbiter::new(physical));
+    }
+
+    /// The id the next admitted session will get (persisted in the
+    /// manifest — the restart id-reuse fix).
+    pub fn next_id(&self) -> u64 {
+        self.next_id
+    }
+
+    /// Rewrite the durable session manifest (id high-water mark + every
+    /// adoptable session) — called on every mutation that changes it.
+    /// Best-effort: a full disk must degrade durability, not take the
+    /// serve loop down mid-quantum.
+    fn persist_manifest(&self) {
+        let entries: Vec<manifest::Entry> =
+            self.sessions.values().filter_map(Session::manifest_entry).collect();
+        let path = manifest::manifest_path(&self.ckpt_dir);
+        if let Err(e) = manifest::write(&path, self.next_id, &entries) {
+            eprintln!("serve: manifest write failed ({}): {e:#}", path.display());
+        }
+    }
+
+    /// Re-register every session recorded in the ckpt_dir's manifest
+    /// (server `--adopt`): each entry's config is rebuilt from its
+    /// persisted overrides on top of `RunConfig::default()`, the session
+    /// re-enters as Paused with its ORIGINAL id, and the id counter
+    /// resumes from the persisted high-water mark — a new server can no
+    /// longer hand out ids that collide with a predecessor's checkpoints.
+    /// Suspended entries resume bit-identically from their checkpoints;
+    /// entries that were live at the kill re-run from their seeds.
+    /// Adopted sessions may exceed `max_sessions` (they held admission
+    /// capacity before the restart); new submissions stay gated on the
+    /// cap as usual. Returns the number of sessions adopted.
+    pub fn adopt_manifest(&mut self) -> Result<usize> {
+        let path = manifest::manifest_path(&self.ckpt_dir);
+        let (next_id, entries) = manifest::read(&path)?;
+        let n = entries.len();
+        let mut max_id = 0u64;
+        for e in entries {
+            let mut cfg = RunConfig::default();
+            for kv in &e.overrides {
+                cfg.apply_override(kv).with_context(|| {
+                    format!("adopting session {}: override {kv:?}", e.id)
+                })?;
+            }
+            if let Some(c) = &e.ckpt {
+                let canonical = format!("session_{}.ckpt", e.id);
+                if *c != canonical {
+                    bail!(
+                        "adopting session {}: manifest names checkpoint {c:?}, \
+                         expected {canonical:?}",
+                        e.id
+                    );
+                }
+            }
+            // without a suspend checkpoint there is no progress to
+            // restore — the session re-runs from iteration 0
+            let iters = if e.ckpt.is_some() { e.iters } else { 0 };
+            let session = Session::adopt(e.id, cfg, e.budget, &self.ckpt_dir, iters);
+            if self.sessions.insert(e.id, session).is_some() {
+                bail!("manifest lists session id {} twice", e.id);
+            }
+            max_id = max_id.max(e.id);
+        }
+        self.next_id = self.next_id.max(next_id).max(max_id + 1);
+        self.persist_manifest();
+        Ok(n)
     }
 
     /// Sessions currently holding admission capacity.
@@ -128,6 +272,7 @@ impl Scheduler {
         session.set_vtime(self.min_runnable_vtime());
         self.sessions.insert(id, session);
         self.evict_finished();
+        self.persist_manifest();
         Ok(id)
     }
 
@@ -212,10 +357,22 @@ impl Scheduler {
     /// Run ONE iteration of one session; returns its id, or None when
     /// nothing is runnable (all pending work done/paused). Session
     /// failures are absorbed into the session's state, never propagated.
+    /// With an arbiter installed, the quantum runs on the granted pool
+    /// view (requested width clamped to the physical budget).
     pub fn tick(&mut self) -> Option<u64> {
         let id = self.pick()?;
         self.rr_last = id;
-        self.sessions.get_mut(&id).expect("picked id exists").step();
+        let session = self.sessions.get_mut(&id).expect("picked id exists");
+        if let Some(arb) = &self.arbiter {
+            let grant = arb.grant(session.requested_threads());
+            session.apply_pool(grant);
+        }
+        session.step();
+        if !session.is_active() {
+            // the session just finished: its manifest entry (if any) is
+            // dead — a crash after this instant must not re-run it
+            self.persist_manifest();
+        }
         Some(id)
     }
 
@@ -234,7 +391,11 @@ impl Scheduler {
     }
 
     pub fn pause(&mut self, id: u64) -> Result<()> {
-        self.get_mut(id)?.pause()
+        self.get_mut(id)?.pause()?;
+        // a suspended session's manifest entry pins its checkpoint +
+        // iteration count — the restart-adoption ground truth
+        self.persist_manifest();
+        Ok(())
     }
 
     pub fn resume(&mut self, id: u64) -> Result<()> {
@@ -248,7 +409,12 @@ impl Scheduler {
             .filter(|(&sid, s)| sid != id && s.is_runnable())
             .map(|(_, s)| s.vtime())
             .fold(f64::INFINITY, f64::min);
-        self.get_mut(id)?.resume()?;
+        let resumed = self.get_mut(id)?.resume();
+        // resume mutates the manifest whether it worked (checkpoint
+        // consumed, state running) or failed terminally (session Failed,
+        // entry dropped)
+        self.persist_manifest();
+        resumed?;
         if floor.is_finite() {
             let s = self.get_mut(id)?;
             if s.vtime() < floor {
@@ -259,7 +425,9 @@ impl Scheduler {
     }
 
     pub fn cancel(&mut self, id: u64) -> Result<()> {
-        self.get_mut(id)?.cancel()
+        self.get_mut(id)?.cancel()?;
+        self.persist_manifest();
+        Ok(())
     }
 
     fn get_mut(&mut self, id: u64) -> Result<&mut Session> {
@@ -412,6 +580,149 @@ mod tests {
         assert!(s.session(finished[3]).is_some());
         assert!(s.session(finished[4]).is_some());
         assert_eq!(s.sessions().count(), 3);
+    }
+
+    #[test]
+    fn manifest_tracks_admit_suspend_finish() {
+        let dir = crate::testutil::fixtures::tmp_ckpt_dir("sched_manifest");
+        let mpath = manifest::manifest_path(&dir);
+        let mut s = Scheduler::new(8, Policy::RoundRobin, dir.clone());
+        let a = s.submit(synth_cfg(1, 4), Budget::default()).unwrap();
+        let b = s.submit(synth_cfg(2, 4), Budget::default()).unwrap();
+        let (next_id, entries) = manifest::read(&mpath).unwrap();
+        assert_eq!(next_id, 3);
+        assert_eq!(entries.len(), 2);
+        assert_eq!(entries[0].state, "pending");
+        assert!(entries[0].ckpt.is_none());
+
+        s.tick();
+        s.pause(a).unwrap();
+        let (_, entries) = manifest::read(&mpath).unwrap();
+        let ea = entries.iter().find(|e| e.id == a).unwrap();
+        assert_eq!(ea.state, "paused");
+        assert_eq!(ea.iters, 1);
+        assert_eq!(ea.ckpt.as_deref(), Some(format!("session_{a}.ckpt").as_str()));
+
+        // finishing b drops it from the manifest at the finishing tick
+        s.run_to_completion();
+        let (_, entries) = manifest::read(&mpath).unwrap();
+        assert!(entries.iter().all(|e| e.id != b), "finished session persisted");
+        // a is still paused and adoptable
+        assert_eq!(entries.len(), 1);
+        // injected-oracle sessions never appear
+        let src = crate::testutil::fixtures::dqn_replay_source(1);
+        s.submit_with_source(synth_cfg(3, 2), Box::new(src), Budget::default())
+            .unwrap();
+        let (next_id, entries) = manifest::read(&mpath).unwrap();
+        assert_eq!(entries.len(), 1, "injected session is not adoptable");
+        assert_eq!(next_id, 4, "but it still consumes a persisted id");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn adopt_manifest_restores_sessions_and_id_counter() {
+        let dir = crate::testutil::fixtures::tmp_ckpt_dir("sched_adopt");
+        // first server: two suspended sessions + one that was running
+        let mut first = Scheduler::new(8, Policy::RoundRobin, dir.clone());
+        let a = first.submit(synth_cfg(1, 6), Budget::default()).unwrap();
+        let b = first.submit(synth_cfg(2, 6), Budget::default()).unwrap();
+        let c = first.submit(synth_cfg(3, 6), Budget::default()).unwrap();
+        for _ in 0..6 {
+            first.tick();
+        }
+        first.pause(a).unwrap();
+        first.pause(b).unwrap();
+        drop(first); // kill -9 equivalent: no shutdown bookkeeping
+
+        // solo references
+        let solo: Vec<Vec<u32>> = [1u64, 2, 3]
+            .iter()
+            .map(|&seed| {
+                let cfg = synth_cfg(seed, 6);
+                let workload = crate::workloads::factory::build(&cfg).unwrap();
+                let mut drv = crate::coordinator::Driver::new(cfg, workload).unwrap();
+                drv.run().unwrap();
+                drv.theta().iter().map(|x| x.to_bits()).collect()
+            })
+            .collect();
+
+        // successor adopts: all three come back Paused, ids preserved
+        let mut second = Scheduler::new(8, Policy::RoundRobin, dir.clone());
+        assert_eq!(second.adopt_manifest().unwrap(), 3);
+        for (&id, want_iters) in [a, b, c].iter().zip([2u64, 2, 0]) {
+            let s = second.session(id).unwrap();
+            assert_eq!(s.state(), SessionState::Paused, "session {id}");
+            assert_eq!(s.iters_done(), want_iters, "session {id}");
+        }
+        // the id hazard fix: a new submission cannot reuse id 1..=3
+        let d = second.submit(synth_cfg(9, 1), Budget::default()).unwrap();
+        assert_eq!(d, 4, "adopted server must continue the persisted id counter");
+        for id in [a, b, c] {
+            second.resume(id).unwrap();
+        }
+        second.run_to_completion();
+        for (i, id) in [a, b, c].iter().enumerate() {
+            let s = second.session(*id).unwrap();
+            assert_eq!(s.state(), SessionState::Done);
+            let bits: Vec<u32> =
+                s.theta().unwrap().iter().map(|x| x.to_bits()).collect();
+            assert_eq!(bits, solo[i], "adopted session {id} diverged from solo");
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn arbiter_grants_clamp_to_the_physical_budget() {
+        let arb = Arbiter::new(NativePool::new(8));
+        assert_eq!(arb.grant(0).threads(), 8, "0 defers to the budget");
+        assert_eq!(arb.grant(3).threads(), 3);
+        assert_eq!(arb.grant(1000).threads(), 8, "requests cannot oversubscribe");
+        assert_eq!(arb.grant(1).threads(), 1);
+        assert_eq!(arb.physical().threads(), 8);
+    }
+
+    #[test]
+    fn arbitrated_sessions_stay_bit_identical_and_capped() {
+        // sessions requesting widths {1, 8, 1000} under a width-2 budget:
+        // trajectories must match solo exactly (thread invariance), and
+        // no grant may exceed the physical pool
+        let requests = [1usize, 8, 1000];
+        let solo: Vec<Vec<u32>> = requests
+            .iter()
+            .enumerate()
+            .map(|(i, _)| {
+                let cfg = synth_cfg(40 + i as u64, 4);
+                let workload = crate::workloads::factory::build(&cfg).unwrap();
+                let mut drv = crate::coordinator::Driver::new(cfg, workload).unwrap();
+                drv.run().unwrap();
+                drv.theta().iter().map(|x| x.to_bits()).collect()
+            })
+            .collect();
+        let mut s = sched(Policy::RoundRobin, 8, "arbiter");
+        s.set_physical_pool(NativePool::new(2));
+        let ids: Vec<u64> = requests
+            .iter()
+            .enumerate()
+            .map(|(i, &req)| {
+                let mut cfg = synth_cfg(40 + i as u64, 4);
+                cfg.optex.threads = req;
+                s.submit(cfg, Budget::default()).unwrap()
+            })
+            .collect();
+        s.run_to_completion();
+        for ((i, id), &req) in ids.iter().enumerate().zip(&requests) {
+            let sess = s.session(*id).unwrap();
+            let granted = sess.granted_threads().expect("arbitrated step ran");
+            assert!(granted <= 2, "session {id}: granted {granted} > physical 2");
+            assert_eq!(granted, req.min(2));
+            let bits: Vec<u32> =
+                sess.theta().unwrap().iter().map(|x| x.to_bits()).collect();
+            assert_eq!(bits, solo[i], "arbitration changed session {id} numerics");
+        }
+        std::fs::remove_dir_all(
+            &crate::testutil::fixtures::tmp_ckpt_dir("arbiter"),
+        )
+        .ok();
     }
 
     #[test]

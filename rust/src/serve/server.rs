@@ -10,44 +10,90 @@
 //!   therefore free to hold non-`Send` state (the RL oracle does).
 //! * **Accept thread** — blocks on `accept`, spawns one reader thread
 //!   per connection. Woken for exit by a self-connect at shutdown.
-//! * **Connection threads** — parse one JSONL request per line, ship
-//!   `(Request, reply_tx)` to the scheduler, write the reply line back.
+//! * **Reader threads** (one per connection) — parse one JSONL request
+//!   per line and ship `(request, line_tx)` to the scheduler, where
+//!   `line_tx` is the connection's long-lived outbound line queue.
+//! * **Writer threads** (one per connection, ISSUE 5) — drain that
+//!   queue onto the socket. Request responses AND `watch` pushes flow
+//!   through the same queue, so everything a connection sees is written
+//!   by one thread, in one total order.
 //!
 //! The command queue is drained *before every scheduler quantum*, so
-//! protocol latency is bounded by one session iteration, and command
-//! application order is the arrival order — deterministic from a
-//! client's point of view (its own commands are answered in order).
+//! protocol latency is bounded by one session iteration. All of a
+//! connection's requests — including unparseable lines, which travel
+//! the queue as pre-failed commands — are answered in arrival order;
+//! `watch` pushes interleave between responses and are distinguished by
+//! their `event` field.
+//!
+//! ## Result streaming
+//!
+//! `watch` registers the connection's line queue against a session id.
+//! After every quantum the scheduler pushes an `{"event":"iter",...}`
+//! record each `stream_every` completed iterations of a watched
+//! session, and an `{"event":"result",...}` terminal record when it
+//! finishes — including finishes that happen outside a quantum (client
+//! `cancel`, failed `resume`). Dead subscribers (hung-up clients) are
+//! pruned on send failure; a watch on an already-finished session
+//! pushes its terminal record immediately.
 //!
 //! Shutdown: the `shutdown` command is acknowledged, the queue stops
 //! being served, and the accept thread is woken to exit. In-flight
-//! sessions are dropped with the scheduler; sessions suspended at
-//! shutdown leave their checkpoint files in `serve.ckpt_dir` for manual
-//! inspection/recovery — cross-process adoption of those checkpoints is
-//! a ROADMAP follow-up, not yet a protocol feature (and a new server
-//! reuses session ids from 1, so point it at a fresh ckpt_dir).
+//! sessions are dropped with the scheduler — but since every mutation
+//! rewrote `ckpt_dir/manifest.jsonl`, a successor server started with
+//! `--adopt` re-registers them (suspended sessions resume
+//! bit-identically; live ones re-run from their seeds). The same
+//! manifest is why binding a NON-empty ckpt_dir without `--adopt` is
+//! refused: a fresh server would hand out session ids that collide with
+//! the previous server's checkpoints (the ISSUE-4 id-reuse hazard,
+//! closed in ISSUE 5).
 
+use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{self, Receiver, Sender, TryRecvError};
 use std::sync::Arc;
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::config::RunConfig;
+use crate::serve::manifest;
 use crate::serve::protocol::{self, Request};
 use crate::serve::scheduler::Scheduler;
+use crate::serve::session::Session;
 
 /// Hard cap on one request line (a `submit` with a large config object
 /// is well under 1 KiB; 1 MiB leaves room without letting a client
 /// stream an endless newline-free line into server memory).
 const MAX_LINE_BYTES: u64 = 1 << 20;
 
-/// Cap on concurrently served connections (each costs one reader
-/// thread). Excess connects are dropped at accept.
+/// Cap on concurrently served connections (each costs one reader and
+/// one writer thread). Excess connects are dropped at accept.
 const MAX_CONNS: usize = 256;
 
-type Command = (Request, Sender<String>);
+/// What a connection's reader thread ships to the scheduler.
+enum ConnMsg {
+    /// A request line — or a reader-side parse failure, which still
+    /// travels the queue so responses keep arrival order.
+    Request(Result<Request, String>),
+    /// The client hung up: drop its `watch` subscriptions so its writer
+    /// thread (parked on the line queue) exits instead of leaking —
+    /// the connection cap only tracks reader threads.
+    Disconnected,
+}
+
+/// A connection message plus the connection's outbound line queue.
+type Command = (ConnMsg, Sender<String>);
+
+/// One `watch` subscription.
+struct Watcher {
+    tx: Sender<String>,
+    every: u64,
+    include_theta: bool,
+    /// Iteration count at the last push (suppresses duplicate pushes
+    /// when a quantum finishes a session without stepping it).
+    last_iter: u64,
+}
 
 /// A bound serving endpoint. `bind` starts accepting connections;
 /// [`Server::run`] processes them (call it on the same thread — the
@@ -58,17 +104,58 @@ pub struct Server {
     sched: Scheduler,
     base_cfg: RunConfig,
     shutdown: Arc<AtomicBool>,
+    /// session id → subscriptions (pruned at terminal push / dead client).
+    watches: BTreeMap<u64, Vec<Watcher>>,
 }
 
 impl Server {
     /// Bind `cfg.serve.addr` and start the accept thread. Submitted
     /// sessions start from `cfg` with the request's `config` overrides
-    /// applied on top.
+    /// applied on top. With `cfg.serve.adopt` the ckpt_dir's manifest is
+    /// adopted (sessions re-register as Paused under their original
+    /// ids); without it, a ckpt_dir that already holds a manifest is
+    /// refused.
     pub fn bind(cfg: &RunConfig) -> Result<Server> {
         let listener = TcpListener::bind(&cfg.serve.addr)
             .with_context(|| format!("binding serve.addr {:?}", cfg.serve.addr))?;
         std::fs::create_dir_all(&cfg.serve.ckpt_dir)
             .with_context(|| format!("creating serve.ckpt_dir {:?}", cfg.serve.ckpt_dir))?;
+        let mut sched = Scheduler::new(
+            cfg.serve.max_sessions,
+            cfg.serve.policy,
+            cfg.serve.ckpt_dir.clone(),
+        );
+        // per-quantum width arbitration over the server's physical pool
+        sched.set_physical_pool(crate::runtime::NativePool::from_config(
+            cfg.optex.threads,
+            cfg.optex.pool,
+        ));
+        let mpath = manifest::manifest_path(&cfg.serve.ckpt_dir);
+        if cfg.serve.adopt {
+            if mpath.exists() {
+                let n = sched.adopt_manifest()?;
+                println!(
+                    "serve: adopted {n} session(s) from {} (next id {})",
+                    mpath.display(),
+                    sched.next_id()
+                );
+            } else {
+                println!("serve: --adopt with no manifest at {} (fresh start)", mpath.display());
+            }
+        } else if mpath.exists() {
+            let (next_id, entries) = manifest::read(&mpath)
+                .with_context(|| format!("inspecting {}", mpath.display()))?;
+            bail!(
+                "serve.ckpt_dir {:?} holds a session manifest from a previous \
+                 server ({} adoptable session(s), id high-water {}): start with \
+                 --adopt to adopt them, or point serve.ckpt_dir at a fresh \
+                 directory (reusing it without adoption would hand out \
+                 colliding session ids)",
+                cfg.serve.ckpt_dir,
+                entries.len(),
+                next_id
+            );
+        }
         let (tx, rx) = mpsc::channel();
         let shutdown = Arc::new(AtomicBool::new(false));
         {
@@ -78,12 +165,14 @@ impl Server {
                 .name("optex-serve-accept".into())
                 .spawn(move || accept_loop(listener, tx, shutdown))?;
         }
-        let sched = Scheduler::new(
-            cfg.serve.max_sessions,
-            cfg.serve.policy,
-            cfg.serve.ckpt_dir.clone(),
-        );
-        Ok(Server { listener, rx, sched, base_cfg: cfg.clone(), shutdown })
+        Ok(Server {
+            listener,
+            rx,
+            sched,
+            base_cfg: cfg.clone(),
+            shutdown,
+            watches: BTreeMap::new(),
+        })
     }
 
     /// The bound address (resolves port 0 to the ephemeral port).
@@ -106,19 +195,22 @@ impl Server {
                     Err(TryRecvError::Disconnected) => return self.stop(),
                 }
             }
-            if self.sched.tick().is_none() {
-                // Nothing runnable — and nothing BECOMES runnable except
-                // through a command on this queue (paused deadlines are
-                // only enforced when a session next steps), so a
-                // blocking recv is both correct and wakeup-free for an
-                // idle long-lived server.
-                match self.rx.recv() {
-                    Ok(cmd) => {
-                        if self.dispatch(cmd) {
-                            return self.stop();
+            match self.sched.tick() {
+                Some(id) => self.notify(id),
+                None => {
+                    // Nothing runnable — and nothing BECOMES runnable
+                    // except through a command on this queue (paused
+                    // deadlines are only enforced when a session next
+                    // steps), so a blocking recv is both correct and
+                    // wakeup-free for an idle long-lived server.
+                    match self.rx.recv() {
+                        Ok(cmd) => {
+                            if self.dispatch(cmd) {
+                                return self.stop();
+                            }
                         }
+                        Err(mpsc::RecvError) => return self.stop(),
                     }
-                    Err(mpsc::RecvError) => return self.stop(),
                 }
             }
         }
@@ -133,22 +225,105 @@ impl Server {
         Ok(())
     }
 
+    /// Push the terminal record for `s` to its watchers and drop them.
+    fn push_terminal(watches: &mut BTreeMap<u64, Vec<Watcher>>, s: &Session) {
+        if let Some(ws) = watches.remove(&s.id()) {
+            for w in ws {
+                let _ = w.tx.send(protocol::result_event_line(s, w.include_theta));
+            }
+        }
+    }
+
+    /// Streaming hook, called after the quantum that stepped session
+    /// `id`: iter pushes on the subscriber's cadence, terminal push (and
+    /// subscription teardown) when the session just finished.
+    fn notify(&mut self, id: u64) {
+        let Some(s) = self.sched.session(id) else { return };
+        if let Some(ws) = self.watches.get_mut(&id) {
+            let iters = s.iters_done();
+            ws.retain_mut(|w| {
+                if iters > w.last_iter && iters % w.every == 0 {
+                    w.last_iter = iters;
+                    // a vanished client prunes its subscription here
+                    return w.tx.send(protocol::iter_event_line(s)).is_ok();
+                }
+                true
+            });
+        }
+        if !s.is_active() {
+            Self::push_terminal(&mut self.watches, s);
+        }
+    }
+
+    /// Terminal sweep for finishes that happen outside a quantum
+    /// (client `cancel`, a failed `resume`): push + drop every
+    /// subscription whose session is no longer active (or vanished).
+    fn sweep_watches(&mut self) {
+        let ids: Vec<u64> = self.watches.keys().copied().collect();
+        for id in ids {
+            match self.sched.session(id) {
+                Some(s) if s.is_active() => {}
+                Some(s) => Self::push_terminal(&mut self.watches, s),
+                None => {
+                    self.watches.remove(&id);
+                }
+            }
+        }
+    }
+
     /// Apply one command; returns true on shutdown. Replies are
     /// best-effort — a vanished client must not stall the scheduler.
-    fn dispatch(&mut self, (req, reply): Command) -> bool {
+    fn dispatch(&mut self, (msg, reply): Command) -> bool {
+        let req = match msg {
+            ConnMsg::Request(Ok(r)) => r,
+            ConnMsg::Request(Err(msg)) => {
+                let _ = reply.send(protocol::error_line(&msg));
+                return false;
+            }
+            ConnMsg::Disconnected => {
+                // unsubscribe every watcher feeding this connection's
+                // line queue; dropping the senders lets its writer
+                // thread drain and exit
+                for ws in self.watches.values_mut() {
+                    ws.retain(|w| !w.tx.same_channel(&reply));
+                }
+                self.watches.retain(|_, ws| !ws.is_empty());
+                return false;
+            }
+        };
         let line = match req {
             Request::Shutdown => {
                 let _ = reply.send(protocol::shutdown_line());
                 return true;
             }
-            Request::Submit { overrides, budget } => {
+            Request::Submit { overrides, budget, paused } => {
                 let mut cfg = self.base_cfg.clone();
                 let applied: Result<(), _> =
                     overrides.iter().try_for_each(|kv| cfg.apply_override(kv));
                 match applied {
                     Err(e) => protocol::error_line(&e.to_string()),
                     Ok(()) => match self.sched.submit(cfg, budget) {
-                        Ok(id) => protocol::submit_line(id),
+                        Ok(id) => {
+                            if paused {
+                                // suspend before the first quantum; if
+                                // the suspend cannot be written the
+                                // session must not linger runnable
+                                // under an id the client never learned
+                                // — cancel it and say which id died
+                                if let Err(e) = self.sched.pause(id) {
+                                    let _ = self.sched.cancel(id);
+                                    protocol::error_line(&format!(
+                                        "session {id} admitted but paused \
+                                         submission failed (session \
+                                         cancelled): {e:#}"
+                                    ))
+                                } else {
+                                    protocol::submit_line(id, "paused")
+                                }
+                            } else {
+                                protocol::submit_line(id, "pending")
+                            }
+                        }
                         Err(e) => protocol::error_line(&format!("{e:#}")),
                     },
                 }
@@ -164,11 +339,38 @@ impl Server {
                 Some(s) => protocol::result_line(s, include_theta),
                 None => protocol::error_line(&format!("no such session {id}")),
             },
+            Request::Watch { id, stream_every, include_theta } => {
+                let every =
+                    stream_every.unwrap_or(self.base_cfg.serve.stream_every as u64);
+                match self.sched.session(id) {
+                    None => protocol::error_line(&format!("no such session {id}")),
+                    Some(s) if !s.is_active() => {
+                        // finished already: ack, then the terminal push
+                        // (ordered behind the ack on the same queue)
+                        let _ = reply.send(protocol::watch_line(id, every));
+                        let _ =
+                            reply.send(protocol::result_event_line(s, include_theta));
+                        return false;
+                    }
+                    Some(s) => {
+                        self.watches.entry(id).or_default().push(Watcher {
+                            tx: reply.clone(),
+                            every,
+                            include_theta,
+                            last_iter: s.iters_done(),
+                        });
+                        protocol::watch_line(id, every)
+                    }
+                }
+            }
             Request::Pause { id } => self.ack(id, Scheduler::pause),
             Request::Resume { id } => self.ack(id, Scheduler::resume),
             Request::Cancel { id } => self.ack(id, Scheduler::cancel),
         };
         let _ = reply.send(line);
+        // cancel / failed resume finish sessions without a quantum —
+        // their watchers get the terminal push now, not never
+        self.sweep_watches();
         false
     }
 
@@ -187,8 +389,9 @@ fn accept_loop(listener: TcpListener, tx: Sender<Command>, shutdown: Arc<AtomicB
             return;
         }
         let Ok(stream) = conn else { continue };
-        // connection cap: each connection holds a reader thread; shed
-        // excess load at accept instead of exhausting threads
+        // connection cap: each connection holds a reader + writer
+        // thread; shed excess load at accept instead of exhausting
+        // threads
         if conns.fetch_add(1, Ordering::SeqCst) >= MAX_CONNS {
             conns.fetch_sub(1, Ordering::SeqCst);
             let mut s = stream;
@@ -230,54 +433,64 @@ fn read_line_capped(reader: &mut BufReader<TcpStream>) -> Result<Option<String>,
     }
 }
 
-/// One JSONL request/response exchange per line until the client hangs
-/// up (or the server shuts down mid-request).
+/// Per-connection reader: parse request lines and forward them (parse
+/// failures included, so response order is arrival order) to the
+/// scheduler, paired with this connection's outbound line queue. The
+/// paired writer thread owns the socket's write half and drains the
+/// queue until every sender — the reader's clone AND any `watch`
+/// registrations held by the scheduler — is gone.
 fn handle_conn(stream: TcpStream, tx: Sender<Command>) {
     let Ok(read_half) = stream.try_clone() else { return };
     let mut writer = stream;
+    let (line_tx, line_rx) = mpsc::channel::<String>();
+    let spawned = std::thread::Builder::new()
+        .name("optex-serve-write".into())
+        .spawn(move || {
+            for line in line_rx {
+                if writer
+                    .write_all(line.as_bytes())
+                    .and_then(|_| writer.write_all(b"\n"))
+                    .and_then(|_| writer.flush())
+                    .is_err()
+                {
+                    // dead socket: later sends into the queue error on
+                    // the server side and prune any watch subscriptions
+                    return;
+                }
+            }
+        });
+    if spawned.is_err() {
+        return;
+    }
     let mut reader = BufReader::new(read_half);
     loop {
         let line = match read_line_capped(&mut reader) {
             Ok(Some(line)) => line,
-            Ok(None) => return,
+            Ok(None) => break,
             Err(()) => {
-                let _ = writer
-                    .write_all(protocol::error_line("request line too long").as_bytes())
-                    .and_then(|_| writer.write_all(b"\n"));
-                return;
+                let _ = line_tx.send(protocol::error_line("request line too long"));
+                break;
             }
         };
         if line.trim().is_empty() {
             continue;
         }
-        let mut was_shutdown = false;
-        let reply = match protocol::parse_request(&line) {
-            Err(e) => protocol::error_line(&e),
-            Ok(req) => {
-                was_shutdown = matches!(req, Request::Shutdown);
-                let (rtx, rrx) = mpsc::channel();
-                if tx.send((req, rtx)).is_err() {
-                    protocol::error_line("server is shutting down")
-                } else {
-                    match rrx.recv() {
-                        Ok(l) => l,
-                        Err(_) => protocol::error_line("server is shutting down"),
-                    }
-                }
-            }
-        };
-        if writer
-            .write_all(reply.as_bytes())
-            .and_then(|_| writer.write_all(b"\n"))
-            .and_then(|_| writer.flush())
-            .is_err()
-        {
+        let parsed = protocol::parse_request(&line);
+        let was_shutdown = matches!(parsed, Ok(Request::Shutdown));
+        if tx.send((ConnMsg::Request(parsed), line_tx.clone())).is_err() {
+            let _ = line_tx.send(protocol::error_line("server is shutting down"));
             return;
         }
         if was_shutdown {
+            // stop reading; the ack drains through the writer, which
+            // exits once the server drops this connection's senders
             return;
         }
     }
+    // client hung up: tell the scheduler so it drops this connection's
+    // watch subscriptions (best-effort — on server shutdown the whole
+    // watch table dies with it anyway)
+    let _ = tx.send((ConnMsg::Disconnected, line_tx));
 }
 
 /// `optex serve` entrypoint: bind, announce, run until shutdown.

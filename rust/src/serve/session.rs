@@ -38,6 +38,8 @@ use anyhow::{bail, Result};
 use crate::config::RunConfig;
 use crate::coordinator::metrics::IterRecord;
 use crate::coordinator::Driver;
+use crate::runtime::NativePool;
+use crate::serve::manifest;
 use crate::workloads::{factory, GradSource};
 
 /// EMA smoothing for the per-session eval-seconds estimate feeding the
@@ -73,7 +75,7 @@ impl SessionState {
 
 /// Per-session stopping budget. Every bound is optional; `max_iters`
 /// defaults to the config's `steps`.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct Budget {
     /// Hard cap on sequential iterations (None → `cfg.steps`).
     pub max_iters: Option<u64>,
@@ -125,6 +127,9 @@ pub struct Session {
     eval_ema_s: f64,
     /// Weighted-fair virtual time: Σ of the EMA at each step taken.
     vtime: f64,
+    /// Width the arbiter granted for the most recent quantum (None until
+    /// a granted step runs — observability for the arbitration tests).
+    last_grant: Option<usize>,
 }
 
 impl Session {
@@ -138,7 +143,7 @@ impl Session {
             id,
             cfg,
             budget,
-            driver,
+            Some(driver),
             true,
             Some(ckpt_dir.join(format!("session_{id}.ckpt"))),
         ))
@@ -154,14 +159,14 @@ impl Session {
     ) -> Result<Session> {
         let mut driver = Driver::with_source(cfg.clone(), source, None)?;
         driver.set_session_id(id);
-        Ok(Session::assemble(id, cfg, budget, driver, false, None))
+        Ok(Session::assemble(id, cfg, budget, Some(driver), false, None))
     }
 
     fn assemble(
         id: u64,
         cfg: RunConfig,
         budget: Budget,
-        driver: Driver,
+        driver: Option<Driver>,
         rebuildable: bool,
         ckpt_path: Option<PathBuf>,
     ) -> Session {
@@ -170,7 +175,7 @@ impl Session {
             cfg,
             budget,
             state: SessionState::Pending,
-            driver: Some(driver),
+            driver,
             rebuildable,
             ckpt_path,
             iters_done: 0,
@@ -184,7 +189,32 @@ impl Session {
             eval_cum_seen: 0.0,
             eval_ema_s: 0.0,
             vtime: 0.0,
+            last_grant: None,
         }
+    }
+
+    /// Re-register a session from a restart-adoption manifest entry
+    /// (ISSUE 5): Paused, driver-less, rebuildable. With `iters > 0` the
+    /// suspend checkpoint at the session's canonical path must exist —
+    /// `resume` restores it bit-identically; with `iters == 0` (the
+    /// session was running, never suspended) `resume` rebuilds from
+    /// config and re-runs from its seed — unless a suspend checkpoint
+    /// turns out to exist anyway (kill between checkpoint write and
+    /// manifest rewrite), in which case `resume` restores it and adopts
+    /// its iteration count. The deadline clock (if any) restarts at
+    /// adoption.
+    pub fn adopt(
+        id: u64,
+        cfg: RunConfig,
+        budget: Budget,
+        ckpt_dir: &Path,
+        iters_done: u64,
+    ) -> Session {
+        let ckpt_path = Some(ckpt_dir.join(format!("session_{id}.ckpt")));
+        let mut session = Session::assemble(id, cfg, budget, None, true, ckpt_path);
+        session.state = SessionState::Paused;
+        session.iters_done = iters_done;
+        session
     }
 
     // -- accessors -----------------------------------------------------------
@@ -296,6 +326,58 @@ impl Session {
         self.submitted_at
     }
 
+    /// The session's requested pool width (`optex.threads` at submit;
+    /// 0 = defer to the server's physical budget).
+    pub fn requested_threads(&self) -> usize {
+        self.cfg.optex.threads
+    }
+
+    /// Width of the most recent arbiter grant (None before the first
+    /// granted quantum, or when the scheduler runs without an arbiter).
+    pub fn granted_threads(&self) -> Option<usize> {
+        self.last_grant
+    }
+
+    /// Install the arbiter's per-quantum pool grant on the live driver
+    /// (no-op while suspended — `resume` rebuilds the driver and the
+    /// next granted quantum re-applies). Bit-identity is unaffected at
+    /// any width (`thread_invariance.rs`), so grants may vary freely
+    /// between quanta.
+    pub(crate) fn apply_pool(&mut self, pool: NativePool) {
+        if let Some(d) = self.driver.as_mut() {
+            d.set_compute_pool(pool);
+            self.last_grant = Some(pool.threads());
+        }
+    }
+
+    /// This session's line in the durable manifest: present only for
+    /// factory-rebuildable, still-active sessions (injected-oracle
+    /// sessions cannot be rebuilt on another server; finished ones have
+    /// nothing to adopt). None also if the config contains strings the
+    /// override grammar cannot encode (control characters).
+    pub(crate) fn manifest_entry(&self) -> Option<manifest::Entry> {
+        if !self.rebuildable || !self.is_active() {
+            return None;
+        }
+        let overrides = self.cfg.overrides_from_default().ok()?;
+        let ckpt = if self.is_suspended() {
+            self.ckpt_path
+                .as_ref()
+                .and_then(|p| p.file_name())
+                .map(|f| f.to_string_lossy().into_owned())
+        } else {
+            None
+        };
+        Some(manifest::Entry {
+            id: self.id,
+            state: self.state.name().to_string(),
+            iters: self.iters_done,
+            ckpt,
+            budget: self.budget.clone(),
+            overrides,
+        })
+    }
+
     // -- lifecycle -----------------------------------------------------------
 
     /// Run exactly ONE sequential iteration (the scheduler's quantum) and
@@ -400,33 +482,102 @@ impl Session {
         Ok(())
     }
 
-    /// Resume a paused session; suspended ones rebuild their driver from
-    /// config and restore from the suspend checkpoint.
+    /// Resume a paused session; suspended (or adopted) ones rebuild
+    /// their driver from config and restore from the suspend checkpoint
+    /// when one exists.
+    ///
+    /// A resume of a *non*-paused session is a transition error: the
+    /// state is untouched. A resume whose driver rebuild or checkpoint
+    /// restore fails (truncated file, missing file for a session with
+    /// progress, shape mismatch) marks the session **Failed** — the
+    /// driver is unrecoverable, and leaving it Paused would invite
+    /// clients to retry forever against a dead checkpoint. The error is
+    /// returned either way; the serve loop stays up (ISSUE 5 satellite).
     pub fn resume(&mut self) -> Result<()> {
         if self.state != SessionState::Paused {
             bail!("session {} is {}, cannot resume", self.id, self.state.name());
         }
         if self.driver.is_none() {
-            let path = self.ckpt_path.clone().expect("suspended session has a path");
-            let workload = factory::build(&self.cfg)?;
-            let mut drv = Driver::new(self.cfg.clone(), workload)?;
-            drv.set_session_id(self.id);
-            let it = drv.resume_from(&path)?;
-            if it != self.iters_done {
-                bail!(
-                    "session {}: suspend checkpoint is at iteration {it}, \
-                     session bookkeeping says {}",
-                    self.id,
-                    self.iters_done
-                );
+            match self.rebuild_driver() {
+                Ok(drv) => self.driver = Some(drv),
+                Err(e) => {
+                    let msg = format!("session {}: resume failed: {e:#}", self.id);
+                    self.finish(SessionState::Failed, None, Some(msg.clone()));
+                    bail!("{msg}");
+                }
             }
-            self.driver = Some(drv);
-            // the live driver supersedes the suspend file; a later pause
-            // rewrites it
-            let _ = std::fs::remove_file(path);
         }
         self.state = SessionState::Running;
         Ok(())
+    }
+
+    /// Rebuild the driver from config; restore the suspend checkpoint
+    /// when present (required whenever the session has recorded
+    /// progress).
+    ///
+    /// The suspend file is deliberately NOT deleted on a successful
+    /// restore: a kill after the restore but before the scheduler's
+    /// manifest rewrite would otherwise leave a manifest that promises a
+    /// checkpoint no longer on disk (the reverse of the write-side crash
+    /// window below) — permanently failing the session at adoption. The
+    /// file stays until the next `pause` overwrites it or `finish`
+    /// deletes it; while the session runs it is merely stale, and if the
+    /// server dies mid-run the stray-checkpoint branch below turns it
+    /// into a better recovery point than the seed re-run.
+    fn rebuild_driver(&mut self) -> Result<Driver> {
+        let path = self.ckpt_path.clone().expect("rebuildable session has a path");
+        let build = |cfg: &RunConfig, id: u64| -> Result<Driver> {
+            let workload = factory::build(cfg)?;
+            let mut drv = Driver::new(cfg.clone(), workload)?;
+            drv.set_session_id(id);
+            Ok(drv)
+        };
+        if path.exists() {
+            if self.iters_done == 0 {
+                // Bookkeeping says "no progress" yet a suspend file
+                // exists: a kill landed between a checkpoint write and
+                // the manifest rewrite (the exact crash window adoption
+                // exists for). The file is newer truth than the manifest
+                // when it restores cleanly — adopt its iteration count;
+                // a torn write falls back to the seed re-run instead of
+                // permanently failing an otherwise-healthy session.
+                let mut drv = build(&self.cfg, self.id)?;
+                match drv.resume_from(&path) {
+                    Ok(it) => {
+                        self.iters_done = it;
+                        return Ok(drv);
+                    }
+                    Err(_) => {
+                        // partial restore may have touched driver state:
+                        // discard it and build fresh from the seed (and
+                        // drop the torn file — it can never restore)
+                        let _ = std::fs::remove_file(path);
+                        return build(&self.cfg, self.id);
+                    }
+                }
+            }
+            let mut drv = build(&self.cfg, self.id)?;
+            let it = drv.resume_from(&path)?;
+            if it != self.iters_done {
+                bail!(
+                    "suspend checkpoint is at iteration {it}, \
+                     session bookkeeping says {}",
+                    self.iters_done
+                );
+            }
+            Ok(drv)
+        } else if self.iters_done > 0 {
+            bail!(
+                "suspend checkpoint {} is missing (session has {} iterations \
+                 of progress)",
+                path.display(),
+                self.iters_done
+            );
+        } else {
+            // no checkpoint + no progress: an adopted never-suspended
+            // session re-runs from its seed
+            build(&self.cfg, self.id)
+        }
     }
 
     /// Client cancel: a terminal Failed with a canonical reason. Errors
@@ -550,6 +701,189 @@ mod tests {
             solo.rows().iter().map(|r| r.loss.to_bits()).collect();
         let bits: Vec<u64> = s.rows().iter().map(|r| r.loss.to_bits()).collect();
         assert_eq!(solo_bits, bits);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn suspend_resume_is_bit_identical_for_stochastic_oracles() {
+        // ISSUE 5: the v2 checkpoint carries the oracle's sampler state,
+        // so a NOISY synth session suspends/resumes exactly — previously
+        // only deterministic oracles did.
+        let dir = tmp_dir("noisy_suspend");
+        let mut cfg = synth_cfg(5, 9);
+        cfg.workload = "ackley".into();
+        cfg.noise_std = 0.35;
+        let mut solo = Session::build(1, cfg.clone(), Budget::default(), &dir).unwrap();
+        while solo.is_runnable() {
+            solo.step();
+        }
+        let mut s = Session::build(2, cfg, Budget::default(), &dir).unwrap();
+        for _ in 0..3 {
+            s.step();
+        }
+        s.pause().unwrap();
+        assert!(s.is_suspended());
+        s.resume().unwrap();
+        while s.is_runnable() {
+            s.step();
+        }
+        assert_eq!(
+            solo.theta().unwrap(),
+            s.theta().unwrap(),
+            "noisy suspend/resume changed the trajectory"
+        );
+        let solo_bits: Vec<u64> = solo.rows().iter().map(|r| r.loss.to_bits()).collect();
+        let bits: Vec<u64> = s.rows().iter().map(|r| r.loss.to_bits()).collect();
+        assert_eq!(solo_bits, bits);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn adopted_suspended_session_resumes_from_checkpoint() {
+        let dir = tmp_dir("adopt");
+        let cfg = synth_cfg(11, 8);
+        let mut solo = Session::build(1, cfg.clone(), Budget::default(), &dir).unwrap();
+        while solo.is_runnable() {
+            solo.step();
+        }
+        // original server: run 3 iters, suspend, then "die" (drop)
+        let mut orig = Session::build(7, cfg.clone(), Budget::default(), &dir).unwrap();
+        for _ in 0..3 {
+            orig.step();
+        }
+        orig.pause().unwrap();
+        let iters = orig.iters_done();
+        drop(orig);
+        // adopting server: re-register from manifest data, resume
+        let mut s = Session::adopt(7, cfg.clone(), Budget::default(), &dir, iters);
+        assert_eq!(s.state(), SessionState::Paused);
+        assert!(s.is_suspended());
+        s.resume().unwrap();
+        while s.is_runnable() {
+            s.step();
+        }
+        assert_eq!(s.state(), SessionState::Done);
+        assert_eq!(
+            solo.theta().unwrap(),
+            s.theta().unwrap(),
+            "adopted resume diverged from an uninterrupted run"
+        );
+        // adopted-at-zero (was running, never suspended): re-runs fresh
+        let mut z = Session::adopt(8, cfg, Budget::default(), &dir, 0);
+        z.resume().unwrap();
+        while z.is_runnable() {
+            z.step();
+        }
+        assert_eq!(z.theta().unwrap(), solo.theta().unwrap());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn adopt_crash_window_stray_checkpoint_is_recovered() {
+        // kill landing BETWEEN the suspend-checkpoint write and the
+        // manifest rewrite: the manifest entry says iters 0 / no ckpt,
+        // but session_<id>.ckpt exists on disk. Resume must prefer the
+        // checkpoint (newer truth) and, for a torn write, fall back to
+        // the seed re-run — never permanently Fail the session.
+        let dir = tmp_dir("straychk");
+        let cfg = synth_cfg(21, 8);
+        let mut solo = Session::build(1, cfg.clone(), Budget::default(), &dir).unwrap();
+        while solo.is_runnable() {
+            solo.step();
+        }
+        let mut orig = Session::build(4, cfg.clone(), Budget::default(), &dir).unwrap();
+        for _ in 0..3 {
+            orig.step();
+        }
+        orig.pause().unwrap();
+        drop(orig); // the manifest never heard about this suspend
+        let mut s = Session::adopt(4, cfg.clone(), Budget::default(), &dir, 0);
+        s.resume().unwrap();
+        assert_eq!(s.iters_done(), 3, "stray checkpoint must be adopted, not ignored");
+        while s.is_runnable() {
+            s.step();
+        }
+        assert_eq!(s.theta().unwrap(), solo.theta().unwrap());
+
+        // torn write (truncated stray checkpoint): seed re-run, not Failed
+        let mut orig = Session::build(5, cfg.clone(), Budget::default(), &dir).unwrap();
+        for _ in 0..2 {
+            orig.step();
+        }
+        orig.pause().unwrap();
+        drop(orig);
+        let path = dir.join("session_5.ckpt");
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
+        let mut z = Session::adopt(5, cfg, Budget::default(), &dir, 0);
+        z.resume().unwrap();
+        assert_eq!(z.iters_done(), 0, "torn checkpoint falls back to seed re-run");
+        assert!(!path.exists(), "torn checkpoint must be cleaned up");
+        while z.is_runnable() {
+            z.step();
+        }
+        assert_eq!(z.state(), SessionState::Done);
+        assert_eq!(z.theta().unwrap(), solo.theta().unwrap());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn failed_resume_marks_session_failed_with_reason() {
+        let dir = tmp_dir("badresume");
+        let mut s = Session::build(1, synth_cfg(2, 20), Budget::default(), &dir).unwrap();
+        for _ in 0..2 {
+            s.step();
+        }
+        s.pause().unwrap();
+        // truncate the suspend checkpoint: resume must fail cleanly,
+        // mark the session Failed, and keep the error queryable
+        let path = dir.join("session_1.ckpt");
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() / 3]).unwrap();
+        let err = s.resume().unwrap_err().to_string();
+        assert!(err.contains("resume failed"), "{err}");
+        assert_eq!(s.state(), SessionState::Failed);
+        assert!(s.error().unwrap().contains("resume failed"));
+        assert!(!s.is_runnable());
+
+        // missing checkpoint with recorded progress is the same class
+        let mut m = Session::adopt(3, synth_cfg(2, 20), Budget::default(), &dir, 5);
+        assert!(m.resume().is_err());
+        assert_eq!(m.state(), SessionState::Failed);
+        assert!(m.error().unwrap().contains("missing"), "{:?}", m.error());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn manifest_entry_only_for_rebuildable_active_sessions() {
+        let dir = tmp_dir("mentry");
+        let mut cfg = synth_cfg(1, 4);
+        cfg.workload = "sphere".into();
+        let budget = Budget { max_iters: Some(3), ..Budget::default() };
+        let mut s = Session::build(2, cfg, budget, &dir).unwrap();
+        let e = s.manifest_entry().expect("factory session is adoptable");
+        assert_eq!(e.id, 2);
+        assert_eq!(e.state, "pending");
+        assert_eq!(e.budget.max_iters, Some(3));
+        assert!(e.ckpt.is_none());
+        assert!(e.overrides.iter().any(|o| o == "workload=\"sphere\""), "{:?}", e.overrides);
+        s.step();
+        s.pause().unwrap();
+        let e = s.manifest_entry().unwrap();
+        assert_eq!(e.state, "paused");
+        assert_eq!(e.iters, 1);
+        assert_eq!(e.ckpt.as_deref(), Some("session_2.ckpt"));
+        s.resume().unwrap();
+        while s.is_runnable() {
+            s.step();
+        }
+        assert!(s.manifest_entry().is_none(), "finished sessions are not adoptable");
+        // injected-oracle sessions are never listed
+        let src = crate::testutil::fixtures::dqn_replay_source(3);
+        let inj =
+            Session::with_source(5, synth_cfg(3, 2), Box::new(src), Budget::default())
+                .unwrap();
+        assert!(inj.manifest_entry().is_none());
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -9,35 +9,18 @@
 /// Shared test fixtures (integration tests live in separate crates and
 /// cannot share helpers any other way).
 pub mod fixtures {
-    use std::cell::RefCell;
-    use std::rc::Rc;
-
-    use crate::nn::Mlp;
-    use crate::rl::{DqnSource, ReplayBuffer};
-    use crate::util::Rng;
+    use crate::rl::DqnSource;
 
     /// A native DQN oracle over a deterministically pre-filled replay
     /// buffer — episode-free, so a `Driver` can step it directly. Used
     /// by `thread_invariance` and `serve_integration` to pin the same
     /// stochastic-oracle construction on both sides of a comparison.
+    /// Since ISSUE 5 the construction lives in the library proper
+    /// ([`DqnSource::replay_fixture`]) because `workload = "dqn_replay"`
+    /// is also a factory workload — serve sessions built on it are
+    /// rebuildable and therefore suspend/adopt-able.
     pub fn dqn_replay_source(seed: u64) -> DqnSource {
-        let obs_dim = 6;
-        let n_act = 3;
-        let replay = Rc::new(RefCell::new(ReplayBuffer::new(512, obs_dim)));
-        let mut rng = Rng::new(seed);
-        for _ in 0..256 {
-            let o = rng.normal_vec(obs_dim);
-            let no = rng.normal_vec(obs_dim);
-            replay.borrow_mut().push(
-                &o,
-                rng.below(n_act),
-                rng.normal() as f32,
-                &no,
-                rng.coin(0.1),
-            );
-        }
-        let mlp = Mlp::new(obs_dim, 32, n_act);
-        DqnSource::native(mlp, replay, 64, 0.95, 10, seed)
+        DqnSource::replay_fixture(seed)
     }
 
     /// Per-test scratch directory (serve checkpoint dirs etc.), unique
@@ -48,6 +31,101 @@ pub mod fixtures {
             .join(format!("optex_ckpt_{tag}_{}", std::process::id()));
         std::fs::create_dir_all(&d).expect("creating test ckpt dir");
         d
+    }
+
+    /// Pool width for tests whose thread choice is arbitrary (results
+    /// are bit-identical at any width — `thread_invariance.rs`): the CI
+    /// matrix sets `OPTEX_TEST_THREADS ∈ {1, 8}` so the same suites
+    /// exercise both the serial path and real fan-out. Defaults to 1.
+    pub fn test_threads() -> usize {
+        std::env::var("OPTEX_TEST_THREADS")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .filter(|&t| t >= 1)
+            .unwrap_or(1)
+    }
+
+    /// Minimal JSONL wire client for the serve tests and benches — the
+    /// ONE implementation of the connect / send-line / read-line /
+    /// skip-push protocol dance, shared by `serve_integration`,
+    /// `serve_restart` and `bench_estimation` (separate crates that
+    /// cannot share helpers any other way). Panics on I/O or parse
+    /// failures: every caller is a test/bench where that is the right
+    /// failure mode.
+    pub struct WireClient {
+        reader: std::io::BufReader<std::net::TcpStream>,
+        writer: std::net::TcpStream,
+    }
+
+    impl WireClient {
+        pub fn connect(addr: impl std::net::ToSocketAddrs + std::fmt::Debug) -> WireClient {
+            let stream = std::net::TcpStream::connect(&addr)
+                .unwrap_or_else(|e| panic!("connecting serve endpoint {addr:?}: {e}"));
+            stream
+                .set_read_timeout(Some(std::time::Duration::from_secs(60)))
+                .unwrap();
+            WireClient {
+                reader: std::io::BufReader::new(stream.try_clone().unwrap()),
+                writer: stream,
+            }
+        }
+
+        pub fn send(&mut self, line: &str) {
+            use std::io::Write;
+            self.writer.write_all(line.as_bytes()).unwrap();
+            self.writer.write_all(b"\n").unwrap();
+            self.writer.flush().unwrap();
+        }
+
+        /// Next line, whatever it is (response or `watch` push).
+        pub fn read_json(&mut self) -> crate::util::json::Json {
+            use std::io::BufRead;
+            let mut reply = String::new();
+            self.reader.read_line(&mut reply).unwrap();
+            crate::util::json::Json::parse(reply.trim())
+                .unwrap_or_else(|e| panic!("bad wire line {reply:?}: {e}"))
+        }
+
+        /// Next NON-push line (skips `watch` events, which are the only
+        /// lines carrying an `event` field).
+        pub fn response(&mut self) -> crate::util::json::Json {
+            loop {
+                let v = self.read_json();
+                if v.get("event").is_none() {
+                    return v;
+                }
+            }
+        }
+
+        /// One request/response exchange.
+        pub fn request(&mut self, line: &str) -> crate::util::json::Json {
+            self.send(line);
+            self.response()
+        }
+    }
+
+    /// Build a `submit` request line from `key -> value` config
+    /// overrides — the ONE place the tests' value-typing rule lives
+    /// (numeric-looking values go bare, everything else is a JSON
+    /// string), instead of per-test copies of the heuristic.
+    pub fn submit_json(overrides: &[(&str, String)], paused: bool) -> String {
+        use crate::util::json::Json;
+        let fields: Vec<String> = overrides
+            .iter()
+            .map(|(k, v)| {
+                let key = Json::Str(k.to_string()).to_string();
+                if v.parse::<f64>().is_ok() {
+                    format!("{key}:{v}")
+                } else {
+                    format!("{key}:{}", Json::Str(v.clone()).to_string())
+                }
+            })
+            .collect();
+        let paused_field = if paused { ",\"paused\":true" } else { "" };
+        format!(
+            "{{\"cmd\":\"submit\",\"config\":{{{}}}{paused_field}}}",
+            fields.join(",")
+        )
     }
 }
 

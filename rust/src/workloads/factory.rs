@@ -74,12 +74,26 @@ pub fn build(cfg: &RunConfig) -> Result<Workload> {
         });
     }
 
+    // Native DQN oracle over a deterministic pre-filled replay buffer
+    // (episode-free, rebuildable from `seed` alone — which makes these
+    // sessions suspend/adopt-able through the serve manifest, ISSUE 5).
+    // The full episode-driven RL protocol stays under `optex rl`.
+    if w == "dqn_replay" {
+        let source = crate::rl::DqnSource::replay_fixture(seed);
+        return Ok(Workload {
+            source: Box::new(source),
+            gp_artifact: None,
+            name: "dqn_replay(native)".into(),
+        });
+    }
+
     const MODEL_WORKLOADS: &[&str] =
         &["mnist", "fmnist", "cifar", "shakespeare", "tfm_char", "hp", "mlp_test"];
     if !MODEL_WORKLOADS.contains(&w) {
         bail!(
             "unknown workload {w:?} (synthetic: ackley|sphere|rosenbrock; \
-             models: mnist|fmnist|cifar|shakespeare|hp; rl via `optex rl`)"
+             native dqn: dqn_replay; models: mnist|fmnist|cifar|shakespeare|hp; \
+             rl via `optex rl`)"
         );
     }
     // Model workloads need the manifest for shapes.
@@ -211,6 +225,27 @@ mod tests {
         let w = build(&cfg).unwrap();
         assert_eq!(w.source.dim(), 64);
         assert_eq!(w.source.backend_name(), "native");
+    }
+
+    #[test]
+    fn dqn_replay_builds_without_artifacts_and_matches_fixture() {
+        let mut cfg = RunConfig::default();
+        cfg.workload = "dqn_replay".into();
+        cfg.seed = 7;
+        cfg.artifacts_dir = "/nonexistent".into();
+        let mut w = build(&cfg).unwrap();
+        assert_eq!(w.source.backend_name(), "native");
+        assert!(w.gp_artifact.is_none());
+        // same oracle as the shared test fixture, bit-for-bit
+        let mut fixture = crate::testutil::fixtures::dqn_replay_source(7);
+        assert_eq!(w.source.dim(), fixture.dim());
+        let p = vec![0.02f32; fixture.dim()];
+        w.source.on_iteration(1, &p);
+        fixture.on_iteration(1, &p);
+        let (ea, ga) = w.source.eval_batch_owned(&[&p]).unwrap();
+        let (eb, gb) = fixture.eval_batch_owned(&[&p]).unwrap();
+        assert_eq!(ga, gb);
+        assert_eq!(ea[0].loss.to_bits(), eb[0].loss.to_bits());
     }
 
     #[test]

@@ -13,7 +13,7 @@ use anyhow::{anyhow, Context, Result};
 use crate::datasets::{Corpus, ImageDataset};
 use crate::runtime::{Manifest, TensorData, WorkerPool};
 use crate::util::Rng;
-use crate::workloads::{Eval, GradSource};
+use crate::workloads::{sampler_bytes, Eval, GradSource};
 
 /// Turns θ into artifact inputs and artifact outputs into an [`Eval`].
 pub trait BatchProvider {
@@ -233,6 +233,24 @@ impl GradSource for HloSource {
 
     fn backend_name(&self) -> &'static str {
         "hlo"
+    }
+
+    fn save_sampler_state(&self) -> Vec<u8> {
+        // Rust-side noise stream only: synthetic HLO workloads (whose
+        // sole stochasticity is this stream) resume bit-identically.
+        // Provider minibatch RNGs are NOT captured — model workloads
+        // keep the standing minibatch-replay caveat on resume.
+        let mut out = Vec::with_capacity(4 + 6 * 8);
+        sampler_bytes::push_tag(&mut out, b"HLO1");
+        sampler_bytes::push_rng(&mut out, &self.noise_rng);
+        out
+    }
+
+    fn load_sampler_state(&mut self, bytes: &[u8]) -> Result<()> {
+        let mut inp = bytes;
+        sampler_bytes::expect_tag(&mut inp, b"HLO1", "hlo")?;
+        self.noise_rng = sampler_bytes::read_rng(&mut inp)?;
+        Ok(())
     }
 }
 

@@ -97,6 +97,110 @@ pub trait GradSource {
     /// bit-identical at any thread count (fork per-point RNG streams
     /// before dispatch, never share a stream across workers).
     fn set_compute_pool(&mut self, _pool: NativePool) {}
+
+    /// Serialize the oracle's *sampler state* — everything that advances
+    /// per evaluation and is not derivable from (θ, history): noise /
+    /// minibatch RNG streams, DQN target networks. Persisted inside run
+    /// checkpoints (format v2) so checkpoint-backed suspend and restart
+    /// adoption continue bit-identically for stochastic oracles too
+    /// (ISSUE 5 — previously only deterministic oracles resumed exactly).
+    /// The default "stateless" empty vec keeps the legacy
+    /// restart-from-seed behavior for sources that do not opt in.
+    fn save_sampler_state(&self) -> Vec<u8> {
+        Vec::new()
+    }
+
+    /// Restore state produced by [`GradSource::save_sampler_state`] on a
+    /// freshly built source of the SAME config. Errs on a tag or shape
+    /// mismatch (a checkpoint from a different workload).
+    fn load_sampler_state(&mut self, bytes: &[u8]) -> Result<()> {
+        anyhow::ensure!(
+            bytes.is_empty(),
+            "{}: this oracle is stateless but the checkpoint carries sampler state",
+            self.backend_name()
+        );
+        Ok(())
+    }
+}
+
+/// Little-endian byte packing shared by the [`GradSource`] sampler-state
+/// implementations (no serde offline; mirrors the checkpoint module's
+/// hand-rolled encoding style). Each source writes a 4-byte tag first so
+/// cross-workload restores fail loudly instead of scrambling an RNG.
+pub mod sampler_bytes {
+    use anyhow::{bail, Result};
+
+    use crate::util::Rng;
+
+    pub fn push_u64(out: &mut Vec<u8>, x: u64) {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+
+    pub fn read_u64(inp: &mut &[u8]) -> Result<u64> {
+        if inp.len() < 8 {
+            bail!("truncated sampler state");
+        }
+        let (head, tail) = inp.split_at(8);
+        *inp = tail;
+        Ok(u64::from_le_bytes(head.try_into().unwrap()))
+    }
+
+    pub fn push_tag(out: &mut Vec<u8>, tag: &[u8; 4]) {
+        out.extend_from_slice(tag);
+    }
+
+    pub fn expect_tag(inp: &mut &[u8], tag: &[u8; 4], what: &str) -> Result<()> {
+        if inp.len() < 4 || &inp[..4] != tag {
+            bail!("sampler state is not from a {what} oracle");
+        }
+        *inp = &inp[4..];
+        Ok(())
+    }
+
+    /// xoshiro words + Box–Muller spare: 6 u64 slots.
+    pub fn push_rng(out: &mut Vec<u8>, rng: &Rng) {
+        let (s, spare) = rng.state();
+        for w in s {
+            push_u64(out, w);
+        }
+        push_u64(out, spare.is_some() as u64);
+        push_u64(out, spare.unwrap_or(0.0).to_bits());
+    }
+
+    pub fn read_rng(inp: &mut &[u8]) -> Result<Rng> {
+        let s = [
+            read_u64(inp)?,
+            read_u64(inp)?,
+            read_u64(inp)?,
+            read_u64(inp)?,
+        ];
+        let has_spare = read_u64(inp)? != 0;
+        let bits = read_u64(inp)?;
+        Ok(Rng::from_state(s, has_spare.then(|| f64::from_bits(bits))))
+    }
+
+    pub fn push_f32s(out: &mut Vec<u8>, xs: &[f32]) {
+        push_u64(out, xs.len() as u64);
+        for x in xs {
+            out.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+
+    pub fn read_f32s(inp: &mut &[u8]) -> Result<Vec<f32>> {
+        let n = read_u64(inp)? as usize;
+        // length field is untrusted (corrupt checkpoint): compare via
+        // division so an absurd count cannot overflow `n * 4` (which
+        // would panic in debug builds and kill the serve thread)
+        if n > inp.len() / 4 {
+            bail!("truncated sampler state (f32 block)");
+        }
+        let (head, tail) = inp.split_at(n * 4);
+        *inp = tail;
+        Ok(head
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
 }
 
 /// Native analytic synthetic-function oracle with optional Gaussian
@@ -191,6 +295,22 @@ impl GradSource for NativeSynth {
     fn set_compute_pool(&mut self, pool: NativePool) {
         self.pool = pool;
     }
+
+    fn save_sampler_state(&self) -> Vec<u8> {
+        // The master noise stream is the only mutable sampler state (the
+        // per-point streams are forked from it transiently per batch).
+        let mut out = Vec::with_capacity(4 + 6 * 8);
+        sampler_bytes::push_tag(&mut out, b"SYN1");
+        sampler_bytes::push_rng(&mut out, &self.rng);
+        out
+    }
+
+    fn load_sampler_state(&mut self, bytes: &[u8]) -> Result<()> {
+        let mut inp = bytes;
+        sampler_bytes::expect_tag(&mut inp, b"SYN1", "native synthetic")?;
+        self.rng = sampler_bytes::read_rng(&mut inp)?;
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -259,6 +379,28 @@ mod tests {
         // the master stream advances between batches
         let (_, gc) = serial.eval_batch_owned(&points).unwrap();
         assert_ne!(ga[0], gc[0]);
+    }
+
+    #[test]
+    fn sampler_state_roundtrip_replays_noise_exactly() {
+        // a restored source must draw the SAME noise a continuing source
+        // would — the bit-identical-resume contract for stochastic oracles
+        let d = 512;
+        let p = vec![0.5f32; d];
+        let points: Vec<&[f32]> = (0..3).map(|_| p.as_slice()).collect();
+        let mut live = NativeSynth::new(SynthFn::Ackley, d, 0.4, 9);
+        live.eval_batch_owned(&points).unwrap(); // advance the stream
+        let state = live.save_sampler_state();
+        let (_, expect) = live.eval_batch_owned(&points).unwrap();
+
+        let mut restored = NativeSynth::new(SynthFn::Ackley, d, 0.4, 9);
+        restored.load_sampler_state(&state).unwrap();
+        let (_, got) = restored.eval_batch_owned(&points).unwrap();
+        assert_eq!(expect, got, "restored noise stream diverged");
+
+        // wrong-oracle state fails loudly
+        assert!(restored.load_sampler_state(b"DQN1xxxx").is_err());
+        assert!(restored.load_sampler_state(b"SYN1").is_err(), "truncated");
     }
 
     #[test]

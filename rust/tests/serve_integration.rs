@@ -11,8 +11,6 @@
 //!   byte-identical to the same configs run through the coordinator,
 //!   then a clean `shutdown`.
 
-use std::io::{BufRead, BufReader, Write};
-use std::net::TcpStream;
 use std::time::{Duration, Instant};
 
 use optex::config::{Method, RunConfig};
@@ -179,35 +177,14 @@ fn weighted_fair_policy_preserves_bit_identity() {
 
 // -- loopback smoke (CI satellite) ------------------------------------------
 
-struct Client {
-    reader: BufReader<TcpStream>,
-    writer: TcpStream,
-}
-
-impl Client {
-    fn connect(addr: std::net::SocketAddr) -> Client {
-        let stream = TcpStream::connect(addr).expect("connecting to serve endpoint");
-        stream
-            .set_read_timeout(Some(Duration::from_secs(30)))
-            .unwrap();
-        Client {
-            reader: BufReader::new(stream.try_clone().unwrap()),
-            writer: stream,
-        }
-    }
-
-    fn request(&mut self, line: &str) -> Json {
-        self.writer.write_all(line.as_bytes()).unwrap();
-        self.writer.write_all(b"\n").unwrap();
-        self.writer.flush().unwrap();
-        let mut reply = String::new();
-        self.reader.read_line(&mut reply).unwrap();
-        Json::parse(reply.trim()).unwrap_or_else(|e| panic!("bad reply {reply:?}: {e}"))
-    }
-}
+use optex::testutil::fixtures::WireClient as Client;
 
 fn smoke_overrides(i: usize) -> Vec<(&'static str, String)> {
     let workloads = ["sphere", "rosenbrock", "ackley"];
+    // width from the CI matrix (OPTEX_TEST_THREADS ∈ {1, 8}); results
+    // are bit-identical at any value, so both sides of the comparison
+    // just use the same one
+    let threads = optex::testutil::fixtures::test_threads();
     vec![
         ("workload", workloads[i].to_string()),
         ("synth_dim", "128".into()),
@@ -216,7 +193,7 @@ fn smoke_overrides(i: usize) -> Vec<(&'static str, String)> {
         ("noise_std", "0.2".into()),
         ("optex.parallelism", "3".into()),
         ("optex.t0", "5".into()),
-        ("optex.threads", "1".into()),
+        ("optex.threads", threads.to_string()),
     ]
 }
 
@@ -237,18 +214,14 @@ fn loopback_smoke_three_sessions_byte_identical_then_shutdown() {
         })
         .collect();
 
-    // server on an ephemeral loopback port, scheduler thread = bind thread
+    // server on an ephemeral loopback port, scheduler thread = bind
+    // thread; the physical pool budget follows the CI threads matrix so
+    // the arbiter grants the sessions' requested width
     let mut base = RunConfig::default();
     base.serve.addr = "127.0.0.1:0".into();
     base.serve.ckpt_dir = dir.clone();
-    base.optex.threads = 1;
-    let (addr_tx, addr_rx) = std::sync::mpsc::channel();
-    let server_thread = std::thread::spawn(move || {
-        let server = Server::bind(&base).expect("binding loopback serve endpoint");
-        addr_tx.send(server.local_addr().unwrap()).unwrap();
-        server.run().expect("serve loop");
-    });
-    let addr = addr_rx.recv_timeout(Duration::from_secs(10)).unwrap();
+    base.optex.threads = optex::testutil::fixtures::test_threads();
+    let (addr, server_thread) = spawn_server(base);
     let mut client = Client::connect(addr);
 
     // protocol-level error paths while we're here
@@ -262,17 +235,7 @@ fn loopback_smoke_three_sessions_byte_identical_then_shutdown() {
     // submit the three sessions through the wire
     let mut ids = Vec::new();
     for i in 0..3 {
-        let cfg_obj: Vec<String> = smoke_overrides(i)
-            .iter()
-            .map(|(k, v)| {
-                if v.chars().all(|c| c.is_ascii_digit() || c == '.') {
-                    format!("\"{k}\":{v}")
-                } else {
-                    format!("\"{k}\":\"{v}\"")
-                }
-            })
-            .collect();
-        let line = format!("{{\"cmd\":\"submit\",\"config\":{{{}}}}}", cfg_obj.join(","));
+        let line = optex::testutil::fixtures::submit_json(&smoke_overrides(i), false);
         let r = client.request(&line);
         assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{line}");
         ids.push(r.get("id").unwrap().as_usize().unwrap() as u64);
@@ -318,6 +281,174 @@ fn loopback_smoke_three_sessions_byte_identical_then_shutdown() {
     let r = client.request(r#"{"cmd":"shutdown"}"#);
     assert_eq!(r.get("ok").unwrap().as_bool(), Some(true));
     server_thread.join().expect("server thread panicked");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Spin up a loopback server on its own thread; returns (addr, handle).
+fn spawn_server(base: RunConfig) -> (std::net::SocketAddr, std::thread::JoinHandle<()>) {
+    let (addr_tx, addr_rx) = std::sync::mpsc::channel();
+    let handle = std::thread::spawn(move || {
+        let server = Server::bind(&base).expect("binding loopback serve endpoint");
+        addr_tx.send(server.local_addr().unwrap()).unwrap();
+        server.run().expect("serve loop");
+    });
+    let addr = addr_rx.recv_timeout(Duration::from_secs(10)).unwrap();
+    (addr, handle)
+}
+
+/// ISSUE 5 acceptance: `watch` streaming. Pushed iter records must match
+/// the session's metric history exactly (= the polled view, = a solo
+/// run), and the terminal push must equal the `result` response field
+/// for field.
+#[test]
+fn watch_streams_every_iteration_and_terminal_result() {
+    let dir = tmp_dir("watch");
+    let steps = 12usize;
+    let overrides: Vec<(&str, String)> = vec![
+        ("workload", "ackley".into()),
+        ("synth_dim", "96".into()),
+        ("steps", steps.to_string()),
+        ("seed", "77".into()),
+        ("noise_std", "0.25".into()),
+        ("optex.parallelism", "3".into()),
+        ("optex.t0", "5".into()),
+        ("optex.threads", "1".into()),
+    ];
+    // solo reference: per-iteration losses + final theta
+    let mut cfg = RunConfig::default();
+    for (k, v) in &overrides {
+        cfg.apply_override(&format!("{k}={v}")).unwrap();
+    }
+    let workload = factory::build(&cfg).unwrap();
+    let mut solo = Driver::new(cfg, workload).unwrap();
+    let solo_rec = solo.run().unwrap();
+
+    let mut base = RunConfig::default();
+    base.serve.addr = "127.0.0.1:0".into();
+    base.serve.ckpt_dir = dir.clone();
+    base.optex.threads = 1;
+    let (addr, server_thread) = spawn_server(base);
+    let mut client = Client::connect(addr);
+
+    // paused admission lets the watch attach before ANY iteration runs
+    let r = client.request(&optex::testutil::fixtures::submit_json(&overrides, true));
+    assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r:?}");
+    assert_eq!(r.get("state").unwrap().as_str(), Some("paused"));
+    let id = r.get("id").unwrap().as_usize().unwrap();
+    let r = client.request(&format!("{{\"cmd\":\"watch\",\"id\":{id}}}"));
+    assert_eq!(r.get("watch").unwrap().as_bool(), Some(true));
+    assert_eq!(r.get("stream_every").unwrap().as_usize(), Some(1));
+    let r = client.request(&format!("{{\"cmd\":\"resume\",\"id\":{id}}}"));
+    assert_eq!(r.get("state").unwrap().as_str(), Some("running"));
+
+    // now the pushes: one iter event per iteration, then the terminal
+    let mut pushed: Vec<(usize, u64, u64)> = Vec::new(); // (iter, loss, best)
+    let terminal = loop {
+        let v = client.read_json();
+        match v.get("event").and_then(Json::as_str) {
+            Some("iter") => pushed.push((
+                v.get("iter").unwrap().as_usize().unwrap(),
+                v.get("loss").unwrap().as_f64().unwrap().to_bits(),
+                v.get("best_loss").unwrap().as_f64().unwrap().to_bits(),
+            )),
+            Some("result") => break v,
+            other => panic!("unexpected line during watch: {other:?} in {v:?}"),
+        }
+    };
+    // pushed records == the solo run's metric rows, bitwise
+    assert_eq!(pushed.len(), steps, "one push per iteration");
+    for (row, (iter, loss, best)) in solo_rec.rows.iter().zip(&pushed) {
+        assert_eq!(row.iter, *iter);
+        assert_eq!(row.loss.to_bits(), *loss, "iter {iter}: pushed loss diverged");
+        assert_eq!(row.best_loss.to_bits(), *best, "iter {iter}: pushed best_loss");
+    }
+    // terminal push == the result response, minus the event marker
+    assert_eq!(terminal.get("state").unwrap().as_str(), Some("done"));
+    let result = client.request(&format!("{{\"cmd\":\"result\",\"id\":{id}}}"));
+    let (Json::Obj(mut t), Json::Obj(r)) = (terminal, result) else {
+        panic!("non-object lines");
+    };
+    assert_eq!(t.remove("event").and_then(|e| e.as_str().map(String::from)).as_deref(), Some("result"));
+    assert_eq!(t, r, "terminal push drifted from the result response");
+
+    // watching a FINISHED session acks then pushes the terminal at once
+    client.send(&format!("{{\"cmd\":\"watch\",\"id\":{id},\"theta\":true}}"));
+    let ack = client.read_json();
+    assert_eq!(ack.get("watch").unwrap().as_bool(), Some(true));
+    let term = client.read_json();
+    assert_eq!(term.get("event").unwrap().as_str(), Some("result"));
+    let theta_bits: Vec<u32> = term
+        .get("theta")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|v| (v.as_f64().unwrap() as f32).to_bits())
+        .collect();
+    let solo_bits: Vec<u32> = solo.theta().iter().map(|x| x.to_bits()).collect();
+    assert_eq!(theta_bits, solo_bits, "terminal theta differs from solo bytes");
+
+    // malformed watch payloads answer in order, server stays up
+    let r = client.request(r#"{"cmd":"watch","id":999}"#);
+    assert_eq!(r.get("ok").unwrap().as_bool(), Some(false));
+    let r = client.request(&format!(
+        "{{\"cmd\":\"watch\",\"id\":{id},\"stream_every\":0}}"
+    ));
+    assert!(r.get("error").unwrap().as_str().unwrap().contains(">= 1"), "{r:?}");
+    client.request(r#"{"cmd":"shutdown"}"#);
+    server_thread.join().unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// ISSUE 5 satellite: resume of a session whose suspend checkpoint is
+/// truncated must fail CLEANLY — error reply, session → Failed, server
+/// keeps serving.
+#[test]
+fn truncated_checkpoint_resume_fails_session_but_not_server() {
+    let dir = tmp_dir("trunc_wire");
+    let mut base = RunConfig::default();
+    base.serve.addr = "127.0.0.1:0".into();
+    base.serve.ckpt_dir = dir.clone();
+    base.optex.threads = 1;
+    let (addr, server_thread) = spawn_server(base);
+    let mut client = Client::connect(addr);
+
+    // effectively-unbounded session so it is still live at the pause
+    let r = client.request(
+        r#"{"cmd":"submit","config":{"workload":"sphere","synth_dim":50000,"steps":1000000,"seed":3,"optex.threads":1}}"#,
+    );
+    let id = r.get("id").unwrap().as_usize().unwrap();
+    let r = client.request(&format!("{{\"cmd\":\"pause\",\"id\":{id}}}"));
+    assert_eq!(r.get("state").unwrap().as_str(), Some("paused"));
+
+    // mangle the suspend checkpoint behind the server's back
+    let ckpt = dir.join(format!("session_{id}.ckpt"));
+    let bytes = std::fs::read(&ckpt).expect("suspend checkpoint exists");
+    std::fs::write(&ckpt, &bytes[..bytes.len() / 4]).unwrap();
+
+    let r = client.request(&format!("{{\"cmd\":\"resume\",\"id\":{id}}}"));
+    assert_eq!(r.get("ok").unwrap().as_bool(), Some(false), "{r:?}");
+    assert!(r.get("error").unwrap().as_str().unwrap().contains("resume failed"));
+    let r = client.request(&format!("{{\"cmd\":\"status\",\"id\":{id}}}"));
+    assert_eq!(r.get("state").unwrap().as_str(), Some("failed"));
+    assert!(r.get("error").unwrap().as_str().unwrap().contains("resume failed"));
+
+    // the serve loop is unharmed: a fresh session still runs to done
+    let r = client.request(
+        r#"{"cmd":"submit","config":{"workload":"sphere","synth_dim":64,"steps":3,"seed":4,"optex.threads":1}}"#,
+    );
+    let id2 = r.get("id").unwrap().as_usize().unwrap();
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        let r = client.request(&format!("{{\"cmd\":\"status\",\"id\":{id2}}}"));
+        match r.get("state").unwrap().as_str().unwrap() {
+            "done" => break,
+            "failed" => panic!("fresh session failed: {r:?}"),
+            _ => assert!(Instant::now() < deadline, "fresh session never finished"),
+        }
+    }
+    client.request(r#"{"cmd":"shutdown"}"#);
+    server_thread.join().unwrap();
     std::fs::remove_dir_all(&dir).ok();
 }
 

@@ -1,0 +1,272 @@
+//! ISSUE 5 acceptance: restart adoption. A real `optex serve` process is
+//! driven over loopback TCP, K = 4 mixed synth + DQN sessions are
+//! suspended mid-run, the process is **SIGKILLed** (no shutdown
+//! bookkeeping whatsoever), and a successor server started with
+//! `--adopt` re-registers them from `manifest.jsonl`: original ids, a
+//! continued id counter (the ISSUE-4 id-reuse hazard), and — after
+//! `resume` — final thetas **byte-identical** to uninterrupted solo
+//! runs, at `optex.threads ∈ {1, 8}`. The stochastic sessions (noisy
+//! synth, DQN minibatch sampling) only pass because the v2 suspend
+//! checkpoints carry the oracle sampler state.
+
+use std::io::{BufRead, BufReader};
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+use optex::config::RunConfig;
+use optex::coordinator::Driver;
+use optex::serve::Server;
+use optex::testutil::fixtures::WireClient as Client;
+use optex::util::json::Json;
+use optex::workloads::factory;
+
+/// The K = 4 mixed-session matrix: heavy synthetic dims keep quanta slow
+/// enough that a client-side pause always lands mid-run; the DQN session
+/// gets more (lighter) iterations for the same reason.
+fn session_overrides(i: usize, threads: usize) -> Vec<(&'static str, String)> {
+    let mut ov: Vec<(&'static str, String)> = match i {
+        0 => vec![
+            ("workload", "ackley".into()),
+            ("synth_dim", "150000".into()),
+            ("steps", "40".into()),
+            ("noise_std", "0.3".into()),
+        ],
+        1 => vec![
+            ("workload", "sphere".into()),
+            ("synth_dim", "120000".into()),
+            ("steps", "40".into()),
+            ("noise_std", "0.2".into()),
+        ],
+        2 => vec![
+            ("workload", "rosenbrock".into()),
+            ("synth_dim", "100000".into()),
+            ("steps", "40".into()),
+        ],
+        _ => vec![("workload", "dqn_replay".into()), ("steps", "300".into())],
+    };
+    ov.push(("seed", (60 + i).to_string()));
+    ov.push(("optex.parallelism", "3".into()));
+    ov.push(("optex.t0", "5".into()));
+    ov.push(("optex.threads", threads.to_string()));
+    ov
+}
+
+use optex::testutil::fixtures::submit_json;
+
+fn solo_theta_bits(overrides: &[(&'static str, String)]) -> Vec<u32> {
+    let mut cfg = RunConfig::default();
+    for (k, v) in overrides {
+        cfg.apply_override(&format!("{k}={v}")).unwrap();
+    }
+    let workload = factory::build(&cfg).unwrap();
+    let mut drv = Driver::new(cfg, workload).unwrap();
+    drv.run().unwrap();
+    drv.theta().iter().map(|x| x.to_bits()).collect()
+}
+
+/// Spawn the REAL binary (`CARGO_BIN_EXE_optex`) serving on an ephemeral
+/// loopback port; returns the child and the parsed address.
+fn spawn_server_process(ckpt_dir: &std::path::Path, threads: usize) -> (Child, String) {
+    let mut child = Command::new(env!("CARGO_BIN_EXE_optex"))
+        .args([
+            "serve",
+            "--addr",
+            "127.0.0.1:0",
+            "--threads",
+            &threads.to_string(),
+            "--set",
+            &format!("serve.ckpt_dir={}", ckpt_dir.display()),
+        ])
+        .stdout(Stdio::piped())
+        .stderr(Stdio::inherit())
+        .spawn()
+        .expect("spawning optex serve");
+    let stdout = child.stdout.take().expect("child stdout piped");
+    let mut lines = BufReader::new(stdout).lines();
+    let addr = loop {
+        let line = lines
+            .next()
+            .expect("server exited before announcing its address")
+            .expect("reading server stdout");
+        if let Some(rest) = line.strip_prefix("serve: listening on ") {
+            break rest
+                .split_whitespace()
+                .next()
+                .expect("address token")
+                .to_string();
+        }
+    };
+    // keep draining stdout so the child never blocks on a full pipe
+    std::thread::spawn(move || for _ in lines {});
+    (child, addr)
+}
+
+fn poll_state(client: &mut Client, id: u64) -> (String, u64) {
+    let r = client.request(&format!("{{\"cmd\":\"status\",\"id\":{id}}}"));
+    assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r:?}");
+    (
+        r.get("state").unwrap().as_str().unwrap().to_string(),
+        r.get("iters").unwrap().as_usize().unwrap() as u64,
+    )
+}
+
+fn run_matrix(threads: usize) {
+    let dir = optex::testutil::fixtures::tmp_ckpt_dir(&format!("restart_t{threads}"));
+    let overrides: Vec<Vec<(&'static str, String)>> =
+        (0..4).map(|i| session_overrides(i, threads)).collect();
+
+    // --- first server: submit, make progress, suspend, SIGKILL ---------
+    let (mut child, addr) = spawn_server_process(&dir, threads);
+    let mut client = Client::connect(&addr);
+    let ids: Vec<u64> = overrides
+        .iter()
+        .map(|ov| {
+            let r = client.request(&submit_json(ov, false));
+            assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r:?}");
+            r.get("id").unwrap().as_usize().unwrap() as u64
+        })
+        .collect();
+    assert_eq!(ids, vec![1, 2, 3, 4]);
+
+    // suspend each as soon as it has visible progress (the heavy dims
+    // guarantee none can race to completion first)
+    let mut iters_at_pause = Vec::new();
+    let deadline = Instant::now() + Duration::from_secs(120);
+    for &id in &ids {
+        loop {
+            let (state, iters) = poll_state(&mut client, id);
+            assert_ne!(state, "done", "session {id} finished before the pause");
+            assert_ne!(state, "failed", "session {id} failed");
+            if iters >= 1 {
+                break;
+            }
+            assert!(Instant::now() < deadline, "session {id} made no progress");
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        let r = client.request(&format!("{{\"cmd\":\"pause\",\"id\":{id}}}"));
+        assert_eq!(r.get("state").unwrap().as_str(), Some("paused"), "{r:?}");
+        let r = client.request(&format!("{{\"cmd\":\"status\",\"id\":{id}}}"));
+        assert_eq!(r.get("suspended").unwrap().as_bool(), Some(true));
+        iters_at_pause.push(r.get("iters").unwrap().as_usize().unwrap() as u64);
+    }
+    child.kill().expect("SIGKILL the server");
+    child.wait().expect("reaping the server");
+
+    // --- solo references (uninterrupted runs of the same configs) ------
+    let solo: Vec<Vec<u32>> = overrides.iter().map(|ov| solo_theta_bits(ov)).collect();
+
+    // --- successor: adopt, verify, resume, compare ----------------------
+    let mut base = RunConfig::default();
+    base.serve.addr = "127.0.0.1:0".into();
+    base.serve.ckpt_dir = dir.clone();
+    base.serve.adopt = true;
+    base.optex.threads = threads;
+    let (addr_tx, addr_rx) = std::sync::mpsc::channel();
+    let server_thread = std::thread::spawn(move || {
+        let server = Server::bind(&base).expect("adopting server binds");
+        addr_tx.send(server.local_addr().unwrap()).unwrap();
+        server.run().expect("serve loop");
+    });
+    let addr2 = addr_rx.recv_timeout(Duration::from_secs(10)).unwrap();
+    let mut client = Client::connect(&addr2.to_string());
+
+    for (&id, &want_iters) in ids.iter().zip(&iters_at_pause) {
+        let (state, iters) = poll_state(&mut client, id);
+        assert_eq!(state, "paused", "adopted session {id}");
+        assert_eq!(iters, want_iters, "adopted session {id} lost progress");
+    }
+    // the id-reuse fix: a fresh submission continues the persisted counter
+    let r = client.request(
+        r#"{"cmd":"submit","config":{"workload":"sphere","synth_dim":64,"steps":2,"seed":99,"optex.threads":1}}"#,
+    );
+    assert_eq!(
+        r.get("id").unwrap().as_usize(),
+        Some(5),
+        "adopting server must not reuse session ids: {r:?}"
+    );
+    for &id in &ids {
+        let r = client.request(&format!("{{\"cmd\":\"resume\",\"id\":{id}}}"));
+        assert_eq!(r.get("state").unwrap().as_str(), Some("running"), "{r:?}");
+    }
+    let deadline = Instant::now() + Duration::from_secs(300);
+    for (i, &id) in ids.iter().enumerate() {
+        loop {
+            let (state, _) = poll_state(&mut client, id);
+            match state.as_str() {
+                "done" => break,
+                "failed" => panic!("adopted session {id} failed after resume"),
+                _ => {
+                    assert!(Instant::now() < deadline, "session {id} never finished");
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+            }
+        }
+        let r = client.request(&format!("{{\"cmd\":\"result\",\"id\":{id},\"theta\":true}}"));
+        let bits: Vec<u32> = r
+            .get("theta")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| (v.as_f64().unwrap() as f32).to_bits())
+            .collect();
+        assert_eq!(
+            bits, solo[i],
+            "session {id} (threads={threads}): kill → adopt → resume \
+             diverged from the uninterrupted solo run"
+        );
+    }
+    client.request(r#"{"cmd":"shutdown"}"#);
+    server_thread.join().unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// The two kill/adopt matrices are heavy (d up to 150k, full solo
+// reference runs) and pin their own widths, so running them inside the
+// debug `cargo test` matrix would only duplicate the dedicated RELEASE
+// `serve-restart-smoke` CI job with tighter-deadline flake surface —
+// hence #[ignore]; that job runs `-- --include-ignored`.
+#[test]
+#[ignore = "heavy kill/adopt matrix: run in release via the serve-restart-smoke CI job (--include-ignored)"]
+fn kill_adopt_resume_is_byte_identical_threads_1() {
+    run_matrix(1);
+}
+
+#[test]
+#[ignore = "heavy kill/adopt matrix: run in release via the serve-restart-smoke CI job (--include-ignored)"]
+fn kill_adopt_resume_is_byte_identical_threads_8() {
+    run_matrix(8);
+}
+
+/// Starting WITHOUT `--adopt` against a used ckpt_dir must be refused
+/// (the id-reuse hazard), and the refusal must name the fix.
+#[test]
+fn non_adopting_server_refuses_a_used_ckpt_dir() {
+    let dir = optex::testutil::fixtures::tmp_ckpt_dir("refuse");
+    // a previous server existed: manifest with one suspended session
+    let (mut child, addr) = spawn_server_process(&dir, 1);
+    let mut client = Client::connect(&addr);
+    let r = client.request(
+        r#"{"cmd":"submit","config":{"workload":"sphere","synth_dim":60000,"steps":100000,"seed":1,"optex.threads":1}}"#,
+    );
+    let id = r.get("id").unwrap().as_usize().unwrap();
+    let r = client.request(&format!("{{\"cmd\":\"pause\",\"id\":{id}}}"));
+    assert_eq!(r.get("state").unwrap().as_str(), Some("paused"));
+    child.kill().unwrap();
+    child.wait().unwrap();
+
+    let mut base = RunConfig::default();
+    base.serve.addr = "127.0.0.1:0".into();
+    base.serve.ckpt_dir = dir.clone();
+    let err = match Server::bind(&base) {
+        Ok(_) => panic!("bind against a used ckpt_dir must fail without --adopt"),
+        Err(e) => format!("{e:#}"),
+    };
+    assert!(err.contains("--adopt"), "{err}");
+    assert!(err.contains("manifest"), "{err}");
+    // with adopt it binds and sees the session
+    base.serve.adopt = true;
+    let server = Server::bind(&base).expect("adopting bind succeeds");
+    drop(server);
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -1,10 +1,30 @@
-//! BENCH_TREND.md generator (ROADMAP PR-3 follow-up, closed in ISSUE 4).
+//! BENCH_TREND.md generator + bench regression gate.
 //!
-//! Folds every `BENCH_*.json` summary in the working directory — one per
-//! PR, written by `bench_estimation` — into a single metric × PR
-//! markdown table, so the perf trajectory across PRs is one artifact
-//! instead of N files to diff by hand. CI runs this right after the
-//! bench step and uploads `BENCH_TREND.md` next to the JSON summaries.
+//! **Trend** (default, ROADMAP PR-3 follow-up, closed in ISSUE 4): folds
+//! every `BENCH_*.json` summary in the working directory — one per PR,
+//! written by `bench_estimation` — into a single metric × PR markdown
+//! table, so the perf trajectory across PRs is one artifact instead of N
+//! files to diff by hand. CI runs this right after the bench step and
+//! uploads `BENCH_TREND.md` next to the JSON summaries.
+//!
+//! **Gate** (`--check`, ISSUE 5 satellite): compares fresh `BENCH_*.json`
+//! summaries against committed baselines and FAILS on a > 25% regression
+//! of any pinned metric:
+//!
+//! | metric | direction |
+//! |---|---|
+//! | `store_vs_seed[...].combine_store_ns_per_elem` | lower is better |
+//! | `combine_pool[...].ns_per_elem`                | lower is better |
+//! | `store_vs_seed[...].store_flatten_bytes_per_iter` (copies/iter) | lower is better (zero must STAY zero) |
+//! | `serve_throughput[k=8,...].steps_per_sec`      | higher is better |
+//!
+//! Usage: `bench_trend --check [--fresh DIR] [--baseline DIR]`
+//! (defaults: fresh = `.`, baseline = `baselines/`). Metrics without a
+//! committed baseline pass with a notice — seed `baselines/` from a
+//! trusted CI run's `bench-summary` artifact via
+//! `bench_trend --write-baseline [--fresh DIR]`. Escape hatch for noisy
+//! runners: `OPTEX_BENCH_BASELINE_SKIP=1` downgrades failures to
+//! warnings (the job stays green, the report still prints).
 //!
 //! Schema expected (what `bench_estimation` writes):
 //! `{"pr": N, "bench": ..., "rows": [{"section": ..., <coord/metric fields>}]}`
@@ -13,11 +33,59 @@
 //! measurement column.
 
 use std::collections::BTreeMap;
+use std::path::Path;
 
+use anyhow::{bail, Context, Result};
 use optex::util::json::Json;
 
 /// Fields that locate a grid cell rather than measure it.
 const COORDS: &[&str] = &["t0", "d", "n", "dsub", "k", "steps_per_session"];
+
+/// Relative regression threshold for the gate (25%).
+const GATE_TOLERANCE: f64 = 0.25;
+
+/// Absolute slack so a zero baseline is not an automatic failure for
+/// zero fresh values (floating-point noise), while any REAL increase
+/// from zero (e.g. copies/iter) still trips the gate.
+const GATE_ABS_EPS: f64 = 1e-9;
+
+/// One pinned (gated) metric family.
+struct Pinned {
+    section: &'static str,
+    field: &'static str,
+    higher_is_better: bool,
+    /// Only gate cells where this coordinate has this value.
+    coord_filter: Option<(&'static str, f64)>,
+}
+
+/// The gate's metric list (ISSUE 5: combine ns/elem, copies/iter,
+/// K=8 serve steps/s).
+const PINNED: &[Pinned] = &[
+    Pinned {
+        section: "store_vs_seed",
+        field: "combine_store_ns_per_elem",
+        higher_is_better: false,
+        coord_filter: None,
+    },
+    Pinned {
+        section: "combine_pool",
+        field: "ns_per_elem",
+        higher_is_better: false,
+        coord_filter: None,
+    },
+    Pinned {
+        section: "store_vs_seed",
+        field: "store_flatten_bytes_per_iter",
+        higher_is_better: false,
+        coord_filter: None,
+    },
+    Pinned {
+        section: "serve_throughput",
+        field: "steps_per_sec",
+        higher_is_better: true,
+        coord_filter: Some(("k", 8.0)),
+    },
+];
 
 fn is_coord(k: &str) -> bool {
     COORDS.contains(&k)
@@ -45,27 +113,53 @@ fn fmt_metric(v: f64) -> String {
     }
 }
 
-fn main() -> anyhow::Result<()> {
-    // collect BENCH_<pr>.json files from the working directory
-    let mut files: Vec<(u64, String)> = Vec::new();
-    for entry in std::fs::read_dir(".")? {
-        let name = entry?.file_name().to_string_lossy().into_owned();
+/// `BENCH_<pr>.json` files in a directory, sorted by PR number.
+fn bench_files(dir: &Path) -> Result<Vec<(u64, std::path::PathBuf)>> {
+    let mut files = Vec::new();
+    for entry in
+        std::fs::read_dir(dir).with_context(|| format!("reading {}", dir.display()))?
+    {
+        let entry = entry?;
+        let name = entry.file_name().to_string_lossy().into_owned();
         if let Some(stem) = name.strip_prefix("BENCH_").and_then(|s| s.strip_suffix(".json"))
         {
             if let Ok(pr) = stem.parse::<u64>() {
-                files.push((pr, name));
+                files.push((pr, entry.path()));
             }
         }
     }
     files.sort();
-    if files.is_empty() {
-        anyhow::bail!("no BENCH_*.json files in the working directory");
-    }
+    Ok(files)
+}
 
-    // metric label -> (pr -> value)
-    let mut table: BTreeMap<String, BTreeMap<u64, f64>> = BTreeMap::new();
-    for (pr, name) in &files {
-        let doc = Json::parse(&std::fs::read_to_string(name)?)
+/// One measurement: section, coords (label + raw values), field, value.
+struct Row {
+    section: String,
+    coords: String,
+    coord_vals: BTreeMap<String, f64>,
+    field: String,
+    value: f64,
+}
+
+impl Row {
+    fn label(&self) -> String {
+        if self.coords.is_empty() {
+            format!("{}.{}", self.section, self.field)
+        } else {
+            format!("{}[{}].{}", self.section, self.coords, self.field)
+        }
+    }
+}
+
+/// Flatten every `BENCH_*.json` in `dir` into measurement rows (also
+/// returns the per-PR file list for the trend table header).
+fn collect_rows(dir: &Path) -> Result<(Vec<(u64, String)>, Vec<(u64, Row)>)> {
+    let files = bench_files(dir)?;
+    let mut rows_out = Vec::new();
+    let mut names = Vec::new();
+    for (pr, path) in &files {
+        let name = path.file_name().unwrap().to_string_lossy().into_owned();
+        let doc = Json::parse(&std::fs::read_to_string(path)?)
             .map_err(|e| anyhow::anyhow!("{name}: {e}"))?;
         let rows = doc
             .get("rows")
@@ -78,23 +172,48 @@ fn main() -> anyhow::Result<()> {
             let section = obj
                 .get("section")
                 .and_then(Json::as_str)
-                .ok_or_else(|| anyhow::anyhow!("{name}: row without section"))?;
-            let cell = coord_label(obj);
+                .ok_or_else(|| anyhow::anyhow!("{name}: row without section"))?
+                .to_string();
+            let coords = coord_label(obj);
+            let coord_vals: BTreeMap<String, f64> = obj
+                .iter()
+                .filter(|(k, _)| is_coord(k))
+                .filter_map(|(k, v)| v.as_f64().map(|x| (k.clone(), x)))
+                .collect();
             for (k, v) in obj {
                 if k == "section" || is_coord(k) {
                     continue;
                 }
                 let Some(val) = v.as_f64() else { continue };
-                let label = if cell.is_empty() {
-                    format!("{section}.{k}")
-                } else {
-                    format!("{section}[{cell}].{k}")
-                };
-                table.entry(label).or_default().insert(*pr, val);
+                rows_out.push((
+                    *pr,
+                    Row {
+                        section: section.clone(),
+                        coords: coords.clone(),
+                        coord_vals: coord_vals.clone(),
+                        field: k.clone(),
+                        value: val,
+                    },
+                ));
             }
         }
+        names.push((*pr, name));
     }
+    Ok((names, rows_out))
+}
 
+// -- trend table --------------------------------------------------------------
+
+fn write_trend(dir: &Path) -> Result<()> {
+    let (files, rows) = collect_rows(dir)?;
+    if files.is_empty() {
+        bail!("no BENCH_*.json files in {}", dir.display());
+    }
+    // metric label -> (pr -> value)
+    let mut table: BTreeMap<String, BTreeMap<u64, f64>> = BTreeMap::new();
+    for (pr, row) in &rows {
+        table.entry(row.label()).or_default().insert(*pr, row.value);
+    }
     let prs: Vec<u64> = files.iter().map(|(pr, _)| *pr).collect();
     let mut out = String::from("# Bench trend (metric × PR)\n\n");
     out.push_str(
@@ -129,4 +248,300 @@ fn main() -> anyhow::Result<()> {
         files.iter().map(|(_, n)| n.as_str()).collect::<Vec<_>>().join(", ")
     );
     Ok(())
+}
+
+// -- regression gate ----------------------------------------------------------
+
+/// One gated comparison.
+struct GateCheck {
+    label: String,
+    fresh: f64,
+    baseline: f64,
+    regressed: bool,
+}
+
+/// Gate outcome over two directories of summaries.
+struct GateReport {
+    checks: Vec<GateCheck>,
+    /// Pinned fresh metrics with no committed baseline (pass + notice).
+    unbaselined: Vec<String>,
+}
+
+impl GateReport {
+    fn regressions(&self) -> impl Iterator<Item = &GateCheck> {
+        self.checks.iter().filter(|c| c.regressed)
+    }
+}
+
+fn pinned_match(p: &Pinned, row: &Row) -> bool {
+    if row.section != p.section || row.field != p.field {
+        return false;
+    }
+    match p.coord_filter {
+        None => true,
+        Some((c, v)) => row.coord_vals.get(c).copied() == Some(v),
+    }
+}
+
+/// A > 25% move in the harmful direction (with absolute slack so a zero
+/// baseline tolerates exactly zero — any real increase from 0 fails).
+fn is_regression(fresh: f64, baseline: f64, higher_is_better: bool) -> bool {
+    if higher_is_better {
+        fresh < baseline * (1.0 - GATE_TOLERANCE) - GATE_ABS_EPS
+    } else {
+        fresh > baseline * (1.0 + GATE_TOLERANCE) + GATE_ABS_EPS
+    }
+}
+
+/// Compare every pinned metric in `fresh_dir` against `baseline_dir`.
+fn check_dirs(fresh_dir: &Path, baseline_dir: &Path) -> Result<GateReport> {
+    let (_, fresh_rows) = collect_rows(fresh_dir)?;
+    if fresh_rows.is_empty() {
+        bail!("no BENCH_*.json summaries in {}", fresh_dir.display());
+    }
+    let baseline_rows = if baseline_dir.is_dir() {
+        collect_rows(baseline_dir)?.1
+    } else {
+        Vec::new()
+    };
+    // (pr, label) -> baseline value
+    let baseline: BTreeMap<(u64, String), f64> = baseline_rows
+        .iter()
+        .map(|(pr, r)| ((*pr, r.label()), r.value))
+        .collect();
+    let mut checks = Vec::new();
+    let mut unbaselined = Vec::new();
+    for (pr, row) in &fresh_rows {
+        let Some(p) = PINNED.iter().find(|p| pinned_match(p, row)) else {
+            continue;
+        };
+        let label = row.label();
+        match baseline.get(&(*pr, label.clone())) {
+            None => unbaselined.push(label),
+            Some(&b) => checks.push(GateCheck {
+                regressed: is_regression(row.value, b, p.higher_is_better),
+                label,
+                fresh: row.value,
+                baseline: b,
+            }),
+        }
+    }
+    Ok(GateReport { checks, unbaselined })
+}
+
+fn run_check(fresh_dir: &Path, baseline_dir: &Path) -> Result<()> {
+    let report = check_dirs(fresh_dir, baseline_dir)?;
+    println!(
+        "bench gate: {} pinned metric(s) checked against {} (tolerance {:.0}%)",
+        report.checks.len(),
+        baseline_dir.display(),
+        GATE_TOLERANCE * 100.0
+    );
+    for c in &report.checks {
+        println!(
+            "  {} {}: fresh {} vs baseline {}",
+            if c.regressed { "REGRESSED" } else { "ok       " },
+            c.label,
+            fmt_metric(c.fresh),
+            fmt_metric(c.baseline)
+        );
+    }
+    if !report.unbaselined.is_empty() {
+        println!(
+            "  {} pinned metric(s) have no committed baseline (passing; seed \
+             baselines/ with `bench_trend --write-baseline` from a trusted run):",
+            report.unbaselined.len()
+        );
+        for l in &report.unbaselined {
+            println!("    no-baseline {l}");
+        }
+    }
+    let n_bad = report.regressions().count();
+    if n_bad > 0 {
+        if std::env::var("OPTEX_BENCH_BASELINE_SKIP").is_ok() {
+            println!(
+                "bench gate: {n_bad} regression(s) IGNORED \
+                 (OPTEX_BENCH_BASELINE_SKIP is set — noisy-runner escape hatch)"
+            );
+            return Ok(());
+        }
+        bail!(
+            "bench gate: {n_bad} pinned metric(s) regressed > {:.0}% \
+             (set OPTEX_BENCH_BASELINE_SKIP=1 to override on a noisy runner)",
+            GATE_TOLERANCE * 100.0
+        );
+    }
+    println!("bench gate: OK");
+    Ok(())
+}
+
+/// Copy fresh summaries into the baseline directory (seeding/refresh).
+fn write_baseline(fresh_dir: &Path, baseline_dir: &Path) -> Result<()> {
+    let files = bench_files(fresh_dir)?;
+    if files.is_empty() {
+        bail!("no BENCH_*.json summaries in {}", fresh_dir.display());
+    }
+    std::fs::create_dir_all(baseline_dir)?;
+    for (_, path) in &files {
+        let dest = baseline_dir.join(path.file_name().unwrap());
+        std::fs::copy(path, &dest)
+            .with_context(|| format!("copying {} -> {}", path.display(), dest.display()))?;
+        println!("baseline {}", dest.display());
+    }
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut mode_check = false;
+    let mut mode_write = false;
+    let mut fresh = std::path::PathBuf::from(".");
+    let mut baseline = std::path::PathBuf::from("baselines");
+    let mut it = args.iter();
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--check" => mode_check = true,
+            "--write-baseline" => mode_write = true,
+            "--fresh" => fresh = it.next().context("--fresh needs a directory")?.into(),
+            "--baseline" => {
+                baseline = it.next().context("--baseline needs a directory")?.into()
+            }
+            other => bail!("unknown argument {other:?} (see tools/bench_trend.rs docs)"),
+        }
+    }
+    if mode_check && mode_write {
+        bail!("--check and --write-baseline are mutually exclusive");
+    }
+    if mode_check {
+        run_check(&fresh, &baseline)
+    } else if mode_write {
+        write_baseline(&fresh, &baseline)
+    } else {
+        write_trend(&fresh)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dir(tag: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("optex_gate_{tag}_{}", std::process::id()));
+        std::fs::remove_dir_all(&d).ok();
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn summary(
+        combine_ns: f64,
+        copies: f64,
+        steps_k8: f64,
+        steps_k1: f64,
+    ) -> String {
+        format!(
+            concat!(
+                "{{\"pr\": 5, \"bench\": \"bench_estimation\", \"rows\": [\n",
+                "  {{\"section\": \"store_vs_seed\", \"t0\": 64, \"d\": 10000, ",
+                "\"combine_store_ns_per_elem\": {}, ",
+                "\"store_flatten_bytes_per_iter\": {}}},\n",
+                "  {{\"section\": \"serve_throughput\", \"k\": 8, \"d\": 2000, ",
+                "\"steps_per_sec\": {}, \"latency_p50_ms\": 4.0}},\n",
+                "  {{\"section\": \"serve_throughput\", \"k\": 1, \"d\": 2000, ",
+                "\"steps_per_sec\": {}, \"latency_p50_ms\": 1.0}}\n",
+                "]}}\n"
+            ),
+            combine_ns, copies, steps_k8, steps_k1
+        )
+    }
+
+    #[test]
+    fn within_tolerance_passes() {
+        let fresh = dir("pass_fresh");
+        let base = dir("pass_base");
+        std::fs::write(base.join("BENCH_5.json"), summary(0.5, 0.0, 1000.0, 900.0))
+            .unwrap();
+        // 20% slower combine, 10% slower serve: inside the 25% band
+        std::fs::write(fresh.join("BENCH_5.json"), summary(0.6, 0.0, 900.0, 500.0))
+            .unwrap();
+        let report = check_dirs(&fresh, &base).unwrap();
+        assert_eq!(report.checks.len(), 3, "combine + copies + k=8 steps");
+        assert_eq!(report.regressions().count(), 0);
+        // k=1 steps_per_sec halved but is NOT pinned (only k=8 is)
+        std::fs::remove_dir_all(&fresh).ok();
+        std::fs::remove_dir_all(&base).ok();
+    }
+
+    /// ISSUE 5 acceptance: the negative test — an injected regression
+    /// must demonstrably fail the gate.
+    #[test]
+    fn injected_regressions_fail() {
+        let fresh = dir("fail_fresh");
+        let base = dir("fail_base");
+        std::fs::write(base.join("BENCH_5.json"), summary(0.5, 0.0, 1000.0, 900.0))
+            .unwrap();
+        // 2x slower combine AND 40% serve throughput drop AND copies/iter
+        // jumping off zero: three regressions
+        std::fs::write(
+            fresh.join("BENCH_5.json"),
+            summary(1.0, 2_560_000.0, 600.0, 900.0),
+        )
+        .unwrap();
+        let report = check_dirs(&fresh, &base).unwrap();
+        let bad: Vec<&str> =
+            report.regressions().map(|c| c.label.as_str()).collect();
+        assert_eq!(bad.len(), 3, "{bad:?}");
+        assert!(bad.iter().any(|l| l.contains("combine_store_ns_per_elem")));
+        assert!(bad.iter().any(|l| l.contains("store_flatten_bytes_per_iter")));
+        assert!(bad
+            .iter()
+            .any(|l| l.contains("serve_throughput[") && l.contains("k=8")));
+        // and run_check turns that into a hard error
+        assert!(run_check(&fresh, &base).is_err());
+        std::fs::remove_dir_all(&fresh).ok();
+        std::fs::remove_dir_all(&base).ok();
+    }
+
+    #[test]
+    fn boundary_is_exactly_25_percent() {
+        assert!(!is_regression(1.25, 1.0, false), "exactly on the line passes");
+        assert!(is_regression(1.2501, 1.0, false));
+        assert!(!is_regression(0.75, 1.0, true));
+        assert!(is_regression(0.7499, 1.0, true));
+        // zero baselines: zero stays fine, any real increase trips
+        assert!(!is_regression(0.0, 0.0, false));
+        assert!(is_regression(4.0, 0.0, false));
+    }
+
+    #[test]
+    fn missing_baseline_passes_with_notice() {
+        let fresh = dir("nobase_fresh");
+        let base = dir("nobase_base");
+        std::fs::write(fresh.join("BENCH_5.json"), summary(0.5, 0.0, 1000.0, 900.0))
+            .unwrap();
+        // empty baseline dir: everything unbaselined, nothing regressed
+        let report = check_dirs(&fresh, &base).unwrap();
+        assert_eq!(report.checks.len(), 0);
+        assert_eq!(report.unbaselined.len(), 3);
+        assert!(run_check(&fresh, &base).is_ok());
+        // nonexistent baseline dir behaves the same
+        std::fs::remove_dir_all(&base).ok();
+        assert!(run_check(&fresh, &base).is_ok());
+        std::fs::remove_dir_all(&fresh).ok();
+    }
+
+    #[test]
+    fn write_baseline_then_check_is_clean() {
+        let fresh = dir("seed_fresh");
+        let base = dir("seed_base");
+        std::fs::write(fresh.join("BENCH_5.json"), summary(0.5, 0.0, 1000.0, 900.0))
+            .unwrap();
+        write_baseline(&fresh, &base).unwrap();
+        let report = check_dirs(&fresh, &base).unwrap();
+        assert_eq!(report.checks.len(), 3);
+        assert_eq!(report.regressions().count(), 0);
+        assert!(report.unbaselined.is_empty());
+        std::fs::remove_dir_all(&fresh).ok();
+        std::fs::remove_dir_all(&base).ok();
+    }
 }
