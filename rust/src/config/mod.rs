@@ -280,6 +280,15 @@ impl RunConfig {
         self.validate()
     }
 
+    /// Apply one already-parsed `(key, value)` pair — the scenario
+    /// harness's entry point: scenario files carry typed TOML values, so
+    /// round-tripping them through the `--set` string grammar would be a
+    /// lossy detour. Validation stays with the caller (who applies many
+    /// keys and validates once).
+    pub fn apply_value(&mut self, key: &str, v: &Value) -> Result<(), ConfigError> {
+        self.apply(key, v)
+    }
+
     fn apply(&mut self, key: &str, v: &Value) -> Result<(), ConfigError> {
         let need_str = || v.as_str().ok_or_else(|| bad(key, "expected string"));
         let need_f64 = || v.as_f64().ok_or_else(|| bad(key, "expected number"));

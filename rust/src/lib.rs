@@ -37,6 +37,7 @@ pub mod datasets;
 pub mod nn;
 pub mod rl;
 pub mod runtime;
+pub mod scenarios;
 pub mod serve;
 pub mod workloads;
 pub mod testutil;

@@ -7,6 +7,7 @@
 //!   fig <id>   regenerate a paper figure (2, 3, 4a, 4b, 6, 7–10, ...)
 //!   rl         DQN training on a classic-control env
 //!   artifacts  inspect the AOT artifact manifest
+//!   scenarios  run the declarative scenario corpus against its goldens
 //!   help       this text
 
 use std::path::PathBuf;
@@ -37,6 +38,9 @@ USAGE:
              [--method M] [--set key=value ...]
   optex artifacts [--artifacts DIR]
   optex validate  [--artifacts DIR]   # health check: artifacts vs native
+  optex scenarios [--dir DIR] [--filter SUBSTR] [--threads K] [--bless]
+                  # golden-trajectory corpus (scenarios/ by default);
+                  # --bless rewrites stale/missing goldens
 
 Methods: optex | vanilla | target | dataparallel.
 Config keys: see configs/*.toml and `RunConfig` docs.
@@ -65,6 +69,7 @@ fn real_main() -> anyhow::Result<()> {
         "rl" => cmd_rl(&args),
         "artifacts" => cmd_artifacts(&args),
         "validate" => cmd_validate(&args),
+        "scenarios" => cmd_scenarios(&args),
         "help" => {
             print!("{HELP}");
             Ok(())
@@ -251,6 +256,41 @@ fn cmd_validate(args: &Args) -> anyhow::Result<()> {
     println!("validating artifacts at {}", dir.display());
     figures::fig_ext::run_native_vs_hlo(&opts)?;
     println!("validate: OK");
+    Ok(())
+}
+
+/// Golden-trajectory corpus runner (ISSUE 6): execute every scenario
+/// file under `--dir`, check its declared invariants, and byte-compare
+/// the trajectory render against the committed `.golden`. `--bless`
+/// rewrites stale or missing goldens (sqllogictest-style).
+fn cmd_scenarios(args: &Args) -> anyhow::Result<()> {
+    use optex::scenarios::{run_corpus, BlessMode, Opts, Status};
+    args.check_known_flags(&["help", "bless"])?;
+    let mut opts = Opts::new(PathBuf::from(args.opt("dir").unwrap_or("scenarios")));
+    opts.filter = args.opt("filter").map(str::to_string);
+    if let Some(k) = args.opt_usize("threads")? {
+        opts.threads = k;
+    }
+    if args.flag("bless") {
+        opts.bless = BlessMode::All;
+    }
+    let report = run_corpus(&opts)?;
+    for r in &report.results {
+        if r.detail.is_empty() {
+            println!("{:7} {}", r.status.name(), r.name);
+        } else {
+            println!("{:7} {}  {}", r.status.name(), r.name, r.detail);
+        }
+    }
+    println!("{}", report.summary());
+    if report.failed() {
+        anyhow::bail!(
+            "scenario corpus failed ({} diff, {} missing, {} error)",
+            report.count(Status::Diff),
+            report.count(Status::Missing),
+            report.count(Status::Error)
+        );
+    }
     Ok(())
 }
 

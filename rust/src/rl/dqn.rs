@@ -183,6 +183,31 @@ impl DqnSource {
         DqnSource::native(mlp, replay, 64, 0.95, 10, seed)
     }
 
+    /// Like [`DqnSource::replay_fixture`], but the replay buffer is
+    /// filled by rolling a random policy through a real environment
+    /// (acrobot / mountaincar / cartpole) instead of gaussian noise —
+    /// real transition structure, still episode-free and rebuildable
+    /// from `(env_name, seed)` alone, so `workload = "dqn_<env>"`
+    /// sessions stay wire-submittable and checkpoint-adoptable.
+    pub fn replay_fixture_env(env_name: &str, seed: u64) -> Result<DqnSource> {
+        let mut envir: Box<dyn Env> =
+            env::make(env_name).with_context(|| format!("unknown env {env_name:?}"))?;
+        let obs_dim = envir.obs_dim();
+        let n_act = envir.n_actions();
+        let replay = Rc::new(RefCell::new(ReplayBuffer::new(1024, obs_dim)));
+        let mut rng = Rng::new(seed ^ 0xE5F1);
+        let mut obs = envir.reset(&mut rng);
+        for _ in 0..512 {
+            let action = rng.below(n_act);
+            let tr = envir.step(action);
+            replay.borrow_mut().push(&obs, action, tr.reward, &tr.obs, tr.done);
+            obs = if tr.done { envir.reset(&mut rng) } else { tr.obs };
+        }
+        let hidden = if env_name == "acrobot" { 48 } else { 32 };
+        let mlp = Mlp::new(obs_dim, hidden, n_act);
+        Ok(DqnSource::native(mlp, replay, 64, 0.95, 10, seed))
+    }
+
     /// TD gradient at `params` on a freshly sampled minibatch (native).
     fn native_td_grad(&mut self, params: &[f32]) -> (f64, Vec<f32>) {
         self.replay
@@ -585,6 +610,24 @@ mod tests {
         let (eb, gb) = b.eval_batch_owned(&[&p]).unwrap();
         assert_eq!(ga, gb);
         assert_eq!(ea[0].loss.to_bits(), eb[0].loss.to_bits());
+    }
+
+    #[test]
+    fn replay_fixture_env_is_deterministic_and_env_shaped() {
+        for (env_name, obs_dim, n_act) in [("acrobot", 6, 3), ("mountaincar", 2, 3)] {
+            let mut a = DqnSource::replay_fixture_env(env_name, 7).unwrap();
+            let mut b = DqnSource::replay_fixture_env(env_name, 7).unwrap();
+            assert_eq!(a.mlp.in_dim, obs_dim, "{env_name}");
+            assert_eq!(a.mlp.out_dim, n_act, "{env_name}");
+            let p = vec![0.01f32; a.dim()];
+            a.on_iteration(1, &p);
+            b.on_iteration(1, &p);
+            let (ea, ga) = a.eval_batch_owned(&[&p]).unwrap();
+            let (eb, gb) = b.eval_batch_owned(&[&p]).unwrap();
+            assert_eq!(ga, gb, "{env_name}: rebuilt oracle diverged");
+            assert_eq!(ea[0].loss.to_bits(), eb[0].loss.to_bits());
+        }
+        assert!(DqnSource::replay_fixture_env("pong", 0).is_err());
     }
 
     #[test]

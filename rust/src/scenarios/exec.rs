@@ -1,0 +1,180 @@
+//! Scenario execution: spec → primary-session [`Outcome`].
+//!
+//! Every mode runs through the serve stack (`Session` / `Scheduler`) so
+//! solo references and serve cases share one numerics path; `solo` is
+//! just a one-session schedule. The outcome carries only the
+//! deterministic partition of the trajectory — wall-clock fields never
+//! leave the metric rows' timing columns and never reach a golden.
+
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::config::RunConfig;
+use crate::coordinator::metrics::IterRecord;
+use crate::runtime::NativePool;
+use crate::scenarios::spec::{Mode, ScenarioSpec};
+use crate::serve::{Budget, Scheduler, Session};
+
+/// Cap on scheduler quanta while waiting for the primary to reach a
+/// trigger iteration — loudly bounds a mis-specified scenario instead of
+/// hanging the corpus.
+const MAX_TRIGGER_QUANTA: usize = 10_000;
+
+/// The primary session's deterministic outcome.
+#[derive(Clone, Debug)]
+pub struct Outcome {
+    pub state: &'static str,
+    pub stop_reason: Option<&'static str>,
+    pub error: Option<String>,
+    pub iters: u64,
+    /// All metric rows, suspend cycles included (kill→adopt loses the
+    /// pre-kill rows — they die with the killed process).
+    pub rows: Vec<IterRecord>,
+    /// Final iterate (None never survives to a finished session).
+    pub theta: Option<Vec<f32>>,
+    /// Arbiter grant of the last quantum (None without an arbiter).
+    pub granted: Option<usize>,
+}
+
+/// Materialize the scenario's `[config]` on top of defaults. Scenarios
+/// that do not pin `optex.threads` run at the harness-wide `threads`
+/// width — goldens are width-independent (thread invariance), so one
+/// committed golden serves the whole CI threads matrix.
+pub fn build_config(spec: &ScenarioSpec, threads: usize) -> Result<RunConfig> {
+    let mut cfg = RunConfig::default();
+    for (k, v) in &spec.config {
+        cfg.apply_value(k, v).map_err(|e| anyhow!("{e}"))?;
+    }
+    if !spec.pins_threads() {
+        cfg.optex.threads = threads;
+    }
+    cfg.validate().map_err(|e| anyhow!("{e}"))?;
+    Ok(cfg)
+}
+
+/// Run the case at pool width `threads`; `scratch` hosts checkpoint /
+/// manifest files and must be private to the call.
+pub fn execute(spec: &ScenarioSpec, threads: usize, scratch: &Path) -> Result<Outcome> {
+    let cfg = build_config(spec, threads)?;
+    match spec.mode {
+        Mode::Solo => run_solo(&cfg, &spec.budget, scratch),
+        _ => run_serve(spec, &cfg, scratch),
+    }
+}
+
+/// One session stepped to completion — the solo reference semantics.
+pub fn run_solo(cfg: &RunConfig, budget: &Budget, scratch: &Path) -> Result<Outcome> {
+    let mut session = Session::build(1, cfg.clone(), budget.clone(), scratch)?;
+    let cap = budget.max_iters.unwrap_or(cfg.steps as u64) + 2;
+    for _ in 0..cap {
+        if !session.is_runnable() {
+            break;
+        }
+        session.step();
+    }
+    if session.is_runnable() {
+        bail!("solo session still runnable after {cap} steps");
+    }
+    Ok(outcome_of(&session))
+}
+
+fn outcome_of(s: &Session) -> Outcome {
+    Outcome {
+        state: s.state().name(),
+        stop_reason: s.stop_reason(),
+        error: s.error().map(String::from),
+        iters: s.iters_done(),
+        rows: s.rows(),
+        theta: s.theta(),
+        granted: s.granted_threads(),
+    }
+}
+
+fn run_serve(spec: &ScenarioSpec, cfg: &RunConfig, scratch: &Path) -> Result<Outcome> {
+    let so = &spec.serve;
+    let mut sched = Scheduler::new(so.peers + 1, so.policy, scratch.to_path_buf());
+    if let Some(k) = so.physical_threads {
+        sched.set_physical_pool(NativePool::new(k));
+    }
+    let primary = sched.submit(cfg.clone(), spec.budget.clone())?;
+    // Peers: same workload, offset seeds — distinct trajectories sharing
+    // the scheduler, so interleaving has real cross-talk to NOT have.
+    for i in 0..so.peers {
+        let mut peer = cfg.clone();
+        peer.seed = cfg.seed.wrapping_add(101 + i as u64);
+        sched.submit(peer, Budget::default())?;
+    }
+    match spec.mode {
+        Mode::Solo => unreachable!("solo handled by run_solo"),
+        Mode::Serve => {
+            if let Some(at) = so.cancel_at {
+                tick_until_iters(&mut sched, primary, at)?;
+                sched.cancel(primary)?;
+            }
+            sched.run_to_completion();
+        }
+        Mode::SuspendResume => {
+            if so.pause_at > 0 {
+                tick_until_iters(&mut sched, primary, so.pause_at)?;
+            }
+            sched.pause(primary)?;
+            for _ in 0..so.ticks_while_paused {
+                if sched.tick().is_none() {
+                    break;
+                }
+            }
+            sched.resume(primary)?;
+            sched.run_to_completion();
+        }
+        Mode::KillAdopt => {
+            if so.pause_at > 0 {
+                tick_until_iters(&mut sched, primary, so.pause_at)?;
+            }
+            sched.pause(primary)?;
+            // "Kill": the scheduler dies with all in-memory session
+            // state; only the scratch dir (durable manifest + the
+            // primary's suspend checkpoint) survives. Peers that were
+            // mid-run re-register as iters=0 and re-run from their seeds.
+            drop(sched);
+            let mut adopter = Scheduler::new(so.peers + 1, so.policy, scratch.to_path_buf());
+            if let Some(k) = so.physical_threads {
+                adopter.set_physical_pool(NativePool::new(k));
+            }
+            adopter.adopt_manifest()?;
+            let ids: Vec<u64> = adopter.sessions().map(Session::id).collect();
+            for id in ids {
+                adopter.resume(id)?;
+            }
+            adopter.run_to_completion();
+            let s = adopter
+                .session(primary)
+                .ok_or_else(|| anyhow!("primary session {primary} was not adopted"))?;
+            return Ok(outcome_of(s));
+        }
+    }
+    let s = sched.session(primary).expect("primary stays registered");
+    Ok(outcome_of(s))
+}
+
+/// Tick the scheduler until the primary has run `target` iterations.
+fn tick_until_iters(sched: &mut Scheduler, id: u64, target: u64) -> Result<()> {
+    for _ in 0..MAX_TRIGGER_QUANTA {
+        let s = sched
+            .session(id)
+            .ok_or_else(|| anyhow!("session {id} vanished from the scheduler"))?;
+        if s.iters_done() >= target {
+            return Ok(());
+        }
+        if !s.is_active() {
+            bail!(
+                "session {id} finished at {} iterations before reaching {target}",
+                s.iters_done()
+            );
+        }
+        if sched.tick().is_none() {
+            bail!("scheduler went idle before session {id} reached {target} iterations");
+        }
+    }
+    bail!("gave up after {MAX_TRIGGER_QUANTA} quanta waiting for session {id} to reach {target}")
+}

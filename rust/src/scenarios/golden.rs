@@ -1,0 +1,160 @@
+//! Golden-trajectory rendering + comparison.
+//!
+//! A golden file is the byte-exact text render of an [`Outcome`]'s
+//! deterministic partition: terminal state, iteration count, every
+//! metric row's bit-patterns (`f64::to_bits` hex — copy-paste-diffable
+//! and lossless), and an FNV-1a digest of the final iterate. Wall-clock
+//! columns (`wall_s`, `parallel_s`, `eval_s`) are never rendered: they
+//! are the one nondeterministic part of an `IterRecord`.
+
+use crate::coordinator::metrics::IterRecord;
+use crate::scenarios::exec::Outcome;
+
+/// FNV-1a 64-bit (the dependency-free digest; goldens only need to
+/// detect drift, not resist an adversary).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// Digest of the iterate's exact f32 bit-patterns (little-endian).
+pub fn theta_digest(theta: &[f32]) -> u64 {
+    let mut bytes = Vec::with_capacity(theta.len() * 4);
+    for x in theta {
+        bytes.extend_from_slice(&x.to_le_bytes());
+    }
+    fnv1a64(&bytes)
+}
+
+/// One metric row, deterministic fields only. The trailing `loss~`
+/// comment is for humans reading a diff; the hex fields are the
+/// comparison.
+pub fn row_line(r: &IterRecord) -> String {
+    let aux = match r.aux {
+        Some(a) => format!("{:016x}", a.to_bits()),
+        None => "-".into(),
+    };
+    format!(
+        "row {} evals={} loss={:016x} gn={:016x} best={:016x} var={:016x} aux={aux} # loss~{:.6e}",
+        r.iter,
+        r.grad_evals,
+        r.loss.to_bits(),
+        r.grad_norm.to_bits(),
+        r.best_loss.to_bits(),
+        r.est_var.to_bits(),
+        r.loss
+    )
+}
+
+/// Render an outcome as golden-file text.
+pub fn render(name: &str, out: &Outcome) -> String {
+    let mut s = String::new();
+    s.push_str("# optex golden trajectory v1\n");
+    s.push_str(&format!("# scenario: {name}\n"));
+    s.push_str(&format!("# regenerate: optex scenarios --bless --filter {name}\n"));
+    s.push_str(&format!("state = {}\n", out.state));
+    s.push_str(&format!("stop_reason = {}\n", out.stop_reason.unwrap_or("-")));
+    let err = out.error.as_deref().unwrap_or("-").replace('\n', "\\n");
+    s.push_str(&format!("error = {err}\n"));
+    s.push_str(&format!("iters = {}\n", out.iters));
+    for r in &out.rows {
+        s.push_str(&row_line(r));
+        s.push('\n');
+    }
+    match &out.theta {
+        Some(t) => {
+            s.push_str(&format!("theta_dim = {}\n", t.len()));
+            s.push_str(&format!("theta_fnv1a64 = {:016x}\n", theta_digest(t)));
+        }
+        None => s.push_str("theta_dim = -\n"),
+    }
+    s
+}
+
+/// First line where two renders disagree (diff-style diagnostics for
+/// the report; the full actual text goes to the `.actual` file).
+pub fn first_diff(golden: &str, actual: &str) -> String {
+    for (i, (g, a)) in golden.lines().zip(actual.lines()).enumerate() {
+        if g != a {
+            return format!("line {}: golden {g:?} vs actual {a:?}", i + 1);
+        }
+    }
+    format!(
+        "line count: golden has {}, actual has {}",
+        golden.lines().count(),
+        actual.lines().count()
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row(iter: usize, loss: f64) -> IterRecord {
+        IterRecord {
+            iter,
+            grad_evals: 4 * iter as u64,
+            loss,
+            grad_norm: loss * 0.5,
+            best_loss: loss,
+            wall_s: 123.456, // wall-clock: must never reach the render
+            parallel_s: 9.0,
+            eval_s: 7.0,
+            est_var: 0.25,
+            aux: None,
+        }
+    }
+
+    fn outcome() -> Outcome {
+        Outcome {
+            state: "done",
+            stop_reason: Some("max_iters"),
+            error: None,
+            iters: 2,
+            rows: vec![row(1, 3.5), row(2, 1.25)],
+            theta: Some(vec![1.0, -0.5, 0.25]),
+            granted: None,
+        }
+    }
+
+    #[test]
+    fn render_is_stable_and_wall_clock_free() {
+        let a = render("case", &outcome());
+        let mut other = outcome();
+        for r in &mut other.rows {
+            r.wall_s *= 7.0;
+            r.parallel_s += 1.0;
+            r.eval_s = 0.0;
+        }
+        assert_eq!(a, render("case", &other), "wall-clock leaked into the render");
+        assert!(a.contains("state = done"));
+        assert!(a.contains("stop_reason = max_iters"));
+        assert!(a.contains("theta_dim = 3"));
+        // bit-level change in a deterministic field must change the text
+        let mut bumped = outcome();
+        bumped.rows[1].loss = f64::from_bits(bumped.rows[1].loss.to_bits() + 1);
+        assert_ne!(a, render("case", &bumped));
+    }
+
+    #[test]
+    fn fnv1a64_matches_reference_vectors() {
+        // canonical FNV-1a test vectors
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x85944171f73967e8);
+        // digest order sensitivity
+        assert_ne!(theta_digest(&[1.0, 2.0]), theta_digest(&[2.0, 1.0]));
+    }
+
+    #[test]
+    fn first_diff_points_at_the_divergence() {
+        let d = first_diff("a\nb\nc", "a\nX\nc");
+        assert!(d.contains("line 2"), "{d}");
+        let d = first_diff("a\nb", "a\nb\nc");
+        assert!(d.contains("line count"), "{d}");
+    }
+}

@@ -1,0 +1,502 @@
+//! Declarative scenario corpus + golden-trajectory harness (ISSUE 6).
+//!
+//! The repo's determinism invariants — thread invariance, serve-vs-solo
+//! bit-identity, suspend/resume and kill→adopt transparency — live here
+//! as data instead of hand-rolled test loops: a tree of TOML files under
+//! `scenarios/` at the repo root, each describing one case
+//! (workload × optimizer × method × pool width × execution mode), each
+//! byte-compared against a committed `.golden` trajectory file
+//! (the sqllogictest idiom).
+//!
+//! Flow per case:
+//!   1. parse the spec ([`spec`]), build its `RunConfig`;
+//!   2. execute the declared mode through the serve stack ([`exec`]);
+//!   3. check the `[expect]` invariants (always — bless included);
+//!   4. for serve modes, re-run the primary's config solo and require
+//!      bitwise row/θ agreement (`compare_solo`);
+//!   5. re-execute at every `threads_matrix` width and require an
+//!      identical render — the declarative thread-invariance matrix;
+//!   6. byte-compare the render against `<case>.golden`, or (re)write it
+//!      under `--bless`. A failing verify writes `<case>.actual` for
+//!      CI artifact upload / local diffing.
+//!
+//! Golden hygiene: verify never writes goldens; bless is deterministic
+//! (a second bless run blesses nothing); goldens hold only the
+//! deterministic trajectory partition, so one set serves every pool
+//! width and both CI thread legs.
+
+pub mod exec;
+pub mod golden;
+pub mod spec;
+
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use anyhow::{ensure, Context, Result};
+
+pub use exec::Outcome;
+pub use spec::{Mode, ScenarioSpec};
+
+/// Golden-writing policy for a corpus run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BlessMode {
+    /// Verify only: any absent or divergent golden is a failure.
+    Off,
+    /// Write goldens that do not exist yet; divergence still fails (the
+    /// corpus test's bootstrap mode — new scenarios self-record, stale
+    /// ones still scream).
+    Missing,
+    /// Rewrite every absent or divergent golden (`--bless`).
+    All,
+}
+
+/// Corpus-run options.
+#[derive(Clone, Debug)]
+pub struct Opts {
+    /// Root of the scenario tree.
+    pub dir: PathBuf,
+    /// Substring filter on corpus-relative case names.
+    pub filter: Option<String>,
+    pub bless: BlessMode,
+    /// Pool width injected into scenarios that don't pin `optex.threads`.
+    pub threads: usize,
+}
+
+impl Opts {
+    pub fn new(dir: PathBuf) -> Opts {
+        Opts { dir, filter: None, bless: BlessMode::Off, threads: 1 }
+    }
+}
+
+/// Per-case verdict.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Status {
+    /// Render matched the committed golden byte-for-byte.
+    Pass,
+    /// Golden (re)written by a bless mode.
+    Blessed,
+    /// Render diverged from the committed golden.
+    Diff,
+    /// No committed golden and blessing was off.
+    Missing,
+    /// Spec, execution, `[expect]`, solo-agreement, or matrix failure.
+    Error,
+}
+
+impl Status {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Status::Pass => "pass",
+            Status::Blessed => "blessed",
+            Status::Diff => "DIFF",
+            Status::Missing => "MISSING",
+            Status::Error => "ERROR",
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct CaseResult {
+    /// Corpus-relative name (`solo/ackley_sgd`).
+    pub name: String,
+    pub status: Status,
+    pub detail: String,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct Report {
+    pub results: Vec<CaseResult>,
+}
+
+impl Report {
+    pub fn count(&self, status: Status) -> usize {
+        self.results.iter().filter(|r| r.status == status).count()
+    }
+
+    /// Any non-pass, non-bless outcome.
+    pub fn failed(&self) -> bool {
+        self.results
+            .iter()
+            .any(|r| matches!(r.status, Status::Diff | Status::Missing | Status::Error))
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "{} scenarios: {} pass, {} blessed, {} diff, {} missing, {} error",
+            self.results.len(),
+            self.count(Status::Pass),
+            self.count(Status::Blessed),
+            self.count(Status::Diff),
+            self.count(Status::Missing),
+            self.count(Status::Error),
+        )
+    }
+}
+
+/// Run every scenario under `opts.dir` (recursive, sorted, filtered).
+pub fn run_corpus(opts: &Opts) -> Result<Report> {
+    let mut paths = discover(&opts.dir)?;
+    if let Some(f) = &opts.filter {
+        paths.retain(|p| case_name(&opts.dir, p).contains(f.as_str()));
+    }
+    let mut results = Vec::with_capacity(paths.len());
+    for path in &paths {
+        results.push(run_case(opts, path));
+    }
+    Ok(Report { results })
+}
+
+/// All `*.toml` files under `dir`, recursively, in sorted order.
+pub fn discover(dir: &Path) -> Result<Vec<PathBuf>> {
+    let mut out = Vec::new();
+    walk(dir, &mut out).with_context(|| format!("scanning {}", dir.display()))?;
+    out.sort();
+    Ok(out)
+}
+
+fn walk(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    for entry in fs::read_dir(dir)? {
+        let path = entry?.path();
+        if path.is_dir() {
+            walk(&path, out)?;
+        } else if path.extension().map(|e| e == "toml").unwrap_or(false) {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Corpus-relative case name, extension stripped (`serve/kill_adopt`).
+fn case_name(root: &Path, path: &Path) -> String {
+    let rel = path.strip_prefix(root).unwrap_or(path);
+    rel.with_extension("").to_string_lossy().into_owned()
+}
+
+static SCRATCH_SEQ: AtomicUsize = AtomicUsize::new(0);
+
+fn scratch_dir() -> PathBuf {
+    let n = SCRATCH_SEQ.fetch_add(1, Ordering::Relaxed);
+    std::env::temp_dir().join(format!("optex_scn_{}_{n}", std::process::id()))
+}
+
+fn run_case(opts: &Opts, path: &Path) -> CaseResult {
+    let name = case_name(&opts.dir, path);
+    match try_case(opts, path, &name) {
+        Ok((status, detail)) => CaseResult { name, status, detail },
+        Err(e) => CaseResult { name, status: Status::Error, detail: format!("{e:#}") },
+    }
+}
+
+fn try_case(opts: &Opts, path: &Path, name: &str) -> Result<(Status, String)> {
+    let spec = ScenarioSpec::load(path)?;
+    let scratch = scratch_dir();
+    fs::create_dir_all(&scratch)?;
+    let verdict = run_checks(opts, &spec, path, name, &scratch);
+    let _ = fs::remove_dir_all(&scratch);
+    verdict
+}
+
+/// Execute + verify one loaded spec inside its private scratch dir
+/// (separate from [`try_case`] so scratch cleanup runs on every exit).
+fn run_checks(
+    opts: &Opts,
+    spec: &ScenarioSpec,
+    path: &Path,
+    name: &str,
+    scratch: &Path,
+) -> Result<(Status, String)> {
+    let out = exec::execute(spec, opts.threads, scratch)?;
+    check_expectations(spec, &out)?;
+    if spec.compare_solo {
+        check_solo_agreement(spec, &out, opts.threads, scratch)?;
+    }
+    check_threads_matrix(spec, &out, opts.threads, scratch)?;
+    compare_golden(opts, path, name, &out)
+}
+
+/// `[expect]` invariants — enforced on every run, blessing included, so
+/// a bless can never record a trajectory that violates its own contract.
+fn check_expectations(spec: &ScenarioSpec, out: &Outcome) -> Result<()> {
+    let e = &spec.expect;
+    if let Some(want) = &e.state {
+        ensure!(out.state == want, "expected state {want:?}, got {:?}", out.state);
+    }
+    if let Some(want) = &e.stop_reason {
+        let got = out.stop_reason.unwrap_or("-");
+        ensure!(got == want, "expected stop_reason {want:?}, got {got:?}");
+    }
+    if let Some(want) = &e.error_contains {
+        let got = out.error.as_deref().unwrap_or("");
+        ensure!(
+            got.contains(want.as_str()),
+            "expected error containing {want:?}, got {got:?}"
+        );
+    }
+    if let Some(want) = e.iters {
+        ensure!(out.iters == want, "expected {want} iterations, got {}", out.iters);
+    }
+    if let Some(want) = e.granted {
+        ensure!(
+            out.granted == Some(want),
+            "expected granted width {want}, got {:?}",
+            out.granted
+        );
+    }
+    Ok(())
+}
+
+fn theta_bits(theta: &Option<Vec<f32>>) -> Option<Vec<u32>> {
+    theta.as_ref().map(|t| t.iter().map(|x| x.to_bits()).collect())
+}
+
+/// Serve-vs-solo bit-identity: the primary's rows must be a bitwise
+/// suffix of the solo run's rows (kill→adopt drops pre-kill rows with
+/// the killed process; every other mode keeps them all, making the
+/// suffix the entire series), and the final iterate must match exactly.
+fn check_solo_agreement(
+    spec: &ScenarioSpec,
+    out: &Outcome,
+    threads: usize,
+    scratch: &Path,
+) -> Result<()> {
+    let cfg = exec::build_config(spec, threads)?;
+    let solo_scratch = scratch.join("solo");
+    fs::create_dir_all(&solo_scratch)?;
+    let solo = exec::run_solo(&cfg, &spec.budget, &solo_scratch)?;
+    ensure!(
+        theta_bits(&out.theta) == theta_bits(&solo.theta),
+        "final θ diverged from the solo run"
+    );
+    ensure!(
+        out.rows.len() <= solo.rows.len(),
+        "case has {} rows, solo only {}",
+        out.rows.len(),
+        solo.rows.len()
+    );
+    let offset = solo.rows.len() - out.rows.len();
+    for (case_row, solo_row) in out.rows.iter().zip(&solo.rows[offset..]) {
+        ensure!(
+            golden::row_line(case_row) == golden::row_line(solo_row),
+            "iteration {} diverged from solo:\n  solo: {}\n  case: {}",
+            case_row.iter,
+            golden::row_line(solo_row),
+            golden::row_line(case_row)
+        );
+    }
+    Ok(())
+}
+
+/// The declarative thread-invariance matrix: the whole case re-executed
+/// at each extra width must render identically.
+fn check_threads_matrix(
+    spec: &ScenarioSpec,
+    base: &Outcome,
+    threads: usize,
+    scratch: &Path,
+) -> Result<()> {
+    if spec.threads_matrix.is_empty() {
+        return Ok(());
+    }
+    let base_render = golden::render(&spec.name, base);
+    for &w in &spec.threads_matrix {
+        if w == threads {
+            continue;
+        }
+        let dir = scratch.join(format!("w{w}"));
+        fs::create_dir_all(&dir)?;
+        let got = exec::execute(spec, w, &dir)?;
+        let got_render = golden::render(&spec.name, &got);
+        ensure!(
+            got_render == base_render,
+            "trajectory diverged at optex.threads={w}: {}",
+            golden::first_diff(&base_render, &got_render)
+        );
+    }
+    Ok(())
+}
+
+fn compare_golden(
+    opts: &Opts,
+    path: &Path,
+    name: &str,
+    out: &Outcome,
+) -> Result<(Status, String)> {
+    let golden_path = path.with_extension("golden");
+    let actual_path = path.with_extension("actual");
+    let actual = golden::render(name, out);
+    let existing = match fs::read_to_string(&golden_path) {
+        Ok(s) => Some(s),
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => None,
+        Err(e) => {
+            return Err(e).with_context(|| format!("reading {}", golden_path.display()))
+        }
+    };
+    match existing {
+        Some(g) if g == actual => {
+            let _ = fs::remove_file(&actual_path);
+            Ok((Status::Pass, String::new()))
+        }
+        Some(g) => {
+            if opts.bless == BlessMode::All {
+                fs::write(&golden_path, &actual)?;
+                return Ok((Status::Blessed, "golden rewritten".into()));
+            }
+            fs::write(&actual_path, &actual)?;
+            Ok((
+                Status::Diff,
+                format!(
+                    "{}; actual written to {}",
+                    golden::first_diff(&g, &actual),
+                    actual_path.display()
+                ),
+            ))
+        }
+        None => {
+            if opts.bless != BlessMode::Off {
+                fs::write(&golden_path, &actual)?;
+                return Ok((Status::Blessed, "golden created".into()));
+            }
+            fs::write(&actual_path, &actual)?;
+            Ok((
+                Status::Missing,
+                format!(
+                    "no golden at {}; run `optex scenarios --bless`",
+                    golden_path.display()
+                ),
+            ))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Tiny corpus the harness mechanics can be exercised on end to end
+    /// without touching the repo's committed scenario tree.
+    fn tiny_corpus() -> PathBuf {
+        let dir = scratch_dir().with_extension("corpus");
+        fs::create_dir_all(dir.join("solo")).unwrap();
+        fs::write(
+            dir.join("solo/sphere_fast.toml"),
+            r#"
+            tags = ["smoke"]
+            [config]
+            workload = "sphere"
+            synth_dim = 32
+            steps = 2
+            seed = 5
+            [config.optex]
+            parallelism = 2
+            t0 = 4
+            [expect]
+            state = "done"
+            stop_reason = "max_iters"
+            iters = 2
+            "#,
+        )
+        .unwrap();
+        dir
+    }
+
+    #[test]
+    fn verify_bless_verify_lifecycle() {
+        let dir = tiny_corpus();
+        let mut opts = Opts::new(dir.clone());
+
+        // no golden yet: verify reports Missing and writes the .actual
+        let r = run_corpus(&opts).unwrap();
+        assert_eq!(r.results.len(), 1);
+        assert_eq!(r.results[0].status, Status::Missing);
+        assert!(r.failed());
+        assert!(dir.join("solo/sphere_fast.actual").exists());
+
+        // bless records it; re-verify passes and clears the .actual
+        opts.bless = BlessMode::All;
+        let r = run_corpus(&opts).unwrap();
+        assert_eq!(r.results[0].status, Status::Blessed);
+        opts.bless = BlessMode::Off;
+        let r = run_corpus(&opts).unwrap();
+        assert_eq!(r.results[0].status, Status::Pass, "{}", r.results[0].detail);
+        assert!(!r.failed());
+        assert!(!dir.join("solo/sphere_fast.actual").exists());
+
+        // second bless is a no-op (determinism acceptance)
+        opts.bless = BlessMode::All;
+        let before = fs::read_to_string(dir.join("solo/sphere_fast.golden")).unwrap();
+        let r = run_corpus(&opts).unwrap();
+        assert_eq!(r.results[0].status, Status::Pass, "second bless must not rewrite");
+        let after = fs::read_to_string(dir.join("solo/sphere_fast.golden")).unwrap();
+        assert_eq!(before, after);
+
+        // a tampered golden is a Diff under verify, healed by bless
+        fs::write(dir.join("solo/sphere_fast.golden"), before.replace("iters = 2", "iters = 3"))
+            .unwrap();
+        opts.bless = BlessMode::Off;
+        let r = run_corpus(&opts).unwrap();
+        assert_eq!(r.results[0].status, Status::Diff);
+        assert!(r.results[0].detail.contains("line"), "{}", r.results[0].detail);
+        opts.bless = BlessMode::All;
+        let r = run_corpus(&opts).unwrap();
+        assert_eq!(r.results[0].status, Status::Blessed);
+
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn bless_missing_records_new_but_rejects_drift() {
+        let dir = tiny_corpus();
+        let mut opts = Opts::new(dir.clone());
+        opts.bless = BlessMode::Missing;
+        let r = run_corpus(&opts).unwrap();
+        assert_eq!(r.results[0].status, Status::Blessed);
+        // drift is NOT silently re-blessed in Missing mode
+        let golden = dir.join("solo/sphere_fast.golden");
+        let text = fs::read_to_string(&golden).unwrap();
+        fs::write(&golden, text.replace("iters = 2", "iters = 9")).unwrap();
+        let r = run_corpus(&opts).unwrap();
+        assert_eq!(r.results[0].status, Status::Diff);
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn expectation_failures_are_errors_even_when_blessing() {
+        let dir = scratch_dir().with_extension("corpus_expect");
+        fs::create_dir_all(&dir).unwrap();
+        fs::write(
+            dir.join("bad_expect.toml"),
+            "[config]\nworkload = \"sphere\"\nsynth_dim = 16\nsteps = 2\n\
+             [config.optex]\nparallelism = 2\nt0 = 4\n[expect]\niters = 99",
+        )
+        .unwrap();
+        let mut opts = Opts::new(dir.clone());
+        opts.bless = BlessMode::All;
+        let r = run_corpus(&opts).unwrap();
+        assert_eq!(r.results[0].status, Status::Error);
+        assert!(r.results[0].detail.contains("expected 99"), "{}", r.results[0].detail);
+        assert!(!dir.join("bad_expect.golden").exists(), "no golden for a broken case");
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn filter_and_discovery_are_name_based_and_sorted() {
+        let dir = scratch_dir().with_extension("corpus_filter");
+        fs::create_dir_all(dir.join("b")).unwrap();
+        fs::create_dir_all(dir.join("a")).unwrap();
+        let doc = "[config]\nworkload = \"sphere\"\nsynth_dim = 16\nsteps = 1\n\
+                   [config.optex]\nparallelism = 2\nt0 = 4";
+        fs::write(dir.join("b/two.toml"), doc).unwrap();
+        fs::write(dir.join("a/one.toml"), doc).unwrap();
+        fs::write(dir.join("a/notes.md"), "not a scenario").unwrap();
+        let found = discover(&dir).unwrap();
+        let names: Vec<String> = found.iter().map(|p| case_name(&dir, p)).collect();
+        assert_eq!(names, vec!["a/one", "b/two"]);
+        let mut opts = Opts::new(dir.clone());
+        opts.filter = Some("b/".into());
+        let r = run_corpus(&opts).unwrap();
+        assert_eq!(r.results.len(), 1);
+        assert_eq!(r.results[0].name, "b/two");
+        fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -1,0 +1,332 @@
+//! Scenario file schema + loader.
+//!
+//! A scenario is one TOML file declaring a case for the golden-trajectory
+//! harness: the run config under `[config]` (same keys as `RunConfig`,
+//! applied on top of defaults), an execution `mode`, an optional
+//! `[budget]`, serve-shape knobs under `[serve]`, and declarative
+//! invariant checks under `[expect]`. See `scenarios/README.md` at the
+//! repo root for the authoring guide.
+
+use anyhow::{anyhow, bail, Result};
+use std::path::Path;
+
+use crate::config::toml::{self, Value};
+use crate::serve::{Budget, Policy};
+
+/// How the harness drives the case.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Mode {
+    /// One `Session` stepped to completion — the coordinator semantics.
+    Solo,
+    /// Primary + `serve.peers` concurrent sessions under one scheduler
+    /// (optionally with a mid-run `serve.cancel_at` of the primary).
+    Serve,
+    /// Serve, with a checkpoint-backed pause/resume of the primary at
+    /// `serve.pause_at` iterations (0 = before its first iteration).
+    SuspendResume,
+    /// Serve, with the scheduler dropped after suspending the primary
+    /// and a fresh scheduler adopting the ckpt_dir's manifest.
+    KillAdopt,
+}
+
+impl Mode {
+    pub fn parse(s: &str) -> Option<Mode> {
+        match s {
+            "solo" => Some(Mode::Solo),
+            "serve" => Some(Mode::Serve),
+            "suspend_resume" => Some(Mode::SuspendResume),
+            "kill_adopt" => Some(Mode::KillAdopt),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Mode::Solo => "solo",
+            Mode::Serve => "serve",
+            Mode::SuspendResume => "suspend_resume",
+            Mode::KillAdopt => "kill_adopt",
+        }
+    }
+}
+
+/// `[serve]` table: the shape of the serving run around the primary.
+#[derive(Clone, Debug)]
+pub struct ServeOpts {
+    /// Concurrent peer sessions submitted alongside the primary (same
+    /// config, seeds offset so their trajectories differ).
+    pub peers: usize,
+    pub policy: Policy,
+    /// Primary iterations before the pause in `suspend_resume` /
+    /// `kill_adopt` modes (0 = suspend before the first iteration).
+    pub pause_at: u64,
+    /// Scheduler quanta granted to the peers while the primary is down.
+    pub ticks_while_paused: usize,
+    /// Cancel the primary once it reaches this many iterations (`serve`
+    /// mode only).
+    pub cancel_at: Option<u64>,
+    /// Install a physical-pool arbiter of this width (the width-
+    /// starvation cases: sessions may request more than the machine).
+    pub physical_threads: Option<usize>,
+}
+
+impl Default for ServeOpts {
+    fn default() -> ServeOpts {
+        ServeOpts {
+            peers: 3,
+            policy: Policy::RoundRobin,
+            pause_at: 2,
+            ticks_while_paused: 8,
+            cancel_at: None,
+            physical_threads: None,
+        }
+    }
+}
+
+/// `[expect]` table: declarative invariant checks on the primary's
+/// outcome, verified on every run (bless included) before any golden
+/// comparison.
+#[derive(Clone, Debug, Default)]
+pub struct Expect {
+    pub state: Option<String>,
+    pub stop_reason: Option<String>,
+    pub error_contains: Option<String>,
+    pub iters: Option<u64>,
+    /// Arbiter-granted pool width of the primary's last quantum.
+    pub granted: Option<usize>,
+}
+
+/// One parsed scenario file.
+#[derive(Clone, Debug)]
+pub struct ScenarioSpec {
+    /// File stem (diagnostics; the corpus-relative name keys goldens).
+    pub name: String,
+    pub mode: Mode,
+    /// Free-form labels (`determinism`, `adversarial`, ...) — reporting
+    /// only, never semantics.
+    pub tags: Vec<String>,
+    /// Extra `optex.threads` widths the whole case is re-executed at;
+    /// every re-run must reproduce the primary's trajectory bit-for-bit
+    /// (the thread-invariance matrix, declaratively).
+    pub threads_matrix: Vec<usize>,
+    /// Re-run the primary's config solo and require the serve rows to be
+    /// a bitwise suffix of the solo rows with an identical final θ.
+    /// Defaults to true for every serve mode.
+    pub compare_solo: bool,
+    /// `[config]` keys (sorted; `config.` prefix stripped) applied onto
+    /// `RunConfig::default()`.
+    pub config: Vec<(String, Value)>,
+    pub budget: Budget,
+    pub serve: ServeOpts,
+    pub expect: Expect,
+}
+
+fn need_str<'v>(k: &str, v: &'v Value) -> Result<&'v str> {
+    v.as_str().ok_or_else(|| anyhow!("{k}: expected string"))
+}
+
+fn need_usize(k: &str, v: &Value) -> Result<usize> {
+    v.as_usize().ok_or_else(|| anyhow!("{k}: expected non-negative integer"))
+}
+
+fn need_f64(k: &str, v: &Value) -> Result<f64> {
+    v.as_f64().ok_or_else(|| anyhow!("{k}: expected number"))
+}
+
+fn need_bool(k: &str, v: &Value) -> Result<bool> {
+    v.as_bool().ok_or_else(|| anyhow!("{k}: expected bool"))
+}
+
+fn need_arr<'v>(k: &str, v: &'v Value) -> Result<&'v [Value]> {
+    v.as_arr().ok_or_else(|| anyhow!("{k}: expected array"))
+}
+
+impl ScenarioSpec {
+    pub fn load(path: &Path) -> Result<ScenarioSpec> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow!("reading {}: {e}", path.display()))?;
+        let name = path
+            .file_stem()
+            .map(|s| s.to_string_lossy().into_owned())
+            .unwrap_or_else(|| path.display().to_string());
+        ScenarioSpec::parse(&name, &text)
+            .map_err(|e| anyhow!("scenario {}: {e:#}", path.display()))
+    }
+
+    pub fn parse(name: &str, text: &str) -> Result<ScenarioSpec> {
+        let map = toml::parse(text).map_err(|e| anyhow!("{e}"))?;
+        let mut spec = ScenarioSpec {
+            name: name.to_string(),
+            mode: Mode::Solo,
+            tags: Vec::new(),
+            threads_matrix: Vec::new(),
+            compare_solo: false,
+            config: Vec::new(),
+            budget: Budget::default(),
+            serve: ServeOpts::default(),
+            expect: Expect::default(),
+        };
+        let mut compare_solo: Option<bool> = None;
+        for (k, v) in &map {
+            if let Some(cfg_key) = k.strip_prefix("config.") {
+                spec.config.push((cfg_key.to_string(), v.clone()));
+                continue;
+            }
+            match k.as_str() {
+                "mode" => {
+                    spec.mode = Mode::parse(need_str(k, v)?).ok_or_else(|| {
+                        anyhow!("{k}: unknown mode (solo|serve|suspend_resume|kill_adopt)")
+                    })?
+                }
+                "tags" => {
+                    for t in need_arr(k, v)? {
+                        spec.tags.push(need_str(k, t)?.to_string());
+                    }
+                }
+                "threads_matrix" => {
+                    for w in need_arr(k, v)? {
+                        spec.threads_matrix.push(need_usize(k, w)?);
+                    }
+                }
+                "compare_solo" => compare_solo = Some(need_bool(k, v)?),
+                "budget.max_iters" => {
+                    spec.budget.max_iters = Some(need_usize(k, v)? as u64)
+                }
+                "budget.target_loss" => spec.budget.target_loss = Some(need_f64(k, v)?),
+                "budget.deadline_s" => spec.budget.deadline_s = Some(need_f64(k, v)?),
+                "serve.peers" => spec.serve.peers = need_usize(k, v)?,
+                "serve.policy" => {
+                    spec.serve.policy = Policy::parse(need_str(k, v)?)
+                        .ok_or_else(|| anyhow!("{k}: unknown policy (rr|fair)"))?
+                }
+                "serve.pause_at" => spec.serve.pause_at = need_usize(k, v)? as u64,
+                "serve.ticks_while_paused" => {
+                    spec.serve.ticks_while_paused = need_usize(k, v)?
+                }
+                "serve.cancel_at" => {
+                    spec.serve.cancel_at = Some(need_usize(k, v)? as u64)
+                }
+                "serve.physical_threads" => {
+                    spec.serve.physical_threads = Some(need_usize(k, v)?)
+                }
+                "expect.state" => spec.expect.state = Some(need_str(k, v)?.to_string()),
+                "expect.stop_reason" => {
+                    spec.expect.stop_reason = Some(need_str(k, v)?.to_string())
+                }
+                "expect.error_contains" => {
+                    spec.expect.error_contains = Some(need_str(k, v)?.to_string())
+                }
+                "expect.iters" => spec.expect.iters = Some(need_usize(k, v)? as u64),
+                "expect.granted" => spec.expect.granted = Some(need_usize(k, v)?),
+                _ => bail!("{k}: unknown scenario key"),
+            }
+        }
+        spec.compare_solo = compare_solo.unwrap_or(spec.mode != Mode::Solo);
+        if spec.pins_threads() && !spec.threads_matrix.is_empty() {
+            bail!("threads_matrix conflicts with a pinned config.optex.threads");
+        }
+        if spec.serve.cancel_at.is_some() && spec.mode != Mode::Serve {
+            bail!("serve.cancel_at only applies to mode = \"serve\"");
+        }
+        Ok(spec)
+    }
+
+    /// Whether the scenario fixes its own pool width (the harness then
+    /// never injects the runner's default `--threads`).
+    pub fn pins_threads(&self) -> bool {
+        self.config.iter().any(|(k, _)| k == "optex.threads")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_scenario_parses() {
+        let spec = ScenarioSpec::parse(
+            "case",
+            r#"
+            mode = "suspend_resume"
+            tags = ["determinism", "serve"]
+            threads_matrix = [1, 8]
+
+            [config]
+            workload = "ackley"
+            steps = 6
+            seed = 11
+            noise_std = 0.4
+
+            [config.optimizer]
+            name = "sgd"
+            lr = 0.05
+
+            [config.optex]
+            parallelism = 4
+            t0 = 8
+
+            [budget]
+            max_iters = 4
+
+            [serve]
+            peers = 2
+            policy = "fair"
+            pause_at = 1
+
+            [expect]
+            state = "done"
+            stop_reason = "max_iters"
+            iters = 4
+            "#,
+        )
+        .unwrap();
+        assert_eq!(spec.mode, Mode::SuspendResume);
+        assert!(spec.compare_solo, "serve modes default to the solo check");
+        assert_eq!(spec.tags, vec!["determinism", "serve"]);
+        assert_eq!(spec.threads_matrix, vec![1, 8]);
+        assert_eq!(spec.budget.max_iters, Some(4));
+        assert_eq!(spec.serve.peers, 2);
+        assert_eq!(spec.serve.policy, Policy::WeightedFair);
+        assert_eq!(spec.serve.pause_at, 1);
+        assert_eq!(spec.expect.stop_reason.as_deref(), Some("max_iters"));
+        // config keys arrive sorted with the prefix stripped
+        let keys: Vec<&str> = spec.config.iter().map(|(k, _)| k.as_str()).collect();
+        assert_eq!(
+            keys,
+            vec![
+                "noise_std",
+                "optex.parallelism",
+                "optex.t0",
+                "optimizer.lr",
+                "optimizer.name",
+                "seed",
+                "steps",
+                "workload",
+            ]
+        );
+        assert!(!spec.pins_threads());
+    }
+
+    #[test]
+    fn defaults_are_solo_without_solo_compare() {
+        let spec = ScenarioSpec::parse("s", "[config]\nworkload = \"sphere\"").unwrap();
+        assert_eq!(spec.mode, Mode::Solo);
+        assert!(!spec.compare_solo);
+        assert!(spec.threads_matrix.is_empty());
+        assert_eq!(spec.budget, Budget::default());
+    }
+
+    #[test]
+    fn rejects_unknown_keys_and_conflicts() {
+        assert!(ScenarioSpec::parse("s", "modee = \"solo\"").is_err());
+        assert!(ScenarioSpec::parse("s", "mode = \"turbo\"").is_err());
+        assert!(ScenarioSpec::parse("s", "[expect]\nstate = 3").is_err());
+        // pinned width + matrix is a contradiction, not a silent skip
+        let doc = "threads_matrix = [1, 8]\n[config.optex]\nthreads = 4";
+        let err = ScenarioSpec::parse("s", doc).unwrap_err().to_string();
+        assert!(err.contains("threads_matrix"), "{err}");
+        // cancel_at outside serve mode
+        let doc = "mode = \"solo\"\n[serve]\ncancel_at = 2";
+        assert!(ScenarioSpec::parse("s", doc).is_err());
+    }
+}

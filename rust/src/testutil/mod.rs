@@ -33,6 +33,13 @@ pub mod fixtures {
         d
     }
 
+    /// The committed scenario corpus at the repo root — the golden-
+    /// trajectory harness's default `--dir`, shared with the
+    /// `scenarios_corpus` integration test.
+    pub fn scenarios_dir() -> std::path::PathBuf {
+        std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("scenarios")
+    }
+
     /// Pool width for tests whose thread choice is arbitrary (results
     /// are bit-identical at any width — `thread_invariance.rs`): the CI
     /// matrix sets `OPTEX_TEST_THREADS ∈ {1, 8}` so the same suites

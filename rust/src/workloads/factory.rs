@@ -87,13 +87,25 @@ pub fn build(cfg: &RunConfig) -> Result<Workload> {
         });
     }
 
+    // Same contract, real transitions: `dqn_<env>` replays a random
+    // policy through the named env (acrobot/mountaincar/cartpole) into
+    // the buffer, deterministically from `seed`.
+    if let Some(env_name) = w.strip_prefix("dqn_") {
+        let source = crate::rl::DqnSource::replay_fixture_env(env_name, seed)?;
+        return Ok(Workload {
+            source: Box::new(source),
+            gp_artifact: None,
+            name: format!("{w}(native)"),
+        });
+    }
+
     const MODEL_WORKLOADS: &[&str] =
         &["mnist", "fmnist", "cifar", "shakespeare", "tfm_char", "hp", "mlp_test"];
     if !MODEL_WORKLOADS.contains(&w) {
         bail!(
             "unknown workload {w:?} (synthetic: ackley|sphere|rosenbrock; \
-             native dqn: dqn_replay; models: mnist|fmnist|cifar|shakespeare|hp; \
-             rl via `optex rl`)"
+             native dqn: dqn_replay|dqn_acrobot|dqn_mountaincar; \
+             models: mnist|fmnist|cifar|shakespeare|hp; rl via `optex rl`)"
         );
     }
     // Model workloads need the manifest for shapes.
@@ -246,6 +258,24 @@ mod tests {
         let (eb, gb) = fixture.eval_batch_owned(&[&p]).unwrap();
         assert_eq!(ga, gb);
         assert_eq!(ea[0].loss.to_bits(), eb[0].loss.to_bits());
+    }
+
+    #[test]
+    fn dqn_env_workloads_build_without_artifacts() {
+        for (name, env_name) in [("dqn_acrobot", "acrobot"), ("dqn_mountaincar", "mountaincar")] {
+            let mut cfg = RunConfig::default();
+            cfg.workload = name.into();
+            cfg.seed = 3;
+            cfg.artifacts_dir = "/nonexistent".into();
+            let w = build(&cfg).unwrap();
+            assert_eq!(w.source.backend_name(), "native", "{name}");
+            assert!(w.gp_artifact.is_none(), "{name}");
+            let fixture = crate::rl::DqnSource::replay_fixture_env(env_name, 3).unwrap();
+            assert_eq!(w.source.dim(), fixture.dim(), "{name}");
+        }
+        let mut cfg = RunConfig::default();
+        cfg.workload = "dqn_pong".into();
+        assert!(build(&cfg).is_err(), "unknown env must be a factory error");
     }
 
     #[test]

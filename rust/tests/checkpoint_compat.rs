@@ -1,0 +1,66 @@
+//! Checkpoint format back-compat: a committed version-1 fixture file
+//! (pre-ISSUE-5, no sampler-state tail) must keep loading and resuming
+//! on every future revision of the reader. The fixture bytes are
+//! generated once and committed — `rust/tests/data/checkpoint_v1_sgd.ckpt`
+//! is magic | version=1 | iter=3 | d=8 | "sgd" | θ×8 | 0 opt bufs |
+//! 0 history rows | dsub=0, with NO v2 source_state section.
+
+use std::path::PathBuf;
+
+use optex::config::RunConfig;
+use optex::coordinator::checkpoint::Checkpoint;
+use optex::coordinator::Driver;
+use optex::opt::OptSpec;
+use optex::workloads::factory;
+
+fn fixture_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("rust/tests/data/checkpoint_v1_sgd.ckpt")
+}
+
+const FIXTURE_THETA: [f32; 8] = [1.0, -0.5, 0.25, 2.0, -1.0, 0.5, -0.25, 0.75];
+
+#[test]
+fn v1_fixture_reads_with_empty_sampler_state() {
+    let ckp = Checkpoint::read(&fixture_path()).expect("v1 fixture must keep loading");
+    assert_eq!(ckp.iter, 3);
+    assert_eq!(ckp.opt_name, "sgd");
+    assert_eq!(ckp.theta, FIXTURE_THETA);
+    assert!(ckp.opt_state.is_empty(), "sgd carries no optimizer buffers");
+    assert!(ckp.history.is_empty());
+    assert!(
+        ckp.source_state.is_empty(),
+        "v1 has no sampler-state section; the reader must synthesize empty"
+    );
+}
+
+/// A driver resumes from the v1 file and keeps iterating: the absent
+/// sampler state means the oracle's RNG restarts from the seed (the
+/// documented legacy behavior), never an error.
+#[test]
+fn v1_fixture_resumes_into_a_live_driver() {
+    let mut cfg = RunConfig::default();
+    cfg.workload = "rosenbrock".into();
+    cfg.synth_dim = 8;
+    cfg.steps = 7;
+    cfg.seed = 1;
+    cfg.optimizer = OptSpec::Sgd { lr: 0.05 };
+    cfg.optex.parallelism = 2;
+    cfg.optex.t0 = 8;
+    cfg.optex.threads = 1;
+    let workload = factory::build(&cfg).unwrap();
+    let mut drv = Driver::new(cfg.clone(), workload).unwrap();
+
+    let at = drv.resume_from(&fixture_path()).expect("v1 resume");
+    assert_eq!(at, 3);
+    assert_eq!(drv.theta(), &FIXTURE_THETA, "θ restored bit-exactly");
+
+    for t in (at as usize) + 1..=cfg.steps {
+        drv.iteration(t).unwrap();
+    }
+    let rows = &drv.record().rows;
+    assert_eq!(rows.len(), 4, "iterations 4..=7 after the checkpoint");
+    assert_eq!(rows[0].iter, 4);
+    assert!(rows.iter().all(|r| r.loss.is_finite()));
+    assert!(drv.best_loss().is_finite());
+}

@@ -1,0 +1,55 @@
+//! The committed scenario corpus, end to end (ISSUE 6).
+//!
+//! Runs every scenario under `scenarios/` through the golden-trajectory
+//! harness at the CI-matrix width (`OPTEX_TEST_THREADS`, default 1).
+//! Bless mode is `Missing`: a freshly added scenario self-records its
+//! golden on first run (committed by the author / the CI bless step),
+//! while any drift against a committed golden still fails loudly.
+
+use optex::scenarios::{run_corpus, BlessMode, Opts, Status};
+use optex::testutil::fixtures;
+
+#[test]
+fn corpus_verifies_against_committed_goldens() {
+    let mut opts = Opts::new(fixtures::scenarios_dir());
+    opts.threads = fixtures::test_threads();
+    opts.bless = BlessMode::Missing;
+    let report = run_corpus(&opts).expect("corpus run");
+    assert!(
+        report.results.len() >= 25,
+        "corpus shrank below the ISSUE 6 floor: {} scenarios",
+        report.results.len()
+    );
+    let failures: Vec<String> = report
+        .results
+        .iter()
+        .filter(|r| matches!(r.status, Status::Diff | Status::Missing | Status::Error))
+        .map(|r| format!("{} {}: {}", r.status.name(), r.name, r.detail))
+        .collect();
+    assert!(failures.is_empty(), "{}\n{}", report.summary(), failures.join("\n"));
+}
+
+/// Bless determinism on a committed subtree: immediately re-blessing
+/// scenarios whose goldens exist must rewrite nothing (every case comes
+/// back Pass, none Blessed). Scoped to `solo/` to keep the double
+/// execution cheap; the mechanics are width/mode-independent.
+#[test]
+fn second_bless_is_a_no_op() {
+    let mut opts = Opts::new(fixtures::scenarios_dir());
+    opts.threads = fixtures::test_threads();
+    opts.filter = Some("solo/".into());
+    opts.bless = BlessMode::Missing;
+    let first = run_corpus(&opts).expect("first run");
+    assert!(!first.results.is_empty());
+    assert!(!first.failed(), "{}", first.summary());
+    // every golden now exists: a full bless must find nothing to rewrite
+    opts.bless = BlessMode::All;
+    let second = run_corpus(&opts).expect("second run");
+    assert_eq!(
+        second.count(Status::Blessed),
+        0,
+        "bless rewrote goldens on an unchanged tree: {}",
+        second.summary()
+    );
+    assert_eq!(second.count(Status::Pass), second.results.len());
+}

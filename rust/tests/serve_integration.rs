@@ -1,179 +1,24 @@
-//! ISSUE 4 acceptance: the serving subsystem multiplexes many sessions
-//! over one process without perturbing any session's numerics.
+//! ISSUE 4 acceptance, wire-protocol half: a real TCP server on
+//! 127.0.0.1 driven through the JSONL protocol — submit / status /
+//! result / watch / pause / resume / cancel / shutdown, with solo
+//! bit-identity of everything the wire reports.
 //!
-//! * K = 8 concurrent sessions (mixed synthetic + DQN, mixed
-//!   optimizers, with and without gradient noise) must produce
-//!   trajectories **bit-identical** to the same seeds/configs run solo,
-//!   at `optex.threads ∈ {1, 8}`, under both scheduling policies, and
-//!   with a mid-run checkpoint-backed pause/resume of one session.
-//! * Loopback smoke (the CI satellite): a real TCP server on 127.0.0.1,
-//!   three sessions submitted through the JSONL protocol, final thetas
-//!   byte-identical to the same configs run through the coordinator,
-//!   then a clean `shutdown`.
+//! The in-process K-session scheduling matrix (mixed workloads and
+//! optimizers, both policies, mid-run suspend/resume, solo-bit-identity)
+//! moved to the declarative scenario corpus (ISSUE 6): see
+//! `scenarios/serve/*.toml`, run by `optex scenarios` /
+//! `cargo test --test scenarios_corpus`. This file keeps what the TOML
+//! schema cannot say: the protocol surface itself.
 
 use std::time::{Duration, Instant};
 
-use optex::config::{Method, RunConfig};
+use optex::config::RunConfig;
 use optex::coordinator::Driver;
-use optex::opt::OptSpec;
-use optex::serve::{Budget, Policy, Scheduler, Server, SessionState};
+use optex::serve::Server;
 use optex::util::json::Json;
 use optex::workloads::factory;
 
 use optex::testutil::fixtures::tmp_ckpt_dir as tmp_dir;
-
-/// Trajectory fingerprint: final iterate bits + per-iteration loss bits.
-#[derive(Debug, PartialEq)]
-struct Traj {
-    theta_bits: Vec<u32>,
-    loss_bits: Vec<u64>,
-}
-
-fn fingerprint(theta: &[f32], losses: impl Iterator<Item = f64>) -> Traj {
-    Traj {
-        theta_bits: theta.iter().map(|x| x.to_bits()).collect(),
-        loss_bits: losses.map(|l| l.to_bits()).collect(),
-    }
-}
-
-// -- the K = 8 mixed-session matrix -----------------------------------------
-
-/// Six synthetic configs: mixed workloads, optimizers, noise, dims. The
-/// d = 40_000 entry clears the pool grains so `threads = 8` really fans
-/// out; index 2 is deterministic (noise 0) — the pause/resume candidate.
-fn synth_cfg(i: usize, threads: usize) -> RunConfig {
-    let workloads = ["ackley", "sphere", "rosenbrock"];
-    let optimizers = ["sgd", "momentum", "adam", "adagrad"];
-    let mut cfg = RunConfig::default();
-    cfg.workload = workloads[i % workloads.len()].into();
-    cfg.optimizer = OptSpec::parse(optimizers[i % optimizers.len()], 0.05).unwrap();
-    cfg.method = Method::Optex;
-    cfg.steps = 6;
-    cfg.seed = 100 + i as u64;
-    cfg.synth_dim = if i == 0 { 40_000 } else { 256 + 64 * i };
-    cfg.noise_std = if i == 2 { 0.0 } else { 0.3 };
-    cfg.optex.parallelism = 4;
-    cfg.optex.t0 = 6;
-    cfg.optex.threads = threads;
-    cfg
-}
-
-// A DQN oracle over a pre-filled replay buffer (shared fixture —
-// episode-free, so the driver steps it directly).
-use optex::testutil::fixtures::dqn_replay_source as dqn_source;
-
-fn dqn_cfg(seed: u64, threads: usize) -> RunConfig {
-    let mut cfg = RunConfig::default();
-    cfg.workload = "dqn_replay".into(); // label only; oracle is injected
-    cfg.method = Method::Optex;
-    cfg.steps = 5;
-    cfg.seed = seed;
-    cfg.optimizer = OptSpec::parse("adam", 0.01).unwrap();
-    cfg.optex.parallelism = 4;
-    cfg.optex.t0 = 8;
-    cfg.optex.threads = threads;
-    cfg
-}
-
-fn solo_synth(cfg: &RunConfig) -> Traj {
-    let workload = factory::build(cfg).unwrap();
-    let mut drv = Driver::new(cfg.clone(), workload).unwrap();
-    let rec = drv.run().unwrap();
-    fingerprint(drv.theta(), rec.rows.iter().map(|r| r.loss))
-}
-
-fn solo_dqn(cfg: &RunConfig) -> Traj {
-    let mut drv =
-        Driver::with_source(cfg.clone(), Box::new(dqn_source(cfg.seed)), None).unwrap();
-    let rec = drv.run().unwrap();
-    fingerprint(drv.theta(), rec.rows.iter().map(|r| r.loss))
-}
-
-fn session_traj(sched: &Scheduler, id: u64) -> Traj {
-    let s = sched.session(id).unwrap();
-    assert_eq!(s.state(), SessionState::Done, "session {id} did not finish");
-    fingerprint(
-        &s.theta().expect("done session has a final theta"),
-        s.rows().iter().map(|r| r.loss),
-    )
-}
-
-/// The acceptance matrix: K = 8 concurrent sessions, solo-bit-identity,
-/// threads ∈ {1, 8}, both policies, one mid-run pause/resume.
-fn run_matrix(threads: usize, policy: Policy, tag: &str) {
-    let dir = tmp_dir(tag);
-    let mut sched = Scheduler::new(16, policy, dir.clone());
-
-    // solo references first (each its own driver — nothing shared)
-    let synth_solo: Vec<Traj> =
-        (0..6).map(|i| solo_synth(&synth_cfg(i, threads))).collect();
-    let dqn_solo: Vec<Traj> =
-        [7u64, 8].iter().map(|&s| solo_dqn(&dqn_cfg(s, threads))).collect();
-
-    // submit all 8, interleave
-    let synth_ids: Vec<u64> = (0..6)
-        .map(|i| sched.submit(synth_cfg(i, threads), Budget::default()).unwrap())
-        .collect();
-    let dqn_ids: Vec<u64> = [7u64, 8]
-        .iter()
-        .map(|&s| {
-            let cfg = dqn_cfg(s, threads);
-            sched
-                .submit_with_source(cfg, Box::new(dqn_source(s)), Budget::default())
-                .unwrap()
-        })
-        .collect();
-
-    // a few quanta in, suspend the deterministic session to disk, let
-    // the others run, then resume it — its trajectory must not notice
-    let paused = synth_ids[2];
-    for _ in 0..11 {
-        sched.tick().unwrap();
-    }
-    sched.pause(paused).unwrap();
-    assert!(
-        sched.session(paused).unwrap().is_suspended(),
-        "factory-built pause must be a checkpoint-backed suspend"
-    );
-    for _ in 0..10 {
-        sched.tick().unwrap();
-    }
-    sched.resume(paused).unwrap();
-    sched.run_to_completion();
-
-    for (i, id) in synth_ids.iter().enumerate() {
-        assert_eq!(
-            session_traj(&sched, *id),
-            synth_solo[i],
-            "synth session {i} diverged from solo (threads={threads}, {tag})"
-        );
-    }
-    for (i, id) in dqn_ids.iter().enumerate() {
-        assert_eq!(
-            session_traj(&sched, *id),
-            dqn_solo[i],
-            "dqn session {i} diverged from solo (threads={threads}, {tag})"
-        );
-    }
-    std::fs::remove_dir_all(&dir).ok();
-}
-
-#[test]
-fn k8_mixed_sessions_bit_identical_to_solo_threads_1() {
-    run_matrix(1, Policy::RoundRobin, "t1_rr");
-}
-
-#[test]
-fn k8_mixed_sessions_bit_identical_to_solo_threads_8() {
-    run_matrix(8, Policy::RoundRobin, "t8_rr");
-}
-
-#[test]
-fn weighted_fair_policy_preserves_bit_identity() {
-    // measured-time scheduling reorders quanta between sessions, never
-    // within one — trajectories must still match solo exactly
-    run_matrix(1, Policy::WeightedFair, "t1_fair");
-}
 
 // -- loopback smoke (CI satellite) ------------------------------------------
 
