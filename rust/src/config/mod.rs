@@ -63,6 +63,42 @@ pub enum Backend {
     Hlo,
 }
 
+/// What the driver does when an eval fan-out returns non-finite
+/// (NaN/Inf) losses or gradient rows (ISSUE 7 non-finite hygiene).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NonFinite {
+    /// Fail the iteration (and hence the session) with a descriptive
+    /// error. The conservative default: garbage never enters history.
+    Fail,
+    /// Drop the whole fan-out (abandon the arena loan), keep θ and the
+    /// optimizer untouched, and record the iteration with a NaN loss.
+    /// History and GP state are exactly as if the iteration never ran.
+    Skip,
+    /// Accept the finite points, evict every non-finite history row and
+    /// force a full GP refit (epoch bump → the `NotSpd`/rebuild fallback
+    /// machinery), so poisoned rows cannot contaminate later estimates.
+    Resync,
+}
+
+impl NonFinite {
+    pub fn parse(s: &str) -> Option<NonFinite> {
+        match s {
+            "fail" => Some(NonFinite::Fail),
+            "skip" => Some(NonFinite::Skip),
+            "resync" => Some(NonFinite::Resync),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            NonFinite::Fail => "fail",
+            NonFinite::Skip => "skip",
+            NonFinite::Resync => "resync",
+        }
+    }
+}
+
 /// OptEx-specific knobs (paper Sec. 4 + Appx B.2).
 #[derive(Clone, Debug, PartialEq)]
 pub struct OptexParams {
@@ -102,6 +138,21 @@ pub struct OptexParams {
     /// profile for long-lived `serve` processes). Never a numerics fork:
     /// trajectories are bit-identical across modes.
     pub pool: PoolMode,
+    /// Non-finite gradient/loss policy: `fail` (default) | `skip` |
+    /// `resync` (ISSUE 7).
+    pub on_nonfinite: NonFinite,
+    /// Eval-failure retry budget per iteration: a failed
+    /// `GradSource::eval_batch` fan-out is re-attempted up to this many
+    /// times before the iteration (and session) fails. 0 = no retries.
+    pub retry_max: usize,
+    /// Linear backoff between eval retries: attempt k sleeps
+    /// `k * retry_backoff_ms`. Wall-clock only — never reaches
+    /// trajectories or goldens.
+    pub retry_backoff_ms: u64,
+    /// Per-fan-out eval deadline in seconds: an eval_batch whose wall
+    /// span exceeds this counts as a failed attempt (retried per
+    /// `retry_max`). 0 (default) = no deadline.
+    pub eval_timeout_s: f64,
 }
 
 impl Default for OptexParams {
@@ -120,6 +171,10 @@ impl Default for OptexParams {
             gp_refresh_every: 0,
             threads: 0,
             pool: PoolMode::Scoped,
+            on_nonfinite: NonFinite::Fail,
+            retry_max: 0,
+            retry_backoff_ms: 0,
+            eval_timeout_s: 0.0,
         }
     }
 }
@@ -151,6 +206,9 @@ pub struct ServeParams {
     /// Default push cadence for `watch` subscriptions that omit
     /// `stream_every`: an iter record every K iterations (≥ 1).
     pub stream_every: usize,
+    /// Concurrent TCP connection cap: connections beyond it receive an
+    /// error line and are dropped (untrusted-client hygiene, ISSUE 7).
+    pub max_conns: usize,
 }
 
 impl Default for ServeParams {
@@ -162,6 +220,7 @@ impl Default for ServeParams {
             ckpt_dir: PathBuf::from("results/serve_ckpt"),
             adopt: false,
             stream_every: 1,
+            max_conns: 256,
         }
     }
 }
@@ -193,6 +252,12 @@ pub struct RunConfig {
     pub log_every: usize,
     /// Use HLO workload oracle instead of the native one where available.
     pub hlo_workload: bool,
+    /// Deterministic fault-injection plan (ISSUE 7): a `;`-separated
+    /// spec of `site[:arg][@selector][*count]` clauses parsed by
+    /// [`crate::faults::FaultPlan::parse`]. Empty (default) = no faults.
+    /// Part of a session's identity: serialized into manifest overrides
+    /// so adopted sessions keep their plan.
+    pub faults: String,
 }
 
 impl Default for RunConfig {
@@ -212,6 +277,7 @@ impl Default for RunConfig {
             out_dir: PathBuf::from("results"),
             log_every: 1,
             hlo_workload: false,
+            faults: String::new(),
         }
     }
 }
@@ -359,6 +425,14 @@ impl RunConfig {
                 self.optex.pool = PoolMode::parse(need_str()?)
                     .ok_or_else(|| bad(key, "unknown pool mode (scoped|persistent)"))?
             }
+            "optex.on_nonfinite" => {
+                self.optex.on_nonfinite = NonFinite::parse(need_str()?)
+                    .ok_or_else(|| bad(key, "unknown non-finite policy (fail|skip|resync)"))?
+            }
+            "optex.retry_max" => self.optex.retry_max = need_usize()?,
+            "optex.retry_backoff_ms" => self.optex.retry_backoff_ms = need_usize()? as u64,
+            "optex.eval_timeout_s" => self.optex.eval_timeout_s = need_f64()?,
+            "faults" => self.faults = need_str()?.to_string(),
             "serve.addr" => self.serve.addr = need_str()?.to_string(),
             "serve.max_sessions" => self.serve.max_sessions = need_usize()?,
             "serve.policy" => {
@@ -368,6 +442,7 @@ impl RunConfig {
             "serve.ckpt_dir" => self.serve.ckpt_dir = PathBuf::from(need_str()?),
             "serve.adopt" => self.serve.adopt = need_bool()?,
             "serve.stream_every" => self.serve.stream_every = need_usize()?,
+            "serve.max_conns" => self.serve.max_conns = need_usize()?,
             _ => return Err(bad(key, "unknown config key")),
         }
         Ok(())
@@ -400,6 +475,15 @@ impl RunConfig {
         }
         if self.serve.stream_every == 0 {
             return Err(bad("serve.stream_every", "must be >= 1"));
+        }
+        if self.serve.max_conns == 0 {
+            return Err(bad("serve.max_conns", "must be >= 1"));
+        }
+        if !self.optex.eval_timeout_s.is_finite() || self.optex.eval_timeout_s < 0.0 {
+            return Err(bad("optex.eval_timeout_s", "must be >= 0"));
+        }
+        if let Err(e) = crate::faults::FaultPlan::parse(&self.faults) {
+            return Err(bad("faults", &format!("{e:#}")));
         }
         Ok(())
     }
@@ -500,6 +584,18 @@ impl RunConfig {
         if o.pool != od.pool {
             out.push(format!("optex.pool={}", o.pool.name()));
         }
+        if o.on_nonfinite != od.on_nonfinite {
+            out.push(format!("optex.on_nonfinite={}", o.on_nonfinite.name()));
+        }
+        if o.retry_max != od.retry_max {
+            out.push(format!("optex.retry_max={}", o.retry_max));
+        }
+        if o.retry_backoff_ms != od.retry_backoff_ms {
+            out.push(format!("optex.retry_backoff_ms={}", o.retry_backoff_ms));
+        }
+        if o.eval_timeout_s != od.eval_timeout_s {
+            out.push(format!("optex.eval_timeout_s={}", o.eval_timeout_s));
+        }
         if self.noise_std != d.noise_std {
             out.push(format!("noise_std={}", self.noise_std));
         }
@@ -517,6 +613,12 @@ impl RunConfig {
         }
         if self.hlo_workload != d.hlo_workload {
             out.push(format!("hlo_workload={}", self.hlo_workload));
+        }
+        if self.faults != d.faults {
+            // quoting matters: fault specs carry `@` / `*` / `;`, which
+            // the bare-word fallback would survive, but `:` arguments
+            // must not be re-typed by the TOML value grammar
+            push_quoted(&mut out, "faults", &self.faults)?;
         }
         Ok(out)
     }
@@ -540,6 +642,11 @@ impl RunConfig {
         m.insert("gp_refresh_every".into(), self.optex.gp_refresh_every.to_string());
         m.insert("threads".into(), self.optex.threads.to_string());
         m.insert("pool".into(), self.optex.pool.name().into());
+        m.insert("on_nonfinite".into(), self.optex.on_nonfinite.name().into());
+        m.insert("retry_max".into(), self.optex.retry_max.to_string());
+        if !self.faults.is_empty() {
+            m.insert("faults".into(), self.faults.clone());
+        }
         m.insert("noise_std".into(), format!("{}", self.noise_std));
         m.insert("synth_dim".into(), self.synth_dim.to_string());
         m
@@ -681,10 +788,15 @@ mod tests {
             "optex.gp_refresh_every=25",
             "optex.threads=8",
             "optex.pool=persistent",
+            "optex.on_nonfinite=resync",
+            "optex.retry_max=2",
+            "optex.retry_backoff_ms=5",
+            "optex.eval_timeout_s=0.5",
             "noise_std=0.3",
             "synth_dim=512",
             "out_dir=\"res 2024\"",
             "log_every=2",
+            "faults=\"eval_err@s1.i3*2; nan_row@s1.i5.p0\"",
         ] {
             cfg.apply_override(kv).unwrap();
         }
@@ -762,6 +874,52 @@ mod tests {
         cfg.apply_override("optimizer.lr=0.25").unwrap();
         cfg.apply_override("optimizer.name=sgd").unwrap();
         assert_eq!(cfg.optimizer, OptSpec::Sgd { lr: 0.25 });
+    }
+
+    #[test]
+    fn nonfinite_and_retry_knobs_parse_and_reject() {
+        let d = OptexParams::default();
+        assert_eq!(d.on_nonfinite, NonFinite::Fail);
+        assert_eq!(d.retry_max, 0);
+        assert_eq!(d.retry_backoff_ms, 0);
+        assert_eq!(d.eval_timeout_s, 0.0);
+        let mut cfg = RunConfig::default();
+        cfg.apply_override("optex.on_nonfinite=skip").unwrap();
+        assert_eq!(cfg.optex.on_nonfinite, NonFinite::Skip);
+        cfg.apply_override("optex.on_nonfinite=resync").unwrap();
+        assert_eq!(cfg.optex.on_nonfinite, NonFinite::Resync);
+        assert!(cfg.apply_override("optex.on_nonfinite=panic").is_err());
+        cfg.apply_override("optex.retry_max=3").unwrap();
+        cfg.apply_override("optex.retry_backoff_ms=10").unwrap();
+        cfg.apply_override("optex.eval_timeout_s=0.25").unwrap();
+        assert_eq!(cfg.optex.retry_max, 3);
+        assert_eq!(cfg.optex.retry_backoff_ms, 10);
+        assert_eq!(cfg.optex.eval_timeout_s, 0.25);
+        assert!(cfg.apply_override("optex.eval_timeout_s=-1.0").is_err());
+        assert!(RunConfig::default().describe().contains_key("on_nonfinite"));
+    }
+
+    #[test]
+    fn faults_spec_validates_through_the_plan_parser() {
+        let mut cfg = RunConfig::default();
+        assert!(cfg.faults.is_empty());
+        cfg.apply_override("faults=\"eval_panic@s2.i4\"").unwrap();
+        assert_eq!(cfg.faults, "eval_panic@s2.i4");
+        // bare-word fallback also works for selector-free specs
+        cfg.apply_override("faults=eval_err*0").unwrap();
+        assert_eq!(cfg.faults, "eval_err*0");
+        // a malformed spec is rejected at validate() time with the key
+        let err = cfg.apply_override("faults=\"made_up_site@i1\"").unwrap_err();
+        assert!(err.to_string().contains("faults"), "{err}");
+    }
+
+    #[test]
+    fn serve_max_conns_knob() {
+        assert_eq!(ServeParams::default().max_conns, 256);
+        let mut cfg = RunConfig::default();
+        cfg.apply_override("serve.max_conns=2").unwrap();
+        assert_eq!(cfg.serve.max_conns, 2);
+        assert!(cfg.apply_override("serve.max_conns=0").is_err());
     }
 
     #[test]

@@ -196,6 +196,38 @@ impl GradHistory {
         self.total_pushed += 1;
     }
 
+    /// Evict every row holding a non-finite θ-subset or gradient value
+    /// (the `optex.on_nonfinite = resync` hygiene pass, ISSUE 7).
+    /// Returns the number of rows evicted; when any are, the ring is
+    /// rebuilt from the finite survivors via [`GradHistory::clear`] —
+    /// which bumps the epoch, so GP mirrors refit from scratch instead
+    /// of replaying through poisoned state.
+    pub fn retain_finite(&mut self) -> usize {
+        let poisoned = {
+            let (thetas, grads) = self.views();
+            thetas
+                .iter()
+                .zip(&grads)
+                .any(|(t, g)| !t.iter().chain(g.iter()).all(|v| v.is_finite()))
+        };
+        if !poisoned {
+            return 0;
+        }
+        let (thetas, grads) = self.views();
+        let survivors: Vec<(Vec<f32>, Vec<f32>)> = thetas
+            .iter()
+            .zip(&grads)
+            .filter(|(t, g)| t.iter().chain(g.iter()).all(|v| v.is_finite()))
+            .map(|(t, g)| (t.to_vec(), g.to_vec()))
+            .collect();
+        let evicted = self.len() - survivors.len();
+        self.clear();
+        for (t, g) in &survivors {
+            self.restore_entry(t, g);
+        }
+        evicted
+    }
+
     /// Arena heap allocations performed by the backing store (debug
     /// counter; 2 = construction only).
     pub fn store_allocs(&self) -> u64 {
@@ -378,6 +410,26 @@ mod tests {
             assert_eq!(ga, gb, "round {round}: grad rows diverged");
         }
         assert_eq!(a.total_pushed(), b.total_pushed());
+    }
+
+    #[test]
+    fn retain_finite_evicts_poisoned_rows_and_bumps_epoch() {
+        let mut h = hist(4, 2);
+        h.push(&[1.0, 1.0], &[1.0, 1.0]);
+        h.push(&[2.0, 2.0], &[f32::NAN, 2.0]);
+        h.push(&[3.0, 3.0], &[3.0, 3.0]);
+        h.push(&[f32::INFINITY, 4.0], &[4.0, 4.0]);
+        let epoch = h.epoch();
+        assert_eq!(h.retain_finite(), 2);
+        assert_eq!(h.len(), 2);
+        assert_eq!(h.epoch(), epoch + 1, "eviction must force mirror rebuilds");
+        let (thetas, grads) = h.views();
+        assert_eq!(thetas[0][0], 1.0);
+        assert_eq!(thetas[1][0], 3.0);
+        assert!(grads.iter().all(|g| g.iter().all(|v| v.is_finite())));
+        // all-finite ring: a no-op that does NOT bump the epoch
+        assert_eq!(h.retain_finite(), 0);
+        assert_eq!(h.epoch(), epoch + 1);
     }
 
     /// Satellite (ISSUE 3): the store-backed ring must match a naive

@@ -55,11 +55,24 @@ pub struct RunRecord {
     /// attributable when many sessions share one process (or one file).
     pub session: u64,
     pub rows: Vec<IterRecord>,
+    /// Eval fan-out attempts that failed and were re-attempted under the
+    /// retry policy (`optex.retry_max`) — robustness counter, ISSUE 7.
+    /// Not a CSV column: surfaced through `status` and scenario goldens.
+    pub retries: u64,
+    /// Non-finite eval results (points with NaN/Inf loss or gradient)
+    /// absorbed by the `optex.on_nonfinite` policy.
+    pub nonfinite: u64,
 }
 
 impl RunRecord {
     pub fn new(label: impl Into<String>) -> Self {
-        RunRecord { label: label.into(), session: 0, rows: Vec::new() }
+        RunRecord {
+            label: label.into(),
+            session: 0,
+            rows: Vec::new(),
+            retries: 0,
+            nonfinite: 0,
+        }
     }
 
     pub fn push(&mut self, row: IterRecord) {

@@ -41,9 +41,10 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
-use crate::config::{Backend, Method, RunConfig};
+use crate::config::{Backend, Method, NonFinite, RunConfig};
 use crate::coordinator::history::GradHistory;
 use crate::coordinator::metrics::{IterRecord, RunRecord};
+use crate::faults::{CkptFault, FaultPlan};
 use crate::gp::estimator::FittedGp;
 use crate::gp::{DimSubset, GpConfig, GpFit, IncrementalGp};
 use crate::opt::Optimizer;
@@ -106,6 +107,12 @@ pub struct Driver {
     /// dataparallel), which have no `GradStore` slots to loan; grown once
     /// to n×d, reused every iteration.
     eval_scratch: Vec<f32>,
+    /// Deterministic fault-injection plan parsed from `cfg.faults`
+    /// (ISSUE 7). Keyed by (session, iteration, point); the session key
+    /// is `record.session` — 0 for standalone runs, the serve id
+    /// otherwise. Empty on production runs: one `is_empty` check per
+    /// site.
+    faults: FaultPlan,
 }
 
 impl Driver {
@@ -163,6 +170,7 @@ impl Driver {
         let theta = source.init_params(&mut rng);
         let optimizer = cfg.optimizer.build(d);
         let base_lr = cfg.optimizer.lr();
+        let faults = FaultPlan::parse(&cfg.faults)?;
         Ok(Driver {
             record: RunRecord::new(cfg.method.name()),
             base_lr,
@@ -184,6 +192,7 @@ impl Driver {
             avg_buf: Vec::new(),
             theta_sub_buf: Vec::new(),
             eval_scratch: Vec::new(),
+            faults,
         })
     }
 
@@ -217,9 +226,22 @@ impl Driver {
     }
 
     /// Tag this run's metrics with a serving-session id (0 = not a
-    /// serve run; propagated into the CSV emitter's `session` column).
+    /// serve run; propagated into the CSV emitter's `session` column and
+    /// used as the fault plan's session key).
     pub fn set_session_id(&mut self, id: u64) {
         self.record.session = id;
+    }
+
+    /// Eval fan-out attempts retried under `optex.retry_max` so far
+    /// (live — the serving layer surfaces this through `status`).
+    pub fn retries(&self) -> u64 {
+        self.record.retries
+    }
+
+    /// Non-finite eval points absorbed by the `optex.on_nonfinite`
+    /// policy so far (live).
+    pub fn nonfinite_events(&self) -> u64 {
+        self.record.nonfinite
     }
 
     /// Snapshot the run to a checkpoint file (θ, optimizer state, local
@@ -227,6 +249,13 @@ impl Driver {
     /// sequential iteration count. History rows stream straight from the
     /// `GradStore` arena borrows — no owned intermediate snapshot.
     pub fn save_checkpoint(&self, path: &std::path::Path, iter: u64) -> Result<()> {
+        let fault = self.faults.take_ckpt(self.record.session, iter);
+        if let Some(CkptFault::Fail) = fault {
+            bail!(
+                "injected fault: ckpt_fail (session {}, iteration {iter})",
+                self.record.session
+            );
+        }
         crate::coordinator::checkpoint::save_live(
             path,
             iter,
@@ -234,7 +263,16 @@ impl Driver {
             self.optimizer.as_ref(),
             &self.history,
             &self.source.save_sampler_state(),
-        )
+        )?;
+        if let Some(CkptFault::Torn) = fault {
+            // Leave behind exactly what a kill mid-write would: the file
+            // truncated to half its bytes. The caller sees success — the
+            // tear is only discovered at read time (recovery exercised by
+            // the scenarios/faults torn-checkpoint corpus).
+            let len = std::fs::metadata(path)?.len();
+            std::fs::OpenOptions::new().write(true).open(path)?.set_len(len / 2)?;
+        }
+        Ok(())
     }
 
     /// Resume from a checkpoint file; returns the iteration it was taken
@@ -326,7 +364,7 @@ impl Driver {
         self.source.on_iteration(t, &self.theta);
         let (evals, sel_loss, sel_grad_norm, aux, worker_max, eval_span) =
             match self.cfg.method {
-                Method::Optex | Method::Vanilla => self.optex_iteration()?,
+                Method::Optex | Method::Vanilla => self.optex_iteration(t)?,
                 Method::Target => self.target_iteration()?,
                 Method::DataParallel => self.dataparallel_iteration()?,
             };
@@ -363,7 +401,72 @@ impl Driver {
 
     // -- Algo. 1 (optex; vanilla = N=1) -------------------------------------
 
-    fn optex_iteration(&mut self) -> Result<(u64, f64, f64, Option<f64>, Duration, Duration)> {
+    /// One eval fan-out attempt (ISSUE 7 failure domain): injected
+    /// faults fire first — on the *driver* thread, so a panic payload
+    /// survives both pool modes (the persistent pool re-raises worker
+    /// panics with a generic message), and an injected `Err` never
+    /// advances the oracle's RNG streams — then the oracle runs into
+    /// freshly loaned arena rows, then the `optex.eval_timeout_s`
+    /// deadline and any injected row poison apply. Every failure path
+    /// abandons the loan before returning.
+    fn eval_attempt(
+        &mut self,
+        eval_points: &[&[f32]],
+        sess: u64,
+        iter: u64,
+    ) -> Result<(Vec<Eval>, Duration)> {
+        if self.faults.take_eval_err(sess, iter) {
+            bail!("injected fault: eval_err (session {sess}, iteration {iter})");
+        }
+        if self.faults.take_eval_panic(sess, iter) {
+            panic!("injected fault: eval_panic (session {sess}, iteration {iter})");
+        }
+        let start = Instant::now();
+        if let Some(ms) = self.faults.take_eval_delay(sess, iter) {
+            // a hung eval: the sleep sits inside the timed span, which is
+            // how it trips the deadline below
+            std::thread::sleep(Duration::from_millis(ms));
+        }
+        self.history.loan(eval_points.len());
+        let result = {
+            let mut rows = self.history.loaned_rows_mut();
+            self.source.eval_batch(eval_points, &mut rows)
+        };
+        let evals = match result {
+            Ok(evals) => evals,
+            Err(e) => {
+                self.history.abandon_loan();
+                return Err(e);
+            }
+        };
+        // Measured span of the fan-out: the serial sum at threads = 1,
+        // real parallel wall-clock once the pool is engaged.
+        let span = start.elapsed();
+        let deadline = self.cfg.optex.eval_timeout_s;
+        if deadline > 0.0 && span.as_secs_f64() > deadline {
+            self.history.abandon_loan();
+            // deterministic error text: names the configured deadline,
+            // never the measured span
+            bail!(
+                "eval fan-out exceeded optex.eval_timeout_s = {deadline}s \
+                 (session {sess}, iteration {iter})"
+            );
+        }
+        if !self.faults.is_empty() {
+            let mut rows = self.history.loaned_rows_mut();
+            for (i, row) in rows.iter_mut().enumerate() {
+                if let Some(v) = self.faults.take_row_poison(sess, iter, i) {
+                    row.fill(v);
+                }
+            }
+        }
+        Ok((evals, span))
+    }
+
+    fn optex_iteration(
+        &mut self,
+        t: usize,
+    ) -> Result<(u64, f64, f64, Option<f64>, Duration, Duration)> {
         let n = match self.cfg.method {
             Method::Vanilla => 1,
             _ => self.cfg.optex.parallelism,
@@ -461,27 +564,87 @@ impl Driver {
         } else {
             vec![points.last().unwrap().as_slice()] // Fig-6a "sequential"
         };
-        self.history.loan(eval_points.len());
-        let eval_start = Instant::now();
-        let result = {
-            let mut rows = self.history.loaned_rows_mut();
-            self.source.eval_batch(&eval_points, &mut rows)
-        };
-        let evals = match result {
-            Ok(evals) => evals,
-            Err(e) => {
-                self.history.abandon_loan();
-                return Err(e);
+        // Eval attempts run under the per-session retry policy
+        // (`optex.retry_max` / `retry_backoff_ms`): an attempt can fail
+        // with a real oracle error, an injected fault, or by exceeding
+        // the fan-out deadline. Each failed attempt abandoned its arena
+        // loan before the retry re-loans (on a full ring the abandon
+        // cleared the history — the post-retry trajectory is
+        // deterministic either way, which is what the fault goldens
+        // pin). Backoff is wall-clock only and never reaches records.
+        let sess = self.record.session;
+        let (evals, eval_span) = {
+            let mut attempt = 0usize;
+            loop {
+                match self.eval_attempt(&eval_points, sess, t as u64) {
+                    Ok(ok) => break ok,
+                    Err(_) if attempt < self.cfg.optex.retry_max => {
+                        attempt += 1;
+                        self.record.retries += 1;
+                        let backoff = self.cfg.optex.retry_backoff_ms;
+                        if backoff > 0 {
+                            std::thread::sleep(Duration::from_millis(
+                                attempt as u64 * backoff,
+                            ));
+                        }
+                    }
+                    Err(e) => {
+                        return Err(e).with_context(|| {
+                            format!(
+                                "eval fan-out failed at iteration {t} \
+                                 after {attempt} retries"
+                            )
+                        })
+                    }
+                }
             }
         };
-        // Measured span of the fan-out: the serial sum at threads = 1,
-        // real parallel wall-clock once the pool is engaged.
-        let eval_span = eval_start.elapsed();
         let worker_max =
             evals.iter().map(|e| e.elapsed).max().unwrap_or(Duration::ZERO);
 
         let n_evals = evals.len() as u64;
         let aux = mean_aux(&evals);
+
+        // Non-finite hygiene (`optex.on_nonfinite`): a point is poisoned
+        // when its loss or any element of its gradient row is non-finite
+        // — injected `nan_row`/`inf_row` faults land here, as do real
+        // diverging oracles.
+        let poisoned: Vec<usize> = (0..eval_points.len())
+            .filter(|&i| {
+                !evals[i].loss.is_finite()
+                    || self.history.loaned_grad(i).iter().any(|g| !g.is_finite())
+            })
+            .collect();
+        let resync = if poisoned.is_empty() {
+            false
+        } else {
+            self.record.nonfinite += poisoned.len() as u64;
+            match self.cfg.optex.on_nonfinite {
+                NonFinite::Fail => {
+                    self.history.abandon_loan();
+                    bail!(
+                        "non-finite eval results at iteration {t} \
+                         (points {poisoned:?}); optex.on_nonfinite=fail"
+                    );
+                }
+                // `skip` drops the whole fan-out (the FIFO commit
+                // protocol cannot push a subset of a loan): θ, optimizer
+                // and history stay exactly as if the iteration never
+                // evaluated, and the record keeps a NaN-loss row
+                // (best_loss is immune — f64::min returns the finite
+                // side). `resync` with NO finite candidate degenerates
+                // to the same thing.
+                NonFinite::Skip => {
+                    self.history.abandon_loan();
+                    return Ok((n_evals, f64::NAN, f64::NAN, aux, worker_max, eval_span));
+                }
+                NonFinite::Resync if poisoned.len() == eval_points.len() => {
+                    self.history.abandon_loan();
+                    return Ok((n_evals, f64::NAN, f64::NAN, aux, worker_max, eval_span));
+                }
+                NonFinite::Resync => true,
+            }
+        };
         // Optimizer steps and norms read the loaned rows in place, then
         // each commit turns its loan into a real push (θ-subset gather
         // only — the gradient never moves again).
@@ -498,7 +661,23 @@ impl Driver {
             for p in &points {
                 self.history.commit(p);
             }
-            let sel = self.cfg.optex.selection.select(&losses, &grad_norms);
+            let sel = if resync {
+                // evict the poisoned rows just committed (plus any older
+                // stragglers); the epoch bump forces a full GP refit, so
+                // garbage never reaches another estimate. Selection is
+                // then restricted to the finite candidates — under
+                // `last` that means the last finite point, never a
+                // poisoned θ.
+                self.history.retain_finite();
+                let finite: Vec<usize> =
+                    (0..n).filter(|i| !poisoned.contains(i)).collect();
+                let fl: Vec<f64> = finite.iter().map(|&i| losses[i]).collect();
+                let fg: Vec<f64> =
+                    finite.iter().map(|&i| grad_norms[i]).collect();
+                finite[self.cfg.optex.selection.select(&fl, &fg)]
+            } else {
+                self.cfg.optex.selection.select(&losses, &grad_norms)
+            };
             (sel, candidates, losses, grad_norms)
         } else {
             // single evaluation at the last proxy point
@@ -760,6 +939,134 @@ mod tests {
             dp.best_loss(),
             van.best_loss()
         );
+    }
+
+    #[test]
+    fn injected_transient_eval_err_retries_bit_identically() {
+        let mut clean = driver(&cfg(Method::Optex, 4, 8));
+        clean.run().unwrap();
+        // iteration 2: the ring (4 rows, cap 10) has free slots, so the
+        // abandoned loans never clobber live history, and the pre-oracle
+        // injection never advances the oracle's RNG — the retried run
+        // must be bit-identical to the fault-free one
+        let mut c = cfg(Method::Optex, 4, 8);
+        c.faults = "eval_err@i2*2".into();
+        c.optex.retry_max = 2;
+        let mut drv = driver(&c);
+        let rec = drv.run().unwrap();
+        assert_eq!(rec.retries, 2);
+        assert_eq!(rec.nonfinite, 0);
+        assert_eq!(drv.theta(), clean.theta());
+    }
+
+    #[test]
+    fn retry_budget_exhaustion_fails_the_iteration() {
+        let mut c = cfg(Method::Optex, 4, 8);
+        c.faults = "eval_err@i2*0".into(); // unlimited shots
+        c.optex.retry_max = 3;
+        let mut drv = driver(&c);
+        let err = driver_err(&mut drv);
+        assert!(err.contains("injected fault: eval_err"), "{err}");
+        assert!(err.contains("after 3 retries"), "{err}");
+        assert_eq!(drv.record().retries, 3);
+    }
+
+    fn driver_err(drv: &mut Driver) -> String {
+        format!("{:#}", drv.run().unwrap_err())
+    }
+
+    #[test]
+    fn nonfinite_fail_policy_names_the_poisoned_points() {
+        let mut c = cfg(Method::Optex, 4, 8);
+        c.faults = "nan_row@i2.p1".into();
+        let mut drv = driver(&c);
+        let err = driver_err(&mut drv);
+        assert!(err.contains("non-finite eval results at iteration 2"), "{err}");
+        assert!(err.contains("[1]"), "{err}");
+        assert_eq!(drv.record().nonfinite, 1);
+    }
+
+    #[test]
+    fn nonfinite_skip_keeps_theta_and_best_loss_finite() {
+        let mut c = cfg(Method::Optex, 4, 8);
+        c.faults = "nan_row@i3*0".into(); // every point of iteration 3
+        c.optex.on_nonfinite = crate::config::NonFinite::Skip;
+        let mut drv = driver(&c);
+        let rec = drv.run().unwrap();
+        assert_eq!(rec.nonfinite, 4);
+        assert!(drv.theta().iter().all(|v| v.is_finite()));
+        assert!(drv.best_loss().is_finite());
+        // the skipped iteration is recorded with a NaN loss; best_loss
+        // sails through (f64::min semantics)
+        assert!(rec.rows[2].loss.is_nan());
+        assert!(rec.rows[2].best_loss.is_finite());
+        assert_eq!(rec.rows.len(), 8);
+    }
+
+    #[test]
+    fn nonfinite_resync_recovers_and_selects_a_finite_candidate() {
+        let mut c = cfg(Method::Optex, 4, 10);
+        // poison the LAST point — the default `last` selection would
+        // accept exactly this θ without the resync exclusion
+        c.faults = "nan_row@i4.p3".into();
+        c.optex.on_nonfinite = crate::config::NonFinite::Resync;
+        let mut drv = driver(&c);
+        let rec = drv.run().unwrap();
+        assert_eq!(rec.nonfinite, 1);
+        assert!(
+            drv.theta().iter().all(|v| v.is_finite()),
+            "resync must never accept a poisoned candidate"
+        );
+        assert!(
+            rec.rows.last().unwrap().loss.is_finite(),
+            "losses recover after the poisoned iteration"
+        );
+        let (_, grads) = drv.history.views();
+        assert!(
+            grads.iter().all(|g| g.iter().all(|v| v.is_finite())),
+            "no poisoned row may survive in history"
+        );
+        assert!(drv.gp_rebuilds() >= 1, "eviction must force a full GP refit");
+    }
+
+    #[test]
+    fn eval_deadline_trips_on_injected_delay_and_retry_recovers() {
+        let mut c = cfg(Method::Optex, 4, 6);
+        c.faults = "eval_delay:60@i2".into();
+        c.optex.eval_timeout_s = 0.02;
+        c.optex.retry_max = 1;
+        let mut drv = driver(&c);
+        let rec = drv.run().unwrap();
+        assert_eq!(rec.retries, 1);
+        assert!(drv.best_loss().is_finite());
+        // without a retry budget the deadline is terminal
+        let mut c = cfg(Method::Optex, 4, 6);
+        c.faults = "eval_delay:60@i2".into();
+        c.optex.eval_timeout_s = 0.02;
+        let mut drv = driver(&c);
+        let err = driver_err(&mut drv);
+        assert!(err.contains("exceeded optex.eval_timeout_s"), "{err}");
+    }
+
+    #[test]
+    fn injected_ckpt_faults_fail_or_tear_the_write() {
+        let dir = std::env::temp_dir().join("optex_ckpt_fault_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut c = cfg(Method::Optex, 4, 4);
+        c.faults = "ckpt_fail@i2 ; ckpt_torn@i3".into();
+        let mut drv = driver(&c);
+        drv.run().unwrap();
+        let p = dir.join("ck.bin");
+        let err = drv.save_checkpoint(&p, 2).unwrap_err();
+        assert!(format!("{err:#}").contains("injected fault: ckpt_fail"));
+        assert!(!p.exists(), "ckpt_fail must not leave a file behind");
+        // the torn write reports success — the tear surfaces at read time
+        drv.save_checkpoint(&p, 3).unwrap();
+        assert!(crate::coordinator::checkpoint::Checkpoint::read(&p).is_err());
+        // the plan is exhausted: the next write is clean and reads back
+        drv.save_checkpoint(&p, 4).unwrap();
+        crate::coordinator::checkpoint::Checkpoint::read(&p).unwrap();
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

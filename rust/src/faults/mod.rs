@@ -1,0 +1,394 @@
+//! Deterministic, config-driven fault injection (ISSUE 7 tentpole).
+//!
+//! A [`FaultPlan`] is a parsed `faults = "..."` spec: an ordered list of
+//! clauses, each naming an injection **site**, an optional selector
+//! keying it to (session, iteration, point-index), and a shot count.
+//! The driver, checkpoint writer and scheduler *ask* the plan at each
+//! named site; the plan answers from config alone — never from wall
+//! clock or randomness — so a faulted run is exactly as deterministic
+//! as a clean one and can be golden-ed by the scenario corpus.
+//!
+//! ## Spec grammar
+//!
+//! ```text
+//! faults = "clause ; clause ; ..."
+//! clause = site[:arg][@selector][*count]
+//! selector = s<session> . i<iteration> . p<point>   (any subset, any order)
+//! ```
+//!
+//! | site | effect at its injection point |
+//! |---|---|
+//! | `eval_err` | the eval fan-out attempt fails with an injected `Err` *before* the oracle runs (the oracle's RNG streams do not advance) |
+//! | `eval_panic` | the eval fan-out attempt panics on the driver thread (quarantined by the serve tier's `catch_unwind`) |
+//! | `nan_row` | point `p`'s gradient row is overwritten with `NaN` after a successful eval (poisons the GP history unless `optex.on_nonfinite` intervenes) |
+//! | `inf_row` | same, with `+Inf` |
+//! | `eval_delay:<ms>` | the fan-out attempt sleeps `<ms>` milliseconds inside the timed span (a hung eval; trips `optex.eval_timeout_s`) |
+//! | `ckpt_torn` | `Driver::save_checkpoint` writes the file, then truncates it to half — the torn file a `kill -9` mid-write would leave |
+//! | `ckpt_fail` | `Driver::save_checkpoint` fails without writing |
+//! | `manifest_fail` | one scheduler manifest rewrite is dropped (simulated failed disk write; selectors other than `*count` do not apply) |
+//!
+//! Omitted selector keys are wildcards. `*count` caps how many times the
+//! clause fires (default 1 — the natural encoding of a *transient*
+//! fault); `*0` means unlimited. Clauses are consulted in spec order and
+//! the first live match fires and is consumed. A `nan_row`/`inf_row`
+//! clause without a `p` key matches every point index, so with the
+//! default single shot it poisons only the first point of the matching
+//! fan-out — give `p` explicitly (or `*0`) to poison more.
+//!
+//! Examples:
+//!
+//! ```text
+//! eval_err@i3*2                      # iteration 3 fails twice, then succeeds
+//! nan_row@s5.i2.p0                   # session 5, iteration 2, point 0 → NaN row
+//! eval_delay:200@i2 ; ckpt_torn@s1   # a hung eval and one torn suspend-checkpoint
+//! ```
+//!
+//! Shot counts live in `Cell`s so consumption works through `&self`
+//! (`Driver::save_checkpoint` takes `&self`); a `FaultPlan` is intended
+//! to be owned by exactly one driver or scheduler, never shared across
+//! threads.
+
+use std::cell::Cell;
+
+use anyhow::{anyhow, bail, Result};
+
+/// A named injection site (with its argument, where the site takes one).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Site {
+    EvalErr,
+    EvalPanic,
+    NanRow,
+    InfRow,
+    EvalDelay { ms: u64 },
+    CkptTorn,
+    CkptFail,
+    ManifestFail,
+}
+
+/// How an injected checkpoint write fails.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CkptFault {
+    /// The write errors; nothing lands on disk.
+    Fail,
+    /// The write "succeeds" but the file is truncated to half its bytes
+    /// — what a kill mid-write leaves behind.
+    Torn,
+}
+
+#[derive(Debug)]
+struct Clause {
+    site: Site,
+    session: Option<u64>,
+    iter: Option<u64>,
+    point: Option<usize>,
+    /// Shots left; `u64::MAX` encodes unlimited (`*0`).
+    remaining: Cell<u64>,
+}
+
+impl Clause {
+    fn matches(&self, session: u64, iter: u64, point: Option<usize>) -> bool {
+        self.remaining.get() > 0
+            && self.session.map_or(true, |s| s == session)
+            && self.iter.map_or(true, |i| i == iter)
+            && match (self.point, point) {
+                (None, _) => true,
+                (Some(p), Some(q)) => p == q,
+                (Some(_), None) => false,
+            }
+    }
+
+    fn consume(&self) {
+        let r = self.remaining.get();
+        if r != u64::MAX {
+            self.remaining.set(r - 1);
+        }
+    }
+}
+
+/// A parsed fault spec. The empty plan (default, `faults = ""`) never
+/// fires and costs one `Vec::is_empty` check per query.
+#[derive(Debug, Default)]
+pub struct FaultPlan {
+    clauses: Vec<Clause>,
+}
+
+impl FaultPlan {
+    /// Parse a spec string (see module docs for the grammar). The empty
+    /// / whitespace-only spec parses to the empty plan.
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let mut clauses = Vec::new();
+        for raw in spec.split(';') {
+            let text = raw.trim();
+            if text.is_empty() {
+                continue;
+            }
+            clauses.push(parse_clause(text)?);
+        }
+        Ok(FaultPlan { clauses })
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.clauses.is_empty()
+    }
+
+    /// First live clause whose site satisfies `want` and whose selector
+    /// matches; fires (consumes a shot) and returns the site.
+    fn take(
+        &self,
+        want: impl Fn(&Site) -> bool,
+        session: u64,
+        iter: u64,
+        point: Option<usize>,
+    ) -> Option<Site> {
+        for c in &self.clauses {
+            if want(&c.site) && c.matches(session, iter, point) {
+                c.consume();
+                return Some(c.site);
+            }
+        }
+        None
+    }
+
+    /// Should this eval fan-out attempt fail with an injected `Err`?
+    pub fn take_eval_err(&self, session: u64, iter: u64) -> bool {
+        self.take(|s| *s == Site::EvalErr, session, iter, None).is_some()
+    }
+
+    /// Should this eval fan-out attempt panic?
+    pub fn take_eval_panic(&self, session: u64, iter: u64) -> bool {
+        self.take(|s| *s == Site::EvalPanic, session, iter, None).is_some()
+    }
+
+    /// Milliseconds this eval fan-out attempt should hang, if any.
+    pub fn take_eval_delay(&self, session: u64, iter: u64) -> Option<u64> {
+        match self.take(|s| matches!(s, Site::EvalDelay { .. }), session, iter, None) {
+            Some(Site::EvalDelay { ms }) => Some(ms),
+            _ => None,
+        }
+    }
+
+    /// Poison value for point `p`'s gradient row after a successful
+    /// eval, if a row fault matches.
+    pub fn take_row_poison(&self, session: u64, iter: u64, p: usize) -> Option<f32> {
+        match self.take(
+            |s| matches!(s, Site::NanRow | Site::InfRow),
+            session,
+            iter,
+            Some(p),
+        ) {
+            Some(Site::NanRow) => Some(f32::NAN),
+            Some(Site::InfRow) => Some(f32::INFINITY),
+            _ => None,
+        }
+    }
+
+    /// Injected checkpoint-write failure mode, if any.
+    pub fn take_ckpt(&self, session: u64, iter: u64) -> Option<CkptFault> {
+        match self.take(
+            |s| matches!(s, Site::CkptTorn | Site::CkptFail),
+            session,
+            iter,
+            None,
+        ) {
+            Some(Site::CkptTorn) => Some(CkptFault::Torn),
+            Some(Site::CkptFail) => Some(CkptFault::Fail),
+            _ => None,
+        }
+    }
+
+    /// Should the next scheduler manifest rewrite be dropped? Manifest
+    /// clauses support only `*count` — session/iteration/point keys
+    /// never match here (the manifest is not session-scoped).
+    pub fn take_manifest_fail(&self) -> bool {
+        for c in &self.clauses {
+            if c.site == Site::ManifestFail
+                && c.session.is_none()
+                && c.iter.is_none()
+                && c.point.is_none()
+                && c.remaining.get() > 0
+            {
+                c.consume();
+                return true;
+            }
+        }
+        false
+    }
+}
+
+fn parse_clause(text: &str) -> Result<Clause> {
+    let (body, remaining) = match text.rsplit_once('*') {
+        Some((b, n)) => {
+            let shots: u64 = n.trim().parse().map_err(|_| {
+                anyhow!("faults: bad shot count {n:?} in clause {text:?}")
+            })?;
+            (b.trim(), if shots == 0 { u64::MAX } else { shots })
+        }
+        None => (text, 1),
+    };
+    let (head, selector) = match body.split_once('@') {
+        Some((h, s)) => (h.trim(), Some(s.trim())),
+        None => (body, None),
+    };
+    let (site_name, arg) = match head.split_once(':') {
+        Some((s, a)) => (s.trim(), Some(a.trim())),
+        None => (head, None),
+    };
+    let site = match (site_name, arg) {
+        ("eval_err", None) => Site::EvalErr,
+        ("eval_panic", None) => Site::EvalPanic,
+        ("nan_row", None) => Site::NanRow,
+        ("inf_row", None) => Site::InfRow,
+        ("eval_delay", Some(ms)) => Site::EvalDelay {
+            ms: ms.parse().map_err(|_| {
+                anyhow!("faults: eval_delay wants milliseconds, got {ms:?}")
+            })?,
+        },
+        ("ckpt_torn", None) => Site::CkptTorn,
+        ("ckpt_fail", None) => Site::CkptFail,
+        ("manifest_fail", None) => Site::ManifestFail,
+        _ => bail!(
+            "faults: unknown site or bad argument in clause {text:?} \
+             (sites: eval_err, eval_panic, nan_row, inf_row, eval_delay:<ms>, \
+             ckpt_torn, ckpt_fail, manifest_fail)"
+        ),
+    };
+    let (mut session, mut iter, mut point) = (None, None, None);
+    if let Some(sel) = selector {
+        if sel.is_empty() {
+            bail!("faults: empty selector in clause {text:?}");
+        }
+        for tok in sel.split('.') {
+            let tok = tok.trim();
+            let num = |v: &str| {
+                v.parse::<u64>().map_err(|_| {
+                    anyhow!("faults: bad selector {tok:?} in clause {text:?}")
+                })
+            };
+            if let Some(v) = tok.strip_prefix('s') {
+                session = Some(num(v)?);
+            } else if let Some(v) = tok.strip_prefix('i') {
+                iter = Some(num(v)?);
+            } else if let Some(v) = tok.strip_prefix('p') {
+                point = Some(num(v)? as usize);
+            } else {
+                bail!(
+                    "faults: bad selector {tok:?} in clause {text:?} \
+                     (use s<session>.i<iteration>.p<point>)"
+                );
+            }
+        }
+    }
+    Ok(Clause { site, session, iter, point, remaining: Cell::new(remaining) })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_and_whitespace_specs_parse_to_empty_plans() {
+        assert!(FaultPlan::parse("").unwrap().is_empty());
+        assert!(FaultPlan::parse("  ;  ; ").unwrap().is_empty());
+        assert!(!FaultPlan::default().take_eval_err(1, 1));
+    }
+
+    #[test]
+    fn selector_keys_gate_firing() {
+        let p = FaultPlan::parse("eval_err@s2.i3").unwrap();
+        assert!(!p.take_eval_err(1, 3), "wrong session");
+        assert!(!p.take_eval_err(2, 2), "wrong iteration");
+        assert!(p.take_eval_err(2, 3));
+        assert!(!p.take_eval_err(2, 3), "single shot consumed");
+    }
+
+    #[test]
+    fn default_count_is_one_and_star_zero_is_unlimited() {
+        let p = FaultPlan::parse("eval_err@i1 ; eval_panic@i2*0").unwrap();
+        assert!(p.take_eval_err(0, 1));
+        assert!(!p.take_eval_err(0, 1));
+        for _ in 0..10 {
+            assert!(p.take_eval_panic(0, 2));
+        }
+    }
+
+    #[test]
+    fn transient_counts_consume_in_order() {
+        let p = FaultPlan::parse("eval_err@i3*2").unwrap();
+        assert!(p.take_eval_err(7, 3));
+        assert!(p.take_eval_err(7, 3));
+        assert!(!p.take_eval_err(7, 3), "two shots exhausted");
+    }
+
+    #[test]
+    fn row_poison_values_and_point_keys() {
+        let p = FaultPlan::parse("nan_row@i2.p1 ; inf_row@i2.p2").unwrap();
+        assert!(p.take_row_poison(0, 2, 0).is_none());
+        let v = p.take_row_poison(0, 2, 1).unwrap();
+        assert!(v.is_nan());
+        let v = p.take_row_poison(0, 2, 2).unwrap();
+        assert!(v.is_infinite() && v > 0.0);
+        // pointless second asks: consumed
+        assert!(p.take_row_poison(0, 2, 1).is_none());
+    }
+
+    #[test]
+    fn pointless_row_clause_matches_first_point_only_per_shot() {
+        let p = FaultPlan::parse("nan_row@i5").unwrap();
+        assert!(p.take_row_poison(0, 5, 0).is_some());
+        assert!(p.take_row_poison(0, 5, 1).is_none(), "single shot spent on p0");
+    }
+
+    #[test]
+    fn delay_and_ckpt_and_manifest_sites() {
+        let p = FaultPlan::parse(
+            "eval_delay:250@i2 ; ckpt_torn@s1 ; ckpt_fail@s2 ; manifest_fail*2",
+        )
+        .unwrap();
+        assert_eq!(p.take_eval_delay(0, 2), Some(250));
+        assert_eq!(p.take_eval_delay(0, 2), None);
+        assert_eq!(p.take_ckpt(1, 9), Some(CkptFault::Torn));
+        assert_eq!(p.take_ckpt(1, 9), None);
+        assert_eq!(p.take_ckpt(2, 1), Some(CkptFault::Fail));
+        assert!(p.take_manifest_fail());
+        assert!(p.take_manifest_fail());
+        assert!(!p.take_manifest_fail());
+    }
+
+    #[test]
+    fn manifest_fail_ignores_selector_scoped_clauses() {
+        let p = FaultPlan::parse("manifest_fail@s1").unwrap();
+        assert!(!p.take_manifest_fail(), "selector-scoped manifest clause never fires");
+    }
+
+    #[test]
+    fn clause_order_is_priority_order() {
+        let p = FaultPlan::parse("nan_row@i1.p0 ; inf_row@i1.p0").unwrap();
+        assert!(p.take_row_poison(0, 1, 0).unwrap().is_nan(), "first clause wins");
+        assert!(p.take_row_poison(0, 1, 0).unwrap().is_infinite());
+    }
+
+    #[test]
+    fn parse_rejects_bad_specs() {
+        for bad in [
+            "frobnicate",
+            "eval_err:5",
+            "eval_delay",
+            "eval_delay:fast",
+            "eval_err@x3",
+            "eval_err@",
+            "eval_err@s",
+            "eval_err*many",
+            "nan_row@p-1",
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn spec_is_whitespace_tolerant() {
+        let p = FaultPlan::parse(" eval_err @ i2 * 2 ; eval_delay:9 @ s1 . i3 ");
+        let p = p.unwrap();
+        assert!(p.take_eval_err(0, 2));
+        assert_eq!(p.take_eval_delay(1, 3), Some(9));
+    }
+}

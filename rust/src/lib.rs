@@ -30,6 +30,7 @@ pub mod bench;
 pub mod cli;
 pub mod config;
 pub mod coordinator;
+pub mod faults;
 pub mod figures;
 pub mod gp;
 pub mod opt;

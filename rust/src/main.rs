@@ -27,10 +27,13 @@ USAGE:
   optex run  [--config FILE] [--workload W] [--method M] [--steps T]
              [--seed S] [--fit full|incremental] [--threads K]
              [--pool scoped|persistent] [--gp-refresh-every K]
-             [--checkpoint FILE] [--resume FILE] [--set key=value ...]
+             [--checkpoint FILE] [--resume FILE]
+             [--faults SPEC]          # deterministic fault plan; see faults/ docs
+             [--set key=value ...]
   optex serve [--config FILE] [--addr HOST:PORT] [--max-sessions K]
               [--threads K] [--pool scoped|persistent] [--policy rr|fair]
               [--adopt]               # adopt serve.ckpt_dir's session manifest
+              [--faults SPEC]         # injected into sessions by (s,i,p) key
               [--set key=value ...]   # JSONL protocol; see serve/ docs
   optex fig  <2|3|4a|4b|6|6a..6d|7|8|9|10|kernels|estbound|nativehlo|all>
              [--seeds K] [--steps T] [--quick] [--out DIR] [--artifacts DIR]
@@ -124,6 +127,11 @@ fn load_config(args: &Args) -> anyhow::Result<RunConfig> {
     }
     if let Some(k) = args.opt_usize("gp-refresh-every")? {
         cfg.apply_override(&format!("optex.gp_refresh_every={k}"))?;
+    }
+    if let Some(f) = args.opt("faults") {
+        // quoted: a bare fault spec would be re-typed by the override
+        // value grammar at the first `:` argument
+        cfg.apply_override(&format!("faults={:?}", f))?;
     }
     if let Some(a) = args.opt("artifacts") {
         cfg.artifacts_dir = PathBuf::from(a);

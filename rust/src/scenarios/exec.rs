@@ -35,6 +35,11 @@ pub struct Outcome {
     pub theta: Option<Vec<f32>>,
     /// Arbiter grant of the last quantum (None without an arbiter).
     pub granted: Option<usize>,
+    /// Retried eval fan-outs (ISSUE 7) — deterministic under injected
+    /// faults, so golden-able.
+    pub retries: u64,
+    /// Non-finite points absorbed by `optex.on_nonfinite`.
+    pub nonfinite: u64,
 }
 
 /// Materialize the scenario's `[config]` on top of defaults. Scenarios
@@ -88,6 +93,8 @@ fn outcome_of(s: &Session) -> Outcome {
         rows: s.rows(),
         theta: s.theta(),
         granted: s.granted_threads(),
+        retries: s.retries(),
+        nonfinite: s.nonfinite(),
     }
 }
 
@@ -97,9 +104,15 @@ fn run_serve(spec: &ScenarioSpec, cfg: &RunConfig, scratch: &Path) -> Result<Out
     if let Some(k) = so.physical_threads {
         sched.set_physical_pool(NativePool::new(k));
     }
+    // scheduler-owned fault sites (manifest_fail) fire from the same
+    // spec string; session-keyed sites fire from each session's own cfg
+    sched.set_fault_plan(crate::faults::FaultPlan::parse(&cfg.faults)?);
     let primary = sched.submit(cfg.clone(), spec.budget.clone())?;
     // Peers: same workload, offset seeds — distinct trajectories sharing
     // the scheduler, so interleaving has real cross-talk to NOT have.
+    // NOTE peers inherit cfg.faults verbatim: fault scenarios in serve
+    // modes must key their clauses on the primary (`@s1...`) unless they
+    // mean to poison the whole fleet.
     for i in 0..so.peers {
         let mut peer = cfg.clone();
         peer.seed = cfg.seed.wrapping_add(101 + i as u64);
@@ -141,6 +154,7 @@ fn run_serve(spec: &ScenarioSpec, cfg: &RunConfig, scratch: &Path) -> Result<Out
             if let Some(k) = so.physical_threads {
                 adopter.set_physical_pool(NativePool::new(k));
             }
+            adopter.set_fault_plan(crate::faults::FaultPlan::parse(&cfg.faults)?);
             adopter.adopt_manifest()?;
             let ids: Vec<u64> = adopter.sessions().map(Session::id).collect();
             for id in ids {

@@ -61,6 +61,11 @@ pub fn render(name: &str, out: &Outcome) -> String {
     let err = out.error.as_deref().unwrap_or("-").replace('\n', "\\n");
     s.push_str(&format!("error = {err}\n"));
     s.push_str(&format!("iters = {}\n", out.iters));
+    // robustness counters (ISSUE 7): deterministic under injected
+    // faults, so fault-free goldens pin them at 0 and fault scenarios
+    // pin the exact retry/absorption counts
+    s.push_str(&format!("retries = {}\n", out.retries));
+    s.push_str(&format!("nonfinite = {}\n", out.nonfinite));
     for r in &out.rows {
         s.push_str(&row_line(r));
         s.push('\n');
@@ -118,6 +123,8 @@ mod tests {
             rows: vec![row(1, 3.5), row(2, 1.25)],
             theta: Some(vec![1.0, -0.5, 0.25]),
             granted: None,
+            retries: 0,
+            nonfinite: 0,
         }
     }
 
@@ -133,6 +140,8 @@ mod tests {
         assert_eq!(a, render("case", &other), "wall-clock leaked into the render");
         assert!(a.contains("state = done"));
         assert!(a.contains("stop_reason = max_iters"));
+        assert!(a.contains("retries = 0"));
+        assert!(a.contains("nonfinite = 0"));
         assert!(a.contains("theta_dim = 3"));
         // bit-level change in a deterministic field must change the text
         let mut bumped = outcome();

@@ -94,6 +94,11 @@ pub struct Expect {
     pub iters: Option<u64>,
     /// Arbiter-granted pool width of the primary's last quantum.
     pub granted: Option<usize>,
+    /// Exact retried-fan-out count (ISSUE 7 — asserts the RetryPolicy
+    /// actually absorbed the injected transient errors).
+    pub retries: Option<u64>,
+    /// Exact non-finite-point count absorbed by `optex.on_nonfinite`.
+    pub nonfinite: Option<u64>,
 }
 
 /// One parsed scenario file.
@@ -173,6 +178,14 @@ impl ScenarioSpec {
                 continue;
             }
             match k.as_str() {
+                // sugar for `config.faults`: the fault plan reads as a
+                // top-level scenario property ("this case injects X"),
+                // but it IS config — it travels to peers and manifests
+                // exactly like any other key, so session-keyed selectors
+                // (`@s1`) matter in serve modes (see scenarios/README.md)
+                "faults" => {
+                    spec.config.push(("faults".to_string(), v.clone()));
+                }
                 "mode" => {
                     spec.mode = Mode::parse(need_str(k, v)?).ok_or_else(|| {
                         anyhow!("{k}: unknown mode (solo|serve|suspend_resume|kill_adopt)")
@@ -218,6 +231,12 @@ impl ScenarioSpec {
                 }
                 "expect.iters" => spec.expect.iters = Some(need_usize(k, v)? as u64),
                 "expect.granted" => spec.expect.granted = Some(need_usize(k, v)?),
+                "expect.retries" => {
+                    spec.expect.retries = Some(need_usize(k, v)? as u64)
+                }
+                "expect.nonfinite" => {
+                    spec.expect.nonfinite = Some(need_usize(k, v)? as u64)
+                }
                 _ => bail!("{k}: unknown scenario key"),
             }
         }
@@ -305,6 +324,30 @@ mod tests {
             ]
         );
         assert!(!spec.pins_threads());
+    }
+
+    #[test]
+    fn faults_key_is_config_sugar_with_expect_counters() {
+        let spec = ScenarioSpec::parse(
+            "f",
+            r#"
+            faults = "eval_err@s1.i2*2"
+            [config]
+            workload = "sphere"
+            [config.optex]
+            retry_max = 2
+            [expect]
+            retries = 2
+            nonfinite = 0
+            "#,
+        )
+        .unwrap();
+        assert!(spec
+            .config
+            .iter()
+            .any(|(k, v)| k == "faults" && v.as_str() == Some("eval_err@s1.i2*2")));
+        assert_eq!(spec.expect.retries, Some(2));
+        assert_eq!(spec.expect.nonfinite, Some(0));
     }
 
     #[test]

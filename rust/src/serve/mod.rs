@@ -104,6 +104,23 @@
 //! See `protocol.rs` for the full grammar, `manifest.rs` for adoption
 //! semantics, and `config::ServeParams` (`[serve]` table) for the
 //! server knobs.
+//!
+//! ## Failure domains (ISSUE 7)
+//!
+//! One poisoned session must never take down the serve tier. The fault
+//! sites below are injectable deterministically via the `faults` config
+//! spec (see [`crate::faults`]); for each, what dies, what survives, and
+//! what the client observes:
+//!
+//! | fault site | what dies | what survives | client observes |
+//! |---|---|---|---|
+//! | oracle `Err` (`eval_err`) | one fan-out attempt | the session, after retries (`optex.retry_max`, linear backoff); Failed only when the budget is exhausted | `status.retries` climbs; on exhaustion `state:"failed"` with the error text |
+//! | oracle panic (`eval_panic`) | the session's driver (arena + loan dropped at the `catch_unwind` boundary in `Session::step`) | the serve loop and every other session, bit-identical to fault-free runs | `state:"failed"`, `"quarantined":true`, `error:"panic in Driver::iteration: ..."` |
+//! | NaN/Inf gradients (`nan_row`/`inf_row`) | nothing (`skip`/`resync`) or the session (`fail`) per `optex.on_nonfinite` | history hygiene: `resync` evicts poisoned rows and forces a GP refit | `status.nonfinite` climbs; under `fail`, `state:"failed"` naming the poisoned points |
+//! | hung eval (`eval_delay` + `optex.eval_timeout_s`) | one fan-out attempt (post-hoc deadline check — deterministic, never in goldens) | the session, via the same retry path as `eval_err` | retries, then an error naming the configured deadline |
+//! | torn/failed suspend checkpoint (`ckpt_torn`/`ckpt_fail`) | one suspend (pause errors) or one resume (falls back per the stray-checkpoint rules) | the session where recoverable: a torn *adoption* checkpoint re-runs from seed instead of failing | pause error line, or a seed re-run after `--adopt` |
+//! | dropped manifest rewrite (`manifest_fail`) | one durability write (scheduler-owned site) | the server; the next mutation rewrites the manifest | nothing, unless the server dies inside the window — then `--adopt` sees the stale manifest |
+//! | client floods (>`serve.max_conns` conns, >1 MiB line) | the offending connection | everything else (shed at accept / reader) | `"too many connections"` / `"request line too long"` error line |
 
 pub mod manifest;
 pub mod protocol;

@@ -43,7 +43,7 @@
 //! {"cmd":"submit","config":{"workload":"ackley","synth_dim":256,"steps":40,"seed":7,"optex.parallelism":4},"budget":{"target_loss":0.5}}
 //! {"id":1,"ok":true,"state":"pending"}
 //! {"cmd":"status","id":1}
-//! {"best_loss":2.1373822689056396,"id":1,"iters":12,"ok":true,"state":"running","workload":"ackley"}
+//! {"best_loss":2.1373822689056396,"id":1,"iters":12,"nonfinite":0,"ok":true,"retries":0,"state":"running","workload":"ackley"}
 //! {"cmd":"status"}
 //! {"ok":true,"sessions":[{"best_loss":0.49126,"id":1,"iters":23,"state":"done",...}]}
 //! {"cmd":"result","id":1,"theta":true}
@@ -321,7 +321,16 @@ fn session_fields(s: &Session) -> Vec<(&'static str, Json)> {
         ("iters", Json::Num(s.iters_done() as f64)),
         ("best_loss", num_or_null(s.best_loss())),
         ("suspended", Json::Bool(s.is_suspended())),
+        // robustness counters (ISSUE 7): retried fan-outs and absorbed
+        // non-finite points, cumulative across suspend cycles
+        ("retries", Json::Num(s.retries() as f64)),
+        ("nonfinite", Json::Num(s.nonfinite() as f64)),
     ];
+    if s.quarantined() {
+        // only present when a panicking oracle was caught — distinguishes
+        // the catch_unwind quarantine from a clean Err or client cancel
+        f.push(("quarantined", Json::Bool(true)));
+    }
     if let Some(l) = s.last_loss() {
         f.push(("loss", num_or_null(l)));
     }
@@ -579,6 +588,31 @@ mod tests {
         ] {
             assert!(Json::parse(&line).unwrap().get("event").is_none(), "{line}");
         }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn status_lines_carry_robustness_counters() {
+        let dir = crate::testutil::fixtures::tmp_ckpt_dir("proto_counters");
+        let mut cfg = crate::config::RunConfig::default();
+        cfg.workload = "sphere".into();
+        cfg.steps = 3;
+        cfg.synth_dim = 16;
+        cfg.optex.parallelism = 2;
+        cfg.optex.t0 = 3;
+        cfg.optex.threads = 1;
+        cfg.optex.retry_max = 2;
+        cfg.faults = "eval_err@i2".into();
+        let mut s = Session::build(1, cfg, Budget::default(), &dir).unwrap();
+        while s.is_runnable() {
+            s.step();
+        }
+        let v = Json::parse(&status_line(&s)).unwrap();
+        assert_eq!(v.get("retries").unwrap().as_usize(), Some(1));
+        assert_eq!(v.get("nonfinite").unwrap().as_usize(), Some(0));
+        assert!(v.get("quarantined").is_none(), "clean session never quarantined");
+        let r = Json::parse(&result_line(&s, false)).unwrap();
+        assert_eq!(r.get("retries").unwrap().as_usize(), Some(1));
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -66,6 +66,7 @@ use std::path::PathBuf;
 use anyhow::{bail, Context, Result};
 
 use crate::config::RunConfig;
+use crate::faults::FaultPlan;
 use crate::runtime::NativePool;
 use crate::serve::manifest;
 use crate::serve::session::{Budget, Session};
@@ -157,6 +158,11 @@ pub struct Scheduler {
     /// driver keeps the pool it resolved from its own config — the
     /// in-process test/bench path). The server always installs one.
     arbiter: Option<Arbiter>,
+    /// Server-level fault plan (ISSUE 7): only the selector-free
+    /// `manifest_fail` site lives here — manifest writes are a scheduler
+    /// concern, not any one session's. Per-session fault plans travel in
+    /// each session's own `cfg.faults`.
+    fault_plan: FaultPlan,
 }
 
 impl Scheduler {
@@ -170,6 +176,7 @@ impl Scheduler {
             ckpt_dir,
             rr_last: 0,
             arbiter: None,
+            fault_plan: FaultPlan::default(),
         }
     }
 
@@ -179,6 +186,15 @@ impl Scheduler {
     /// path).
     pub fn set_physical_pool(&mut self, physical: NativePool) {
         self.arbiter = Some(Arbiter::new(physical));
+    }
+
+    /// Install the server-level fault plan (from the serve config's
+    /// `faults` spec). Only scheduler-owned sites fire from it — today
+    /// that is `manifest_fail`, which drops manifest rewrites to exercise
+    /// the stale-manifest recovery paths. Session-keyed sites belong in
+    /// each submission's own config.
+    pub fn set_fault_plan(&mut self, plan: FaultPlan) {
+        self.fault_plan = plan;
     }
 
     /// The id the next admitted session will get (persisted in the
@@ -192,6 +208,13 @@ impl Scheduler {
     /// Best-effort: a full disk must degrade durability, not take the
     /// serve loop down mid-quantum.
     fn persist_manifest(&self) {
+        if self.fault_plan.take_manifest_fail() {
+            // injected durability fault: this rewrite is lost, exactly as
+            // if the process died between the mutation and the write —
+            // the next mutation (or adoption-time fallback) must cope
+            eprintln!("serve: manifest write failed (injected fault: manifest_fail)");
+            return;
+        }
         let entries: Vec<manifest::Entry> =
             self.sessions.values().filter_map(Session::manifest_entry).collect();
         let path = manifest::manifest_path(&self.ckpt_dir);
@@ -721,6 +744,66 @@ mod tests {
         }
         std::fs::remove_dir_all(
             &crate::testutil::fixtures::tmp_ckpt_dir("arbiter"),
+        )
+        .ok();
+    }
+
+    #[test]
+    fn injected_manifest_fail_drops_one_rewrite_then_recovers() {
+        let dir = crate::testutil::fixtures::tmp_ckpt_dir("sched_mfail");
+        let mpath = manifest::manifest_path(&dir);
+        let mut s = Scheduler::new(8, Policy::RoundRobin, dir.clone());
+        s.set_fault_plan(FaultPlan::parse("manifest_fail").unwrap());
+        // the first rewrite (admission of a) is injected-lost
+        let a = s.submit(synth_cfg(1, 4), Budget::default()).unwrap();
+        assert!(!mpath.exists(), "injected manifest_fail must drop the rewrite");
+        // the plan is exhausted: the next mutation heals the manifest
+        let b = s.submit(synth_cfg(2, 4), Budget::default()).unwrap();
+        let (next_id, entries) = manifest::read(&mpath).unwrap();
+        assert_eq!(next_id, 3);
+        assert_eq!(entries.len(), 2);
+        assert!(entries.iter().any(|e| e.id == a));
+        assert!(entries.iter().any(|e| e.id == b));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn quarantined_session_leaves_peers_bit_identical() {
+        // one poisoned session must never take down the serve tier: the
+        // panicking oracle is quarantined into Failed, and every peer's
+        // trajectory stays bit-identical to its solo run
+        let solo: Vec<Vec<u32>> = [2u64, 3]
+            .iter()
+            .map(|&seed| {
+                let cfg = synth_cfg(seed, 4);
+                let workload = crate::workloads::factory::build(&cfg).unwrap();
+                let mut drv = crate::coordinator::Driver::new(cfg, workload).unwrap();
+                drv.run().unwrap();
+                drv.theta().iter().map(|x| x.to_bits()).collect()
+            })
+            .collect();
+        let mut s = sched(Policy::RoundRobin, 8, "quarantine");
+        let mut poisoned_cfg = synth_cfg(1, 4);
+        poisoned_cfg.faults = "eval_panic@s1.i2".into();
+        let bad = s.submit(poisoned_cfg, Budget::default()).unwrap();
+        let peers: Vec<u64> = [2u64, 3]
+            .iter()
+            .map(|&seed| s.submit(synth_cfg(seed, 4), Budget::default()).unwrap())
+            .collect();
+        s.run_to_completion();
+        let failed = s.session(bad).unwrap();
+        assert_eq!(failed.state(), SessionState::Failed);
+        let err = failed.error().expect("quarantined session records its error");
+        assert!(err.contains("injected fault: eval_panic"), "{err}");
+        for (i, id) in peers.iter().enumerate() {
+            let sess = s.session(*id).unwrap();
+            assert_eq!(sess.state(), SessionState::Done, "peer {id}");
+            let bits: Vec<u32> =
+                sess.theta().unwrap().iter().map(|x| x.to_bits()).collect();
+            assert_eq!(bits, solo[i], "quarantine perturbed peer {id}");
+        }
+        std::fs::remove_dir_all(
+            &crate::testutil::fixtures::tmp_ckpt_dir("quarantine"),
         )
         .ok();
     }

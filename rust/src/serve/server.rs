@@ -67,9 +67,10 @@ use crate::serve::session::Session;
 /// stream an endless newline-free line into server memory).
 const MAX_LINE_BYTES: u64 = 1 << 20;
 
-/// Cap on concurrently served connections (each costs one reader and
-/// one writer thread). Excess connects are dropped at accept.
-const MAX_CONNS: usize = 256;
+// NOTE: the connection cap moved to config (`serve.max_conns`, default
+// 256) so the untrusted-client hygiene tests can exercise cap behavior
+// without opening hundreds of sockets. MAX_LINE_BYTES stays a const:
+// the memory bound per connection is a server invariant, not tuning.
 
 /// What a connection's reader thread ships to the scheduler.
 enum ConnMsg {
@@ -130,6 +131,14 @@ impl Server {
             cfg.optex.threads,
             cfg.optex.pool,
         ));
+        // scheduler-owned fault sites (manifest_fail) come from the
+        // SERVER's fault spec; session-keyed sites fire from each
+        // submission's own cfg.faults (inherited from this base config
+        // unless the submit overrides it)
+        sched.set_fault_plan(
+            crate::faults::FaultPlan::parse(&cfg.faults)
+                .context("parsing serve fault plan")?,
+        );
         let mpath = manifest::manifest_path(&cfg.serve.ckpt_dir);
         if cfg.serve.adopt {
             if mpath.exists() {
@@ -161,9 +170,10 @@ impl Server {
         {
             let listener = listener.try_clone()?;
             let shutdown = Arc::clone(&shutdown);
+            let max_conns = cfg.serve.max_conns;
             std::thread::Builder::new()
                 .name("optex-serve-accept".into())
-                .spawn(move || accept_loop(listener, tx, shutdown))?;
+                .spawn(move || accept_loop(listener, tx, shutdown, max_conns))?;
         }
         Ok(Server {
             listener,
@@ -382,17 +392,22 @@ impl Server {
     }
 }
 
-fn accept_loop(listener: TcpListener, tx: Sender<Command>, shutdown: Arc<AtomicBool>) {
+fn accept_loop(
+    listener: TcpListener,
+    tx: Sender<Command>,
+    shutdown: Arc<AtomicBool>,
+    max_conns: usize,
+) {
     let conns = Arc::new(AtomicUsize::new(0));
     for conn in listener.incoming() {
         if shutdown.load(Ordering::SeqCst) {
             return;
         }
         let Ok(stream) = conn else { continue };
-        // connection cap: each connection holds a reader + writer
-        // thread; shed excess load at accept instead of exhausting
-        // threads
-        if conns.fetch_add(1, Ordering::SeqCst) >= MAX_CONNS {
+        // connection cap (`serve.max_conns`): each connection holds a
+        // reader + writer thread; shed excess load at accept instead of
+        // exhausting threads
+        if conns.fetch_add(1, Ordering::SeqCst) >= max_conns {
             conns.fetch_sub(1, Ordering::SeqCst);
             let mut s = stream;
             let _ = s.write_all(protocol::error_line("too many connections").as_bytes());

@@ -120,6 +120,13 @@ pub struct Session {
     /// released — the steady-state zero-alloc/zero-copy evidence for the
     /// serve bench (ISSUE 4 acceptance).
     counters: Option<(u64, u64)>,
+    /// Robustness counters carried across suspend cycles (the live
+    /// driver's part dies with it — ISSUE 7).
+    archived_retries: u64,
+    archived_nonfinite: u64,
+    /// True when the session was Failed by catching a panicking oracle
+    /// (the `catch_unwind` quarantine boundary in [`Session::step`]).
+    quarantined: bool,
     submitted_at: Instant,
     /// Cumulative driver `eval_wall_s` already accounted (resets with
     /// the driver on resume-from-suspend).
@@ -185,6 +192,9 @@ impl Session {
             error: None,
             final_theta: None,
             counters: None,
+            archived_retries: 0,
+            archived_nonfinite: 0,
+            quarantined: false,
             submitted_at: Instant::now(),
             eval_cum_seen: 0.0,
             eval_ema_s: 0.0,
@@ -305,6 +315,25 @@ impl Session {
         self.counters
     }
 
+    /// Eval fan-out retries across the whole session (archived + live
+    /// driver — survives suspend cycles).
+    pub fn retries(&self) -> u64 {
+        self.archived_retries + self.driver.as_ref().map(|d| d.retries()).unwrap_or(0)
+    }
+
+    /// Non-finite eval points absorbed by `optex.on_nonfinite` across
+    /// the whole session.
+    pub fn nonfinite(&self) -> u64 {
+        self.archived_nonfinite
+            + self.driver.as_ref().map(|d| d.nonfinite_events()).unwrap_or(0)
+    }
+
+    /// True when this session went Failed by quarantining a panicking
+    /// oracle (as opposed to a clean `Err` or a client cancel).
+    pub fn quarantined(&self) -> bool {
+        self.quarantined
+    }
+
     /// Smoothed measured eval-seconds per iteration (weighted-fair key).
     pub fn eval_ema_s(&self) -> f64 {
         self.eval_ema_s
@@ -405,7 +434,33 @@ impl Session {
         self.state = SessionState::Running;
         let t = (self.iters_done + 1) as usize;
         let drv = self.driver.as_mut().expect("runnable session has a driver");
-        let outcome = drv.iteration(t);
+        // Failure-domain boundary (ISSUE 7): a panicking oracle is
+        // quarantined HERE — whether it fired on the driver thread or
+        // was re-raised out of either pool mode, the payload stops at
+        // this frame, the session goes Failed with the message
+        // queryable via `status`, and `finish` drops the driver (arena
+        // and any outstanding loan included). The other K−1 sessions
+        // never observe it. AssertUnwindSafe is justified by exactly
+        // that drop: the possibly-inconsistent driver is never used
+        // again.
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            drv.iteration(t)
+        }));
+        let outcome = match outcome {
+            Ok(r) => r,
+            Err(payload) => {
+                self.quarantined = true;
+                self.finish(
+                    SessionState::Failed,
+                    None,
+                    Some(format!(
+                        "panic in Driver::iteration: {}",
+                        panic_message(payload.as_ref())
+                    )),
+                );
+                return;
+            }
+        };
         let cum = drv.eval_wall_s();
         if let Err(e) = outcome {
             self.finish(SessionState::Failed, None, Some(format!("{e:#}")));
@@ -436,6 +491,8 @@ impl Session {
         let drv = self.driver.take()?;
         self.archived_best = self.archived_best.min(drv.best_loss());
         self.archived_rows.extend(drv.record().rows.iter().cloned());
+        self.archived_retries += drv.retries();
+        self.archived_nonfinite += drv.nonfinite_events();
         self.counters =
             Some((drv.history().store_allocs(), drv.history().grad_bytes_copied()));
         Some(drv)
@@ -588,6 +645,18 @@ impl Session {
         }
         self.finish(SessionState::Failed, None, Some("cancelled by client".into()));
         Ok(())
+    }
+}
+
+/// Render a caught panic payload for the session's error field (the two
+/// payload types `panic!` produces, plus a fallback for exotic ones).
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".into()
     }
 }
 
@@ -897,6 +966,48 @@ mod tests {
         }
         assert!(s.pause().is_err(), "pause of a done session");
         assert!(s.cancel().is_err(), "cancel of a done session");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn panicking_oracle_is_quarantined_not_propagated() {
+        let dir = tmp_dir("quarantine");
+        let mut cfg = synth_cfg(3, 6);
+        cfg.faults = "eval_panic@i2".into();
+        let mut s = Session::build(1, cfg, Budget::default(), &dir).unwrap();
+        while s.is_runnable() {
+            s.step();
+        }
+        assert_eq!(s.state(), SessionState::Failed);
+        assert!(s.quarantined());
+        let err = s.error().unwrap();
+        assert!(err.contains("panic in Driver::iteration"), "{err}");
+        assert!(err.contains("injected fault: eval_panic"), "{err}");
+        assert_eq!(s.iters_done(), 1, "the panicking iteration never counted");
+        assert!(s.theta().is_none() || s.theta().unwrap().iter().all(|v| v.is_finite()));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn retry_counter_survives_suspend_cycles() {
+        let dir = tmp_dir("counters");
+        let mut cfg = synth_cfg(3, 6);
+        cfg.faults = "eval_err@i2".into();
+        cfg.optex.retry_max = 1;
+        let mut s = Session::build(1, cfg, Budget::default(), &dir).unwrap();
+        for _ in 0..3 {
+            s.step();
+        }
+        assert_eq!(s.retries(), 1);
+        assert_eq!(s.nonfinite(), 0);
+        s.pause().unwrap();
+        assert_eq!(s.retries(), 1, "archived across the suspend");
+        s.resume().unwrap();
+        while s.is_runnable() {
+            s.step();
+        }
+        assert_eq!(s.state(), SessionState::Done);
+        assert_eq!(s.retries(), 1);
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -1,0 +1,290 @@
+//! ISSUE 7 acceptance, wire half: failure-domain isolation under the
+//! deterministic fault plan. A K = 8 serve run with one session under
+//! an injected oracle panic and one under injected NaN gradients must
+//! quarantine exactly those two — errors queryable over the wire —
+//! while the other six finish bit-identical to fault-free runs and the
+//! server shuts down cleanly. Plus: the transient-retry path (counter
+//! asserted over the wire) and the `on_nonfinite = resync` recovery
+//! (deterministic across reruns).
+//!
+//! The golden-trajectory side of the same story lives in
+//! `scenarios/faults/*.toml`; this file keeps what the TOML schema
+//! cannot say — per-session fault specs submitted through the wire and
+//! cross-session blast-radius assertions.
+
+use std::time::{Duration, Instant};
+
+use optex::config::RunConfig;
+use optex::coordinator::Driver;
+use optex::serve::Server;
+use optex::testutil::fixtures::{submit_json, tmp_ckpt_dir, WireClient};
+use optex::util::json::Json;
+use optex::workloads::factory;
+
+/// Spin up a loopback server on its own thread; returns (addr, handle).
+fn spawn_server(base: RunConfig) -> (std::net::SocketAddr, std::thread::JoinHandle<()>) {
+    let (addr_tx, addr_rx) = std::sync::mpsc::channel();
+    let handle = std::thread::spawn(move || {
+        let server = Server::bind(&base).expect("binding loopback serve endpoint");
+        addr_tx.send(server.local_addr().unwrap()).unwrap();
+        server.run().expect("serve loop");
+    });
+    let addr = addr_rx.recv_timeout(Duration::from_secs(10)).unwrap();
+    (addr, handle)
+}
+
+/// Poll `status` until the session reaches a terminal state; returns
+/// the final status response.
+fn await_terminal(client: &mut WireClient, id: u64) -> Json {
+    let deadline = Instant::now() + Duration::from_secs(60);
+    loop {
+        let r = client.request(&format!("{{\"cmd\":\"status\",\"id\":{id}}}"));
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r:?}");
+        match r.get("state").unwrap().as_str().unwrap() {
+            "done" | "failed" => return r,
+            _ => {
+                assert!(Instant::now() < deadline, "session {id} never finished");
+                std::thread::sleep(Duration::from_millis(10));
+            }
+        }
+    }
+}
+
+fn theta_bits_of(result: &Json) -> Vec<u32> {
+    result
+        .get("theta")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|v| (v.as_f64().unwrap() as f32).to_bits())
+        .collect()
+}
+
+fn k8_overrides(i: usize) -> Vec<(&'static str, String)> {
+    let workloads = ["sphere", "rosenbrock", "ackley"];
+    let threads = optex::testutil::fixtures::test_threads();
+    vec![
+        ("workload", workloads[i % 3].to_string()),
+        ("synth_dim", "96".into()),
+        ("steps", "10".into()),
+        ("seed", (70 + i).to_string()),
+        ("noise_std", "0.2".into()),
+        ("optex.parallelism", "3".into()),
+        ("optex.t0", "5".into()),
+        ("optex.threads", threads.to_string()),
+    ]
+}
+
+/// ISSUE 7 acceptance: one poisoned session must never take down the
+/// serve tier. K = 8, session #2 panics inside its oracle at iteration
+/// 3, session #5 returns an all-NaN gradient row at iteration 2 under
+/// the default `on_nonfinite = fail`. Both must land in Failed with the
+/// injected error queryable over the wire (the panicking one flagged
+/// `quarantined`); the six healthy sessions' thetas must be
+/// bit-identical to fault-free solo runs; shutdown must be clean.
+#[test]
+fn k8_one_panic_one_nan_quarantined_six_bit_identical() {
+    let dir = tmp_ckpt_dir("faults_k8");
+    // fault plans are per-session config, injected via submit overrides;
+    // the iteration-keyed clauses need no session selector because each
+    // plan is private to its session
+    let panic_idx = 1usize; // submit order → session id 2
+    let nan_idx = 4usize; // submit order → session id 5
+    let healthy: Vec<usize> = (0..8).filter(|&i| i != panic_idx && i != nan_idx).collect();
+
+    // fault-free solo references for the healthy six, via the
+    // coordinator path
+    let solo: std::collections::BTreeMap<usize, Vec<u32>> = healthy
+        .iter()
+        .map(|&i| {
+            let mut cfg = RunConfig::default();
+            for (k, v) in k8_overrides(i) {
+                cfg.apply_override(&format!("{k}={v}")).unwrap();
+            }
+            let workload = factory::build(&cfg).unwrap();
+            let mut drv = Driver::new(cfg, workload).unwrap();
+            drv.run().unwrap();
+            (i, drv.theta().iter().map(|x| x.to_bits()).collect())
+        })
+        .collect();
+
+    let mut base = RunConfig::default();
+    base.serve.addr = "127.0.0.1:0".into();
+    base.serve.ckpt_dir = dir.clone();
+    base.serve.max_sessions = 8;
+    base.optex.threads = optex::testutil::fixtures::test_threads();
+    let (addr, server_thread) = spawn_server(base);
+    let mut client = WireClient::connect(addr);
+
+    let mut ids = Vec::new();
+    for i in 0..8 {
+        let mut overrides = k8_overrides(i);
+        if i == panic_idx {
+            overrides.push(("faults", "eval_panic@i3".into()));
+        } else if i == nan_idx {
+            overrides.push(("faults", "nan_row@i2.p0".into()));
+        }
+        let r = client.request(&submit_json(&overrides, false));
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r:?}");
+        ids.push(r.get("id").unwrap().as_usize().unwrap() as u64);
+    }
+    assert_eq!(ids, (1..=8).collect::<Vec<u64>>(), "admission order is the id order");
+
+    for i in 0..8 {
+        let status = await_terminal(&mut client, ids[i]);
+        if i == panic_idx {
+            // oracle panic → quarantine: Failed, flagged, payload kept
+            assert_eq!(status.get("state").unwrap().as_str(), Some("failed"));
+            assert_eq!(status.get("quarantined").and_then(Json::as_bool), Some(true));
+            let err = status.get("error").unwrap().as_str().unwrap();
+            assert!(err.contains("panic in Driver::iteration"), "{err}");
+            assert!(
+                err.contains(&format!(
+                    "injected fault: eval_panic (session {}, iteration 3)",
+                    ids[i]
+                )),
+                "{err}"
+            );
+        } else if i == nan_idx {
+            // NaN gradient row under on_nonfinite = fail: a clean error,
+            // not a quarantine — the driver failed by policy, it did not
+            // blow up
+            assert_eq!(status.get("state").unwrap().as_str(), Some("failed"));
+            assert!(status.get("quarantined").is_none(), "{status:?}");
+            let err = status.get("error").unwrap().as_str().unwrap();
+            assert!(err.contains("non-finite eval results at iteration 2"), "{err}");
+            assert_eq!(status.get("nonfinite").unwrap().as_usize(), Some(1));
+        } else {
+            assert_eq!(status.get("state").unwrap().as_str(), Some("done"), "{status:?}");
+            assert_eq!(status.get("retries").unwrap().as_usize(), Some(0));
+            assert_eq!(status.get("nonfinite").unwrap().as_usize(), Some(0));
+            let r = client.request(&format!(
+                "{{\"cmd\":\"result\",\"id\":{},\"theta\":true}}",
+                ids[i]
+            ));
+            assert_eq!(r.get("iters").unwrap().as_usize(), Some(10));
+            assert_eq!(
+                theta_bits_of(&r),
+                solo[&i],
+                "healthy session {i}: theta drifted from its fault-free solo run \
+                 — the poisoned sessions leaked across the failure domain"
+            );
+        }
+    }
+
+    // the roll-up view still lists all eight, and shutdown is clean
+    let r = client.request(r#"{"cmd":"status"}"#);
+    assert_eq!(r.get("sessions").unwrap().as_arr().unwrap().len(), 8);
+    let r = client.request(r#"{"cmd":"shutdown"}"#);
+    assert_eq!(r.get("ok").unwrap().as_bool(), Some(true));
+    server_thread.join().expect("server thread panicked");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Transient oracle errors are absorbed by the per-session RetryPolicy:
+/// two injected `eval_err` shots at iteration 2 against `retry_max = 3`
+/// must leave the session Done with `retries = 2` on the wire — and,
+/// because an injected `Err` fires before the oracle runs (no RNG
+/// advance, no loan), the recovered trajectory is bit-identical to the
+/// fault-free run.
+#[test]
+fn transient_eval_errors_retry_to_success_over_the_wire() {
+    let dir = tmp_ckpt_dir("faults_retry");
+    let overrides: Vec<(&str, String)> = vec![
+        ("workload", "ackley".into()),
+        ("synth_dim", "96".into()),
+        ("steps", "8".into()),
+        ("seed", "55".into()),
+        ("optex.parallelism", "4".into()),
+        ("optex.t0", "8".into()),
+        ("optex.threads", "1".into()),
+        ("optex.retry_max", "3".into()),
+        ("optex.retry_backoff_ms", "1".into()),
+    ];
+    let mut cfg = RunConfig::default();
+    for (k, v) in &overrides {
+        cfg.apply_override(&format!("{k}={v}")).unwrap();
+    }
+    let workload = factory::build(&cfg).unwrap();
+    let mut solo = Driver::new(cfg, workload).unwrap();
+    solo.run().unwrap();
+    let solo_bits: Vec<u32> = solo.theta().iter().map(|x| x.to_bits()).collect();
+
+    let mut base = RunConfig::default();
+    base.serve.addr = "127.0.0.1:0".into();
+    base.serve.ckpt_dir = dir.clone();
+    base.optex.threads = 1;
+    let (addr, server_thread) = spawn_server(base);
+    let mut client = WireClient::connect(addr);
+
+    let mut faulted = overrides.clone();
+    faulted.push(("faults", "eval_err@i2*2".into()));
+    let r = client.request(&submit_json(&faulted, false));
+    assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r:?}");
+    let id = r.get("id").unwrap().as_usize().unwrap() as u64;
+
+    let status = await_terminal(&mut client, id);
+    assert_eq!(status.get("state").unwrap().as_str(), Some("done"), "{status:?}");
+    assert_eq!(status.get("retries").unwrap().as_usize(), Some(2), "{status:?}");
+    assert_eq!(status.get("nonfinite").unwrap().as_usize(), Some(0));
+
+    let r = client.request(&format!("{{\"cmd\":\"result\",\"id\":{id},\"theta\":true}}"));
+    assert_eq!(r.get("retries").unwrap().as_usize(), Some(2), "{r:?}");
+    assert_eq!(
+        theta_bits_of(&r),
+        solo_bits,
+        "retried trajectory drifted from the fault-free run"
+    );
+
+    client.request(r#"{"cmd":"shutdown"}"#);
+    server_thread.join().unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// `optex.on_nonfinite = resync` is a recovery, not a coin flip: the
+/// poisoned iteration evicts its NaN history row, forces a full GP
+/// refit, and the run finishes with every recorded loss finite — and
+/// the whole thing is deterministic, so two runs agree bit for bit.
+#[test]
+fn resync_recovers_finite_losses_deterministically() {
+    let run = || {
+        let mut cfg = RunConfig::default();
+        for kv in [
+            "workload=ackley",
+            "synth_dim=64",
+            "steps=6",
+            "seed=37",
+            "optex.parallelism=4",
+            "optex.t0=16",
+            "optex.threads=1",
+            "optex.on_nonfinite=resync",
+            "faults=nan_row@i4.p2",
+        ] {
+            cfg.apply_override(kv).unwrap();
+        }
+        let workload = factory::build(&cfg).unwrap();
+        let mut drv = Driver::new(cfg, workload).unwrap();
+        let rec = drv.run().unwrap();
+        let bits: Vec<u32> = drv.theta().iter().map(|x| x.to_bits()).collect();
+        (rec, bits, drv.nonfinite_events())
+    };
+    let (rec_a, bits_a, nonfinite_a) = run();
+    let (rec_b, bits_b, _) = run();
+
+    assert_eq!(nonfinite_a, 1, "exactly the injected row is absorbed");
+    assert_eq!(rec_a.rows.len(), 6, "resync completes the full budget");
+    for row in &rec_a.rows {
+        assert!(
+            row.loss.is_finite() && row.best_loss.is_finite(),
+            "iteration {}: non-finite loss leaked past resync",
+            row.iter
+        );
+    }
+    assert_eq!(bits_a, bits_b, "resync trajectory is not deterministic");
+    let (la, lb): (Vec<u64>, Vec<u64>) = (
+        rec_a.rows.iter().map(|r| r.loss.to_bits()).collect(),
+        rec_b.rows.iter().map(|r| r.loss.to_bits()).collect(),
+    );
+    assert_eq!(la, lb, "resync per-iteration losses are not deterministic");
+}

@@ -1,0 +1,120 @@
+#!/usr/bin/env bash
+# ISSUE 7 satellite: release-mode fault smoke against a REAL server
+# process. A server started with an injected `ckpt_torn@s1` tears
+# session 1's suspend checkpoint exactly the way a crash landing
+# mid-write would; the server is then SIGKILLed and a successor must
+# `--adopt` the manifest and still recover the session — the torn file
+# is detected at resume, discarded under the stray-checkpoint rule
+# (iters = 0), and the session re-runs from its seed to Done.
+#
+# The bit-identity of that recovery is pinned by the golden corpus
+# (scenarios/faults/torn_ckpt_adopt.toml); this script asserts the
+# real-process half: kill -9, process restart, wire-level recovery.
+#
+# Usage: tools/fault_smoke.sh [path-to-optex-binary]
+set -euo pipefail
+
+BIN="${1:-target/release/optex}"
+DIR="$(mktemp -d /tmp/optex_fault_smoke.XXXXXX)"
+PORT=$((20000 + RANDOM % 20000))
+ADDR="127.0.0.1:${PORT}"
+SERVER_PID=""
+
+cleanup() {
+  [ -n "${SERVER_PID}" ] && kill -9 "${SERVER_PID}" 2>/dev/null || true
+  rm -rf "${DIR}"
+}
+trap cleanup EXIT
+
+fail() { echo "fault_smoke: FAIL: $*" >&2; exit 1; }
+
+# One JSONL request/response exchange over bash's /dev/tcp (no netcat
+# dependency on the runner).
+request() {
+  local req="$1" reply
+  exec 3<>"/dev/tcp/127.0.0.1/${PORT}" || fail "connecting ${ADDR}"
+  printf '%s\n' "${req}" >&3
+  IFS= read -r reply <&3 || fail "no reply to: ${req}"
+  exec 3<&- 3>&-
+  printf '%s' "${reply}"
+}
+
+wait_port() {
+  for _ in $(seq 1 100); do
+    if (exec 3<>"/dev/tcp/127.0.0.1/${PORT}") 2>/dev/null; then
+      exec 3<&- 3>&- 2>/dev/null || true
+      return 0
+    fi
+    sleep 0.1
+  done
+  fail "server never came up on ${ADDR}"
+}
+
+echo "fault_smoke: phase 1 — server with injected torn-checkpoint write"
+"${BIN}" serve --addr "${ADDR}" --threads 1 \
+  --faults 'ckpt_torn@s1' \
+  --set "serve.ckpt_dir=${DIR}" &
+SERVER_PID=$!
+wait_port
+
+# paused admission: the suspend checkpoint is session 1's FIRST write,
+# which the injected fault truncates mid-file
+REPLY=$(request '{"cmd":"submit","config":{"workload":"rosenbrock","synth_dim":64,"steps":6,"seed":9,"optex.threads":1},"paused":true}')
+echo "fault_smoke: submit -> ${REPLY}"
+case "${REPLY}" in
+  *'"state":"paused"'*) ;;
+  *) fail "paused submit not acknowledged: ${REPLY}" ;;
+esac
+[ -s "${DIR}/session_1.ckpt" ] || fail "suspend checkpoint was never written"
+[ -s "${DIR}/manifest.jsonl" ] || fail "manifest was never written"
+
+echo "fault_smoke: phase 2 — SIGKILL the server with the torn write on disk"
+kill -9 "${SERVER_PID}"
+wait "${SERVER_PID}" 2>/dev/null || true
+SERVER_PID=""
+
+echo "fault_smoke: phase 3 — successor adopts and recovers the session"
+"${BIN}" serve --addr "${ADDR}" --threads 1 --adopt \
+  --set "serve.ckpt_dir=${DIR}" &
+SERVER_PID=$!
+wait_port
+
+REPLY=$(request '{"cmd":"status","id":1}')
+echo "fault_smoke: adopted status -> ${REPLY}"
+case "${REPLY}" in
+  *'"state":"paused"'*) ;;
+  *) fail "adopted session not paused: ${REPLY}" ;;
+esac
+
+# resume: the torn checkpoint fails to restore, is discarded (iters = 0
+# stray-checkpoint rule), and the session re-runs from its seed
+REPLY=$(request '{"cmd":"resume","id":1}')
+echo "fault_smoke: resume -> ${REPLY}"
+case "${REPLY}" in
+  *'"ok":true'*) ;;
+  *) fail "resume refused — torn checkpoint was not recovered: ${REPLY}" ;;
+esac
+
+for _ in $(seq 1 300); do
+  REPLY=$(request '{"cmd":"status","id":1}')
+  case "${REPLY}" in
+    *'"state":"done"'*) break ;;
+    *'"state":"failed"'*) fail "session failed after adopt: ${REPLY}" ;;
+  esac
+  sleep 0.1
+done
+case "${REPLY}" in
+  *'"state":"done"'*) ;;
+  *) fail "session never finished after adopt: ${REPLY}" ;;
+esac
+case "${REPLY}" in
+  *'"iters":6'*) ;;
+  *) fail "recovered session did not run the full budget: ${REPLY}" ;;
+esac
+
+REPLY=$(request '{"cmd":"shutdown"}')
+echo "fault_smoke: shutdown -> ${REPLY}"
+wait "${SERVER_PID}" 2>/dev/null || true
+SERVER_PID=""
+
+echo "fault_smoke: OK — torn write + SIGKILL recovered via --adopt"
