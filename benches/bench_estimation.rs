@@ -138,6 +138,83 @@ fn serve_throughput_grid(rows: &mut Vec<JsonRow>) {
     }
 }
 
+/// ISSUE-8 acceptance grid → BENCH_8.json: aggregate throughput over
+/// K ∈ {1, 8, 64} sessions × steppers ∈ {1, 4, 8} stepper-pool widths.
+/// With `steppers > 1` the scheduler dispatches whole quanta onto
+/// worker threads (each under an arbiter grant, Σ grants ≤ physical),
+/// so at K ≥ steppers the aggregate steps/s should scale with the pool.
+/// The k=8,steppers=8 cell is the tentpole payoff — pinned by
+/// `bench_trend --check`; `speedup_vs_serial` records each cell's win
+/// over its own steppers=1 row (the ≥ 2× acceptance bar at K = 8).
+fn serve_steppers_grid(rows: &mut Vec<JsonRow>) {
+    println!("\n# serve: K x steppers aggregate throughput (stepper pool, ISSUE 8)");
+    let steps = 30usize;
+    let d = 2_000usize;
+    for k in [1usize, 8, 64] {
+        let mut serial_sps = f64::NAN;
+        for steppers in [1usize, 4, 8] {
+            let dir = optex::testutil::fixtures::tmp_ckpt_dir(&format!(
+                "bench_steppers_{k}_{steppers}"
+            ));
+            let mut sched = Scheduler::new(k, Policy::RoundRobin, dir.clone());
+            // physical budget wider than any single request, so the
+            // concurrency measured here comes from the stepper pool and
+            // every dispatch still takes/returns an arbiter grant
+            sched.set_physical_pool(NativePool::new(8));
+            if steppers > 1 {
+                sched.set_steppers(steppers, None);
+            }
+            let t0 = Instant::now();
+            let ids: Vec<u64> = (0..k)
+                .map(|i| {
+                    let mut cfg = RunConfig::default();
+                    cfg.workload = "ackley".into();
+                    cfg.steps = steps;
+                    cfg.seed = i as u64;
+                    cfg.synth_dim = d;
+                    cfg.noise_std = 0.1;
+                    cfg.optimizer =
+                        OptSpec::Adam { lr: 0.1, beta1: 0.9, beta2: 0.999, eps: 1e-8 };
+                    cfg.optex.parallelism = 4;
+                    cfg.optex.t0 = 8;
+                    cfg.optex.threads = 1;
+                    sched.submit(cfg, Budget::default()).expect("submit")
+                })
+                .collect();
+            sched.run_to_completion();
+            let total_s = t0.elapsed().as_secs_f64();
+            for id in &ids {
+                assert_eq!(
+                    sched.session(*id).unwrap().state(),
+                    SessionState::Done,
+                    "session {id} did not finish (steppers={steppers})"
+                );
+            }
+            let steps_per_sec = (k * steps) as f64 / total_s;
+            if steppers == 1 {
+                serial_sps = steps_per_sec;
+            }
+            let speedup = steps_per_sec / serial_sps;
+            println!(
+                "serve        K={k:<3} steppers={steppers}: {steps_per_sec:>8.1} steps/s \
+                 ({speedup:>5.2}x vs serial)"
+            );
+            rows.push(JsonRow {
+                section: "serve_throughput",
+                fields: vec![
+                    ("k".into(), k as f64),
+                    ("steppers".into(), steppers as f64),
+                    ("d".into(), d as f64),
+                    ("steps_per_session".into(), steps as f64),
+                    ("steps_per_sec".into(), steps_per_sec),
+                    ("speedup_vs_serial".into(), speedup),
+                ],
+            });
+            std::fs::remove_dir_all(&dir).ok();
+        }
+    }
+}
+
 use optex::testutil::fixtures::WireClient;
 
 /// ISSUE-5 grid → BENCH_5.json: `watch` streaming latency (submit →
@@ -604,4 +681,9 @@ fn main() {
     let mut stream_rows: Vec<JsonRow> = Vec::new();
     serve_stream_adopt_grid(&mut stream_rows);
     write_bench_json("BENCH_5.json", 5, &stream_rows);
+
+    // ISSUE 8: concurrent-stepper aggregate-throughput surface
+    let mut stepper_rows: Vec<JsonRow> = Vec::new();
+    serve_steppers_grid(&mut stepper_rows);
+    write_bench_json("BENCH_8.json", 8, &stepper_rows);
 }

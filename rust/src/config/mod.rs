@@ -209,6 +209,14 @@ pub struct ServeParams {
     /// Concurrent TCP connection cap: connections beyond it receive an
     /// error line and are dropped (untrusted-client hygiene, ISSUE 7).
     pub max_conns: usize,
+    /// Stepper-pool width (ISSUE 8): how many sessions' quanta may run
+    /// simultaneously on worker threads. 1 (default) = the serial
+    /// scheduler: quanta run inline on the serve thread, one at a time.
+    /// With K > 1 the Arbiter still enforces Σ grants ≤ physical across
+    /// the in-flight set, so steppers adds concurrency between sessions
+    /// without oversubscribing the machine. Never a numerics fork:
+    /// per-session trajectories are bit-identical at any value.
+    pub steppers: usize,
 }
 
 impl Default for ServeParams {
@@ -221,6 +229,7 @@ impl Default for ServeParams {
             adopt: false,
             stream_every: 1,
             max_conns: 256,
+            steppers: 1,
         }
     }
 }
@@ -443,6 +452,7 @@ impl RunConfig {
             "serve.adopt" => self.serve.adopt = need_bool()?,
             "serve.stream_every" => self.serve.stream_every = need_usize()?,
             "serve.max_conns" => self.serve.max_conns = need_usize()?,
+            "serve.steppers" => self.serve.steppers = need_usize()?,
             _ => return Err(bad(key, "unknown config key")),
         }
         Ok(())
@@ -478,6 +488,9 @@ impl RunConfig {
         }
         if self.serve.max_conns == 0 {
             return Err(bad("serve.max_conns", "must be >= 1"));
+        }
+        if self.serve.steppers == 0 {
+            return Err(bad("serve.steppers", "must be >= 1"));
         }
         if !self.optex.eval_timeout_s.is_finite() || self.optex.eval_timeout_s < 0.0 {
             return Err(bad("optex.eval_timeout_s", "must be >= 0"));
@@ -920,6 +933,18 @@ mod tests {
         cfg.apply_override("serve.max_conns=2").unwrap();
         assert_eq!(cfg.serve.max_conns, 2);
         assert!(cfg.apply_override("serve.max_conns=0").is_err());
+    }
+
+    #[test]
+    fn serve_steppers_knob_defaults_to_serial() {
+        assert_eq!(ServeParams::default().steppers, 1);
+        let mut cfg = RunConfig::default();
+        cfg.apply_override("serve.steppers=4").unwrap();
+        assert_eq!(cfg.serve.steppers, 4);
+        cfg.apply_override("serve.steppers=1").unwrap();
+        assert_eq!(cfg.serve.steppers, 1);
+        assert!(cfg.apply_override("serve.steppers=0").is_err());
+        assert!(cfg.apply_override("serve.steppers=-1").is_err());
     }
 
     #[test]

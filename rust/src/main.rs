@@ -32,6 +32,7 @@ USAGE:
              [--set key=value ...]
   optex serve [--config FILE] [--addr HOST:PORT] [--max-sessions K]
               [--threads K] [--pool scoped|persistent] [--policy rr|fair]
+              [--steppers S]          # concurrent quanta (stepper pool width)
               [--adopt]               # adopt serve.ckpt_dir's session manifest
               [--faults SPEC]         # injected into sessions by (s,i,p) key
               [--set key=value ...]   # JSONL protocol; see serve/ docs
@@ -41,9 +42,12 @@ USAGE:
              [--method M] [--set key=value ...]
   optex artifacts [--artifacts DIR]
   optex validate  [--artifacts DIR]   # health check: artifacts vs native
-  optex scenarios [--dir DIR] [--filter SUBSTR] [--threads K] [--bless]
+  optex scenarios [--dir DIR] [--filter SUBSTR] [--threads K] [--steppers S]
+                  [--bless]
                   # golden-trajectory corpus (scenarios/ by default);
-                  # --bless rewrites stale/missing goldens
+                  # --bless rewrites stale/missing goldens; --steppers S
+                  # replays serve scenarios on an S-wide stepper pool
+                  # (goldens must not change — that's the point)
 
 Methods: optex | vanilla | target | dataparallel.
 Config keys: see configs/*.toml and `RunConfig` docs.
@@ -198,6 +202,9 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     if let Some(p) = args.opt("policy") {
         cfg.apply_override(&format!("serve.policy={p}"))?;
     }
+    if let Some(s) = args.opt_usize("steppers")? {
+        cfg.apply_override(&format!("serve.steppers={s}"))?;
+    }
     if args.flag("adopt") {
         cfg.apply_override("serve.adopt=true")?;
     }
@@ -278,6 +285,10 @@ fn cmd_scenarios(args: &Args) -> anyhow::Result<()> {
     opts.filter = args.opt("filter").map(str::to_string);
     if let Some(k) = args.opt_usize("threads")? {
         opts.threads = k;
+    }
+    if let Some(s) = args.opt_usize("steppers")? {
+        anyhow::ensure!(s >= 1, "--steppers: must be >= 1");
+        opts.steppers = s;
     }
     if args.flag("bless") {
         opts.bless = BlessMode::All;

@@ -13,9 +13,8 @@
 //! warm-up, cumulative average reward logged per episode (Fig. 3's
 //! y-axis).
 
-use std::cell::RefCell;
 use std::path::PathBuf;
-use std::rc::Rc;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use anyhow::{Context, Result};
@@ -77,7 +76,12 @@ enum QBackend {
 /// The OptEx gradient oracle over q-network parameters.
 pub struct DqnSource {
     mlp: Mlp,
-    replay: Rc<RefCell<ReplayBuffer>>,
+    /// Shared with the episode trainer (which pushes transitions between
+    /// iterations). `Arc<Mutex<..>>` rather than `Rc<RefCell<..>>` so the
+    /// whole oracle is `Send` — serve sessions hand their driver to
+    /// stepper-pool workers between quanta (ISSUE 8). Uncontended in
+    /// practice: the trainer and the oracle run on the same thread.
+    replay: Arc<Mutex<ReplayBuffer>>,
     target: Vec<f32>,
     batch: usize,
     gamma: f32,
@@ -95,7 +99,7 @@ pub struct DqnSource {
 impl DqnSource {
     pub fn native(
         mlp: Mlp,
-        replay: Rc<RefCell<ReplayBuffer>>,
+        replay: Arc<Mutex<ReplayBuffer>>,
         batch: usize,
         gamma: f32,
         sync_every: usize,
@@ -124,7 +128,7 @@ impl DqnSource {
         env_name: &str,
         n_workers: usize,
         mlp: Mlp,
-        replay: Rc<RefCell<ReplayBuffer>>,
+        replay: Arc<Mutex<ReplayBuffer>>,
         gamma: f32,
         sync_every: usize,
         seed: u64,
@@ -166,12 +170,12 @@ impl DqnSource {
     pub fn replay_fixture(seed: u64) -> DqnSource {
         let obs_dim = 6;
         let n_act = 3;
-        let replay = Rc::new(RefCell::new(ReplayBuffer::new(512, obs_dim)));
+        let replay = Arc::new(Mutex::new(ReplayBuffer::new(512, obs_dim)));
         let mut rng = Rng::new(seed);
         for _ in 0..256 {
             let o = rng.normal_vec(obs_dim);
             let no = rng.normal_vec(obs_dim);
-            replay.borrow_mut().push(
+            replay.lock().unwrap().push(
                 &o,
                 rng.below(n_act),
                 rng.normal() as f32,
@@ -194,13 +198,13 @@ impl DqnSource {
             env::make(env_name).with_context(|| format!("unknown env {env_name:?}"))?;
         let obs_dim = envir.obs_dim();
         let n_act = envir.n_actions();
-        let replay = Rc::new(RefCell::new(ReplayBuffer::new(1024, obs_dim)));
+        let replay = Arc::new(Mutex::new(ReplayBuffer::new(1024, obs_dim)));
         let mut rng = Rng::new(seed ^ 0xE5F1);
         let mut obs = envir.reset(&mut rng);
         for _ in 0..512 {
             let action = rng.below(n_act);
             let tr = envir.step(action);
-            replay.borrow_mut().push(&obs, action, tr.reward, &tr.obs, tr.done);
+            replay.lock().unwrap().push(&obs, action, tr.reward, &tr.obs, tr.done);
             obs = if tr.done { envir.reset(&mut rng) } else { tr.obs };
         }
         let hidden = if env_name == "acrobot" { 48 } else { 32 };
@@ -211,7 +215,8 @@ impl DqnSource {
     /// TD gradient at `params` on a freshly sampled minibatch (native).
     fn native_td_grad(&mut self, params: &[f32]) -> (f64, Vec<f32>) {
         self.replay
-            .borrow()
+            .lock()
+            .unwrap()
             .sample_into(self.batch, &mut self.rng, &mut self.buf);
         let mut grad = vec![0.0f32; self.mlp.dim()];
         let loss = td_grad(&self.mlp, &self.target, self.gamma, &self.buf, params, &mut grad);
@@ -277,9 +282,11 @@ impl GradSource for DqnSource {
                 while self.bufs.len() < n {
                     self.bufs.push(Batch::default());
                 }
+                let replay = self.replay.lock().unwrap();
                 for buf in self.bufs.iter_mut().take(n) {
-                    self.replay.borrow().sample_into(self.batch, &mut self.rng, buf);
+                    replay.sample_into(self.batch, &mut self.rng, buf);
                 }
+                drop(replay);
                 // Spawn-amortization cap (bit-identical either way):
                 // batch × dim × 2 (forward + backward) proxies the
                 // per-point TD flops.
@@ -303,7 +310,8 @@ impl GradSource for DqnSource {
                 let mut jobs = Vec::with_capacity(points.len());
                 for p in points {
                     self.replay
-                        .borrow()
+                        .lock()
+                        .unwrap()
                         .sample_into(self.batch, &mut self.rng, &mut self.buf);
                     jobs.push((
                         artifact.as_str(),
@@ -404,7 +412,7 @@ pub fn train(cfg: &RunConfig, rl: &RlConfig) -> Result<RunRecord> {
     let mut envir: Box<dyn Env> =
         env::make(&rl.env).with_context(|| format!("unknown env {:?}", rl.env))?;
     let mlp = Mlp::new(envir.obs_dim(), rl.hidden, envir.n_actions());
-    let replay = Rc::new(RefCell::new(ReplayBuffer::new(
+    let replay = Arc::new(Mutex::new(ReplayBuffer::new(
         rl.replay_capacity,
         envir.obs_dim(),
     )));
@@ -457,14 +465,15 @@ pub fn train(cfg: &RunConfig, rl: &RlConfig) -> Result<RunRecord> {
             eps = (eps * rl.eps_decay).max(rl.eps_min);
             let tr = envir.step(action);
             replay
-                .borrow_mut()
+                .lock()
+                .unwrap()
                 .push(&obs, action, tr.reward, &tr.obs, tr.done);
             ep_reward += tr.reward as f64;
             obs = tr.obs;
             step_in_ep += 1;
 
             let warm = ep > rl.warmup_episodes
-                && replay.borrow().len() >= rl.batch.min(rl.replay_capacity);
+                && replay.lock().unwrap().len() >= rl.batch.min(rl.replay_capacity);
             if warm && step_in_ep % rl.train_every == 0 {
                 global_t += 1;
                 driver.iteration(global_t)?;
@@ -516,13 +525,13 @@ mod tests {
     use super::*;
     use crate::config::Method;
 
-    fn replay_with_data(obs_dim: usize, n_act: usize, n: usize) -> Rc<RefCell<ReplayBuffer>> {
-        let rb = Rc::new(RefCell::new(ReplayBuffer::new(256, obs_dim)));
+    fn replay_with_data(obs_dim: usize, n_act: usize, n: usize) -> Arc<Mutex<ReplayBuffer>> {
+        let rb = Arc::new(Mutex::new(ReplayBuffer::new(256, obs_dim)));
         let mut rng = Rng::new(0);
         for _ in 0..n {
             let o = rng.normal_vec(obs_dim);
             let no = rng.normal_vec(obs_dim);
-            rb.borrow_mut().push(&o, rng.below(n_act), rng.normal() as f32, &no, rng.coin(0.1));
+            rb.lock().unwrap().push(&o, rng.below(n_act), rng.normal() as f32, &no, rng.coin(0.1));
         }
         rb
     }

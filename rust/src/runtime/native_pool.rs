@@ -316,6 +316,14 @@ impl NativePool {
 /// itself running a persistent dispatch) cannot deadlock for the same
 /// reason: the inner dispatch spawns whatever workers the queue is
 /// short.
+///
+/// The serve tier's stepper pool (ISSUE 8) leans on exactly that
+/// property: each stepper worker runs a whole quantum, whose fan-outs
+/// dispatch into THIS shared registry under the quantum's arbiter-capped
+/// grant. Concurrent quanta therefore share one resident worker set, and
+/// because the arbiter keeps Σ grants ≤ the configured physical width,
+/// the registry's high-water mark stays bounded by the physical pool —
+/// S steppers never multiply the resident thread count.
 mod persistent {
     use std::collections::VecDeque;
     use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};

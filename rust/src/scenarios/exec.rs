@@ -58,13 +58,21 @@ pub fn build_config(spec: &ScenarioSpec, threads: usize) -> Result<RunConfig> {
     Ok(cfg)
 }
 
-/// Run the case at pool width `threads`; `scratch` hosts checkpoint /
-/// manifest files and must be private to the call.
-pub fn execute(spec: &ScenarioSpec, threads: usize, scratch: &Path) -> Result<Outcome> {
+/// Run the case at pool width `threads` and stepper-pool width
+/// `steppers`; `scratch` hosts checkpoint / manifest files and must be
+/// private to the call. `steppers` only touches serve modes (solo has no
+/// scheduler) and must never change an outcome — it decides where quanta
+/// run, not what they compute.
+pub fn execute(
+    spec: &ScenarioSpec,
+    threads: usize,
+    steppers: usize,
+    scratch: &Path,
+) -> Result<Outcome> {
     let cfg = build_config(spec, threads)?;
     match spec.mode {
         Mode::Solo => run_solo(&cfg, &spec.budget, scratch),
-        _ => run_serve(spec, &cfg, scratch),
+        _ => run_serve(spec, &cfg, steppers, scratch),
     }
 }
 
@@ -98,11 +106,21 @@ fn outcome_of(s: &Session) -> Outcome {
     }
 }
 
-fn run_serve(spec: &ScenarioSpec, cfg: &RunConfig, scratch: &Path) -> Result<Outcome> {
+fn run_serve(
+    spec: &ScenarioSpec,
+    cfg: &RunConfig,
+    steppers: usize,
+    scratch: &Path,
+) -> Result<Outcome> {
     let so = &spec.serve;
     let mut sched = Scheduler::new(so.peers + 1, so.policy, scratch.to_path_buf());
     if let Some(k) = so.physical_threads {
         sched.set_physical_pool(NativePool::new(k));
+    }
+    if steppers > 1 {
+        // no wake fn: the harness drives run_to_completion, which blocks
+        // on the scheduler's own completion channel when idle
+        sched.set_steppers(steppers, None);
     }
     // scheduler-owned fault sites (manifest_fail) fire from the same
     // spec string; session-keyed sites fire from each session's own cfg
@@ -153,6 +171,9 @@ fn run_serve(spec: &ScenarioSpec, cfg: &RunConfig, scratch: &Path) -> Result<Out
             let mut adopter = Scheduler::new(so.peers + 1, so.policy, scratch.to_path_buf());
             if let Some(k) = so.physical_threads {
                 adopter.set_physical_pool(NativePool::new(k));
+            }
+            if steppers > 1 {
+                adopter.set_steppers(steppers, None);
             }
             adopter.set_fault_plan(crate::faults::FaultPlan::parse(&cfg.faults)?);
             adopter.adopt_manifest()?;

@@ -61,11 +61,17 @@ pub struct Opts {
     pub bless: BlessMode,
     /// Pool width injected into scenarios that don't pin `optex.threads`.
     pub threads: usize,
+    /// Stepper-pool width for serve-mode cases (ISSUE 8). Like the
+    /// threads matrix, this is a pure scheduling knob: goldens recorded
+    /// at `steppers = 1` must verify unchanged at any width — replaying
+    /// the corpus with `--steppers 4` IS the concurrency bit-identity
+    /// proof, not a re-bless.
+    pub steppers: usize,
 }
 
 impl Opts {
     pub fn new(dir: PathBuf) -> Opts {
-        Opts { dir, filter: None, bless: BlessMode::Off, threads: 1 }
+        Opts { dir, filter: None, bless: BlessMode::Off, threads: 1, steppers: 1 }
     }
 }
 
@@ -206,12 +212,12 @@ fn run_checks(
     name: &str,
     scratch: &Path,
 ) -> Result<(Status, String)> {
-    let out = exec::execute(spec, opts.threads, scratch)?;
+    let out = exec::execute(spec, opts.threads, opts.steppers, scratch)?;
     check_expectations(spec, &out)?;
     if spec.compare_solo {
         check_solo_agreement(spec, &out, opts.threads, scratch)?;
     }
-    check_threads_matrix(spec, &out, opts.threads, scratch)?;
+    check_threads_matrix(spec, &out, opts.threads, opts.steppers, scratch)?;
     compare_golden(opts, path, name, &out)
 }
 
@@ -303,6 +309,7 @@ fn check_threads_matrix(
     spec: &ScenarioSpec,
     base: &Outcome,
     threads: usize,
+    steppers: usize,
     scratch: &Path,
 ) -> Result<()> {
     if spec.threads_matrix.is_empty() {
@@ -315,7 +322,7 @@ fn check_threads_matrix(
         }
         let dir = scratch.join(format!("w{w}"));
         fs::create_dir_all(&dir)?;
-        let got = exec::execute(spec, w, &dir)?;
+        let got = exec::execute(spec, w, steppers, &dir)?;
         let got_render = golden::render(&spec.name, &got);
         ensure!(
             got_render == base_render,
@@ -504,6 +511,55 @@ mod tests {
         opts.bless = BlessMode::Off;
         let r = run_corpus(&opts).unwrap();
         assert_eq!(r.results[0].status, Status::Pass, "{}", r.results[0].detail);
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn stepper_pool_replay_matches_serial_goldens() {
+        // ISSUE 8 acceptance in miniature: bless a serve-mode case on
+        // the serial stepper (steppers = 1), then verify the SAME golden
+        // at wider stepper pools. The pool decides where quanta run,
+        // never what they compute — any diff here is a concurrency bug.
+        let dir = scratch_dir().with_extension("corpus_steppers");
+        fs::create_dir_all(dir.join("serve")).unwrap();
+        fs::write(
+            dir.join("serve/fanout.toml"),
+            r#"
+            mode = "serve"
+            [serve]
+            peers = 3
+            policy = "fair"
+            physical_threads = 4
+            [config]
+            workload = "sphere"
+            synth_dim = 32
+            steps = 4
+            seed = 7
+            [config.optex]
+            parallelism = 2
+            t0 = 4
+            [expect]
+            state = "done"
+            stop_reason = "max_iters"
+            iters = 4
+            "#,
+        )
+        .unwrap();
+        let mut opts = Opts::new(dir.clone());
+        opts.bless = BlessMode::All;
+        let r = run_corpus(&opts).unwrap();
+        assert_eq!(r.results[0].status, Status::Blessed, "{}", r.results[0].detail);
+        opts.bless = BlessMode::Off;
+        for s in [2, 4] {
+            opts.steppers = s;
+            let r = run_corpus(&opts).unwrap();
+            assert_eq!(
+                r.results[0].status,
+                Status::Pass,
+                "steppers={s}: {}",
+                r.results[0].detail
+            );
+        }
         fs::remove_dir_all(&dir).unwrap();
     }
 

@@ -38,6 +38,18 @@
 //!   recomputed). Budget `deadline_s` clocks restart at adoption.
 //! * Injected-oracle sessions (tests, RL) are not rebuildable from
 //!   config and are never listed; only the id counter protects them.
+//!
+//! ## Concurrency (ISSUE 8)
+//!
+//! Manifest rewrites happen exclusively on the serve thread — at
+//! admission, lifecycle commands, and quantum *completion* (never
+//! dispatch), all of which run in the scheduler's serial
+//! pump/complete path. Stepper workers only ever execute detached
+//! drivers, so a durable rewrite can never race an in-flight quantum:
+//! the iteration counts it records are always post-reattach values, and
+//! the `running` lines for sessions whose quanta are mid-flight are
+//! exactly as stale as the serial model's (they adopt at iteration 0
+//! and re-run from seed, same as before).
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};

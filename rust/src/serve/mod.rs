@@ -14,10 +14,14 @@
 //!   (`Pending/Running/Paused/Done/Failed`) + budget (max iters, target
 //!   loss, deadline) + checkpoint-backed suspend/resume.
 //! * [`scheduler`] — [`Scheduler`]: deterministic round-robin (default)
-//!   or weighted-fair (keyed on the per-session `eval_s` EMA) stepping
-//!   of runnable sessions, one sequential iteration per quantum; the
-//!   per-quantum width [`Arbiter`] clamps each session's requested
-//!   `optex.threads` to the server's physical pool (ISSUE 5).
+//!   or weighted-fair (keyed on the per-session step-eval EMA) stepping
+//!   of runnable sessions, one sequential iteration per quantum —
+//!   inline on the serve thread (`serve.steppers = 1`, default) or
+//!   dispatched onto a stepper pool so up to `serve.steppers` sessions'
+//!   quanta run simultaneously (ISSUE 8); the width [`Arbiter`] clamps
+//!   each session's requested `optex.threads` to the server's physical
+//!   pool (ISSUE 5) and enforces Σ grants ≤ physical across all
+//!   in-flight quanta.
 //! * [`protocol`] — the JSONL request/response grammar (`submit`,
 //!   `status`, `result`, `watch`, `pause`, `resume`, `cancel`,
 //!   `shutdown`), built on `util/json` — no new dependencies.
@@ -30,30 +34,52 @@
 //!   threads carry both responses and `watch` pushes; `optex serve`
 //!   entrypoint.
 //!
-//! ## Scheduling invariants
+//! ## Scheduling invariants (concurrent model, ISSUE 8)
 //!
-//! 1. **Quantum = one sequential iteration.** The scheduler calls
-//!    `Driver::iteration(t)` with strictly increasing `t` per session;
-//!    work within a session is never reordered or subdivided.
-//! 2. **One fan-out in flight.** Because the quantum runs on the serve
-//!    thread and fans out internally over the shared pool, the pool is
-//!    time-sliced between iterations — K sessions never oversubscribe
-//!    the worker set a single run would use.
-//! 3. **No shared mutable state between sessions.** Each session forks
+//! What may interleave, what may not:
+//!
+//! 1. **Quantum = one sequential iteration.** A quantum detaches the
+//!    session's `Driver`, runs `Driver::iteration(t)` — inline or on a
+//!    stepper worker — and reattaches on completion; work within a
+//!    session is never reordered or subdivided.
+//! 2. **At most one quantum in flight per session.** A session whose
+//!    driver is detached is not pickable, so `t` is strictly increasing
+//!    per session and a session's quanta never race each other. *Across*
+//!    sessions, up to `serve.steppers` quanta run simultaneously.
+//! 3. **Σ grants ≤ physical, across in-flight quanta.** The [`Arbiter`]
+//!    is stateful: each dispatch takes a width grant from the shared
+//!    budget (shrink-to-fit, down to 1), each completion returns it, and
+//!    dispatch blocks/queues when the budget is exhausted. K concurrent
+//!    quanta never oversubscribe the worker set a single run would use,
+//!    and a session's granted width is stable within a quantum.
+//! 4. **No shared mutable state between sessions.** Each session forks
 //!    its RNG streams from its own config seed at build and owns its
-//!    oracle/optimizer/arena. Memory: K running sessions of dimension d
-//!    hold K·T₀·d gradient floats total (finished and suspended sessions
-//!    release their arenas).
+//!    oracle/optimizer/arena — which is what makes quanta `Send` and
+//!    (2) sufficient for determinism. Memory: K running sessions of
+//!    dimension d hold K·T₀·d gradient floats total (finished and
+//!    suspended sessions release their arenas).
+//! 5. **All session mutation happens on the serve thread.** Workers run
+//!    only the detached driver; admission, completion bookkeeping
+//!    (EMA/vtime/budgets), lifecycle commands, watch pushes, and durable
+//!    manifest rewrites all stay on the serve thread. Lifecycle commands
+//!    against a session with an in-flight quantum settle (await that
+//!    one completion) first, so pause/cancel never race a running
+//!    iteration.
 //!
 //! ## Why determinism holds
 //!
-//! By (1) and (3), a session's trajectory is a function of its config
-//! alone: the interleaving chosen by the scheduler — round-robin or
-//! weighted-fair, any pool width or mode, pauses and resumes of other
-//! sessions — cannot appear in any session's numerics. K concurrent
-//! sessions are therefore bit-identical to the same configs run solo
+//! By (1), (2) and (4), a session's trajectory is a function of its
+//! config alone: the interleaving chosen by the scheduler — round-robin
+//! or weighted-fair, any pool width or mode, any stepper-pool width,
+//! pauses and resumes of other sessions — decides only *where and when*
+//! a quantum runs, never *what it computes*. K concurrent sessions are
+//! therefore bit-identical to the same configs run solo
 //! (`rust/tests/serve_integration.rs` pins K = 8, mixed synthetic + DQN,
-//! mixed optimizers, `threads ∈ {1, 8}`, with a mid-run pause/resume).
+//! mixed optimizers, `threads ∈ {1, 8}`, with a mid-run pause/resume),
+//! and the scenario corpus replayed at `serve.steppers ∈ {1, 4}`
+//! verifies against one set of goldens. Per-session watch pushes are
+//! emitted in iteration order (completions reattach serially on the
+//! serve thread; (2) forbids two quanta of one session racing).
 //! Checkpoint-backed suspend/resume preserves bit-identity for
 //! deterministic oracles; stochastic oracles restart their data-sampler
 //! RNG from the config seed (the standing checkpoint caveat).
@@ -115,7 +141,7 @@
 //! | fault site | what dies | what survives | client observes |
 //! |---|---|---|---|
 //! | oracle `Err` (`eval_err`) | one fan-out attempt | the session, after retries (`optex.retry_max`, linear backoff); Failed only when the budget is exhausted | `status.retries` climbs; on exhaustion `state:"failed"` with the error text |
-//! | oracle panic (`eval_panic`) | the session's driver (arena + loan dropped at the `catch_unwind` boundary in `Session::step`) | the serve loop and every other session, bit-identical to fault-free runs | `state:"failed"`, `"quarantined":true`, `error:"panic in Driver::iteration: ..."` |
+//! | oracle panic (`eval_panic`) | the session (quarantined at the `catch_unwind` boundary in `Quantum::run` — worker threads included; pre-panic rows/θ are archived) | the serve loop, the stepper pool, and every other session, bit-identical to fault-free runs | `state:"failed"`, `"quarantined":true`, `error:"panic in Driver::iteration: ..."` |
 //! | NaN/Inf gradients (`nan_row`/`inf_row`) | nothing (`skip`/`resync`) or the session (`fail`) per `optex.on_nonfinite` | history hygiene: `resync` evicts poisoned rows and forces a GP refit | `status.nonfinite` climbs; under `fail`, `state:"failed"` naming the poisoned points |
 //! | hung eval (`eval_delay` + `optex.eval_timeout_s`) | one fan-out attempt (post-hoc deadline check — deterministic, never in goldens) | the session, via the same retry path as `eval_err` | retries, then an error naming the configured deadline |
 //! | torn/failed suspend checkpoint (`ckpt_torn`/`ckpt_fail`) | one suspend (pause errors) or one resume (falls back per the stray-checkpoint rules) | the session where recoverable: a torn *adoption* checkpoint re-runs from seed instead of failing | pause error line, or a seed re-run after `--adopt` |

@@ -1,24 +1,31 @@
-//! Cooperative iteration scheduler: many sessions, one compute pool.
+//! Cooperative iteration scheduler: many sessions, one compute budget.
 //!
-//! The scheduler steps runnable sessions **one sequential iteration at a
-//! time** on the serve thread. Because the quantum is a whole
-//! `Driver::iteration` — which internally fans out over the shared
-//! [`crate::runtime::NativePool`] — at most one session's fan-out is in
-//! flight at any instant: the pool is time-sliced *between* iterations,
-//! never subdivided within one, so K sessions saturate the same worker
-//! set a single run would without oversubscribing it.
+//! The quantum is a whole `Driver::iteration`. In the serial mode
+//! (`serve.steppers = 1`, the default) the scheduler steps runnable
+//! sessions one quantum at a time on the serve thread, and the shared
+//! [`crate::runtime::NativePool`] is time-sliced *between* iterations.
+//! With `serve.steppers > 1` (ISSUE 8) the scheduler dispatches whole
+//! quanta onto a pool of stepper worker threads, so up to `steppers`
+//! sessions' iterations run simultaneously — each on the width the
+//! [`Arbiter`] granted it at dispatch, with Σ grants ≤ physical enforced
+//! across the in-flight set. Either way K sessions saturate the same
+//! worker budget a single run would without oversubscribing it.
 //!
 //! ## Why determinism holds
 //!
 //! Sessions share no mutable state: each owns its oracle, optimizer,
 //! history arena and RNG streams (forked from its own config seed at
 //! build). The scheduler's only power is *which* session runs its next
-//! iteration — it can never reorder work **within** a session, because a
-//! session's iterations go through one `Driver` whose `iteration(t)` is
-//! called with strictly increasing `t`. Hence every session's trajectory
-//! is bit-identical to the same config/seed run solo, under either
-//! policy, at any pool width, and across pause/resume of *other*
-//! sessions (enforced by `rust/tests/serve_integration.rs`).
+//! iteration and *where* — it can never reorder work **within** a
+//! session, because a session's iterations go through one `Driver`
+//! whose `iteration(t)` is called with strictly increasing `t`, and at
+//! most one quantum per session is ever in flight (the in-flight set
+//! makes a dispatched session unpickable until its outcome is
+//! reattached). Hence every session's trajectory is bit-identical to
+//! the same config/seed run solo, under either policy, at any pool
+//! width, at any stepper count, and across pause/resume of *other*
+//! sessions (enforced by `rust/tests/serve_integration.rs` and the
+//! scenario corpus re-run with `steppers > 1`).
 //!
 //! ## Policies
 //!
@@ -53,15 +60,19 @@
 //! started with `--adopt` calls [`Scheduler::adopt_manifest`] to
 //! re-register them as Paused under their original ids.
 //!
-//! ## Width arbitration (ISSUE 5)
+//! ## Width arbitration (ISSUE 5, concurrent since ISSUE 8)
 //!
 //! With a physical pool installed ([`Scheduler::set_physical_pool`]),
-//! every quantum runs on an [`Arbiter`] grant: the session's requested
-//! `optex.threads` clamped to the server's budget. See [`Arbiter`] for
+//! every quantum runs on an [`Arbiter`] grant taken at dispatch and
+//! returned at completion; dispatch queues (the session simply stays
+//! pickable) whenever the remaining budget is zero. See [`Arbiter`] for
 //! the invariant and why bit-identity is indifferent to the outcome.
 
 use std::collections::BTreeMap;
 use std::path::PathBuf;
+use std::sync::mpsc::{Receiver, Sender, TryRecvError};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
 
 use anyhow::{bail, Context, Result};
 
@@ -69,8 +80,99 @@ use crate::config::RunConfig;
 use crate::faults::FaultPlan;
 use crate::runtime::NativePool;
 use crate::serve::manifest;
-use crate::serve::session::{Budget, Session};
+use crate::serve::session::{BeginOutcome, Budget, Quantum, QuantumOutcome, Session};
 use crate::workloads::GradSource;
+
+/// Completion signal installed by the server: invoked from a stepper
+/// worker AFTER its outcome is enqueued, so a serve loop blocked on its
+/// command queue can funnel "a quantum completed" into the same wait.
+pub type WakeFn = Arc<dyn Fn() + Send + Sync>;
+
+/// The stepper pool (ISSUE 8): `n` worker threads pulling whole quanta
+/// off a shared job queue. Workers never touch the session table — they
+/// run `Quantum::run` (which `catch_unwind`s the iteration) and ship the
+/// outcome back; all bookkeeping stays on the serve thread. A worker
+/// always produces exactly one outcome per job, so the scheduler's
+/// grant/in-flight accounting can never leak.
+struct StepperPool {
+    /// `Option` so `Drop` can close the queue before joining.
+    job_tx: Option<Sender<Quantum>>,
+    done_rx: Receiver<QuantumOutcome>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl StepperPool {
+    fn spawn(n: usize, wake: Option<WakeFn>) -> StepperPool {
+        let (job_tx, job_rx) = mpsc::channel::<Quantum>();
+        let (done_tx, done_rx) = mpsc::channel::<QuantumOutcome>();
+        // Shared-receiver pattern: idle workers queue on the mutex; each
+        // arriving job wakes exactly the current lock-holder. Pickup is
+        // O(lock), the quantum itself runs outside the lock.
+        let job_rx = Arc::new(Mutex::new(job_rx));
+        let workers = (0..n)
+            .map(|i| {
+                let job_rx = Arc::clone(&job_rx);
+                let done_tx = done_tx.clone();
+                let wake = wake.clone();
+                std::thread::Builder::new()
+                    .name(format!("optex-stepper-{i}"))
+                    .spawn(move || loop {
+                        let job = match job_rx.lock() {
+                            Ok(rx) => rx.recv(),
+                            Err(_) => return,
+                        };
+                        match job {
+                            Ok(quantum) => {
+                                let outcome = quantum.run();
+                                if done_tx.send(outcome).is_err() {
+                                    return;
+                                }
+                                if let Some(w) = &wake {
+                                    w();
+                                }
+                            }
+                            // job queue closed: scheduler shut down
+                            Err(_) => return,
+                        }
+                    })
+                    .expect("spawning stepper worker")
+            })
+            .collect();
+        StepperPool { job_tx: Some(job_tx), done_rx, workers }
+    }
+
+    fn submit(&self, quantum: Quantum) {
+        self.job_tx
+            .as_ref()
+            .expect("job queue open until drop")
+            .send(quantum)
+            .expect("stepper workers alive");
+    }
+}
+
+impl Drop for StepperPool {
+    fn drop(&mut self) {
+        // Close the job queue, then join: workers finish any in-flight
+        // quantum (outcomes land in the still-open done channel and are
+        // discarded with it) and exit on the closed queue.
+        self.job_tx.take();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// What one [`Scheduler::try_dispatch`] attempt did.
+enum DispatchOutcome {
+    /// A quantum went to the stepper pool.
+    Dispatched,
+    /// A pre-step budget gate finished the session inline, no quantum.
+    Finished(u64),
+    /// Stepper pool or width budget is full — retry after a completion.
+    Saturated,
+    /// Nothing dispatchable right now.
+    Idle,
+}
 
 /// Iteration scheduling policy (`serve.policy`).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -98,50 +200,103 @@ impl Policy {
     }
 }
 
-/// Per-quantum pool-width arbiter (ISSUE 5): the generalization of
-/// [`NativePool::capped_for`] from "how much work does this dispatch
-/// have" to "how much of the machine may this session's quantum use".
+/// Pool-width arbiter (ISSUE 5; stateful since ISSUE 8): the
+/// generalization of [`NativePool::capped_for`] from "how much work does
+/// this dispatch have" to "how much of the machine may this session's
+/// quantum use".
 ///
 /// Each session carries a requested width (`optex.threads` at submit;
 /// 0 = defer to the budget); the arbiter clamps every grant to the
-/// server's *physical* pool. The arbitration invariant — the widths of
-/// concurrent quanta never sum past the physical budget — holds by
-/// construction today because the serve loop runs ONE quantum at a time
-/// on the scheduler thread; what the clamp adds on top is that no
-/// session can oversubscribe the machine (a `threads=1000` submit on an
-/// 8-wide server gets 8) and, under `optex.pool = persistent`, that the
-/// process-global worker registry grows to the physical width instead of
-/// to the largest width any client ever asked for. A future
-/// multi-threaded stepper would negotiate concurrent grants HERE and
-/// nowhere else. Bit-identity per session holds at any arbitration
-/// outcome (`thread_invariance.rs`), so grants may differ quantum to
-/// quantum — only wall-clock changes.
-#[derive(Clone, Copy, Debug)]
+/// server's *physical* pool and tracks what in-flight quanta currently
+/// hold. The arbitration invariant — **Σ grants over in-flight quanta ≤
+/// physical** — is enforced by [`Arbiter::try_grant`] / release
+/// accounting, not by serial execution: a grant is carved out of the
+/// remaining budget at dispatch (shrunk to fit, refused when nothing is
+/// left — the scheduler queues the dispatch) and returned when the
+/// quantum completes. A quantum's width never changes while it is in
+/// flight. Defaulted requests (`threads = 0`) get the fair share
+/// `physical / steppers` so a full stepper pool divides the machine
+/// evenly; with `steppers = 1` that is the whole budget, exactly the
+/// pre-concurrency behavior. Under `optex.pool = persistent` the clamp
+/// also keeps the process-global worker registry at the physical width
+/// instead of the largest width any client ever asked for. Bit-identity
+/// per session holds at any arbitration outcome
+/// (`thread_invariance.rs`), so grants may differ quantum to quantum —
+/// only wall-clock changes.
+#[derive(Clone, Debug)]
 pub struct Arbiter {
     physical: NativePool,
+    /// Threads currently granted to in-flight quanta (Σ of live grants).
+    in_use: usize,
+    /// Stepper-pool width: the divisor for the defaulted-request fair
+    /// share.
+    steppers: usize,
 }
 
 impl Arbiter {
     /// Arbiter over the server's physical compute budget (resolved from
     /// the serve config's `optex.threads` / `optex.pool`).
     pub fn new(physical: NativePool) -> Arbiter {
-        Arbiter { physical }
+        Arbiter { physical, in_use: 0, steppers: 1 }
+    }
+
+    pub fn with_steppers(physical: NativePool, steppers: usize) -> Arbiter {
+        assert!(steppers >= 1, "arbiter needs at least one stepper");
+        Arbiter { physical, in_use: 0, steppers }
     }
 
     pub fn physical(&self) -> NativePool {
         self.physical
     }
 
-    /// The dispatch view for one quantum: the session's requested width
-    /// clamped to the physical pool (0 = the full budget). The substrate
-    /// mode is the server's — execution substrate is a server-level
-    /// resource decision, and it is never a numerics fork.
-    pub fn grant(&self, requested: usize) -> NativePool {
+    /// Threads currently held by in-flight quanta.
+    pub fn in_use(&self) -> usize {
+        self.in_use
+    }
+
+    /// Threads left for further grants.
+    pub fn available(&self) -> usize {
+        self.physical.threads() - self.in_use
+    }
+
+    /// The width a request wants before budget pressure: explicit
+    /// requests clamp to the physical pool; defaulted requests (0) take
+    /// the per-stepper fair share.
+    fn desired(&self, requested: usize) -> usize {
         if requested == 0 {
-            self.physical
+            (self.physical.threads() / self.steppers).max(1)
         } else {
-            self.physical.capped(requested)
+            requested.min(self.physical.threads())
         }
+    }
+
+    /// The uncontended dispatch view for one quantum (what `requested`
+    /// would get against an idle budget). The substrate mode is the
+    /// server's — execution substrate is a server-level resource
+    /// decision, and it is never a numerics fork.
+    pub fn grant(&self, requested: usize) -> NativePool {
+        self.physical.capped(self.desired(requested))
+    }
+
+    /// Carve a grant for one quantum out of the remaining budget: the
+    /// desired width shrunk to fit what is available. `None` when the
+    /// budget is exhausted — the caller must queue the dispatch and
+    /// retry after a release. Every `Some` is at least 1 wide and is
+    /// debited from the budget until [`Arbiter::release`].
+    pub fn try_grant(&mut self, requested: usize) -> Option<NativePool> {
+        let avail = self.available();
+        if avail == 0 {
+            return None;
+        }
+        let width = self.desired(requested).min(avail);
+        self.in_use += width;
+        Some(self.physical.capped(width))
+    }
+
+    /// Return a completed quantum's grant to the budget.
+    pub fn release(&mut self, width: usize) {
+        debug_assert!(width <= self.in_use, "releasing more than was granted");
+        self.in_use = self.in_use.saturating_sub(width);
     }
 }
 
@@ -163,6 +318,24 @@ pub struct Scheduler {
     /// concern, not any one session's. Per-session fault plans travel in
     /// each session's own `cfg.faults`.
     fault_plan: FaultPlan,
+    /// Stepper-pool width (`serve.steppers`); 1 = serial quanta on the
+    /// calling thread, no worker pool.
+    steppers: usize,
+    /// Worker threads for `steppers > 1` (spawned by
+    /// [`Scheduler::set_steppers`]).
+    pool: Option<StepperPool>,
+    /// Sessions with a quantum in flight, mapped to the granted width to
+    /// release at completion (0 when running without an arbiter). A
+    /// session in this map is unpickable — at most one quantum per
+    /// session exists, which is what keeps per-session iteration order
+    /// (and therefore bit-identity) independent of stepper interleaving.
+    in_flight: BTreeMap<u64, usize>,
+    /// Completion signal handed to stepper workers (see [`WakeFn`]).
+    wake: Option<WakeFn>,
+    /// Quanta reattached outside `pump` (a lifecycle command had to
+    /// settle its session first): drained into the next `pump`'s return
+    /// list so the server's notify hook still sees every completion.
+    completed_backlog: Vec<u64>,
 }
 
 impl Scheduler {
@@ -177,6 +350,11 @@ impl Scheduler {
             rr_last: 0,
             arbiter: None,
             fault_plan: FaultPlan::default(),
+            steppers: 1,
+            pool: None,
+            in_flight: BTreeMap::new(),
+            wake: None,
+            completed_backlog: Vec::new(),
         }
     }
 
@@ -185,7 +363,37 @@ impl Scheduler {
     /// drivers resolved from their own configs (the legacy in-process
     /// path).
     pub fn set_physical_pool(&mut self, physical: NativePool) {
-        self.arbiter = Some(Arbiter::new(physical));
+        self.arbiter = Some(Arbiter::with_steppers(physical, self.steppers));
+    }
+
+    /// Set the stepper-pool width (`serve.steppers`). With `n > 1` a
+    /// worker pool is spawned and [`Scheduler::pump`] dispatches up to
+    /// `n` concurrent quanta; with `n = 1` quanta run serially on the
+    /// calling thread (the pre-ISSUE-8 behavior, and still what
+    /// [`Scheduler::tick`] does). `wake` (optional) is invoked from a
+    /// worker after each completion lands — the server uses it to wake
+    /// its blocked command loop. Must not be called while quanta are in
+    /// flight.
+    pub fn set_steppers(&mut self, n: usize, wake: Option<WakeFn>) {
+        assert!(n >= 1, "scheduler needs at least one stepper");
+        assert!(self.in_flight.is_empty(), "cannot resize with quanta in flight");
+        self.steppers = n;
+        self.wake = wake;
+        if let Some(arb) = &mut self.arbiter {
+            *arb = Arbiter::with_steppers(arb.physical(), n);
+        }
+        self.pool =
+            if n > 1 { Some(StepperPool::spawn(n, self.wake.clone())) } else { None };
+    }
+
+    /// Stepper-pool width (1 = serial).
+    pub fn steppers(&self) -> usize {
+        self.steppers
+    }
+
+    /// Sessions with a quantum currently in flight on the stepper pool.
+    pub fn in_flight_count(&self) -> usize {
+        self.in_flight.len()
     }
 
     /// Install the server-level fault plan (from the serve config's
@@ -347,28 +555,30 @@ impl Scheduler {
         self.admit(|id| Session::with_source(id, cfg, source, budget))
     }
 
-    /// Pick the next runnable session under the policy (None when no
-    /// session is runnable).
+    /// Pick the next dispatchable session under the policy (None when no
+    /// session is runnable and not already in flight).
     fn pick(&self) -> Option<u64> {
+        let free = |s: &Session| s.is_runnable() && !self.in_flight.contains_key(&s.id());
         match self.policy {
             Policy::RoundRobin => {
-                // first runnable id strictly after the cursor, else wrap
+                // first dispatchable id strictly after the cursor, else
+                // wrap
                 self.sessions
                     .range(self.rr_last + 1..)
-                    .find(|(_, s)| s.is_runnable())
-                    .or_else(|| {
-                        self.sessions
-                            .range(..=self.rr_last)
-                            .find(|(_, s)| s.is_runnable())
-                    })
+                    .find(|(_, s)| free(s))
+                    .or_else(|| self.sessions.range(..=self.rr_last).find(|(_, s)| free(s)))
                     .map(|(&id, _)| id)
             }
             Policy::WeightedFair => self
                 .sessions
                 .values()
-                .filter(|s| s.is_runnable())
+                .filter(|s| free(s))
                 // BTreeMap iterates in id order, so strict `<` on vtime
                 // breaks ties toward the smaller id deterministically.
+                // vtime is charged at COMPLETION, so an in-flight
+                // session would otherwise look artificially cheap — the
+                // in-flight filter above is what keeps the comparison
+                // honest.
                 .fold(None::<&Session>, |best, s| match best {
                     Some(b) if b.vtime() <= s.vtime() => Some(b),
                     _ => Some(s),
@@ -377,21 +587,47 @@ impl Scheduler {
         }
     }
 
-    /// Run ONE iteration of one session; returns its id, or None when
-    /// nothing is runnable (all pending work done/paused). Session
-    /// failures are absorbed into the session's state, never propagated.
-    /// With an arbiter installed, the quantum runs on the granted pool
-    /// view (requested width clamped to the physical budget).
+    /// Grant a width for `id`'s next quantum (None = budget exhausted,
+    /// caller queues). The granted width is applied to the session's
+    /// driver before detach, so it is fixed for the quantum's lifetime.
+    fn grant_for(&mut self, id: u64) -> Option<usize> {
+        let session = self.sessions.get_mut(&id).expect("picked id exists");
+        match &mut self.arbiter {
+            Some(arb) => match arb.try_grant(session.requested_threads()) {
+                Some(pool) => {
+                    session.apply_pool(pool);
+                    Some(pool.threads())
+                }
+                None => None,
+            },
+            None => Some(0),
+        }
+    }
+
+    fn release_grant(&mut self, width: usize) {
+        if width > 0 {
+            if let Some(arb) = &mut self.arbiter {
+                arb.release(width);
+            }
+        }
+    }
+
+    /// Run ONE iteration of one session inline on the calling thread;
+    /// returns its id, or None when nothing is dispatchable (all pending
+    /// work done/paused, or — only possible while concurrent quanta are
+    /// in flight — the width budget is exhausted). Session failures are
+    /// absorbed into the session's state, never propagated. With an
+    /// arbiter installed, the quantum runs on a granted pool view
+    /// debited from the budget for its duration.
     pub fn tick(&mut self) -> Option<u64> {
         let id = self.pick()?;
+        let width = self.grant_for(id)?;
         self.rr_last = id;
         let session = self.sessions.get_mut(&id).expect("picked id exists");
-        if let Some(arb) = &self.arbiter {
-            let grant = arb.grant(session.requested_threads());
-            session.apply_pool(grant);
-        }
         session.step();
-        if !session.is_active() {
+        let finished = !session.is_active();
+        self.release_grant(width);
+        if finished {
             // the session just finished: its manifest entry (if any) is
             // dead — a crash after this instant must not re-run it
             self.persist_manifest();
@@ -399,10 +635,151 @@ impl Scheduler {
         Some(id)
     }
 
+    /// Dispatch one quantum onto the stepper pool (or apply a pre-step
+    /// budget gate inline). Never blocks.
+    fn try_dispatch(&mut self) -> DispatchOutcome {
+        if self.in_flight.len() >= self.steppers {
+            return DispatchOutcome::Saturated;
+        }
+        let Some(id) = self.pick() else { return DispatchOutcome::Idle };
+        let Some(width) = self.grant_for(id) else {
+            return DispatchOutcome::Saturated;
+        };
+        self.rr_last = id;
+        let session = self.sessions.get_mut(&id).expect("picked id exists");
+        match session.begin_quantum() {
+            BeginOutcome::Started(quantum) => {
+                self.in_flight.insert(id, width);
+                self.pool
+                    .as_ref()
+                    .expect("pump path requires a stepper pool")
+                    .submit(quantum);
+                DispatchOutcome::Dispatched
+            }
+            BeginOutcome::Finished => {
+                // a pre-step gate (deadline / max_iters) finished the
+                // session without a quantum
+                self.release_grant(width);
+                self.persist_manifest();
+                DispatchOutcome::Finished(id)
+            }
+            BeginOutcome::NotRunnable => {
+                self.release_grant(width);
+                DispatchOutcome::Idle
+            }
+        }
+    }
+
+    /// Reattach one completed quantum: return its grant, fold the
+    /// outcome into the session (quarantining a panicked one), persist
+    /// the manifest on finish. Returns the session id.
+    fn complete(&mut self, outcome: QuantumOutcome) -> u64 {
+        let id = outcome.session_id();
+        let width = self.in_flight.remove(&id).unwrap_or(0);
+        self.release_grant(width);
+        let session = self.sessions.get_mut(&id).expect("in-flight session exists");
+        session.complete_quantum(outcome);
+        if !session.is_active() {
+            self.persist_manifest();
+        }
+        id
+    }
+
+    /// Concurrent scheduling step (the `steppers > 1` analogue of
+    /// [`Scheduler::tick`]): reap every completion already available,
+    /// then dispatch runnable sessions onto the stepper pool until the
+    /// pool is saturated, the width budget is exhausted, or nothing is
+    /// runnable — repeating until quiescent. Never blocks; returns the
+    /// ids that COMPLETED a quantum (or finished on a pre-step gate)
+    /// during this call, in completion order — the server's notify
+    /// hook runs off exactly this list, which is what keeps per-session
+    /// watch pushes in iteration order. With `steppers = 1` this
+    /// degrades to at most one inline [`Scheduler::tick`].
+    pub fn pump(&mut self) -> Vec<u64> {
+        if self.pool.is_none() {
+            return self.tick().into_iter().collect();
+        }
+        // completions reattached while settling a lifecycle command
+        // still owe their watchers a push
+        let mut progressed = std::mem::take(&mut self.completed_backlog);
+        loop {
+            let mut moved = false;
+            loop {
+                let recv = self.pool.as_ref().expect("checked above").done_rx.try_recv();
+                match recv {
+                    Ok(outcome) => {
+                        progressed.push(self.complete(outcome));
+                        moved = true;
+                    }
+                    Err(TryRecvError::Empty) => break,
+                    Err(TryRecvError::Disconnected) => {
+                        unreachable!("stepper workers outlive the scheduler")
+                    }
+                }
+            }
+            loop {
+                match self.try_dispatch() {
+                    DispatchOutcome::Dispatched => moved = true,
+                    DispatchOutcome::Finished(id) => {
+                        progressed.push(id);
+                        moved = true;
+                    }
+                    DispatchOutcome::Saturated | DispatchOutcome::Idle => break,
+                }
+            }
+            if !moved {
+                return progressed;
+            }
+        }
+    }
+
+    /// Lifecycle commands (pause/cancel) must not land mid-quantum: a
+    /// `finish` racing a detached driver would let the returning
+    /// outcome resurrect a terminal session. Block until `id`'s
+    /// in-flight quantum (if any) reattaches; completions of OTHER
+    /// sessions that arrive meanwhile are reattached too and queued for
+    /// the next `pump`'s notify list. Worst-case latency is one quantum
+    /// — the same bound the serial loop always had.
+    fn settle(&mut self, id: u64) {
+        while self.in_flight.contains_key(&id) {
+            let done = self.await_one_completion();
+            self.completed_backlog.push(done);
+        }
+    }
+
+    /// Block until one in-flight quantum completes and reattach it.
+    /// Panics if nothing is in flight (callers check `in_flight_count`).
+    fn await_one_completion(&mut self) -> u64 {
+        let outcome = self
+            .pool
+            .as_ref()
+            .expect("in-flight quanta imply a stepper pool")
+            .done_rx
+            .recv()
+            .expect("stepper workers alive");
+        self.complete(outcome)
+    }
+
     /// Drive every runnable session to completion (test/bench harness;
-    /// the server interleaves `tick` with protocol commands instead).
+    /// the server interleaves `pump` with protocol commands instead).
+    /// Serial (`steppers = 1`): the classic tick loop. Concurrent: pump
+    /// until quiescent, block for a completion, repeat until nothing is
+    /// runnable and nothing is in flight.
     pub fn run_to_completion(&mut self) {
-        while self.tick().is_some() {}
+        if self.pool.is_none() {
+            while self.tick().is_some() {}
+            return;
+        }
+        loop {
+            self.pump();
+            if self.in_flight.is_empty() {
+                // pump dispatches whenever budget + a runnable session
+                // exist, so an empty in-flight set after a quiescent
+                // pump means nothing is runnable
+                return;
+            }
+            self.await_one_completion();
+        }
     }
 
     pub fn session(&self, id: u64) -> Option<&Session> {
@@ -414,6 +791,7 @@ impl Scheduler {
     }
 
     pub fn pause(&mut self, id: u64) -> Result<()> {
+        self.settle(id);
         self.get_mut(id)?.pause()?;
         // a suspended session's manifest entry pins its checkpoint +
         // iteration count — the restart-adoption ground truth
@@ -448,6 +826,7 @@ impl Scheduler {
     }
 
     pub fn cancel(&mut self, id: u64) -> Result<()> {
+        self.settle(id);
         self.get_mut(id)?.cancel()?;
         self.persist_manifest();
         Ok(())
@@ -806,6 +1185,167 @@ mod tests {
             &crate::testutil::fixtures::tmp_ckpt_dir("quarantine"),
         )
         .ok();
+    }
+
+    #[test]
+    fn arbiter_never_oversubscribes_under_randomized_dispatch() {
+        // ISSUE 8 acceptance: Σ grants ≤ physical across in-flight
+        // quanta, under randomized interleavings of grant and release.
+        let mut rng = crate::util::Rng::new(0x15_5E8);
+        for trial in 0..64 {
+            let physical = 1 + rng.below(16);
+            let steppers = 1 + rng.below(8);
+            let mut arb = Arbiter::with_steppers(NativePool::new(physical), steppers);
+            let mut live: Vec<usize> = Vec::new();
+            for _ in 0..256 {
+                if rng.below(2) == 0 {
+                    // dispatch attempt with a random request (0 = default)
+                    let req = rng.below(40);
+                    match arb.try_grant(req) {
+                        Some(g) => {
+                            assert!(g.threads() >= 1, "empty grant (trial {trial})");
+                            live.push(g.threads());
+                        }
+                        None => assert_eq!(
+                            arb.available(),
+                            0,
+                            "refusal with budget left (trial {trial})"
+                        ),
+                    }
+                } else if !live.is_empty() {
+                    // random completion order — grants return out of
+                    // dispatch order
+                    let i = rng.below(live.len());
+                    arb.release(live.swap_remove(i));
+                }
+                let sum: usize = live.iter().sum();
+                assert_eq!(arb.in_use(), sum, "grant ledger drift (trial {trial})");
+                assert!(
+                    sum <= physical,
+                    "Σ grants {sum} > physical {physical} (trial {trial})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn arbiter_fair_share_defaults_divide_the_budget() {
+        let mut arb = Arbiter::with_steppers(NativePool::new(8), 4);
+        // four defaulted requests split an 8-wide budget 2/2/2/2
+        let widths: Vec<usize> =
+            (0..4).map(|_| arb.try_grant(0).unwrap().threads()).collect();
+        assert_eq!(widths, vec![2, 2, 2, 2]);
+        assert_eq!(arb.available(), 0);
+        assert!(arb.try_grant(0).is_none(), "exhausted budget must refuse");
+        arb.release(2);
+        // an explicit request shrinks to what is available
+        assert_eq!(arb.try_grant(5).unwrap().threads(), 2);
+        // steppers=1 keeps the pre-concurrency default: the full budget
+        let mut solo = Arbiter::with_steppers(NativePool::new(8), 1);
+        assert_eq!(solo.try_grant(0).unwrap().threads(), 8);
+    }
+
+    fn solo_theta_bits(cfg: &RunConfig) -> Vec<u32> {
+        let workload = crate::workloads::factory::build(cfg).unwrap();
+        let mut drv =
+            crate::coordinator::Driver::new(cfg.clone(), workload).unwrap();
+        drv.run().unwrap();
+        drv.theta().iter().map(|x| x.to_bits()).collect()
+    }
+
+    #[test]
+    fn concurrent_steppers_preserve_bit_identity() {
+        // ISSUE 8 tentpole: K sessions on a 4-wide stepper pool finish
+        // with trajectories bit-identical to their solo runs, under both
+        // policies, with the arbiter splitting a physical budget.
+        for policy in [Policy::RoundRobin, Policy::WeightedFair] {
+            let seeds: Vec<u64> = (1..=6).collect();
+            let solo: Vec<Vec<u32>> =
+                seeds.iter().map(|&sd| solo_theta_bits(&synth_cfg(sd, 5))).collect();
+            let mut s = sched(policy, 8, &format!("steppers_{}", policy.name()));
+            s.set_physical_pool(NativePool::new(4));
+            s.set_steppers(4, None);
+            let ids: Vec<u64> = seeds
+                .iter()
+                .map(|&sd| s.submit(synth_cfg(sd, 5), Budget::default()).unwrap())
+                .collect();
+            s.run_to_completion();
+            assert_eq!(s.in_flight_count(), 0);
+            for (i, id) in ids.iter().enumerate() {
+                let sess = s.session(*id).unwrap();
+                assert_eq!(sess.state(), SessionState::Done, "session {id}");
+                assert_eq!(sess.iters_done(), 5);
+                let granted = sess.granted_threads().expect("granted quantum ran");
+                assert!(granted >= 1 && granted <= 4, "grant {granted} out of range");
+                let bits: Vec<u32> =
+                    sess.theta().unwrap().iter().map(|x| x.to_bits()).collect();
+                assert_eq!(
+                    bits, solo[i],
+                    "stepper interleaving changed session {id} ({})",
+                    policy.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn pump_caps_in_flight_at_steppers_and_completes() {
+        let mut s = sched(Policy::RoundRobin, 16, "pumpcap");
+        s.set_physical_pool(NativePool::new(4));
+        s.set_steppers(2, None);
+        for seed in 0..6 {
+            s.submit(synth_cfg(seed, 3), Budget::default()).unwrap();
+        }
+        let mut completed = 0usize;
+        loop {
+            completed += s.pump().len();
+            assert!(
+                s.in_flight_count() <= 2,
+                "in-flight {} > steppers 2",
+                s.in_flight_count()
+            );
+            if s.in_flight_count() == 0 {
+                break;
+            }
+            // block for progress exactly like the harness loop does
+            s.await_one_completion();
+            completed += 1;
+        }
+        assert_eq!(completed, 6 * 3, "every quantum must be reported exactly once");
+        assert!(s.sessions().all(|x| x.state() == SessionState::Done));
+    }
+
+    #[test]
+    fn concurrent_quarantine_and_lifecycle_commands_settle() {
+        // a poisoned session quarantines from a stepper worker; pause
+        // and cancel issued while quanta are in flight settle instead of
+        // corrupting the reattach path
+        let solo = solo_theta_bits(&synth_cfg(2, 6));
+        let mut s = sched(Policy::WeightedFair, 8, "settle");
+        s.set_physical_pool(NativePool::new(4));
+        s.set_steppers(4, None);
+        let mut bad_cfg = synth_cfg(1, 6);
+        bad_cfg.faults = "eval_panic@s1.i2".into();
+        let bad = s.submit(bad_cfg, Budget::default()).unwrap();
+        let good = s.submit(synth_cfg(2, 6), Budget::default()).unwrap();
+        let victim = s.submit(synth_cfg(3, 50), Budget::default()).unwrap();
+        s.pump();
+        s.cancel(victim).unwrap();
+        assert_eq!(s.session(victim).unwrap().state(), SessionState::Failed);
+        s.run_to_completion();
+        let failed = s.session(bad).unwrap();
+        assert_eq!(failed.state(), SessionState::Failed);
+        assert!(failed.quarantined(), "panic on a worker must quarantine");
+        assert!(
+            failed.error().unwrap().contains("eval_panic"),
+            "{:?}",
+            failed.error()
+        );
+        let sess = s.session(good).unwrap();
+        assert_eq!(sess.state(), SessionState::Done);
+        let bits: Vec<u32> =
+            sess.theta().unwrap().iter().map(|x| x.to_bits()).collect();
+        assert_eq!(bits, solo, "quarantine/cancel on peers perturbed the survivor");
     }
 
     #[test]

@@ -4,10 +4,17 @@
 //! ## Threading model
 //!
 //! * **Scheduler thread** (the caller of [`Server::run`]) — owns the
-//!   [`Scheduler`] and every session in it. All optimization work
-//!   happens here, one session-iteration per quantum; within a quantum
-//!   the iteration fans out over the shared native pool. Sessions are
-//!   therefore free to hold non-`Send` state (the RL oracle does).
+//!   [`Scheduler`], every session in it, and ALL session bookkeeping
+//!   (lifecycle transitions, manifest rewrites, watch pushes). With
+//!   `serve.steppers = 1` the optimization work happens here too, one
+//!   session-iteration per quantum.
+//! * **Stepper workers** (`serve.steppers > 1`, ISSUE 8) — run whole
+//!   quanta dispatched by the scheduler: a session's driver is handed to
+//!   a worker for one `Driver::iteration` and handed back with the
+//!   outcome, so up to `steppers` sessions step simultaneously, each on
+//!   its arbited width (Σ grants ≤ physical). Workers never touch the
+//!   session table; a completion wakes this thread through the command
+//!   queue (`ConnMsg::Wake`).
 //! * **Accept thread** — blocks on `accept`, spawns one reader thread
 //!   per connection. Woken for exit by a self-connect at shutdown.
 //! * **Reader threads** (one per connection) — parse one JSONL request
@@ -18,12 +25,19 @@
 //!   through the same queue, so everything a connection sees is written
 //!   by one thread, in one total order.
 //!
-//! The command queue is drained *before every scheduler quantum*, so
-//! protocol latency is bounded by one session iteration. All of a
-//! connection's requests — including unparseable lines, which travel
-//! the queue as pre-failed commands — are answered in arrival order;
-//! `watch` pushes interleave between responses and are distinguished by
-//! their `event` field.
+//! The command queue is drained *before every scheduler pump*, so
+//! protocol latency is bounded by one session iteration (serial) or by
+//! one non-blocking dispatch/reap pass (concurrent — lifecycle commands
+//! on a session whose quantum is in flight additionally settle that one
+//! quantum first). All of a connection's requests — including
+//! unparseable lines, which travel the queue as pre-failed commands —
+//! are answered in arrival order; `watch` pushes interleave between
+//! responses and are distinguished by their `event` field. Watch pushes
+//! for a given session are emitted in that session's iteration order:
+//! completions reattach on this thread one at a time, and a session
+//! never has two quanta in flight, so per-session push order is
+//! preserved under any stepper interleaving (pushes of *different*
+//! sessions may interleave in completion order — they always could).
 //!
 //! ## Result streaming
 //!
@@ -81,6 +95,12 @@ enum ConnMsg {
     /// thread (parked on the line queue) exits instead of leaking —
     /// the connection cap only tracks reader threads.
     Disconnected,
+    /// A stepper worker finished a quantum (ISSUE 8): wake the blocked
+    /// serve loop so it pumps the scheduler. Carries no payload — the
+    /// outcome travels the scheduler's own completion channel; this is
+    /// purely the wakeup, funneled through the command queue so the
+    /// serve loop keeps a single blocking recv.
+    Wake,
 }
 
 /// A connection message plus the connection's outbound line queue.
@@ -97,8 +117,9 @@ struct Watcher {
 }
 
 /// A bound serving endpoint. `bind` starts accepting connections;
-/// [`Server::run`] processes them (call it on the same thread — the
-/// scheduler owns non-`Send` session state, which the compiler enforces).
+/// [`Server::run`] consumes the server and processes them. All session
+/// bookkeeping stays on the calling thread — stepper workers (if any)
+/// only ever hold detached drivers mid-quantum.
 pub struct Server {
     listener: TcpListener,
     rx: Receiver<Command>,
@@ -166,6 +187,23 @@ impl Server {
             );
         }
         let (tx, rx) = mpsc::channel();
+        if cfg.serve.steppers > 1 {
+            // stepper-pool mode: workers wake the (possibly blocked)
+            // serve loop through the command queue after each completed
+            // quantum. The Mutex makes the captured Sender shareable
+            // across workers; a Wake send is once per quantum, so the
+            // lock is uncontended noise.
+            let wake_tx = std::sync::Mutex::new(tx.clone());
+            let dummy_reply = std::sync::Mutex::new(mpsc::channel::<String>().0);
+            sched.set_steppers(
+                cfg.serve.steppers,
+                Some(Arc::new(move || {
+                    if let (Ok(tx), Ok(reply)) = (wake_tx.lock(), dummy_reply.lock()) {
+                        let _ = tx.send((ConnMsg::Wake, reply.clone()));
+                    }
+                })),
+            );
+        }
         let shutdown = Arc::new(AtomicBool::new(false));
         {
             let listener = listener.try_clone()?;
@@ -191,7 +229,9 @@ impl Server {
     }
 
     /// Serve until a `shutdown` command (or every client handle is
-    /// gone). Commands are drained before each scheduler quantum.
+    /// gone). Commands are drained before each scheduler pump; a pump is
+    /// one inline quantum (serial) or a non-blocking reap-and-dispatch
+    /// pass over the stepper pool (concurrent).
     pub fn run(mut self) -> Result<()> {
         loop {
             loop {
@@ -205,22 +245,25 @@ impl Server {
                     Err(TryRecvError::Disconnected) => return self.stop(),
                 }
             }
-            match self.sched.tick() {
-                Some(id) => self.notify(id),
-                None => {
-                    // Nothing runnable — and nothing BECOMES runnable
-                    // except through a command on this queue (paused
-                    // deadlines are only enforced when a session next
-                    // steps), so a blocking recv is both correct and
-                    // wakeup-free for an idle long-lived server.
-                    match self.rx.recv() {
-                        Ok(cmd) => {
-                            if self.dispatch(cmd) {
-                                return self.stop();
-                            }
+            let progressed = self.sched.pump();
+            for id in &progressed {
+                self.notify(*id);
+            }
+            if progressed.is_empty() {
+                // Nothing completed and nothing further to dispatch, so
+                // block. If quanta are in flight, a stepper worker's
+                // Wake lands on this queue when one completes; if not,
+                // nothing BECOMES runnable except through a command on
+                // this queue (paused deadlines are only enforced when a
+                // session next steps), so a blocking recv is both
+                // correct and wakeup-free for an idle long-lived server.
+                match self.rx.recv() {
+                    Ok(cmd) => {
+                        if self.dispatch(cmd) {
+                            return self.stop();
                         }
-                        Err(mpsc::RecvError) => return self.stop(),
                     }
+                    Err(mpsc::RecvError) => return self.stop(),
                 }
             }
         }
@@ -300,6 +343,8 @@ impl Server {
                 self.watches.retain(|_, ws| !ws.is_empty());
                 return false;
             }
+            // pure wakeup — the next loop iteration pumps the scheduler
+            ConnMsg::Wake => return false,
         };
         let line = match req {
             Request::Shutdown => {
@@ -512,12 +557,14 @@ fn handle_conn(stream: TcpStream, tx: Sender<Command>) {
 pub fn serve(cfg: &RunConfig) -> Result<()> {
     let server = Server::bind(cfg)?;
     println!(
-        "serve: listening on {} (max_sessions={}, policy={}, threads={}, pool={})",
+        "serve: listening on {} (max_sessions={}, policy={}, threads={}, pool={}, \
+         steppers={})",
         server.local_addr()?,
         cfg.serve.max_sessions,
         cfg.serve.policy.name(),
         cfg.optex.threads,
         cfg.optex.pool.name(),
+        cfg.serve.steppers,
     );
     server.run()
 }

@@ -125,12 +125,9 @@ pub struct Session {
     archived_retries: u64,
     archived_nonfinite: u64,
     /// True when the session was Failed by catching a panicking oracle
-    /// (the `catch_unwind` quarantine boundary in [`Session::step`]).
+    /// (the `catch_unwind` quarantine boundary in [`Quantum::run`]).
     quarantined: bool,
     submitted_at: Instant,
-    /// Cumulative driver `eval_wall_s` already accounted (resets with
-    /// the driver on resume-from-suspend).
-    eval_cum_seen: f64,
     eval_ema_s: f64,
     /// Weighted-fair virtual time: Σ of the EMA at each step taken.
     vtime: f64,
@@ -196,7 +193,6 @@ impl Session {
             archived_nonfinite: 0,
             quarantined: false,
             submitted_at: Instant::now(),
-            eval_cum_seen: 0.0,
             eval_ema_s: 0.0,
             vtime: 0.0,
             last_grant: None,
@@ -413,14 +409,35 @@ impl Session {
     /// apply budget checks. No-op unless runnable. Driver errors mark the
     /// session Failed (never propagate — one session's oracle blowing up
     /// must not take the serve loop down).
+    ///
+    /// This is the inline composition of the three-phase quantum protocol
+    /// ([`Session::begin_quantum`] → [`Quantum::run`] →
+    /// [`Session::complete_quantum`]) that the concurrent stepper pool
+    /// (ISSUE 8) drives across threads — the serial path and the
+    /// dispatched path share every line of lifecycle logic by
+    /// construction.
     pub fn step(&mut self) {
+        if let BeginOutcome::Started(q) = self.begin_quantum() {
+            let outcome = q.run();
+            self.complete_quantum(outcome);
+        }
+    }
+
+    /// Phase 1 (serve thread): apply the pre-step budget gates and, if
+    /// the session should run, detach the driver into a [`Quantum`] ready
+    /// to execute on any thread. While the quantum is in flight the
+    /// session stays `Running` with `driver: None`; the scheduler's
+    /// in-flight set is what prevents a second dispatch (the accessors
+    /// all degrade to the archived view, so `status` queries during an
+    /// in-flight quantum stay safe).
+    pub(crate) fn begin_quantum(&mut self) -> BeginOutcome {
         if !self.is_runnable() {
-            return;
+            return BeginOutcome::NotRunnable;
         }
         if let Some(dl) = self.budget.deadline_s {
             if self.submitted_at.elapsed().as_secs_f64() >= dl {
                 self.finish(SessionState::Done, Some("deadline"), None);
-                return;
+                return BeginOutcome::Finished;
             }
         }
         // iteration-count budget gates BEFORE the step (a max_iters: 0
@@ -429,58 +446,61 @@ impl Session {
         // meaningful (best_loss is +inf until then).
         if self.iters_done >= self.budget.effective_max(self.cfg.steps) {
             self.finish(SessionState::Done, Some("max_iters"), None);
-            return;
+            return BeginOutcome::Finished;
         }
         self.state = SessionState::Running;
         let t = (self.iters_done + 1) as usize;
-        let drv = self.driver.as_mut().expect("runnable session has a driver");
-        // Failure-domain boundary (ISSUE 7): a panicking oracle is
-        // quarantined HERE — whether it fired on the driver thread or
-        // was re-raised out of either pool mode, the payload stops at
-        // this frame, the session goes Failed with the message
-        // queryable via `status`, and `finish` drops the driver (arena
-        // and any outstanding loan included). The other K−1 sessions
-        // never observe it. AssertUnwindSafe is justified by exactly
-        // that drop: the possibly-inconsistent driver is never used
-        // again.
-        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            drv.iteration(t)
-        }));
-        let outcome = match outcome {
-            Ok(r) => r,
-            Err(payload) => {
+        let driver = self.driver.take().expect("runnable session has a driver");
+        BeginOutcome::Started(Quantum { session_id: self.id, t, driver: Some(driver) })
+    }
+
+    /// Phase 3 (serve thread): reattach the driver (or quarantine the
+    /// session if the quantum panicked), charge the weighted-fair clock
+    /// from the WORKER-measured step seconds, and apply the post-step
+    /// budget checks. The EMA deliberately uses the time measured around
+    /// `Driver::iteration` on the executing thread — never serve-thread
+    /// wall-clock — so co-scheduled peers' quanta cannot inflate each
+    /// other's fair-share cost (ISSUE 8 satellite).
+    pub(crate) fn complete_quantum(&mut self, outcome: QuantumOutcome) {
+        match outcome {
+            QuantumOutcome::Panicked { driver, message, .. } => {
+                // Failure-domain boundary (ISSUE 7): the panic payload
+                // stopped at the `catch_unwind` in `Quantum::run`. The
+                // session goes Failed with the message queryable via
+                // `status`; reattaching the driver first lets `finish`
+                // archive its pre-panic rows and then drop it (arena
+                // and any outstanding loan included). The other K−1
+                // sessions never observe any of it.
                 self.quarantined = true;
+                self.driver = Some(driver);
                 self.finish(
                     SessionState::Failed,
                     None,
-                    Some(format!(
-                        "panic in Driver::iteration: {}",
-                        panic_message(payload.as_ref())
-                    )),
+                    Some(format!("panic in Driver::iteration: {message}")),
                 );
-                return;
             }
-        };
-        let cum = drv.eval_wall_s();
-        if let Err(e) = outcome {
-            self.finish(SessionState::Failed, None, Some(format!("{e:#}")));
-            return;
-        }
-        self.iters_done += 1;
-        let delta = (cum - self.eval_cum_seen).max(0.0);
-        self.eval_cum_seen = cum;
-        self.eval_ema_s = if self.iters_done == 1 {
-            delta
-        } else {
-            EVAL_EMA_ALPHA * delta + (1.0 - EVAL_EMA_ALPHA) * self.eval_ema_s
-        };
-        self.vtime += self.eval_ema_s;
+            QuantumOutcome::Ran { driver, result, step_eval_s, .. } => {
+                self.driver = Some(driver);
+                if let Err(e) = result {
+                    self.finish(SessionState::Failed, None, Some(format!("{e:#}")));
+                    return;
+                }
+                self.iters_done += 1;
+                self.eval_ema_s = if self.iters_done == 1 {
+                    step_eval_s
+                } else {
+                    EVAL_EMA_ALPHA * step_eval_s
+                        + (1.0 - EVAL_EMA_ALPHA) * self.eval_ema_s
+                };
+                self.vtime += self.eval_ema_s;
 
-        if self.iters_done >= self.budget.effective_max(self.cfg.steps) {
-            self.finish(SessionState::Done, Some("max_iters"), None);
-        } else if let Some(target) = self.budget.target_loss {
-            if self.best_loss() <= target {
-                self.finish(SessionState::Done, Some("target_loss"), None);
+                if self.iters_done >= self.budget.effective_max(self.cfg.steps) {
+                    self.finish(SessionState::Done, Some("max_iters"), None);
+                } else if let Some(target) = self.budget.target_loss {
+                    if self.best_loss() <= target {
+                        self.finish(SessionState::Done, Some("target_loss"), None);
+                    }
+                }
             }
         }
     }
@@ -532,8 +552,6 @@ impl Session {
                 .expect("runnable session has a driver")
                 .save_checkpoint(&path, self.iters_done)?;
             self.archive_driver();
-            // the driver's cumulative eval clock died with it
-            self.eval_cum_seen = 0.0;
         }
         self.state = SessionState::Paused;
         Ok(())
@@ -646,6 +664,110 @@ impl Session {
         self.finish(SessionState::Failed, None, Some("cancelled by client".into()));
         Ok(())
     }
+}
+
+/// What [`Session::begin_quantum`] decided.
+pub(crate) enum BeginOutcome {
+    /// Driver detached: run the quantum (any thread) and hand its
+    /// [`QuantumOutcome`] back to [`Session::complete_quantum`].
+    Started(Quantum),
+    /// A pre-step budget gate fired (deadline / max_iters): the session
+    /// finished without running an iteration.
+    Finished,
+    /// Not runnable (paused or terminal) — nothing to do.
+    NotRunnable,
+}
+
+/// A detached in-flight quantum: the session's driver plus the iteration
+/// number it must run. `Send` by construction (asserted below) — this is
+/// the unit the stepper pool moves between threads. Exactly one thread
+/// touches the driver at a time; *which* thread changes between quanta.
+pub(crate) struct Quantum {
+    session_id: u64,
+    t: usize,
+    /// `Option` so the `catch_unwind` closure can borrow it mutably and
+    /// the Ok-path can still move it out afterwards.
+    driver: Option<Driver>,
+}
+
+impl Quantum {
+    pub(crate) fn session_id(&self) -> u64 {
+        self.session_id
+    }
+
+    /// Phase 2 (any thread): run the one iteration under `catch_unwind`,
+    /// timing it on THIS thread. The worker-measured seconds are the only
+    /// timing the fair-share EMA ever sees (see
+    /// [`Session::complete_quantum`]).
+    ///
+    /// A panicking oracle is quarantined HERE — whether it fired on the
+    /// executing thread or was re-raised out of either pool mode, the
+    /// payload stops at this frame. The driver survives the catch and
+    /// rides back in the outcome so `complete_quantum` can archive its
+    /// pre-panic metric rows before dropping it — exactly what the
+    /// serial path always did. `AssertUnwindSafe` is justified by that
+    /// archive-then-drop: the possibly-inconsistent driver is only ever
+    /// read for metrics, never stepped again. A worker always produces
+    /// an outcome, so the scheduler can never leak a grant.
+    pub(crate) fn run(mut self) -> QuantumOutcome {
+        let t = self.t;
+        let mut driver = self.driver.take().expect("quantum holds the driver");
+        let start = Instant::now();
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            driver.iteration(t)
+        }));
+        let step_eval_s = start.elapsed().as_secs_f64();
+        match result {
+            Ok(result) => QuantumOutcome::Ran {
+                session_id: self.session_id,
+                driver,
+                result,
+                step_eval_s,
+            },
+            Err(payload) => QuantumOutcome::Panicked {
+                session_id: self.session_id,
+                driver,
+                message: panic_message(payload.as_ref()),
+            },
+        }
+    }
+}
+
+/// What a quantum produced, to be reattached by
+/// [`Session::complete_quantum`] on the serve thread.
+pub(crate) enum QuantumOutcome {
+    /// The iteration ran (successfully or to a clean `Err`); the driver
+    /// comes back with it. `step_eval_s` is the wall time measured on
+    /// the executing thread around `Driver::iteration` only.
+    Ran {
+        session_id: u64,
+        driver: Driver,
+        result: Result<()>,
+        step_eval_s: f64,
+    },
+    /// The iteration panicked; the driver comes back only so its
+    /// pre-panic metrics can be archived — it is never stepped again.
+    Panicked { session_id: u64, driver: Driver, message: String },
+}
+
+impl QuantumOutcome {
+    pub(crate) fn session_id(&self) -> u64 {
+        match self {
+            QuantumOutcome::Ran { session_id, .. } => *session_id,
+            QuantumOutcome::Panicked { session_id, .. } => *session_id,
+        }
+    }
+}
+
+// Compile-time proof that quanta (driver, oracle, optimizer, arena and
+// all) may be handed to stepper-pool workers. If an oracle grows
+// non-`Send` state this fails the BUILD, not the dispatch path at
+// runtime.
+#[allow(dead_code)]
+fn _quanta_are_send() {
+    fn assert_send<T: Send>() {}
+    assert_send::<Quantum>();
+    assert_send::<QuantumOutcome>();
 }
 
 /// Render a caught panic payload for the session's error field (the two

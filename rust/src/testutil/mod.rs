@@ -52,6 +52,19 @@ pub mod fixtures {
             .unwrap_or(1)
     }
 
+    /// Stepper-pool width for tests whose scheduling is concurrent but
+    /// whose results must not be (ISSUE 8): the CI matrix sets
+    /// `OPTEX_TEST_STEPPERS ∈ {1, 4}` to replay the scenario corpus on a
+    /// concurrent stepper pool against the SAME goldens. Defaults to 1
+    /// (serial inline stepping).
+    pub fn test_steppers() -> usize {
+        std::env::var("OPTEX_TEST_STEPPERS")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .filter(|&t| t >= 1)
+            .unwrap_or(1)
+    }
+
     /// Minimal JSONL wire client for the serve tests and benches — the
     /// ONE implementation of the connect / send-line / read-line /
     /// skip-push protocol dance, shared by `serve_integration`,

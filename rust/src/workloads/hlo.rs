@@ -16,7 +16,9 @@ use crate::util::Rng;
 use crate::workloads::{sampler_bytes, Eval, GradSource};
 
 /// Turns θ into artifact inputs and artifact outputs into an [`Eval`].
-pub trait BatchProvider {
+/// `Send` for the same reason as [`GradSource`]: the owning driver moves
+/// between stepper-pool workers across quanta.
+pub trait BatchProvider: Send {
     /// Build the artifact input list (θ first, then sampled data).
     fn make_inputs(&mut self, params: &[f32]) -> Vec<TensorData>;
 

@@ -42,7 +42,14 @@ pub struct Eval {
 }
 
 /// A stochastic first-order oracle.
-pub trait GradSource {
+///
+/// `Send` because a session's driver (which owns the oracle) is handed
+/// whole to a stepper-pool worker for each quantum (ISSUE 8): only ONE
+/// thread ever touches the oracle at a time, but *which* thread changes
+/// between quanta. Oracles that share state in-process (e.g. the DQN
+/// replay buffer between the training loop and the oracle) use
+/// `Arc<Mutex<..>>` handles rather than `Rc<RefCell<..>>`.
+pub trait GradSource: Send {
     /// Parameter dimension d.
     fn dim(&self) -> usize;
 

@@ -316,8 +316,7 @@ fn qnet_hlo_gradients_match_native_mlp() {
     use optex::rl::dqn::DqnSource;
     use optex::util::Rng;
     use optex::workloads::GradSource;
-    use std::cell::RefCell;
-    use std::rc::Rc;
+    use std::sync::{Arc, Mutex};
 
     let Some(dir) = test_dir() else { return };
     let manifest = optex::runtime::Manifest::load(&dir).unwrap();
@@ -329,12 +328,13 @@ fn qnet_hlo_gradients_match_native_mlp() {
     let gamma = spec.meta_f64("gamma").unwrap() as f32;
 
     let mk_replay = || {
-        let rb = Rc::new(RefCell::new(ReplayBuffer::new(128, obs_dim)));
+        let rb = Arc::new(Mutex::new(ReplayBuffer::new(128, obs_dim)));
         let mut rng = Rng::new(5);
         for _ in 0..100 {
             let o = rng.normal_vec(obs_dim);
             let no = rng.normal_vec(obs_dim);
-            rb.borrow_mut()
+            rb.lock()
+                .unwrap()
                 .push(&o, rng.below(n_act), rng.normal() as f32, &no, rng.coin(0.1));
         }
         rb

@@ -242,6 +242,103 @@ fn transient_eval_errors_retry_to_success_over_the_wire() {
     std::fs::remove_dir_all(&dir).ok();
 }
 
+/// ISSUE 8 satellite: quarantine churn on a concurrent weighted-fair
+/// schedule. K = 8 on a 4-wide stepper pool under `--policy fair`, with
+/// two sessions repeatedly hit by injected `eval_panic` shots at
+/// different depths (iterations 2 and 5) so the quarantines land while
+/// other quanta are in flight and the WFQ picker's runnable set churns
+/// mid-run. Required: both poisoned sessions quarantine with their
+/// pre-panic rows archived (iters = panic iteration − 1), their width
+/// grants return to the arbiter, every survivor runs to its full budget
+/// (no starvation — a leaked grant or a picker stuck on a quarantined
+/// id would hang this), and survivor thetas stay bit-identical to
+/// fault-free solo runs.
+#[test]
+fn k8_wfq_quarantine_churn_leaves_survivors_bit_identical_and_fed() {
+    let dir = tmp_ckpt_dir("faults_k8_wfq_churn");
+    let panic_early = 2usize; // submit order → session id 3, panics at i2
+    let panic_late = 5usize; // submit order → session id 6, panics at i5
+    let survivors: Vec<usize> =
+        (0..8).filter(|&i| i != panic_early && i != panic_late).collect();
+
+    let solo: std::collections::BTreeMap<usize, Vec<u32>> = survivors
+        .iter()
+        .map(|&i| {
+            let mut cfg = RunConfig::default();
+            for (k, v) in k8_overrides(i) {
+                cfg.apply_override(&format!("{k}={v}")).unwrap();
+            }
+            let workload = factory::build(&cfg).unwrap();
+            let mut drv = Driver::new(cfg, workload).unwrap();
+            drv.run().unwrap();
+            (i, drv.theta().iter().map(|x| x.to_bits()).collect())
+        })
+        .collect();
+
+    let mut base = RunConfig::default();
+    base.serve.addr = "127.0.0.1:0".into();
+    base.serve.ckpt_dir = dir.clone();
+    base.serve.max_sessions = 8;
+    base.serve.policy = optex::serve::Policy::parse("fair").unwrap();
+    base.serve.steppers = 4;
+    base.optex.threads = optex::testutil::fixtures::test_threads();
+    let (addr, server_thread) = spawn_server(base);
+    let mut client = WireClient::connect(addr);
+
+    let mut ids = Vec::new();
+    for i in 0..8 {
+        let mut overrides = k8_overrides(i);
+        if i == panic_early {
+            // repeated shots: the first one quarantines, the rest prove
+            // a quarantined session is never picked again (they could
+            // only fire if it were)
+            overrides.push(("faults", "eval_panic@i2*3".into()));
+        } else if i == panic_late {
+            overrides.push(("faults", "eval_panic@i5*3".into()));
+        }
+        let r = client.request(&submit_json(&overrides, false));
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r:?}");
+        ids.push(r.get("id").unwrap().as_usize().unwrap() as u64);
+    }
+
+    for i in 0..8 {
+        let status = await_terminal(&mut client, ids[i]);
+        if i == panic_early || i == panic_late {
+            let panic_iter = if i == panic_early { 2 } else { 5 };
+            assert_eq!(status.get("state").unwrap().as_str(), Some("failed"));
+            assert_eq!(status.get("quarantined").and_then(Json::as_bool), Some(true));
+            let err = status.get("error").unwrap().as_str().unwrap();
+            assert!(err.contains("panic in Driver::iteration"), "{err}");
+            // pre-panic rows rode back with the panicked driver
+            assert_eq!(
+                status.get("iters").unwrap().as_usize(),
+                Some(panic_iter - 1),
+                "{status:?}"
+            );
+        } else {
+            // no starvation: every survivor ran its complete budget even
+            // while grants churned through the quarantines
+            assert_eq!(status.get("state").unwrap().as_str(), Some("done"), "{status:?}");
+            let r = client.request(&format!(
+                "{{\"cmd\":\"result\",\"id\":{},\"theta\":true}}",
+                ids[i]
+            ));
+            assert_eq!(r.get("iters").unwrap().as_usize(), Some(10), "{r:?}");
+            assert_eq!(
+                theta_bits_of(&r),
+                solo[&i],
+                "survivor {i}: theta drifted from its fault-free solo run under \
+                 concurrent WFQ quarantine churn"
+            );
+        }
+    }
+
+    let r = client.request(r#"{"cmd":"shutdown"}"#);
+    assert_eq!(r.get("ok").unwrap().as_bool(), Some(true));
+    server_thread.join().expect("server thread panicked");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
 /// `optex.on_nonfinite = resync` is a recovery, not a coin flip: the
 /// poisoned iteration evicts its NaN history row, forces a full GP
 /// refit, and the run finishes with every recorded loss finite — and

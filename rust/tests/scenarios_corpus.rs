@@ -1,7 +1,9 @@
 //! The committed scenario corpus, end to end (ISSUE 6).
 //!
 //! Runs every scenario under `scenarios/` through the golden-trajectory
-//! harness at the CI-matrix width (`OPTEX_TEST_THREADS`, default 1).
+//! harness at the CI-matrix width (`OPTEX_TEST_THREADS`, default 1) and
+//! stepper-pool width (`OPTEX_TEST_STEPPERS`, default 1 — ISSUE 8: the
+//! concurrent legs verify against the SAME goldens as the serial leg).
 //! Bless mode is `Missing`: a freshly added scenario self-records its
 //! golden on first run (committed by the author / the CI bless step),
 //! while any drift against a committed golden still fails loudly.
@@ -13,6 +15,7 @@ use optex::testutil::fixtures;
 fn corpus_verifies_against_committed_goldens() {
     let mut opts = Opts::new(fixtures::scenarios_dir());
     opts.threads = fixtures::test_threads();
+    opts.steppers = fixtures::test_steppers();
     opts.bless = BlessMode::Missing;
     let report = run_corpus(&opts).expect("corpus run");
     assert!(

@@ -17,6 +17,7 @@
 //! | `combine_pool[...].ns_per_elem`                | lower is better |
 //! | `store_vs_seed[...].store_flatten_bytes_per_iter` (copies/iter) | lower is better (zero must STAY zero) |
 //! | `serve_throughput[k=8,...].steps_per_sec`      | higher is better |
+//! | `serve_throughput[k=8,steppers=8,...].steps_per_sec` (ISSUE 8 stepper-pool payoff) | higher is better |
 //!
 //! Usage: `bench_trend --check [--fresh DIR] [--baseline DIR]`
 //! (defaults: fresh = `.`, baseline = `baselines/`). Metrics without a
@@ -39,7 +40,7 @@ use anyhow::{bail, Context, Result};
 use optex::util::json::Json;
 
 /// Fields that locate a grid cell rather than measure it.
-const COORDS: &[&str] = &["t0", "d", "n", "dsub", "k", "steps_per_session"];
+const COORDS: &[&str] = &["t0", "d", "n", "dsub", "k", "steppers", "steps_per_session"];
 
 /// Relative regression threshold for the gate (25%).
 const GATE_TOLERANCE: f64 = 0.25;
@@ -54,36 +55,50 @@ struct Pinned {
     section: &'static str,
     field: &'static str,
     higher_is_better: bool,
-    /// Only gate cells where this coordinate has this value.
-    coord_filter: Option<(&'static str, f64)>,
+    /// Only gate cells where EVERY listed coordinate has the listed
+    /// value (empty = gate the whole section/field family). Multi-
+    /// coordinate since ISSUE 8, whose payoff cell is located by two
+    /// coordinates at once (`k` and `steppers`).
+    coord_filter: &'static [(&'static str, f64)],
 }
 
 /// The gate's metric list (ISSUE 5: combine ns/elem, copies/iter,
-/// K=8 serve steps/s).
+/// K=8 serve steps/s; ISSUE 8: the K=8 stepper-pool throughput cell).
+/// Order matters only for documentation — `pinned_match` is first-hit,
+/// so keep more specific filters before broader ones.
 const PINNED: &[Pinned] = &[
     Pinned {
         section: "store_vs_seed",
         field: "combine_store_ns_per_elem",
         higher_is_better: false,
-        coord_filter: None,
+        coord_filter: &[],
     },
     Pinned {
         section: "combine_pool",
         field: "ns_per_elem",
         higher_is_better: false,
-        coord_filter: None,
+        coord_filter: &[],
     },
     Pinned {
         section: "store_vs_seed",
         field: "store_flatten_bytes_per_iter",
         higher_is_better: false,
-        coord_filter: None,
+        coord_filter: &[],
+    },
+    // ISSUE 8 payoff pin: the concurrent stepper pool's K=8 aggregate
+    // throughput (recorded ≥ 2x its steppers=1 row at seed time — this
+    // gate keeps the win from quietly eroding).
+    Pinned {
+        section: "serve_throughput",
+        field: "steps_per_sec",
+        higher_is_better: true,
+        coord_filter: &[("k", 8.0), ("steppers", 8.0)],
     },
     Pinned {
         section: "serve_throughput",
         field: "steps_per_sec",
         higher_is_better: true,
-        coord_filter: Some(("k", 8.0)),
+        coord_filter: &[("k", 8.0)],
     },
 ];
 
@@ -277,10 +292,9 @@ fn pinned_match(p: &Pinned, row: &Row) -> bool {
     if row.section != p.section || row.field != p.field {
         return false;
     }
-    match p.coord_filter {
-        None => true,
-        Some((c, v)) => row.coord_vals.get(c).copied() == Some(v),
-    }
+    p.coord_filter
+        .iter()
+        .all(|(c, v)| row.coord_vals.get(*c).copied() == Some(*v))
 }
 
 /// A > 25% move in the harmful direction (with absolute slack so a zero
@@ -528,6 +542,46 @@ mod tests {
         std::fs::remove_dir_all(&base).ok();
         assert!(run_check(&fresh, &base).is_ok());
         std::fs::remove_dir_all(&fresh).ok();
+    }
+
+    /// ISSUE 8: the stepper-pool surface gates on BOTH coordinates —
+    /// the k=8,steppers=8 payoff cell regressing must fail even when
+    /// every other steppers cell (and the legacy steppers-free k=8 row)
+    /// holds, and steppers must render as a coordinate, not a metric.
+    #[test]
+    fn steppers_cell_is_gated_by_both_coordinates() {
+        let s8 = |sps_s1: f64, sps_s8: f64| {
+            format!(
+                concat!(
+                    "{{\"pr\": 8, \"bench\": \"bench_estimation\", \"rows\": [\n",
+                    "  {{\"section\": \"serve_throughput\", \"k\": 8, \"steppers\": 1, ",
+                    "\"d\": 2000, \"steps_per_sec\": {}}},\n",
+                    "  {{\"section\": \"serve_throughput\", \"k\": 8, \"steppers\": 8, ",
+                    "\"d\": 2000, \"steps_per_sec\": {}}},\n",
+                    "  {{\"section\": \"serve_throughput\", \"k\": 1, \"steppers\": 8, ",
+                    "\"d\": 2000, \"steps_per_sec\": 500.0}}\n",
+                    "]}}\n"
+                ),
+                sps_s1, sps_s8
+            )
+        };
+        let fresh = dir("steppers_fresh");
+        let base = dir("steppers_base");
+        std::fs::write(base.join("BENCH_8.json"), s8(1000.0, 2500.0)).unwrap();
+        // the concurrent win collapses back to serial; the serial row holds
+        std::fs::write(fresh.join("BENCH_8.json"), s8(1000.0, 1000.0)).unwrap();
+        let report = check_dirs(&fresh, &base).unwrap();
+        let bad: Vec<&str> = report.regressions().map(|c| c.label.as_str()).collect();
+        assert_eq!(bad.len(), 1, "{bad:?}");
+        assert!(
+            bad[0].contains("k=8") && bad[0].contains("steppers=8"),
+            "{bad:?}"
+        );
+        // k=1,steppers=8 is not pinned; both k=8 rows were checked
+        assert_eq!(report.checks.len(), 2);
+        assert!(run_check(&fresh, &base).is_err());
+        std::fs::remove_dir_all(&fresh).ok();
+        std::fs::remove_dir_all(&base).ok();
     }
 
     #[test]
