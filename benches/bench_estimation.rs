@@ -215,6 +215,76 @@ fn serve_steppers_grid(rows: &mut Vec<JsonRow>) {
     }
 }
 
+/// ISSUE-9 acceptance cell → BENCH_9.json: instrumentation overhead.
+/// The same K=8 serial grid as `serve_throughput`, run twice in one
+/// process: with a live metrics registry installed (every counter /
+/// histogram / flight-recorder site hot) and with the disabled handle
+/// (the runtime analogue of building with the `obs` feature off — each
+/// site degenerates to one null check). Two interleaved trials per arm,
+/// best-of taken, so a transient stall on a shared runner cannot fake a
+/// regression. The instrumented `steps_per_sec` is pinned by
+/// `bench_trend --check`; `overhead_pct` records the measured cost
+/// (acceptance bar: ≤ 5%).
+fn obs_overhead_grid(rows: &mut Vec<JsonRow>) {
+    println!("\n# obs: instrumentation overhead (live registry vs disabled handle, K=8)");
+    let steps = 30usize;
+    let d = 2_000usize;
+    let k = 8usize;
+    let run = |tag: &str, instrumented: bool| -> f64 {
+        let dir = optex::testutil::fixtures::tmp_ckpt_dir(&format!("bench_obs_{tag}"));
+        let mut sched = Scheduler::new(k, Policy::RoundRobin, dir.clone());
+        if instrumented {
+            sched.set_obs(optex::obs::Registry::new());
+        }
+        let t0 = Instant::now();
+        let ids: Vec<u64> = (0..k)
+            .map(|i| {
+                let mut cfg = RunConfig::default();
+                cfg.workload = "ackley".into();
+                cfg.steps = steps;
+                cfg.seed = i as u64;
+                cfg.synth_dim = d;
+                cfg.noise_std = 0.1;
+                cfg.optimizer =
+                    OptSpec::Adam { lr: 0.1, beta1: 0.9, beta2: 0.999, eps: 1e-8 };
+                cfg.optex.parallelism = 4;
+                cfg.optex.t0 = 8;
+                cfg.optex.threads = 1;
+                sched.submit(cfg, Budget::default()).expect("submit")
+            })
+            .collect();
+        sched.run_to_completion();
+        let total_s = t0.elapsed().as_secs_f64();
+        for id in &ids {
+            assert_eq!(sched.session(*id).unwrap().state(), SessionState::Done);
+        }
+        std::fs::remove_dir_all(&dir).ok();
+        (k * steps) as f64 / total_s
+    };
+    let mut sps_noobs = f64::NEG_INFINITY;
+    let mut sps = f64::NEG_INFINITY;
+    for trial in 0..2 {
+        sps_noobs = sps_noobs.max(run(&format!("off{trial}"), false));
+        sps = sps.max(run(&format!("on{trial}"), true));
+    }
+    let overhead_pct = (1.0 - sps / sps_noobs) * 100.0;
+    println!(
+        "obs_overhead K={k}: {sps:>8.1} steps/s instrumented vs {sps_noobs:>8.1} \
+         disabled ({overhead_pct:>5.2}% overhead; bar <= 5%)"
+    );
+    rows.push(JsonRow {
+        section: "obs_overhead",
+        fields: vec![
+            ("k".into(), k as f64),
+            ("d".into(), d as f64),
+            ("steps_per_session".into(), steps as f64),
+            ("steps_per_sec".into(), sps),
+            ("steps_per_sec_noobs".into(), sps_noobs),
+            ("overhead_pct".into(), overhead_pct),
+        ],
+    });
+}
+
 use optex::testutil::fixtures::WireClient;
 
 /// ISSUE-5 grid → BENCH_5.json: `watch` streaming latency (submit →
@@ -686,4 +756,9 @@ fn main() {
     let mut stepper_rows: Vec<JsonRow> = Vec::new();
     serve_steppers_grid(&mut stepper_rows);
     write_bench_json("BENCH_8.json", 8, &stepper_rows);
+
+    // ISSUE 9: instrumentation-overhead cell (live registry vs disabled)
+    let mut obs_rows: Vec<JsonRow> = Vec::new();
+    obs_overhead_grid(&mut obs_rows);
+    write_bench_json("BENCH_9.json", 9, &obs_rows);
 }

@@ -40,7 +40,7 @@ const VALUE_OPTS: &[&str] = &[
     "seeds", "fig", "profile", "n", "t0", "filter", "lr", "optimizer",
     "episodes", "env", "backend", "dim", "checkpoint", "resume", "fit",
     "threads", "gp-refresh-every", "pool", "addr", "max-sessions", "policy",
-    "dir", "faults", "steppers",
+    "dir", "faults", "steppers", "metrics-addr",
 ];
 
 impl Args {

@@ -217,6 +217,11 @@ pub struct ServeParams {
     /// without oversubscribing the machine. Never a numerics fork:
     /// per-session trajectories are bit-identical at any value.
     pub steppers: usize,
+    /// Second listener serving the Prometheus text exposition of the
+    /// server's metrics registry (ISSUE 9). `host:port` (port 0 binds an
+    /// ephemeral port, printed at startup); empty (default) = metrics
+    /// export off. The `stats` wire verb answers regardless.
+    pub metrics_addr: String,
 }
 
 impl Default for ServeParams {
@@ -230,6 +235,7 @@ impl Default for ServeParams {
             stream_every: 1,
             max_conns: 256,
             steppers: 1,
+            metrics_addr: String::new(),
         }
     }
 }
@@ -453,6 +459,7 @@ impl RunConfig {
             "serve.stream_every" => self.serve.stream_every = need_usize()?,
             "serve.max_conns" => self.serve.max_conns = need_usize()?,
             "serve.steppers" => self.serve.steppers = need_usize()?,
+            "serve.metrics_addr" => self.serve.metrics_addr = need_str()?.to_string(),
             _ => return Err(bad(key, "unknown config key")),
         }
         Ok(())
@@ -762,6 +769,15 @@ mod tests {
         assert!(cfg.apply_override("serve.policy=lifo").is_err());
         cfg.apply_override("serve.max_sessions=2").unwrap();
         assert_eq!(cfg.serve.max_sessions, 2);
+    }
+
+    #[test]
+    fn serve_metrics_addr_knob_defaults_off() {
+        assert_eq!(ServeParams::default().metrics_addr, "");
+        let mut cfg = RunConfig::default();
+        cfg.apply_override("serve.metrics_addr=\"127.0.0.1:9102\"").unwrap();
+        assert_eq!(cfg.serve.metrics_addr, "127.0.0.1:9102");
+        cfg.validate().unwrap();
     }
 
     #[test]

@@ -210,4 +210,63 @@ mod tests {
         assert!(text.lines().nth(1).unwrap().starts_with("vanilla,7,1,4,"));
         std::fs::remove_dir_all(&dir).ok();
     }
+
+    // -- ISSUE 9 satellite: column stability + value round-trip ----------
+
+    #[test]
+    fn csv_column_order_is_pinned() {
+        // Downstream plotting scripts and the figure harness index these
+        // columns by name; a silent reorder corrupts every time-axis
+        // figure. The full header, in exact order.
+        let dir = std::env::temp_dir().join("optex_metrics_cols_test");
+        let path = dir.join("run.csv");
+        let r = RunRecord::new("optex");
+        r.to_csv(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(
+            text.lines().next().unwrap(),
+            "label,session,iter,grad_evals,loss,grad_norm,best_loss,\
+             wall_s,parallel_s,eval_s,est_var,aux"
+        );
+        // retries / nonfinite are wire-surfaced robustness counters, not
+        // per-iteration series — they must never leak into the CSV
+        assert!(!text.contains("retries") && !text.contains("nonfinite"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn csv_values_round_trip_through_text() {
+        let dir = std::env::temp_dir().join("optex_metrics_rt_test");
+        let path = dir.join("run.csv");
+        let mut r = RunRecord::new("optex");
+        r.session = 3;
+        r.retries = 2;
+        r.nonfinite = 1;
+        r.push(row(1, 4.0));
+        r.push(IterRecord { aux: Some(0.875), eval_s: 0.125, ..row(2, 1.5) });
+        r.to_csv(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let header: Vec<&str> = text.lines().next().unwrap().split(',').collect();
+        let eval_col = header.iter().position(|c| *c == "eval_s").unwrap();
+        let aux_col = header.iter().position(|c| *c == "aux").unwrap();
+        let rows: Vec<Vec<&str>> =
+            text.lines().skip(1).map(|l| l.split(',').collect()).collect();
+        assert_eq!(rows.len(), 2, "one CSV row per iteration");
+        for cells in &rows {
+            assert_eq!(cells.len(), header.len(), "ragged row: {cells:?}");
+            for c in &cells[1..] {
+                c.parse::<f64>().unwrap_or_else(|_| panic!("unparseable cell {c:?}"));
+            }
+        }
+        assert_eq!(rows[1][0], "optex");
+        assert_eq!(rows[1][eval_col].parse::<f64>().unwrap(), 0.125);
+        assert_eq!(rows[1][aux_col].parse::<f64>().unwrap(), 0.875);
+        // absent aux prints as a parseable NaN, never an empty cell
+        assert!(rows[0][aux_col].parse::<f64>().unwrap().is_nan());
+        // the robustness counters ride on the record itself
+        assert_eq!((r.retries, r.nonfinite), (2, 1));
+        let s = r.summary();
+        assert!(s.contains("optex") && s.contains("iters=2"), "{s}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
 }

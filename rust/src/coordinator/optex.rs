@@ -47,6 +47,7 @@ use crate::coordinator::metrics::{IterRecord, RunRecord};
 use crate::faults::{CkptFault, FaultPlan};
 use crate::gp::estimator::FittedGp;
 use crate::gp::{DimSubset, GpConfig, GpFit, IncrementalGp};
+use crate::obs::{Counter, Hist, ObsEvent, Registry, TracePhase};
 use crate::opt::Optimizer;
 use crate::runtime::{Engine, Executable, In, Manifest, NativePool};
 use crate::util::stats::norm2;
@@ -113,6 +114,26 @@ pub struct Driver {
     /// otherwise. Empty on production runs: one `is_empty` check per
     /// site.
     faults: FaultPlan,
+    /// Metrics registry handle (ISSUE 9). Disabled for standalone runs;
+    /// the serve layer installs the server-wide registry via
+    /// [`Driver::set_obs`]. Disabled calls cost one branch each.
+    obs: Registry,
+    /// Flight-recorder events accumulated during an iteration (retry,
+    /// fault fired, nonfinite, resync) — on whatever thread runs the
+    /// quantum. The serve layer drains them into the session's ring at
+    /// reattach ([`Driver::take_events`]); only populated when `obs` is
+    /// enabled, so standalone runs never grow this.
+    events: Vec<ObsEvent>,
+    /// Last exported incremental-GP totals, so per-iteration registry
+    /// exports are deltas (the engine's own counters are cumulative and
+    /// reset when the engine is rebuilt after a checkpoint resume).
+    gp_exported: (u64, u64),
+    /// Persistent copy of the proxy chain's LAST gradient estimate and
+    /// the point index it refers to, for the prediction-residual
+    /// histogram (adaptive-width precursor). Only written when `obs` is
+    /// enabled.
+    resid_mu: Vec<f32>,
+    resid_idx: Option<usize>,
 }
 
 impl Driver {
@@ -193,6 +214,11 @@ impl Driver {
             theta_sub_buf: Vec::new(),
             eval_scratch: Vec::new(),
             faults,
+            obs: Registry::disabled(),
+            events: Vec::new(),
+            gp_exported: (0, 0),
+            resid_mu: Vec::new(),
+            resid_idx: None,
         })
     }
 
@@ -242,6 +268,28 @@ impl Driver {
     /// policy so far (live).
     pub fn nonfinite_events(&self) -> u64 {
         self.record.nonfinite
+    }
+
+    /// Install a metrics registry handle (ISSUE 9). The serve scheduler
+    /// passes the server-wide registry at admission; standalone runs
+    /// keep the disabled default.
+    pub fn set_obs(&mut self, obs: Registry) {
+        self.obs = obs;
+    }
+
+    /// Drain the flight-recorder events accumulated since the last
+    /// drain (retries, fired faults, nonfinite absorption) — the serve
+    /// thread calls this at quantum reattach and pushes them into the
+    /// session's ring.
+    pub fn take_events(&mut self) -> Vec<ObsEvent> {
+        std::mem::take(&mut self.events)
+    }
+
+    #[inline]
+    fn event(&mut self, phase: TracePhase, iter: u64, detail: String) {
+        if self.obs.enabled() {
+            self.events.push(ObsEvent::new(phase, iter, detail));
+        }
     }
 
     /// Snapshot the run to a checkpoint file (θ, optimizer state, local
@@ -298,6 +346,7 @@ impl Driver {
         // (`restore` cleared the ring, which also bumped its epoch — this
         // drop is belt-and-braces, not load-bearing).
         self.inc_gp = None;
+        self.gp_exported = (0, 0);
         Ok(ckp.iter)
     }
 
@@ -381,6 +430,15 @@ impl Driver {
             (iter_wall - eval_span.as_secs_f64()).max(0.0) + worker_max.as_secs_f64();
         self.eval_wall_s += eval_span.as_secs_f64();
         self.best_loss = self.best_loss.min(sel_loss);
+        if self.obs.enabled() {
+            self.obs.incr(Counter::Iterations);
+            // export the incremental-GP engine's counters as deltas
+            // (saturating: the engine resets when rebuilt after resume)
+            let (rb, fo) = (self.gp_rebuilds(), self.gp_factor_ops());
+            self.obs.add(Counter::GpRebuilds, rb.saturating_sub(self.gp_exported.0));
+            self.obs.add(Counter::GpFactorOps, fo.saturating_sub(self.gp_exported.1));
+            self.gp_exported = (rb, fo);
+        }
 
         if t % self.cfg.log_every == 0 || t == self.cfg.steps {
             self.record.push(IterRecord {
@@ -416,15 +474,24 @@ impl Driver {
         iter: u64,
     ) -> Result<(Vec<Eval>, Duration)> {
         if self.faults.take_eval_err(sess, iter) {
+            self.obs.incr(Counter::FaultsFired);
+            self.event(TracePhase::Fault, iter, "eval_err".into());
             bail!("injected fault: eval_err (session {sess}, iteration {iter})");
         }
         if self.faults.take_eval_panic(sess, iter) {
+            // record BEFORE panicking: the driver (events included) rides
+            // back through the quarantine path, so the trace names the
+            // fault site and iteration even for a panicked quantum
+            self.obs.incr(Counter::FaultsFired);
+            self.event(TracePhase::Fault, iter, "eval_panic".into());
             panic!("injected fault: eval_panic (session {sess}, iteration {iter})");
         }
         let start = Instant::now();
         if let Some(ms) = self.faults.take_eval_delay(sess, iter) {
             // a hung eval: the sleep sits inside the timed span, which is
             // how it trips the deadline below
+            self.obs.incr(Counter::FaultsFired);
+            self.event(TracePhase::Fault, iter, format!("eval_delay {ms}ms"));
             std::thread::sleep(Duration::from_millis(ms));
         }
         self.history.loan(eval_points.len());
@@ -453,11 +520,20 @@ impl Driver {
             );
         }
         if !self.faults.is_empty() {
-            let mut rows = self.history.loaned_rows_mut();
-            for (i, row) in rows.iter_mut().enumerate() {
-                if let Some(v) = self.faults.take_row_poison(sess, iter, i) {
-                    row.fill(v);
+            let mut poisoned = Vec::new();
+            {
+                let mut rows = self.history.loaned_rows_mut();
+                for (i, row) in rows.iter_mut().enumerate() {
+                    if let Some(v) = self.faults.take_row_poison(sess, iter, i) {
+                        row.fill(v);
+                        poisoned.push((i, v));
+                    }
                 }
+            }
+            for (i, v) in poisoned {
+                self.obs.incr(Counter::FaultsFired);
+                let site = if v.is_nan() { "nan_row" } else { "inf_row" };
+                self.event(TracePhase::Fault, iter, format!("{site} p{i}"));
             }
         }
         Ok((evals, span))
@@ -548,6 +624,14 @@ impl Driver {
                     self.mu_buf.iter_mut().for_each(|x| *x = 0.0);
                     1.0
                 };
+                if self.obs.enabled() {
+                    // keep the LAST estimate for the prediction-residual
+                    // histogram: μ̂ at points[_s-1] is compared against
+                    // that point's realized gradient after the fan-out
+                    self.resid_mu.clear();
+                    self.resid_mu.extend_from_slice(&self.mu_buf);
+                    self.resid_idx = Some(_s - 1);
+                }
                 chain.step(&mut cur, &self.mu_buf);
                 points.push(cur.clone());
                 snapshots.push(chain.clone_box());
@@ -578,9 +662,11 @@ impl Driver {
             loop {
                 match self.eval_attempt(&eval_points, sess, t as u64) {
                     Ok(ok) => break ok,
-                    Err(_) if attempt < self.cfg.optex.retry_max => {
+                    Err(e) if attempt < self.cfg.optex.retry_max => {
                         attempt += 1;
                         self.record.retries += 1;
+                        self.obs.incr(Counter::Retries);
+                        self.event(TracePhase::Retry, t as u64, format!("{e:#}"));
                         let backoff = self.cfg.optex.retry_backoff_ms;
                         if backoff > 0 {
                             std::thread::sleep(Duration::from_millis(
@@ -615,10 +701,34 @@ impl Driver {
                     || self.history.loaned_grad(i).iter().any(|g| !g.is_finite())
             })
             .collect();
+        // Prediction residual ‖μ̂−g‖/‖g‖ (per mille) for the last proxy
+        // estimate vs the realized gradient at the same point — the
+        // adaptive-width precursor signal (ROADMAP). Skipped for
+        // poisoned points and the sequential (eval-last-only) ablation,
+        // whose loaned row indices do not line up with proxy indices.
+        if self.obs.enabled() && eval_all {
+            if let Some(idx) = self.resid_idx.take() {
+                if idx < eval_points.len() && !poisoned.contains(&idx) {
+                    let g = self.history.loaned_grad(idx);
+                    let gn = norm2(g);
+                    if gn > 0.0 {
+                        let mut diff2 = 0.0f64;
+                        for (m, &gv) in self.resid_mu.iter().zip(g) {
+                            let d = (*m - gv) as f64;
+                            diff2 += d * d;
+                        }
+                        let permille = (diff2.sqrt() / gn * 1000.0).round() as u64;
+                        self.obs.observe(Hist::GradResidualPermille, permille);
+                    }
+                }
+            }
+        }
         let resync = if poisoned.is_empty() {
             false
         } else {
             self.record.nonfinite += poisoned.len() as u64;
+            self.obs.add(Counter::Nonfinite, poisoned.len() as u64);
+            self.event(TracePhase::Nonfinite, t as u64, format!("points {poisoned:?}"));
             match self.cfg.optex.on_nonfinite {
                 NonFinite::Fail => {
                     self.history.abandon_loan();
@@ -669,6 +779,7 @@ impl Driver {
                 // `last` that means the last finite point, never a
                 // poisoned θ.
                 self.history.retain_finite();
+                self.event(TracePhase::Resync, t as u64, "evicted poisoned history".into());
                 let finite: Vec<usize> =
                     (0..n).filter(|i| !poisoned.contains(i)).collect();
                 let fl: Vec<f64> = finite.iter().map(|&i| losses[i]).collect();

@@ -2,7 +2,7 @@
 //!
 //! T₀ ≤ 256 in every paper configuration, so a straightforward O(n³/6)
 //! dense factorization in f64 is both exact enough and far from any hot
-//! path (the d-sized combine dominates). Mirrors python/compile/linalg.py.
+//! path (the d-sized combine dominates).
 //!
 //! On top of the from-scratch factorization this module provides the
 //! structural O(n²) factor edits the incremental GP fit is built from

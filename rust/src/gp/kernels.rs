@@ -1,7 +1,7 @@
 //! Scalar kernel functions for the separable-kernel GP (paper Assump. 2:
 //! K(·,·) = k(·,·)·I with |k(θ,θ)| ≤ κ; we use unit-amplitude kernels so
-//! κ = 1). Mirrors python/compile/kernels/ref.py exactly — the two are
-//! cross-checked through the HLO artifacts in integration tests.
+//! κ = 1). Cross-checked against the lowered kernel reference through
+//! the HLO artifacts in integration tests.
 
 use crate::runtime::native_pool::grain;
 use crate::runtime::NativePool;
@@ -297,8 +297,8 @@ mod tests {
     }
 
     #[test]
-    fn matches_python_ref_values() {
-        // Spot values mirrored from python ref.py (r2 = 4, ls = 2).
+    fn matches_closed_form_reference_values() {
+        // Spot values from the closed forms (r2 = 4, ls = 2).
         let r2 = 4.0;
         let ls = 2.0;
         assert!((Kernel::Rbf.from_sqdist(r2, ls) - (-0.5f64).exp()).abs() < 1e-9);

@@ -2,20 +2,17 @@
 //!
 //! Production-quality reproduction of *"OptEx: Expediting First-Order
 //! Optimization with Approximately Parallelized Iterations"* (Shu et al.,
-//! NeurIPS 2024) as a three-layer Rust + JAX + Pallas stack:
+//! NeurIPS 2024) as a pure-Rust stack: the OptEx coordinator (kernelized
+//! gradient estimation, multi-step proxy updates, N-way parallel
+//! true-gradient iterations), baselines, the serving tier, runtime,
+//! benchmarks and figure harnesses.
 //!
-//! * **Layer 1** (`python/compile/kernels/`) — Pallas kernels for the GP
-//!   posterior hot-spot, AOT-lowered,
-//! * **Layer 2** (`python/compile/model.py`) — JAX workload graphs (loss +
-//!   gradient), lowered once to HLO text artifacts,
-//! * **Layer 3** (this crate) — the OptEx coordinator: kernelized gradient
-//!   estimation, multi-step proxy updates, N-way parallel true-gradient
-//!   iterations, baselines, runtime, benchmarks and figure harnesses.
-//!
-//! Python never runs on the request path: the `optex` binary loads the
-//! AOT artifacts through PJRT (`runtime`) and owns the whole optimization
-//! loop. See `DESIGN.md` for the system inventory and `EXPERIMENTS.md`
-//! for paper-vs-measured results.
+//! Workload graphs are consumed as AOT-lowered HLO text artifacts loaded
+//! through PJRT (`runtime`) — nothing but this crate runs on the request
+//! path. (The Python lowering layer that once lived in `python/` was
+//! retired in PR 9; see ROADMAP "Standing items" for the decision
+//! record.) See `DESIGN.md` for the system inventory and
+//! `EXPERIMENTS.md` for paper-vs-measured results.
 
 // Dense-linalg house style: explicit index loops over row-major flat
 // buffers mirror the math (and its complexity accounting) more directly
@@ -36,6 +33,7 @@ pub mod gp;
 pub mod opt;
 pub mod datasets;
 pub mod nn;
+pub mod obs;
 pub mod rl;
 pub mod runtime;
 pub mod scenarios;

@@ -33,6 +33,7 @@ USAGE:
   optex serve [--config FILE] [--addr HOST:PORT] [--max-sessions K]
               [--threads K] [--pool scoped|persistent] [--policy rr|fair]
               [--steppers S]          # concurrent quanta (stepper pool width)
+              [--metrics-addr HOST:PORT]  # Prometheus exposition listener
               [--adopt]               # adopt serve.ckpt_dir's session manifest
               [--faults SPEC]         # injected into sessions by (s,i,p) key
               [--set key=value ...]   # JSONL protocol; see serve/ docs
@@ -204,6 +205,9 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     }
     if let Some(s) = args.opt_usize("steppers")? {
         cfg.apply_override(&format!("serve.steppers={s}"))?;
+    }
+    if let Some(m) = args.opt("metrics-addr") {
+        cfg.apply_override(&format!("serve.metrics_addr={m}"))?;
     }
     if args.flag("adopt") {
         cfg.apply_override("serve.adopt=true")?;

@@ -166,8 +166,9 @@ mod tests {
     }
 
     #[test]
-    fn dim_matches_python_qnet_configs() {
-        // contract with aot.QNET_ENVS (see python/tests/test_aot.py)
+    fn dim_matches_qnet_artifact_configs() {
+        // shape contract with the lowered q-network artifacts
+        // (CartPole: 4-64-2, Acrobot: 6-128-3)
         assert_eq!(Mlp::new(4, 64, 2).dim(), 4 * 64 + 64 + 64 * 64 + 64 + 64 * 2 + 2);
         assert_eq!(Mlp::new(6, 128, 3).dim(), 6 * 128 + 128 + 128 * 128 + 128 + 128 * 3 + 3);
     }

@@ -2,8 +2,8 @@
 //!
 //! Used by the RL stack's `--backend native` q-network path and by tests
 //! that cross-check the HLO artifacts. The flat-parameter layout matches
-//! `python/compile/model.py::QNetConfig.shapes` exactly so the same
-//! parameter vector runs through either backend.
+//! the q-network shape contract recorded in `artifacts/manifest.json`
+//! exactly, so the same parameter vector runs through either backend.
 
 pub mod linalg;
 pub mod mlp;

@@ -1,0 +1,154 @@
+//! Prometheus-style text exposition of a registry snapshot, plus the
+//! second-listener scrape endpoint behind `serve.metrics_addr`.
+//!
+//! The responder is deliberately minimal: any HTTP/1.x request on the
+//! metrics listener gets a `200 OK` with the full exposition —
+//! text format version 0.0.4, `# TYPE` lines included, histograms
+//! rendered as cumulative `_bucket{le=...}` series plus `_sum`/`_count`
+//! (the log2 buckets' inclusive upper bounds are `2^b - 1`; see
+//! `registry::bucket_le`). No routing, no keep-alive, no external deps
+//! — a scraper (or `curl`) reads one response and the connection
+//! closes.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+
+use anyhow::{Context, Result};
+
+use crate::obs::registry::{bucket_le, Registry, Snapshot};
+
+/// Render a snapshot in the Prometheus text exposition format.
+pub fn render(snap: &Snapshot) -> String {
+    let mut out = String::new();
+    for &(name, v) in &snap.counters {
+        out.push_str(&format!("# TYPE {name} counter\n{name} {v}\n"));
+    }
+    for &(name, v) in &snap.gauges {
+        out.push_str(&format!("# TYPE {name} gauge\n{name} {v}\n"));
+    }
+    for h in &snap.hists {
+        let name = h.name;
+        out.push_str(&format!("# TYPE {name} histogram\n"));
+        let mut cum = 0u64;
+        for (b, &n) in h.buckets.iter().enumerate() {
+            cum += n;
+            if n == 0 {
+                // skip interior zero-delta buckets to keep the page
+                // readable; cumulative correctness is unaffected
+                continue;
+            }
+            if let Some(le) = bucket_le(b) {
+                out.push_str(&format!("{name}_bucket{{le=\"{le}\"}} {cum}\n"));
+            }
+        }
+        out.push_str(&format!("{name}_bucket{{le=\"+Inf\"}} {cum}\n"));
+        out.push_str(&format!("{name}_sum {}\n", h.sum));
+        out.push_str(&format!("{name}_count {}\n", h.count));
+    }
+    out
+}
+
+fn answer(mut stream: TcpStream, registry: &Registry) {
+    // Drain (up to 4 KiB of) the request so the client's write never
+    // sees a reset, then respond to anything with the exposition.
+    let mut buf = [0u8; 4096];
+    let _ = stream.read(&mut buf);
+    let body = render(&registry.snapshot());
+    let head = format!(
+        "HTTP/1.0 200 OK\r\nContent-Type: text/plain; version=0.0.4\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    let _ = stream
+        .write_all(head.as_bytes())
+        .and_then(|_| stream.write_all(body.as_bytes()))
+        .and_then(|_| stream.flush());
+}
+
+/// Bind `addr` and serve the exposition from a detached thread for the
+/// life of the process. Returns the bound address (port 0 resolves to
+/// the ephemeral port). The thread holds only a registry handle — it
+/// never touches the scheduler, so a slow scraper cannot stall a
+/// quantum.
+pub fn spawn_metrics_listener(addr: &str, registry: Registry) -> Result<SocketAddr> {
+    let listener = TcpListener::bind(addr)
+        .with_context(|| format!("binding serve.metrics_addr {addr:?}"))?;
+    let bound = listener.local_addr()?;
+    std::thread::Builder::new()
+        .name("optex-metrics".into())
+        .spawn(move || {
+            for stream in listener.incoming().flatten() {
+                answer(stream, &registry);
+            }
+        })
+        .context("spawning metrics listener thread")?;
+    Ok(bound)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::registry::{Counter, Gauge, Hist};
+
+    #[test]
+    fn render_covers_every_metric_with_type_lines() {
+        let reg = Registry::new();
+        let text = render(&reg.snapshot());
+        for c in Counter::ALL {
+            assert!(text.contains(&format!("# TYPE {} counter", c.name())), "{}", c.name());
+        }
+        for g in Gauge::ALL {
+            assert!(text.contains(&format!("# TYPE {} gauge", g.name())), "{}", g.name());
+        }
+        for h in Hist::ALL {
+            assert!(
+                text.contains(&format!("# TYPE {} histogram", h.name())),
+                "{}",
+                h.name()
+            );
+            assert!(text.contains(&format!("{}_count", h.name())));
+        }
+    }
+
+    #[cfg(feature = "obs")]
+    #[test]
+    fn histogram_buckets_render_cumulative() {
+        let reg = Registry::new();
+        reg.observe(Hist::GrantWidth, 1); // bucket 1, le="1"
+        reg.observe(Hist::GrantWidth, 2); // bucket 2, le="3"
+        reg.observe(Hist::GrantWidth, 3); // bucket 2
+        let text = render(&reg.snapshot());
+        assert!(text.contains("optex_grant_width_bucket{le=\"1\"} 1\n"), "{text}");
+        assert!(text.contains("optex_grant_width_bucket{le=\"3\"} 3\n"), "{text}");
+        assert!(text.contains("optex_grant_width_bucket{le=\"+Inf\"} 3\n"), "{text}");
+        assert!(text.contains("optex_grant_width_sum 6\n"), "{text}");
+        assert!(text.contains("optex_grant_width_count 3\n"), "{text}");
+    }
+
+    #[cfg(feature = "obs")]
+    #[test]
+    fn listener_answers_http_with_the_exposition() {
+        let reg = Registry::new();
+        reg.incr(Counter::Iterations);
+        reg.gauge_set(Gauge::Steppers, 4);
+        let addr = spawn_metrics_listener("127.0.0.1:0", reg.clone()).unwrap();
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(b"GET /metrics HTTP/1.0\r\n\r\n").unwrap();
+        let mut resp = String::new();
+        s.read_to_string(&mut resp).unwrap();
+        assert!(resp.starts_with("HTTP/1.0 200 OK\r\n"), "{resp}");
+        assert!(resp.contains("text/plain; version=0.0.4"), "{resp}");
+        let body = resp.split("\r\n\r\n").nth(1).expect("header/body split");
+        assert!(body.contains("optex_iterations_total 1\n"), "{body}");
+        assert!(body.contains("optex_steppers 4\n"), "{body}");
+        // every non-comment line is `name{labels}? value`
+        for line in body.lines() {
+            if line.starts_with('#') || line.is_empty() {
+                continue;
+            }
+            let (name, value) = line.rsplit_once(' ').expect("name value");
+            assert!(name.starts_with("optex_"), "{line}");
+            value.parse::<u64>().unwrap_or_else(|_| panic!("bad value in {line:?}"));
+        }
+    }
+}

@@ -1,0 +1,103 @@
+//! Observability (ISSUE 9): a zero-dependency metrics + flight-recorder
+//! subsystem threaded through the driver, the GP engines, the serve
+//! scheduler/arbiter/stepper pool, the fault layer and the server.
+//!
+//! Three pieces:
+//!
+//! * [`Registry`] — counters, gauges and fixed-bucket log2 histograms
+//!   behind a cloneable handle. The hot path is zero-alloc: counter and
+//!   histogram writes land in per-thread shards (plain relaxed atomics,
+//!   no locks) merged only when a snapshot is taken. A disabled handle
+//!   ([`Registry::disabled`]) is a single `Option` branch per call —
+//!   and with the `obs` cargo feature off every method compiles to a
+//!   no-op, which is what the bench harness' obs-overhead cell compares
+//!   against.
+//! * [`FlightRecorder`] — a bounded ring of sequence-numbered,
+//!   phase-tagged events per session (begin_quantum, grant, retry,
+//!   fault fired, nonfinite resync, quarantine, ...). Renders are
+//!   deterministic: sequence numbers and iteration indices only, never
+//!   wall-clock — so trace output can be asserted byte-for-byte and can
+//!   never leak nondeterminism into scenario goldens (the golden
+//!   renderer consumes `Outcome` alone and ignores obs entirely).
+//! * [`expo`] — Prometheus-style text exposition of a registry
+//!   snapshot, served over a second listener (`serve.metrics_addr` /
+//!   `optex serve --metrics-addr`) by a minimal HTTP/1.0 responder.
+//!
+//! Wire access: the serve protocol gained `stats` (server-wide registry
+//! snapshot) and `trace` (one session's ring dump) verbs — see
+//! `serve/protocol.rs`.
+
+pub mod expo;
+pub mod recorder;
+pub mod registry;
+
+pub use recorder::{FlightRecorder, ObsEvent, TracePhase};
+pub use registry::{Counter, Gauge, Hist, HistSnapshot, Registry, Snapshot};
+
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Rate-limited stderr reporter for burst events (connection sheds,
+/// oversized-line rejections): at most one line per `period`, with a
+/// count of how many occurrences the quiet window absorbed. Wall-clock
+/// is fine here — stderr is operator output and never reaches goldens.
+pub struct BurstLog {
+    period: Duration,
+    state: Mutex<BurstState>,
+}
+
+struct BurstState {
+    last_emit: Option<Instant>,
+    suppressed: u64,
+}
+
+impl BurstLog {
+    pub fn new(period: Duration) -> BurstLog {
+        BurstLog {
+            period,
+            state: Mutex::new(BurstState { last_emit: None, suppressed: 0 }),
+        }
+    }
+
+    /// Report one occurrence. Emits `msg` (plus a suppressed-count tail
+    /// when the window absorbed earlier occurrences) at most once per
+    /// period; otherwise just counts.
+    pub fn note(&self, msg: &str) {
+        let Ok(mut st) = self.state.lock() else { return };
+        let now = Instant::now();
+        let due = match st.last_emit {
+            None => true,
+            Some(t) => now.duration_since(t) >= self.period,
+        };
+        if due {
+            if st.suppressed > 0 {
+                eprintln!("{msg} ({} earlier in this burst suppressed)", st.suppressed);
+            } else {
+                eprintln!("{msg}");
+            }
+            st.last_emit = Some(now);
+            st.suppressed = 0;
+        } else {
+            st.suppressed += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn burst_log_counts_suppressed_occurrences() {
+        // behavioural floor only (output goes to stderr): the state
+        // machine must count while quiet and reset on emit
+        let log = BurstLog::new(Duration::from_secs(3600));
+        log.note("first");
+        for _ in 0..5 {
+            log.note("suppressed");
+        }
+        let st = log.state.lock().unwrap();
+        assert_eq!(st.suppressed, 5);
+        assert!(st.last_emit.is_some());
+    }
+}

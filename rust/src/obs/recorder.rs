@@ -1,0 +1,227 @@
+//! The per-session flight recorder: a bounded ring of sequence-numbered,
+//! phase-tagged events, so a dead session carries its own post-mortem.
+//!
+//! Events come from two places. The driver accumulates them *during* a
+//! quantum (retry, fault fired, nonfinite resync) — on whatever stepper
+//! worker runs the quantum — and the serve thread drains them into the
+//! session's ring at reattach, alongside its own lifecycle events
+//! (begin_quantum, grant, quarantine, finish). Sequence numbers are
+//! assigned by the ring at push, on the serve thread, so a session's
+//! trace is a single totally-ordered log regardless of which thread ran
+//! the work.
+//!
+//! Renders are deterministic: `#<seq> i<iter> <phase> <detail>` — no
+//! wall-clock, ever. Trace output can therefore be byte-asserted in
+//! tests and can never smuggle nondeterminism toward scenario goldens
+//! (which ignore obs output entirely anyway).
+
+use std::collections::VecDeque;
+use std::io::Write;
+use std::path::Path;
+
+/// Default ring capacity ([`FlightRecorder::with_capacity`] overrides).
+pub const DEFAULT_RING: usize = 128;
+
+/// What kind of event happened (the `phase` tag in trace renders).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TracePhase {
+    /// Session admitted by the scheduler.
+    Submit,
+    /// A quantum was dispatched (serial step or stepper worker).
+    BeginQuantum,
+    /// The arbiter granted a width for the quantum.
+    Grant,
+    /// An eval fan-out attempt failed and was retried.
+    Retry,
+    /// An injected fault fired.
+    Fault,
+    /// Non-finite eval points were absorbed (`optex.on_nonfinite`).
+    Nonfinite,
+    /// A nonfinite resync evicted poisoned history (full GP refit).
+    Resync,
+    /// A panicking quantum was caught and the session quarantined.
+    Quarantine,
+    /// Checkpoint-backed suspend.
+    Pause,
+    /// Resume from suspend.
+    Resume,
+    /// Terminal transition (Done/Failed), with the stop reason.
+    Finish,
+}
+
+impl TracePhase {
+    pub fn name(self) -> &'static str {
+        match self {
+            TracePhase::Submit => "submit",
+            TracePhase::BeginQuantum => "begin_quantum",
+            TracePhase::Grant => "grant",
+            TracePhase::Retry => "retry",
+            TracePhase::Fault => "fault",
+            TracePhase::Nonfinite => "nonfinite",
+            TracePhase::Resync => "resync",
+            TracePhase::Quarantine => "quarantine",
+            TracePhase::Pause => "pause",
+            TracePhase::Resume => "resume",
+            TracePhase::Finish => "finish",
+        }
+    }
+}
+
+/// One recorded event. `iter` is the sequential iteration it belongs to
+/// (0 for lifecycle events before the first iteration); `detail` is a
+/// deterministic free-text tail (fault site, error text, stop reason).
+#[derive(Clone, Debug)]
+pub struct ObsEvent {
+    pub phase: TracePhase,
+    pub iter: u64,
+    pub detail: String,
+}
+
+impl ObsEvent {
+    pub fn new(phase: TracePhase, iter: u64, detail: impl Into<String>) -> ObsEvent {
+        ObsEvent { phase, iter, detail: detail.into() }
+    }
+}
+
+/// Bounded event ring with monotone sequence numbers. Old events fall
+/// off the front; `next_seq` keeps counting, so a render always shows
+/// how much history was dropped.
+#[derive(Debug)]
+pub struct FlightRecorder {
+    cap: usize,
+    next_seq: u64,
+    ring: VecDeque<(u64, ObsEvent)>,
+}
+
+impl Default for FlightRecorder {
+    fn default() -> Self {
+        FlightRecorder::new()
+    }
+}
+
+impl FlightRecorder {
+    pub fn new() -> FlightRecorder {
+        FlightRecorder::with_capacity(DEFAULT_RING)
+    }
+
+    pub fn with_capacity(cap: usize) -> FlightRecorder {
+        assert!(cap >= 1, "flight recorder needs room for one event");
+        FlightRecorder { cap, next_seq: 0, ring: VecDeque::with_capacity(cap) }
+    }
+
+    /// Append one event, assigning it the next sequence number.
+    pub fn push(&mut self, event: ObsEvent) {
+        if self.ring.len() == self.cap {
+            self.ring.pop_front();
+        }
+        self.ring.push_back((self.next_seq, event));
+        self.next_seq += 1;
+    }
+
+    /// Events recorded over the ring's lifetime (≥ `len`).
+    pub fn total_recorded(&self) -> u64 {
+        self.next_seq
+    }
+
+    /// Events currently held.
+    pub fn len(&self) -> usize {
+        self.ring.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ring.is_empty()
+    }
+
+    /// Render the ring as deterministic trace lines, oldest first:
+    /// `#<seq> i<iter> <phase>[ <detail>]`.
+    pub fn render(&self) -> Vec<String> {
+        self.ring
+            .iter()
+            .map(|(seq, e)| {
+                if e.detail.is_empty() {
+                    format!("#{seq} i{} {}", e.iter, e.phase.name())
+                } else {
+                    format!("#{seq} i{} {} {}", e.iter, e.phase.name(), e.detail)
+                }
+            })
+            .collect()
+    }
+
+    /// Write the rendered ring to an on-disk artifact (the session
+    /// post-mortem dumped at failure/quarantine). Best-effort contract
+    /// is the caller's: a full disk must not take the serve loop down.
+    pub fn dump(&self, path: &Path) -> std::io::Result<()> {
+        let mut f = std::fs::File::create(path)?;
+        for line in self.render() {
+            writeln!(f, "{line}")?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(phase: TracePhase, iter: u64, detail: &str) -> ObsEvent {
+        ObsEvent::new(phase, iter, detail)
+    }
+
+    #[test]
+    fn ring_wraps_and_seq_keeps_counting() {
+        let mut r = FlightRecorder::with_capacity(3);
+        for i in 0..5u64 {
+            r.push(ev(TracePhase::BeginQuantum, i + 1, ""));
+        }
+        assert_eq!(r.len(), 3);
+        assert_eq!(r.total_recorded(), 5);
+        let lines = r.render();
+        // events 0 and 1 fell off; 2..=4 survive with original seqs
+        assert_eq!(
+            lines,
+            vec![
+                "#2 i3 begin_quantum",
+                "#3 i4 begin_quantum",
+                "#4 i5 begin_quantum",
+            ]
+        );
+    }
+
+    #[test]
+    fn render_is_deterministic_and_wall_clock_free() {
+        let build = || {
+            let mut r = FlightRecorder::new();
+            r.push(ev(TracePhase::Submit, 0, ""));
+            r.push(ev(TracePhase::Grant, 1, "width=4 desired=8"));
+            r.push(ev(TracePhase::Retry, 2, "injected fault: eval_err"));
+            r.push(ev(TracePhase::Quarantine, 2, "panic in Driver::iteration"));
+            r.push(ev(TracePhase::Finish, 2, "quarantined"));
+            r.render().join("\n")
+        };
+        let a = build();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        let b = build();
+        assert_eq!(a, b, "trace renders must not depend on wall-clock");
+        assert_eq!(
+            a,
+            "#0 i0 submit\n\
+             #1 i1 grant width=4 desired=8\n\
+             #2 i2 retry injected fault: eval_err\n\
+             #3 i2 quarantine panic in Driver::iteration\n\
+             #4 i2 finish quarantined"
+        );
+    }
+
+    #[test]
+    fn dump_writes_the_rendered_lines() {
+        let dir = std::env::temp_dir().join("optex_obs_recorder_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("trace_1.txt");
+        let mut r = FlightRecorder::new();
+        r.push(ev(TracePhase::Fault, 3, "nan_row p1"));
+        r.dump(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "#0 i3 fault nan_row p1\n");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

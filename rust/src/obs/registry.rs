@@ -1,0 +1,500 @@
+//! The metrics registry: counters, gauges and log2 histograms behind a
+//! cloneable zero-alloc handle.
+//!
+//! ## Hot-path design
+//!
+//! Counter and histogram writes go to one of [`SHARDS`] per-thread
+//! shards, picked by a thread-local index assigned at first use —
+//! every write is a single relaxed `fetch_add` on a slot no other
+//! *writing* thread touches (two threads may share a shard once more
+//! than `SHARDS` threads exist; atomics keep that correct, it only
+//! costs a cache line). Reads ([`Registry::snapshot`]) merge the shards
+//! by summation. Gauges are last-write-wins set operations and are not
+//! sharded.
+//!
+//! ## Histograms
+//!
+//! Fixed log2 bucketing: value `v` lands in bucket
+//! `64 - v.leading_zeros()` (0 stays in bucket 0), clamped to
+//! [`BUCKETS`] - 1 — so bucket `b >= 1` covers `[2^(b-1), 2^b)` and the
+//! exposition's `le` labels are `2^b - 1`. No float math, no config,
+//! no allocation.
+//!
+//! ## Compile-out
+//!
+//! With the `obs` cargo feature off (it is on by default) the handle
+//! holds no state and every method body is empty — the call sites stay
+//! compiled and type-checked, the instrumentation itself vanishes. The
+//! bench harness' obs-overhead cell measures the runtime analogue
+//! (a [`Registry::disabled`] handle: one `Option` branch per call).
+
+#[cfg(feature = "obs")]
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+#[cfg(feature = "obs")]
+use std::sync::Arc;
+
+/// Number of write shards. More than enough for the serve tier's
+/// thread count (serve thread + steppers + pool workers); beyond it,
+/// threads share shards correctly.
+pub const SHARDS: usize = 16;
+
+/// Histogram bucket count (log2 buckets; values clamp into the last).
+pub const BUCKETS: usize = 32;
+
+macro_rules! metric_enum {
+    ($(#[$doc:meta])* $name:ident { $($(#[$vdoc:meta])* $variant:ident => $label:literal,)+ }) => {
+        $(#[$doc])*
+        #[derive(Clone, Copy, Debug, PartialEq, Eq)]
+        #[repr(usize)]
+        pub enum $name {
+            $($(#[$vdoc])* $variant,)+
+        }
+
+        impl $name {
+            /// Every variant, in declaration (= exposition) order.
+            pub const ALL: &'static [$name] = &[$($name::$variant,)+];
+
+            /// Number of variants (array sizing).
+            pub const COUNT: usize = $name::ALL.len();
+
+            /// The exposition metric name.
+            pub fn name(self) -> &'static str {
+                match self {
+                    $($name::$variant => $label,)+
+                }
+            }
+        }
+    };
+}
+
+metric_enum! {
+    /// Monotone counters (exposition type `counter`).
+    Counter {
+        /// Completed driver iterations (every session, every method).
+        Iterations => "optex_iterations_total",
+        /// Eval fan-out attempts retried under `optex.retry_max`.
+        Retries => "optex_retries_total",
+        /// Non-finite eval points absorbed by `optex.on_nonfinite`.
+        Nonfinite => "optex_nonfinite_total",
+        /// Full GP refits forced by ring restructuring / NotSpd.
+        GpRebuilds => "optex_gp_rebuilds_total",
+        /// Rank-1 Cholesky factor edits by the incremental GP fit.
+        GpFactorOps => "optex_gp_factor_ops_total",
+        /// Quanta dispatched by the serve scheduler.
+        Quanta => "optex_quanta_total",
+        /// Injected faults that actually fired (any site).
+        FaultsFired => "optex_faults_fired_total",
+        /// Sessions admitted by the scheduler.
+        SessionsSubmitted => "optex_sessions_submitted_total",
+        /// Sessions quarantined after a caught panic.
+        SessionsQuarantined => "optex_sessions_quarantined_total",
+        /// Durable manifest rewrites.
+        ManifestRewrites => "optex_manifest_rewrites_total",
+        /// `watch` records pushed (iter + terminal).
+        WatchPushes => "optex_watch_pushes_total",
+        /// Connections shed at the `serve.max_conns` cap.
+        ConnSheds => "optex_conn_sheds_total",
+        /// Request lines rejected for exceeding the line cap.
+        LineRejects => "optex_line_rejects_total",
+    }
+}
+
+metric_enum! {
+    /// Last-write-wins gauges (exposition type `gauge`).
+    Gauge {
+        /// Threads currently granted to in-flight quanta.
+        ArbiterInUse => "optex_arbiter_in_use",
+        /// The server's physical pool width.
+        ArbiterPhysical => "optex_arbiter_physical",
+        /// Stepper-pool width (`serve.steppers`).
+        Steppers => "optex_steppers",
+        /// Active sessions (pending/running, not suspended).
+        SessionsLive => "optex_sessions_live",
+        /// Suspended sessions.
+        SessionsPaused => "optex_sessions_paused",
+        /// Quarantined sessions still in the retention window.
+        SessionsQuarantined => "optex_sessions_quarantined",
+        /// Open client connections.
+        ConnsActive => "optex_conns_active",
+    }
+}
+
+metric_enum! {
+    /// Log2 histograms (exposition type `histogram`).
+    Hist {
+        /// Whole-quantum latency, microseconds (dispatch → reattach).
+        QuantumLatencyUs => "optex_quantum_latency_us",
+        /// Runnable-to-dispatch queue wait, microseconds.
+        QueueWaitUs => "optex_queue_wait_us",
+        /// Width the arbiter actually granted per quantum.
+        GrantWidth => "optex_grant_width",
+        /// Width the session wanted before budget pressure.
+        DesiredWidth => "optex_desired_width",
+        /// Gradient-prediction residual ‖μ̂−g‖/‖g‖ per mille — the
+        /// adaptive-width precursor signal (ROADMAP).
+        GradResidualPermille => "optex_grad_residual_permille",
+    }
+}
+
+/// The bucket index for a histogram observation.
+pub fn bucket_of(v: u64) -> usize {
+    if v == 0 {
+        0
+    } else {
+        ((64 - v.leading_zeros()) as usize).min(BUCKETS - 1)
+    }
+}
+
+/// Inclusive upper bound of bucket `b` (the exposition `le` label);
+/// the last bucket is unbounded.
+pub fn bucket_le(b: usize) -> Option<u64> {
+    if b + 1 >= BUCKETS {
+        None
+    } else {
+        Some((1u64 << b) - 1)
+    }
+}
+
+#[cfg(feature = "obs")]
+struct HistShard {
+    buckets: [AtomicU64; BUCKETS],
+    sum: AtomicU64,
+    count: AtomicU64,
+}
+
+#[cfg(feature = "obs")]
+impl HistShard {
+    fn new() -> HistShard {
+        HistShard {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            sum: AtomicU64::new(0),
+            count: AtomicU64::new(0),
+        }
+    }
+}
+
+#[cfg(feature = "obs")]
+struct Shard {
+    counters: [AtomicU64; Counter::COUNT],
+    hists: Vec<HistShard>,
+}
+
+#[cfg(feature = "obs")]
+impl Shard {
+    fn new() -> Shard {
+        Shard {
+            counters: std::array::from_fn(|_| AtomicU64::new(0)),
+            hists: (0..Hist::COUNT).map(|_| HistShard::new()).collect(),
+        }
+    }
+}
+
+#[cfg(feature = "obs")]
+struct Inner {
+    shards: Vec<Shard>,
+    gauges: [AtomicU64; Gauge::COUNT],
+}
+
+#[cfg(feature = "obs")]
+impl Inner {
+    fn new() -> Inner {
+        Inner {
+            shards: (0..SHARDS).map(|_| Shard::new()).collect(),
+            gauges: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+}
+
+#[cfg(feature = "obs")]
+fn shard_index() -> usize {
+    // Stable per-thread shard assignment: dense indices from a global
+    // counter, folded into the shard count. (`ThreadId::as_u64` is
+    // unstable; this is the portable equivalent.)
+    static NEXT: AtomicUsize = AtomicUsize::new(0);
+    thread_local! {
+        static IDX: usize = NEXT.fetch_add(1, Ordering::Relaxed) % SHARDS;
+    }
+    IDX.with(|i| *i)
+}
+
+/// Cloneable metrics handle. Cheap to clone (one `Arc`), cheap to call
+/// when disabled (one branch), free when the `obs` feature is off.
+#[derive(Clone, Default)]
+pub struct Registry {
+    #[cfg(feature = "obs")]
+    inner: Option<Arc<Inner>>,
+}
+
+impl Registry {
+    /// An enabled registry (with the `obs` feature off this degrades to
+    /// a disabled handle — there is nothing to record into).
+    pub fn new() -> Registry {
+        #[cfg(feature = "obs")]
+        {
+            Registry { inner: Some(Arc::new(Inner::new())) }
+        }
+        #[cfg(not(feature = "obs"))]
+        {
+            Registry {}
+        }
+    }
+
+    /// A no-op handle: every record call is one `Option` branch.
+    pub fn disabled() -> Registry {
+        Registry::default()
+    }
+
+    pub fn enabled(&self) -> bool {
+        #[cfg(feature = "obs")]
+        {
+            self.inner.is_some()
+        }
+        #[cfg(not(feature = "obs"))]
+        {
+            false
+        }
+    }
+
+    /// Increment a counter by 1.
+    #[inline]
+    pub fn incr(&self, c: Counter) {
+        self.add(c, 1);
+    }
+
+    /// Increment a counter by `v`.
+    #[inline]
+    pub fn add(&self, c: Counter, v: u64) {
+        #[cfg(feature = "obs")]
+        if let Some(inner) = &self.inner {
+            inner.shards[shard_index()].counters[c as usize]
+                .fetch_add(v, Ordering::Relaxed);
+        }
+        #[cfg(not(feature = "obs"))]
+        let _ = (c, v);
+    }
+
+    /// Set a gauge (last write wins).
+    #[inline]
+    pub fn gauge_set(&self, g: Gauge, v: u64) {
+        #[cfg(feature = "obs")]
+        if let Some(inner) = &self.inner {
+            inner.gauges[g as usize].store(v, Ordering::Relaxed);
+        }
+        #[cfg(not(feature = "obs"))]
+        let _ = (g, v);
+    }
+
+    /// Record one histogram observation.
+    #[inline]
+    pub fn observe(&self, h: Hist, v: u64) {
+        #[cfg(feature = "obs")]
+        if let Some(inner) = &self.inner {
+            let shard = &inner.shards[shard_index()].hists[h as usize];
+            shard.buckets[bucket_of(v)].fetch_add(1, Ordering::Relaxed);
+            shard.sum.fetch_add(v, Ordering::Relaxed);
+            shard.count.fetch_add(1, Ordering::Relaxed);
+        }
+        #[cfg(not(feature = "obs"))]
+        let _ = (h, v);
+    }
+
+    /// Merged value of one counter (tests, the `stats` verb).
+    pub fn counter(&self, c: Counter) -> u64 {
+        #[cfg(feature = "obs")]
+        if let Some(inner) = &self.inner {
+            return inner
+                .shards
+                .iter()
+                .map(|s| s.counters[c as usize].load(Ordering::Relaxed))
+                .sum();
+        }
+        let _ = c;
+        0
+    }
+
+    /// Current value of one gauge.
+    pub fn gauge(&self, g: Gauge) -> u64 {
+        #[cfg(feature = "obs")]
+        if let Some(inner) = &self.inner {
+            return inner.gauges[g as usize].load(Ordering::Relaxed);
+        }
+        let _ = g;
+        0
+    }
+
+    /// Merge every shard into a point-in-time snapshot. Empty (all
+    /// zeros) on a disabled handle, so exposition of a disabled
+    /// registry is still well-formed.
+    pub fn snapshot(&self) -> Snapshot {
+        let counters = Counter::ALL.iter().map(|&c| (c.name(), self.counter(c))).collect();
+        let gauges = Gauge::ALL.iter().map(|&g| (g.name(), self.gauge(g))).collect();
+        let hists = Hist::ALL.iter().map(|&h| self.hist_snapshot(h)).collect();
+        Snapshot { counters, gauges, hists }
+    }
+
+    fn hist_snapshot(&self, h: Hist) -> HistSnapshot {
+        let mut snap = HistSnapshot {
+            name: h.name(),
+            buckets: [0; BUCKETS],
+            count: 0,
+            sum: 0,
+        };
+        #[cfg(feature = "obs")]
+        if let Some(inner) = &self.inner {
+            for shard in &inner.shards {
+                let hs = &shard.hists[h as usize];
+                for (acc, b) in snap.buckets.iter_mut().zip(&hs.buckets) {
+                    *acc += b.load(Ordering::Relaxed);
+                }
+                snap.count += hs.count.load(Ordering::Relaxed);
+                snap.sum += hs.sum.load(Ordering::Relaxed);
+            }
+        }
+        let _ = h;
+        snap
+    }
+}
+
+/// A merged point-in-time view of the registry.
+pub struct Snapshot {
+    /// `(metric name, merged value)` in declaration order.
+    pub counters: Vec<(&'static str, u64)>,
+    pub gauges: Vec<(&'static str, u64)>,
+    pub hists: Vec<HistSnapshot>,
+}
+
+/// One merged histogram.
+pub struct HistSnapshot {
+    pub name: &'static str,
+    /// Per-bucket observation counts (log2 buckets; see [`bucket_of`]).
+    pub buckets: [u64; BUCKETS],
+    pub count: u64,
+    pub sum: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucketing_edges() {
+        assert_eq!(bucket_of(0), 0);
+        assert_eq!(bucket_of(1), 1);
+        assert_eq!(bucket_of(2), 2);
+        assert_eq!(bucket_of(3), 2);
+        assert_eq!(bucket_of(4), 3);
+        assert_eq!(bucket_of(7), 3);
+        assert_eq!(bucket_of(8), 4);
+        assert_eq!(bucket_of(u64::MAX), BUCKETS - 1);
+        // bucket b >= 1 covers [2^(b-1), 2^b): its le label is 2^b - 1
+        assert_eq!(bucket_le(0), Some(0));
+        assert_eq!(bucket_le(1), Some(1));
+        assert_eq!(bucket_le(2), Some(3));
+        assert_eq!(bucket_le(3), Some(7));
+        assert_eq!(bucket_le(BUCKETS - 1), None, "last bucket is +Inf");
+        for v in [1u64, 2, 3, 4, 5, 127, 128, 1 << 20, (1 << 20) + 1] {
+            let b = bucket_of(v);
+            if let Some(le) = bucket_le(b) {
+                assert!(v <= le, "v={v} above its bucket's le={le}");
+            }
+            if b > 0 {
+                let prev_le = bucket_le(b - 1).unwrap();
+                assert!(v > prev_le, "v={v} belongs in an earlier bucket");
+            }
+        }
+    }
+
+    #[cfg(feature = "obs")]
+    #[test]
+    fn counters_merge_across_threads() {
+        let reg = Registry::new();
+        assert!(reg.enabled());
+        let threads: Vec<_> = (0..8)
+            .map(|_| {
+                let reg = reg.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..1000 {
+                        reg.incr(Counter::Iterations);
+                    }
+                    reg.add(Counter::Retries, 3);
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        assert_eq!(reg.counter(Counter::Iterations), 8000);
+        assert_eq!(reg.counter(Counter::Retries), 24);
+        assert_eq!(reg.counter(Counter::Nonfinite), 0);
+        let snap = reg.snapshot();
+        let (name, v) = snap.counters[Counter::Iterations as usize];
+        assert_eq!(name, "optex_iterations_total");
+        assert_eq!(v, 8000);
+    }
+
+    #[cfg(feature = "obs")]
+    #[test]
+    fn histograms_merge_and_preserve_sum_count() {
+        let reg = Registry::new();
+        let threads: Vec<_> = (0..4)
+            .map(|i| {
+                let reg = reg.clone();
+                std::thread::spawn(move || {
+                    for v in 0..100u64 {
+                        reg.observe(Hist::GrantWidth, v + i);
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        let snap = reg.snapshot();
+        let h = &snap.hists[Hist::GrantWidth as usize];
+        assert_eq!(h.name, "optex_grant_width");
+        assert_eq!(h.count, 400);
+        assert_eq!(h.buckets.iter().sum::<u64>(), 400);
+        let want_sum: u64 = (0..4).map(|i| (0..100).map(|v| v + i).sum::<u64>()).sum();
+        assert_eq!(h.sum, want_sum);
+    }
+
+    #[cfg(feature = "obs")]
+    #[test]
+    fn gauges_are_last_write_wins() {
+        let reg = Registry::new();
+        reg.gauge_set(Gauge::ArbiterInUse, 3);
+        reg.gauge_set(Gauge::ArbiterInUse, 7);
+        assert_eq!(reg.gauge(Gauge::ArbiterInUse), 7);
+        assert_eq!(reg.gauge(Gauge::ArbiterPhysical), 0);
+    }
+
+    #[test]
+    fn disabled_registry_is_inert_and_snapshotable() {
+        let reg = Registry::disabled();
+        assert!(!reg.enabled());
+        reg.incr(Counter::Iterations);
+        reg.observe(Hist::QuantumLatencyUs, 123);
+        reg.gauge_set(Gauge::Steppers, 4);
+        assert_eq!(reg.counter(Counter::Iterations), 0);
+        assert_eq!(reg.gauge(Gauge::Steppers), 0);
+        let snap = reg.snapshot();
+        assert_eq!(snap.counters.len(), Counter::COUNT);
+        assert!(snap.counters.iter().all(|&(_, v)| v == 0));
+        assert!(snap.hists.iter().all(|h| h.count == 0));
+    }
+
+    #[test]
+    fn metric_names_are_unique_and_prefixed() {
+        let mut names: Vec<&str> = Counter::ALL
+            .iter()
+            .map(|c| c.name())
+            .chain(Gauge::ALL.iter().map(|g| g.name()))
+            .chain(Hist::ALL.iter().map(|h| h.name()))
+            .collect();
+        assert!(names.iter().all(|n| n.starts_with("optex_")));
+        let total = names.len();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), total, "metric names must be unique");
+    }
+}

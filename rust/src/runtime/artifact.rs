@@ -1,11 +1,14 @@
-//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! Artifact manifest: the contract between the AOT lowering step and the
 //! rust runtime.
 //!
-//! `artifacts/manifest.json` (written at `make artifacts` time) lists every
-//! lowered HLO module with its input shapes/dtypes and workload metadata.
-//! Nothing about shapes is hard-coded on the rust side — the manifest is
-//! the single source of truth, so re-lowering with a different profile
-//! (test / default / paper) changes behaviour without recompiling rust.
+//! `artifacts/manifest.json` lists every lowered HLO module with its
+//! input shapes/dtypes and workload metadata. Nothing about shapes is
+//! hard-coded on the rust side — the manifest is the single source of
+//! truth, so re-lowering with a different profile (test / default /
+//! paper) changes behaviour without recompiling rust. (The in-repo
+//! Python lowering layer was retired in PR 9 — see ROADMAP "Standing
+//! items"; this schema is the stable interface any external lowering
+//! pipeline writes to.)
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};

@@ -1,7 +1,7 @@
 //! Request-path runtime: AOT artifacts -> PJRT -> results, plus the
 //! native compute substrate.
 //!
-//! * [`artifact`] — manifest schema shared with `python/compile/aot.py`,
+//! * [`artifact`] — manifest schema for AOT-lowered HLO artifacts,
 //! * [`executor`] — one-client engine, typed compile/run wrappers,
 //! * [`pool`] — N worker threads, each owning its own client+executables
 //!   (the paper's parallel "processes"),
@@ -20,8 +20,9 @@
 //! substrate is selectable (`optex.pool`): scoped spawn-per-call, or
 //! process-global parked workers for long-lived serve processes.
 //!
-//! Python is build-time only: after `make artifacts`, everything here is
-//! self-contained rust + the PJRT C API.
+//! Everything here is self-contained rust + the PJRT C API; HLO
+//! artifacts are pre-lowered inputs, not a build step (the in-repo
+//! Python lowering layer was retired in PR 9).
 
 pub mod artifact;
 pub mod executor;

@@ -23,8 +23,8 @@
 //!   pool (ISSUE 5) and enforces Σ grants ≤ physical across all
 //!   in-flight quanta.
 //! * [`protocol`] — the JSONL request/response grammar (`submit`,
-//!   `status`, `result`, `watch`, `pause`, `resume`, `cancel`,
-//!   `shutdown`), built on `util/json` — no new dependencies.
+//!   `status`, `result`, `watch`, `pause`, `resume`, `cancel`, `stats`,
+//!   `trace`, `shutdown`), built on `util/json` — no new dependencies.
 //! * [`manifest`] — the durable session manifest
 //!   (`ckpt_dir/manifest.jsonl`, ISSUE 5): id high-water mark + every
 //!   adoptable session's config/budget/checkpoint, atomically rewritten
@@ -135,18 +135,21 @@
 //!
 //! One poisoned session must never take down the serve tier. The fault
 //! sites below are injectable deterministically via the `faults` config
-//! spec (see [`crate::faults`]); for each, what dies, what survives, and
-//! what the client observes:
+//! spec (see [`crate::faults`]); for each, what dies, what survives,
+//! what the client observes, and — since ISSUE 9 — what the
+//! [`crate::obs`] layer emits (counters on the `stats` verb / metrics
+//! exposition, phase-tagged events in the per-session flight recorder
+//! dumped by the `trace` verb):
 //!
-//! | fault site | what dies | what survives | client observes |
-//! |---|---|---|---|
-//! | oracle `Err` (`eval_err`) | one fan-out attempt | the session, after retries (`optex.retry_max`, linear backoff); Failed only when the budget is exhausted | `status.retries` climbs; on exhaustion `state:"failed"` with the error text |
-//! | oracle panic (`eval_panic`) | the session (quarantined at the `catch_unwind` boundary in `Quantum::run` — worker threads included; pre-panic rows/θ are archived) | the serve loop, the stepper pool, and every other session, bit-identical to fault-free runs | `state:"failed"`, `"quarantined":true`, `error:"panic in Driver::iteration: ..."` |
-//! | NaN/Inf gradients (`nan_row`/`inf_row`) | nothing (`skip`/`resync`) or the session (`fail`) per `optex.on_nonfinite` | history hygiene: `resync` evicts poisoned rows and forces a GP refit | `status.nonfinite` climbs; under `fail`, `state:"failed"` naming the poisoned points |
-//! | hung eval (`eval_delay` + `optex.eval_timeout_s`) | one fan-out attempt (post-hoc deadline check — deterministic, never in goldens) | the session, via the same retry path as `eval_err` | retries, then an error naming the configured deadline |
-//! | torn/failed suspend checkpoint (`ckpt_torn`/`ckpt_fail`) | one suspend (pause errors) or one resume (falls back per the stray-checkpoint rules) | the session where recoverable: a torn *adoption* checkpoint re-runs from seed instead of failing | pause error line, or a seed re-run after `--adopt` |
-//! | dropped manifest rewrite (`manifest_fail`) | one durability write (scheduler-owned site) | the server; the next mutation rewrites the manifest | nothing, unless the server dies inside the window — then `--adopt` sees the stale manifest |
-//! | client floods (>`serve.max_conns` conns, >1 MiB line) | the offending connection | everything else (shed at accept / reader) | `"too many connections"` / `"request line too long"` error line |
+//! | fault site | what dies | what survives | client observes | obs emits |
+//! |---|---|---|---|---|
+//! | oracle `Err` (`eval_err`) | one fan-out attempt | the session, after retries (`optex.retry_max`, linear backoff); Failed only when the budget is exhausted | `status.retries` climbs; on exhaustion `state:"failed"` with the error text | `optex_retries_total` (+`optex_faults_fired_total` when injected); trace `fault eval_err` then `retry` per attempt |
+//! | oracle panic (`eval_panic`) | the session (quarantined at the `catch_unwind` boundary in `Quantum::run` — worker threads included; pre-panic rows/θ are archived) | the serve loop, the stepper pool, and every other session, bit-identical to fault-free runs | `state:"failed"`, `"quarantined":true`, `error:"panic in Driver::iteration: ..."`, `stop_reason:"quarantined"` | `optex_sessions_quarantined_total`; trace `fault eval_panic` → `quarantine` → `finish quarantined`, dumped to `ckpt_dir/trace_<id>.txt` and embedded in `status` |
+//! | NaN/Inf gradients (`nan_row`/`inf_row`) | nothing (`skip`/`resync`) or the session (`fail`) per `optex.on_nonfinite` | history hygiene: `resync` evicts poisoned rows and forces a GP refit | `status.nonfinite` climbs; under `fail`, `state:"failed"` naming the poisoned points | `optex_nonfinite_total`; trace `nonfinite` (and `resync` under that policy) |
+//! | hung eval (`eval_delay` + `optex.eval_timeout_s`) | one fan-out attempt (post-hoc deadline check — deterministic, never in goldens) | the session, via the same retry path as `eval_err` | retries, then an error naming the configured deadline | same as `eval_err`: `optex_retries_total` + trace `retry` events |
+//! | torn/failed suspend checkpoint (`ckpt_torn`/`ckpt_fail`) | one suspend (pause errors) or one resume (falls back per the stray-checkpoint rules) | the session where recoverable: a torn *adoption* checkpoint re-runs from seed instead of failing | pause error line, or a seed re-run after `--adopt` | trace `pause`/`resume` events; a failed resume finishes the trace with `finish error` (`stop_reason:"error"`) |
+//! | dropped manifest rewrite (`manifest_fail`) | one durability write (scheduler-owned site) | the server; the next mutation rewrites the manifest | nothing, unless the server dies inside the window — then `--adopt` sees the stale manifest | `optex_manifest_rewrites_total` counts only *successful* writes — a mutation without a matching increment is the signal |
+//! | client floods (>`serve.max_conns` conns, >1 MiB line) | the offending connection | everything else (shed at accept / reader) | `"too many connections"` / `"request line too long"` error line | `optex_conn_sheds_total` / `optex_line_rejects_total`, plus one rate-limited stderr line per burst (no longer silent) |
 
 pub mod manifest;
 pub mod protocol;

@@ -16,6 +16,8 @@
 //! | `pause`    | `id` — checkpoint-backed suspend                  |
 //! | `resume`   | `id`                                              |
 //! | `cancel`   | `id`                                              |
+//! | `stats`    | — server-wide metrics snapshot (ISSUE 9): every registry counter/gauge plus per-histogram `{count,sum}` |
+//! | `trace`    | `id` — the session's flight-recorder ring as rendered lines (also embedded in `status` for failed sessions) |
 //! | `shutdown` | —                                                 |
 //!
 //! ## Streaming (`watch`, ISSUE 5)
@@ -54,7 +56,8 @@
 
 use std::collections::BTreeMap;
 
-use crate::serve::session::{Budget, Session};
+use crate::obs::Snapshot;
+use crate::serve::session::{Budget, Session, SessionState};
 use crate::util::json::Json;
 
 /// A parsed client request.
@@ -82,6 +85,11 @@ pub enum Request {
     Pause { id: u64 },
     Resume { id: u64 },
     Cancel { id: u64 },
+    /// Server-wide metrics snapshot (the wire twin of the Prometheus
+    /// exposition on `serve.metrics_addr`).
+    Stats,
+    /// One session's flight-recorder dump.
+    Trace { id: u64 },
     Shutdown,
 }
 
@@ -219,6 +227,8 @@ pub fn parse_request(line: &str) -> Result<Request, String> {
         "pause" => Ok(Request::Pause { id: need_id(&v)? }),
         "resume" => Ok(Request::Resume { id: need_id(&v)? }),
         "cancel" => Ok(Request::Cancel { id: need_id(&v)? }),
+        "stats" => Ok(Request::Stats),
+        "trace" => Ok(Request::Trace { id: need_id(&v)? }),
         "shutdown" => Ok(Request::Shutdown),
         other => Err(format!("unknown cmd {other:?}")),
     }
@@ -301,6 +311,52 @@ pub fn shutdown_line() -> String {
     obj(vec![("ok", Json::Bool(true)), ("shutdown", Json::Bool(true))]).to_string()
 }
 
+/// `stats`: the registry snapshot as JSON — counters and gauges as
+/// name → value objects, histograms as `{count, sum}` (the full bucket
+/// vectors live on the Prometheus exposition, where `le` labels carry
+/// them idiomatically; the wire verb is the at-a-glance view).
+pub fn stats_line(snap: &Snapshot) -> String {
+    let mut counters = BTreeMap::new();
+    for &(name, v) in &snap.counters {
+        counters.insert(name.to_string(), Json::Num(v as f64));
+    }
+    let mut gauges = BTreeMap::new();
+    for &(name, v) in &snap.gauges {
+        gauges.insert(name.to_string(), Json::Num(v as f64));
+    }
+    let mut hists = BTreeMap::new();
+    for h in &snap.hists {
+        hists.insert(
+            h.name.to_string(),
+            obj(vec![
+                ("count", Json::Num(h.count as f64)),
+                ("sum", Json::Num(h.sum as f64)),
+            ]),
+        );
+    }
+    obj(vec![
+        ("ok", Json::Bool(true)),
+        ("counters", Json::Obj(counters)),
+        ("gauges", Json::Obj(gauges)),
+        ("hists", Json::Obj(hists)),
+    ])
+    .to_string()
+}
+
+/// `trace`: one session's flight-recorder ring, oldest first. `total`
+/// is the lifetime event count — when it exceeds the ring capacity the
+/// oldest lines have been overwritten.
+pub fn trace_line(s: &Session) -> String {
+    let lines: Vec<Json> = s.trace_lines().into_iter().map(Json::Str).collect();
+    obj(vec![
+        ("ok", Json::Bool(true)),
+        ("id", Json::Num(s.id() as f64)),
+        ("total", Json::Num(s.trace_total() as f64)),
+        ("trace", Json::Arr(lines)),
+    ])
+    .to_string()
+}
+
 /// Bare `{"ok":true,"id":N,"state":...}` (pause/resume/cancel acks).
 pub fn ack_line(s: &Session) -> String {
     obj(vec![
@@ -339,6 +395,16 @@ fn session_fields(s: &Session) -> Vec<(&'static str, Json)> {
     }
     if let Some(e) = s.error() {
         f.push(("error", Json::Str(e.to_string())));
+    }
+    if s.state() == SessionState::Failed {
+        // a failed session's status carries its flight recorder inline:
+        // the postmortem (which iteration, which fault site) rides the
+        // same response the client was already reading — no second
+        // round-trip needed to learn why it died
+        f.push((
+            "trace",
+            Json::Arr(s.trace_lines().into_iter().map(Json::Str).collect()),
+        ));
     }
     f
 }
@@ -506,6 +572,14 @@ mod tests {
             Request::Cancel { id: 9 }
         ));
         assert!(matches!(
+            parse_request(r#"{"cmd":"stats"}"#).unwrap(),
+            Request::Stats
+        ));
+        assert!(matches!(
+            parse_request(r#"{"cmd":"trace","id":4}"#).unwrap(),
+            Request::Trace { id: 4 }
+        ));
+        assert!(matches!(
             parse_request(r#"{"cmd":"shutdown"}"#).unwrap(),
             Request::Shutdown
         ));
@@ -529,6 +603,7 @@ mod tests {
             (r#"{"cmd":"watch","id":1,"stream_every":2.5}"#, "integer >= 1"),
             (r#"{"cmd":"watch","id":1,"stream_every":-4}"#, "integer >= 1"),
             (r#"{"cmd":"watch","id":1,"theta":1}"#, "must be a bool"),
+            (r#"{"cmd":"trace"}"#, "missing or invalid \"id\""),
         ] {
             let err = parse_request(line).unwrap_err();
             assert!(err.contains(want), "{line} -> {err}");
@@ -614,6 +689,79 @@ mod tests {
         let r = Json::parse(&result_line(&s, false)).unwrap();
         assert_eq!(r.get("retries").unwrap().as_usize(), Some(1));
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn stats_line_carries_every_registry_metric() {
+        let reg = crate::obs::Registry::new();
+        let v = Json::parse(&stats_line(&reg.snapshot())).unwrap();
+        assert_eq!(v.get("ok").unwrap().as_bool(), Some(true));
+        assert!(v.get("event").is_none(), "responses never carry `event`");
+        let counters = v.get("counters").unwrap().as_obj().unwrap();
+        let gauges = v.get("gauges").unwrap().as_obj().unwrap();
+        let hists = v.get("hists").unwrap().as_obj().unwrap();
+        for c in crate::obs::Counter::ALL {
+            assert!(counters.contains_key(c.name()), "{}", c.name());
+        }
+        for g in crate::obs::Gauge::ALL {
+            assert!(gauges.contains_key(g.name()), "{}", g.name());
+        }
+        for h in crate::obs::Hist::ALL {
+            let entry = hists.get(h.name()).unwrap_or_else(|| panic!("{}", h.name()));
+            assert!(entry.get("count").is_some() && entry.get("sum").is_some());
+        }
+    }
+
+    #[test]
+    fn failed_session_status_embeds_its_trace() {
+        let dir = crate::testutil::fixtures::tmp_ckpt_dir("proto_trace");
+        let mut cfg = crate::config::RunConfig::default();
+        cfg.workload = "sphere".into();
+        cfg.steps = 4;
+        cfg.synth_dim = 16;
+        cfg.optex.parallelism = 2;
+        cfg.optex.t0 = 3;
+        cfg.optex.threads = 1;
+        cfg.faults = "eval_panic@i2".into();
+        let mut s = Session::build(1, cfg, Budget::default(), &dir).unwrap();
+        while s.is_runnable() {
+            s.step();
+        }
+        assert_eq!(s.state(), SessionState::Failed);
+        let v = Json::parse(&trace_line(&s)).unwrap();
+        assert_eq!(v.get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(v.get("id").unwrap().as_usize(), Some(1));
+        let lines: Vec<&str> = v
+            .get("trace")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .filter_map(Json::as_str)
+            .collect();
+        assert!(
+            lines.iter().any(|l| l.contains("finish quarantined")),
+            "trace must name the terminal transition: {lines:?}"
+        );
+        // the same postmortem rides the failed session's status line
+        let st = Json::parse(&status_line(&s)).unwrap();
+        assert!(st.get("trace").unwrap().as_arr().is_some());
+        // healthy sessions keep their status lean — no trace field
+        let dir2 = crate::testutil::fixtures::tmp_ckpt_dir("proto_trace_ok");
+        let mut cfg2 = crate::config::RunConfig::default();
+        cfg2.workload = "sphere".into();
+        cfg2.steps = 2;
+        cfg2.synth_dim = 16;
+        cfg2.optex.parallelism = 2;
+        cfg2.optex.t0 = 3;
+        cfg2.optex.threads = 1;
+        let mut ok = Session::build(2, cfg2, Budget::default(), &dir2).unwrap();
+        while ok.is_runnable() {
+            ok.step();
+        }
+        assert!(Json::parse(&status_line(&ok)).unwrap().get("trace").is_none());
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::remove_dir_all(&dir2).ok();
     }
 
     #[test]

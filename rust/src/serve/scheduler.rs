@@ -78,9 +78,12 @@ use anyhow::{bail, Context, Result};
 
 use crate::config::RunConfig;
 use crate::faults::FaultPlan;
+use crate::obs::{Counter, Gauge, Hist, Registry};
 use crate::runtime::NativePool;
 use crate::serve::manifest;
-use crate::serve::session::{BeginOutcome, Budget, Quantum, QuantumOutcome, Session};
+use crate::serve::session::{
+    BeginOutcome, Budget, Quantum, QuantumOutcome, Session, SessionState,
+};
 use crate::workloads::GradSource;
 
 /// Completion signal installed by the server: invoked from a stepper
@@ -336,6 +339,10 @@ pub struct Scheduler {
     /// settle its session first): drained into the next `pump`'s return
     /// list so the server's notify hook still sees every completion.
     completed_backlog: Vec<u64>,
+    /// Metrics registry (ISSUE 9). Disabled by default — the server
+    /// installs a live handle at bind; the in-process test/bench path
+    /// pays only a null-pointer check per site.
+    obs: Registry,
 }
 
 impl Scheduler {
@@ -355,6 +362,50 @@ impl Scheduler {
             in_flight: BTreeMap::new(),
             wake: None,
             completed_backlog: Vec::new(),
+            obs: Registry::disabled(),
+        }
+    }
+
+    /// Install the metrics registry: future (and already-admitted)
+    /// sessions get a handle so driver-level signals flow into it, and
+    /// the scheduler's own gauges come live.
+    pub fn set_obs(&mut self, obs: Registry) {
+        self.obs = obs;
+        for s in self.sessions.values_mut() {
+            s.set_obs(self.obs.clone());
+        }
+        self.obs.gauge_set(Gauge::Steppers, self.steppers as u64);
+        self.refresh_gauges();
+    }
+
+    /// Re-derive the session-population and arbiter gauges from the
+    /// table. Cheap (K is small) and called only on mutations, never per
+    /// iteration.
+    fn refresh_gauges(&self) {
+        if !self.obs.enabled() {
+            return;
+        }
+        let mut live = 0u64;
+        let mut paused = 0u64;
+        let mut quarantined = 0u64;
+        for s in self.sessions.values() {
+            if s.is_runnable() {
+                live += 1;
+            }
+            if s.state() == SessionState::Paused {
+                paused += 1;
+            }
+            if s.quarantined() {
+                quarantined += 1;
+            }
+        }
+        self.obs.gauge_set(Gauge::SessionsLive, live);
+        self.obs.gauge_set(Gauge::SessionsPaused, paused);
+        self.obs.gauge_set(Gauge::SessionsQuarantined, quarantined);
+        if let Some(arb) = &self.arbiter {
+            self.obs.gauge_set(Gauge::ArbiterInUse, arb.in_use() as u64);
+            self.obs
+                .gauge_set(Gauge::ArbiterPhysical, arb.physical().threads() as u64);
         }
     }
 
@@ -384,6 +435,7 @@ impl Scheduler {
         }
         self.pool =
             if n > 1 { Some(StepperPool::spawn(n, self.wake.clone())) } else { None };
+        self.obs.gauge_set(Gauge::Steppers, n as u64);
     }
 
     /// Stepper-pool width (1 = serial).
@@ -428,7 +480,9 @@ impl Scheduler {
         let path = manifest::manifest_path(&self.ckpt_dir);
         if let Err(e) = manifest::write(&path, self.next_id, &entries) {
             eprintln!("serve: manifest write failed ({}): {e:#}", path.display());
+            return;
         }
+        self.obs.incr(Counter::ManifestRewrites);
     }
 
     /// Re-register every session recorded in the ckpt_dir's manifest
@@ -467,7 +521,8 @@ impl Scheduler {
             // without a suspend checkpoint there is no progress to
             // restore — the session re-runs from iteration 0
             let iters = if e.ckpt.is_some() { e.iters } else { 0 };
-            let session = Session::adopt(e.id, cfg, e.budget, &self.ckpt_dir, iters);
+            let mut session = Session::adopt(e.id, cfg, e.budget, &self.ckpt_dir, iters);
+            session.set_obs(self.obs.clone());
             if self.sessions.insert(e.id, session).is_some() {
                 bail!("manifest lists session id {} twice", e.id);
             }
@@ -475,6 +530,7 @@ impl Scheduler {
         }
         self.next_id = self.next_id.max(next_id).max(max_id + 1);
         self.persist_manifest();
+        self.refresh_gauges();
         Ok(n)
     }
 
@@ -501,9 +557,12 @@ impl Scheduler {
         // minimum virtual time, not from zero (else it would win every
         // pick until it caught up — starving the incumbents).
         session.set_vtime(self.min_runnable_vtime());
+        session.set_obs(self.obs.clone());
         self.sessions.insert(id, session);
+        self.obs.incr(Counter::SessionsSubmitted);
         self.evict_finished();
         self.persist_manifest();
+        self.refresh_gauges();
         Ok(id)
     }
 
@@ -593,13 +652,30 @@ impl Scheduler {
     fn grant_for(&mut self, id: u64) -> Option<usize> {
         let session = self.sessions.get_mut(&id).expect("picked id exists");
         match &mut self.arbiter {
-            Some(arb) => match arb.try_grant(session.requested_threads()) {
-                Some(pool) => {
-                    session.apply_pool(pool);
-                    Some(pool.threads())
+            Some(arb) => {
+                let requested = session.requested_threads();
+                match arb.try_grant(requested) {
+                    Some(pool) => {
+                        session.apply_pool(pool);
+                        if self.obs.enabled() {
+                            // granted vs desired: the gap is the width
+                            // pressure signal the exposition surfaces
+                            self.obs.observe(Hist::GrantWidth, pool.threads() as u64);
+                            self.obs.observe(
+                                Hist::DesiredWidth,
+                                arb.grant(requested).threads() as u64,
+                            );
+                            self.obs.gauge_set(Gauge::ArbiterInUse, arb.in_use() as u64);
+                            self.obs.gauge_set(
+                                Gauge::ArbiterPhysical,
+                                arb.physical().threads() as u64,
+                            );
+                        }
+                        Some(pool.threads())
+                    }
+                    None => None,
                 }
-                None => None,
-            },
+            }
             None => Some(0),
         }
     }
@@ -608,6 +684,7 @@ impl Scheduler {
         if width > 0 {
             if let Some(arb) = &mut self.arbiter {
                 arb.release(width);
+                self.obs.gauge_set(Gauge::ArbiterInUse, arb.in_use() as u64);
             }
         }
     }
@@ -623,6 +700,7 @@ impl Scheduler {
         let id = self.pick()?;
         let width = self.grant_for(id)?;
         self.rr_last = id;
+        self.obs.incr(Counter::Quanta);
         let session = self.sessions.get_mut(&id).expect("picked id exists");
         session.step();
         let finished = !session.is_active();
@@ -631,6 +709,7 @@ impl Scheduler {
             // the session just finished: its manifest entry (if any) is
             // dead — a crash after this instant must not re-run it
             self.persist_manifest();
+            self.refresh_gauges();
         }
         Some(id)
     }
@@ -650,6 +729,7 @@ impl Scheduler {
         match session.begin_quantum() {
             BeginOutcome::Started(quantum) => {
                 self.in_flight.insert(id, width);
+                self.obs.incr(Counter::Quanta);
                 self.pool
                     .as_ref()
                     .expect("pump path requires a stepper pool")
@@ -661,6 +741,7 @@ impl Scheduler {
                 // session without a quantum
                 self.release_grant(width);
                 self.persist_manifest();
+                self.refresh_gauges();
                 DispatchOutcome::Finished(id)
             }
             BeginOutcome::NotRunnable => {
@@ -681,6 +762,7 @@ impl Scheduler {
         session.complete_quantum(outcome);
         if !session.is_active() {
             self.persist_manifest();
+            self.refresh_gauges();
         }
         id
     }
@@ -796,6 +878,7 @@ impl Scheduler {
         // a suspended session's manifest entry pins its checkpoint +
         // iteration count — the restart-adoption ground truth
         self.persist_manifest();
+        self.refresh_gauges();
         Ok(())
     }
 
@@ -815,6 +898,7 @@ impl Scheduler {
         // consumed, state running) or failed terminally (session Failed,
         // entry dropped)
         self.persist_manifest();
+        self.refresh_gauges();
         resumed?;
         if floor.is_finite() {
             let s = self.get_mut(id)?;
@@ -829,6 +913,7 @@ impl Scheduler {
         self.settle(id);
         self.get_mut(id)?.cancel()?;
         self.persist_manifest();
+        self.refresh_gauges();
         Ok(())
     }
 

@@ -71,6 +71,7 @@ use std::sync::Arc;
 use anyhow::{bail, Context, Result};
 
 use crate::config::RunConfig;
+use crate::obs::{expo, BurstLog, Counter, Gauge, Registry};
 use crate::serve::manifest;
 use crate::serve::protocol::{self, Request};
 use crate::serve::scheduler::Scheduler;
@@ -128,6 +129,13 @@ pub struct Server {
     shutdown: Arc<AtomicBool>,
     /// session id → subscriptions (pruned at terminal push / dead client).
     watches: BTreeMap<u64, Vec<Watcher>>,
+    /// Server-wide metrics registry (ISSUE 9): one live handle shared by
+    /// the scheduler, every session/driver, the accept loop and the
+    /// metrics listener. Answers the `stats` wire verb.
+    obs: Registry,
+    /// Where the Prometheus exposition is being served (None unless
+    /// `serve.metrics_addr` was set).
+    metrics_addr: Option<SocketAddr>,
 }
 
 impl Server {
@@ -142,11 +150,13 @@ impl Server {
             .with_context(|| format!("binding serve.addr {:?}", cfg.serve.addr))?;
         std::fs::create_dir_all(&cfg.serve.ckpt_dir)
             .with_context(|| format!("creating serve.ckpt_dir {:?}", cfg.serve.ckpt_dir))?;
+        let obs = Registry::new();
         let mut sched = Scheduler::new(
             cfg.serve.max_sessions,
             cfg.serve.policy,
             cfg.serve.ckpt_dir.clone(),
         );
+        sched.set_obs(obs.clone());
         // per-quantum width arbitration over the server's physical pool
         sched.set_physical_pool(crate::runtime::NativePool::from_config(
             cfg.optex.threads,
@@ -209,10 +219,19 @@ impl Server {
             let listener = listener.try_clone()?;
             let shutdown = Arc::clone(&shutdown);
             let max_conns = cfg.serve.max_conns;
+            let obs = obs.clone();
             std::thread::Builder::new()
                 .name("optex-serve-accept".into())
-                .spawn(move || accept_loop(listener, tx, shutdown, max_conns))?;
+                .spawn(move || accept_loop(listener, tx, shutdown, max_conns, obs))?;
         }
+        // second listener: Prometheus text exposition, scraped without
+        // touching the command queue (a slow scraper cannot stall a
+        // quantum)
+        let metrics_addr = if cfg.serve.metrics_addr.is_empty() {
+            None
+        } else {
+            Some(expo::spawn_metrics_listener(&cfg.serve.metrics_addr, obs.clone())?)
+        };
         Ok(Server {
             listener,
             rx,
@@ -220,7 +239,15 @@ impl Server {
             base_cfg: cfg.clone(),
             shutdown,
             watches: BTreeMap::new(),
+            obs,
+            metrics_addr,
         })
+    }
+
+    /// Where the Prometheus exposition is served (`serve.metrics_addr`,
+    /// with port 0 resolved), or None when metrics export is off.
+    pub fn metrics_addr(&self) -> Option<SocketAddr> {
+        self.metrics_addr
     }
 
     /// The bound address (resolves port 0 to the ephemeral port).
@@ -279,10 +306,12 @@ impl Server {
     }
 
     /// Push the terminal record for `s` to its watchers and drop them.
-    fn push_terminal(watches: &mut BTreeMap<u64, Vec<Watcher>>, s: &Session) {
+    fn push_terminal(obs: &Registry, watches: &mut BTreeMap<u64, Vec<Watcher>>, s: &Session) {
         if let Some(ws) = watches.remove(&s.id()) {
             for w in ws {
-                let _ = w.tx.send(protocol::result_event_line(s, w.include_theta));
+                if w.tx.send(protocol::result_event_line(s, w.include_theta)).is_ok() {
+                    obs.incr(Counter::WatchPushes);
+                }
             }
         }
     }
@@ -291,6 +320,7 @@ impl Server {
     /// `id`: iter pushes on the subscriber's cadence, terminal push (and
     /// subscription teardown) when the session just finished.
     fn notify(&mut self, id: u64) {
+        let obs = self.obs.clone();
         let Some(s) = self.sched.session(id) else { return };
         if let Some(ws) = self.watches.get_mut(&id) {
             let iters = s.iters_done();
@@ -298,13 +328,17 @@ impl Server {
                 if iters > w.last_iter && iters % w.every == 0 {
                     w.last_iter = iters;
                     // a vanished client prunes its subscription here
-                    return w.tx.send(protocol::iter_event_line(s)).is_ok();
+                    let sent = w.tx.send(protocol::iter_event_line(s)).is_ok();
+                    if sent {
+                        obs.incr(Counter::WatchPushes);
+                    }
+                    return sent;
                 }
                 true
             });
         }
         if !s.is_active() {
-            Self::push_terminal(&mut self.watches, s);
+            Self::push_terminal(&obs, &mut self.watches, s);
         }
     }
 
@@ -316,7 +350,7 @@ impl Server {
         for id in ids {
             match self.sched.session(id) {
                 Some(s) if s.is_active() => {}
-                Some(s) => Self::push_terminal(&mut self.watches, s),
+                Some(s) => Self::push_terminal(&self.obs, &mut self.watches, s),
                 None => {
                     self.watches.remove(&id);
                 }
@@ -421,6 +455,11 @@ impl Server {
             Request::Pause { id } => self.ack(id, Scheduler::pause),
             Request::Resume { id } => self.ack(id, Scheduler::resume),
             Request::Cancel { id } => self.ack(id, Scheduler::cancel),
+            Request::Stats => protocol::stats_line(&self.obs.snapshot()),
+            Request::Trace { id } => match self.sched.session(id) {
+                Some(s) => protocol::trace_line(s),
+                None => protocol::error_line(&format!("no such session {id}")),
+            },
         };
         let _ = reply.send(line);
         // cancel / failed resume finish sessions without a quantum —
@@ -442,8 +481,15 @@ fn accept_loop(
     tx: Sender<Command>,
     shutdown: Arc<AtomicBool>,
     max_conns: usize,
+    obs: Registry,
 ) {
     let conns = Arc::new(AtomicUsize::new(0));
+    // Sheds used to be silent on the server side (the client got the
+    // error line, the operator saw nothing). Count every one and say so
+    // on stderr — rate-limited so an overload burst cannot turn the log
+    // into the second casualty.
+    let shed_log = Arc::new(BurstLog::new(std::time::Duration::from_secs(5)));
+    let reject_log = Arc::new(BurstLog::new(std::time::Duration::from_secs(5)));
     for conn in listener.incoming() {
         if shutdown.load(Ordering::SeqCst) {
             return;
@@ -454,18 +500,26 @@ fn accept_loop(
         // exhausting threads
         if conns.fetch_add(1, Ordering::SeqCst) >= max_conns {
             conns.fetch_sub(1, Ordering::SeqCst);
+            obs.incr(Counter::ConnSheds);
+            shed_log.note(&format!(
+                "serve: shedding connection (serve.max_conns = {max_conns})"
+            ));
             let mut s = stream;
             let _ = s.write_all(protocol::error_line("too many connections").as_bytes());
             let _ = s.write_all(b"\n");
             continue;
         }
+        obs.gauge_set(Gauge::ConnsActive, conns.load(Ordering::SeqCst) as u64);
         let tx = tx.clone();
         let conns = Arc::clone(&conns);
+        let conn_obs = obs.clone();
+        let conn_reject_log = Arc::clone(&reject_log);
         let spawned = std::thread::Builder::new()
             .name("optex-serve-conn".into())
             .spawn(move || {
-                handle_conn(stream, tx);
-                conns.fetch_sub(1, Ordering::SeqCst);
+                handle_conn(stream, tx, &conn_obs, &conn_reject_log);
+                let left = conns.fetch_sub(1, Ordering::SeqCst) - 1;
+                conn_obs.gauge_set(Gauge::ConnsActive, left as u64);
             });
         if spawned.is_err() {
             conns.fetch_sub(1, Ordering::SeqCst);
@@ -473,23 +527,33 @@ fn accept_loop(
     }
 }
 
+/// Why [`read_line_capped`] gave up on a connection.
+enum LineError {
+    /// The line hit [`MAX_LINE_BYTES`] without a newline — the rest of
+    /// it would be parsed as garbage requests, so the connection is
+    /// beyond salvage.
+    TooLong,
+    /// Socket I/O error.
+    Io,
+}
+
 /// Read one `\n`-terminated line of at most [`MAX_LINE_BYTES`]. Returns
-/// `Ok(None)` on clean EOF, `Err(())` on I/O error or an over-long line
-/// (the connection is beyond salvage — the rest of the line would be
-/// parsed as garbage requests).
-fn read_line_capped(reader: &mut BufReader<TcpStream>) -> Result<Option<String>, ()> {
+/// `Ok(None)` on clean EOF.
+fn read_line_capped(
+    reader: &mut BufReader<TcpStream>,
+) -> Result<Option<String>, LineError> {
     let mut line = String::new();
     let mut limited = (&mut *reader).take(MAX_LINE_BYTES);
     match limited.read_line(&mut line) {
         Ok(0) => Ok(None),
         Ok(n) => {
             if n as u64 >= MAX_LINE_BYTES && !line.ends_with('\n') {
-                Err(())
+                Err(LineError::TooLong)
             } else {
                 Ok(Some(line))
             }
         }
-        Err(_) => Err(()),
+        Err(_) => Err(LineError::Io),
     }
 }
 
@@ -499,7 +563,12 @@ fn read_line_capped(reader: &mut BufReader<TcpStream>) -> Result<Option<String>,
 /// paired writer thread owns the socket's write half and drains the
 /// queue until every sender — the reader's clone AND any `watch`
 /// registrations held by the scheduler — is gone.
-fn handle_conn(stream: TcpStream, tx: Sender<Command>) {
+fn handle_conn(
+    stream: TcpStream,
+    tx: Sender<Command>,
+    obs: &Registry,
+    reject_log: &BurstLog,
+) {
     let Ok(read_half) = stream.try_clone() else { return };
     let mut writer = stream;
     let (line_tx, line_rx) = mpsc::channel::<String>();
@@ -527,10 +596,16 @@ fn handle_conn(stream: TcpStream, tx: Sender<Command>) {
         let line = match read_line_capped(&mut reader) {
             Ok(Some(line)) => line,
             Ok(None) => break,
-            Err(()) => {
+            Err(LineError::TooLong) => {
+                // previously this was only visible to the offending
+                // client; count it and tell the operator too
+                obs.incr(Counter::LineRejects);
+                reject_log
+                    .note("serve: rejected over-long request line (cap 1 MiB)");
                 let _ = line_tx.send(protocol::error_line("request line too long"));
                 break;
             }
+            Err(LineError::Io) => break,
         };
         if line.trim().is_empty() {
             continue;
@@ -566,5 +641,8 @@ pub fn serve(cfg: &RunConfig) -> Result<()> {
         cfg.optex.pool.name(),
         cfg.serve.steppers,
     );
+    if let Some(addr) = server.metrics_addr() {
+        println!("serve: metrics exposition on http://{addr}/metrics");
+    }
     server.run()
 }

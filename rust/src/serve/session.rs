@@ -38,6 +38,7 @@ use anyhow::{bail, Result};
 use crate::config::RunConfig;
 use crate::coordinator::metrics::IterRecord;
 use crate::coordinator::Driver;
+use crate::obs::{Counter, FlightRecorder, Hist, ObsEvent, Registry, TracePhase};
 use crate::runtime::NativePool;
 use crate::serve::manifest;
 use crate::workloads::{factory, GradSource};
@@ -134,6 +135,18 @@ pub struct Session {
     /// Width the arbiter granted for the most recent quantum (None until
     /// a granted step runs — observability for the arbitration tests).
     last_grant: Option<usize>,
+    /// Metrics registry handle (ISSUE 9); disabled until the scheduler
+    /// installs the server-wide one at admission.
+    obs: Registry,
+    /// Flight recorder: this session's bounded ring of lifecycle and
+    /// driver events (rendered by the `trace` verb, dumped to disk at a
+    /// Failed finish). Sequence numbers are assigned at push on the
+    /// serve thread — a single totally-ordered log per session.
+    recorder: FlightRecorder,
+    /// When the session last became runnable (admit / step complete /
+    /// resume) — the queue-wait histogram's start mark. Metrics only:
+    /// never enters records or renders.
+    runnable_since: Option<Instant>,
 }
 
 impl Session {
@@ -174,7 +187,7 @@ impl Session {
         rebuildable: bool,
         ckpt_path: Option<PathBuf>,
     ) -> Session {
-        Session {
+        let mut session = Session {
             id,
             cfg,
             budget,
@@ -196,7 +209,12 @@ impl Session {
             eval_ema_s: 0.0,
             vtime: 0.0,
             last_grant: None,
-        }
+            obs: Registry::disabled(),
+            recorder: FlightRecorder::new(),
+            runnable_since: Some(Instant::now()),
+        };
+        session.recorder.push(ObsEvent::new(TracePhase::Submit, 0, ""));
+        session
     }
 
     /// Re-register a session from a restart-adoption manifest entry
@@ -220,6 +238,7 @@ impl Session {
         let mut session = Session::assemble(id, cfg, budget, None, true, ckpt_path);
         session.state = SessionState::Paused;
         session.iters_done = iters_done;
+        session.runnable_since = None;
         session
     }
 
@@ -330,6 +349,38 @@ impl Session {
         self.quarantined
     }
 
+    /// Install the server-wide metrics registry (ISSUE 9): the session
+    /// keeps a handle for its own histograms and passes a clone to the
+    /// live driver (and to every driver rebuilt on resume).
+    pub(crate) fn set_obs(&mut self, obs: Registry) {
+        if let Some(d) = self.driver.as_mut() {
+            d.set_obs(obs.clone());
+        }
+        self.obs = obs;
+    }
+
+    /// Append one event to this session's flight-recorder ring.
+    pub(crate) fn record_event(
+        &mut self,
+        phase: TracePhase,
+        iter: u64,
+        detail: impl Into<String>,
+    ) {
+        self.recorder.push(ObsEvent::new(phase, iter, detail));
+    }
+
+    /// The rendered flight-recorder ring, oldest first (the `trace`
+    /// verb and the Failed-session status dump).
+    pub fn trace_lines(&self) -> Vec<String> {
+        self.recorder.render()
+    }
+
+    /// Events recorded over this session's lifetime (≥ the ring length
+    /// — old events fall off the bounded ring).
+    pub fn trace_total(&self) -> u64 {
+        self.recorder.total_recorded()
+    }
+
     /// Smoothed measured eval-seconds per iteration (weighted-fair key).
     pub fn eval_ema_s(&self) -> f64 {
         self.eval_ema_s
@@ -372,6 +423,12 @@ impl Session {
         if let Some(d) = self.driver.as_mut() {
             d.set_compute_pool(pool);
             self.last_grant = Some(pool.threads());
+            let detail = format!(
+                "width={} requested={}",
+                pool.threads(),
+                self.cfg.optex.threads
+            );
+            self.record_event(TracePhase::Grant, self.iters_done + 1, detail);
         }
     }
 
@@ -450,8 +507,17 @@ impl Session {
         }
         self.state = SessionState::Running;
         let t = (self.iters_done + 1) as usize;
+        if let Some(since) = self.runnable_since.take() {
+            self.obs.observe(Hist::QueueWaitUs, since.elapsed().as_micros() as u64);
+        }
+        self.record_event(TracePhase::BeginQuantum, t as u64, "");
         let driver = self.driver.take().expect("runnable session has a driver");
-        BeginOutcome::Started(Quantum { session_id: self.id, t, driver: Some(driver) })
+        BeginOutcome::Started(Quantum {
+            session_id: self.id,
+            t,
+            driver: Some(driver),
+            dispatched: Instant::now(),
+        })
     }
 
     /// Phase 3 (serve thread): reattach the driver (or quarantine the
@@ -463,7 +529,7 @@ impl Session {
     /// other's fair-share cost (ISSUE 8 satellite).
     pub(crate) fn complete_quantum(&mut self, outcome: QuantumOutcome) {
         match outcome {
-            QuantumOutcome::Panicked { driver, message, .. } => {
+            QuantumOutcome::Panicked { mut driver, message, dispatched, .. } => {
                 // Failure-domain boundary (ISSUE 7): the panic payload
                 // stopped at the `catch_unwind` in `Quantum::run`. The
                 // session goes Failed with the message queryable via
@@ -471,18 +537,37 @@ impl Session {
                 // archive its pre-panic rows and then drop it (arena
                 // and any outstanding loan included). The other K−1
                 // sessions never observe any of it.
+                self.obs
+                    .observe(Hist::QuantumLatencyUs, dispatched.elapsed().as_micros() as u64);
+                // the driver's in-quantum events (the fired fault) ride
+                // back with it — drain them BEFORE the quarantine marker
+                // so the trace reads in causal order
+                for e in driver.take_events() {
+                    self.recorder.push(e);
+                }
+                self.obs.incr(Counter::SessionsQuarantined);
                 self.quarantined = true;
                 self.driver = Some(driver);
+                self.record_event(
+                    TracePhase::Quarantine,
+                    self.iters_done + 1,
+                    message.clone(),
+                );
                 self.finish(
                     SessionState::Failed,
-                    None,
+                    Some("quarantined"),
                     Some(format!("panic in Driver::iteration: {message}")),
                 );
             }
-            QuantumOutcome::Ran { driver, result, step_eval_s, .. } => {
+            QuantumOutcome::Ran { mut driver, result, step_eval_s, dispatched, .. } => {
+                self.obs
+                    .observe(Hist::QuantumLatencyUs, dispatched.elapsed().as_micros() as u64);
+                for e in driver.take_events() {
+                    self.recorder.push(e);
+                }
                 self.driver = Some(driver);
                 if let Err(e) = result {
-                    self.finish(SessionState::Failed, None, Some(format!("{e:#}")));
+                    self.finish(SessionState::Failed, Some("error"), Some(format!("{e:#}")));
                     return;
                 }
                 self.iters_done += 1;
@@ -500,6 +585,9 @@ impl Session {
                     if self.best_loss() <= target {
                         self.finish(SessionState::Done, Some("target_loss"), None);
                     }
+                }
+                if self.is_runnable() {
+                    self.runnable_since = Some(Instant::now());
                 }
             }
         }
@@ -537,6 +625,21 @@ impl Session {
         self.state = state;
         self.stop_reason = stop_reason;
         self.error = error;
+        self.runnable_since = None;
+        let detail = match (stop_reason, &self.error) {
+            (Some(r), _) => r.to_string(),
+            (None, Some(e)) => e.clone(),
+            (None, None) => String::new(),
+        };
+        self.record_event(TracePhase::Finish, self.iters_done, detail);
+        if state == SessionState::Failed {
+            // a dead session carries its own post-mortem: drop the
+            // rendered ring next to the checkpoints. Best-effort — a
+            // full disk must not take the serve loop down.
+            if let Some(dir) = self.ckpt_path.as_ref().and_then(|p| p.parent()) {
+                let _ = self.recorder.dump(&dir.join(format!("trace_{}.txt", self.id)));
+            }
+        }
     }
 
     /// Pause. Rebuildable sessions suspend: the run streams to the
@@ -554,6 +657,8 @@ impl Session {
             self.archive_driver();
         }
         self.state = SessionState::Paused;
+        self.runnable_since = None;
+        self.record_event(TracePhase::Pause, self.iters_done, "");
         Ok(())
     }
 
@@ -574,15 +679,20 @@ impl Session {
         }
         if self.driver.is_none() {
             match self.rebuild_driver() {
-                Ok(drv) => self.driver = Some(drv),
+                Ok(mut drv) => {
+                    drv.set_obs(self.obs.clone());
+                    self.driver = Some(drv);
+                }
                 Err(e) => {
                     let msg = format!("session {}: resume failed: {e:#}", self.id);
-                    self.finish(SessionState::Failed, None, Some(msg.clone()));
+                    self.finish(SessionState::Failed, Some("error"), Some(msg.clone()));
                     bail!("{msg}");
                 }
             }
         }
         self.state = SessionState::Running;
+        self.runnable_since = Some(Instant::now());
+        self.record_event(TracePhase::Resume, self.iters_done, "");
         Ok(())
     }
 
@@ -661,7 +771,7 @@ impl Session {
         if !self.is_active() {
             bail!("session {} already {}", self.id, self.state.name());
         }
-        self.finish(SessionState::Failed, None, Some("cancelled by client".into()));
+        self.finish(SessionState::Failed, Some("cancelled"), Some("cancelled by client".into()));
         Ok(())
     }
 }
@@ -688,6 +798,9 @@ pub(crate) struct Quantum {
     /// `Option` so the `catch_unwind` closure can borrow it mutably and
     /// the Ok-path can still move it out afterwards.
     driver: Option<Driver>,
+    /// When the serve thread detached the quantum — start mark of the
+    /// whole-quantum latency histogram (metrics only, never records).
+    dispatched: Instant,
 }
 
 impl Quantum {
@@ -723,11 +836,13 @@ impl Quantum {
                 driver,
                 result,
                 step_eval_s,
+                dispatched: self.dispatched,
             },
             Err(payload) => QuantumOutcome::Panicked {
                 session_id: self.session_id,
                 driver,
                 message: panic_message(payload.as_ref()),
+                dispatched: self.dispatched,
             },
         }
     }
@@ -744,10 +859,18 @@ pub(crate) enum QuantumOutcome {
         driver: Driver,
         result: Result<()>,
         step_eval_s: f64,
+        /// Serve-thread dispatch mark, for the quantum-latency histogram.
+        dispatched: Instant,
     },
     /// The iteration panicked; the driver comes back only so its
     /// pre-panic metrics can be archived — it is never stepped again.
-    Panicked { session_id: u64, driver: Driver, message: String },
+    Panicked {
+        session_id: u64,
+        driver: Driver,
+        message: String,
+        /// Serve-thread dispatch mark, for the quantum-latency histogram.
+        dispatched: Instant,
+    },
 }
 
 impl QuantumOutcome {
@@ -1097,16 +1220,32 @@ mod tests {
         let mut cfg = synth_cfg(3, 6);
         cfg.faults = "eval_panic@i2".into();
         let mut s = Session::build(1, cfg, Budget::default(), &dir).unwrap();
+        s.set_obs(crate::obs::Registry::new());
         while s.is_runnable() {
             s.step();
         }
         assert_eq!(s.state(), SessionState::Failed);
         assert!(s.quarantined());
+        assert_eq!(
+            s.stop_reason(),
+            Some("quarantined"),
+            "quarantine must carry a uniform stop reason (ISSUE 9 satellite)"
+        );
         let err = s.error().unwrap();
         assert!(err.contains("panic in Driver::iteration"), "{err}");
         assert!(err.contains("injected fault: eval_panic"), "{err}");
         assert_eq!(s.iters_done(), 1, "the panicking iteration never counted");
         assert!(s.theta().is_none() || s.theta().unwrap().iter().all(|v| v.is_finite()));
+        // the flight recorder names the fault site, the iteration it
+        // fired at, and the quarantine — and the post-mortem artifact
+        // was dumped next to the checkpoints
+        let trace = s.trace_lines().join("\n");
+        #[cfg(feature = "obs")]
+        assert!(trace.contains("i2 fault eval_panic"), "{trace}");
+        assert!(trace.contains("quarantine"), "{trace}");
+        assert!(trace.contains("finish quarantined"), "{trace}");
+        let dumped = std::fs::read_to_string(dir.join("trace_1.txt")).unwrap();
+        assert!(dumped.contains("quarantine"), "{dumped}");
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -109,4 +109,50 @@ mod tests {
         std::thread::sleep(Duration::from_millis(2));
         assert!(s.secs() > 0.0);
     }
+
+    // -- ISSUE 9 satellite: full-surface coverage ------------------------
+
+    #[test]
+    fn time_returns_closure_value_and_accumulates_duration() {
+        let mut t = PhaseTimer::new();
+        let out = t.time("phase", || {
+            std::thread::sleep(Duration::from_millis(2));
+            "done"
+        });
+        assert_eq!(out, "done");
+        assert!(t.total("phase") >= Duration::from_millis(2));
+        assert_eq!(t.count("phase"), 1);
+        // totals accumulate across calls, they never overwrite
+        let before = t.total("phase");
+        t.add("phase", Duration::from_millis(3));
+        assert_eq!(t.total("phase"), before + Duration::from_millis(3));
+        assert_eq!(t.count("phase"), 2);
+    }
+
+    #[test]
+    fn report_sorts_by_total_time_descending_with_call_counts() {
+        let mut t = PhaseTimer::new();
+        t.add("cheap", Duration::from_millis(1));
+        t.add("costly", Duration::from_millis(50));
+        t.add("costly", Duration::from_millis(50));
+        let rep = t.report();
+        let costly = rep.find("costly").expect("costly row missing");
+        let cheap = rep.find("cheap").expect("cheap row missing");
+        assert!(costly < cheap, "report not sorted by total time:\n{rep}");
+        assert!(rep.contains("x2"), "call count missing from report:\n{rep}");
+        // labels() walks the accumulator keys (BTreeMap = sorted order)
+        let labels: Vec<_> = t.labels().collect();
+        assert_eq!(labels, vec!["cheap", "costly"]);
+    }
+
+    #[test]
+    fn empty_timer_reports_nothing_and_default_stopwatch_runs() {
+        let t = PhaseTimer::new();
+        assert!(t.report().is_empty());
+        assert_eq!(t.labels().count(), 0);
+        assert_eq!(t.total("anything"), Duration::ZERO);
+        let s = Stopwatch::default();
+        assert!(s.elapsed() >= Duration::ZERO);
+        assert!(s.secs() >= 0.0);
+    }
 }

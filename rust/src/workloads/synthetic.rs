@@ -1,10 +1,10 @@
 //! Synthetic benchmark functions (paper Appx B.2.1 — the *modified*
 //! Ackley / Sphere / Rosenbrock with mean-normalized sums).
 //!
-//! Analytic values and gradients, mirrored by the JAX versions in
-//! `python/compile/model.py` (cross-checked through the HLO artifacts in
-//! `rust/tests/hlo_roundtrip.rs`). Ackley & Sphere minimize at θ* = 0,
-//! Rosenbrock at θ* = 1, all with min F = 0.
+//! Analytic values and gradients, cross-checked against the lowered JAX
+//! versions through the HLO artifacts in `rust/tests/hlo_roundtrip.rs`.
+//! Ackley & Sphere minimize at θ* = 0, Rosenbrock at θ* = 1, all with
+//! min F = 0.
 
 use std::f64::consts::{E, PI};
 

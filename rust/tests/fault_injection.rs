@@ -137,6 +137,10 @@ fn k8_one_panic_one_nan_quarantined_six_bit_identical() {
             // oracle panic → quarantine: Failed, flagged, payload kept
             assert_eq!(status.get("state").unwrap().as_str(), Some("failed"));
             assert_eq!(status.get("quarantined").and_then(Json::as_bool), Some(true));
+            // ISSUE 9 satellite: a quarantined status names the iteration
+            // it died at and a uniform stop reason, like every terminal
+            assert_eq!(status.get("iters").unwrap().as_usize(), Some(2), "{status:?}");
+            assert_eq!(status.get("stop_reason").unwrap().as_str(), Some("quarantined"));
             let err = status.get("error").unwrap().as_str().unwrap();
             assert!(err.contains("panic in Driver::iteration"), "{err}");
             assert!(
@@ -152,6 +156,7 @@ fn k8_one_panic_one_nan_quarantined_six_bit_identical() {
             // blow up
             assert_eq!(status.get("state").unwrap().as_str(), Some("failed"));
             assert!(status.get("quarantined").is_none(), "{status:?}");
+            assert_eq!(status.get("stop_reason").unwrap().as_str(), Some("error"));
             let err = status.get("error").unwrap().as_str().unwrap();
             assert!(err.contains("non-finite eval results at iteration 2"), "{err}");
             assert_eq!(status.get("nonfinite").unwrap().as_usize(), Some(1));
@@ -172,6 +177,34 @@ fn k8_one_panic_one_nan_quarantined_six_bit_identical() {
             );
         }
     }
+
+    // ISSUE 9 acceptance: the quarantined session's flight recorder,
+    // dumped over the wire with the `trace` verb, names the injected
+    // fault site and the iteration it fired at
+    let r = client.request(&format!("{{\"cmd\":\"trace\",\"id\":{}}}", ids[panic_idx]));
+    assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r:?}");
+    assert_eq!(r.get("id").unwrap().as_usize(), Some(ids[panic_idx] as usize));
+    let lines: Vec<&str> = r
+        .get("trace")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|v| v.as_str().unwrap())
+        .collect();
+    assert!(r.get("total").unwrap().as_usize().unwrap() >= lines.len());
+    // driver-side events (the fault site) exist only with the obs
+    // feature; the session-side lifecycle events are always recorded
+    #[cfg(feature = "obs")]
+    assert!(
+        lines.iter().any(|l| l.contains("i3 fault eval_panic")),
+        "trace does not name the injected fault site + iteration: {lines:?}"
+    );
+    assert!(lines.iter().any(|l| l.contains("quarantine")), "{lines:?}");
+    assert!(lines.iter().any(|l| l.contains("finish quarantined")), "{lines:?}");
+    // tracing an unknown id is an error, not a hang
+    let r = client.request(r#"{"cmd":"trace","id":99}"#);
+    assert_eq!(r.get("ok").unwrap().as_bool(), Some(false), "{r:?}");
 
     // the roll-up view still lists all eight, and shutdown is clean
     let r = client.request(r#"{"cmd":"status"}"#);

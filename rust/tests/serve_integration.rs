@@ -297,6 +297,121 @@ fn truncated_checkpoint_resume_fails_session_but_not_server() {
     std::fs::remove_dir_all(&dir).ok();
 }
 
+/// ISSUE 9 acceptance, wire half: after real work runs, the `stats`
+/// verb answers a registry snapshot with nonzero iteration counters,
+/// and `serve.metrics_addr` stands up a second listener whose
+/// Prometheus-style exposition parses line-for-line and carries the
+/// same counters. (Gated on the `obs` feature: with it compiled out
+/// the registry is a no-op and these counters legitimately stay zero.)
+#[cfg(feature = "obs")]
+#[test]
+fn stats_verb_and_metrics_exposition_carry_live_counters() {
+    use std::io::{Read, Write};
+
+    let dir = tmp_dir("obs_wire");
+    let steps = 6usize;
+    let mut base = RunConfig::default();
+    base.serve.addr = "127.0.0.1:0".into();
+    base.serve.ckpt_dir = dir.clone();
+    base.serve.metrics_addr = "127.0.0.1:0".into();
+    base.optex.threads = 1;
+    let (addr_tx, addr_rx) = std::sync::mpsc::channel();
+    let server_thread = std::thread::spawn(move || {
+        let server = Server::bind(&base).expect("bind");
+        addr_tx
+            .send((server.local_addr().unwrap(), server.metrics_addr()))
+            .unwrap();
+        server.run().expect("serve loop");
+    });
+    let (addr, metrics_addr) = addr_rx.recv_timeout(Duration::from_secs(10)).unwrap();
+    let metrics_addr = metrics_addr.expect("serve.metrics_addr bound a second listener");
+    let mut client = Client::connect(addr);
+
+    let r = client.request(
+        r#"{"cmd":"submit","config":{"workload":"sphere","synth_dim":64,"steps":6,"seed":11,"optex.threads":1}}"#,
+    );
+    let id = r.get("id").unwrap().as_usize().unwrap();
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        let r = client.request(&format!("{{\"cmd\":\"status\",\"id\":{id}}}"));
+        match r.get("state").unwrap().as_str().unwrap() {
+            "done" => break,
+            "failed" => panic!("session failed: {r:?}"),
+            _ => {
+                assert!(Instant::now() < deadline, "session never finished");
+                std::thread::sleep(Duration::from_millis(10));
+            }
+        }
+    }
+
+    // -- the stats verb: one-line JSON snapshot of the whole registry
+    let r = client.request(r#"{"cmd":"stats"}"#);
+    assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r:?}");
+    let counters = r.get("counters").unwrap();
+    let iters = counters
+        .get("optex_iterations_total")
+        .unwrap()
+        .as_usize()
+        .unwrap();
+    assert!(iters >= steps, "counted {iters} iterations, ran {steps}");
+    assert!(counters.get("optex_quanta_total").unwrap().as_usize().unwrap() >= 1);
+    assert_eq!(
+        counters.get("optex_sessions_submitted_total").unwrap().as_usize(),
+        Some(1)
+    );
+    let gauges = r.get("gauges").unwrap();
+    assert_eq!(gauges.get("optex_sessions_live").unwrap().as_usize(), Some(0));
+    assert!(
+        r.get("hists")
+            .unwrap()
+            .get("optex_quantum_latency_us")
+            .unwrap()
+            .get("count")
+            .unwrap()
+            .as_usize()
+            .unwrap()
+            >= 1,
+        "quantum latency histogram never observed a quantum"
+    );
+
+    // -- the exposition listener: plain HTTP, parseable text format
+    let mut sock = std::net::TcpStream::connect(metrics_addr).expect("scrape connect");
+    sock.write_all(b"GET /metrics HTTP/1.0\r\n\r\n").unwrap();
+    let mut raw = String::new();
+    sock.read_to_string(&mut raw).unwrap();
+    let body = raw
+        .split_once("\r\n\r\n")
+        .map(|(_, b)| b.to_string())
+        .unwrap_or(raw);
+    assert!(
+        body.contains("# TYPE optex_iterations_total counter"),
+        "missing TYPE line:\n{body}"
+    );
+    // every sample line must be `name[{labels}] <float>`
+    let mut scraped_iters = None;
+    for line in body.lines() {
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let (name, value) = line.rsplit_once(' ').expect("malformed sample line");
+        let value: f64 = value
+            .parse()
+            .unwrap_or_else(|_| panic!("unparseable sample: {line}"));
+        if name == "optex_iterations_total" {
+            scraped_iters = Some(value);
+        }
+    }
+    let scraped = scraped_iters.expect("exposition lacks optex_iterations_total");
+    assert!(
+        scraped >= steps as f64,
+        "exposition reports {scraped} iterations, ran {steps}"
+    );
+
+    client.request(r#"{"cmd":"shutdown"}"#);
+    server_thread.join().unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
 #[test]
 fn wire_pause_resume_roundtrip() {
     let dir = tmp_dir("wire_pause");

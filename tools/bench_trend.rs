@@ -18,6 +18,7 @@
 //! | `store_vs_seed[...].store_flatten_bytes_per_iter` (copies/iter) | lower is better (zero must STAY zero) |
 //! | `serve_throughput[k=8,...].steps_per_sec`      | higher is better |
 //! | `serve_throughput[k=8,steppers=8,...].steps_per_sec` (ISSUE 8 stepper-pool payoff) | higher is better |
+//! | `obs_overhead[k=8,...].steps_per_sec` (ISSUE 9 instrumented throughput) | higher is better |
 //!
 //! Usage: `bench_trend --check [--fresh DIR] [--baseline DIR]`
 //! (defaults: fresh = `.`, baseline = `baselines/`). Metrics without a
@@ -63,7 +64,8 @@ struct Pinned {
 }
 
 /// The gate's metric list (ISSUE 5: combine ns/elem, copies/iter,
-/// K=8 serve steps/s; ISSUE 8: the K=8 stepper-pool throughput cell).
+/// K=8 serve steps/s; ISSUE 8: the K=8 stepper-pool throughput cell;
+/// ISSUE 9: the instrumented K=8 obs-overhead cell).
 /// Order matters only for documentation — `pinned_match` is first-hit,
 /// so keep more specific filters before broader ones.
 const PINNED: &[Pinned] = &[
@@ -96,6 +98,16 @@ const PINNED: &[Pinned] = &[
     },
     Pinned {
         section: "serve_throughput",
+        field: "steps_per_sec",
+        higher_is_better: true,
+        coord_filter: &[("k", 8.0)],
+    },
+    // ISSUE 9 overhead pin: K=8 steps/s with the metrics registry live.
+    // The baseline was recorded within 5% of the obs-disabled row in the
+    // same BENCH_9 cell, so a later instrumentation change that slows the
+    // hot path shows up here as a throughput regression.
+    Pinned {
+        section: "obs_overhead",
         field: "steps_per_sec",
         higher_is_better: true,
         coord_filter: &[("k", 8.0)],

@@ -1,0 +1,131 @@
+#!/usr/bin/env bash
+# ISSUE 9 satellite: observability smoke against a REAL server process.
+# A release `optex serve` is started with `--metrics-addr`; a session is
+# submitted over the JSONL wire and run to Done; then the script asserts
+# that (1) the `stats` verb answers a snapshot whose iteration counter
+# is nonzero and matches the work done, (2) the Prometheus-style text
+# exposition on the second listener parses line-for-line and carries the
+# same nonzero counter, and (3) the `trace` verb answers for a live id.
+#
+# The in-process halves of these assertions live in
+# rust/tests/serve_integration.rs and rust/tests/fault_injection.rs;
+# this script pins the real-binary, real-second-listener path.
+#
+# Usage: tools/obs_smoke.sh [path-to-optex-binary]
+set -euo pipefail
+
+BIN="${1:-target/release/optex}"
+DIR="$(mktemp -d /tmp/optex_obs_smoke.XXXXXX)"
+PORT=$((20000 + RANDOM % 20000))
+MPORT=$((PORT + 1))
+ADDR="127.0.0.1:${PORT}"
+MADDR="127.0.0.1:${MPORT}"
+STEPS=6
+SERVER_PID=""
+
+cleanup() {
+  [ -n "${SERVER_PID}" ] && kill -9 "${SERVER_PID}" 2>/dev/null || true
+  rm -rf "${DIR}"
+}
+trap cleanup EXIT
+
+fail() { echo "obs_smoke: FAIL: $*" >&2; exit 1; }
+
+# One JSONL request/response exchange over bash's /dev/tcp (no netcat
+# dependency on the runner).
+request() {
+  local req="$1" reply
+  exec 3<>"/dev/tcp/127.0.0.1/${PORT}" || fail "connecting ${ADDR}"
+  printf '%s\n' "${req}" >&3
+  IFS= read -r reply <&3 || fail "no reply to: ${req}"
+  exec 3<&- 3>&-
+  printf '%s' "${reply}"
+}
+
+wait_port() {
+  local port="$1"
+  for _ in $(seq 1 100); do
+    if (exec 3<>"/dev/tcp/127.0.0.1/${port}") 2>/dev/null; then
+      exec 3<&- 3>&- 2>/dev/null || true
+      return 0
+    fi
+    sleep 0.1
+  done
+  fail "server never came up on 127.0.0.1:${port}"
+}
+
+echo "obs_smoke: phase 1 — server with a metrics listener"
+"${BIN}" serve --addr "${ADDR}" --metrics-addr "${MADDR}" --threads 1 \
+  --set "serve.ckpt_dir=${DIR}" &
+SERVER_PID=$!
+wait_port "${PORT}"
+wait_port "${MPORT}"
+
+REPLY=$(request "{\"cmd\":\"submit\",\"config\":{\"workload\":\"sphere\",\"synth_dim\":64,\"steps\":${STEPS},\"seed\":5,\"optex.threads\":1}}")
+echo "obs_smoke: submit -> ${REPLY}"
+case "${REPLY}" in
+  *'"ok":true'*) ;;
+  *) fail "submit refused: ${REPLY}" ;;
+esac
+
+for _ in $(seq 1 300); do
+  REPLY=$(request '{"cmd":"status","id":1}')
+  case "${REPLY}" in
+    *'"state":"done"'*) break ;;
+    *'"state":"failed"'*) fail "session failed: ${REPLY}" ;;
+  esac
+  sleep 0.1
+done
+case "${REPLY}" in
+  *'"state":"done"'*) ;;
+  *) fail "session never finished: ${REPLY}" ;;
+esac
+
+echo "obs_smoke: phase 2 — the stats verb counts the iterations"
+REPLY=$(request '{"cmd":"stats"}')
+echo "obs_smoke: stats -> ${REPLY}"
+case "${REPLY}" in
+  *'"ok":true'*) ;;
+  *) fail "stats refused: ${REPLY}" ;;
+esac
+ITERS=$(printf '%s' "${REPLY}" \
+  | sed -n 's/.*"optex_iterations_total":\([0-9][0-9]*\).*/\1/p')
+[ -n "${ITERS}" ] || fail "stats lacks optex_iterations_total: ${REPLY}"
+[ "${ITERS}" -ge "${STEPS}" ] \
+  || fail "stats counted ${ITERS} iterations, ran ${STEPS}"
+
+echo "obs_smoke: phase 3 — the exposition parses and agrees"
+EXPO=$(exec 3<>"/dev/tcp/127.0.0.1/${MPORT}" \
+  && printf 'GET /metrics HTTP/1.0\r\n\r\n' >&3 && cat <&3) \
+  || fail "scraping ${MADDR}"
+BODY=$(printf '%s\n' "${EXPO}" | sed '1,/^[[:space:]]*$/d')
+printf '%s\n' "${BODY}" | grep -q '^# TYPE optex_iterations_total counter$' \
+  || fail "exposition lacks the TYPE line:
+${BODY}"
+# every sample line must be `name[{labels}] <number>`
+printf '%s\n' "${BODY}" | grep -v '^#' | grep -v '^$' \
+  | grep -qvE '^[a-z_]+(\{[^}]*\})? -?[0-9]+(\.[0-9]+)?([eE][+-][0-9]+)?$' \
+  && fail "unparseable exposition line(s):
+$(printf '%s\n' "${BODY}" | grep -v '^#' | grep -v '^$' \
+  | grep -vE '^[a-z_]+(\{[^}]*\})? -?[0-9]+(\.[0-9]+)?([eE][+-][0-9]+)?$')"
+SCRAPED=$(printf '%s\n' "${BODY}" \
+  | sed -n 's/^optex_iterations_total \([0-9][0-9]*\).*/\1/p')
+[ -n "${SCRAPED}" ] || fail "exposition lacks optex_iterations_total:
+${BODY}"
+[ "${SCRAPED}" -ge "${STEPS}" ] \
+  || fail "exposition reports ${SCRAPED} iterations, ran ${STEPS}"
+
+echo "obs_smoke: phase 4 — the trace verb answers for a live id"
+REPLY=$(request '{"cmd":"trace","id":1}')
+echo "obs_smoke: trace -> ${REPLY}"
+case "${REPLY}" in
+  *'"ok":true'*'"trace":['*) ;;
+  *) fail "trace refused: ${REPLY}" ;;
+esac
+
+REPLY=$(request '{"cmd":"shutdown"}')
+echo "obs_smoke: shutdown -> ${REPLY}"
+wait "${SERVER_PID}" 2>/dev/null || true
+SERVER_PID=""
+
+echo "obs_smoke: OK — stats, exposition and trace all answer with live counters"
