@@ -1,0 +1,69 @@
+//! Wire-protocol micro-benchmarks (ISSUE 10): request parsing, response
+//! rendering, and the conformance validator itself. The serve loop does
+//! one parse + one render per client line and one render per watch push,
+//! so these are the per-message floors of the whole serve/router tier;
+//! the conformance rows bound what the wire suite costs CI.
+
+use optex::bench::{bench, bench_throughput, black_box};
+use optex::serve::protocol::schema::{self, ErrCode, Proto};
+use optex::serve::protocol::parse_request;
+use optex::testutil::wire::{self, Shapes};
+use optex::util::json::Json;
+
+fn main() {
+    println!("# request parse (per line; bytes = line length)");
+    let submit = "{\"cmd\":\"submit\",\"config\":{\"workload\":\"ackley\",\
+                  \"synth_dim\":30000,\"steps\":15,\"seed\":7,\
+                  \"optex.parallelism\":3,\"optex.t0\":5,\
+                  \"optex.threads\":8},\"paused\":true}";
+    for (name, line) in [
+        ("submit+config", submit),
+        ("status", "{\"cmd\":\"status\",\"id\":42}"),
+        ("watch", "{\"cmd\":\"watch\",\"id\":42,\"stream_every\":4,\"theta\":true}"),
+        ("migrate", "{\"cmd\":\"migrate\",\"id\":42,\"to\":1}"),
+    ] {
+        bench_throughput(&format!("parse_request {name}"), line.len(), || {
+            black_box(parse_request(line).unwrap())
+        });
+    }
+
+    println!("\n# response render (per line)");
+    bench("render hello", || black_box(schema::hello_line()));
+    bench("render submit-ack", || black_box(schema::submit_line(42, "running")));
+    bench("render migrate-ack", || black_box(schema::migrate_line(42, 1, "running")));
+    bench("render error v1", || {
+        black_box(schema::error_line("no such session: 42"))
+    });
+    bench("render error v2", || {
+        black_box(schema::error_line_for(
+            Proto::V2,
+            ErrCode::UnknownId,
+            "no such session: 42",
+        ))
+    });
+
+    println!("\n# push round trip: render-side Json vs client-side parse");
+    // a realistic iter event as the router fan-in sees it (parse, remap
+    // the id, re-render) — the per-push cost of the proxy tier
+    let push = "{\"best_loss\":1.25,\"event\":\"iter\",\"id\":7,\"iter\":12,\
+                \"loss\":2.5,\"state\":\"running\"}";
+    bench_throughput("fanin parse+remap+render", push.len(), || {
+        let mut v = Json::parse(push).unwrap();
+        if let Json::Obj(map) = &mut v {
+            map.insert("id".into(), Json::Num(99.0));
+        }
+        black_box(v.to_string())
+    });
+
+    println!("\n# conformance machinery (the wire suite's own cost)");
+    let doc = wire::protocol_doc();
+    bench_throughput("Shapes::parse PROTOCOL.md", doc.len(), || {
+        black_box(Shapes::parse(&doc))
+    });
+    let shapes = Shapes::parse(&doc);
+    let err = schema::error_line_for(Proto::V2, ErrCode::Busy, "at capacity");
+    let parsed = Json::parse(&err).unwrap();
+    bench("conform error-v2", || {
+        black_box(shapes.conform("error-v2", &parsed).unwrap())
+    });
+}

@@ -40,7 +40,7 @@ const VALUE_OPTS: &[&str] = &[
     "seeds", "fig", "profile", "n", "t0", "filter", "lr", "optimizer",
     "episodes", "env", "backend", "dim", "checkpoint", "resume", "fit",
     "threads", "gp-refresh-every", "pool", "addr", "max-sessions", "policy",
-    "dir", "faults", "steppers", "metrics-addr",
+    "dir", "faults", "steppers", "metrics-addr", "workers", "worker-bin",
 ];
 
 impl Args {
@@ -278,5 +278,26 @@ mod tests {
     fn last_occurrence_wins_for_value_options() {
         let a = parse("serve --addr a:1 --addr b:2");
         assert_eq!(a.opt("addr"), Some("b:2"));
+    }
+
+    // -- ISSUE 10: the router subcommand's surface -----------------------
+
+    #[test]
+    fn router_subcommand_options_parse() {
+        let a = parse(
+            "router --addr 127.0.0.1:7979 --workers 4 --dir results/router \
+             --worker-bin target/release/optex --set serve.max_sessions=8",
+        );
+        assert_eq!(a.subcommand.as_deref(), Some("router"));
+        assert_eq!(a.opt("addr"), Some("127.0.0.1:7979"));
+        assert_eq!(a.opt_usize("workers").unwrap(), Some(4));
+        assert_eq!(a.opt("dir"), Some("results/router"));
+        assert_eq!(a.opt("worker-bin"), Some("target/release/optex"));
+        assert_eq!(a.sets, vec!["serve.max_sessions=8"]);
+        // both take values — bare forms must hard-error, not become flags
+        for opt in ["--workers", "--worker-bin"] {
+            let err = Args::parse(["router".to_string(), opt.to_string()]).unwrap_err();
+            assert!(err.to_string().contains("needs a value"), "{opt}: {err}");
+        }
     }
 }

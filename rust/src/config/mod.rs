@@ -240,6 +240,48 @@ impl Default for ServeParams {
     }
 }
 
+/// `[router]` table: the multi-process scale-out front tier (ISSUE 10).
+/// Like `[serve]`, router knobs are server-level: a session's driver
+/// never reads them, so they are excluded from
+/// [`RunConfig::overrides_from_default`] by the same reasoning.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RouterParams {
+    /// Front listen address for the client-facing JSONL protocol
+    /// (`host:port`; port 0 binds an ephemeral port, printed at
+    /// startup).
+    pub addr: String,
+    /// How many `optex serve` worker processes the router spawns.
+    pub workers: usize,
+    /// Router state directory: holds `routes.jsonl` (the persisted
+    /// client-id → worker placement table) and one `worker_<i>/`
+    /// ckpt_dir per spawned worker — keeping worker state under the
+    /// router's dir is what lets it recover a SIGKILLed worker's
+    /// sessions from that worker's manifest.
+    pub dir: PathBuf,
+    /// Path to the `optex` binary to spawn workers from; empty
+    /// (default) = the router's own executable.
+    pub worker_bin: String,
+    /// Retention policy for the finished-result cache: how many
+    /// terminal `result` lines the router keeps after their sessions
+    /// are gone from the workers (oldest evicted first). Clients can
+    /// fetch a finished session's result from the router even after
+    /// worker-side eviction — the serve tier's retention leftover from
+    /// ISSUE 5, closed at the router.
+    pub result_cache: usize,
+}
+
+impl Default for RouterParams {
+    fn default() -> Self {
+        RouterParams {
+            addr: "127.0.0.1:7979".into(),
+            workers: 2,
+            dir: PathBuf::from("results/router"),
+            worker_bin: String::new(),
+            result_cache: 256,
+        }
+    }
+}
+
 /// Complete run configuration.
 #[derive(Clone, Debug, PartialEq)]
 pub struct RunConfig {
@@ -256,6 +298,8 @@ pub struct RunConfig {
     pub optex: OptexParams,
     /// Multi-session serving knobs (`optex serve`).
     pub serve: ServeParams,
+    /// Multi-process scale-out knobs (`optex router`, ISSUE 10).
+    pub router: RouterParams,
     /// Extra gaussian gradient noise std for synthetic workloads (σ of
     /// Assump. 1; 0 = deterministic, paper Sec. 6.1).
     pub noise_std: f64,
@@ -286,6 +330,7 @@ impl Default for RunConfig {
             schedule: Schedule::Constant,
             optex: OptexParams::default(),
             serve: ServeParams::default(),
+            router: RouterParams::default(),
             noise_std: 0.0,
             synth_dim: 10_000,
             artifacts_dir: PathBuf::from("artifacts"),
@@ -460,6 +505,11 @@ impl RunConfig {
             "serve.max_conns" => self.serve.max_conns = need_usize()?,
             "serve.steppers" => self.serve.steppers = need_usize()?,
             "serve.metrics_addr" => self.serve.metrics_addr = need_str()?.to_string(),
+            "router.addr" => self.router.addr = need_str()?.to_string(),
+            "router.workers" => self.router.workers = need_usize()?,
+            "router.dir" => self.router.dir = PathBuf::from(need_str()?),
+            "router.worker_bin" => self.router.worker_bin = need_str()?.to_string(),
+            "router.result_cache" => self.router.result_cache = need_usize()?,
             _ => return Err(bad(key, "unknown config key")),
         }
         Ok(())
@@ -499,6 +549,15 @@ impl RunConfig {
         if self.serve.steppers == 0 {
             return Err(bad("serve.steppers", "must be >= 1"));
         }
+        if self.router.addr.is_empty() {
+            return Err(bad("router.addr", "must be host:port"));
+        }
+        if self.router.workers == 0 {
+            return Err(bad("router.workers", "must be >= 1"));
+        }
+        if self.router.result_cache == 0 {
+            return Err(bad("router.result_cache", "must be >= 1"));
+        }
         if !self.optex.eval_timeout_s.is_finite() || self.optex.eval_timeout_s < 0.0 {
             return Err(bad("optex.eval_timeout_s", "must be >= 0"));
         }
@@ -521,8 +580,9 @@ impl RunConfig {
     /// through the override grammar itself: non-default optimizer
     /// β/ε hyperparameters (the grammar only speaks `optimizer.name` +
     /// `optimizer.lr`, so wire-submitted sessions can never hold them)
-    /// and the `[serve]` table (server-level knobs — a session's driver
-    /// never reads them).
+    /// and the `[serve]` / `[router]` tables (server-level knobs — a
+    /// session's driver never reads them, and a migrated session must
+    /// not drag its source server's topology along).
     pub fn overrides_from_default(&self) -> Result<Vec<String>, ConfigError> {
         let d = RunConfig::default();
         let mut out = Vec::new();
@@ -769,6 +829,53 @@ mod tests {
         assert!(cfg.apply_override("serve.policy=lifo").is_err());
         cfg.apply_override("serve.max_sessions=2").unwrap();
         assert_eq!(cfg.serve.max_sessions, 2);
+    }
+
+    #[test]
+    fn router_table_parses_and_validates() {
+        let doc = r#"
+            workload = "ackley"
+
+            [router]
+            addr = "0.0.0.0:9100"
+            workers = 4
+            dir = "/tmp/router"
+            worker_bin = "/usr/local/bin/optex"
+            result_cache = 32
+        "#;
+        let cfg = RunConfig::from_toml(doc).unwrap();
+        assert_eq!(cfg.router.addr, "0.0.0.0:9100");
+        assert_eq!(cfg.router.workers, 4);
+        assert_eq!(cfg.router.dir, PathBuf::from("/tmp/router"));
+        assert_eq!(cfg.router.worker_bin, "/usr/local/bin/optex");
+        assert_eq!(cfg.router.result_cache, 32);
+
+        let d = RouterParams::default();
+        assert_eq!(d.workers, 2);
+        assert_eq!(d.result_cache, 256);
+        assert!(d.worker_bin.is_empty(), "default = the router's own binary");
+
+        let mut cfg = RunConfig::default();
+        assert!(cfg.apply_override("router.workers=0").is_err());
+        assert!(cfg.apply_override("router.result_cache=0").is_err());
+        assert!(cfg.apply_override("router.addr=\"\"").is_err());
+        cfg.apply_override("router.workers=3").unwrap();
+        assert_eq!(cfg.router.workers, 3);
+    }
+
+    #[test]
+    fn router_table_is_excluded_from_manifest_overrides() {
+        // like [serve]: server-level topology must not travel with a
+        // migrated session's config
+        let mut cfg = RunConfig::default();
+        cfg.apply_override("router.workers=5").unwrap();
+        cfg.apply_override("workload=\"sphere\"").unwrap();
+        let ovs = cfg.overrides_from_default().unwrap();
+        assert!(
+            ovs.iter().all(|kv| !kv.starts_with("router.")),
+            "router keys leaked into manifest overrides: {ovs:?}"
+        );
+        assert!(ovs.iter().any(|kv| kv.starts_with("workload=")));
     }
 
     #[test]

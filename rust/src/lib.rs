@@ -35,6 +35,7 @@ pub mod datasets;
 pub mod nn;
 pub mod obs;
 pub mod rl;
+pub mod router;
 pub mod runtime;
 pub mod scenarios;
 pub mod serve;

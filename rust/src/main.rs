@@ -4,6 +4,8 @@
 //!   run        one optimization run from a TOML config (+ --set overrides)
 //!   serve      multi-session serving: concurrent runs over one compute
 //!              pool, driven by a JSONL wire protocol (ISSUE 4)
+//!   router     multi-process scale-out: N serve workers behind one
+//!              endpoint, with live session migration (ISSUE 10)
 //!   fig <id>   regenerate a paper figure (2, 3, 4a, 4b, 6, 7–10, ...)
 //!   rl         DQN training on a classic-control env
 //!   artifacts  inspect the AOT artifact manifest
@@ -37,6 +39,11 @@ USAGE:
               [--adopt]               # adopt serve.ckpt_dir's session manifest
               [--faults SPEC]         # injected into sessions by (s,i,p) key
               [--set key=value ...]   # JSONL protocol; see serve/ docs
+  optex router [--config FILE] [--addr HOST:PORT] [--workers N]
+               [--dir DIR]            # router state + worker dirs (default results/router)
+               [--worker-bin PATH]    # optex binary for workers (default: self)
+               [--set key=value ...]  # base config forwarded to every worker;
+                                      # same wire protocol + `migrate`; docs/PROTOCOL.md
   optex fig  <2|3|4a|4b|6|6a..6d|7|8|9|10|kernels|estbound|nativehlo|all>
              [--seeds K] [--steps T] [--quick] [--out DIR] [--artifacts DIR]
   optex rl   --env <cartpole|mountaincar|acrobot> [--episodes E]
@@ -73,6 +80,7 @@ fn real_main() -> anyhow::Result<()> {
     match args.subcommand.as_deref().unwrap() {
         "run" => cmd_run(&args),
         "serve" => cmd_serve(&args),
+        "router" => cmd_router(&args),
         "fig" => cmd_fig(&args),
         "rl" => cmd_rl(&args),
         "artifacts" => cmd_artifacts(&args),
@@ -213,6 +221,33 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         cfg.apply_override("serve.adopt=true")?;
     }
     optex::serve::serve(&cfg)
+}
+
+/// Multi-process scale-out (ISSUE 10): spawn `router.workers` real
+/// `optex serve` child processes and front them with one endpoint that
+/// speaks the same protocol plus `migrate`. The loaded config is the
+/// base config of every worker.
+fn cmd_router(args: &Args) -> anyhow::Result<()> {
+    args.check_known_flags(&["help"])?;
+    let mut cfg = load_config(args)?;
+    if let Some(a) = args.opt("addr") {
+        cfg.apply_override(&format!("router.addr={a}"))?;
+    }
+    if let Some(n) = args.opt_usize("workers")? {
+        anyhow::ensure!(n >= 1, "--workers: must be >= 1");
+        cfg.apply_override(&format!("router.workers={n}"))?;
+    }
+    if let Some(d) = args.opt("dir") {
+        cfg.apply_override(&format!("router.dir={d}"))?;
+    }
+    if let Some(b) = args.opt("worker-bin") {
+        cfg.apply_override(&format!("router.worker_bin={b}"))?;
+    }
+    if let Some(k) = args.opt_usize("max-sessions")? {
+        // per-worker cap, forwarded with the rest of the base config
+        cfg.apply_override(&format!("serve.max_sessions={k}"))?;
+    }
+    optex::router::router(&cfg)
 }
 
 fn cmd_fig(args: &Args) -> anyhow::Result<()> {

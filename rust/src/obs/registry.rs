@@ -116,6 +116,12 @@ metric_enum! {
         SessionsQuarantined => "optex_sessions_quarantined",
         /// Open client connections.
         ConnsActive => "optex_conns_active",
+        /// Aggregate eval-time load: the sum over runnable sessions of
+        /// their per-iteration eval-time EMA, in microseconds. The
+        /// router's least-loaded placement signal (ISSUE 10) — read via
+        /// the `stats` verb, it estimates how much sequential eval work
+        /// this worker has queued.
+        EvalLoad => "optex_eval_load_us",
     }
 }
 

@@ -1,0 +1,237 @@
+//! Watch fan-in: one dedicated `watch` connection per worker, plus the
+//! pure line transforms between a worker's pushes and a client's
+//! subscription.
+//!
+//! The router subscribes itself to **every** session it places —
+//! `stream_every: 1`, `theta: true` — so it sees every iteration of
+//! everything, regardless of what clients asked for. Client-facing
+//! cadence (`stream_every`) and payload (`theta`) are then applied
+//! router-side by [`transform`]: a worker push fans out to each client
+//! subscription that wants it, with the client-facing id substituted
+//! for the worker-local one.
+//!
+//! Ordering: the worker's per-connection writer thread emits a
+//! session's pushes in iteration order (a serve-tier invariant), the
+//! fan-in reader forwards them in read order, and the router loop is
+//! single-threaded — so per-session order survives end to end. Pushes
+//! are re-rendered through `util::json`'s canonical writer (sorted
+//! keys, shortest-roundtrip floats); since the worker rendered them
+//! with the same writer, an unmodified field set round-trips
+//! byte-identically.
+//!
+//! The reader thread is also the router's failure detector: when the
+//! socket dies — worker killed, crashed, or shut down — it sends one
+//! terminal [`RouterMsg::WorkerDown`] and exits, which triggers the
+//! recovery path (re-import from the dead worker's on-disk manifest).
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::mpsc::Sender;
+
+use anyhow::{Context, Result};
+
+use super::RouterMsg;
+use crate::serve::protocol::Proto;
+use crate::util::json::Json;
+
+/// The write half of one worker's watch connection. The read half
+/// lives on the fan-in thread.
+pub struct WatchConn {
+    writer: TcpStream,
+}
+
+impl WatchConn {
+    /// Connect to `addr` and start the fan-in reader for worker
+    /// `index`, feeding `tx`.
+    pub fn spawn(index: usize, addr: SocketAddr, tx: Sender<RouterMsg>) -> Result<WatchConn> {
+        let stream = TcpStream::connect(addr)
+            .with_context(|| format!("worker {index} watch connect {addr}"))?;
+        let read_half = stream.try_clone()?;
+        std::thread::Builder::new()
+            .name(format!("optex-router-w{index}-fanin"))
+            .spawn(move || {
+                let mut reader = BufReader::new(read_half);
+                loop {
+                    let mut line = String::new();
+                    match reader.read_line(&mut line) {
+                        Ok(0) | Err(_) => break,
+                        Ok(_) => {
+                            let line = line.trim_end().to_string();
+                            if line.is_empty() {
+                                continue;
+                            }
+                            if tx.send(RouterMsg::Worker { index, line }).is_err() {
+                                return; // router gone; skip the Down
+                            }
+                        }
+                    }
+                }
+                let _ = tx.send(RouterMsg::WorkerDown { index });
+            })?;
+        Ok(WatchConn { writer: stream })
+    }
+
+    /// Auto-subscribe to worker-local session `wid` (every iteration,
+    /// θ included). The ack comes back through the fan-in thread and is
+    /// dropped by the router loop (no `event` field, no `trace` field).
+    pub fn subscribe(&mut self, wid: u64) -> Result<()> {
+        self.send_line(&format!(
+            "{{\"cmd\":\"watch\",\"id\":{wid},\"stream_every\":1,\"theta\":true}}"
+        ))
+    }
+
+    /// Send a `trace` probe for `wid`. Its response is the migration
+    /// drain *marker*: the worker's writer emits it strictly after
+    /// every push already queued on this connection, so once the router
+    /// sees a `trace`-carrying line from this worker, every pre-pause
+    /// push of the migrating session has been fanned out.
+    pub fn probe(&mut self, wid: u64) -> Result<()> {
+        self.send_line(&format!("{{\"cmd\":\"trace\",\"id\":{wid}}}"))
+    }
+
+    fn send_line(&mut self, line: &str) -> Result<()> {
+        self.writer
+            .write_all(line.as_bytes())
+            .and_then(|_| self.writer.write_all(b"\n"))
+            .and_then(|_| self.writer.flush())
+            .context("watch connection write")
+    }
+}
+
+/// One client `watch` subscription, as the router holds it.
+pub struct Sub {
+    /// The client connection's outbound line queue.
+    pub tx: Sender<String>,
+    /// Client-requested cadence (worker-side cadence is always 1).
+    pub every: u64,
+    /// Whether the terminal push keeps θ.
+    pub include_theta: bool,
+    /// Negotiated protocol of the subscribing connection (pushes are
+    /// version-independent today; carried so a v3 that changes push
+    /// shapes has the information where it needs it).
+    pub proto: Proto,
+}
+
+/// Transform one worker push for one client subscription: substitute
+/// the client-facing id, apply the cadence filter (iter events only —
+/// terminal pushes always go through), and strip θ the client did not
+/// ask for. Returns None when the cadence filter swallows the push.
+pub fn transform(push: &Json, client_id: u64, sub: &Sub) -> Option<String> {
+    let event = push.get("event").and_then(Json::as_str)?;
+    if event == "iter" {
+        let iter = push.get("iter").and_then(Json::as_usize)? as u64;
+        if iter % sub.every != 0 {
+            return None;
+        }
+    }
+    let mut m = push.as_obj()?.clone();
+    m.insert("id".to_string(), Json::Num(client_id as f64));
+    if !sub.include_theta {
+        m.remove("theta");
+    }
+    Some(Json::Obj(m).to_string())
+}
+
+/// Rebuild a `result` response from a cached terminal push: drop the
+/// `event` marker, substitute the client id, keep or strip θ. The
+/// cached push carried θ (the router subscribes `theta: true`), so
+/// both client choices are servable from the cache.
+pub fn cached_result(push: &Json, client_id: u64, include_theta: bool) -> Option<String> {
+    let mut m = push.as_obj()?.clone();
+    m.remove("event");
+    m.insert("id".to_string(), Json::Num(client_id as f64));
+    if !include_theta {
+        m.remove("theta");
+    }
+    Some(Json::Obj(m).to_string())
+}
+
+/// Rebuild a `status` response from a cached terminal push: the
+/// terminal push is the `result` shape, which is the `status` shape
+/// plus `final_loss`/`theta` — so stripping those (and the `event`
+/// marker) recovers `status` exactly.
+pub fn cached_status(push: &Json, client_id: u64) -> Option<String> {
+    let mut m = push.as_obj()?.clone();
+    m.remove("event");
+    m.remove("final_loss");
+    m.remove("theta");
+    m.insert("id".to_string(), Json::Num(client_id as f64));
+    Some(Json::Obj(m).to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+
+    fn sub(every: u64, include_theta: bool) -> (Sub, mpsc::Receiver<String>) {
+        let (tx, rx) = mpsc::channel();
+        (Sub { tx, every, include_theta, proto: Proto::V1 }, rx)
+    }
+
+    #[test]
+    fn iter_pushes_respect_the_client_cadence() {
+        let (s, _rx) = sub(10, false);
+        for iter in 1..=40u64 {
+            let push = Json::parse(&format!(
+                r#"{{"best_loss":1.5,"event":"iter","id":3,"iter":{iter},"loss":2.0,"ok":true,"state":"running"}}"#
+            ))
+            .unwrap();
+            let out = transform(&push, 7, &s);
+            if iter % 10 == 0 {
+                let line = out.expect("cadence hit");
+                let v = Json::parse(&line).unwrap();
+                assert_eq!(v.get("id").unwrap().as_usize(), Some(7), "client id substituted");
+                assert_eq!(v.get("iter").unwrap().as_usize(), Some(iter as usize));
+            } else {
+                assert!(out.is_none(), "iter {iter} must be filtered at every=10");
+            }
+        }
+    }
+
+    #[test]
+    fn terminal_pushes_always_pass_and_theta_is_stripped_on_request() {
+        let push = Json::parse(
+            r#"{"best_loss":0.5,"event":"result","final_loss":0.5,"id":2,"iters":40,"ok":true,"state":"done","stop_reason":"max_iters","theta":[0.25,-1.5]}"#,
+        )
+        .unwrap();
+        let (no_theta, _r1) = sub(1000, false);
+        let line = transform(&push, 9, &no_theta).expect("terminal beats cadence");
+        let v = Json::parse(&line).unwrap();
+        assert_eq!(v.get("id").unwrap().as_usize(), Some(9));
+        assert!(v.get("theta").is_none(), "unrequested theta must be stripped");
+        let (with_theta, _r2) = sub(1000, true);
+        let line = transform(&push, 9, &with_theta).unwrap();
+        let v = Json::parse(&line).unwrap();
+        assert_eq!(v.get("theta").unwrap().as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn unmodified_field_sets_round_trip_byte_identically() {
+        // the forwarding path is parse → substitute id → re-render;
+        // when the id happens to be unchanged and theta is kept, the
+        // bytes must be identical (canonical key order + shortest
+        // round-trip floats at both ends)
+        let raw = r#"{"best_loss":0.4375,"event":"iter","id":3,"iter":20,"loss":0.4375,"ok":true,"state":"running"}"#;
+        let push = Json::parse(raw).unwrap();
+        let (s, _rx) = sub(1, true);
+        assert_eq!(transform(&push, 3, &s).unwrap(), raw);
+    }
+
+    #[test]
+    fn cache_rebuilds_result_and_status_shapes() {
+        let push = Json::parse(
+            r#"{"best_loss":0.5,"event":"result","final_loss":0.5,"id":2,"iters":40,"nonfinite":0,"ok":true,"retries":0,"state":"done","stop_reason":"max_iters","suspended":false,"theta":[0.25]}"#,
+        )
+        .unwrap();
+        let r = Json::parse(&cached_result(&push, 11, true).unwrap()).unwrap();
+        assert!(r.get("event").is_none(), "responses never carry `event`");
+        assert_eq!(r.get("id").unwrap().as_usize(), Some(11));
+        assert!(r.get("theta").is_some());
+        let r = Json::parse(&cached_result(&push, 11, false).unwrap()).unwrap();
+        assert!(r.get("theta").is_none());
+        let s = Json::parse(&cached_status(&push, 11).unwrap()).unwrap();
+        assert!(s.get("final_loss").is_none() && s.get("theta").is_none());
+        assert_eq!(s.get("state").unwrap().as_str(), Some("done"));
+    }
+}

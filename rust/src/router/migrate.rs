@@ -1,0 +1,521 @@
+//! Live migration: moving a session between workers without the client
+//! noticing — and the parking lot for sessions caught homeless when a
+//! move cannot complete.
+//!
+//! ## The choreography
+//!
+//! ```text
+//! pause(src) → drain(src watch stream to a marker) → export(src)
+//!     → import(dst) → re-point route → re-subscribe → resume(dst)
+//! ```
+//!
+//! Each arrow reuses a verb that already exists for another reason:
+//! `pause` settles the in-flight quantum and suspends the ADMM state to
+//! a checkpoint, `export` hands over the manifest entry + checkpoint
+//! bytes, `import` adopts them — the identical path a restarted server
+//! takes with `--adopt`. Because adoption restores the suspended
+//! stepper state bit-for-bit, the migrated run's remaining iterations
+//! are **bit-identical** to never having moved (pinned by
+//! `router_integration.rs`).
+//!
+//! ## Why the drain step exists
+//!
+//! The source's `pause` ack arrives on the control connection, but its
+//! queued `watch` pushes travel a *different* socket with its own
+//! writer thread — the ack can overtake them. If the router re-pointed
+//! the route immediately, those late pre-pause pushes would find no
+//! route (the session's worker-local id has changed) and be dropped;
+//! worse, post-resume pushes from the destination could reach clients
+//! first, breaking the iteration-order guarantee. So after pausing, the
+//! router sends a `trace` probe *on the source's watch connection*: the
+//! worker's per-connection writer emits its response strictly after
+//! every already-queued push. The router then processes source pushes
+//! inline until it sees that marker (a `trace`-carrying, `event`-less
+//! line — subscribe acks carry `watch`, pushes carry `event`, so the
+//! marker is unambiguous), deferring everything else to the loop's
+//! `pending` queue. When the marker arrives, every pre-pause push has
+//! been fanned out, in order, and the route can be re-pointed safely.
+//!
+//! ## Parking
+//!
+//! When no worker can adopt an exported session (the move failed and
+//! the source refused it back, or recovery found every survivor at
+//! capacity), its blob — manifest entry, checkpoint bytes, and whether
+//! it was running — is spilled to `migrating_<id>.json` in the router
+//! dir. Parked sessions answer every verb with the stable `migrating`
+//! error code; an explicit `migrate` (or a router restart) retries the
+//! import. Parking loses nothing: the blob is exactly what `import`
+//! needs, held on disk instead of in a worker.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::mpsc::Sender;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use super::{Router, RouterMsg};
+use crate::serve::manifest;
+use crate::serve::protocol::{self, ErrCode, Proto};
+use crate::util::b64;
+use crate::util::json::Json;
+
+/// How long the drain waits for the marker. The probe is sent after
+/// `pause` settled the in-flight quantum, so the source's watch queue
+/// is finite and flushing — this bounds a hung worker, not real work.
+const DRAIN_TIMEOUT: Duration = Duration::from_secs(60);
+
+/// The spill file for a parked session.
+pub(crate) fn parked_path(dir: &Path, id: u64) -> PathBuf {
+    dir.join(format!("migrating_{id}.json"))
+}
+
+/// Find every parked-session blob in the router dir.
+pub(crate) fn scan_parked(dir: &Path) -> Result<BTreeMap<u64, PathBuf>> {
+    let mut parked = BTreeMap::new();
+    for entry in std::fs::read_dir(dir)
+        .with_context(|| format!("scanning router dir {}", dir.display()))?
+    {
+        let path = entry?.path();
+        let Some(name) = path.file_name().and_then(|n| n.to_str()) else { continue };
+        let Some(id) = name
+            .strip_prefix("migrating_")
+            .and_then(|r| r.strip_suffix(".json"))
+            .and_then(|r| r.parse::<u64>().ok())
+        else {
+            continue;
+        };
+        parked.insert(id, path);
+    }
+    Ok(parked)
+}
+
+/// Build the `import` request line that re-creates an exported session:
+/// the manifest entry verbatim plus the checkpoint bytes re-encoded.
+/// This is the one constructor for both migration legs (dst import,
+/// failed-move restore) and worker-death recovery.
+pub(crate) fn import_request_line(entry: &manifest::Entry, ckpt: Option<&[u8]>) -> String {
+    let mut m = BTreeMap::new();
+    m.insert("cmd".to_string(), Json::Str("import".into()));
+    m.insert("session".to_string(), manifest::entry_json(entry));
+    m.insert(
+        "ckpt".to_string(),
+        match ckpt {
+            Some(bytes) => Json::Str(b64::encode(bytes)),
+            None => Json::Null,
+        },
+    );
+    Json::Obj(m).to_string()
+}
+
+/// Spill a homeless session to its parking blob. `resume` records
+/// whether it should start running again once adopted.
+pub(crate) fn spill(
+    dir: &Path,
+    id: u64,
+    entry: &manifest::Entry,
+    ckpt: Option<&[u8]>,
+    resume: bool,
+) -> Result<PathBuf> {
+    let mut m = BTreeMap::new();
+    m.insert("session".to_string(), manifest::entry_json(entry));
+    m.insert(
+        "ckpt".to_string(),
+        match ckpt {
+            Some(bytes) => Json::Str(b64::encode(bytes)),
+            None => Json::Null,
+        },
+    );
+    m.insert("resume".to_string(), Json::Bool(resume));
+    let path = parked_path(dir, id);
+    let tmp = path.with_extension("json.tmp");
+    std::fs::write(&tmp, Json::Obj(m).to_string())
+        .with_context(|| format!("spilling parked session to {}", tmp.display()))?;
+    std::fs::rename(&tmp, &path)
+        .with_context(|| format!("publishing parked session {}", path.display()))?;
+    Ok(path)
+}
+
+/// Read a parking blob back: (entry, checkpoint bytes, resume-after).
+pub(crate) fn load_blob(path: &Path) -> Result<(manifest::Entry, Option<Vec<u8>>, bool)> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading parked session {}", path.display()))?;
+    let v = Json::parse(&text).map_err(|e| anyhow::anyhow!("parked blob: {e}"))?;
+    let entry = manifest::entry_from_json(v.get("session").context("blob session")?)?;
+    let ckpt = match v.get("ckpt") {
+        Some(Json::Str(s)) => {
+            Some(b64::decode(s).map_err(|e| anyhow::anyhow!("blob ckpt: {e}"))?)
+        }
+        _ => None,
+    };
+    let resume = v.get("resume").and_then(Json::as_bool).unwrap_or(false);
+    Ok((entry, ckpt, resume))
+}
+
+impl Router {
+    /// The `migrate` verb: move session `id` to worker `to` (or the
+    /// least-loaded other live worker). Replies with the migrate ack on
+    /// success; on failure the session is restored where it was, or
+    /// parked as a last resort.
+    pub(crate) fn handle_migrate(
+        &mut self,
+        id: u64,
+        to: Option<usize>,
+        reply: &Sender<String>,
+        proto: Proto,
+    ) {
+        // a parked session: `migrate` is the explicit retry-the-import
+        if self.parked.contains_key(&id) {
+            let line = match self.try_unpark(id, to) {
+                Ok((w, resumed)) => {
+                    protocol::migrate_line(id, w, if resumed { "running" } else { "paused" })
+                }
+                Err(e) => protocol::error_line_for(
+                    proto,
+                    ErrCode::Migrating,
+                    &format!("session {id} stays parked: {e:#}"),
+                ),
+            };
+            let _ = reply.send(line);
+            return;
+        }
+        let Some(route) = self.table.get(id) else {
+            let _ = reply.send(super::unknown_id(proto, id));
+            return;
+        };
+        let src = route.worker;
+        let target = match to {
+            Some(t) if t >= self.workers.len() => {
+                let _ = reply.send(protocol::error_line_for(
+                    proto,
+                    ErrCode::BadRequest,
+                    &format!(
+                        "no such worker {t} (this router runs {})",
+                        self.workers.len()
+                    ),
+                ));
+                return;
+            }
+            Some(t) if !self.workers[t].alive => {
+                let _ = reply.send(protocol::error_line_for(
+                    proto,
+                    ErrCode::BadRequest,
+                    &format!("worker {t} is down"),
+                ));
+                return;
+            }
+            Some(t) if t == src => {
+                let _ = reply.send(protocol::error_line_for(
+                    proto,
+                    ErrCode::BadRequest,
+                    &format!("session {id} already lives on worker {t}"),
+                ));
+                return;
+            }
+            Some(t) => t,
+            None => {
+                // least-loaded live worker that is not the source
+                let Some(t) = self
+                    .placement_candidates(id)
+                    .into_iter()
+                    .find(|&w| w != src && self.workers[w].alive)
+                else {
+                    let _ = reply.send(protocol::error_line_for(
+                        proto,
+                        ErrCode::BadState,
+                        "no other live worker to migrate to",
+                    ));
+                    return;
+                };
+                t
+            }
+        };
+        // lifecycle pre-check: only live sessions move
+        let state = match self.workers[src].rpc(&format!(
+            "{{\"cmd\":\"status\",\"id\":{}}}",
+            route.wid
+        )) {
+            Ok(v) => v.get("state").and_then(Json::as_str).unwrap_or("").to_string(),
+            Err(_) => {
+                self.on_worker_down(src);
+                let _ = reply.send(protocol::error_line_for(
+                    proto,
+                    ErrCode::Internal,
+                    &format!(
+                        "worker {src} died before migrating session {id}; \
+                         recovery has re-homed its sessions"
+                    ),
+                ));
+                return;
+            }
+        };
+        if !matches!(state.as_str(), "pending" | "running" | "paused") {
+            let _ = reply.send(protocol::error_line_for(
+                proto,
+                ErrCode::BadState,
+                &format!("session {id} is {state}; only live sessions migrate"),
+            ));
+            return;
+        }
+        let was_running = state != "paused";
+        if was_running {
+            if let Err(e) = self
+                .workers[src]
+                .rpc(&format!("{{\"cmd\":\"pause\",\"id\":{}}}", route.wid))
+            {
+                if !self.workers[src].alive {
+                    self.on_worker_down(src);
+                }
+                let _ = reply.send(protocol::error_line_for(
+                    proto,
+                    ErrCode::Internal,
+                    &format!("pausing session {id} for migration: {e:#}"),
+                ));
+                return;
+            }
+        }
+        // fan out every pre-pause push before touching the route
+        if let Err(e) = self.drain_source(src, route.wid) {
+            if self.workers[src].alive && was_running {
+                let _ = self
+                    .workers[src]
+                    .rpc(&format!("{{\"cmd\":\"resume\",\"id\":{}}}", route.wid));
+            } else if !self.workers[src].alive {
+                self.on_worker_down(src);
+            }
+            let _ = reply.send(protocol::error_line_for(
+                proto,
+                ErrCode::Internal,
+                &format!("draining session {id}'s stream for migration: {e:#}"),
+            ));
+            return;
+        }
+        // export: the session leaves the source here
+        let exported = self
+            .workers[src]
+            .rpc(&format!("{{\"cmd\":\"export\",\"id\":{}}}", route.wid))
+            .and_then(|v| {
+                let entry =
+                    manifest::entry_from_json(v.get("session").context("export session")?)?;
+                let ckpt = match v.get("ckpt") {
+                    Some(Json::Str(s)) => Some(
+                        b64::decode(s).map_err(|e| anyhow::anyhow!("export ckpt: {e}"))?,
+                    ),
+                    _ => None,
+                };
+                Ok((entry, ckpt))
+            });
+        let (entry, ckpt) = match exported {
+            Ok(x) => x,
+            Err(e) => {
+                if !self.workers[src].alive {
+                    self.on_worker_down(src);
+                } else if was_running {
+                    let _ = self
+                        .workers[src]
+                        .rpc(&format!("{{\"cmd\":\"resume\",\"id\":{}}}", route.wid));
+                }
+                let _ = reply.send(protocol::error_line_for(
+                    proto,
+                    ErrCode::Internal,
+                    &format!("exporting session {id} for migration: {e:#}"),
+                ));
+                return;
+            }
+        };
+        // import into the destination; on failure fall back to ANY home
+        // (source included) and, failing that, park
+        let line = import_request_line(&entry, ckpt.as_deref());
+        let adopted = self.workers[target].rpc(&line).ok().and_then(|v| {
+            v.get("id").and_then(Json::as_usize).map(|x| x as u64)
+        });
+        match adopted {
+            Some(wid) => {
+                if let Err(e) = self.table.set(id, target, wid) {
+                    eprintln!("router: persisting migrated route {id}: {e:#}");
+                }
+                if let Some(Some(wc)) = self.watch.get_mut(target) {
+                    let _ = wc.subscribe(wid);
+                }
+                let mut state = "paused";
+                if was_running
+                    && self
+                        .workers[target]
+                        .rpc(&format!("{{\"cmd\":\"resume\",\"id\":{wid}}}"))
+                        .is_ok()
+                {
+                    state = "running";
+                }
+                let _ = reply.send(protocol::migrate_line(id, target, state));
+            }
+            None => {
+                if !self.workers[target].alive {
+                    self.on_worker_down(target);
+                }
+                eprintln!(
+                    "router: worker {target} refused session {id}; restoring"
+                );
+                match self.rehome(id, &entry, ckpt.as_deref(), was_running) {
+                    Ok(()) => {
+                        let r = self.table.get(id).expect("rehome set the route");
+                        let state = if was_running { "running" } else { "paused" };
+                        let _ = reply.send(protocol::migrate_line(id, r.worker, state));
+                    }
+                    Err(e) => {
+                        let _ = reply.send(protocol::error_line_for(
+                            proto,
+                            ErrCode::Migrating,
+                            &format!(
+                                "migration of session {id} failed and no worker \
+                                 could take it back ({e:#}); parked"
+                            ),
+                        ));
+                    }
+                }
+            }
+        }
+    }
+
+    /// Retry the import of a parked session. Returns its new home and
+    /// whether it was resumed.
+    pub(crate) fn try_unpark(&mut self, id: u64, to: Option<usize>) -> Result<(usize, bool)> {
+        let path = self
+            .parked
+            .get(&id)
+            .with_context(|| format!("session {id} is not parked"))?
+            .clone();
+        let (entry, ckpt, resume) = load_blob(&path)?;
+        let candidates: Vec<usize> = match to {
+            Some(t) => {
+                if t >= self.workers.len() {
+                    bail!("no such worker {t}");
+                }
+                vec![t]
+            }
+            None => self.placement_candidates(id),
+        };
+        let line = import_request_line(&entry, ckpt.as_deref());
+        for w in candidates {
+            if !self.workers[w].alive {
+                continue;
+            }
+            let Ok(v) = self.workers[w].rpc(&line) else { continue };
+            let Some(wid) = v.get("id").and_then(Json::as_usize).map(|x| x as u64) else {
+                continue;
+            };
+            if self.table.get(id).is_some() {
+                self.table.set(id, w, wid)?;
+            } else {
+                self.table.restore(id, w, wid)?;
+            }
+            if let Some(Some(wc)) = self.watch.get_mut(w) {
+                let _ = wc.subscribe(wid);
+            }
+            let resumed = resume
+                && self
+                    .workers[w]
+                    .rpc(&format!("{{\"cmd\":\"resume\",\"id\":{wid}}}"))
+                    .is_ok();
+            self.parked.remove(&id);
+            let _ = std::fs::remove_file(&path);
+            return Ok((w, resumed));
+        }
+        bail!("no live worker could adopt session {id}")
+    }
+
+    /// Process source-worker fan-in lines until the drain marker,
+    /// deferring everything else to the loop's `pending` queue. See the
+    /// module doc for why this exists and why the marker is total-order
+    /// correct.
+    fn drain_source(&mut self, src: usize, wid: u64) -> Result<()> {
+        {
+            let Some(Some(wc)) = self.watch.get_mut(src) else {
+                bail!("no watch connection to worker {src}");
+            };
+            wc.probe(wid)?;
+        }
+        loop {
+            let msg = self
+                .rx
+                .recv_timeout(DRAIN_TIMEOUT)
+                .context("timed out draining the source worker's stream")?;
+            match msg {
+                RouterMsg::Worker { index, line } if index == src => {
+                    if let Ok(v) = Json::parse(&line) {
+                        if v.get("event").is_none() && v.get("trace").is_some() {
+                            return Ok(()); // the marker; consumed
+                        }
+                    }
+                    // a real pre-pause push: fan it out NOW, while the
+                    // route still maps (worker-local ids change on
+                    // import; a deferred push would find no route)
+                    self.on_worker_line(src, &line);
+                }
+                RouterMsg::WorkerDown { index } if index == src => {
+                    self.pending.push_back(RouterMsg::WorkerDown { index });
+                    bail!("worker {src} died mid-drain");
+                }
+                other => self.pending.push_back(other),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::session::Budget;
+
+    fn entry() -> manifest::Entry {
+        manifest::Entry {
+            id: 3,
+            state: "paused".into(),
+            iters: 17,
+            ckpt: Some("session_3.ckpt".into()),
+            budget: Budget::default(),
+            overrides: vec!["seed=9".into(), "workload=\"rosenbrock\"".into()],
+        }
+    }
+
+    #[test]
+    fn import_line_is_a_valid_import_request() {
+        let line = import_request_line(&entry(), Some(&[0, 1, 2, 255]));
+        let v = Json::parse(&line).unwrap();
+        assert_eq!(v.get("cmd").unwrap().as_str(), Some("import"));
+        let back = manifest::entry_from_json(v.get("session").unwrap()).unwrap();
+        assert_eq!(back, entry());
+        let ckpt = v.get("ckpt").unwrap().as_str().unwrap();
+        assert_eq!(b64::decode(ckpt).unwrap(), vec![0, 1, 2, 255]);
+        // and it round-trips through the real request parser
+        assert!(protocol::parse_request(&line).is_ok());
+        // ckpt-less sessions import with an explicit null
+        let line = import_request_line(&entry(), None);
+        let v = Json::parse(&line).unwrap();
+        assert!(matches!(v.get("ckpt"), Some(Json::Null)));
+        assert!(protocol::parse_request(&line).is_ok());
+    }
+
+    #[test]
+    fn parked_blobs_round_trip_and_scan() {
+        let dir = std::env::temp_dir()
+            .join(format!("optex_park_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = spill(&dir, 7, &entry(), Some(&[9, 8, 7]), true).unwrap();
+        assert_eq!(p, parked_path(&dir, 7));
+        let (e, ckpt, resume) = load_blob(&p).unwrap();
+        assert_eq!(e, entry());
+        assert_eq!(ckpt.as_deref(), Some(&[9u8, 8, 7][..]));
+        assert!(resume);
+        // ckpt-less, stay-paused variant
+        spill(&dir, 12, &entry(), None, false).unwrap();
+        let (_, ckpt, resume) = load_blob(&parked_path(&dir, 12)).unwrap();
+        assert!(ckpt.is_none() && !resume);
+        // the scanner finds exactly the blobs, keyed by id
+        std::fs::write(dir.join("unrelated.json"), "{}").unwrap();
+        std::fs::write(dir.join("migrating_x.json"), "{}").unwrap(); // bad id
+        let parked = scan_parked(&dir).unwrap();
+        assert_eq!(parked.keys().copied().collect::<Vec<_>>(), vec![7, 12]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,1118 @@
+//! The router tier (ISSUE 10): multi-process scale-out with live
+//! session migration, fronted by the same versioned wire protocol the
+//! workers speak.
+//!
+//! `optex router` spawns `router.workers` real `optex serve` child
+//! processes on ephemeral loopback ports and presents them as ONE
+//! server: clients connect to `router.addr`, speak the ordinary JSONL
+//! protocol (v1 or v2 — the router negotiates `hello` exactly like a
+//! worker), and never learn that their sessions live in different
+//! processes. One grammar, two tiers.
+//!
+//! ## What the router adds over a single worker
+//!
+//! * **Placement** ([`placement`]) — `submit` goes to the live worker
+//!   with the least queued eval work (the `optex_eval_load_us` gauge
+//!   each worker exposes via `stats`), falling back to a deterministic
+//!   consistent-hash ring when loads are unknown or tied.
+//! * **Id virtualization** ([`table`]) — clients see router-allocated
+//!   session ids; `routes.jsonl` durably maps them to
+//!   `(worker, worker-local id)` pairs. Requests are forwarded with the
+//!   id rewritten down, responses with it rewritten back; everything
+//!   else in the line is forwarded byte-for-byte (both sides render
+//!   through `util::json`'s canonical writer, so an unmodified field
+//!   round-trips exactly).
+//! * **Watch fan-in** ([`fanin`]) — the router auto-subscribes to every
+//!   session it places (`stream_every: 1`, `theta: true`) over one
+//!   dedicated watch connection per worker, and re-fans pushes out to
+//!   client subscriptions at each client's own cadence/payload.
+//!   Per-session push order is preserved end to end (worker writer →
+//!   fan-in reader → single-threaded router loop).
+//! * **Result retention** — terminal pushes are cached
+//!   (`router.result_cache` most recent finishes, FIFO eviction), so
+//!   `result`/`status` of a finished session survive the worker that
+//!   ran it. This closes the serve tier's standing leftover: finished
+//!   sessions previously lived only in one server's memory.
+//! * **Live migration** ([`migrate`]) — `migrate` moves a session
+//!   between workers via `pause → export → import → resume`,
+//!   bit-identical to never having moved (the export payload is the
+//!   manifest entry + suspend checkpoint, the exact bytes `--adopt`
+//!   restores from). Client watch streams continue across the move in
+//!   iteration order: the router drains the source's pending pushes to
+//!   a marker before re-subscribing on the destination.
+//! * **Worker-death recovery** — each worker's `serve.ckpt_dir` is
+//!   `worker_<i>/` under `router.dir`, so when a worker dies (the
+//!   fan-in socket EOFs, or a control RPC fails), the router reads the
+//!   dead worker's `manifest.jsonl` + checkpoints straight off disk and
+//!   re-imports every recoverable session into survivors — resuming the
+//!   ones that were running. Suspended sessions recover bit-identically;
+//!   live ones re-run from their seeds (the adoption semantics,
+//!   applied across processes).
+//!
+//! When an import finds no room (all survivors at capacity — or none
+//! alive), the session is **parked**: its export blob is spilled to
+//! `router.dir/migrating_<id>.json`, verbs against it answer the stable
+//! `migrating` error code, and a later `migrate` (or a router restart)
+//! re-imports it.
+//!
+//! ## Threading model
+//!
+//! The same shape as the serve tier, one level up: an accept thread and
+//! per-client reader/writer threads feed a single router loop through
+//! an mpsc queue; per-worker fan-in readers feed the same queue. ALL
+//! routing state — the table, subscriptions, the cache, worker health —
+//! is owned by the loop thread; no locks. The `hello` handshake is
+//! resolved on the client's reader thread exactly as in
+//! [`crate::serve::server`].
+//!
+//! Worker RPCs happen inline on the loop thread. A slow worker
+//! therefore back-pressures the router — deliberate: the router's job
+//! is coordination, not throughput isolation, and inline RPC keeps the
+//! "one command at a time mutates routing state" invariant that makes
+//! migration/recovery reasoning tractable.
+
+pub mod fanin;
+pub mod migrate;
+pub mod placement;
+pub mod table;
+pub mod worker;
+
+use std::collections::{BTreeMap, VecDeque};
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::config::RunConfig;
+use crate::serve::manifest;
+use crate::serve::protocol::{self, ErrCode, Proto, Request};
+use crate::util::json::Json;
+
+use fanin::{Sub, WatchConn};
+use placement::Ring;
+use table::RouteTable;
+use worker::Worker;
+
+/// Same per-line cap as the serve tier (the router forwards lines; a
+/// line a worker would reject is rejected here first).
+const MAX_LINE_BYTES: u64 = 1 << 20;
+
+/// Everything that reaches the router loop.
+pub(crate) enum RouterMsg {
+    /// From a client connection's reader thread.
+    Client { msg: ClientMsg, reply: Sender<String>, proto: Proto },
+    /// One line from a worker's watch connection (fan-in).
+    Worker { index: usize, line: String },
+    /// A worker's watch connection died — the failure-detection signal.
+    WorkerDown { index: usize },
+}
+
+/// The client-connection half of [`RouterMsg`] (mirrors the serve
+/// tier's `ConnMsg`).
+pub(crate) enum ClientMsg {
+    /// A request line: the parse result plus the raw line, which is
+    /// what actually gets forwarded (id rewritten) to a worker.
+    Request { parsed: Result<Request, String>, raw: String },
+    /// A line the reader already rendered (the `hello` reply).
+    Reply(String),
+    /// Client hung up: drop its watch subscriptions.
+    Disconnected,
+}
+
+/// Terminal-push cache: the last `cap` finished sessions' result
+/// events, FIFO-evicted. A cached entry outlives its worker — this is
+/// the retention policy for finished results at the router tier.
+struct ResultCache {
+    cap: usize,
+    map: BTreeMap<u64, Json>,
+    order: VecDeque<u64>,
+}
+
+impl ResultCache {
+    fn new(cap: usize) -> ResultCache {
+        ResultCache { cap, map: BTreeMap::new(), order: VecDeque::new() }
+    }
+
+    fn insert(&mut self, id: u64, push: Json) {
+        if self.map.insert(id, push).is_none() {
+            self.order.push_back(id);
+            if self.order.len() > self.cap {
+                if let Some(old) = self.order.pop_front() {
+                    self.map.remove(&old);
+                }
+            }
+        }
+    }
+
+    fn get(&self, id: u64) -> Option<&Json> {
+        self.map.get(&id)
+    }
+
+    fn iter(&self) -> impl Iterator<Item = (u64, &Json)> {
+        self.map.iter().map(|(&id, v)| (id, v))
+    }
+
+    fn len(&self) -> usize {
+        self.map.len()
+    }
+}
+
+/// The router: workers, routing state, and the client listener.
+pub struct Router {
+    cfg: RunConfig,
+    dir: PathBuf,
+    listener: TcpListener,
+    rx: Receiver<RouterMsg>,
+    /// Messages deferred while a migration drained its source worker —
+    /// replayed (in order) before anything new is received.
+    pending: VecDeque<RouterMsg>,
+    pub(crate) workers: Vec<Worker>,
+    pub(crate) watch: Vec<Option<WatchConn>>,
+    /// Workers whose death has already been processed (recovery is
+    /// triggered from two sides — fan-in EOF and control-RPC failure —
+    /// and must run once).
+    downed: Vec<bool>,
+    ring: Ring,
+    pub(crate) table: RouteTable,
+    /// Client watch subscriptions, by client-facing session id.
+    subs: BTreeMap<u64, Vec<Sub>>,
+    cache: ResultCache,
+    /// Parked (mid-migration, homeless) sessions: id → spilled blob.
+    pub(crate) parked: BTreeMap<u64, PathBuf>,
+    shutdown: Arc<AtomicBool>,
+}
+
+impl Router {
+    /// Spawn the worker fleet, restore routing state from `router.dir`,
+    /// bind `router.addr` and start accepting clients.
+    pub fn bind(cfg: &RunConfig) -> Result<Router> {
+        let dir = PathBuf::from(&cfg.router.dir);
+        std::fs::create_dir_all(&dir)
+            .with_context(|| format!("creating router.dir {:?}", cfg.router.dir))?;
+        let table = RouteTable::load_or_new(&dir)?;
+        let (tx, rx) = mpsc::channel::<RouterMsg>();
+        let mut workers = Vec::new();
+        let mut watch = Vec::new();
+        for i in 0..cfg.router.workers {
+            // a worker dir holding a manifest is a previous fleet's
+            // state — adopt it (the sessions re-register Paused under
+            // their old worker-local ids, which routes.jsonl still maps)
+            let adopt = manifest::manifest_path(&worker::worker_dir(&dir, i)).exists();
+            let w = Worker::spawn(i, cfg, adopt)?;
+            watch.push(Some(WatchConn::spawn(i, w.addr, tx.clone())?));
+            workers.push(w);
+        }
+        // re-subscribe every adopted route so their streams flow again
+        for (_, route) in table.iter() {
+            if let Some(Some(wc)) = watch.get_mut(route.worker) {
+                let _ = wc.subscribe(route.wid);
+            }
+        }
+        let parked = migrate::scan_parked(&dir)?;
+        let listener = TcpListener::bind(&cfg.router.addr)
+            .with_context(|| format!("binding router.addr {:?}", cfg.router.addr))?;
+        let shutdown = Arc::new(AtomicBool::new(false));
+        {
+            let listener = listener.try_clone()?;
+            let shutdown = Arc::clone(&shutdown);
+            let max_conns = cfg.serve.max_conns;
+            std::thread::Builder::new()
+                .name("optex-router-accept".into())
+                .spawn(move || accept_loop(listener, tx, shutdown, max_conns))?;
+        }
+        let mut r = Router {
+            cfg: cfg.clone(),
+            dir,
+            listener,
+            rx,
+            pending: VecDeque::new(),
+            ring: Ring::new(cfg.router.workers),
+            workers,
+            watch,
+            downed: vec![false; cfg.router.workers],
+            table,
+            subs: BTreeMap::new(),
+            cache: ResultCache::new(cfg.router.result_cache),
+            parked,
+            shutdown,
+        };
+        // parked blobs from a previous run: try to find them a home now
+        let ids: Vec<u64> = r.parked.keys().copied().collect();
+        for id in ids {
+            if let Err(e) = r.try_unpark(id, None) {
+                eprintln!("router: session {id} stays parked: {e:#}");
+            }
+        }
+        Ok(r)
+    }
+
+    /// The bound client-facing address.
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    /// Route until `shutdown`.
+    pub fn run(mut self) -> Result<()> {
+        loop {
+            let msg = match self.pending.pop_front() {
+                Some(m) => m,
+                None => match self.rx.recv() {
+                    Ok(m) => m,
+                    Err(mpsc::RecvError) => break,
+                },
+            };
+            if self.handle(msg) {
+                break;
+            }
+        }
+        self.stop()
+    }
+
+    fn stop(&mut self) -> Result<()> {
+        for w in &mut self.workers {
+            if w.alive {
+                w.shutdown();
+            }
+        }
+        self.shutdown.store(true, Ordering::SeqCst);
+        if let Ok(addr) = self.listener.local_addr() {
+            let _ = TcpStream::connect(addr); // wake the accept thread
+        }
+        Ok(())
+    }
+
+    /// Process one message; returns true on shutdown.
+    fn handle(&mut self, msg: RouterMsg) -> bool {
+        match msg {
+            RouterMsg::Client { msg: ClientMsg::Reply(line), reply, .. } => {
+                let _ = reply.send(line);
+                false
+            }
+            RouterMsg::Client { msg: ClientMsg::Disconnected, reply, .. } => {
+                for subs in self.subs.values_mut() {
+                    subs.retain(|s| !s.tx.same_channel(&reply));
+                }
+                self.subs.retain(|_, subs| !subs.is_empty());
+                false
+            }
+            RouterMsg::Client {
+                msg: ClientMsg::Request { parsed: Err(e), .. },
+                reply,
+                proto,
+            } => {
+                let _ =
+                    reply.send(protocol::error_line_for(proto, ErrCode::BadRequest, &e));
+                false
+            }
+            RouterMsg::Client {
+                msg: ClientMsg::Request { parsed: Ok(req), raw },
+                reply,
+                proto,
+            } => self.dispatch(req, raw, reply, proto),
+            RouterMsg::Worker { index, line } => {
+                self.on_worker_line(index, &line);
+                false
+            }
+            RouterMsg::WorkerDown { index } => {
+                self.on_worker_down(index);
+                false
+            }
+        }
+    }
+
+    /// Apply one parsed client request. Replies are best-effort (a
+    /// vanished client must not stall routing).
+    fn dispatch(
+        &mut self,
+        req: Request,
+        raw: String,
+        reply: Sender<String>,
+        proto: Proto,
+    ) -> bool {
+        match req {
+            Request::Shutdown => {
+                let _ = reply.send(protocol::shutdown_line());
+                return true;
+            }
+            // handled on the reader thread; defensive arm only
+            Request::Hello { .. } => {
+                let _ = reply.send(protocol::hello_line());
+            }
+            Request::Submit { .. } | Request::Import { .. } => {
+                self.handle_placed(&raw, &reply, proto);
+            }
+            Request::Status { id: None } => self.handle_status_all(&reply),
+            Request::Status { id: Some(id) } => {
+                if let Some(line) = self.parked_error(id, proto) {
+                    let _ = reply.send(line);
+                } else if self.table.get(id).is_none() {
+                    let line = match self.cache.get(id) {
+                        Some(push) => fanin::cached_status(push, id)
+                            .unwrap_or_else(|| unknown_id(proto, id)),
+                        None => unknown_id(proto, id),
+                    };
+                    let _ = reply.send(line);
+                } else {
+                    self.forward_id_verb(id, &raw, &reply, proto);
+                }
+            }
+            Request::Result { id, include_theta } => {
+                if let Some(line) = self.parked_error(id, proto) {
+                    let _ = reply.send(line);
+                } else if let Some(push) = self.cache.get(id) {
+                    // finished sessions are served from the retention
+                    // cache — this works even after their worker died
+                    let line = fanin::cached_result(push, id, include_theta)
+                        .unwrap_or_else(|| unknown_id(proto, id));
+                    let _ = reply.send(line);
+                } else {
+                    self.forward_id_verb(id, &raw, &reply, proto);
+                }
+            }
+            Request::Watch { id, stream_every, include_theta } => {
+                self.handle_watch(id, stream_every, include_theta, reply, proto);
+            }
+            Request::Pause { id }
+            | Request::Resume { id }
+            | Request::Cancel { id }
+            | Request::Trace { id } => {
+                if let Some(line) = self.parked_error(id, proto) {
+                    let _ = reply.send(line);
+                } else {
+                    self.forward_id_verb(id, &raw, &reply, proto);
+                }
+            }
+            Request::Export { id } => {
+                if let Some(line) = self.parked_error(id, proto) {
+                    let _ = reply.send(line);
+                } else {
+                    self.forward_id_verb(id, &raw, &reply, proto);
+                }
+            }
+            Request::Migrate { id, to } => self.handle_migrate(id, to, &reply, proto),
+            Request::Stats => {
+                let line = self.router_stats_line();
+                let _ = reply.send(line);
+            }
+        }
+        false
+    }
+
+    /// The `migrating` error line, if `id` is parked.
+    fn parked_error(&self, id: u64, proto: Proto) -> Option<String> {
+        self.parked.get(&id)?;
+        Some(protocol::error_line_for(
+            proto,
+            ErrCode::Migrating,
+            &format!(
+                "session {id} is parked mid-migration (no worker could adopt it); \
+                 `migrate` it once capacity frees up"
+            ),
+        ))
+    }
+
+    /// Order live workers for placement: the chooser's pick first, then
+    /// the remaining live workers as capacity fallbacks.
+    fn placement_candidates(&mut self, key: u64) -> Vec<usize> {
+        let alive: Vec<bool> = self.workers.iter().map(|w| w.alive).collect();
+        if !alive.iter().any(|&a| a) {
+            return Vec::new();
+        }
+        let loads: Vec<Option<u64>> = self
+            .workers
+            .iter_mut()
+            .map(|w| if w.alive { w.eval_load() } else { None })
+            .collect();
+        let first = placement::choose(&self.ring, key, &alive, &loads);
+        let mut order = vec![first];
+        order.extend((0..alive.len()).filter(|&w| alive[w] && w != first));
+        order
+    }
+
+    /// Place a `submit` or client-driven `import`: forward the raw line
+    /// verbatim to the chosen worker, allocate the client-facing id,
+    /// auto-subscribe the fan-in, and reply with the id rewritten.
+    fn handle_placed(&mut self, raw: &str, reply: &Sender<String>, proto: Proto) {
+        let key = self.table.next_id();
+        let mut last_err: Option<String> = None;
+        for w in self.placement_candidates(key) {
+            if !self.workers[w].alive {
+                continue; // died earlier in this loop
+            }
+            let resp = match self.workers[w].rpc_raw(raw) {
+                Ok(r) => r,
+                Err(_) => {
+                    self.on_worker_down(w);
+                    continue;
+                }
+            };
+            let Ok(v) = Json::parse(&resp) else {
+                last_err = Some(protocol::error_line_for(
+                    proto,
+                    ErrCode::Internal,
+                    &format!("worker {w} returned an unparseable response"),
+                ));
+                continue;
+            };
+            if v.get("ok").and_then(Json::as_bool) != Some(true) {
+                // semantic refusal (at capacity, bad override): remember
+                // it, try the next candidate — router capacity is the
+                // sum of worker capacities
+                last_err = Some(relay_error(proto, &v));
+                continue;
+            }
+            let Some(wid) = v.get("id").and_then(Json::as_usize).map(|x| x as u64) else {
+                last_err = Some(protocol::error_line_for(
+                    proto,
+                    ErrCode::Internal,
+                    &format!("worker {w} admission response carried no id"),
+                ));
+                continue;
+            };
+            let client_id = match self.table.insert(w, wid) {
+                Ok(id) => id,
+                Err(e) => {
+                    let _ = reply.send(protocol::error_line_for(
+                        proto,
+                        ErrCode::Internal,
+                        &format!("persisting route: {e:#}"),
+                    ));
+                    return;
+                }
+            };
+            if let Some(Some(wc)) = self.watch.get_mut(w) {
+                let _ = wc.subscribe(wid);
+            }
+            let _ = reply.send(rewrite_id(&v, client_id));
+            return;
+        }
+        let _ = reply.send(last_err.unwrap_or_else(|| {
+            protocol::error_line_for(proto, ErrCode::Internal, "no live workers")
+        }));
+    }
+
+    /// Forward a single-session verb along its route, rewriting the id
+    /// down to the worker and back up in the response. Retries once
+    /// after a worker death (recovery may have re-homed the session).
+    fn forward_id_verb(
+        &mut self,
+        id: u64,
+        raw: &str,
+        reply: &Sender<String>,
+        proto: Proto,
+    ) {
+        for _attempt in 0..2 {
+            let Some(route) = self.table.get(id) else {
+                let _ = reply.send(unknown_id(proto, id));
+                return;
+            };
+            if !self.workers[route.worker].alive {
+                self.on_worker_down(route.worker);
+                continue;
+            }
+            let Ok(down) = rewrite_raw_id(raw, route.wid) else {
+                let _ = reply.send(protocol::error_line_for(
+                    proto,
+                    ErrCode::Internal,
+                    "request re-render failed",
+                ));
+                return;
+            };
+            let resp = match self.workers[route.worker].rpc_raw(&down) {
+                Ok(r) => r,
+                Err(_) => {
+                    self.on_worker_down(route.worker);
+                    continue;
+                }
+            };
+            let Ok(v) = Json::parse(&resp) else {
+                let _ = reply.send(protocol::error_line_for(
+                    proto,
+                    ErrCode::Internal,
+                    &format!("worker {} returned an unparseable response", route.worker),
+                ));
+                return;
+            };
+            if v.get("ok").and_then(Json::as_bool) != Some(true) {
+                let _ = reply.send(relay_error(proto, &v));
+                return;
+            }
+            // a successful export removes the session from the tier:
+            // drop its route and any client subscriptions (`session` is
+            // the export response's signature field — no other success
+            // shape carries it)
+            if v.get("session").is_some() {
+                let _ = self.table.remove(id);
+                self.subs.remove(&id);
+            }
+            let _ = reply.send(rewrite_id(&v, id));
+            return;
+        }
+        let _ = reply.send(protocol::error_line_for(
+            proto,
+            ErrCode::Internal,
+            &format!("session {id} is temporarily unroutable (worker recovery)"),
+        ));
+    }
+
+    /// `watch` is answered router-side: the fan-in already streams
+    /// every placed session, so a client subscription is pure routing
+    /// state. Finished sessions push their terminal record immediately
+    /// (from the cache, or fetched from the worker on a cache miss).
+    fn handle_watch(
+        &mut self,
+        id: u64,
+        stream_every: Option<u64>,
+        include_theta: bool,
+        reply: Sender<String>,
+        proto: Proto,
+    ) {
+        let every = stream_every.unwrap_or(self.cfg.serve.stream_every as u64);
+        if let Some(line) = self.parked_error(id, proto) {
+            let _ = reply.send(line);
+            return;
+        }
+        if let Some(push) = self.cache.get(id) {
+            let sub = Sub { tx: reply.clone(), every, include_theta, proto };
+            let _ = reply.send(protocol::watch_line(id, every));
+            if let Some(terminal) = fanin::transform(push, id, &sub) {
+                let _ = reply.send(terminal);
+            }
+            return;
+        }
+        let Some(route) = self.table.get(id) else {
+            let _ = reply.send(unknown_id(proto, id));
+            return;
+        };
+        // probe liveness/state through the control conn so a watch on
+        // an already-finished (but cache-evicted) session still gets
+        // its terminal push instead of silence
+        let status = self.workers[route.worker]
+            .rpc(&format!("{{\"cmd\":\"status\",\"id\":{}}}", route.wid));
+        let state = match &status {
+            Ok(v) => v.get("state").and_then(Json::as_str).unwrap_or("").to_string(),
+            Err(_) => {
+                self.on_worker_down(route.worker);
+                let _ = reply.send(protocol::error_line_for(
+                    proto,
+                    ErrCode::Internal,
+                    &format!("session {id} is temporarily unroutable (worker recovery)"),
+                ));
+                return;
+            }
+        };
+        if matches!(state.as_str(), "pending" | "running" | "paused") {
+            self.subs
+                .entry(id)
+                .or_default()
+                .push(Sub { tx: reply.clone(), every, include_theta, proto });
+            let _ = reply.send(protocol::watch_line(id, every));
+            return;
+        }
+        // finished: ack, then synthesize the terminal push from the
+        // worker's result response
+        let theta_req = if include_theta { "true" } else { "false" };
+        let result = self.workers[route.worker].rpc(&format!(
+            "{{\"cmd\":\"result\",\"id\":{},\"theta\":{theta_req}}}",
+            route.wid
+        ));
+        let _ = reply.send(protocol::watch_line(id, every));
+        if let Ok(v) = result {
+            if let Some(m) = v.as_obj() {
+                let mut m = m.clone();
+                m.insert("event".to_string(), Json::Str("result".into()));
+                m.insert("id".to_string(), Json::Num(id as f64));
+                let _ = reply.send(Json::Obj(m).to_string());
+            }
+        }
+    }
+
+    /// `status` with no id: the whole tier — every worker's sessions
+    /// under their client-facing ids, plus parked sessions and cached
+    /// finishes whose workers are gone.
+    fn handle_status_all(&mut self, reply: &Sender<String>) {
+        let mut rows: BTreeMap<u64, Json> = BTreeMap::new();
+        for i in 0..self.workers.len() {
+            if !self.workers[i].alive {
+                continue;
+            }
+            let v = match self.workers[i].rpc("{\"cmd\":\"status\"}") {
+                Ok(v) => v,
+                Err(_) => {
+                    self.on_worker_down(i);
+                    continue;
+                }
+            };
+            let Some(sessions) = v.get("sessions").and_then(Json::as_arr) else {
+                continue;
+            };
+            for s in sessions {
+                let Some(wid) = s.get("id").and_then(Json::as_usize) else { continue };
+                // sessions the router did not place (someone poked the
+                // worker port directly) stay invisible here
+                let Some(cid) = self.table.find(i, wid as u64) else { continue };
+                if let Some(m) = s.as_obj() {
+                    let mut m = m.clone();
+                    m.insert("id".to_string(), Json::Num(cid as f64));
+                    rows.insert(cid, Json::Obj(m));
+                }
+            }
+        }
+        for (&cid, _) in &self.parked {
+            let mut m = BTreeMap::new();
+            m.insert("id".to_string(), Json::Num(cid as f64));
+            m.insert("state".to_string(), Json::Str("migrating".into()));
+            rows.insert(cid, Json::Obj(m));
+        }
+        for (cid, push) in self.cache.iter() {
+            if !rows.contains_key(&cid) && self.table.get(cid).is_none() {
+                if let Some(line) = fanin::cached_status(push, cid) {
+                    if let Ok(v) = Json::parse(&line) {
+                        rows.insert(cid, v);
+                    }
+                }
+            }
+        }
+        let mut out = BTreeMap::new();
+        out.insert("ok".to_string(), Json::Bool(true));
+        out.insert(
+            "sessions".to_string(),
+            Json::Arr(rows.into_values().collect()),
+        );
+        let _ = reply.send(Json::Obj(out).to_string());
+    }
+
+    /// Router `stats`: per-worker health/load plus routing-state sizes
+    /// (shape documented in docs/PROTOCOL.md under "Router additions").
+    fn router_stats_line(&mut self) -> String {
+        let mut rows = Vec::new();
+        for i in 0..self.workers.len() {
+            let alive = self.workers[i].alive;
+            let load = if alive { self.workers[i].eval_load() } else { None };
+            let mut m = BTreeMap::new();
+            m.insert("index".to_string(), Json::Num(i as f64));
+            m.insert("alive".to_string(), Json::Bool(self.workers[i].alive));
+            m.insert("addr".to_string(), Json::Str(self.workers[i].addr.to_string()));
+            m.insert(
+                "eval_load_us".to_string(),
+                match load {
+                    Some(l) => Json::Num(l as f64),
+                    None => Json::Null,
+                },
+            );
+            m.insert(
+                "sessions".to_string(),
+                Json::Num(self.table.on_worker(i).len() as f64),
+            );
+            rows.push(Json::Obj(m));
+        }
+        let mut out = BTreeMap::new();
+        out.insert("ok".to_string(), Json::Bool(true));
+        out.insert("router".to_string(), Json::Bool(true));
+        out.insert("workers".to_string(), Json::Arr(rows));
+        out.insert(
+            "routes".to_string(),
+            Json::Num(self.table.iter().count() as f64),
+        );
+        out.insert("parked".to_string(), Json::Num(self.parked.len() as f64));
+        out.insert("cached".to_string(), Json::Num(self.cache.len() as f64));
+        Json::Obj(out).to_string()
+    }
+
+    /// One line off a worker's watch connection: fan event pushes out
+    /// to client subscriptions; cache terminal pushes. Non-event lines
+    /// (subscribe acks, drain-probe replies arriving outside a drain)
+    /// are dropped here.
+    fn on_worker_line(&mut self, index: usize, line: &str) {
+        let Ok(v) = Json::parse(line) else { return };
+        let Some(event) = v.get("event").and_then(Json::as_str) else { return };
+        let Some(wid) = v.get("id").and_then(Json::as_usize).map(|x| x as u64) else {
+            return;
+        };
+        let Some(cid) = self.table.find(index, wid) else { return };
+        let terminal = event == "result";
+        if terminal {
+            self.cache.insert(cid, v.clone());
+        }
+        if let Some(subs) = self.subs.get_mut(&cid) {
+            subs.retain(|s| match fanin::transform(&v, cid, s) {
+                Some(out) => s.tx.send(out).is_ok(),
+                None => true,
+            });
+        }
+        if terminal {
+            self.subs.remove(&cid);
+        }
+    }
+
+    /// A worker died. Recover its sessions from its on-disk state: the
+    /// same `manifest.jsonl` + checkpoints `--adopt` would read, read
+    /// by the router and re-imported into survivors. Idempotent.
+    pub(crate) fn on_worker_down(&mut self, index: usize) {
+        if self.downed[index] {
+            return;
+        }
+        self.downed[index] = true;
+        self.workers[index].kill();
+        self.watch[index] = None;
+        eprintln!("router: worker {index} is down; recovering its sessions");
+        let mpath = manifest::manifest_path(&self.workers[index].dir);
+        let entries = match manifest::read(&mpath) {
+            Ok((_, entries)) => entries,
+            Err(e) => {
+                if mpath.exists() {
+                    eprintln!("router: cannot read {}: {e:#}", mpath.display());
+                }
+                Vec::new()
+            }
+        };
+        for entry in entries {
+            let Some(cid) = self.table.find(index, entry.id) else { continue };
+            let ckpt = entry.ckpt.as_ref().and_then(|name| {
+                std::fs::read(self.workers[index].dir.join(name)).ok()
+            });
+            let resume = entry.state != "paused";
+            if let Err(e) = self.rehome(cid, &entry, ckpt.as_deref(), resume) {
+                eprintln!("router: session {cid} parked during recovery: {e:#}");
+            }
+        }
+        // whatever still routes to the dead worker had no manifest
+        // entry: finished (served from the cache while it lasts) or
+        // never rebuildable — either way, no longer routable
+        for cid in self.table.on_worker(index) {
+            if self.parked.contains_key(&cid) {
+                continue;
+            }
+            let _ = self.table.remove(cid);
+            if self.cache.get(cid).is_none() {
+                self.subs.remove(&cid);
+            }
+        }
+    }
+
+    /// Import a homeless session (worker death or failed migration)
+    /// into some live worker — parking it on total failure. On success
+    /// the route is updated, the fan-in re-subscribed, and the session
+    /// resumed if it had been running.
+    pub(crate) fn rehome(
+        &mut self,
+        cid: u64,
+        entry: &manifest::Entry,
+        ckpt: Option<&[u8]>,
+        resume: bool,
+    ) -> Result<()> {
+        let line = migrate::import_request_line(entry, ckpt);
+        for w in self.placement_candidates(cid) {
+            if !self.workers[w].alive {
+                continue;
+            }
+            let Ok(v) = self.workers[w].rpc(&line) else { continue };
+            let Some(wid) = v.get("id").and_then(Json::as_usize).map(|x| x as u64) else {
+                continue;
+            };
+            if self.table.get(cid).is_some() {
+                self.table.set(cid, w, wid)?;
+            } else {
+                // the route was already dropped (parked session being
+                // revived on a restarted router) — reinsert at this id
+                self.table.restore(cid, w, wid)?;
+            }
+            if let Some(Some(wc)) = self.watch.get_mut(w) {
+                let _ = wc.subscribe(wid);
+            }
+            if resume {
+                let _ = self.workers[w].rpc(&format!("{{\"cmd\":\"resume\",\"id\":{wid}}}"));
+            }
+            return Ok(());
+        }
+        let path = migrate::spill(&self.dir, cid, entry, ckpt, resume)?;
+        self.parked.insert(cid, path);
+        anyhow::bail!("no live worker could adopt session {cid}");
+    }
+}
+
+/// `optex router` entrypoint: spawn the fleet, bind, announce, run.
+pub fn router(cfg: &RunConfig) -> Result<()> {
+    let r = Router::bind(cfg)?;
+    println!(
+        "router: listening on {} ({} worker(s), dir {})",
+        r.local_addr()?,
+        cfg.router.workers,
+        cfg.router.dir.display(),
+    );
+    r.run()
+}
+
+/// `{"ok":false,...}` for an id the router has no route for.
+fn unknown_id(proto: Proto, id: u64) -> String {
+    protocol::error_line_for(proto, ErrCode::UnknownId, &format!("no such session {id}"))
+}
+
+/// Re-render a worker's (v2) error response for the client's protocol,
+/// preserving the stable code.
+fn relay_error(proto: Proto, v: &Json) -> String {
+    let (slug, msg) = worker::parse_error(v);
+    let code = ErrCode::from_slug(&slug).unwrap_or(ErrCode::Internal);
+    protocol::error_line_for(proto, code, &msg)
+}
+
+/// Substitute the top-level `id` of a parsed response and re-render.
+/// Both sides use `util::json`'s canonical writer, so every untouched
+/// field round-trips byte-for-byte.
+fn rewrite_id(v: &Json, id: u64) -> String {
+    match v.as_obj() {
+        Some(m) => {
+            let mut m = m.clone();
+            if m.contains_key("id") {
+                m.insert("id".to_string(), Json::Num(id as f64));
+            }
+            Json::Obj(m).to_string()
+        }
+        None => v.to_string(),
+    }
+}
+
+/// Substitute the `id` of a raw request line (parse + rewrite +
+/// re-render). Errors only on unparseable input, which `parse_request`
+/// already screened out.
+fn rewrite_raw_id(raw: &str, id: u64) -> Result<String> {
+    let v = Json::parse(raw).map_err(|e| anyhow::anyhow!("re-parsing request: {e}"))?;
+    let m = v.as_obj().context("request is not an object")?;
+    let mut m = m.clone();
+    m.insert("id".to_string(), Json::Num(id as f64));
+    Ok(Json::Obj(m).to_string())
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    tx: Sender<RouterMsg>,
+    shutdown: Arc<AtomicBool>,
+    max_conns: usize,
+) {
+    let conns = Arc::new(AtomicUsize::new(0));
+    for conn in listener.incoming() {
+        if shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+        let Ok(stream) = conn else { continue };
+        if conns.fetch_add(1, Ordering::SeqCst) >= max_conns {
+            conns.fetch_sub(1, Ordering::SeqCst);
+            let mut s = stream;
+            // pre-handshake by construction: v1 shape
+            let _ = s.write_all(
+                protocol::error_line_for(
+                    Proto::V1,
+                    ErrCode::Overloaded,
+                    "too many connections",
+                )
+                .as_bytes(),
+            );
+            let _ = s.write_all(b"\n");
+            continue;
+        }
+        let tx = tx.clone();
+        let conns = Arc::clone(&conns);
+        let spawned = std::thread::Builder::new()
+            .name("optex-router-conn".into())
+            .spawn(move || {
+                handle_conn(stream, tx);
+                conns.fetch_sub(1, Ordering::SeqCst);
+            });
+        if spawned.is_err() {
+            conns.fetch_sub(1, Ordering::SeqCst);
+        }
+    }
+}
+
+/// Read one `\n`-terminated line of at most [`MAX_LINE_BYTES`].
+/// `Ok(None)` on clean EOF, `Err(true)` when the cap was hit (the
+/// connection is beyond salvage), `Err(false)` on I/O error.
+fn read_line_capped(reader: &mut BufReader<TcpStream>) -> Result<Option<String>, bool> {
+    let mut line = String::new();
+    let mut limited = (&mut *reader).take(MAX_LINE_BYTES);
+    match limited.read_line(&mut line) {
+        Ok(0) => Ok(None),
+        Ok(n) => {
+            if n as u64 >= MAX_LINE_BYTES && !line.ends_with('\n') {
+                Err(true)
+            } else {
+                Ok(Some(line))
+            }
+        }
+        Err(_) => Err(false),
+    }
+}
+
+/// Per-client reader: the serve tier's connection shape (paired writer
+/// thread, `hello` resolved here between reads), feeding the router
+/// loop.
+fn handle_conn(stream: TcpStream, tx: Sender<RouterMsg>) {
+    let Ok(read_half) = stream.try_clone() else { return };
+    let mut writer = stream;
+    let (line_tx, line_rx) = mpsc::channel::<String>();
+    let spawned = std::thread::Builder::new()
+        .name("optex-router-write".into())
+        .spawn(move || {
+            for line in line_rx {
+                if writer
+                    .write_all(line.as_bytes())
+                    .and_then(|_| writer.write_all(b"\n"))
+                    .and_then(|_| writer.flush())
+                    .is_err()
+                {
+                    return;
+                }
+            }
+        });
+    if spawned.is_err() {
+        return;
+    }
+    let mut reader = BufReader::new(read_half);
+    let mut proto = Proto::default();
+    loop {
+        let line = match read_line_capped(&mut reader) {
+            Ok(Some(line)) => line,
+            Ok(None) => break,
+            Err(true) => {
+                let _ = line_tx.send(protocol::error_line_for(
+                    proto,
+                    ErrCode::LineTooLong,
+                    "request line too long",
+                ));
+                break;
+            }
+            Err(false) => break,
+        };
+        if line.trim().is_empty() {
+            continue;
+        }
+        let parsed = protocol::parse_request(&line);
+        if let Ok(Request::Hello { proto: requested }) = parsed {
+            let reply = match Proto::from_number(requested) {
+                Some(p) => {
+                    proto = p;
+                    protocol::hello_line()
+                }
+                None => protocol::error_line_for(
+                    Proto::V2,
+                    ErrCode::Version,
+                    &format!(
+                        "unsupported protocol version {requested} (this router \
+                         speaks 1..={})",
+                        Proto::MAX
+                    ),
+                ),
+            };
+            let msg = RouterMsg::Client {
+                msg: ClientMsg::Reply(reply),
+                reply: line_tx.clone(),
+                proto,
+            };
+            if tx.send(msg).is_err() {
+                return;
+            }
+            continue;
+        }
+        let was_shutdown = matches!(parsed, Ok(Request::Shutdown));
+        let msg = RouterMsg::Client {
+            msg: ClientMsg::Request { parsed, raw: line.trim_end().to_string() },
+            reply: line_tx.clone(),
+            proto,
+        };
+        if tx.send(msg).is_err() {
+            let _ = line_tx.send(protocol::error_line_for(
+                proto,
+                ErrCode::ShuttingDown,
+                "router is shutting down",
+            ));
+            return;
+        }
+        if was_shutdown {
+            return;
+        }
+    }
+    let _ = tx.send(RouterMsg::Client {
+        msg: ClientMsg::Disconnected,
+        reply: line_tx,
+        proto,
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn result_cache_evicts_fifo_and_keeps_recent() {
+        let mut c = ResultCache::new(2);
+        let push = |id: u64| {
+            Json::parse(&format!(
+                r#"{{"event":"result","final_loss":0.5,"id":{id},"ok":true,"state":"done"}}"#
+            ))
+            .unwrap()
+        };
+        c.insert(1, push(1));
+        c.insert(2, push(2));
+        assert!(c.get(1).is_some() && c.get(2).is_some());
+        c.insert(3, push(3));
+        assert!(c.get(1).is_none(), "oldest entry evicted at cap");
+        assert!(c.get(2).is_some() && c.get(3).is_some());
+        // re-inserting an existing id replaces in place, no double slot
+        c.insert(3, push(3));
+        c.insert(4, push(4));
+        assert!(c.get(2).is_none() && c.get(3).is_some() && c.get(4).is_some());
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.iter().count(), 2);
+    }
+
+    #[test]
+    fn id_rewriting_is_byte_stable_for_untouched_fields() {
+        let raw = r#"{"best_loss":0.125,"id":4,"iters":40,"ok":true,"state":"done","theta":[0.5,-0.25]}"#;
+        let v = Json::parse(raw).unwrap();
+        // same id back in: the exact input bytes come back out
+        assert_eq!(rewrite_id(&v, 4), raw);
+        // different id: only the id changes
+        let out = rewrite_id(&v, 9);
+        assert_eq!(out, raw.replace("\"id\":4", "\"id\":9"));
+        let down = rewrite_raw_id(r#"{"cmd":"pause","id":7}"#, 2).unwrap();
+        assert_eq!(down, r#"{"cmd":"pause","id":2}"#);
+        // responses without an id (shutdown ack) pass through untouched
+        let v = Json::parse(r#"{"ok":true,"shutdown":true}"#).unwrap();
+        assert_eq!(rewrite_id(&v, 9), r#"{"ok":true,"shutdown":true}"#);
+    }
+
+    #[test]
+    fn worker_error_envelopes_relay_with_their_code() {
+        let v = Json::parse(
+            r#"{"error":{"code":"busy","msg":"at capacity: 4 active sessions (serve.max_sessions = 4)"},"ok":false}"#,
+        )
+        .unwrap();
+        // v2 client keeps the structured envelope and the code
+        let out = relay_error(Proto::V2, &v);
+        let o = Json::parse(&out).unwrap();
+        assert_eq!(
+            o.get("error").unwrap().get("code").unwrap().as_str(),
+            Some("busy")
+        );
+        // v1 client gets the bare string with the same message
+        let out = relay_error(Proto::V1, &v);
+        let o = Json::parse(&out).unwrap();
+        assert!(o
+            .get("error")
+            .unwrap()
+            .as_str()
+            .unwrap()
+            .contains("at capacity"));
+        // unknown slugs (a future worker) degrade to `internal`
+        let v = Json::parse(r#"{"error":{"code":"flurble","msg":"?"},"ok":false}"#).unwrap();
+        let o = Json::parse(&relay_error(Proto::V2, &v)).unwrap();
+        assert_eq!(
+            o.get("error").unwrap().get("code").unwrap().as_str(),
+            Some("internal")
+        );
+    }
+}

@@ -1,0 +1,160 @@
+//! Placement: which worker gets a session.
+//!
+//! Primary signal: the eval-time load each worker exposes through its
+//! `stats` verb — the `optex_eval_load_us` gauge, the sum over its
+//! runnable sessions of their per-iteration eval-time EMA. Picking the
+//! minimum steers new sessions at the worker with the least sequential
+//! eval work queued, which is the quantity OptEx's iteration cost is
+//! dominated by (the gradient evaluations; the GP fit is the cheap
+//! part).
+//!
+//! Fallback: when any live worker's load is unknown — its stats RPC
+//! failed, or the fleet was just spawned and every gauge still reads
+//! zero tied — placement degrades to a consistent-hash ring keyed on
+//! the client-facing session id. Consistent hashing (not `id % N`)
+//! so that a worker joining or leaving moves only ~1/N of the key
+//! space: re-placement after a worker death keeps most keys stable.
+
+/// A consistent-hash ring over worker indices.
+#[derive(Debug)]
+pub struct Ring {
+    /// (point, worker) sorted by point; `VNODES` virtual nodes per
+    /// worker smooth the load spread.
+    points: Vec<(u64, usize)>,
+}
+
+const VNODES: usize = 64;
+
+/// FNV-1a with a murmur-style finalizer. FNV alone clusters on short
+/// mostly-zero inputs (sequential session ids hash into a narrow arc
+/// of the ring — measured 70% of keys on one of three workers); the
+/// finalizer's shift-xor-multiply cascade restores avalanche. Written
+/// from scratch and seed-free on purpose: the ring must place
+/// identically across router restarts, so `DefaultHasher`'s unstable
+/// seed is out, and no external hash crates exist in this repo.
+fn hash64(data: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in data {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h ^= h >> 33;
+    h = h.wrapping_mul(0xff51_afd7_ed55_8ccd);
+    h ^= h >> 33;
+    h = h.wrapping_mul(0xc4ce_b9fe_1a85_ec53);
+    h ^ (h >> 33)
+}
+
+impl Ring {
+    /// Ring over workers `0..n`.
+    pub fn new(n: usize) -> Ring {
+        let mut points = Vec::with_capacity(n * VNODES);
+        for w in 0..n {
+            for v in 0..VNODES {
+                points.push((hash64(format!("worker-{w}-vnode-{v}").as_bytes()), w));
+            }
+        }
+        points.sort_unstable();
+        Ring { points }
+    }
+
+    /// First worker clockwise of `key`'s point that `alive` admits.
+    /// Panics if no worker is alive (the router has nothing to place
+    /// on and must surface that earlier).
+    pub fn place(&self, key: u64, alive: &[bool]) -> usize {
+        assert!(alive.iter().any(|&a| a), "placement with no live workers");
+        let h = hash64(&key.to_le_bytes());
+        let start = self.points.partition_point(|&(p, _)| p < h);
+        for i in 0..self.points.len() {
+            let (_, w) = self.points[(start + i) % self.points.len()];
+            if alive[w] {
+                return w;
+            }
+        }
+        unreachable!("some worker is alive");
+    }
+}
+
+/// Choose a worker: least eval-load over live workers when every live
+/// worker reported one and they are not all tied; the consistent-hash
+/// ring otherwise. `loads[w]` is `None` for unknown (stats RPC failed).
+pub fn choose(ring: &Ring, key: u64, alive: &[bool], loads: &[Option<u64>]) -> usize {
+    let live: Vec<usize> = (0..alive.len()).filter(|&w| alive[w]).collect();
+    let known: Vec<(u64, usize)> = live
+        .iter()
+        .filter_map(|&w| loads[w].map(|l| (l, w)))
+        .collect();
+    if known.len() == live.len() && live.len() > 1 {
+        let min = known.iter().map(|&(l, _)| l).min().unwrap();
+        let max = known.iter().map(|&(l, _)| l).max().unwrap();
+        if min != max {
+            // ties (including the all-zero cold start) fall through to
+            // the ring so a burst of submissions spreads instead of
+            // pile-driving worker 0
+            return known.iter().find(|&&(l, _)| l == min).unwrap().1;
+        }
+    }
+    ring.place(key, alive)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn least_loaded_wins_when_loads_are_known() {
+        let ring = Ring::new(3);
+        let alive = [true, true, true];
+        let loads = [Some(500u64), Some(20), Some(300)];
+        assert_eq!(choose(&ring, 1, &alive, &loads), 1);
+        // dead workers are never chosen even at zero load
+        let alive = [true, false, true];
+        let loads = [Some(500u64), Some(0), Some(300)];
+        assert_eq!(choose(&ring, 1, &alive, &loads), 2);
+    }
+
+    #[test]
+    fn unknown_or_tied_loads_fall_back_to_the_ring() {
+        let ring = Ring::new(4);
+        let alive = [true, true, true, true];
+        let unknown = [Some(10u64), None, Some(10), Some(10)];
+        let tied = [Some(0u64), Some(0), Some(0), Some(0)];
+        for key in 0..64u64 {
+            let a = choose(&ring, key, &alive, &unknown);
+            let b = ring.place(key, &alive);
+            assert_eq!(a, b, "key {key}");
+            let c = choose(&ring, key, &alive, &tied);
+            assert_eq!(c, b, "key {key}");
+        }
+        // the ring spreads: 64 keys across 4 workers should hit all 4
+        let hit: std::collections::BTreeSet<usize> =
+            (0..64u64).map(|k| ring.place(k, &alive)).collect();
+        assert_eq!(hit.len(), 4, "ring failed to spread keys: {hit:?}");
+    }
+
+    #[test]
+    fn ring_is_stable_and_minimally_disruptive() {
+        let ring = Ring::new(3);
+        let all = [true, true, true];
+        let without_1 = [true, false, true];
+        let mut moved = 0;
+        for key in 0..256u64 {
+            let a = ring.place(key, &all);
+            assert_eq!(a, ring.place(key, &all), "placement must be deterministic");
+            let b = ring.place(key, &without_1);
+            if a != 1 {
+                // keys not on the dead worker must not move at all
+                assert_eq!(a, b, "key {key} moved although its worker lives");
+            } else {
+                moved += 1;
+            }
+        }
+        assert!(moved > 0, "some keys lived on worker 1");
+    }
+
+    #[test]
+    #[should_panic(expected = "no live workers")]
+    fn placement_with_no_live_workers_panics() {
+        Ring::new(2).place(0, &[false, false]);
+    }
+}

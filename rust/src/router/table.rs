@@ -1,0 +1,282 @@
+//! The route table: client-facing session ids → (worker, worker-local id).
+//!
+//! The router hands every client a session id from its **own** counter
+//! and records which worker holds the session and under which
+//! worker-local id. The table is the router's only durable state —
+//! `routes.jsonl` in the router dir, rewritten whole through a temp
+//! file + rename on every mutation (the `manifest.jsonl` idiom: a
+//! `kill -9` leaves the old table or the new one, never a torn line).
+//!
+//! ## Format
+//!
+//! ```text
+//! {"next_id":4,"routes":"optex-router","version":1}
+//! {"id":1,"wid":1,"worker":0}
+//! {"id":2,"wid":1,"worker":1}
+//! {"id":3,"wid":2,"worker":0}
+//! ```
+//!
+//! A restarted router reads this file, re-attaches to (or respawns)
+//! its workers, and can answer `status`/`result` for every session it
+//! ever placed — the workers' own manifests carry the session payloads,
+//! the route table carries only the id mapping, so neither file
+//! duplicates the other's truth.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Route-table schema version.
+const VERSION: u64 = 1;
+
+/// The route table file inside a router directory.
+pub fn routes_path(dir: &Path) -> PathBuf {
+    dir.join("routes.jsonl")
+}
+
+/// Where a client-facing session id currently lives.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Route {
+    /// Worker index (position in the router's worker vector).
+    pub worker: usize,
+    /// The session id the worker itself assigned.
+    pub wid: u64,
+}
+
+/// The id map plus its durable home.
+#[derive(Debug)]
+pub struct RouteTable {
+    path: PathBuf,
+    next_id: u64,
+    routes: BTreeMap<u64, Route>,
+}
+
+impl RouteTable {
+    /// Load `routes.jsonl` from `dir`, or start empty if absent.
+    pub fn load_or_new(dir: &Path) -> Result<RouteTable> {
+        let path = routes_path(dir);
+        if !path.exists() {
+            return Ok(RouteTable { path, next_id: 1, routes: BTreeMap::new() });
+        }
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading route table {}", path.display()))?;
+        let mut lines = text.lines().filter(|l| !l.trim().is_empty());
+        let header_line = lines.next().context("route table is empty")?;
+        let header = Json::parse(header_line)
+            .map_err(|e| anyhow::anyhow!("route table header: {e}"))?;
+        if header.get("routes").and_then(Json::as_str) != Some("optex-router") {
+            bail!("not an optex router route table");
+        }
+        let version = header
+            .get("version")
+            .and_then(Json::as_usize)
+            .context("route table version")? as u64;
+        if version != VERSION {
+            bail!("unsupported route table version {version}");
+        }
+        let next_id = header
+            .get("next_id")
+            .and_then(Json::as_usize)
+            .context("route table next_id")? as u64;
+        let mut routes = BTreeMap::new();
+        for (i, line) in lines.enumerate() {
+            let v = Json::parse(line)
+                .map_err(|e| anyhow::anyhow!("route table line {}: {e}", i + 2))?;
+            let id =
+                v.get("id").and_then(Json::as_usize).context("route id")? as u64;
+            let worker =
+                v.get("worker").and_then(Json::as_usize).context("route worker")?;
+            let wid =
+                v.get("wid").and_then(Json::as_usize).context("route wid")? as u64;
+            routes.insert(id, Route { worker, wid });
+        }
+        Ok(RouteTable { path, next_id, routes })
+    }
+
+    /// Allocate the next client-facing id for a session placed on
+    /// `worker` as `wid`, and persist.
+    pub fn insert(&mut self, worker: usize, wid: u64) -> Result<u64> {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.routes.insert(id, Route { worker, wid });
+        self.persist()?;
+        Ok(id)
+    }
+
+    /// Where `id` lives now.
+    pub fn get(&self, id: u64) -> Option<Route> {
+        self.routes.get(&id).copied()
+    }
+
+    /// The id the next [`RouteTable::insert`] will hand out — the
+    /// placement key for a submit being routed right now.
+    pub fn next_id(&self) -> u64 {
+        self.next_id
+    }
+
+    /// Re-insert a route at a **previously issued** id (a parked
+    /// session found a home again). Never touches the id counter, and
+    /// refuses ids from the future — those must come from `insert`.
+    pub fn restore(&mut self, id: u64, worker: usize, wid: u64) -> Result<()> {
+        if id >= self.next_id {
+            bail!("route {id} was never issued (next_id {})", self.next_id);
+        }
+        self.routes.insert(id, Route { worker, wid });
+        self.persist()
+    }
+
+    /// Re-point `id` (migration / re-placement) and persist.
+    pub fn set(&mut self, id: u64, worker: usize, wid: u64) -> Result<()> {
+        let Some(r) = self.routes.get_mut(&id) else {
+            bail!("no such route {id}");
+        };
+        *r = Route { worker, wid };
+        self.persist()
+    }
+
+    /// Drop `id` (session finished and its cached result expired, or
+    /// unrecoverable) and persist.
+    pub fn remove(&mut self, id: u64) -> Result<()> {
+        self.routes.remove(&id);
+        self.persist()
+    }
+
+    /// Reverse lookup: which client id does `(worker, wid)` serve?
+    /// Linear over the table — bounded by total admitted sessions,
+    /// which `serve.max_sessions` per worker keeps small.
+    pub fn find(&self, worker: usize, wid: u64) -> Option<u64> {
+        self.routes
+            .iter()
+            .find(|(_, r)| r.worker == worker && r.wid == wid)
+            .map(|(&id, _)| id)
+    }
+
+    /// All client ids currently routed to `worker`, ascending.
+    pub fn on_worker(&self, worker: usize) -> Vec<u64> {
+        self.routes
+            .iter()
+            .filter(|(_, r)| r.worker == worker)
+            .map(|(&id, _)| id)
+            .collect()
+    }
+
+    /// All `(client_id, route)` pairs, ascending by client id.
+    pub fn iter(&self) -> impl Iterator<Item = (u64, Route)> + '_ {
+        self.routes.iter().map(|(&id, &r)| (id, r))
+    }
+
+    fn persist(&self) -> Result<()> {
+        let mut out = String::new();
+        let mut header = BTreeMap::new();
+        header.insert("routes".to_string(), Json::Str("optex-router".into()));
+        header.insert("version".to_string(), Json::Num(VERSION as f64));
+        header.insert("next_id".to_string(), Json::Num(self.next_id as f64));
+        out.push_str(&Json::Obj(header).to_string());
+        out.push('\n');
+        for (&id, r) in &self.routes {
+            let mut m = BTreeMap::new();
+            m.insert("id".to_string(), Json::Num(id as f64));
+            m.insert("worker".to_string(), Json::Num(r.worker as f64));
+            m.insert("wid".to_string(), Json::Num(r.wid as f64));
+            out.push_str(&Json::Obj(m).to_string());
+            out.push('\n');
+        }
+        if let Some(dir) = self.path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let tmp = self.path.with_extension("jsonl.tmp");
+        std::fs::write(&tmp, &out)
+            .with_context(|| format!("writing route table temp {}", tmp.display()))?;
+        std::fs::rename(&tmp, &self.path)
+            .with_context(|| format!("publishing route table {}", self.path.display()))?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("optex_routes_{name}_{}", std::process::id()));
+        std::fs::remove_dir_all(&d).ok();
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn routes_persist_across_reload() {
+        let dir = tmp("reload");
+        let mut t = RouteTable::load_or_new(&dir).unwrap();
+        let a = t.insert(0, 1).unwrap();
+        let b = t.insert(1, 1).unwrap();
+        let c = t.insert(0, 2).unwrap();
+        assert_eq!((a, b, c), (1, 2, 3), "client ids are router-sequential");
+        t.set(b, 0, 3).unwrap(); // migrated 1→0
+        t.remove(a).unwrap();
+
+        let t2 = RouteTable::load_or_new(&dir).unwrap();
+        assert_eq!(t2.get(a), None);
+        assert_eq!(t2.get(b), Some(Route { worker: 0, wid: 3 }));
+        assert_eq!(t2.get(c), Some(Route { worker: 0, wid: 2 }));
+        // the id high-water mark survives: freed ids are never reissued
+        let mut t2 = t2;
+        assert_eq!(t2.next_id(), 4);
+        assert_eq!(t2.insert(1, 9).unwrap(), 4);
+        // a removed id can be restored (unparking), but only if issued
+        t2.restore(a, 1, 5).unwrap();
+        assert_eq!(t2.get(a), Some(Route { worker: 1, wid: 5 }));
+        assert!(t2.restore(99, 0, 0).is_err(), "future ids are insert-only");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn reverse_and_per_worker_lookups() {
+        let dir = tmp("lookup");
+        let mut t = RouteTable::load_or_new(&dir).unwrap();
+        let a = t.insert(0, 1).unwrap();
+        let b = t.insert(1, 1).unwrap();
+        let c = t.insert(0, 2).unwrap();
+        assert_eq!(t.find(0, 1), Some(a));
+        assert_eq!(t.find(1, 1), Some(b));
+        assert_eq!(t.find(1, 2), None, "same wid on another worker is distinct");
+        assert_eq!(t.on_worker(0), vec![a, c]);
+        assert_eq!(t.on_worker(1), vec![b]);
+        assert_eq!(t.on_worker(7), Vec::<u64>::new());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_garbage_headers_and_missing_routes() {
+        let dir = tmp("garbage");
+        std::fs::write(routes_path(&dir), "not json\n").unwrap();
+        assert!(RouteTable::load_or_new(&dir).is_err());
+        std::fs::write(
+            routes_path(&dir),
+            "{\"next_id\":1,\"routes\":\"other\",\"version\":1}\n",
+        )
+        .unwrap();
+        assert!(RouteTable::load_or_new(&dir).is_err());
+        std::fs::write(
+            routes_path(&dir),
+            "{\"next_id\":1,\"routes\":\"optex-router\",\"version\":9}\n",
+        )
+        .unwrap();
+        assert!(
+            RouteTable::load_or_new(&dir).is_err(),
+            "future versions must not half-parse"
+        );
+        let mut ok = RouteTable {
+            path: routes_path(&dir),
+            next_id: 5,
+            routes: BTreeMap::new(),
+        };
+        assert!(ok.set(3, 0, 0).is_err(), "set of unknown id is an error");
+        assert!(ok.remove(3).is_ok(), "remove of unknown id is idempotent");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

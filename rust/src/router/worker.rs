@@ -1,0 +1,260 @@
+//! One worker: a real `optex serve` child process plus the router's
+//! two connections into it.
+//!
+//! * **Control connection** — a strict request/response RPC channel.
+//!   The router speaks protocol v2 on it (`hello` on connect) so every
+//!   worker error arrives with a stable [`ErrCode`] slug to branch on.
+//!   `watch` is never issued here, so responses arrive strictly in
+//!   request order with no pushes interleaved.
+//! * **Watch connection** — a second socket owned by a fan-in reader
+//!   thread (see [`crate::router::fanin`]). The router auto-subscribes
+//!   every session it places (`stream_every: 1`, `theta: true`) and the
+//!   thread forwards each pushed line — plus a terminal `WorkerDown`
+//!   when the socket dies, which is how the router detects a killed
+//!   worker without polling.
+//!
+//! Each worker gets `worker_<i>/` under the router dir as its
+//! `serve.ckpt_dir`. That directory is the recovery substrate: when the
+//! worker dies, its `manifest.jsonl` and suspend checkpoints are right
+//! there for the router to re-import into survivors — the same files
+//! `--adopt` would read, read by the router instead.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::RunConfig;
+use crate::util::json::Json;
+
+/// Control-RPC read timeout. Generous: a lifecycle verb on a session
+/// whose quantum is in flight settles that quantum first, so a slow
+/// iteration stalls the response without meaning the worker is dead.
+const RPC_TIMEOUT: Duration = Duration::from_secs(60);
+
+/// A spawned (or re-attached) `optex serve` child and its control
+/// connection.
+pub struct Worker {
+    pub index: usize,
+    pub addr: SocketAddr,
+    /// The worker's `serve.ckpt_dir` (`<router.dir>/worker_<i>`).
+    pub dir: PathBuf,
+    child: Option<Child>,
+    ctrl: Option<Ctrl>,
+    pub alive: bool,
+}
+
+struct Ctrl {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+/// The worker's ckpt dir under the router dir.
+pub fn worker_dir(router_dir: &Path, index: usize) -> PathBuf {
+    router_dir.join(format!("worker_{index}"))
+}
+
+impl Worker {
+    /// Spawn worker `index`: launch `optex serve` on an ephemeral
+    /// loopback port with `worker_<index>/` as its ckpt_dir, parse the
+    /// bound address off its startup banner, and open + handshake the
+    /// control connection. `adopt` re-adopts the dir's manifest (router
+    /// restart over surviving state).
+    ///
+    /// The worker inherits the router's base config — every non-`[serve]`,
+    /// non-`[router]` override — so a submit forwarded verbatim builds
+    /// the same session a solo server with the router's config would
+    /// have built.
+    pub fn spawn(index: usize, cfg: &RunConfig, adopt: bool) -> Result<Worker> {
+        let dir = worker_dir(Path::new(&cfg.router.dir), index);
+        let bin: PathBuf = if cfg.router.worker_bin.is_empty() {
+            std::env::current_exe().context("resolving own executable for worker spawn")?
+        } else {
+            PathBuf::from(&cfg.router.worker_bin)
+        };
+        let mut c = Command::new(&bin);
+        c.arg("serve").args(["--addr", "127.0.0.1:0"]);
+        c.args(["--set", &format!("serve.ckpt_dir={}", dir.display())]);
+        for kv in cfg
+            .overrides_from_default()
+            .context("computing the workers' base config")?
+        {
+            c.args(["--set", &kv]);
+        }
+        // `overrides_from_default` excludes the whole [serve] table
+        // (server-level knobs never belong in a session manifest), but
+        // the worker-behavior subset must still reach the fleet.
+        // Per-process keys stay router-controlled: addr (ephemeral),
+        // ckpt_dir (per-worker), adopt (decided here), metrics_addr
+        // (one listener cannot be shared by N processes).
+        let dflt = crate::config::ServeParams::default();
+        let s = &cfg.serve;
+        if s.max_sessions != dflt.max_sessions {
+            c.args(["--set", &format!("serve.max_sessions={}", s.max_sessions)]);
+        }
+        if s.policy != dflt.policy {
+            c.args(["--set", &format!("serve.policy={}", s.policy.name())]);
+        }
+        if s.stream_every != dflt.stream_every {
+            c.args(["--set", &format!("serve.stream_every={}", s.stream_every)]);
+        }
+        if s.max_conns != dflt.max_conns {
+            c.args(["--set", &format!("serve.max_conns={}", s.max_conns)]);
+        }
+        if s.steppers != dflt.steppers {
+            c.args(["--set", &format!("serve.steppers={}", s.steppers)]);
+        }
+        if adopt {
+            c.arg("--adopt");
+        }
+        c.stdout(Stdio::piped()).stderr(Stdio::inherit());
+        let mut child = c
+            .spawn()
+            .with_context(|| format!("spawning worker {index} ({})", bin.display()))?;
+        let stdout = child.stdout.take().context("worker stdout")?;
+        let mut lines = BufReader::new(stdout).lines();
+        let mut addr = None;
+        for line in &mut lines {
+            let line = line.context("reading worker startup banner")?;
+            eprintln!("[worker {index}] {line}");
+            if let Some(rest) = line.strip_prefix("serve: listening on ") {
+                let token = rest.split_whitespace().next().unwrap_or("");
+                addr = Some(
+                    token
+                        .parse::<SocketAddr>()
+                        .with_context(|| format!("worker {index} address {token:?}"))?,
+                );
+                break;
+            }
+        }
+        let Some(addr) = addr else {
+            let _ = child.kill();
+            bail!("worker {index} exited before announcing its address");
+        };
+        // keep the child's stdout drained (a full pipe would block it)
+        std::thread::Builder::new()
+            .name(format!("optex-router-w{index}-out"))
+            .spawn(move || {
+                for line in lines.map_while(Result::ok) {
+                    eprintln!("[worker {index}] {line}");
+                }
+            })?;
+        let mut w = Worker { index, addr, dir, child: Some(child), ctrl: None, alive: true };
+        w.connect().with_context(|| format!("connecting to worker {index}"))?;
+        Ok(w)
+    }
+
+    /// Open (or re-open) the control connection and negotiate v2.
+    fn connect(&mut self) -> Result<()> {
+        let stream = TcpStream::connect(self.addr)
+            .with_context(|| format!("worker {} control connect {}", self.index, self.addr))?;
+        stream.set_read_timeout(Some(RPC_TIMEOUT))?;
+        let reader = BufReader::new(stream.try_clone()?);
+        self.ctrl = Some(Ctrl { reader, writer: stream });
+        let hello = self.rpc_raw("{\"cmd\":\"hello\",\"proto\":2}")?;
+        let v = Json::parse(&hello)
+            .map_err(|e| anyhow::anyhow!("worker {} hello reply: {e}", self.index))?;
+        if v.get("ok").and_then(Json::as_bool) != Some(true) {
+            bail!("worker {} refused the v2 handshake: {hello}", self.index);
+        }
+        Ok(())
+    }
+
+    /// One request line → the raw response line (no trailing newline).
+    /// Any transport failure marks the worker dead — the caller then
+    /// runs the recovery path off its on-disk manifest.
+    pub fn rpc_raw(&mut self, line: &str) -> Result<String> {
+        let r = self.try_rpc(line);
+        if r.is_err() {
+            self.alive = false;
+        }
+        r
+    }
+
+    fn try_rpc(&mut self, line: &str) -> Result<String> {
+        let ctrl = self.ctrl.as_mut().context("worker control connection is closed")?;
+        ctrl.writer
+            .write_all(line.as_bytes())
+            .and_then(|_| ctrl.writer.write_all(b"\n"))
+            .and_then(|_| ctrl.writer.flush())
+            .with_context(|| format!("worker {} rpc write", self.index))?;
+        let mut reply = String::new();
+        let n = ctrl
+            .reader
+            .read_line(&mut reply)
+            .with_context(|| format!("worker {} rpc read", self.index))?;
+        if n == 0 {
+            bail!("worker {} hung up mid-rpc", self.index);
+        }
+        Ok(reply.trim_end().to_string())
+    }
+
+    /// RPC returning the parsed response, with `ok:false` turned into
+    /// an error carrying the worker's v2 `code` slug in the message
+    /// (`worker error [<code>]: <msg>`), so callers — and the error
+    /// texts clients eventually see — keep the classification.
+    pub fn rpc(&mut self, line: &str) -> Result<Json> {
+        let raw = self.rpc_raw(line)?;
+        let v = Json::parse(&raw)
+            .map_err(|e| anyhow::anyhow!("worker {} reply {raw:?}: {e}", self.index))?;
+        if v.get("ok").and_then(Json::as_bool) == Some(true) {
+            return Ok(v);
+        }
+        let (code, msg) = parse_error(&v);
+        bail!("worker {} error [{code}]: {msg}", self.index);
+    }
+
+    /// The worker's current eval-load gauge (µs of queued per-iteration
+    /// eval EMA), or None when the stats RPC failed.
+    pub fn eval_load(&mut self) -> Option<u64> {
+        let v = self.rpc("{\"cmd\":\"stats\"}").ok()?;
+        v.get("gauges")?.get("optex_eval_load_us")?.as_usize().map(|x| x as u64)
+    }
+
+    /// SIGKILL the child (tests and shutdown; a dead worker's sessions
+    /// are recovered from its dir, not from the process).
+    pub fn kill(&mut self) {
+        self.alive = false;
+        self.ctrl = None;
+        if let Some(mut c) = self.child.take() {
+            let _ = c.kill();
+            let _ = c.wait();
+        }
+    }
+
+    /// Ask the worker to exit cleanly (router shutdown).
+    pub fn shutdown(&mut self) {
+        let _ = self.rpc_raw("{\"cmd\":\"shutdown\"}");
+        self.alive = false;
+        self.ctrl = None;
+        if let Some(mut c) = self.child.take() {
+            let _ = c.wait();
+        }
+    }
+}
+
+impl Drop for Worker {
+    fn drop(&mut self) {
+        // never leak a child process past the router, however we exit
+        if let Some(mut c) = self.child.take() {
+            let _ = c.kill();
+            let _ = c.wait();
+        }
+    }
+}
+
+/// Extract `(code, msg)` from an error response: the v2 envelope's
+/// fields, or `("error", <string>)` for a v1 bare string.
+pub fn parse_error(v: &Json) -> (String, String) {
+    match v.get("error") {
+        Some(Json::Str(s)) => ("error".to_string(), s.clone()),
+        Some(env) => (
+            env.get("code").and_then(Json::as_str).unwrap_or("error").to_string(),
+            env.get("msg").and_then(Json::as_str).unwrap_or_default().to_string(),
+        ),
+        None => ("error".to_string(), "malformed error response".to_string()),
+    }
+}

@@ -158,6 +158,36 @@ fn run_serve(
             sched.resume(primary)?;
             sched.run_to_completion();
         }
+        Mode::Router => {
+            // The router tier's live migration, in-process: `sched` is
+            // worker A (primary + peers); worker B starts empty in its
+            // own dir. At pause_at the primary moves A → B through the
+            // exact verbs the wire router drives, and must not notice.
+            let b_dir = scratch.join("worker_b");
+            std::fs::create_dir_all(&b_dir)?;
+            let mut b = Scheduler::new(so.peers + 1, so.policy, b_dir);
+            if let Some(k) = so.physical_threads {
+                b.set_physical_pool(NativePool::new(k));
+            }
+            if steppers > 1 {
+                b.set_steppers(steppers, None);
+            }
+            b.set_fault_plan(crate::faults::FaultPlan::parse(&cfg.faults)?);
+            if so.pause_at > 0 {
+                tick_until_iters(&mut sched, primary, so.pause_at)?;
+            }
+            sched.pause(primary)?;
+            let (entry, ckpt) = sched.export(primary)?;
+            let moved = b.import(&entry, ckpt.as_deref())?;
+            b.resume(moved)?;
+            // both workers drain; the peers stay on A
+            sched.run_to_completion();
+            b.run_to_completion();
+            let s = b
+                .session(moved)
+                .ok_or_else(|| anyhow!("migrated session {moved} vanished from worker B"))?;
+            return Ok(outcome_of(s));
+        }
         Mode::KillAdopt => {
             if so.pause_at > 0 {
                 tick_until_iters(&mut sched, primary, so.pause_at)?;

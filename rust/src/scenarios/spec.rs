@@ -27,6 +27,11 @@ pub enum Mode {
     /// Serve, with the scheduler dropped after suspending the primary
     /// and a fresh scheduler adopting the ckpt_dir's manifest.
     KillAdopt,
+    /// Two schedulers as in-process "workers" (ISSUE 10): the primary
+    /// live-migrates from A to B at `serve.pause_at` via the router
+    /// tier's pause → export → import → resume choreography, and must
+    /// finish bit-identical to the unmigrated run.
+    Router,
 }
 
 impl Mode {
@@ -36,6 +41,7 @@ impl Mode {
             "serve" => Some(Mode::Serve),
             "suspend_resume" => Some(Mode::SuspendResume),
             "kill_adopt" => Some(Mode::KillAdopt),
+            "router" => Some(Mode::Router),
             _ => None,
         }
     }
@@ -46,6 +52,7 @@ impl Mode {
             Mode::Serve => "serve",
             Mode::SuspendResume => "suspend_resume",
             Mode::KillAdopt => "kill_adopt",
+            Mode::Router => "router",
         }
     }
 }
@@ -188,7 +195,10 @@ impl ScenarioSpec {
                 }
                 "mode" => {
                     spec.mode = Mode::parse(need_str(k, v)?).ok_or_else(|| {
-                        anyhow!("{k}: unknown mode (solo|serve|suspend_resume|kill_adopt)")
+                        anyhow!(
+                            "{k}: unknown mode \
+                             (solo|serve|suspend_resume|kill_adopt|router)"
+                        )
                     })?
                 }
                 "tags" => {
@@ -348,6 +358,27 @@ mod tests {
             .any(|(k, v)| k == "faults" && v.as_str() == Some("eval_err@s1.i2*2")));
         assert_eq!(spec.expect.retries, Some(2));
         assert_eq!(spec.expect.nonfinite, Some(0));
+    }
+
+    #[test]
+    fn router_mode_parses_like_the_other_serve_modes() {
+        let spec = ScenarioSpec::parse(
+            "m",
+            r#"
+            mode = "router"
+            [config]
+            workload = "sphere"
+            steps = 6
+            [serve]
+            peers = 2
+            pause_at = 3
+            "#,
+        )
+        .unwrap();
+        assert_eq!(spec.mode, Mode::Router);
+        assert_eq!(spec.mode.name(), "router");
+        assert!(spec.compare_solo, "migration must not change the trajectory");
+        assert_eq!(spec.serve.pause_at, 3);
     }
 
     #[test]

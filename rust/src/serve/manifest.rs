@@ -132,7 +132,10 @@ fn budget_from_json(v: &Json) -> Result<Budget> {
     Ok(b)
 }
 
-fn entry_json(e: &Entry) -> Json {
+/// One entry as JSON — the persisted line format, and (since ISSUE 10)
+/// the `export`/`import` wire encoding: a migrating session travels as
+/// exactly the manifest line that `--adopt` would have read.
+pub fn entry_json(e: &Entry) -> Json {
     let mut fields = vec![
         ("id", Json::Num(e.id as f64)),
         ("state", Json::Str(e.state.clone())),
@@ -149,7 +152,8 @@ fn entry_json(e: &Entry) -> Json {
     obj(fields)
 }
 
-fn entry_from_json(v: &Json) -> Result<Entry> {
+/// Parse one entry from its JSON form (manifest line or `import` verb).
+pub fn entry_from_json(v: &Json) -> Result<Entry> {
     let id = v.get("id").and_then(Json::as_usize).context("manifest entry id")? as u64;
     let state = v
         .get("state")

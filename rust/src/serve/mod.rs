@@ -150,6 +150,7 @@
 //! | torn/failed suspend checkpoint (`ckpt_torn`/`ckpt_fail`) | one suspend (pause errors) or one resume (falls back per the stray-checkpoint rules) | the session where recoverable: a torn *adoption* checkpoint re-runs from seed instead of failing | pause error line, or a seed re-run after `--adopt` | trace `pause`/`resume` events; a failed resume finishes the trace with `finish error` (`stop_reason:"error"`) |
 //! | dropped manifest rewrite (`manifest_fail`) | one durability write (scheduler-owned site) | the server; the next mutation rewrites the manifest | nothing, unless the server dies inside the window — then `--adopt` sees the stale manifest | `optex_manifest_rewrites_total` counts only *successful* writes — a mutation without a matching increment is the signal |
 //! | client floods (>`serve.max_conns` conns, >1 MiB line) | the offending connection | everything else (shed at accept / reader) | `"too many connections"` / `"request line too long"` error line | `optex_conn_sheds_total` / `optex_line_rejects_total`, plus one rate-limited stderr line per burst (no longer silent) |
+//! | worker process death under `optex router` (ISSUE 10, `kill -9` a whole serve process) | that worker's in-RAM progress since its last suspend checkpoint | every session: the router re-reads the dead worker's manifest and re-places its active sessions onto surviving workers under their original client ids (un-checkpointed progress re-runs deterministically from seed); finished sessions answer from the router's result cache; with no survivor capacity sessions **park** until a worker returns | nothing on success (same ids, watch streams resubscribed); parked sessions answer the `migrating` error code until re-placed | router `stats` flips the worker's `alive:false` and moves its `sessions` count; see `rust/src/router/` |
 
 pub mod manifest;
 pub mod protocol;

@@ -3,12 +3,21 @@
 //! One request per line, one response line per request, in order. Built
 //! on the repo's own [`crate::util::json`] substrate — no external
 //! serialization deps. Every response carries `"ok": true|false`;
-//! errors add `"error"` with a human-readable reason.
+//! errors add `"error"` — a bare string under protocol v1, a structured
+//! `{"code","msg"}` envelope under v2 (see [`schema`]).
+//!
+//! This module owns the *request* grammar ([`parse_request`]). Every
+//! *response* shape lives in the typed [`schema`] module (ISSUE 10),
+//! whose builders are re-exported here so call sites read
+//! `protocol::status_line(..)` as before. `docs/PROTOCOL.md` documents
+//! the full wire surface — every verb, every response, both protocol
+//! versions — and the wire-conformance suite enforces it.
 //!
 //! ## Commands
 //!
 //! | cmd        | fields                                            |
 //! |------------|---------------------------------------------------|
+//! | `hello`    | `proto` (requested version, ≥ 1), `caps` (optional client capability list, advisory) — negotiate the connection's protocol version (ISSUE 10); never sent → v1 |
 //! | `submit`   | `config` (object of config-path → value, applied as `--set` overrides on the server's base config), `budget` (optional: `max_iters`, `target_loss`, `deadline_s`), `paused` (optional bool: admit suspended — submit a batch, `watch`, then `resume`) |
 //! | `status`   | `id` (optional: omit for all sessions)            |
 //! | `result`   | `id`, `theta` (optional bool: include the iterate)|
@@ -16,6 +25,9 @@
 //! | `pause`    | `id` — checkpoint-backed suspend                  |
 //! | `resume`   | `id`                                              |
 //! | `cancel`   | `id`                                              |
+//! | `export`   | `id` — remove a *suspended* session and return its manifest entry + checkpoint bytes (the migration source half, ISSUE 10) |
+//! | `import`   | `session` (a manifest entry object), `ckpt` (optional base64 checkpoint bytes) — adopt a session under a fresh local id (the migration destination half) |
+//! | `migrate`  | `id`, `to` (optional worker index) — move a session to another worker. A **router** verb: plain workers parse it (one grammar serves both tiers) but reject it with `bad_request` |
 //! | `stats`    | — server-wide metrics snapshot (ISSUE 9): every registry counter/gauge plus per-histogram `{count,sum}` |
 //! | `trace`    | `id` — the session's flight-recorder ring as rendered lines (also embedded in `status` for failed sessions) |
 //! | `shutdown` | —                                                 |
@@ -38,31 +50,56 @@
 //! client re-parsing `result.theta` recovers the server's bits — the
 //! loopback smoke test asserts byte-identity against a solo run.
 //!
+//! ## Migration (`export` / `import`, ISSUE 10)
+//!
+//! A suspended session is fully described by its manifest entry +
+//! suspend checkpoint — the same data `--adopt` reads from disk.
+//! `export` returns exactly that (checkpoint base64-encoded) and
+//! removes the session; `import` adopts it under a fresh local id on
+//! another server. `pause → export → import → resume` is therefore
+//! bit-identical to an unmigrated run, the same invariant the restart
+//! suite pins for kill/adopt. Import payloads ride the 1 MiB request
+//! line cap — very large sessions (θ + history beyond ~700 KiB of
+//! checkpoint) must migrate via a shared filesystem instead.
+//!
 //! ## A `nc`-able transcript
 //!
 //! ```text
 //! $ nc 127.0.0.1 7878
+//! {"cmd":"hello","proto":2}
+//! {"caps":["export","import","metrics","steppers","trace"],"ok":true,"proto":2}
 //! {"cmd":"submit","config":{"workload":"ackley","synth_dim":256,"steps":40,"seed":7,"optex.parallelism":4},"budget":{"target_loss":0.5}}
 //! {"id":1,"ok":true,"state":"pending"}
 //! {"cmd":"status","id":1}
 //! {"best_loss":2.1373822689056396,"id":1,"iters":12,"nonfinite":0,"ok":true,"retries":0,"state":"running","workload":"ackley"}
-//! {"cmd":"status"}
-//! {"ok":true,"sessions":[{"best_loss":0.49126,"id":1,"iters":23,"state":"done",...}]}
 //! {"cmd":"result","id":1,"theta":true}
 //! {"best_loss":0.49126,"final_loss":0.49126,"id":1,"iters":23,"ok":true,"state":"done","stop_reason":"target_loss","theta":[0.0013,...]}
+//! {"cmd":"status","id":99}
+//! {"error":{"code":"unknown_id","msg":"no such session 99"},"ok":false}
 //! {"cmd":"shutdown"}
 //! {"ok":true,"shutdown":true}
 //! ```
 
-use std::collections::BTreeMap;
+pub mod schema;
 
-use crate::obs::Snapshot;
-use crate::serve::session::{Budget, Session, SessionState};
+pub use schema::{
+    ack_line, error_line, error_line_for, export_line, hello_line, import_line,
+    iter_event_line, migrate_line, result_event_line, result_line, shutdown_line,
+    stats_line, status_all_line, status_line, submit_line, trace_line, watch_line,
+    ErrCode, Proto, Response,
+};
+
+use crate::serve::manifest;
+use crate::serve::session::Budget;
 use crate::util::json::Json;
 
 /// A parsed client request.
 #[derive(Clone, Debug)]
 pub enum Request {
+    /// Protocol handshake (ISSUE 10): negotiate the connection's
+    /// version. Handled on the connection's reader thread so the bound
+    /// version can never race the commands that follow it.
+    Hello { proto: u64 },
     Submit {
         /// `config` object flattened to `key=value` override strings in
         /// key order (deterministic application).
@@ -85,6 +122,27 @@ pub enum Request {
     Pause { id: u64 },
     Resume { id: u64 },
     Cancel { id: u64 },
+    /// Migration source half: remove a suspended session, returning its
+    /// manifest entry + checkpoint bytes.
+    Export { id: u64 },
+    /// Migration destination half: adopt a session from its manifest
+    /// entry (+ checkpoint bytes) under a fresh local id.
+    Import {
+        entry: manifest::Entry,
+        /// Decoded suspend-checkpoint bytes (absent when the session was
+        /// never suspended — it re-runs from its seed, like `--adopt`).
+        ckpt: Option<Vec<u8>>,
+    },
+    /// Router-tier verb (ISSUE 10): live-migrate a session to another
+    /// worker (`pause → export → import → resume` choreographed by the
+    /// router). Parsed here so ONE grammar serves both tiers; a plain
+    /// worker rejects it — it has no peers to move a session to.
+    Migrate {
+        id: u64,
+        /// Explicit destination worker index; absent → router picks the
+        /// least-loaded other live worker.
+        to: Option<usize>,
+    },
     /// Server-wide metrics snapshot (the wire twin of the Prometheus
     /// exposition on `serve.metrics_addr`).
     Stats,
@@ -167,6 +225,19 @@ pub fn parse_request(line: &str) -> Result<Request, String> {
         .and_then(Json::as_str)
         .ok_or_else(|| "missing \"cmd\"".to_string())?;
     match cmd {
+        "hello" => {
+            let proto = v
+                .get("proto")
+                .ok_or("hello requires \"proto\"")?
+                .as_usize()
+                .ok_or("\"proto\" must be a non-negative integer")?
+                as u64;
+            if let Some(caps) = v.get("caps") {
+                // advisory — validated for shape, otherwise ignored
+                caps.as_arr().ok_or("\"caps\" must be an array")?;
+            }
+            Ok(Request::Hello { proto })
+        }
         "submit" => {
             let mut overrides = Vec::new();
             if let Some(cfg) = v.get("config") {
@@ -227,6 +298,31 @@ pub fn parse_request(line: &str) -> Result<Request, String> {
         "pause" => Ok(Request::Pause { id: need_id(&v)? }),
         "resume" => Ok(Request::Resume { id: need_id(&v)? }),
         "cancel" => Ok(Request::Cancel { id: need_id(&v)? }),
+        "export" => Ok(Request::Export { id: need_id(&v)? }),
+        "import" => {
+            let entry = manifest::entry_from_json(
+                v.get("session").ok_or("import requires \"session\"")?,
+            )
+            .map_err(|e| format!("invalid import session: {e:#}"))?;
+            let ckpt = match v.get("ckpt") {
+                None | Some(Json::Null) => None,
+                Some(c) => {
+                    let b64 = c.as_str().ok_or("\"ckpt\" must be a base64 string")?;
+                    Some(
+                        crate::util::b64::decode(b64)
+                            .map_err(|e| format!("invalid import ckpt: {e}"))?,
+                    )
+                }
+            };
+            Ok(Request::Import { entry, ckpt })
+        }
+        "migrate" => Ok(Request::Migrate {
+            id: need_id(&v)?,
+            to: v
+                .get("to")
+                .map(|t| t.as_usize().ok_or("\"to\" must be a worker index"))
+                .transpose()?,
+        }),
         "stats" => Ok(Request::Stats),
         "trace" => Ok(Request::Trace { id: need_id(&v)? }),
         "shutdown" => Ok(Request::Shutdown),
@@ -234,224 +330,10 @@ pub fn parse_request(line: &str) -> Result<Request, String> {
     }
 }
 
-// -- response builders -------------------------------------------------------
-
-fn obj(fields: Vec<(&str, Json)>) -> Json {
-    let mut m = BTreeMap::new();
-    for (k, v) in fields {
-        m.insert(k.to_string(), v);
-    }
-    Json::Obj(m)
-}
-
-fn num_or_null(x: f64) -> Json {
-    if x.is_finite() {
-        Json::Num(x)
-    } else {
-        Json::Null
-    }
-}
-
-/// `{"ok":false,"error":...}` line.
-pub fn error_line(msg: &str) -> String {
-    obj(vec![("ok", Json::Bool(false)), ("error", Json::Str(msg.to_string()))]).to_string()
-}
-
-/// `submit` acknowledgement (`state` reflects `paused` admission).
-pub fn submit_line(id: u64, state: &str) -> String {
-    obj(vec![
-        ("ok", Json::Bool(true)),
-        ("id", Json::Num(id as f64)),
-        ("state", Json::Str(state.into())),
-    ])
-    .to_string()
-}
-
-/// `watch` acknowledgement.
-pub fn watch_line(id: u64, stream_every: u64) -> String {
-    obj(vec![
-        ("ok", Json::Bool(true)),
-        ("id", Json::Num(id as f64)),
-        ("watch", Json::Bool(true)),
-        ("stream_every", Json::Num(stream_every as f64)),
-    ])
-    .to_string()
-}
-
-/// Pushed iteration record (`watch` streaming). The `event` field is
-/// what distinguishes pushes from request responses on a shared
-/// connection — no response line carries one.
-pub fn iter_event_line(s: &Session) -> String {
-    let mut fields = vec![
-        ("event", Json::Str("iter".into())),
-        ("ok", Json::Bool(true)),
-        ("id", Json::Num(s.id() as f64)),
-        ("iter", Json::Num(s.iters_done() as f64)),
-        ("best_loss", num_or_null(s.best_loss())),
-        ("state", Json::Str(s.state().name().into())),
-    ];
-    if let Some(l) = s.last_loss() {
-        fields.push(("loss", num_or_null(l)));
-    }
-    obj(fields).to_string()
-}
-
-/// Pushed terminal record: `result_line` plus `"event":"result"` — a
-/// client that can parse `result` responses parses this for free, and
-/// the two are field-for-field identical apart from the marker (pinned
-/// by `serve_integration.rs`).
-pub fn result_event_line(s: &Session, include_theta: bool) -> String {
-    let mut fields = vec![("event", Json::Str("result".into()))];
-    fields.extend(result_fields(s, include_theta));
-    obj(fields).to_string()
-}
-
-/// `shutdown` acknowledgement.
-pub fn shutdown_line() -> String {
-    obj(vec![("ok", Json::Bool(true)), ("shutdown", Json::Bool(true))]).to_string()
-}
-
-/// `stats`: the registry snapshot as JSON — counters and gauges as
-/// name → value objects, histograms as `{count, sum}` (the full bucket
-/// vectors live on the Prometheus exposition, where `le` labels carry
-/// them idiomatically; the wire verb is the at-a-glance view).
-pub fn stats_line(snap: &Snapshot) -> String {
-    let mut counters = BTreeMap::new();
-    for &(name, v) in &snap.counters {
-        counters.insert(name.to_string(), Json::Num(v as f64));
-    }
-    let mut gauges = BTreeMap::new();
-    for &(name, v) in &snap.gauges {
-        gauges.insert(name.to_string(), Json::Num(v as f64));
-    }
-    let mut hists = BTreeMap::new();
-    for h in &snap.hists {
-        hists.insert(
-            h.name.to_string(),
-            obj(vec![
-                ("count", Json::Num(h.count as f64)),
-                ("sum", Json::Num(h.sum as f64)),
-            ]),
-        );
-    }
-    obj(vec![
-        ("ok", Json::Bool(true)),
-        ("counters", Json::Obj(counters)),
-        ("gauges", Json::Obj(gauges)),
-        ("hists", Json::Obj(hists)),
-    ])
-    .to_string()
-}
-
-/// `trace`: one session's flight-recorder ring, oldest first. `total`
-/// is the lifetime event count — when it exceeds the ring capacity the
-/// oldest lines have been overwritten.
-pub fn trace_line(s: &Session) -> String {
-    let lines: Vec<Json> = s.trace_lines().into_iter().map(Json::Str).collect();
-    obj(vec![
-        ("ok", Json::Bool(true)),
-        ("id", Json::Num(s.id() as f64)),
-        ("total", Json::Num(s.trace_total() as f64)),
-        ("trace", Json::Arr(lines)),
-    ])
-    .to_string()
-}
-
-/// Bare `{"ok":true,"id":N,"state":...}` (pause/resume/cancel acks).
-pub fn ack_line(s: &Session) -> String {
-    obj(vec![
-        ("ok", Json::Bool(true)),
-        ("id", Json::Num(s.id() as f64)),
-        ("state", Json::Str(s.state().name().into())),
-    ])
-    .to_string()
-}
-
-/// The common per-session status fields.
-fn session_fields(s: &Session) -> Vec<(&'static str, Json)> {
-    let mut f = vec![
-        ("id", Json::Num(s.id() as f64)),
-        ("state", Json::Str(s.state().name().into())),
-        ("workload", Json::Str(s.workload().to_string())),
-        ("method", Json::Str(s.method().into())),
-        ("iters", Json::Num(s.iters_done() as f64)),
-        ("best_loss", num_or_null(s.best_loss())),
-        ("suspended", Json::Bool(s.is_suspended())),
-        // robustness counters (ISSUE 7): retried fan-outs and absorbed
-        // non-finite points, cumulative across suspend cycles
-        ("retries", Json::Num(s.retries() as f64)),
-        ("nonfinite", Json::Num(s.nonfinite() as f64)),
-    ];
-    if s.quarantined() {
-        // only present when a panicking oracle was caught — distinguishes
-        // the catch_unwind quarantine from a clean Err or client cancel
-        f.push(("quarantined", Json::Bool(true)));
-    }
-    if let Some(l) = s.last_loss() {
-        f.push(("loss", num_or_null(l)));
-    }
-    if let Some(r) = s.stop_reason() {
-        f.push(("stop_reason", Json::Str(r.into())));
-    }
-    if let Some(e) = s.error() {
-        f.push(("error", Json::Str(e.to_string())));
-    }
-    if s.state() == SessionState::Failed {
-        // a failed session's status carries its flight recorder inline:
-        // the postmortem (which iteration, which fault site) rides the
-        // same response the client was already reading — no second
-        // round-trip needed to learn why it died
-        f.push((
-            "trace",
-            Json::Arr(s.trace_lines().into_iter().map(Json::Str).collect()),
-        ));
-    }
-    f
-}
-
-/// `status` for one session.
-pub fn status_line(s: &Session) -> String {
-    let mut fields = vec![("ok", Json::Bool(true))];
-    fields.extend(session_fields(s));
-    obj(fields).to_string()
-}
-
-/// `status` for every session (id order).
-pub fn status_all_line<'a>(sessions: impl Iterator<Item = &'a Session>) -> String {
-    let arr: Vec<Json> = sessions.map(|s| obj(session_fields(s))).collect();
-    obj(vec![("ok", Json::Bool(true)), ("sessions", Json::Arr(arr))]).to_string()
-}
-
-/// The `result` payload fields (shared by the response and the terminal
-/// `watch` push so the two cannot drift apart).
-fn result_fields(s: &Session, include_theta: bool) -> Vec<(&'static str, Json)> {
-    let mut fields = vec![("ok", Json::Bool(true))];
-    fields.extend(session_fields(s));
-    if let Some(l) = s.last_loss() {
-        fields.push(("final_loss", num_or_null(l)));
-    }
-    if include_theta {
-        match s.theta() {
-            Some(t) => fields.push((
-                "theta",
-                Json::Arr(t.iter().map(|&x| Json::Num(x as f64)).collect()),
-            )),
-            None => fields.push(("theta", Json::Null)),
-        }
-    }
-    fields
-}
-
-/// `result`: status fields + final loss (+ the iterate on request;
-/// f32 → f64 is exact and the writer prints shortest-roundtrip, so the
-/// client recovers the exact bits).
-pub fn result_line(s: &Session, include_theta: bool) -> String {
-    obj(result_fields(s, include_theta)).to_string()
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::serve::session::{Session, SessionState};
 
     #[test]
     fn parses_submit_with_config_and_budget() {
@@ -496,6 +378,91 @@ mod tests {
                 .unwrap(),
             Request::Watch { id: 3, stream_every: Some(5), include_theta: true }
         ));
+    }
+
+    #[test]
+    fn parses_hello_and_rejects_malformed_hello() {
+        assert!(matches!(
+            parse_request(r#"{"cmd":"hello","proto":2}"#).unwrap(),
+            Request::Hello { proto: 2 }
+        ));
+        // future versions parse fine — the SERVER decides supportability
+        assert!(matches!(
+            parse_request(r#"{"cmd":"hello","proto":7,"caps":["watch"]}"#).unwrap(),
+            Request::Hello { proto: 7 }
+        ));
+        for (line, want) in [
+            (r#"{"cmd":"hello"}"#, "requires \"proto\""),
+            (r#"{"cmd":"hello","proto":"two"}"#, "non-negative integer"),
+            (r#"{"cmd":"hello","proto":-1}"#, "non-negative integer"),
+            (r#"{"cmd":"hello","proto":2,"caps":"x"}"#, "must be an array"),
+        ] {
+            let err = parse_request(line).unwrap_err();
+            assert!(err.contains(want), "{line} -> {err}");
+        }
+    }
+
+    #[test]
+    fn parses_migrate() {
+        assert!(matches!(
+            parse_request(r#"{"cmd":"migrate","id":3}"#).unwrap(),
+            Request::Migrate { id: 3, to: None }
+        ));
+        assert!(matches!(
+            parse_request(r#"{"cmd":"migrate","id":3,"to":1}"#).unwrap(),
+            Request::Migrate { id: 3, to: Some(1) }
+        ));
+        for (line, want) in [
+            (r#"{"cmd":"migrate"}"#, "missing or invalid \"id\""),
+            (r#"{"cmd":"migrate","id":3,"to":"x"}"#, "\"to\" must be a worker index"),
+        ] {
+            let err = parse_request(line).unwrap_err();
+            assert!(err.contains(want), "{line} -> {err}");
+        }
+    }
+
+    #[test]
+    fn parses_export_and_import() {
+        assert!(matches!(
+            parse_request(r#"{"cmd":"export","id":4}"#).unwrap(),
+            Request::Export { id: 4 }
+        ));
+        let entry = manifest::Entry {
+            id: 4,
+            state: "paused".into(),
+            iters: 9,
+            ckpt: Some("session_4.ckpt".into()),
+            budget: Budget { max_iters: Some(20), ..Budget::default() },
+            overrides: vec!["seed=3".into()],
+        };
+        let line = format!(
+            r#"{{"cmd":"import","session":{},"ckpt":"{}"}}"#,
+            manifest::entry_json(&entry),
+            crate::util::b64::encode(&[1, 2, 3, 255])
+        );
+        let Request::Import { entry: got, ckpt } = parse_request(&line).unwrap() else {
+            panic!("expected import");
+        };
+        assert_eq!(got, entry);
+        assert_eq!(ckpt, Some(vec![1, 2, 3, 255]));
+        // checkpoint-less import: the live-at-kill migration shape
+        let line = format!(r#"{{"cmd":"import","session":{}}}"#, manifest::entry_json(&entry));
+        let Request::Import { ckpt, .. } = parse_request(&line).unwrap() else {
+            panic!("expected import");
+        };
+        assert_eq!(ckpt, None);
+        for (line, want) in [
+            (r#"{"cmd":"export"}"#, "missing or invalid \"id\""),
+            (r#"{"cmd":"import"}"#, "requires \"session\""),
+            (r#"{"cmd":"import","session":{"id":1}}"#, "invalid import session"),
+            (
+                r#"{"cmd":"import","session":{"id":1,"state":"paused","iters":0,"budget":{},"overrides":[]},"ckpt":"!!"}"#,
+                "invalid import ckpt",
+            ),
+        ] {
+            let err = parse_request(line).unwrap_err();
+            assert!(err.contains(want), "{line} -> {err}");
+        }
     }
 
     #[test]
@@ -660,6 +627,8 @@ mod tests {
             submit_line(1, "pending"),
             watch_line(1, 1),
             error_line("x"),
+            hello_line(),
+            import_line(&s),
         ] {
             assert!(Json::parse(&line).unwrap().get("event").is_none(), "{line}");
         }

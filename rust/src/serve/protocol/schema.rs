@@ -1,0 +1,651 @@
+//! The single typed response surface of the wire protocol (ISSUE 10).
+//!
+//! Before this module, `status_line` / `result_line` /
+//! `result_event_line` / the watch-terminal push / `ack_line` were
+//! parallel field-builders that could drift field-by-field. Now every
+//! line the server can emit is a [`Response`] value, and
+//! [`Response::render`] is the one place a response becomes bytes —
+//! shared field sets (`session_fields`, `result_fields`) are private
+//! helpers of that single renderer, so status, result and the terminal
+//! push *cannot* diverge. The full wire surface (every verb, every
+//! response, both protocol versions) is documented in
+//! `docs/PROTOCOL.md`, which the wire-conformance suite
+//! (`rust/tests/wire_conformance.rs`) parses and enforces against live
+//! responses.
+//!
+//! ## Protocol versions
+//!
+//! * **v1** (implicit): what every pre-ISSUE-10 client speaks. No
+//!   handshake; errors are `{"ok":false,"error":"<string>"}`. A client
+//!   that never sends `hello` gets v1 forever — existing tests and
+//!   goldens pass unchanged.
+//! * **v2** (negotiated via `hello`): errors carry a structured
+//!   envelope `{"ok":false,"error":{"code":"<slug>","msg":"<text>"}}`
+//!   with a *stable* machine-readable [`ErrCode`] the router branches
+//!   on instead of string-matching. Success shapes are identical to v1.
+//!
+//! Version state is per-connection, bound at the `hello` handshake on
+//! the connection's reader thread (so it can never race the commands
+//! that follow it on the same socket).
+
+use std::collections::BTreeMap;
+
+use crate::obs::Snapshot;
+use crate::serve::manifest;
+use crate::serve::session::{Session, SessionState};
+use crate::util::json::Json;
+
+/// Negotiated wire-protocol version of one connection.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Proto {
+    /// The implicit legacy protocol: no handshake, bare-string errors.
+    #[default]
+    V1,
+    /// Negotiated by `hello`: structured error envelope, same success
+    /// shapes.
+    V2,
+}
+
+impl Proto {
+    /// Highest protocol version this server speaks.
+    pub const MAX: u64 = 2;
+
+    /// The version number on the wire.
+    pub fn number(self) -> u64 {
+        match self {
+            Proto::V1 => 1,
+            Proto::V2 => 2,
+        }
+    }
+
+    /// Parse a client-requested version (None = unsupported).
+    pub fn from_number(n: u64) -> Option<Proto> {
+        match n {
+            1 => Some(Proto::V1),
+            2 => Some(Proto::V2),
+            _ => None,
+        }
+    }
+}
+
+/// Capabilities advertised by the `hello` response. A capability names
+/// a protocol surface the client may rely on, not a config state:
+/// `export`/`import` say the verbs exist, `steppers`/`metrics` say the
+/// concurrent scheduler and the obs verbs (`stats`, `trace`, the
+/// exposition listener) are compiled in.
+pub const CAPS: &[&str] = &["export", "import", "metrics", "steppers", "trace"];
+
+/// Stable machine-readable error codes (the proto-v2 envelope). The
+/// slugs are wire contract: the router (and any client) branches on
+/// them instead of string-matching `msg`, so renaming one is a
+/// protocol break. `msg` stays human-readable and unstable.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ErrCode {
+    /// Malformed or semantically invalid request (bad JSON, unknown
+    /// cmd/field, bad override value, invalid import payload).
+    BadRequest,
+    /// The request names a session this server does not hold.
+    UnknownId,
+    /// Admission refused: the scheduler is at `serve.max_sessions`.
+    Busy,
+    /// `hello` asked for a protocol version this server does not speak.
+    Version,
+    /// The session is parked mid-migration (router tier): its state has
+    /// been exported from one worker but not yet imported elsewhere.
+    Migrating,
+    /// Lifecycle verb invalid in the session's current state (resume a
+    /// running session, export an unsuspended one, ...).
+    BadState,
+    /// Connection shed at the `serve.max_conns` cap.
+    Overloaded,
+    /// Request line exceeded the 1 MiB line cap.
+    LineTooLong,
+    /// The server (or the router's worker) is shutting down.
+    ShuttingDown,
+    /// Server-side failure executing a valid request (checkpoint I/O,
+    /// a worker RPC the router could not complete, ...).
+    Internal,
+}
+
+impl ErrCode {
+    /// Every code, in slug order (the conformance suite checks the
+    /// documented table covers exactly this set).
+    pub const ALL: &'static [ErrCode] = &[
+        ErrCode::BadRequest,
+        ErrCode::BadState,
+        ErrCode::Busy,
+        ErrCode::Internal,
+        ErrCode::LineTooLong,
+        ErrCode::Migrating,
+        ErrCode::Overloaded,
+        ErrCode::ShuttingDown,
+        ErrCode::UnknownId,
+        ErrCode::Version,
+    ];
+
+    /// The stable wire slug.
+    pub fn slug(self) -> &'static str {
+        match self {
+            ErrCode::BadRequest => "bad_request",
+            ErrCode::UnknownId => "unknown_id",
+            ErrCode::Busy => "busy",
+            ErrCode::Version => "version",
+            ErrCode::Migrating => "migrating",
+            ErrCode::BadState => "bad_state",
+            ErrCode::Overloaded => "overloaded",
+            ErrCode::LineTooLong => "line_too_long",
+            ErrCode::ShuttingDown => "shutting_down",
+            ErrCode::Internal => "internal",
+        }
+    }
+
+    /// Reverse of [`ErrCode::slug`] — the router uses it to relay a
+    /// worker's coded error to a client without re-classifying. None
+    /// for slugs this build does not know (a newer peer).
+    pub fn from_slug(slug: &str) -> Option<ErrCode> {
+        ErrCode::ALL.iter().copied().find(|c| c.slug() == slug)
+    }
+}
+
+/// Every response line the serve tier can emit, as data. Rendering is
+/// centralized in [`Response::render`] so the shapes live in exactly
+/// one place; the free `*_line` functions below are thin constructors
+/// kept for call-site ergonomics (and v1 source compatibility).
+pub enum Response<'a> {
+    /// `{"ok":false,"error":...}` — string under v1, envelope under v2.
+    Error { code: ErrCode, msg: &'a str },
+    /// `hello` acknowledgement: server version + capability list.
+    Hello,
+    /// `submit` acknowledgement (`state` reflects `paused` admission).
+    Submit { id: u64, state: &'a str },
+    /// `watch` acknowledgement.
+    WatchAck { id: u64, stream_every: u64 },
+    /// Bare `{"ok":true,"id":N,"state":...}` (pause/resume/cancel).
+    Ack(&'a Session),
+    /// `status` for one session.
+    Status(&'a Session),
+    /// `status` for every session (id order).
+    StatusAll(Vec<&'a Session>),
+    /// `result`: status fields + final loss (+ θ on request).
+    Result { session: &'a Session, include_theta: bool },
+    /// Pushed iteration record (`watch` streaming). The `event` field
+    /// is what distinguishes pushes from request responses on a shared
+    /// connection — no response line carries one.
+    IterEvent(&'a Session),
+    /// Pushed terminal record: the `result` response plus
+    /// `"event":"result"` — field-for-field identical apart from the
+    /// marker (pinned by `serve_integration.rs`), and structurally
+    /// guaranteed here by sharing `result_fields`.
+    ResultEvent { session: &'a Session, include_theta: bool },
+    /// `export`: one migrating session as its manifest entry + suspend
+    /// checkpoint bytes (base64; absent when never suspended).
+    Export { entry: &'a manifest::Entry, ckpt_b64: Option<&'a str> },
+    /// `import` acknowledgement: the id the session was adopted under
+    /// (the importing server allocates — ids are server-local).
+    Import(&'a Session),
+    /// `stats`: the registry snapshot.
+    Stats(&'a Snapshot),
+    /// `trace`: one session's flight-recorder ring, oldest first.
+    Trace(&'a Session),
+    /// `shutdown` acknowledgement.
+    Shutdown,
+    /// `migrate` acknowledgement (router tier only): where the session
+    /// lives now and its post-move lifecycle state.
+    Migrated { id: u64, worker: u64, state: &'a str },
+}
+
+impl Response<'_> {
+    /// Render to one wire line (no trailing newline). `proto` only
+    /// affects the error shape today; passing it for every response
+    /// keeps the renderer the single version-aware point if v3 ever
+    /// changes a success shape.
+    pub fn render(&self, proto: Proto) -> String {
+        match self {
+            Response::Error { code, msg } => {
+                let err = match proto {
+                    Proto::V1 => Json::Str((*msg).to_string()),
+                    Proto::V2 => obj(vec![
+                        ("code", Json::Str(code.slug().into())),
+                        ("msg", Json::Str((*msg).to_string())),
+                    ]),
+                };
+                obj(vec![("ok", Json::Bool(false)), ("error", err)]).to_string()
+            }
+            Response::Hello => obj(vec![
+                ("ok", Json::Bool(true)),
+                ("proto", Json::Num(Proto::MAX as f64)),
+                (
+                    "caps",
+                    Json::Arr(CAPS.iter().map(|c| Json::Str((*c).into())).collect()),
+                ),
+            ])
+            .to_string(),
+            Response::Submit { id, state } => obj(vec![
+                ("ok", Json::Bool(true)),
+                ("id", Json::Num(*id as f64)),
+                ("state", Json::Str((*state).into())),
+            ])
+            .to_string(),
+            Response::WatchAck { id, stream_every } => obj(vec![
+                ("ok", Json::Bool(true)),
+                ("id", Json::Num(*id as f64)),
+                ("watch", Json::Bool(true)),
+                ("stream_every", Json::Num(*stream_every as f64)),
+            ])
+            .to_string(),
+            Response::Ack(s) => obj(vec![
+                ("ok", Json::Bool(true)),
+                ("id", Json::Num(s.id() as f64)),
+                ("state", Json::Str(s.state().name().into())),
+            ])
+            .to_string(),
+            Response::Status(s) => {
+                let mut fields = vec![("ok", Json::Bool(true))];
+                fields.extend(session_fields(s));
+                obj(fields).to_string()
+            }
+            Response::StatusAll(sessions) => {
+                let arr: Vec<Json> =
+                    sessions.iter().map(|s| obj(session_fields(s))).collect();
+                obj(vec![("ok", Json::Bool(true)), ("sessions", Json::Arr(arr))])
+                    .to_string()
+            }
+            Response::Result { session, include_theta } => {
+                obj(result_fields(session, *include_theta)).to_string()
+            }
+            Response::IterEvent(s) => {
+                let mut fields = vec![
+                    ("event", Json::Str("iter".into())),
+                    ("ok", Json::Bool(true)),
+                    ("id", Json::Num(s.id() as f64)),
+                    ("iter", Json::Num(s.iters_done() as f64)),
+                    ("best_loss", num_or_null(s.best_loss())),
+                    ("state", Json::Str(s.state().name().into())),
+                ];
+                if let Some(l) = s.last_loss() {
+                    fields.push(("loss", num_or_null(l)));
+                }
+                obj(fields).to_string()
+            }
+            Response::ResultEvent { session, include_theta } => {
+                let mut fields = vec![("event", Json::Str("result".into()))];
+                fields.extend(result_fields(session, *include_theta));
+                obj(fields).to_string()
+            }
+            Response::Export { entry, ckpt_b64 } => obj(vec![
+                ("ok", Json::Bool(true)),
+                ("id", Json::Num(entry.id as f64)),
+                ("iters", Json::Num(entry.iters as f64)),
+                ("session", manifest::entry_json(entry)),
+                (
+                    "ckpt",
+                    match ckpt_b64 {
+                        Some(b) => Json::Str((*b).to_string()),
+                        None => Json::Null,
+                    },
+                ),
+            ])
+            .to_string(),
+            Response::Import(s) => obj(vec![
+                ("ok", Json::Bool(true)),
+                ("id", Json::Num(s.id() as f64)),
+                ("state", Json::Str(s.state().name().into())),
+                ("iters", Json::Num(s.iters_done() as f64)),
+            ])
+            .to_string(),
+            Response::Stats(snap) => {
+                let mut counters = BTreeMap::new();
+                for &(name, v) in &snap.counters {
+                    counters.insert(name.to_string(), Json::Num(v as f64));
+                }
+                let mut gauges = BTreeMap::new();
+                for &(name, v) in &snap.gauges {
+                    gauges.insert(name.to_string(), Json::Num(v as f64));
+                }
+                let mut hists = BTreeMap::new();
+                for h in &snap.hists {
+                    hists.insert(
+                        h.name.to_string(),
+                        obj(vec![
+                            ("count", Json::Num(h.count as f64)),
+                            ("sum", Json::Num(h.sum as f64)),
+                        ]),
+                    );
+                }
+                obj(vec![
+                    ("ok", Json::Bool(true)),
+                    ("counters", Json::Obj(counters)),
+                    ("gauges", Json::Obj(gauges)),
+                    ("hists", Json::Obj(hists)),
+                ])
+                .to_string()
+            }
+            Response::Trace(s) => {
+                let lines: Vec<Json> =
+                    s.trace_lines().into_iter().map(Json::Str).collect();
+                obj(vec![
+                    ("ok", Json::Bool(true)),
+                    ("id", Json::Num(s.id() as f64)),
+                    ("total", Json::Num(s.trace_total() as f64)),
+                    ("trace", Json::Arr(lines)),
+                ])
+                .to_string()
+            }
+            Response::Shutdown => {
+                obj(vec![("ok", Json::Bool(true)), ("shutdown", Json::Bool(true))])
+                    .to_string()
+            }
+            Response::Migrated { id, worker, state } => obj(vec![
+                ("ok", Json::Bool(true)),
+                ("id", Json::Num(*id as f64)),
+                ("migrated", Json::Bool(true)),
+                ("worker", Json::Num(*worker as f64)),
+                ("state", Json::Str((*state).into())),
+            ])
+            .to_string(),
+        }
+    }
+}
+
+// -- shared field sets (the anti-drift core) ---------------------------------
+
+fn obj(fields: Vec<(&str, Json)>) -> Json {
+    let mut m = BTreeMap::new();
+    for (k, v) in fields {
+        m.insert(k.to_string(), v);
+    }
+    Json::Obj(m)
+}
+
+fn num_or_null(x: f64) -> Json {
+    if x.is_finite() {
+        Json::Num(x)
+    } else {
+        Json::Null
+    }
+}
+
+/// The common per-session status fields.
+fn session_fields(s: &Session) -> Vec<(&'static str, Json)> {
+    let mut f = vec![
+        ("id", Json::Num(s.id() as f64)),
+        ("state", Json::Str(s.state().name().into())),
+        ("workload", Json::Str(s.workload().to_string())),
+        ("method", Json::Str(s.method().into())),
+        ("iters", Json::Num(s.iters_done() as f64)),
+        ("best_loss", num_or_null(s.best_loss())),
+        ("suspended", Json::Bool(s.is_suspended())),
+        // robustness counters (ISSUE 7): retried fan-outs and absorbed
+        // non-finite points, cumulative across suspend cycles
+        ("retries", Json::Num(s.retries() as f64)),
+        ("nonfinite", Json::Num(s.nonfinite() as f64)),
+    ];
+    if s.quarantined() {
+        // only present when a panicking oracle was caught — distinguishes
+        // the catch_unwind quarantine from a clean Err or client cancel
+        f.push(("quarantined", Json::Bool(true)));
+    }
+    if let Some(l) = s.last_loss() {
+        f.push(("loss", num_or_null(l)));
+    }
+    if let Some(r) = s.stop_reason() {
+        f.push(("stop_reason", Json::Str(r.into())));
+    }
+    if let Some(e) = s.error() {
+        f.push(("error", Json::Str(e.to_string())));
+    }
+    if s.state() == SessionState::Failed {
+        // a failed session's status carries its flight recorder inline:
+        // the postmortem (which iteration, which fault site) rides the
+        // same response the client was already reading — no second
+        // round-trip needed to learn why it died
+        f.push((
+            "trace",
+            Json::Arr(s.trace_lines().into_iter().map(Json::Str).collect()),
+        ));
+    }
+    f
+}
+
+/// The `result` payload fields (shared by the response and the terminal
+/// `watch` push so the two cannot drift apart).
+fn result_fields(s: &Session, include_theta: bool) -> Vec<(&'static str, Json)> {
+    let mut fields = vec![("ok", Json::Bool(true))];
+    fields.extend(session_fields(s));
+    if let Some(l) = s.last_loss() {
+        fields.push(("final_loss", num_or_null(l)));
+    }
+    if include_theta {
+        match s.theta() {
+            Some(t) => fields.push((
+                "theta",
+                Json::Arr(t.iter().map(|&x| Json::Num(x as f64)).collect()),
+            )),
+            None => fields.push(("theta", Json::Null)),
+        }
+    }
+    fields
+}
+
+// -- thin constructors (v1-compatible call-site surface) ---------------------
+
+/// `{"ok":false,"error":"<msg>"}` — the v1 shape. Call sites that know
+/// the connection's version use [`error_line_for`]; the ones that can
+/// only be reached before a handshake (connection shed at accept) are
+/// v1 by construction.
+pub fn error_line(msg: &str) -> String {
+    Response::Error { code: ErrCode::BadRequest, msg }.render(Proto::V1)
+}
+
+/// Version-aware error line with a stable code (v2 envelope; plain
+/// string under v1, where the code is dropped).
+pub fn error_line_for(proto: Proto, code: ErrCode, msg: &str) -> String {
+    Response::Error { code, msg }.render(proto)
+}
+
+/// `hello` acknowledgement (version + caps).
+pub fn hello_line() -> String {
+    Response::Hello.render(Proto::V2)
+}
+
+/// `submit` acknowledgement (`state` reflects `paused` admission).
+pub fn submit_line(id: u64, state: &str) -> String {
+    Response::Submit { id, state }.render(Proto::V1)
+}
+
+/// `watch` acknowledgement.
+pub fn watch_line(id: u64, stream_every: u64) -> String {
+    Response::WatchAck { id, stream_every }.render(Proto::V1)
+}
+
+/// Pushed iteration record (`watch` streaming).
+pub fn iter_event_line(s: &Session) -> String {
+    Response::IterEvent(s).render(Proto::V1)
+}
+
+/// Pushed terminal record (`result` response + `"event":"result"`).
+pub fn result_event_line(s: &Session, include_theta: bool) -> String {
+    Response::ResultEvent { session: s, include_theta }.render(Proto::V1)
+}
+
+/// `shutdown` acknowledgement.
+pub fn shutdown_line() -> String {
+    Response::Shutdown.render(Proto::V1)
+}
+
+/// `stats`: the registry snapshot as JSON — counters and gauges as
+/// name → value objects, histograms as `{count, sum}` (the full bucket
+/// vectors live on the Prometheus exposition, where `le` labels carry
+/// them idiomatically; the wire verb is the at-a-glance view).
+pub fn stats_line(snap: &Snapshot) -> String {
+    Response::Stats(snap).render(Proto::V1)
+}
+
+/// `trace`: one session's flight-recorder ring, oldest first. `total`
+/// is the lifetime event count — when it exceeds the ring capacity the
+/// oldest lines have been overwritten.
+pub fn trace_line(s: &Session) -> String {
+    Response::Trace(s).render(Proto::V1)
+}
+
+/// Bare `{"ok":true,"id":N,"state":...}` (pause/resume/cancel acks).
+pub fn ack_line(s: &Session) -> String {
+    Response::Ack(s).render(Proto::V1)
+}
+
+/// `status` for one session.
+pub fn status_line(s: &Session) -> String {
+    Response::Status(s).render(Proto::V1)
+}
+
+/// `status` for every session (id order).
+pub fn status_all_line<'a>(sessions: impl Iterator<Item = &'a Session>) -> String {
+    Response::StatusAll(sessions.collect()).render(Proto::V1)
+}
+
+/// `result`: status fields + final loss (+ the iterate on request;
+/// f32 → f64 is exact and the writer prints shortest-roundtrip, so the
+/// client recovers the exact bits).
+pub fn result_line(s: &Session, include_theta: bool) -> String {
+    Response::Result { session: s, include_theta }.render(Proto::V1)
+}
+
+/// `export`: the migrating session's manifest entry + checkpoint bytes.
+pub fn export_line(entry: &manifest::Entry, ckpt_b64: Option<&str>) -> String {
+    Response::Export { entry, ckpt_b64 }.render(Proto::V1)
+}
+
+/// `import` acknowledgement (the adopting server's id for the session).
+pub fn import_line(s: &Session) -> String {
+    Response::Import(s).render(Proto::V1)
+}
+
+/// `migrate` acknowledgement (router tier): the session's new home.
+pub fn migrate_line(id: u64, worker: usize, state: &str) -> String {
+    Response::Migrated { id, worker: worker as u64, state }.render(Proto::V1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn error_envelope_is_versioned() {
+        let v1 = Json::parse(&error_line_for(
+            Proto::V1,
+            ErrCode::UnknownId,
+            "no such session 9",
+        ))
+        .unwrap();
+        assert_eq!(v1.get("ok").unwrap().as_bool(), Some(false));
+        // v1 keeps the legacy bare string — the code is dropped
+        assert_eq!(v1.get("error").unwrap().as_str(), Some("no such session 9"));
+
+        let v2 = Json::parse(&error_line_for(
+            Proto::V2,
+            ErrCode::UnknownId,
+            "no such session 9",
+        ))
+        .unwrap();
+        assert_eq!(v2.get("ok").unwrap().as_bool(), Some(false));
+        let env = v2.get("error").unwrap();
+        assert_eq!(env.get("code").unwrap().as_str(), Some("unknown_id"));
+        assert_eq!(env.get("msg").unwrap().as_str(), Some("no such session 9"));
+        // the legacy helper is exactly the v1 shape
+        assert_eq!(
+            error_line("no such session 9"),
+            error_line_for(Proto::V1, ErrCode::UnknownId, "no such session 9")
+        );
+    }
+
+    #[test]
+    fn hello_advertises_version_and_caps() {
+        let v = Json::parse(&hello_line()).unwrap();
+        assert_eq!(v.get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(v.get("proto").unwrap().as_usize(), Some(2));
+        let caps: Vec<&str> = v
+            .get("caps")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .filter_map(Json::as_str)
+            .collect();
+        assert_eq!(caps, CAPS);
+        for required in ["export", "import", "steppers", "metrics"] {
+            assert!(caps.contains(&required), "missing cap {required}");
+        }
+        assert!(v.get("event").is_none(), "responses never carry `event`");
+    }
+
+    #[test]
+    fn err_code_slugs_are_stable_and_unique() {
+        let mut slugs: Vec<&str> = ErrCode::ALL.iter().map(|c| c.slug()).collect();
+        // ALL is declared in slug order — the conformance suite's
+        // documented table is checked against exactly this
+        let mut sorted = slugs.clone();
+        sorted.sort_unstable();
+        assert_eq!(slugs, sorted, "ErrCode::ALL must stay slug-sorted");
+        let n = slugs.len();
+        slugs.dedup();
+        assert_eq!(slugs.len(), n, "slugs must be unique");
+        // spot-pin the contractual ones named in ISSUE 10
+        assert_eq!(ErrCode::BadRequest.slug(), "bad_request");
+        assert_eq!(ErrCode::UnknownId.slug(), "unknown_id");
+        assert_eq!(ErrCode::Busy.slug(), "busy");
+        assert_eq!(ErrCode::Version.slug(), "version");
+        assert_eq!(ErrCode::Migrating.slug(), "migrating");
+        // from_slug is the exact inverse over ALL, and unknowns are None
+        for &c in ErrCode::ALL {
+            assert_eq!(ErrCode::from_slug(c.slug()), Some(c));
+        }
+        assert_eq!(ErrCode::from_slug("no_such_code"), None);
+    }
+
+    #[test]
+    fn migrate_ack_names_the_new_home() {
+        let v = Json::parse(&migrate_line(5, 1, "running")).unwrap();
+        assert_eq!(v.get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(v.get("id").unwrap().as_usize(), Some(5));
+        assert_eq!(v.get("migrated").unwrap().as_bool(), Some(true));
+        assert_eq!(v.get("worker").unwrap().as_usize(), Some(1));
+        assert_eq!(v.get("state").unwrap().as_str(), Some("running"));
+        assert!(v.get("event").is_none(), "responses never carry `event`");
+    }
+
+    #[test]
+    fn proto_numbers_round_trip() {
+        assert_eq!(Proto::from_number(1), Some(Proto::V1));
+        assert_eq!(Proto::from_number(2), Some(Proto::V2));
+        assert_eq!(Proto::from_number(0), None);
+        assert_eq!(Proto::from_number(3), None);
+        assert_eq!(Proto::V1.number(), 1);
+        assert_eq!(Proto::V2.number(), 2);
+        assert_eq!(Proto::MAX, Proto::V2.number());
+        assert_eq!(Proto::default(), Proto::V1, "version-less clients are v1");
+    }
+
+    #[test]
+    fn export_line_carries_the_manifest_entry() {
+        let entry = manifest::Entry {
+            id: 7,
+            state: "paused".into(),
+            iters: 12,
+            ckpt: Some("session_7.ckpt".into()),
+            budget: crate::serve::session::Budget::default(),
+            overrides: vec!["seed=7".into(), "workload=\"sphere\"".into()],
+        };
+        let v = Json::parse(&export_line(&entry, Some("AAEC"))).unwrap();
+        assert_eq!(v.get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(v.get("id").unwrap().as_usize(), Some(7));
+        assert_eq!(v.get("iters").unwrap().as_usize(), Some(12));
+        assert_eq!(v.get("ckpt").unwrap().as_str(), Some("AAEC"));
+        // the embedded session object is exactly the manifest line —
+        // what --adopt would have read from disk
+        let back = manifest::entry_from_json(v.get("session").unwrap()).unwrap();
+        assert_eq!(back, entry);
+        // never-suspended sessions export a null checkpoint
+        let v = Json::parse(&export_line(&entry, None)).unwrap();
+        assert!(matches!(v.get("ckpt"), Some(Json::Null)));
+    }
+}

@@ -388,9 +388,11 @@ impl Scheduler {
         let mut live = 0u64;
         let mut paused = 0u64;
         let mut quarantined = 0u64;
+        let mut eval_load_us = 0.0f64;
         for s in self.sessions.values() {
             if s.is_runnable() {
                 live += 1;
+                eval_load_us += s.eval_ema_s() * 1e6;
             }
             if s.state() == SessionState::Paused {
                 paused += 1;
@@ -402,6 +404,9 @@ impl Scheduler {
         self.obs.gauge_set(Gauge::SessionsLive, live);
         self.obs.gauge_set(Gauge::SessionsPaused, paused);
         self.obs.gauge_set(Gauge::SessionsQuarantined, quarantined);
+        // the router's least-loaded placement key (ISSUE 10): expected
+        // sequential eval-seconds queued on this worker, µs resolution
+        self.obs.gauge_set(Gauge::EvalLoad, eval_load_us as u64);
         if let Some(arb) = &self.arbiter {
             self.obs.gauge_set(Gauge::ArbiterInUse, arb.in_use() as u64);
             self.obs
@@ -917,6 +922,99 @@ impl Scheduler {
         Ok(())
     }
 
+    /// Migration source half (ISSUE 10): remove session `id` from this
+    /// scheduler and return the pieces another server needs to adopt it
+    /// — its manifest entry plus its suspend-checkpoint bytes. The
+    /// entry is EXACTLY the line `--adopt` would have read, so
+    /// `export → import → resume` is bit-identical to kill → restart
+    /// `--adopt` → resume, an invariant the restart suite already pins.
+    ///
+    /// Suspended sessions travel with their checkpoint (resume
+    /// continues at iteration k+1); live ones travel entry-only and
+    /// re-run from their seed on the destination, the same degradation
+    /// the manifest gives a killed server. Callers wanting lossless
+    /// migration pause first. The session (and its checkpoint file) is
+    /// gone from this server on return — the caller owns the bytes.
+    pub fn export(&mut self, id: u64) -> Result<(manifest::Entry, Option<Vec<u8>>)> {
+        self.settle(id);
+        let session = match self.sessions.get(&id) {
+            Some(s) => s,
+            None => bail!("no such session {id}"),
+        };
+        let entry = match session.manifest_entry() {
+            Some(e) => e,
+            None => bail!(
+                "session {id} is not exportable (finished, or not \
+                 rebuildable from config)"
+            ),
+        };
+        let ckpt = match &entry.ckpt {
+            Some(name) => {
+                let path = self.ckpt_dir.join(name);
+                Some(std::fs::read(&path).with_context(|| {
+                    format!("exporting session {id}: read {}", path.display())
+                })?)
+            }
+            None => None,
+        };
+        self.sessions.remove(&id);
+        if let Some(name) = &entry.ckpt {
+            // the checkpoint now lives in the export payload; a stale
+            // file under a reusable id would poison a later adoption
+            std::fs::remove_file(self.ckpt_dir.join(name)).ok();
+        }
+        self.persist_manifest();
+        self.refresh_gauges();
+        Ok((entry, ckpt))
+    }
+
+    /// Migration destination half: adopt an exported session under a
+    /// FRESH local id (ids are server-local — the exporting server's id
+    /// means nothing here; the caller tracks the mapping). With `ckpt`
+    /// bytes the session resumes bit-identically from the exported
+    /// iteration; without, it re-runs from its seed (the crash-recovery
+    /// shape, where the dead worker left no suspend checkpoint).
+    /// Imported sessions count against `serve.max_sessions` like any
+    /// other admission. Returns the local id, with the session Paused —
+    /// the caller decides when to `resume`.
+    pub fn import(&mut self, entry: &manifest::Entry, ckpt: Option<&[u8]>) -> Result<u64> {
+        if self.active_count() >= self.max_sessions {
+            bail!(
+                "at capacity: {} active sessions (serve.max_sessions = {})",
+                self.active_count(),
+                self.max_sessions
+            );
+        }
+        let mut cfg = RunConfig::default();
+        for kv in &entry.overrides {
+            cfg.apply_override(kv)
+                .with_context(|| format!("importing session: override {kv:?}"))?;
+        }
+        let id = self.next_id;
+        let iters = match ckpt {
+            Some(bytes) => {
+                let path = self.ckpt_dir.join(format!("session_{id}.ckpt"));
+                // atomic like the manifest: a torn checkpoint under a
+                // registered id is worse than no checkpoint
+                let tmp = self.ckpt_dir.join(format!("session_{id}.ckpt.tmp"));
+                std::fs::write(&tmp, bytes)
+                    .and_then(|()| std::fs::rename(&tmp, &path))
+                    .with_context(|| {
+                        format!("importing session: write {}", path.display())
+                    })?;
+                entry.iters
+            }
+            None => 0,
+        };
+        let mut session = Session::adopt(id, cfg, entry.budget.clone(), &self.ckpt_dir, iters);
+        session.set_obs(self.obs.clone());
+        self.sessions.insert(id, session);
+        self.next_id += 1;
+        self.persist_manifest();
+        self.refresh_gauges();
+        Ok(id)
+    }
+
     fn get_mut(&mut self, id: u64) -> Result<&mut Session> {
         match self.sessions.get_mut(&id) {
             Some(s) => Ok(s),
@@ -1155,6 +1253,109 @@ mod tests {
                 s.theta().unwrap().iter().map(|x| x.to_bits()).collect();
             assert_eq!(bits, solo[i], "adopted session {id} diverged from solo");
         }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn export_import_migration_is_bit_identical() {
+        let dir_a = crate::testutil::fixtures::tmp_ckpt_dir("sched_export_a");
+        let dir_b = crate::testutil::fixtures::tmp_ckpt_dir("sched_export_b");
+        // solo reference trajectory
+        let cfg = synth_cfg(5, 6);
+        let workload = crate::workloads::factory::build(&cfg).unwrap();
+        let mut drv = crate::coordinator::Driver::new(cfg, workload).unwrap();
+        drv.run().unwrap();
+        let solo: Vec<u32> = drv.theta().iter().map(|x| x.to_bits()).collect();
+
+        // worker A: run 3 of 6 iterations, pause, export
+        let mut a = Scheduler::new(8, Policy::RoundRobin, dir_a.clone());
+        let id_a = a.submit(synth_cfg(5, 6), Budget::default()).unwrap();
+        for _ in 0..3 {
+            a.tick();
+        }
+        a.pause(id_a).unwrap();
+        let (entry, ckpt) = a.export(id_a).unwrap();
+        assert_eq!(entry.iters, 3);
+        assert!(ckpt.is_some(), "suspended export carries its checkpoint");
+        // gone from A: the session, its checkpoint file, its manifest line
+        assert!(a.session(id_a).is_none());
+        assert!(!dir_a.join(format!("session_{id_a}.ckpt")).exists());
+        let (_, entries) =
+            manifest::read(&manifest::manifest_path(&dir_a)).unwrap();
+        assert!(entries.is_empty(), "exported session must leave the manifest");
+
+        // worker B adopts it under ITS OWN id space and finishes the run
+        let mut b = Scheduler::new(8, Policy::RoundRobin, dir_b.clone());
+        b.submit(synth_cfg(77, 1), Budget::default()).unwrap(); // occupy id 1
+        let id_b = b.import(&entry, ckpt.as_deref()).unwrap();
+        assert_ne!(id_b, id_a, "importer allocates a fresh local id");
+        let s = b.session(id_b).unwrap();
+        assert_eq!(s.state(), SessionState::Paused);
+        assert_eq!(s.iters_done(), 3, "import restores the exported progress");
+        b.resume(id_b).unwrap();
+        b.run_to_completion();
+        let s = b.session(id_b).unwrap();
+        assert_eq!(s.state(), SessionState::Done);
+        let bits: Vec<u32> = s.theta().unwrap().iter().map(|x| x.to_bits()).collect();
+        assert_eq!(bits, solo, "migrated trajectory diverged from solo");
+        std::fs::remove_dir_all(&dir_a).ok();
+        std::fs::remove_dir_all(&dir_b).ok();
+    }
+
+    #[test]
+    fn export_of_a_live_session_reruns_from_seed() {
+        // the crash-recovery shape: no checkpoint travels, the importer
+        // re-runs from iteration 0 — same degradation as kill + --adopt
+        let dir_a = crate::testutil::fixtures::tmp_ckpt_dir("sched_export_live_a");
+        let dir_b = crate::testutil::fixtures::tmp_ckpt_dir("sched_export_live_b");
+        let mut a = Scheduler::new(8, Policy::RoundRobin, dir_a.clone());
+        let id_a = a.submit(synth_cfg(6, 4), Budget::default()).unwrap();
+        for _ in 0..2 {
+            a.tick();
+        }
+        let (entry, ckpt) = a.export(id_a).unwrap();
+        assert_eq!(ckpt, None, "live export has no suspend checkpoint");
+        assert_eq!(entry.iters, 2, "the entry still records observed progress");
+        let mut b = Scheduler::new(8, Policy::RoundRobin, dir_b.clone());
+        let id_b = b.import(&entry, None).unwrap();
+        assert_eq!(b.session(id_b).unwrap().iters_done(), 0, "re-runs from seed");
+        b.resume(id_b).unwrap();
+        b.run_to_completion();
+        assert_eq!(b.session(id_b).unwrap().state(), SessionState::Done);
+        std::fs::remove_dir_all(&dir_a).ok();
+        std::fs::remove_dir_all(&dir_b).ok();
+    }
+
+    #[test]
+    fn export_and_import_error_paths() {
+        let dir = crate::testutil::fixtures::tmp_ckpt_dir("sched_export_err");
+        let mut s = Scheduler::new(1, Policy::RoundRobin, dir.clone());
+        let err = s.export(99).unwrap_err();
+        assert!(format!("{err:#}").contains("no such session"), "{err:#}");
+        // finished sessions have nothing to migrate
+        let id = s.submit(synth_cfg(1, 2), Budget::default()).unwrap();
+        s.run_to_completion();
+        let err = s.export(id).unwrap_err();
+        assert!(format!("{err:#}").contains("not exportable"), "{err:#}");
+        // injected-oracle sessions cannot be rebuilt elsewhere
+        let src = crate::testutil::fixtures::dqn_replay_source(1);
+        let inj = s
+            .submit_with_source(synth_cfg(2, 2), Box::new(src), Budget::default())
+            .unwrap();
+        let err = s.export(inj).unwrap_err();
+        assert!(format!("{err:#}").contains("not exportable"), "{err:#}");
+        // import respects the admission cap (the injected session is
+        // active and max_sessions = 1)
+        let entry = manifest::Entry {
+            id: 50,
+            state: "paused".into(),
+            iters: 0,
+            ckpt: None,
+            budget: Budget::default(),
+            overrides: vec!["workload=\"sphere\"".into()],
+        };
+        let err = s.import(&entry, None).unwrap_err();
+        assert!(format!("{err:#}").contains("at capacity"), "{err:#}");
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -18,8 +18,12 @@
 //! * **Accept thread** — blocks on `accept`, spawns one reader thread
 //!   per connection. Woken for exit by a self-connect at shutdown.
 //! * **Reader threads** (one per connection) — parse one JSONL request
-//!   per line and ship `(request, line_tx)` to the scheduler, where
-//!   `line_tx` is the connection's long-lived outbound line queue.
+//!   per line and ship `(request, line_tx, proto)` to the scheduler,
+//!   where `line_tx` is the connection's long-lived outbound line queue
+//!   and `proto` its negotiated protocol version. The `hello`
+//!   handshake (ISSUE 10) is resolved HERE, between reads, so the
+//!   version bind strictly precedes every later line's parse — its
+//!   reply still rides the command queue to keep response order.
 //! * **Writer threads** (one per connection, ISSUE 5) — drain that
 //!   queue onto the socket. Request responses AND `watch` pushes flow
 //!   through the same queue, so everything a connection sees is written
@@ -73,7 +77,7 @@ use anyhow::{bail, Context, Result};
 use crate::config::RunConfig;
 use crate::obs::{expo, BurstLog, Counter, Gauge, Registry};
 use crate::serve::manifest;
-use crate::serve::protocol::{self, Request};
+use crate::serve::protocol::{self, ErrCode, Proto, Request};
 use crate::serve::scheduler::Scheduler;
 use crate::serve::session::Session;
 
@@ -92,6 +96,12 @@ enum ConnMsg {
     /// A request line — or a reader-side parse failure, which still
     /// travels the queue so responses keep arrival order.
     Request(Result<Request, String>),
+    /// A line the reader already rendered (the `hello` handshake reply,
+    /// ISSUE 10). `hello` is handled ON the reader thread — the
+    /// negotiated version must be bound before the next line is even
+    /// parsed, so it can never race a command behind it — but its reply
+    /// still travels the command queue so responses keep arrival order.
+    Reply(String),
     /// The client hung up: drop its `watch` subscriptions so its writer
     /// thread (parked on the line queue) exits instead of leaking —
     /// the connection cap only tracks reader threads.
@@ -104,8 +114,11 @@ enum ConnMsg {
     Wake,
 }
 
-/// A connection message plus the connection's outbound line queue.
-type Command = (ConnMsg, Sender<String>);
+/// A connection message plus the connection's outbound line queue and
+/// its protocol version at the moment the reader enqueued (versioned
+/// per-message, not per-lookup: a `hello` upgrading the connection must
+/// not retroactively re-shape replies to requests queued before it).
+type Command = (ConnMsg, Sender<String>, Proto);
 
 /// One `watch` subscription.
 struct Watcher {
@@ -209,7 +222,7 @@ impl Server {
                 cfg.serve.steppers,
                 Some(Arc::new(move || {
                     if let (Ok(tx), Ok(reply)) = (wake_tx.lock(), dummy_reply.lock()) {
-                        let _ = tx.send((ConnMsg::Wake, reply.clone()));
+                        let _ = tx.send((ConnMsg::Wake, reply.clone(), Proto::V1));
                     }
                 })),
             );
@@ -360,11 +373,16 @@ impl Server {
 
     /// Apply one command; returns true on shutdown. Replies are
     /// best-effort — a vanished client must not stall the scheduler.
-    fn dispatch(&mut self, (msg, reply): Command) -> bool {
+    fn dispatch(&mut self, (msg, reply, proto): Command) -> bool {
         let req = match msg {
             ConnMsg::Request(Ok(r)) => r,
             ConnMsg::Request(Err(msg)) => {
-                let _ = reply.send(protocol::error_line(&msg));
+                let _ = reply
+                    .send(protocol::error_line_for(proto, ErrCode::BadRequest, &msg));
+                return false;
+            }
+            ConnMsg::Reply(line) => {
+                let _ = reply.send(line);
                 return false;
             }
             ConnMsg::Disconnected => {
@@ -385,12 +403,20 @@ impl Server {
                 let _ = reply.send(protocol::shutdown_line());
                 return true;
             }
+            // hello is handled on the reader thread (the version bind
+            // must precede the next line's parse); this arm only fires
+            // for a hand-built command in tests
+            Request::Hello { .. } => protocol::hello_line(),
             Request::Submit { overrides, budget, paused } => {
                 let mut cfg = self.base_cfg.clone();
                 let applied: Result<(), _> =
                     overrides.iter().try_for_each(|kv| cfg.apply_override(kv));
                 match applied {
-                    Err(e) => protocol::error_line(&e.to_string()),
+                    Err(e) => protocol::error_line_for(
+                        proto,
+                        ErrCode::BadRequest,
+                        &e.to_string(),
+                    ),
                     Ok(()) => match self.sched.submit(cfg, budget) {
                         Ok(id) => {
                             if paused {
@@ -401,11 +427,15 @@ impl Server {
                                 // — cancel it and say which id died
                                 if let Err(e) = self.sched.pause(id) {
                                     let _ = self.sched.cancel(id);
-                                    protocol::error_line(&format!(
-                                        "session {id} admitted but paused \
-                                         submission failed (session \
-                                         cancelled): {e:#}"
-                                    ))
+                                    protocol::error_line_for(
+                                        proto,
+                                        ErrCode::Internal,
+                                        &format!(
+                                            "session {id} admitted but paused \
+                                             submission failed (session \
+                                             cancelled): {e:#}"
+                                        ),
+                                    )
                                 } else {
                                     protocol::submit_line(id, "paused")
                                 }
@@ -413,7 +443,7 @@ impl Server {
                                 protocol::submit_line(id, "pending")
                             }
                         }
-                        Err(e) => protocol::error_line(&format!("{e:#}")),
+                        Err(e) => coded_error(proto, &e, ErrCode::BadRequest),
                     },
                 }
             }
@@ -422,17 +452,17 @@ impl Server {
             }
             Request::Status { id: Some(id) } => match self.sched.session(id) {
                 Some(s) => protocol::status_line(s),
-                None => protocol::error_line(&format!("no such session {id}")),
+                None => unknown_id(proto, id),
             },
             Request::Result { id, include_theta } => match self.sched.session(id) {
                 Some(s) => protocol::result_line(s, include_theta),
-                None => protocol::error_line(&format!("no such session {id}")),
+                None => unknown_id(proto, id),
             },
             Request::Watch { id, stream_every, include_theta } => {
                 let every =
                     stream_every.unwrap_or(self.base_cfg.serve.stream_every as u64);
                 match self.sched.session(id) {
-                    None => protocol::error_line(&format!("no such session {id}")),
+                    None => unknown_id(proto, id),
                     Some(s) if !s.is_active() => {
                         // finished already: ack, then the terminal push
                         // (ordered behind the ack on the same queue)
@@ -452,28 +482,86 @@ impl Server {
                     }
                 }
             }
-            Request::Pause { id } => self.ack(id, Scheduler::pause),
-            Request::Resume { id } => self.ack(id, Scheduler::resume),
-            Request::Cancel { id } => self.ack(id, Scheduler::cancel),
+            Request::Pause { id } => self.ack(proto, id, Scheduler::pause),
+            Request::Resume { id } => self.ack(proto, id, Scheduler::resume),
+            Request::Cancel { id } => self.ack(proto, id, Scheduler::cancel),
+            Request::Export { id } => match self.sched.export(id) {
+                Ok((entry, ckpt)) => {
+                    let b64 = ckpt.map(|bytes| crate::util::b64::encode(&bytes));
+                    protocol::export_line(&entry, b64.as_deref())
+                }
+                // default Internal: the remaining failure is checkpoint
+                // I/O on a session that WAS exportable
+                Err(e) => coded_error(proto, &e, ErrCode::Internal),
+            },
+            Request::Import { entry, ckpt } => {
+                match self.sched.import(&entry, ckpt.as_deref()) {
+                    Ok(id) => protocol::import_line(
+                        self.sched.session(id).expect("import inserted id"),
+                    ),
+                    Err(e) => coded_error(proto, &e, ErrCode::Internal),
+                }
+            }
+            // one grammar serves both tiers, but only `optex router`
+            // has peers to move a session to
+            Request::Migrate { .. } => protocol::error_line_for(
+                proto,
+                ErrCode::BadRequest,
+                "migrate is a router verb (this is a single worker); \
+                 connect to an optex router",
+            ),
             Request::Stats => protocol::stats_line(&self.obs.snapshot()),
             Request::Trace { id } => match self.sched.session(id) {
                 Some(s) => protocol::trace_line(s),
-                None => protocol::error_line(&format!("no such session {id}")),
+                None => unknown_id(proto, id),
             },
         };
         let _ = reply.send(line);
         // cancel / failed resume finish sessions without a quantum —
-        // their watchers get the terminal push now, not never
+        // their watchers get the terminal push now, not never; an
+        // export's watchers are dropped here too (their session left)
         self.sweep_watches();
         false
     }
 
-    fn ack(&mut self, id: u64, op: fn(&mut Scheduler, u64) -> Result<()>) -> String {
+    fn ack(
+        &mut self,
+        proto: Proto,
+        id: u64,
+        op: fn(&mut Scheduler, u64) -> Result<()>,
+    ) -> String {
         match op(&mut self.sched, id) {
             Ok(()) => protocol::ack_line(self.sched.session(id).expect("op verified id")),
-            Err(e) => protocol::error_line(&format!("{e:#}")),
+            // default BadState: a lifecycle verb on an id that exists
+            // failed because the session cannot take it in its state
+            Err(e) => coded_error(proto, &e, ErrCode::BadState),
         }
     }
+}
+
+/// `{"error":...,"ok":false}` for the session the request named but
+/// this server does not hold.
+fn unknown_id(proto: Proto, id: u64) -> String {
+    protocol::error_line_for(proto, ErrCode::UnknownId, &format!("no such session {id}"))
+}
+
+/// Classify a scheduler error into its stable wire code by its
+/// recognized failure class, falling back to the verb's `default`.
+/// Matching on message text is the cost of `anyhow` errors — the
+/// substrings below are produced by the scheduler itself and pinned by
+/// its unit tests, so they cannot drift silently.
+fn coded_error(proto: Proto, e: &anyhow::Error, default: ErrCode) -> String {
+    let msg = format!("{e:#}");
+    let code = if msg.contains("no such session") {
+        ErrCode::UnknownId
+    } else if msg.contains("at capacity") {
+        ErrCode::Busy
+    } else if msg.contains("not exportable") {
+        ErrCode::BadState
+    } else {
+        default
+    };
+    protocol::error_line_for(proto, code, &msg)
 }
 
 fn accept_loop(
@@ -505,7 +593,16 @@ fn accept_loop(
                 "serve: shedding connection (serve.max_conns = {max_conns})"
             ));
             let mut s = stream;
-            let _ = s.write_all(protocol::error_line("too many connections").as_bytes());
+            // pre-handshake by construction, so the v1 error shape
+            // (Overloaded would be its v2 code, but no hello ran)
+            let _ = s.write_all(
+                protocol::error_line_for(
+                    Proto::V1,
+                    ErrCode::Overloaded,
+                    "too many connections",
+                )
+                .as_bytes(),
+            );
             let _ = s.write_all(b"\n");
             continue;
         }
@@ -592,6 +689,11 @@ fn handle_conn(
         return;
     }
     let mut reader = BufReader::new(read_half);
+    // the connection's negotiated protocol version (ISSUE 10). Owned by
+    // THIS thread and consulted between reads, so a `hello` strictly
+    // orders before every line behind it — version upgrades cannot race
+    // in-flight commands.
+    let mut proto = Proto::default();
     loop {
         let line = match read_line_capped(&mut reader) {
             Ok(Some(line)) => line,
@@ -602,7 +704,11 @@ fn handle_conn(
                 obs.incr(Counter::LineRejects);
                 reject_log
                     .note("serve: rejected over-long request line (cap 1 MiB)");
-                let _ = line_tx.send(protocol::error_line("request line too long"));
+                let _ = line_tx.send(protocol::error_line_for(
+                    proto,
+                    ErrCode::LineTooLong,
+                    "request line too long",
+                ));
                 break;
             }
             Err(LineError::Io) => break,
@@ -611,9 +717,45 @@ fn handle_conn(
             continue;
         }
         let parsed = protocol::parse_request(&line);
+        if let Ok(Request::Hello { proto: requested }) = parsed {
+            // handshake, handled here so the bind precedes the next
+            // parse; the reply rides the command queue (ConnMsg::Reply)
+            // to keep this connection's responses in arrival order
+            let reply = match Proto::from_number(requested) {
+                Some(p) => {
+                    proto = p;
+                    protocol::hello_line()
+                }
+                // the rejection is structured (v2 envelope) by design:
+                // a client asking for v2+ understands it, and the
+                // stable `version` code is what it retries on
+                None => protocol::error_line_for(
+                    Proto::V2,
+                    ErrCode::Version,
+                    &format!(
+                        "unsupported protocol version {requested} (this server \
+                         speaks 1..={})",
+                        Proto::MAX
+                    ),
+                ),
+            };
+            if tx.send((ConnMsg::Reply(reply), line_tx.clone(), proto)).is_err() {
+                let _ = line_tx.send(protocol::error_line_for(
+                    proto,
+                    ErrCode::ShuttingDown,
+                    "server is shutting down",
+                ));
+                return;
+            }
+            continue;
+        }
         let was_shutdown = matches!(parsed, Ok(Request::Shutdown));
-        if tx.send((ConnMsg::Request(parsed), line_tx.clone())).is_err() {
-            let _ = line_tx.send(protocol::error_line("server is shutting down"));
+        if tx.send((ConnMsg::Request(parsed), line_tx.clone(), proto)).is_err() {
+            let _ = line_tx.send(protocol::error_line_for(
+                proto,
+                ErrCode::ShuttingDown,
+                "server is shutting down",
+            ));
             return;
         }
         if was_shutdown {
@@ -625,7 +767,7 @@ fn handle_conn(
     // client hung up: tell the scheduler so it drops this connection's
     // watch subscriptions (best-effort — on server shutdown the whole
     // watch table dies with it anyway)
-    let _ = tx.send((ConnMsg::Disconnected, line_tx));
+    let _ = tx.send((ConnMsg::Disconnected, line_tx, proto));
 }
 
 /// `optex serve` entrypoint: bind, announce, run until shutdown.

@@ -6,6 +6,11 @@
 //! `PROP_SEED=<seed> cargo test <name>`. No shrinking — cases are kept
 //! small instead.
 
+/// `docs/PROTOCOL.md` parsing + response conformance (ISSUE 10) — the
+/// wire-conformance and router suites validate live lines against the
+/// document through this one implementation.
+pub mod wire;
+
 /// Shared test fixtures (integration tests live in separate crates and
 /// cannot share helpers any other way).
 pub mod fixtures {
@@ -97,12 +102,19 @@ pub mod fixtures {
             self.writer.flush().unwrap();
         }
 
-        /// Next line, whatever it is (response or `watch` push).
-        pub fn read_json(&mut self) -> crate::util::json::Json {
+        /// Next raw line (trimmed), whatever it is — the conformance
+        /// suite validates these bytes before parsing.
+        pub fn read_raw(&mut self) -> String {
             use std::io::BufRead;
             let mut reply = String::new();
             self.reader.read_line(&mut reply).unwrap();
-            crate::util::json::Json::parse(reply.trim())
+            reply.trim().to_string()
+        }
+
+        /// Next line, whatever it is (response or `watch` push).
+        pub fn read_json(&mut self) -> crate::util::json::Json {
+            let reply = self.read_raw();
+            crate::util::json::Json::parse(&reply)
                 .unwrap_or_else(|e| panic!("bad wire line {reply:?}: {e}"))
         }
 
@@ -121,6 +133,20 @@ pub mod fixtures {
         pub fn request(&mut self, line: &str) -> crate::util::json::Json {
             self.send(line);
             self.response()
+        }
+
+        /// One request → the RAW response line (pushes skipped), for
+        /// shape-conformance checks over the bytes on the wire.
+        pub fn request_line(&mut self, line: &str) -> String {
+            self.send(line);
+            loop {
+                let raw = self.read_raw();
+                let v = crate::util::json::Json::parse(&raw)
+                    .unwrap_or_else(|e| panic!("bad wire line {raw:?}: {e}"));
+                if v.get("event").is_none() {
+                    return raw;
+                }
+            }
         }
     }
 

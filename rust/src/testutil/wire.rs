@@ -1,0 +1,350 @@
+//! `docs/PROTOCOL.md` as an executable artifact (ISSUE 10).
+//!
+//! The protocol document is normative: every response shape the serve
+//! and router tiers can emit is written down there as a
+//! `### response: <name>` table. This module parses those tables (plus
+//! the verb and error-code tables) into [`Shapes`] and validates live
+//! wire lines against them — **both directions**: a missing `always`
+//! field fails, and an *undocumented* field fails too, so code and
+//! document cannot drift apart silently. The wire-conformance suite
+//! (`rust/tests/wire_conformance.rs`) and the router integration test
+//! share this one implementation; it lives in `testutil` because
+//! integration tests are separate crates that cannot share helpers any
+//! other way.
+//!
+//! The parser understands exactly the conventions PROTOCOL.md declares
+//! for itself (backticked field names, `\|`-escaped type unions,
+//! `always`/`optional` presence, dotted paths for nested objects) and
+//! nothing more — it is a checker for one repo-owned document, not a
+//! markdown library.
+
+use std::collections::BTreeMap;
+
+use crate::util::json::Json;
+
+/// One documented field of a response shape.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct FieldSpec {
+    /// `|`-joined type union (`bool`, `int`, `number`, `string`,
+    /// `array`, `object`, `null`), unescaped.
+    pub ty: String,
+    /// `always` (required) vs `optional`.
+    pub required: bool,
+}
+
+/// Every `### response: <name>` table of the document.
+#[derive(Clone, Debug, Default)]
+pub struct Shapes {
+    shapes: BTreeMap<String, BTreeMap<String, FieldSpec>>,
+}
+
+/// Read the repo's protocol document (the workspace manifest lives at
+/// the repo root, so the path resolves from any test crate).
+pub fn protocol_doc() -> String {
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("docs/PROTOCOL.md");
+    std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("reading {}: {e}", path.display()))
+}
+
+fn cells(line: &str) -> Vec<String> {
+    // `\|` inside a cell is an escaped literal pipe (type unions);
+    // protect it before splitting on the column separator
+    let protected = line.replace("\\|", "\u{1}");
+    protected
+        .trim()
+        .trim_matches('|')
+        .split('|')
+        .map(|c| c.trim().replace('\u{1}', "|"))
+        .collect()
+}
+
+fn unticked(cell: &str) -> String {
+    cell.trim_matches('`').to_string()
+}
+
+fn is_separator(row: &[String]) -> bool {
+    row.iter().all(|c| !c.is_empty() && c.chars().all(|ch| ch == '-' || ch == ':'))
+}
+
+/// The first markdown table after byte offset `from`: its data rows
+/// (header and `---` separator dropped), each as trimmed cells.
+fn first_table(doc: &str, from: usize) -> Vec<Vec<String>> {
+    let mut rows = Vec::new();
+    let mut in_table = false;
+    for line in doc[from..].lines() {
+        let t = line.trim();
+        if t.starts_with('|') {
+            in_table = true;
+            let row = cells(t);
+            if !is_separator(&row) {
+                rows.push(row);
+            }
+        } else if in_table {
+            break; // table ended
+        } else if t.starts_with('#') {
+            break; // next heading before any table
+        }
+    }
+    if !rows.is_empty() {
+        rows.remove(0); // header row
+    }
+    rows
+}
+
+impl Shapes {
+    /// Parse every `### response: <name>` table of the document.
+    pub fn parse(doc: &str) -> Shapes {
+        let mut shapes = BTreeMap::new();
+        let mut offset = 0;
+        for line in doc.lines() {
+            let here = offset;
+            offset += line.len() + 1;
+            let Some(name) = line.trim().strip_prefix("### response:") else {
+                continue;
+            };
+            let name = name.trim().to_string();
+            let mut fields = BTreeMap::new();
+            for row in first_table(doc, here + line.len()) {
+                assert!(
+                    row.len() >= 3,
+                    "shape {name}: bad table row {row:?} in PROTOCOL.md"
+                );
+                let required = match row[2].as_str() {
+                    "always" => true,
+                    "optional" => false,
+                    other => panic!("shape {name}: bad presence {other:?}"),
+                };
+                fields.insert(
+                    unticked(&row[0]),
+                    FieldSpec { ty: row[1].clone(), required },
+                );
+            }
+            assert!(!fields.is_empty(), "shape {name} has no table");
+            let prev = shapes.insert(name.clone(), fields);
+            assert!(prev.is_none(), "shape {name} documented twice");
+        }
+        Shapes { shapes }
+    }
+
+    /// The documented shape names.
+    pub fn names(&self) -> Vec<&str> {
+        self.shapes.keys().map(String::as_str).collect()
+    }
+
+    /// Validate one wire line against shape `name`. `Err` carries every
+    /// violation (missing required field, type mismatch, undocumented
+    /// field) — callers assert on it with the offending line in hand.
+    pub fn conform(&self, name: &str, v: &Json) -> Result<(), String> {
+        let spec = self
+            .shapes
+            .get(name)
+            .ok_or_else(|| format!("shape {name:?} is not documented in PROTOCOL.md"))?;
+        let obj = v.as_obj().ok_or_else(|| format!("{name}: response is not an object"))?;
+        let mut errs = Vec::new();
+        for (field, fs) in spec {
+            match lookup(v, field) {
+                Some(got) => {
+                    if !type_ok(&fs.ty, got) {
+                        errs.push(format!("{name}.{field}: want {}, got {got:?}", fs.ty));
+                    }
+                }
+                None if fs.required => errs.push(format!("{name}.{field}: missing")),
+                None => {}
+            }
+        }
+        // strictness: every key on the wire must be documented — at the
+        // top level, and inside any nested object the spec reaches into
+        // with a dotted path (e.g. `error.code`)
+        for key in obj.keys() {
+            if !spec.contains_key(key) {
+                errs.push(format!("{name}.{key}: undocumented field on the wire"));
+            }
+        }
+        for field in spec.keys().filter(|f| f.contains('.')) {
+            let parent = field.split('.').next().unwrap();
+            if let Some(inner) = obj.get(parent).and_then(Json::as_obj) {
+                for key in inner.keys() {
+                    let dotted = format!("{parent}.{key}");
+                    if !spec.contains_key(dotted.as_str()) {
+                        errs.push(format!(
+                            "{name}.{dotted}: undocumented field on the wire"
+                        ));
+                    }
+                }
+            }
+        }
+        errs.sort();
+        errs.dedup();
+        if errs.is_empty() {
+            Ok(())
+        } else {
+            Err(errs.join("; "))
+        }
+    }
+
+    /// [`Shapes::conform`] that panics with the raw line (the test-side
+    /// ergonomic form).
+    pub fn assert_conforms(&self, name: &str, line: &str) -> Json {
+        let v = Json::parse(line)
+            .unwrap_or_else(|e| panic!("unparseable wire line {line:?}: {e}"));
+        if let Err(e) = self.conform(name, &v) {
+            panic!("wire line does not conform to {name}: {e}\n  line: {line}");
+        }
+        v
+    }
+}
+
+fn lookup<'a>(v: &'a Json, dotted: &str) -> Option<&'a Json> {
+    let mut cur = v;
+    for part in dotted.split('.') {
+        cur = cur.get(part)?;
+    }
+    Some(cur)
+}
+
+fn type_ok(union: &str, v: &Json) -> bool {
+    union.split('|').any(|ty| match ty {
+        "bool" => matches!(v, Json::Bool(_)),
+        "int" => v.as_usize().is_some(),
+        "number" => matches!(v, Json::Num(_)),
+        "string" => matches!(v, Json::Str(_)),
+        "array" => matches!(v, Json::Arr(_)),
+        "object" => matches!(v, Json::Obj(_)),
+        "null" => matches!(v, Json::Null),
+        other => panic!("unknown type {other:?} in PROTOCOL.md"),
+    })
+}
+
+/// The `## Error codes` table's slugs, in document order.
+pub fn parse_error_codes(doc: &str) -> Vec<String> {
+    // anchored to a line start: the intro prose mentions the heading in
+    // backticks, which a bare `find` would hit first
+    let heading = "\n## Error codes\n";
+    let at = doc.find(heading).expect("PROTOCOL.md has an Error codes section");
+    first_table(doc, at + heading.len())
+        .into_iter()
+        .map(|row| unticked(&row[0]))
+        .collect()
+}
+
+/// The `## Verbs` table: verb → success-response shape name.
+pub fn parse_verbs(doc: &str) -> Vec<(String, String)> {
+    let heading = "\n## Verbs\n";
+    let at = doc.find(heading).expect("PROTOCOL.md has a Verbs section");
+    first_table(doc, at + heading.len())
+        .into_iter()
+        .map(|row| (unticked(&row[0]), row[1].clone()))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::protocol::{self, ErrCode, Proto};
+
+    // These unit tests run in tier-1 `cargo test`, so the document and
+    // the schema module cannot drift even before the (heavier) live
+    // conformance suite runs.
+
+    #[test]
+    fn document_parses_and_covers_the_wire_surface() {
+        let doc = protocol_doc();
+        let shapes = Shapes::parse(&doc);
+        for name in [
+            "error-v1",
+            "error-v2",
+            "hello",
+            "submit-ack",
+            "ack",
+            "watch-ack",
+            "session",
+            "status",
+            "status-all",
+            "result",
+            "iter-event",
+            "result-event",
+            "export",
+            "import-ack",
+            "migrate-ack",
+            "stats",
+            "router-stats",
+            "router-stats-worker",
+            "trace",
+            "shutdown-ack",
+        ] {
+            assert!(shapes.names().contains(&name), "shape {name} missing");
+        }
+        let verbs = parse_verbs(&doc);
+        for (verb, shape) in &verbs {
+            assert!(
+                shapes.names().contains(&shape.as_str()),
+                "verb {verb} maps to undocumented shape {shape}"
+            );
+        }
+        let documented: Vec<&str> = verbs.iter().map(|(v, _)| v.as_str()).collect();
+        for verb in [
+            "hello", "submit", "status", "result", "watch", "pause", "resume",
+            "cancel", "export", "import", "migrate", "stats", "trace", "shutdown",
+        ] {
+            assert!(documented.contains(&verb), "verb {verb} undocumented");
+        }
+        assert_eq!(documented.len(), 14, "undocumented extra verbs: {documented:?}");
+    }
+
+    #[test]
+    fn error_code_table_mirrors_the_schema_exactly() {
+        let codes = parse_error_codes(&protocol_doc());
+        let want: Vec<String> =
+            ErrCode::ALL.iter().map(|c| c.slug().to_string()).collect();
+        assert_eq!(codes, want, "PROTOCOL.md error table must mirror ErrCode::ALL");
+    }
+
+    #[test]
+    fn schema_renderers_conform_to_their_documented_shapes() {
+        let shapes = Shapes::parse(&protocol_doc());
+        shapes.assert_conforms("hello", &protocol::hello_line());
+        shapes.assert_conforms("submit-ack", &protocol::submit_line(3, "pending"));
+        shapes.assert_conforms("watch-ack", &protocol::watch_line(3, 5));
+        shapes.assert_conforms("shutdown-ack", &protocol::shutdown_line());
+        shapes.assert_conforms("migrate-ack", &protocol::migrate_line(5, 1, "running"));
+        shapes.assert_conforms(
+            "error-v1",
+            &protocol::error_line_for(Proto::V1, ErrCode::UnknownId, "no such session 9"),
+        );
+        let line =
+            protocol::error_line_for(Proto::V2, ErrCode::UnknownId, "no such session 9");
+        let v = shapes.assert_conforms("error-v2", &line);
+        let code = v.get("error").unwrap().get("code").unwrap().as_str().unwrap();
+        assert!(ErrCode::from_slug(code).is_some(), "{code}");
+    }
+
+    #[test]
+    fn conformance_is_strict_in_both_directions() {
+        let shapes = Shapes::parse(&protocol_doc());
+        // missing required field
+        let v = Json::parse(r#"{"ok":true}"#).unwrap();
+        let e = shapes.conform("submit-ack", &v).unwrap_err();
+        assert!(e.contains("id: missing"), "{e}");
+        // undocumented field
+        let v = Json::parse(r#"{"ok":true,"id":1,"state":"pending","bonus":1}"#).unwrap();
+        let e = shapes.conform("submit-ack", &v).unwrap_err();
+        assert!(e.contains("bonus: undocumented"), "{e}");
+        // type mismatch, including inside a dotted path
+        let v = Json::parse(r#"{"ok":true,"id":"one","state":"pending"}"#).unwrap();
+        let e = shapes.conform("submit-ack", &v).unwrap_err();
+        assert!(e.contains("want int"), "{e}");
+        let v = Json::parse(r#"{"ok":false,"error":{"code":7,"msg":"x"}}"#).unwrap();
+        let e = shapes.conform("error-v2", &v).unwrap_err();
+        assert!(e.contains("error.code"), "{e}");
+        // undocumented nested field under a dotted-spec parent
+        let v = Json::parse(r#"{"ok":false,"error":{"code":"busy","msg":"x","extra":1}}"#)
+            .unwrap();
+        let e = shapes.conform("error-v2", &v).unwrap_err();
+        assert!(e.contains("error.extra: undocumented"), "{e}");
+        // null is accepted exactly where the union says so
+        let v =
+            Json::parse(r#"{"alive":true,"addr":"a","eval_load_us":null,"index":0,"sessions":2}"#)
+                .unwrap();
+        shapes.conform("router-stats-worker", &v).unwrap();
+    }
+}

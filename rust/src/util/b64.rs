@@ -1,0 +1,113 @@
+//! Minimal base64 (RFC 4648, standard alphabet, padded) — the offline
+//! crate set has no encoder, and the serve tier's `export`/`import`
+//! verbs need to carry raw checkpoint bytes inside a JSONL line.
+//!
+//! Size discipline: base64 inflates by 4/3, and import requests ride
+//! the serve tier's 1 MiB request-line cap — callers migrating very
+//! large sessions hit that bound, which `docs/PROTOCOL.md` documents as
+//! the import payload limit.
+
+const ALPHABET: &[u8; 64] =
+    b"ABCDEFGHIJKLMNOPQRSTUVWXYZabcdefghijklmnopqrstuvwxyz0123456789+/";
+
+/// Encode `data` as padded standard base64.
+pub fn encode(data: &[u8]) -> String {
+    let mut out = String::with_capacity(data.len() * 4 / 3 + 4);
+    for chunk in data.chunks(3) {
+        let b0 = chunk[0] as u32;
+        let b1 = chunk.get(1).copied().unwrap_or(0) as u32;
+        let b2 = chunk.get(2).copied().unwrap_or(0) as u32;
+        let n = (b0 << 16) | (b1 << 8) | b2;
+        out.push(ALPHABET[(n >> 18) as usize & 0x3f] as char);
+        out.push(ALPHABET[(n >> 12) as usize & 0x3f] as char);
+        out.push(if chunk.len() > 1 {
+            ALPHABET[(n >> 6) as usize & 0x3f] as char
+        } else {
+            '='
+        });
+        out.push(if chunk.len() > 2 { ALPHABET[n as usize & 0x3f] as char } else { '=' });
+    }
+    out
+}
+
+fn decode_sym(c: u8) -> Result<u32, String> {
+    match c {
+        b'A'..=b'Z' => Ok((c - b'A') as u32),
+        b'a'..=b'z' => Ok((c - b'a') as u32 + 26),
+        b'0'..=b'9' => Ok((c - b'0') as u32 + 52),
+        b'+' => Ok(62),
+        b'/' => Ok(63),
+        other => Err(format!("invalid base64 byte 0x{other:02x}")),
+    }
+}
+
+/// Decode padded standard base64. Rejects whitespace, wrong padding and
+/// out-of-alphabet bytes (wire payloads are machine-built; leniency
+/// would only mask corruption).
+pub fn decode(s: &str) -> Result<Vec<u8>, String> {
+    let bytes = s.as_bytes();
+    if bytes.len() % 4 != 0 {
+        return Err(format!("base64 length {} not a multiple of 4", bytes.len()));
+    }
+    let mut out = Vec::with_capacity(bytes.len() / 4 * 3);
+    for (i, quad) in bytes.chunks_exact(4).enumerate() {
+        let last = (i + 1) * 4 == bytes.len();
+        let pad = quad.iter().filter(|&&c| c == b'=').count();
+        if pad > 0 && (!last || quad[..4 - pad].contains(&b'=') || pad > 2) {
+            return Err("misplaced base64 padding".into());
+        }
+        let mut n = 0u32;
+        for &c in &quad[..4 - pad] {
+            n = (n << 6) | decode_sym(c)?;
+        }
+        n <<= 6 * pad as u32;
+        out.push((n >> 16) as u8);
+        if pad < 2 {
+            out.push((n >> 8) as u8);
+        }
+        if pad < 1 {
+            out.push(n as u8);
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rfc4648_vectors() {
+        for (plain, enc) in [
+            ("", ""),
+            ("f", "Zg=="),
+            ("fo", "Zm8="),
+            ("foo", "Zm9v"),
+            ("foob", "Zm9vYg=="),
+            ("fooba", "Zm9vYmE="),
+            ("foobar", "Zm9vYmFy"),
+        ] {
+            assert_eq!(encode(plain.as_bytes()), enc);
+            assert_eq!(decode(enc).unwrap(), plain.as_bytes());
+        }
+    }
+
+    #[test]
+    fn binary_round_trip() {
+        // checkpoint-like payload: every byte value, awkward lengths
+        for len in [0usize, 1, 2, 3, 255, 256, 257, 1000] {
+            let data: Vec<u8> = (0..len).map(|i| (i * 7 % 256) as u8).collect();
+            let enc = encode(&data);
+            assert_eq!(decode(&enc).unwrap(), data, "len {len}");
+        }
+    }
+
+    #[test]
+    fn rejects_malformed_input() {
+        for bad in ["Zg=", "Zg===", "Z===", "=Zg=", "Zg==Zg==", "Zm 9v", "Zm\n9v", "Zm9v!"] {
+            assert!(decode(bad).is_err(), "{bad:?} should be rejected");
+        }
+        // '=' only valid as trailing padding of the final quad
+        assert!(decode("Zg==Zm9v").is_err());
+    }
+}

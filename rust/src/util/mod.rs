@@ -1,6 +1,7 @@
 //! Cross-cutting utility substrates (all built from scratch — the offline
 //! crate set has no rand / serde_json / csv / timing helpers).
 
+pub mod b64;
 pub mod csv;
 pub mod json;
 pub mod rng;

@@ -1,0 +1,501 @@
+//! ISSUE 10 acceptance: the router tier, end to end, against REAL
+//! `optex serve` worker processes.
+//!
+//! * `router_smoke_*` (tier-1): a router over two workers answers the
+//!   full client surface conformantly (shapes from `docs/PROTOCOL.md`),
+//!   serves a session byte-identical to solo, and live-migrates a
+//!   paused session between workers through the wire verbs.
+//! * The `#[ignore]`d matrices (run in release by the `router-smoke` CI
+//!   job via `--include-ignored`): K = 8 mixed sessions spread across
+//!   two workers with byte-identical thetas; a mid-run live migration
+//!   whose watch stream stays in iteration order with no gap or
+//!   duplicate across the move; and a SIGKILLed worker whose sessions
+//!   are re-placed on the survivor and still finish byte-identical.
+//!
+//! Byte-identity everywhere means: the final θ bits equal an
+//! uninterrupted in-process solo run of the same config — the router
+//! is invisible to the numerics, which is the paper-level invariant
+//! (OptEx's proxy-parallelized trajectories must not depend on where
+//! they are scheduled).
+
+use std::io::{BufRead, BufReader};
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+use optex::config::RunConfig;
+use optex::coordinator::Driver;
+use optex::testutil::fixtures::{submit_json, tmp_ckpt_dir, WireClient};
+use optex::testutil::wire::{self, Shapes};
+use optex::util::json::Json;
+use optex::workloads::factory;
+
+/// Spawn the REAL binary as a router over `workers` worker processes,
+/// on an ephemeral loopback port; returns the child + parsed address.
+fn spawn_router(dir: &std::path::Path, workers: usize) -> (Child, String) {
+    let mut child = Command::new(env!("CARGO_BIN_EXE_optex"))
+        .args([
+            "router",
+            "--addr",
+            "127.0.0.1:0",
+            "--workers",
+            &workers.to_string(),
+            "--dir",
+            &dir.display().to_string(),
+        ])
+        .stdout(Stdio::piped())
+        .stderr(Stdio::inherit())
+        .spawn()
+        .expect("spawning optex router");
+    let stdout = child.stdout.take().expect("router stdout piped");
+    let mut lines = BufReader::new(stdout).lines();
+    let addr = loop {
+        let line = lines
+            .next()
+            .expect("router exited before announcing its address")
+            .expect("reading router stdout");
+        if let Some(rest) = line.strip_prefix("router: listening on ") {
+            break rest.split_whitespace().next().expect("address token").to_string();
+        }
+    };
+    std::thread::spawn(move || for _ in lines {});
+    (child, addr)
+}
+
+fn solo_theta_bits(overrides: &[(&'static str, String)]) -> Vec<u32> {
+    let mut cfg = RunConfig::default();
+    for (k, v) in overrides {
+        cfg.apply_override(&format!("{k}={v}")).unwrap();
+    }
+    let workload = factory::build(&cfg).unwrap();
+    let mut drv = Driver::new(cfg, workload).unwrap();
+    drv.run().unwrap();
+    drv.theta().iter().map(|x| x.to_bits()).collect()
+}
+
+fn theta_bits(r: &Json) -> Vec<u32> {
+    r.get("theta")
+        .unwrap_or_else(|| panic!("no theta in {r:?}"))
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|v| (v.as_f64().unwrap() as f32).to_bits())
+        .collect()
+}
+
+fn poll_state(client: &mut WireClient, id: u64) -> (String, u64) {
+    let r = client.request(&format!("{{\"cmd\":\"status\",\"id\":{id}}}"));
+    assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r:?}");
+    (
+        r.get("state").unwrap().as_str().unwrap().to_string(),
+        r.get("iters").unwrap().as_usize().unwrap() as u64,
+    )
+}
+
+fn wait_done(client: &mut WireClient, id: u64, deadline: Instant) {
+    loop {
+        let (state, _) = poll_state(client, id);
+        match state.as_str() {
+            "done" => return,
+            "failed" => panic!("session {id} failed"),
+            _ => {
+                assert!(Instant::now() < deadline, "session {id} never finished");
+                std::thread::sleep(Duration::from_millis(5));
+            }
+        }
+    }
+}
+
+fn err_code(v: &Json) -> &str {
+    v.get("error").and_then(|e| e.get("code")).and_then(Json::as_str).unwrap_or("")
+}
+
+/// Tier-1 smoke: full surface, byte-identity, paused-session migration.
+#[test]
+fn router_smoke_serves_and_migrates_conformantly() {
+    let shapes = Shapes::parse(&wire::protocol_doc());
+    let dir = tmp_ckpt_dir("router_smoke");
+    let (mut child, addr) = spawn_router(&dir, 2);
+    let mut c = WireClient::connect(&addr);
+    shapes.assert_conforms("hello", &c.request_line("{\"cmd\":\"hello\",\"proto\":2}"));
+
+    // the router's stats shape: two live workers, no routes yet
+    let st = shapes.assert_conforms("router-stats", &c.request_line("{\"cmd\":\"stats\"}"));
+    let workers = st.get("workers").unwrap().as_arr().unwrap().clone();
+    assert_eq!(workers.len(), 2);
+    for row in &workers {
+        if let Err(e) = shapes.conform("router-stats-worker", row) {
+            panic!("worker row does not conform: {e}\n  row: {row:?}");
+        }
+        assert_eq!(row.get("alive").unwrap().as_bool(), Some(true));
+    }
+
+    // a session through the router is byte-identical to solo
+    let ov: Vec<(&'static str, String)> = vec![
+        ("workload", "sphere".into()),
+        ("synth_dim", "16".into()),
+        ("steps", "2".into()),
+        ("seed", "11".into()),
+        ("optex.parallelism", "2".into()),
+        ("optex.t0", "3".into()),
+        ("optex.threads", "1".into()),
+    ];
+    let sub = shapes.assert_conforms("submit-ack", &c.request_line(&submit_json(&ov, false)));
+    let id = sub.get("id").unwrap().as_usize().unwrap() as u64;
+    shapes.assert_conforms(
+        "watch-ack",
+        &c.request_line(&format!("{{\"cmd\":\"watch\",\"id\":{id},\"stream_every\":1}}")),
+    );
+    // drain pushes to the terminal event (either live pushes or the
+    // synthesized terminal for an already-finished session)
+    loop {
+        let push = c.read_json();
+        match push.get("event").and_then(Json::as_str) {
+            Some("iter") => {
+                shapes.assert_conforms("iter-event", &push.to_string());
+            }
+            Some("result") => {
+                shapes.assert_conforms("result-event", &push.to_string());
+                break;
+            }
+            other => panic!("unexpected push {other:?}: {push:?}"),
+        }
+    }
+    let r = shapes.assert_conforms(
+        "result",
+        &c.request_line(&format!("{{\"cmd\":\"result\",\"id\":{id},\"theta\":true}}")),
+    );
+    assert_eq!(theta_bits(&r), solo_theta_bits(&ov), "router run diverged from solo");
+    shapes.assert_conforms("status-all", &c.request_line("{\"cmd\":\"status\"}"));
+
+    // lifecycle errors carry their stable codes through the router
+    let v = shapes.assert_conforms(
+        "error-v2",
+        &c.request_line(&format!("{{\"cmd\":\"migrate\",\"id\":{id}}}")),
+    );
+    assert_eq!(err_code(&v), "bad_state", "done sessions do not migrate: {v:?}");
+    let v = shapes.assert_conforms("error-v2", &c.request_line("{\"cmd\":\"status\",\"id\":77}"));
+    assert_eq!(err_code(&v), "unknown_id");
+
+    // live migration of a paused session: pause → export → import →
+    // resume across two real processes, still byte-identical
+    let mut ov2 = ov.clone();
+    ov2[3].1 = "12".into(); // seed
+    let sub = shapes.assert_conforms("submit-ack", &c.request_line(&submit_json(&ov2, true)));
+    let id2 = sub.get("id").unwrap().as_usize().unwrap() as u64;
+    let v = shapes.assert_conforms(
+        "error-v2",
+        &c.request_line(&format!("{{\"cmd\":\"migrate\",\"id\":{id2},\"to\":9}}")),
+    );
+    assert_eq!(err_code(&v), "bad_request", "destination must be a live worker index");
+    let mig = shapes.assert_conforms(
+        "migrate-ack",
+        &c.request_line(&format!("{{\"cmd\":\"migrate\",\"id\":{id2}}}")),
+    );
+    assert_eq!(mig.get("state").unwrap().as_str(), Some("paused"), "paused stays paused");
+    let dst = mig.get("worker").unwrap().as_usize().unwrap();
+    assert!(dst < 2);
+    shapes.assert_conforms("ack", &c.request_line(&format!("{{\"cmd\":\"resume\",\"id\":{id2}}}")));
+    wait_done(&mut c, id2, Instant::now() + Duration::from_secs(120));
+    let r = c.request(&format!("{{\"cmd\":\"result\",\"id\":{id2},\"theta\":true}}"));
+    assert_eq!(theta_bits(&r), solo_theta_bits(&ov2), "migrated run diverged from solo");
+    // the route followed the session: the destination worker owns it
+    let st = c.request("{\"cmd\":\"stats\"}");
+    let sessions_on = |w: usize| {
+        st.get("workers").unwrap().as_arr().unwrap()[w]
+            .get("sessions")
+            .unwrap()
+            .as_usize()
+            .unwrap()
+    };
+    assert!(sessions_on(dst) >= 1, "stats: {st:?}");
+
+    shapes.assert_conforms("shutdown-ack", &c.request_line("{\"cmd\":\"shutdown\"}"));
+    child.wait().expect("reaping the router");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The K = 8 mixed-session matrix for the scale-out acceptance.
+fn k8_overrides(i: usize, threads: usize) -> Vec<(&'static str, String)> {
+    let mut ov: Vec<(&'static str, String)> = match i % 4 {
+        0 => vec![
+            ("workload", "ackley".into()),
+            ("synth_dim", "30000".into()),
+            ("steps", "15".into()),
+            ("noise_std", "0.3".into()),
+        ],
+        1 => vec![
+            ("workload", "sphere".into()),
+            ("synth_dim", "25000".into()),
+            ("steps", "15".into()),
+            ("noise_std", "0.2".into()),
+        ],
+        2 => vec![
+            ("workload", "rosenbrock".into()),
+            ("synth_dim", "20000".into()),
+            ("steps", "15".into()),
+        ],
+        _ => vec![("workload", "dqn_replay".into()), ("steps", "200".into())],
+    };
+    ov.push(("seed", (300 + i).to_string()));
+    ov.push(("optex.parallelism", "3".into()));
+    ov.push(("optex.t0", "5".into()));
+    ov.push(("optex.threads", threads.to_string()));
+    ov
+}
+
+#[test]
+#[ignore = "heavy scale-out matrix: run in release via the router-smoke CI job (--include-ignored)"]
+fn k8_across_two_workers_is_byte_identical_to_solo() {
+    let dir = tmp_ckpt_dir("router_k8");
+    let (mut child, addr) = spawn_router(&dir, 2);
+    let mut c = WireClient::connect(&addr);
+    c.request("{\"cmd\":\"hello\",\"proto\":2}");
+    let overrides: Vec<_> = (0..8).map(|i| k8_overrides(i, 1)).collect();
+    let ids: Vec<u64> = overrides
+        .iter()
+        .map(|ov| {
+            let r = c.request(&submit_json(ov, false));
+            assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r:?}");
+            r.get("id").unwrap().as_usize().unwrap() as u64
+        })
+        .collect();
+    assert_eq!(ids, (1..=8).collect::<Vec<u64>>(), "router-allocated ids are dense");
+
+    let solo: Vec<Vec<u32>> = overrides.iter().map(|ov| solo_theta_bits(ov)).collect();
+    let deadline = Instant::now() + Duration::from_secs(600);
+    for &id in &ids {
+        wait_done(&mut c, id, deadline);
+    }
+    for (i, &id) in ids.iter().enumerate() {
+        let r = c.request(&format!("{{\"cmd\":\"result\",\"id\":{id},\"theta\":true}}"));
+        assert_eq!(
+            theta_bits(&r),
+            solo[i],
+            "session {id}: routed run diverged from the solo reference"
+        );
+    }
+    // the fleet actually spread: every worker owns at least one route
+    let st = c.request("{\"cmd\":\"stats\"}");
+    let counts: Vec<usize> = st
+        .get("workers")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|w| w.get("sessions").unwrap().as_usize().unwrap())
+        .collect();
+    assert_eq!(counts.iter().sum::<usize>(), 8, "stats: {st:?}");
+    assert!(counts.iter().all(|&n| n >= 1), "placement did not spread: {counts:?}");
+
+    c.request("{\"cmd\":\"shutdown\"}");
+    child.wait().expect("reaping the router");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Mid-run live migration: bit-identical θ AND a watch stream in strict
+/// iteration order — no gap, no duplicate — across the move.
+fn migration_matrix(threads: usize) {
+    let dir = tmp_ckpt_dir(&format!("router_mig_t{threads}"));
+    let (mut child, addr) = spawn_router(&dir, 2);
+    let mut watcher = WireClient::connect(&addr);
+    let mut ctrl = WireClient::connect(&addr);
+    ctrl.request("{\"cmd\":\"hello\",\"proto\":2}");
+
+    let ov: Vec<(&'static str, String)> = vec![
+        ("workload", "ackley".into()),
+        ("synth_dim", "120000".into()),
+        ("steps", "30".into()),
+        ("noise_std", "0.3".into()),
+        ("seed", "71".into()),
+        ("optex.parallelism", "3".into()),
+        ("optex.t0", "5".into()),
+        ("optex.threads", threads.to_string()),
+    ];
+    let r = ctrl.request(&submit_json(&ov, false));
+    let id = r.get("id").unwrap().as_usize().unwrap() as u64;
+    let w = watcher.request(&format!("{{\"cmd\":\"watch\",\"id\":{id},\"stream_every\":1}}"));
+    assert_eq!(w.get("ok").unwrap().as_bool(), Some(true), "{w:?}");
+
+    // let it make real progress, then move it while it runs
+    let deadline = Instant::now() + Duration::from_secs(300);
+    loop {
+        let (state, iters) = poll_state(&mut ctrl, id);
+        assert_ne!(state, "done", "session finished before the migration");
+        if iters >= 3 {
+            break;
+        }
+        assert!(Instant::now() < deadline, "session made no progress");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    let mig = ctrl.request(&format!("{{\"cmd\":\"migrate\",\"id\":{id}}}"));
+    assert_eq!(mig.get("ok").unwrap().as_bool(), Some(true), "{mig:?}");
+    assert_eq!(mig.get("migrated").unwrap().as_bool(), Some(true));
+    assert_eq!(
+        mig.get("state").unwrap().as_str(),
+        Some("running"),
+        "a running session resumes on the destination"
+    );
+    let dst = mig.get("worker").unwrap().as_usize().unwrap();
+
+    wait_done(&mut ctrl, id, Instant::now() + Duration::from_secs(600));
+    let r = ctrl.request(&format!("{{\"cmd\":\"result\",\"id\":{id},\"theta\":true}}"));
+    assert_eq!(
+        theta_bits(&r),
+        solo_theta_bits(&ov),
+        "threads={threads}: live migration diverged from the solo run"
+    );
+
+    // the watch stream: every iteration exactly once, in order, ending
+    // in the terminal push — the migration is invisible to subscribers
+    let mut seen = Vec::new();
+    loop {
+        let push = watcher.read_json();
+        match push.get("event").and_then(Json::as_str) {
+            Some("iter") => seen.push(push.get("iter").unwrap().as_usize().unwrap() as u64),
+            Some("result") => break,
+            other => panic!("unexpected push {other:?}: {push:?}"),
+        }
+    }
+    let want: Vec<u64> = (1..=30).collect();
+    assert_eq!(
+        seen, want,
+        "threads={threads}: watch pushes lost order across the migration"
+    );
+
+    // the destination owns the route
+    let st = ctrl.request("{\"cmd\":\"stats\"}");
+    let on_dst = st.get("workers").unwrap().as_arr().unwrap()[dst]
+        .get("sessions")
+        .unwrap()
+        .as_usize()
+        .unwrap();
+    assert!(on_dst >= 1, "stats after migration: {st:?}");
+
+    ctrl.request("{\"cmd\":\"shutdown\"}");
+    child.wait().expect("reaping the router");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+#[ignore = "heavy live-migration matrix: run in release via the router-smoke CI job (--include-ignored)"]
+fn live_migration_is_bit_identical_threads_1() {
+    migration_matrix(1);
+}
+
+#[test]
+#[ignore = "heavy live-migration matrix: run in release via the router-smoke CI job (--include-ignored)"]
+fn live_migration_is_bit_identical_threads_8() {
+    migration_matrix(8);
+}
+
+/// PIDs of processes whose /proc cmdline contains `needle` (how the
+/// test finds a worker to SIGKILL — workers are the ROUTER's children,
+/// so the test has no handle on them).
+#[cfg(target_os = "linux")]
+fn pids_with_cmdline(needle: &str) -> Vec<u32> {
+    let mut pids = Vec::new();
+    for entry in std::fs::read_dir("/proc").into_iter().flatten().flatten() {
+        let name = entry.file_name();
+        let Some(pid) = name.to_str().and_then(|s| s.parse::<u32>().ok()) else {
+            continue;
+        };
+        let Ok(raw) = std::fs::read(entry.path().join("cmdline")) else { continue };
+        let cmdline = raw
+            .split(|&b| b == 0)
+            .map(String::from_utf8_lossy)
+            .collect::<Vec<_>>()
+            .join(" ");
+        if cmdline.contains(needle) {
+            pids.push(pid);
+        }
+    }
+    pids
+}
+
+#[cfg(target_os = "linux")]
+#[test]
+#[ignore = "heavy kill-recovery matrix: run in release via the router-smoke CI job (--include-ignored)"]
+fn sigkilled_worker_sessions_replace_onto_the_survivor() {
+    let dir = tmp_ckpt_dir("router_kill");
+    let (mut child, addr) = spawn_router(&dir, 2);
+    let mut c = WireClient::connect(&addr);
+    c.request("{\"cmd\":\"hello\",\"proto\":2}");
+
+    // K = 4, long enough that every session is mid-run at the kill
+    let overrides: Vec<Vec<(&'static str, String)>> = (0..4)
+        .map(|i| {
+            let mut ov = k8_overrides(i, 1);
+            for (k, v) in ov.iter_mut() {
+                if *k == "synth_dim" {
+                    *v = "80000".into();
+                }
+                if *k == "steps" && v.as_str() != "200" {
+                    *v = "25".into();
+                }
+            }
+            ov
+        })
+        .collect();
+    let ids: Vec<u64> = overrides
+        .iter()
+        .map(|ov| c.request(&submit_json(ov, false)).get("id").unwrap().as_usize().unwrap() as u64)
+        .collect();
+    let deadline = Instant::now() + Duration::from_secs(300);
+    for &id in &ids {
+        loop {
+            let (state, iters) = poll_state(&mut c, id);
+            assert_ne!(state, "failed");
+            if iters >= 1 || state == "done" {
+                break;
+            }
+            assert!(Instant::now() < deadline, "session {id} made no progress");
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    }
+
+    // SIGKILL worker 0 — no shutdown bookkeeping whatsoever
+    let needle = format!("serve.ckpt_dir={}", dir.join("worker_0").display());
+    let pids = pids_with_cmdline(&needle);
+    assert_eq!(pids.len(), 1, "worker 0 pid lookup found {pids:?}");
+    let status = Command::new("kill")
+        .args(["-9", &pids[0].to_string()])
+        .status()
+        .expect("running kill");
+    assert!(status.success(), "kill -9 failed");
+
+    // every session still finishes — re-placed on the survivor, with
+    // un-checkpointed progress re-run deterministically from the seed —
+    // and the thetas stay byte-identical to solo
+    let solo: Vec<Vec<u32>> = overrides.iter().map(|ov| solo_theta_bits(ov)).collect();
+    let deadline = Instant::now() + Duration::from_secs(600);
+    for &id in &ids {
+        wait_done(&mut c, id, deadline);
+    }
+    for (i, &id) in ids.iter().enumerate() {
+        let r = c.request(&format!("{{\"cmd\":\"result\",\"id\":{id},\"theta\":true}}"));
+        assert_eq!(
+            theta_bits(&r),
+            solo[i],
+            "session {id}: kill → re-place → finish diverged from solo"
+        );
+    }
+    let st = c.request("{\"cmd\":\"stats\"}");
+    let rows = st.get("workers").unwrap().as_arr().unwrap();
+    assert_eq!(rows[0].get("alive").unwrap().as_bool(), Some(false), "{st:?}");
+    assert_eq!(rows[1].get("alive").unwrap().as_bool(), Some(true), "{st:?}");
+    // every surviving route lives on the survivor (a session that
+    // FINISHED on worker 0 before the kill keeps no route — its result
+    // is served from the router's cache, as asserted above)
+    assert_eq!(rows[0].get("sessions").unwrap().as_usize(), Some(0), "{st:?}");
+    let on_survivor = rows[1].get("sessions").unwrap().as_usize().unwrap();
+    assert_eq!(st.get("routes").unwrap().as_usize(), Some(on_survivor), "{st:?}");
+    assert_eq!(
+        st.get("parked").unwrap().as_usize(),
+        Some(0),
+        "nothing parks while a survivor has capacity: {st:?}"
+    );
+
+    c.request("{\"cmd\":\"shutdown\"}");
+    child.wait().expect("reaping the router");
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -1,0 +1,228 @@
+//! ISSUE 10 satellite: wire conformance. A live `Server` is driven
+//! through **every** verb of `docs/PROTOCOL.md` under both protocol
+//! versions, and every line it answers (responses *and* pushes) is
+//! validated against the document's shape tables — both directions:
+//! a missing documented field fails, and an undocumented field on the
+//! wire fails too (see `optex::testutil::wire`). A second test runs a
+//! v1 and a v2 client against ONE server concurrently and pins that
+//! version state is per-connection: same requests, same success bytes,
+//! different error shapes.
+//!
+//! The sessions are deliberately tiny (d = 16, 2 steps) — this suite
+//! checks shapes, not numerics, and runs in the tier-1 debug matrix.
+
+use std::sync::mpsc;
+use std::time::Duration;
+
+use optex::config::RunConfig;
+use optex::serve::protocol::schema::CAPS;
+use optex::serve::protocol::Proto;
+use optex::serve::Server;
+use optex::testutil::fixtures::{tmp_ckpt_dir, WireClient};
+use optex::testutil::wire::{self, Shapes};
+use optex::util::json::Json;
+
+/// In-process server on an ephemeral port (the conformance target —
+/// subprocess spawning buys nothing here, the wire bytes are the same).
+fn start_server(tag: &str) -> (std::thread::JoinHandle<()>, String, std::path::PathBuf) {
+    let dir = tmp_ckpt_dir(tag);
+    let mut cfg = RunConfig::default();
+    cfg.serve.addr = "127.0.0.1:0".into();
+    cfg.serve.ckpt_dir = dir.clone();
+    let (tx, rx) = mpsc::channel();
+    let handle = std::thread::spawn(move || {
+        let server = Server::bind(&cfg).expect("conformance server binds");
+        tx.send(server.local_addr().unwrap()).unwrap();
+        server.run().expect("serve loop");
+    });
+    let addr = rx.recv_timeout(Duration::from_secs(10)).unwrap().to_string();
+    (handle, addr, dir)
+}
+
+/// A submit line for the tiny conformance workload.
+fn tiny_submit(seed: u64, paused: bool) -> String {
+    let paused = if paused { ",\"paused\":true" } else { "" };
+    format!(
+        "{{\"cmd\":\"submit\",\"config\":{{\"workload\":\"sphere\",\"synth_dim\":16,\
+         \"steps\":2,\"seed\":{seed},\"optex.parallelism\":2,\"optex.t0\":3,\
+         \"optex.threads\":1}}{paused}}}"
+    )
+}
+
+fn err_code(v: &Json) -> String {
+    v.get("error")
+        .and_then(|e| e.get("code"))
+        .and_then(Json::as_str)
+        .unwrap_or_else(|| panic!("no error code in {v:?}"))
+        .to_string()
+}
+
+#[test]
+fn every_documented_verb_round_trips_under_v2() {
+    let doc = wire::protocol_doc();
+    let shapes = Shapes::parse(&doc);
+    let (server, addr, dir) = start_server("conform_v2");
+
+    let mut a = WireClient::connect(&addr);
+    let hello = shapes.assert_conforms("hello", &a.request_line("{\"cmd\":\"hello\",\"proto\":2}"));
+    assert_eq!(hello.get("proto").unwrap().as_usize(), Some(Proto::MAX as usize));
+    let caps: Vec<&str> = hello
+        .get("caps")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .filter_map(Json::as_str)
+        .collect();
+    assert_eq!(caps, CAPS, "hello caps must match the documented list");
+
+    // -- submit (paused, so the watch below sees every iteration) --------
+    let sub = shapes.assert_conforms("submit-ack", &a.request_line(&tiny_submit(5, true)));
+    let id = sub.get("id").unwrap().as_usize().unwrap();
+    assert_eq!(sub.get("state").unwrap().as_str(), Some("paused"));
+
+    // -- watch ack, then the full push stream on this connection ---------
+    let w = a.request_line(&format!(
+        "{{\"cmd\":\"watch\",\"id\":{id},\"stream_every\":1,\"theta\":true}}"
+    ));
+    shapes.assert_conforms("watch-ack", &w);
+
+    // resume from a second (also v2) connection so client A's socket
+    // carries nothing but the pushes from here on
+    let mut b = WireClient::connect(&addr);
+    shapes.assert_conforms("hello", &b.request_line("{\"cmd\":\"hello\",\"proto\":2}"));
+    let ack = shapes.assert_conforms(
+        "ack",
+        &b.request_line(&format!("{{\"cmd\":\"resume\",\"id\":{id}}}")),
+    );
+    assert_eq!(ack.get("state").unwrap().as_str(), Some("running"));
+
+    // every push conforms; iter events arrive in iteration order
+    let mut iters = Vec::new();
+    loop {
+        let push = a.read_json();
+        let line = push.to_string();
+        match push.get("event").and_then(Json::as_str) {
+            Some("iter") => {
+                shapes.assert_conforms("iter-event", &line);
+                iters.push(push.get("iter").unwrap().as_usize().unwrap());
+            }
+            Some("result") => {
+                let v = shapes.assert_conforms("result-event", &line);
+                assert!(v.get("theta").is_some(), "terminal push honors theta:true");
+                break;
+            }
+            other => panic!("unexpected push {other:?}: {line}"),
+        }
+    }
+    assert!(!iters.is_empty(), "no iter pushes at stream_every=1");
+    assert!(iters.windows(2).all(|p| p[1] > p[0]), "iter pushes out of order: {iters:?}");
+
+    // -- status / result / trace / stats ---------------------------------
+    let st = shapes.assert_conforms(
+        "status",
+        &b.request_line(&format!("{{\"cmd\":\"status\",\"id\":{id}}}")),
+    );
+    assert_eq!(st.get("state").unwrap().as_str(), Some("done"));
+    let all = shapes.assert_conforms("status-all", &b.request_line("{\"cmd\":\"status\"}"));
+    for row in all.get("sessions").unwrap().as_arr().unwrap() {
+        if let Err(e) = shapes.conform("session", row) {
+            panic!("status-all row does not conform to session: {e}\n  row: {row:?}");
+        }
+    }
+    let r = shapes.assert_conforms(
+        "result",
+        &b.request_line(&format!("{{\"cmd\":\"result\",\"id\":{id},\"theta\":true}}")),
+    );
+    assert!(matches!(r.get("theta"), Some(Json::Arr(_))), "theta:true returns the iterate");
+    let r = shapes.assert_conforms(
+        "result",
+        &b.request_line(&format!("{{\"cmd\":\"result\",\"id\":{id}}}")),
+    );
+    assert!(r.get("theta").is_none(), "theta is opt-in");
+    shapes.assert_conforms("trace", &b.request_line(&format!("{{\"cmd\":\"trace\",\"id\":{id}}}")));
+    shapes.assert_conforms("stats", &b.request_line("{\"cmd\":\"stats\"}"));
+
+    // -- export / import round trip (the migration halves) ---------------
+    let sub2 = shapes.assert_conforms("submit-ack", &b.request_line(&tiny_submit(6, true)));
+    let id2 = sub2.get("id").unwrap().as_usize().unwrap();
+    let exp = shapes.assert_conforms(
+        "export",
+        &b.request_line(&format!("{{\"cmd\":\"export\",\"id\":{id2}}}")),
+    );
+    let imp_line = format!(
+        "{{\"cmd\":\"import\",\"session\":{},\"ckpt\":{}}}",
+        exp.get("session").unwrap().to_string(),
+        exp.get("ckpt").unwrap().to_string(),
+    );
+    let imp = shapes.assert_conforms("import-ack", &b.request_line(&imp_line));
+    assert_eq!(imp.get("state").unwrap().as_str(), Some("paused"), "imports adopt paused");
+    let id3 = imp.get("id").unwrap().as_usize().unwrap();
+    assert_ne!(id3, id2, "import allocates a fresh local id");
+    shapes.assert_conforms("ack", &b.request_line(&format!("{{\"cmd\":\"cancel\",\"id\":{id3}}}")));
+
+    // -- every error path carries its documented stable code -------------
+    let codes = wire::parse_error_codes(&doc);
+    for (req, want) in [
+        ("{\"cmd\":\"status\",\"id\":999}".to_string(), "unknown_id"),
+        (format!("{{\"cmd\":\"pause\",\"id\":{id}}}"), "bad_state"),
+        ("{\"cmd\":\"migrate\",\"id\":1}".to_string(), "bad_request"),
+        ("{ not json".to_string(), "bad_request"),
+        ("{\"cmd\":\"fly\"}".to_string(), "bad_request"),
+    ] {
+        let v = shapes.assert_conforms("error-v2", &b.request_line(&req));
+        let code = err_code(&v);
+        assert_eq!(code, want, "request {req}");
+        assert!(codes.contains(&code), "code {code} missing from the documented table");
+    }
+
+    shapes.assert_conforms("shutdown-ack", &b.request_line("{\"cmd\":\"shutdown\"}"));
+    server.join().unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn version_state_is_per_connection_on_a_shared_server() {
+    let shapes = Shapes::parse(&wire::protocol_doc());
+    let (server, addr, dir) = start_server("conform_mixed");
+
+    // v1: never says hello. v2: negotiates. Same server, same moment.
+    let mut v1 = WireClient::connect(&addr);
+    let mut v2 = WireClient::connect(&addr);
+    shapes.assert_conforms("hello", &v2.request_line("{\"cmd\":\"hello\",\"proto\":2}"));
+
+    // identical bad request, per-connection error shape
+    let e1 = shapes.assert_conforms("error-v1", &v1.request_line("{\"cmd\":\"status\",\"id\":42}"));
+    assert!(matches!(e1.get("error"), Some(Json::Str(_))), "v1 errors are bare strings");
+    let e2 = shapes.assert_conforms("error-v2", &v2.request_line("{\"cmd\":\"status\",\"id\":42}"));
+    assert_eq!(err_code(&e2), "unknown_id");
+    // ... carrying the same human-readable text either way
+    assert_eq!(
+        e1.get("error").unwrap().as_str().unwrap(),
+        e2.get("error").unwrap().get("msg").unwrap().as_str().unwrap(),
+    );
+
+    // success shapes are version-independent: byte-identical modulo id
+    let s1 = shapes.assert_conforms("submit-ack", &v1.request_line(&tiny_submit(7, true)));
+    let s2 = shapes.assert_conforms("submit-ack", &v2.request_line(&tiny_submit(8, true)));
+    let keys = |v: &Json| -> Vec<String> { v.as_obj().unwrap().keys().cloned().collect() };
+    assert_eq!(keys(&s1), keys(&s2), "v1 and v2 success shapes must be identical");
+
+    // an unsupported hello is rejected with the structured `version`
+    // code (v2 envelope by design — a client asking for v2+ parses it)
+    // and leaves the connection at its previous version
+    let rej =
+        shapes.assert_conforms("error-v2", &v1.request_line("{\"cmd\":\"hello\",\"proto\":99}"));
+    assert_eq!(err_code(&rej), "version");
+    let still =
+        shapes.assert_conforms("error-v1", &v1.request_line("{\"cmd\":\"status\",\"id\":42}"));
+    assert!(matches!(still.get("error"), Some(Json::Str(_))), "failed hello must not upgrade");
+
+    // a v1 client can drive the v2 features' verbs (stats, trace) — the
+    // protocol gates error shape, not surface
+    shapes.assert_conforms("stats", &v1.request_line("{\"cmd\":\"stats\"}"));
+
+    shapes.assert_conforms("shutdown-ack", &v2.request_line("{\"cmd\":\"shutdown\"}"));
+    server.join().unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}

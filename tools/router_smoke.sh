@@ -1,0 +1,123 @@
+#!/usr/bin/env bash
+# ISSUE 10 satellite: real-binary router smoke. `optex router` fronts
+# TWO real `optex serve` worker processes; this script drives the whole
+# client surface over bash's /dev/tcp — stats across the fleet, a
+# paused submit, a live migration between workers (export → import →
+# route flip behind one stable client id), resume, completion with the
+# full iteration budget, and a theta-carrying result — then shuts the
+# fleet down cleanly.
+#
+# The heavy acceptance matrices (K = 8 byte-identity, mid-run migration
+# push ordering, SIGKILL recovery) live in the router_integration suite;
+# this script asserts the operator-facing path against the shipped
+# binary with no test harness in the loop.
+#
+# Usage: tools/router_smoke.sh [path-to-optex-binary]
+set -euo pipefail
+
+BIN="${1:-target/release/optex}"
+DIR="$(mktemp -d /tmp/optex_router_smoke.XXXXXX)"
+PORT=$((20000 + RANDOM % 20000))
+ADDR="127.0.0.1:${PORT}"
+ROUTER_PID=""
+
+cleanup() {
+  [ -n "${ROUTER_PID}" ] && kill -9 "${ROUTER_PID}" 2>/dev/null || true
+  rm -rf "${DIR}"
+}
+trap cleanup EXIT
+
+fail() { echo "router_smoke: FAIL: $*" >&2; exit 1; }
+
+# One JSONL request/response exchange over /dev/tcp (fresh connection
+# per request — protocol version is per-connection, so these all speak
+# v1; the v2 envelope is covered by the wire_conformance suite).
+request() {
+  local req="$1" reply
+  exec 3<>"/dev/tcp/127.0.0.1/${PORT}" || fail "connecting ${ADDR}"
+  printf '%s\n' "${req}" >&3
+  IFS= read -r reply <&3 || fail "no reply to: ${req}"
+  exec 3<&- 3>&-
+  printf '%s' "${reply}"
+}
+
+wait_port() {
+  for _ in $(seq 1 100); do
+    if (exec 3<>"/dev/tcp/127.0.0.1/${PORT}") 2>/dev/null; then
+      exec 3<&- 3>&- 2>/dev/null || true
+      return 0
+    fi
+    sleep 0.1
+  done
+  fail "router never came up on ${ADDR}"
+}
+
+echo "router_smoke: phase 1 — router over two real workers"
+"${BIN}" router --addr "${ADDR}" --workers 2 --dir "${DIR}" &
+ROUTER_PID=$!
+wait_port
+
+REPLY=$(request '{"cmd":"stats"}')
+echo "router_smoke: stats -> ${REPLY}"
+case "${REPLY}" in
+  *'"router":true'*) ;;
+  *) fail "stats did not identify the router tier: ${REPLY}" ;;
+esac
+ALIVE=$(printf '%s' "${REPLY}" | grep -o '"alive":true' | wc -l)
+[ "${ALIVE}" -eq 2 ] || fail "expected 2 live workers, saw ${ALIVE}: ${REPLY}"
+
+echo "router_smoke: phase 2 — paused submit, then live migration"
+REPLY=$(request '{"cmd":"submit","config":{"workload":"rosenbrock","synth_dim":64,"steps":6,"seed":9,"optex.threads":1},"paused":true}')
+echo "router_smoke: submit -> ${REPLY}"
+case "${REPLY}" in
+  *'"state":"paused"'*) ;;
+  *) fail "paused submit not acknowledged: ${REPLY}" ;;
+esac
+
+REPLY=$(request '{"cmd":"migrate","id":1}')
+echo "router_smoke: migrate -> ${REPLY}"
+case "${REPLY}" in
+  *'"migrated":true'*) ;;
+  *) fail "migration refused: ${REPLY}" ;;
+esac
+case "${REPLY}" in
+  *'"state":"paused"'*) ;;
+  *) fail "a paused session must stay paused across the move: ${REPLY}" ;;
+esac
+
+echo "router_smoke: phase 3 — resume on the destination, run to done"
+REPLY=$(request '{"cmd":"resume","id":1}')
+case "${REPLY}" in
+  *'"ok":true'*) ;;
+  *) fail "resume after migration refused: ${REPLY}" ;;
+esac
+
+for _ in $(seq 1 300); do
+  REPLY=$(request '{"cmd":"status","id":1}')
+  case "${REPLY}" in
+    *'"state":"done"'*) break ;;
+    *'"state":"failed"'*) fail "session failed after migration: ${REPLY}" ;;
+  esac
+  sleep 0.1
+done
+case "${REPLY}" in
+  *'"state":"done"'*) ;;
+  *) fail "session never finished after migration: ${REPLY}" ;;
+esac
+case "${REPLY}" in
+  *'"iters":6'*) ;;
+  *) fail "migrated session did not run the full budget: ${REPLY}" ;;
+esac
+
+REPLY=$(request '{"cmd":"result","id":1,"theta":true}')
+case "${REPLY}" in
+  *'"theta":['*) ;;
+  *) fail "result did not carry the iterate: ${REPLY}" ;;
+esac
+
+REPLY=$(request '{"cmd":"shutdown"}')
+echo "router_smoke: shutdown -> ${REPLY}"
+wait "${ROUTER_PID}" 2>/dev/null || true
+ROUTER_PID=""
+
+echo "router_smoke: OK — fleet up, session migrated live, byte surface intact"
