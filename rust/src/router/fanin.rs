@@ -24,7 +24,7 @@
 //! terminal [`RouterMsg::WorkerDown`] and exits, which triggers the
 //! recovery path (re-import from the dead worker's on-disk manifest).
 
-use std::io::{BufRead, BufReader, Write};
+use std::io::{BufReader, Write};
 use std::net::{SocketAddr, TcpStream};
 use std::sync::mpsc::Sender;
 
@@ -52,10 +52,12 @@ impl WatchConn {
             .spawn(move || {
                 let mut reader = BufReader::new(read_half);
                 loop {
-                    let mut line = String::new();
-                    match reader.read_line(&mut line) {
-                        Ok(0) | Err(_) => break,
-                        Ok(_) => {
+                    match super::read_line_capped(&mut reader) {
+                        // EOF, I/O error, or a line past the 1 MiB cap:
+                        // a worker pushing unbounded garbage is as dead
+                        // to the router as one that hung up
+                        Ok(None) | Err(_) => break,
+                        Ok(Some(line)) => {
                             let line = line.trim_end().to_string();
                             if line.is_empty() {
                                 continue;

@@ -230,12 +230,25 @@ impl Router {
                 t
             }
         };
-        // lifecycle pre-check: only live sessions move
-        let state = match self.workers[src].rpc(&format!(
-            "{{\"cmd\":\"status\",\"id\":{}}}",
-            route.wid
-        )) {
-            Ok(v) => v.get("state").and_then(Json::as_str).unwrap_or("").to_string(),
+        // lifecycle pre-check: only live sessions move. rpc_raw keeps
+        // transport failures (the worker is dead) distinct from
+        // semantic refusals (the worker evicted the id past its
+        // retention window) — only the former may trigger recovery.
+        let sv = match self
+            .workers[src]
+            .rpc_raw(&format!("{{\"cmd\":\"status\",\"id\":{}}}", route.wid))
+        {
+            Ok(raw) => match Json::parse(&raw) {
+                Ok(v) => v,
+                Err(_) => {
+                    let _ = reply.send(protocol::error_line_for(
+                        proto,
+                        ErrCode::Internal,
+                        &format!("worker {src} returned an unparseable response"),
+                    ));
+                    return;
+                }
+            },
             Err(_) => {
                 self.on_worker_down(src);
                 let _ = reply.send(protocol::error_line_for(
@@ -249,6 +262,11 @@ impl Router {
                 return;
             }
         };
+        if sv.get("ok").and_then(Json::as_bool) != Some(true) {
+            let _ = reply.send(super::relay_error(proto, &sv));
+            return;
+        }
+        let state = sv.get("state").and_then(Json::as_str).unwrap_or("").to_string();
         if !matches!(state.as_str(), "pending" | "running" | "paused") {
             let _ = reply.send(protocol::error_line_for(
                 proto,

@@ -349,13 +349,16 @@ impl Router {
             Request::Status { id: Some(id) } => {
                 if let Some(line) = self.parked_error(id, proto) {
                     let _ = reply.send(line);
-                } else if self.table.get(id).is_none() {
-                    let line = match self.cache.get(id) {
-                        Some(push) => fanin::cached_status(push, id)
-                            .unwrap_or_else(|| unknown_id(proto, id)),
-                        None => unknown_id(proto, id),
-                    };
+                } else if let Some(push) = self.cache.get(id) {
+                    // like `result`: finished sessions are served from
+                    // the retention cache even while a route lingers,
+                    // so worker-side eviction cannot make a cached
+                    // finish answer unknown_id
+                    let line = fanin::cached_status(push, id)
+                        .unwrap_or_else(|| unknown_id(proto, id));
                     let _ = reply.send(line);
+                } else if self.table.get(id).is_none() {
+                    let _ = reply.send(unknown_id(proto, id));
                 } else {
                     self.forward_id_verb(id, &raw, &reply, proto);
                 }
@@ -476,6 +479,12 @@ impl Router {
             let client_id = match self.table.insert(w, wid) {
                 Ok(id) => id,
                 Err(e) => {
+                    // the worker already admitted wid; without a route
+                    // it would hold a max_sessions slot unreachable
+                    // through the router — best-effort free it
+                    let _ = self
+                        .workers[w]
+                        .rpc_raw(&format!("{{\"cmd\":\"cancel\",\"id\":{wid}}}"));
                     let _ = reply.send(protocol::error_line_for(
                         proto,
                         ErrCode::Internal,
@@ -590,11 +599,27 @@ impl Router {
         };
         // probe liveness/state through the control conn so a watch on
         // an already-finished (but cache-evicted) session still gets
-        // its terminal push instead of silence
-        let status = self.workers[route.worker]
-            .rpc(&format!("{{\"cmd\":\"status\",\"id\":{}}}", route.wid));
-        let state = match &status {
-            Ok(v) => v.get("state").and_then(Json::as_str).unwrap_or("").to_string(),
+        // its terminal push instead of silence. rpc_raw keeps transport
+        // failures (the worker is dead) distinct from semantic refusals
+        // (the worker evicted the id past its retention window) — only
+        // the former may trigger recovery.
+        let sv = match self.workers[route.worker]
+            .rpc_raw(&format!("{{\"cmd\":\"status\",\"id\":{}}}", route.wid))
+        {
+            Ok(raw) => match Json::parse(&raw) {
+                Ok(v) => v,
+                Err(_) => {
+                    let _ = reply.send(protocol::error_line_for(
+                        proto,
+                        ErrCode::Internal,
+                        &format!(
+                            "worker {} returned an unparseable response",
+                            route.worker
+                        ),
+                    ));
+                    return;
+                }
+            },
             Err(_) => {
                 self.on_worker_down(route.worker);
                 let _ = reply.send(protocol::error_line_for(
@@ -605,6 +630,11 @@ impl Router {
                 return;
             }
         };
+        if sv.get("ok").and_then(Json::as_bool) != Some(true) {
+            let _ = reply.send(relay_error(proto, &sv));
+            return;
+        }
+        let state = sv.get("state").and_then(Json::as_str).unwrap_or("").to_string();
         if matches!(state.as_str(), "pending" | "running" | "paused") {
             self.subs
                 .entry(id)
@@ -854,7 +884,7 @@ fn unknown_id(proto: Proto, id: u64) -> String {
 
 /// Re-render a worker's (v2) error response for the client's protocol,
 /// preserving the stable code.
-fn relay_error(proto: Proto, v: &Json) -> String {
+pub(crate) fn relay_error(proto: Proto, v: &Json) -> String {
     let (slug, msg) = worker::parse_error(v);
     let code = ErrCode::from_slug(&slug).unwrap_or(ErrCode::Internal);
     protocol::error_line_for(proto, code, &msg)
@@ -930,8 +960,9 @@ fn accept_loop(
 
 /// Read one `\n`-terminated line of at most [`MAX_LINE_BYTES`].
 /// `Ok(None)` on clean EOF, `Err(true)` when the cap was hit (the
-/// connection is beyond salvage), `Err(false)` on I/O error.
-fn read_line_capped(reader: &mut BufReader<TcpStream>) -> Result<Option<String>, bool> {
+/// connection is beyond salvage), `Err(false)` on I/O error. Shared by
+/// the client readers and the per-worker fan-in readers.
+pub(crate) fn read_line_capped<R: BufRead>(reader: &mut R) -> Result<Option<String>, bool> {
     let mut line = String::new();
     let mut limited = (&mut *reader).take(MAX_LINE_BYTES);
     match limited.read_line(&mut line) {
@@ -1067,6 +1098,22 @@ mod tests {
         assert!(c.get(2).is_none() && c.get(3).is_some() && c.get(4).is_some());
         assert_eq!(c.len(), 2);
         assert_eq!(c.iter().count(), 2);
+    }
+
+    #[test]
+    fn capped_reader_rejects_oversize_lines_and_passes_normal_ones() {
+        let mut r = std::io::Cursor::new(b"{\"ok\":true}\n".to_vec());
+        assert_eq!(read_line_capped(&mut r), Ok(Some("{\"ok\":true}\n".to_string())));
+        assert_eq!(read_line_capped(&mut r), Ok(None), "clean EOF");
+        // an unterminated line at the cap is a hard Err(true), not an
+        // ever-growing buffer
+        let mut r = std::io::Cursor::new(vec![b'x'; MAX_LINE_BYTES as usize + 16]);
+        assert_eq!(read_line_capped(&mut r), Err(true));
+        // a line that merely *reaches* the cap with its newline is fine
+        let mut big = vec![b'y'; MAX_LINE_BYTES as usize - 1];
+        big.push(b'\n');
+        let mut r = std::io::Cursor::new(big);
+        assert!(matches!(read_line_capped(&mut r), Ok(Some(l)) if l.len() == MAX_LINE_BYTES as usize));
     }
 
     #[test]
